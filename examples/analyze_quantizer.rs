@@ -1,0 +1,87 @@
+//! Analysis scenario: everything the paper says about the quantizer itself,
+//! on one screen —
+//!
+//!  * Figure 2: the LSQ / QIL / PACT gradient curves (from the AOT artifact,
+//!    cross-validated against the pure-Rust quantizer);
+//!  * Section 2.2 / Appendix A: the R ≈ sqrt(N·Qp) imbalance prediction vs
+//!    the measured R on an actual model (Figure 4 machinery, g = 1);
+//!  * Section 3.6: quantization error of a trained checkpoint under
+//!    MAE/MSE/KL vs the learned step size.
+//!
+//! Run: `cargo run --release --example analyze_quantizer [-- --iters 40]`
+
+use std::path::Path;
+
+use lsqnet::analyze::{curves, qerror, rratio};
+use lsqnet::config::ExperimentConfig;
+use lsqnet::quant::error::Metric;
+use lsqnet::runtime::Engine;
+use lsqnet::train::Trainer;
+use lsqnet::util::cli::Args;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env();
+    let engine = Engine::new(Path::new(&args.str("artifacts", "artifacts")))?;
+
+    // ---- Figure 2 ---------------------------------------------------------
+    let c = curves::from_artifact(&engine, -1.0, 4.0)?;
+    let r = curves::from_rust(-1.0, 4.0, c.v.len());
+    let dev = c
+        .ds_lsq
+        .iter()
+        .zip(&r.ds_lsq)
+        .map(|(a, b)| (a - b).abs())
+        .fold(0.0f32, f32::max);
+    println!("Figure 2: artifact vs rust quantizer max deviation = {dev:.2e}");
+    println!("  v=1.45: LSQ {:+.3}  QIL {:+.3}  PACT {:+.3}", sample(&c, 1.45).0, sample(&c, 1.45).1, sample(&c, 1.45).2);
+    println!("  v=1.55: LSQ {:+.3}  QIL {:+.3}  PACT {:+.3}", sample(&c, 1.55).0, sample(&c, 1.55).1, sample(&c, 1.55).2);
+    println!("  (LSQ flips sign across the 1.5 transition; QIL doesn't — the paper's key figure)");
+
+    // ---- Section 2.2: predicted vs measured R at g = 1 ---------------------
+    let mut cfg = ExperimentConfig::default();
+    cfg.model = args.str("model", "cnn_small");
+    cfg.bits = 2;
+    cfg.data.train_size = 640;
+    let iters = args.usize("iters", 40);
+    let rep = rratio::measure(&engine, &cfg, "one", iters)?;
+    let fam = engine.manifest().family(&cfg.family())?.clone();
+    println!("\nSection 2.2 (g=1, {} iters): per-layer R vs sqrt(N*Qp) prediction", iters);
+    for (l, meta) in rep.layers.iter().zip(fam.layer_meta.iter()) {
+        let qp = (1i64 << (meta.bits - 1)) - 1;
+        let predicted = ((meta.n_weights as f64) * qp as f64).sqrt();
+        println!(
+            "  {:<10} measured R = {:>10.1}   sqrt(N*Qp) = {:>8.1}   ratio {:.2}",
+            l.layer,
+            l.mean_r,
+            predicted,
+            l.mean_r / predicted
+        );
+    }
+
+    // ---- Section 3.6 on a freshly trained tiny checkpoint ------------------
+    let mut qcfg = ExperimentConfig::default();
+    qcfg.name = "analyze_q2".into();
+    qcfg.model = cfg.model.clone();
+    qcfg.bits = 2;
+    qcfg.out_dir = "runs_quick".into();
+    qcfg.data.train_size = 1280;
+    qcfg.data.test_size = 256;
+    qcfg.train.epochs = 2;
+    let mut tr = Trainer::new(&engine, qcfg)?;
+    tr.verbose = false;
+    tr.fit()?;
+    let ck = tr.state.to_checkpoint(&fam);
+    let qrep = qerror::analyze_weights(&fam, &ck)?;
+    println!("\nSection 3.6: learned s_hat vs error-minimizing s (weight layers)");
+    println!("  mean |diff|: MAE {:.0}%  MSE {:.0}%  KL {:.0}%   (paper R18: 47/28/46%)",
+        qrep.avg_pct_diff(Metric::MeanAbs),
+        qrep.avg_pct_diff(Metric::MeanSq),
+        qrep.avg_pct_diff(Metric::Kl));
+    println!("  -> LSQ is NOT a quantization-error minimizer; it optimizes task loss.");
+    Ok(())
+}
+
+fn sample(c: &curves::Curves, v: f32) -> (f32, f32, f32) {
+    let i = c.v.iter().position(|&x| x >= v).unwrap_or(0);
+    (c.ds_lsq[i], c.ds_qil[i], c.ds_pact[i])
+}

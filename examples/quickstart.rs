@@ -1,0 +1,63 @@
+//! Quickstart: the smallest end-to-end LSQ workflow.
+//!
+//! 1. load the AOT artifacts (`make artifacts` must have run),
+//! 2. fine-tune a 2-bit cnn_small for a couple of epochs on synthshapes,
+//! 3. evaluate, inspect the learned step sizes, and pack the weights to
+//!    2-bit storage.
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use std::path::Path;
+
+use lsqnet::config::ExperimentConfig;
+use lsqnet::quant::pack::quantize_and_pack;
+use lsqnet::runtime::Engine;
+use lsqnet::train::Trainer;
+
+fn main() -> anyhow::Result<()> {
+    let engine = Engine::new(Path::new("artifacts"))?;
+    println!("PJRT platform: {}", engine.platform());
+
+    // -- configure a small 2-bit run ---------------------------------------
+    let mut cfg = ExperimentConfig::default();
+    cfg.name = "quickstart_q2".into();
+    cfg.model = "cnn_small".into();
+    cfg.bits = 2;
+    cfg.out_dir = "runs_quick".into();
+    cfg.data.train_size = 1280;
+    cfg.data.test_size = 320;
+    cfg.train.epochs = 3;
+    cfg.train.lr = 0.01;
+    cfg.train.weight_decay = ExperimentConfig::paper_wd(2, 1e-4);
+
+    // -- train ---------------------------------------------------------------
+    let mut trainer = Trainer::new(&engine, cfg)?;
+    let report = trainer.fit()?;
+    println!(
+        "\nfinal: top-1 {:.2}%  top-5 {:.2}%  ({} steps, {:.1}s)",
+        report.final_top1,
+        report.final_top5,
+        trainer.state.step,
+        report.history.wall_seconds
+    );
+
+    // -- inspect learned step sizes (the paper's core learnable) -------------
+    let fam = engine.manifest().family("cnn_small_q2")?.clone();
+    println!("\nlearned step sizes:");
+    for name in fam.step_names("step_w").iter().chain(fam.step_names("step_a").iter()) {
+        let v = trainer.state.param(&fam, name)?.item_f32()?;
+        println!("  {name:<14} = {v:.5}");
+    }
+
+    // -- pack one layer to true 2-bit storage (Figure 1 deployment view) ----
+    let w = trainer.state.param(&fam, "conv2.w")?.f32s()?.to_vec();
+    let s = trainer.state.param(&fam, "conv2.sw")?.item_f32()?;
+    let packed = quantize_and_pack(&w, s, 2, true)?;
+    println!(
+        "\nconv2.w: {} fp32 bytes -> {} packed bytes ({:.1}x)",
+        w.len() * 4,
+        packed.storage_bytes(),
+        (w.len() * 4) as f64 / packed.storage_bytes() as f64
+    );
+    Ok(())
+}

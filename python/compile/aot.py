@@ -1,0 +1,410 @@
+"""AOT exporter: lower every Layer-2 step function once to HLO *text* and
+emit ``artifacts/manifest.json`` describing the full calling convention.
+
+HLO text — NOT ``lowered.compiler_ir('hlo')``/``.serialize()`` — is the
+interchange format: jax >= 0.5 emits HloModuleProtos with 64-bit instruction
+ids which xla_extension 0.5.1 (the version behind the published ``xla``
+crate) rejects; the text parser reassigns ids and round-trips cleanly.
+See /opt/xla-example/gen_hlo.py.
+
+Artifact kinds (see ``compile.train`` for signatures):
+
+  train       QAT train step (SGD+momentum+wd, runtime lr/wd scalars)
+  train_kd    train step with same-architecture knowledge distillation
+  train_diag  train step that also emits per-layer ||grad_w||,||w||,|grad_s|,s
+  eval        loss / ncorrect / logits
+  init_quant  step-size initialization from current weights + first batch
+  infer       logits only (serving path)
+  fig2        quantizer transfer curves & ds terms for Figure 2
+  qmm         int-domain matmul demo (Figure 1 dataflow)
+
+Run: ``python -m compile.aot --out ../artifacts [--set quick|default|full]``
+Python never runs after this: the Rust coordinator drives the artifacts.
+"""
+
+from __future__ import annotations
+
+import argparse
+import collections
+import json
+import pathlib
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import train as T
+from .kernels import qmatmul as qmm_kernels
+from .quantizers import QuantConfig, ds_term
+
+DEFAULT_BATCH = 64
+INFER_BATCH = 32
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def hlo_op_histogram(text: str) -> dict[str, int]:
+    """Crude per-opcode count over HLO text (L2 perf accounting)."""
+    hist: collections.Counter[str] = collections.Counter()
+    for line in text.splitlines():
+        line = line.strip()
+        if "=" not in line or line.startswith(("HloModule", "ENTRY", "}")):
+            continue
+        rhs = line.split("=", 1)[1].strip()
+        # "f32[8,32]{...} opcode(..." -> opcode
+        parts = rhs.split(" ", 1)
+        if len(parts) == 2:
+            op = parts[1].split("(", 1)[0].strip()
+            if op:
+                hist[op] += 1
+    return dict(hist)
+
+
+def _sds(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+def _io_entry(name, arr_or_sds, kind, param=None):
+    e = {
+        "name": name,
+        "shape": list(arr_or_sds.shape),
+        "dtype": str(np.dtype(arr_or_sds.dtype)),
+        "kind": kind,
+    }
+    if param is not None:
+        e["param"] = param
+    return e
+
+
+class Exporter:
+    def __init__(self, out_dir: pathlib.Path, batch: int, stats: bool):
+        self.out = out_dir
+        self.batch = batch
+        self.stats = stats
+        self.families: dict[str, dict] = {}
+        self.inits: dict[str, T.InitResult] = {}
+        self.specs: dict[str, T.ModelSpec] = {}
+        self.artifacts: list[dict] = []
+
+    # -- families ------------------------------------------------------------
+    def family(self, model: str, qbits: int) -> str:
+        fam = f"{model}_q{qbits}"
+        if fam in self.families:
+            return fam
+        spec = T.ModelSpec(model=model, qbits=qbits)
+        init = T.init_model(spec, seed=0)
+        bin_name = f"{fam}.params.bin"
+        with open(self.out / bin_name, "wb") as f:
+            for p in init.params:
+                f.write(np.asarray(p, dtype=np.float32).tobytes())
+        self.families[fam] = {
+            "model": model,
+            "qbits": qbits,
+            "num_classes": spec.num_classes,
+            "params_bin": bin_name,
+            "n_matmul": init.n_matmul,
+            "param_names": init.names,
+            "roles": init.roles,
+            "shapes": {
+                n: list(p.shape) for n, p in zip(init.names, init.params)
+            },
+            "grad_names": init.grad_names,
+            "layer_meta": init.layer_meta,
+        }
+        self.inits[fam] = init
+        self.specs[fam] = spec
+        return fam
+
+    # -- lowering ------------------------------------------------------------
+    def _emit(self, art_id: str, fn, arg_specs, inputs, outputs, meta):
+        t0 = time.time()
+        lowered = jax.jit(fn, keep_unused=True).lower(*arg_specs)
+        text = to_hlo_text(lowered)
+        fname = f"{art_id}.hlo.txt"
+        (self.out / fname).write_text(text)
+        entry = {
+            "id": art_id,
+            "file": fname,
+            "inputs": inputs,
+            "outputs": outputs,
+            **meta,
+        }
+        if self.stats:
+            hist = hlo_op_histogram(text)
+            entry["hlo_ops"] = sum(hist.values())
+            top = sorted(hist.items(), key=lambda kv: -kv[1])[:8]
+            print(f"    ops={entry['hlo_ops']} top={top}")
+        self.artifacts.append(entry)
+        print(
+            f"  [{time.time() - t0:6.1f}s] {art_id} "
+            f"({len(text) / 1e6:.2f} MB hlo)"
+        )
+
+    def _param_io(self, fam, kind):
+        init = self.inits[fam]
+        return [
+            _io_entry(n, init.params[i], kind, param=n)
+            for i, n in enumerate(init.names)
+        ]
+
+    def _mom_io(self, fam):
+        init = self.inits[fam]
+        by_name = dict(zip(init.names, init.params))
+        return [
+            _io_entry(f"mom::{n}", by_name[n], "mom", param=n)
+            for n in init.grad_names
+        ]
+
+    def _data_io(self, batch):
+        spec = T.ModelSpec()
+        x = _sds((batch, spec.image, spec.image, spec.channels))
+        y = _sds((batch,), jnp.int32)
+        return (
+            [_io_entry("x", x, "data_x"), _io_entry("y", y, "data_y")],
+            [x, y],
+        )
+
+    # -- artifact kinds -------------------------------------------------------
+    def train(self, model, qbits, method="lsq", gscale="full", distill=False,
+              diag=False):
+        fam = self.family(model, qbits)
+        spec = T.ModelSpec(model=model, qbits=qbits, method=method,
+                           gscale_mode=gscale)
+        init = self.inits[fam]
+        kind = "train_kd" if distill else ("train_diag" if diag else "train")
+        tfam = tspec = tinit = None
+        if distill:
+            tfam = self.family(model, 32)
+            tspec, tinit = self.specs[tfam], self.inits[tfam]
+        fn = T.build_train_step(spec, init, distill=distill,
+                                teacher_init=tinit, teacher_spec=tspec,
+                                diag=diag)
+        by_name = dict(zip(init.names, init.params))
+        arg_specs = [_sds(p.shape) for p in init.params]
+        arg_specs += [_sds(by_name[n].shape) for n in init.grad_names]
+        inputs = self._param_io(fam, "param") + self._mom_io(fam)
+        if distill:
+            arg_specs += [_sds(p.shape) for p in tinit.params]
+            inputs += [
+                _io_entry(f"teacher::{n}", p, "teacher", param=n)
+                for n, p in zip(tinit.names, tinit.params)
+            ]
+        dio, dspecs = self._data_io(self.batch)
+        arg_specs += dspecs
+        inputs += dio
+        arg_specs += [_sds(()), _sds(())]
+        inputs += [_io_entry("lr", _sds(()), "lr"),
+                   _io_entry("wd", _sds(()), "wd")]
+
+        outputs = self._param_io(fam, "param") + self._mom_io(fam)
+        outputs += [_io_entry("loss", _sds(()), "metric"),
+                    _io_entry("ncorrect", _sds(()), "metric")]
+        if diag:
+            nq = len([n for n in init.names if init.roles[n] == "step_w"])
+            for nm in ("gw_norm", "w_norm", "gs_abs", "s_val"):
+                outputs.append(_io_entry(nm, _sds((nq,)), "diag"))
+
+        suffix = ""
+        if method != "lsq":
+            suffix += f"_{method}"
+        if gscale != "full":
+            suffix += f"_{gscale}"
+        art_id = f"{kind}_{fam}_b{self.batch}{suffix}"
+        meta = {"kind": kind, "family": fam, "method": method,
+                "gscale": gscale, "batch": self.batch}
+        if distill:
+            meta["teacher_family"] = tfam
+        self._emit(art_id, fn, arg_specs, inputs, outputs, meta)
+
+    def eval(self, model, qbits, method="lsq"):
+        fam = self.family(model, qbits)
+        spec = T.ModelSpec(model=model, qbits=qbits, method=method)
+        init = self.inits[fam]
+        fn = T.build_eval_step(spec, init)
+        dio, dspecs = self._data_io(self.batch)
+        arg_specs = [_sds(p.shape) for p in init.params] + dspecs
+        inputs = self._param_io(fam, "param") + dio
+        nc = self.families[fam]["num_classes"]
+        outputs = [
+            _io_entry("loss", _sds(()), "metric"),
+            _io_entry("ncorrect", _sds(()), "metric"),
+            _io_entry("logits", _sds((self.batch, nc)), "logits"),
+        ]
+        art_id = f"eval_{fam}_b{self.batch}"
+        self._emit(art_id, fn, arg_specs, inputs, outputs,
+                   {"kind": "eval", "family": fam, "method": method,
+                    "batch": self.batch})
+
+    def init_quant(self, model, qbits):
+        fam = self.family(model, qbits)
+        init = self.inits[fam]
+        spec = self.specs[fam]
+        fn = T.build_init_quant(spec, init)
+        x = _sds((self.batch, spec.image, spec.image, spec.channels))
+        arg_specs = [_sds(p.shape) for p in init.params] + [x]
+        inputs = self._param_io(fam, "param") + [_io_entry("x", x, "data_x")]
+        outputs = self._param_io(fam, "param")
+        art_id = f"initq_{fam}_b{self.batch}"
+        self._emit(art_id, fn, arg_specs, inputs, outputs,
+                   {"kind": "init_quant", "family": fam, "batch": self.batch})
+
+    def infer(self, model, qbits, batch=INFER_BATCH):
+        fam = self.family(model, qbits)
+        init = self.inits[fam]
+        spec = self.specs[fam]
+        fn = T.build_infer_step(spec, init)
+        x = _sds((batch, spec.image, spec.image, spec.channels))
+        arg_specs = [_sds(p.shape) for p in init.params] + [x]
+        inputs = self._param_io(fam, "param") + [_io_entry("x", x, "data_x")]
+        nc = self.families[fam]["num_classes"]
+        outputs = [_io_entry("logits", _sds((batch, nc)), "logits")]
+        art_id = f"infer_{fam}_b{batch}"
+        self._emit(art_id, fn, arg_specs, inputs, outputs,
+                   {"kind": "infer", "family": fam, "batch": batch})
+
+    def fig2(self, n=512):
+        """v sweep through each quantizer's forward + ds term (s=1, Qn=0,
+        Qp=3 as in the paper's Figure 2)."""
+        from .kernels import ref
+
+        def fn(v, s):
+            def cfg(m):
+                return QuantConfig(bits=2, signed=False, method=m)
+
+            vhat = ref.quantize(v, s, 0, 3)
+            return (
+                vhat,
+                ds_term(v, s, cfg("lsq")),
+                ds_term(v, s, cfg("qil")),
+                ds_term(v, s, cfg("pact")),
+            )
+
+        v = _sds((n,))
+        s = _sds(())
+        inputs = [_io_entry("v", v, "data_x"), _io_entry("s", s, "scalar")]
+        outputs = [
+            _io_entry(nm, v, "series")
+            for nm in ("vhat", "ds_lsq", "ds_qil", "ds_pact")
+        ]
+        self._emit("fig2_curves", fn, [v, s], inputs, outputs,
+                   {"kind": "fig2", "family": None, "batch": n})
+
+    def qmm(self, m=32, k=512, n=256):
+        def fn(xbar, wbar, sx, sw):
+            return (qmm_kernels.qmatmul(xbar, wbar, sx, sw),)
+
+        xs = _sds((m, k), jnp.int32)
+        ws = _sds((k, n), jnp.int32)
+        sc = _sds(())
+        inputs = [
+            _io_entry("xbar", xs, "data_x"),
+            _io_entry("wbar", ws, "data_w"),
+            _io_entry("sx", sc, "scalar"),
+            _io_entry("sw", sc, "scalar"),
+        ]
+        outputs = [_io_entry("out", _sds((m, n)), "logits")]
+        self._emit(f"qmm_{m}x{k}x{n}", fn, [xs, ws, sc, sc], inputs, outputs,
+                   {"kind": "qmm", "family": None, "batch": m})
+
+    # -- manifest -------------------------------------------------------------
+    def write_manifest(self):
+        spec = T.ModelSpec()
+        manifest = {
+            "version": 1,
+            "batch": self.batch,
+            "image": spec.image,
+            "channels": spec.channels,
+            "num_classes": spec.num_classes,
+            "families": self.families,
+            "artifacts": self.artifacts,
+        }
+        (self.out / "manifest.json").write_text(json.dumps(manifest, indent=1))
+        print(f"manifest: {len(self.artifacts)} artifacts, "
+              f"{len(self.families)} families")
+
+
+PRECISIONS = (2, 3, 4, 8)
+
+
+def build_set(ex: Exporter, which: str):
+    ex.fig2()
+    ex.qmm()
+    # Core sweep model at every precision (Tables 1, 2; Sec. 3.5).
+    for q in (32,) + PRECISIONS:
+        ex.train("cnn_small", q)
+        ex.eval("cnn_small", q)
+        if q != 32:
+            ex.init_quant("cnn_small", q)
+    ex.infer("cnn_small", 2)
+    ex.infer("cnn_small", 8)
+    ex.infer("cnn_small", 32)
+    if which == "quick":
+        return
+    # Competing quantizer gradients at 2-bit (Table 1 baselines, Fig. 2).
+    for method in ("qil", "pact", "fixed"):
+        ex.train("cnn_small", 2, method=method)
+    # Gradient-scale ablation (Table 3).
+    for gs in ("sqrtn", "one", "x10", "d10"):
+        ex.train("cnn_small", 2, gscale=gs)
+    # Knowledge distillation (Table 4).
+    for q in PRECISIONS:
+        ex.train("cnn_small", q, distill=True)
+    # R-ratio diagnostics (Fig. 4): gscale x precision.
+    for q in PRECISIONS:
+        for gs in ("one", "sqrtn", "full"):
+            ex.train("cnn_small", q, gscale=gs, diag=True)
+    # ResNet ladder (Tables 1, 4; Fig. 3).
+    for q in (32,) + PRECISIONS:
+        ex.train("resnet20", q)
+        ex.eval("resnet20", q)
+        if q != 32:
+            ex.init_quant("resnet20", q)
+    for q in (2, 3):
+        ex.train("resnet20", q, distill=True)
+    # Architecture families (Table 1 rows, Fig. 3 frontier).
+    archs = ("resnet8", "vgg_small", "sqnxt_small")
+    precs = (32, 2, 4) if which == "default" else (32,) + PRECISIONS
+    for model in archs:
+        for q in precs:
+            ex.train(model, q)
+            ex.eval(model, q)
+            if q != 32:
+                ex.init_quant(model, q)
+    ex.infer("resnet8", 2)
+    if which == "full":
+        for model in ("resnet14", "resnet32"):
+            for q in (32, 2, 4):
+                ex.train(model, q)
+                ex.eval(model, q)
+                if q != 32:
+                    ex.init_quant(model, q)
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--set", default="default",
+                    choices=("quick", "default", "full"))
+    ap.add_argument("--batch", type=int, default=DEFAULT_BATCH)
+    ap.add_argument("--stats", action="store_true",
+                    help="print HLO op histograms (L2 perf accounting)")
+    args = ap.parse_args()
+    out = pathlib.Path(args.out)
+    out.mkdir(parents=True, exist_ok=True)
+    t0 = time.time()
+    ex = Exporter(out, args.batch, args.stats)
+    build_set(ex, args.set)
+    ex.write_manifest()
+    print(f"total {time.time() - t0:.1f}s -> {out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,7 @@
+"""Layer-1 Pallas kernels: the LSQ quantizer and the int-domain matmul.
+
+``ref`` is the pure-jnp oracle; ``lsq``/``qmatmul`` are the Pallas
+implementations the Layer-2 model actually lowers.
+"""
+
+from . import lsq, qmatmul, ref  # noqa: F401

@@ -1,0 +1,193 @@
+"""Layer-1 Pallas kernels for the LSQ quantizer (paper Eqs. 1-3, 5).
+
+Three kernels, all tiled for TPU VMEM and validated under ``interpret=True``
+(the CPU PJRT plugin cannot run Mosaic custom-calls, see DESIGN.md
+§Hardware-Adaptation):
+
+  * ``_fwd_kernel``      — vhat = round(clip(v/s, -Qn, Qp)) * s
+  * ``_bwd_kernel``      — fused backward: STE data gradient (Eq. 5) AND the
+                           per-block partial reduction of the step-size
+                           gradient (Eq. 3). One pass over the data instead
+                           of the two a naive autograd would emit.
+  * ``_step_init_kernel`` — per-block partial sums of |v| for the
+                           2<|v|>/sqrt(Qp) step initialization.
+
+The public entry point is :func:`lsq_quantize`, a ``jax.custom_vjp`` function
+whose forward and backward are both Pallas calls, so the Layer-2 model lowers
+the whole quantizer (including its gradient) into a single HLO module.
+
+Tiling: inputs are flattened, padded to a lane multiple (128) and processed
+on a 1-D grid of (1, block) tiles. The block size is chosen per tensor by
+``_plan``: the whole tensor in one block while it fits the VMEM budget
+(``MAX_BLOCK`` = 2M f32 = 8 MB, i.e. in+out tiles fill a 16 MB VMEM), and a
+grid of ``MAX_BLOCK`` tiles beyond that. Every tensor in the models shipped
+here fits a single block; the multi-block path is exercised by unit tests
+(and would be the real-TPU configuration for larger layers). This matters
+doubly under ``interpret=True``: each grid step costs a dynamic-slice +
+loop iteration that XLA:CPU cannot fuse, so single-block tiling is also
+what makes the AOT artifacts run at pure-XLA speed (see EXPERIMENTS.md
+§Perf L1).
+
+The Eq.-3 terms are reduced block-locally into a (1, 1) accumulator tile
+(the TPU analogue of a CUDA warp-reduce) and summed across blocks outside
+the kernel.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Lane width: the native f32 VREG minor dimension on TPU.
+LANE = 128
+
+# VMEM budget cap per block (f32 elements): 2M elems = 8 MB.
+MAX_BLOCK = 1 << 21
+
+# interpret=True everywhere: see module docstring.
+_INTERPRET = True
+
+
+def _plan(n: int) -> tuple[int, int]:
+    """Choose (block, nblk) for an n-element tensor (see module docstring)."""
+    padded = max(LANE, -(-n // LANE) * LANE)
+    if padded <= MAX_BLOCK:
+        return padded, 1
+    return MAX_BLOCK, -(-padded // MAX_BLOCK)
+
+
+def _pad_blocks(flat, block: int, nblk: int):
+    """Pad a 1-D array to nblk*block and reshape to (nblk, block)."""
+    n = flat.shape[0]
+    pad = nblk * block - n
+    if pad:
+        flat = jnp.pad(flat, (0, pad))
+    return flat.reshape(nblk, block)
+
+
+def _fwd_kernel(v_ref, s_ref, o_ref, *, qn: int, qp: int):
+    s = s_ref[0, 0]
+    r = jnp.clip(v_ref[...] / s, -float(qn), float(qp))
+    o_ref[...] = jnp.round(r) * s
+
+
+def _bwd_kernel(v_ref, s_ref, g_ref, dv_ref, ds_ref, *, qn: int, qp: int):
+    s = s_ref[0, 0]
+    r = v_ref[...] / s
+    g = g_ref[...]
+    inside = (r > -float(qn)) & (r < float(qp))
+    # Eq. 5: straight-through estimator for d(vhat)/d(v).
+    dv_ref[...] = jnp.where(inside, g, 0.0)
+    # Eq. 3: d(vhat)/d(s), block-locally reduced.
+    term = jnp.where(
+        r <= -float(qn),
+        -float(qn),
+        jnp.where(r >= float(qp), float(qp), jnp.round(r) - r),
+    )
+    ds_ref[0, 0] = jnp.sum(g * term)
+
+
+def _step_init_kernel(v_ref, acc_ref):
+    acc_ref[0, 0] = jnp.sum(jnp.abs(v_ref[...]))
+
+
+def _scalar_spec():
+    # The step size is a scalar broadcast to every grid step.
+    return pl.BlockSpec((1, 1), lambda i: (0, 0))
+
+
+def _tile_spec(block: int):
+    return pl.BlockSpec((1, block), lambda i: (i, 0))
+
+
+def _acc_spec():
+    return pl.BlockSpec((1, 1), lambda i: (i, 0))
+
+
+def _fwd_pallas(v2, s11, qn: int, qp: int, block: int, nblk: int):
+    return pl.pallas_call(
+        functools.partial(_fwd_kernel, qn=qn, qp=qp),
+        grid=(nblk,),
+        in_specs=[_tile_spec(block), _scalar_spec()],
+        out_specs=_tile_spec(block),
+        out_shape=jax.ShapeDtypeStruct(v2.shape, v2.dtype),
+        interpret=_INTERPRET,
+    )(v2, s11)
+
+
+def _bwd_pallas(v2, s11, g2, qn: int, qp: int, block: int, nblk: int):
+    return pl.pallas_call(
+        functools.partial(_bwd_kernel, qn=qn, qp=qp),
+        grid=(nblk,),
+        in_specs=[_tile_spec(block), _scalar_spec(), _tile_spec(block)],
+        out_specs=[_tile_spec(block), _acc_spec()],
+        out_shape=[
+            jax.ShapeDtypeStruct(v2.shape, v2.dtype),
+            jax.ShapeDtypeStruct((nblk, 1), v2.dtype),
+        ],
+        interpret=_INTERPRET,
+    )(v2, s11, g2)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3, 4))
+def lsq_quantize(v, s, qn: int, qp: int, gscale: float):
+    """LSQ fake-quantization of ``v`` with learnable step size ``s``.
+
+    Forward: Eqs. 1-2. Backward: Eq. 5 to ``v`` and Eq. 3 (scaled by
+    ``gscale``, Section 2.2) to ``s``. ``qn``/``qp``/``gscale`` are static.
+    """
+    out, _ = _lsq_fwd(v, s, qn, qp, gscale)
+    return out
+
+
+def _lsq_fwd(v, s, qn: int, qp: int, gscale: float):
+    shape = v.shape
+    flat = v.reshape(-1)
+    block, nblk = _plan(flat.shape[0])
+    v2 = _pad_blocks(flat, block, nblk)
+    s11 = s.reshape(1, 1).astype(v.dtype)
+    o2 = _fwd_pallas(v2, s11, qn, qp, block, nblk)
+    out = o2.reshape(-1)[: flat.shape[0]].reshape(shape)
+    return out, (v, s)
+
+
+def _lsq_bwd(qn: int, qp: int, gscale: float, res, cot):
+    v, s = res
+    shape = v.shape
+    flat_v = v.reshape(-1)
+    n = flat_v.shape[0]
+    block, nblk = _plan(n)
+    v2 = _pad_blocks(flat_v, block, nblk)
+    # Padded cotangent lanes are zero, so they contribute nothing to either
+    # gradient — padding the value lanes with zeros is safe.
+    g2 = _pad_blocks(cot.reshape(-1), block, nblk)
+    s11 = s.reshape(1, 1).astype(v.dtype)
+    dv2, ds_part = _bwd_pallas(v2, s11, g2, qn, qp, block, nblk)
+    dv = dv2.reshape(-1)[:n].reshape(shape)
+    ds = jnp.sum(ds_part) * jnp.asarray(gscale, v.dtype)
+    return dv, ds.reshape(s.shape)
+
+
+lsq_quantize.defvjp(_lsq_fwd, _lsq_bwd)
+
+
+def step_init(v, qp: int):
+    """Pallas-reduced step-size init 2<|v|>/sqrt(Qp) (Section 2.1)."""
+    flat = v.reshape(-1)
+    n = flat.shape[0]
+    block, nblk = _plan(n)
+    v2 = _pad_blocks(flat, block, nblk)
+    part = pl.pallas_call(
+        _step_init_kernel,
+        grid=(nblk,),
+        in_specs=[_tile_spec(block)],
+        out_specs=_acc_spec(),
+        out_shape=jax.ShapeDtypeStruct((nblk, 1), v.dtype),
+        interpret=_INTERPRET,
+    )(v2)
+    mean_abs = jnp.sum(part) / float(n)
+    return 2.0 * mean_abs / math.sqrt(float(qp))

@@ -1,0 +1,73 @@
+"""Layer-1 Pallas kernel for the Figure-1 integer-domain matmul.
+
+At inference the paper computes convolution / fully-connected layers as an
+integer matrix multiply over the *integer-scaled* representations
+(wbar, xbar) followed by one cheap scalar rescale by sw*sx (Eq. 2, Figure 1).
+This kernel implements exactly that dataflow:
+
+  * operands arrive as int32 tensors holding values in the low-precision
+    range (|x| <= Qp, so 2-8 bit payloads),
+  * the contraction accumulates in int32 — what an MXU-adjacent integer MAC
+    array produces — tiled over (BM, BN) output blocks with the full K
+    dimension resident per block,
+  * the step-size product is applied once to the accumulator tile.
+
+Validated against ``ref.qmatmul`` under ``interpret=True``.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+_INTERPRET = True
+
+# MXU-friendly output tiling; K stays resident (layer K here is <= a few
+# thousand, well inside VMEM at int32).
+BM = 128
+BN = 128
+
+
+def _qmm_kernel(x_ref, w_ref, scale_ref, o_ref):
+    acc = jnp.dot(x_ref[...], w_ref[...], preferred_element_type=jnp.int32)
+    o_ref[...] = acc.astype(jnp.float32) * scale_ref[0, 0]
+
+
+def _pad_to(a, m, axis):
+    pad = (-a.shape[axis]) % m
+    if pad == 0:
+        return a
+    widths = [(0, 0)] * a.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(a, widths)
+
+
+def qmatmul(xbar, wbar, sx, sw):
+    """out[m,n] = (sum_k xbar[m,k] * wbar[k,n]) * sx * sw.
+
+    ``xbar``: int32[M, K] integer-valued activations, ``wbar``: int32[K, N]
+    integer-valued weights, ``sx``/``sw``: f32 scalars (step sizes).
+    """
+    m, k = xbar.shape
+    k2, n = wbar.shape
+    assert k == k2, (xbar.shape, wbar.shape)
+    xp = _pad_to(xbar.astype(jnp.int32), BM, 0)
+    wp = _pad_to(wbar.astype(jnp.int32), BN, 1)
+    gm, gn = xp.shape[0] // BM, wp.shape[1] // BN
+    scale = (sx * sw).astype(jnp.float32).reshape(1, 1)
+    out = pl.pallas_call(
+        _qmm_kernel,
+        grid=(gm, gn),
+        in_specs=[
+            pl.BlockSpec((BM, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((k, BN), lambda i, j: (0, j)),
+            pl.BlockSpec((1, 1), lambda i, j: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((BM, BN), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((xp.shape[0], wp.shape[1]), jnp.float32),
+        interpret=_INTERPRET,
+    )(xp, wp, scale)
+    return out[:m, :n]

@@ -1,0 +1,91 @@
+"""Pure-jnp oracle for the LSQ quantizer and the int-domain matmul.
+
+This module is the CORRECTNESS GROUND TRUTH for every Pallas kernel in this
+package (see ``lsq.py`` / ``qmatmul.py``). It implements, with no cleverness:
+
+  * Eq. 1/2 of the paper:  vbar = round(clip(v/s, -Qn, Qp)), vhat = vbar * s
+  * Eq. 3: the LSQ gradient of vhat w.r.t. the step size s
+  * Eq. 5: the straight-through gradient of vhat w.r.t. v
+  * the Figure-1 inference dataflow: int matmul of (wbar, xbar) rescaled by
+    sw * sx.
+
+pytest (``python/tests``) asserts the Pallas kernels match these functions to
+float tolerance over hypothesis-generated shapes/values.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def qrange(bits: int, signed: bool) -> tuple[int, int]:
+    """Return (Qn, Qp) per Section 2 of the paper.
+
+    Unsigned data (activations): Qn = 0, Qp = 2^b - 1.
+    Signed data (weights):       Qn = 2^(b-1), Qp = 2^(b-1) - 1.
+    """
+    if bits < 1:
+        raise ValueError(f"bits must be >= 1, got {bits}")
+    if signed:
+        return 2 ** (bits - 1), 2 ** (bits - 1) - 1
+    return 0, 2**bits - 1
+
+
+def quantize_vbar(v, s, qn: int, qp: int):
+    """Integer-valued representation vbar = round(clip(v/s, -Qn, Qp)) (Eq. 1)."""
+    return jnp.round(jnp.clip(v / s, -float(qn), float(qp)))
+
+
+def quantize(v, s, qn: int, qp: int):
+    """Fake-quantized vhat = vbar * s (Eq. 2)."""
+    return quantize_vbar(v, s, qn, qp) * s
+
+
+def grad_v_mask(v, s, qn: int, qp: int):
+    """STE pass-through mask, Eq. 5: 1 inside (-Qn, Qp), 0 at/after clip."""
+    r = v / s
+    return jnp.where((r > -float(qn)) & (r < float(qp)), 1.0, 0.0).astype(v.dtype)
+
+
+def grad_s_term(v, s, qn: int, qp: int):
+    """Per-element d(vhat)/d(s), Eq. 3.
+
+    -v/s + round(v/s)   inside the quantization domain
+    -Qn / Qp            at or beyond the negative / positive clip point
+    """
+    r = v / s
+    inner = -r + jnp.round(r)
+    term = jnp.where(r <= -float(qn), -float(qn), inner)
+    term = jnp.where(r >= float(qp), float(qp), term)
+    return term.astype(v.dtype)
+
+
+def lsq_vjp(v, s, qn: int, qp: int, gscale: float, cotangent):
+    """Reference VJP of ``quantize``: (grad_v, grad_s).
+
+    grad_s is reduced over all elements and multiplied by the step-size
+    gradient scale g (Section 2.2): g = 1/sqrt(N * Qp).
+    """
+    gv = cotangent * grad_v_mask(v, s, qn, qp)
+    gs = jnp.sum(cotangent * grad_s_term(v, s, qn, qp)) * jnp.asarray(gscale, v.dtype)
+    return gv, gs
+
+
+def step_init(v, qp: int):
+    """Step-size initialization 2<|v|>/sqrt(Qp) (Section 2.1)."""
+    return 2.0 * jnp.mean(jnp.abs(v)) / jnp.sqrt(float(qp))
+
+
+def qmatmul(xbar, wbar, sx, sw):
+    """Figure-1 inference path: integer matmul rescaled by the step sizes.
+
+    ``xbar``/``wbar`` are integer-valued (stored as int32); accumulation is
+    int32 as a low-precision MAC array would produce, and a single
+    scalar-tensor multiply applies sx*sw afterwards.
+    """
+    acc = jnp.matmul(
+        xbar.astype(jnp.int32),
+        wbar.astype(jnp.int32),
+        preferred_element_type=jnp.int32,
+    )
+    return acc.astype(jnp.float32) * (sx * sw)

@@ -1,0 +1,279 @@
+"""Layer-2 functional NN layers with LSQ-quantized conv / dense.
+
+A deliberately small module system ("qnn"): a model is a plain Python
+function taking a :class:`Ctx` and an input tensor. The same function serves
+three purposes depending on ``ctx.mode``:
+
+  * ``init``    — registers parameters (with roles) and returns shapes
+  * ``apply``   — the differentiable forward pass (training or eval)
+  * ``collect`` — forward pass that records mean|v| at every activation
+                  quantizer, used to initialize activation step sizes from
+                  the first batch (Section 2.1)
+
+Parameter roles drive the Rust-side manifest:
+
+  weight   conv/fc kernels          -> gradient + weight decay
+  bias     biases, BN gamma/beta    -> gradient, no weight decay
+  step_w   weight step sizes        -> gradient (custom scale), no decay
+  step_a   activation step sizes    -> gradient (custom scale), no decay
+  state    BN running mean/var      -> no gradient, updated functionally
+
+Per the paper, weights are quantized signed and input activations unsigned
+(they follow ReLU), except the network input itself which is signed; first
+and last matmul layers are always 8-bit.
+"""
+
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import lsq as lsq_kernels
+from .quantizers import QuantConfig, quantize
+
+ROLES = ("weight", "bias", "step_w", "step_a", "state")
+
+BN_MOMENTUM = 0.9
+BN_EPS = 1e-5
+
+
+class Ctx:
+    """Threaded context for init/apply/collect passes over a model fn."""
+
+    def __init__(self, mode, params=None, train=False, rng=None, qbits=32,
+                 method="lsq", gscale_mode="full", num_classes=10):
+        assert mode in ("init", "apply", "collect")
+        self.mode = mode
+        self.num_classes = num_classes
+        self.params = {} if params is None else params
+        self.roles: dict[str, str] = {}
+        self.layer_meta: list[dict] = []  # model-size accounting (Fig. 3)
+        self.train = train
+        self.rng = rng
+        self.state_out: dict[str, jnp.ndarray] = {}
+        self.act_stats: dict[str, jnp.ndarray] = {}
+        self.qbits = qbits
+        self.method = method
+        self.gscale_mode = gscale_mode
+        self._scope: list[str] = []
+        self._matmul_index = 0
+        self.n_matmul: int | None = None  # set before apply for first/last
+
+    # -- naming ------------------------------------------------------------
+    def scope(self, name: str) -> "_Scope":
+        return _Scope(self, name)
+
+    def _name(self, leaf: str) -> str:
+        return ".".join(self._scope + [leaf])
+
+    # -- parameters ---------------------------------------------------------
+    def param(self, leaf: str, role: str, shape, init_fn: Callable):
+        name = self._name(leaf)
+        if self.mode == "init":
+            assert name not in self.params, f"duplicate param {name}"
+            self.rng, key = jax.random.split(self.rng)
+            self.params[name] = init_fn(key, shape).astype(jnp.float32)
+            self.roles[name] = role
+        return self.params[name]
+
+    def layer_bits(self) -> int:
+        """Precision for the current matmul layer: first/last pinned to 8."""
+        i = self._matmul_index
+        if self.qbits >= 32:
+            return 32
+        if i == 0 or (self.n_matmul is not None and i == self.n_matmul - 1):
+            return max(self.qbits, 8)
+        return self.qbits
+
+    def quant_cfg(self, signed: bool, bits: int) -> QuantConfig:
+        return QuantConfig(bits=bits, signed=signed, method=self.method,
+                           gscale_mode=self.gscale_mode)
+
+
+class _Scope:
+    def __init__(self, ctx: Ctx, name: str):
+        self.ctx, self.name = ctx, name
+
+    def __enter__(self):
+        self.ctx._scope.append(self.name)
+        return self.ctx
+
+    def __exit__(self, *exc):
+        self.ctx._scope.pop()
+
+
+# --------------------------------------------------------------------------
+# initializers
+# --------------------------------------------------------------------------
+
+
+def kaiming(key, shape):
+    """He-normal for conv (HWIO) / dense (IO) weights."""
+    fan_in = 1
+    for d in shape[:-1]:
+        fan_in *= d
+    return jax.random.normal(key, shape) * jnp.sqrt(2.0 / fan_in)
+
+
+def zeros(_key, shape):
+    return jnp.zeros(shape)
+
+
+def ones(_key, shape):
+    return jnp.ones(shape)
+
+
+# --------------------------------------------------------------------------
+# quantization plumbing shared by conv & dense
+# --------------------------------------------------------------------------
+
+
+def _quantize_pair(ctx: Ctx, x, w, signed_act: bool):
+    """Quantize (input activations, weights) for the current matmul layer.
+
+    Returns (x_hat, w_hat). Registers the two step-size parameters; in
+    ``collect`` mode records mean|x| for data-driven activation-step init.
+    """
+    bits = ctx.layer_bits()
+    ctx._matmul_index += 1
+    if bits >= 32:
+        return x, w
+
+    wcfg = ctx.quant_cfg(signed=True, bits=bits)
+    acfg = ctx.quant_cfg(signed=signed_act, bits=bits)
+    _, qp_w = wcfg.qrange()
+
+    def w_step_init(_key, shape):
+        # 2<|w|>/sqrt(Qp) on the *initial* weights (Section 2.1). At init
+        # time ``w`` is already materialized, so this is concrete.
+        return jnp.asarray(lsq_kernels.step_init(w, qp_w)).reshape(shape)
+
+    sw = ctx.param("sw", "step_w", (), w_step_init)
+    sa = ctx.param("sa", "step_a", (), lambda _k, s: jnp.asarray(1.0))
+
+    if ctx.mode == "collect":
+        # Record mean|v| of the (unquantized) input for the data-driven
+        # activation-step init, and pass everything through at fp32: we
+        # fine-tune from a full-precision model, so "the first batch of
+        # activations" is the fp batch.
+        _, qp_a = acfg.qrange()
+        ctx.act_stats[ctx._name("sa")] = (jnp.mean(jnp.abs(x)), qp_a)
+        ctx.layer_meta.append(
+            {"name": ".".join(ctx._scope), "n_weights": int(w.size),
+             "bits": int(bits)}
+        )
+        return x, w
+
+    n_w = w.size
+    n_feat = x.shape[-1]
+    x_hat = quantize(x, sa, acfg, n_feat)
+    w_hat = quantize(w, sw, wcfg, n_w)
+    ctx.layer_meta.append(
+        {
+            "name": ".".join(ctx._scope),
+            "n_weights": int(n_w),
+            "bits": int(bits),
+        }
+    )
+    return x_hat, w_hat
+
+
+# --------------------------------------------------------------------------
+# layers
+# --------------------------------------------------------------------------
+
+
+def qconv(ctx: Ctx, x, name: str, out_ch: int, ksize=3,
+          stride: int = 1, signed_act: bool = False, use_bias: bool = False):
+    """Quantized 2-D convolution (NHWC x HWIO), SAME padding.
+
+    ``ksize`` may be an int or an (kh, kw) tuple (for separable 1x3 / 3x1
+    pairs as used by SqueezeNext).
+    """
+    if isinstance(ksize, int):
+        ksize = (ksize, ksize)
+    with ctx.scope(name):
+        in_ch = x.shape[-1]
+        w = ctx.param("w", "weight", (ksize[0], ksize[1], in_ch, out_ch), kaiming)
+        if ctx.mode == "init" and ctx.layer_bits() >= 32:
+            ctx.layer_meta.append(
+                {"name": ".".join(ctx._scope), "n_weights": int(w.size),
+                 "bits": 32}
+            )
+        x_hat, w_hat = _quantize_pair(ctx, x, w, signed_act)
+        y = jax.lax.conv_general_dilated(
+            x_hat, w_hat,
+            window_strides=(stride, stride),
+            padding="SAME",
+            dimension_numbers=("NHWC", "HWIO", "NHWC"),
+        )
+        if use_bias:
+            b = ctx.param("b", "bias", (out_ch,), zeros)
+            y = y + b
+        return y
+
+
+def qdense(ctx: Ctx, x, name: str, out_dim: int, signed_act: bool = False,
+           use_bias: bool = True):
+    """Quantized fully connected layer."""
+    with ctx.scope(name):
+        in_dim = x.shape[-1]
+        w = ctx.param("w", "weight", (in_dim, out_dim), kaiming)
+        if ctx.mode == "init" and ctx.layer_bits() >= 32:
+            ctx.layer_meta.append(
+                {"name": ".".join(ctx._scope), "n_weights": int(w.size),
+                 "bits": 32}
+            )
+        x_hat, w_hat = _quantize_pair(ctx, x, w, signed_act)
+        y = x_hat @ w_hat
+        if use_bias:
+            b = ctx.param("b", "bias", (out_dim,), zeros)
+            y = y + b
+        return y
+
+
+def batchnorm(ctx: Ctx, x, name: str):
+    """BN over N,H,W (or N for 2-D input) with functional running stats."""
+    with ctx.scope(name):
+        ch = x.shape[-1]
+        gamma = ctx.param("gamma", "bias", (ch,), ones)
+        beta = ctx.param("beta", "bias", (ch,), zeros)
+        rmean = ctx.param("rmean", "state", (ch,), zeros)
+        rvar = ctx.param("rvar", "state", (ch,), ones)
+        axes = tuple(range(x.ndim - 1))
+        if ctx.train:
+            mean = jnp.mean(x, axis=axes)
+            var = jnp.var(x, axis=axes)
+            ctx.state_out[ctx._name("rmean")] = (
+                BN_MOMENTUM * rmean + (1.0 - BN_MOMENTUM) * mean
+            )
+            ctx.state_out[ctx._name("rvar")] = (
+                BN_MOMENTUM * rvar + (1.0 - BN_MOMENTUM) * var
+            )
+        else:
+            mean, var = rmean, rvar
+        inv = jax.lax.rsqrt(var + BN_EPS)
+        return (x - mean) * inv * gamma + beta
+
+
+def relu(x):
+    return jnp.maximum(x, 0.0)
+
+
+def avgpool2(x):
+    """2x2 average pooling, stride 2."""
+    return jax.lax.reduce_window(
+        x, 0.0, jax.lax.add, (1, 2, 2, 1), (1, 2, 2, 1), "VALID"
+    ) * 0.25
+
+
+def maxpool2(x):
+    return jax.lax.reduce_window(
+        x, -jnp.inf, jax.lax.max, (1, 2, 2, 1), (1, 2, 2, 1), "VALID"
+    )
+
+
+def global_avgpool(x):
+    return jnp.mean(x, axis=(1, 2))

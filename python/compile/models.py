@@ -1,0 +1,164 @@
+"""Layer-2 model zoo: the architecture families evaluated in the paper.
+
+All models are 32x32xC -> num_classes classifiers built from the quantized
+layers in :mod:`layers`:
+
+  * ``mlp``            — 2-layer MLP (fast unit-test model)
+  * ``cnn_small``      — 4-conv BN CNN (fast sweep model)
+  * ``resnet8/14/20/32`` — pre-activation ResNet (He et al. 2016), the
+    CIFAR-scale stand-in for the paper's ResNet-18/34/50/101/152 ladder
+  * ``vgg_small``      — VGG-style conv-BN stacks + FC head (VGG-16bn proxy)
+  * ``sqnxt_small``    — SqueezeNext-style bottleneck blocks
+    (SqueezeNext-23-2x proxy: aggressive parameter reduction, which the
+    paper shows is hypersensitive to 2-bit quantization)
+
+Each builder returns a function ``model(ctx, x) -> logits``. Use
+:func:`get_model`.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from . import layers as L
+
+
+def mlp(ctx: L.Ctx, x):
+    x = x.reshape(x.shape[0], -1)
+    x = L.qdense(ctx, x, "fc1", 256, signed_act=True)
+    x = L.relu(x)
+    x = L.qdense(ctx, x, "fc2", ctx.num_classes)
+    return x
+
+
+def cnn_small(ctx: L.Ctx, x):
+    x = L.qconv(ctx, x, "conv1", 16, signed_act=True)
+    x = L.batchnorm(ctx, x, "bn1")
+    x = L.relu(x)
+    x = L.qconv(ctx, x, "conv2", 32, stride=2)
+    x = L.batchnorm(ctx, x, "bn2")
+    x = L.relu(x)
+    x = L.qconv(ctx, x, "conv3", 32)
+    x = L.batchnorm(ctx, x, "bn3")
+    x = L.relu(x)
+    x = L.qconv(ctx, x, "conv4", 64, stride=2)
+    x = L.batchnorm(ctx, x, "bn4")
+    x = L.relu(x)
+    x = L.global_avgpool(x)
+    x = L.qdense(ctx, x, "fc", ctx.num_classes)
+    return x
+
+
+def _preact_block(ctx: L.Ctx, x, name: str, out_ch: int, stride: int):
+    """Pre-activation basic block: BN-ReLU-conv, BN-ReLU-conv (+ shortcut)."""
+    with ctx.scope(name):
+        h = L.batchnorm(ctx, x, "bn1")
+        h = L.relu(h)
+        # Projection shortcut taken from the pre-activated tensor, as in the
+        # original pre-act ResNet.
+        if stride != 1 or x.shape[-1] != out_ch:
+            sc = L.qconv(ctx, h, "proj", out_ch, ksize=1, stride=stride)
+        else:
+            sc = x
+        h = L.qconv(ctx, h, "conv1", out_ch, stride=stride)
+        h = L.batchnorm(ctx, h, "bn2")
+        h = L.relu(h)
+        h = L.qconv(ctx, h, "conv2", out_ch)
+        return h + sc
+
+
+def make_resnet(blocks_per_stage: int, width: int = 16):
+    widths = (width, 2 * width, 4 * width)
+
+    def resnet(ctx: L.Ctx, x):
+        x = L.qconv(ctx, x, "stem", widths[0], signed_act=True)
+        for stage, ch in enumerate(widths):
+            for b in range(blocks_per_stage):
+                stride = 2 if (stage > 0 and b == 0) else 1
+                x = _preact_block(ctx, x, f"s{stage}b{b}", ch, stride)
+        x = L.batchnorm(ctx, x, "bn_final")
+        x = L.relu(x)
+        x = L.global_avgpool(x)
+        x = L.qdense(ctx, x, "fc", ctx.num_classes)
+        return x
+
+    return resnet
+
+
+def vgg_small(ctx: L.Ctx, x):
+    cfg = [(32, 2), (64, 2), (128, 2)]
+    first = True
+    for stage, (ch, reps) in enumerate(cfg):
+        for r in range(reps):
+            x = L.qconv(ctx, x, f"conv{stage}_{r}", ch, signed_act=first)
+            first = False
+            x = L.batchnorm(ctx, x, f"bn{stage}_{r}")
+            x = L.relu(x)
+        x = L.maxpool2(x)
+    x = x.reshape(x.shape[0], -1)
+    x = L.qdense(ctx, x, "fc1", 128)
+    x = L.relu(x)
+    x = L.qdense(ctx, x, "fc2", ctx.num_classes)
+    return x
+
+
+def _sqnxt_block(ctx: L.Ctx, x, name: str, out_ch: int, stride: int):
+    """SqueezeNext bottleneck: 1x1/2 -> 1x1/2 -> 1x3 -> 3x1 -> 1x1 expand."""
+    with ctx.scope(name):
+        in_ch = x.shape[-1]
+        if stride != 1 or in_ch != out_ch:
+            sc = L.qconv(ctx, x, "proj", out_ch, ksize=1, stride=stride)
+        else:
+            sc = x
+        h = L.qconv(ctx, x, "r1", max(in_ch // 2, 8), ksize=1, stride=stride)
+        h = L.batchnorm(ctx, h, "bnr1")
+        h = L.relu(h)
+        h = L.qconv(ctx, h, "r2", max(in_ch // 4, 8), ksize=1)
+        h = L.batchnorm(ctx, h, "bnr2")
+        h = L.relu(h)
+        # Separable 1x3 then 3x1 pair (the SqueezeNext signature move).
+        h = L.qconv(ctx, h, "s13", max(in_ch // 2, 8), ksize=(1, 3))
+        h = L.batchnorm(ctx, h, "bns1")
+        h = L.relu(h)
+        h = L.qconv(ctx, h, "s31", max(in_ch // 2, 8), ksize=(3, 1))
+        h = L.batchnorm(ctx, h, "bns2")
+        h = L.relu(h)
+        h = L.qconv(ctx, h, "expand", out_ch, ksize=1)
+        h = L.batchnorm(ctx, h, "bne")
+        return L.relu(h + sc)
+
+
+def sqnxt_small(ctx: L.Ctx, x):
+    x = L.qconv(ctx, x, "stem", 16, signed_act=True)
+    x = L.batchnorm(ctx, x, "bn_stem")
+    x = L.relu(x)
+    plan = [(16, 1, 1), (32, 2, 2), (64, 2, 2)]
+    for i, (ch, n, stride) in enumerate(plan):
+        for b in range(n):
+            x = _sqnxt_block(ctx, x, f"b{i}_{b}", ch, stride if b == 0 else 1)
+    x = L.global_avgpool(x)
+    x = L.qdense(ctx, x, "fc", ctx.num_classes)
+    return x
+
+
+_MODELS = {
+    "mlp": mlp,
+    "cnn_small": cnn_small,
+    "resnet8": make_resnet(1),
+    "resnet14": make_resnet(2),
+    "resnet20": make_resnet(3),
+    "resnet32": make_resnet(5),
+    "vgg_small": vgg_small,
+    "sqnxt_small": sqnxt_small,
+}
+
+
+def get_model(name: str):
+    try:
+        return _MODELS[name]
+    except KeyError:
+        raise ValueError(f"unknown model {name!r}; have {sorted(_MODELS)}") from None
+
+
+def model_names():
+    return sorted(_MODELS)

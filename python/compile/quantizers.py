@@ -1,0 +1,178 @@
+"""Layer-2 quantizer library: LSQ plus the competing gradient estimators.
+
+The paper's central claim is about the *shape of the gradient* flowing to the
+quantizer step size. To reproduce its comparisons (Table 1, Figure 2) with
+everything else held fixed, every quantizer here shares the identical forward
+(Eqs. 1-2) and STE data gradient (Eq. 5) and differs only in d(vhat)/d(s):
+
+  lsq     -v/s + round(v/s) inside, -Qn / Qp saturated       (Eq. 3, Pallas)
+  lsq_jnp same, pure-jnp (sanity/ablation path)
+  qil     clip(v/s, -Qn, Qp): sensitive only to the distance
+          from the clip points, flat w.r.t. transitions       (Jung et al.)
+  pact    Qp beyond the positive clip point, zero elsewhere   (Choi et al.)
+  fixed   no gradient to s at all (FAQ-style static fit)
+  none    identity (full-precision layers)
+
+All learnable variants apply the same Section-2.2 gradient scale so the
+comparison isolates gradient shape, not update magnitude (the scale itself is
+ablated separately via ``gscale_mode`` for Table 3 / Figure 4).
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+from dataclasses import dataclass, replace
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import lsq as lsq_kernels
+from .kernels import ref
+
+METHODS = ("lsq", "lsq_jnp", "qil", "pact", "fixed", "none")
+GSCALE_MODES = ("full", "sqrtn", "one", "x10", "d10")
+
+
+@dataclass(frozen=True)
+class QuantConfig:
+    """Static per-tensor quantizer configuration, fixed at AOT time."""
+
+    bits: int = 32  # 32 => no quantization
+    signed: bool = True
+    method: str = "lsq"
+    gscale_mode: str = "full"  # Table-3 ablation knob
+
+    @property
+    def enabled(self) -> bool:
+        return self.bits < 32 and self.method != "none"
+
+    def qrange(self) -> tuple[int, int]:
+        return ref.qrange(self.bits, self.signed)
+
+    def with_bits(self, bits: int) -> "QuantConfig":
+        return replace(self, bits=bits)
+
+
+def gradscale_value(n_items: int, qp: int, mode: str) -> float:
+    """The Section-2.2 gradient scale g for a layer with ``n_items`` elements.
+
+    ``full``  g = 1/sqrt(N*Qp)   (the paper's heuristic)
+    ``sqrtn`` g = 1/sqrt(N)      (Figure 4 middle / Table 3 row 2)
+    ``one``   g = 1              (no scaling)
+    ``x10``/``d10``: full scaled by 10 / by 1/10 (Table 3 rows 5-6)
+    """
+    if mode == "one":
+        return 1.0
+    if mode == "sqrtn":
+        return 1.0 / math.sqrt(n_items)
+    g = 1.0 / math.sqrt(n_items * qp)
+    if mode == "x10":
+        return 10.0 * g
+    if mode == "d10":
+        return 0.1 * g
+    if mode == "full":
+        return g
+    raise ValueError(f"unknown gscale mode {mode!r}")
+
+
+# --------------------------------------------------------------------------
+# Appendix-B helper functions (Functions 1 and 2 of the paper), jnp versions.
+# --------------------------------------------------------------------------
+
+
+def gradscale(x, scale):
+    """Function 1: identity forward, gradient multiplied by ``scale``."""
+    y_grad = x * scale
+    return jax.lax.stop_gradient(x - y_grad) + y_grad
+
+
+def roundpass(x):
+    """Function 2: round forward, straight-through gradient."""
+    y = jnp.round(x)
+    return jax.lax.stop_gradient(y - x) + x
+
+
+# --------------------------------------------------------------------------
+# Baseline step-size gradients (shared forward, custom ds term).
+# --------------------------------------------------------------------------
+
+
+def _make_variant(ds_term_fn):
+    @functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3, 4))
+    def quant(v, s, qn, qp, gscale_):
+        return ref.quantize(v, s, qn, qp)
+
+    def fwd(v, s, qn, qp, gscale_):
+        return ref.quantize(v, s, qn, qp), (v, s)
+
+    def bwd(qn, qp, gscale_, res, cot):
+        v, s = res
+        gv = cot * ref.grad_v_mask(v, s, qn, qp)
+        gs = jnp.sum(cot * ds_term_fn(v, s, qn, qp)) * jnp.asarray(
+            gscale_, v.dtype
+        )
+        return gv, gs.reshape(s.shape)
+
+    quant.defvjp(fwd, bwd)
+    return quant
+
+
+def _qil_ds(v, s, qn, qp):
+    # Linear in v inside the domain, saturating at the clip points: the
+    # gradient a pre-discretization interval transform produces — blind to
+    # the quantization transitions themselves (Figure 2, middle).
+    return jnp.clip(v / s, -float(qn), float(qp))
+
+
+def _pact_ds(v, s, qn, qp):
+    # Non-zero only past the clip points (Figure 2, right).
+    r = v / s
+    return jnp.where(
+        r >= float(qp), float(qp), jnp.where(r <= -float(qn), -float(qn), 0.0)
+    ).astype(v.dtype)
+
+
+def _fixed_ds(v, s, qn, qp):
+    return jnp.zeros_like(v)
+
+
+_quant_jnp_lsq = _make_variant(ref.grad_s_term)
+_quant_qil = _make_variant(_qil_ds)
+_quant_pact = _make_variant(_pact_ds)
+_quant_fixed = _make_variant(_fixed_ds)
+
+_VARIANTS = {
+    "lsq_jnp": _quant_jnp_lsq,
+    "qil": _quant_qil,
+    "pact": _quant_pact,
+    "fixed": _quant_fixed,
+}
+
+
+def quantize(v, s, cfg: QuantConfig, n_items: int):
+    """Quantize ``v`` with step ``s`` under ``cfg``; differentiable in both."""
+    if not cfg.enabled:
+        return v
+    qn, qp = cfg.qrange()
+    g = gradscale_value(n_items, qp, cfg.gscale_mode)
+    if cfg.method == "lsq":
+        return lsq_kernels.lsq_quantize(v, s, qn, qp, g)
+    try:
+        fn = _VARIANTS[cfg.method]
+    except KeyError:
+        raise ValueError(f"unknown quantizer method {cfg.method!r}") from None
+    return fn(v, s, qn, qp, g)
+
+
+def ds_term(v, s, cfg: QuantConfig):
+    """The raw d(vhat)/d(s) curve for Figure 2 (no reduction, no gscale)."""
+    qn, qp = cfg.qrange()
+    fns = {
+        "lsq": ref.grad_s_term,
+        "lsq_jnp": ref.grad_s_term,
+        "qil": _qil_ds,
+        "pact": _pact_ds,
+        "fixed": _fixed_ds,
+    }
+    return fns[cfg.method](v, s, qn, qp)

@@ -1,0 +1,292 @@
+"""Layer-2 training / evaluation steps for quantized models (Section 2.3).
+
+Implements the paper's training recipe as pure functions suitable for AOT
+lowering:
+
+  * full-precision master weights, quantized forward/backward (Courbariaux
+    et al. 2015 scheme) — quantization happens inside the loss via the
+    custom-VJP quantizers, so SGD updates the fp32 copies;
+  * SGD with momentum 0.9, weight decay on conv/fc weights only, softmax
+    cross-entropy;
+  * learning rate and weight decay enter as *runtime scalars* so the Rust
+    coordinator owns the schedule (cosine / step decay, Section 3.5);
+  * optional same-architecture knowledge distillation (Section 3.7):
+    CE + equal-weighted T=1 distillation loss against a frozen fp32 teacher;
+  * a diagnostic step that additionally emits per-quantized-layer
+    ||grad_w||, ||w||, |grad_s|, s for the Figure-4 R-ratio analysis;
+  * step-size initialization (Section 2.1): weights at model init,
+    activations from the first batch via a collect pass.
+
+Calling convention (mirrored by the Rust runtime, see manifest.json):
+every step takes/returns parameters as a *flat list sorted by name*;
+momentum buffers exist for gradient-bearing roles only.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+
+from . import layers as L
+from . import models
+from .kernels import ref
+
+MOMENTUM = 0.9
+
+GRAD_ROLES = ("weight", "bias", "step_w", "step_a")
+
+
+@dataclass(frozen=True)
+class ModelSpec:
+    """Everything that is baked into an artifact at AOT time."""
+
+    model: str = "cnn_small"
+    num_classes: int = 10
+    image: int = 32
+    channels: int = 3
+    qbits: int = 32
+    method: str = "lsq"
+    gscale_mode: str = "full"
+
+    def ctx_kwargs(self) -> dict:
+        return dict(
+            qbits=self.qbits,
+            method=self.method,
+            gscale_mode=self.gscale_mode,
+            num_classes=self.num_classes,
+        )
+
+
+@dataclass
+class InitResult:
+    names: list[str]
+    params: list[jnp.ndarray]
+    roles: dict[str, str]
+    layer_meta: list[dict]
+    n_matmul: int
+    grad_names: list[str] = field(init=False)
+
+    def __post_init__(self):
+        self.grad_names = [n for n in self.names if self.roles[n] in GRAD_ROLES]
+
+
+def _dummy_input(spec: ModelSpec, batch: int = 1):
+    return jnp.zeros((batch, spec.image, spec.image, spec.channels), jnp.float32)
+
+
+def count_matmuls(spec: ModelSpec) -> int:
+    model = models.get_model(spec.model)
+    ctx = L.Ctx("init", rng=jax.random.PRNGKey(0), **spec.ctx_kwargs())
+    ctx.n_matmul = None
+    model(ctx, _dummy_input(spec))
+    return ctx._matmul_index
+
+
+def init_model(spec: ModelSpec, seed: int = 0) -> InitResult:
+    """Two-pass init: count matmul layers (for the first/last-8-bit rule),
+    then materialize parameters with weight step sizes set per Section 2.1."""
+    n_matmul = count_matmuls(spec)
+    model = models.get_model(spec.model)
+    ctx = L.Ctx("init", rng=jax.random.PRNGKey(seed), **spec.ctx_kwargs())
+    ctx.n_matmul = n_matmul
+    model(ctx, _dummy_input(spec))
+    names = sorted(ctx.params)
+    return InitResult(
+        names=names,
+        params=[ctx.params[n] for n in names],
+        roles=dict(ctx.roles),
+        layer_meta=list(ctx.layer_meta),
+        n_matmul=n_matmul,
+    )
+
+
+def apply_model(spec: ModelSpec, init: InitResult, params: dict, x,
+                train: bool, mode: str = "apply"):
+    """Run the model; returns (logits, ctx) — ctx carries state/collect data."""
+    model = models.get_model(spec.model)
+    ctx = L.Ctx(mode, params=params, train=train, **spec.ctx_kwargs())
+    ctx.n_matmul = init.n_matmul
+    logits = model(ctx, x)
+    return logits, ctx
+
+
+def cross_entropy(logits, labels):
+    logp = jax.nn.log_softmax(logits)
+    nll = -jnp.take_along_axis(logp, labels[:, None], axis=1)[:, 0]
+    return jnp.mean(nll)
+
+
+def distill_loss(student_logits, teacher_logits):
+    """Hinton et al. 2015 with temperature 1: KL(teacher || student)."""
+    t = jax.nn.softmax(teacher_logits)
+    logp = jax.nn.log_softmax(student_logits)
+    logt = jax.nn.log_softmax(teacher_logits)
+    return jnp.mean(jnp.sum(t * (logt - logp), axis=1))
+
+
+def _split(init: InitResult, params_list):
+    params = dict(zip(init.names, params_list))
+    grads = {n: params[n] for n in init.grad_names}
+    state = {n: params[n] for n in init.names if init.roles[n] == "state"}
+    return params, grads, state
+
+
+def _n_correct(logits, labels):
+    return jnp.sum((jnp.argmax(logits, axis=1) == labels).astype(jnp.float32))
+
+
+def _sgd(init: InitResult, params, grads, moms, lr, wd):
+    """SGD + momentum with decoupled-by-role weight decay (weights only)."""
+    new_params, new_moms = {}, []
+    for n, m in zip(init.grad_names, moms):
+        g = grads[n]
+        if init.roles[n] == "weight":
+            g = g + wd * params[n]
+        m_new = MOMENTUM * m + g
+        new_moms.append(m_new)
+        new_params[n] = params[n] - lr * m_new
+    return new_params, new_moms
+
+
+def _loss_and_ctx(spec, init, grad_params, state_params, x, y,
+                  teacher_logits=None):
+    params = dict(state_params)
+    params.update(grad_params)
+    logits, ctx = apply_model(spec, init, params, x, train=True)
+    loss = cross_entropy(logits, y)
+    if teacher_logits is not None:
+        loss = loss + distill_loss(logits, teacher_logits)
+    return loss, (ctx.state_out, logits)
+
+
+def build_train_step(spec: ModelSpec, init: InitResult, distill: bool = False,
+                     teacher_init: InitResult | None = None,
+                     teacher_spec: ModelSpec | None = None,
+                     diag: bool = False):
+    """Build the train-step function to be AOT-lowered.
+
+    Positional signature (all jnp arrays):
+      params...[P], moms...[G], (teacher_params...[T] if distill,)
+      x, y, lr, wd
+    Returns:
+      (new_params...[P], new_moms...[G], loss, ncorrect
+       (, gw_norm[Lq], w_norm[Lq], gs_abs[Lq], s_val[Lq] if diag))
+    """
+    P = len(init.names)
+    G = len(init.grad_names)
+    T = len(teacher_init.names) if distill else 0
+
+    # Quantized-weight layers (those owning step sizes), for diagnostics.
+    sw_names = [n for n in init.names if init.roles[n] == "step_w"]
+    w_of_sw = [n[: -len(".sw")] + ".w" for n in sw_names]
+
+    def step(*args):
+        params_list = list(args[:P])
+        moms = list(args[P : P + G])
+        ofs = P + G
+        teacher_logits = None
+        if distill:
+            t_list = list(args[ofs : ofs + T])
+            ofs += T
+        x, y, lr, wd = args[ofs : ofs + 4]
+        params, grad_params, state_params = _split(init, params_list)
+        if distill:
+            t_params = dict(zip(teacher_init.names, t_list))
+            teacher_logits, _ = apply_model(
+                teacher_spec, teacher_init, t_params, x, train=False
+            )
+            teacher_logits = jax.lax.stop_gradient(teacher_logits)
+
+        def loss_fn(gp):
+            return _loss_and_ctx(
+                spec, init, gp, state_params, x, y, teacher_logits
+            )
+
+        (loss, (state_out, logits)), grads = jax.value_and_grad(
+            loss_fn, has_aux=True
+        )(grad_params)
+
+        new_params, new_moms = _sgd(init, params, grads, moms, lr, wd)
+        # Fold in functional BN state updates.
+        merged = dict(params)
+        merged.update(new_params)
+        merged.update(state_out)
+        out_params = [merged[n] for n in init.names]
+        ncorrect = _n_correct(logits, y)
+        outs = out_params + new_moms + [loss, ncorrect]
+        if diag:
+            gw = jnp.stack(
+                [jnp.linalg.norm(grads[n].reshape(-1)) for n in w_of_sw]
+            )
+            wn = jnp.stack(
+                [jnp.linalg.norm(params[n].reshape(-1)) for n in w_of_sw]
+            )
+            gs = jnp.stack([jnp.abs(grads[n]).reshape(()) for n in sw_names])
+            sv = jnp.stack([params[n].reshape(()) for n in sw_names])
+            outs += [gw, wn, gs, sv]
+        return tuple(outs)
+
+    return step
+
+
+def build_eval_step(spec: ModelSpec, init: InitResult):
+    """Eval step: (params..., x, y) -> (loss, ncorrect, logits)."""
+    P = len(init.names)
+
+    def step(*args):
+        params = dict(zip(init.names, args[:P]))
+        x, y = args[P], args[P + 1]
+        logits, _ = apply_model(spec, init, params, x, train=False)
+        return cross_entropy(logits, y), _n_correct(logits, y), logits
+
+    return step
+
+
+def build_init_quant(spec: ModelSpec, init: InitResult):
+    """Step-size initialization (Section 2.1): (params..., x) -> params...
+
+    Sets every weight step size to 2<|w|>/sqrt(Qp) over the *current*
+    weights (so fine-tuning from an fp32 checkpoint re-derives them from
+    the loaded weights) and every activation step size to 2<|v|>/sqrt(Qp)
+    over the first batch of activations. The collect pass runs the
+    unquantized network — we fine-tune from a full-precision model, so the
+    first batch of activations is the fp one.
+    """
+    P = len(init.names)
+    bits_of = {m["name"]: m["bits"] for m in init.layer_meta}
+
+    def step(*args):
+        params = dict(zip(init.names, args[:P]))
+        x = args[P]
+        _, ctx = apply_model(spec, init, params, x, train=True, mode="collect")
+        out = dict(params)
+        for name, (mean_abs, qp) in ctx.act_stats.items():
+            out[name] = (2.0 * mean_abs / jnp.sqrt(float(qp))).reshape(
+                params[name].shape
+            )
+        for name in init.names:
+            if init.roles[name] == "step_w":
+                scope = name[: -len(".sw")]
+                _, qp_w = ref.qrange(bits_of[scope], signed=True)
+                w = params[scope + ".w"]
+                out[name] = jnp.asarray(
+                    2.0 * jnp.mean(jnp.abs(w)) / jnp.sqrt(float(qp_w))
+                ).reshape(params[name].shape)
+        return tuple(out[n] for n in init.names)
+
+    return step
+
+
+def build_infer_step(spec: ModelSpec, init: InitResult):
+    """Serving forward: (params..., x) -> logits (eval-mode BN)."""
+    P = len(init.names)
+
+    def step(*args):
+        params = dict(zip(init.names, args[:P]))
+        x = args[P]
+        logits, _ = apply_model(spec, init, params, x, train=False)
+        return (logits,)
+
+    return step

@@ -1,0 +1,6 @@
+# Make `compile.*` importable whether pytest runs from repo root
+# (`pytest python/tests/`) or from python/ (`pytest tests/`).
+import pathlib
+import sys
+
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parent))

@@ -1,0 +1,220 @@
+"""L2 model/train tests: init invariants, shapes, BN state, SGD semantics,
+the first/last-8-bit convention, KD and diag steps, activation step init."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import models, train as T
+
+
+def _batch(b=4, seed=0):
+    k = jax.random.PRNGKey(seed)
+    x = jax.random.normal(k, (b, 32, 32, 3))
+    y = jnp.arange(b) % 10
+    return x, y
+
+
+def _moms(init):
+    by = dict(zip(init.names, init.params))
+    return [jnp.zeros_like(by[n]) for n in init.grad_names]
+
+
+@pytest.fixture(scope="module")
+def cnn2():
+    spec = T.ModelSpec(model="cnn_small", qbits=2)
+    return spec, T.init_model(spec, 0)
+
+
+class TestInit:
+    def test_param_names_sorted_and_unique(self, cnn2):
+        _, init = cnn2
+        assert init.names == sorted(init.names)
+        assert len(set(init.names)) == len(init.names)
+
+    def test_roles_cover_all_params(self, cnn2):
+        _, init = cnn2
+        assert set(init.roles) == set(init.names)
+        assert set(init.roles.values()) <= {
+            "weight", "bias", "step_w", "step_a", "state"
+        }
+
+    def test_grad_names_exclude_state(self, cnn2):
+        _, init = cnn2
+        for n in init.grad_names:
+            assert init.roles[n] != "state"
+
+    def test_first_last_layers_are_8bit(self, cnn2):
+        _, init = cnn2
+        bits = {m["name"]: m["bits"] for m in init.layer_meta}
+        assert bits["conv1"] == 8
+        assert bits["fc"] == 8
+        assert bits["conv2"] == 2
+
+    def test_step_size_init_formula(self, cnn2):
+        """sw = 2<|w|>/sqrt(Qp) over the initial weights (Section 2.1)."""
+        _, init = cnn2
+        by = dict(zip(init.names, init.params))
+        w = by["conv2.w"]
+        qp = 2 ** (2 - 1) - 1  # signed 2-bit
+        want = 2.0 * jnp.mean(jnp.abs(w)) / jnp.sqrt(float(qp))
+        np.testing.assert_allclose(by["conv2.sw"], want, rtol=1e-4)
+
+    def test_fp32_family_has_no_step_params(self):
+        init = T.init_model(T.ModelSpec(model="cnn_small", qbits=32), 0)
+        assert not any(r in ("step_w", "step_a") for r in init.roles.values())
+
+    def test_quantized_families_share_weight_names(self):
+        i2 = T.init_model(T.ModelSpec(model="cnn_small", qbits=2), 0)
+        i4 = T.init_model(T.ModelSpec(model="cnn_small", qbits=4), 0)
+        assert i2.names == i4.names
+
+    def test_deterministic(self):
+        a = T.init_model(T.ModelSpec(model="mlp", qbits=2), 7)
+        b = T.init_model(T.ModelSpec(model="mlp", qbits=2), 7)
+        for pa, pb in zip(a.params, b.params):
+            np.testing.assert_array_equal(pa, pb)
+
+    def test_all_models_init(self):
+        for m in models.model_names():
+            init = T.init_model(T.ModelSpec(model=m, qbits=4), 0)
+            assert init.n_matmul >= 2
+            assert sum(l["n_weights"] for l in init.layer_meta) > 0
+
+
+class TestTrainStep:
+    def test_loss_decreases_over_steps(self, cnn2):
+        spec, init = cnn2
+        step = jax.jit(T.build_train_step(spec, init))
+        x, y = _batch(16)
+        params, moms = list(init.params), _moms(init)
+        losses = []
+        for _ in range(8):
+            out = step(*(params + moms + [x, y, jnp.float32(0.05),
+                                          jnp.float32(0.0)]))
+            P, G = len(init.names), len(init.grad_names)
+            params = list(out[:P])
+            moms = list(out[P:P + G])
+            losses.append(float(out[P + G]))
+        assert losses[-1] < losses[0]
+
+    def test_state_params_have_no_momentum(self, cnn2):
+        _, init = cnn2
+        state = [n for n in init.names if init.roles[n] == "state"]
+        assert state and not set(state) & set(init.grad_names)
+
+    def test_bn_running_stats_update(self, cnn2):
+        spec, init = cnn2
+        step = jax.jit(T.build_train_step(spec, init))
+        x, y = _batch(8)
+        out = step(*(init.params + _moms(init) +
+                     [x, y, jnp.float32(0.0), jnp.float32(0.0)]))
+        by_out = dict(zip(init.names, out[:len(init.names)]))
+        by_in = dict(zip(init.names, init.params))
+        # lr=0 freezes params, but BN state must still move.
+        assert not np.allclose(by_out["bn1.rmean"], by_in["bn1.rmean"])
+        np.testing.assert_allclose(by_out["conv2.w"], by_in["conv2.w"])
+
+    def test_weight_decay_applies_to_weights_only(self, cnn2):
+        spec, init = cnn2
+        step = jax.jit(T.build_train_step(spec, init))
+        x, y = _batch(8)
+        o_nowd = step(*(init.params + _moms(init) +
+                        [x, y, jnp.float32(0.01), jnp.float32(0.0)]))
+        o_wd = step(*(init.params + _moms(init) +
+                      [x, y, jnp.float32(0.01), jnp.float32(0.1)]))
+        P = len(init.names)
+        d_now = dict(zip(init.names, o_nowd[:P]))
+        d_wd = dict(zip(init.names, o_wd[:P]))
+        assert not np.allclose(d_now["conv2.w"], d_wd["conv2.w"])
+        # step sizes and BN params are not decayed
+        np.testing.assert_allclose(d_now["conv2.sw"], d_wd["conv2.sw"])
+        np.testing.assert_allclose(d_now["bn2.gamma"], d_wd["bn2.gamma"])
+
+    def test_step_sizes_receive_gradient(self, cnn2):
+        spec, init = cnn2
+        step = jax.jit(T.build_train_step(spec, init))
+        x, y = _batch(8)
+        out = step(*(init.params + _moms(init) +
+                     [x, y, jnp.float32(0.1), jnp.float32(0.0)]))
+        by_out = dict(zip(init.names, out[:len(init.names)]))
+        by_in = dict(zip(init.names, init.params))
+        moved = [
+            n for n in init.names
+            if init.roles[n] in ("step_w", "step_a")
+            and not np.allclose(by_out[n], by_in[n])
+        ]
+        assert moved, "no step size moved after one training step"
+
+
+class TestEvalAndInfer:
+    def test_eval_consistent_with_infer(self, cnn2):
+        spec, init = cnn2
+        x, y = _batch(8)
+        ev = jax.jit(T.build_eval_step(spec, init))
+        inf = jax.jit(T.build_infer_step(spec, init))
+        loss, nc, logits = ev(*(init.params + [x, y]))
+        (logits2,) = inf(*(init.params + [x]))
+        np.testing.assert_allclose(logits, logits2, rtol=1e-5, atol=1e-5)
+        assert 0 <= float(nc) <= 8
+
+    def test_eval_deterministic(self, cnn2):
+        spec, init = cnn2
+        x, y = _batch(8)
+        ev = jax.jit(T.build_eval_step(spec, init))
+        a = ev(*(init.params + [x, y]))
+        b = ev(*(init.params + [x, y]))
+        np.testing.assert_array_equal(a[2], b[2])
+
+
+class TestInitQuant:
+    def test_sets_act_and_weight_steps(self, cnn2):
+        spec, init = cnn2
+        iq = jax.jit(T.build_init_quant(spec, init))
+        x, _ = _batch(8)
+        # Perturb weights to verify sw is recomputed from *current* weights.
+        by = dict(zip(init.names, init.params))
+        by["conv2.w"] = by["conv2.w"] * 3.0
+        plist = [by[n] for n in init.names]
+        out = dict(zip(init.names, iq(*(plist + [x]))))
+        qp = 1  # signed 2-bit
+        want = 2.0 * jnp.mean(jnp.abs(by["conv2.w"])) / jnp.sqrt(float(qp))
+        np.testing.assert_allclose(out["conv2.sw"], want, rtol=1e-4)
+        assert float(out["conv1.sa"]) > 0
+        # Non-step params pass through untouched.
+        np.testing.assert_array_equal(out["conv2.w"], by["conv2.w"])
+
+
+class TestDistillAndDiag:
+    def test_kd_runs_and_differs_from_plain(self, cnn2):
+        spec, init = cnn2
+        tspec = T.ModelSpec(model="cnn_small", qbits=32)
+        tinit = T.init_model(tspec, 1)
+        kd = jax.jit(T.build_train_step(spec, init, distill=True,
+                                        teacher_init=tinit,
+                                        teacher_spec=tspec))
+        plain = jax.jit(T.build_train_step(spec, init))
+        x, y = _batch(8)
+        okd = kd(*(init.params + _moms(init) + tinit.params +
+                   [x, y, jnp.float32(0.01), jnp.float32(0.0)]))
+        opl = plain(*(init.params + _moms(init) +
+                      [x, y, jnp.float32(0.01), jnp.float32(0.0)]))
+        P, G = len(init.names), len(init.grad_names)
+        assert float(okd[P + G]) > float(opl[P + G])  # CE + KD > CE at init
+
+    def test_diag_outputs_match_param_values(self, cnn2):
+        spec, init = cnn2
+        dg = jax.jit(T.build_train_step(spec, init, diag=True))
+        x, y = _batch(8)
+        out = dg(*(init.params + _moms(init) +
+                   [x, y, jnp.float32(0.01), jnp.float32(0.0)]))
+        gw, wn, gs, sv = out[-4:]
+        sw_names = [n for n in init.names if init.roles[n] == "step_w"]
+        assert gw.shape == (len(sw_names),)
+        by = dict(zip(init.names, init.params))
+        np.testing.assert_allclose(
+            sv, jnp.stack([by[n] for n in sw_names]), rtol=1e-6
+        )
+        assert (np.asarray(wn) > 0).all()
+        assert (np.asarray(gs) >= 0).all()

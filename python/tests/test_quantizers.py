@@ -1,0 +1,137 @@
+"""L2 quantizer-library tests: baseline gradient variants, gradscale,
+Appendix-B helper functions."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import quantizers as Q
+from compile.kernels import ref
+
+
+class TestAppendixB:
+    def test_gradscale_forward_identity(self):
+        x = jnp.asarray([1.0, -2.0, 3.0])
+        np.testing.assert_allclose(Q.gradscale(x, 0.25), x)
+
+    def test_gradscale_backward_scales(self):
+        g = jax.grad(lambda x: jnp.sum(Q.gradscale(x, 0.25)))(
+            jnp.asarray([1.0, 2.0])
+        )
+        np.testing.assert_allclose(g, [0.25, 0.25])
+
+    def test_roundpass_forward_rounds(self):
+        x = jnp.asarray([0.4, 0.6, -1.5])
+        np.testing.assert_allclose(Q.roundpass(x), jnp.round(x))
+
+    def test_roundpass_backward_is_identity(self):
+        g = jax.grad(lambda x: jnp.sum(Q.roundpass(x)))(jnp.asarray([0.4, 2.7]))
+        np.testing.assert_allclose(g, [1.0, 1.0])
+
+
+class TestGradScaleValue:
+    def test_full(self):
+        assert Q.gradscale_value(100, 4, "full") == pytest.approx(0.05)
+
+    def test_sqrtn(self):
+        assert Q.gradscale_value(100, 4, "sqrtn") == pytest.approx(0.1)
+
+    def test_one(self):
+        assert Q.gradscale_value(100, 4, "one") == 1.0
+
+    def test_x10_d10(self):
+        g = Q.gradscale_value(100, 4, "full")
+        assert Q.gradscale_value(100, 4, "x10") == pytest.approx(10 * g)
+        assert Q.gradscale_value(100, 4, "d10") == pytest.approx(g / 10)
+
+    def test_unknown_raises(self):
+        with pytest.raises(ValueError):
+            Q.gradscale_value(10, 3, "bogus")
+
+
+class TestVariantForwardsAgree:
+    """Every method shares the identical forward (Eqs. 1-2)."""
+
+    @settings(max_examples=20, deadline=None)
+    @given(
+        method=st.sampled_from(["lsq", "lsq_jnp", "qil", "pact", "fixed"]),
+        bits=st.sampled_from([2, 3, 4]),
+        seed=st.integers(0, 1000),
+    )
+    def test_forward(self, method, bits, seed):
+        v = jnp.asarray(
+            np.random.default_rng(seed).normal(size=(200,)).astype(np.float32)
+        )
+        s = jnp.float32(0.2)
+        cfg = Q.QuantConfig(bits=bits, signed=True, method=method)
+        qn, qp = cfg.qrange()
+        got = Q.quantize(v, s, cfg, v.size)
+        np.testing.assert_allclose(
+            got, ref.quantize(v, s, qn, qp), rtol=1e-5, atol=1e-6
+        )
+
+
+class TestVariantGradients:
+    def _gs(self, method, v):
+        cfg = Q.QuantConfig(bits=2, signed=False, method=method,
+                            gscale_mode="one")
+        return jax.grad(
+            lambda s: jnp.sum(Q.quantize(v, s, cfg, v.size))
+        )(jnp.float32(1.0))
+
+    def test_pact_zero_inside_domain(self):
+        v = jnp.asarray([0.4, 1.2, 2.6], jnp.float32)  # all < Qp=3
+        assert float(self._gs("pact", v)) == pytest.approx(0.0)
+
+    def test_pact_qp_beyond_clip(self):
+        v = jnp.asarray([5.0], jnp.float32)
+        assert float(self._gs("pact", v)) == pytest.approx(3.0)
+
+    def test_qil_linear_inside(self):
+        ga = self._gs("qil", jnp.asarray([1.0], jnp.float32))
+        gb = self._gs("qil", jnp.asarray([2.0], jnp.float32))
+        assert float(gb) == pytest.approx(2 * float(ga))
+
+    def test_fixed_no_gradient(self):
+        v = jnp.asarray([0.3, 1.7, 9.0], jnp.float32)
+        assert float(self._gs("fixed", v)) == 0.0
+
+    def test_lsq_transition_sawtooth(self):
+        """LSQ's ds flips sign across a transition point; QIL's does not."""
+        lo = self._gs("lsq_jnp", jnp.asarray([1.45], jnp.float32))
+        hi = self._gs("lsq_jnp", jnp.asarray([1.55], jnp.float32))
+        assert float(lo) < 0 < float(hi)
+        qlo = self._gs("qil", jnp.asarray([1.45], jnp.float32))
+        qhi = self._gs("qil", jnp.asarray([1.55], jnp.float32))
+        assert float(qlo) > 0 and float(qhi) > 0
+
+    def test_all_methods_share_ste_data_grad(self):
+        v = jnp.asarray([0.4, 3.8], jnp.float32)
+        for m in ("lsq", "lsq_jnp", "qil", "pact", "fixed"):
+            cfg = Q.QuantConfig(bits=2, signed=False, method=m)
+            gv = jax.grad(
+                lambda v_: jnp.sum(Q.quantize(v_, jnp.float32(1.0), cfg, 2))
+            )(v)
+            np.testing.assert_allclose(gv, [1.0, 0.0], atol=1e-6)
+
+
+class TestConfig:
+    def test_disabled_is_identity(self):
+        v = jnp.asarray([0.123, -4.5])
+        cfg = Q.QuantConfig(bits=32)
+        assert Q.quantize(v, jnp.float32(1.0), cfg, 2) is v
+
+    def test_none_method_identity(self):
+        v = jnp.asarray([0.123])
+        cfg = Q.QuantConfig(bits=2, method="none")
+        assert Q.quantize(v, jnp.float32(1.0), cfg, 1) is v
+
+    def test_unknown_method_raises(self):
+        cfg = Q.QuantConfig(bits=2, method="wat")
+        with pytest.raises(ValueError):
+            Q.quantize(jnp.asarray([1.0]), jnp.float32(1.0), cfg, 1)
+
+    def test_with_bits(self):
+        assert Q.QuantConfig(bits=2).with_bits(8).bits == 8

@@ -1,0 +1,52 @@
+//! Data-pipeline benchmarks: image generation, augmentation and the
+//! end-to-end prefetching loader. Perf target (DESIGN.md §Perf): the loader
+//! must sustain ≥2x the trainer's batch consumption rate (~5 batches/s).
+//! Run: `cargo bench --bench pipeline`
+
+use lsqnet::config::DataConfig;
+use lsqnet::data::augment::augment;
+use lsqnet::data::{Dataset, Loader, SynthSpec};
+use lsqnet::util::bench::{black_box, Bench};
+use lsqnet::util::rng::Pcg32;
+
+fn main() {
+    let mut b = Bench::new("pipeline");
+    let spec = SynthSpec::new(10, 1.2, 1);
+    let mut buf = vec![0.0f32; 32 * 32 * 3];
+    let mut idx = 0usize;
+    b.bench_units("synth_generate_1img", 1.0, || {
+        idx += 1;
+        spec.generate(black_box(idx), &mut buf);
+        black_box(&buf);
+    });
+
+    let mut rng = Pcg32::seeded(2);
+    let mut scratch = Vec::new();
+    b.bench_units("augment_1img", 1.0, || {
+        augment(black_box(&mut buf), &mut scratch, &mut rng);
+    });
+
+    let cfg = DataConfig { train_size: 4096, test_size: 256, ..Default::default() };
+    let ds = Dataset::train(&cfg);
+    let indices: Vec<usize> = (0..64).collect();
+    b.bench_units("batch_64_materialize", 64.0, || {
+        black_box(ds.batch_from_indices(black_box(&indices), 64));
+    });
+
+    // End-to-end loader throughput (producer thread + channel).
+    let r = b.bench_units("loader_batch64_e2e", 64.0, {
+        let cfg = cfg.clone();
+        let loader = std::cell::RefCell::new(Loader::spawn(&cfg, 64, usize::MAX / 2, 1, 4));
+        move || {
+            let b = loader.borrow().next().unwrap();
+            black_box(b);
+        }
+    });
+    let batches_per_s = 1e9 / r.mean_ns;
+    println!(
+        "loader sustains {batches_per_s:.1} batches/s \
+         (target: >= 2x trainer consumption ~ 10/s)"
+    );
+
+    b.finish();
+}

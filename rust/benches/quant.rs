@@ -1,0 +1,52 @@
+//! Quant-substrate microbenchmarks: the pure-Rust quantizer (host-side
+//! analysis path), bit packing, and the Section-3.6 error sweeps.
+//! Run: `cargo bench --bench quant` (LSQNET_BENCH_FAST=1 for CI).
+
+use lsqnet::quant::error::{sweep_min, Metric};
+use lsqnet::quant::lsq::*;
+use lsqnet::quant::pack;
+use lsqnet::util::bench::{black_box, Bench};
+use lsqnet::util::rng::Pcg32;
+
+fn main() {
+    let mut b = Bench::new("quant");
+    let mut rng = Pcg32::seeded(1);
+    let n = 262_144;
+    let v: Vec<f32> = (0..n).map(|_| rng.normal()).collect();
+    let cot: Vec<f32> = (0..n).map(|_| rng.normal()).collect();
+    let (qn, qp) = qrange(2, true);
+
+    let mut out = vec![0.0f32; n];
+    b.bench_units("quantize_slice_256k", n as f64, || {
+        quantize_slice(black_box(&v), 0.1, qn, qp, &mut out);
+        black_box(&out);
+    });
+
+    b.bench_units("lsq_vjp_256k", n as f64, || {
+        let (gv, gs) = lsq_vjp(black_box(&v), 0.1, qn, qp, 1e-3, &cot);
+        black_box((gv, gs));
+    });
+
+    b.bench_units("step_init_256k", n as f64, || {
+        black_box(step_init(black_box(&v), qp));
+    });
+
+    for bits in [2u32, 3, 4, 8] {
+        let p = pack::quantize_and_pack(&v, 0.1, bits, true).unwrap();
+        b.bench_units(&format!("pack_{bits}bit_256k"), n as f64, || {
+            black_box(pack::quantize_and_pack(black_box(&v), 0.1, bits, true).unwrap());
+        });
+        b.bench_units(&format!("unpack_{bits}bit_256k"), n as f64, || {
+            black_box(pack::unpack(black_box(&p)));
+        });
+    }
+
+    let small: Vec<f32> = v[..16_384].to_vec();
+    for (m, name) in [(Metric::MeanAbs, "mae"), (Metric::MeanSq, "mse"), (Metric::Kl, "kl")] {
+        b.bench(&format!("qerror_sweep_{name}_16k"), || {
+            black_box(sweep_min(m, black_box(&small), 0.1, 2, true));
+        });
+    }
+
+    b.finish();
+}

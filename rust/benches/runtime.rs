@@ -1,0 +1,75 @@
+//! Runtime benchmarks: artifact compile time, per-step train/eval latency
+//! per (model, precision), and the host↔device conversion overhead (the
+//! driver cost the trainer pays around each XLA call).
+//!
+//! These are the numbers behind EXPERIMENTS.md §Perf L3 and the per-table
+//! runtime budgets. Run: `cargo bench --bench runtime`
+
+use std::path::PathBuf;
+
+use lsqnet::data::Dataset;
+use lsqnet::runtime::Engine;
+use lsqnet::tensor::Tensor;
+use lsqnet::util::bench::{black_box, Bench};
+
+fn artifacts() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+fn main() {
+    let engine = Engine::new(&artifacts()).expect("run `make artifacts` first");
+    let mut b = Bench::new("runtime");
+    let cfg = lsqnet::config::ExperimentConfig::default();
+    let ds = Dataset::train(&cfg.data);
+
+    // compile cost (fresh engine each iter, one artifact)
+    b.bench("compile_eval_cnn_q2", || {
+        let e = Engine::new(&artifacts()).unwrap();
+        black_box(e.load_kind("eval", "cnn_small_q2", None, None).unwrap());
+    });
+
+    for family in ["cnn_small_q32", "cnn_small_q2", "cnn_small_q8", "resnet20_q2"] {
+        let manifest = engine.manifest();
+        if !manifest.families.contains_key(family) {
+            continue;
+        }
+        let train = engine.load_kind("train", family, None, None).unwrap();
+        let eval = engine.load_kind("eval", family, None, None).unwrap();
+        let params = manifest.load_initial_params(family).unwrap();
+        let fam = manifest.family(family).unwrap();
+        let moms: Vec<Tensor> = fam
+            .grad_names
+            .iter()
+            .map(|n| Tensor::zeros(fam.shapes.get(n).unwrap()))
+            .collect();
+        let batch = train.meta.batch;
+        let bt = ds.batch_from_indices(&(0..batch).collect::<Vec<_>>(), batch);
+
+        let mut train_inputs: Vec<Tensor> = params.clone();
+        train_inputs.extend(moms.iter().cloned());
+        train_inputs.push(bt.x.clone());
+        train_inputs.push(bt.y.clone());
+        train_inputs.push(Tensor::scalar_f32(0.01));
+        train_inputs.push(Tensor::scalar_f32(1e-4));
+        // warmup happens inside bench(); batch=64 => units=64 images
+        b.bench_units(&format!("train_step_{family}_b{batch}"), batch as f64, || {
+            black_box(train.run(black_box(&train_inputs)).unwrap());
+        });
+
+        let mut eval_inputs: Vec<Tensor> = params.clone();
+        eval_inputs.push(bt.x.clone());
+        eval_inputs.push(bt.y.clone());
+        b.bench_units(&format!("eval_step_{family}_b{batch}"), batch as f64, || {
+            black_box(eval.run(black_box(&eval_inputs)).unwrap());
+        });
+    }
+
+    // driver-side conversion overhead: tensor -> literal -> tensor for the
+    // largest input (the image batch).
+    let big = ds.batch_from_indices(&(0..64).collect::<Vec<_>>(), 64);
+    b.bench_units("host_tensor_clone_batch", (64 * 32 * 32 * 3) as f64, || {
+        black_box(big.x.clone());
+    });
+
+    b.finish();
+}

@@ -1,0 +1,112 @@
+//! Serving-path benchmarks: dynamic-batcher latency/throughput under
+//! closed-loop load, batching overhead vs direct artifact execution, and
+//! the Figure-1 int-matmul kernel. Run: `cargo bench --bench serve`
+
+use std::path::PathBuf;
+use std::time::Duration;
+
+use lsqnet::data::SynthSpec;
+use lsqnet::runtime::Engine;
+use lsqnet::serve::{Server, ServerConfig};
+use lsqnet::tensor::Tensor;
+use lsqnet::util::bench::{black_box, Bench};
+use lsqnet::util::stats::percentile;
+
+fn artifacts() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+fn main() {
+    let mut b = Bench::new("serve");
+    let engine = Engine::new(&artifacts()).expect("run `make artifacts` first");
+    let spec = SynthSpec::new(10, 1.2, 9);
+
+    // direct (unbatched-path) infer artifact execution as the baseline
+    let infer = engine.load_kind("infer", "cnn_small_q2", None, None).unwrap();
+    let params = engine.manifest().load_initial_params("cnn_small_q2").unwrap();
+    let batch = infer.meta.batch;
+    let mut x = Vec::new();
+    for i in 0..batch {
+        x.extend(spec.generate_alloc(i));
+    }
+    let mut inputs = params.clone();
+    inputs.push(Tensor::from_f32(&[batch, 32, 32, 3], x));
+    let direct = b.bench_units(&format!("infer_direct_b{batch}"), batch as f64, || {
+        black_box(infer.run(black_box(&inputs)).unwrap());
+    });
+
+    // server under closed-loop load from 4 threads
+    let server = Server::start(ServerConfig {
+        artifacts_dir: artifacts(),
+        family: "cnn_small_q2".into(),
+        checkpoint: String::new(),
+        max_wait: Duration::from_millis(2),
+        queue_depth: 256,
+    })
+    .unwrap();
+    let n = if std::env::var("LSQNET_BENCH_FAST").is_ok() { 128 } else { 512 };
+    // Warm the serve thread (engine + artifact compile) before timing.
+    server.client.infer(spec.generate_alloc(0)).unwrap();
+    let t0 = std::time::Instant::now();
+    let mut lats: Vec<f64> = Vec::new();
+    std::thread::scope(|s| {
+        let hs: Vec<_> = (0..4)
+            .map(|t| {
+                let c = server.client.clone();
+                let spec = &spec;
+                s.spawn(move || {
+                    (0..n / 4)
+                        .map(|i| c.infer(spec.generate_alloc(t * 999 + i)).unwrap().total_ms)
+                        .collect::<Vec<_>>()
+                })
+            })
+            .collect();
+        for h in hs {
+            lats.extend(h.join().unwrap());
+        }
+    });
+    let wall = t0.elapsed().as_secs_f64();
+    let stats = server.stats();
+    server.stop();
+    let p50 = percentile(&lats, 50.0);
+    let p95 = percentile(&lats, 95.0);
+    println!(
+        "serve/dynamic_batcher            {n} reqs  {:.1} req/s  p50 {p50:.2} ms  p95 {p95:.2} ms  occupancy {:.2}",
+        n as f64 / wall,
+        stats.mean_occupancy()
+    );
+    // batching overhead = p50 latency - per-batch exec time
+    let direct_ms = direct.mean_ns / 1e6;
+    println!(
+        "serve/batching_overhead_p50      {:.2} ms (target < 1 ms + exec {:.2} ms)",
+        (p50 - stats.mean_exec_ms()).max(0.0),
+        direct_ms
+    );
+
+    // Figure-1 int matmul artifact
+    if let Some(qmm) = engine
+        .manifest()
+        .artifacts
+        .values()
+        .find(|a| a.kind == "qmm")
+        .map(|a| a.id.clone())
+    {
+        let exe = engine.load(&qmm).unwrap();
+        let (m, k) = (exe.meta.inputs[0].shape[0], exe.meta.inputs[0].shape[1]);
+        let nn = exe.meta.inputs[1].shape[1];
+        let mut rng = lsqnet::util::rng::Pcg32::seeded(4);
+        let xb: Vec<i32> = (0..m * k).map(|_| rng.below(15) as i32 - 7).collect();
+        let wb: Vec<i32> = (0..k * nn).map(|_| rng.below(15) as i32 - 7).collect();
+        let args = [
+            Tensor::from_i32(&[m, k], xb),
+            Tensor::from_i32(&[k, nn], wb),
+            Tensor::scalar_f32(0.1),
+            Tensor::scalar_f32(0.1),
+        ];
+        b.bench_units(&format!("qmm_{m}x{k}x{nn}"), (m * k * nn) as f64, || {
+            black_box(exe.run(black_box(&args)).unwrap());
+        });
+    }
+
+    b.finish();
+}

@@ -1,0 +1,108 @@
+//! Figure 2: quantizer output v̂ and step-size gradients ∂v̂/∂s for LSQ vs
+//! QIL vs PACT over a v sweep (s = 1, Qn = 0, Qp = 3).
+//!
+//! Two sources that must agree (and are asserted to in the integration
+//! tests): the `fig2` AOT artifact (the same jnp/Pallas code the training
+//! artifacts embed) and the pure-Rust quantizer in `quant::lsq`.
+
+use anyhow::Result;
+
+use crate::runtime::Engine;
+use crate::tensor::Tensor;
+
+#[derive(Clone, Debug)]
+pub struct Curves {
+    pub v: Vec<f32>,
+    pub vhat: Vec<f32>,
+    pub ds_lsq: Vec<f32>,
+    pub ds_qil: Vec<f32>,
+    pub ds_pact: Vec<f32>,
+}
+
+/// Evaluate the curves through the AOT artifact.
+pub fn from_artifact(engine: &Engine, lo: f32, hi: f32) -> Result<Curves> {
+    let exe = engine.load_kind("fig2", "", None, None).or_else(|_| {
+        // fig2 has family=None; find by kind directly
+        let id = engine
+            .manifest()
+            .artifacts
+            .values()
+            .find(|a| a.kind == "fig2")
+            .map(|a| a.id.clone())
+            .ok_or_else(|| anyhow::anyhow!("no fig2 artifact"))?;
+        engine.load(&id)
+    })?;
+    let n = exe.meta.inputs[0].shape[0];
+    let v: Vec<f32> = (0..n)
+        .map(|i| lo + (hi - lo) * i as f32 / (n - 1) as f32)
+        .collect();
+    let out = exe.run(&[
+        Tensor::from_f32(&[n], v.clone()),
+        Tensor::scalar_f32(1.0),
+    ])?;
+    Ok(Curves {
+        v,
+        vhat: out[0].f32s()?.to_vec(),
+        ds_lsq: out[1].f32s()?.to_vec(),
+        ds_qil: out[2].f32s()?.to_vec(),
+        ds_pact: out[3].f32s()?.to_vec(),
+    })
+}
+
+/// Same curves from the pure-Rust quantizer (cross-validation path).
+pub fn from_rust(lo: f32, hi: f32, n: usize) -> Curves {
+    use crate::quant::lsq::{grad_s_term, quantize};
+    let (qn, qp) = (0i64, 3i64);
+    let v: Vec<f32> = (0..n)
+        .map(|i| lo + (hi - lo) * i as f32 / (n - 1) as f32)
+        .collect();
+    let vhat = v.iter().map(|&x| quantize(x, 1.0, qn, qp)).collect();
+    let ds_lsq = v.iter().map(|&x| grad_s_term(x, 1.0, qn, qp)).collect();
+    let ds_qil = v.iter().map(|&x| (x / 1.0).clamp(-(qn as f32), qp as f32)).collect();
+    let ds_pact = v
+        .iter()
+        .map(|&x| {
+            if x >= qp as f32 {
+                qp as f32
+            } else if x <= -(qn as f32) && qn > 0 {
+                -(qn as f32)
+            } else {
+                0.0
+            }
+        })
+        .collect();
+    Curves { v, vhat, ds_lsq, ds_qil, ds_pact }
+}
+
+/// CSV for plotting (columns: v, vhat, ds_lsq, ds_qil, ds_pact).
+pub fn to_csv(c: &Curves) -> String {
+    let mut s = String::from("v,vhat,ds_lsq,ds_qil,ds_pact\n");
+    for i in 0..c.v.len() {
+        s.push_str(&format!(
+            "{},{},{},{},{}\n",
+            c.v[i], c.vhat[i], c.ds_lsq[i], c.ds_qil[i], c.ds_pact[i]
+        ));
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rust_curves_shape() {
+        let c = from_rust(-1.0, 4.0, 101);
+        assert_eq!(c.v.len(), 101);
+        // vhat saturates at Qp*s = 3
+        assert_eq!(*c.vhat.last().unwrap(), 3.0);
+        // PACT gradient zero inside the domain, Qp at/after clip
+        let mid = c.v.iter().position(|&v| v > 0.5 && v < 2.4).unwrap();
+        assert_eq!(c.ds_pact[mid], 0.0);
+        assert_eq!(*c.ds_pact.last().unwrap(), 3.0);
+        // LSQ gradient is a sawtooth: changes sign inside the domain
+        let has_neg = c.ds_lsq.iter().any(|&g| g < -0.1);
+        let has_pos = c.ds_lsq.iter().any(|&g| g > 0.1);
+        assert!(has_neg && has_pos);
+    }
+}

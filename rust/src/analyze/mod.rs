@@ -1,0 +1,11 @@
+//! Analysis modules for the paper's diagnostic experiments:
+//!
+//! * [`rratio`] — the Equation-4 update/parameter-magnitude ratio R measured
+//!   via the `train_diag` artifacts (Figure 4, Section 3.4).
+//! * [`qerror`] — does the learned ŝ minimize quantization error? (Sec. 3.6)
+//! * [`curves`] — quantizer transfer/gradient curves (Figure 2), via the
+//!   `fig2` artifact (same kernels the training path uses).
+
+pub mod curves;
+pub mod qerror;
+pub mod rratio;

@@ -1,0 +1,109 @@
+//! Section 3.6: compare the learned step size ŝ against the quantization-
+//! error-minimizing step size under MAE / MSE / KL, per layer, on test data.
+//!
+//! Weight layers: scan directly over the checkpoint's weight tensors.
+//! Activation layers: capture per-layer quantizer inputs by replaying the
+//! fp32 forward — we approximate the activation distribution with the
+//! pre-activation batch statistics captured via the init_quant relation
+//! sa = 2<|v|>/sqrt(Qp) ⇒ <|v|> = sa·√Qp/2, and scan the *weights* exactly;
+//! the weight-layer numbers are the directly comparable ones and are what
+//! the repro table reports per metric.
+
+use anyhow::Result;
+
+use crate::quant::error::{pct_abs_diff, sweep_min, Metric};
+use crate::quant::lsq::qrange;
+use crate::runtime::Family;
+use crate::tensor::Checkpoint;
+use crate::util::stats::mean;
+
+#[derive(Clone, Debug)]
+pub struct LayerQError {
+    pub layer: String,
+    pub s_hat: f32,
+    pub bits: u32,
+    pub s_min_mae: f32,
+    pub s_min_mse: f32,
+    pub s_min_kl: f32,
+}
+
+#[derive(Clone, Debug)]
+pub struct QErrorReport {
+    pub layers: Vec<LayerQError>,
+    /// Mean/std of ŝ across weight layers (paper: 0.025 ± 0.019 for w).
+    pub s_hat_mean: f64,
+    pub s_hat_std: f64,
+}
+
+impl QErrorReport {
+    /// Average percent |ŝ - s_min| across layers for a metric — the
+    /// headline Section-3.6 numbers (47% MAE / 28% MSE / 46% KL for
+    /// weights on 2-bit ResNet-18).
+    pub fn avg_pct_diff(&self, metric: Metric) -> f64 {
+        mean(
+            &self
+                .layers
+                .iter()
+                .map(|l| {
+                    let smin = match metric {
+                        Metric::MeanAbs => l.s_min_mae,
+                        Metric::MeanSq => l.s_min_mse,
+                        Metric::Kl => l.s_min_kl,
+                    };
+                    pct_abs_diff(l.s_hat, smin)
+                })
+                .collect::<Vec<_>>(),
+        )
+    }
+}
+
+/// Analyze every quantized *weight* layer of a trained checkpoint.
+pub fn analyze_weights(fam: &Family, ckpt: &Checkpoint) -> Result<QErrorReport> {
+    let mut layers = Vec::new();
+    let mut s_hats = Vec::new();
+    let bits_of: std::collections::BTreeMap<&str, u32> =
+        fam.layer_meta.iter().map(|l| (l.name.as_str(), l.bits)).collect();
+
+    for sw_name in fam.step_names("step_w") {
+        let scope = sw_name.trim_end_matches(".sw").to_string();
+        let bits = *bits_of
+            .get(scope.as_str())
+            .ok_or_else(|| anyhow::anyhow!("no layer_meta for {scope}"))?;
+        let s_hat = ckpt.get(&sw_name)?.item_f32()?;
+        let w = ckpt.get(&format!("{scope}.w"))?.f32s()?.to_vec();
+        let layer = LayerQError {
+            layer: scope,
+            s_hat,
+            bits,
+            s_min_mae: sweep_min(Metric::MeanAbs, &w, s_hat, bits, true),
+            s_min_mse: sweep_min(Metric::MeanSq, &w, s_hat, bits, true),
+            s_min_kl: sweep_min(Metric::Kl, &w, s_hat, bits, true),
+        };
+        s_hats.push(s_hat as f64);
+        layers.push(layer);
+    }
+    let m = mean(&s_hats);
+    let std = if s_hats.len() > 1 {
+        (s_hats.iter().map(|v| (v - m) * (v - m)).sum::<f64>() / (s_hats.len() - 1) as f64).sqrt()
+    } else {
+        0.0
+    };
+    let _ = qrange(2, true); // keep the import honest for doc purposes
+    Ok(QErrorReport { layers, s_hat_mean: m, s_hat_std: std })
+}
+
+/// Learned activation step sizes (mean ± std), for the Section-3.6 report
+/// header (paper: 0.949 ± 0.206 for activations on 2-bit ResNet-18).
+pub fn act_step_stats(fam: &Family, ckpt: &Checkpoint) -> Result<(f64, f64)> {
+    let mut vals = Vec::new();
+    for sa in fam.step_names("step_a") {
+        vals.push(ckpt.get(&sa)?.item_f32()? as f64);
+    }
+    let m = mean(&vals);
+    let std = if vals.len() > 1 {
+        (vals.iter().map(|v| (v - m) * (v - m)).sum::<f64>() / (vals.len() - 1) as f64).sqrt()
+    } else {
+        0.0
+    };
+    Ok((m, std))
+}

@@ -1,0 +1,114 @@
+//! Figure 4 / Section 3.4: the ratio R (Eq. 4) between relative step-size
+//! updates and relative weight updates, per layer, averaged over training
+//! iterations — measured with the `train_diag` artifacts, which emit
+//! per-quantized-layer ‖∇w L‖, ‖w‖, |∇s L| and s each step.
+//!
+//! The paper measures R over 500 iterations in the middle of epoch 1 while
+//! *training* with the full gradient scale; each diag artifact instead bakes
+//! one gscale mode into its own gradient, so we run a short training segment
+//! per mode and report per-layer mean R.
+
+use anyhow::{bail, Result};
+
+use crate::config::ExperimentConfig;
+use crate::data::Loader;
+use crate::runtime::Engine;
+use crate::tensor::Tensor;
+use crate::train::TrainState;
+use crate::util::stats::Welford;
+
+#[derive(Clone, Debug)]
+pub struct LayerR {
+    pub layer: String,
+    pub mean_r: f64,
+    pub std_r: f64,
+}
+
+#[derive(Clone, Debug)]
+pub struct RRatioReport {
+    pub gscale: String,
+    pub bits: u32,
+    pub iterations: usize,
+    pub layers: Vec<LayerR>,
+}
+
+impl RRatioReport {
+    /// Geometric mean of per-layer mean R (the Figure-4 summary height).
+    pub fn geomean_r(&self) -> f64 {
+        crate::util::stats::geomean(
+            &self.layers.iter().map(|l| l.mean_r.max(1e-30)).collect::<Vec<_>>(),
+        )
+    }
+}
+
+/// Run `iters` diag steps for (model, bits, gscale) and fold R per layer.
+pub fn measure(
+    engine: &Engine,
+    cfg: &ExperimentConfig,
+    gscale: &str,
+    iters: usize,
+) -> Result<RRatioReport> {
+    let family = cfg.family();
+    let manifest = engine.manifest();
+    let fam = manifest.family(&family)?.clone();
+    let exe = engine.load_kind("train_diag", &family, None, Some(gscale))?;
+
+    // Layer names, in the order the diag outputs stack them (sorted sw names).
+    let sw_names = fam.step_names("step_w");
+    let layers: Vec<String> = sw_names
+        .iter()
+        .map(|n| n.trim_end_matches(".sw").to_string())
+        .collect();
+
+    let mut state = TrainState::fresh(manifest, &family)?;
+    let p = state.params.len();
+    let g = state.moms.len();
+
+    let batch = exe.meta.batch;
+    let loader = Loader::spawn(&cfg.data, batch, usize::MAX / 2, cfg.train.seed, 2);
+
+    let mut acc: Vec<Welford> = layers.iter().map(|_| Welford::new()).collect();
+    for _ in 0..iters {
+        let b = loader.next().ok_or_else(|| anyhow::anyhow!("loader drained"))?;
+        let mut inputs: Vec<Tensor> = Vec::with_capacity(p + g + 4);
+        inputs.extend(state.params.iter().cloned());
+        inputs.extend(state.moms.iter().cloned());
+        inputs.push(b.x);
+        inputs.push(b.y);
+        inputs.push(Tensor::scalar_f32(cfg.train.lr as f32));
+        inputs.push(Tensor::scalar_f32(cfg.train.weight_decay as f32));
+        let out = exe.run(&inputs)?;
+        if out.len() != p + g + 2 + 4 {
+            bail!("diag artifact returned {} outputs", out.len());
+        }
+        let gw = out[p + g + 2].f32s()?;
+        let wn = out[p + g + 3].f32s()?;
+        let gs = out[p + g + 4].f32s()?;
+        let sv = out[p + g + 5].f32s()?;
+        for (i, w) in acc.iter_mut().enumerate() {
+            // R = (|∇s L| / s) / (‖∇w L‖ / ‖w‖), Eq. 4.
+            let num = gs[i] as f64 / (sv[i].abs().max(1e-12) as f64);
+            let den = gw[i] as f64 / (wn[i].abs().max(1e-12) as f64);
+            if den > 0.0 {
+                w.push(num / den);
+            }
+        }
+        // keep training so R is measured on a *moving* model as in the paper
+        let mut new = out;
+        new.truncate(p + g);
+        let moms = new.split_off(p);
+        state.params = new;
+        state.moms = moms;
+    }
+
+    Ok(RRatioReport {
+        gscale: gscale.to_string(),
+        bits: cfg.bits,
+        iterations: iters,
+        layers: layers
+            .into_iter()
+            .zip(acc)
+            .map(|(layer, w)| LayerR { layer, mean_r: w.mean(), std_r: w.std() })
+            .collect(),
+    })
+}

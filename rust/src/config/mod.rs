@@ -1,0 +1,333 @@
+//! Experiment configuration system.
+//!
+//! Configs are JSON files (parsed with the in-repo parser) with full
+//! defaulting and validation; every CLI flag can override a field. A config
+//! fully determines an experiment: model family, precision, quantizer
+//! method/gscale, data generation, optimization schedule, seeds, and
+//! (optionally) the fp32 checkpoint to fine-tune from — the paper's
+//! protocol (Section 2.3).
+
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::Json;
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct DataConfig {
+    /// Number of training images (procedurally generated; index-addressable).
+    pub train_size: usize,
+    pub test_size: usize,
+    pub classes: usize,
+    /// Background/noise level in [0, 1] — the dataset difficulty knob.
+    pub noise: f32,
+    pub seed: u64,
+    /// Random-crop padding (pixels) + horizontal mirror, as in the paper.
+    pub augment: bool,
+}
+
+impl Default for DataConfig {
+    fn default() -> Self {
+        DataConfig {
+            train_size: 12_800,
+            test_size: 2_560,
+            classes: 10,
+            noise: 1.2,
+            seed: 1,
+            augment: true,
+        }
+    }
+}
+
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Schedule {
+    /// Cosine decay without restarts (Loshchilov & Hutter 2016) — the
+    /// paper's default (Section 2.3).
+    Cosine,
+    /// Step decay ×0.1 every `step_every` epochs (Section 3.5 ablation).
+    Step,
+    Const,
+}
+
+impl Schedule {
+    pub fn parse(s: &str) -> Result<Schedule> {
+        match s {
+            "cosine" => Ok(Schedule::Cosine),
+            "step" => Ok(Schedule::Step),
+            "const" => Ok(Schedule::Const),
+            _ => bail!("unknown schedule {s:?} (cosine|step|const)"),
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Schedule::Cosine => "cosine",
+            Schedule::Step => "step",
+            Schedule::Const => "const",
+        }
+    }
+}
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct TrainConfig {
+    pub epochs: usize,
+    pub lr: f64,
+    pub weight_decay: f64,
+    pub schedule: Schedule,
+    /// For Schedule::Step: multiply lr by 0.1 every N epochs (paper: 20).
+    pub step_every: usize,
+    pub eval_every: usize,
+    pub seed: u64,
+    /// Stop early after this many optimizer steps (0 = run all epochs);
+    /// used by smoke tests and the --quick repro mode.
+    pub max_steps: usize,
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        TrainConfig {
+            epochs: 30,
+            lr: 0.01,
+            weight_decay: 1e-4,
+            schedule: Schedule::Cosine,
+            step_every: 20,
+            eval_every: 1,
+            seed: 0,
+            max_steps: 0,
+        }
+    }
+}
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct ExperimentConfig {
+    pub name: String,
+    pub artifacts_dir: String,
+    pub out_dir: String,
+    pub model: String,
+    pub bits: u32,
+    pub method: String,
+    pub gscale: String,
+    pub distill: bool,
+    /// Checkpoint of an fp32 model to fine-tune from (paper protocol).
+    /// Empty = train from the AOT initial parameters.
+    pub init_from: String,
+    pub data: DataConfig,
+    pub train: TrainConfig,
+}
+
+impl Default for ExperimentConfig {
+    fn default() -> Self {
+        ExperimentConfig {
+            name: "exp".to_string(),
+            artifacts_dir: "artifacts".to_string(),
+            out_dir: "runs".to_string(),
+            model: "cnn_small".to_string(),
+            bits: 32,
+            method: "lsq".to_string(),
+            gscale: "full".to_string(),
+            distill: false,
+            init_from: String::new(),
+            data: DataConfig::default(),
+            train: TrainConfig::default(),
+        }
+    }
+}
+
+impl ExperimentConfig {
+    pub fn family(&self) -> String {
+        format!("{}_q{}", self.model, self.bits)
+    }
+
+    /// The paper's per-precision learning-rate defaults (Section 2.3):
+    /// 0.1 fp32, 0.01 for 2-4 bit, 0.001 for 8-bit — scaled down one decade
+    /// for our small-batch CPU runs by the configs that use them.
+    pub fn paper_lr(bits: u32) -> f64 {
+        match bits {
+            32 => 0.1,
+            8 => 0.001,
+            _ => 0.01,
+        }
+    }
+
+    /// Paper Table-2 result: halve weight decay at 3-bit, quarter at 2-bit.
+    pub fn paper_wd(bits: u32, base: f64) -> f64 {
+        match bits {
+            2 => base * 0.25,
+            3 => base * 0.5,
+            _ => base,
+        }
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if !matches!(self.bits, 2 | 3 | 4 | 8 | 32) {
+            bail!("bits must be one of 2,3,4,8,32 (got {})", self.bits);
+        }
+        if !["lsq", "lsq_jnp", "qil", "pact", "fixed"].contains(&self.method.as_str()) {
+            bail!("unknown quantizer method {:?}", self.method);
+        }
+        if !["full", "sqrtn", "one", "x10", "d10"].contains(&self.gscale.as_str()) {
+            bail!("unknown gscale mode {:?}", self.gscale);
+        }
+        if self.train.epochs == 0 && self.train.max_steps == 0 {
+            bail!("epochs and max_steps are both 0 — nothing to train");
+        }
+        if self.data.train_size == 0 || self.data.test_size == 0 {
+            bail!("data sizes must be positive");
+        }
+        if self.distill && self.bits == 32 {
+            bail!("distillation requires a quantized student (bits < 32)");
+        }
+        Ok(())
+    }
+
+    // -- JSON (de)serialization ------------------------------------------------
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("name", Json::str(self.name.clone())),
+            ("artifacts_dir", Json::str(self.artifacts_dir.clone())),
+            ("out_dir", Json::str(self.out_dir.clone())),
+            ("model", Json::str(self.model.clone())),
+            ("bits", Json::num(self.bits as f64)),
+            ("method", Json::str(self.method.clone())),
+            ("gscale", Json::str(self.gscale.clone())),
+            ("distill", Json::Bool(self.distill)),
+            ("init_from", Json::str(self.init_from.clone())),
+            (
+                "data",
+                Json::obj(vec![
+                    ("train_size", Json::num(self.data.train_size as f64)),
+                    ("test_size", Json::num(self.data.test_size as f64)),
+                    ("classes", Json::num(self.data.classes as f64)),
+                    ("noise", Json::num(self.data.noise as f64)),
+                    ("seed", Json::num(self.data.seed as f64)),
+                    ("augment", Json::Bool(self.data.augment)),
+                ]),
+            ),
+            (
+                "train",
+                Json::obj(vec![
+                    ("epochs", Json::num(self.train.epochs as f64)),
+                    ("lr", Json::num(self.train.lr)),
+                    ("weight_decay", Json::num(self.train.weight_decay)),
+                    ("schedule", Json::str(self.train.schedule.name())),
+                    ("step_every", Json::num(self.train.step_every as f64)),
+                    ("eval_every", Json::num(self.train.eval_every as f64)),
+                    ("seed", Json::num(self.train.seed as f64)),
+                    ("max_steps", Json::num(self.train.max_steps as f64)),
+                ]),
+            ),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<ExperimentConfig> {
+        let mut c = ExperimentConfig::default();
+        let gs = |j: &Json, k: &str, d: &str| -> String {
+            j.get(k).and_then(Json::as_str).map(str::to_string).unwrap_or_else(|| d.into())
+        };
+        c.name = gs(j, "name", &c.name);
+        c.artifacts_dir = gs(j, "artifacts_dir", &c.artifacts_dir);
+        c.out_dir = gs(j, "out_dir", &c.out_dir);
+        c.model = gs(j, "model", &c.model);
+        c.bits = j.get("bits").and_then(Json::as_usize).unwrap_or(c.bits as usize) as u32;
+        c.method = gs(j, "method", &c.method);
+        c.gscale = gs(j, "gscale", &c.gscale);
+        c.distill = j.get("distill").and_then(Json::as_bool).unwrap_or(c.distill);
+        c.init_from = gs(j, "init_from", &c.init_from);
+        if let Some(d) = j.get("data") {
+            c.data.train_size = d.get("train_size").and_then(Json::as_usize).unwrap_or(c.data.train_size);
+            c.data.test_size = d.get("test_size").and_then(Json::as_usize).unwrap_or(c.data.test_size);
+            c.data.classes = d.get("classes").and_then(Json::as_usize).unwrap_or(c.data.classes);
+            c.data.noise = d.get("noise").and_then(Json::as_f64).unwrap_or(c.data.noise as f64) as f32;
+            c.data.seed = d.get("seed").and_then(Json::as_i64).unwrap_or(c.data.seed as i64) as u64;
+            c.data.augment = d.get("augment").and_then(Json::as_bool).unwrap_or(c.data.augment);
+        }
+        if let Some(t) = j.get("train") {
+            c.train.epochs = t.get("epochs").and_then(Json::as_usize).unwrap_or(c.train.epochs);
+            c.train.lr = t.get("lr").and_then(Json::as_f64).unwrap_or(c.train.lr);
+            c.train.weight_decay =
+                t.get("weight_decay").and_then(Json::as_f64).unwrap_or(c.train.weight_decay);
+            if let Some(s) = t.get("schedule").and_then(Json::as_str) {
+                c.train.schedule = Schedule::parse(s)?;
+            }
+            c.train.step_every = t.get("step_every").and_then(Json::as_usize).unwrap_or(c.train.step_every);
+            c.train.eval_every = t.get("eval_every").and_then(Json::as_usize).unwrap_or(c.train.eval_every);
+            c.train.seed = t.get("seed").and_then(Json::as_i64).unwrap_or(c.train.seed as i64) as u64;
+            c.train.max_steps = t.get("max_steps").and_then(Json::as_usize).unwrap_or(c.train.max_steps);
+        }
+        c.validate()?;
+        Ok(c)
+    }
+
+    pub fn load(path: &Path) -> Result<ExperimentConfig> {
+        let text = std::fs::read_to_string(path).with_context(|| format!("read {path:?}"))?;
+        let j = Json::parse(&text).map_err(|e| anyhow::anyhow!("{path:?}: {e}"))?;
+        Self::from_json(&j)
+    }
+
+    pub fn save(&self, path: &Path) -> Result<()> {
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        std::fs::write(path, self.to_json().to_string_pretty())?;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip() {
+        let mut c = ExperimentConfig::default();
+        c.model = "resnet20".into();
+        c.bits = 2;
+        c.train.schedule = Schedule::Step;
+        c.train.lr = 0.003;
+        let j = c.to_json();
+        let back = ExperimentConfig::from_json(&j).unwrap();
+        assert_eq!(back, c);
+    }
+
+    #[test]
+    fn defaults_fill_missing() {
+        let j = Json::parse(r#"{"model": "mlp", "bits": 4}"#).unwrap();
+        let c = ExperimentConfig::from_json(&j).unwrap();
+        assert_eq!(c.model, "mlp");
+        assert_eq!(c.bits, 4);
+        assert_eq!(c.train.epochs, TrainConfig::default().epochs);
+    }
+
+    #[test]
+    fn validation_rejects_bad() {
+        let mut c = ExperimentConfig::default();
+        c.bits = 5;
+        assert!(c.validate().is_err());
+        c.bits = 2;
+        c.method = "nope".into();
+        assert!(c.validate().is_err());
+        c.method = "lsq".into();
+        c.distill = true;
+        c.bits = 32;
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn paper_scalings() {
+        assert_eq!(ExperimentConfig::paper_lr(32), 0.1);
+        assert_eq!(ExperimentConfig::paper_lr(8), 0.001);
+        assert_eq!(ExperimentConfig::paper_lr(2), 0.01);
+        assert_eq!(ExperimentConfig::paper_wd(2, 1e-4), 0.25e-4);
+        assert_eq!(ExperimentConfig::paper_wd(3, 1e-4), 0.5e-4);
+        assert_eq!(ExperimentConfig::paper_wd(4, 1e-4), 1e-4);
+    }
+
+    #[test]
+    fn family_string() {
+        let mut c = ExperimentConfig::default();
+        c.model = "resnet20".into();
+        c.bits = 3;
+        assert_eq!(c.family(), "resnet20_q3");
+    }
+}

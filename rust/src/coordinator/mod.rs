@@ -1,0 +1,217 @@
+//! Sweep coordinator: leader/worker scheduling of experiment jobs.
+//!
+//! `PjRtClient` is `Rc`-backed (not `Send`), so parallelism is process-shaped
+//! the way a multi-host launcher would be: the leader owns a job queue;
+//! each worker thread builds its *own* `Engine` (its own PJRT client and
+//! compiled executables) and pulls jobs until the queue drains. Results flow
+//! back over a channel and are folded into a `SweepReport` keyed by job name.
+//!
+//! XLA:CPU itself parallelizes single steps across cores, so the default
+//! worker count is deliberately small (oversubscription hurts); sweeps of
+//! many small jobs benefit from 2-4 workers.
+
+pub mod sweep;
+
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::config::ExperimentConfig;
+use crate::runtime::Engine;
+use crate::train::Trainer;
+use crate::util::json::Json;
+
+#[derive(Clone, Debug)]
+pub struct Job {
+    pub cfg: ExperimentConfig,
+    /// Tags propagated into the report (e.g. table row/column ids).
+    pub tags: BTreeMap<String, String>,
+}
+
+impl Job {
+    pub fn new(cfg: ExperimentConfig) -> Job {
+        Job { cfg, tags: BTreeMap::new() }
+    }
+
+    pub fn tag(mut self, k: &str, v: impl ToString) -> Job {
+        self.tags.insert(k.to_string(), v.to_string());
+        self
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct JobResult {
+    pub name: String,
+    pub tags: BTreeMap<String, String>,
+    pub top1: f64,
+    pub top5: f64,
+    pub final_train_loss: f64,
+    pub wall_seconds: f64,
+    pub checkpoint: PathBuf,
+    pub error: Option<String>,
+    /// Did training diverge / fail to beat chance? (paper Table 3 reports
+    /// "Did not converge" rows.)
+    pub converged: bool,
+}
+
+#[derive(Default, Debug)]
+pub struct SweepReport {
+    pub results: Vec<JobResult>,
+}
+
+impl SweepReport {
+    pub fn by_name(&self, name: &str) -> Option<&JobResult> {
+        self.results.iter().find(|r| r.name == name)
+    }
+
+    pub fn by_tags(&self, want: &[(&str, &str)]) -> Option<&JobResult> {
+        self.results.iter().find(|r| {
+            want.iter().all(|(k, v)| r.tags.get(*k).map(String::as_str) == Some(*v))
+        })
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::Arr(
+            self.results
+                .iter()
+                .map(|r| {
+                    let mut fields = vec![
+                        ("name", Json::str(r.name.clone())),
+                        ("top1", Json::num(r.top1)),
+                        ("top5", Json::num(r.top5)),
+                        ("final_train_loss", Json::num(r.final_train_loss)),
+                        ("wall_seconds", Json::num(r.wall_seconds)),
+                        ("converged", Json::Bool(r.converged)),
+                        (
+                            "checkpoint",
+                            Json::str(r.checkpoint.to_string_lossy().to_string()),
+                        ),
+                    ];
+                    if let Some(e) = &r.error {
+                        fields.push(("error", Json::str(e.clone())));
+                    }
+                    let tags = r
+                        .tags
+                        .iter()
+                        .map(|(k, v)| (k.clone(), Json::str(v.clone())))
+                        .collect();
+                    fields.push(("tags", Json::Obj(tags)));
+                    Json::obj(fields)
+                })
+                .collect(),
+        )
+    }
+
+    pub fn save(&self, path: &std::path::Path) -> Result<()> {
+        if let Some(d) = path.parent() {
+            std::fs::create_dir_all(d)?;
+        }
+        std::fs::write(path, self.to_json().to_string_pretty())?;
+        Ok(())
+    }
+}
+
+/// Execute one job on an existing engine (used by workers and directly by
+/// the CLI `train` command).
+pub fn run_job(engine: &Engine, job: &Job) -> JobResult {
+    let t0 = Instant::now();
+    let name = job.cfg.name.clone();
+    let chance = 100.0 / job.cfg.data.classes as f64;
+    match Trainer::new(engine, job.cfg.clone()).and_then(|mut t| {
+        t.verbose = false;
+        t.fit()
+    }) {
+        Ok(rep) => JobResult {
+            name,
+            tags: job.tags.clone(),
+            top1: rep.final_top1,
+            top5: rep.final_top5,
+            final_train_loss: rep.history.recent_loss(20),
+            wall_seconds: t0.elapsed().as_secs_f64(),
+            checkpoint: rep.checkpoint,
+            error: None,
+            // "converged": clearly above chance at the end.
+            converged: rep.final_top1 > 1.5 * chance,
+        },
+        Err(e) => JobResult {
+            name,
+            tags: job.tags.clone(),
+            top1: f64::NAN,
+            top5: f64::NAN,
+            final_train_loss: f64::NAN,
+            wall_seconds: t0.elapsed().as_secs_f64(),
+            checkpoint: PathBuf::new(),
+            error: Some(format!("{e:#}")),
+            converged: false,
+        },
+    }
+}
+
+/// Leader: run `jobs` across `workers` threads, each with its own Engine.
+/// Jobs run in queue order; results are returned in completion order and
+/// then sorted back to submission order.
+pub fn run_sweep(artifacts_dir: &std::path::Path, jobs: Vec<Job>, workers: usize) -> Result<SweepReport> {
+    let n = jobs.len();
+    if n == 0 {
+        return Ok(SweepReport::default());
+    }
+    let workers = workers.clamp(1, n);
+    println!("sweep: {n} jobs on {workers} worker(s)");
+
+    let queue: Arc<Mutex<Vec<(usize, Job)>>> =
+        Arc::new(Mutex::new(jobs.into_iter().enumerate().rev().collect()));
+    let (tx, rx) = mpsc::channel::<(usize, JobResult)>();
+    let dir = artifacts_dir.to_path_buf();
+
+    let mut handles = Vec::new();
+    for wid in 0..workers {
+        let queue = queue.clone();
+        let tx = tx.clone();
+        let dir = dir.clone();
+        handles.push(
+            std::thread::Builder::new()
+                .name(format!("lsq-worker-{wid}"))
+                .spawn(move || {
+                    // Each worker owns its engine (non-Send client).
+                    let engine = match Engine::new(&dir) {
+                        Ok(e) => e,
+                        Err(e) => {
+                            eprintln!("worker {wid}: engine init failed: {e:#}");
+                            return;
+                        }
+                    };
+                    loop {
+                        let item = queue.lock().unwrap().pop();
+                        let (idx, job) = match item {
+                            Some(x) => x,
+                            None => break,
+                        };
+                        let started = Instant::now();
+                        let res = run_job(&engine, &job);
+                        println!(
+                            "  [worker {wid}] {} -> top1 {:.2}%{} ({:.1}s)",
+                            res.name,
+                            res.top1,
+                            res.error.as_deref().map(|e| format!(" ERROR: {e}")).unwrap_or_default(),
+                            started.elapsed().as_secs_f64()
+                        );
+                        if tx.send((idx, res)).is_err() {
+                            break;
+                        }
+                    }
+                })?,
+        );
+    }
+    drop(tx);
+
+    let mut indexed: Vec<(usize, JobResult)> = rx.iter().collect();
+    for h in handles {
+        let _ = h.join();
+    }
+    indexed.sort_by_key(|(i, _)| *i);
+    Ok(SweepReport { results: indexed.into_iter().map(|(_, r)| r).collect() })
+}

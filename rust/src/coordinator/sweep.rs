@@ -1,0 +1,272 @@
+//! Sweep builders: translate the paper's experiment grids (Tables 1-4,
+//! Sections 3.4-3.5) into job lists, including the fp32-pretrain →
+//! fine-tune dependency (the paper's protocol, Section 2.3).
+//!
+//! The pretrain stage runs first (one fp32 job per architecture); every
+//! quantized job then points its `init_from` at the produced checkpoint.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::Result;
+
+use crate::config::ExperimentConfig;
+use crate::coordinator::{run_sweep, Job, SweepReport};
+
+/// Scale knobs shared by all repro sweeps.
+#[derive(Clone, Debug)]
+pub struct SweepScale {
+    pub train_size: usize,
+    pub test_size: usize,
+    pub epochs_fp32: usize,
+    pub epochs_q: usize,
+    pub epochs_q8: usize,
+    pub workers: usize,
+    pub out_dir: String,
+    pub artifacts_dir: String,
+}
+
+impl SweepScale {
+    /// Full-fidelity defaults (hours on CPU).
+    pub fn standard() -> SweepScale {
+        SweepScale {
+            train_size: 12_800,
+            test_size: 2_560,
+            epochs_fp32: 40,
+            epochs_q: 30,
+            // Paper: 8-bit starts near the fp32 optimum and needs 1 epoch.
+            epochs_q8: 3,
+            workers: 1,
+            out_dir: "runs".into(),
+            artifacts_dir: "artifacts".into(),
+        }
+    }
+
+    /// Minutes-scale mode for smoke/CI (`--quick`).
+    pub fn quick() -> SweepScale {
+        SweepScale {
+            train_size: 1_920,
+            test_size: 640,
+            epochs_fp32: 8,
+            epochs_q: 6,
+            epochs_q8: 2,
+            workers: 1,
+            out_dir: "runs_quick".into(),
+            artifacts_dir: "artifacts".into(),
+        }
+    }
+
+    pub fn base_cfg(&self, model: &str, bits: u32) -> ExperimentConfig {
+        let mut c = ExperimentConfig::default();
+        c.model = model.to_string();
+        c.bits = bits;
+        c.artifacts_dir = self.artifacts_dir.clone();
+        c.out_dir = self.out_dir.clone();
+        c.data.train_size = self.train_size;
+        c.data.test_size = self.test_size;
+        // LR: paper ratios (0.1 / 0.01 / 0.001) scaled 1/10 for small-batch
+        // CPU runs; weight decay per Table 2.
+        c.train.lr = ExperimentConfig::paper_lr(bits) * 0.5;
+        c.train.weight_decay = ExperimentConfig::paper_wd(bits, 1e-4);
+        c.train.epochs = if bits == 32 {
+            self.epochs_fp32
+        } else if bits == 8 {
+            self.epochs_q8
+        } else {
+            self.epochs_q
+        };
+        c.name = format!("{model}_q{bits}");
+        c
+    }
+
+    pub fn fp32_ckpt(&self, model: &str) -> PathBuf {
+        PathBuf::from(&self.out_dir).join(format!("{model}_q32")).join("final.ckpt")
+    }
+}
+
+/// Ensure the fp32 baselines for `models` exist (training them if missing);
+/// returns their top1/top5 keyed by model.
+pub fn ensure_fp32(
+    scale: &SweepScale,
+    models: &[&str],
+) -> Result<BTreeMap<String, (f64, f64)>> {
+    let mut jobs = Vec::new();
+    let mut have = BTreeMap::new();
+    for model in models {
+        let ckpt = scale.fp32_ckpt(model);
+        let hist = ckpt.parent().unwrap().join("history.json");
+        if ckpt.exists() && hist.exists() {
+            let h = crate::train::History::load(&hist)?;
+            if let Some(e) = h.final_eval() {
+                have.insert(model.to_string(), (e.top1, e.top5));
+                continue;
+            }
+        }
+        let cfg = scale.base_cfg(model, 32);
+        jobs.push(Job::new(cfg).tag("model", model).tag("bits", 32));
+    }
+    if !jobs.is_empty() {
+        let rep = run_sweep(Path::new(&scale.artifacts_dir), jobs, scale.workers)?;
+        for r in rep.results {
+            if let Some(e) = &r.error {
+                anyhow::bail!("fp32 pretrain {} failed: {e}", r.name);
+            }
+            have.insert(r.tags["model"].clone(), (r.top1, r.top5));
+        }
+    }
+    Ok(have)
+}
+
+/// Build one fine-tune job from an fp32 checkpoint.
+pub fn finetune_job(scale: &SweepScale, model: &str, bits: u32) -> Job {
+    let mut cfg = scale.base_cfg(model, bits);
+    cfg.init_from = scale.fp32_ckpt(model).to_string_lossy().to_string();
+    Job::new(cfg).tag("model", model).tag("bits", bits)
+}
+
+/// Table 1 grid: models x precisions (quantized entries; fp32 comes from
+/// `ensure_fp32`).
+pub fn table1_jobs(scale: &SweepScale, models: &[&str], precisions: &[u32]) -> Vec<Job> {
+    let mut jobs = Vec::new();
+    for model in models {
+        for &bits in precisions {
+            jobs.push(finetune_job(scale, model, bits));
+        }
+    }
+    jobs
+}
+
+/// Table 2 grid: weight-decay sweep at each precision (paper: ResNet-18;
+/// here the configured model).
+pub fn table2_jobs(scale: &SweepScale, model: &str, precisions: &[u32]) -> Vec<Job> {
+    let factors = [1.0, 0.5, 0.25, 0.125];
+    let mut jobs = Vec::new();
+    for &f in &factors {
+        for &bits in precisions {
+            let mut job = finetune_job(scale, model, bits);
+            job.cfg.train.weight_decay = 1e-4 * f;
+            job.cfg.name = format!("{model}_q{bits}_wd{f}");
+            jobs.push(job.tag("wd", format!("{f}")));
+        }
+    }
+    jobs
+}
+
+/// Table 3 grid: gradient-scale ablation on the 2-bit model, including the
+/// no-scale + lowered-LR rows.
+pub fn table3_jobs(scale: &SweepScale, model: &str) -> Vec<Job> {
+    let mut jobs = Vec::new();
+    let rows: [(&str, f64, &str); 6] = [
+        ("full", 1.0, "1/sqrt(N*Qp)"),
+        ("sqrtn", 1.0, "1/sqrt(N)"),
+        ("one", 1.0, "1"),
+        ("one", 0.01, "1 @ lr/100"),
+        ("x10", 1.0, "10/sqrt(N*Qp)"),
+        ("d10", 1.0, "1/(10 sqrt(N*Qp))"),
+    ];
+    for (i, (gscale, lr_factor, label)) in rows.iter().enumerate() {
+        let mut job = finetune_job(scale, model, 2);
+        job.cfg.gscale = gscale.to_string();
+        job.cfg.train.lr *= lr_factor;
+        job.cfg.name = format!("{model}_q2_gs{i}_{gscale}");
+        jobs.push(job.tag("gscale", *label).tag("row", i));
+    }
+    jobs
+}
+
+/// Table 4: LSQ + knowledge distillation across precisions.
+pub fn table4_jobs(scale: &SweepScale, models: &[&str], precisions: &[u32]) -> Vec<Job> {
+    let mut jobs = Vec::new();
+    for model in models {
+        for &bits in precisions {
+            let mut job = finetune_job(scale, model, bits);
+            job.cfg.distill = true;
+            job.cfg.name = format!("{model}_q{bits}_kd");
+            jobs.push(job.tag("kd", "1"));
+        }
+    }
+    jobs
+}
+
+/// Section 3.5: cosine vs step LR decay on the 2-bit model.
+pub fn lr_ablation_jobs(scale: &SweepScale, model: &str) -> Vec<Job> {
+    let mut cos = finetune_job(scale, model, 2);
+    cos.cfg.name = format!("{model}_q2_cosine");
+    let mut step = finetune_job(scale, model, 2);
+    step.cfg.train.schedule = crate::config::Schedule::Step;
+    step.cfg.train.step_every = (scale.epochs_q / 4).max(1);
+    step.cfg.name = format!("{model}_q2_step");
+    vec![cos.tag("sched", "cosine"), step.tag("sched", "step")]
+}
+
+/// Baseline quantizer-gradient comparison (Table 1 columns QIL/PACT/fixed).
+pub fn method_jobs(scale: &SweepScale, model: &str, methods: &[&str]) -> Vec<Job> {
+    let mut jobs = Vec::new();
+    for m in methods {
+        let mut job = finetune_job(scale, model, 2);
+        job.cfg.method = m.to_string();
+        job.cfg.name = format!("{model}_q2_{m}");
+        jobs.push(job.tag("method", *m));
+    }
+    jobs
+}
+
+/// Merge reports.
+pub fn merge(reports: Vec<SweepReport>) -> SweepReport {
+    let mut out = SweepReport::default();
+    for mut r in reports {
+        out.results.append(&mut r.results);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table1_grid_size() {
+        let s = SweepScale::quick();
+        let jobs = table1_jobs(&s, &["cnn_small", "resnet20"], &[2, 3, 4, 8]);
+        assert_eq!(jobs.len(), 8);
+        assert!(jobs.iter().all(|j| !j.cfg.init_from.is_empty()));
+    }
+
+    #[test]
+    fn epochs_follow_precision() {
+        let s = SweepScale::quick();
+        assert_eq!(s.base_cfg("m", 32).train.epochs, s.epochs_fp32);
+        assert_eq!(s.base_cfg("m", 8).train.epochs, s.epochs_q8);
+        assert_eq!(s.base_cfg("m", 2).train.epochs, s.epochs_q);
+    }
+
+    #[test]
+    fn wd_follows_table2_rule() {
+        let s = SweepScale::quick();
+        assert!((s.base_cfg("m", 2).train.weight_decay - 0.25e-4).abs() < 1e-12);
+        assert!((s.base_cfg("m", 3).train.weight_decay - 0.5e-4).abs() < 1e-12);
+        assert!((s.base_cfg("m", 4).train.weight_decay - 1e-4).abs() < 1e-12);
+    }
+
+    #[test]
+    fn table3_has_lowered_lr_row() {
+        let s = SweepScale::quick();
+        let jobs = table3_jobs(&s, "cnn_small");
+        assert_eq!(jobs.len(), 6);
+        let lrs: Vec<f64> = jobs.iter().map(|j| j.cfg.train.lr).collect();
+        assert!(lrs[3] < lrs[2]);
+    }
+
+    #[test]
+    fn unique_job_names() {
+        let s = SweepScale::quick();
+        let mut names: Vec<String> = table2_jobs(&s, "cnn_small", &[2, 3, 4, 8])
+            .iter()
+            .map(|j| j.cfg.name.clone())
+            .collect();
+        let n = names.len();
+        names.sort();
+        names.dedup();
+        assert_eq!(names.len(), n);
+    }
+}

@@ -1,0 +1,110 @@
+//! Training-time augmentation, following the paper's recipe scaled to 32px:
+//! pad-and-random-crop (4 px, the CIFAR analogue of the paper's 256→224
+//! random crop) and horizontal mirroring half the time.
+
+use super::synth::{CHANNELS, IMG};
+use crate::util::rng::Pcg32;
+
+pub const PAD: usize = 4;
+
+/// Random 4-px-pad crop + 50% horizontal mirror, in place via a scratch
+/// buffer. `img` is HWC 32x32x3.
+pub fn augment(img: &mut [f32], scratch: &mut Vec<f32>, rng: &mut Pcg32) {
+    debug_assert_eq!(img.len(), IMG * IMG * CHANNELS);
+    let padded = IMG + 2 * PAD;
+    scratch.clear();
+    scratch.resize(padded * padded * CHANNELS, 0.0);
+    // zero-pad
+    for y in 0..IMG {
+        for x in 0..IMG {
+            for c in 0..CHANNELS {
+                scratch[((y + PAD) * padded + (x + PAD)) * CHANNELS + c] =
+                    img[(y * IMG + x) * CHANNELS + c];
+            }
+        }
+    }
+    let oy = rng.below((2 * PAD + 1) as u32) as usize;
+    let ox = rng.below((2 * PAD + 1) as u32) as usize;
+    let mirror = rng.bool(0.5);
+    for y in 0..IMG {
+        for x in 0..IMG {
+            let sx = if mirror { IMG - 1 - x } else { x };
+            for c in 0..CHANNELS {
+                img[(y * IMG + x) * CHANNELS + c] =
+                    scratch[((y + oy) * padded + (sx + ox)) * CHANNELS + c];
+            }
+        }
+    }
+}
+
+/// Pure horizontal mirror (for tests).
+pub fn mirror(img: &[f32]) -> Vec<f32> {
+    let mut out = vec![0.0; img.len()];
+    for y in 0..IMG {
+        for x in 0..IMG {
+            for c in 0..CHANNELS {
+                out[(y * IMG + x) * CHANNELS + c] =
+                    img[(y * IMG + (IMG - 1 - x)) * CHANNELS + c];
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::SynthSpec;
+
+    #[test]
+    fn mirror_involution() {
+        let img = SynthSpec::new(10, 0.3, 0).generate_alloc(3);
+        assert_eq!(mirror(&mirror(&img)), img);
+    }
+
+    #[test]
+    fn augment_preserves_len_and_changes_content() {
+        let spec = SynthSpec::new(10, 0.3, 0);
+        let orig = spec.generate_alloc(5);
+        let mut img = orig.clone();
+        let mut scratch = Vec::new();
+        let mut rng = Pcg32::seeded(9);
+        augment(&mut img, &mut scratch, &mut rng);
+        assert_eq!(img.len(), orig.len());
+        assert_ne!(img, orig); // offset (4,4) with no mirror has p≈1/162
+    }
+
+    #[test]
+    fn augment_center_crop_no_mirror_is_identity() {
+        // Find a seed whose first draw is (oy=4, ox=4, mirror=false).
+        let spec = SynthSpec::new(10, 0.3, 0);
+        for seed in 0..5000u64 {
+            let mut rng = Pcg32::seeded(seed);
+            let oy = rng.below(9);
+            let ox = rng.below(9);
+            let m = rng.bool(0.5);
+            if oy == 4 && ox == 4 && !m {
+                let orig = spec.generate_alloc(1);
+                let mut img = orig.clone();
+                let mut scratch = Vec::new();
+                let mut rng = Pcg32::seeded(seed);
+                augment(&mut img, &mut scratch, &mut rng);
+                assert_eq!(img, orig);
+                return;
+            }
+        }
+        panic!("no identity seed found");
+    }
+
+    #[test]
+    fn augment_deterministic_under_seed() {
+        let spec = SynthSpec::new(10, 0.3, 0);
+        let mut a = spec.generate_alloc(2);
+        let mut b = a.clone();
+        let mut s1 = Vec::new();
+        let mut s2 = Vec::new();
+        augment(&mut a, &mut s1, &mut Pcg32::seeded(4));
+        augment(&mut b, &mut s2, &mut Pcg32::seeded(4));
+        assert_eq!(a, b);
+    }
+}

@@ -1,0 +1,223 @@
+//! Batched data pipeline with background prefetch and backpressure.
+//!
+//! Producer threads generate+augment images into a bounded channel
+//! (`sync_channel`), so generation overlaps XLA execution and never runs
+//! unboundedly ahead — the paper-training analogue of an input pipeline.
+//! Epoch order is a seeded shuffle; iteration is deterministic given
+//! (data seed, train seed, epoch).
+
+use std::sync::mpsc::{Receiver, SyncSender};
+use std::thread::JoinHandle;
+
+use crate::config::DataConfig;
+use crate::data::augment::augment;
+use crate::data::synth::{SynthSpec, PIXELS};
+use crate::tensor::Tensor;
+use crate::util::rng::Pcg32;
+
+#[derive(Clone, Debug)]
+pub struct Batch {
+    pub x: Tensor,
+    pub y: Tensor,
+    /// Number of real (non-padded) examples — the tail batch of an eval
+    /// pass may be padded up to the artifact's fixed batch size.
+    pub real: usize,
+}
+
+/// Synchronous batch source (used directly by eval and by tests).
+pub struct Dataset {
+    pub spec: SynthSpec,
+    pub size: usize,
+    /// Index offset: the test split lives after the train split in the
+    /// infinite procedural index space.
+    pub base: usize,
+}
+
+impl Dataset {
+    pub fn train(cfg: &DataConfig) -> Dataset {
+        Dataset {
+            spec: SynthSpec::new(cfg.classes, cfg.noise, cfg.seed),
+            size: cfg.train_size,
+            base: 0,
+        }
+    }
+
+    pub fn test(cfg: &DataConfig) -> Dataset {
+        Dataset {
+            spec: SynthSpec::new(cfg.classes, cfg.noise, cfg.seed),
+            size: cfg.test_size,
+            base: cfg.train_size,
+        }
+    }
+
+    /// Materialize a batch from explicit dataset indices, padding (by
+    /// repeating index 0) to `batch` rows if fewer are given.
+    pub fn batch_from_indices(&self, indices: &[usize], batch: usize) -> Batch {
+        assert!(indices.len() <= batch && !indices.is_empty());
+        let mut x = vec![0.0f32; batch * PIXELS];
+        let mut y = vec![0i32; batch];
+        for row in 0..batch {
+            let idx = self.base + *indices.get(row).unwrap_or(&indices[0]);
+            self.spec.generate(idx, &mut x[row * PIXELS..(row + 1) * PIXELS]);
+            y[row] = self.spec.label(idx);
+        }
+        Batch {
+            x: Tensor::from_f32(&[batch, 32, 32, 3], x),
+            y: Tensor::from_i32(&[batch], y),
+            real: indices.len(),
+        }
+    }
+
+    /// Sequential full pass as fixed-size batches (for evaluation).
+    pub fn eval_batches(&self, batch: usize) -> Vec<Batch> {
+        let mut out = Vec::new();
+        let mut i = 0;
+        while i < self.size {
+            let n = batch.min(self.size - i);
+            let idx: Vec<usize> = (i..i + n).collect();
+            out.push(self.batch_from_indices(&idx, batch));
+            i += n;
+        }
+        out
+    }
+}
+
+/// Background prefetching loader for training.
+pub struct Loader {
+    rx: Receiver<Batch>,
+    handle: Option<JoinHandle<()>>,
+    pub batches_per_epoch: usize,
+}
+
+impl Loader {
+    /// Spawn a producer for `epochs` epochs of shuffled, augmented batches.
+    /// `depth` bounds the prefetch queue (backpressure).
+    pub fn spawn(
+        data_cfg: &DataConfig,
+        batch: usize,
+        epochs: usize,
+        train_seed: u64,
+        depth: usize,
+    ) -> Loader {
+        let (tx, rx): (SyncSender<Batch>, Receiver<Batch>) =
+            std::sync::mpsc::sync_channel(depth.max(1));
+        let cfg = data_cfg.clone();
+        let augment_on = cfg.augment;
+        let ds = Dataset::train(&cfg);
+        let batches_per_epoch = ds.size / batch;
+        let handle = std::thread::Builder::new()
+            .name("lsq-data".into())
+            .spawn(move || {
+                let mut scratch = Vec::new();
+                let mut order: Vec<usize> = (0..ds.size).collect();
+                'outer: for epoch in 0..epochs {
+                    let mut rng = Pcg32::seeded(
+                        train_seed ^ 0xdead_beef ^ (epoch as u64).wrapping_mul(0x100_0001b3),
+                    );
+                    rng.shuffle(&mut order);
+                    for chunk in order.chunks_exact(batch) {
+                        let mut b = ds.batch_from_indices(chunk, batch);
+                        if augment_on {
+                            let xs = b.x.f32s_mut().expect("train batch is f32");
+                            for row in 0..batch {
+                                augment(
+                                    &mut xs[row * PIXELS..(row + 1) * PIXELS],
+                                    &mut scratch,
+                                    &mut rng,
+                                );
+                            }
+                        }
+                        if tx.send(b).is_err() {
+                            break 'outer; // consumer dropped
+                        }
+                    }
+                }
+            })
+            .expect("spawn data thread");
+        Loader { rx, handle: Some(handle), batches_per_epoch }
+    }
+
+    pub fn next(&self) -> Option<Batch> {
+        self.rx.recv().ok()
+    }
+}
+
+impl Drop for Loader {
+    fn drop(&mut self) {
+        // Unblock the producer by draining, then join.
+        while self.rx.try_recv().is_ok() {}
+        drop(std::mem::replace(&mut self.rx, std::sync::mpsc::sync_channel(1).1));
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> DataConfig {
+        DataConfig { train_size: 64, test_size: 32, classes: 4, noise: 0.2, seed: 3, augment: true }
+    }
+
+    #[test]
+    fn eval_batches_cover_all_with_padding() {
+        let ds = Dataset::test(&cfg());
+        let batches = ds.eval_batches(10);
+        assert_eq!(batches.len(), 4); // 32/10 -> 10,10,10,2
+        assert_eq!(batches[3].real, 2);
+        let total: usize = batches.iter().map(|b| b.real).sum();
+        assert_eq!(total, 32);
+        for b in &batches {
+            assert_eq!(b.x.shape, vec![10, 32, 32, 3]);
+        }
+    }
+
+    #[test]
+    fn train_and_test_splits_disjoint() {
+        let c = cfg();
+        let tr = Dataset::train(&c);
+        let te = Dataset::test(&c);
+        let a = tr.batch_from_indices(&[0], 1);
+        let b = te.batch_from_indices(&[0], 1);
+        assert_ne!(a.x, b.x); // test index 0 = raw index train_size
+    }
+
+    #[test]
+    fn loader_yields_expected_count_and_is_deterministic() {
+        let c = cfg();
+        let collect = || -> Vec<Vec<i32>> {
+            let l = Loader::spawn(&c, 16, 2, 42, 2);
+            let mut ys = Vec::new();
+            while let Some(b) = l.next() {
+                ys.push(b.y.i32s().unwrap().to_vec());
+            }
+            ys
+        };
+        let a = collect();
+        assert_eq!(a.len(), 2 * (64 / 16));
+        let b = collect();
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn loader_epochs_are_reshuffled() {
+        let c = cfg();
+        let l = Loader::spawn(&c, 16, 2, 1, 2);
+        let mut epochs: Vec<Vec<i32>> = vec![Vec::new(), Vec::new()];
+        for i in 0..8 {
+            let b = l.next().unwrap();
+            epochs[i / 4].extend_from_slice(b.y.i32s().unwrap());
+        }
+        assert_ne!(epochs[0], epochs[1]);
+    }
+
+    #[test]
+    fn drop_mid_epoch_does_not_hang() {
+        let c = cfg();
+        let l = Loader::spawn(&c, 16, 100, 1, 1);
+        let _ = l.next();
+        drop(l); // must join cleanly
+    }
+}

@@ -1,0 +1,10 @@
+//! Data substrate: the procedural `synthshapes` dataset (ImageNet stand-in,
+//! see DESIGN.md §Substitutions), paper-style augmentation, and a prefetching
+//! batched loader with backpressure.
+
+pub mod augment;
+pub mod loader;
+pub mod synth;
+
+pub use loader::{Batch, Dataset, Loader};
+pub use synth::SynthSpec;

@@ -1,0 +1,187 @@
+//! `synthshapes`: a procedurally generated 32x32x3 classification dataset —
+//! the in-repo stand-in for ImageNet (see DESIGN.md §Substitutions).
+//!
+//! Every image is generated deterministically from (dataset_seed, index):
+//! class identity fixes an oriented grating frequency/angle, a color tint
+//! and a geometric mask family; the instance seed jitters phase, position,
+//! scale and adds background noise. The task is non-trivial (fp32 models
+//! plateau well below 100% at high noise) yet learnable in minutes on CPU,
+//! which is what the quantization-dynamics experiments need.
+//!
+//! Images are emitted already standardized to roughly zero mean / unit std.
+
+use crate::util::rng::Pcg32;
+
+pub const IMG: usize = 32;
+pub const CHANNELS: usize = 3;
+pub const PIXELS: usize = IMG * IMG * CHANNELS;
+
+#[derive(Clone, Debug)]
+pub struct SynthSpec {
+    pub classes: usize,
+    pub noise: f32,
+    pub seed: u64,
+}
+
+impl SynthSpec {
+    pub fn new(classes: usize, noise: f32, seed: u64) -> Self {
+        assert!(classes >= 2 && classes <= 32, "classes in 2..=32");
+        SynthSpec { classes, noise, seed }
+    }
+
+    /// Class label for dataset index `i` (balanced round-robin).
+    pub fn label(&self, index: usize) -> i32 {
+        (index % self.classes) as i32
+    }
+
+    /// Generate image `index` into `out` (length PIXELS, HWC layout).
+    pub fn generate(&self, index: usize, out: &mut [f32]) {
+        assert_eq!(out.len(), PIXELS);
+        let class = self.label(index) as usize;
+        let mut rng = Pcg32::new(
+            self.seed ^ (index as u64).wrapping_mul(0x9e37_79b9_7f4a_7c15),
+            0x5851_f42d_4c95_7f2d ^ index as u64,
+        );
+
+        // -- class-determined structure ------------------------------------
+        let angle = std::f32::consts::PI * (class as f32) / (self.classes as f32);
+        let (sin_a, cos_a) = angle.sin_cos();
+        let freq = 0.25 + 0.05 * ((class % 3) as f32); // cycles per pixel
+        // tint: three phase-shifted cosines over the class index
+        let tint = [
+            0.6 + 0.4 * (class as f32 * 2.4).cos(),
+            0.6 + 0.4 * (class as f32 * 2.4 + 2.1).cos(),
+            0.6 + 0.4 * (class as f32 * 2.4 + 4.2).cos(),
+        ];
+        let mask_kind = class % 3; // 0 disc, 1 square, 2 diagonal band
+
+        // -- instance jitter --------------------------------------------------
+        let phase = rng.range_f32(0.0, std::f32::consts::TAU);
+        let cx = 16.0 + rng.range_f32(-4.0, 4.0);
+        let cy = 16.0 + rng.range_f32(-4.0, 4.0);
+        let radius = rng.range_f32(8.0, 13.0);
+        let freq = freq * rng.range_f32(0.9, 1.1);
+        let contrast = rng.range_f32(0.8, 1.2);
+
+        for y in 0..IMG {
+            for x in 0..IMG {
+                let fx = x as f32 - cx;
+                let fy = y as f32 - cy;
+                // oriented grating
+                let t = (fx * cos_a + fy * sin_a) * freq * std::f32::consts::TAU;
+                let grating = (t + phase).sin();
+                // geometric mask
+                let inside = match mask_kind {
+                    0 => fx * fx + fy * fy <= radius * radius,
+                    1 => fx.abs().max(fy.abs()) <= radius,
+                    _ => (fx + fy).abs() <= radius * 0.9,
+                };
+                let shape = if inside { 1.0 } else { 0.15 };
+                for c in 0..CHANNELS {
+                    let signal = grating * shape * tint[c] * contrast;
+                    let noise = self.noise * rng.normal();
+                    out[(y * IMG + x) * CHANNELS + c] = signal + noise;
+                }
+            }
+        }
+
+        // standardize per image
+        let n = out.len() as f32;
+        let mean: f32 = out.iter().sum::<f32>() / n;
+        let var: f32 = out.iter().map(|v| (v - mean) * (v - mean)).sum::<f32>() / n;
+        let inv = 1.0 / (var.sqrt() + 1e-5);
+        for v in out.iter_mut() {
+            *v = (*v - mean) * inv;
+        }
+    }
+
+    pub fn generate_alloc(&self, index: usize) -> Vec<f32> {
+        let mut v = vec![0.0; PIXELS];
+        self.generate(index, &mut v);
+        v
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic() {
+        let spec = SynthSpec::new(10, 0.3, 7);
+        assert_eq!(spec.generate_alloc(42), spec.generate_alloc(42));
+    }
+
+    #[test]
+    fn instances_differ() {
+        let spec = SynthSpec::new(10, 0.3, 7);
+        assert_ne!(spec.generate_alloc(0), spec.generate_alloc(10)); // same class
+        assert_ne!(spec.generate_alloc(0), spec.generate_alloc(1)); // diff class
+    }
+
+    #[test]
+    fn seeds_change_data() {
+        let a = SynthSpec::new(10, 0.3, 1).generate_alloc(5);
+        let b = SynthSpec::new(10, 0.3, 2).generate_alloc(5);
+        assert_ne!(a, b);
+    }
+
+    #[test]
+    fn standardized() {
+        let spec = SynthSpec::new(10, 0.5, 3);
+        let img = spec.generate_alloc(13);
+        let n = img.len() as f32;
+        let mean: f32 = img.iter().sum::<f32>() / n;
+        let var: f32 = img.iter().map(|v| (v - mean) * (v - mean)).sum::<f32>() / n;
+        assert!(mean.abs() < 1e-3, "mean={mean}");
+        assert!((var - 1.0).abs() < 1e-2, "var={var}");
+    }
+
+    #[test]
+    fn labels_balanced() {
+        let spec = SynthSpec::new(10, 0.3, 0);
+        let mut counts = [0usize; 10];
+        for i in 0..1000 {
+            counts[spec.label(i) as usize] += 1;
+        }
+        assert!(counts.iter().all(|&c| c == 100));
+    }
+
+    #[test]
+    fn classes_are_separable_by_template_correlation() {
+        // Nearest-class-template classification must beat chance by a wide
+        // margin — i.e. the dataset actually carries class signal.
+        let spec = SynthSpec::new(4, 0.2, 11);
+        // class templates: average of 24 instances
+        let mut templates = vec![vec![0.0f32; PIXELS]; 4];
+        for c in 0..4 {
+            for k in 0..24 {
+                let img = spec.generate_alloc(c + 4 * k);
+                for (t, v) in templates[c].iter_mut().zip(&img) {
+                    *t += v / 24.0;
+                }
+            }
+        }
+        let mut correct = 0;
+        let total = 80;
+        for i in 1000..1000 + total {
+            let img = spec.generate_alloc(i);
+            let truth = spec.label(i) as usize;
+            let best = (0..4)
+                .max_by(|&a, &b| {
+                    let sa: f32 = templates[a].iter().zip(&img).map(|(t, v)| t * v).sum();
+                    let sb: f32 = templates[b].iter().zip(&img).map(|(t, v)| t * v).sum();
+                    sa.partial_cmp(&sb).unwrap()
+                })
+                .unwrap();
+            if best == truth {
+                correct += 1;
+            }
+        }
+        assert!(
+            correct * 4 > total, // > 25% chance level... require > 50%
+            "template classifier got {correct}/{total}"
+        );
+        assert!(correct * 2 > total, "template classifier got {correct}/{total}");
+    }
+}

@@ -1,0 +1,25 @@
+//! # lsqnet
+//!
+//! A three-layer reproduction of *Learned Step Size Quantization*
+//! (Esser et al., ICLR 2020):
+//!
+//! * **Layer 1** — Pallas kernels (LSQ quantizer fwd/bwd, int-domain matmul),
+//!   compiled AOT from Python, never executed by Python at run time.
+//! * **Layer 2** — JAX model zoo + QAT train/eval steps, lowered to HLO text.
+//! * **Layer 3** — this crate: the coordinator that owns configs, data,
+//!   training loops, sweeps, analysis, serving and the repro harness.
+//!
+//! Entry points: the `lsqnet` binary (see `main.rs`) and the public modules
+//! below. Start with [`runtime::Engine`] + [`train::Trainer`].
+
+pub mod analyze;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod quant;
+pub mod repro;
+pub mod runtime;
+pub mod serve;
+pub mod tensor;
+pub mod train;
+pub mod util;

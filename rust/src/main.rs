@@ -1,0 +1,347 @@
+//! `lsqnet` — the Layer-3 coordinator CLI.
+//!
+//! Subcommands:
+//!   info                         inspect artifacts/manifest
+//!   train                        run one experiment (flags or --config)
+//!   eval                         evaluate a checkpoint on the test split
+//!   sweep --config <json>        run a list of experiment configs
+//!   repro <table1|...|all>       regenerate a paper table/figure
+//!   serve                        start the quantized-inference server demo
+//!   pack                         quantize+pack a checkpoint, report size
+//!
+//! Common flags: --artifacts <dir> --out-dir <dir> --quick --workers N
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use lsqnet::config::ExperimentConfig;
+use lsqnet::coordinator::{run_sweep, Job};
+use lsqnet::runtime::Engine;
+use lsqnet::tensor::Checkpoint;
+use lsqnet::train::Trainer;
+use lsqnet::util::cli::Args;
+use lsqnet::util::json::Json;
+
+const USAGE: &str = "\
+lsqnet — Learned Step Size Quantization (ICLR 2020) coordinator
+
+USAGE: lsqnet <command> [flags]
+
+COMMANDS
+  info                     list artifacts, families and parameter counts
+  train                    train one model
+                           --model cnn_small --bits 2 [--method lsq]
+                           [--gscale full] [--epochs N] [--lr X] [--wd X]
+                           [--init-from ck.ckpt] [--distill] [--config c.json]
+  eval                     --checkpoint runs/x/final.ckpt [--test-size N]
+  sweep                    --config sweep.json (array of experiment configs)
+  repro <target>           table1|table2|table3|table4|lr-ablation|
+                           fig2|fig3|fig4|qerror|all   [--quick] [--workers N]
+  serve                    --family cnn_small_q2 [--checkpoint ck] [--requests N]
+  pack                     --checkpoint runs/x/final.ckpt
+  help                     this message
+
+COMMON FLAGS
+  --artifacts DIR   (default: artifacts)   --out-dir DIR (default: runs)
+  --quick           minutes-scale repro    --workers N   sweep parallelism
+";
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    if argv.is_empty() {
+        println!("{USAGE}");
+        std::process::exit(2);
+    }
+    let cmd = argv[0].clone();
+    let args = Args::parse(&argv[1..]);
+    let code = match dispatch(&cmd, &args) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            1
+        }
+    };
+    std::process::exit(code);
+}
+
+fn artifacts_dir(args: &Args) -> PathBuf {
+    PathBuf::from(args.str("artifacts", "artifacts"))
+}
+
+fn dispatch(cmd: &str, args: &Args) -> Result<()> {
+    match cmd {
+        "help" | "--help" | "-h" => {
+            println!("{USAGE}");
+            Ok(())
+        }
+        "info" => info(args),
+        "train" => train(args),
+        "eval" => eval(args),
+        "sweep" => sweep(args),
+        "repro" => {
+            let target = args
+                .positional
+                .first()
+                .cloned()
+                .unwrap_or_else(|| "all".to_string());
+            lsqnet::repro::run(&target, args)
+        }
+        "serve" => serve(args),
+        "pack" => pack(args),
+        other => bail!("unknown command {other:?}; run `lsqnet help`"),
+    }
+}
+
+fn info(args: &Args) -> Result<()> {
+    let engine = Engine::new(&artifacts_dir(args))?;
+    let m = engine.manifest();
+    println!("platform        : {}", engine.platform());
+    println!("artifact batch  : {}", m.batch);
+    println!("families        : {}", m.families.len());
+    for (name, f) in &m.families {
+        println!(
+            "  {name:<22} model={:<12} bits={:<2} params={:<4} weights={}",
+            f.model,
+            f.qbits,
+            f.param_names.len(),
+            f.total_weights()
+        );
+    }
+    println!("artifacts       : {}", m.artifacts.len());
+    let mut by_kind: std::collections::BTreeMap<&str, usize> = Default::default();
+    for a in m.artifacts.values() {
+        *by_kind.entry(a.kind.as_str()).or_default() += 1;
+    }
+    for (k, n) in by_kind {
+        println!("  {k:<12} x{n}");
+    }
+    Ok(())
+}
+
+fn cfg_from_args(args: &Args) -> Result<ExperimentConfig> {
+    let mut cfg = if let Some(path) = args.opt_str("config") {
+        ExperimentConfig::load(Path::new(&path))?
+    } else {
+        ExperimentConfig::default()
+    };
+    if let Some(m) = args.opt_str("model") {
+        cfg.model = m;
+    }
+    if args.has("bits") {
+        cfg.bits = args.usize("bits", cfg.bits as usize) as u32;
+    }
+    if let Some(m) = args.opt_str("method") {
+        cfg.method = m;
+    }
+    if let Some(g) = args.opt_str("gscale") {
+        cfg.gscale = g;
+    }
+    if args.has("epochs") {
+        cfg.train.epochs = args.usize("epochs", cfg.train.epochs);
+    }
+    if args.has("max-steps") {
+        cfg.train.max_steps = args.usize("max-steps", 0);
+    }
+    if args.has("lr") {
+        cfg.train.lr = args.f64("lr", cfg.train.lr);
+    }
+    if args.has("wd") {
+        cfg.train.weight_decay = args.f64("wd", cfg.train.weight_decay);
+    }
+    if args.has("schedule") {
+        cfg.train.schedule = lsqnet::config::Schedule::parse(&args.str("schedule", "cosine"))?;
+    }
+    if args.has("train-size") {
+        cfg.data.train_size = args.usize("train-size", cfg.data.train_size);
+    }
+    if args.has("test-size") {
+        cfg.data.test_size = args.usize("test-size", cfg.data.test_size);
+    }
+    if args.has("seed") {
+        cfg.train.seed = args.u64("seed", cfg.train.seed);
+        cfg.data.seed = cfg.train.seed.wrapping_add(1);
+    }
+    if let Some(p) = args.opt_str("init-from") {
+        cfg.init_from = p;
+    }
+    if args.flag("distill") {
+        cfg.distill = true;
+    }
+    cfg.artifacts_dir = args.str("artifacts", &cfg.artifacts_dir);
+    cfg.out_dir = args.str("out-dir", &cfg.out_dir);
+    if let Some(n) = args.opt_str("name") {
+        cfg.name = n;
+    } else if !args.has("config") {
+        cfg.name = format!("{}_q{}_{}", cfg.model, cfg.bits, cfg.method);
+    }
+    cfg.validate()?;
+    Ok(cfg)
+}
+
+fn train(args: &Args) -> Result<()> {
+    let cfg = cfg_from_args(args)?;
+    let engine = Engine::new(Path::new(&cfg.artifacts_dir))?;
+    println!(
+        "training {} (family {}, method {}, gscale {})",
+        cfg.name,
+        cfg.family(),
+        cfg.method,
+        cfg.gscale
+    );
+    let mut tr = Trainer::new(&engine, cfg)?;
+    let rep = tr.fit()?;
+    println!(
+        "done: top1 {:.2}%  top5 {:.2}%  wall {:.1}s  driver-overhead {:.2}%  -> {}",
+        rep.final_top1,
+        rep.final_top5,
+        rep.history.wall_seconds,
+        100.0 * tr.driver_overhead(),
+        rep.checkpoint.display()
+    );
+    Ok(())
+}
+
+fn eval(args: &Args) -> Result<()> {
+    let ckpt_path = args.opt_str("checkpoint").context("--checkpoint required")?;
+    let engine = Engine::new(&artifacts_dir(args))?;
+    let ck = Checkpoint::load(Path::new(&ckpt_path))?;
+    let family = ck
+        .meta_str("family")
+        .context("checkpoint missing family meta")?
+        .to_string();
+    let fam = engine.manifest().family(&family)?.clone();
+    let mut cfg = ExperimentConfig::default();
+    cfg.model = fam.model.clone();
+    cfg.bits = fam.qbits;
+    cfg.init_from = ckpt_path.clone();
+    cfg.artifacts_dir = args.str("artifacts", "artifacts");
+    if args.has("test-size") {
+        cfg.data.test_size = args.usize("test-size", cfg.data.test_size);
+    }
+    let mut tr = Trainer::new(&engine, cfg)?;
+    let (loss, t1, t5) = tr.evaluate()?;
+    println!("{family}: loss {loss:.4}  top1 {t1:.2}%  top5 {t5:.2}%");
+    Ok(())
+}
+
+fn sweep(args: &Args) -> Result<()> {
+    let path = args
+        .opt_str("config")
+        .context("--config required (JSON array of configs)")?;
+    let text = std::fs::read_to_string(&path)?;
+    let j = Json::parse(&text).map_err(|e| anyhow::anyhow!("{path}: {e}"))?;
+    let arr = j.as_arr().context("sweep config must be a JSON array")?;
+    let mut jobs = Vec::new();
+    for item in arr {
+        let cfg = ExperimentConfig::from_json(item)?;
+        jobs.push(Job::new(cfg));
+    }
+    let workers = args.usize("workers", 2);
+    let report = run_sweep(&artifacts_dir(args), jobs, workers)?;
+    let out = Path::new(&args.str("out-dir", "runs")).join("sweep_report.json");
+    report.save(&out)?;
+    println!("report -> {}", out.display());
+    Ok(())
+}
+
+fn serve(args: &Args) -> Result<()> {
+    use lsqnet::serve::{Server, ServerConfig};
+    let family = args.str("family", "cnn_small_q2");
+    let n = args.usize("requests", 256);
+    let server = Server::start(ServerConfig {
+        artifacts_dir: artifacts_dir(args),
+        family: family.clone(),
+        checkpoint: args.str("checkpoint", ""),
+        max_wait: std::time::Duration::from_millis(args.u64("max-wait-ms", 2)),
+        queue_depth: args.usize("queue-depth", 256),
+    })?;
+    println!("serving {family}; firing {n} requests from 4 client threads…");
+    let spec = lsqnet::data::SynthSpec::new(10, 0.35, 1);
+    let t0 = std::time::Instant::now();
+    let mut lat = Vec::new();
+    std::thread::scope(|s| {
+        let mut handles = Vec::new();
+        for t in 0..4usize {
+            let client = server.client.clone();
+            let spec = &spec;
+            handles.push(s.spawn(move || {
+                let mut l = Vec::new();
+                for i in 0..n / 4 {
+                    let img = spec.generate_alloc(t * 10_000 + i);
+                    if let Ok(rep) = client.infer(img) {
+                        l.push(rep.total_ms);
+                    }
+                }
+                l
+            }));
+        }
+        for h in handles {
+            lat.extend(h.join().unwrap());
+        }
+    });
+    let wall = t0.elapsed().as_secs_f64();
+    let stats = server.stats();
+    server.stop();
+    let p50 = lsqnet::util::stats::percentile(&lat, 50.0);
+    let p95 = lsqnet::util::stats::percentile(&lat, 95.0);
+    println!(
+        "served {} reqs in {wall:.2}s ({:.1} req/s) | p50 {p50:.1} ms  p95 {p95:.1} ms | \
+         {} batches, mean occupancy {:.2}, mean exec {:.1} ms",
+        lat.len(),
+        lat.len() as f64 / wall,
+        stats.batches,
+        stats.mean_occupancy(),
+        stats.mean_exec_ms()
+    );
+    Ok(())
+}
+
+fn pack(args: &Args) -> Result<()> {
+    let ckpt_path = args.opt_str("checkpoint").context("--checkpoint required")?;
+    let engine = Engine::new(&artifacts_dir(args))?;
+    let ck = Checkpoint::load(Path::new(&ckpt_path))?;
+    let family = ck.meta_str("family").context("no family meta")?.to_string();
+    let fam = engine.manifest().family(&family)?;
+    let mut total_packed = 0usize;
+    let mut total_fp32 = 0usize;
+    println!("packing {family} weights to integer storage (Eq. 1 + bit packing):");
+    for l in &fam.layer_meta {
+        let w = ck.get(&format!("{}.w", l.name))?;
+        let n = w.numel();
+        total_fp32 += n * 4;
+        if l.bits < 32 {
+            let s = ck.get(&format!("{}.sw", l.name))?.item_f32()?;
+            let p = lsqnet::quant::pack::quantize_and_pack(w.f32s()?, s, l.bits, true)?;
+            // verify round trip: dequantized == Eq. 2 applied directly
+            let dq = lsqnet::quant::pack::dequantize(&p);
+            let (qn, qp) = lsqnet::quant::lsq::qrange(l.bits, true);
+            let maxerr = w
+                .f32s()?
+                .iter()
+                .zip(&dq)
+                .map(|(a, b)| (lsqnet::quant::lsq::quantize(*a, s, qn, qp) - b).abs())
+                .fold(0.0f32, f32::max);
+            anyhow::ensure!(maxerr < 1e-5, "pack roundtrip mismatch on {}", l.name);
+            total_packed += p.storage_bytes();
+            println!(
+                "  {:<16} {:>8} w @ {}-bit -> {:>8} B (s={:.5})",
+                l.name,
+                n,
+                l.bits,
+                p.storage_bytes(),
+                s
+            );
+        } else {
+            total_packed += n * 4;
+            println!("  {:<16} {:>8} w @ fp32  -> {:>8} B", l.name, n, n * 4);
+        }
+    }
+    println!(
+        "total: {} B packed vs {} B fp32 ({:.2}x compression)",
+        total_packed,
+        total_fp32,
+        total_fp32 as f64 / total_packed as f64
+    );
+    Ok(())
+}

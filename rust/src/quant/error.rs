@@ -1,0 +1,155 @@
+//! Quantization-error metrics for the Section-3.6 study: does LSQ's learned
+//! step size ŝ minimize MAE / MSE / KL, or something else?
+//!
+//! The paper scans s ∈ {0.01ŝ … 20ŝ} and reports the percent |difference|
+//! between ŝ and the error-minimizing s per metric. `sweep_min` reproduces
+//! that scan over a data slice.
+
+use super::lsq::{qrange, quantize};
+
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Metric {
+    MeanAbs,
+    MeanSq,
+    Kl,
+}
+
+impl Metric {
+    pub fn name(self) -> &'static str {
+        match self {
+            Metric::MeanAbs => "mae",
+            Metric::MeanSq => "mse",
+            Metric::Kl => "kl",
+        }
+    }
+}
+
+/// Mean absolute error <|vhat - v|>.
+pub fn mean_abs_err(v: &[f32], s: f32, qn: i64, qp: i64) -> f64 {
+    v.iter()
+        .map(|&x| (quantize(x, s, qn, qp) - x).abs() as f64)
+        .sum::<f64>()
+        / v.len().max(1) as f64
+}
+
+/// Mean squared error <(vhat - v)^2>.
+pub fn mean_sq_err(v: &[f32], s: f32, qn: i64, qp: i64) -> f64 {
+    v.iter()
+        .map(|&x| {
+            let d = (quantize(x, s, qn, qp) - x) as f64;
+            d * d
+        })
+        .sum::<f64>()
+        / v.len().max(1) as f64
+}
+
+/// KL-divergence surrogate per Section 3.6: -E[log q(vhat)] where q is the
+/// empirical distribution of quantized values (the v-entropy term is dropped
+/// as it does not depend on s).
+pub fn kl_surrogate(v: &[f32], s: f32, qn: i64, qp: i64) -> f64 {
+    let n = v.len().max(1) as f64;
+    // histogram over the (Qn+Qp+1) levels
+    let levels = (qn + qp + 1) as usize;
+    let mut counts = vec![0u64; levels];
+    for &x in v {
+        let vbar = super::lsq::quantize_vbar(x, s, qn, qp) as i64;
+        counts[(vbar + qn) as usize] += 1;
+    }
+    // -E[log q] with add-one smoothing to keep empty bins finite
+    let total = n + levels as f64;
+    let mut acc = 0.0;
+    for &c in &counts {
+        if c > 0 {
+            let q = (c as f64 + 1.0) / total;
+            acc -= c as f64 * q.ln();
+        }
+    }
+    acc / n
+}
+
+pub fn error(metric: Metric, v: &[f32], s: f32, qn: i64, qp: i64) -> f64 {
+    match metric {
+        Metric::MeanAbs => mean_abs_err(v, s, qn, qp),
+        Metric::MeanSq => mean_sq_err(v, s, qn, qp),
+        Metric::Kl => kl_surrogate(v, s, qn, qp),
+    }
+}
+
+/// Scan s ∈ {s_hat/100, 2 s_hat/100, …, 20 s_hat} (the paper's grid) and
+/// return the s minimizing the metric.
+pub fn sweep_min(metric: Metric, v: &[f32], s_hat: f32, bits: u32, signed: bool) -> f32 {
+    let (qn, qp) = qrange(bits, signed);
+    let mut best_s = s_hat;
+    let mut best_e = f64::INFINITY;
+    for i in 1..=2000 {
+        let s = s_hat * (i as f32) * 0.01;
+        let e = error(metric, v, s, qn, qp);
+        if e < best_e {
+            best_e = e;
+            best_s = s;
+        }
+    }
+    best_s
+}
+
+/// Percent absolute difference between the learned ŝ and the
+/// metric-minimizing s (the number Table-less Section 3.6 reports).
+pub fn pct_abs_diff(s_hat: f32, s_min: f32) -> f64 {
+    ((s_hat - s_min).abs() / s_hat.abs().max(1e-12)) as f64 * 100.0
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg32;
+
+    fn gauss(n: usize, seed: u64) -> Vec<f32> {
+        let mut r = Pcg32::seeded(seed);
+        (0..n).map(|_| r.normal()).collect()
+    }
+
+    #[test]
+    fn zero_error_when_on_grid() {
+        let (qn, qp) = qrange(2, true);
+        let v = [0.5f32, -1.0, 0.0];
+        assert_eq!(mean_abs_err(&v, 0.5, qn, qp), 0.0);
+        assert_eq!(mean_sq_err(&v, 0.5, qn, qp), 0.0);
+    }
+
+    #[test]
+    fn mse_has_interior_minimum() {
+        // For gaussian data the MSE-minimizing s is finite and positive:
+        // the sweep must not return the grid edges.
+        let v = gauss(4096, 1);
+        let s_min = sweep_min(Metric::MeanSq, &v, 1.0, 2, true);
+        assert!(s_min > 0.02 && s_min < 19.0, "s_min={s_min}");
+        let (qn, qp) = qrange(2, true);
+        let e_min = mean_sq_err(&v, s_min, qn, qp);
+        assert!(e_min < mean_sq_err(&v, s_min * 3.0, qn, qp));
+        assert!(e_min < mean_sq_err(&v, s_min / 3.0, qn, qp));
+    }
+
+    #[test]
+    fn mae_vs_mse_minima_differ() {
+        let v = gauss(4096, 2);
+        let a = sweep_min(Metric::MeanAbs, &v, 1.0, 2, true);
+        let b = sweep_min(Metric::MeanSq, &v, 1.0, 2, true);
+        assert!((a - b).abs() > 1e-6);
+    }
+
+    #[test]
+    fn pct_diff() {
+        assert!((pct_abs_diff(1.0, 1.5) - 50.0).abs() < 1e-9);
+        assert!((pct_abs_diff(2.0, 1.0) - 50.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn kl_finite_and_sensitive() {
+        let v = gauss(2048, 3);
+        let (qn, qp) = qrange(2, true);
+        let a = kl_surrogate(&v, 0.5, qn, qp);
+        let b = kl_surrogate(&v, 5.0, qn, qp);
+        assert!(a.is_finite() && b.is_finite());
+        assert_ne!(a, b);
+    }
+}

@@ -1,0 +1,179 @@
+//! Pure-Rust reimplementation of the LSQ quantizer (paper Eqs. 1-3, 5).
+//!
+//! This mirrors `python/compile/kernels/ref.py` exactly and serves three
+//! purposes on the coordinator side:
+//!   1. analysis (Section 3.6 quantization-error study, Figure 2 curves)
+//!      without any XLA dependency;
+//!   2. property-based cross-validation against the AOT artifacts in the
+//!      integration tests;
+//!   3. integer packing of trained weights for the model-size accounting
+//!      and the serving path.
+
+/// (Qn, Qp) per Section 2: unsigned (activations) vs signed (weights).
+pub fn qrange(bits: u32, signed: bool) -> (i64, i64) {
+    assert!(bits >= 1 && bits <= 31, "bits out of range: {bits}");
+    if signed {
+        (1i64 << (bits - 1), (1i64 << (bits - 1)) - 1)
+    } else {
+        (0, (1i64 << bits) - 1)
+    }
+}
+
+/// Round half to even, matching XLA's `round-nearest-even` and numpy.
+#[inline]
+pub fn round_ties_even(x: f32) -> f32 {
+    let r = x.round(); // half away from zero
+    if (x - x.trunc()).abs() == 0.5 {
+        // tie: pick the even neighbour
+        let f = x.floor();
+        if (f as i64) % 2 == 0 {
+            f
+        } else {
+            f + 1.0
+        }
+    } else {
+        r
+    }
+}
+
+/// Eq. 1: vbar = round(clip(v/s, -Qn, Qp)).
+#[inline]
+pub fn quantize_vbar(v: f32, s: f32, qn: i64, qp: i64) -> f32 {
+    let r = (v / s).clamp(-(qn as f32), qp as f32);
+    round_ties_even(r)
+}
+
+/// Eq. 2: vhat = vbar * s.
+#[inline]
+pub fn quantize(v: f32, s: f32, qn: i64, qp: i64) -> f32 {
+    quantize_vbar(v, s, qn, qp) * s
+}
+
+pub fn quantize_slice(v: &[f32], s: f32, qn: i64, qp: i64, out: &mut [f32]) {
+    assert_eq!(v.len(), out.len());
+    for (o, &x) in out.iter_mut().zip(v) {
+        *o = quantize(x, s, qn, qp);
+    }
+}
+
+/// Eq. 5: straight-through data gradient mask.
+#[inline]
+pub fn grad_v_mask(v: f32, s: f32, qn: i64, qp: i64) -> f32 {
+    let r = v / s;
+    if r > -(qn as f32) && r < qp as f32 {
+        1.0
+    } else {
+        0.0
+    }
+}
+
+/// Eq. 3: per-element d(vhat)/d(s).
+#[inline]
+pub fn grad_s_term(v: f32, s: f32, qn: i64, qp: i64) -> f32 {
+    let r = v / s;
+    if r <= -(qn as f32) {
+        -(qn as f32)
+    } else if r >= qp as f32 {
+        qp as f32
+    } else {
+        round_ties_even(r) - r
+    }
+}
+
+/// Section 2.2 gradient scale g = 1/sqrt(N * Qp).
+pub fn grad_scale(n_items: usize, qp: i64) -> f64 {
+    1.0 / ((n_items as f64) * qp as f64).sqrt()
+}
+
+/// Section 2.1 step initialization 2<|v|>/sqrt(Qp).
+pub fn step_init(v: &[f32], qp: i64) -> f32 {
+    if v.is_empty() {
+        return 1.0;
+    }
+    let mean_abs: f64 = v.iter().map(|x| x.abs() as f64).sum::<f64>() / v.len() as f64;
+    (2.0 * mean_abs / (qp as f64).sqrt()) as f32
+}
+
+/// Full reference VJP over a slice: returns (grad_v, grad_s).
+pub fn lsq_vjp(
+    v: &[f32],
+    s: f32,
+    qn: i64,
+    qp: i64,
+    gscale: f64,
+    cotangent: &[f32],
+) -> (Vec<f32>, f32) {
+    assert_eq!(v.len(), cotangent.len());
+    let mut gv = vec![0.0f32; v.len()];
+    let mut gs = 0.0f64;
+    for i in 0..v.len() {
+        gv[i] = cotangent[i] * grad_v_mask(v[i], s, qn, qp);
+        gs += (cotangent[i] * grad_s_term(v[i], s, qn, qp)) as f64;
+    }
+    (gv, (gs * gscale) as f32)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn qranges() {
+        assert_eq!(qrange(2, false), (0, 3));
+        assert_eq!(qrange(2, true), (2, 1));
+        assert_eq!(qrange(8, true), (128, 127));
+        assert_eq!(qrange(8, false), (0, 255));
+    }
+
+    #[test]
+    fn ties_to_even() {
+        assert_eq!(round_ties_even(0.5), 0.0);
+        assert_eq!(round_ties_even(1.5), 2.0);
+        assert_eq!(round_ties_even(2.5), 2.0);
+        assert_eq!(round_ties_even(-0.5), 0.0);
+        assert_eq!(round_ties_even(-1.5), -2.0);
+        assert_eq!(round_ties_even(0.4999), 0.0);
+        assert_eq!(round_ties_even(1.2), 1.0);
+    }
+
+    #[test]
+    fn quantize_grid() {
+        let (qn, qp) = qrange(2, true);
+        assert_eq!(quantize(0.26, 0.25, qn, qp), 0.25);
+        assert_eq!(quantize(10.0, 0.25, qn, qp), 0.25); // clipped at Qp=1
+        assert_eq!(quantize(-10.0, 0.25, qn, qp), -0.5); // clipped at -Qn=-2
+    }
+
+    #[test]
+    fn grad_saturation() {
+        let (qn, qp) = qrange(2, true);
+        assert_eq!(grad_s_term(-100.0, 1.0, qn, qp), -2.0);
+        assert_eq!(grad_s_term(100.0, 1.0, qn, qp), 1.0);
+        assert_eq!(grad_v_mask(-100.0, 1.0, qn, qp), 0.0);
+        assert_eq!(grad_v_mask(0.3, 1.0, qn, qp), 1.0);
+    }
+
+    #[test]
+    fn transition_sensitivity() {
+        // |ds| grows towards a transition point (Section 2.1 argument).
+        let (qn, qp) = qrange(3, false);
+        let near = grad_s_term(1.49, 1.0, qn, qp).abs();
+        let far = grad_s_term(1.05, 1.0, qn, qp).abs();
+        assert!(near > far);
+    }
+
+    #[test]
+    fn step_init_formula() {
+        let v = [1.0f32, -1.0, 1.0, -1.0];
+        assert!((step_init(&v, 4) - 2.0 / 2.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn vjp_zero_cotangent() {
+        let v = [0.1f32, 5.0, -3.0];
+        let cot = [0.0f32; 3];
+        let (gv, gs) = lsq_vjp(&v, 0.5, 2, 1, 1.0, &cot);
+        assert_eq!(gv, vec![0.0; 3]);
+        assert_eq!(gs, 0.0);
+    }
+}

@@ -1,0 +1,10 @@
+//! Quantization substrate (pure Rust, no XLA dependency):
+//! the LSQ quantizer math (Eqs. 1-3, 5), integer bit-packing,
+//! quantization-error metrics (Section 3.6) and model-size accounting
+//! (Figure 3). Cross-validated against the Pallas kernels by the
+//! integration/property tests.
+
+pub mod error;
+pub mod lsq;
+pub mod model_size;
+pub mod pack;

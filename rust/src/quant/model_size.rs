@@ -1,0 +1,102 @@
+//! Model-size accounting for the Figure-3 accuracy-vs-size frontier.
+//!
+//! Size of a quantized model = Σ_layers n_weights × bits/8 (+ one fp32 step
+//! size per quantized layer). Per the paper's convention the first and last
+//! layers are stored at 8-bit; the manifest's `layer_meta` already records
+//! the effective per-layer bit width, so this module just folds it up.
+
+/// One matmul layer as recorded in `manifest.json: families.*.layer_meta`.
+#[derive(Clone, Debug)]
+pub struct LayerMeta {
+    pub name: String,
+    pub n_weights: usize,
+    pub bits: u32,
+}
+
+/// Total parameter storage in bytes for the quantized model.
+pub fn model_bytes(layers: &[LayerMeta]) -> usize {
+    layers
+        .iter()
+        .map(|l| {
+            let payload = (l.n_weights * l.bits as usize + 7) / 8;
+            let step = if l.bits < 32 { 4 } else { 0 };
+            payload + step
+        })
+        .sum()
+}
+
+/// Storage for the fp32 reference model.
+pub fn fp32_bytes(layers: &[LayerMeta]) -> usize {
+    layers.iter().map(|l| l.n_weights * 4).sum()
+}
+
+pub fn megabytes(bytes: usize) -> f64 {
+    bytes as f64 / (1024.0 * 1024.0)
+}
+
+/// A point on the Figure-3 frontier.
+#[derive(Clone, Debug)]
+pub struct SizePoint {
+    pub model: String,
+    pub bits: u32,
+    pub bytes: usize,
+    pub top1: f64,
+}
+
+/// The subset of `points` on the accuracy-vs-size Pareto frontier
+/// (no other point is both smaller and more accurate), sorted by size.
+pub fn pareto_frontier(points: &[SizePoint]) -> Vec<SizePoint> {
+    let mut sorted: Vec<SizePoint> = points.to_vec();
+    sorted.sort_by(|a, b| a.bytes.cmp(&b.bytes));
+    let mut out: Vec<SizePoint> = Vec::new();
+    let mut best = f64::NEG_INFINITY;
+    for p in sorted {
+        if p.top1 > best {
+            best = p.top1;
+            out.push(p);
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn l(n: usize, bits: u32) -> LayerMeta {
+        LayerMeta { name: format!("l{n}_{bits}"), n_weights: n, bits }
+    }
+
+    #[test]
+    fn bytes_at_two_bit() {
+        // 1000 weights at 2-bit = 250 bytes + 4 step bytes.
+        assert_eq!(model_bytes(&[l(1000, 2)]), 254);
+    }
+
+    #[test]
+    fn first_last_8bit_dominate_small_models() {
+        let layers = [l(432, 8), l(4608, 2), l(640, 8)];
+        let b = model_bytes(&layers);
+        assert_eq!(b, 432 + 4608 / 4 + 640 + 12);
+    }
+
+    #[test]
+    fn fp32_is_4x_8bit() {
+        let layers = [l(100, 8)];
+        assert_eq!(fp32_bytes(&layers), 400);
+        assert_eq!(model_bytes(&layers), 104);
+    }
+
+    #[test]
+    fn frontier_filters_dominated() {
+        let pts = vec![
+            SizePoint { model: "a".into(), bits: 2, bytes: 100, top1: 60.0 },
+            SizePoint { model: "b".into(), bits: 4, bytes: 200, top1: 55.0 }, // dominated
+            SizePoint { model: "c".into(), bits: 8, bytes: 300, top1: 70.0 },
+        ];
+        let f = pareto_frontier(&pts);
+        assert_eq!(f.len(), 2);
+        assert_eq!(f[0].model, "a");
+        assert_eq!(f[1].model, "c");
+    }
+}

@@ -1,0 +1,130 @@
+//! Bit-packing of integer-quantized tensors (2/3/4/8 bits per value).
+//!
+//! This is the storage/serving substrate behind Figure 3's model-size axis
+//! and the quantized-serving path: trained weights are quantized to vbar
+//! (Eq. 1), offset to unsigned, and packed little-endian into a byte stream
+//! at exactly `bits` bits per value plus one fp32 step size per layer.
+
+use anyhow::{bail, Result};
+
+/// Packed low-precision tensor: `bits` bits per value, values stored as
+/// unsigned offsets from -Qn (i.e. stored = vbar + Qn).
+#[derive(Clone, Debug, PartialEq)]
+pub struct Packed {
+    pub bits: u32,
+    pub signed: bool,
+    pub len: usize,
+    pub step: f32,
+    pub bytes: Vec<u8>,
+}
+
+/// Pack `vbar` integer values (already in [-Qn, Qp]) at `bits` per value.
+pub fn pack(vbar: &[i32], bits: u32, signed: bool, step: f32) -> Result<Packed> {
+    if !(1..=8).contains(&bits) {
+        bail!("pack supports 1..=8 bits, got {bits}");
+    }
+    let (qn, qp) = super::lsq::qrange(bits, signed);
+    let mut bytes = vec![0u8; (vbar.len() * bits as usize + 7) / 8];
+    for (i, &v) in vbar.iter().enumerate() {
+        let v64 = v as i64;
+        if v64 < -qn || v64 > qp {
+            bail!("value {v} out of range [-{qn}, {qp}] for {bits}-bit");
+        }
+        let u = (v64 + qn) as u64; // 0..(Qn+Qp)
+        let bitpos = i * bits as usize;
+        let byte = bitpos / 8;
+        let shift = bitpos % 8;
+        bytes[byte] |= ((u << shift) & 0xff) as u8;
+        if shift + bits as usize > 8 {
+            bytes[byte + 1] |= (u >> (8 - shift)) as u8;
+        }
+    }
+    Ok(Packed { bits, signed, len: vbar.len(), step, bytes })
+}
+
+/// Unpack back to integer values in [-Qn, Qp].
+pub fn unpack(p: &Packed) -> Vec<i32> {
+    let (qn, _) = super::lsq::qrange(p.bits, p.signed);
+    let mask = (1u64 << p.bits) - 1;
+    let mut out = Vec::with_capacity(p.len);
+    for i in 0..p.len {
+        let bitpos = i * p.bits as usize;
+        let byte = bitpos / 8;
+        let shift = bitpos % 8;
+        let mut u = (p.bytes[byte] as u64) >> shift;
+        if shift + p.bits as usize > 8 {
+            u |= (p.bytes[byte + 1] as u64) << (8 - shift);
+        }
+        out.push(((u & mask) as i64 - qn) as i32);
+    }
+    out
+}
+
+/// Dequantize a packed tensor back to f32 (vbar * s, Eq. 2).
+pub fn dequantize(p: &Packed) -> Vec<f32> {
+    unpack(p).into_iter().map(|v| v as f32 * p.step).collect()
+}
+
+/// Quantize an f32 weight tensor with step `s` and pack it.
+pub fn quantize_and_pack(w: &[f32], s: f32, bits: u32, signed: bool) -> Result<Packed> {
+    let (qn, qp) = super::lsq::qrange(bits, signed);
+    let vbar: Vec<i32> = w
+        .iter()
+        .map(|&x| super::lsq::quantize_vbar(x, s, qn, qp) as i32)
+        .collect();
+    pack(&vbar, bits, signed, s)
+}
+
+impl Packed {
+    /// Storage bytes including the fp32 step size.
+    pub fn storage_bytes(&self) -> usize {
+        self.bytes.len() + 4
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_all_widths() {
+        for bits in 1..=8u32 {
+            for signed in [true, false] {
+                let (qn, qp) = crate::quant::lsq::qrange(bits, signed);
+                let vals: Vec<i32> = (-qn..=qp).map(|v| v as i32).collect();
+                let p = pack(&vals, bits, signed, 0.5).unwrap();
+                assert_eq!(unpack(&p), vals, "bits={bits} signed={signed}");
+            }
+        }
+    }
+
+    #[test]
+    fn density() {
+        let vals = vec![0i32; 100];
+        let p = pack(&vals, 3, false, 1.0).unwrap();
+        assert_eq!(p.bytes.len(), (100 * 3 + 7) / 8); // 38 bytes
+    }
+
+    #[test]
+    fn out_of_range_rejected() {
+        assert!(pack(&[5], 2, true, 1.0).is_err()); // Qp = 1
+        assert!(pack(&[-1], 2, false, 1.0).is_err()); // unsigned
+    }
+
+    #[test]
+    fn dequantize_matches_eq2() {
+        let w = [0.26f32, -0.6, 0.0, 10.0];
+        let p = quantize_and_pack(&w, 0.25, 2, true).unwrap();
+        let dq = dequantize(&p);
+        assert_eq!(dq, vec![0.25, -0.5, 0.0, 0.25]);
+    }
+
+    #[test]
+    fn unaligned_lengths() {
+        for n in [1usize, 3, 7, 9, 63, 65] {
+            let vals: Vec<i32> = (0..n).map(|i| (i % 4) as i32).collect();
+            let p = pack(&vals, 3, false, 1.0).unwrap();
+            assert_eq!(unpack(&p), vals);
+        }
+    }
+}

@@ -1,0 +1,83 @@
+//! Repro harness: one generator per paper table/figure (see DESIGN.md's
+//! experiment index). Each generator runs the necessary sweeps (reusing
+//! cached fp32 pretrains and per-run results where available), prints the
+//! paper-reference vs measured rows, and writes a CSV next to the run dir.
+//!
+//! Absolute ImageNet accuracies are not reproducible on this substrate
+//! (synthetic 32x32 data, CPU); the reproduction target is the *shape* of
+//! each result — orderings, gaps and crossovers — which every generator
+//! states explicitly in its output header.
+
+pub mod figures;
+pub mod paper;
+pub mod tables;
+
+use std::path::Path;
+
+use anyhow::Result;
+
+use crate::coordinator::sweep::SweepScale;
+use crate::util::cli::Args;
+
+pub fn scale_from_args(args: &Args) -> SweepScale {
+    let mut s = if args.flag("quick") { SweepScale::quick() } else { SweepScale::standard() };
+    if let Some(v) = args.opt_str("train-size") {
+        s.train_size = v.parse().unwrap_or(s.train_size);
+    }
+    if let Some(v) = args.opt_str("test-size") {
+        s.test_size = v.parse().unwrap_or(s.test_size);
+    }
+    if args.has("epochs") {
+        s.epochs_q = args.usize("epochs", s.epochs_q);
+        s.epochs_fp32 = args.usize("epochs", s.epochs_fp32).max(s.epochs_q);
+    }
+    s.workers = args.usize("workers", s.workers);
+    if let Some(v) = args.opt_str("out-dir") {
+        s.out_dir = v;
+    }
+    if let Some(v) = args.opt_str("artifacts") {
+        s.artifacts_dir = v;
+    }
+    s
+}
+
+/// Write a rendered table + CSV under `<out_dir>/repro/`.
+pub fn emit(scale: &SweepScale, name: &str, table: &crate::util::table::Table) -> Result<()> {
+    let dir = Path::new(&scale.out_dir).join("repro");
+    std::fs::create_dir_all(&dir)?;
+    std::fs::write(dir.join(format!("{name}.csv")), table.to_csv())?;
+    let rendered = table.render();
+    std::fs::write(dir.join(format!("{name}.txt")), &rendered)?;
+    println!("{rendered}");
+    Ok(())
+}
+
+pub fn run(which: &str, args: &Args) -> Result<()> {
+    let scale = scale_from_args(args);
+    match which {
+        "table1" => tables::table1(&scale, args),
+        "table2" => tables::table2(&scale, args),
+        "table3" => tables::table3(&scale, args),
+        "table4" => tables::table4(&scale, args),
+        "lr-ablation" => tables::lr_ablation(&scale, args),
+        "fig2" => figures::fig2(&scale, args),
+        "fig3" => figures::fig3(&scale, args),
+        "fig4" => figures::fig4(&scale, args),
+        "qerror" => figures::qerror(&scale, args),
+        "all" => {
+            tables::table1(&scale, args)?;
+            tables::table2(&scale, args)?;
+            tables::table3(&scale, args)?;
+            tables::table4(&scale, args)?;
+            tables::lr_ablation(&scale, args)?;
+            figures::fig2(&scale, args)?;
+            figures::fig3(&scale, args)?;
+            figures::fig4(&scale, args)?;
+            figures::qerror(&scale, args)
+        }
+        other => anyhow::bail!(
+            "unknown repro target {other:?} \
+             (table1|table2|table3|table4|lr-ablation|fig2|fig3|fig4|qerror|all)"
+        ),
+    }
+}

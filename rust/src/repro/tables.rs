@@ -1,0 +1,298 @@
+//! Generators for the paper's Tables 1-4 and the Section-3.5 LR ablation.
+
+use anyhow::Result;
+
+use super::{emit, paper};
+use crate::coordinator::sweep::{
+    ensure_fp32, lr_ablation_jobs, method_jobs, table1_jobs, table2_jobs, table3_jobs,
+    table4_jobs, SweepScale,
+};
+use crate::coordinator::{run_sweep, SweepReport};
+use crate::util::cli::Args;
+use crate::util::table::{acc, Table};
+
+fn models_from_args(scale: &SweepScale, args: &Args, default_quick: &[&'static str],
+                    default_std: &[&'static str]) -> Vec<String> {
+    if let Some(m) = args.opt_str("models") {
+        m.split(',').map(str::to_string).collect()
+    } else if scale.out_dir.contains("quick") {
+        default_quick.iter().map(|s| s.to_string()).collect()
+    } else {
+        default_std.iter().map(|s| s.to_string()).collect()
+    }
+}
+
+const PRECISIONS: [u32; 4] = [2, 3, 4, 8];
+
+fn measured(rep: &SweepReport, model: &str, bits: u32, kd: bool) -> Option<f64> {
+    rep.results
+        .iter()
+        .find(|r| {
+            r.tags.get("model").map(String::as_str) == Some(model)
+                && r.tags.get("bits").map(String::as_str) == Some(&bits.to_string())
+                && r.tags.contains_key("kd") == kd
+                && r.error.is_none()
+        })
+        .map(|r| r.top1)
+}
+
+fn measured5(rep: &SweepReport, model: &str, bits: u32) -> Option<f64> {
+    rep.results
+        .iter()
+        .find(|r| {
+            r.tags.get("model").map(String::as_str) == Some(model)
+                && r.tags.get("bits").map(String::as_str) == Some(&bits.to_string())
+                && r.error.is_none()
+        })
+        .map(|r| r.top5)
+}
+
+/// Table 1: accuracy vs precision across architectures + competing
+/// quantizer gradients at 2-bit.
+pub fn table1(scale: &SweepScale, args: &Args) -> Result<()> {
+    let models = models_from_args(
+        scale,
+        args,
+        &["cnn_small", "resnet8"],
+        &["cnn_small", "resnet8", "resnet20", "vgg_small", "sqnxt_small"],
+    );
+    let model_refs: Vec<&str> = models.iter().map(String::as_str).collect();
+    let fp32 = ensure_fp32(scale, &model_refs)?;
+
+    // Only request precisions whose artifacts exist (default set trims the
+    // secondary architectures to 2/4-bit).
+    let manifest = crate::runtime::Manifest::load(std::path::Path::new(&scale.artifacts_dir))?;
+    let mut jobs = Vec::new();
+    for m in &model_refs {
+        let precs: Vec<u32> = PRECISIONS
+            .iter()
+            .copied()
+            .filter(|b| manifest.families.contains_key(&format!("{m}_q{b}")))
+            .collect();
+        jobs.extend(table1_jobs(scale, &[m], &precs));
+    }
+    // Competing gradient methods on the sweep model.
+    let methods = ["qil", "pact", "fixed"];
+    jobs.extend(method_jobs(scale, "cnn_small", &methods));
+
+    let rep = run_sweep(std::path::Path::new(&scale.artifacts_dir), jobs, scale.workers)?;
+    rep.save(&std::path::Path::new(&scale.out_dir).join("repro/table1_results.json"))?;
+
+    println!("\nReproduction target: LSQ accuracy increases with precision; 8-bit ≈ fp32;");
+    println!("2-bit drop is largest for the parameter-lean SqueezeNext-style model;");
+    println!("LSQ beats QIL/PACT/fixed-gradient baselines at 2-bit.\n");
+
+    let mut t = Table::new(
+        "Table 1 — top-1 @ precision (measured on synthshapes | paper ImageNet in brackets)",
+        &["network", "fp32", "2", "3", "4", "8"],
+    );
+    for m in &model_refs {
+        let praw = paper::table1_ref(m);
+        let fmt = |bits_idx: usize, v: Option<f64>| -> String {
+            let p = praw.map(|(_, row)| row[bits_idx]);
+            match (v, p) {
+                (Some(v), Some(p)) => format!("{v:.1} [{p:.1}]"),
+                (Some(v), None) => format!("{v:.1}"),
+                (None, _) => "-".into(),
+            }
+        };
+        let fp = fp32.get(*m).map(|x| x.0);
+        let fp_s = match (fp, praw) {
+            (Some(v), Some((p, _))) => format!("{v:.1} [{p:.1}]"),
+            (Some(v), None) => format!("{v:.1}"),
+            _ => "-".into(),
+        };
+        t.row(vec![
+            paper::proxy_for(m).to_string(),
+            fp_s,
+            fmt(0, measured(&rep, m, 2, false)),
+            fmt(1, measured(&rep, m, 3, false)),
+            fmt(2, measured(&rep, m, 4, false)),
+            fmt(3, measured(&rep, m, 8, false)),
+        ]);
+    }
+    emit(scale, "table1", &t)?;
+
+    let mut t5 = Table::new(
+        "Table 1 (top-5, measured)",
+        &["network", "2", "3", "4", "8"],
+    );
+    for m in &model_refs {
+        t5.row(vec![
+            m.to_string(),
+            acc(measured5(&rep, m, 2)),
+            acc(measured5(&rep, m, 3)),
+            acc(measured5(&rep, m, 4)),
+            acc(measured5(&rep, m, 8)),
+        ]);
+    }
+    emit(scale, "table1_top5", &t5)?;
+
+    let mut tm = Table::new(
+        "Table 1 — quantizer-gradient comparison, 2-bit cnn_small (paper: R18 2-bit)",
+        &["method", "top-1 (measured)", "paper R18@2"],
+    );
+    let paper2: std::collections::BTreeMap<&str, f64> = [
+        ("lsq", 67.6),
+        ("qil", 65.7),
+        ("pact", 64.4),
+        ("fixed", f64::NAN),
+    ]
+    .into_iter()
+    .collect();
+    let lsq_m = measured(&rep, "cnn_small", 2, false);
+    tm.row(vec!["lsq".into(), acc(lsq_m), "67.6".into()]);
+    for m in methods {
+        let got = rep
+            .results
+            .iter()
+            .find(|r| r.tags.get("method").map(String::as_str) == Some(m))
+            .map(|r| r.top1);
+        let p = paper2.get(m).copied().unwrap_or(f64::NAN);
+        tm.row(vec![
+            m.to_string(),
+            acc(got),
+            if p.is_nan() { "-".into() } else { format!("{p:.1}") },
+        ]);
+    }
+    emit(scale, "table1_methods", &tm)
+}
+
+/// Table 2: weight-decay sweep per precision.
+pub fn table2(scale: &SweepScale, args: &Args) -> Result<()> {
+    let model = args.str("model", "cnn_small");
+    ensure_fp32(scale, &[&model])?;
+    let jobs = table2_jobs(scale, &model, &PRECISIONS);
+    let rep = run_sweep(std::path::Path::new(&scale.artifacts_dir), jobs, scale.workers)?;
+    rep.save(&std::path::Path::new(&scale.out_dir).join("repro/table2_results.json"))?;
+
+    println!("\nReproduction target: lower precision prefers less weight decay —");
+    println!("the per-column argmax moves to smaller factors as bits decrease.\n");
+
+    let mut t = Table::new(
+        &format!("Table 2 — top-1 vs weight decay ({model}; paper: ResNet-18 in brackets)"),
+        &["weight decay", "2-bit", "3-bit", "4-bit", "8-bit"],
+    );
+    for (i, (f, prow)) in paper::TABLE2.iter().enumerate() {
+        let mut cells = vec![format!("{f} x 1e-4")];
+        for (j, bits) in PRECISIONS.iter().enumerate() {
+            let got = rep
+                .by_tags(&[("wd", &format!("{f}")), ("bits", &bits.to_string())])
+                .map(|r| r.top1);
+            cells.push(match got {
+                Some(v) => format!("{v:.1} [{:.1}]", prow[j]),
+                None => format!("- [{:.1}]", prow[j]),
+            });
+        }
+        let _ = i;
+        t.row(cells);
+    }
+    emit(scale, "table2", &t)
+}
+
+/// Table 3: step-size gradient-scale ablation at 2-bit.
+pub fn table3(scale: &SweepScale, args: &Args) -> Result<()> {
+    let model = args.str("model", "cnn_small");
+    ensure_fp32(scale, &[&model])?;
+    let jobs = table3_jobs(scale, &model);
+    let rep = run_sweep(std::path::Path::new(&scale.artifacts_dir), jobs, scale.workers)?;
+    rep.save(&std::path::Path::new(&scale.out_dir).join("repro/table3_results.json"))?;
+
+    println!("\nReproduction target: full scale 1/sqrt(N*Qp) is best; g=1 at the");
+    println!("standard lr diverges; recovering with lr/100 still loses accuracy.\n");
+
+    let mut t = Table::new(
+        &format!("Table 3 — gradient scale ablation, 2-bit {model} (paper: R18 in brackets)"),
+        &["gradient scale", "lr factor", "top-1", "paper"],
+    );
+    for (i, (label, plr, ptop)) in paper::TABLE3.iter().enumerate() {
+        let got = rep.by_tags(&[("row", &i.to_string())]);
+        let cell = match got {
+            Some(r) if !r.converged && r.error.is_none() => {
+                format!("{:.1} (no convergence)", r.top1)
+            }
+            Some(r) if r.error.is_none() => format!("{:.1}", r.top1),
+            _ => "-".into(),
+        };
+        t.row(vec![
+            label.to_string(),
+            format!("{plr}"),
+            cell,
+            if ptop.is_nan() { "did not converge".into() } else { format!("{ptop:.1}") },
+        ]);
+    }
+    emit(scale, "table3", &t)
+}
+
+/// Table 4: LSQ + knowledge distillation.
+pub fn table4(scale: &SweepScale, args: &Args) -> Result<()> {
+    let models = models_from_args(scale, args, &["cnn_small"], &["cnn_small", "resnet20"]);
+    let model_refs: Vec<&str> = models.iter().map(String::as_str).collect();
+    let fp32 = ensure_fp32(scale, &model_refs)?;
+
+    let manifest = crate::runtime::Manifest::load(std::path::Path::new(&scale.artifacts_dir))?;
+    let mut jobs = Vec::new();
+    for m in &model_refs {
+        let precs: Vec<u32> = PRECISIONS
+            .iter()
+            .copied()
+            .filter(|b| {
+                manifest
+                    .artifacts
+                    .values()
+                    .any(|a| a.kind == "train_kd" && a.family.as_deref() == Some(&format!("{m}_q{b}")))
+            })
+            .collect();
+        jobs.extend(table4_jobs(scale, &[m], &precs));
+        // plain-LSQ comparators at the same precisions
+        jobs.extend(table1_jobs(scale, &[m], &precs));
+    }
+    let rep = run_sweep(std::path::Path::new(&scale.artifacts_dir), jobs, scale.workers)?;
+    rep.save(&std::path::Path::new(&scale.out_dir).join("repro/table4_results.json"))?;
+
+    println!("\nReproduction target: KD improves the quantized student (biggest gain");
+    println!("at low precision), pushing 3-bit to (or past) the fp32 baseline.\n");
+
+    let mut t = Table::new(
+        "Table 4 — LSQ+KD vs LSQ top-1 (measured; paper R18 KD row in brackets)",
+        &["network", "2", "3", "4", "8", "fp32"],
+    );
+    let paper_kd = paper::TABLE4[0].1; // ResNet-18 row as the bracket ref
+    for m in &model_refs {
+        let mut cells = vec![format!("{m} +KD")];
+        for (j, bits) in PRECISIONS.iter().enumerate() {
+            cells.push(match measured(&rep, m, *bits, true) {
+                Some(v) => format!("{v:.1} [{:.1}]", paper_kd[j]),
+                None => "-".into(),
+            });
+        }
+        cells.push(fp32.get(*m).map(|x| format!("{:.1}", x.0)).unwrap_or("-".into()));
+        t.row(cells);
+        let mut cells = vec![format!("{m} LSQ only")];
+        for bits in PRECISIONS {
+            cells.push(acc(measured(&rep, m, bits, false)));
+        }
+        cells.push("".into());
+        t.row(cells);
+    }
+    emit(scale, "table4", &t)
+}
+
+/// Section 3.5: cosine vs step decay.
+pub fn lr_ablation(scale: &SweepScale, args: &Args) -> Result<()> {
+    let model = args.str("model", "cnn_small");
+    ensure_fp32(scale, &[&model])?;
+    let jobs = lr_ablation_jobs(scale, &model);
+    let rep = run_sweep(std::path::Path::new(&scale.artifacts_dir), jobs, scale.workers)?;
+
+    println!("\nReproduction target: cosine ≥ step decay by a small margin (paper: +0.4).\n");
+    let mut t = Table::new(
+        &format!("Section 3.5 — LR schedule, 2-bit {model} (paper R18 in brackets)"),
+        &["schedule", "top-1"],
+    );
+    let (pc, ps) = paper::LR_ABLATION;
+    let get = |s: &str| rep.by_tags(&[("sched", s)]).map(|r| r.top1);
+    t.row(vec!["cosine".into(), get("cosine").map(|v| format!("{v:.1} [{pc:.1}]")).unwrap_or("-".into())]);
+    t.row(vec!["step x0.1".into(), get("step").map(|v| format!("{v:.1} [{ps:.1}]")).unwrap_or("-".into())]);
+    emit(scale, "lr_ablation", &t)
+}

@@ -1,0 +1,197 @@
+//! PJRT execution engine: load HLO-text artifacts, compile once, execute
+//! many times from the coordinator hot path.
+//!
+//! Design notes (see DESIGN.md §Architecture-decisions):
+//!  * `PjRtClient` is `Rc`-backed and not `Send`; each worker thread owns an
+//!    `Engine`. The sweep coordinator never shares engines across threads.
+//!  * The calling convention is positional per the manifest; `Executable`
+//!    validates arity and (optionally) shapes before dispatch.
+//!  * Multi-output computations return a single tuple buffer on this XLA
+//!    version; `execute` decomposes the tuple literal (a move, not a copy)
+//!    into per-output host tensors.
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::PathBuf;
+use std::time::Instant;
+
+use anyhow::{anyhow, bail, Result};
+
+use super::manifest::{ArtifactMeta, Manifest};
+use crate::tensor::{DType, Tensor};
+
+/// Converts an xla error (not std-Error on this crate version) to anyhow.
+macro_rules! xtry {
+    ($e:expr, $what:expr) => {
+        $e.map_err(|err| anyhow!("{}: {:?}", $what, err))?
+    };
+}
+
+pub struct Engine {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    /// Compiled executables, keyed by artifact id (compile once, run many).
+    cache: RefCell<HashMap<String, std::rc::Rc<Executable>>>,
+    pub compile_ms: RefCell<f64>,
+}
+
+pub struct Executable {
+    pub meta: ArtifactMeta,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl Engine {
+    pub fn new(artifacts_dir: &std::path::Path) -> Result<Engine> {
+        let manifest = Manifest::load(artifacts_dir)?;
+        let client = xtry!(xla::PjRtClient::cpu(), "create PJRT CPU client");
+        Ok(Engine {
+            client,
+            manifest,
+            cache: RefCell::new(HashMap::new()),
+            compile_ms: RefCell::new(0.0),
+        })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile an artifact (cached by id).
+    pub fn load(&self, artifact_id: &str) -> Result<std::rc::Rc<Executable>> {
+        if let Some(e) = self.cache.borrow().get(artifact_id) {
+            return Ok(e.clone());
+        }
+        let meta = self.manifest.artifact(artifact_id)?.clone();
+        let path: PathBuf = self.manifest.dir.join(&meta.file);
+        let t0 = Instant::now();
+        let proto = xtry!(
+            xla::HloModuleProto::from_text_file(
+                path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?
+            ),
+            format!("parse HLO text {path:?}")
+        );
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = xtry!(self.client.compile(&comp), format!("compile {artifact_id}"));
+        *self.compile_ms.borrow_mut() += t0.elapsed().as_secs_f64() * 1e3;
+        let e = std::rc::Rc::new(Executable { meta, exe });
+        self.cache.borrow_mut().insert(artifact_id.to_string(), e.clone());
+        Ok(e)
+    }
+
+    /// Shorthand: find by (kind, family) then load.
+    pub fn load_kind(
+        &self,
+        kind: &str,
+        family: &str,
+        method: Option<&str>,
+        gscale: Option<&str>,
+    ) -> Result<std::rc::Rc<Executable>> {
+        let id = self.manifest.find(kind, family, method, gscale)?.id.clone();
+        self.load(&id)
+    }
+}
+
+fn tensor_to_literal(t: &Tensor) -> Result<xla::Literal> {
+    let ty = match t.dtype() {
+        DType::F32 => xla::ElementType::F32,
+        DType::I32 => xla::ElementType::S32,
+    };
+    xla::Literal::create_from_shape_and_untyped_data(ty, &t.shape, t.raw_bytes())
+        .map_err(|e| anyhow!("literal from tensor: {e:?}"))
+}
+
+fn literal_to_tensor(lit: &xla::Literal) -> Result<Tensor> {
+    let shape = lit.array_shape().map_err(|e| anyhow!("literal shape: {e:?}"))?;
+    let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+    match shape.primitive_type() {
+        xla::PrimitiveType::F32 => {
+            let v: Vec<f32> = lit.to_vec().map_err(|e| anyhow!("literal->f32: {e:?}"))?;
+            Ok(Tensor::from_f32(&dims, v))
+        }
+        xla::PrimitiveType::S32 => {
+            let v: Vec<i32> = lit.to_vec().map_err(|e| anyhow!("literal->i32: {e:?}"))?;
+            Ok(Tensor::from_i32(&dims, v))
+        }
+        other => bail!("unsupported output element type {other:?}"),
+    }
+}
+
+impl Executable {
+    /// Execute with host tensors; returns one host tensor per manifest
+    /// output. Validates input arity, dtype and shape against the manifest.
+    pub fn run(&self, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+        self.validate(inputs)?;
+        let literals: Vec<xla::Literal> =
+            inputs.iter().map(tensor_to_literal).collect::<Result<_>>()?;
+        let outs = self
+            .exe
+            .execute::<xla::Literal>(&literals)
+            .map_err(|e| anyhow!("execute {}: {e:?}", self.meta.id))?;
+        let buf = outs
+            .first()
+            .and_then(|replica| replica.first())
+            .ok_or_else(|| anyhow!("{}: no output buffers", self.meta.id))?;
+        let lit = buf
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetch outputs of {}: {e:?}", self.meta.id))?;
+        // Multi-output artifacts come back as one tuple literal.
+        let parts = lit
+            .to_tuple()
+            .map_err(|e| anyhow!("untuple outputs of {}: {e:?}", self.meta.id))?;
+        let parts = if parts.is_empty() { vec![lit_clone_guard()?] } else { parts };
+        if parts.len() != self.meta.outputs.len() {
+            bail!(
+                "{}: expected {} outputs, got {}",
+                self.meta.id,
+                self.meta.outputs.len(),
+                parts.len()
+            );
+        }
+        parts.iter().map(literal_to_tensor).collect()
+    }
+
+    fn validate(&self, inputs: &[Tensor]) -> Result<()> {
+        if inputs.len() != self.meta.inputs.len() {
+            bail!(
+                "{}: expected {} inputs, got {}",
+                self.meta.id,
+                self.meta.inputs.len(),
+                inputs.len()
+            );
+        }
+        for (i, (t, spec)) in inputs.iter().zip(&self.meta.inputs).enumerate() {
+            if t.dtype() != spec.dtype {
+                bail!(
+                    "{} input #{i} ({}): dtype {:?} != manifest {:?}",
+                    self.meta.id, spec.name, t.dtype(), spec.dtype
+                );
+            }
+            if t.shape != spec.shape {
+                bail!(
+                    "{} input #{i} ({}): shape {:?} != manifest {:?}",
+                    self.meta.id, spec.name, t.shape, spec.shape
+                );
+            }
+        }
+        Ok(())
+    }
+
+    /// Index of the first output with the given manifest kind.
+    pub fn output_index(&self, kind: &str, name: Option<&str>) -> Result<usize> {
+        self.meta
+            .outputs
+            .iter()
+            .position(|o| o.kind == kind && name.map_or(true, |n| o.name == n))
+            .ok_or_else(|| anyhow!("{}: no output kind={kind} name={name:?}", self.meta.id))
+    }
+}
+
+// `return_tuple=True` in aot.py guarantees a tuple even for single outputs,
+// so an empty decompose means something unexpected happened.
+fn lit_clone_guard() -> Result<xla::Literal> {
+    bail!("artifact returned a non-tuple literal; aot.py must lower with return_tuple=True")
+}

@@ -1,0 +1,253 @@
+//! Typed view over `artifacts/manifest.json` — the contract between the
+//! Python compile path and the Rust runtime.
+//!
+//! The manifest records, for every AOT artifact, the exact positional
+//! calling convention (input/output tensor names, shapes, dtypes and roles)
+//! plus per-family parameter metadata (names, roles, shapes, initial-params
+//! binary, per-layer bit widths for model-size accounting).
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::quant::model_size::LayerMeta;
+use crate::tensor::{f32s_from_bytes, numel, DType, Tensor};
+use crate::util::json::Json;
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct IoSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: DType,
+    /// param | mom | teacher | data_x | data_y | data_w | lr | wd | metric |
+    /// logits | diag | series | scalar
+    pub kind: String,
+    /// For param/mom/teacher slots: the parameter name this slot carries.
+    pub param: Option<String>,
+}
+
+#[derive(Clone, Debug)]
+pub struct ArtifactMeta {
+    pub id: String,
+    pub file: String,
+    /// train | train_kd | train_diag | eval | init_quant | infer | fig2 | qmm
+    pub kind: String,
+    pub family: Option<String>,
+    pub teacher_family: Option<String>,
+    pub method: Option<String>,
+    pub gscale: Option<String>,
+    pub batch: usize,
+    pub inputs: Vec<IoSpec>,
+    pub outputs: Vec<IoSpec>,
+}
+
+#[derive(Clone, Debug)]
+pub struct Family {
+    pub name: String,
+    pub model: String,
+    pub qbits: u32,
+    pub num_classes: usize,
+    pub params_bin: String,
+    pub n_matmul: usize,
+    pub param_names: Vec<String>,
+    pub grad_names: Vec<String>,
+    pub roles: BTreeMap<String, String>,
+    pub shapes: BTreeMap<String, Vec<usize>>,
+    pub layer_meta: Vec<LayerMeta>,
+}
+
+impl Family {
+    /// Parameter names with role `step_w` / `step_a`.
+    pub fn step_names(&self, role: &str) -> Vec<String> {
+        self.param_names
+            .iter()
+            .filter(|n| self.roles.get(*n).map(String::as_str) == Some(role))
+            .cloned()
+            .collect()
+    }
+
+    pub fn total_weights(&self) -> usize {
+        self.layer_meta.iter().map(|l| l.n_weights).sum()
+    }
+}
+
+#[derive(Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub batch: usize,
+    pub image: usize,
+    pub channels: usize,
+    pub num_classes: usize,
+    pub families: BTreeMap<String, Family>,
+    pub artifacts: BTreeMap<String, ArtifactMeta>,
+}
+
+fn parse_io(j: &Json) -> Result<IoSpec> {
+    Ok(IoSpec {
+        name: j.str_at("name")?.to_string(),
+        shape: j
+            .arr_at("shape")?
+            .iter()
+            .map(|d| d.as_usize().ok_or_else(|| anyhow!("bad shape entry")))
+            .collect::<Result<_>>()?,
+        dtype: DType::from_name(j.str_at("dtype")?)?,
+        kind: j.str_at("kind")?.to_string(),
+        param: j.get("param").and_then(Json::as_str).map(str::to_string),
+    })
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("read {path:?} — run `make artifacts` first"))?;
+        let j = Json::parse(&text).map_err(|e| anyhow!("{path:?}: {e}"))?;
+
+        let mut families = BTreeMap::new();
+        for (name, fj) in j
+            .get("families")
+            .and_then(Json::as_obj)
+            .ok_or_else(|| anyhow!("manifest missing families"))?
+        {
+            let mut roles = BTreeMap::new();
+            for (k, v) in fj.get("roles").and_then(Json::as_obj).unwrap_or(&BTreeMap::new()) {
+                roles.insert(k.clone(), v.as_str().unwrap_or("").to_string());
+            }
+            let mut shapes = BTreeMap::new();
+            for (k, v) in fj.get("shapes").and_then(Json::as_obj).unwrap_or(&BTreeMap::new()) {
+                let dims = v
+                    .as_arr()
+                    .map(|a| a.iter().filter_map(Json::as_usize).collect())
+                    .unwrap_or_default();
+                shapes.insert(k.clone(), dims);
+            }
+            let layer_meta = fj
+                .arr_at("layer_meta")?
+                .iter()
+                .map(|l| {
+                    Ok(LayerMeta {
+                        name: l.str_at("name")?.to_string(),
+                        n_weights: l.usize_at("n_weights")?,
+                        bits: l.usize_at("bits")? as u32,
+                    })
+                })
+                .collect::<Result<Vec<_>>>()?;
+            let strings = |key: &str| -> Result<Vec<String>> {
+                Ok(fj
+                    .arr_at(key)?
+                    .iter()
+                    .filter_map(Json::as_str)
+                    .map(str::to_string)
+                    .collect())
+            };
+            families.insert(
+                name.clone(),
+                Family {
+                    name: name.clone(),
+                    model: fj.str_at("model")?.to_string(),
+                    qbits: fj.usize_at("qbits")? as u32,
+                    num_classes: fj.usize_at("num_classes")?,
+                    params_bin: fj.str_at("params_bin")?.to_string(),
+                    n_matmul: fj.usize_at("n_matmul")?,
+                    param_names: strings("param_names")?,
+                    grad_names: strings("grad_names")?,
+                    roles,
+                    shapes,
+                    layer_meta,
+                },
+            );
+        }
+
+        let mut artifacts = BTreeMap::new();
+        for aj in j.arr_at("artifacts")? {
+            let meta = ArtifactMeta {
+                id: aj.str_at("id")?.to_string(),
+                file: aj.str_at("file")?.to_string(),
+                kind: aj.str_at("kind")?.to_string(),
+                family: aj.get("family").and_then(Json::as_str).map(str::to_string),
+                teacher_family: aj
+                    .get("teacher_family")
+                    .and_then(Json::as_str)
+                    .map(str::to_string),
+                method: aj.get("method").and_then(Json::as_str).map(str::to_string),
+                gscale: aj.get("gscale").and_then(Json::as_str).map(str::to_string),
+                batch: aj.usize_at("batch")?,
+                inputs: aj.arr_at("inputs")?.iter().map(parse_io).collect::<Result<_>>()?,
+                outputs: aj.arr_at("outputs")?.iter().map(parse_io).collect::<Result<_>>()?,
+            };
+            artifacts.insert(meta.id.clone(), meta);
+        }
+
+        Ok(Manifest {
+            dir: dir.to_path_buf(),
+            batch: j.usize_at("batch")?,
+            image: j.usize_at("image")?,
+            channels: j.usize_at("channels")?,
+            num_classes: j.usize_at("num_classes")?,
+            families,
+            artifacts,
+        })
+    }
+
+    pub fn family(&self, name: &str) -> Result<&Family> {
+        self.families
+            .get(name)
+            .ok_or_else(|| anyhow!("family {name:?} not in manifest"))
+    }
+
+    pub fn artifact(&self, id: &str) -> Result<&ArtifactMeta> {
+        self.artifacts
+            .get(id)
+            .ok_or_else(|| anyhow!("artifact {id:?} not in manifest"))
+    }
+
+    /// Find an artifact by (kind, family) plus optional method/gscale.
+    pub fn find(
+        &self,
+        kind: &str,
+        family: &str,
+        method: Option<&str>,
+        gscale: Option<&str>,
+    ) -> Result<&ArtifactMeta> {
+        self.artifacts
+            .values()
+            .find(|a| {
+                a.kind == kind
+                    && a.family.as_deref() == Some(family)
+                    && method.map_or(true, |m| a.method.as_deref() == Some(m))
+                    && gscale.map_or(true, |g| a.gscale.as_deref() == Some(g))
+            })
+            .ok_or_else(|| {
+                anyhow!(
+                    "no artifact kind={kind} family={family} method={method:?} \
+                     gscale={gscale:?} — re-run `make artifacts` with a larger --set"
+                )
+            })
+    }
+
+    /// Load the initial parameter tensors for a family from its params.bin.
+    pub fn load_initial_params(&self, family: &str) -> Result<Vec<Tensor>> {
+        let fam = self.family(family)?;
+        let path = self.dir.join(&fam.params_bin);
+        let bytes = std::fs::read(&path).with_context(|| format!("read {path:?}"))?;
+        let mut out = Vec::with_capacity(fam.param_names.len());
+        let mut off = 0usize;
+        for name in &fam.param_names {
+            let shape = fam
+                .shapes
+                .get(name)
+                .ok_or_else(|| anyhow!("no shape for param {name}"))?;
+            let n = numel(shape) * 4;
+            if off + n > bytes.len() {
+                bail!("{path:?} truncated at param {name}");
+            }
+            out.push(Tensor::from_f32(shape, f32s_from_bytes(&bytes[off..off + n])));
+            off += n;
+        }
+        if off != bytes.len() {
+            bail!("{path:?} has {} trailing bytes", bytes.len() - off);
+        }
+        Ok(out)
+    }
+}

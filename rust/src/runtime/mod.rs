@@ -1,0 +1,10 @@
+//! Runtime layer: loads AOT HLO-text artifacts produced by
+//! `python/compile/aot.py` and executes them on the PJRT CPU client.
+//! See `manifest` for the calling-convention contract and `engine` for the
+//! execution path.
+
+pub mod engine;
+pub mod manifest;
+
+pub use engine::{Engine, Executable};
+pub use manifest::{ArtifactMeta, Family, IoSpec, Manifest};

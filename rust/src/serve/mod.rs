@@ -1,0 +1,239 @@
+//! Quantized-inference serving path (Figure 1 deployed): a request router +
+//! dynamic batcher in front of an `infer` artifact.
+//!
+//! Architecture (vLLM-router-shaped, scaled to this model family):
+//!  * callers submit single images from any thread via a cloneable
+//!    [`ServeClient`] and block on (or poll) a reply channel;
+//!  * one engine thread owns the non-`Send` PJRT client, drains the queue
+//!    with a *dynamic batching* policy — dispatch as soon as `batch` rows
+//!    are waiting, or after `max_wait` with whatever is there (padding the
+//!    tail rows) — and fans results back out;
+//!  * per-request latency and batch-occupancy metrics are accumulated for
+//!    the serve bench (EXPERIMENTS.md §Perf L3).
+
+use std::sync::mpsc::{Receiver, RecvTimeoutError, SyncSender};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, Result};
+
+use crate::runtime::Engine;
+use crate::tensor::Tensor;
+
+pub struct Request {
+    pub image: Vec<f32>, // 32*32*3
+    submitted: Instant,
+    reply: SyncSender<Reply>,
+}
+
+#[derive(Clone, Debug)]
+pub struct Reply {
+    pub logits: Vec<f32>,
+    pub argmax: usize,
+    pub queue_ms: f64,
+    pub total_ms: f64,
+}
+
+#[derive(Clone, Debug, Default)]
+pub struct ServeStats {
+    pub requests: u64,
+    pub batches: u64,
+    pub rows_dispatched: u64,
+    pub exec_ms_total: f64,
+    pub occupancy_sum: f64,
+}
+
+impl ServeStats {
+    pub fn mean_occupancy(&self) -> f64 {
+        if self.batches == 0 {
+            0.0
+        } else {
+            self.occupancy_sum / self.batches as f64
+        }
+    }
+
+    pub fn mean_exec_ms(&self) -> f64 {
+        if self.batches == 0 {
+            0.0
+        } else {
+            self.exec_ms_total / self.batches as f64
+        }
+    }
+}
+
+#[derive(Clone)]
+pub struct ServeClient {
+    tx: SyncSender<Request>,
+    image_len: usize,
+}
+
+impl ServeClient {
+    /// Blocking single-request inference.
+    pub fn infer(&self, image: Vec<f32>) -> Result<Reply> {
+        let rx = self.submit(image)?;
+        rx.recv().map_err(|_| anyhow!("server shut down"))
+    }
+
+    /// Async submit; returns the reply channel.
+    pub fn submit(&self, image: Vec<f32>) -> Result<Receiver<Reply>> {
+        if image.len() != self.image_len {
+            anyhow::bail!("image must have {} floats, got {}", self.image_len, image.len());
+        }
+        let (reply_tx, reply_rx) = std::sync::mpsc::sync_channel(1);
+        self.tx
+            .send(Request { image, submitted: Instant::now(), reply: reply_tx })
+            .map_err(|_| anyhow!("server shut down"))?;
+        Ok(reply_rx)
+    }
+}
+
+pub struct Server {
+    pub client: ServeClient,
+    pub stats: Arc<Mutex<ServeStats>>,
+    shutdown: SyncSender<()>,
+    handle: Option<std::thread::JoinHandle<()>>,
+}
+
+pub struct ServerConfig {
+    pub artifacts_dir: std::path::PathBuf,
+    pub family: String,
+    /// Checkpoint with trained params (empty = AOT initial params).
+    pub checkpoint: String,
+    pub max_wait: Duration,
+    pub queue_depth: usize,
+}
+
+impl Server {
+    pub fn start(cfg: ServerConfig) -> Result<Server> {
+        let (tx, rx) = std::sync::mpsc::sync_channel::<Request>(cfg.queue_depth.max(1));
+        let (stop_tx, stop_rx) = std::sync::mpsc::sync_channel::<()>(1);
+        let stats = Arc::new(Mutex::new(ServeStats::default()));
+        let stats_bg = stats.clone();
+
+        // Resolve params on the caller thread so startup errors surface here.
+        let engine_probe = Engine::new(&cfg.artifacts_dir)?;
+        let infer_meta = engine_probe
+            .manifest()
+            .find("infer", &cfg.family, None, None)?
+            .clone();
+        let image_len: usize = infer_meta.inputs.last().unwrap().shape[1..].iter().product();
+        drop(engine_probe);
+
+        let handle = std::thread::Builder::new().name("lsq-serve".into()).spawn(move || {
+            let run = || -> Result<()> {
+                let engine = Engine::new(&cfg.artifacts_dir)?;
+                let exe = engine.load(&infer_meta.id)?;
+                let manifest = engine.manifest();
+                let params: Vec<Tensor> = if cfg.checkpoint.is_empty() {
+                    manifest.load_initial_params(&cfg.family)?
+                } else {
+                    let st = crate::train::TrainState::load(
+                        manifest,
+                        std::path::Path::new(&cfg.checkpoint),
+                    )?;
+                    st.params
+                };
+                let batch = exe.meta.batch;
+                let img = image_len;
+                let mut pending: Vec<Request> = Vec::with_capacity(batch);
+
+                loop {
+                    // Block for the first request (or shutdown).
+                    if pending.is_empty() {
+                        match rx.recv_timeout(Duration::from_millis(50)) {
+                            Ok(r) => pending.push(r),
+                            Err(RecvTimeoutError::Timeout) => {
+                                if stop_rx.try_recv().is_ok() {
+                                    return Ok(());
+                                }
+                                continue;
+                            }
+                            Err(RecvTimeoutError::Disconnected) => return Ok(()),
+                        }
+                    }
+                    // Dynamic batching: fill until `batch` or `max_wait`.
+                    let deadline = Instant::now() + cfg.max_wait;
+                    while pending.len() < batch {
+                        let left = deadline.saturating_duration_since(Instant::now());
+                        if left.is_zero() {
+                            break;
+                        }
+                        match rx.recv_timeout(left) {
+                            Ok(r) => pending.push(r),
+                            Err(RecvTimeoutError::Timeout) => break,
+                            Err(RecvTimeoutError::Disconnected) => break,
+                        }
+                    }
+
+                    // Assemble the padded batch.
+                    let real = pending.len();
+                    let mut x = vec![0.0f32; batch * img];
+                    for (row, req) in pending.iter().enumerate() {
+                        x[row * img..(row + 1) * img].copy_from_slice(&req.image);
+                    }
+                    let mut inputs = params.clone();
+                    let mut shape = vec![batch];
+                    shape.extend_from_slice(&infer_meta.inputs.last().unwrap().shape[1..]);
+                    inputs.push(Tensor::from_f32(&shape, x));
+
+                    let t_exec = Instant::now();
+                    let out = exe.run(&inputs)?;
+                    let exec_ms = t_exec.elapsed().as_secs_f64() * 1e3;
+                    let logits = out[0].f32s()?;
+                    let classes = out[0].shape[1];
+
+                    {
+                        let mut s = stats_bg.lock().unwrap();
+                        s.batches += 1;
+                        s.requests += real as u64;
+                        s.rows_dispatched += batch as u64;
+                        s.exec_ms_total += exec_ms;
+                        s.occupancy_sum += real as f64 / batch as f64;
+                    }
+
+                    for (row, req) in pending.drain(..).enumerate() {
+                        let lg = logits[row * classes..(row + 1) * classes].to_vec();
+                        let argmax = lg
+                            .iter()
+                            .enumerate()
+                            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                            .map(|(i, _)| i)
+                            .unwrap_or(0);
+                        let total_ms = req.submitted.elapsed().as_secs_f64() * 1e3;
+                        let _ = req.reply.send(Reply {
+                            logits: lg,
+                            argmax,
+                            queue_ms: total_ms - exec_ms,
+                            total_ms,
+                        });
+                    }
+                    if stop_rx.try_recv().is_ok() {
+                        return Ok(());
+                    }
+                }
+            };
+            if let Err(e) = run() {
+                eprintln!("serve thread error: {e:#}");
+            }
+        })?;
+
+        Ok(Server {
+            client: ServeClient { tx, image_len },
+            stats,
+            shutdown: stop_tx,
+            handle: Some(handle),
+        })
+    }
+
+    pub fn stats(&self) -> ServeStats {
+        self.stats.lock().unwrap().clone()
+    }
+
+    pub fn stop(mut self) {
+        let _ = self.shutdown.send(());
+        // Drop our client sender so the recv loop can observe disconnect.
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}

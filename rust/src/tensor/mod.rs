@@ -1,0 +1,322 @@
+//! Host tensor type + checkpoint serialization.
+//!
+//! `Tensor` is the coordinator-side value type: a shape plus flat f32 or i32
+//! data. It deliberately implements only what the coordinator needs
+//! (creation, stats, indexing, (de)serialization) — all heavy math runs
+//! inside the AOT XLA artifacts.
+//!
+//! Checkpoints are a self-describing binary container (`LSQCKPT1`): a JSON
+//! header (names, shapes, dtypes, offsets, user metadata) followed by raw
+//! little-endian payloads. Writing is atomic (tmp + rename).
+
+use std::collections::BTreeMap;
+use std::io::{Read, Write};
+use std::path::Path;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::util::json::Json;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    I32,
+}
+
+impl DType {
+    pub fn size(self) -> usize {
+        4
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            DType::F32 => "float32",
+            DType::I32 => "int32",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Result<DType> {
+        match s {
+            "float32" | "f32" => Ok(DType::F32),
+            "int32" | "i32" => Ok(DType::I32),
+            _ => bail!("unsupported dtype {s:?}"),
+        }
+    }
+}
+
+#[derive(Clone, Debug, PartialEq)]
+pub enum Data {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+}
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct Tensor {
+    pub shape: Vec<usize>,
+    pub data: Data,
+}
+
+impl Tensor {
+    pub fn zeros(shape: &[usize]) -> Tensor {
+        Tensor { shape: shape.to_vec(), data: Data::F32(vec![0.0; numel(shape)]) }
+    }
+
+    pub fn from_f32(shape: &[usize], data: Vec<f32>) -> Tensor {
+        assert_eq!(numel(shape), data.len(), "shape/data mismatch");
+        Tensor { shape: shape.to_vec(), data: Data::F32(data) }
+    }
+
+    pub fn from_i32(shape: &[usize], data: Vec<i32>) -> Tensor {
+        assert_eq!(numel(shape), data.len(), "shape/data mismatch");
+        Tensor { shape: shape.to_vec(), data: Data::I32(data) }
+    }
+
+    pub fn scalar_f32(v: f32) -> Tensor {
+        Tensor { shape: vec![], data: Data::F32(vec![v]) }
+    }
+
+    pub fn numel(&self) -> usize {
+        numel(&self.shape)
+    }
+
+    pub fn dtype(&self) -> DType {
+        match &self.data {
+            Data::F32(_) => DType::F32,
+            Data::I32(_) => DType::I32,
+        }
+    }
+
+    pub fn f32s(&self) -> Result<&[f32]> {
+        match &self.data {
+            Data::F32(v) => Ok(v),
+            _ => Err(anyhow!("tensor is not f32")),
+        }
+    }
+
+    pub fn f32s_mut(&mut self) -> Result<&mut [f32]> {
+        match &mut self.data {
+            Data::F32(v) => Ok(v),
+            _ => Err(anyhow!("tensor is not f32")),
+        }
+    }
+
+    pub fn i32s(&self) -> Result<&[i32]> {
+        match &self.data {
+            Data::I32(v) => Ok(v),
+            _ => Err(anyhow!("tensor is not i32")),
+        }
+    }
+
+    /// Scalar extraction (shape [] or [1]).
+    pub fn item_f32(&self) -> Result<f32> {
+        let v = self.f32s()?;
+        if v.len() != 1 {
+            bail!("item() on tensor with {} elements", v.len());
+        }
+        Ok(v[0])
+    }
+
+    pub fn raw_bytes(&self) -> &[u8] {
+        match &self.data {
+            Data::F32(v) => bytes_of_f32(v),
+            Data::I32(v) => bytes_of_i32(v),
+        }
+    }
+}
+
+pub fn numel(shape: &[usize]) -> usize {
+    shape.iter().product::<usize>().max(1)
+}
+
+fn bytes_of_f32(v: &[f32]) -> &[u8] {
+    unsafe { std::slice::from_raw_parts(v.as_ptr() as *const u8, v.len() * 4) }
+}
+
+fn bytes_of_i32(v: &[i32]) -> &[u8] {
+    unsafe { std::slice::from_raw_parts(v.as_ptr() as *const u8, v.len() * 4) }
+}
+
+pub fn f32s_from_bytes(b: &[u8]) -> Vec<f32> {
+    b.chunks_exact(4).map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]])).collect()
+}
+
+pub fn i32s_from_bytes(b: &[u8]) -> Vec<i32> {
+    b.chunks_exact(4).map(|c| i32::from_le_bytes([c[0], c[1], c[2], c[3]])).collect()
+}
+
+// ---------------------------------------------------------------------------
+// Checkpoint container
+// ---------------------------------------------------------------------------
+
+const MAGIC: &[u8; 8] = b"LSQCKPT1";
+
+/// Named tensor collection with free-form JSON metadata.
+#[derive(Default, Debug)]
+pub struct Checkpoint {
+    pub tensors: BTreeMap<String, Tensor>,
+    pub meta: BTreeMap<String, Json>,
+}
+
+impl Checkpoint {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn insert(&mut self, name: &str, t: Tensor) {
+        self.tensors.insert(name.to_string(), t);
+    }
+
+    pub fn get(&self, name: &str) -> Result<&Tensor> {
+        self.tensors.get(name).ok_or_else(|| anyhow!("checkpoint missing tensor {name:?}"))
+    }
+
+    pub fn meta_str(&self, key: &str) -> Option<&str> {
+        self.meta.get(key).and_then(Json::as_str)
+    }
+
+    pub fn save(&self, path: &Path) -> Result<()> {
+        let mut entries = Vec::new();
+        let mut offset = 0usize;
+        for (name, t) in &self.tensors {
+            let nbytes = t.numel() * t.dtype().size();
+            entries.push(Json::obj(vec![
+                ("name", Json::str(name.clone())),
+                ("dtype", Json::str(t.dtype().name())),
+                (
+                    "shape",
+                    Json::Arr(t.shape.iter().map(|d| Json::num(*d as f64)).collect()),
+                ),
+                ("offset", Json::num(offset as f64)),
+                ("nbytes", Json::num(nbytes as f64)),
+            ]));
+            offset += nbytes;
+        }
+        let header = Json::obj(vec![
+            ("tensors", Json::Arr(entries)),
+            ("meta", Json::Obj(self.meta.clone())),
+        ])
+        .to_string();
+
+        let tmp = path.with_extension("tmp");
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        {
+            let mut f = std::fs::File::create(&tmp)
+                .with_context(|| format!("create {tmp:?}"))?;
+            f.write_all(MAGIC)?;
+            f.write_all(&(header.len() as u64).to_le_bytes())?;
+            f.write_all(header.as_bytes())?;
+            for t in self.tensors.values() {
+                f.write_all(t.raw_bytes())?;
+            }
+            f.sync_all()?;
+        }
+        std::fs::rename(&tmp, path)?;
+        Ok(())
+    }
+
+    pub fn load(path: &Path) -> Result<Checkpoint> {
+        let mut f = std::fs::File::open(path).with_context(|| format!("open {path:?}"))?;
+        let mut magic = [0u8; 8];
+        f.read_exact(&mut magic)?;
+        if &magic != MAGIC {
+            bail!("{path:?}: not an LSQCKPT1 checkpoint");
+        }
+        let mut len8 = [0u8; 8];
+        f.read_exact(&mut len8)?;
+        let hlen = u64::from_le_bytes(len8) as usize;
+        let mut hbuf = vec![0u8; hlen];
+        f.read_exact(&mut hbuf)?;
+        let header = Json::parse(std::str::from_utf8(&hbuf)?)
+            .map_err(|e| anyhow!("{path:?}: bad header: {e}"))?;
+        let mut body = Vec::new();
+        f.read_to_end(&mut body)?;
+
+        let mut ck = Checkpoint::new();
+        if let Some(Json::Obj(meta)) = header.get("meta") {
+            ck.meta = meta.clone();
+        }
+        for e in header.arr_at("tensors")? {
+            let name = e.str_at("name")?;
+            let dtype = DType::from_name(e.str_at("dtype")?)?;
+            let shape: Vec<usize> = e
+                .arr_at("shape")?
+                .iter()
+                .map(|d| d.as_usize().unwrap_or(0))
+                .collect();
+            let offset = e.usize_at("offset")?;
+            let nbytes = e.usize_at("nbytes")?;
+            if offset + nbytes > body.len() {
+                bail!("{path:?}: tensor {name} out of bounds");
+            }
+            let bytes = &body[offset..offset + nbytes];
+            let t = match dtype {
+                DType::F32 => Tensor::from_f32(&shape, f32s_from_bytes(bytes)),
+                DType::I32 => Tensor::from_i32(&shape, i32s_from_bytes(bytes)),
+            };
+            ck.insert(name, t);
+        }
+        Ok(ck)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn create_and_access() {
+        let t = Tensor::from_f32(&[2, 3], vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        assert_eq!(t.numel(), 6);
+        assert_eq!(t.dtype(), DType::F32);
+        assert_eq!(t.f32s().unwrap()[4], 5.0);
+        assert!(t.i32s().is_err());
+    }
+
+    #[test]
+    fn scalar() {
+        let t = Tensor::scalar_f32(3.5);
+        assert_eq!(t.numel(), 1);
+        assert_eq!(t.item_f32().unwrap(), 3.5);
+    }
+
+    #[test]
+    #[should_panic]
+    fn shape_mismatch_panics() {
+        Tensor::from_f32(&[2, 2], vec![1.0]);
+    }
+
+    #[test]
+    fn bytes_roundtrip() {
+        let t = Tensor::from_f32(&[3], vec![1.5, -2.0, 0.25]);
+        let back = f32s_from_bytes(t.raw_bytes());
+        assert_eq!(back, vec![1.5, -2.0, 0.25]);
+    }
+
+    #[test]
+    fn checkpoint_roundtrip() {
+        let dir = std::env::temp_dir().join(format!("lsq_ck_{}", std::process::id()));
+        let path = dir.join("a.ckpt");
+        let mut ck = Checkpoint::new();
+        ck.insert("w", Tensor::from_f32(&[2, 2], vec![1.0, 2.0, 3.0, 4.0]));
+        ck.insert("y", Tensor::from_i32(&[3], vec![7, -8, 9]));
+        ck.meta.insert("family".into(), Json::str("cnn_small_q2"));
+        ck.save(&path).unwrap();
+        let back = Checkpoint::load(&path).unwrap();
+        assert_eq!(back.get("w").unwrap(), ck.get("w").unwrap());
+        assert_eq!(back.get("y").unwrap().i32s().unwrap(), &[7, -8, 9]);
+        assert_eq!(back.meta_str("family"), Some("cnn_small_q2"));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn checkpoint_rejects_garbage() {
+        let dir = std::env::temp_dir().join(format!("lsq_ckg_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("bad.ckpt");
+        std::fs::write(&path, b"not a checkpoint").unwrap();
+        assert!(Checkpoint::load(&path).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

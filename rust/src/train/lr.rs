@@ -1,0 +1,74 @@
+//! Learning-rate schedules. The schedule is computed on the coordinator and
+//! fed to the AOT train step as a runtime scalar, so one artifact serves
+//! every schedule (Section 3.5 compares cosine vs step decay).
+
+use crate::config::{Schedule, TrainConfig};
+
+/// LR at optimizer step `step` of `total_steps`.
+pub fn lr_at(cfg: &TrainConfig, steps_per_epoch: usize, step: usize) -> f64 {
+    let total = (cfg.epochs * steps_per_epoch).max(1);
+    match cfg.schedule {
+        Schedule::Cosine => {
+            // Cosine decay to zero without restarts (Loshchilov & Hutter).
+            let t = (step.min(total) as f64) / total as f64;
+            0.5 * cfg.lr * (1.0 + (std::f64::consts::PI * t).cos())
+        }
+        Schedule::Step => {
+            let epoch = step / steps_per_epoch.max(1);
+            let drops = epoch / cfg.step_every.max(1);
+            cfg.lr * 0.1f64.powi(drops as i32)
+        }
+        Schedule::Const => cfg.lr,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::TrainConfig;
+
+    fn cfg(schedule: Schedule) -> TrainConfig {
+        TrainConfig { epochs: 10, lr: 0.1, schedule, step_every: 4, ..Default::default() }
+    }
+
+    #[test]
+    fn cosine_endpoints() {
+        let c = cfg(Schedule::Cosine);
+        assert!((lr_at(&c, 10, 0) - 0.1).abs() < 1e-12);
+        let mid = lr_at(&c, 10, 50);
+        assert!((mid - 0.05).abs() < 1e-9, "mid={mid}");
+        assert!(lr_at(&c, 10, 100) < 1e-9);
+    }
+
+    #[test]
+    fn cosine_monotone_decreasing() {
+        let c = cfg(Schedule::Cosine);
+        let mut prev = f64::INFINITY;
+        for s in 0..=100 {
+            let v = lr_at(&c, 10, s);
+            assert!(v <= prev + 1e-12);
+            prev = v;
+        }
+    }
+
+    #[test]
+    fn step_decays_by_ten() {
+        let c = cfg(Schedule::Step);
+        assert_eq!(lr_at(&c, 10, 0), 0.1);
+        assert_eq!(lr_at(&c, 10, 39), 0.1); // epoch 3
+        assert!((lr_at(&c, 10, 40) - 0.01).abs() < 1e-12); // epoch 4
+        assert!((lr_at(&c, 10, 80) - 0.001).abs() < 1e-12); // epoch 8
+    }
+
+    #[test]
+    fn const_is_const() {
+        let c = cfg(Schedule::Const);
+        assert_eq!(lr_at(&c, 10, 0), lr_at(&c, 10, 99));
+    }
+
+    #[test]
+    fn clamps_past_end() {
+        let c = cfg(Schedule::Cosine);
+        assert!(lr_at(&c, 10, 500) >= 0.0);
+    }
+}

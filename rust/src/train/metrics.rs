@@ -1,0 +1,187 @@
+//! Training/eval metric records + JSON history persistence.
+
+use std::path::Path;
+
+use anyhow::Result;
+
+use crate::util::json::Json;
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct StepRecord {
+    pub step: usize,
+    pub epoch: usize,
+    pub lr: f64,
+    pub loss: f64,
+    pub acc: f64,
+}
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct EvalRecord {
+    pub step: usize,
+    pub epoch: usize,
+    pub loss: f64,
+    pub top1: f64,
+    pub top5: f64,
+}
+
+#[derive(Clone, Debug, Default)]
+pub struct History {
+    pub steps: Vec<StepRecord>,
+    pub evals: Vec<EvalRecord>,
+    pub wall_seconds: f64,
+}
+
+impl History {
+    pub fn best_top1(&self) -> Option<f64> {
+        self.evals.iter().map(|e| e.top1).fold(None, |acc, v| {
+            Some(acc.map_or(v, |a: f64| a.max(v)))
+        })
+    }
+
+    pub fn final_eval(&self) -> Option<&EvalRecord> {
+        self.evals.last()
+    }
+
+    /// Mean train loss over the last `n` recorded steps.
+    pub fn recent_loss(&self, n: usize) -> f64 {
+        let tail = &self.steps[self.steps.len().saturating_sub(n)..];
+        if tail.is_empty() {
+            return f64::NAN;
+        }
+        tail.iter().map(|s| s.loss).sum::<f64>() / tail.len() as f64
+    }
+
+    pub fn to_json(&self) -> Json {
+        let steps = self
+            .steps
+            .iter()
+            .map(|s| {
+                Json::obj(vec![
+                    ("step", Json::num(s.step as f64)),
+                    ("epoch", Json::num(s.epoch as f64)),
+                    ("lr", Json::num(s.lr)),
+                    ("loss", Json::num(s.loss)),
+                    ("acc", Json::num(s.acc)),
+                ])
+            })
+            .collect();
+        let evals = self
+            .evals
+            .iter()
+            .map(|e| {
+                Json::obj(vec![
+                    ("step", Json::num(e.step as f64)),
+                    ("epoch", Json::num(e.epoch as f64)),
+                    ("loss", Json::num(e.loss)),
+                    ("top1", Json::num(e.top1)),
+                    ("top5", Json::num(e.top5)),
+                ])
+            })
+            .collect();
+        Json::obj(vec![
+            ("steps", Json::Arr(steps)),
+            ("evals", Json::Arr(evals)),
+            ("wall_seconds", Json::num(self.wall_seconds)),
+        ])
+    }
+
+    pub fn save(&self, path: &Path) -> Result<()> {
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        std::fs::write(path, self.to_json().to_string_pretty())?;
+        Ok(())
+    }
+
+    pub fn load(path: &Path) -> Result<History> {
+        let j = Json::parse(&std::fs::read_to_string(path)?)
+            .map_err(|e| anyhow::anyhow!("{path:?}: {e}"))?;
+        let mut h = History::default();
+        for s in j.arr_at("steps")? {
+            h.steps.push(StepRecord {
+                step: s.usize_at("step")?,
+                epoch: s.usize_at("epoch")?,
+                lr: s.get("lr").and_then(Json::as_f64).unwrap_or(0.0),
+                loss: s.get("loss").and_then(Json::as_f64).unwrap_or(0.0),
+                acc: s.get("acc").and_then(Json::as_f64).unwrap_or(0.0),
+            });
+        }
+        for e in j.arr_at("evals")? {
+            h.evals.push(EvalRecord {
+                step: e.usize_at("step")?,
+                epoch: e.usize_at("epoch")?,
+                loss: e.get("loss").and_then(Json::as_f64).unwrap_or(0.0),
+                top1: e.get("top1").and_then(Json::as_f64).unwrap_or(0.0),
+                top5: e.get("top5").and_then(Json::as_f64).unwrap_or(0.0),
+            });
+        }
+        h.wall_seconds = j.get("wall_seconds").and_then(Json::as_f64).unwrap_or(0.0);
+        Ok(h)
+    }
+}
+
+/// Top-k accuracy count from a logits row-major matrix.
+pub fn topk_correct(logits: &[f32], labels: &[i32], classes: usize, k: usize, rows: usize) -> usize {
+    let mut correct = 0;
+    for r in 0..rows {
+        let row = &logits[r * classes..(r + 1) * classes];
+        let target = labels[r] as usize;
+        let target_score = row[target];
+        // rank = number of classes strictly better than the target
+        let better = row.iter().filter(|&&v| v > target_score).count();
+        if better < k {
+            correct += 1;
+        }
+    }
+    correct
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn topk() {
+        let logits = [0.1, 0.9, 0.0, 0.5, 0.2, 0.3]; // 2 rows x 3 classes
+        let labels = [1, 0];
+        assert_eq!(topk_correct(&logits, &labels, 3, 1, 2), 2);
+        let labels = [0, 1];
+        assert_eq!(topk_correct(&logits, &labels, 3, 1, 2), 0);
+        // row0 target is rank 2 (in top-2); row1 target 0.2 is rank 3 (not).
+        assert_eq!(topk_correct(&logits, &labels, 3, 2, 2), 1);
+        assert_eq!(topk_correct(&logits, &labels, 3, 3, 2), 2);
+    }
+
+    #[test]
+    fn topk_ignores_padded_rows() {
+        let logits = [1.0, 0.0, 0.0, 1.0];
+        let labels = [0, 0];
+        assert_eq!(topk_correct(&logits, &labels, 2, 1, 1), 1);
+    }
+
+    #[test]
+    fn history_roundtrip() {
+        let dir = std::env::temp_dir().join(format!("lsq_hist_{}", std::process::id()));
+        let path = dir.join("h.json");
+        let mut h = History::default();
+        h.steps.push(StepRecord { step: 1, epoch: 0, lr: 0.1, loss: 2.3, acc: 0.1 });
+        h.evals.push(EvalRecord { step: 1, epoch: 0, loss: 2.2, top1: 12.5, top5: 50.0 });
+        h.wall_seconds = 3.5;
+        h.save(&path).unwrap();
+        let back = History::load(&path).unwrap();
+        assert_eq!(back.steps, h.steps);
+        assert_eq!(back.evals, h.evals);
+        assert_eq!(back.best_top1(), Some(12.5));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn recent_loss_windows() {
+        let mut h = History::default();
+        for i in 0..10 {
+            h.steps.push(StepRecord { step: i, epoch: 0, lr: 0.1, loss: i as f64, acc: 0.0 });
+        }
+        assert!((h.recent_loss(2) - 8.5).abs() < 1e-12);
+        assert!((h.recent_loss(100) - 4.5).abs() < 1e-12);
+    }
+}

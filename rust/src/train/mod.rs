@@ -1,0 +1,11 @@
+//! Training layer: LR schedules, metric history, named train state with
+//! checkpointing, and the `Trainer` loop driving the AOT artifacts.
+
+pub mod lr;
+pub mod metrics;
+pub mod state;
+pub mod trainer;
+
+pub use metrics::{EvalRecord, History, StepRecord};
+pub use state::TrainState;
+pub use trainer::{FitReport, Trainer};

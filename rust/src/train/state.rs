@@ -1,0 +1,122 @@
+//! Training state: named parameter/momentum tensors for one model family,
+//! checkpointing, and the fp32→quantized fine-tune mapping (paper protocol:
+//! all quantized runs start from a trained full-precision model).
+
+use std::path::Path;
+
+use anyhow::{bail, Result};
+
+use crate::runtime::{Family, Manifest};
+use crate::tensor::{Checkpoint, Tensor};
+use crate::util::json::Json;
+
+#[derive(Clone)]
+pub struct TrainState {
+    pub family: String,
+    /// One tensor per `Family::param_names`, in order.
+    pub params: Vec<Tensor>,
+    /// One tensor per `Family::grad_names`, in order.
+    pub moms: Vec<Tensor>,
+    pub step: usize,
+}
+
+impl TrainState {
+    /// Fresh state from the AOT initial parameters.
+    pub fn fresh(manifest: &Manifest, family: &str) -> Result<TrainState> {
+        let fam = manifest.family(family)?;
+        let params = manifest.load_initial_params(family)?;
+        let moms = zero_moms(fam, &params);
+        Ok(TrainState { family: family.to_string(), params, moms, step: 0 })
+    }
+
+    /// Paper fine-tune protocol: take every parameter that exists in the
+    /// source checkpoint (weights, biases, BN state — the fp32 model), keep
+    /// family defaults for the rest (the step sizes, which the init_quant
+    /// artifact then re-derives from the loaded weights + first batch).
+    pub fn from_fp32_checkpoint(
+        manifest: &Manifest,
+        family: &str,
+        ckpt: &Checkpoint,
+    ) -> Result<(TrainState, usize)> {
+        let fam = manifest.family(family)?;
+        let mut params = manifest.load_initial_params(family)?;
+        let mut copied = 0usize;
+        for (i, name) in fam.param_names.iter().enumerate() {
+            if let Some(src) = ckpt.tensors.get(name) {
+                if src.shape != params[i].shape {
+                    bail!(
+                        "checkpoint tensor {name} shape {:?} != family shape {:?}",
+                        src.shape,
+                        params[i].shape
+                    );
+                }
+                params[i] = src.clone();
+                copied += 1;
+            }
+        }
+        if copied == 0 {
+            bail!("checkpoint shares no parameters with family {family}");
+        }
+        let moms = zero_moms(fam, &params);
+        Ok((TrainState { family: family.to_string(), params, moms, step: 0 }, copied))
+    }
+
+    pub fn param(&self, fam: &Family, name: &str) -> Result<&Tensor> {
+        let i = fam
+            .param_names
+            .iter()
+            .position(|n| n == name)
+            .ok_or_else(|| anyhow::anyhow!("no param {name} in {}", self.family))?;
+        Ok(&self.params[i])
+    }
+
+    pub fn to_checkpoint(&self, fam: &Family) -> Checkpoint {
+        let mut ck = Checkpoint::new();
+        for (name, t) in fam.param_names.iter().zip(&self.params) {
+            ck.insert(name, t.clone());
+        }
+        for (name, t) in fam.grad_names.iter().zip(&self.moms) {
+            ck.insert(&format!("mom::{name}"), t.clone());
+        }
+        ck.meta.insert("family".into(), Json::str(self.family.clone()));
+        ck.meta.insert("step".into(), Json::num(self.step as f64));
+        ck
+    }
+
+    pub fn save(&self, fam: &Family, path: &Path) -> Result<()> {
+        self.to_checkpoint(fam).save(path)
+    }
+
+    /// Restore params+momentum from a same-family checkpoint.
+    pub fn load(manifest: &Manifest, path: &Path) -> Result<TrainState> {
+        let ck = Checkpoint::load(path)?;
+        let family = ck
+            .meta_str("family")
+            .ok_or_else(|| anyhow::anyhow!("{path:?}: checkpoint missing family meta"))?
+            .to_string();
+        let fam = manifest.family(&family)?;
+        let mut params = Vec::with_capacity(fam.param_names.len());
+        for name in &fam.param_names {
+            params.push(ck.get(name)?.clone());
+        }
+        let mut moms = Vec::with_capacity(fam.grad_names.len());
+        for name in &fam.grad_names {
+            match ck.tensors.get(&format!("mom::{name}")) {
+                Some(t) => moms.push(t.clone()),
+                None => {
+                    let shape = fam.shapes.get(name).cloned().unwrap_or_default();
+                    moms.push(Tensor::zeros(&shape));
+                }
+            }
+        }
+        let step = ck.meta.get("step").and_then(Json::as_usize).unwrap_or(0);
+        Ok(TrainState { family, params, moms, step })
+    }
+}
+
+fn zero_moms(fam: &Family, _params: &[Tensor]) -> Vec<Tensor> {
+    fam.grad_names
+        .iter()
+        .map(|n| Tensor::zeros(fam.shapes.get(n).map(Vec::as_slice).unwrap_or(&[])))
+        .collect()
+}

@@ -1,0 +1,337 @@
+//! The training loop: drives the AOT train/eval artifacts over the data
+//! pipeline per an `ExperimentConfig`, implementing the paper's protocol —
+//! fp32 pretrain → per-precision fine-tune with step-size initialization
+//! (Section 2.1), SGD + momentum + per-precision weight decay, cosine or
+//! step LR decay, optional same-architecture knowledge distillation.
+//!
+//! Hot-loop structure: the data loader prefetches on its own thread; the
+//! coordinator assembles the positional input vector (params, momentum,
+//! [teacher], batch, lr, wd) and feeds each step's outputs back as the next
+//! step's inputs. Everything heavier than a memcpy happens inside XLA.
+
+use std::path::{Path, PathBuf};
+use std::rc::Rc;
+use std::time::Instant;
+
+use anyhow::{bail, Context, Result};
+
+use crate::config::ExperimentConfig;
+use crate::data::{Dataset, Loader};
+use crate::runtime::{Engine, Executable};
+use crate::tensor::{Checkpoint, Tensor};
+use crate::train::lr::lr_at;
+use crate::train::metrics::{topk_correct, EvalRecord, History, StepRecord};
+use crate::train::state::TrainState;
+
+pub struct Trainer<'e> {
+    pub engine: &'e Engine,
+    pub cfg: ExperimentConfig,
+    pub state: TrainState,
+    pub history: History,
+    train_exe: Rc<Executable>,
+    eval_exe: Rc<Executable>,
+    teacher_params: Option<Vec<Tensor>>,
+    pub verbose: bool,
+    /// Wall time spent outside `Executable::run` in the train loop (driver
+    /// overhead; perf target <5% of step time — EXPERIMENTS.md §Perf).
+    pub driver_seconds: f64,
+    pub exec_seconds: f64,
+}
+
+pub struct FitReport {
+    pub history: History,
+    pub final_top1: f64,
+    pub final_top5: f64,
+    pub checkpoint: PathBuf,
+}
+
+impl<'e> Trainer<'e> {
+    pub fn new(engine: &'e Engine, cfg: ExperimentConfig) -> Result<Trainer<'e>> {
+        cfg.validate()?;
+        let family = cfg.family();
+        let manifest = engine.manifest();
+        let fam = manifest.family(&family)?.clone();
+
+        // -- initial state ----------------------------------------------------
+        let state;
+        let needs_init_quant;
+        if cfg.init_from.is_empty() {
+            state = TrainState::fresh(manifest, &family)?;
+            needs_init_quant = cfg.bits < 32;
+        } else {
+            let ck = Checkpoint::load(Path::new(&cfg.init_from))
+                .with_context(|| format!("init_from={}", cfg.init_from))?;
+            if ck.meta_str("family") == Some(family.as_str()) {
+                // resuming same-family training
+                state = TrainState::load(manifest, Path::new(&cfg.init_from))?;
+                needs_init_quant = false;
+            } else {
+                let (s, copied) = TrainState::from_fp32_checkpoint(manifest, &family, &ck)?;
+                state = s;
+                needs_init_quant = cfg.bits < 32;
+                if copied == 0 {
+                    bail!("no params copied from {}", cfg.init_from);
+                }
+            }
+        }
+
+        // -- artifacts ---------------------------------------------------------
+        let kind = if cfg.distill { "train_kd" } else { "train" };
+        let train_exe = engine.load_kind(
+            kind,
+            &family,
+            Some(cfg.method.as_str()),
+            Some(cfg.gscale.as_str()),
+        )?;
+        let eval_exe = engine.load_kind("eval", &family, None, None)?;
+
+        // -- teacher (frozen fp32 weights of the same architecture) -------------
+        let teacher_params = if cfg.distill {
+            let tfam = train_exe
+                .meta
+                .teacher_family
+                .clone()
+                .ok_or_else(|| anyhow::anyhow!("kd artifact missing teacher_family"))?;
+            let src = if cfg.init_from.is_empty() {
+                manifest.load_initial_params(&tfam)?
+            } else {
+                let ck = Checkpoint::load(Path::new(&cfg.init_from))?;
+                let tf = manifest.family(&tfam)?;
+                let mut ps = manifest.load_initial_params(&tfam)?;
+                for (i, name) in tf.param_names.iter().enumerate() {
+                    if let Some(t) = ck.tensors.get(name) {
+                        ps[i] = t.clone();
+                    }
+                }
+                ps
+            };
+            Some(src)
+        } else {
+            None
+        };
+
+        let mut tr = Trainer {
+            engine,
+            cfg,
+            state,
+            history: History::default(),
+            train_exe,
+            eval_exe,
+            teacher_params,
+            verbose: true,
+            driver_seconds: 0.0,
+            exec_seconds: 0.0,
+        };
+
+        // -- step-size init from weights + first batch (Section 2.1) -----------
+        if needs_init_quant {
+            tr.run_init_quant()?;
+        }
+        let _ = fam;
+        Ok(tr)
+    }
+
+    /// Run the init_quant artifact: sw from current weights, sa from the
+    /// first (unaugmented) training batch.
+    fn run_init_quant(&mut self) -> Result<()> {
+        let exe = self.engine.load_kind("init_quant", &self.cfg.family(), None, None)?;
+        let ds = Dataset::train(&self.cfg.data);
+        let batch = exe.meta.batch;
+        let idx: Vec<usize> = (0..batch.min(ds.size)).collect();
+        let b = ds.batch_from_indices(&idx, batch);
+        let mut inputs = self.state.params.clone();
+        inputs.push(b.x);
+        let out = exe.run(&inputs)?;
+        if out.len() != self.state.params.len() {
+            bail!("init_quant returned {} tensors, expected {}", out.len(), self.state.params.len());
+        }
+        self.state.params = out;
+        Ok(())
+    }
+
+    /// One optimizer step on a prepared batch; returns (loss, acc).
+    pub fn step(&mut self, x: Tensor, y: Tensor, lr: f64, wd: f64) -> Result<(f64, f64)> {
+        let t_drv = Instant::now();
+        let p = self.state.params.len();
+        let g = self.state.moms.len();
+        let batch = y.numel();
+        let mut inputs: Vec<Tensor> =
+            Vec::with_capacity(p + g + self.teacher_params.as_ref().map_or(0, Vec::len) + 4);
+        inputs.extend(self.state.params.iter().cloned());
+        inputs.extend(self.state.moms.iter().cloned());
+        if let Some(tp) = &self.teacher_params {
+            inputs.extend(tp.iter().cloned());
+        }
+        inputs.push(x);
+        inputs.push(y);
+        inputs.push(Tensor::scalar_f32(lr as f32));
+        inputs.push(Tensor::scalar_f32(wd as f32));
+
+        let t_exec = Instant::now();
+        self.driver_seconds += (t_exec - t_drv).as_secs_f64();
+        let mut out = self.train_exe.run(&inputs)?;
+        self.exec_seconds += t_exec.elapsed().as_secs_f64();
+
+        let t_post = Instant::now();
+        if out.len() < p + g + 2 {
+            bail!("train step returned {} outputs, expected >= {}", out.len(), p + g + 2);
+        }
+        let ncorrect = out[p + g + 1].item_f32()? as f64;
+        let loss = out[p + g].item_f32()? as f64;
+        out.truncate(p + g);
+        let moms = out.split_off(p);
+        self.state.params = out;
+        self.state.moms = moms;
+        self.state.step += 1;
+        self.driver_seconds += t_post.elapsed().as_secs_f64();
+        Ok((loss, ncorrect / batch as f64))
+    }
+
+    /// Full pass over the test split; returns (loss, top1%, top5%).
+    pub fn evaluate(&mut self) -> Result<(f64, f64, f64)> {
+        let ds = Dataset::test(&self.cfg.data);
+        let batch = self.eval_exe.meta.batch;
+        let classes = self
+            .engine
+            .manifest()
+            .family(&self.cfg.family())?
+            .num_classes;
+        let mut total = 0usize;
+        let mut top1 = 0usize;
+        let mut top5 = 0usize;
+        let mut loss_sum = 0.0f64;
+        let mut nb = 0usize;
+        for b in ds.eval_batches(batch) {
+            let mut inputs = self.state.params.clone();
+            let y = b.y.clone();
+            inputs.push(b.x);
+            inputs.push(b.y);
+            let out = self.eval_exe.run(&inputs)?;
+            let logits = out[2].f32s()?;
+            let labels = y.i32s()?;
+            top1 += topk_correct(logits, labels, classes, 1, b.real);
+            top5 += topk_correct(logits, labels, classes, 5, b.real);
+            total += b.real;
+            loss_sum += out[0].item_f32()? as f64;
+            nb += 1;
+        }
+        Ok((
+            loss_sum / nb.max(1) as f64,
+            100.0 * top1 as f64 / total.max(1) as f64,
+            100.0 * top5 as f64 / total.max(1) as f64,
+        ))
+    }
+
+    /// The full training run per config; saves history + final checkpoint
+    /// under `out_dir/name/`.
+    pub fn fit(&mut self) -> Result<FitReport> {
+        let t0 = Instant::now();
+        let batch = self.train_exe.meta.batch;
+        let epochs = self.cfg.train.epochs;
+        let loader = Loader::spawn(&self.cfg.data, batch, epochs, self.cfg.train.seed, 4);
+        let spe = loader.batches_per_epoch.max(1);
+        let wd = self.cfg.train.weight_decay;
+        let max_steps = self.cfg.train.max_steps;
+
+        let mut step_in_run = 0usize;
+        let mut last_eval_epoch = usize::MAX;
+        'outer: for epoch in 0..epochs {
+            let mut ep_loss = 0.0;
+            let mut ep_acc = 0.0;
+            let mut ep_n = 0usize;
+            for _ in 0..spe {
+                let b = match loader.next() {
+                    Some(b) => b,
+                    None => break 'outer,
+                };
+                let lr = lr_at(&self.cfg.train, spe, step_in_run);
+                let (loss, acc) = self.step(b.x, b.y, lr, wd)?;
+                self.history.steps.push(StepRecord {
+                    step: self.state.step,
+                    epoch,
+                    lr,
+                    loss,
+                    acc,
+                });
+                ep_loss += loss;
+                ep_acc += acc;
+                ep_n += 1;
+                step_in_run += 1;
+                if max_steps > 0 && step_in_run >= max_steps {
+                    break 'outer;
+                }
+            }
+            if self.cfg.train.eval_every > 0 && (epoch + 1) % self.cfg.train.eval_every == 0 {
+                let (el, t1, t5) = self.evaluate()?;
+                last_eval_epoch = epoch;
+                self.history.evals.push(EvalRecord {
+                    step: self.state.step,
+                    epoch,
+                    loss: el,
+                    top1: t1,
+                    top5: t5,
+                });
+                if self.verbose {
+                    println!(
+                        "[{}] epoch {:>3}  train loss {:.4} acc {:.3}  |  test loss {:.4} top1 {:.2}% top5 {:.2}%",
+                        self.cfg.name,
+                        epoch,
+                        ep_loss / ep_n.max(1) as f64,
+                        ep_acc / ep_n.max(1) as f64,
+                        el,
+                        t1,
+                        t5
+                    );
+                }
+            } else if self.verbose {
+                println!(
+                    "[{}] epoch {:>3}  train loss {:.4} acc {:.3}",
+                    self.cfg.name,
+                    epoch,
+                    ep_loss / ep_n.max(1) as f64,
+                    ep_acc / ep_n.max(1) as f64
+                );
+            }
+        }
+
+        // Final eval (unless the last epoch was just evaluated).
+        if last_eval_epoch == usize::MAX || self.history.evals.last().map(|e| e.step) != Some(self.state.step)
+        {
+            let (el, t1, t5) = self.evaluate()?;
+            self.history.evals.push(EvalRecord {
+                step: self.state.step,
+                epoch: epochs.saturating_sub(1),
+                loss: el,
+                top1: t1,
+                top5: t5,
+            });
+        }
+        self.history.wall_seconds = t0.elapsed().as_secs_f64();
+
+        let out_dir = PathBuf::from(&self.cfg.out_dir).join(&self.cfg.name);
+        std::fs::create_dir_all(&out_dir)?;
+        let ckpt_path = out_dir.join("final.ckpt");
+        let fam = self.engine.manifest().family(&self.cfg.family())?.clone();
+        self.state.save(&fam, &ckpt_path)?;
+        self.history.save(&out_dir.join("history.json"))?;
+        self.cfg.save(&out_dir.join("config.json"))?;
+
+        let last = self.history.final_eval().cloned().unwrap();
+        Ok(FitReport {
+            history: self.history.clone(),
+            final_top1: last.top1,
+            final_top5: last.top5,
+            checkpoint: ckpt_path,
+        })
+    }
+
+    /// Fraction of loop wall time spent outside XLA execution.
+    pub fn driver_overhead(&self) -> f64 {
+        let total = self.driver_seconds + self.exec_seconds;
+        if total == 0.0 {
+            0.0
+        } else {
+            self.driver_seconds / total
+        }
+    }
+}

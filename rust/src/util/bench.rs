@@ -1,0 +1,195 @@
+//! Micro-benchmark harness (offline substrate — no criterion in the vendored
+//! crate universe). Used by the `rust/benches/*.rs` binaries.
+//!
+//! Methodology: warmup until the clock stabilizes, then fixed-duration
+//! measurement batches; reports mean / p50 / p95 / min over per-iteration
+//! times and writes one CSV row per benchmark to `target/bench_results.csv`
+//! so EXPERIMENTS.md §Perf entries are regenerable.
+
+use std::time::{Duration, Instant};
+
+use super::stats::{mean, percentile};
+
+pub struct BenchOpts {
+    pub warmup: Duration,
+    pub measure: Duration,
+    pub min_iters: u64,
+}
+
+impl Default for BenchOpts {
+    fn default() -> Self {
+        BenchOpts {
+            warmup: Duration::from_millis(300),
+            measure: Duration::from_secs(2),
+            min_iters: 10,
+        }
+    }
+}
+
+pub struct Bench {
+    suite: String,
+    opts: BenchOpts,
+    results: Vec<(String, BenchResult)>,
+}
+
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub iters: u64,
+    pub mean_ns: f64,
+    pub p50_ns: f64,
+    pub p95_ns: f64,
+    pub min_ns: f64,
+    /// Optional user-provided work units per iteration (elements, bytes…)
+    /// enabling throughput reporting.
+    pub units_per_iter: f64,
+}
+
+impl BenchResult {
+    pub fn throughput(&self) -> f64 {
+        if self.units_per_iter > 0.0 {
+            self.units_per_iter / (self.mean_ns * 1e-9)
+        } else {
+            f64::NAN
+        }
+    }
+}
+
+/// Prevent the optimizer from deleting a computed value.
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+impl Bench {
+    pub fn new(suite: &str) -> Self {
+        let mut opts = BenchOpts::default();
+        // Fast mode for CI/tests: LSQNET_BENCH_FAST=1 shrinks measurement.
+        if std::env::var("LSQNET_BENCH_FAST").is_ok() {
+            opts.warmup = Duration::from_millis(50);
+            opts.measure = Duration::from_millis(200);
+        }
+        Bench { suite: suite.to_string(), opts, results: Vec::new() }
+    }
+
+    pub fn with_opts(suite: &str, opts: BenchOpts) -> Self {
+        Bench { suite: suite.to_string(), opts, results: Vec::new() }
+    }
+
+    /// Run `f` repeatedly; one call = one iteration.
+    pub fn bench<F: FnMut()>(&mut self, name: &str, f: F) -> BenchResult {
+        self.bench_units(name, 0.0, f)
+    }
+
+    pub fn bench_units<F: FnMut()>(
+        &mut self,
+        name: &str,
+        units_per_iter: f64,
+        mut f: F,
+    ) -> BenchResult {
+        // Warmup.
+        let t0 = Instant::now();
+        while t0.elapsed() < self.opts.warmup {
+            f();
+        }
+        // Measure.
+        let mut times_ns: Vec<f64> = Vec::new();
+        let t1 = Instant::now();
+        while t1.elapsed() < self.opts.measure || (times_ns.len() as u64) < self.opts.min_iters {
+            let s = Instant::now();
+            f();
+            times_ns.push(s.elapsed().as_nanos() as f64);
+            if times_ns.len() > 5_000_000 {
+                break;
+            }
+        }
+        let res = BenchResult {
+            iters: times_ns.len() as u64,
+            mean_ns: mean(&times_ns),
+            p50_ns: percentile(&times_ns, 50.0),
+            p95_ns: percentile(&times_ns, 95.0),
+            min_ns: times_ns.iter().cloned().fold(f64::INFINITY, f64::min),
+            units_per_iter,
+        };
+        println!(
+            "{:<40} {:>12} iters  mean {:>12}  p50 {:>12}  p95 {:>12}{}",
+            format!("{}/{}", self.suite, name),
+            res.iters,
+            fmt_ns(res.mean_ns),
+            fmt_ns(res.p50_ns),
+            fmt_ns(res.p95_ns),
+            if units_per_iter > 0.0 {
+                format!("  {:>10.2e} units/s", res.throughput())
+            } else {
+                String::new()
+            }
+        );
+        self.results.push((name.to_string(), res.clone()));
+        res
+    }
+
+    /// Append all results to target/bench_results.csv.
+    pub fn finish(&self) {
+        let path = std::path::Path::new("target/bench_results.csv");
+        let new_file = !path.exists();
+        if let Some(dir) = path.parent() {
+            let _ = std::fs::create_dir_all(dir);
+        }
+        let mut body = String::new();
+        if new_file {
+            body.push_str("suite,name,iters,mean_ns,p50_ns,p95_ns,min_ns,units_per_iter\n");
+        }
+        for (name, r) in &self.results {
+            body.push_str(&format!(
+                "{},{},{},{:.1},{:.1},{:.1},{:.1},{}\n",
+                self.suite, name, r.iters, r.mean_ns, r.p50_ns, r.p95_ns, r.min_ns,
+                r.units_per_iter
+            ));
+        }
+        use std::io::Write;
+        if let Ok(mut f) = std::fs::OpenOptions::new().create(true).append(true).open(path) {
+            let _ = f.write_all(body.as_bytes());
+        }
+    }
+}
+
+pub fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.0} ns")
+    } else if ns < 1e6 {
+        format!("{:.2} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.3} s", ns / 1e9)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something() {
+        let opts = BenchOpts {
+            warmup: Duration::from_millis(5),
+            measure: Duration::from_millis(20),
+            min_iters: 3,
+        };
+        let mut b = Bench::with_opts("test", opts);
+        let mut acc = 0u64;
+        let r = b.bench("noop", || {
+            acc = black_box(acc.wrapping_add(1));
+        });
+        assert!(r.iters >= 3);
+        assert!(r.mean_ns >= 0.0);
+        assert!(r.p95_ns >= r.p50_ns);
+    }
+
+    #[test]
+    fn fmt_ranges() {
+        assert!(fmt_ns(500.0).contains("ns"));
+        assert!(fmt_ns(5e4).contains("µs"));
+        assert!(fmt_ns(5e7).contains("ms"));
+        assert!(fmt_ns(5e9).contains("s"));
+    }
+}

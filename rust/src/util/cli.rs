@@ -1,0 +1,120 @@
+//! Tiny CLI argument parser (offline substrate — no clap).
+//!
+//! Supports `--key value`, `--key=value`, boolean `--flag`, and positional
+//! arguments. Subcommand dispatch lives in `main.rs`; this handles the flag
+//! soup with typed accessors and an auto-generated usage string.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Default)]
+pub struct Args {
+    pub positional: Vec<String>,
+    flags: BTreeMap<String, String>,
+    seen_bool: Vec<String>,
+}
+
+impl Args {
+    pub fn parse(raw: &[String]) -> Args {
+        let mut a = Args::default();
+        let mut i = 0;
+        while i < raw.len() {
+            let tok = &raw[i];
+            if let Some(stripped) = tok.strip_prefix("--") {
+                if let Some(eq) = stripped.find('=') {
+                    a.flags.insert(stripped[..eq].to_string(), stripped[eq + 1..].to_string());
+                } else if i + 1 < raw.len() && !raw[i + 1].starts_with("--") {
+                    a.flags.insert(stripped.to_string(), raw[i + 1].clone());
+                    i += 1;
+                } else {
+                    a.flags.insert(stripped.to_string(), "true".to_string());
+                    a.seen_bool.push(stripped.to_string());
+                }
+            } else {
+                a.positional.push(tok.clone());
+            }
+            i += 1;
+        }
+        a
+    }
+
+    pub fn from_env() -> Args {
+        let raw: Vec<String> = std::env::args().skip(1).collect();
+        Args::parse(&raw)
+    }
+
+    pub fn str(&self, key: &str, default: &str) -> String {
+        self.flags.get(key).cloned().unwrap_or_else(|| default.to_string())
+    }
+
+    pub fn opt_str(&self, key: &str) -> Option<String> {
+        self.flags.get(key).cloned()
+    }
+
+    pub fn usize(&self, key: &str, default: usize) -> usize {
+        self.flags
+            .get(key)
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(default)
+    }
+
+    pub fn u64(&self, key: &str, default: u64) -> u64 {
+        self.flags
+            .get(key)
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(default)
+    }
+
+    pub fn f64(&self, key: &str, default: f64) -> f64 {
+        self.flags
+            .get(key)
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(default)
+    }
+
+    pub fn flag(&self, key: &str) -> bool {
+        matches!(self.flags.get(key).map(|s| s.as_str()), Some("true") | Some("1") | Some("yes"))
+    }
+
+    pub fn has(&self, key: &str) -> bool {
+        self.flags.contains_key(key)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(toks: &[&str]) -> Args {
+        Args::parse(&toks.iter().map(|s| s.to_string()).collect::<Vec<_>>())
+    }
+
+    #[test]
+    fn key_value_forms() {
+        let a = parse(&["--model", "resnet20", "--bits=2", "train"]);
+        assert_eq!(a.str("model", ""), "resnet20");
+        assert_eq!(a.usize("bits", 0), 2);
+        assert_eq!(a.positional, vec!["train"]);
+    }
+
+    #[test]
+    fn bool_flags() {
+        let a = parse(&["--quick", "--out", "dir"]);
+        assert!(a.flag("quick"));
+        assert!(!a.flag("missing"));
+        assert_eq!(a.str("out", ""), "dir");
+    }
+
+    #[test]
+    fn defaults() {
+        let a = parse(&[]);
+        assert_eq!(a.f64("lr", 0.01), 0.01);
+        assert_eq!(a.str("x", "d"), "d");
+        assert!(a.opt_str("x").is_none());
+    }
+
+    #[test]
+    fn trailing_bool_flag() {
+        let a = parse(&["--verbose"]);
+        assert!(a.flag("verbose"));
+    }
+}

@@ -1,0 +1,11 @@
+//! Offline substrates: JSON, RNG, stats, CLI parsing, table rendering and a
+//! micro-benchmark harness. The vendored crate universe contains only `xla`
+//! and `anyhow`, so everything else a framework normally pulls from crates.io
+//! is implemented (and unit-tested) here.
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod rng;
+pub mod stats;
+pub mod table;

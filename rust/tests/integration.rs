@@ -1,0 +1,358 @@
+//! Integration tests over the real AOT artifacts (run `make artifacts` first).
+//!
+//! These exercise the full rust↔XLA boundary: manifest contract, execution,
+//! cross-validation of the Pallas kernels against the pure-Rust quantizer,
+//! the trainer loop, checkpoint round-trips, the fp32→quant fine-tune
+//! mapping, the serve path and the sweep coordinator.
+
+use std::path::PathBuf;
+
+use lsqnet::config::ExperimentConfig;
+use lsqnet::data::{Dataset, SynthSpec};
+use lsqnet::runtime::Engine;
+use lsqnet::tensor::Tensor;
+use lsqnet::train::{TrainState, Trainer};
+
+fn artifacts() -> PathBuf {
+    let p = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    assert!(
+        p.join("manifest.json").exists(),
+        "artifacts/manifest.json missing — run `make artifacts` first"
+    );
+    p
+}
+
+fn quick_cfg(bits: u32) -> ExperimentConfig {
+    let mut cfg = ExperimentConfig::default();
+    cfg.model = "cnn_small".into();
+    cfg.bits = bits;
+    cfg.name = format!("it_q{bits}");
+    cfg.out_dir = std::env::temp_dir()
+        .join(format!("lsq_it_{}", std::process::id()))
+        .to_string_lossy()
+        .to_string();
+    cfg.artifacts_dir = artifacts().to_string_lossy().to_string();
+    cfg.data.train_size = 256;
+    cfg.data.test_size = 64;
+    cfg.train.epochs = 1;
+    cfg.train.max_steps = 3;
+    cfg
+}
+
+#[test]
+fn manifest_contract_holds() {
+    let engine = Engine::new(&artifacts()).unwrap();
+    let m = engine.manifest();
+    assert!(m.families.len() >= 2);
+    for fam in m.families.values() {
+        // params.bin loads and shapes line up
+        let params = m.load_initial_params(&fam.name).unwrap();
+        assert_eq!(params.len(), fam.param_names.len());
+        for (name, t) in fam.param_names.iter().zip(&params) {
+            assert_eq!(&t.shape, fam.shapes.get(name).unwrap(), "{name}");
+        }
+        // grad names are a subset of param names, states excluded
+        for g in &fam.grad_names {
+            assert!(fam.param_names.contains(g));
+            assert_ne!(fam.roles.get(g).map(String::as_str), Some("state"));
+        }
+    }
+    // every train artifact echoes params/moms in identical order
+    for a in m.artifacts.values().filter(|a| a.kind.starts_with("train")) {
+        let fam = m.family(a.family.as_deref().unwrap()).unwrap();
+        let p = fam.param_names.len();
+        let innames: Vec<&str> = a.inputs[..p].iter().map(|i| i.name.as_str()).collect();
+        let outnames: Vec<&str> = a.outputs[..p].iter().map(|o| o.name.as_str()).collect();
+        assert_eq!(innames, outnames, "{}", a.id);
+        assert_eq!(a.inputs[a.inputs.len() - 2].kind, "lr");
+        assert_eq!(a.inputs[a.inputs.len() - 1].kind, "wd");
+    }
+}
+
+#[test]
+fn fig2_artifact_matches_rust_quantizer_curves() {
+    let engine = Engine::new(&artifacts()).unwrap();
+    let c = lsqnet::analyze::curves::from_artifact(&engine, -1.0, 4.0).unwrap();
+    let r = lsqnet::analyze::curves::from_rust(-1.0, 4.0, c.v.len());
+    for i in 0..c.v.len() {
+        assert!((c.vhat[i] - r.vhat[i]).abs() < 1e-5, "vhat at v={}", c.v[i]);
+        assert!((c.ds_lsq[i] - r.ds_lsq[i]).abs() < 1e-5, "ds at v={}", c.v[i]);
+        assert!((c.ds_qil[i] - r.ds_qil[i]).abs() < 1e-5);
+        assert!((c.ds_pact[i] - r.ds_pact[i]).abs() < 1e-5);
+    }
+}
+
+#[test]
+fn qmm_artifact_matches_host_integer_math() {
+    let engine = Engine::new(&artifacts()).unwrap();
+    let id = engine
+        .manifest()
+        .artifacts
+        .values()
+        .find(|a| a.kind == "qmm")
+        .unwrap()
+        .id
+        .clone();
+    let exe = engine.load(&id).unwrap();
+    let (m, k) = (exe.meta.inputs[0].shape[0], exe.meta.inputs[0].shape[1]);
+    let n = exe.meta.inputs[1].shape[1];
+    let mut rng = lsqnet::util::rng::Pcg32::seeded(3);
+    let x: Vec<i32> = (0..m * k).map(|_| rng.below(7) as i32 - 3).collect();
+    let w: Vec<i32> = (0..k * n).map(|_| rng.below(7) as i32 - 3).collect();
+    let out = exe
+        .run(&[
+            Tensor::from_i32(&[m, k], x.clone()),
+            Tensor::from_i32(&[k, n], w.clone()),
+            Tensor::scalar_f32(0.25),
+            Tensor::scalar_f32(0.5),
+        ])
+        .unwrap();
+    let got = out[0].f32s().unwrap();
+    for r in 0..m {
+        for c in 0..n {
+            let acc: i64 = (0..k).map(|i| x[r * k + i] as i64 * w[i * n + c] as i64).sum();
+            let want = acc as f32 * 0.125;
+            assert!(
+                (got[r * n + c] - want).abs() < 1e-3,
+                "({r},{c}): {} vs {want}",
+                got[r * n + c]
+            );
+        }
+    }
+}
+
+#[test]
+fn trainer_reduces_loss_and_checkpoints_roundtrip() {
+    let engine = Engine::new(&artifacts()).unwrap();
+    let mut cfg = quick_cfg(2);
+    cfg.train.epochs = 5; // 256 imgs / b64 = 4 steps per epoch
+    cfg.train.max_steps = 10;
+    cfg.train.lr = 0.05;
+    cfg.data.noise = 0.4; // easier -> visible progress in 10 steps
+    let mut tr = Trainer::new(&engine, cfg.clone()).unwrap();
+    tr.verbose = false;
+    let rep = tr.fit().unwrap();
+    assert_eq!(rep.history.steps.len(), 10);
+    // Learning signal: the best later loss beats the first-step loss.
+    let first = rep.history.steps[0].loss;
+    let best_later = rep.history.steps[3..]
+        .iter()
+        .map(|s| s.loss)
+        .fold(f64::INFINITY, f64::min);
+    assert!(best_later < first, "loss {first} -> best {best_later}");
+
+    // checkpoint reload reproduces eval exactly
+    let st = TrainState::load(engine.manifest(), &rep.checkpoint).unwrap();
+    assert_eq!(st.step, 10);
+    let mut cfg2 = cfg.clone();
+    cfg2.init_from = rep.checkpoint.to_string_lossy().to_string();
+    let mut tr2 = Trainer::new(&engine, cfg2).unwrap();
+    let (l1, t1a, t5a) = tr.evaluate().unwrap();
+    let (l2, t1b, t5b) = tr2.evaluate().unwrap();
+    assert!((l1 - l2).abs() < 1e-5);
+    assert_eq!(t1a, t1b);
+    assert_eq!(t5a, t5b);
+    std::fs::remove_dir_all(&cfg.out_dir).ok();
+}
+
+#[test]
+fn training_is_deterministic_given_seed() {
+    let engine = Engine::new(&artifacts()).unwrap();
+    let run = |tag: &str| {
+        let mut cfg = quick_cfg(2);
+        cfg.name = format!("det_{tag}");
+        cfg.train.max_steps = 4;
+        let mut tr = Trainer::new(&engine, cfg.clone()).unwrap();
+        tr.verbose = false;
+        let rep = tr.fit().unwrap();
+        std::fs::remove_dir_all(&cfg.out_dir).ok();
+        rep.history.steps.iter().map(|s| s.loss).collect::<Vec<_>>()
+    };
+    assert_eq!(run("a"), run("b"));
+}
+
+#[test]
+fn fp32_finetune_mapping_copies_weights_and_reinits_steps() {
+    let engine = Engine::new(&artifacts()).unwrap();
+    let m = engine.manifest();
+
+    // fabricate an "fp32 checkpoint" with recognizable weights
+    let fam32 = m.family("cnn_small_q32").unwrap().clone();
+    let mut st32 = TrainState::fresh(m, "cnn_small_q32").unwrap();
+    let widx = fam32.param_names.iter().position(|n| n == "conv2.w").unwrap();
+    for v in st32.params[widx].f32s_mut().unwrap() {
+        *v *= 5.0;
+    }
+    let dir = std::env::temp_dir().join(format!("lsq_map_{}", std::process::id()));
+    let ck_path = dir.join("fp32.ckpt");
+    st32.save(&fam32, &ck_path).unwrap();
+
+    let mut cfg = quick_cfg(2);
+    cfg.init_from = ck_path.to_string_lossy().to_string();
+    let tr = Trainer::new(&engine, cfg).unwrap();
+
+    let fam2 = m.family("cnn_small_q2").unwrap().clone();
+    // weights copied
+    let w = tr.state.param(&fam2, "conv2.w").unwrap().f32s().unwrap().to_vec();
+    let src = st32.params[widx].f32s().unwrap();
+    assert_eq!(w, src);
+    // step size re-derived from the *scaled* weights: 2<|w|>/sqrt(Qp), Qp=1
+    let expect = 2.0 * lsqnet::util::stats::mean_abs(&w) as f32;
+    let sw = tr.state.param(&fam2, "conv2.sw").unwrap().item_f32().unwrap();
+    assert!((sw - expect).abs() / expect < 1e-3, "sw={sw} expect={expect}");
+    // activation steps positive and not the placeholder 1.0
+    let sa = tr.state.param(&fam2, "conv2.sa").unwrap().item_f32().unwrap();
+    assert!(sa > 0.0 && (sa - 1.0).abs() > 1e-6);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn eval_counts_are_consistent_with_logits() {
+    let engine = Engine::new(&artifacts()).unwrap();
+    let exe = engine.load_kind("eval", "cnn_small_q2", None, None).unwrap();
+    let m = engine.manifest();
+    let mut inputs = m.load_initial_params("cnn_small_q2").unwrap();
+    let cfg = quick_cfg(2);
+    let ds = Dataset::test(&cfg.data);
+    let b = ds.batch_from_indices(&(0..64).collect::<Vec<_>>(), 64);
+    let y = b.y.clone();
+    inputs.push(b.x);
+    inputs.push(b.y);
+    let out = exe.run(&inputs).unwrap();
+    let ncorrect = out[1].item_f32().unwrap() as usize;
+    let recount = lsqnet::train::metrics::topk_correct(
+        out[2].f32s().unwrap(),
+        y.i32s().unwrap(),
+        10,
+        1,
+        64,
+    );
+    assert_eq!(ncorrect, recount);
+}
+
+#[test]
+fn engine_validates_inputs() {
+    let engine = Engine::new(&artifacts()).unwrap();
+    let exe = engine.load_kind("eval", "cnn_small_q2", None, None).unwrap();
+    // wrong arity
+    assert!(exe.run(&[Tensor::scalar_f32(1.0)]).is_err());
+    // wrong shape in slot 0
+    let m = engine.manifest();
+    let mut inputs = m.load_initial_params("cnn_small_q2").unwrap();
+    let cfg = quick_cfg(2);
+    let ds = Dataset::test(&cfg.data);
+    let b = ds.batch_from_indices(&[0], 64);
+    inputs.push(b.x);
+    inputs.push(b.y);
+    inputs[0] = Tensor::zeros(&[1, 2, 3]);
+    assert!(exe.run(&inputs).is_err());
+}
+
+#[test]
+fn distill_artifact_trains() {
+    let engine = Engine::new(&artifacts()).unwrap();
+    if engine.manifest().artifacts.values().all(|a| a.kind != "train_kd") {
+        eprintln!("skipping: no train_kd artifact in this set");
+        return;
+    }
+    let mut cfg = quick_cfg(2);
+    cfg.name = "it_kd".into();
+    cfg.distill = true;
+    cfg.train.max_steps = 2;
+    let mut tr = Trainer::new(&engine, cfg.clone()).unwrap();
+    tr.verbose = false;
+    let rep = tr.fit().unwrap();
+    assert_eq!(rep.history.steps.len(), 2);
+    assert!(rep.history.steps[0].loss.is_finite());
+    std::fs::remove_dir_all(&cfg.out_dir).ok();
+}
+
+#[test]
+fn serve_round_trip_and_batching() {
+    use lsqnet::serve::{Server, ServerConfig};
+    let server = Server::start(ServerConfig {
+        artifacts_dir: artifacts(),
+        family: "cnn_small_q2".into(),
+        checkpoint: String::new(),
+        max_wait: std::time::Duration::from_millis(4),
+        queue_depth: 128,
+    })
+    .unwrap();
+    let spec = SynthSpec::new(10, 1.2, 3);
+    let mut lats = Vec::new();
+    std::thread::scope(|s| {
+        let hs: Vec<_> = (0..4)
+            .map(|t| {
+                let c = server.client.clone();
+                let spec = &spec;
+                s.spawn(move || {
+                    (0..10)
+                        .map(|i| c.infer(spec.generate_alloc(t * 1000 + i)).unwrap())
+                        .collect::<Vec<_>>()
+                })
+            })
+            .collect();
+        for h in hs {
+            lats.extend(h.join().unwrap());
+        }
+    });
+    let stats = server.stats();
+    server.stop();
+    assert_eq!(lats.len(), 40);
+    assert_eq!(stats.requests, 40);
+    assert!(stats.batches < 40, "batching should coalesce some requests");
+    for r in &lats {
+        assert_eq!(r.logits.len(), 10);
+        assert!(r.total_ms > 0.0);
+    }
+}
+
+#[test]
+fn serve_rejects_bad_image_size() {
+    use lsqnet::serve::{Server, ServerConfig};
+    let server = Server::start(ServerConfig {
+        artifacts_dir: artifacts(),
+        family: "cnn_small_q2".into(),
+        checkpoint: String::new(),
+        max_wait: std::time::Duration::from_millis(1),
+        queue_depth: 8,
+    })
+    .unwrap();
+    assert!(server.client.submit(vec![0.0; 7]).is_err());
+    server.stop();
+}
+
+#[test]
+fn sweep_coordinator_runs_parallel_jobs() {
+    let mut jobs = Vec::new();
+    for (i, bits) in [2u32, 4].iter().enumerate() {
+        let mut cfg = quick_cfg(*bits);
+        cfg.name = format!("sweep_it_{i}");
+        cfg.train.max_steps = 2;
+        jobs.push(lsqnet::coordinator::Job::new(cfg).tag("bits", bits));
+    }
+    let out_dir = quick_cfg(2).out_dir;
+    let rep = lsqnet::coordinator::run_sweep(&artifacts(), jobs, 2).unwrap();
+    assert_eq!(rep.results.len(), 2);
+    for r in &rep.results {
+        assert!(r.error.is_none(), "{:?}", r.error);
+        assert!(r.top1.is_finite());
+    }
+    assert!(rep.by_tags(&[("bits", "2")]).is_some());
+    assert!(rep.by_tags(&[("bits", "4")]).is_some());
+    std::fs::remove_dir_all(out_dir).ok();
+}
+
+#[test]
+fn rratio_diag_measures_imbalance_ordering() {
+    // Section 2.2 / Figure 4: R(g=1) >> R(g=1/sqrt(N*Qp)) ≈ 1.
+    let engine = Engine::new(&artifacts()).unwrap();
+    let mut cfg = quick_cfg(2);
+    cfg.data.train_size = 256;
+    let r_one = lsqnet::analyze::rratio::measure(&engine, &cfg, "one", 5).unwrap();
+    let r_full = lsqnet::analyze::rratio::measure(&engine, &cfg, "full", 5).unwrap();
+    let g1 = r_one.geomean_r();
+    let gf = r_full.geomean_r();
+    assert!(g1 > 50.0 * gf, "R(g=1)={g1:.1} should dwarf R(full)={gf:.3}");
+    assert!(gf > 0.01 && gf < 100.0, "R(full)={gf} should be near 1");
+}

@@ -1,0 +1,368 @@
+//! Property-based tests (in-repo mini-framework — the vendored crate
+//! universe has no proptest). Each property runs over many PCG-seeded
+//! random cases; failures print the offending case seed for replay.
+//!
+//! Coverage: quantizer algebraic invariants (Eqs. 1-3, 5), pack/unpack
+//! round-trips, JSON round-trips, checkpoint round-trips, dataset/batching
+//! invariants and coordinator-facing schedule/metric properties.
+
+use lsqnet::quant::lsq::*;
+use lsqnet::quant::pack;
+use lsqnet::util::json::Json;
+use lsqnet::util::rng::Pcg32;
+
+const CASES: u64 = 200;
+
+/// Run `f` over CASES seeded cases, reporting the failing seed.
+fn forall(name: &str, mut f: impl FnMut(&mut Pcg32)) {
+    for seed in 0..CASES {
+        let mut rng = Pcg32::seeded(0x5eed_0000 + seed);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| f(&mut rng)));
+        if let Err(e) = result {
+            panic!("property {name:?} failed at case seed {seed}: {e:?}");
+        }
+    }
+}
+
+fn rand_bits(rng: &mut Pcg32) -> (u32, bool) {
+    let bits = [2u32, 3, 4, 8][rng.below(4) as usize];
+    (bits, rng.bool(0.5))
+}
+
+fn rand_vals(rng: &mut Pcg32, n: usize, scale: f32) -> Vec<f32> {
+    (0..n).map(|_| rng.normal() * scale).collect()
+}
+
+#[test]
+fn prop_quantized_values_lie_on_grid_within_range() {
+    forall("on_grid", |rng| {
+        let (bits, signed) = rand_bits(rng);
+        let (qn, qp) = qrange(bits, signed);
+        let s = rng.range_f32(0.01, 2.0);
+        for &v in &rand_vals(rng, 64, 3.0) {
+            let q = quantize(v, s, qn, qp);
+            let level = q / s;
+            assert!((level - level.round()).abs() < 1e-4, "off-grid: {q} s={s}");
+            assert!(level >= -(qn as f32) - 1e-4 && level <= qp as f32 + 1e-4);
+        }
+    });
+}
+
+#[test]
+fn prop_quantization_is_idempotent() {
+    forall("idempotent", |rng| {
+        let (bits, signed) = rand_bits(rng);
+        let (qn, qp) = qrange(bits, signed);
+        let s = rng.range_f32(0.05, 1.0);
+        for &v in &rand_vals(rng, 32, 2.0) {
+            let once = quantize(v, s, qn, qp);
+            let twice = quantize(once, s, qn, qp);
+            assert!((once - twice).abs() < 1e-5);
+        }
+    });
+}
+
+#[test]
+fn prop_quantize_monotone_in_v() {
+    forall("monotone", |rng| {
+        let (bits, signed) = rand_bits(rng);
+        let (qn, qp) = qrange(bits, signed);
+        let s = rng.range_f32(0.05, 1.0);
+        let mut vals = rand_vals(rng, 32, 2.0);
+        vals.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let q: Vec<f32> = vals.iter().map(|&v| quantize(v, s, qn, qp)).collect();
+        for w in q.windows(2) {
+            assert!(w[1] >= w[0] - 1e-6, "non-monotone: {w:?}");
+        }
+    });
+}
+
+#[test]
+fn prop_quantization_error_bounded_inside_domain() {
+    // |vhat - v| <= s/2 for v strictly inside the clip range (Eq. 1-2).
+    forall("err_bound", |rng| {
+        let (bits, signed) = rand_bits(rng);
+        let (qn, qp) = qrange(bits, signed);
+        let s = rng.range_f32(0.05, 0.5);
+        for &v in &rand_vals(rng, 64, 1.0) {
+            let r = v / s;
+            if r > -(qn as f32) + 0.5 && r < qp as f32 - 0.5 {
+                let q = quantize(v, s, qn, qp);
+                assert!((q - v).abs() <= s / 2.0 + 1e-5, "v={v} q={q} s={s}");
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_grad_s_term_bounded_by_clip_levels() {
+    // Eq. 3: ds is in [-max(Qn, 1/2), max(Qp, 1/2)] — inside the domain the
+    // sawtooth is bounded by 1/2, saturating at -Qn / Qp outside.
+    forall("ds_bounds", |rng| {
+        let (bits, signed) = rand_bits(rng);
+        let (qn, qp) = qrange(bits, signed);
+        let s = rng.range_f32(0.05, 1.0);
+        for &v in &rand_vals(rng, 64, 5.0) {
+            let d = grad_s_term(v, s, qn, qp);
+            // lower bound: the sawtooth reaches -1/2 inside the domain even
+            // when Qn = 0 (unsigned), so the floor is -max(Qn, 1/2).
+            let lo = -(qn as f32).max(0.5);
+            assert!(d >= lo - 1e-5 && d <= qp as f32 + 1e-5, "d={d} lo={lo}");
+            let r = v / s;
+            if r > -(qn as f32) && r < qp as f32 {
+                assert!(d.abs() <= 0.5 + 1e-5, "inside-domain ds {d}");
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_vjp_respects_ste_masking() {
+    // grad_v is exactly cot inside the domain and 0 outside (Eq. 5).
+    forall("ste", |rng| {
+        let (bits, signed) = rand_bits(rng);
+        let (qn, qp) = qrange(bits, signed);
+        let s = rng.range_f32(0.05, 0.5);
+        let v = rand_vals(rng, 32, 2.0);
+        let cot = rand_vals(rng, 32, 1.0);
+        let (gv, _) = lsq_vjp(&v, s, qn, qp, 1.0, &cot);
+        for i in 0..v.len() {
+            let r = v[i] / s;
+            if r > -(qn as f32) && r < qp as f32 {
+                assert_eq!(gv[i], cot[i]);
+            } else {
+                assert_eq!(gv[i], 0.0);
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_grad_scale_matches_formula() {
+    forall("gscale", |rng| {
+        let n = 1 + rng.below(100_000) as usize;
+        let (bits, _) = rand_bits(rng);
+        let (_, qp) = qrange(bits, true);
+        let g = grad_scale(n, qp);
+        assert!((g * ((n as f64) * qp as f64).sqrt() - 1.0).abs() < 1e-12);
+    });
+}
+
+#[test]
+fn prop_step_init_scales_linearly() {
+    // step_init(k*v) = k * step_init(v) — homogeneity of 2<|v|>/sqrt(Qp).
+    forall("step_init_homog", |rng| {
+        let v = rand_vals(rng, 128, 1.0);
+        let k = rng.range_f32(0.1, 10.0);
+        let kv: Vec<f32> = v.iter().map(|x| x * k).collect();
+        let a = step_init(&v, 3);
+        let b = step_init(&kv, 3);
+        assert!((b - k * a).abs() / (k * a).abs().max(1e-6) < 1e-3);
+    });
+}
+
+#[test]
+fn prop_pack_unpack_roundtrip() {
+    forall("pack_roundtrip", |rng| {
+        let (bits, signed) = rand_bits(rng);
+        let (qn, qp) = qrange(bits, signed);
+        let n = 1 + rng.below(300) as usize;
+        let vals: Vec<i32> = (0..n)
+            .map(|_| {
+                let span = (qn + qp) as u32 + 1;
+                rng.below(span) as i32 - qn as i32
+            })
+            .collect();
+        let p = pack::pack(&vals, bits, signed, 0.3).unwrap();
+        assert_eq!(pack::unpack(&p), vals);
+        // density: exactly ceil(n*bits/8) bytes
+        assert_eq!(p.bytes.len(), (n * bits as usize + 7) / 8);
+    });
+}
+
+#[test]
+fn prop_pack_dequantize_equals_direct_quantize() {
+    forall("pack_eq_quant", |rng| {
+        let (bits, _) = rand_bits(rng);
+        let (qn, qp) = qrange(bits, true);
+        let s = rng.range_f32(0.05, 0.8);
+        let w = rand_vals(rng, 100, 1.0);
+        let p = pack::quantize_and_pack(&w, s, bits, true).unwrap();
+        let dq = pack::dequantize(&p);
+        for (a, b) in w.iter().zip(&dq) {
+            assert!((quantize(*a, s, qn, qp) - b).abs() < 1e-5);
+        }
+    });
+}
+
+#[test]
+fn prop_json_roundtrip_preserves_structure() {
+    fn rand_json(rng: &mut Pcg32, depth: usize) -> Json {
+        match if depth == 0 { rng.below(4) } else { rng.below(6) } {
+            0 => Json::Null,
+            1 => Json::Bool(rng.bool(0.5)),
+            2 => Json::Num((rng.normal() * 100.0).round() as f64 / 4.0),
+            3 => Json::Str(format!("s{}_\"esc\"\n{}", rng.below(100), rng.below(10))),
+            4 => Json::Arr((0..rng.below(4)).map(|_| rand_json(rng, depth - 1)).collect()),
+            _ => Json::Obj(
+                (0..rng.below(4))
+                    .map(|i| (format!("k{i}"), rand_json(rng, depth - 1)))
+                    .collect(),
+            ),
+        }
+    }
+    forall("json_roundtrip", |rng| {
+        let v = rand_json(rng, 3);
+        let text = v.to_string();
+        let back = Json::parse(&text).unwrap();
+        assert_eq!(v, back, "text: {text}");
+        let pretty = v.to_string_pretty();
+        assert_eq!(v, Json::parse(&pretty).unwrap());
+    });
+}
+
+#[test]
+fn prop_checkpoint_roundtrip_random_tensors() {
+    use lsqnet::tensor::{Checkpoint, Tensor};
+    forall("ckpt_roundtrip", |rng| {
+        let dir = std::env::temp_dir().join(format!(
+            "lsq_pt_{}_{}",
+            std::process::id(),
+            rng.next_u32()
+        ));
+        let path = dir.join("x.ckpt");
+        let mut ck = Checkpoint::new();
+        let ntensors = 1 + rng.below(5) as usize;
+        for i in 0..ntensors {
+            let rank = rng.below(4) as usize;
+            let shape: Vec<usize> = (0..rank).map(|_| 1 + rng.below(5) as usize).collect();
+            let n = shape.iter().product::<usize>().max(1);
+            if rng.bool(0.8) {
+                ck.insert(&format!("t{i}"), Tensor::from_f32(&shape, rand_vals(rng, n, 2.0)));
+            } else {
+                let vals: Vec<i32> = (0..n).map(|_| rng.next_u32() as i32).collect();
+                ck.insert(&format!("t{i}"), Tensor::from_i32(&shape, vals));
+            }
+        }
+        ck.meta.insert("k".into(), Json::str("v"));
+        ck.save(&path).unwrap();
+        let back = Checkpoint::load(&path).unwrap();
+        assert_eq!(back.tensors.len(), ntensors);
+        for (name, t) in &ck.tensors {
+            assert_eq!(back.get(name).unwrap(), t);
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    });
+}
+
+#[test]
+fn prop_eval_batches_partition_dataset() {
+    use lsqnet::config::DataConfig;
+    use lsqnet::data::Dataset;
+    forall("batch_partition", |rng| {
+        let cfg = DataConfig {
+            train_size: 32 + rng.below(200) as usize,
+            test_size: 1 + rng.below(200) as usize,
+            classes: 2 + rng.below(8) as usize,
+            noise: 0.5,
+            seed: rng.next_u64(),
+            augment: false,
+        };
+        let batch = 1 + rng.below(32) as usize;
+        let ds = Dataset::test(&cfg);
+        let batches = ds.eval_batches(batch);
+        let total: usize = batches.iter().map(|b| b.real).sum();
+        assert_eq!(total, cfg.test_size);
+        for b in &batches {
+            assert_eq!(b.x.shape[0], batch);
+            assert!(b.real >= 1 && b.real <= batch);
+            // labels in range
+            for &y in b.y.i32s().unwrap() {
+                assert!((y as usize) < cfg.classes);
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_lr_schedules_nonnegative_and_bounded() {
+    use lsqnet::config::{Schedule, TrainConfig};
+    use lsqnet::train::lr::lr_at;
+    forall("lr_bounds", |rng| {
+        let cfg = TrainConfig {
+            epochs: 1 + rng.below(50) as usize,
+            lr: rng.range_f32(1e-4, 1.0) as f64,
+            schedule: [Schedule::Cosine, Schedule::Step, Schedule::Const][rng.below(3) as usize],
+            step_every: 1 + rng.below(10) as usize,
+            ..Default::default()
+        };
+        let spe = 1 + rng.below(50) as usize;
+        let total = cfg.epochs * spe;
+        for step in (0..total).step_by((total / 17).max(1)) {
+            let v = lr_at(&cfg, spe, step);
+            assert!(v >= 0.0 && v <= cfg.lr + 1e-12, "lr {v} base {}", cfg.lr);
+        }
+    });
+}
+
+#[test]
+fn prop_topk_monotone_in_k() {
+    use lsqnet::train::metrics::topk_correct;
+    forall("topk_monotone", |rng| {
+        let rows = 1 + rng.below(16) as usize;
+        let classes = 2 + rng.below(10) as usize;
+        let logits = rand_vals(rng, rows * classes, 1.0);
+        let labels: Vec<i32> = (0..rows).map(|_| rng.below(classes as u32) as i32).collect();
+        let mut prev = 0;
+        for k in 1..=classes {
+            let c = topk_correct(&logits, &labels, classes, k, rows);
+            assert!(c >= prev && c <= rows);
+            prev = c;
+        }
+        assert_eq!(prev, rows, "top-#classes must be everything");
+    });
+}
+
+#[test]
+fn prop_model_size_monotone_in_bits() {
+    use lsqnet::quant::model_size::{model_bytes, LayerMeta};
+    forall("size_monotone", |rng| {
+        let nl = 1 + rng.below(8) as usize;
+        let weights: Vec<usize> = (0..nl).map(|_| 16 + rng.below(5000) as usize).collect();
+        let mut prev = 0usize;
+        for bits in [2u32, 3, 4, 8] {
+            let layers: Vec<LayerMeta> = weights
+                .iter()
+                .enumerate()
+                .map(|(i, &n)| LayerMeta { name: format!("l{i}"), n_weights: n, bits })
+                .collect();
+            let b = model_bytes(&layers);
+            assert!(b >= prev);
+            prev = b;
+        }
+    });
+}
+
+#[test]
+fn prop_augment_preserves_pixel_multiset_bounds() {
+    // Augmented images only contain pixels from the original (plus zero
+    // padding) — crop+mirror never invents values.
+    use lsqnet::data::augment::augment;
+    use lsqnet::data::SynthSpec;
+    forall("augment_values", |rng| {
+        let spec = SynthSpec::new(4, 0.8, rng.next_u64());
+        let orig = spec.generate_alloc(rng.below(1000) as usize);
+        let mut img = orig.clone();
+        let mut scratch = Vec::new();
+        augment(&mut img, &mut scratch, rng);
+        let mut allowed: Vec<u32> = orig.iter().map(|f| f.to_bits()).collect();
+        allowed.push(0.0f32.to_bits());
+        allowed.sort_unstable();
+        for px in &img {
+            assert!(
+                allowed.binary_search(&px.to_bits()).is_ok(),
+                "augment invented pixel {px}"
+            );
+        }
+    });
+}
