@@ -1,0 +1,26 @@
+#!/usr/bin/env bash
+# CI gate for the rust_pallas LSQ repo. Everything here runs with NO
+# XLA/PJRT libraries and no Python: the default feature set covers the
+# native packed-weight backend, the quant substrate, serving, and the docs
+# spine. (On a machine with the vendored `xla` crate + PJRT, append
+# `--features xla` runs for the artifact-driven paths.)
+set -euo pipefail
+cd "$(dirname "$0")"
+
+echo "== build (release, default features: native backend only) =="
+cargo build --release
+
+echo "== tests (unit + native backend + proptests + doctests) =="
+cargo test -q
+
+echo "== clippy (warnings are errors; missing_docs stays advisory while"
+echo "   the long-tail rustdoc pass is in flight — see ROADMAP) =="
+cargo clippy --all-targets -- -D warnings -A missing_docs
+
+echo "== rustdoc (docs must build; broken intra-doc links are errors) =="
+RUSTDOCFLAGS="-D rustdoc::broken-intra-doc-links" cargo doc --no-deps --quiet
+
+echo "== serve bench smoke (EXPERIMENTS.md §Perf L3, native, 2 replicas) =="
+LSQNET_BENCH_FAST=1 cargo bench --bench serve
+
+echo "ci.sh: all green"

@@ -1,34 +1,71 @@
 //! Serving scenario (Figure 1 deployed): stand up the dynamic-batching
-//! inference server over a 2-bit artifact, drive it with open-loop traffic
-//! from several client threads, and report latency percentiles, throughput
-//! and batch occupancy — then demonstrate the raw int-domain matmul (the
-//! `qmm` artifact) that the low-precision datapath of Figure 1 performs.
+//! inference server over a 2-bit family on the backend of your choice,
+//! drive it with traffic from several client threads, and report latency
+//! percentiles, throughput and batch occupancy — then demonstrate the raw
+//! int-domain matmul (fused unpack-and-dot over packed weights) that the
+//! low-precision datapath of Figure 1 performs.
 //!
-//! Run: `cargo run --release --example serve_quantized [-- --requests 512]`
+//! Runs out of the box with no artifacts: on the native backend, a missing
+//! `manifest.json` is replaced by a synthetic fixture family. Point
+//! `--artifacts` at a real AOT set (and optionally `--backend xla`,
+//! requires `--features xla`) to serve trained models.
+//!
+//! Run: `cargo run --release --example serve_quantized -- \
+//!       [--backend native|xla] [--replicas 2] [--requests 512]`
 
-use std::path::Path;
+use std::path::PathBuf;
 use std::time::Duration;
 
 use lsqnet::data::SynthSpec;
-use lsqnet::runtime::Engine;
+use lsqnet::quant::pack::quantize_and_pack;
+use lsqnet::runtime::native::fixture::{write_synthetic_family, FixtureSpec};
+use lsqnet::runtime::native::gemm::qgemm;
+use lsqnet::runtime::{BackendKind, BackendSpec};
 use lsqnet::serve::{Server, ServerConfig};
-use lsqnet::tensor::Tensor;
 use lsqnet::util::cli::Args;
 use lsqnet::util::stats::percentile;
 
 fn main() -> anyhow::Result<()> {
     let args = Args::from_env();
-    let artifacts = args.str("artifacts", "artifacts");
+    let mut artifacts = PathBuf::from(args.str("artifacts", "artifacts"));
     let n = args.usize("requests", 512);
     let threads = args.usize("threads", 4);
+    let kind = BackendKind::parse(&args.str("backend", "native"))?;
+    let replicas = args.usize("replicas", if kind == BackendKind::Native { 2 } else { 1 });
+    let mut family = args.str("family", "cnn_small_q2");
+
+    // Zero-setup path: fabricate the requested family when no artifacts
+    // exist (family names look like `model_qBITS`, e.g. `resnet8_q4`).
+    let mut fixture_dir = None;
+    if kind == BackendKind::Native && !artifacts.join("manifest.json").exists() {
+        let (model, qbits) = family
+            .rsplit_once("_q")
+            .and_then(|(m, b)| b.parse::<u32>().ok().map(|b| (m.to_string(), b)))
+            .ok_or_else(|| {
+                anyhow::anyhow!(
+                    "no {}/manifest.json and --family {family:?} is not of the form \
+                     model_qBITS, so a synthetic family cannot be generated",
+                    artifacts.display()
+                )
+            })?;
+        let dir = std::env::temp_dir().join(format!("lsq_example_{}", std::process::id()));
+        family = write_synthetic_family(&dir, &model, qbits, FixtureSpec::default())?;
+        println!(
+            "(no {}/manifest.json — using a synthetic {model} family at {qbits}-bit)",
+            artifacts.display()
+        );
+        artifacts = dir.clone();
+        fixture_dir = Some(dir);
+    }
 
     // -- dynamic-batching server over the quantized model --------------------
     let server = Server::start(ServerConfig {
-        artifacts_dir: artifacts.clone().into(),
-        family: args.str("family", "cnn_small_q2"),
+        backend: BackendSpec { kind, artifacts_dir: artifacts.clone() },
+        family: family.clone(),
         checkpoint: args.str("checkpoint", ""),
         max_wait: Duration::from_millis(args.u64("max-wait-ms", 2)),
         queue_depth: 512,
+        replicas,
     })?;
 
     let spec = SynthSpec::new(10, 0.35, 7);
@@ -66,7 +103,7 @@ fn main() -> anyhow::Result<()> {
     let stats = server.stats();
     server.stop();
 
-    println!("== serve_quantized ==");
+    println!("== serve_quantized ({} backend, {replicas} replica(s)) ==", kind.name());
     println!("requests      : {}", lats.len());
     println!("throughput    : {:.1} req/s", lats.len() as f64 / wall);
     println!("latency p50   : {:.2} ms", percentile(&lats, 50.0));
@@ -74,46 +111,43 @@ fn main() -> anyhow::Result<()> {
     println!("latency p99   : {:.2} ms", percentile(&lats, 99.0));
     println!("batches       : {} (mean occupancy {:.2})", stats.batches, stats.mean_occupancy());
     println!("mean exec     : {:.2} ms/batch", stats.mean_exec_ms());
-    println!("label agreement (untrained net, chance ~10%): {:.1}%",
-             100.0 * agree as f64 / lats.len() as f64);
+    println!(
+        "label agreement (untrained net, chance ~10%): {:.1}%",
+        100.0 * agree as f64 / lats.len().max(1) as f64
+    );
 
-    // -- raw Figure-1 int matmul ---------------------------------------------
-    let engine = Engine::new(Path::new(&artifacts))?;
-    let qmm_id = engine
-        .manifest()
-        .artifacts
-        .values()
-        .find(|a| a.kind == "qmm")
-        .map(|a| a.id.clone())
-        .ok_or_else(|| anyhow::anyhow!("no qmm artifact"))?;
-    let exe = engine.load(&qmm_id)?;
-    let (m, k) = (exe.meta.inputs[0].shape[0], exe.meta.inputs[0].shape[1]);
-    let nn = exe.meta.inputs[1].shape[1];
+    // -- raw Figure-1 int matmul over packed weights -------------------------
+    // The same kernel the native conv/dense layers call: activations on the
+    // Eq. 1 integer grid, weights unpacked tile-by-tile from 2-bit storage,
+    // i32 accumulation, one fp32 rescale (Eq. 2).
+    let (m, k, nn) = (128usize, 512usize, 256usize);
     let mut rng = lsqnet::util::rng::Pcg32::seeded(5);
-    let xbar: Vec<i32> = (0..m * k).map(|_| rng.below(15) as i32 - 7).collect();
-    let wbar: Vec<i32> = (0..k * nn).map(|_| rng.below(15) as i32 - 7).collect();
+    let w: Vec<f32> = (0..k * nn).map(|_| rng.normal() * 0.4).collect();
+    let (sw, sa) = (0.02f32, 0.05f32);
+    let packed = quantize_and_pack(&w, sw, 2, true)?;
+    let xbar: Vec<i32> = (0..m * k).map(|_| rng.below(4) as i32).collect();
+    let mut out = vec![0.0f32; m * nn];
     let t1 = std::time::Instant::now();
     let iters = 50;
-    let mut out = Vec::new();
     for _ in 0..iters {
-        out = exe.run(&[
-            Tensor::from_i32(&[m, k], xbar.clone()),
-            Tensor::from_i32(&[k, nn], wbar.clone()),
-            Tensor::scalar_f32(0.05),
-            Tensor::scalar_f32(0.02),
-        ])?;
+        qgemm(m, k, nn, &xbar, &packed, sa * sw, None, &mut out);
     }
     let ms = t1.elapsed().as_secs_f64() * 1e3 / iters as f64;
     // cross-check one entry against integer math on the host
+    let wbar = lsqnet::quant::pack::unpack(&packed);
     let host: i64 = (0..k).map(|i| xbar[i] as i64 * wbar[i * nn] as i64).sum();
-    let got = out[0].f32s()?[0];
+    let got = out[0];
     anyhow::ensure!(
-        (got - host as f32 * 0.05 * 0.02).abs() < 1e-3,
-        "qmm mismatch: {got} vs {}",
-        host as f32 * 0.001
+        (got - host as f32 * sa * sw).abs() < 1e-3,
+        "qgemm mismatch: {got} vs {}",
+        host as f32 * sa * sw
     );
-    println!("\n== Figure-1 int matmul ({m}x{k} @ {k}x{nn}, int32 accumulate) ==");
+    println!("\n== Figure-1 int matmul ({m}x{k} @ {k}x{nn}, 2-bit packed, i32 accumulate) ==");
     println!("exec          : {ms:.3} ms  ({:.2} GMAC/s)", (m * k * nn) as f64 / ms / 1e6);
     println!("host cross-check passed ✔");
+
+    if let Some(dir) = fixture_dir {
+        std::fs::remove_dir_all(dir).ok();
+    }
     Ok(())
 }

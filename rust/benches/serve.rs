@@ -1,51 +1,65 @@
-//! Serving-path benchmarks: dynamic-batcher latency/throughput under
-//! closed-loop load, batching overhead vs direct artifact execution, and
-//! the Figure-1 int-matmul kernel. Run: `cargo bench --bench serve`
+//! Serving-path benchmarks on the native packed-weight backend:
+//! dynamic-batcher latency/throughput under closed-loop load with multiple
+//! engine replicas, batching overhead vs direct engine execution, and the
+//! Figure-1 fused unpack-and-dot integer GEMM. Runs with zero Python/XLA
+//! setup (the synthetic fixture provides manifest + params); the XLA
+//! numbers live in `benches/runtime.rs` (`--features xla`).
+//!
+//! Run: `cargo bench --bench serve` (LSQNET_BENCH_FAST=1 for CI).
+//! These are the EXPERIMENTS.md §Perf L3 serving rows.
 
-use std::path::PathBuf;
 use std::time::Duration;
 
 use lsqnet::data::SynthSpec;
-use lsqnet::runtime::Engine;
+use lsqnet::quant::pack::quantize_and_pack;
+use lsqnet::runtime::native::fixture::{write_synthetic_family, FixtureSpec};
+use lsqnet::runtime::native::gemm::qgemm;
+use lsqnet::runtime::{Backend, BackendSpec};
 use lsqnet::serve::{Server, ServerConfig};
-use lsqnet::tensor::Tensor;
 use lsqnet::util::bench::{black_box, Bench};
+use lsqnet::util::rng::Pcg32;
 use lsqnet::util::stats::percentile;
 
-fn artifacts() -> PathBuf {
-    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
-}
+const REPLICAS: usize = 2;
 
 fn main() {
     let mut b = Bench::new("serve");
-    let engine = Engine::new(&artifacts()).expect("run `make artifacts` first");
+    let fast = std::env::var("LSQNET_BENCH_FAST").is_ok();
+
+    // Synthetic 2-bit cnn_small family, real 32x32x3 geometry.
+    let dir = std::env::temp_dir().join(format!("lsq_serve_bench_{}", std::process::id()));
+    let fixture = FixtureSpec { image: 32, channels: 3, num_classes: 10, batch: 8, seed: 42 };
+    let family = write_synthetic_family(&dir, "cnn_small", 2, fixture)
+        .expect("write synthetic family");
     let spec = SynthSpec::new(10, 1.2, 9);
 
-    // direct (unbatched-path) infer artifact execution as the baseline
-    let infer = engine.load_kind("infer", "cnn_small_q2", None, None).unwrap();
-    let params = engine.manifest().load_initial_params("cnn_small_q2").unwrap();
-    let batch = infer.meta.batch;
-    let mut x = Vec::new();
+    // -- direct engine execution as the no-batcher baseline ------------------
+    let mut backend = BackendSpec::native(&dir).open().unwrap();
+    let params = backend.manifest().load_initial_params(&family).unwrap();
+    backend.prepare_infer(&family, &params).unwrap();
+    let batch = backend.batch();
+    let image_len = 32 * 32 * 3;
+    let mut x = Vec::with_capacity(batch * image_len);
     for i in 0..batch {
         x.extend(spec.generate_alloc(i));
     }
-    let mut inputs = params.clone();
-    inputs.push(Tensor::from_f32(&[batch, 32, 32, 3], x));
-    let direct = b.bench_units(&format!("infer_direct_b{batch}"), batch as f64, || {
-        black_box(infer.run(black_box(&inputs)).unwrap());
+    let direct = b.bench_units(&format!("native_infer_direct_b{batch}"), batch as f64, || {
+        black_box(backend.infer(black_box(&x)).unwrap());
     });
+    drop(backend);
 
-    // server under closed-loop load from 4 threads
+    // -- server under closed-loop load, REPLICAS native engine replicas ------
     let server = Server::start(ServerConfig {
-        artifacts_dir: artifacts(),
-        family: "cnn_small_q2".into(),
+        backend: BackendSpec::native(&dir),
+        family: family.clone(),
         checkpoint: String::new(),
         max_wait: Duration::from_millis(2),
         queue_depth: 256,
+        replicas: REPLICAS,
     })
     .unwrap();
-    let n = if std::env::var("LSQNET_BENCH_FAST").is_ok() { 128 } else { 512 };
-    // Warm the serve thread (engine + artifact compile) before timing.
+    let n = if fast { 128 } else { 512 };
+    // Warm every replica path before timing.
     server.client.infer(spec.generate_alloc(0)).unwrap();
     let t0 = std::time::Instant::now();
     let mut lats: Vec<f64> = Vec::new();
@@ -71,9 +85,11 @@ fn main() {
     let p50 = percentile(&lats, 50.0);
     let p95 = percentile(&lats, 95.0);
     println!(
-        "serve/dynamic_batcher            {n} reqs  {:.1} req/s  p50 {p50:.2} ms  p95 {p95:.2} ms  occupancy {:.2}",
+        "serve/dynamic_batcher_x{REPLICAS}        {n} reqs  {:.1} req/s  p50 {p50:.2} ms  \
+         p95 {p95:.2} ms  occupancy {:.2}  ({} batches)",
         n as f64 / wall,
-        stats.mean_occupancy()
+        stats.mean_occupancy(),
+        stats.batches,
     );
     // batching overhead = p50 latency - per-batch exec time
     let direct_ms = direct.mean_ns / 1e6;
@@ -83,30 +99,21 @@ fn main() {
         direct_ms
     );
 
-    // Figure-1 int matmul artifact
-    if let Some(qmm) = engine
-        .manifest()
-        .artifacts
-        .values()
-        .find(|a| a.kind == "qmm")
-        .map(|a| a.id.clone())
-    {
-        let exe = engine.load(&qmm).unwrap();
-        let (m, k) = (exe.meta.inputs[0].shape[0], exe.meta.inputs[0].shape[1]);
-        let nn = exe.meta.inputs[1].shape[1];
-        let mut rng = lsqnet::util::rng::Pcg32::seeded(4);
-        let xb: Vec<i32> = (0..m * k).map(|_| rng.below(15) as i32 - 7).collect();
-        let wb: Vec<i32> = (0..k * nn).map(|_| rng.below(15) as i32 - 7).collect();
-        let args = [
-            Tensor::from_i32(&[m, k], xb),
-            Tensor::from_i32(&[k, nn], wb),
-            Tensor::scalar_f32(0.1),
-            Tensor::scalar_f32(0.1),
-        ];
-        b.bench_units(&format!("qmm_{m}x{k}x{nn}"), (m * k * nn) as f64, || {
-            black_box(exe.run(black_box(&args)).unwrap());
+    // -- Figure-1 int matmul: the fused unpack-and-dot kernel ----------------
+    let (m, k, nn) = if fast { (64, 256, 128) } else { (128, 512, 256) };
+    let mut rng = Pcg32::seeded(4);
+    for bits in [2u32, 4, 8] {
+        let w: Vec<f32> = (0..k * nn).map(|_| rng.normal() * 0.4).collect();
+        let packed = quantize_and_pack(&w, 0.05, bits, true).unwrap();
+        let (_, qp) = lsqnet::quant::lsq::qrange(bits, false);
+        let xb: Vec<i32> = (0..m * k).map(|_| (rng.below(qp as u32 + 1)) as i32).collect();
+        let mut out = vec![0.0f32; m * nn];
+        b.bench_units(&format!("qgemm_{bits}bit_{m}x{k}x{nn}"), (m * k * nn) as f64, || {
+            qgemm(m, k, nn, black_box(&xb), black_box(&packed), 0.01, None, &mut out);
+            black_box(&out);
         });
     }
 
     b.finish();
+    std::fs::remove_dir_all(&dir).ok();
 }

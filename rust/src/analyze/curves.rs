@@ -5,9 +5,12 @@
 //! tests): the `fig2` AOT artifact (the same jnp/Pallas code the training
 //! artifacts embed) and the pure-Rust quantizer in `quant::lsq`.
 
+#[cfg(feature = "xla")]
 use anyhow::Result;
 
+#[cfg(feature = "xla")]
 use crate::runtime::Engine;
+#[cfg(feature = "xla")]
 use crate::tensor::Tensor;
 
 #[derive(Clone, Debug)]
@@ -20,6 +23,7 @@ pub struct Curves {
 }
 
 /// Evaluate the curves through the AOT artifact.
+#[cfg(feature = "xla")]
 pub fn from_artifact(engine: &Engine, lo: f32, hi: f32) -> Result<Curves> {
     let exe = engine.load_kind("fig2", "", None, None).or_else(|_| {
         // fig2 has family=None; find by kind directly

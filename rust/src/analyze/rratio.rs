@@ -8,13 +8,20 @@
 //! one gscale mode into its own gradient, so we run a short training segment
 //! per mode and report per-layer mean R.
 
+#[cfg(feature = "xla")]
 use anyhow::{bail, Result};
 
+#[cfg(feature = "xla")]
 use crate::config::ExperimentConfig;
+#[cfg(feature = "xla")]
 use crate::data::Loader;
+#[cfg(feature = "xla")]
 use crate::runtime::Engine;
+#[cfg(feature = "xla")]
 use crate::tensor::Tensor;
+#[cfg(feature = "xla")]
 use crate::train::TrainState;
+#[cfg(feature = "xla")]
 use crate::util::stats::Welford;
 
 #[derive(Clone, Debug)]
@@ -42,6 +49,7 @@ impl RRatioReport {
 }
 
 /// Run `iters` diag steps for (model, bits, gscale) and fold R per layer.
+#[cfg(feature = "xla")]
 pub fn measure(
     engine: &Engine,
     cfg: &ExperimentConfig,

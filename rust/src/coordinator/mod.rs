@@ -2,26 +2,38 @@
 //!
 //! `PjRtClient` is `Rc`-backed (not `Send`), so parallelism is process-shaped
 //! the way a multi-host launcher would be: the leader owns a job queue;
-//! each worker thread builds its *own* `Engine` (its own PJRT client and
-//! compiled executables) and pulls jobs until the queue drains. Results flow
-//! back over a channel and are folded into a `SweepReport` keyed by job name.
+//! each worker thread builds its *own* engine via a shared factory (its own
+//! PJRT client and compiled executables — the same replica model the serve
+//! layer uses, see DESIGN.md §Backend-trait) and pulls jobs until the queue
+//! drains. Results flow back over a channel and are folded into a
+//! `SweepReport` keyed by job name.
 //!
 //! XLA:CPU itself parallelizes single steps across cores, so the default
 //! worker count is deliberately small (oversubscription hurts); sweeps of
 //! many small jobs benefit from 2-4 workers.
+//!
+//! Training requires the AOT artifacts, so `run_job` / `run_sweep` are
+//! only compiled with `--features xla`; the job/report types are always
+//! available.
 
+#[cfg(feature = "xla")]
 pub mod sweep;
 
 use std::collections::BTreeMap;
 use std::path::PathBuf;
+#[cfg(feature = "xla")]
 use std::sync::mpsc;
-use std::sync::{Arc, Mutex};
+#[cfg(feature = "xla")]
+use std::sync::Mutex;
+#[cfg(feature = "xla")]
 use std::time::Instant;
 
 use anyhow::Result;
 
 use crate::config::ExperimentConfig;
+#[cfg(feature = "xla")]
 use crate::runtime::Engine;
+#[cfg(feature = "xla")]
 use crate::train::Trainer;
 use crate::util::json::Json;
 
@@ -117,6 +129,7 @@ impl SweepReport {
 
 /// Execute one job on an existing engine (used by workers and directly by
 /// the CLI `train` command).
+#[cfg(feature = "xla")]
 pub fn run_job(engine: &Engine, job: &Job) -> JobResult {
     let t0 = Instant::now();
     let name = job.cfg.name.clone();
@@ -151,10 +164,16 @@ pub fn run_job(engine: &Engine, job: &Job) -> JobResult {
     }
 }
 
-/// Leader: run `jobs` across `workers` threads, each with its own Engine.
-/// Jobs run in queue order; results are returned in completion order and
-/// then sorted back to submission order.
-pub fn run_sweep(artifacts_dir: &std::path::Path, jobs: Vec<Job>, workers: usize) -> Result<SweepReport> {
+/// Leader: run `jobs` across `workers` threads, each building its own
+/// engine through `make_engine` (the factory is shared by reference; the
+/// engines it returns never cross threads). Jobs run in queue order;
+/// results are returned in completion order and then sorted back to
+/// submission order.
+#[cfg(feature = "xla")]
+pub fn run_sweep_with<F>(make_engine: F, jobs: Vec<Job>, workers: usize) -> Result<SweepReport>
+where
+    F: Fn() -> Result<Engine> + Sync,
+{
     let n = jobs.len();
     if n == 0 {
         return Ok(SweepReport::default());
@@ -162,56 +181,60 @@ pub fn run_sweep(artifacts_dir: &std::path::Path, jobs: Vec<Job>, workers: usize
     let workers = workers.clamp(1, n);
     println!("sweep: {n} jobs on {workers} worker(s)");
 
-    let queue: Arc<Mutex<Vec<(usize, Job)>>> =
-        Arc::new(Mutex::new(jobs.into_iter().enumerate().rev().collect()));
+    let queue: Mutex<Vec<(usize, Job)>> =
+        Mutex::new(jobs.into_iter().enumerate().rev().collect());
     let (tx, rx) = mpsc::channel::<(usize, JobResult)>();
-    let dir = artifacts_dir.to_path_buf();
+    let queue = &queue;
+    let make_engine = &make_engine;
 
-    let mut handles = Vec::new();
-    for wid in 0..workers {
-        let queue = queue.clone();
-        let tx = tx.clone();
-        let dir = dir.clone();
-        handles.push(
-            std::thread::Builder::new()
-                .name(format!("lsq-worker-{wid}"))
-                .spawn(move || {
-                    // Each worker owns its engine (non-Send client).
-                    let engine = match Engine::new(&dir) {
-                        Ok(e) => e,
-                        Err(e) => {
-                            eprintln!("worker {wid}: engine init failed: {e:#}");
-                            return;
-                        }
-                    };
-                    loop {
-                        let item = queue.lock().unwrap().pop();
-                        let (idx, job) = match item {
-                            Some(x) => x,
-                            None => break,
-                        };
-                        let started = Instant::now();
-                        let res = run_job(&engine, &job);
-                        println!(
-                            "  [worker {wid}] {} -> top1 {:.2}%{} ({:.1}s)",
-                            res.name,
-                            res.top1,
-                            res.error.as_deref().map(|e| format!(" ERROR: {e}")).unwrap_or_default(),
-                            started.elapsed().as_secs_f64()
-                        );
-                        if tx.send((idx, res)).is_err() {
-                            break;
-                        }
+    std::thread::scope(|s| {
+        for wid in 0..workers {
+            let tx = tx.clone();
+            s.spawn(move || {
+                // Each worker owns its engine (non-Send client).
+                let engine = match make_engine() {
+                    Ok(e) => e,
+                    Err(e) => {
+                        eprintln!("worker {wid}: engine init failed: {e:#}");
+                        return;
                     }
-                })?,
-        );
-    }
-    drop(tx);
+                };
+                loop {
+                    let item = queue.lock().unwrap().pop();
+                    let (idx, job) = match item {
+                        Some(x) => x,
+                        None => break,
+                    };
+                    let started = Instant::now();
+                    let res = run_job(&engine, &job);
+                    println!(
+                        "  [worker {wid}] {} -> top1 {:.2}%{} ({:.1}s)",
+                        res.name,
+                        res.top1,
+                        res.error.as_deref().map(|e| format!(" ERROR: {e}")).unwrap_or_default(),
+                        started.elapsed().as_secs_f64()
+                    );
+                    if tx.send((idx, res)).is_err() {
+                        break;
+                    }
+                }
+            });
+        }
+        drop(tx);
+    });
 
     let mut indexed: Vec<(usize, JobResult)> = rx.iter().collect();
-    for h in handles {
-        let _ = h.join();
-    }
     indexed.sort_by_key(|(i, _)| *i);
     Ok(SweepReport { results: indexed.into_iter().map(|(_, r)| r).collect() })
+}
+
+/// [`run_sweep_with`] over the default XLA engine factory for
+/// `artifacts_dir`.
+#[cfg(feature = "xla")]
+pub fn run_sweep(
+    artifacts_dir: &std::path::Path,
+    jobs: Vec<Job>,
+    workers: usize,
+) -> Result<SweepReport> {
+    run_sweep_with(|| Engine::new(artifacts_dir), jobs, workers)
 }

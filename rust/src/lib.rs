@@ -9,14 +9,32 @@
 //! * **Layer 3** — this crate: the coordinator that owns configs, data,
 //!   training loops, sweeps, analysis, serving and the repro harness.
 //!
-//! Entry points: the `lsqnet` binary (see `main.rs`) and the public modules
-//! below. Start with [`runtime::Engine`] + [`train::Trainer`].
+//! ## Execution backends
+//!
+//! Inference dispatches over the [`runtime::Backend`] trait (see DESIGN.md
+//! §Backend-trait):
+//!
+//! * [`runtime::NativeEngine`] — pure-Rust packed-weight integer inference
+//!   (Eq. 1/2 executed from 2/3/4/8-bit weights, `i32` accumulation).
+//!   Always available; needs no XLA, PJRT or Python.
+//! * `runtime::Engine` — the XLA/PJRT executor for the AOT HLO artifacts.
+//!   Training, sweeps and the repro harness live here, behind
+//!   `--features xla`.
+//!
+//! Entry points: the `lsqnet` binary (see `main.rs`), [`serve::Server`]
+//! for the multi-replica dynamic batcher, and (with `xla`)
+//! `runtime::Engine` + `train::Trainer`. See README.md for the
+//! command-line quickstart and EXPERIMENTS.md for the perf ladder the
+//! benches report against.
+
+#![warn(missing_docs)]
 
 pub mod analyze;
 pub mod config;
 pub mod coordinator;
 pub mod data;
 pub mod quant;
+#[cfg(feature = "xla")]
 pub mod repro;
 pub mod runtime;
 pub mod serve;

@@ -2,12 +2,16 @@
 //!
 //! Subcommands:
 //!   info                         inspect artifacts/manifest
-//!   train                        run one experiment (flags or --config)
-//!   eval                         evaluate a checkpoint on the test split
-//!   sweep --config <json>        run a list of experiment configs
-//!   repro <table1|...|all>       regenerate a paper table/figure
-//!   serve                        start the quantized-inference server demo
+//!   train                        run one experiment (flags or --config)   [xla]
+//!   eval                         evaluate a checkpoint on the test split  [xla]
+//!   sweep --config <json>        run a list of experiment configs        [xla]
+//!   repro <table1|...|all>       regenerate a paper table/figure         [xla]
+//!   serve                        start the quantized-inference server
+//!                                (native packed-weight backend by default)
 //!   pack                         quantize+pack a checkpoint, report size
+//!
+//! Commands tagged [xla] drive the AOT artifacts and require building with
+//! `--features xla`; everything else runs on the native backend.
 //!
 //! Common flags: --artifacts <dir> --out-dir <dir> --quick --workers N
 
@@ -15,13 +19,9 @@ use std::path::{Path, PathBuf};
 
 use anyhow::{bail, Context, Result};
 
-use lsqnet::config::ExperimentConfig;
-use lsqnet::coordinator::{run_sweep, Job};
-use lsqnet::runtime::Engine;
+use lsqnet::runtime::Manifest;
 use lsqnet::tensor::Checkpoint;
-use lsqnet::train::Trainer;
 use lsqnet::util::cli::Args;
-use lsqnet::util::json::Json;
 
 const USAGE: &str = "\
 lsqnet — Learned Step Size Quantization (ICLR 2020) coordinator
@@ -30,15 +30,19 @@ USAGE: lsqnet <command> [flags]
 
 COMMANDS
   info                     list artifacts, families and parameter counts
-  train                    train one model
+  train                    train one model                      [needs --features xla]
                            --model cnn_small --bits 2 [--method lsq]
                            [--gscale full] [--epochs N] [--lr X] [--wd X]
                            [--init-from ck.ckpt] [--distill] [--config c.json]
   eval                     --checkpoint runs/x/final.ckpt [--test-size N]
-  sweep                    --config sweep.json (array of experiment configs)
+                                                               [needs --features xla]
+  sweep                    --config sweep.json (array of configs)
+                                                               [needs --features xla]
   repro <target>           table1|table2|table3|table4|lr-ablation|
                            fig2|fig3|fig4|qerror|all   [--quick] [--workers N]
-  serve                    --family cnn_small_q2 [--checkpoint ck] [--requests N]
+                                                               [needs --features xla]
+  serve                    --family cnn_small_q2 [--backend native|xla]
+                           [--replicas N] [--checkpoint ck] [--requests N]
   pack                     --checkpoint runs/x/final.ckpt
   help                     this message
 
@@ -79,14 +83,7 @@ fn dispatch(cmd: &str, args: &Args) -> Result<()> {
         "train" => train(args),
         "eval" => eval(args),
         "sweep" => sweep(args),
-        "repro" => {
-            let target = args
-                .positional
-                .first()
-                .cloned()
-                .unwrap_or_else(|| "all".to_string());
-            lsqnet::repro::run(&target, args)
-        }
+        "repro" => repro(args),
         "serve" => serve(args),
         "pack" => pack(args),
         other => bail!("unknown command {other:?}; run `lsqnet help`"),
@@ -94,9 +91,8 @@ fn dispatch(cmd: &str, args: &Args) -> Result<()> {
 }
 
 fn info(args: &Args) -> Result<()> {
-    let engine = Engine::new(&artifacts_dir(args))?;
-    let m = engine.manifest();
-    println!("platform        : {}", engine.platform());
+    let m = Manifest::load(&artifacts_dir(args))?;
+    println!("backends        : native{}", if cfg!(feature = "xla") { ", xla" } else { "" });
     println!("artifact batch  : {}", m.batch);
     println!("families        : {}", m.families.len());
     for (name, f) in &m.families {
@@ -119,7 +115,9 @@ fn info(args: &Args) -> Result<()> {
     Ok(())
 }
 
-fn cfg_from_args(args: &Args) -> Result<ExperimentConfig> {
+#[cfg(feature = "xla")]
+fn cfg_from_args(args: &Args) -> Result<lsqnet::config::ExperimentConfig> {
+    use lsqnet::config::ExperimentConfig;
     let mut cfg = if let Some(path) = args.opt_str("config") {
         ExperimentConfig::load(Path::new(&path))?
     } else {
@@ -179,7 +177,18 @@ fn cfg_from_args(args: &Args) -> Result<ExperimentConfig> {
     Ok(cfg)
 }
 
+#[cfg(not(feature = "xla"))]
+fn needs_xla(cmd: &str) -> Result<()> {
+    bail!(
+        "`lsqnet {cmd}` drives the AOT XLA artifacts; rebuild with \
+         `cargo build --release --features xla` (see README.md feature matrix)"
+    )
+}
+
+#[cfg(feature = "xla")]
 fn train(args: &Args) -> Result<()> {
+    use lsqnet::runtime::Engine;
+    use lsqnet::train::Trainer;
     let cfg = cfg_from_args(args)?;
     let engine = Engine::new(Path::new(&cfg.artifacts_dir))?;
     println!(
@@ -202,7 +211,15 @@ fn train(args: &Args) -> Result<()> {
     Ok(())
 }
 
+#[cfg(not(feature = "xla"))]
+fn train(_args: &Args) -> Result<()> {
+    needs_xla("train")
+}
+
+#[cfg(feature = "xla")]
 fn eval(args: &Args) -> Result<()> {
+    use lsqnet::runtime::Engine;
+    use lsqnet::train::Trainer;
     let ckpt_path = args.opt_str("checkpoint").context("--checkpoint required")?;
     let engine = Engine::new(&artifacts_dir(args))?;
     let ck = Checkpoint::load(Path::new(&ckpt_path))?;
@@ -211,7 +228,7 @@ fn eval(args: &Args) -> Result<()> {
         .context("checkpoint missing family meta")?
         .to_string();
     let fam = engine.manifest().family(&family)?.clone();
-    let mut cfg = ExperimentConfig::default();
+    let mut cfg = lsqnet::config::ExperimentConfig::default();
     cfg.model = fam.model.clone();
     cfg.bits = fam.qbits;
     cfg.init_from = ckpt_path.clone();
@@ -225,7 +242,15 @@ fn eval(args: &Args) -> Result<()> {
     Ok(())
 }
 
+#[cfg(not(feature = "xla"))]
+fn eval(_args: &Args) -> Result<()> {
+    needs_xla("eval")
+}
+
+#[cfg(feature = "xla")]
 fn sweep(args: &Args) -> Result<()> {
+    use lsqnet::coordinator::{run_sweep, Job};
+    use lsqnet::util::json::Json;
     let path = args
         .opt_str("config")
         .context("--config required (JSON array of configs)")?;
@@ -234,7 +259,7 @@ fn sweep(args: &Args) -> Result<()> {
     let arr = j.as_arr().context("sweep config must be a JSON array")?;
     let mut jobs = Vec::new();
     for item in arr {
-        let cfg = ExperimentConfig::from_json(item)?;
+        let cfg = lsqnet::config::ExperimentConfig::from_json(item)?;
         jobs.push(Job::new(cfg));
     }
     let workers = args.usize("workers", 2);
@@ -245,18 +270,48 @@ fn sweep(args: &Args) -> Result<()> {
     Ok(())
 }
 
+#[cfg(not(feature = "xla"))]
+fn sweep(_args: &Args) -> Result<()> {
+    needs_xla("sweep")
+}
+
+#[cfg(feature = "xla")]
+fn repro(args: &Args) -> Result<()> {
+    let target = args
+        .positional
+        .first()
+        .cloned()
+        .unwrap_or_else(|| "all".to_string());
+    lsqnet::repro::run(&target, args)
+}
+
+#[cfg(not(feature = "xla"))]
+fn repro(_args: &Args) -> Result<()> {
+    needs_xla("repro")
+}
+
 fn serve(args: &Args) -> Result<()> {
+    use lsqnet::runtime::{BackendKind, BackendSpec};
     use lsqnet::serve::{Server, ServerConfig};
     let family = args.str("family", "cnn_small_q2");
     let n = args.usize("requests", 256);
+    let kind = BackendKind::parse(&args.str("backend", "native"))?;
+    let replicas = args.usize(
+        "replicas",
+        if kind == BackendKind::Native { 2 } else { 1 },
+    );
     let server = Server::start(ServerConfig {
-        artifacts_dir: artifacts_dir(args),
+        backend: BackendSpec { kind, artifacts_dir: artifacts_dir(args) },
         family: family.clone(),
         checkpoint: args.str("checkpoint", ""),
         max_wait: std::time::Duration::from_millis(args.u64("max-wait-ms", 2)),
         queue_depth: args.usize("queue-depth", 256),
+        replicas,
     })?;
-    println!("serving {family}; firing {n} requests from 4 client threads…");
+    println!(
+        "serving {family} on {} x{replicas}; firing {n} requests from 4 client threads…",
+        kind.name()
+    );
     let spec = lsqnet::data::SynthSpec::new(10, 0.35, 1);
     let t0 = std::time::Instant::now();
     let mut lat = Vec::new();
@@ -299,10 +354,10 @@ fn serve(args: &Args) -> Result<()> {
 
 fn pack(args: &Args) -> Result<()> {
     let ckpt_path = args.opt_str("checkpoint").context("--checkpoint required")?;
-    let engine = Engine::new(&artifacts_dir(args))?;
+    let manifest = Manifest::load(&artifacts_dir(args))?;
     let ck = Checkpoint::load(Path::new(&ckpt_path))?;
     let family = ck.meta_str("family").context("no family meta")?.to_string();
-    let fam = engine.manifest().family(&family)?;
+    let fam = manifest.family(&family)?;
     let mut total_packed = 0usize;
     let mut total_fp32 = 0usize;
     println!("packing {family} weights to integer storage (Eq. 1 + bit packing):");

@@ -10,6 +10,15 @@
 //!      and the serving path.
 
 /// (Qn, Qp) per Section 2: unsigned (activations) vs signed (weights).
+///
+/// ```
+/// use lsqnet::quant::lsq::qrange;
+///
+/// assert_eq!(qrange(2, true), (2, 1));    // signed 2-bit: v̄ ∈ [-2, 1]
+/// assert_eq!(qrange(3, false), (0, 7));   // unsigned 3-bit: v̄ ∈ [0, 7]
+/// assert_eq!(qrange(4, true), (8, 7));
+/// assert_eq!(qrange(8, false), (0, 255));
+/// ```
 pub fn qrange(bits: u32, signed: bool) -> (i64, i64) {
     assert!(bits >= 1 && bits <= 31, "bits out of range: {bits}");
     if signed {
@@ -44,6 +53,28 @@ pub fn quantize_vbar(v: f32, s: f32, qn: i64, qp: i64) -> f32 {
 }
 
 /// Eq. 2: vhat = vbar * s.
+///
+/// The full Eq. 1 → Eq. 2 round trip at 2, 3 and 4 bits — every value
+/// lands on the step grid `v̄ * s` and saturates at `-Qn*s` / `Qp*s`:
+///
+/// ```
+/// use lsqnet::quant::lsq::{qrange, quantize};
+///
+/// for bits in [2u32, 3, 4] {
+///     let (qn, qp) = qrange(bits, true);
+///     let s = 0.25;
+///     // on-grid values are fixed points
+///     assert_eq!(quantize(s * qp as f32, s, qn, qp), s * qp as f32);
+///     // everything clips to the representable range
+///     assert_eq!(quantize(1e9, s, qn, qp), s * qp as f32);
+///     assert_eq!(quantize(-1e9, s, qn, qp), -s * qn as f32);
+/// }
+/// // 2-bit signed, s = 0.25: 0.26 -> 0.25, -0.6 -> -0.5 (grid), 10 -> 0.25 (clip)
+/// let (qn, qp) = qrange(2, true);
+/// assert_eq!(quantize(0.26, 0.25, qn, qp), 0.25);
+/// assert_eq!(quantize(-0.6, 0.25, qn, qp), -0.5);
+/// assert_eq!(quantize(10.0, 0.25, qn, qp), 0.25);
+/// ```
 #[inline]
 pub fn quantize(v: f32, s: f32, qn: i64, qp: i64) -> f32 {
     quantize_vbar(v, s, qn, qp) * s

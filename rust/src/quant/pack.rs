@@ -19,6 +19,22 @@ pub struct Packed {
 }
 
 /// Pack `vbar` integer values (already in [-Qn, Qp]) at `bits` per value.
+///
+/// Round-trips exactly with [`unpack`] at every width — the Eq. 1 integer
+/// grid survives storage bit-for-bit:
+///
+/// ```
+/// use lsqnet::quant::pack::{pack, unpack};
+///
+/// for bits in [2u32, 3, 4] {
+///     let (qn, qp) = lsqnet::quant::lsq::qrange(bits, true);
+///     let vbar: Vec<i32> = (-qn..=qp).map(|v| v as i32).collect();
+///     let p = pack(&vbar, bits, true, 0.25).unwrap();
+///     // storage really is `bits` bits per value (plus the fp32 step)
+///     assert_eq!(p.bytes.len(), (vbar.len() * bits as usize + 7) / 8);
+///     assert_eq!(unpack(&p), vbar);
+/// }
+/// ```
 pub fn pack(vbar: &[i32], bits: u32, signed: bool, step: f32) -> Result<Packed> {
     if !(1..=8).contains(&bits) {
         bail!("pack supports 1..=8 bits, got {bits}");
@@ -43,21 +59,39 @@ pub fn pack(vbar: &[i32], bits: u32, signed: bool, step: f32) -> Result<Packed> 
 }
 
 /// Unpack back to integer values in [-Qn, Qp].
+///
+/// ```
+/// use lsqnet::quant::pack::{quantize_and_pack, unpack};
+///
+/// // Eq. 1 at 2-bit signed: v̄ = round(clip(v/s, -2, 1)), s = 0.25.
+/// let p = quantize_and_pack(&[0.26, -0.6, 0.0, 10.0], 0.25, 2, true).unwrap();
+/// assert_eq!(unpack(&p), vec![1, -2, 0, 1]);
+/// ```
 pub fn unpack(p: &Packed) -> Vec<i32> {
+    let mut out = vec![0i32; p.len];
+    unpack_range(p, 0, p.len, &mut out);
+    out
+}
+
+/// Unpack the `len` values starting at element `start` into `out[..len]`.
+/// This is the tile-granular primitive behind the native backend's fused
+/// unpack-and-dot GEMM ([`crate::runtime::native::gemm::qgemm`]).
+pub fn unpack_range(p: &Packed, start: usize, len: usize, out: &mut [i32]) {
+    assert!(start + len <= p.len, "unpack_range out of bounds");
+    assert!(out.len() >= len, "unpack_range output too small");
     let (qn, _) = super::lsq::qrange(p.bits, p.signed);
-    let mask = (1u64 << p.bits) - 1;
-    let mut out = Vec::with_capacity(p.len);
-    for i in 0..p.len {
-        let bitpos = i * p.bits as usize;
+    let bits = p.bits as usize;
+    let mask = (1u64 << bits) - 1;
+    for (j, o) in out.iter_mut().enumerate().take(len) {
+        let bitpos = (start + j) * bits;
         let byte = bitpos / 8;
         let shift = bitpos % 8;
         let mut u = (p.bytes[byte] as u64) >> shift;
-        if shift + p.bits as usize > 8 {
+        if shift + bits > 8 {
             u |= (p.bytes[byte + 1] as u64) << (8 - shift);
         }
-        out.push(((u & mask) as i64 - qn) as i32);
+        *o = ((u & mask) as i64 - qn) as i32;
     }
-    out
 }
 
 /// Dequantize a packed tensor back to f32 (vbar * s, Eq. 2).
@@ -117,6 +151,22 @@ mod tests {
         let p = quantize_and_pack(&w, 0.25, 2, true).unwrap();
         let dq = dequantize(&p);
         assert_eq!(dq, vec![0.25, -0.5, 0.0, 0.25]);
+    }
+
+    #[test]
+    fn unpack_range_matches_full_unpack_at_any_offset() {
+        for bits in 1..=8u32 {
+            let (qn, qp) = crate::quant::lsq::qrange(bits, true);
+            let vals: Vec<i32> = (0..100).map(|i| (i % (qn + qp + 1)) as i32 - qn as i32).collect();
+            let p = pack(&vals, bits, true, 1.0).unwrap();
+            let full = unpack(&p);
+            for start in [0usize, 1, 7, 13, 50, 99] {
+                let len = (100 - start).min(17);
+                let mut out = vec![0i32; len];
+                unpack_range(&p, start, len, &mut out);
+                assert_eq!(out, full[start..start + len], "bits={bits} start={start}");
+            }
+        }
     }
 
     #[test]

@@ -1,0 +1,149 @@
+//! Execution-backend abstraction: one trait, two engines.
+//!
+//! [`Backend`] is the contract the serving and benchmark layers program
+//! against — bind a family's parameters once ([`Backend::prepare_infer`]),
+//! then run batched image→logits inference ([`Backend::infer`]) many times.
+//! Two implementations exist:
+//!
+//! * [`crate::runtime::native::NativeEngine`] — pure-Rust packed-weight
+//!   integer inference. Always compiled in, needs only `manifest.json` +
+//!   the family's params bin (no HLO artifacts, no PJRT libraries).
+//! * `crate::runtime::Engine` — the XLA/PJRT artifact executor, behind
+//!   `--features xla`. Its client is `Rc`-backed and not `Send`, so one
+//!   engine is opened per worker thread.
+//!
+//! [`BackendSpec`] is the cheap `Send + Clone` description that worker
+//! threads use to open their own engine instance (see DESIGN.md
+//! §Backend-trait for the replica model this enables).
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Result};
+
+use crate::runtime::Manifest;
+use crate::tensor::Tensor;
+
+/// Which engine implementation a [`BackendSpec`] opens.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BackendKind {
+    /// Pure-Rust packed-weight inference (always available, `Send`).
+    Native,
+    /// XLA/PJRT artifact execution (requires building with `--features xla`).
+    Xla,
+}
+
+impl BackendKind {
+    /// Parse a CLI name: `"native"` or `"xla"`.
+    pub fn parse(s: &str) -> Result<BackendKind> {
+        match s {
+            "native" => Ok(BackendKind::Native),
+            "xla" => Ok(BackendKind::Xla),
+            other => bail!("unknown backend {other:?} (expected native|xla)"),
+        }
+    }
+
+    /// The CLI name of this kind.
+    pub fn name(self) -> &'static str {
+        match self {
+            BackendKind::Native => "native",
+            BackendKind::Xla => "xla",
+        }
+    }
+}
+
+/// Serializable description of an inference engine: which implementation,
+/// over which artifacts directory. `Send + Clone`, unlike the engines it
+/// opens — each serve replica / sweep worker calls [`BackendSpec::open`] on
+/// its own thread.
+#[derive(Clone, Debug)]
+pub struct BackendSpec {
+    /// Engine implementation to open.
+    pub kind: BackendKind,
+    /// Directory holding `manifest.json` (plus params bins and, for the XLA
+    /// backend, the HLO-text artifacts).
+    pub artifacts_dir: PathBuf,
+}
+
+impl BackendSpec {
+    /// Spec for the native packed-weight backend over `dir`.
+    pub fn native(dir: &Path) -> BackendSpec {
+        BackendSpec { kind: BackendKind::Native, artifacts_dir: dir.to_path_buf() }
+    }
+
+    /// Spec for the XLA/PJRT backend over `dir`.
+    pub fn xla(dir: &Path) -> BackendSpec {
+        BackendSpec { kind: BackendKind::Xla, artifacts_dir: dir.to_path_buf() }
+    }
+
+    /// Cheap availability check: errors when the spec names an engine this
+    /// build cannot open (XLA without `--features xla`). Unlike
+    /// [`BackendSpec::open`], this constructs nothing.
+    pub fn check_available(&self) -> Result<()> {
+        if self.kind == BackendKind::Xla && !cfg!(feature = "xla") {
+            bail!(
+                "this build has no XLA support; rebuild with `cargo build --features xla` \
+                 or use the native backend"
+            );
+        }
+        Ok(())
+    }
+
+    /// Open one engine instance. Call once per worker thread: the XLA
+    /// client must not cross threads, and the native engine keeps per-model
+    /// packed state that is cheapest left thread-local.
+    pub fn open(&self) -> Result<Box<dyn Backend>> {
+        match self.kind {
+            BackendKind::Native => Ok(Box::new(super::native::NativeEngine::new(
+                &self.artifacts_dir,
+            )?)),
+            BackendKind::Xla => self.open_xla(),
+        }
+    }
+
+    #[cfg(feature = "xla")]
+    fn open_xla(&self) -> Result<Box<dyn Backend>> {
+        Ok(Box::new(super::engine::Engine::new(&self.artifacts_dir)?))
+    }
+
+    #[cfg(not(feature = "xla"))]
+    fn open_xla(&self) -> Result<Box<dyn Backend>> {
+        bail!(
+            "this build has no XLA support; rebuild with `cargo build --features xla` \
+             or use the native backend"
+        )
+    }
+}
+
+/// A loaded inference engine. The call pattern is: open (via
+/// [`BackendSpec::open`]) → [`prepare_infer`](Backend::prepare_infer) once →
+/// [`infer`](Backend::infer) many times from the serving hot loop.
+pub trait Backend {
+    /// Short implementation name (`"native"` / `"xla-pjrt"`).
+    fn name(&self) -> &'static str;
+
+    /// The artifact/family contract this engine was opened over.
+    fn manifest(&self) -> &Manifest;
+
+    /// Bind `family` + `params` for inference. The native engine quantizes
+    /// and bit-packs the weights here (Eq. 1); the XLA engine compiles the
+    /// family's `infer` artifact. `params` follow `Family::param_names`
+    /// order, as loaded by `Manifest::load_initial_params` or from a
+    /// checkpoint.
+    fn prepare_infer(&mut self, family: &str, params: &[Tensor]) -> Result<()>;
+
+    /// Preferred batch size (rows per [`infer`](Backend::infer) call) after
+    /// `prepare_infer`.
+    fn batch(&self) -> usize;
+
+    /// Whether [`infer`](Backend::infer) requires exactly `batch()` rows.
+    /// XLA artifacts have a fixed input shape and need tail padding; the
+    /// native backend accepts any row count, so callers can skip the
+    /// padding work entirely.
+    fn fixed_batch(&self) -> bool {
+        true
+    }
+
+    /// Run one padded batch: `x` holds `batch() * image_len` floats in NHWC
+    /// layout. Returns `batch() * num_classes` logits, row-major.
+    fn infer(&mut self, x: &[f32]) -> Result<Vec<f32>>;
+}

@@ -17,6 +17,7 @@ use std::time::Instant;
 
 use anyhow::{anyhow, bail, Result};
 
+use super::backend::Backend;
 use super::manifest::{ArtifactMeta, Manifest};
 use crate::tensor::{DType, Tensor};
 
@@ -33,6 +34,16 @@ pub struct Engine {
     /// Compiled executables, keyed by artifact id (compile once, run many).
     cache: RefCell<HashMap<String, std::rc::Rc<Executable>>>,
     pub compile_ms: RefCell<f64>,
+    /// Inference state bound by `Backend::prepare_infer`.
+    prepared: Option<PreparedInfer>,
+}
+
+/// The family `infer` artifact + bound parameters behind the [`Backend`]
+/// implementation.
+struct PreparedInfer {
+    exe: std::rc::Rc<Executable>,
+    params: Vec<Tensor>,
+    input_shape: Vec<usize>,
 }
 
 pub struct Executable {
@@ -49,6 +60,7 @@ impl Engine {
             manifest,
             cache: RefCell::new(HashMap::new()),
             compile_ms: RefCell::new(0.0),
+            prepared: None,
         })
     }
 
@@ -92,6 +104,60 @@ impl Engine {
     ) -> Result<std::rc::Rc<Executable>> {
         let id = self.manifest.find(kind, family, method, gscale)?.id.clone();
         self.load(&id)
+    }
+}
+
+impl Backend for Engine {
+    fn name(&self) -> &'static str {
+        "xla-pjrt"
+    }
+
+    fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    fn prepare_infer(&mut self, family: &str, params: &[Tensor]) -> Result<()> {
+        let meta = self.manifest.find("infer", family, None, None)?.clone();
+        let exe = self.load(&meta.id)?;
+        let input_shape = meta
+            .inputs
+            .last()
+            .ok_or_else(|| anyhow!("{}: infer artifact has no inputs", meta.id))?
+            .shape
+            .clone();
+        self.prepared = Some(PreparedInfer { exe, params: params.to_vec(), input_shape });
+        Ok(())
+    }
+
+    fn batch(&self) -> usize {
+        self.prepared
+            .as_ref()
+            .and_then(|p| p.input_shape.first().copied())
+            .unwrap_or(self.manifest.batch)
+            .max(1)
+    }
+
+    fn infer(&mut self, x: &[f32]) -> Result<Vec<f32>> {
+        let p = self
+            .prepared
+            .as_ref()
+            .ok_or_else(|| anyhow!("call prepare_infer before infer"))?;
+        let want: usize = p.input_shape.iter().product();
+        if x.len() != want {
+            bail!(
+                "infer input has {} floats, artifact expects {want} (shape {:?})",
+                x.len(),
+                p.input_shape
+            );
+        }
+        let mut inputs = p.params.clone();
+        inputs.push(Tensor::from_f32(&p.input_shape, x.to_vec()));
+        let out = p.exe.run(&inputs)?;
+        Ok(out
+            .first()
+            .ok_or_else(|| anyhow!("infer artifact returned no outputs"))?
+            .f32s()?
+            .to_vec())
     }
 }
 

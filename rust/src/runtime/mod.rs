@@ -1,10 +1,21 @@
-//! Runtime layer: loads AOT HLO-text artifacts produced by
-//! `python/compile/aot.py` and executes them on the PJRT CPU client.
-//! See `manifest` for the calling-convention contract and `engine` for the
-//! execution path.
+//! Runtime layer: the execution backends behind the coordinator.
+//!
+//! * [`manifest`] — the typed calling-convention contract produced by
+//!   `python/compile/aot.py` (always available).
+//! * [`backend`] — the [`Backend`] trait + [`BackendSpec`] the serving and
+//!   bench layers dispatch over.
+//! * [`native`] — pure-Rust packed-weight inference (always available).
+//! * `engine` — the XLA/PJRT executor for the AOT HLO artifacts
+//!   (train/eval/diag paths), behind `--features xla`.
 
+pub mod backend;
+#[cfg(feature = "xla")]
 pub mod engine;
 pub mod manifest;
+pub mod native;
 
+pub use backend::{Backend, BackendKind, BackendSpec};
+#[cfg(feature = "xla")]
 pub use engine::{Engine, Executable};
 pub use manifest::{ArtifactMeta, Family, IoSpec, Manifest};
+pub use native::NativeEngine;

@@ -1,0 +1,361 @@
+//! Rust-side mirror of `python/compile/models.py`: the architecture IR that
+//! the native backend interprets.
+//!
+//! A family's `model` string plus the manifest-level input geometry fully
+//! determine the layer graph, parameter names and per-matmul bit widths, so
+//! the native engine can rebuild the forward pass without any HLO artifact.
+//! The matmul ordering and scope naming here must match the Python `Ctx`
+//! exactly — parameter names like `s0b0.conv1.sw` are the contract between
+//! `params.bin` / checkpoints and this builder (asserted by the native
+//! parity tests).
+
+use anyhow::{bail, Result};
+
+/// One (possibly quantized) 2-D convolution: NHWC input × HWIO weights,
+/// SAME padding, no bias (as in the Python model zoo).
+#[derive(Clone, Debug)]
+pub struct ConvSpec {
+    /// Scope name, e.g. `"conv1"` or `"s0b0.proj"`; parameters are
+    /// `{name}.w`, `{name}.sw`, `{name}.sa`.
+    pub name: String,
+    /// Kernel height.
+    pub kh: usize,
+    /// Kernel width.
+    pub kw: usize,
+    /// Stride (same in both spatial dims).
+    pub stride: usize,
+    /// Input channels.
+    pub in_ch: usize,
+    /// Output channels.
+    pub out_ch: usize,
+    /// Whether the input activations quantize signed (true only where the
+    /// layer consumes the raw network input) or unsigned (post-ReLU).
+    pub signed_act: bool,
+    /// Matmul precision for both weights and input activations; 32 means
+    /// full precision (no quantizer parameters exist).
+    pub bits: u32,
+}
+
+/// One (possibly quantized) fully connected layer with bias.
+#[derive(Clone, Debug)]
+pub struct DenseSpec {
+    /// Scope name; parameters are `{name}.w`, `{name}.sw`, `{name}.sa`,
+    /// `{name}.b`.
+    pub name: String,
+    /// Input features.
+    pub in_dim: usize,
+    /// Output features.
+    pub out_dim: usize,
+    /// Signed vs unsigned input-activation quantization.
+    pub signed_act: bool,
+    /// Matmul precision (32 = full precision).
+    pub bits: u32,
+}
+
+/// Batch normalization over the trailing channel dim (eval mode: running
+/// stats).
+#[derive(Clone, Debug)]
+pub struct BnSpec {
+    /// Scope name; parameters are `{name}.{gamma,beta,rmean,rvar}`.
+    pub name: String,
+    /// Channel count.
+    pub ch: usize,
+}
+
+/// Pre-activation ResNet basic block (He et al. 2016), mirroring
+/// `models._preact_block`: `bn1 → relu`, projection shortcut from the
+/// pre-activated tensor when shape changes, `conv1 → bn2 → relu → conv2`,
+/// then the residual add.
+#[derive(Clone, Debug)]
+pub struct PreactSpec {
+    /// First batch norm (over the block input).
+    pub bn1: BnSpec,
+    /// 1×1 projection shortcut, present iff stride ≠ 1 or channels change.
+    pub proj: Option<ConvSpec>,
+    /// First 3×3 conv (carries the stride).
+    pub conv1: ConvSpec,
+    /// Mid-block batch norm.
+    pub bn2: BnSpec,
+    /// Second 3×3 conv.
+    pub conv2: ConvSpec,
+}
+
+/// One node of the interpreted forward pass.
+#[derive(Clone, Debug)]
+pub enum ArchOp {
+    /// Quantized/fp32 convolution.
+    Conv(ConvSpec),
+    /// Quantized/fp32 dense layer.
+    Dense(DenseSpec),
+    /// Batch normalization (eval mode).
+    BatchNorm(BnSpec),
+    /// Elementwise `max(x, 0)`.
+    Relu,
+    /// 2×2 max pooling, stride 2, VALID.
+    MaxPool2,
+    /// Mean over the spatial dims: `[b,h,w,c] → [b,c]`.
+    GlobalAvgPool,
+    /// Reshape `[b,h,w,c] → [b,h*w*c]`.
+    Flatten,
+    /// Pre-activation residual block.
+    Preact(Box<PreactSpec>),
+}
+
+/// A fully specified architecture: op list plus the metadata the engine and
+/// fixture writer need.
+#[derive(Clone, Debug)]
+pub struct Arch {
+    /// Model zoo name this was built from (`"mlp"`, `"cnn_small"`, ...).
+    pub model: String,
+    /// Ops in execution order.
+    pub ops: Vec<ArchOp>,
+    /// Number of quantizable matmul layers (conv + dense), matching the
+    /// manifest's `n_matmul`.
+    pub n_matmul: usize,
+    /// Input image side length.
+    pub image: usize,
+    /// Input channels.
+    pub channels: usize,
+    /// Logit count.
+    pub num_classes: usize,
+}
+
+fn conv(
+    name: impl Into<String>,
+    in_ch: usize,
+    out_ch: usize,
+    (kh, kw): (usize, usize),
+    stride: usize,
+    signed_act: bool,
+    bits: u32,
+) -> ConvSpec {
+    ConvSpec { name: name.into(), kh, kw, stride, in_ch, out_ch, signed_act, bits }
+}
+
+fn bn(name: impl Into<String>, ch: usize) -> BnSpec {
+    BnSpec { name: name.into(), ch }
+}
+
+/// Build the architecture for `model` at `qbits`. Matches
+/// `python/compile/models.py` layer-for-layer, including the paper's rule
+/// that the first and last matmul layers are pinned to at least 8 bits
+/// (Section 2.3).
+pub fn build(
+    model: &str,
+    image: usize,
+    channels: usize,
+    num_classes: usize,
+    qbits: u32,
+) -> Result<Arch> {
+    let b = if qbits >= 32 { 32 } else { qbits };
+    let mut ops: Vec<ArchOp> = Vec::new();
+    match model {
+        "mlp" => {
+            let flat = image * image * channels;
+            ops.push(ArchOp::Flatten);
+            ops.push(ArchOp::Dense(DenseSpec {
+                name: "fc1".into(),
+                in_dim: flat,
+                out_dim: 256,
+                signed_act: true,
+                bits: b,
+            }));
+            ops.push(ArchOp::Relu);
+            ops.push(ArchOp::Dense(DenseSpec {
+                name: "fc2".into(),
+                in_dim: 256,
+                out_dim: num_classes,
+                signed_act: false,
+                bits: b,
+            }));
+        }
+        "cnn_small" => {
+            let plan = [
+                ("conv1", channels, 16usize, 1usize, true),
+                ("conv2", 16, 32, 2, false),
+                ("conv3", 32, 32, 1, false),
+                ("conv4", 32, 64, 2, false),
+            ];
+            for (i, (name, ic, oc, stride, signed)) in plan.into_iter().enumerate() {
+                ops.push(ArchOp::Conv(conv(name, ic, oc, (3, 3), stride, signed, b)));
+                ops.push(ArchOp::BatchNorm(bn(format!("bn{}", i + 1), oc)));
+                ops.push(ArchOp::Relu);
+            }
+            ops.push(ArchOp::GlobalAvgPool);
+            ops.push(ArchOp::Dense(DenseSpec {
+                name: "fc".into(),
+                in_dim: 64,
+                out_dim: num_classes,
+                signed_act: false,
+                bits: b,
+            }));
+        }
+        "resnet8" | "resnet14" | "resnet20" | "resnet32" => {
+            let blocks_per_stage = match model {
+                "resnet8" => 1,
+                "resnet14" => 2,
+                "resnet20" => 3,
+                _ => 5,
+            };
+            let widths = [16usize, 32, 64];
+            ops.push(ArchOp::Conv(conv("stem", channels, widths[0], (3, 3), 1, true, b)));
+            let mut cur = widths[0];
+            for (stage, &ch) in widths.iter().enumerate() {
+                for blk in 0..blocks_per_stage {
+                    let stride = if stage > 0 && blk == 0 { 2 } else { 1 };
+                    let name = format!("s{stage}b{blk}");
+                    let proj = if stride != 1 || cur != ch {
+                        Some(conv(format!("{name}.proj"), cur, ch, (1, 1), stride, false, b))
+                    } else {
+                        None
+                    };
+                    ops.push(ArchOp::Preact(Box::new(PreactSpec {
+                        bn1: bn(format!("{name}.bn1"), cur),
+                        proj,
+                        conv1: conv(format!("{name}.conv1"), cur, ch, (3, 3), stride, false, b),
+                        bn2: bn(format!("{name}.bn2"), ch),
+                        conv2: conv(format!("{name}.conv2"), ch, ch, (3, 3), 1, false, b),
+                    })));
+                    cur = ch;
+                }
+            }
+            ops.push(ArchOp::BatchNorm(bn("bn_final", cur)));
+            ops.push(ArchOp::Relu);
+            ops.push(ArchOp::GlobalAvgPool);
+            ops.push(ArchOp::Dense(DenseSpec {
+                name: "fc".into(),
+                in_dim: cur,
+                out_dim: num_classes,
+                signed_act: false,
+                bits: b,
+            }));
+        }
+        "vgg_small" => {
+            let cfg = [(32usize, 2usize), (64, 2), (128, 2)];
+            let mut cur = channels;
+            let mut side = image;
+            let mut first = true;
+            for (stage, (ch, reps)) in cfg.into_iter().enumerate() {
+                for r in 0..reps {
+                    ops.push(ArchOp::Conv(conv(
+                        format!("conv{stage}_{r}"),
+                        cur,
+                        ch,
+                        (3, 3),
+                        1,
+                        first,
+                        b,
+                    )));
+                    first = false;
+                    ops.push(ArchOp::BatchNorm(bn(format!("bn{stage}_{r}"), ch)));
+                    ops.push(ArchOp::Relu);
+                    cur = ch;
+                }
+                ops.push(ArchOp::MaxPool2);
+                side /= 2;
+            }
+            ops.push(ArchOp::Flatten);
+            ops.push(ArchOp::Dense(DenseSpec {
+                name: "fc1".into(),
+                in_dim: cur * side * side,
+                out_dim: 128,
+                signed_act: false,
+                bits: b,
+            }));
+            ops.push(ArchOp::Relu);
+            ops.push(ArchOp::Dense(DenseSpec {
+                name: "fc2".into(),
+                in_dim: 128,
+                out_dim: num_classes,
+                signed_act: false,
+                bits: b,
+            }));
+        }
+        other => bail!(
+            "model {other:?} is not supported by the native backend \
+             (have: mlp, cnn_small, resnet8/14/20/32, vgg_small)"
+        ),
+    }
+
+    let mut arch =
+        Arch { model: model.to_string(), ops, n_matmul: 0, image, channels, num_classes };
+    let mut count = 0usize;
+    for_each_matmul_bits(&mut arch.ops, &mut |_| count += 1);
+    arch.n_matmul = count;
+    // First/last matmul pinned to >= 8 bits (paper Section 2.3), exactly as
+    // Ctx.layer_bits does on the Python side.
+    if qbits < 32 {
+        let pinned = qbits.max(8);
+        let (mut idx, last) = (0usize, count - 1);
+        for_each_matmul_bits(&mut arch.ops, &mut |bits| {
+            if idx == 0 || idx == last {
+                *bits = pinned;
+            }
+            idx += 1;
+        });
+    }
+    Ok(arch)
+}
+
+/// Visit the `bits` field of every matmul layer in execution order — the
+/// same order `Ctx._matmul_index` counts on the Python side (within a
+/// pre-act block: proj, conv1, conv2).
+pub fn for_each_matmul_bits(ops: &mut [ArchOp], f: &mut impl FnMut(&mut u32)) {
+    for op in ops {
+        match op {
+            ArchOp::Conv(c) => f(&mut c.bits),
+            ArchOp::Dense(d) => f(&mut d.bits),
+            ArchOp::Preact(p) => {
+                if let Some(proj) = &mut p.proj {
+                    f(&mut proj.bits);
+                }
+                f(&mut p.conv1.bits);
+                f(&mut p.conv2.bits);
+            }
+            _ => {}
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn collect_bits(arch: &mut Arch) -> Vec<u32> {
+        let mut v = Vec::new();
+        for_each_matmul_bits(&mut arch.ops, &mut |b| v.push(*b));
+        v
+    }
+
+    #[test]
+    fn cnn_small_layout_and_bit_pinning() {
+        let mut a = build("cnn_small", 32, 3, 10, 2).unwrap();
+        assert_eq!(a.n_matmul, 5);
+        assert_eq!(collect_bits(&mut a), vec![8, 2, 2, 2, 8]);
+    }
+
+    #[test]
+    fn mlp_two_layers_both_pinned() {
+        let mut a = build("mlp", 32, 3, 10, 2).unwrap();
+        assert_eq!(a.n_matmul, 2);
+        assert_eq!(collect_bits(&mut a), vec![8, 8]);
+    }
+
+    #[test]
+    fn resnet20_matmul_count() {
+        // stem + 9 blocks x (conv1, conv2) + 2 projections (stage 1, 2) + fc
+        let a = build("resnet20", 32, 3, 10, 4).unwrap();
+        assert_eq!(a.n_matmul, 1 + 9 * 2 + 2 + 1);
+    }
+
+    #[test]
+    fn fp32_build_has_no_quantizers() {
+        let mut a = build("cnn_small", 32, 3, 10, 32).unwrap();
+        assert!(collect_bits(&mut a).iter().all(|&b| b == 32));
+    }
+
+    #[test]
+    fn unknown_model_rejected() {
+        assert!(build("sqnxt_small", 32, 3, 10, 2).is_err());
+    }
+}

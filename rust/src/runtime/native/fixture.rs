@@ -1,0 +1,213 @@
+//! Synthetic artifact fixtures: write a `manifest.json` + initial
+//! `params.bin` for one model family so the native backend (and the serve
+//! stack above it) can run with **zero** Python/XLA steps.
+//!
+//! The parameter registration order, naming and roles replicate
+//! `python/compile/layers.Ctx` exactly (conv: `w, sw, sa`; dense:
+//! `w, sw, sa, b`; batch norm: `gamma, beta, rmean, rvar`), so a fixture
+//! family is indistinguishable from a real AOT one to everything that
+//! consumes the manifest. Used by `tests/native.rs`, `benches/serve.rs`
+//! and the `serve_quantized` example's no-artifacts path.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::quant::lsq::{qrange, step_init};
+use crate::util::json::Json;
+use crate::util::rng::Pcg32;
+
+use super::arch::{self, ArchOp, BnSpec, ConvSpec, DenseSpec};
+
+struct ParamWriter {
+    rng: Pcg32,
+    names: Vec<String>,
+    roles: BTreeMap<String, Json>,
+    shapes: BTreeMap<String, Json>,
+    data: Vec<f32>,
+    layer_meta: Vec<Json>,
+}
+
+impl ParamWriter {
+    fn push(&mut self, name: String, role: &str, shape: &[usize], values: Vec<f32>) {
+        assert_eq!(values.len(), shape.iter().product::<usize>().max(1), "{name}");
+        self.roles.insert(name.clone(), Json::str(role));
+        self.shapes
+            .insert(name.clone(), Json::Arr(shape.iter().map(|&d| Json::num(d as f64)).collect()));
+        self.names.push(name);
+        self.data.extend_from_slice(&values);
+    }
+
+    fn kaiming(&mut self, shape: &[usize]) -> Vec<f32> {
+        let fan_in: usize = shape[..shape.len() - 1].iter().product();
+        let scale = (2.0 / fan_in.max(1) as f32).sqrt();
+        (0..shape.iter().product::<usize>()).map(|_| self.rng.normal() * scale).collect()
+    }
+
+    fn matmul(&mut self, name: &str, shape: &[usize], bits: u32, signed_act: bool) -> Vec<f32> {
+        let w = self.kaiming(shape);
+        self.push(format!("{name}.w"), "weight", shape, w.clone());
+        if bits < 32 {
+            let (_, qp_w) = qrange(bits, true);
+            let sw = step_init(&w, qp_w).max(1e-6);
+            // Activation steps: the Section-2.1 data-driven init assuming
+            // standardized inputs (mean |v| ~ 0.8).
+            let (_, qp_a) = qrange(bits, signed_act);
+            let sa = (2.0 * 0.8 / (qp_a.max(1) as f64).sqrt()) as f32;
+            self.push(format!("{name}.sw"), "step_w", &[], vec![sw]);
+            self.push(format!("{name}.sa"), "step_a", &[], vec![sa]);
+        }
+        self.layer_meta.push(Json::obj(vec![
+            ("name", Json::str(name)),
+            ("n_weights", Json::num(shape.iter().product::<usize>() as f64)),
+            ("bits", Json::num(bits.min(32) as f64)),
+        ]));
+        w
+    }
+
+    fn conv(&mut self, c: &ConvSpec) {
+        self.matmul(&c.name, &[c.kh, c.kw, c.in_ch, c.out_ch], c.bits, c.signed_act);
+    }
+
+    fn dense(&mut self, d: &DenseSpec) {
+        self.matmul(&d.name, &[d.in_dim, d.out_dim], d.bits, d.signed_act);
+        self.push(format!("{}.b", d.name), "bias", &[d.out_dim], vec![0.0; d.out_dim]);
+    }
+
+    fn bn(&mut self, b: &BnSpec) {
+        self.push(format!("{}.gamma", b.name), "bias", &[b.ch], vec![1.0; b.ch]);
+        self.push(format!("{}.beta", b.name), "bias", &[b.ch], vec![0.0; b.ch]);
+        self.push(format!("{}.rmean", b.name), "state", &[b.ch], vec![0.0; b.ch]);
+        self.push(format!("{}.rvar", b.name), "state", &[b.ch], vec![1.0; b.ch]);
+    }
+
+    fn visit(&mut self, ops: &[ArchOp]) {
+        for op in ops {
+            match op {
+                ArchOp::Conv(c) => self.conv(c),
+                ArchOp::Dense(d) => self.dense(d),
+                ArchOp::BatchNorm(b) => self.bn(b),
+                ArchOp::Preact(p) => {
+                    self.bn(&p.bn1);
+                    if let Some(proj) = &p.proj {
+                        self.conv(proj);
+                    }
+                    self.conv(&p.conv1);
+                    self.bn(&p.bn2);
+                    self.conv(&p.conv2);
+                }
+                ArchOp::Relu | ArchOp::MaxPool2 | ArchOp::GlobalAvgPool | ArchOp::Flatten => {}
+            }
+        }
+    }
+}
+
+/// Geometry knobs for a synthetic family. `Default` matches the real
+/// artifact set (32×32×3 images, 10 classes, batch 8).
+#[derive(Clone, Copy, Debug)]
+pub struct FixtureSpec {
+    /// Input image side length.
+    pub image: usize,
+    /// Input channels.
+    pub channels: usize,
+    /// Output classes.
+    pub num_classes: usize,
+    /// Manifest-level preferred batch size.
+    pub batch: usize,
+    /// Parameter-init RNG seed.
+    pub seed: u64,
+}
+
+impl Default for FixtureSpec {
+    fn default() -> Self {
+        FixtureSpec { image: 32, channels: 3, num_classes: 10, batch: 8, seed: 17 }
+    }
+}
+
+/// Write `manifest.json` + `params_{family}.bin` for `model` at `qbits`
+/// into `dir` (created if needed). Returns the family name
+/// (`"{model}_q{qbits}"`).
+pub fn write_synthetic_family(
+    dir: &Path,
+    model: &str,
+    qbits: u32,
+    spec: FixtureSpec,
+) -> Result<String> {
+    let arch = arch::build(model, spec.image, spec.channels, spec.num_classes, qbits)?;
+    let mut pw = ParamWriter {
+        rng: Pcg32::seeded(spec.seed),
+        names: Vec::new(),
+        roles: BTreeMap::new(),
+        shapes: BTreeMap::new(),
+        data: Vec::new(),
+        layer_meta: Vec::new(),
+    };
+    pw.visit(&arch.ops);
+
+    let family = format!("{model}_q{qbits}");
+    let params_bin = format!("params_{family}.bin");
+    std::fs::create_dir_all(dir).with_context(|| format!("create {dir:?}"))?;
+    let bytes: Vec<u8> = pw.data.iter().flat_map(|v| v.to_le_bytes()).collect();
+    std::fs::write(dir.join(&params_bin), bytes)
+        .with_context(|| format!("write {params_bin}"))?;
+
+    // Everything with a role other than `state` receives gradients.
+    let grad_names: Vec<Json> = pw
+        .names
+        .iter()
+        .filter(|n| pw.roles.get(*n).and_then(Json::as_str) != Some("state"))
+        .map(|n| Json::str(n.clone()))
+        .collect();
+    let fam_json = Json::obj(vec![
+        ("model", Json::str(model)),
+        ("qbits", Json::num(qbits as f64)),
+        ("num_classes", Json::num(spec.num_classes as f64)),
+        ("params_bin", Json::str(params_bin)),
+        ("n_matmul", Json::num(arch.n_matmul as f64)),
+        (
+            "param_names",
+            Json::Arr(pw.names.iter().map(|n| Json::str(n.clone())).collect()),
+        ),
+        ("grad_names", Json::Arr(grad_names)),
+        ("roles", Json::Obj(pw.roles.clone())),
+        ("shapes", Json::Obj(pw.shapes.clone())),
+        ("layer_meta", Json::Arr(pw.layer_meta.clone())),
+    ]);
+    let mut families = BTreeMap::new();
+    families.insert(family.clone(), fam_json);
+    let manifest = Json::obj(vec![
+        ("batch", Json::num(spec.batch as f64)),
+        ("image", Json::num(spec.image as f64)),
+        ("channels", Json::num(spec.channels as f64)),
+        ("num_classes", Json::num(spec.num_classes as f64)),
+        ("families", Json::Obj(families)),
+        ("artifacts", Json::Arr(Vec::new())),
+    ]);
+    std::fs::write(dir.join("manifest.json"), manifest.to_string_pretty())
+        .with_context(|| "write manifest.json")?;
+    Ok(family)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::Manifest;
+
+    #[test]
+    fn fixture_manifest_loads_and_params_bind() {
+        let dir = std::env::temp_dir().join(format!("lsq_fixture_{}", std::process::id()));
+        let family =
+            write_synthetic_family(&dir, "cnn_small", 2, FixtureSpec::default()).unwrap();
+        let m = Manifest::load(&dir).unwrap();
+        let fam = m.family(&family).unwrap();
+        assert_eq!(fam.model, "cnn_small");
+        assert_eq!(fam.n_matmul, 5);
+        let params = m.load_initial_params(&family).unwrap();
+        assert_eq!(params.len(), fam.param_names.len());
+        // The native model builds from the fixture end to end.
+        let model = super::super::NativeModel::build(&m, &family, &params).unwrap();
+        assert!(model.packed_bytes > 0);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

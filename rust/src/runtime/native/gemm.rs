@@ -1,0 +1,291 @@
+//! Integer GEMM kernels over bit-packed weights — the native datapath of
+//! the paper's Figure 1: activations quantized to integers per Eq. 1,
+//! multiply-accumulate in `i32`, one fp32 rescale by `s_a * s_w` (Eq. 2) at
+//! the end.
+//!
+//! The weight matrix stays in its [`Packed`] 2/3/4/8-bit form; the kernel
+//! unpacks KC×NC tiles into a small integer scratch buffer inside the
+//! cache-blocked loop ("fused unpack-and-dot"), so the full-precision
+//! weight matrix never materializes. Accumulation is exact in `i32`
+//! provided `k * Qp_act * max(Qn_w, Qp_w) < 2^31`, which
+//! [`check_accumulator_bound`] verifies at model-build time (for 8-bit
+//! weights/activations that allows k up to ~65k — far above any layer in
+//! the model zoo).
+
+use crate::quant::pack::{unpack_range, Packed};
+
+/// Rows of the packed weight matrix per tile (the k blocking factor).
+pub const KC: usize = 256;
+/// Columns of the packed weight matrix per tile (the n blocking factor).
+pub const NC: usize = 64;
+
+/// `true` iff an `i32` accumulator cannot overflow for a length-`k` dot
+/// product of activations in `[-qn_a, qp_a]` with weights in
+/// `[-qn_w, qp_w]`.
+pub fn check_accumulator_bound(k: usize, qp_a: i64, qn_a: i64, qn_w: i64, qp_w: i64) -> bool {
+    let amax = qp_a.max(qn_a);
+    let wmax = qn_w.max(qp_w);
+    (k as i64)
+        .checked_mul(amax)
+        .and_then(|v| v.checked_mul(wmax))
+        .map(|v| v < i32::MAX as i64)
+        .unwrap_or(false)
+}
+
+/// Quantized GEMM: `out[m×n] = (x[m×k] · unpack(w)[k×n]) * scale (+ bias)`.
+///
+/// * `x` — integer activations (Eq. 1 `v̄` values), row-major `m×k`;
+/// * `w` — bit-packed weights, logically row-major `k×n` (`w.len == k*n`);
+/// * `scale` — the per-layer `s_a * s_w` rescale (Eq. 2 applied to both
+///   operands at once);
+/// * `bias` — optional fp32 bias of length `n`, added after the rescale.
+///
+/// Zero activations (the common case after ReLU + unsigned quantization)
+/// skip their inner row entirely.
+#[allow(clippy::too_many_arguments)]
+pub fn qgemm(
+    m: usize,
+    k: usize,
+    n: usize,
+    x: &[i32],
+    w: &Packed,
+    scale: f32,
+    bias: Option<&[f32]>,
+    out: &mut [f32],
+) {
+    assert_eq!(x.len(), m * k, "activation buffer shape");
+    assert_eq!(w.len, k * n, "packed weight shape");
+    assert_eq!(out.len(), m * n, "output buffer shape");
+    if let Some(b) = bias {
+        assert_eq!(b.len(), n, "bias length");
+    }
+
+    let mut acc = vec![0i32; m * n];
+    let mut wtile = vec![0i32; KC * NC];
+    for k0 in (0..k).step_by(KC) {
+        let kc = KC.min(k - k0);
+        for n0 in (0..n).step_by(NC) {
+            let nc = NC.min(n - n0);
+            // Unpack this KC×NC weight tile once; it then stays hot in
+            // cache for all m activation rows.
+            for kk in 0..kc {
+                unpack_range(w, (k0 + kk) * n + n0, nc, &mut wtile[kk * nc..kk * nc + nc]);
+            }
+            for i in 0..m {
+                let xrow = &x[i * k + k0..i * k + k0 + kc];
+                let arow = &mut acc[i * n + n0..i * n + n0 + nc];
+                for (kk, &xv) in xrow.iter().enumerate() {
+                    if xv == 0 {
+                        continue;
+                    }
+                    let wrow = &wtile[kk * nc..kk * nc + nc];
+                    for (a, &wv) in arow.iter_mut().zip(wrow) {
+                        *a += xv * wv;
+                    }
+                }
+            }
+        }
+    }
+
+    match bias {
+        Some(b) => {
+            for i in 0..m {
+                for j in 0..n {
+                    out[i * n + j] = acc[i * n + j] as f32 * scale + b[j];
+                }
+            }
+        }
+        None => {
+            for (o, &a) in out.iter_mut().zip(&acc) {
+                *o = a as f32 * scale;
+            }
+        }
+    }
+}
+
+/// fp32 GEMM with the same blocking, for the model zoo's full-precision
+/// (bits ≥ 32) layers: `out[m×n] = x[m×k] · w[k×n] (+ bias)`.
+pub fn sgemm(
+    m: usize,
+    k: usize,
+    n: usize,
+    x: &[f32],
+    w: &[f32],
+    bias: Option<&[f32]>,
+    out: &mut [f32],
+) {
+    assert_eq!(x.len(), m * k, "activation buffer shape");
+    assert_eq!(w.len(), k * n, "weight shape");
+    assert_eq!(out.len(), m * n, "output buffer shape");
+
+    match bias {
+        Some(b) => {
+            for i in 0..m {
+                for j in 0..n {
+                    out[i * n + j] = b[j];
+                }
+            }
+        }
+        None => out.fill(0.0),
+    }
+    for k0 in (0..k).step_by(KC) {
+        let kc = KC.min(k - k0);
+        for i in 0..m {
+            let xrow = &x[i * k + k0..i * k + k0 + kc];
+            let orow = &mut out[i * n..(i + 1) * n];
+            for (kk, &xv) in xrow.iter().enumerate() {
+                if xv == 0.0 {
+                    continue;
+                }
+                let wrow = &w[(k0 + kk) * n..(k0 + kk) * n + n];
+                for (o, &wv) in orow.iter_mut().zip(wrow) {
+                    *o += xv * wv;
+                }
+            }
+        }
+    }
+}
+
+/// SAME-padding geometry for one spatial dim: returns `(out_size,
+/// pad_before)`, matching XLA's `padding="SAME"` (pad_before = total/2,
+/// rounded down).
+pub fn same_padding(size: usize, kernel: usize, stride: usize) -> (usize, usize) {
+    let out = (size + stride - 1) / stride;
+    let pad_total = ((out - 1) * stride + kernel).saturating_sub(size);
+    (out, pad_total / 2)
+}
+
+/// im2col for NHWC input: writes `b*oh*ow` rows of `kh*kw*c` patch elements
+/// (ordered `(dh, dw, cin)`, matching row-major flattened HWIO weights)
+/// into `out`, zero-padding out-of-bounds taps. Returns `(oh, ow)`.
+#[allow(clippy::too_many_arguments)]
+pub fn im2col<T: Copy>(
+    x: &[T],
+    zero: T,
+    b: usize,
+    h: usize,
+    w: usize,
+    c: usize,
+    kh: usize,
+    kw: usize,
+    stride: usize,
+    out: &mut Vec<T>,
+) -> (usize, usize) {
+    assert_eq!(x.len(), b * h * w * c, "input shape");
+    let (oh, pad_t) = same_padding(h, kh, stride);
+    let (ow, pad_l) = same_padding(w, kw, stride);
+    let patch = kh * kw * c;
+    out.clear();
+    out.resize(b * oh * ow * patch, zero);
+    for bi in 0..b {
+        for oy in 0..oh {
+            let iy0 = (oy * stride) as isize - pad_t as isize;
+            for ox in 0..ow {
+                let ix0 = (ox * stride) as isize - pad_l as isize;
+                let row = ((bi * oh + oy) * ow + ox) * patch;
+                for dh in 0..kh {
+                    let iy = iy0 + dh as isize;
+                    if iy < 0 || iy >= h as isize {
+                        continue;
+                    }
+                    for dw in 0..kw {
+                        let ix = ix0 + dw as isize;
+                        if ix < 0 || ix >= w as isize {
+                            continue;
+                        }
+                        let src = ((bi * h + iy as usize) * w + ix as usize) * c;
+                        let dst = row + (dh * kw + dw) * c;
+                        out[dst..dst + c].copy_from_slice(&x[src..src + c]);
+                    }
+                }
+            }
+        }
+    }
+    (oh, ow)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::pack::pack;
+
+    #[test]
+    fn same_padding_matches_xla() {
+        assert_eq!(same_padding(32, 3, 1), (32, 1));
+        assert_eq!(same_padding(32, 3, 2), (16, 0)); // total pad 1 -> (0, 1)
+        assert_eq!(same_padding(16, 1, 1), (16, 0));
+        assert_eq!(same_padding(16, 1, 2), (8, 0));
+    }
+
+    #[test]
+    fn qgemm_matches_naive_i64() {
+        let (m, k, n) = (3usize, 70usize, 9usize);
+        let mut rng = crate::util::rng::Pcg32::seeded(7);
+        let x: Vec<i32> = (0..m * k).map(|_| rng.below(8) as i32 - 4).collect();
+        let wv: Vec<i32> = (0..k * n).map(|_| rng.below(15) as i32 - 7).collect();
+        let p = pack(&wv, 4, true, 0.5).unwrap();
+        let bias: Vec<f32> = (0..n).map(|j| j as f32 * 0.25).collect();
+        let mut out = vec![0.0f32; m * n];
+        qgemm(m, k, n, &x, &p, 0.5, Some(&bias), &mut out);
+        for i in 0..m {
+            for j in 0..n {
+                let acc: i64 =
+                    (0..k).map(|kk| x[i * k + kk] as i64 * wv[kk * n + j] as i64).sum();
+                let want = acc as f32 * 0.5 + bias[j];
+                assert!(
+                    (out[i * n + j] - want).abs() < 1e-4,
+                    "({i},{j}): {} vs {want}",
+                    out[i * n + j]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn qgemm_blocks_cover_large_shapes() {
+        // k and n straddle the KC/NC tile boundaries.
+        let (m, k, n) = (2usize, KC + 13, NC + 5);
+        let mut rng = crate::util::rng::Pcg32::seeded(11);
+        let x: Vec<i32> = (0..m * k).map(|_| rng.below(4) as i32).collect();
+        let wv: Vec<i32> = (0..k * n).map(|_| rng.below(3) as i32 - 1).collect();
+        let p = pack(&wv, 2, true, 1.0).unwrap();
+        let mut out = vec![0.0f32; m * n];
+        qgemm(m, k, n, &x, &p, 1.0, None, &mut out);
+        for i in 0..m {
+            for j in 0..n {
+                let acc: i64 =
+                    (0..k).map(|kk| x[i * k + kk] as i64 * wv[kk * n + j] as i64).sum();
+                assert_eq!(out[i * n + j], acc as f32, "({i},{j})");
+            }
+        }
+    }
+
+    #[test]
+    fn im2col_identity_kernel() {
+        // 1x1 kernel, stride 1: im2col is the identity.
+        let x: Vec<f32> = (0..2 * 3 * 3 * 2).map(|i| i as f32).collect();
+        let mut out = Vec::new();
+        let (oh, ow) = im2col(&x, 0.0, 2, 3, 3, 2, 1, 1, 1, &mut out);
+        assert_eq!((oh, ow), (3, 3));
+        assert_eq!(out, x);
+    }
+
+    #[test]
+    fn im2col_pads_borders_with_zeros() {
+        // Single 2x2 image, one channel, 3x3 kernel: the center patch sees
+        // all four pixels, corners of the patch are zero padding.
+        let x = vec![1.0f32, 2.0, 3.0, 4.0];
+        let mut out = Vec::new();
+        let (oh, ow) = im2col(&x, 0.0, 1, 2, 2, 1, 3, 3, 1, &mut out);
+        assert_eq!((oh, ow), (2, 2));
+        // Row for output (0,0): taps at (dy-1, dx-1) relative offsets.
+        let r0 = &out[0..9];
+        assert_eq!(r0, &[0.0, 0.0, 0.0, 0.0, 1.0, 2.0, 0.0, 3.0, 4.0]);
+    }
+
+    #[test]
+    fn accumulator_bound() {
+        assert!(check_accumulator_bound(65_000, 255, 0, 128, 127));
+        assert!(!check_accumulator_bound(66_000, 255, 0, 128, 127));
+    }
+}

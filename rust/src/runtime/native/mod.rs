@@ -1,0 +1,544 @@
+//! Native pure-Rust inference backend: runs the quantized forward pass
+//! directly from bit-packed weights, with no XLA/PJRT dependency.
+//!
+//! This is the deployment path the paper motivates (Figure 1 / McKinstry et
+//! al. 2018): weights live in their 2/3/4/8-bit [`crate::quant::pack::Packed`]
+//! form, activations are quantized to integers per Eq. 1 on entry to every
+//! conv/dense layer, the multiply-accumulate runs in `i32`
+//! ([`gemm::qgemm`]), and a single fp32 rescale by `s_a * s_w` applies
+//! Eq. 2 to the result. Layers the paper keeps in full precision
+//! (`qbits >= 32` families) fall back to an fp32 GEMM.
+//!
+//! Unlike the XLA engine, [`NativeEngine`] is `Send`, needs only
+//! `manifest.json` + the family's `params.bin` (no HLO artifacts), and can
+//! therefore be replicated across serve worker threads — see DESIGN.md
+//! §Backend-trait.
+//!
+//! Submodules: [`arch`] (model-zoo IR mirroring `python/compile/models.py`),
+//! [`gemm`] (fused unpack-and-dot kernels), [`fixture`] (synthetic
+//! manifest/params for artifact-free tests and benches).
+
+pub mod arch;
+pub mod fixture;
+pub mod gemm;
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{anyhow, bail, ensure, Result};
+
+use crate::quant::lsq::{self, qrange};
+use crate::quant::pack::{quantize_and_pack, Packed};
+use crate::runtime::backend::Backend;
+use crate::runtime::Manifest;
+use crate::tensor::Tensor;
+
+use arch::{Arch, ArchOp, BnSpec, ConvSpec, DenseSpec};
+use gemm::{check_accumulator_bound, im2col, qgemm, sgemm};
+
+/// Weight storage for one matmul layer.
+enum LayerWeights {
+    /// Quantized path: packed integer weights (step = `s_w`) plus the
+    /// activation quantizer (`s_a`, range) for this layer.
+    Packed { w: Packed, sa: f32, act_qn: i64, act_qp: i64 },
+    /// Full-precision path for `bits >= 32` layers.
+    F32(Vec<f32>),
+}
+
+struct RtConv {
+    spec: ConvSpec,
+    wq: LayerWeights,
+}
+
+struct RtDense {
+    spec: DenseSpec,
+    wq: LayerWeights,
+    bias: Option<Vec<f32>>,
+}
+
+/// Eval-mode batch norm folded to `y = x * scale + shift` per channel.
+struct RtBn {
+    scale: Vec<f32>,
+    shift: Vec<f32>,
+}
+
+struct RtPreact {
+    bn1: RtBn,
+    proj: Option<RtConv>,
+    conv1: RtConv,
+    bn2: RtBn,
+    conv2: RtConv,
+}
+
+enum RtOp {
+    Conv(RtConv),
+    Dense(RtDense),
+    Bn(RtBn),
+    Relu,
+    MaxPool2,
+    GlobalAvgPool,
+    Flatten,
+    Preact(Box<RtPreact>),
+}
+
+/// A model family bound to concrete parameters, with weights already
+/// quantized (Eq. 1) and bit-packed, ready for the native forward pass.
+pub struct NativeModel {
+    family: String,
+    image: usize,
+    channels: usize,
+    num_classes: usize,
+    ops: Vec<RtOp>,
+    /// Total packed weight bytes (including per-layer fp32 steps) — the
+    /// Figure 3 storage the serving path actually holds in memory.
+    pub packed_bytes: usize,
+}
+
+const BN_EPS: f32 = 1e-5;
+
+/// Host activation tensor used inside the interpreted forward pass.
+struct Act {
+    shape: Vec<usize>,
+    data: Vec<f32>,
+}
+
+impl Act {
+    fn dims4(&self) -> Result<(usize, usize, usize, usize)> {
+        match self.shape[..] {
+            [b, h, w, c] => Ok((b, h, w, c)),
+            _ => bail!("expected a 4-d NHWC activation, got shape {:?}", self.shape),
+        }
+    }
+}
+
+struct Binder<'a> {
+    family: &'a str,
+    map: BTreeMap<&'a str, &'a Tensor>,
+}
+
+impl<'a> Binder<'a> {
+    fn tensor(&self, name: &str) -> Result<&'a Tensor> {
+        self.map
+            .get(name)
+            .copied()
+            .ok_or_else(|| anyhow!("family {} has no parameter {name:?}", self.family))
+    }
+
+    fn scalar(&self, name: &str) -> Result<f32> {
+        self.tensor(name)?.item_f32()
+    }
+}
+
+fn bind_weights(
+    binder: &Binder,
+    name: &str,
+    bits: u32,
+    signed_act: bool,
+    k: usize,
+    want_shape: &[usize],
+) -> Result<LayerWeights> {
+    let w = binder.tensor(&format!("{name}.w"))?;
+    ensure!(
+        w.shape == want_shape,
+        "{name}.w shape {:?} != expected {:?}",
+        w.shape,
+        want_shape
+    );
+    if bits >= 32 {
+        return Ok(LayerWeights::F32(w.f32s()?.to_vec()));
+    }
+    let sw = binder.scalar(&format!("{name}.sw"))?;
+    let sa = binder.scalar(&format!("{name}.sa"))?;
+    ensure!(sw > 0.0 && sa > 0.0, "{name}: non-positive step size (sw={sw}, sa={sa})");
+    let (act_qn, act_qp) = qrange(bits, signed_act);
+    let (wqn, wqp) = qrange(bits, true);
+    ensure!(
+        check_accumulator_bound(k, act_qp, act_qn, wqn, wqp),
+        "{name}: k={k} at {bits}-bit would overflow the i32 accumulator"
+    );
+    let packed = quantize_and_pack(w.f32s()?, sw, bits, true)?;
+    Ok(LayerWeights::Packed { w: packed, sa, act_qn, act_qp })
+}
+
+fn bind_conv(binder: &Binder, spec: &ConvSpec) -> Result<RtConv> {
+    let shape = [spec.kh, spec.kw, spec.in_ch, spec.out_ch];
+    let k = spec.kh * spec.kw * spec.in_ch;
+    let wq = bind_weights(binder, &spec.name, spec.bits, spec.signed_act, k, &shape)?;
+    Ok(RtConv { spec: spec.clone(), wq })
+}
+
+fn bind_dense(binder: &Binder, spec: &DenseSpec) -> Result<RtDense> {
+    let shape = [spec.in_dim, spec.out_dim];
+    let wq = bind_weights(binder, &spec.name, spec.bits, spec.signed_act, spec.in_dim, &shape)?;
+    let bias = match binder.map.get(format!("{}.b", spec.name).as_str()) {
+        Some(t) => {
+            ensure!(t.numel() == spec.out_dim, "{}.b wrong length", spec.name);
+            Some(t.f32s()?.to_vec())
+        }
+        None => None,
+    };
+    Ok(RtDense { spec: spec.clone(), wq, bias })
+}
+
+fn bind_bn(binder: &Binder, spec: &BnSpec) -> Result<RtBn> {
+    let gamma = binder.tensor(&format!("{}.gamma", spec.name))?.f32s()?;
+    let beta = binder.tensor(&format!("{}.beta", spec.name))?.f32s()?;
+    let rmean = binder.tensor(&format!("{}.rmean", spec.name))?.f32s()?;
+    let rvar = binder.tensor(&format!("{}.rvar", spec.name))?.f32s()?;
+    ensure!(
+        [beta.len(), rmean.len(), rvar.len()].iter().all(|&l| l == gamma.len())
+            && gamma.len() == spec.ch,
+        "{}: inconsistent batch-norm parameter lengths",
+        spec.name
+    );
+    let mut scale = Vec::with_capacity(gamma.len());
+    let mut shift = Vec::with_capacity(gamma.len());
+    for i in 0..gamma.len() {
+        let s = gamma[i] / (rvar[i] + BN_EPS).sqrt();
+        scale.push(s);
+        shift.push(beta[i] - rmean[i] * s);
+    }
+    Ok(RtBn { scale, shift })
+}
+
+fn layer_packed_bytes(wq: &LayerWeights) -> usize {
+    match wq {
+        LayerWeights::Packed { w, .. } => w.storage_bytes() + 4, // + s_a
+        LayerWeights::F32(v) => v.len() * 4,
+    }
+}
+
+impl NativeModel {
+    /// Bind `family`'s architecture to `params` (in `Family::param_names`
+    /// order), quantizing and packing every sub-32-bit weight tensor.
+    pub fn build(manifest: &Manifest, family: &str, params: &[Tensor]) -> Result<NativeModel> {
+        let fam = manifest.family(family)?;
+        ensure!(
+            params.len() == fam.param_names.len(),
+            "family {family}: got {} params, manifest lists {}",
+            params.len(),
+            fam.param_names.len()
+        );
+        let arch: Arch = arch::build(
+            &fam.model,
+            manifest.image,
+            manifest.channels,
+            fam.num_classes,
+            fam.qbits,
+        )?;
+        let binder = Binder {
+            family,
+            map: fam.param_names.iter().map(String::as_str).zip(params).collect(),
+        };
+
+        let mut packed_bytes = 0usize;
+        let mut ops = Vec::with_capacity(arch.ops.len());
+        for op in &arch.ops {
+            ops.push(match op {
+                ArchOp::Conv(c) => {
+                    let rt = bind_conv(&binder, c)?;
+                    packed_bytes += layer_packed_bytes(&rt.wq);
+                    RtOp::Conv(rt)
+                }
+                ArchOp::Dense(d) => {
+                    let rt = bind_dense(&binder, d)?;
+                    packed_bytes += layer_packed_bytes(&rt.wq);
+                    packed_bytes += rt.bias.as_ref().map_or(0, |b| b.len() * 4);
+                    RtOp::Dense(rt)
+                }
+                ArchOp::BatchNorm(b) => RtOp::Bn(bind_bn(&binder, b)?),
+                ArchOp::Relu => RtOp::Relu,
+                ArchOp::MaxPool2 => RtOp::MaxPool2,
+                ArchOp::GlobalAvgPool => RtOp::GlobalAvgPool,
+                ArchOp::Flatten => RtOp::Flatten,
+                ArchOp::Preact(p) => {
+                    let rt = RtPreact {
+                        bn1: bind_bn(&binder, &p.bn1)?,
+                        proj: p.proj.as_ref().map(|c| bind_conv(&binder, c)).transpose()?,
+                        conv1: bind_conv(&binder, &p.conv1)?,
+                        bn2: bind_bn(&binder, &p.bn2)?,
+                        conv2: bind_conv(&binder, &p.conv2)?,
+                    };
+                    packed_bytes += layer_packed_bytes(&rt.conv1.wq)
+                        + layer_packed_bytes(&rt.conv2.wq)
+                        + rt.proj.as_ref().map_or(0, |c| layer_packed_bytes(&c.wq));
+                    RtOp::Preact(Box::new(rt))
+                }
+            });
+        }
+        Ok(NativeModel {
+            family: family.to_string(),
+            image: manifest.image,
+            channels: manifest.channels,
+            num_classes: fam.num_classes,
+            ops,
+            packed_bytes,
+        })
+    }
+
+    /// Per-image input element count (`image * image * channels`).
+    pub fn image_len(&self) -> usize {
+        self.image * self.image * self.channels
+    }
+
+    /// Number of output classes per row.
+    pub fn num_classes(&self) -> usize {
+        self.num_classes
+    }
+
+    /// The family this model was built for.
+    pub fn family(&self) -> &str {
+        &self.family
+    }
+
+    /// Run the quantized forward pass on `rows` images packed into `x`
+    /// (NHWC, `rows * image_len()` floats). Returns `rows * num_classes`
+    /// logits, row-major.
+    pub fn forward(&self, x: &[f32], rows: usize) -> Result<Vec<f32>> {
+        ensure!(rows > 0, "empty batch");
+        ensure!(
+            x.len() == rows * self.image_len(),
+            "input has {} floats, expected {} ({} rows x {})",
+            x.len(),
+            rows * self.image_len(),
+            rows,
+            self.image_len()
+        );
+        let mut act = Act {
+            shape: vec![rows, self.image, self.image, self.channels],
+            data: x.to_vec(),
+        };
+        for op in &self.ops {
+            act = apply(act, op)?;
+        }
+        ensure!(
+            act.shape == [rows, self.num_classes],
+            "forward produced shape {:?}, expected [{rows}, {}]",
+            act.shape,
+            self.num_classes
+        );
+        Ok(act.data)
+    }
+}
+
+fn apply(act: Act, op: &RtOp) -> Result<Act> {
+    Ok(match op {
+        RtOp::Conv(c) => apply_conv(&act, c)?,
+        RtOp::Dense(d) => apply_dense(&act, d)?,
+        RtOp::Bn(b) => apply_bn(act, b)?,
+        RtOp::Relu => {
+            let mut act = act;
+            relu_inplace(&mut act);
+            act
+        }
+        RtOp::MaxPool2 => apply_maxpool2(&act)?,
+        RtOp::GlobalAvgPool => apply_gap(&act)?,
+        RtOp::Flatten => {
+            let (b, h, w, c) = act.dims4()?;
+            Act { shape: vec![b, h * w * c], data: act.data }
+        }
+        RtOp::Preact(p) => apply_preact(act, p)?,
+    })
+}
+
+fn relu_inplace(a: &mut Act) {
+    for v in &mut a.data {
+        *v = v.max(0.0);
+    }
+}
+
+fn apply_preact(x: Act, p: &RtPreact) -> Result<Act> {
+    // Projection shortcut is taken from the pre-activated tensor (as in
+    // the original pre-act ResNet), so with a projection `x` can be
+    // consumed outright; only the identity shortcut needs the raw input
+    // kept around.
+    let (pre, sc) = match &p.proj {
+        Some(proj) => {
+            let mut pre = apply_bn(x, &p.bn1)?;
+            relu_inplace(&mut pre);
+            let sc = apply_conv(&pre, proj)?;
+            (pre, sc)
+        }
+        None => {
+            let mut pre =
+                apply_bn(Act { shape: x.shape.clone(), data: x.data.clone() }, &p.bn1)?;
+            relu_inplace(&mut pre);
+            (pre, x)
+        }
+    };
+    let mut h = apply_conv(&pre, &p.conv1)?;
+    h = apply_bn(h, &p.bn2)?;
+    relu_inplace(&mut h);
+    let mut h = apply_conv(&h, &p.conv2)?;
+    ensure!(h.shape == sc.shape, "residual shape mismatch: {:?} vs {:?}", h.shape, sc.shape);
+    for (a, b) in h.data.iter_mut().zip(&sc.data) {
+        *a += b;
+    }
+    Ok(h)
+}
+
+/// Quantize an activation buffer to the Eq. 1 integer grid.
+fn quantize_acts(x: &[f32], sa: f32, qn: i64, qp: i64) -> Vec<i32> {
+    x.iter().map(|&v| lsq::quantize_vbar(v, sa, qn, qp) as i32).collect()
+}
+
+fn apply_conv(act: &Act, rt: &RtConv) -> Result<Act> {
+    let (b, h, w, c) = act.dims4()?;
+    let spec = &rt.spec;
+    ensure!(c == spec.in_ch, "{}: input has {c} channels, expected {}", spec.name, spec.in_ch);
+    let k = spec.kh * spec.kw * c;
+    let n = spec.out_ch;
+    match &rt.wq {
+        LayerWeights::Packed { w: pw, sa, act_qn, act_qp } => {
+            let xq = quantize_acts(&act.data, *sa, *act_qn, *act_qp);
+            let mut cols: Vec<i32> = Vec::new();
+            let (oh, ow) = im2col(&xq, 0, b, h, w, c, spec.kh, spec.kw, spec.stride, &mut cols);
+            let rows = b * oh * ow;
+            let mut out = vec![0.0f32; rows * n];
+            qgemm(rows, k, n, &cols, pw, sa * pw.step, None, &mut out);
+            Ok(Act { shape: vec![b, oh, ow, n], data: out })
+        }
+        LayerWeights::F32(wv) => {
+            let mut cols: Vec<f32> = Vec::new();
+            let (oh, ow) =
+                im2col(&act.data, 0.0, b, h, w, c, spec.kh, spec.kw, spec.stride, &mut cols);
+            let rows = b * oh * ow;
+            let mut out = vec![0.0f32; rows * n];
+            sgemm(rows, k, n, &cols, wv, None, &mut out);
+            Ok(Act { shape: vec![b, oh, ow, n], data: out })
+        }
+    }
+}
+
+fn apply_dense(act: &Act, rt: &RtDense) -> Result<Act> {
+    let spec = &rt.spec;
+    let (b, d) = match act.shape[..] {
+        [b, d] => (b, d),
+        _ => bail!("{}: expected a 2-d input, got {:?}", spec.name, act.shape),
+    };
+    ensure!(d == spec.in_dim, "{}: input dim {d} != expected {}", spec.name, spec.in_dim);
+    let n = spec.out_dim;
+    let mut out = vec![0.0f32; b * n];
+    match &rt.wq {
+        LayerWeights::Packed { w: pw, sa, act_qn, act_qp } => {
+            let xq = quantize_acts(&act.data, *sa, *act_qn, *act_qp);
+            qgemm(b, d, n, &xq, pw, sa * pw.step, rt.bias.as_deref(), &mut out);
+        }
+        LayerWeights::F32(wv) => {
+            sgemm(b, d, n, &act.data, wv, rt.bias.as_deref(), &mut out);
+        }
+    }
+    Ok(Act { shape: vec![b, n], data: out })
+}
+
+fn apply_bn(mut act: Act, bn: &RtBn) -> Result<Act> {
+    let c = *act.shape.last().unwrap_or(&0);
+    ensure!(c == bn.scale.len(), "batch norm over {c} channels, expected {}", bn.scale.len());
+    for chunk in act.data.chunks_exact_mut(c) {
+        for (i, v) in chunk.iter_mut().enumerate() {
+            *v = *v * bn.scale[i] + bn.shift[i];
+        }
+    }
+    Ok(act)
+}
+
+fn apply_maxpool2(act: &Act) -> Result<Act> {
+    let (b, h, w, c) = act.dims4()?;
+    let (oh, ow) = (h / 2, w / 2);
+    let mut out = vec![f32::NEG_INFINITY; b * oh * ow * c];
+    for bi in 0..b {
+        for oy in 0..oh {
+            for ox in 0..ow {
+                let dst = ((bi * oh + oy) * ow + ox) * c;
+                for dy in 0..2 {
+                    for dx in 0..2 {
+                        let src = ((bi * h + oy * 2 + dy) * w + ox * 2 + dx) * c;
+                        for ch in 0..c {
+                            let v = act.data[src + ch];
+                            if v > out[dst + ch] {
+                                out[dst + ch] = v;
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+    Ok(Act { shape: vec![b, oh, ow, c], data: out })
+}
+
+fn apply_gap(act: &Act) -> Result<Act> {
+    let (b, h, w, c) = act.dims4()?;
+    let inv = 1.0 / (h * w) as f32;
+    let mut out = vec![0.0f32; b * c];
+    for bi in 0..b {
+        for p in 0..h * w {
+            let src = (bi * h * w + p) * c;
+            for ch in 0..c {
+                out[bi * c + ch] += act.data[src + ch];
+            }
+        }
+        for ch in 0..c {
+            out[bi * c + ch] *= inv;
+        }
+    }
+    Ok(Act { shape: vec![b, c], data: out })
+}
+
+/// The native inference engine: a [`Manifest`] plus (after
+/// [`Backend::prepare_infer`]) one bound [`NativeModel`].
+pub struct NativeEngine {
+    manifest: Manifest,
+    model: Option<NativeModel>,
+}
+
+impl NativeEngine {
+    /// Open the manifest at `dir`. No HLO artifacts or PJRT libraries are
+    /// required — only `manifest.json` and the family params bins.
+    pub fn new(dir: &Path) -> Result<NativeEngine> {
+        Ok(NativeEngine { manifest: Manifest::load(dir)?, model: None })
+    }
+
+    /// The model bound by the last `prepare_infer`, if any.
+    pub fn model(&self) -> Option<&NativeModel> {
+        self.model.as_ref()
+    }
+}
+
+impl Backend for NativeEngine {
+    fn name(&self) -> &'static str {
+        "native"
+    }
+
+    fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    fn prepare_infer(&mut self, family: &str, params: &[Tensor]) -> Result<()> {
+        self.model = Some(NativeModel::build(&self.manifest, family, params)?);
+        Ok(())
+    }
+
+    fn batch(&self) -> usize {
+        self.manifest.batch.max(1)
+    }
+
+    fn fixed_batch(&self) -> bool {
+        false // forward() handles any row count; no padding needed
+    }
+
+    fn infer(&mut self, x: &[f32]) -> Result<Vec<f32>> {
+        let model = self
+            .model
+            .as_ref()
+            .ok_or_else(|| anyhow!("call prepare_infer before infer"))?;
+        let il = model.image_len();
+        ensure!(il > 0, "family {} has a degenerate image geometry", model.family);
+        ensure!(
+            !x.is_empty() && x.len() % il == 0,
+            "input length {} is not a multiple of image_len {il}",
+            x.len()
+        );
+        model.forward(x, x.len() / il)
+    }
+}

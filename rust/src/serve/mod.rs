@@ -1,49 +1,75 @@
 //! Quantized-inference serving path (Figure 1 deployed): a request router +
-//! dynamic batcher in front of an `infer` artifact.
+//! dynamic batcher in front of N engine replicas.
 //!
 //! Architecture (vLLM-router-shaped, scaled to this model family):
 //!  * callers submit single images from any thread via a cloneable
 //!    [`ServeClient`] and block on (or poll) a reply channel;
-//!  * one engine thread owns the non-`Send` PJRT client, drains the queue
-//!    with a *dynamic batching* policy — dispatch as soon as `batch` rows
-//!    are waiting, or after `max_wait` with whatever is there (padding the
-//!    tail rows) — and fans results back out;
+//!  * `replicas` worker threads each open their **own** engine from a
+//!    [`BackendSpec`] (the XLA client is `Rc`-backed and not `Send`; the
+//!    native engine is `Send` but keeps per-model packed state thread-local
+//!    anyway) and drain one shared queue. Each worker applies *dynamic
+//!    batching*: dispatch as soon as `batch` rows are waiting, or after
+//!    `max_wait` with whatever is there (tail rows are zero-padded only
+//!    for fixed-shape backends — see `Backend::fixed_batch`);
+//!  * the queue hand-off is serialized (a mutex around the receiver) but
+//!    execution is not, so replicas overlap on the expensive part — the
+//!    forward pass;
 //!  * per-request latency and batch-occupancy metrics are accumulated for
 //!    the serve bench (EXPERIMENTS.md §Perf L3).
+//!
+//! With the native backend this runs entirely from packed weights and
+//! scales across cores; with the XLA backend `replicas > 1` simply opens
+//! one PJRT client per worker (same memory model as the sweep coordinator).
 
+use std::path::Path;
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::mpsc::{Receiver, RecvTimeoutError, SyncSender};
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, Result};
 
-use crate::runtime::Engine;
+use crate::runtime::{Backend as _, BackendKind, BackendSpec, Manifest};
 use crate::tensor::Tensor;
 
+/// One queued inference request (internal to the server).
 pub struct Request {
-    pub image: Vec<f32>, // 32*32*3
+    /// Flattened NHWC image, `image * image * channels` floats.
+    pub image: Vec<f32>,
     submitted: Instant,
     reply: SyncSender<Reply>,
 }
 
+/// The answer a client receives for one image.
 #[derive(Clone, Debug)]
 pub struct Reply {
+    /// Raw logits, one per class.
     pub logits: Vec<f32>,
+    /// Index of the winning class.
     pub argmax: usize,
+    /// Time spent queued + batching before execution started.
     pub queue_ms: f64,
+    /// End-to-end latency (submit → reply).
     pub total_ms: f64,
 }
 
+/// Aggregate serving metrics across all replicas.
 #[derive(Clone, Debug, Default)]
 pub struct ServeStats {
+    /// Requests answered.
     pub requests: u64,
+    /// Batches dispatched.
     pub batches: u64,
+    /// Rows dispatched including padding.
     pub rows_dispatched: u64,
+    /// Total forward-pass wall time.
     pub exec_ms_total: f64,
+    /// Sum over batches of real/batch (for mean occupancy).
     pub occupancy_sum: f64,
 }
 
 impl ServeStats {
+    /// Mean fraction of each dispatched batch holding real requests.
     pub fn mean_occupancy(&self) -> f64 {
         if self.batches == 0 {
             0.0
@@ -52,6 +78,7 @@ impl ServeStats {
         }
     }
 
+    /// Mean forward-pass time per batch.
     pub fn mean_exec_ms(&self) -> f64 {
         if self.batches == 0 {
             0.0
@@ -61,6 +88,7 @@ impl ServeStats {
     }
 }
 
+/// Cloneable handle for submitting requests from any thread.
 #[derive(Clone)]
 pub struct ServeClient {
     tx: SyncSender<Request>,
@@ -87,153 +115,210 @@ impl ServeClient {
     }
 }
 
+/// A running inference server: client handle, shared stats, worker handles.
 pub struct Server {
+    /// Submit handle (cloneable).
     pub client: ServeClient,
+    /// Shared metrics, updated by every replica.
     pub stats: Arc<Mutex<ServeStats>>,
-    shutdown: SyncSender<()>,
-    handle: Option<std::thread::JoinHandle<()>>,
+    /// Number of engine replicas actually started.
+    pub replicas: usize,
+    stop: Arc<AtomicBool>,
+    handles: Vec<std::thread::JoinHandle<()>>,
 }
 
+/// Server configuration.
 pub struct ServerConfig {
-    pub artifacts_dir: std::path::PathBuf,
+    /// Which engine to open (and over which artifacts directory); each
+    /// replica opens its own instance.
+    pub backend: BackendSpec,
+    /// Model family to serve, e.g. `"cnn_small_q2"`.
     pub family: String,
-    /// Checkpoint with trained params (empty = AOT initial params).
+    /// Checkpoint with trained params (empty = the family's initial params).
     pub checkpoint: String,
+    /// Dynamic-batching window: maximum time a dispatching worker waits for
+    /// stragglers after the first request of a batch arrives.
     pub max_wait: Duration,
+    /// Bound on queued requests (backpressure for open-loop clients).
     pub queue_depth: usize,
+    /// Engine replicas (worker threads). Clamped to at least 1.
+    pub replicas: usize,
 }
 
 impl Server {
+    /// Start `replicas` worker threads serving `family`.
+    ///
+    /// Manifest/params problems surface here; per-replica engine failures
+    /// (e.g. a missing HLO artifact on the XLA backend) are reported on
+    /// stderr by the failing worker.
     pub fn start(cfg: ServerConfig) -> Result<Server> {
-        let (tx, rx) = std::sync::mpsc::sync_channel::<Request>(cfg.queue_depth.max(1));
-        let (stop_tx, stop_rx) = std::sync::mpsc::sync_channel::<()>(1);
-        let stats = Arc::new(Mutex::new(ServeStats::default()));
-        let stats_bg = stats.clone();
-
-        // Resolve params on the caller thread so startup errors surface here.
-        let engine_probe = Engine::new(&cfg.artifacts_dir)?;
-        let infer_meta = engine_probe
-            .manifest()
-            .find("infer", &cfg.family, None, None)?
-            .clone();
-        let image_len: usize = infer_meta.inputs.last().unwrap().shape[1..].iter().product();
-        drop(engine_probe);
-
-        let handle = std::thread::Builder::new().name("lsq-serve".into()).spawn(move || {
-            let run = || -> Result<()> {
-                let engine = Engine::new(&cfg.artifacts_dir)?;
-                let exe = engine.load(&infer_meta.id)?;
-                let manifest = engine.manifest();
-                let params: Vec<Tensor> = if cfg.checkpoint.is_empty() {
-                    manifest.load_initial_params(&cfg.family)?
-                } else {
-                    let st = crate::train::TrainState::load(
-                        manifest,
-                        std::path::Path::new(&cfg.checkpoint),
-                    )?;
-                    st.params
-                };
-                let batch = exe.meta.batch;
-                let img = image_len;
-                let mut pending: Vec<Request> = Vec::with_capacity(batch);
-
-                loop {
-                    // Block for the first request (or shutdown).
-                    if pending.is_empty() {
-                        match rx.recv_timeout(Duration::from_millis(50)) {
-                            Ok(r) => pending.push(r),
-                            Err(RecvTimeoutError::Timeout) => {
-                                if stop_rx.try_recv().is_ok() {
-                                    return Ok(());
-                                }
-                                continue;
-                            }
-                            Err(RecvTimeoutError::Disconnected) => return Ok(()),
-                        }
-                    }
-                    // Dynamic batching: fill until `batch` or `max_wait`.
-                    let deadline = Instant::now() + cfg.max_wait;
-                    while pending.len() < batch {
-                        let left = deadline.saturating_duration_since(Instant::now());
-                        if left.is_zero() {
-                            break;
-                        }
-                        match rx.recv_timeout(left) {
-                            Ok(r) => pending.push(r),
-                            Err(RecvTimeoutError::Timeout) => break,
-                            Err(RecvTimeoutError::Disconnected) => break,
-                        }
-                    }
-
-                    // Assemble the padded batch.
-                    let real = pending.len();
-                    let mut x = vec![0.0f32; batch * img];
-                    for (row, req) in pending.iter().enumerate() {
-                        x[row * img..(row + 1) * img].copy_from_slice(&req.image);
-                    }
-                    let mut inputs = params.clone();
-                    let mut shape = vec![batch];
-                    shape.extend_from_slice(&infer_meta.inputs.last().unwrap().shape[1..]);
-                    inputs.push(Tensor::from_f32(&shape, x));
-
-                    let t_exec = Instant::now();
-                    let out = exe.run(&inputs)?;
-                    let exec_ms = t_exec.elapsed().as_secs_f64() * 1e3;
-                    let logits = out[0].f32s()?;
-                    let classes = out[0].shape[1];
-
-                    {
-                        let mut s = stats_bg.lock().unwrap();
-                        s.batches += 1;
-                        s.requests += real as u64;
-                        s.rows_dispatched += batch as u64;
-                        s.exec_ms_total += exec_ms;
-                        s.occupancy_sum += real as f64 / batch as f64;
-                    }
-
-                    for (row, req) in pending.drain(..).enumerate() {
-                        let lg = logits[row * classes..(row + 1) * classes].to_vec();
-                        let argmax = lg
-                            .iter()
-                            .enumerate()
-                            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
-                            .map(|(i, _)| i)
-                            .unwrap_or(0);
-                        let total_ms = req.submitted.elapsed().as_secs_f64() * 1e3;
-                        let _ = req.reply.send(Reply {
-                            logits: lg,
-                            argmax,
-                            queue_ms: total_ms - exec_ms,
-                            total_ms,
-                        });
-                    }
-                    if stop_rx.try_recv().is_ok() {
-                        return Ok(());
-                    }
-                }
-            };
-            if let Err(e) = run() {
-                eprintln!("serve thread error: {e:#}");
+        // Resolve geometry and parameters on the caller thread so startup
+        // errors surface synchronously.
+        let manifest = Manifest::load(&cfg.backend.artifacts_dir)?;
+        let image_len = manifest.image * manifest.image * manifest.channels;
+        let classes = manifest.family(&cfg.family)?.num_classes;
+        let params: Vec<Tensor> = if cfg.checkpoint.is_empty() {
+            manifest.load_initial_params(&cfg.family)?
+        } else {
+            crate::train::TrainState::load(&manifest, Path::new(&cfg.checkpoint))?.params
+        };
+        // Fail fast on configuration errors a replica could otherwise only
+        // report to stderr after start() already returned Ok.
+        match cfg.backend.kind {
+            BackendKind::Native => {
+                // Dry-run bind: catches unsupported architectures and
+                // missing/mis-shaped parameters synchronously, at the cost
+                // of one extra quantize+pack at startup.
+                crate::runtime::native::NativeModel::build(&manifest, &cfg.family, &params)?;
             }
-        })?;
+            BackendKind::Xla => {
+                cfg.backend.check_available()?;
+                manifest.find("infer", &cfg.family, None, None)?;
+            }
+        }
+        drop(manifest);
+
+        let (tx, rx) = std::sync::mpsc::sync_channel::<Request>(cfg.queue_depth.max(1));
+        // The shared queue: workers take turns holding the receiver while
+        // they collect a batch, then release it for the next replica.
+        let shared_rx = Arc::new(Mutex::new(rx));
+        let stop = Arc::new(AtomicBool::new(false));
+        let stats = Arc::new(Mutex::new(ServeStats::default()));
+
+        let replicas = cfg.replicas.max(1);
+        let mut handles = Vec::with_capacity(replicas);
+        for rid in 0..replicas {
+            let spec = cfg.backend.clone();
+            let family = cfg.family.clone();
+            let params = params.clone();
+            let shared_rx = shared_rx.clone();
+            let stop = stop.clone();
+            let stats = stats.clone();
+            let max_wait = cfg.max_wait;
+            let handle = std::thread::Builder::new()
+                .name(format!("lsq-serve-{rid}"))
+                .spawn(move || {
+                    if let Err(e) = replica_loop(
+                        &spec, &family, &params, &shared_rx, &stop, &stats, max_wait, classes,
+                        image_len,
+                    ) {
+                        eprintln!("serve replica {rid}: {e:#}");
+                    }
+                })?;
+            handles.push(handle);
+        }
 
         Ok(Server {
             client: ServeClient { tx, image_len },
             stats,
-            shutdown: stop_tx,
-            handle: Some(handle),
+            replicas,
+            stop,
+            handles,
         })
     }
 
+    /// Snapshot of the aggregate metrics.
     pub fn stats(&self) -> ServeStats {
         self.stats.lock().unwrap().clone()
     }
 
+    /// Stop all replicas and join them. Queued-but-undispatched requests
+    /// receive a disconnect on their reply channels.
     pub fn stop(mut self) {
-        let _ = self.shutdown.send(());
-        // Drop our client sender so the recv loop can observe disconnect.
-        if let Some(h) = self.handle.take() {
+        self.stop.store(true, Ordering::Relaxed);
+        for h in self.handles.drain(..) {
             let _ = h.join();
+        }
+    }
+}
+
+/// One replica: open an engine, bind the family, then batch-and-execute
+/// until shutdown.
+#[allow(clippy::too_many_arguments)]
+fn replica_loop(
+    spec: &BackendSpec,
+    family: &str,
+    params: &[Tensor],
+    shared_rx: &Mutex<Receiver<Request>>,
+    stop: &AtomicBool,
+    stats: &Mutex<ServeStats>,
+    max_wait: Duration,
+    classes: usize,
+    image_len: usize,
+) -> Result<()> {
+    let mut backend = spec.open()?;
+    backend.prepare_infer(family, params)?;
+    let batch = backend.batch();
+    let mut pending: Vec<Request> = Vec::with_capacity(batch);
+
+    loop {
+        if stop.load(Ordering::Relaxed) {
+            return Ok(());
+        }
+        // Collect a batch while holding the queue; execution happens after
+        // the lock is released so replicas overlap on the forward pass.
+        {
+            let rx = match shared_rx.lock() {
+                Ok(g) => g,
+                Err(_) => return Ok(()), // another replica panicked
+            };
+            match rx.recv_timeout(Duration::from_millis(20)) {
+                Ok(r) => pending.push(r),
+                Err(RecvTimeoutError::Timeout) => continue, // re-check stop
+                Err(RecvTimeoutError::Disconnected) => return Ok(()),
+            }
+            let deadline = Instant::now() + max_wait;
+            while pending.len() < batch {
+                let left = deadline.saturating_duration_since(Instant::now());
+                if left.is_zero() {
+                    break;
+                }
+                match rx.recv_timeout(left) {
+                    Ok(r) => pending.push(r),
+                    Err(_) => break,
+                }
+            }
+        }
+
+        // Assemble the batch; pad the tail only for fixed-shape backends
+        // (the native backend runs exactly `real` rows).
+        let real = pending.len();
+        let rows = if backend.fixed_batch() { batch } else { real };
+        let mut x = vec![0.0f32; rows * image_len];
+        for (row, req) in pending.iter().enumerate() {
+            x[row * image_len..(row + 1) * image_len].copy_from_slice(&req.image);
+        }
+
+        let t_exec = Instant::now();
+        let logits = backend.infer(&x)?;
+        let exec_ms = t_exec.elapsed().as_secs_f64() * 1e3;
+
+        {
+            let mut s = stats.lock().unwrap();
+            s.batches += 1;
+            s.requests += real as u64;
+            s.rows_dispatched += rows as u64;
+            s.exec_ms_total += exec_ms;
+            // Occupancy stays relative to the target batch size: it
+            // measures how full the batcher runs, not the dispatch shape.
+            s.occupancy_sum += real as f64 / batch as f64;
+        }
+
+        for (row, req) in pending.drain(..).enumerate() {
+            let lg = logits[row * classes..(row + 1) * classes].to_vec();
+            let argmax = lg
+                .iter()
+                .enumerate()
+                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .map(|(i, _)| i)
+                .unwrap_or(0);
+            let total_ms = req.submitted.elapsed().as_secs_f64() * 1e3;
+            let _ = req.reply.send(Reply {
+                logits: lg,
+                argmax,
+                queue_ms: (total_ms - exec_ms).max(0.0),
+                total_ms,
+            });
         }
     }
 }

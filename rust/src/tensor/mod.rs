@@ -17,17 +17,22 @@ use anyhow::{anyhow, bail, Context, Result};
 
 use crate::util::json::Json;
 
+/// Element type of a [`Tensor`] (both 4 bytes, little-endian on disk).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum DType {
+    /// 32-bit IEEE float.
     F32,
+    /// 32-bit signed integer.
     I32,
 }
 
 impl DType {
+    /// Bytes per element.
     pub fn size(self) -> usize {
         4
     }
 
+    /// Canonical manifest/checkpoint name (`"float32"` / `"int32"`).
     pub fn name(self) -> &'static str {
         match self {
             DType::F32 => "float32",
@@ -35,6 +40,7 @@ impl DType {
         }
     }
 
+    /// Parse a manifest/checkpoint dtype name.
     pub fn from_name(s: &str) -> Result<DType> {
         match s {
             "float32" | "f32" => Ok(DType::F32),
@@ -44,41 +50,53 @@ impl DType {
     }
 }
 
+/// Flat tensor payload, one variant per [`DType`].
 #[derive(Clone, Debug, PartialEq)]
 pub enum Data {
+    /// fp32 payload.
     F32(Vec<f32>),
+    /// i32 payload.
     I32(Vec<i32>),
 }
 
+/// Host tensor: a shape plus flat row-major data.
 #[derive(Clone, Debug, PartialEq)]
 pub struct Tensor {
+    /// Dimension sizes (empty = scalar).
     pub shape: Vec<usize>,
+    /// Flat row-major payload.
     pub data: Data,
 }
 
 impl Tensor {
+    /// All-zero fp32 tensor of `shape`.
     pub fn zeros(shape: &[usize]) -> Tensor {
         Tensor { shape: shape.to_vec(), data: Data::F32(vec![0.0; numel(shape)]) }
     }
 
+    /// fp32 tensor from flat data (panics on shape/len mismatch).
     pub fn from_f32(shape: &[usize], data: Vec<f32>) -> Tensor {
         assert_eq!(numel(shape), data.len(), "shape/data mismatch");
         Tensor { shape: shape.to_vec(), data: Data::F32(data) }
     }
 
+    /// i32 tensor from flat data (panics on shape/len mismatch).
     pub fn from_i32(shape: &[usize], data: Vec<i32>) -> Tensor {
         assert_eq!(numel(shape), data.len(), "shape/data mismatch");
         Tensor { shape: shape.to_vec(), data: Data::I32(data) }
     }
 
+    /// Rank-0 fp32 scalar.
     pub fn scalar_f32(v: f32) -> Tensor {
         Tensor { shape: vec![], data: Data::F32(vec![v]) }
     }
 
+    /// Element count (1 for scalars).
     pub fn numel(&self) -> usize {
         numel(&self.shape)
     }
 
+    /// Element type of the payload.
     pub fn dtype(&self) -> DType {
         match &self.data {
             Data::F32(_) => DType::F32,
@@ -86,6 +104,7 @@ impl Tensor {
         }
     }
 
+    /// Borrow the fp32 payload (error if i32).
     pub fn f32s(&self) -> Result<&[f32]> {
         match &self.data {
             Data::F32(v) => Ok(v),
@@ -93,6 +112,7 @@ impl Tensor {
         }
     }
 
+    /// Mutably borrow the fp32 payload (error if i32).
     pub fn f32s_mut(&mut self) -> Result<&mut [f32]> {
         match &mut self.data {
             Data::F32(v) => Ok(v),
@@ -100,6 +120,7 @@ impl Tensor {
         }
     }
 
+    /// Borrow the i32 payload (error if fp32).
     pub fn i32s(&self) -> Result<&[i32]> {
         match &self.data {
             Data::I32(v) => Ok(v),
@@ -116,6 +137,7 @@ impl Tensor {
         Ok(v[0])
     }
 
+    /// Little-endian view of the payload (for literals and checkpoints).
     pub fn raw_bytes(&self) -> &[u8] {
         match &self.data {
             Data::F32(v) => bytes_of_f32(v),
@@ -124,6 +146,7 @@ impl Tensor {
     }
 }
 
+/// Element count of `shape` (1 for the scalar shape `[]`).
 pub fn numel(shape: &[usize]) -> usize {
     shape.iter().product::<usize>().max(1)
 }
@@ -136,10 +159,12 @@ fn bytes_of_i32(v: &[i32]) -> &[u8] {
     unsafe { std::slice::from_raw_parts(v.as_ptr() as *const u8, v.len() * 4) }
 }
 
+/// Decode little-endian bytes to fp32 values.
 pub fn f32s_from_bytes(b: &[u8]) -> Vec<f32> {
     b.chunks_exact(4).map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]])).collect()
 }
 
+/// Decode little-endian bytes to i32 values.
 pub fn i32s_from_bytes(b: &[u8]) -> Vec<i32> {
     b.chunks_exact(4).map(|c| i32::from_le_bytes([c[0], c[1], c[2], c[3]])).collect()
 }
@@ -153,27 +178,34 @@ const MAGIC: &[u8; 8] = b"LSQCKPT1";
 /// Named tensor collection with free-form JSON metadata.
 #[derive(Default, Debug)]
 pub struct Checkpoint {
+    /// Named tensors, sorted by name (serialization order).
     pub tensors: BTreeMap<String, Tensor>,
+    /// Free-form JSON metadata (family, step, ...).
     pub meta: BTreeMap<String, Json>,
 }
 
 impl Checkpoint {
+    /// Empty checkpoint.
     pub fn new() -> Self {
         Self::default()
     }
 
+    /// Add or replace tensor `name`.
     pub fn insert(&mut self, name: &str, t: Tensor) {
         self.tensors.insert(name.to_string(), t);
     }
 
+    /// Look up tensor `name` (error when missing).
     pub fn get(&self, name: &str) -> Result<&Tensor> {
         self.tensors.get(name).ok_or_else(|| anyhow!("checkpoint missing tensor {name:?}"))
     }
 
+    /// String metadata value for `key`, if present.
     pub fn meta_str(&self, key: &str) -> Option<&str> {
         self.meta.get(key).and_then(Json::as_str)
     }
 
+    /// Write the `LSQCKPT1` container atomically (tmp + rename).
     pub fn save(&self, path: &Path) -> Result<()> {
         let mut entries = Vec::new();
         let mut offset = 0usize;
@@ -216,6 +248,7 @@ impl Checkpoint {
         Ok(())
     }
 
+    /// Read an `LSQCKPT1` container written by [`Checkpoint::save`].
     pub fn load(path: &Path) -> Result<Checkpoint> {
         let mut f = std::fs::File::open(path).with_context(|| format!("open {path:?}"))?;
         let mut magic = [0u8; 8];

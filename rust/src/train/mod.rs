@@ -1,11 +1,14 @@
 //! Training layer: LR schedules, metric history, named train state with
-//! checkpointing, and the `Trainer` loop driving the AOT artifacts.
+//! checkpointing, and (with `--features xla`) the `Trainer` loop driving
+//! the AOT artifacts.
 
 pub mod lr;
 pub mod metrics;
 pub mod state;
+#[cfg(feature = "xla")]
 pub mod trainer;
 
 pub use metrics::{EvalRecord, History, StepRecord};
 pub use state::TrainState;
+#[cfg(feature = "xla")]
 pub use trainer::{FitReport, Trainer};

@@ -271,11 +271,12 @@ fn distill_artifact_trains() {
 fn serve_round_trip_and_batching() {
     use lsqnet::serve::{Server, ServerConfig};
     let server = Server::start(ServerConfig {
-        artifacts_dir: artifacts(),
+        backend: lsqnet::runtime::BackendSpec::xla(&artifacts()),
         family: "cnn_small_q2".into(),
         checkpoint: String::new(),
         max_wait: std::time::Duration::from_millis(4),
         queue_depth: 128,
+        replicas: 1,
     })
     .unwrap();
     let spec = SynthSpec::new(10, 1.2, 3);
@@ -311,11 +312,12 @@ fn serve_round_trip_and_batching() {
 fn serve_rejects_bad_image_size() {
     use lsqnet::serve::{Server, ServerConfig};
     let server = Server::start(ServerConfig {
-        artifacts_dir: artifacts(),
+        backend: lsqnet::runtime::BackendSpec::xla(&artifacts()),
         family: "cnn_small_q2".into(),
         checkpoint: String::new(),
         max_wait: std::time::Duration::from_millis(1),
         queue_depth: 8,
+        replicas: 1,
     })
     .unwrap();
     assert!(server.client.submit(vec![0.0; 7]).is_err());

@@ -1,0 +1,249 @@
+//! Native-backend tests: pack → fused-GEMM → unpack parity against the
+//! scalar reference quantizer in `quant::lsq` for every bit width, plus
+//! end-to-end checks of the interpreted forward pass and the multi-replica
+//! serve path. None of this needs Python, XLA or PJRT — the synthetic
+//! fixture writes a real manifest + params bin.
+
+use std::path::PathBuf;
+
+use lsqnet::quant::lsq::{qrange, quantize, quantize_vbar};
+use lsqnet::quant::pack::{quantize_and_pack, unpack};
+use lsqnet::runtime::native::fixture::{write_synthetic_family, FixtureSpec};
+use lsqnet::runtime::native::gemm::qgemm;
+use lsqnet::runtime::native::NativeModel;
+use lsqnet::runtime::{Backend, BackendSpec, Manifest, NativeEngine};
+use lsqnet::util::rng::Pcg32;
+
+fn tmp_dir(tag: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("lsq_native_{tag}_{}", std::process::id()))
+}
+
+/// The satellite parity test: quantize-and-pack a weight matrix at every
+/// width (signed and unsigned activations), run the fused unpack-and-dot
+/// GEMM, and compare each output against the scalar reference computed
+/// with `quant::lsq` Eq. 1/2 math in f64.
+#[test]
+fn qgemm_matches_scalar_reference_for_all_widths() {
+    let (m, k, n) = (4usize, 33usize, 11usize);
+    for bits in 1..=8u32 {
+        for act_signed in [true, false] {
+            let mut rng = Pcg32::seeded(100 + bits as u64 * 2 + act_signed as u64);
+            // fp32 weights + a realistic step size
+            let w: Vec<f32> = (0..k * n).map(|_| rng.normal() * 0.5).collect();
+            let (wqn, wqp) = qrange(bits, true);
+            let sw = lsqnet::quant::lsq::step_init(&w, wqp).max(1e-3);
+            let packed = quantize_and_pack(&w, sw, bits, true).unwrap();
+
+            // fp32 activations quantized per Eq. 1 with the layer's sa
+            let (aqn, aqp) = qrange(bits, act_signed);
+            let sa = 0.21f32;
+            let a: Vec<f32> = (0..m * k).map(|_| rng.normal()).collect();
+            let abar: Vec<i32> =
+                a.iter().map(|&v| quantize_vbar(v, sa, aqn, aqp) as i32).collect();
+
+            let mut out = vec![0.0f32; m * n];
+            qgemm(m, k, n, &abar, &packed, sa * sw, None, &mut out);
+
+            // scalar reference: dot of Eq. 2 dequantized values, in f64
+            let wbar = unpack(&packed);
+            for i in 0..m {
+                for j in 0..n {
+                    let mut want = 0.0f64;
+                    for kk in 0..k {
+                        let ah = abar[i * k + kk] as f64 * sa as f64;
+                        let wh = wbar[kk * n + j] as f64 * sw as f64;
+                        want += ah * wh;
+                    }
+                    let got = out[i * n + j] as f64;
+                    assert!(
+                        (got - want).abs() < 1e-3 * want.abs().max(1.0),
+                        "bits={bits} signed_act={act_signed} ({i},{j}): {got} vs {want}"
+                    );
+                }
+            }
+
+            // and the packed weights themselves dequantize to Eq. 2 exactly
+            for (orig, &vb) in w.iter().zip(&wbar) {
+                let eq2 = quantize(*orig, sw, wqn, wqp);
+                assert_eq!(eq2, vb as f32 * sw, "bits={bits}");
+            }
+        }
+    }
+}
+
+/// The native forward pass of an fp32 (q32) family must equal plain fp32
+/// math; spot-check against a quantized build of the same weights — the
+/// two differ, but only within the quantization error budget.
+#[test]
+fn native_forward_q32_vs_q8_are_close() {
+    let spec = FixtureSpec { image: 16, channels: 3, num_classes: 10, batch: 4, seed: 5 };
+    let dir32 = tmp_dir("fw32");
+    let dir8 = tmp_dir("fw8");
+    // Same seed => identical weights; only the quantizers differ.
+    let fam32 = write_synthetic_family(&dir32, "cnn_small", 32, spec).unwrap();
+    let fam8 = write_synthetic_family(&dir8, "cnn_small", 8, spec).unwrap();
+
+    let m32 = Manifest::load(&dir32).unwrap();
+    let m8 = Manifest::load(&dir8).unwrap();
+    let model32 =
+        NativeModel::build(&m32, &fam32, &m32.load_initial_params(&fam32).unwrap()).unwrap();
+    let model8 =
+        NativeModel::build(&m8, &fam8, &m8.load_initial_params(&fam8).unwrap()).unwrap();
+
+    let mut rng = Pcg32::seeded(9);
+    let x: Vec<f32> = (0..2 * 16 * 16 * 3).map(|_| rng.normal()).collect();
+    let y32 = model32.forward(&x, 2).unwrap();
+    let y8 = model8.forward(&x, 2).unwrap();
+    assert_eq!(y32.len(), 20);
+    assert_eq!(y8.len(), 20);
+    assert!(y32.iter().all(|v| v.is_finite()));
+    // 8-bit quantization tracks fp32 closely at this depth
+    let max_abs = y32.iter().fold(0.0f32, |a, &v| a.max(v.abs())).max(1e-3);
+    for (a, b) in y32.iter().zip(&y8) {
+        assert!(
+            (a - b).abs() < 0.35 * max_abs,
+            "q32 {a} vs q8 {b} (scale {max_abs})"
+        );
+    }
+    // the q8 model actually stores packed weights
+    assert!(model8.packed_bytes < model32.packed_bytes);
+    std::fs::remove_dir_all(&dir32).ok();
+    std::fs::remove_dir_all(&dir8).ok();
+}
+
+/// The residual (resnet) and pooling (vgg) paths build and run.
+#[test]
+fn native_forward_covers_resnet_and_vgg() {
+    for (model, qbits) in [("resnet8", 2u32), ("vgg_small", 4), ("mlp", 2)] {
+        let spec = FixtureSpec { image: 16, channels: 3, num_classes: 7, batch: 2, seed: 3 };
+        let dir = tmp_dir(model);
+        let family = write_synthetic_family(&dir, model, qbits, spec).unwrap();
+        let m = Manifest::load(&dir).unwrap();
+        let model_rt =
+            NativeModel::build(&m, &family, &m.load_initial_params(&family).unwrap()).unwrap();
+        let mut rng = Pcg32::seeded(4);
+        let x: Vec<f32> = (0..3 * 16 * 16 * 3).map(|_| rng.normal()).collect();
+        let y = model_rt.forward(&x, 3).unwrap();
+        assert_eq!(y.len(), 3 * 7, "{model}");
+        assert!(y.iter().all(|v| v.is_finite()), "{model}");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}
+
+/// Backend trait plumbing: open via spec, prepare, infer a padded batch.
+#[test]
+fn backend_spec_opens_native_engine() {
+    let dir = tmp_dir("spec");
+    let spec = FixtureSpec { image: 8, channels: 3, num_classes: 5, batch: 4, seed: 21 };
+    let family = write_synthetic_family(&dir, "mlp", 4, spec).unwrap();
+    let mut backend = BackendSpec::native(&dir).open().unwrap();
+    assert_eq!(backend.name(), "native");
+    let params = backend.manifest().load_initial_params(&family).unwrap();
+    backend.prepare_infer(&family, &params).unwrap();
+    assert_eq!(backend.batch(), 4);
+    let x = vec![0.5f32; 4 * 8 * 8 * 3];
+    let logits = backend.infer(&x).unwrap();
+    assert_eq!(logits.len(), 4 * 5);
+    // all four rows identical input => identical logits
+    for r in 1..4 {
+        assert_eq!(&logits[r * 5..r * 5 + 5], &logits[..5]);
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// NativeEngine::infer without prepare_infer is a clean error, not a panic.
+#[test]
+fn infer_before_prepare_errors() {
+    let dir = tmp_dir("noprep");
+    let spec = FixtureSpec { image: 8, channels: 3, num_classes: 5, batch: 2, seed: 2 };
+    write_synthetic_family(&dir, "mlp", 4, spec).unwrap();
+    let mut engine = NativeEngine::new(&dir).unwrap();
+    assert!(engine.infer(&[0.0; 8 * 8 * 3]).is_err());
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// The multi-replica smoke test: N clients hammer a server with 3 native
+/// replicas; every request gets exactly one reply and the stats add up.
+#[test]
+fn multi_replica_serve_answers_every_request_once() {
+    use lsqnet::serve::{Server, ServerConfig};
+    let dir = tmp_dir("serve");
+    let spec = FixtureSpec { image: 8, channels: 3, num_classes: 6, batch: 4, seed: 33 };
+    let family = write_synthetic_family(&dir, "cnn_small", 2, spec).unwrap();
+
+    let server = Server::start(ServerConfig {
+        backend: BackendSpec::native(&dir),
+        family,
+        checkpoint: String::new(),
+        max_wait: std::time::Duration::from_millis(2),
+        queue_depth: 64,
+        replicas: 3,
+    })
+    .unwrap();
+    assert_eq!(server.replicas, 3);
+
+    let n_threads = 4usize;
+    let per_thread = 12usize;
+    let mut replies = Vec::new();
+    std::thread::scope(|s| {
+        let handles: Vec<_> = (0..n_threads)
+            .map(|t| {
+                let c = server.client.clone();
+                s.spawn(move || {
+                    (0..per_thread)
+                        .map(|i| {
+                            let mut img = vec![0.0f32; 8 * 8 * 3];
+                            for (j, v) in img.iter_mut().enumerate() {
+                                *v = ((t * 31 + i * 7 + j) % 13) as f32 / 13.0 - 0.5;
+                            }
+                            c.infer(img).unwrap()
+                        })
+                        .collect::<Vec<_>>()
+                })
+            })
+            .collect();
+        for h in handles {
+            replies.extend(h.join().unwrap());
+        }
+    });
+
+    let total = (n_threads * per_thread) as u64;
+    assert_eq!(replies.len() as u64, total, "every request gets exactly one reply");
+    for r in &replies {
+        assert_eq!(r.logits.len(), 6);
+        assert!(r.argmax < 6);
+        assert!(r.total_ms >= 0.0);
+        assert!(r.logits.iter().all(|v| v.is_finite()));
+    }
+    let stats = server.stats();
+    server.stop();
+    assert_eq!(stats.requests, total);
+    assert!(stats.batches >= 1 && stats.batches <= total);
+    assert!(stats.rows_dispatched >= stats.requests);
+    assert!(stats.mean_occupancy() > 0.0 && stats.mean_occupancy() <= 1.0);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Rejecting a wrong-size image must not disturb the replicas.
+#[test]
+fn serve_rejects_bad_image_size_native() {
+    use lsqnet::serve::{Server, ServerConfig};
+    let dir = tmp_dir("badsize");
+    let spec = FixtureSpec { image: 8, channels: 3, num_classes: 4, batch: 2, seed: 8 };
+    let family = write_synthetic_family(&dir, "mlp", 8, spec).unwrap();
+    let server = Server::start(ServerConfig {
+        backend: BackendSpec::native(&dir),
+        family,
+        checkpoint: String::new(),
+        max_wait: std::time::Duration::from_millis(1),
+        queue_depth: 8,
+        replicas: 2,
+    })
+    .unwrap();
+    assert!(server.client.submit(vec![0.0; 7]).is_err());
+    // a good request still works afterwards
+    let rep = server.client.infer(vec![0.1; 8 * 8 * 3]).unwrap();
+    assert_eq!(rep.logits.len(), 4);
+    server.stop();
+    std::fs::remove_dir_all(&dir).ok();
+}
