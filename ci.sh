@@ -1,16 +1,24 @@
 #!/usr/bin/env bash
 # CI gate for the rust_pallas LSQ repo. Everything here runs with NO
 # XLA/PJRT libraries and no Python: the default feature set covers the
-# native packed-weight backend, the quant substrate, serving, and the docs
-# spine. (On a machine with the vendored `xla` crate + PJRT, append
-# `--features xla` runs for the artifact-driven paths.)
+# native packed-weight backend, the native training subsystem (hand-written
+# LSQ backward), the quant substrate, serving, and the docs spine. (On a
+# machine with the vendored `xla` crate + PJRT, append `--features xla`
+# runs for the artifact-driven paths.)
 set -euo pipefail
 cd "$(dirname "$0")"
+
+echo "== rustfmt (cargo fmt --check: formatting is part of the gate) =="
+cargo fmt --check
 
 echo "== build (release, default features: native backend only) =="
 cargo build --release
 
-echo "== tests (unit + native backend + proptests + doctests) =="
+echo "== grad-check (fast fail: finite-difference checks of the native"
+echo "   LSQ backward — Eq. 3 / Eq. 5 — before the full suite) =="
+cargo test --release -q --test grad_check
+
+echo "== tests (unit + native backend + native training + proptests + doctests) =="
 cargo test -q
 
 echo "== clippy (warnings are errors; missing_docs stays advisory while"

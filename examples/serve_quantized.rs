@@ -75,7 +75,7 @@ fn main() -> anyhow::Result<()> {
     std::thread::scope(|s| {
         let handles: Vec<_> = (0..threads)
             .map(|t| {
-                let client = server.client.clone();
+                let client = server.client();
                 let spec = &spec;
                 s.spawn(move || {
                     let mut l = Vec::new();

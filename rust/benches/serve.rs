@@ -60,13 +60,13 @@ fn main() {
     .unwrap();
     let n = if fast { 128 } else { 512 };
     // Warm every replica path before timing.
-    server.client.infer(spec.generate_alloc(0)).unwrap();
+    server.client().infer(spec.generate_alloc(0)).unwrap();
     let t0 = std::time::Instant::now();
     let mut lats: Vec<f64> = Vec::new();
     std::thread::scope(|s| {
         let hs: Vec<_> = (0..4)
             .map(|t| {
-                let c = server.client.clone();
+                let c = server.client();
                 let spec = &spec;
                 s.spawn(move || {
                     (0..n / 4)

@@ -107,6 +107,9 @@ pub struct ExperimentConfig {
     pub bits: u32,
     pub method: String,
     pub gscale: String,
+    /// Training backend: `"native"` (pure-Rust backward, always available)
+    /// or `"xla"` (AOT artifacts, needs `--features xla`).
+    pub backend: String,
     pub distill: bool,
     /// Checkpoint of an fp32 model to fine-tune from (paper protocol).
     /// Empty = train from the AOT initial parameters.
@@ -125,6 +128,7 @@ impl Default for ExperimentConfig {
             bits: 32,
             method: "lsq".to_string(),
             gscale: "full".to_string(),
+            backend: "native".to_string(),
             distill: false,
             init_from: String::new(),
             data: DataConfig::default(),
@@ -168,6 +172,12 @@ impl ExperimentConfig {
         if !["full", "sqrtn", "one", "x10", "d10"].contains(&self.gscale.as_str()) {
             bail!("unknown gscale mode {:?}", self.gscale);
         }
+        if !["native", "xla"].contains(&self.backend.as_str()) {
+            bail!("unknown train backend {:?} (native|xla)", self.backend);
+        }
+        if self.backend == "native" && self.distill {
+            bail!("knowledge distillation is only implemented on the xla backend");
+        }
         if self.train.epochs == 0 && self.train.max_steps == 0 {
             bail!("epochs and max_steps are both 0 — nothing to train");
         }
@@ -191,6 +201,7 @@ impl ExperimentConfig {
             ("bits", Json::num(self.bits as f64)),
             ("method", Json::str(self.method.clone())),
             ("gscale", Json::str(self.gscale.clone())),
+            ("backend", Json::str(self.backend.clone())),
             ("distill", Json::Bool(self.distill)),
             ("init_from", Json::str(self.init_from.clone())),
             (
@@ -232,13 +243,17 @@ impl ExperimentConfig {
         c.bits = j.get("bits").and_then(Json::as_usize).unwrap_or(c.bits as usize) as u32;
         c.method = gs(j, "method", &c.method);
         c.gscale = gs(j, "gscale", &c.gscale);
+        c.backend = gs(j, "backend", &c.backend);
         c.distill = j.get("distill").and_then(Json::as_bool).unwrap_or(c.distill);
         c.init_from = gs(j, "init_from", &c.init_from);
         if let Some(d) = j.get("data") {
-            c.data.train_size = d.get("train_size").and_then(Json::as_usize).unwrap_or(c.data.train_size);
-            c.data.test_size = d.get("test_size").and_then(Json::as_usize).unwrap_or(c.data.test_size);
+            c.data.train_size =
+                d.get("train_size").and_then(Json::as_usize).unwrap_or(c.data.train_size);
+            c.data.test_size =
+                d.get("test_size").and_then(Json::as_usize).unwrap_or(c.data.test_size);
             c.data.classes = d.get("classes").and_then(Json::as_usize).unwrap_or(c.data.classes);
-            c.data.noise = d.get("noise").and_then(Json::as_f64).unwrap_or(c.data.noise as f64) as f32;
+            c.data.noise =
+                d.get("noise").and_then(Json::as_f64).unwrap_or(c.data.noise as f64) as f32;
             c.data.seed = d.get("seed").and_then(Json::as_i64).unwrap_or(c.data.seed as i64) as u64;
             c.data.augment = d.get("augment").and_then(Json::as_bool).unwrap_or(c.data.augment);
         }
@@ -250,10 +265,14 @@ impl ExperimentConfig {
             if let Some(s) = t.get("schedule").and_then(Json::as_str) {
                 c.train.schedule = Schedule::parse(s)?;
             }
-            c.train.step_every = t.get("step_every").and_then(Json::as_usize).unwrap_or(c.train.step_every);
-            c.train.eval_every = t.get("eval_every").and_then(Json::as_usize).unwrap_or(c.train.eval_every);
-            c.train.seed = t.get("seed").and_then(Json::as_i64).unwrap_or(c.train.seed as i64) as u64;
-            c.train.max_steps = t.get("max_steps").and_then(Json::as_usize).unwrap_or(c.train.max_steps);
+            c.train.step_every =
+                t.get("step_every").and_then(Json::as_usize).unwrap_or(c.train.step_every);
+            c.train.eval_every =
+                t.get("eval_every").and_then(Json::as_usize).unwrap_or(c.train.eval_every);
+            c.train.seed =
+                t.get("seed").and_then(Json::as_i64).unwrap_or(c.train.seed as i64) as u64;
+            c.train.max_steps =
+                t.get("max_steps").and_then(Json::as_usize).unwrap_or(c.train.max_steps);
         }
         c.validate()?;
         Ok(c)

@@ -1,31 +1,30 @@
 //! Sweep coordinator: leader/worker scheduling of experiment jobs.
 //!
-//! `PjRtClient` is `Rc`-backed (not `Send`), so parallelism is process-shaped
-//! the way a multi-host launcher would be: the leader owns a job queue;
-//! each worker thread builds its *own* engine via a shared factory (its own
-//! PJRT client and compiled executables — the same replica model the serve
-//! layer uses, see DESIGN.md §Backend-trait) and pulls jobs until the queue
-//! drains. Results flow back over a channel and are folded into a
-//! `SweepReport` keyed by job name.
+//! Parallelism is process-shaped the way a multi-host launcher would be:
+//! the leader owns a job queue; each worker thread builds its *own*
+//! training backend through a shared factory and pulls jobs until the
+//! queue drains ([`run_sweep_pooled`]). Results flow back over a channel
+//! and are folded into a [`SweepReport`] keyed by job name.
 //!
-//! XLA:CPU itself parallelizes single steps across cores, so the default
-//! worker count is deliberately small (oversubscription hurts); sweeps of
-//! many small jobs benefit from 2-4 workers.
+//! Two backends plug into the same pool:
 //!
-//! Training requires the AOT artifacts, so `run_job` / `run_sweep` are
-//! only compiled with `--features xla`; the job/report types are always
-//! available.
+//! * **native** ([`run_sweep_native`], always available) — each worker
+//!   runs [`crate::train::NativeTrainer`] jobs straight off the manifest,
+//!   no XLA/PJRT;
+//! * **xla** (`run_sweep` / `run_sweep_with`, behind `--features xla`) —
+//!   `PjRtClient` is `Rc`-backed (not `Send`), so each worker builds its
+//!   own `Engine` (its own PJRT client and compiled executables — the same
+//!   replica model the serve layer uses, see DESIGN.md §Backend-trait).
+//!
+//! XLA:CPU parallelizes single steps across cores, so the default worker
+//! count is deliberately small (oversubscription hurts); the native
+//! trainer is single-threaded per job and scales to more workers.
 
-#[cfg(feature = "xla")]
 pub mod sweep;
 
 use std::collections::BTreeMap;
 use std::path::PathBuf;
-#[cfg(feature = "xla")]
-use std::sync::mpsc;
-#[cfg(feature = "xla")]
-use std::sync::Mutex;
-#[cfg(feature = "xla")]
+use std::sync::{mpsc, Mutex};
 use std::time::Instant;
 
 use anyhow::Result;
@@ -33,59 +32,78 @@ use anyhow::Result;
 use crate::config::ExperimentConfig;
 #[cfg(feature = "xla")]
 use crate::runtime::Engine;
+use crate::train::{FitReport, NativeTrainer};
 #[cfg(feature = "xla")]
 use crate::train::Trainer;
 use crate::util::json::Json;
 
+/// One experiment to run: a config plus report tags.
 #[derive(Clone, Debug)]
 pub struct Job {
+    /// The experiment configuration.
     pub cfg: ExperimentConfig,
     /// Tags propagated into the report (e.g. table row/column ids).
     pub tags: BTreeMap<String, String>,
 }
 
 impl Job {
+    /// Wrap a config with no tags.
     pub fn new(cfg: ExperimentConfig) -> Job {
         Job { cfg, tags: BTreeMap::new() }
     }
 
+    /// Attach a report tag.
     pub fn tag(mut self, k: &str, v: impl ToString) -> Job {
         self.tags.insert(k.to_string(), v.to_string());
         self
     }
 }
 
+/// Outcome of one job (error runs report `error` + NaN metrics).
 #[derive(Clone, Debug)]
 pub struct JobResult {
+    /// Job name (from the config).
     pub name: String,
+    /// Tags copied from the job.
     pub tags: BTreeMap<String, String>,
+    /// Final test top-1 (%).
     pub top1: f64,
+    /// Final test top-5 (%).
     pub top5: f64,
+    /// Mean train loss over the last 20 steps.
     pub final_train_loss: f64,
+    /// Wall time of the whole job.
     pub wall_seconds: f64,
+    /// Path of the final checkpoint (empty on error).
     pub checkpoint: PathBuf,
+    /// Error message when the job failed.
     pub error: Option<String>,
     /// Did training diverge / fail to beat chance? (paper Table 3 reports
     /// "Did not converge" rows.)
     pub converged: bool,
 }
 
+/// Results of a sweep, in job-submission order.
 #[derive(Default, Debug)]
 pub struct SweepReport {
+    /// One entry per job.
     pub results: Vec<JobResult>,
 }
 
 impl SweepReport {
+    /// Find a result by job name.
     pub fn by_name(&self, name: &str) -> Option<&JobResult> {
         self.results.iter().find(|r| r.name == name)
     }
 
+    /// Find the first result carrying all of `want`'s tag pairs.
     pub fn by_tags(&self, want: &[(&str, &str)]) -> Option<&JobResult> {
         self.results.iter().find(|r| {
             want.iter().all(|(k, v)| r.tags.get(*k).map(String::as_str) == Some(*v))
         })
     }
 
+    /// JSON array form (one object per result).
     pub fn to_json(&self) -> Json {
         Json::Arr(
             self.results
@@ -118,6 +136,7 @@ impl SweepReport {
         )
     }
 
+    /// Write the JSON report (creating parent directories).
     pub fn save(&self, path: &std::path::Path) -> Result<()> {
         if let Some(d) = path.parent() {
             std::fs::create_dir_all(d)?;
@@ -127,17 +146,11 @@ impl SweepReport {
     }
 }
 
-/// Execute one job on an existing engine (used by workers and directly by
-/// the CLI `train` command).
-#[cfg(feature = "xla")]
-pub fn run_job(engine: &Engine, job: &Job) -> JobResult {
-    let t0 = Instant::now();
+/// Fold a finished (or failed) fit into a [`JobResult`].
+fn finish_job(job: &Job, t0: Instant, res: Result<FitReport>) -> JobResult {
     let name = job.cfg.name.clone();
     let chance = 100.0 / job.cfg.data.classes as f64;
-    match Trainer::new(engine, job.cfg.clone()).and_then(|mut t| {
-        t.verbose = false;
-        t.fit()
-    }) {
+    match res {
         Ok(rep) => JobResult {
             name,
             tags: job.tags.clone(),
@@ -164,15 +177,44 @@ pub fn run_job(engine: &Engine, job: &Job) -> JobResult {
     }
 }
 
-/// Leader: run `jobs` across `workers` threads, each building its own
-/// engine through `make_engine` (the factory is shared by reference; the
-/// engines it returns never cross threads). Jobs run in queue order;
-/// results are returned in completion order and then sorted back to
-/// submission order.
+/// Execute one job on an existing XLA engine (used by workers and directly
+/// by the CLI `train` command).
 #[cfg(feature = "xla")]
-pub fn run_sweep_with<F>(make_engine: F, jobs: Vec<Job>, workers: usize) -> Result<SweepReport>
+pub fn run_job(engine: &Engine, job: &Job) -> JobResult {
+    let t0 = Instant::now();
+    finish_job(
+        job,
+        t0,
+        Trainer::new(engine, job.cfg.clone()).and_then(|mut t| {
+            t.verbose = false;
+            t.fit()
+        }),
+    )
+}
+
+/// Execute one job on the native training backend (no XLA/PJRT). The
+/// trainer reads `manifest.json` from the job's own `artifacts_dir`.
+pub fn run_job_native(job: &Job) -> JobResult {
+    let t0 = Instant::now();
+    finish_job(
+        job,
+        t0,
+        NativeTrainer::new(job.cfg.clone()).and_then(|mut t| {
+            t.verbose = false;
+            t.fit()
+        }),
+    )
+}
+
+/// Leader/worker pool shared by every training backend: run `jobs` across
+/// `workers` threads, each building its own job runner through
+/// `make_worker` (called once per worker thread — the place to open
+/// engines or other per-thread state). Jobs run in queue order; results
+/// are returned in submission order.
+pub fn run_sweep_pooled<W, R>(make_worker: W, jobs: Vec<Job>, workers: usize) -> Result<SweepReport>
 where
-    F: Fn() -> Result<Engine> + Sync,
+    W: Fn() -> Result<R> + Sync,
+    R: FnMut(&Job) -> JobResult,
 {
     let n = jobs.len();
     if n == 0 {
@@ -185,17 +227,17 @@ where
         Mutex::new(jobs.into_iter().enumerate().rev().collect());
     let (tx, rx) = mpsc::channel::<(usize, JobResult)>();
     let queue = &queue;
-    let make_engine = &make_engine;
+    let make_worker = &make_worker;
 
     std::thread::scope(|s| {
         for wid in 0..workers {
             let tx = tx.clone();
             s.spawn(move || {
-                // Each worker owns its engine (non-Send client).
-                let engine = match make_engine() {
-                    Ok(e) => e,
+                // Each worker owns its runner (XLA clients are not Send).
+                let mut run = match make_worker() {
+                    Ok(r) => r,
                     Err(e) => {
-                        eprintln!("worker {wid}: engine init failed: {e:#}");
+                        eprintln!("worker {wid}: backend init failed: {e:#}");
                         return;
                     }
                 };
@@ -206,7 +248,7 @@ where
                         None => break,
                     };
                     let started = Instant::now();
-                    let res = run_job(&engine, &job);
+                    let res = run(&job);
                     println!(
                         "  [worker {wid}] {} -> top1 {:.2}%{} ({:.1}s)",
                         res.name,
@@ -228,6 +270,24 @@ where
     Ok(SweepReport { results: indexed.into_iter().map(|(_, r)| r).collect() })
 }
 
+/// [`run_sweep_pooled`] over per-worker XLA engines built by `make_engine`
+/// (the factory is shared by reference; the engines it returns never cross
+/// threads).
+#[cfg(feature = "xla")]
+pub fn run_sweep_with<F>(make_engine: F, jobs: Vec<Job>, workers: usize) -> Result<SweepReport>
+where
+    F: Fn() -> Result<Engine> + Sync,
+{
+    run_sweep_pooled(
+        || {
+            let engine = make_engine()?;
+            Ok(move |job: &Job| run_job(&engine, job))
+        },
+        jobs,
+        workers,
+    )
+}
+
 /// [`run_sweep_with`] over the default XLA engine factory for
 /// `artifacts_dir`.
 #[cfg(feature = "xla")]
@@ -237,4 +297,10 @@ pub fn run_sweep(
     workers: usize,
 ) -> Result<SweepReport> {
     run_sweep_with(|| Engine::new(artifacts_dir), jobs, workers)
+}
+
+/// [`run_sweep_pooled`] over the native training backend: every worker
+/// runs [`run_job_native`] jobs. No XLA/PJRT required.
+pub fn run_sweep_native(jobs: Vec<Job>, workers: usize) -> Result<SweepReport> {
+    run_sweep_pooled(|| Ok(run_job_native as fn(&Job) -> JobResult), jobs, workers)
 }

@@ -6,12 +6,12 @@
 //! quantized job then points its `init_from` at the produced checkpoint.
 
 use std::collections::BTreeMap;
-use std::path::{Path, PathBuf};
+use std::path::PathBuf;
 
 use anyhow::Result;
 
 use crate::config::ExperimentConfig;
-use crate::coordinator::{run_sweep, Job, SweepReport};
+use crate::coordinator::{run_sweep_native, Job, SweepReport};
 
 /// Scale knobs shared by all repro sweeps.
 #[derive(Clone, Debug)]
@@ -24,6 +24,18 @@ pub struct SweepScale {
     pub workers: usize,
     pub out_dir: String,
     pub artifacts_dir: String,
+    /// Training backend the sweep jobs run on (`"native"` or `"xla"`);
+    /// defaults to `"xla"` when the feature is compiled in (the repro
+    /// harness drives the AOT artifacts) and `"native"` otherwise.
+    pub backend: String,
+}
+
+fn default_backend() -> String {
+    if cfg!(feature = "xla") {
+        "xla".into()
+    } else {
+        "native".into()
+    }
 }
 
 impl SweepScale {
@@ -39,6 +51,7 @@ impl SweepScale {
             workers: 1,
             out_dir: "runs".into(),
             artifacts_dir: "artifacts".into(),
+            backend: default_backend(),
         }
     }
 
@@ -53,6 +66,25 @@ impl SweepScale {
             workers: 1,
             out_dir: "runs_quick".into(),
             artifacts_dir: "artifacts".into(),
+            backend: default_backend(),
+        }
+    }
+
+    /// Run `jobs` on this scale's training backend via the shared worker
+    /// pool.
+    pub fn run_jobs(&self, jobs: Vec<Job>) -> Result<SweepReport> {
+        match self.backend.as_str() {
+            "native" => run_sweep_native(jobs, self.workers),
+            #[cfg(feature = "xla")]
+            "xla" => crate::coordinator::run_sweep(
+                std::path::Path::new(&self.artifacts_dir),
+                jobs,
+                self.workers,
+            ),
+            other => anyhow::bail!(
+                "train backend {other:?} is not available in this build \
+                 (native always; xla needs `--features xla`)"
+            ),
         }
     }
 
@@ -60,6 +92,7 @@ impl SweepScale {
         let mut c = ExperimentConfig::default();
         c.model = model.to_string();
         c.bits = bits;
+        c.backend = self.backend.clone();
         c.artifacts_dir = self.artifacts_dir.clone();
         c.out_dir = self.out_dir.clone();
         c.data.train_size = self.train_size;
@@ -106,7 +139,7 @@ pub fn ensure_fp32(
         jobs.push(Job::new(cfg).tag("model", model).tag("bits", 32));
     }
     if !jobs.is_empty() {
-        let rep = run_sweep(Path::new(&scale.artifacts_dir), jobs, scale.workers)?;
+        let rep = scale.run_jobs(jobs)?;
         for r in rep.results {
             if let Some(e) = &r.error {
                 anyhow::bail!("fp32 pretrain {} failed: {e}", r.name);

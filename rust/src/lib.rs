@@ -11,20 +11,25 @@
 //!
 //! ## Execution backends
 //!
-//! Inference dispatches over the [`runtime::Backend`] trait (see DESIGN.md
-//! §Backend-trait):
+//! Inference dispatches over the [`runtime::Backend`] trait and training
+//! over [`train::TrainBackend`] (see DESIGN.md §Backend-trait /
+//! §Native-training):
 //!
 //! * [`runtime::NativeEngine`] — pure-Rust packed-weight integer inference
 //!   (Eq. 1/2 executed from 2/3/4/8-bit weights, `i32` accumulation).
 //!   Always available; needs no XLA, PJRT or Python.
-//! * `runtime::Engine` — the XLA/PJRT executor for the AOT HLO artifacts.
-//!   Training, sweeps and the repro harness live here, behind
-//!   `--features xla`.
+//! * [`train::NativeTrainer`] — pure-Rust LSQ *training*: hand-written
+//!   backward pass with the Eq. 3 step-size gradient and the Section-2.2
+//!   `1/√(N·Qp)` scale. Always available; `cargo run -- train` uses it by
+//!   default.
+//! * `runtime::Engine` + `train::Trainer` — the XLA/PJRT executor for the
+//!   AOT HLO artifacts; the repro harness and the `xla` train backend live
+//!   here, behind `--features xla`.
 //!
 //! Entry points: the `lsqnet` binary (see `main.rs`), [`serve::Server`]
-//! for the multi-replica dynamic batcher, and (with `xla`)
-//! `runtime::Engine` + `train::Trainer`. See README.md for the
-//! command-line quickstart and EXPERIMENTS.md for the perf ladder the
+//! for the multi-replica dynamic batcher, [`train::NativeTrainer`], and
+//! (with `xla`) `runtime::Engine` + `train::Trainer`. See README.md for
+//! the command-line quickstart and EXPERIMENTS.md for the perf ladder the
 //! benches report against.
 
 #![warn(missing_docs)]

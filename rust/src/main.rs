@@ -2,16 +2,19 @@
 //!
 //! Subcommands:
 //!   info                         inspect artifacts/manifest
-//!   train                        run one experiment (flags or --config)   [xla]
-//!   eval                         evaluate a checkpoint on the test split  [xla]
-//!   sweep --config <json>        run a list of experiment configs        [xla]
+//!   train                        run one experiment (flags or --config);
+//!                                native backward by default, `--backend xla`
+//!                                for the AOT artifacts
+//!   eval                         evaluate a checkpoint on the test split
+//!   sweep --config <json>        run a list of experiment configs
 //!   repro <table1|...|all>       regenerate a paper table/figure         [xla]
 //!   serve                        start the quantized-inference server
 //!                                (native packed-weight backend by default)
 //!   pack                         quantize+pack a checkpoint, report size
 //!
-//! Commands tagged [xla] drive the AOT artifacts and require building with
-//! `--features xla`; everything else runs on the native backend.
+//! Commands tagged [xla] (and the xla train/eval/sweep backend) drive the
+//! AOT artifacts and require building with `--features xla`; everything
+//! else runs on the native backends.
 //!
 //! Common flags: --artifacts <dir> --out-dir <dir> --quick --workers N
 
@@ -30,14 +33,18 @@ USAGE: lsqnet <command> [flags]
 
 COMMANDS
   info                     list artifacts, families and parameter counts
-  train                    train one model                      [needs --features xla]
-                           --model cnn_small --bits 2 [--method lsq]
+  train                    train one model (native backend by default; a
+                           synthetic fixture family is written when the
+                           artifacts dir has no manifest)
+                           --model mlp --bits 3 [--method lsq]
                            [--gscale full] [--epochs N] [--lr X] [--wd X]
-                           [--init-from ck.ckpt] [--distill] [--config c.json]
+                           [--train-size N] [--noise X] [--max-steps N]
+                           [--init-from ck.ckpt] [--config c.json]
+                           [--backend native|xla] [--distill (xla)]
   eval                     --checkpoint runs/x/final.ckpt [--test-size N]
-                                                               [needs --features xla]
+                           [--backend native|xla]
   sweep                    --config sweep.json (array of configs)
-                                                               [needs --features xla]
+                           [--backend native|xla] [--workers N]
   repro <target>           table1|table2|table3|table4|lr-ablation|
                            fig2|fig3|fig4|qerror|all   [--quick] [--workers N]
                                                                [needs --features xla]
@@ -49,7 +56,10 @@ COMMANDS
 COMMON FLAGS
   --artifacts DIR   (default: artifacts)   --out-dir DIR (default: runs)
   --quick           minutes-scale repro    --workers N   sweep parallelism
-";
+
+The xla train/eval/sweep backend and the repro harness drive the AOT
+artifacts and require building with `--features xla`; everything else runs
+natively.";
 
 fn main() {
     let argv: Vec<String> = std::env::args().skip(1).collect();
@@ -115,7 +125,6 @@ fn info(args: &Args) -> Result<()> {
     Ok(())
 }
 
-#[cfg(feature = "xla")]
 fn cfg_from_args(args: &Args) -> Result<lsqnet::config::ExperimentConfig> {
     use lsqnet::config::ExperimentConfig;
     let mut cfg = if let Some(path) = args.opt_str("config") {
@@ -134,6 +143,12 @@ fn cfg_from_args(args: &Args) -> Result<lsqnet::config::ExperimentConfig> {
     }
     if let Some(g) = args.opt_str("gscale") {
         cfg.gscale = g;
+    }
+    if let Some(b) = args.opt_str("backend") {
+        cfg.backend = b;
+    }
+    if args.has("noise") {
+        cfg.data.noise = args.f64("noise", cfg.data.noise as f64) as f32;
     }
     if args.has("epochs") {
         cfg.train.epochs = args.usize("epochs", cfg.train.epochs);
@@ -180,19 +195,79 @@ fn cfg_from_args(args: &Args) -> Result<lsqnet::config::ExperimentConfig> {
 #[cfg(not(feature = "xla"))]
 fn needs_xla(cmd: &str) -> Result<()> {
     bail!(
-        "`lsqnet {cmd}` drives the AOT XLA artifacts; rebuild with \
-         `cargo build --release --features xla` (see README.md feature matrix)"
+        "`lsqnet {cmd}` with the xla backend drives the AOT artifacts; rebuild with \
+         `cargo build --release --features xla` or use `--backend native` \
+         (see README.md feature matrix)"
     )
 }
 
-#[cfg(feature = "xla")]
 fn train(args: &Args) -> Result<()> {
+    let cfg = cfg_from_args(args)?;
+    match cfg.backend.as_str() {
+        "native" => train_native(cfg),
+        _ => train_xla(args, cfg),
+    }
+}
+
+/// Synthesize a fixture family for `cfg`'s (model, bits) when its
+/// artifacts dir lacks one, reusing the existing manifest's geometry if
+/// there is one — the zero-artifacts path shared by the native `train`
+/// and `sweep` commands.
+fn ensure_native_family(cfg: &lsqnet::config::ExperimentConfig) -> Result<()> {
+    use lsqnet::runtime::native::fixture::{ensure_family, FixtureSpec};
+    let dir = PathBuf::from(&cfg.artifacts_dir);
+    let spec = match Manifest::load(&dir) {
+        Ok(m) => FixtureSpec {
+            image: m.image,
+            channels: m.channels,
+            num_classes: cfg.data.classes,
+            batch: m.batch,
+            ..FixtureSpec::default()
+        },
+        Err(_) => {
+            println!(
+                "no manifest in {} — writing a synthetic fixture family",
+                dir.display()
+            );
+            FixtureSpec { num_classes: cfg.data.classes, ..FixtureSpec::default() }
+        }
+    };
+    ensure_family(&dir, &cfg.model, cfg.bits, spec)?;
+    Ok(())
+}
+
+/// Native training: no XLA, no Python. When the artifacts dir has no
+/// manifest (or lacks the requested family), a synthetic fixture family is
+/// synthesized in place, so `cargo run -- train` works from a clean clone.
+fn train_native(cfg: lsqnet::config::ExperimentConfig) -> Result<()> {
+    use lsqnet::train::NativeTrainer;
+    ensure_native_family(&cfg)?;
+    println!(
+        "training {} (family {}, method {}, gscale {}, backend native)",
+        cfg.name,
+        cfg.family(),
+        cfg.method,
+        cfg.gscale
+    );
+    let mut tr = NativeTrainer::new(cfg)?;
+    let rep = tr.fit()?;
+    println!(
+        "done: top1 {:.2}%  top5 {:.2}%  wall {:.1}s  -> {}",
+        rep.final_top1,
+        rep.final_top5,
+        rep.history.wall_seconds,
+        rep.checkpoint.display()
+    );
+    Ok(())
+}
+
+#[cfg(feature = "xla")]
+fn train_xla(_args: &Args, cfg: lsqnet::config::ExperimentConfig) -> Result<()> {
     use lsqnet::runtime::Engine;
     use lsqnet::train::Trainer;
-    let cfg = cfg_from_args(args)?;
     let engine = Engine::new(Path::new(&cfg.artifacts_dir))?;
     println!(
-        "training {} (family {}, method {}, gscale {})",
+        "training {} (family {}, method {}, gscale {}, backend xla)",
         cfg.name,
         cfg.family(),
         cfg.method,
@@ -212,17 +287,49 @@ fn train(args: &Args) -> Result<()> {
 }
 
 #[cfg(not(feature = "xla"))]
-fn train(_args: &Args) -> Result<()> {
+fn train_xla(_args: &Args, _cfg: lsqnet::config::ExperimentConfig) -> Result<()> {
     needs_xla("train")
 }
 
-#[cfg(feature = "xla")]
 fn eval(args: &Args) -> Result<()> {
+    let backend = args.str("backend", "native");
+    let ckpt_path = args.opt_str("checkpoint").context("--checkpoint required")?;
+    match backend.as_str() {
+        "native" => {
+            use lsqnet::train::NativeTrainer;
+            let manifest = Manifest::load(&artifacts_dir(args))?;
+            let ck = Checkpoint::load(Path::new(&ckpt_path))?;
+            let family = ck
+                .meta_str("family")
+                .context("checkpoint missing family meta")?
+                .to_string();
+            let fam = manifest.family(&family)?;
+            let mut cfg = lsqnet::config::ExperimentConfig::default();
+            cfg.model = fam.model.clone();
+            cfg.bits = fam.qbits;
+            // Labels must stay inside the family's logit range.
+            cfg.data.classes = fam.num_classes;
+            cfg.init_from = ckpt_path.clone();
+            cfg.artifacts_dir = args.str("artifacts", "artifacts");
+            if args.has("test-size") {
+                cfg.data.test_size = args.usize("test-size", cfg.data.test_size);
+            }
+            let mut tr = NativeTrainer::new(cfg)?;
+            let (loss, t1, t5) = tr.evaluate()?;
+            println!("{family}: loss {loss:.4}  top1 {t1:.2}%  top5 {t5:.2}%");
+            Ok(())
+        }
+        "xla" => eval_xla(args, &ckpt_path),
+        other => bail!("unknown eval backend {other:?} (native|xla)"),
+    }
+}
+
+#[cfg(feature = "xla")]
+fn eval_xla(args: &Args, ckpt_path: &str) -> Result<()> {
     use lsqnet::runtime::Engine;
     use lsqnet::train::Trainer;
-    let ckpt_path = args.opt_str("checkpoint").context("--checkpoint required")?;
     let engine = Engine::new(&artifacts_dir(args))?;
-    let ck = Checkpoint::load(Path::new(&ckpt_path))?;
+    let ck = Checkpoint::load(Path::new(ckpt_path))?;
     let family = ck
         .meta_str("family")
         .context("checkpoint missing family meta")?
@@ -231,7 +338,8 @@ fn eval(args: &Args) -> Result<()> {
     let mut cfg = lsqnet::config::ExperimentConfig::default();
     cfg.model = fam.model.clone();
     cfg.bits = fam.qbits;
-    cfg.init_from = ckpt_path.clone();
+    cfg.backend = "xla".to_string();
+    cfg.init_from = ckpt_path.to_string();
     cfg.artifacts_dir = args.str("artifacts", "artifacts");
     if args.has("test-size") {
         cfg.data.test_size = args.usize("test-size", cfg.data.test_size);
@@ -243,13 +351,12 @@ fn eval(args: &Args) -> Result<()> {
 }
 
 #[cfg(not(feature = "xla"))]
-fn eval(_args: &Args) -> Result<()> {
+fn eval_xla(_args: &Args, _ckpt: &str) -> Result<()> {
     needs_xla("eval")
 }
 
-#[cfg(feature = "xla")]
 fn sweep(args: &Args) -> Result<()> {
-    use lsqnet::coordinator::{run_sweep, Job};
+    use lsqnet::coordinator::{Job, SweepReport};
     use lsqnet::util::json::Json;
     let path = args
         .opt_str("config")
@@ -257,22 +364,78 @@ fn sweep(args: &Args) -> Result<()> {
     let text = std::fs::read_to_string(&path)?;
     let j = Json::parse(&text).map_err(|e| anyhow::anyhow!("{path}: {e}"))?;
     let arr = j.as_arr().context("sweep config must be a JSON array")?;
-    let mut jobs = Vec::new();
-    for item in arr {
-        let cfg = lsqnet::config::ExperimentConfig::from_json(item)?;
-        jobs.push(Job::new(cfg));
+    // Each config picks its own train backend; --backend overrides all,
+    // and --artifacts overrides every job's artifacts_dir (matching the
+    // xla engine, which always opens the flag directory).
+    let mut native_jobs: Vec<(usize, Job)> = Vec::new();
+    let mut xla_jobs: Vec<(usize, Job)> = Vec::new();
+    for (i, item) in arr.iter().enumerate() {
+        let mut cfg = lsqnet::config::ExperimentConfig::from_json(item)?;
+        if let Some(b) = args.opt_str("backend") {
+            cfg.backend = b;
+            cfg.validate()?;
+        }
+        if args.has("artifacts") {
+            cfg.artifacts_dir = args.str("artifacts", &cfg.artifacts_dir);
+        }
+        match cfg.backend.as_str() {
+            "xla" => xla_jobs.push((i, Job::new(cfg))),
+            _ => native_jobs.push((i, Job::new(cfg))),
+        }
     }
     let workers = args.usize("workers", 2);
-    let report = run_sweep(&artifacts_dir(args), jobs, workers)?;
+    // Run each backend's partition, then restore submission order. A
+    // failing partition must not discard the other's finished results:
+    // the (possibly partial) report is saved before the error propagates.
+    let mut indexed: Vec<(usize, lsqnet::coordinator::JobResult)> = Vec::new();
+    let mut first_err: Option<anyhow::Error> = None;
+    if !native_jobs.is_empty() {
+        // Same zero-artifacts affordance as `train`: synthesize missing
+        // fixture families before the workers start.
+        for (_, job) in &native_jobs {
+            ensure_native_family(&job.cfg)?;
+        }
+        let (idxs, jobs): (Vec<usize>, Vec<Job>) = native_jobs.into_iter().unzip();
+        match lsqnet::coordinator::run_sweep_native(jobs, workers) {
+            Ok(rep) => indexed.extend(idxs.into_iter().zip(rep.results)),
+            Err(e) => first_err = Some(e),
+        }
+    }
+    if first_err.is_none() && !xla_jobs.is_empty() {
+        let (idxs, jobs): (Vec<usize>, Vec<Job>) = xla_jobs.into_iter().unzip();
+        match sweep_xla(args, jobs, workers) {
+            Ok(rep) => indexed.extend(idxs.into_iter().zip(rep.results)),
+            Err(e) => first_err = Some(e),
+        }
+    }
+    indexed.sort_by_key(|(i, _)| *i);
+    let report = SweepReport { results: indexed.into_iter().map(|(_, r)| r).collect() };
     let out = Path::new(&args.str("out-dir", "runs")).join("sweep_report.json");
     report.save(&out)?;
     println!("report -> {}", out.display());
-    Ok(())
+    match first_err {
+        Some(e) => Err(e),
+        None => Ok(()),
+    }
+}
+
+#[cfg(feature = "xla")]
+fn sweep_xla(
+    args: &Args,
+    jobs: Vec<lsqnet::coordinator::Job>,
+    workers: usize,
+) -> Result<lsqnet::coordinator::SweepReport> {
+    lsqnet::coordinator::run_sweep(&artifacts_dir(args), jobs, workers)
 }
 
 #[cfg(not(feature = "xla"))]
-fn sweep(_args: &Args) -> Result<()> {
-    needs_xla("sweep")
+fn sweep_xla(
+    _args: &Args,
+    _jobs: Vec<lsqnet::coordinator::Job>,
+    _workers: usize,
+) -> Result<lsqnet::coordinator::SweepReport> {
+    needs_xla("sweep")?;
+    unreachable!()
 }
 
 #[cfg(feature = "xla")]
@@ -318,7 +481,7 @@ fn serve(args: &Args) -> Result<()> {
     std::thread::scope(|s| {
         let mut handles = Vec::new();
         for t in 0..4usize {
-            let client = server.client.clone();
+            let client = server.client();
             let spec = &spec;
             handles.push(s.spawn(move || {
                 let mut l = Vec::new();

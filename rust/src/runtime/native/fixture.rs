@@ -128,6 +128,12 @@ impl Default for FixtureSpec {
 /// Write `manifest.json` + `params_{family}.bin` for `model` at `qbits`
 /// into `dir` (created if needed). Returns the family name
 /// (`"{model}_q{qbits}"`).
+///
+/// When `dir` already holds a manifest with the same geometry, the new
+/// family is **merged** into it (existing families and artifacts are
+/// preserved) — this is what lets one fixture directory serve the paper's
+/// fp32-pretrain → per-precision fine-tune protocol and multi-family
+/// native sweeps. A geometry mismatch is an error, not a silent overwrite.
 pub fn write_synthetic_family(
     dir: &Path,
     model: &str,
@@ -174,25 +180,101 @@ pub fn write_synthetic_family(
         ("shapes", Json::Obj(pw.shapes.clone())),
         ("layer_meta", Json::Arr(pw.layer_meta.clone())),
     ]);
-    let mut families = BTreeMap::new();
-    families.insert(family.clone(), fam_json);
-    let manifest = Json::obj(vec![
-        ("batch", Json::num(spec.batch as f64)),
-        ("image", Json::num(spec.image as f64)),
-        ("channels", Json::num(spec.channels as f64)),
-        ("num_classes", Json::num(spec.num_classes as f64)),
-        ("families", Json::Obj(families)),
-        ("artifacts", Json::Arr(Vec::new())),
-    ]);
-    std::fs::write(dir.join("manifest.json"), manifest.to_string_pretty())
+    let manifest_path = dir.join("manifest.json");
+    let manifest = if manifest_path.exists() {
+        // Merge into the existing manifest (see doc comment above).
+        let text = std::fs::read_to_string(&manifest_path)
+            .with_context(|| format!("read {manifest_path:?}"))?;
+        let parsed = Json::parse(&text)
+            .map_err(|e| anyhow::anyhow!("{manifest_path:?}: {e}"))?;
+        for (key, want) in [
+            ("batch", spec.batch),
+            ("image", spec.image),
+            ("channels", spec.channels),
+        ] {
+            let have = parsed.usize_at(key)?;
+            anyhow::ensure!(
+                have == want,
+                "fixture geometry mismatch in {manifest_path:?}: {key} is {have}, \
+                 new family wants {want}"
+            );
+        }
+        match parsed {
+            Json::Obj(mut top) => {
+                match top.get_mut("families") {
+                    Some(Json::Obj(fams)) => {
+                        fams.insert(family.clone(), fam_json);
+                    }
+                    _ => anyhow::bail!("{manifest_path:?}: missing families object"),
+                }
+                Json::Obj(top)
+            }
+            _ => anyhow::bail!("{manifest_path:?}: manifest is not an object"),
+        }
+    } else {
+        let mut families = BTreeMap::new();
+        families.insert(family.clone(), fam_json);
+        Json::obj(vec![
+            ("batch", Json::num(spec.batch as f64)),
+            ("image", Json::num(spec.image as f64)),
+            ("channels", Json::num(spec.channels as f64)),
+            ("num_classes", Json::num(spec.num_classes as f64)),
+            ("families", Json::Obj(families)),
+            ("artifacts", Json::Arr(Vec::new())),
+        ])
+    };
+    std::fs::write(&manifest_path, manifest.to_string_pretty())
         .with_context(|| "write manifest.json")?;
     Ok(family)
+}
+
+/// Ensure `dir` holds a loadable family `{model}_q{qbits}`, writing a
+/// synthetic one (merged into any existing manifest) when absent. Returns
+/// the family name. This is the zero-artifacts entry point the native
+/// `train`/`sweep` CLI paths use.
+pub fn ensure_family(dir: &Path, model: &str, qbits: u32, spec: FixtureSpec) -> Result<String> {
+    let family = format!("{model}_q{qbits}");
+    if dir.join("manifest.json").exists() {
+        if let Ok(m) = crate::runtime::Manifest::load(dir) {
+            if let Some(fam) = m.families.get(&family) {
+                // Reusing a family with a different logit count would
+                // panic later on out-of-range labels — fail cleanly here.
+                anyhow::ensure!(
+                    fam.num_classes == spec.num_classes,
+                    "family {family} in {dir:?} has {} classes, requested {} — \
+                     use a fresh artifacts dir or matching --config classes",
+                    fam.num_classes,
+                    spec.num_classes
+                );
+                return Ok(family);
+            }
+        }
+    }
+    write_synthetic_family(dir, model, qbits, spec)
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::runtime::Manifest;
+
+    #[test]
+    fn families_merge_into_one_manifest() {
+        let dir = std::env::temp_dir().join(format!("lsq_fixmerge_{}", std::process::id()));
+        std::fs::remove_dir_all(&dir).ok();
+        let spec = FixtureSpec { image: 8, channels: 3, num_classes: 4, batch: 2, seed: 7 };
+        let fam32 = write_synthetic_family(&dir, "mlp", 32, spec).unwrap();
+        let fam3 = write_synthetic_family(&dir, "mlp", 3, spec).unwrap();
+        let m = Manifest::load(&dir).unwrap();
+        assert!(m.families.contains_key(&fam32) && m.families.contains_key(&fam3));
+        assert!(m.load_initial_params(&fam32).is_ok());
+        assert!(m.load_initial_params(&fam3).is_ok());
+        // ensure_family is idempotent and geometry mismatches are rejected
+        assert_eq!(ensure_family(&dir, "mlp", 3, spec).unwrap(), fam3);
+        let bad = FixtureSpec { image: 16, ..spec };
+        assert!(write_synthetic_family(&dir, "mlp", 2, bad).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
 
     #[test]
     fn fixture_manifest_loads_and_params_bind() {

@@ -146,6 +146,105 @@ pub fn sgemm(
     }
 }
 
+/// Transposed-B fp32 GEMM: `out[m×k] = a[m×n] · w[k×n]ᵀ`.
+///
+/// This is the data-gradient path of the native backward pass
+/// (`dX̂ = dY · Ŵᵀ`, see `crate::train::native::backward`): both `a` rows
+/// and `w` rows are contiguous, so the inner dot runs stride-1 on both
+/// operands with no transpose materialized.
+pub fn sgemm_nt(m: usize, k: usize, n: usize, a: &[f32], w: &[f32], out: &mut [f32]) {
+    assert_eq!(a.len(), m * n, "a shape");
+    assert_eq!(w.len(), k * n, "w shape");
+    assert_eq!(out.len(), m * k, "output shape");
+    for i in 0..m {
+        let arow = &a[i * n..(i + 1) * n];
+        let orow = &mut out[i * k..(i + 1) * k];
+        for (kk, o) in orow.iter_mut().enumerate() {
+            let wrow = &w[kk * n..(kk + 1) * n];
+            let mut acc = 0.0f32;
+            for (&av, &wv) in arow.iter().zip(wrow) {
+                acc += av * wv;
+            }
+            *o = acc;
+        }
+    }
+}
+
+/// Transposed-A fp32 GEMM: `out[k×n] = x[m×k]ᵀ · dy[m×n]`.
+///
+/// The weight-gradient path of the native backward pass
+/// (`dŴ = X̂ᵀ · dY`). Layout mirrors [`sgemm`]: the inner loop streams a
+/// `dy` row into an `out` row, skipping zero activations (common after
+/// ReLU + unsigned quantization).
+pub fn sgemm_tn(m: usize, k: usize, n: usize, x: &[f32], dy: &[f32], out: &mut [f32]) {
+    assert_eq!(x.len(), m * k, "x shape");
+    assert_eq!(dy.len(), m * n, "dy shape");
+    assert_eq!(out.len(), k * n, "output shape");
+    out.fill(0.0);
+    for i in 0..m {
+        let dyrow = &dy[i * n..(i + 1) * n];
+        for kk in 0..k {
+            let xv = x[i * k + kk];
+            if xv == 0.0 {
+                continue;
+            }
+            let orow = &mut out[kk * n..(kk + 1) * n];
+            for (o, &dv) in orow.iter_mut().zip(dyrow) {
+                *o += xv * dv;
+            }
+        }
+    }
+}
+
+/// Adjoint of [`im2col`]: scatter-accumulate patch-space gradients
+/// `dcols[b*oh*ow × kh*kw*c]` back onto the input image grid
+/// `dx[b×h×w×c]` (which must be pre-zeroed). Taps that fell in the SAME
+/// zero padding are dropped, exactly mirroring the forward gather.
+#[allow(clippy::too_many_arguments)]
+pub fn col2im(
+    dcols: &[f32],
+    b: usize,
+    h: usize,
+    w: usize,
+    c: usize,
+    kh: usize,
+    kw: usize,
+    stride: usize,
+    dx: &mut [f32],
+) {
+    assert_eq!(dx.len(), b * h * w * c, "dx shape");
+    let (oh, pad_t) = same_padding(h, kh, stride);
+    let (ow, pad_l) = same_padding(w, kw, stride);
+    let patch = kh * kw * c;
+    assert_eq!(dcols.len(), b * oh * ow * patch, "dcols shape");
+    for bi in 0..b {
+        for oy in 0..oh {
+            let iy0 = (oy * stride) as isize - pad_t as isize;
+            for ox in 0..ow {
+                let ix0 = (ox * stride) as isize - pad_l as isize;
+                let row = ((bi * oh + oy) * ow + ox) * patch;
+                for dh in 0..kh {
+                    let iy = iy0 + dh as isize;
+                    if iy < 0 || iy >= h as isize {
+                        continue;
+                    }
+                    for dw in 0..kw {
+                        let ix = ix0 + dw as isize;
+                        if ix < 0 || ix >= w as isize {
+                            continue;
+                        }
+                        let dst = ((bi * h + iy as usize) * w + ix as usize) * c;
+                        let src = row + (dh * kw + dw) * c;
+                        for ch in 0..c {
+                            dx[dst + ch] += dcols[src + ch];
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
 /// SAME-padding geometry for one spatial dim: returns `(out_size,
 /// pad_before)`, matching XLA's `padding="SAME"` (pad_before = total/2,
 /// rounded down).
@@ -281,6 +380,57 @@ mod tests {
         // Row for output (0,0): taps at (dy-1, dx-1) relative offsets.
         let r0 = &out[0..9];
         assert_eq!(r0, &[0.0, 0.0, 0.0, 0.0, 1.0, 2.0, 0.0, 3.0, 4.0]);
+    }
+
+    #[test]
+    fn sgemm_nt_matches_naive_transpose() {
+        let (m, k, n) = (3usize, 5usize, 7usize);
+        let mut rng = crate::util::rng::Pcg32::seeded(21);
+        let a: Vec<f32> = (0..m * n).map(|_| rng.normal()).collect();
+        let w: Vec<f32> = (0..k * n).map(|_| rng.normal()).collect();
+        let mut out = vec![0.0f32; m * k];
+        sgemm_nt(m, k, n, &a, &w, &mut out);
+        for i in 0..m {
+            for kk in 0..k {
+                let want: f32 = (0..n).map(|j| a[i * n + j] * w[kk * n + j]).sum();
+                assert!((out[i * k + kk] - want).abs() < 1e-5);
+            }
+        }
+    }
+
+    #[test]
+    fn sgemm_tn_matches_naive_transpose() {
+        let (m, k, n) = (4usize, 6usize, 3usize);
+        let mut rng = crate::util::rng::Pcg32::seeded(22);
+        let x: Vec<f32> = (0..m * k).map(|_| rng.normal()).collect();
+        let dy: Vec<f32> = (0..m * n).map(|_| rng.normal()).collect();
+        let mut out = vec![0.0f32; k * n];
+        sgemm_tn(m, k, n, &x, &dy, &mut out);
+        for kk in 0..k {
+            for j in 0..n {
+                let want: f32 = (0..m).map(|i| x[i * k + kk] * dy[i * n + j]).sum();
+                assert!((out[kk * n + j] - want).abs() < 1e-5);
+            }
+        }
+    }
+
+    #[test]
+    fn col2im_is_adjoint_of_im2col() {
+        // <im2col(x), y> == <x, col2im(y)> for random x, y — the defining
+        // property of the transposed scatter, covering padding and stride.
+        let (b, h, w, c, kh, kw) = (2usize, 5usize, 4usize, 3usize, 3usize, 3usize);
+        for stride in [1usize, 2] {
+            let mut rng = crate::util::rng::Pcg32::seeded(23 + stride as u64);
+            let x: Vec<f32> = (0..b * h * w * c).map(|_| rng.normal()).collect();
+            let mut cols = Vec::new();
+            let (oh, ow) = im2col(&x, 0.0f32, b, h, w, c, kh, kw, stride, &mut cols);
+            let y: Vec<f32> = (0..b * oh * ow * kh * kw * c).map(|_| rng.normal()).collect();
+            let fwd: f64 = cols.iter().zip(&y).map(|(a, b)| (a * b) as f64).sum();
+            let mut dx = vec![0.0f32; b * h * w * c];
+            col2im(&y, b, h, w, c, kh, kw, stride, &mut dx);
+            let adj: f64 = x.iter().zip(&dx).map(|(a, b)| (a * b) as f64).sum();
+            assert!((fwd - adj).abs() < 1e-3 * fwd.abs().max(1.0), "stride={stride}");
+        }
     }
 
     #[test]

@@ -117,8 +117,8 @@ impl ServeClient {
 
 /// A running inference server: client handle, shared stats, worker handles.
 pub struct Server {
-    /// Submit handle (cloneable).
-    pub client: ServeClient,
+    /// The server-held submit handle; `None` after [`Server::close_intake`].
+    client: Option<ServeClient>,
     /// Shared metrics, updated by every replica.
     pub stats: Arc<Mutex<ServeStats>>,
     /// Number of engine replicas actually started.
@@ -209,7 +209,7 @@ impl Server {
         }
 
         Ok(Server {
-            client: ServeClient { tx, image_len },
+            client: Some(ServeClient { tx, image_len }),
             stats,
             replicas,
             stop,
@@ -217,14 +217,39 @@ impl Server {
         })
     }
 
+    /// A submit handle (cloneable, usable from any thread).
+    ///
+    /// # Panics
+    /// After [`Server::close_intake`] — a closed server accepts no new
+    /// requests.
+    pub fn client(&self) -> ServeClient {
+        self.client.as_ref().expect("server intake already closed").clone()
+    }
+
+    /// Stop accepting new requests by dropping the server-held sender.
+    /// Once every caller-held [`ServeClient`] clone is dropped too, the
+    /// queue disconnects: replicas dispatch whatever is pending
+    /// immediately (no `max_wait` stragglers wait) and exit — every
+    /// already-submitted request still receives exactly one reply.
+    pub fn close_intake(&mut self) {
+        self.client = None;
+    }
+
     /// Snapshot of the aggregate metrics.
     pub fn stats(&self) -> ServeStats {
         self.stats.lock().unwrap().clone()
     }
 
-    /// Stop all replicas and join them. Queued-but-undispatched requests
-    /// receive a disconnect on their reply channels.
+    /// Stop all replicas and join them: close the intake, flag shutdown,
+    /// join. Requests a replica already collected into its current batch
+    /// are dispatched and answered; requests still sitting in the queue
+    /// receive a disconnect on their reply channels (for a drain-then-stop
+    /// shutdown, call [`Server::close_intake`], drop caller clients, and
+    /// collect replies first). The stop flag bounds the batching wait, so
+    /// joining never hangs on a long `max_wait` even while caller clients
+    /// stay alive.
     pub fn stop(mut self) {
+        self.close_intake();
         self.stop.store(true, Ordering::Relaxed);
         for h in self.handles.drain(..) {
             let _ = h.join();
@@ -270,12 +295,18 @@ fn replica_loop(
             let deadline = Instant::now() + max_wait;
             while pending.len() < batch {
                 let left = deadline.saturating_duration_since(Instant::now());
-                if left.is_zero() {
+                if left.is_zero() || stop.load(Ordering::Relaxed) {
+                    // Shutdown mid-collection: dispatch what we have so
+                    // every collected request still gets its reply, even
+                    // when max_wait is long.
                     break;
                 }
-                match rx.recv_timeout(left) {
+                // Wait in short slices so the stop flag bounds the
+                // batching window instead of max_wait.
+                match rx.recv_timeout(left.min(Duration::from_millis(20))) {
                     Ok(r) => pending.push(r),
-                    Err(_) => break,
+                    Err(RecvTimeoutError::Timeout) => continue,
+                    Err(RecvTimeoutError::Disconnected) => break,
                 }
             }
         }

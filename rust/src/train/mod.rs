@@ -1,14 +1,172 @@
 //! Training layer: LR schedules, metric history, named train state with
-//! checkpointing, and (with `--features xla`) the `Trainer` loop driving
-//! the AOT artifacts.
+//! checkpointing, the pure-Rust native trainer (always available), and —
+//! with `--features xla` — the `Trainer` loop driving the AOT artifacts.
+//!
+//! Both trainers implement [`TrainBackend`] and share one epoch loop
+//! ([`fit_backend`]), so the native and XLA paths emit identical
+//! [`History`] records, save the same checkpoint/config/history layout
+//! under `out_dir/name/`, and are interchangeable to the coordinator.
 
 pub mod lr;
 pub mod metrics;
+pub mod native;
 pub mod state;
 #[cfg(feature = "xla")]
 pub mod trainer;
 
 pub use metrics::{EvalRecord, History, StepRecord};
+pub use native::NativeTrainer;
 pub use state::TrainState;
 #[cfg(feature = "xla")]
-pub use trainer::{FitReport, Trainer};
+pub use trainer::Trainer;
+
+use std::path::{Path, PathBuf};
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::config::ExperimentConfig;
+use crate::data::Loader;
+use crate::tensor::Tensor;
+
+/// Outcome of one full training run ([`fit_backend`]).
+pub struct FitReport {
+    /// Per-step and per-eval records of the run.
+    pub history: History,
+    /// Final test top-1 accuracy (%).
+    pub final_top1: f64,
+    /// Final test top-5 accuracy (%).
+    pub final_top5: f64,
+    /// Path of the saved final checkpoint.
+    pub checkpoint: PathBuf,
+}
+
+/// The execution-backend contract of the training loop — the train-side
+/// sibling of [`crate::runtime::Backend`]. Implemented by the XLA
+/// `Trainer` (AOT artifacts) and [`NativeTrainer`] (pure-Rust backward);
+/// [`fit_backend`] drives either through the paper's protocol.
+pub trait TrainBackend {
+    /// The experiment being run.
+    fn cfg(&self) -> &ExperimentConfig;
+    /// Rows per optimizer step.
+    fn train_batch(&self) -> usize;
+    /// Whether the loop prints per-epoch progress.
+    fn verbose(&self) -> bool;
+    /// Current parameter/momentum state.
+    fn state(&self) -> &TrainState;
+    /// Metric records accumulated so far.
+    fn history(&self) -> &History;
+    /// Mutable metric records (the loop appends step/eval rows).
+    fn history_mut(&mut self) -> &mut History;
+    /// One optimizer step on a prepared batch; returns `(loss, acc)`.
+    fn step(&mut self, x: Tensor, y: Tensor, lr: f64, wd: f64) -> Result<(f64, f64)>;
+    /// Full pass over the test split; returns `(loss, top1%, top5%)`.
+    fn evaluate(&mut self) -> Result<(f64, f64, f64)>;
+    /// Persist the current state as a checkpoint at `path`.
+    fn save_checkpoint(&self, path: &Path) -> Result<()>;
+}
+
+/// The full training run per the backend's config: prefetched shuffled
+/// batches, coordinator-owned LR schedule, periodic eval, then final eval +
+/// checkpoint/history/config persisted under `out_dir/name/`.
+pub fn fit_backend<B: TrainBackend + ?Sized>(t: &mut B) -> Result<FitReport> {
+    let t0 = Instant::now();
+    let cfg = t.cfg().clone();
+    let batch = t.train_batch();
+    let verbose = t.verbose();
+    let wd = cfg.train.weight_decay;
+    let max_steps = cfg.train.max_steps;
+    // epochs = 0 with max_steps > 0 is valid config (step-bounded run):
+    // derive just enough epochs to cover the step budget.
+    let epochs = if cfg.train.epochs == 0 {
+        let spe_est = (cfg.data.train_size / batch).max(1);
+        ((max_steps + spe_est - 1) / spe_est).max(1)
+    } else {
+        cfg.train.epochs
+    };
+    let loader = Loader::spawn(&cfg.data, batch, epochs, cfg.train.seed, 4);
+    let spe = loader.batches_per_epoch.max(1);
+
+    let mut step_in_run = 0usize;
+    let mut last_eval_epoch = usize::MAX;
+    'outer: for epoch in 0..epochs {
+        let mut ep_loss = 0.0;
+        let mut ep_acc = 0.0;
+        let mut ep_n = 0usize;
+        for _ in 0..spe {
+            let b = match loader.next() {
+                Some(b) => b,
+                None => break 'outer,
+            };
+            let lr = lr::lr_at(&cfg.train, spe, step_in_run);
+            let (loss, acc) = t.step(b.x, b.y, lr, wd)?;
+            let step = t.state().step;
+            t.history_mut().steps.push(StepRecord { step, epoch, lr, loss, acc });
+            ep_loss += loss;
+            ep_acc += acc;
+            ep_n += 1;
+            step_in_run += 1;
+            if max_steps > 0 && step_in_run >= max_steps {
+                break 'outer;
+            }
+        }
+        if cfg.train.eval_every > 0 && (epoch + 1) % cfg.train.eval_every == 0 {
+            let (el, t1, t5) = t.evaluate()?;
+            last_eval_epoch = epoch;
+            let step = t.state().step;
+            t.history_mut().evals.push(EvalRecord { step, epoch, loss: el, top1: t1, top5: t5 });
+            if verbose {
+                println!(
+                    "[{}] epoch {:>3}  train loss {:.4} acc {:.3}  |  test loss {:.4} top1 {:.2}% top5 {:.2}%",
+                    cfg.name,
+                    epoch,
+                    ep_loss / ep_n.max(1) as f64,
+                    ep_acc / ep_n.max(1) as f64,
+                    el,
+                    t1,
+                    t5
+                );
+            }
+        } else if verbose {
+            println!(
+                "[{}] epoch {:>3}  train loss {:.4} acc {:.3}",
+                cfg.name,
+                epoch,
+                ep_loss / ep_n.max(1) as f64,
+                ep_acc / ep_n.max(1) as f64
+            );
+        }
+    }
+
+    // Final eval (unless the last epoch was just evaluated).
+    let cur_step = t.state().step;
+    if last_eval_epoch == usize::MAX
+        || t.history().evals.last().map(|e| e.step) != Some(cur_step)
+    {
+        let (el, t1, t5) = t.evaluate()?;
+        let step = t.state().step;
+        t.history_mut().evals.push(EvalRecord {
+            step,
+            epoch: epochs.saturating_sub(1),
+            loss: el,
+            top1: t1,
+            top5: t5,
+        });
+    }
+    t.history_mut().wall_seconds = t0.elapsed().as_secs_f64();
+
+    let out_dir = PathBuf::from(&cfg.out_dir).join(&cfg.name);
+    std::fs::create_dir_all(&out_dir)?;
+    let ckpt_path = out_dir.join("final.ckpt");
+    t.save_checkpoint(&ckpt_path)?;
+    t.history().save(&out_dir.join("history.json"))?;
+    cfg.save(&out_dir.join("config.json"))?;
+
+    let last = t.history().final_eval().cloned().unwrap();
+    Ok(FitReport {
+        history: t.history().clone(),
+        final_top1: last.top1,
+        final_top5: last.top5,
+        checkpoint: ckpt_path,
+    })
+}

@@ -1,0 +1,1021 @@
+//! Hand-written backward pass over the model-zoo architecture IR
+//! ([`crate::runtime::native::arch`]) — the training datapath that lets
+//! `cargo run -- train` reproduce the paper's central claim with no
+//! XLA/PJRT.
+//!
+//! Training runs *fake quantization* in f32, exactly like the Python train
+//! path (`python/compile/layers.py`): weights and input activations pass
+//! through Eq. 1-2 elementwise, the matmul itself is fp32
+//! ([`sgemm`]), and full-precision master weights receive the gradients
+//! (Courbariaux et al. 2015). The backward is a tape walk:
+//!
+//! * matmul layers: `dŴ = X̂ᵀ·dY` ([`sgemm_tn`]), `dX̂ = dY·Ŵᵀ`
+//!   ([`sgemm_nt`]), convolutions scatter `dX̂` back through the im2col
+//!   adjoint ([`col2im`]);
+//! * quantizers: the Eq. 5 STE mask gates `dX̂`/`dŴ` onto the raw inputs,
+//!   and the Eq. 3 term (or a method-ablation variant, [`Method`])
+//!   reduces to the step-size gradient, scaled by the Section-2.2
+//!   `g = 1/√(N·Qp)` ([`gradscale_value`]) — N is the weight count for
+//!   `sw` and the trailing feature count for `sa`, mirroring
+//!   `layers._quantize_pair`;
+//! * batch norm trains on batch statistics with the standard three-term
+//!   backward and emits functional running-stat updates
+//!   (momentum 0.9, eps 1e-5, as in `layers.batchnorm`).
+//!
+//! Every formula here is checked against central differences of the
+//! STE-consistent surrogate in `tests/grad_check.rs` (see
+//! [`super::grad::lsq_surrogate_f64`]).
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, bail, ensure, Result};
+
+use crate::quant::lsq::{self, grad_v_mask, qrange};
+use crate::runtime::native::arch::{self, Arch, ArchOp, BnSpec, ConvSpec, DenseSpec};
+use crate::runtime::native::gemm::{col2im, im2col, sgemm, sgemm_nt, sgemm_tn};
+use crate::runtime::{Family, Manifest};
+use crate::tensor::{numel, Tensor};
+
+use super::grad::{gradscale_value, softmax_xent, Method};
+
+/// BN hyper-parameters, shared with `python/compile/layers.py`.
+pub const BN_MOMENTUM: f32 = 0.9;
+/// BN variance epsilon (matches `layers.BN_EPS`).
+pub const BN_EPS: f32 = 1e-5;
+
+// ---------------------------------------------------------------------------
+// Activation buffer
+// ---------------------------------------------------------------------------
+
+struct Buf {
+    shape: Vec<usize>,
+    data: Vec<f32>,
+}
+
+impl Buf {
+    fn dims4(&self) -> Result<(usize, usize, usize, usize)> {
+        match self.shape[..] {
+            [b, h, w, c] => Ok((b, h, w, c)),
+            _ => bail!("expected a 4-d NHWC activation, got shape {:?}", self.shape),
+        }
+    }
+
+    fn dims2(&self) -> Result<(usize, usize)> {
+        match self.shape[..] {
+            [b, d] => Ok((b, d)),
+            _ => bail!("expected a 2-d activation, got shape {:?}", self.shape),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Tape
+// ---------------------------------------------------------------------------
+
+/// Saved context of one quantizer application (weights or activations).
+struct QuantSave {
+    /// Raw (pre-quantization) values, elementwise aligned with the
+    /// gradient flowing back through the quantizer.
+    raw: Vec<f32>,
+    s: f32,
+    qn: i64,
+    qp: i64,
+    gscale: f64,
+    /// Gradient-slot index of the step-size parameter.
+    g_idx: usize,
+}
+
+/// Conv-specific geometry needed by the im2col adjoint.
+struct ConvGeom {
+    b: usize,
+    h: usize,
+    w: usize,
+    c: usize,
+    kh: usize,
+    kw: usize,
+    stride: usize,
+}
+
+/// One quantized (or fp32) matmul layer: conv (via im2col) or dense.
+struct MatmulTape {
+    m: usize,
+    k: usize,
+    n: usize,
+    /// `X̂` in matmul layout (`m×k`): im2col output for conv, the
+    /// (quantized) input matrix for dense.
+    cols: Vec<f32>,
+    /// `Ŵ` (`k×n`) as used in the forward.
+    w_hat: Vec<f32>,
+    w_gidx: usize,
+    b_gidx: Option<usize>,
+    /// Activation quantizer context (`None` for fp32 layers).
+    aq: Option<QuantSave>,
+    /// Weight quantizer context (`None` for fp32 layers).
+    wq: Option<QuantSave>,
+    /// Present for convolutions; `None` means dense (no col2im).
+    conv: Option<ConvGeom>,
+}
+
+/// Batch-norm training context.
+struct BnTape {
+    ch: usize,
+    rows: usize,
+    /// Normalized activations `(x−μ)·inv`, pre-γβ.
+    xhat: Vec<f32>,
+    /// `1/√(var+eps)` per channel.
+    inv: Vec<f32>,
+    gamma: Vec<f32>,
+    gamma_gidx: usize,
+    beta_gidx: usize,
+}
+
+/// Pre-activation residual block: sub-tapes in forward order plus the
+/// branch structure the backward must rejoin.
+struct PreactTape {
+    bn1: BnTape,
+    relu1: Vec<bool>,
+    proj: Option<MatmulTape>,
+    conv1: MatmulTape,
+    bn2: BnTape,
+    relu2: Vec<bool>,
+    conv2: MatmulTape,
+}
+
+enum Tape {
+    Matmul(MatmulTape),
+    Bn(BnTape),
+    Relu(Vec<bool>),
+    MaxPool2 { argmax: Vec<usize>, in_shape: [usize; 4] },
+    Gap { in_shape: [usize; 4] },
+    Flatten { in_shape: [usize; 4] },
+    Preact(Box<PreactTape>),
+}
+
+/// One activation-quantizer statistic from a collect pass (Section 2.1):
+/// the data-driven activation step init is `2·mean_abs/√qp`.
+pub struct ActStat {
+    /// Parameter name of the activation step (`{layer}.sa`).
+    pub sa_name: String,
+    /// Mean `|x|` over the layer's full (unquantized) input batch.
+    pub mean_abs: f64,
+    /// `Q_P` of the activation quantizer.
+    pub qp: i64,
+}
+
+enum Pass<'a> {
+    /// Training forward: record a tape + functional BN state updates.
+    Train { tape: &'a mut Vec<Tape>, state_out: &'a mut Vec<(usize, Tensor)> },
+    /// Inference forward: eval-mode BN, quantizers active, no tape.
+    Eval,
+    /// Section-2.1 collect pass: full-precision forward (no quantizers),
+    /// batch-stat BN, record mean|x| at every activation quantizer.
+    Collect { stats: &'a mut Vec<ActStat> },
+}
+
+impl Pass<'_> {
+    fn is_train(&self) -> bool {
+        matches!(self, Pass::Train { .. })
+    }
+
+    fn is_collect(&self) -> bool {
+        matches!(self, Pass::Collect { .. })
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Model
+// ---------------------------------------------------------------------------
+
+/// Output of one native train step's loss/gradient computation.
+pub struct StepOutput {
+    /// Mean softmax cross-entropy over the batch.
+    pub loss: f64,
+    /// Rows whose argmax logit equals the label.
+    pub ncorrect: usize,
+    /// Raw logits (`rows × num_classes`).
+    pub logits: Vec<f32>,
+    /// One gradient tensor per `Family::grad_names`, in order.
+    pub grads: Vec<Tensor>,
+    /// Functional BN running-stat updates as `(param index, new value)`.
+    pub state_updates: Vec<(usize, Tensor)>,
+}
+
+/// A model family bound for *training*: the arch IR plus parameter/gradient
+/// index maps. Unlike [`crate::runtime::native::NativeModel`] (which packs
+/// weights once for serving), this holds no parameter state — every call
+/// takes the current `params` so the optimizer owns the master copies.
+pub struct NativeTrainModel {
+    arch: Arch,
+    family: String,
+    method: Method,
+    gscale_mode: String,
+    pidx: BTreeMap<String, usize>,
+    gidx: BTreeMap<String, usize>,
+    grad_shapes: Vec<Vec<usize>>,
+    image: usize,
+    channels: usize,
+    num_classes: usize,
+}
+
+impl NativeTrainModel {
+    /// Bind `family`'s architecture for training under quantizer `method`
+    /// and gradient-scale mode `gscale_mode` (both validated here).
+    pub fn build(
+        manifest: &Manifest,
+        family: &str,
+        method: &str,
+        gscale_mode: &str,
+    ) -> Result<NativeTrainModel> {
+        let fam: &Family = manifest.family(family)?;
+        let arch = arch::build(
+            &fam.model,
+            manifest.image,
+            manifest.channels,
+            fam.num_classes,
+            fam.qbits,
+        )?;
+        // Resolve the method once (hot loops dispatch on the enum) and
+        // fail fast on unknown gscale names.
+        let method = Method::parse(method)?;
+        gradscale_value(1, 1, gscale_mode)?;
+        let pidx: BTreeMap<String, usize> =
+            fam.param_names.iter().enumerate().map(|(i, n)| (n.clone(), i)).collect();
+        let gidx: BTreeMap<String, usize> =
+            fam.grad_names.iter().enumerate().map(|(i, n)| (n.clone(), i)).collect();
+        let grad_shapes = fam
+            .grad_names
+            .iter()
+            .map(|n| fam.shapes.get(n).cloned().unwrap_or_default())
+            .collect();
+        Ok(NativeTrainModel {
+            arch,
+            family: family.to_string(),
+            method,
+            gscale_mode: gscale_mode.to_string(),
+            pidx,
+            gidx,
+            grad_shapes,
+            image: manifest.image,
+            channels: manifest.channels,
+            num_classes: fam.num_classes,
+        })
+    }
+
+    /// Per-image input element count.
+    pub fn image_len(&self) -> usize {
+        self.image * self.image * self.channels
+    }
+
+    /// Logit count per row.
+    pub fn num_classes(&self) -> usize {
+        self.num_classes
+    }
+
+    /// The family this model was built for.
+    pub fn family(&self) -> &str {
+        &self.family
+    }
+
+    fn param<'a>(&self, params: &'a [Tensor], name: &str) -> Result<&'a Tensor> {
+        let i = *self
+            .pidx
+            .get(name)
+            .ok_or_else(|| anyhow!("family {} has no parameter {name:?}", self.family))?;
+        Ok(&params[i])
+    }
+
+    fn scalar(&self, params: &[Tensor], name: &str) -> Result<f32> {
+        self.param(params, name)?.item_f32()
+    }
+
+    fn grad_slot(&self, name: &str) -> Result<usize> {
+        self.gidx
+            .get(name)
+            .copied()
+            .ok_or_else(|| anyhow!("parameter {name:?} has no gradient slot"))
+    }
+
+    fn check_input(&self, x: &[f32], rows: usize) -> Result<()> {
+        ensure!(rows > 0, "empty batch");
+        ensure!(
+            x.len() == rows * self.image_len(),
+            "input has {} floats, expected {} ({} rows x {})",
+            x.len(),
+            rows * self.image_len(),
+            rows,
+            self.image_len()
+        );
+        Ok(())
+    }
+
+    // -- forward ------------------------------------------------------------
+
+    fn forward_pass(
+        &self,
+        params: &[Tensor],
+        x: &[f32],
+        rows: usize,
+        pass: &mut Pass,
+    ) -> Result<Buf> {
+        self.check_input(x, rows)?;
+        let mut act = Buf {
+            shape: vec![rows, self.image, self.image, self.channels],
+            data: x.to_vec(),
+        };
+        for op in &self.arch.ops {
+            act = self.apply_op(params, act, op, pass)?;
+        }
+        ensure!(
+            act.shape == [rows, self.num_classes],
+            "forward produced shape {:?}, expected [{rows}, {}]",
+            act.shape,
+            self.num_classes
+        );
+        Ok(act)
+    }
+
+    fn apply_op(&self, params: &[Tensor], act: Buf, op: &ArchOp, pass: &mut Pass) -> Result<Buf> {
+        Ok(match op {
+            ArchOp::Conv(c) => {
+                let (out, t) = self.fwd_conv(params, &act, c, pass)?;
+                if let (Pass::Train { tape, .. }, Some(t)) = (&mut *pass, t) {
+                    tape.push(Tape::Matmul(t));
+                }
+                out
+            }
+            ArchOp::Dense(d) => {
+                let (out, t) = self.fwd_dense(params, &act, d, pass)?;
+                if let (Pass::Train { tape, .. }, Some(t)) = (&mut *pass, t) {
+                    tape.push(Tape::Matmul(t));
+                }
+                out
+            }
+            ArchOp::BatchNorm(b) => {
+                let (out, t) = self.fwd_bn(params, act, b, pass)?;
+                if let (Pass::Train { tape, .. }, Some(t)) = (&mut *pass, t) {
+                    tape.push(Tape::Bn(t));
+                }
+                out
+            }
+            ArchOp::Relu => {
+                let (out, mask) = fwd_relu(act, pass.is_train());
+                if let (Pass::Train { tape, .. }, Some(m)) = (&mut *pass, mask) {
+                    tape.push(Tape::Relu(m));
+                }
+                out
+            }
+            ArchOp::MaxPool2 => {
+                let (b, h, w, c) = act.dims4()?;
+                let (out, argmax) = fwd_maxpool2(&act, pass.is_train())?;
+                if let (Pass::Train { tape, .. }, Some(a)) = (&mut *pass, argmax) {
+                    tape.push(Tape::MaxPool2 { argmax: a, in_shape: [b, h, w, c] });
+                }
+                out
+            }
+            ArchOp::GlobalAvgPool => {
+                let (b, h, w, c) = act.dims4()?;
+                let out = fwd_gap(&act)?;
+                if let Pass::Train { tape, .. } = pass {
+                    tape.push(Tape::Gap { in_shape: [b, h, w, c] });
+                }
+                out
+            }
+            ArchOp::Flatten => {
+                let (b, h, w, c) = act.dims4()?;
+                if let Pass::Train { tape, .. } = pass {
+                    tape.push(Tape::Flatten { in_shape: [b, h, w, c] });
+                }
+                Buf { shape: vec![b, h * w * c], data: act.data }
+            }
+            ArchOp::Preact(p) => {
+                let (out, t) = self.fwd_preact(params, act, p, pass)?;
+                if let (Pass::Train { tape, .. }, Some(t)) = (&mut *pass, t) {
+                    tape.push(Tape::Preact(Box::new(t)));
+                }
+                out
+            }
+        })
+    }
+
+    /// Quantize one matmul operand pair for training, recording the
+    /// quantizer contexts. Returns `(x_hat, w_hat, aq, wq)` — raw
+    /// passthrough (and a collect stat) when `pass` is `Collect` or the
+    /// layer is full precision.
+    #[allow(clippy::type_complexity, clippy::too_many_arguments)]
+    fn quantize_pair(
+        &self,
+        params: &[Tensor],
+        name: &str,
+        bits: u32,
+        signed_act: bool,
+        x: &[f32],
+        w: &[f32],
+        n_feat: usize,
+        pass: &mut Pass,
+    ) -> Result<(Vec<f32>, Vec<f32>, Option<QuantSave>, Option<QuantSave>)> {
+        if bits >= 32 {
+            return Ok((x.to_vec(), w.to_vec(), None, None));
+        }
+        let (aqn, aqp) = qrange(bits, signed_act);
+        if let Pass::Collect { stats } = pass {
+            let mean_abs = x.iter().map(|v| v.abs() as f64).sum::<f64>() / x.len().max(1) as f64;
+            stats.push(ActStat { sa_name: format!("{name}.sa"), mean_abs, qp: aqp });
+            return Ok((x.to_vec(), w.to_vec(), None, None));
+        }
+        let (wqn, wqp) = qrange(bits, true);
+        let sw = self.scalar(params, &format!("{name}.sw"))?;
+        let sa = self.scalar(params, &format!("{name}.sa"))?;
+        ensure!(sw > 0.0 && sa > 0.0, "{name}: non-positive step size (sw={sw}, sa={sa})");
+        let x_hat: Vec<f32> = x.iter().map(|&v| lsq::quantize(v, sa, aqn, aqp)).collect();
+        let w_hat: Vec<f32> = w.iter().map(|&v| lsq::quantize(v, sw, wqn, wqp)).collect();
+        let (aq, wq) = if pass.is_train() {
+            let g_a = gradscale_value(n_feat, aqp, &self.gscale_mode)?;
+            let g_w = gradscale_value(w.len(), wqp, &self.gscale_mode)?;
+            (
+                Some(QuantSave {
+                    raw: x.to_vec(),
+                    s: sa,
+                    qn: aqn,
+                    qp: aqp,
+                    gscale: g_a,
+                    g_idx: self.grad_slot(&format!("{name}.sa"))?,
+                }),
+                Some(QuantSave {
+                    raw: w.to_vec(),
+                    s: sw,
+                    qn: wqn,
+                    qp: wqp,
+                    gscale: g_w,
+                    g_idx: self.grad_slot(&format!("{name}.sw"))?,
+                }),
+            )
+        } else {
+            (None, None)
+        };
+        Ok((x_hat, w_hat, aq, wq))
+    }
+
+    fn fwd_conv(
+        &self,
+        params: &[Tensor],
+        act: &Buf,
+        spec: &ConvSpec,
+        pass: &mut Pass,
+    ) -> Result<(Buf, Option<MatmulTape>)> {
+        let (b, h, w, c) = act.dims4()?;
+        ensure!(c == spec.in_ch, "{}: input has {c} channels, expected {}", spec.name, spec.in_ch);
+        let wt = self.param(params, &format!("{}.w", spec.name))?;
+        ensure!(
+            wt.shape == [spec.kh, spec.kw, spec.in_ch, spec.out_ch],
+            "{}.w shape {:?}",
+            spec.name,
+            wt.shape
+        );
+        let (x_hat, w_hat, aq, wq) = self.quantize_pair(
+            params,
+            &spec.name,
+            spec.bits,
+            spec.signed_act,
+            &act.data,
+            wt.f32s()?,
+            spec.in_ch,
+            pass,
+        )?;
+        let k = spec.kh * spec.kw * c;
+        let n = spec.out_ch;
+        let mut cols: Vec<f32> = Vec::new();
+        let (oh, ow) = im2col(&x_hat, 0.0, b, h, w, c, spec.kh, spec.kw, spec.stride, &mut cols);
+        let m = b * oh * ow;
+        let mut out = vec![0.0f32; m * n];
+        sgemm(m, k, n, &cols, &w_hat, None, &mut out);
+        let tape = if pass.is_train() {
+            Some(MatmulTape {
+                m,
+                k,
+                n,
+                cols,
+                w_hat,
+                w_gidx: self.grad_slot(&format!("{}.w", spec.name))?,
+                b_gidx: None,
+                aq,
+                wq,
+                conv: Some(ConvGeom { b, h, w, c, kh: spec.kh, kw: spec.kw, stride: spec.stride }),
+            })
+        } else {
+            None
+        };
+        Ok((Buf { shape: vec![b, oh, ow, n], data: out }, tape))
+    }
+
+    fn fwd_dense(
+        &self,
+        params: &[Tensor],
+        act: &Buf,
+        spec: &DenseSpec,
+        pass: &mut Pass,
+    ) -> Result<(Buf, Option<MatmulTape>)> {
+        let (m, d) = act.dims2()?;
+        ensure!(d == spec.in_dim, "{}: input dim {d} != expected {}", spec.name, spec.in_dim);
+        let wt = self.param(params, &format!("{}.w", spec.name))?;
+        ensure!(
+            wt.shape == [spec.in_dim, spec.out_dim],
+            "{}.w shape {:?}",
+            spec.name,
+            wt.shape
+        );
+        let (x_hat, w_hat, aq, wq) = self.quantize_pair(
+            params,
+            &spec.name,
+            spec.bits,
+            spec.signed_act,
+            &act.data,
+            wt.f32s()?,
+            spec.in_dim,
+            pass,
+        )?;
+        let n = spec.out_dim;
+        let bias_name = format!("{}.b", spec.name);
+        let bias = match self.pidx.get(&bias_name) {
+            Some(&i) => {
+                ensure!(params[i].numel() == n, "{bias_name} wrong length");
+                Some(params[i].f32s()?.to_vec())
+            }
+            None => None,
+        };
+        let mut out = vec![0.0f32; m * n];
+        sgemm(m, d, n, &x_hat, &w_hat, bias.as_deref(), &mut out);
+        let tape = if pass.is_train() {
+            Some(MatmulTape {
+                m,
+                k: d,
+                n,
+                cols: x_hat,
+                w_hat,
+                w_gidx: self.grad_slot(&format!("{}.w", spec.name))?,
+                b_gidx: bias.as_ref().map(|_| self.grad_slot(&bias_name)).transpose()?,
+                aq,
+                wq,
+                conv: None,
+            })
+        } else {
+            None
+        };
+        Ok((Buf { shape: vec![m, n], data: out }, tape))
+    }
+
+    fn fwd_bn(
+        &self,
+        params: &[Tensor],
+        mut act: Buf,
+        spec: &BnSpec,
+        pass: &mut Pass,
+    ) -> Result<(Buf, Option<BnTape>)> {
+        let ch = *act.shape.last().unwrap_or(&0);
+        ensure!(ch == spec.ch, "{}: {ch} channels, expected {}", spec.name, spec.ch);
+        let gamma = self.param(params, &format!("{}.gamma", spec.name))?.f32s()?.to_vec();
+        let beta = self.param(params, &format!("{}.beta", spec.name))?.f32s()?;
+        let rows = act.data.len() / ch;
+        ensure!(rows > 0, "{}: empty input", spec.name);
+
+        let (mean, var) = if pass.is_train() || pass.is_collect() {
+            // Batch statistics (biased variance, like jnp.var).
+            let mut mean = vec![0.0f64; ch];
+            let mut var = vec![0.0f64; ch];
+            for chunk in act.data.chunks_exact(ch) {
+                for (i, &v) in chunk.iter().enumerate() {
+                    mean[i] += v as f64;
+                }
+            }
+            for m in mean.iter_mut() {
+                *m /= rows as f64;
+            }
+            for chunk in act.data.chunks_exact(ch) {
+                for (i, &v) in chunk.iter().enumerate() {
+                    let d = v as f64 - mean[i];
+                    var[i] += d * d;
+                }
+            }
+            for v in var.iter_mut() {
+                *v /= rows as f64;
+            }
+            (
+                mean.iter().map(|&v| v as f32).collect::<Vec<f32>>(),
+                var.iter().map(|&v| v as f32).collect::<Vec<f32>>(),
+            )
+        } else {
+            (
+                self.param(params, &format!("{}.rmean", spec.name))?.f32s()?.to_vec(),
+                self.param(params, &format!("{}.rvar", spec.name))?.f32s()?.to_vec(),
+            )
+        };
+
+        let train = pass.is_train();
+        let inv: Vec<f32> = var.iter().map(|&v| 1.0 / (v + BN_EPS).sqrt()).collect();
+        let mut xhat = if train {
+            Vec::with_capacity(act.data.len())
+        } else {
+            Vec::new()
+        };
+        for chunk in act.data.chunks_exact_mut(ch) {
+            for (i, v) in chunk.iter_mut().enumerate() {
+                let nx = (*v - mean[i]) * inv[i];
+                if train {
+                    xhat.push(nx);
+                }
+                *v = nx * gamma[i] + beta[i];
+            }
+        }
+
+        let tape = if let Pass::Train { state_out, .. } = pass {
+            // Functional running-stat updates (mirrors layers.batchnorm).
+            let rmean_name = format!("{}.rmean", spec.name);
+            let rvar_name = format!("{}.rvar", spec.name);
+            let rmean = self.param(params, &rmean_name)?.f32s()?;
+            let rvar = self.param(params, &rvar_name)?.f32s()?;
+            let new_rmean: Vec<f32> = rmean
+                .iter()
+                .zip(&mean)
+                .map(|(&r, &m)| BN_MOMENTUM * r + (1.0 - BN_MOMENTUM) * m)
+                .collect();
+            let new_rvar: Vec<f32> = rvar
+                .iter()
+                .zip(&var)
+                .map(|(&r, &v)| BN_MOMENTUM * r + (1.0 - BN_MOMENTUM) * v)
+                .collect();
+            let rmean_idx = *self
+                .pidx
+                .get(&rmean_name)
+                .ok_or_else(|| anyhow!("no param {rmean_name}"))?;
+            let rvar_idx = *self
+                .pidx
+                .get(&rvar_name)
+                .ok_or_else(|| anyhow!("no param {rvar_name}"))?;
+            state_out.push((rmean_idx, Tensor::from_f32(&[ch], new_rmean)));
+            state_out.push((rvar_idx, Tensor::from_f32(&[ch], new_rvar)));
+            Some(BnTape {
+                ch,
+                rows,
+                xhat,
+                inv,
+                gamma,
+                gamma_gidx: self.grad_slot(&format!("{}.gamma", spec.name))?,
+                beta_gidx: self.grad_slot(&format!("{}.beta", spec.name))?,
+            })
+        } else {
+            None
+        };
+        Ok((act, tape))
+    }
+
+    fn fwd_preact(
+        &self,
+        params: &[Tensor],
+        x: Buf,
+        p: &arch::PreactSpec,
+        pass: &mut Pass,
+    ) -> Result<(Buf, Option<PreactTape>)> {
+        // pre = relu(bn1(x)); shortcut from `pre` when projecting, raw x
+        // otherwise (mirrors runtime::native::apply_preact).
+        let x_copy = if p.proj.is_none() {
+            Some(Buf { shape: x.shape.clone(), data: x.data.clone() })
+        } else {
+            None
+        };
+        let (pre, bn1_t) = self.fwd_bn(params, x, &p.bn1, pass)?;
+        let (pre, relu1_m) = fwd_relu(pre, pass.is_train());
+        let (sc, proj_t) = match &p.proj {
+            Some(proj) => {
+                let (sc, t) = self.fwd_conv(params, &pre, proj, pass)?;
+                (sc, t)
+            }
+            None => (x_copy.unwrap(), None),
+        };
+        let (h, conv1_t) = self.fwd_conv(params, &pre, &p.conv1, pass)?;
+        let (h, bn2_t) = self.fwd_bn(params, h, &p.bn2, pass)?;
+        let (h, relu2_m) = fwd_relu(h, pass.is_train());
+        let (mut h, conv2_t) = self.fwd_conv(params, &h, &p.conv2, pass)?;
+        ensure!(h.shape == sc.shape, "residual shape mismatch: {:?} vs {:?}", h.shape, sc.shape);
+        for (a, b) in h.data.iter_mut().zip(&sc.data) {
+            *a += b;
+        }
+        let tape = if pass.is_train() {
+            Some(PreactTape {
+                bn1: bn1_t.unwrap(),
+                relu1: relu1_m.unwrap(),
+                proj: proj_t,
+                conv1: conv1_t.unwrap(),
+                bn2: bn2_t.unwrap(),
+                relu2: relu2_m.unwrap(),
+                conv2: conv2_t.unwrap(),
+            })
+        } else {
+            None
+        };
+        Ok((h, tape))
+    }
+
+    // -- public entry points -------------------------------------------------
+
+    /// Inference forward (eval-mode BN, quantizers active): returns
+    /// `rows × num_classes` logits.
+    pub fn forward_eval(&self, params: &[Tensor], x: &[f32], rows: usize) -> Result<Vec<f32>> {
+        Ok(self.forward_pass(params, x, rows, &mut Pass::Eval)?.data)
+    }
+
+    /// Section-2.1 collect pass over one (unaugmented) batch: runs the
+    /// *unquantized* network and records mean|x| at every activation
+    /// quantizer, for the `2⟨|v|⟩/√Qp` activation-step init.
+    pub fn collect_act_stats(
+        &self,
+        params: &[Tensor],
+        x: &[f32],
+        rows: usize,
+    ) -> Result<Vec<ActStat>> {
+        let mut stats = Vec::new();
+        self.forward_pass(params, x, rows, &mut Pass::Collect { stats: &mut stats })?;
+        Ok(stats)
+    }
+
+    /// One training forward+backward on a batch: softmax cross-entropy
+    /// loss, gradients for every `Family::grad_names` slot, and the
+    /// functional BN state updates.
+    pub fn loss_and_grads(
+        &self,
+        params: &[Tensor],
+        x: &[f32],
+        y: &[i32],
+        rows: usize,
+    ) -> Result<StepOutput> {
+        ensure!(y.len() >= rows, "labels shorter than batch");
+        let mut tape: Vec<Tape> = Vec::new();
+        let mut state_out: Vec<(usize, Tensor)> = Vec::new();
+        let logits = self.forward_pass(
+            params,
+            x,
+            rows,
+            &mut Pass::Train { tape: &mut tape, state_out: &mut state_out },
+        )?;
+        let (loss, ncorrect, dlogits) = softmax_xent(&logits.data, y, self.num_classes, rows);
+        let mut grads: Vec<Vec<f32>> =
+            self.grad_shapes.iter().map(|s| vec![0.0f32; numel(s)]).collect();
+        let mut d = Buf { shape: vec![rows, self.num_classes], data: dlogits };
+        for entry in tape.iter().rev() {
+            d = self.bwd_op(entry, d, &mut grads)?;
+        }
+        let grads = grads
+            .into_iter()
+            .zip(&self.grad_shapes)
+            .map(|(g, s)| Tensor::from_f32(s, g))
+            .collect();
+        Ok(StepOutput { loss, ncorrect, logits: logits.data, grads, state_updates: state_out })
+    }
+
+    // -- backward ------------------------------------------------------------
+
+    fn bwd_op(&self, entry: &Tape, dy: Buf, grads: &mut [Vec<f32>]) -> Result<Buf> {
+        Ok(match entry {
+            Tape::Matmul(t) => self.bwd_matmul(t, dy, grads)?,
+            Tape::Bn(t) => bwd_bn(t, dy, grads)?,
+            Tape::Relu(mask) => bwd_relu(mask, dy),
+            Tape::MaxPool2 { argmax, in_shape } => bwd_maxpool2(argmax, in_shape, dy)?,
+            Tape::Gap { in_shape } => bwd_gap(in_shape, dy)?,
+            Tape::Flatten { in_shape } => {
+                Buf { shape: in_shape.to_vec(), data: dy.data }
+            }
+            Tape::Preact(t) => self.bwd_preact(t, dy, grads)?,
+        })
+    }
+
+    fn bwd_matmul(&self, t: &MatmulTape, dy: Buf, grads: &mut [Vec<f32>]) -> Result<Buf> {
+        let (m, k, n) = (t.m, t.k, t.n);
+        ensure!(dy.data.len() == m * n, "matmul backward: dY has wrong shape");
+
+        // dŴ = X̂ᵀ · dY, then through the weight quantizer (Eq. 5 mask on
+        // the raw weights, Eq. 3 reduction to dsw).
+        let mut dw_hat = vec![0.0f32; k * n];
+        sgemm_tn(m, k, n, &t.cols, &dy.data, &mut dw_hat);
+        match &t.wq {
+            Some(q) => {
+                let mut ds = 0.0f64;
+                let gw = &mut grads[t.w_gidx];
+                for (i, &d) in dw_hat.iter().enumerate() {
+                    let v = q.raw[i];
+                    gw[i] += d * grad_v_mask(v, q.s, q.qn, q.qp);
+                    ds += d as f64 * self.method.ds_term(v, q.s, q.qn, q.qp) as f64;
+                }
+                grads[q.g_idx][0] += (ds * q.gscale) as f32;
+            }
+            None => {
+                let gw = &mut grads[t.w_gidx];
+                for (g, &d) in gw.iter_mut().zip(&dw_hat) {
+                    *g += d;
+                }
+            }
+        }
+
+        // db = column sums of dY.
+        if let Some(bg) = t.b_gidx {
+            let gb = &mut grads[bg];
+            for i in 0..m {
+                let row = &dy.data[i * n..(i + 1) * n];
+                for (g, &d) in gb.iter_mut().zip(row) {
+                    *g += d;
+                }
+            }
+        }
+
+        // dX̂ = dY · Ŵᵀ; convolutions scatter back through the im2col
+        // adjoint so each input element accumulates over every patch that
+        // read it.
+        let mut dcols = vec![0.0f32; m * k];
+        sgemm_nt(m, k, n, &dy.data, &t.w_hat, &mut dcols);
+        let (mut dxhat, in_shape): (Vec<f32>, Vec<usize>) = match &t.conv {
+            Some(g) => {
+                let mut dx = vec![0.0f32; g.b * g.h * g.w * g.c];
+                col2im(&dcols, g.b, g.h, g.w, g.c, g.kh, g.kw, g.stride, &mut dx);
+                (dx, vec![g.b, g.h, g.w, g.c])
+            }
+            None => (dcols, vec![m, k]),
+        };
+
+        // Through the activation quantizer: dsa reduces over the *input*
+        // elements (post-col2im), then the STE mask gates dX.
+        if let Some(q) = &t.aq {
+            let mut ds = 0.0f64;
+            for (i, d) in dxhat.iter_mut().enumerate() {
+                let v = q.raw[i];
+                ds += *d as f64 * self.method.ds_term(v, q.s, q.qn, q.qp) as f64;
+                *d *= grad_v_mask(v, q.s, q.qn, q.qp);
+            }
+            grads[q.g_idx][0] += (ds * q.gscale) as f32;
+        }
+        Ok(Buf { shape: in_shape, data: dxhat })
+    }
+
+    fn bwd_preact(&self, t: &PreactTape, dy: Buf, grads: &mut [Vec<f32>]) -> Result<Buf> {
+        // Residual: dout feeds both the conv branch and the shortcut.
+        let d_sc = Buf { shape: dy.shape.clone(), data: dy.data.clone() };
+        let d = self.bwd_matmul(&t.conv2, dy, grads)?;
+        let d = bwd_relu(&t.relu2, d);
+        let d = bwd_bn(&t.bn2, d, grads)?;
+        let mut d_pre = self.bwd_matmul(&t.conv1, d, grads)?;
+        match &t.proj {
+            Some(proj) => {
+                let d_proj = self.bwd_matmul(proj, d_sc, grads)?;
+                ensure!(d_proj.shape == d_pre.shape, "preact backward shape mismatch");
+                for (a, b) in d_pre.data.iter_mut().zip(&d_proj.data) {
+                    *a += b;
+                }
+                let d = bwd_relu(&t.relu1, d_pre);
+                bwd_bn(&t.bn1, d, grads)
+            }
+            None => {
+                let d = bwd_relu(&t.relu1, d_pre);
+                let mut dx = bwd_bn(&t.bn1, d, grads)?;
+                ensure!(dx.shape == d_sc.shape, "preact backward shape mismatch");
+                for (a, b) in dx.data.iter_mut().zip(&d_sc.data) {
+                    *a += b;
+                }
+                Ok(dx)
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Elementwise / pooling ops (free functions: no parameters involved)
+// ---------------------------------------------------------------------------
+
+fn fwd_relu(mut act: Buf, train: bool) -> (Buf, Option<Vec<bool>>) {
+    let mask = if train {
+        Some(act.data.iter().map(|&v| v > 0.0).collect())
+    } else {
+        None
+    };
+    for v in &mut act.data {
+        *v = v.max(0.0);
+    }
+    (act, mask)
+}
+
+fn bwd_relu(mask: &[bool], mut dy: Buf) -> Buf {
+    for (d, &m) in dy.data.iter_mut().zip(mask) {
+        if !m {
+            *d = 0.0;
+        }
+    }
+    dy
+}
+
+fn fwd_maxpool2(act: &Buf, train: bool) -> Result<(Buf, Option<Vec<usize>>)> {
+    let (b, h, w, c) = act.dims4()?;
+    let (oh, ow) = (h / 2, w / 2);
+    let mut out = vec![f32::NEG_INFINITY; b * oh * ow * c];
+    let mut arg = vec![0usize; if train { b * oh * ow * c } else { 0 }];
+    for bi in 0..b {
+        for oy in 0..oh {
+            for ox in 0..ow {
+                let dst = ((bi * oh + oy) * ow + ox) * c;
+                for dy_ in 0..2 {
+                    for dx_ in 0..2 {
+                        let src = ((bi * h + oy * 2 + dy_) * w + ox * 2 + dx_) * c;
+                        for ch in 0..c {
+                            let v = act.data[src + ch];
+                            if v > out[dst + ch] {
+                                out[dst + ch] = v;
+                                if train {
+                                    arg[dst + ch] = src + ch;
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+    let argmax = if train { Some(arg) } else { None };
+    Ok((Buf { shape: vec![b, oh, ow, c], data: out }, argmax))
+}
+
+fn bwd_maxpool2(argmax: &[usize], in_shape: &[usize; 4], dy: Buf) -> Result<Buf> {
+    ensure!(dy.data.len() == argmax.len(), "maxpool backward shape");
+    let mut dx = vec![0.0f32; in_shape.iter().product()];
+    for (&a, &d) in argmax.iter().zip(&dy.data) {
+        dx[a] += d;
+    }
+    Ok(Buf { shape: in_shape.to_vec(), data: dx })
+}
+
+fn fwd_gap(act: &Buf) -> Result<Buf> {
+    let (b, h, w, c) = act.dims4()?;
+    let inv = 1.0 / (h * w) as f32;
+    let mut out = vec![0.0f32; b * c];
+    for bi in 0..b {
+        for p in 0..h * w {
+            let src = (bi * h * w + p) * c;
+            for ch in 0..c {
+                out[bi * c + ch] += act.data[src + ch];
+            }
+        }
+        for ch in 0..c {
+            out[bi * c + ch] *= inv;
+        }
+    }
+    Ok(Buf { shape: vec![b, c], data: out })
+}
+
+fn bwd_gap(in_shape: &[usize; 4], dy: Buf) -> Result<Buf> {
+    let [b, h, w, c] = *in_shape;
+    ensure!(dy.data.len() == b * c, "gap backward shape");
+    let inv = 1.0 / (h * w) as f32;
+    let mut dx = vec![0.0f32; b * h * w * c];
+    for bi in 0..b {
+        for p in 0..h * w {
+            let dst = (bi * h * w + p) * c;
+            for ch in 0..c {
+                dx[dst + ch] = dy.data[bi * c + ch] * inv;
+            }
+        }
+    }
+    Ok(Buf { shape: in_shape.to_vec(), data: dx })
+}
+
+/// Standard three-term batch-norm backward over the saved normalized
+/// activations: `dx = inv/N · (N·dx̂ − Σdx̂ − x̂·Σ(dx̂·x̂))` per channel,
+/// plus `dγ = Σ dy·x̂` and `dβ = Σ dy`.
+fn bwd_bn(t: &BnTape, mut dy: Buf, grads: &mut [Vec<f32>]) -> Result<Buf> {
+    let ch = t.ch;
+    let rows = t.rows;
+    ensure!(dy.data.len() == rows * ch, "bn backward shape");
+    let mut dgamma = vec![0.0f64; ch];
+    let mut dbeta = vec![0.0f64; ch];
+    let mut s1 = vec![0.0f64; ch];
+    let mut s2 = vec![0.0f64; ch];
+    for (r, chunk) in dy.data.chunks_exact_mut(ch).enumerate() {
+        let xh = &t.xhat[r * ch..(r + 1) * ch];
+        for i in 0..ch {
+            let g = chunk[i] as f64;
+            dgamma[i] += g * xh[i] as f64;
+            dbeta[i] += g;
+            let dxh = g * t.gamma[i] as f64;
+            s1[i] += dxh;
+            s2[i] += dxh * xh[i] as f64;
+            chunk[i] = dxh as f32; // dy buffer now holds dx̂
+        }
+    }
+    let n = rows as f64;
+    for (r, chunk) in dy.data.chunks_exact_mut(ch).enumerate() {
+        let xh = &t.xhat[r * ch..(r + 1) * ch];
+        for i in 0..ch {
+            let dxh = chunk[i] as f64;
+            chunk[i] = (t.inv[i] as f64 * (dxh - s1[i] / n - xh[i] as f64 * s2[i] / n)) as f32;
+        }
+    }
+    for (g, &d) in grads[t.gamma_gidx].iter_mut().zip(&dgamma) {
+        *g += d as f32;
+    }
+    for (g, &d) in grads[t.beta_gidx].iter_mut().zip(&dbeta) {
+        *g += d as f32;
+    }
+    Ok(dy)
+}

@@ -1,0 +1,327 @@
+//! Training-side quantizer gradients and the finite-difference harness.
+//!
+//! The elementwise forward (Eqs. 1-2) and the LSQ backward terms (Eq. 5
+//! STE mask, Eq. 3 step gradient) live in [`crate::quant::lsq`]; this
+//! module adds what only the *training* path needs:
+//!
+//! * the competing step-size gradient estimators (`qil`, `pact`, `fixed`)
+//!   so the native trainer covers the paper's method ablation exactly like
+//!   `python/compile/quantizers.py`;
+//! * the Section-2.2 gradient-scale modes (`full`, `sqrtn`, `one`, `x10`,
+//!   `d10` — the Table-3 ablation knob);
+//! * softmax cross-entropy with its gradient (the loss head of the native
+//!   backward pass);
+//! * the grad-check harness: an f64 *surrogate* of the STE-quantizer that
+//!   is genuinely differentiable — `h(v, s) = s·(clip(v/s) + c)` with the
+//!   rounding offset `c = round(r₀) − clip(r₀)` frozen at the evaluation
+//!   point — whose exact derivatives are the Eq. 5 / Eq. 3 formulas. The
+//!   hand-written backward is checked against central differences of this
+//!   surrogate (`tests/grad_check.rs`), which catches sign errors, missing
+//!   `−r` terms, wrong clip boundaries and gscale plumbing, while staying
+//!   well-defined where the raw round() is piecewise constant.
+
+use anyhow::{bail, Result};
+
+use crate::quant::lsq::{grad_s_term, grad_scale};
+
+/// Step-size gradient estimator, resolved once at model-build time so the
+/// per-element backward loops dispatch on a copyable enum instead of a
+/// string (mirrors the method set of `python/compile/quantizers.py`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Method {
+    /// Eq. 3: the paper's estimator (`lsq_jnp` is the same math on the
+    /// Python side, kept as a separate name for artifact bookkeeping).
+    Lsq,
+    /// Jung et al. 2019: linear inside the domain, blind to transitions.
+    Qil,
+    /// Choi et al. 2018: non-zero only past the clip points.
+    Pact,
+    /// Static fit: no gradient to s at all.
+    Fixed,
+}
+
+impl Method {
+    /// Parse a config method name (`lsq`, `lsq_jnp`, `qil`, `pact`,
+    /// `fixed`).
+    pub fn parse(name: &str) -> Result<Method> {
+        Ok(match name {
+            "lsq" | "lsq_jnp" => Method::Lsq,
+            "qil" => Method::Qil,
+            "pact" => Method::Pact,
+            "fixed" => Method::Fixed,
+            other => bail!("unknown quantizer method {other:?}"),
+        })
+    }
+
+    /// Per-element d(v̂)/d(s): all methods share the Eq. 1-2 forward and
+    /// the Eq. 5 data gradient, differing only in this term.
+    #[inline]
+    pub fn ds_term(self, v: f32, s: f32, qn: i64, qp: i64) -> f32 {
+        let r = v / s;
+        match self {
+            Method::Lsq => grad_s_term(v, s, qn, qp),
+            Method::Qil => r.clamp(-(qn as f32), qp as f32),
+            Method::Pact => {
+                if r >= qp as f32 {
+                    qp as f32
+                } else if r <= -(qn as f32) {
+                    -(qn as f32)
+                } else {
+                    0.0
+                }
+            }
+            Method::Fixed => 0.0,
+        }
+    }
+}
+
+/// Per-element d(v̂)/d(s) for quantizer method `method` (string form;
+/// resolves through [`Method::parse`] — hot loops should resolve once and
+/// call [`Method::ds_term`] directly).
+pub fn ds_term(method: &str, v: f32, s: f32, qn: i64, qp: i64) -> Result<f32> {
+    Ok(Method::parse(method)?.ds_term(v, s, qn, qp))
+}
+
+/// The Section-2.2 gradient scale g for a quantizer over `n_items`
+/// elements, per `gscale_mode` (Table-3 ablation knob):
+/// `full` = 1/√(N·Qp) (via [`grad_scale`] — single source of the paper's
+/// formula), `sqrtn` = 1/√N, `one` = 1, `x10`/`d10` = full scaled by 10 /
+/// by 1/10.
+pub fn gradscale_value(n_items: usize, qp: i64, mode: &str) -> Result<f64> {
+    let n = n_items.max(1);
+    Ok(match mode {
+        "one" => 1.0,
+        "sqrtn" => 1.0 / (n as f64).sqrt(),
+        "full" => grad_scale(n, qp),
+        "x10" => 10.0 * grad_scale(n, qp),
+        "d10" => 0.1 * grad_scale(n, qp),
+        other => bail!("unknown gscale mode {other:?}"),
+    })
+}
+
+/// Per-row softmax statistics: `(maxv, denom, logz, argmax)`.
+///
+/// NaN-tolerant on purpose (like `metrics::topk_correct`): a diverged run
+/// must surface as a NaN loss in its job report, not panic the sweep
+/// worker.
+fn softmax_row(row: &[f32]) -> (f32, f64, f64, usize) {
+    let mut maxv = f32::NEG_INFINITY;
+    let mut argmax = 0usize;
+    for (i, &v) in row.iter().enumerate() {
+        if v > maxv {
+            maxv = v;
+            argmax = i;
+        }
+    }
+    let mut denom = 0.0f64;
+    for &v in row {
+        denom += ((v - maxv) as f64).exp();
+    }
+    (maxv, denom, denom.ln() + maxv as f64, argmax)
+}
+
+/// Mean softmax cross-entropy + argmax-correct count, with no gradient
+/// buffer — the eval path's variant of [`softmax_xent`].
+pub fn softmax_xent_loss(
+    logits: &[f32],
+    labels: &[i32],
+    classes: usize,
+    rows: usize,
+) -> (f64, usize) {
+    assert_eq!(logits.len(), rows * classes, "logits shape");
+    assert!(labels.len() >= rows, "labels shape");
+    let mut loss = 0.0f64;
+    let mut ncorrect = 0usize;
+    for r in 0..rows {
+        let row = &logits[r * classes..(r + 1) * classes];
+        let target = labels[r] as usize;
+        let (_, _, logz, argmax) = softmax_row(row);
+        loss += logz - row[target] as f64;
+        if argmax == target {
+            ncorrect += 1;
+        }
+    }
+    (loss / rows as f64, ncorrect)
+}
+
+/// Mean softmax cross-entropy over `rows` logit rows, plus its gradient
+/// and the argmax-correct count — the loss head the native train step
+/// shares with `python/compile/train.py` (`cross_entropy` + `_n_correct`).
+///
+/// Returns `(loss, ncorrect, dlogits)` with `dlogits[r, c] =
+/// (softmax(logits)[r, c] − 1[c == y_r]) / rows`.
+pub fn softmax_xent(
+    logits: &[f32],
+    labels: &[i32],
+    classes: usize,
+    rows: usize,
+) -> (f64, usize, Vec<f32>) {
+    assert_eq!(logits.len(), rows * classes, "logits shape");
+    assert!(labels.len() >= rows, "labels shape");
+    let mut dlogits = vec![0.0f32; rows * classes];
+    let mut loss = 0.0f64;
+    let mut ncorrect = 0usize;
+    let inv_rows = 1.0f32 / rows as f32;
+    for r in 0..rows {
+        let row = &logits[r * classes..(r + 1) * classes];
+        let target = labels[r] as usize;
+        let (maxv, denom, logz, argmax) = softmax_row(row);
+        loss += logz - row[target] as f64;
+        if argmax == target {
+            ncorrect += 1;
+        }
+        let drow = &mut dlogits[r * classes..(r + 1) * classes];
+        for (c, d) in drow.iter_mut().enumerate() {
+            let p = (((row[c] - maxv) as f64).exp() / denom) as f32;
+            *d = (p - if c == target { 1.0 } else { 0.0 }) * inv_rows;
+        }
+    }
+    (loss / rows as f64, ncorrect, dlogits)
+}
+
+// ---------------------------------------------------------------------------
+// Grad-check harness
+// ---------------------------------------------------------------------------
+
+/// The STE-consistent f64 surrogate of the LSQ quantizer, with the
+/// rounding offset frozen at `(v0, s0)`:
+/// `h(v, s) = s · (clip(v/s, −Qn, Qp) + c)`, `c = round(clip(v0/s0)) −
+/// clip(v0/s0)`.
+///
+/// At `(v0, s0)` the surrogate equals the real quantizer output, and its
+/// exact partial derivatives are the hand-written backward formulas — the
+/// Eq. 5 mask in `v` and the Eq. 3 term in `s` — so central differences of
+/// `h` are a legitimate reference for the custom VJP wherever the frozen
+/// offset stays valid (see [`safe_gradcheck_point`]).
+pub fn lsq_surrogate_f64(v: f64, s: f64, v0: f64, s0: f64, qn: i64, qp: i64) -> f64 {
+    let clip0 = (v0 / s0).clamp(-(qn as f64), qp as f64);
+    let c = clip0.round_ties_even_compat() - clip0;
+    let clip = (v / s).clamp(-(qn as f64), qp as f64);
+    s * (clip + c)
+}
+
+/// Round-half-to-even for f64 without relying on a recent std method
+/// (keeps the grad-check harness buildable on older toolchains).
+trait RoundTiesEvenCompat {
+    fn round_ties_even_compat(self) -> f64;
+}
+
+impl RoundTiesEvenCompat for f64 {
+    fn round_ties_even_compat(self) -> f64 {
+        let f = self.floor();
+        let diff = self - f;
+        if diff > 0.5 {
+            f + 1.0
+        } else if diff < 0.5 {
+            f
+        } else if (f as i64) % 2 == 0 {
+            f
+        } else {
+            f + 1.0
+        }
+    }
+}
+
+/// Fourth-order central difference `df/dx` at `x` with step `h`.
+pub fn central_diff(f: impl Fn(f64) -> f64, x: f64, h: f64) -> f64 {
+    (8.0 * (f(x + h) - f(x - h)) - (f(x + 2.0 * h) - f(x - 2.0 * h))) / (12.0 * h)
+}
+
+/// `true` when `(v, s)` is a safe point for finite-differencing the
+/// surrogate: `v/s` stays at least `margin` away from the clip boundaries
+/// and from the nearest rounding tie, so neither the STE mask nor the
+/// frozen offset changes within the stencil.
+pub fn safe_gradcheck_point(v: f64, s: f64, qn: i64, qp: i64, margin: f64) -> bool {
+    let r = v / s;
+    let tie_dist = (r - r.floor() - 0.5).abs();
+    let lo = -(qn as f64);
+    let hi = qp as f64;
+    tie_dist > margin && (r - lo).abs() > margin && (r - hi).abs() > margin
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ds_term_variants_match_reference_shapes() {
+        let (qn, qp) = (2i64, 1i64);
+        // inside the domain: lsq is the sawtooth, qil is linear, pact zero
+        assert!((ds_term("lsq", 0.3, 1.0, qn, qp).unwrap() - (0.0 - 0.3)).abs() < 1e-6);
+        assert!((ds_term("qil", 0.3, 1.0, qn, qp).unwrap() - 0.3).abs() < 1e-6);
+        assert_eq!(ds_term("pact", 0.3, 1.0, qn, qp).unwrap(), 0.0);
+        assert_eq!(ds_term("fixed", 0.3, 1.0, qn, qp).unwrap(), 0.0);
+        // saturated: lsq, qil and pact all clamp to the clip level
+        for m in ["lsq", "qil", "pact"] {
+            assert_eq!(ds_term(m, 100.0, 1.0, qn, qp).unwrap(), qp as f32, "{m}");
+            assert_eq!(ds_term(m, -100.0, 1.0, qn, qp).unwrap(), -(qn as f32), "{m}");
+        }
+        assert!(ds_term("nope", 0.0, 1.0, qn, qp).is_err());
+    }
+
+    #[test]
+    fn gradscale_modes_match_python() {
+        let n = 1000usize;
+        let qp = 7i64;
+        let full = gradscale_value(n, qp, "full").unwrap();
+        assert!((full - 1.0 / (7000.0f64).sqrt()).abs() < 1e-12);
+        let sqrtn = gradscale_value(n, qp, "sqrtn").unwrap();
+        assert!((sqrtn - 1.0 / (1000.0f64).sqrt()).abs() < 1e-12);
+        assert_eq!(gradscale_value(n, qp, "one").unwrap(), 1.0);
+        assert!((gradscale_value(n, qp, "x10").unwrap() - 10.0 * full).abs() < 1e-12);
+        assert!((gradscale_value(n, qp, "d10").unwrap() - 0.1 * full).abs() < 1e-12);
+        assert!(gradscale_value(n, qp, "nope").is_err());
+    }
+
+    #[test]
+    fn softmax_xent_uniform_logits() {
+        // All-zero logits: loss = ln(C), gradient = (1/C - onehot)/rows.
+        let classes = 4usize;
+        let rows = 2usize;
+        let logits = vec![0.0f32; rows * classes];
+        let labels = vec![1i32, 3];
+        let (loss, _nc, d) = softmax_xent(&logits, &labels, classes, rows);
+        assert!((loss - (classes as f64).ln()).abs() < 1e-6);
+        assert!((d[0] - 0.25 / 2.0).abs() < 1e-6);
+        assert!((d[1] - (0.25 - 1.0) / 2.0).abs() < 1e-6);
+        // gradient rows sum to zero
+        let s: f32 = d.iter().sum();
+        assert!(s.abs() < 1e-6);
+    }
+
+    #[test]
+    fn softmax_xent_counts_argmax() {
+        let logits = vec![2.0f32, 0.0, 0.0, 5.0]; // 2 rows x 2 classes
+        let (_, nc, _) = softmax_xent(&logits, &[0, 0], 2, 2);
+        assert_eq!(nc, 1);
+    }
+
+    #[test]
+    fn surrogate_equals_quantizer_at_center() {
+        use crate::quant::lsq::{qrange, quantize};
+        for bits in [2u32, 3, 4, 8] {
+            for signed in [true, false] {
+                let (qn, qp) = qrange(bits, signed);
+                for &(v, s) in &[(0.37f64, 0.21f64), (-0.83, 0.4), (9.0, 0.05)] {
+                    let h = lsq_surrogate_f64(v, s, v, s, qn, qp);
+                    let q = quantize(v as f32, s as f32, qn, qp) as f64;
+                    assert!((h - q).abs() < 1e-5, "bits={bits} v={v} s={s}: {h} vs {q}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn central_diff_is_fourth_order() {
+        let d = central_diff(|x| x * x * x, 2.0, 1e-3);
+        assert!((d - 12.0).abs() < 1e-8, "{d}");
+    }
+
+    #[test]
+    fn safe_points_exclude_ties_and_clips() {
+        assert!(!safe_gradcheck_point(1.5, 1.0, 2, 1, 1e-2)); // tie at .5
+        assert!(!safe_gradcheck_point(1.0, 1.0, 2, 1, 1e-2)); // at Qp
+        assert!(!safe_gradcheck_point(-2.0, 1.0, 2, 1, 1e-2)); // at -Qn
+        assert!(safe_gradcheck_point(0.3, 1.0, 2, 1, 1e-2));
+    }
+}

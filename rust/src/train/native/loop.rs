@@ -1,0 +1,236 @@
+//! The native training loop: drives [`NativeTrainModel`] over the data
+//! pipeline per an [`ExperimentConfig`], implementing the paper's protocol
+//! with **no XLA/PJRT** — fp32 pretrain → per-precision fine-tune with
+//! Section-2.1 step-size initialization, SGD + momentum + per-precision
+//! weight decay, cosine or step LR decay.
+//!
+//! The epoch loop itself is shared with the XLA trainer through
+//! [`crate::train::TrainBackend`] / [`crate::train::fit_backend`], so both
+//! paths emit identical [`History`] records and checkpoint layouts.
+
+use std::path::Path;
+use std::time::Instant;
+
+use anyhow::{bail, Context, Result};
+
+use crate::config::ExperimentConfig;
+use crate::data::Dataset;
+use crate::quant::lsq::qrange;
+use crate::runtime::Manifest;
+use crate::tensor::{Checkpoint, Tensor};
+use crate::train::metrics::{topk_correct, History};
+use crate::train::state::TrainState;
+use crate::train::{fit_backend, FitReport, TrainBackend};
+
+use super::backward::NativeTrainModel;
+use super::optim::sgd_step;
+
+/// Pure-Rust trainer: the native sibling of the XLA `Trainer`. Owns its
+/// [`Manifest`] (no engine, no artifacts beyond `manifest.json` +
+/// `params.bin`) and runs the hand-written backward pass of
+/// [`NativeTrainModel`].
+pub struct NativeTrainer {
+    manifest: Manifest,
+    model: NativeTrainModel,
+    /// Experiment configuration this run follows.
+    pub cfg: ExperimentConfig,
+    /// Master parameters + momentum buffers.
+    pub state: TrainState,
+    /// Step/eval records, identical in shape to the XLA trainer's.
+    pub history: History,
+    /// Per-epoch progress printing.
+    pub verbose: bool,
+    /// Wall time spent in forward+backward+update (the native analogue of
+    /// the XLA trainer's `exec_seconds`).
+    pub exec_seconds: f64,
+}
+
+impl NativeTrainer {
+    /// Build a trainer over the manifest in `cfg.artifacts_dir`, mirroring
+    /// the XLA `Trainer::new` state protocol: fresh init, same-family
+    /// resume, or fp32→quantized fine-tune with Section-2.1 step-size
+    /// re-initialization.
+    pub fn new(cfg: ExperimentConfig) -> Result<NativeTrainer> {
+        cfg.validate()?;
+        let manifest = Manifest::load(Path::new(&cfg.artifacts_dir))?;
+        let family = cfg.family();
+        let model = NativeTrainModel::build(&manifest, &family, &cfg.method, &cfg.gscale)?;
+        // Labels come from cfg.data.classes; the model's logit count must
+        // cover them, or softmax indexing would panic mid-training.
+        let fam_classes = manifest.family(&family)?.num_classes;
+        if cfg.data.classes > fam_classes {
+            bail!(
+                "config asks for {} data classes but family {family} has only \
+                 {fam_classes} logits",
+                cfg.data.classes
+            );
+        }
+
+        let state;
+        let needs_init_quant;
+        if cfg.init_from.is_empty() {
+            state = TrainState::fresh(&manifest, &family)?;
+            needs_init_quant = cfg.bits < 32;
+        } else {
+            let ck = Checkpoint::load(Path::new(&cfg.init_from))
+                .with_context(|| format!("init_from={}", cfg.init_from))?;
+            if ck.meta_str("family") == Some(family.as_str()) {
+                state = TrainState::load(&manifest, Path::new(&cfg.init_from))?;
+                needs_init_quant = false;
+            } else {
+                let (s, copied) = TrainState::from_fp32_checkpoint(&manifest, &family, &ck)?;
+                state = s;
+                needs_init_quant = cfg.bits < 32;
+                if copied == 0 {
+                    bail!("no params copied from {}", cfg.init_from);
+                }
+            }
+        }
+
+        let mut tr = NativeTrainer {
+            manifest,
+            model,
+            cfg,
+            state,
+            history: History::default(),
+            verbose: true,
+            exec_seconds: 0.0,
+        };
+        if needs_init_quant {
+            tr.run_init_quant()?;
+        }
+        Ok(tr)
+    }
+
+    /// The manifest this trainer was opened over.
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// Section-2.1 step-size initialization, the native mirror of the
+    /// `init_quant` artifact: every weight step becomes `2⟨|w|⟩/√Qp` over
+    /// the *current* weights, every activation step `2⟨|v|⟩/√Qp` over the
+    /// first (unaugmented) training batch via the full-precision collect
+    /// pass.
+    fn run_init_quant(&mut self) -> Result<()> {
+        let family = self.cfg.family();
+        let fam = self.manifest.family(&family)?.clone();
+        // sw from the current weights.
+        let bits_of: std::collections::BTreeMap<&str, u32> =
+            fam.layer_meta.iter().map(|l| (l.name.as_str(), l.bits)).collect();
+        for name in fam.step_names("step_w") {
+            let scope = name.strip_suffix(".sw").unwrap_or(&name).to_string();
+            let bits = *bits_of
+                .get(scope.as_str())
+                .ok_or_else(|| anyhow::anyhow!("no layer_meta for {scope}"))?;
+            let (_, qp) = qrange(bits, true);
+            let w = self.state.param(&fam, &format!("{scope}.w"))?.f32s()?;
+            let sw = crate::quant::lsq::step_init(w, qp).max(1e-8);
+            self.state.set_param(&fam, &name, Tensor::scalar_f32(sw))?;
+        }
+        // sa from the first batch of (full-precision) activations.
+        let ds = Dataset::train(&self.cfg.data);
+        let batch = self.manifest.batch.max(1).min(ds.size.max(1));
+        let idx: Vec<usize> = (0..batch).collect();
+        let b = ds.batch_from_indices(&idx, batch);
+        let stats = self.model.collect_act_stats(&self.state.params, b.x.f32s()?, batch)?;
+        for st in stats {
+            let sa = (2.0 * st.mean_abs / (st.qp.max(1) as f64).sqrt()).max(1e-8) as f32;
+            self.state.set_param(&fam, &st.sa_name, Tensor::scalar_f32(sa))?;
+        }
+        Ok(())
+    }
+
+    /// One optimizer step on a prepared batch; returns `(loss, acc)`.
+    pub fn step(&mut self, x: Tensor, y: Tensor, lr: f64, wd: f64) -> Result<(f64, f64)> {
+        let t0 = Instant::now();
+        let rows = y.numel();
+        let out = self
+            .model
+            .loss_and_grads(&self.state.params, x.f32s()?, y.i32s()?, rows)?;
+        let family = self.cfg.family();
+        let fam = self.manifest.family(&family)?;
+        sgd_step(fam, &mut self.state.params, &mut self.state.moms, &out.grads, lr, wd)?;
+        for (idx, t) in out.state_updates {
+            self.state.params[idx] = t;
+        }
+        self.state.step += 1;
+        self.exec_seconds += t0.elapsed().as_secs_f64();
+        Ok((out.loss, out.ncorrect as f64 / rows as f64))
+    }
+
+    /// Full pass over the test split; returns `(loss, top1%, top5%)`.
+    pub fn evaluate(&mut self) -> Result<(f64, f64, f64)> {
+        let ds = Dataset::test(&self.cfg.data);
+        let batch = self.manifest.batch.max(1);
+        let classes = self.model.num_classes();
+        let mut total = 0usize;
+        let mut top1 = 0usize;
+        let mut top5 = 0usize;
+        let mut loss_sum = 0.0f64;
+        let mut nb = 0usize;
+        for b in ds.eval_batches(batch) {
+            let rows = b.y.numel();
+            let logits = self.model.forward_eval(&self.state.params, b.x.f32s()?, rows)?;
+            let labels = b.y.i32s()?;
+            // Like the XLA eval artifact: loss over the whole (padded)
+            // batch, accuracy over the real rows only.
+            let (loss, _) = super::grad::softmax_xent_loss(&logits, labels, classes, rows);
+            top1 += topk_correct(&logits, labels, classes, 1, b.real);
+            top5 += topk_correct(&logits, labels, classes, 5, b.real);
+            total += b.real;
+            loss_sum += loss;
+            nb += 1;
+        }
+        Ok((
+            loss_sum / nb.max(1) as f64,
+            100.0 * top1 as f64 / total.max(1) as f64,
+            100.0 * top5 as f64 / total.max(1) as f64,
+        ))
+    }
+
+    /// The full training run per config (shared loop, see
+    /// [`crate::train::fit_backend`]).
+    pub fn fit(&mut self) -> Result<FitReport> {
+        fit_backend(self)
+    }
+}
+
+impl TrainBackend for NativeTrainer {
+    fn cfg(&self) -> &ExperimentConfig {
+        &self.cfg
+    }
+
+    fn train_batch(&self) -> usize {
+        self.manifest.batch.max(1)
+    }
+
+    fn verbose(&self) -> bool {
+        self.verbose
+    }
+
+    fn state(&self) -> &TrainState {
+        &self.state
+    }
+
+    fn history(&self) -> &History {
+        &self.history
+    }
+
+    fn history_mut(&mut self) -> &mut History {
+        &mut self.history
+    }
+
+    fn step(&mut self, x: Tensor, y: Tensor, lr: f64, wd: f64) -> Result<(f64, f64)> {
+        NativeTrainer::step(self, x, y, lr, wd)
+    }
+
+    fn evaluate(&mut self) -> Result<(f64, f64, f64)> {
+        NativeTrainer::evaluate(self)
+    }
+
+    fn save_checkpoint(&self, path: &Path) -> Result<()> {
+        let fam = self.manifest.family(&self.cfg.family())?;
+        self.state.save(fam, path)
+    }
+}

@@ -1,0 +1,27 @@
+//! Native pure-Rust **training** subsystem: the hand-written backward pass
+//! that makes 2/3/4/8-bit LSQ training run with no XLA/PJRT — the
+//! training-side counterpart of [`crate::runtime::native`].
+//!
+//! The paper's core contribution is the training-time step-size gradient
+//! (Eq. 3 with the `g = 1/√(N·Qp)` scale, Sections 2.2-2.3); this module
+//! reproduces it natively:
+//!
+//! * [`grad`] — quantizer gradient estimators (LSQ + the QIL/PACT/fixed
+//!   ablation variants), gradient-scale modes, softmax cross-entropy, and
+//!   the finite-difference grad-check harness (`tests/grad_check.rs`);
+//! * [`backward`] — [`backward::NativeTrainModel`]: tape-recorded forward
+//!   + hand-written backward over the model-zoo arch IR (transposed-GEMM /
+//!   im2col-adjoint backprop reusing `runtime::native::gemm`);
+//! * [`optim`] — SGD + momentum + role-aware weight decay, mirroring
+//!   `python/compile/train.py`;
+//! * [`r#loop`] — [`NativeTrainer`], driving the shared
+//!   [`crate::train::fit_backend`] epoch loop.
+
+pub mod backward;
+pub mod grad;
+pub mod optim;
+#[path = "loop.rs"]
+pub mod r#loop;
+
+pub use backward::{NativeTrainModel, StepOutput};
+pub use r#loop::NativeTrainer;

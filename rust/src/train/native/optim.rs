@@ -1,0 +1,129 @@
+//! SGD + momentum + role-aware weight decay, mirroring `_sgd` in
+//! `python/compile/train.py`: decay applies to conv/fc **weights only** —
+//! biases, BN affines and the step sizes train decay-free (the paper's
+//! recipe, Section 2.3), and BN running stats carry no gradient at all.
+
+use anyhow::{ensure, Result};
+
+use crate::runtime::Family;
+use crate::tensor::Tensor;
+
+/// Momentum coefficient, shared with `train.MOMENTUM`.
+pub const MOMENTUM: f32 = 0.9;
+
+/// One in-place SGD step: for every gradient-bearing parameter (in
+/// `Family::grad_names` order), `g ← grad (+ wd·p for weights)`,
+/// `m ← 0.9·m + g`, `p ← p − lr·m`.
+///
+/// `params` follow `Family::param_names`; `moms` and `grads` follow
+/// `Family::grad_names`.
+pub fn sgd_step(
+    fam: &Family,
+    params: &mut [Tensor],
+    moms: &mut [Tensor],
+    grads: &[Tensor],
+    lr: f64,
+    wd: f64,
+) -> Result<()> {
+    ensure!(params.len() == fam.param_names.len(), "params arity");
+    ensure!(moms.len() == fam.grad_names.len(), "momentum arity");
+    ensure!(grads.len() == fam.grad_names.len(), "gradient arity");
+    let lr = lr as f32;
+    let wd = wd as f32;
+    for (gi, name) in fam.grad_names.iter().enumerate() {
+        let pi = fam
+            .param_names
+            .iter()
+            .position(|n| n == name)
+            .ok_or_else(|| anyhow::anyhow!("grad name {name} not in params"))?;
+        let decay = fam.roles.get(name).map(String::as_str) == Some("weight");
+        let g = grads[gi].f32s()?;
+        let m = moms[gi].f32s_mut()?;
+        let p = params[pi].f32s_mut()?;
+        ensure!(
+            g.len() == p.len() && m.len() == p.len(),
+            "{name}: grad/mom/param length mismatch ({} / {} / {})",
+            g.len(),
+            m.len(),
+            p.len()
+        );
+        for i in 0..p.len() {
+            let mut gv = g[i];
+            if decay {
+                gv += wd * p[i];
+            }
+            m[i] = MOMENTUM * m[i] + gv;
+            p[i] -= lr * m[i];
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::collections::BTreeMap;
+
+    fn toy_family() -> Family {
+        let mut roles = BTreeMap::new();
+        roles.insert("w".to_string(), "weight".to_string());
+        roles.insert("b".to_string(), "bias".to_string());
+        roles.insert("s".to_string(), "state".to_string());
+        let mut shapes = BTreeMap::new();
+        shapes.insert("w".to_string(), vec![2]);
+        shapes.insert("b".to_string(), vec![2]);
+        shapes.insert("s".to_string(), vec![1]);
+        Family {
+            name: "toy".into(),
+            model: "mlp".into(),
+            qbits: 32,
+            num_classes: 2,
+            params_bin: String::new(),
+            n_matmul: 1,
+            param_names: vec!["b".into(), "s".into(), "w".into()],
+            grad_names: vec!["b".into(), "w".into()],
+            roles,
+            shapes,
+            layer_meta: Vec::new(),
+        }
+    }
+
+    #[test]
+    fn decay_hits_weights_only() {
+        let fam = toy_family();
+        let mut params = vec![
+            Tensor::from_f32(&[2], vec![1.0, 1.0]), // b
+            Tensor::from_f32(&[1], vec![5.0]),      // s (state: untouched)
+            Tensor::from_f32(&[2], vec![1.0, 1.0]), // w
+        ];
+        let mut moms = vec![Tensor::zeros(&[2]), Tensor::zeros(&[2])];
+        let grads = vec![Tensor::zeros(&[2]), Tensor::zeros(&[2])];
+        sgd_step(&fam, &mut params, &mut moms, &grads, 1.0, 0.1).unwrap();
+        // bias: zero grad, no decay -> unchanged
+        assert_eq!(params[0].f32s().unwrap(), &[1.0, 1.0]);
+        // state: untouched
+        assert_eq!(params[1].f32s().unwrap(), &[5.0]);
+        // weight: g = 0 + 0.1*1, p = 1 - 1.0*0.1
+        assert!((params[2].f32s().unwrap()[0] - 0.9).abs() < 1e-6);
+    }
+
+    #[test]
+    fn momentum_accumulates() {
+        let fam = toy_family();
+        let mut params = vec![
+            Tensor::from_f32(&[2], vec![0.0, 0.0]),
+            Tensor::from_f32(&[1], vec![0.0]),
+            Tensor::from_f32(&[2], vec![0.0, 0.0]),
+        ];
+        let mut moms = vec![Tensor::zeros(&[2]), Tensor::zeros(&[2])];
+        let grads = vec![
+            Tensor::from_f32(&[2], vec![1.0, 0.0]),
+            Tensor::from_f32(&[2], vec![0.0, 0.0]),
+        ];
+        sgd_step(&fam, &mut params, &mut moms, &grads, 0.1, 0.0).unwrap();
+        sgd_step(&fam, &mut params, &mut moms, &grads, 0.1, 0.0).unwrap();
+        // m1 = 1, m2 = 1.9 -> p = -(0.1 + 0.19)
+        assert!((params[0].f32s().unwrap()[0] + 0.29).abs() < 1e-6);
+        assert!((moms[0].f32s().unwrap()[0] - 1.9).abs() < 1e-6);
+    }
+}

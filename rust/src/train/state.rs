@@ -70,6 +70,25 @@ impl TrainState {
         Ok(&self.params[i])
     }
 
+    /// Replace parameter `name` (used by the native Section-2.1 step-size
+    /// initialization, the in-process mirror of the `init_quant` artifact).
+    pub fn set_param(&mut self, fam: &Family, name: &str, t: Tensor) -> Result<()> {
+        let i = fam
+            .param_names
+            .iter()
+            .position(|n| n == name)
+            .ok_or_else(|| anyhow::anyhow!("no param {name} in {}", self.family))?;
+        if t.numel() != self.params[i].numel() {
+            bail!(
+                "set_param {name}: {} elements, expected {}",
+                t.numel(),
+                self.params[i].numel()
+            );
+        }
+        self.params[i] = t;
+        Ok(())
+    }
+
     pub fn to_checkpoint(&self, fam: &Family) -> Checkpoint {
         let mut ck = Checkpoint::new();
         for (name, t) in fam.param_names.iter().zip(&self.params) {

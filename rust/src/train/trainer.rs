@@ -9,19 +9,19 @@
 //! [teacher], batch, lr, wd) and feeds each step's outputs back as the next
 //! step's inputs. Everything heavier than a memcpy happens inside XLA.
 
-use std::path::{Path, PathBuf};
+use std::path::Path;
 use std::rc::Rc;
 use std::time::Instant;
 
 use anyhow::{bail, Context, Result};
 
 use crate::config::ExperimentConfig;
-use crate::data::{Dataset, Loader};
+use crate::data::Dataset;
 use crate::runtime::{Engine, Executable};
 use crate::tensor::{Checkpoint, Tensor};
-use crate::train::lr::lr_at;
-use crate::train::metrics::{topk_correct, EvalRecord, History, StepRecord};
+use crate::train::metrics::{topk_correct, History};
 use crate::train::state::TrainState;
+use crate::train::{fit_backend, FitReport, TrainBackend};
 
 pub struct Trainer<'e> {
     pub engine: &'e Engine,
@@ -36,13 +36,6 @@ pub struct Trainer<'e> {
     /// overhead; perf target <5% of step time — EXPERIMENTS.md §Perf).
     pub driver_seconds: f64,
     pub exec_seconds: f64,
-}
-
-pub struct FitReport {
-    pub history: History,
-    pub final_top1: f64,
-    pub final_top5: f64,
-    pub checkpoint: PathBuf,
 }
 
 impl<'e> Trainer<'e> {
@@ -143,7 +136,8 @@ impl<'e> Trainer<'e> {
         inputs.push(b.x);
         let out = exe.run(&inputs)?;
         if out.len() != self.state.params.len() {
-            bail!("init_quant returned {} tensors, expected {}", out.len(), self.state.params.len());
+            let want = self.state.params.len();
+            bail!("init_quant returned {} tensors, expected {want}", out.len());
         }
         self.state.params = out;
         Ok(())
@@ -222,107 +216,11 @@ impl<'e> Trainer<'e> {
         ))
     }
 
-    /// The full training run per config; saves history + final checkpoint
+    /// The full training run per config (shared loop, see
+    /// [`crate::train::fit_backend`]); saves history + final checkpoint
     /// under `out_dir/name/`.
     pub fn fit(&mut self) -> Result<FitReport> {
-        let t0 = Instant::now();
-        let batch = self.train_exe.meta.batch;
-        let epochs = self.cfg.train.epochs;
-        let loader = Loader::spawn(&self.cfg.data, batch, epochs, self.cfg.train.seed, 4);
-        let spe = loader.batches_per_epoch.max(1);
-        let wd = self.cfg.train.weight_decay;
-        let max_steps = self.cfg.train.max_steps;
-
-        let mut step_in_run = 0usize;
-        let mut last_eval_epoch = usize::MAX;
-        'outer: for epoch in 0..epochs {
-            let mut ep_loss = 0.0;
-            let mut ep_acc = 0.0;
-            let mut ep_n = 0usize;
-            for _ in 0..spe {
-                let b = match loader.next() {
-                    Some(b) => b,
-                    None => break 'outer,
-                };
-                let lr = lr_at(&self.cfg.train, spe, step_in_run);
-                let (loss, acc) = self.step(b.x, b.y, lr, wd)?;
-                self.history.steps.push(StepRecord {
-                    step: self.state.step,
-                    epoch,
-                    lr,
-                    loss,
-                    acc,
-                });
-                ep_loss += loss;
-                ep_acc += acc;
-                ep_n += 1;
-                step_in_run += 1;
-                if max_steps > 0 && step_in_run >= max_steps {
-                    break 'outer;
-                }
-            }
-            if self.cfg.train.eval_every > 0 && (epoch + 1) % self.cfg.train.eval_every == 0 {
-                let (el, t1, t5) = self.evaluate()?;
-                last_eval_epoch = epoch;
-                self.history.evals.push(EvalRecord {
-                    step: self.state.step,
-                    epoch,
-                    loss: el,
-                    top1: t1,
-                    top5: t5,
-                });
-                if self.verbose {
-                    println!(
-                        "[{}] epoch {:>3}  train loss {:.4} acc {:.3}  |  test loss {:.4} top1 {:.2}% top5 {:.2}%",
-                        self.cfg.name,
-                        epoch,
-                        ep_loss / ep_n.max(1) as f64,
-                        ep_acc / ep_n.max(1) as f64,
-                        el,
-                        t1,
-                        t5
-                    );
-                }
-            } else if self.verbose {
-                println!(
-                    "[{}] epoch {:>3}  train loss {:.4} acc {:.3}",
-                    self.cfg.name,
-                    epoch,
-                    ep_loss / ep_n.max(1) as f64,
-                    ep_acc / ep_n.max(1) as f64
-                );
-            }
-        }
-
-        // Final eval (unless the last epoch was just evaluated).
-        if last_eval_epoch == usize::MAX || self.history.evals.last().map(|e| e.step) != Some(self.state.step)
-        {
-            let (el, t1, t5) = self.evaluate()?;
-            self.history.evals.push(EvalRecord {
-                step: self.state.step,
-                epoch: epochs.saturating_sub(1),
-                loss: el,
-                top1: t1,
-                top5: t5,
-            });
-        }
-        self.history.wall_seconds = t0.elapsed().as_secs_f64();
-
-        let out_dir = PathBuf::from(&self.cfg.out_dir).join(&self.cfg.name);
-        std::fs::create_dir_all(&out_dir)?;
-        let ckpt_path = out_dir.join("final.ckpt");
-        let fam = self.engine.manifest().family(&self.cfg.family())?.clone();
-        self.state.save(&fam, &ckpt_path)?;
-        self.history.save(&out_dir.join("history.json"))?;
-        self.cfg.save(&out_dir.join("config.json"))?;
-
-        let last = self.history.final_eval().cloned().unwrap();
-        Ok(FitReport {
-            history: self.history.clone(),
-            final_top1: last.top1,
-            final_top5: last.top5,
-            checkpoint: ckpt_path,
-        })
+        fit_backend(self)
     }
 
     /// Fraction of loop wall time spent outside XLA execution.
@@ -333,5 +231,44 @@ impl<'e> Trainer<'e> {
         } else {
             self.driver_seconds / total
         }
+    }
+}
+
+impl TrainBackend for Trainer<'_> {
+    fn cfg(&self) -> &ExperimentConfig {
+        &self.cfg
+    }
+
+    fn train_batch(&self) -> usize {
+        self.train_exe.meta.batch
+    }
+
+    fn verbose(&self) -> bool {
+        self.verbose
+    }
+
+    fn state(&self) -> &TrainState {
+        &self.state
+    }
+
+    fn history(&self) -> &History {
+        &self.history
+    }
+
+    fn history_mut(&mut self) -> &mut History {
+        &mut self.history
+    }
+
+    fn step(&mut self, x: Tensor, y: Tensor, lr: f64, wd: f64) -> Result<(f64, f64)> {
+        Trainer::step(self, x, y, lr, wd)
+    }
+
+    fn evaluate(&mut self) -> Result<(f64, f64, f64)> {
+        Trainer::evaluate(self)
+    }
+
+    fn save_checkpoint(&self, path: &Path) -> Result<()> {
+        let fam = self.engine.manifest().family(&self.cfg.family())?.clone();
+        self.state.save(&fam, path)
     }
 }

@@ -1,0 +1,258 @@
+//! Finite-difference gradient checks for the native LSQ backward pass.
+//!
+//! Strategy (see `train::native::grad`): the STE quantizer's hand-written
+//! backward (Eq. 5 data mask, Eq. 3 step gradient) is exactly the
+//! derivative of a *surrogate* `h(v, s) = s·(clip(v/s) + c)` with the
+//! rounding offset `c` frozen at the evaluation point. Central differences
+//! of the surrogate are therefore a legitimate f64 reference wherever the
+//! stencil stays inside one quantization cell — which `safe_gradcheck_point`
+//! guarantees. The full-precision network path (no rounding anywhere) is
+//! additionally checked end-to-end against central differences of the real
+//! training loss, covering the GEMM transposes, the im2col adjoint, batch
+//! norm, pooling and the softmax head.
+
+use lsqnet::quant::lsq::{grad_scale, lsq_vjp, qrange};
+use lsqnet::runtime::native::fixture::{write_synthetic_family, FixtureSpec};
+use lsqnet::runtime::Manifest;
+use lsqnet::train::native::grad::{central_diff, lsq_surrogate_f64, safe_gradcheck_point};
+use lsqnet::train::native::NativeTrainModel;
+use lsqnet::util::rng::Pcg32;
+
+fn tmp_dir(tag: &str) -> std::path::PathBuf {
+    std::env::temp_dir().join(format!("lsq_gradcheck_{tag}_{}", std::process::id()))
+}
+
+fn rel_err(got: f64, want: f64) -> f64 {
+    (got - want).abs() / want.abs().max(1e-6)
+}
+
+/// The satellite check: ∂L/∂v and ∂L/∂s of the LSQ quantizer against f64
+/// central differences of the STE-consistent surrogate, at 2/3/4/8 bits,
+/// signed and unsigned, for both quantizer roles (weights: N = element
+/// count; activations: N = trailing feature count). rel-err < 1e-2.
+#[test]
+fn lsq_vjp_matches_central_differences() {
+    const MARGIN: f64 = 0.05;
+    for bits in [2u32, 3, 4, 8] {
+        for signed in [true, false] {
+            let (qn, qp) = qrange(bits, signed);
+            for (role, n_items) in [("weight", 96usize), ("activation", 16usize)] {
+                let mut rng = Pcg32::seeded(2_000 + bits as u64 * 31 + signed as u64 * 7);
+                let s = 0.17f32 + 0.05 * bits as f32;
+                let n = 96usize;
+                let v: Vec<f32> = (0..n)
+                    .map(|_| {
+                        if signed {
+                            rng.normal() * 0.8
+                        } else {
+                            rng.normal().abs() * 0.8
+                        }
+                    })
+                    .collect();
+                let cot: Vec<f32> = (0..n).map(|_| rng.normal()).collect();
+                let g = grad_scale(n_items, qp);
+                let (gv, gs) = lsq_vjp(&v, s, qn, qp, g, &cot);
+
+                // ∂L/∂v per element (only where the frozen offset is valid)
+                let mut checked = 0usize;
+                for i in 0..n {
+                    let (vi, si) = (v[i] as f64, s as f64);
+                    if !safe_gradcheck_point(vi, si, qn, qp, MARGIN) {
+                        continue;
+                    }
+                    let h = MARGIN * si / 8.0;
+                    let num = cot[i] as f64
+                        * central_diff(
+                            |x| lsq_surrogate_f64(x, si, vi, si, qn, qp),
+                            vi,
+                            h,
+                        );
+                    let got = gv[i] as f64;
+                    assert!(
+                        rel_err(got, num) < 1e-2 || (got - num).abs() < 1e-5,
+                        "bits={bits} signed={signed} role={role} dv[{i}]: {got} vs {num}"
+                    );
+                    checked += 1;
+                }
+                assert!(checked > n / 2, "too few safe points: {checked}/{n}");
+
+                // ∂L/∂s: sum the numeric per-element terms over the safe
+                // subset and compare against the analytic sum restricted
+                // to the same subset (scaled by g).
+                let mut num_ds = 0.0f64;
+                let mut ana_ds = 0.0f64;
+                for i in 0..n {
+                    let (vi, si) = (v[i] as f64, s as f64);
+                    if !safe_gradcheck_point(vi, si, qn, qp, MARGIN) {
+                        continue;
+                    }
+                    let r = (vi / si).abs().max(1.0);
+                    let h = MARGIN * si / (8.0 * r);
+                    num_ds += cot[i] as f64
+                        * central_diff(
+                            |sx| lsq_surrogate_f64(vi, sx, vi, si, qn, qp),
+                            si,
+                            h,
+                        );
+                    ana_ds += cot[i] as f64
+                        * lsqnet::quant::lsq::grad_s_term(v[i], s, qn, qp) as f64;
+                }
+                let num_ds = num_ds * g;
+                let ana_ds = ana_ds * g;
+                assert!(
+                    rel_err(ana_ds, num_ds) < 1e-2,
+                    "bits={bits} signed={signed} role={role} ds: {ana_ds} vs {num_ds}"
+                );
+                // and the full analytic reduction is finite + uses g
+                assert!(gs.is_finite(), "bits={bits}");
+            }
+        }
+    }
+}
+
+/// The Eq. 5 mask by name: the STE passes the cotangent untouched strictly
+/// inside the clip range and zeroes it outside, at every width.
+#[test]
+fn ste_passes_inside_clip_range_and_zeroes_outside() {
+    for bits in [2u32, 3, 4, 8] {
+        for signed in [true, false] {
+            let (qn, qp) = qrange(bits, signed);
+            let s = 0.5f32;
+            // strictly inside, exactly at both clips, far outside
+            let inside = 0.5 * s * (qp.max(1) as f32 - 0.49);
+            let v = [inside, -(qn as f32) * s - 1.0, (qp as f32) * s + 1.0];
+            let cot = [0.7f32, 0.7, 0.7];
+            let (gv, _) = lsq_vjp(&v, s, qn, qp, 1.0, &cot);
+            assert_eq!(gv[0], 0.7, "bits={bits} signed={signed} inside");
+            assert_eq!(gv[1], 0.0, "bits={bits} signed={signed} below");
+            assert_eq!(gv[2], 0.0, "bits={bits} signed={signed} above");
+        }
+    }
+}
+
+/// Network-level check on the full-precision (q32) path, where the real
+/// training loss is differentiable: `loss_and_grads` vs central
+/// differences of the loss itself, for every parameter kind the backward
+/// touches (conv/dense weights, biases, BN γ/β) across both tested archs.
+#[test]
+fn network_grads_match_central_differences_fp32() {
+    for model in ["mlp", "cnn_small"] {
+        let dir = tmp_dir(model);
+        std::fs::remove_dir_all(&dir).ok();
+        let spec = FixtureSpec { image: 8, channels: 3, num_classes: 5, batch: 2, seed: 31 };
+        let family = write_synthetic_family(&dir, model, 32, spec).unwrap();
+        let manifest = Manifest::load(&dir).unwrap();
+        let fam = manifest.family(&family).unwrap().clone();
+        let mut params = manifest.load_initial_params(&family).unwrap();
+        let net = NativeTrainModel::build(&manifest, &family, "lsq", "full").unwrap();
+
+        let rows = 2usize;
+        let mut rng = Pcg32::seeded(77);
+        let x: Vec<f32> = (0..rows * net.image_len()).map(|_| rng.normal()).collect();
+        let y = vec![1i32, 3];
+
+        let out = net.loss_and_grads(&params, &x, &y, rows).unwrap();
+        assert!(out.loss.is_finite());
+
+        // Map grad slots back to parameter indices.
+        let gidx_of: Vec<usize> = fam
+            .grad_names
+            .iter()
+            .map(|n| fam.param_names.iter().position(|p| p == n).unwrap())
+            .collect();
+
+        // Directional check per tensor: perturb along the *normalized
+        // analytic gradient* u = g/|g|; if the backward is correct, the
+        // directional derivative dL/dt of L(θ + t·u) at t = 0 equals |g|.
+        // This aggregates the whole tensor into one large-signal number,
+        // which is what makes an f32 forward finite-differenceable.
+        let mut checked = 0usize;
+        for (gi, gname) in fam.grad_names.iter().enumerate() {
+            let pi = gidx_of[gi];
+            let g: Vec<f64> = out.grads[gi].f32s().unwrap().iter().map(|&v| v as f64).collect();
+            let norm = g.iter().map(|v| v * v).sum::<f64>().sqrt();
+            if norm < 1e-3 {
+                continue; // too small for f32 finite differences
+            }
+            let u: Vec<f32> = g.iter().map(|&v| (v / norm) as f32).collect();
+            let orig = params[pi].f32s().unwrap().to_vec();
+            let mut loss_at = |t: f32| -> f64 {
+                {
+                    let p = params[pi].f32s_mut().unwrap();
+                    for (pv, (&o, &uv)) in p.iter_mut().zip(orig.iter().zip(&u)) {
+                        *pv = o + t * uv;
+                    }
+                }
+                let l = net.loss_and_grads(&params, &x, &y, rows).unwrap().loss;
+                let p = params[pi].f32s_mut().unwrap();
+                p.copy_from_slice(&orig);
+                l
+            };
+            let h = 0.02f32;
+            let num = (8.0 * (loss_at(h) - loss_at(-h)) - (loss_at(2.0 * h) - loss_at(-2.0 * h)))
+                / (12.0 * h as f64);
+            assert!(
+                rel_err(norm, num) < 1e-2,
+                "{model} {gname}: |g| = {norm} vs directional derivative {num}"
+            );
+            checked += 1;
+        }
+        assert!(checked >= 3, "{model}: only {checked} gradient tensors were checkable");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}
+
+/// Quantized-path plumbing check: the step-size gradients must scale by
+/// exactly `g = 1/√(N·Qp)` relative to the unscaled mode — with N the
+/// *weight count* for `sw` and the *trailing feature count* for `sa`
+/// (mirroring `layers._quantize_pair`). Run on cnn_small so interior
+/// layers carry real 2-bit quantizers.
+#[test]
+fn gscale_uses_weight_count_for_sw_and_feature_count_for_sa() {
+    let dir = tmp_dir("gscale");
+    std::fs::remove_dir_all(&dir).ok();
+    let spec = FixtureSpec { image: 8, channels: 3, num_classes: 5, batch: 2, seed: 5 };
+    let family = write_synthetic_family(&dir, "cnn_small", 2, spec).unwrap();
+    let manifest = Manifest::load(&dir).unwrap();
+    let fam = manifest.family(&family).unwrap().clone();
+    let params = manifest.load_initial_params(&family).unwrap();
+
+    let full = NativeTrainModel::build(&manifest, &family, "lsq", "full").unwrap();
+    let one = NativeTrainModel::build(&manifest, &family, "lsq", "one").unwrap();
+
+    let rows = 2usize;
+    let mut rng = Pcg32::seeded(11);
+    let x: Vec<f32> = (0..rows * full.image_len()).map(|_| rng.normal()).collect();
+    let y = vec![0i32, 2];
+    let gf = full.loss_and_grads(&params, &x, &y, rows).unwrap().grads;
+    let go = one.loss_and_grads(&params, &x, &y, rows).unwrap().grads;
+
+    // conv2 is an interior layer: true 2-bit quantizers.
+    let bits_of = |name: &str| fam.layer_meta.iter().find(|l| l.name == name).unwrap().bits;
+    assert_eq!(bits_of("conv2"), 2);
+    let slot = |n: &str| fam.grad_names.iter().position(|g| g == n).unwrap();
+    let wlen = 3 * 3 * 16 * 32; // conv2 HWIO weight count
+
+    let sw_full = gf[slot("conv2.sw")].f32s().unwrap()[0] as f64;
+    let sw_one = go[slot("conv2.sw")].f32s().unwrap()[0] as f64;
+    let (_, qp_w) = qrange(2, true);
+    let want_w = 1.0 / ((wlen as f64) * qp_w as f64).sqrt();
+    assert!(sw_one.abs() > 1e-12, "sw gradient vanished");
+    assert!(
+        rel_err(sw_full / sw_one, want_w) < 1e-3,
+        "sw scale: {} vs {want_w}",
+        sw_full / sw_one
+    );
+
+    let sa_full = gf[slot("conv2.sa")].f32s().unwrap()[0] as f64;
+    let sa_one = go[slot("conv2.sa")].f32s().unwrap()[0] as f64;
+    let (_, qp_a) = qrange(2, false); // conv2 input is post-ReLU: unsigned
+    let want_a = 1.0 / (16.0 * qp_a as f64).sqrt(); // N = in_ch = 16
+    assert!(sa_one.abs() > 1e-12, "sa gradient vanished");
+    assert!(
+        rel_err(sa_full / sa_one, want_a) < 1e-3,
+        "sa scale: {} vs {want_a}",
+        sa_full / sa_one
+    );
+    std::fs::remove_dir_all(&dir).ok();
+}

@@ -26,6 +26,7 @@ fn quick_cfg(bits: u32) -> ExperimentConfig {
     let mut cfg = ExperimentConfig::default();
     cfg.model = "cnn_small".into();
     cfg.bits = bits;
+    cfg.backend = "xla".into(); // this whole suite drives the AOT artifacts
     cfg.name = format!("it_q{bits}");
     cfg.out_dir = std::env::temp_dir()
         .join(format!("lsq_it_{}", std::process::id()))
@@ -284,7 +285,7 @@ fn serve_round_trip_and_batching() {
     std::thread::scope(|s| {
         let hs: Vec<_> = (0..4)
             .map(|t| {
-                let c = server.client.clone();
+                let c = server.client();
                 let spec = &spec;
                 s.spawn(move || {
                     (0..10)
@@ -320,7 +321,7 @@ fn serve_rejects_bad_image_size() {
         replicas: 1,
     })
     .unwrap();
-    assert!(server.client.submit(vec![0.0; 7]).is_err());
+    assert!(server.client().submit(vec![0.0; 7]).is_err());
     server.stop();
 }
 

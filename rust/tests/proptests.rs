@@ -33,6 +33,60 @@ fn rand_vals(rng: &mut Pcg32, n: usize, scale: f32) -> Vec<f32> {
     (0..n).map(|_| rng.normal() * scale).collect()
 }
 
+/// Independent f64 reference for round-half-to-even (different algorithm
+/// from the f32 implementation under test: floor + fractional comparison).
+fn ref_round_ties_even(x: f64) -> f64 {
+    let f = x.floor();
+    let diff = x - f;
+    if diff > 0.5 {
+        f + 1.0
+    } else if diff < 0.5 {
+        f
+    } else if (f as i64) % 2 == 0 {
+        f
+    } else {
+        f + 1.0
+    }
+}
+
+#[test]
+fn prop_round_ties_even_matches_f64_reference() {
+    // Random floats across magnitudes, plus a dense sweep of exact .5
+    // ties — including negative ones like -2.5, where the hand-rolled
+    // `(f as i64) % 2` trick must still pick the even neighbour.
+    forall("round_ties_even", |rng| {
+        for _ in 0..32 {
+            let scale = [0.1f32, 1.0, 100.0, 1e6][rng.below(4) as usize];
+            let x = rng.normal() * scale;
+            let got = round_ties_even(x);
+            let want = ref_round_ties_even(x as f64) as f32;
+            assert_eq!(got, want, "x={x}");
+        }
+        // exact ties: n + 0.5 for n in [-64, 64)
+        let n = rng.below(128) as i32 - 64;
+        let x = n as f32 + 0.5;
+        let got = round_ties_even(x);
+        let want = ref_round_ties_even(x as f64) as f32;
+        assert_eq!(got, want, "tie x={x}");
+        assert_eq!(got as i64 % 2, 0, "tie x={x} rounded to odd {got}");
+    });
+}
+
+#[test]
+fn round_ties_even_negative_tie_cases() {
+    // The explicit boundary cases the ISSUE calls out.
+    for (x, want) in [
+        (-0.5f32, 0.0f32),
+        (-1.5, -2.0),
+        (-2.5, -2.0),
+        (-3.5, -4.0),
+        (2.5, 2.0),
+        (3.5, 4.0),
+    ] {
+        assert_eq!(round_ties_even(x), want, "x={x}");
+    }
+}
+
 #[test]
 fn prop_quantized_values_lie_on_grid_within_range() {
     forall("on_grid", |rng| {

@@ -1,0 +1,224 @@
+//! End-to-end tests of the native (no-XLA) training subsystem: fixture
+//! convergence at 2/3/4 bits for mlp + cnn_small, the acceptance run (mlp
+//! at 3 bits to ≥90% train accuracy), the fp32-pretrain → quantized
+//! fine-tune protocol with Section-2.1 step re-initialization, and
+//! state/checkpoint invariants. These are the numbers EXPERIMENTS.md
+//! §Train reports.
+
+use std::path::PathBuf;
+
+use lsqnet::config::{DataConfig, ExperimentConfig, Schedule};
+use lsqnet::quant::lsq::{qrange, step_init};
+use lsqnet::runtime::native::fixture::{write_synthetic_family, FixtureSpec};
+use lsqnet::runtime::Manifest;
+use lsqnet::train::NativeTrainer;
+
+fn tmp_dir(tag: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("lsq_train_native_{tag}_{}", std::process::id()))
+}
+
+/// A small-but-real training config over a fixture family in `dir`.
+fn base_cfg(dir: &PathBuf, model: &str, bits: u32, name: &str) -> ExperimentConfig {
+    let mut cfg = ExperimentConfig::default();
+    cfg.name = name.to_string();
+    cfg.model = model.to_string();
+    cfg.bits = bits;
+    cfg.backend = "native".to_string();
+    cfg.artifacts_dir = dir.to_string_lossy().to_string();
+    cfg.out_dir = dir.join("runs").to_string_lossy().to_string();
+    cfg.data = DataConfig {
+        train_size: 128,
+        test_size: 64,
+        classes: 10,
+        noise: 0.25,
+        seed: 9,
+        augment: false,
+    };
+    cfg.train.seed = 4;
+    cfg.train.eval_every = 0; // final eval only — keep the tests fast
+    cfg
+}
+
+/// Acceptance run: the synthetic-fixture mlp at 3 bits must reach ≥90%
+/// train accuracy within the fixture budget (240 optimizer steps).
+#[test]
+fn mlp_q3_reaches_90pct_train_accuracy() {
+    let dir = tmp_dir("mlp90");
+    std::fs::remove_dir_all(&dir).ok();
+    let spec = FixtureSpec { batch: 32, ..FixtureSpec::default() };
+    write_synthetic_family(&dir, "mlp", 3, spec).unwrap();
+
+    let mut cfg = base_cfg(&dir, "mlp", 3, "mlp_q3_native");
+    cfg.train.epochs = 60; // 128/32 = 4 steps/epoch -> 240 steps
+    cfg.train.lr = 0.02;
+    cfg.train.weight_decay = 0.5e-4;
+    cfg.train.schedule = Schedule::Cosine;
+
+    let mut tr = NativeTrainer::new(cfg).unwrap();
+    tr.verbose = false;
+    let rep = tr.fit().unwrap();
+
+    let steps = &rep.history.steps;
+    assert!(steps.len() >= 200, "expected a full run, got {} steps", steps.len());
+    let tail = &steps[steps.len() - 30..];
+    let train_acc = tail.iter().map(|s| s.acc).sum::<f64>() / tail.len() as f64;
+    assert!(
+        train_acc >= 0.90,
+        "mlp q3 train accuracy {train_acc:.3} < 0.90 over the last 30 steps"
+    );
+    assert!(rep.history.final_eval().is_some());
+    assert!(rep.checkpoint.exists());
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Convergence smoke across the quantized grid: for mlp and cnn_small at
+/// 2/3/4 bits, 16 native optimizer steps must reduce the training loss
+/// from its first-step value and keep everything finite.
+#[test]
+fn mlp_and_cnn_small_converge_at_2_3_4_bits() {
+    for model in ["mlp", "cnn_small"] {
+        let dir = tmp_dir(&format!("conv_{model}"));
+        std::fs::remove_dir_all(&dir).ok();
+        let spec = FixtureSpec { batch: 16, ..FixtureSpec::default() };
+        for bits in [2u32, 3, 4] {
+            write_synthetic_family(&dir, model, bits, spec).unwrap();
+            let mut cfg = base_cfg(&dir, model, bits, &format!("{model}_q{bits}"));
+            cfg.data.train_size = 64;
+            cfg.data.test_size = 32;
+            cfg.train.epochs = 4;
+            cfg.train.max_steps = 16;
+            cfg.train.lr = if model == "mlp" { 0.02 } else { 0.01 };
+            let mut tr = NativeTrainer::new(cfg).unwrap();
+            tr.verbose = false;
+            let rep = tr.fit().unwrap();
+            let steps = &rep.history.steps;
+            assert_eq!(steps.len(), 16, "{model} q{bits}");
+            let first = steps[0].loss;
+            let recent = rep.history.recent_loss(4);
+            assert!(
+                recent < first,
+                "{model} q{bits}: loss did not decrease ({first:.4} -> {recent:.4})"
+            );
+            assert!(steps.iter().all(|s| s.loss.is_finite()), "{model} q{bits}");
+            assert!(rep.final_top1.is_finite(), "{model} q{bits}");
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}
+
+/// The paper protocol natively: fp32 pretrain, then quantized fine-tune
+/// from that checkpoint with Section-2.1 step-size re-initialization —
+/// `sw = 2⟨|w|⟩/√Qp` over the *loaded* weights, `sa` from the first batch.
+#[test]
+fn fp32_pretrain_then_quantized_finetune_reinits_steps() {
+    let dir = tmp_dir("protocol");
+    std::fs::remove_dir_all(&dir).ok();
+    let spec = FixtureSpec { batch: 16, ..FixtureSpec::default() };
+    // Both families merge into one fixture manifest.
+    write_synthetic_family(&dir, "mlp", 32, spec).unwrap();
+    let fam3 = write_synthetic_family(&dir, "mlp", 3, spec).unwrap();
+
+    let mut cfg32 = base_cfg(&dir, "mlp", 32, "mlp_q32");
+    cfg32.data.train_size = 64;
+    cfg32.train.epochs = 1;
+    cfg32.train.max_steps = 10;
+    cfg32.train.lr = 0.02;
+    let mut tr32 = NativeTrainer::new(cfg32).unwrap();
+    tr32.verbose = false;
+    let rep32 = tr32.fit().unwrap();
+    assert!(rep32.checkpoint.exists());
+
+    let mut cfg3 = base_cfg(&dir, "mlp", 3, "mlp_q3_ft");
+    cfg3.data.train_size = 64;
+    cfg3.train.epochs = 1;
+    cfg3.train.max_steps = 4;
+    cfg3.init_from = rep32.checkpoint.to_string_lossy().to_string();
+    let tr3 = NativeTrainer::new(cfg3).unwrap();
+
+    // The fine-tune state carries the pretrained weights and re-derived
+    // step sizes (mlp layers are pinned to 8 bits: Qp = 127).
+    let manifest = Manifest::load(&dir).unwrap();
+    let fam = manifest.family(&fam3).unwrap();
+    let w = tr3.state.param(fam, "fc1.w").unwrap().f32s().unwrap();
+    let (_, qp) = qrange(8, true);
+    let want_sw = step_init(w, qp);
+    let sw = tr3.state.param(fam, "fc1.sw").unwrap().item_f32().unwrap();
+    assert!(
+        (sw - want_sw).abs() < 1e-6 * want_sw.abs().max(1e-6),
+        "sw {sw} != 2<|w|>/sqrt(Qp) = {want_sw}"
+    );
+    for name in ["fc1.sa", "fc2.sa", "fc2.sw"] {
+        let s = tr3.state.param(fam, name).unwrap().item_f32().unwrap();
+        assert!(s > 0.0, "{name} = {s} not positive after init");
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// One native step must touch everything a train step owns: parameters
+/// move, momentum becomes non-zero, BN running stats leave their init, and
+/// the step sizes themselves receive gradient (the paper's core claim).
+#[test]
+fn native_step_updates_params_momentum_bn_state_and_steps() {
+    let dir = tmp_dir("stepfx");
+    std::fs::remove_dir_all(&dir).ok();
+    let spec = FixtureSpec { batch: 8, ..FixtureSpec::default() };
+    write_synthetic_family(&dir, "cnn_small", 4, spec).unwrap();
+    let mut cfg = base_cfg(&dir, "cnn_small", 4, "cnn_q4_step");
+    cfg.data.train_size = 16;
+    let mut tr = NativeTrainer::new(cfg).unwrap();
+    tr.verbose = false;
+
+    let manifest = Manifest::load(&dir).unwrap();
+    let fam = manifest.family("cnn_small_q4").unwrap().clone();
+    let sw_before = tr.state.param(&fam, "conv2.sw").unwrap().item_f32().unwrap();
+    let w_before = tr.state.param(&fam, "conv2.w").unwrap().f32s().unwrap().to_vec();
+    let rmean_before = tr.state.param(&fam, "bn1.rmean").unwrap().f32s().unwrap().to_vec();
+
+    let ds = lsqnet::data::Dataset::train(&tr.cfg.data);
+    let b = ds.batch_from_indices(&[0, 1, 2, 3, 4, 5, 6, 7], 8);
+    let (loss, acc) = tr.step(b.x, b.y, 0.05, 1e-4).unwrap();
+    assert!(loss.is_finite() && (0.0..=1.0).contains(&acc));
+    assert_eq!(tr.state.step, 1);
+
+    let sw_after = tr.state.param(&fam, "conv2.sw").unwrap().item_f32().unwrap();
+    let w_after = tr.state.param(&fam, "conv2.w").unwrap().f32s().unwrap();
+    let rmean_after = tr.state.param(&fam, "bn1.rmean").unwrap().f32s().unwrap();
+    assert_ne!(sw_before, sw_after, "step size received no gradient");
+    assert!(sw_after > 0.0);
+    assert_ne!(w_before, w_after, "weights did not move");
+    assert_ne!(rmean_before, rmean_after, "BN running mean not updated");
+    assert!(tr.state.moms.iter().any(|m| {
+        m.f32s().map(|v| v.iter().any(|&x| x != 0.0)).unwrap_or(false)
+    }));
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Checkpoint → reload → evaluate must be bit-stable: the saved fine-tune
+/// state reloads into an identical eval (EXPERIMENTS.md §E2E item b).
+#[test]
+fn checkpoint_reloads_to_identical_eval() {
+    let dir = tmp_dir("ckpt");
+    std::fs::remove_dir_all(&dir).ok();
+    let spec = FixtureSpec { batch: 16, ..FixtureSpec::default() };
+    write_synthetic_family(&dir, "mlp", 4, spec).unwrap();
+    let mut cfg = base_cfg(&dir, "mlp", 4, "mlp_q4_ck");
+    cfg.data.train_size = 64;
+    cfg.data.test_size = 32;
+    cfg.train.epochs = 1;
+    cfg.train.max_steps = 6;
+    cfg.train.lr = 0.02;
+    let mut tr = NativeTrainer::new(cfg.clone()).unwrap();
+    tr.verbose = false;
+    let rep = tr.fit().unwrap();
+    let (l1, t1a, t5a) = tr.evaluate().unwrap();
+
+    let mut cfg2 = cfg;
+    cfg2.init_from = rep.checkpoint.to_string_lossy().to_string();
+    let mut tr2 = NativeTrainer::new(cfg2).unwrap();
+    tr2.verbose = false;
+    let (l2, t1b, t5b) = tr2.evaluate().unwrap();
+    assert_eq!(t1a, t1b);
+    assert_eq!(t5a, t5b);
+    assert!((l1 - l2).abs() < 1e-12, "{l1} vs {l2}");
+    std::fs::remove_dir_all(&dir).ok();
+}
