@@ -21,12 +21,21 @@ cargo test --release -q --test grad_check
 echo "== tests (unit + native backend + native training + proptests + doctests) =="
 cargo test -q
 
+echo "== kernel determinism (re-run the thread-parity/workspace suite with"
+echo "   every kernel forced serial: threaded and serial must agree) =="
+LSQNET_THREADS=1 cargo test --release -q --test kernels
+
 echo "== clippy (warnings are errors; missing_docs stays advisory while"
 echo "   the long-tail rustdoc pass is in flight — see ROADMAP) =="
 cargo clippy --all-targets -- -D warnings -A missing_docs
 
 echo "== rustdoc (docs must build; broken intra-doc links are errors) =="
 RUSTDOCFLAGS="-D rustdoc::broken-intra-doc-links" cargo doc --no-deps --quiet
+
+echo "== gemm bench smoke (EXPERIMENTS.md §Perf L1; fast mode writes"
+echo "   target/BENCH_native_gemm_fast.json — the repo-root trajectory file"
+echo "   BENCH_native_gemm.json comes from a plain 'cargo bench --bench gemm') =="
+LSQNET_BENCH_FAST=1 cargo bench --bench gemm
 
 echo "== serve bench smoke (EXPERIMENTS.md §Perf L3, native, 2 replicas) =="
 LSQNET_BENCH_FAST=1 cargo bench --bench serve

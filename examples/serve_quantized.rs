@@ -18,8 +18,8 @@ use std::time::Duration;
 
 use lsqnet::data::SynthSpec;
 use lsqnet::quant::pack::quantize_and_pack;
+use lsqnet::runtime::kernels::{qgemm, Workspace};
 use lsqnet::runtime::native::fixture::{write_synthetic_family, FixtureSpec};
-use lsqnet::runtime::native::gemm::qgemm;
 use lsqnet::runtime::{BackendKind, BackendSpec};
 use lsqnet::serve::{Server, ServerConfig};
 use lsqnet::util::cli::Args;
@@ -66,6 +66,7 @@ fn main() -> anyhow::Result<()> {
         max_wait: Duration::from_millis(args.u64("max-wait-ms", 2)),
         queue_depth: 512,
         replicas,
+        intra_threads: args.usize("intra-threads", 0),
     })?;
 
     let spec = SynthSpec::new(10, 0.35, 7);
@@ -127,10 +128,11 @@ fn main() -> anyhow::Result<()> {
     let packed = quantize_and_pack(&w, sw, 2, true)?;
     let xbar: Vec<i32> = (0..m * k).map(|_| rng.below(4) as i32).collect();
     let mut out = vec![0.0f32; m * nn];
+    let mut ws = Workspace::new();
     let t1 = std::time::Instant::now();
     let iters = 50;
     for _ in 0..iters {
-        qgemm(m, k, nn, &xbar, &packed, sa * sw, None, &mut out);
+        qgemm(&mut ws, m, k, nn, &xbar, &packed, sa * sw, None, &mut out);
     }
     let ms = t1.elapsed().as_secs_f64() * 1e3 / iters as f64;
     // cross-check one entry against integer math on the host

@@ -1,0 +1,125 @@
+//! Kernel-layer GEMM benchmarks (EXPERIMENTS.md §Perf L1): GFLOP/s for the
+//! fused unpack-and-dot `qgemm` at every packed width and for the fp32
+//! `sgemm`, each measured single-thread and at the hardware thread count —
+//! the intra-op scaling the unified kernel layer exists to deliver.
+//!
+//! Writes the machine-readable perf-trajectory file
+//! `BENCH_native_gemm.json` at the repository root (regenerate with
+//! `cargo bench --bench gemm`). Under `LSQNET_BENCH_FAST=1` (the CI
+//! smoke) shapes shrink, so output goes to
+//! `rust/target/BENCH_native_gemm_fast.json` — it neither clobbers the
+//! full-run trajectory nor dirties the working tree. Units are FLOPs
+//! (2·m·k·n per call), so `units_per_sec` is FLOP/s.
+//!
+//! The threaded rows are labeled `t{effective width}` — `LSQNET_THREADS`
+//! caps them too (and the label reflects it), so run without that env to
+//! measure real hardware scaling.
+
+use std::path::Path;
+
+use lsqnet::quant::pack::quantize_and_pack;
+use lsqnet::runtime::kernels::{
+    hardware_threads, qgemm, sgemm, Workspace, QGEMM_MIN_ROWS_PER_THREAD,
+};
+use lsqnet::util::bench::{black_box, Bench};
+use lsqnet::util::rng::Pcg32;
+
+/// Bench widths for one kernel: `[1]` when the effective width collapses
+/// to serial (single core, `LSQNET_THREADS=1`, or a kernel-side floor),
+/// else `[1, width]` — never two identical rows in the trajectory JSON.
+fn widths(effective: usize) -> Vec<usize> {
+    if effective > 1 {
+        vec![1, effective]
+    } else {
+        vec![1]
+    }
+}
+
+fn main() {
+    let fast = std::env::var("LSQNET_BENCH_FAST").is_ok();
+    let (m, k, n) = if fast {
+        (128usize, 256usize, 128usize)
+    } else {
+        (256, 512, 256)
+    };
+    let flops = (2 * m * k * n) as f64;
+    // Effective parallel width: hardware, capped by LSQNET_THREADS. The
+    // "tN" rows are labeled with this number so the JSON is
+    // self-describing — an env-capped run can never masquerade as
+    // full-hardware scaling.
+    let hw = hardware_threads();
+    let nt = Workspace::new().threads();
+    if nt < hw {
+        println!("note: LSQNET_THREADS caps intra-op width at {nt} (hardware {hw})");
+    }
+    let mut b = Bench::new("native_gemm");
+
+    // Activations on the unsigned Eq. 1 grid, mostly nonzero (the
+    // zero-skip fast path is a workload property, not one to bench here).
+    let mut rng = Pcg32::seeded(4);
+
+    let mut speedups: Vec<(String, f64)> = Vec::new();
+    for bits in [2u32, 3, 4, 8] {
+        let w: Vec<f32> = (0..k * n).map(|_| rng.normal() * 0.4).collect();
+        let packed = quantize_and_pack(&w, 0.05, bits, true).unwrap();
+        let (_, qp) = lsqnet::quant::lsq::qrange(bits, false);
+        let x: Vec<i32> = (0..m * k).map(|_| 1 + rng.below(qp as u32) as i32).collect();
+        let mut out = vec![0.0f32; m * n];
+
+        // qgemm additionally floors rows-per-thread, so label with the
+        // width the kernel will actually run, not the workspace cap.
+        let qt = nt.min((m / QGEMM_MIN_ROWS_PER_THREAD).max(1));
+        let mut per_threads = Vec::new();
+        for threads in widths(qt) {
+            let mut ws = Workspace::with_threads(threads);
+            let name = format!("qgemm_{bits}bit_{m}x{k}x{n}_t{threads}");
+            let r = b.bench_units(&name, flops, || {
+                let p = black_box(&packed);
+                qgemm(&mut ws, m, k, n, black_box(&x), p, 0.01, None, &mut out);
+                black_box(&out);
+            });
+            per_threads.push(r.throughput());
+        }
+        if per_threads.len() == 2 {
+            speedups.push((format!("qgemm_{bits}bit"), per_threads[1] / per_threads[0]));
+        }
+    }
+
+    // fp32 reference: the fake-quant training matmul / bits>=32 layers.
+    let xf: Vec<f32> = (0..m * k).map(|_| rng.normal()).collect();
+    let wf: Vec<f32> = (0..k * n).map(|_| rng.normal()).collect();
+    let mut out = vec![0.0f32; m * n];
+    let mut per_threads = Vec::new();
+    for threads in widths(nt) {
+        let mut ws = Workspace::with_threads(threads);
+        let r = b.bench_units(&format!("sgemm_{m}x{k}x{n}_t{threads}"), flops, || {
+            sgemm(&mut ws, m, k, n, black_box(&xf), black_box(&wf), None, &mut out);
+            black_box(&out);
+        });
+        per_threads.push(r.throughput());
+    }
+    if per_threads.len() == 2 {
+        speedups.push(("sgemm".to_string(), per_threads[1] / per_threads[0]));
+    }
+
+    for (name, s) in &speedups {
+        println!("{name:<16} threaded speedup over 1-thread: {s:.2}x");
+    }
+
+    b.finish();
+    // Perf-trajectory file at the repository root (rust/ is the package
+    // dir, so the repo root is its parent). Fast-mode (CI smoke) numbers
+    // use smaller shapes and must not clobber the full-run trajectory or
+    // dirty the working tree, so they land under target/ instead; the
+    // per-entry names carry the shapes either way.
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR"));
+    let path = if fast {
+        dir.join("target").join("BENCH_native_gemm_fast.json")
+    } else {
+        dir.join("..").join("BENCH_native_gemm.json")
+    };
+    match b.write_json(&path) {
+        Ok(()) => println!("wrote {}", path.display()),
+        Err(e) => eprintln!("could not write {}: {e}", path.display()),
+    }
+}

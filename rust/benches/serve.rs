@@ -12,8 +12,8 @@ use std::time::Duration;
 
 use lsqnet::data::SynthSpec;
 use lsqnet::quant::pack::quantize_and_pack;
+use lsqnet::runtime::kernels::{qgemm, Workspace};
 use lsqnet::runtime::native::fixture::{write_synthetic_family, FixtureSpec};
-use lsqnet::runtime::native::gemm::qgemm;
 use lsqnet::runtime::{Backend, BackendSpec};
 use lsqnet::serve::{Server, ServerConfig};
 use lsqnet::util::bench::{black_box, Bench};
@@ -56,6 +56,7 @@ fn main() {
         max_wait: Duration::from_millis(2),
         queue_depth: 256,
         replicas: REPLICAS,
+        intra_threads: 0,
     })
     .unwrap();
     let n = if fast { 128 } else { 512 };
@@ -100,8 +101,11 @@ fn main() {
     );
 
     // -- Figure-1 int matmul: the fused unpack-and-dot kernel ----------------
+    // Single-thread rows (the historical L1 baseline); the threaded scaling
+    // story lives in `benches/gemm.rs` / BENCH_native_gemm.json.
     let (m, k, nn) = if fast { (64, 256, 128) } else { (128, 512, 256) };
     let mut rng = Pcg32::seeded(4);
+    let mut ws = Workspace::with_threads(1);
     for bits in [2u32, 4, 8] {
         let w: Vec<f32> = (0..k * nn).map(|_| rng.normal() * 0.4).collect();
         let packed = quantize_and_pack(&w, 0.05, bits, true).unwrap();
@@ -109,7 +113,7 @@ fn main() {
         let xb: Vec<i32> = (0..m * k).map(|_| (rng.below(qp as u32 + 1)) as i32).collect();
         let mut out = vec![0.0f32; m * nn];
         b.bench_units(&format!("qgemm_{bits}bit_{m}x{k}x{nn}"), (m * k * nn) as f64, || {
-            qgemm(m, k, nn, black_box(&xb), black_box(&packed), 0.01, None, &mut out);
+            qgemm(&mut ws, m, k, nn, black_box(&xb), black_box(&packed), 0.01, None, &mut out);
             black_box(&out);
         });
     }

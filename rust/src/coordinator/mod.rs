@@ -17,8 +17,11 @@
 //!   replica model the serve layer uses, see DESIGN.md §Backend-trait).
 //!
 //! XLA:CPU parallelizes single steps across cores, so the default worker
-//! count is deliberately small (oversubscription hurts); the native
-//! trainer is single-threaded per job and scales to more workers.
+//! count is deliberately small (oversubscription hurts). The native
+//! trainer's kernels are multi-threaded too (DESIGN.md §Kernel-layer), so
+//! [`run_sweep_native`] caps each worker's intra-op threads at
+//! `cores / workers` — inter-job and intra-op parallelism share the host
+//! instead of multiplying.
 
 pub mod sweep;
 
@@ -193,14 +196,24 @@ pub fn run_job(engine: &Engine, job: &Job) -> JobResult {
 }
 
 /// Execute one job on the native training backend (no XLA/PJRT). The
-/// trainer reads `manifest.json` from the job's own `artifacts_dir`.
+/// trainer reads `manifest.json` from the job's own `artifacts_dir` and
+/// uses the full hardware thread count for its kernels.
 pub fn run_job_native(job: &Job) -> JobResult {
+    run_job_native_with_threads(job, 0)
+}
+
+/// [`run_job_native`] with a per-worker intra-op kernel-thread cap
+/// (0 = hardware count): a sweep pool of W workers on C cores runs
+/// `W × C/W` compute threads instead of `W × C`
+/// (DESIGN.md §Kernel-layer).
+pub fn run_job_native_with_threads(job: &Job, intra_threads: usize) -> JobResult {
     let t0 = Instant::now();
     finish_job(
         job,
         t0,
         NativeTrainer::new(job.cfg.clone()).and_then(|mut t| {
             t.verbose = false;
+            t.set_intra_op_threads(intra_threads);
             t.fit()
         }),
     )
@@ -300,7 +313,17 @@ pub fn run_sweep(
 }
 
 /// [`run_sweep_pooled`] over the native training backend: every worker
-/// runs [`run_job_native`] jobs. No XLA/PJRT required.
+/// runs [`run_job_native_with_threads`] jobs with intra-op kernel threads
+/// capped at `cores / workers`, so inter-job and intra-op parallelism
+/// never oversubscribe the host together. No XLA/PJRT required.
 pub fn run_sweep_native(jobs: Vec<Job>, workers: usize) -> Result<SweepReport> {
-    run_sweep_pooled(|| Ok(run_job_native as fn(&Job) -> JobResult), jobs, workers)
+    // Mirror run_sweep_pooled's worker clamp so the cap matches the pool
+    // that actually runs.
+    let eff_workers = workers.clamp(1, jobs.len().max(1));
+    let intra = (crate::runtime::kernels::hardware_threads() / eff_workers).max(1);
+    run_sweep_pooled(
+        || Ok(move |job: &Job| run_job_native_with_threads(job, intra)),
+        jobs,
+        workers,
+    )
 }

@@ -50,6 +50,7 @@ COMMANDS
                                                                [needs --features xla]
   serve                    --family cnn_small_q2 [--backend native|xla]
                            [--replicas N] [--checkpoint ck] [--requests N]
+                           [--threads N (intra-op per replica; 0 = cores/replicas)]
   pack                     --checkpoint runs/x/final.ckpt
   help                     this message
 
@@ -470,6 +471,7 @@ fn serve(args: &Args) -> Result<()> {
         max_wait: std::time::Duration::from_millis(args.u64("max-wait-ms", 2)),
         queue_depth: args.usize("queue-depth", 256),
         replicas,
+        intra_threads: args.usize("threads", 0),
     })?;
     println!(
         "serving {family} on {} x{replicas}; firing {n} requests from 4 client threads…",

@@ -74,8 +74,8 @@ pub fn unpack(p: &Packed) -> Vec<i32> {
 }
 
 /// Unpack the `len` values starting at element `start` into `out[..len]`.
-/// This is the tile-granular primitive behind the native backend's fused
-/// unpack-and-dot GEMM ([`crate::runtime::native::gemm::qgemm`]).
+/// This is the tile-granular primitive behind the kernel layer's fused
+/// unpack-and-dot GEMM ([`crate::runtime::kernels::qgemm`]).
 pub fn unpack_range(p: &Packed, start: usize, len: usize, out: &mut [i32]) {
     assert!(start + len <= p.len, "unpack_range out of bounds");
     assert!(out.len() >= len, "unpack_range output too small");

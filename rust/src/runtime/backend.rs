@@ -143,6 +143,13 @@ pub trait Backend {
         true
     }
 
+    /// Cap this engine's intra-op parallelism at `threads` kernel threads
+    /// (0 = hardware count). The serve layer calls this with
+    /// `cores / replicas` so `replicas × intra-op threads` never
+    /// oversubscribes the host (see DESIGN.md §Kernel-layer). Default
+    /// no-op: the XLA runtime manages its own thread pool.
+    fn set_intra_op_threads(&mut self, _threads: usize) {}
+
     /// Run one padded batch: `x` holds `batch() * image_len` floats in NHWC
     /// layout. Returns `batch() * num_classes` logits, row-major.
     fn infer(&mut self, x: &[f32]) -> Result<Vec<f32>>;

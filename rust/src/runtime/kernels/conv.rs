@@ -1,0 +1,169 @@
+//! Convolution lowering primitives shared by inference and training:
+//! SAME-padding geometry, the im2col patch gather, and its adjoint
+//! scatter ([`col2im`], the `dX̂` path of the conv backward).
+
+/// SAME-padding geometry for one spatial dim: returns `(out_size,
+/// pad_before)`, matching XLA's `padding="SAME"` (pad_before = total/2,
+/// rounded down).
+pub fn same_padding(size: usize, kernel: usize, stride: usize) -> (usize, usize) {
+    let out = (size + stride - 1) / stride;
+    let pad_total = ((out - 1) * stride + kernel).saturating_sub(size);
+    (out, pad_total / 2)
+}
+
+/// im2col for NHWC input: writes `b*oh*ow` rows of `kh*kw*c` patch elements
+/// (ordered `(dh, dw, cin)`, matching row-major flattened HWIO weights)
+/// into `out`, zero-padding out-of-bounds taps. Returns `(oh, ow)`.
+///
+/// `out` is cleared and resized — pass a workspace-recycled buffer
+/// ([`super::Workspace::take_f32`] / `take_i32`) so the steady-state call
+/// allocates nothing.
+#[allow(clippy::too_many_arguments)]
+pub fn im2col<T: Copy>(
+    x: &[T],
+    zero: T,
+    b: usize,
+    h: usize,
+    w: usize,
+    c: usize,
+    kh: usize,
+    kw: usize,
+    stride: usize,
+    out: &mut Vec<T>,
+) -> (usize, usize) {
+    assert_eq!(x.len(), b * h * w * c, "input shape");
+    let (oh, pad_t) = same_padding(h, kh, stride);
+    let (ow, pad_l) = same_padding(w, kw, stride);
+    let patch = kh * kw * c;
+    out.clear();
+    out.resize(b * oh * ow * patch, zero);
+    for bi in 0..b {
+        for oy in 0..oh {
+            let iy0 = (oy * stride) as isize - pad_t as isize;
+            for ox in 0..ow {
+                let ix0 = (ox * stride) as isize - pad_l as isize;
+                let row = ((bi * oh + oy) * ow + ox) * patch;
+                for dh in 0..kh {
+                    let iy = iy0 + dh as isize;
+                    if iy < 0 || iy >= h as isize {
+                        continue;
+                    }
+                    for dw in 0..kw {
+                        let ix = ix0 + dw as isize;
+                        if ix < 0 || ix >= w as isize {
+                            continue;
+                        }
+                        let src = ((bi * h + iy as usize) * w + ix as usize) * c;
+                        let dst = row + (dh * kw + dw) * c;
+                        out[dst..dst + c].copy_from_slice(&x[src..src + c]);
+                    }
+                }
+            }
+        }
+    }
+    (oh, ow)
+}
+
+/// Adjoint of [`im2col`]: scatter-accumulate patch-space gradients
+/// `dcols[b*oh*ow × kh*kw*c]` back onto the input image grid
+/// `dx[b×h×w×c]` (which must be pre-zeroed). Taps that fell in the SAME
+/// zero padding are dropped, exactly mirroring the forward gather.
+#[allow(clippy::too_many_arguments)]
+pub fn col2im(
+    dcols: &[f32],
+    b: usize,
+    h: usize,
+    w: usize,
+    c: usize,
+    kh: usize,
+    kw: usize,
+    stride: usize,
+    dx: &mut [f32],
+) {
+    assert_eq!(dx.len(), b * h * w * c, "dx shape");
+    let (oh, pad_t) = same_padding(h, kh, stride);
+    let (ow, pad_l) = same_padding(w, kw, stride);
+    let patch = kh * kw * c;
+    assert_eq!(dcols.len(), b * oh * ow * patch, "dcols shape");
+    for bi in 0..b {
+        for oy in 0..oh {
+            let iy0 = (oy * stride) as isize - pad_t as isize;
+            for ox in 0..ow {
+                let ix0 = (ox * stride) as isize - pad_l as isize;
+                let row = ((bi * oh + oy) * ow + ox) * patch;
+                for dh in 0..kh {
+                    let iy = iy0 + dh as isize;
+                    if iy < 0 || iy >= h as isize {
+                        continue;
+                    }
+                    for dw in 0..kw {
+                        let ix = ix0 + dw as isize;
+                        if ix < 0 || ix >= w as isize {
+                            continue;
+                        }
+                        let dst = ((bi * h + iy as usize) * w + ix as usize) * c;
+                        let src = row + (dh * kw + dw) * c;
+                        for ch in 0..c {
+                            dx[dst + ch] += dcols[src + ch];
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn same_padding_matches_xla() {
+        assert_eq!(same_padding(32, 3, 1), (32, 1));
+        assert_eq!(same_padding(32, 3, 2), (16, 0)); // total pad 1 -> (0, 1)
+        assert_eq!(same_padding(16, 1, 1), (16, 0));
+        assert_eq!(same_padding(16, 1, 2), (8, 0));
+    }
+
+    #[test]
+    fn im2col_identity_kernel() {
+        // 1x1 kernel, stride 1: im2col is the identity.
+        let x: Vec<f32> = (0..2 * 3 * 3 * 2).map(|i| i as f32).collect();
+        let mut out = Vec::new();
+        let (oh, ow) = im2col(&x, 0.0, 2, 3, 3, 2, 1, 1, 1, &mut out);
+        assert_eq!((oh, ow), (3, 3));
+        assert_eq!(out, x);
+    }
+
+    #[test]
+    fn im2col_pads_borders_with_zeros() {
+        // Single 2x2 image, one channel, 3x3 kernel: the center patch sees
+        // all four pixels, corners of the patch are zero padding.
+        let x = vec![1.0f32, 2.0, 3.0, 4.0];
+        let mut out = Vec::new();
+        let (oh, ow) = im2col(&x, 0.0, 1, 2, 2, 1, 3, 3, 1, &mut out);
+        assert_eq!((oh, ow), (2, 2));
+        // Row for output (0,0): taps at (dy-1, dx-1) relative offsets.
+        let r0 = &out[0..9];
+        assert_eq!(r0, &[0.0, 0.0, 0.0, 0.0, 1.0, 2.0, 0.0, 3.0, 4.0]);
+    }
+
+    #[test]
+    fn col2im_is_adjoint_of_im2col() {
+        // <im2col(x), y> == <x, col2im(y)> for random x, y — the defining
+        // property of the transposed scatter, covering padding and stride.
+        let (b, h, w, c, kh, kw) = (2usize, 5usize, 4usize, 3usize, 3usize, 3usize);
+        for stride in [1usize, 2] {
+            let mut rng = crate::util::rng::Pcg32::seeded(23 + stride as u64);
+            let x: Vec<f32> = (0..b * h * w * c).map(|_| rng.normal()).collect();
+            let mut cols = Vec::new();
+            let (oh, ow) = im2col(&x, 0.0f32, b, h, w, c, kh, kw, stride, &mut cols);
+            let y: Vec<f32> = (0..b * oh * ow * kh * kw * c).map(|_| rng.normal()).collect();
+            let fwd: f64 = cols.iter().zip(&y).map(|(a, b)| (a * b) as f64).sum();
+            let mut dx = vec![0.0f32; b * h * w * c];
+            col2im(&y, b, h, w, c, kh, kw, stride, &mut dx);
+            let adj: f64 = x.iter().zip(&dx).map(|(a, b)| (a * b) as f64).sum();
+            assert!((fwd - adj).abs() < 1e-3 * fwd.abs().max(1.0), "stride={stride}");
+        }
+    }
+}

@@ -1,0 +1,528 @@
+//! The GEMM microkernel family — one implementation shared by the
+//! inference forward ([`crate::runtime::native`]) and the training
+//! forward/backward ([`crate::train::native::backward`]).
+//!
+//! * [`qgemm`] — integer GEMM over bit-packed weights, the native datapath
+//!   of the paper's Figure 1: activations quantized to integers per Eq. 1,
+//!   multiply-accumulate in `i32`, one fp32 rescale by `s_a * s_w` (Eq. 2)
+//!   at the end. The weight matrix stays in its [`Packed`] 2/3/4/8-bit
+//!   form; KC×NC tiles are unpacked into a per-thread scratch buffer
+//!   inside the cache-blocked loop ("fused unpack-and-dot"), so the
+//!   full-precision weight matrix never materializes. The inner kernel is
+//!   register-tiled: [`NR`] accumulators stay in registers across the k
+//!   loop.
+//! * [`sgemm`] / [`sgemm_nt`] / [`sgemm_tn`] — the fp32 family used by
+//!   full-precision (bits ≥ 32) layers and by the training tape's
+//!   `dX̂ = dY·Ŵᵀ` / `dŴ = X̂ᵀ·dY` transposes.
+//!
+//! Threading model (DESIGN.md §Kernel-layer): every kernel parallelizes
+//! over *row blocks of the output* with `std::thread::scope`, so each
+//! output element is owned by exactly one thread and accumulated in the
+//! same order as the serial loop. `qgemm` is therefore **bitwise
+//! identical** across thread counts (i32 addition is exact), and the fp32
+//! family is too, because the per-element k-order never depends on the
+//! split. The thread count comes from the caller's [`Workspace`]
+//! (`LSQNET_THREADS=1` forces serial; serve caps replicas at
+//! `cores / replicas`).
+//!
+//! Accumulation is exact in `i32` provided
+//! `k * Qp_act * max(Qn_w, Qp_w) < 2^31`, which [`check_accumulator_bound`]
+//! verifies at model-build time (for 8-bit weights/activations that allows
+//! k up to ~65k — far above any layer in the model zoo).
+
+use crate::quant::pack::{unpack_range, Packed};
+
+use super::workspace::Workspace;
+
+/// Rows of the packed weight matrix per tile (the k blocking factor).
+pub const KC: usize = 256;
+/// Columns of the packed weight matrix per tile (the n blocking factor).
+pub const NC: usize = 64;
+/// Register-tile width of the `qgemm` inner kernel: this many i32
+/// accumulators live in registers across the k loop.
+pub const NR: usize = 8;
+
+/// Minimum activation rows per `qgemm` thread. Each thread unpacks its
+/// own copy of every weight tile (tile unpack costs ~one dot-product row
+/// per tile), so a thread owning fewer rows than this spends more time
+/// unpacking than multiplying — small serve batches stay serial instead
+/// of going 2× slower. Thread count never changes the output (bitwise
+/// invariant), only the split.
+pub const QGEMM_MIN_ROWS_PER_THREAD: usize = 8;
+
+/// Minimum multiply-accumulates one spawned thread must own before the
+/// GEMM family adds it to the split: `std::thread::scope` spawns and
+/// joins real OS threads (tens of µs each), so a thread needs on the
+/// order of 64k MACs (~tens of µs of scalar compute) to pay for itself.
+/// Small layers — the trainer's dense head, tiny serve batches — stay
+/// serial. Like every width decision here, this never changes output
+/// bits, only the split.
+pub const MIN_MACS_PER_THREAD: usize = 1 << 16;
+
+/// Width cap from the work floor: at most one thread per
+/// [`MIN_MACS_PER_THREAD`] of total work.
+fn work_capped(threads: usize, macs: usize) -> usize {
+    threads.min((macs / MIN_MACS_PER_THREAD).max(1))
+}
+
+/// Split-dispatch shared by the whole GEMM family: run the first work
+/// item on the calling thread and the rest on scoped threads, so a
+/// width-T split spawns only T−1 OS threads and nobody idles in the
+/// join. Every item must own disjoint output — the callers' `chunks_mut`
+/// iterators guarantee it.
+macro_rules! scoped_split {
+    ($items:expr, |$item:pat_param| $body:expr) => {
+        std::thread::scope(|s| {
+            let mut inline = None;
+            for it in $items {
+                if inline.is_none() {
+                    inline = Some(it);
+                } else {
+                    let $item = it;
+                    s.spawn(move || $body);
+                }
+            }
+            if let Some(it) = inline {
+                let $item = it;
+                $body;
+            }
+        })
+    };
+}
+
+/// `true` iff an `i32` accumulator cannot overflow for a length-`k` dot
+/// product of activations in `[-qn_a, qp_a]` with weights in
+/// `[-qn_w, qp_w]`.
+pub fn check_accumulator_bound(k: usize, qp_a: i64, qn_a: i64, qn_w: i64, qp_w: i64) -> bool {
+    let amax = qp_a.max(qn_a);
+    let wmax = qn_w.max(qp_w);
+    (k as i64)
+        .checked_mul(amax)
+        .and_then(|v| v.checked_mul(wmax))
+        .map(|v| v < i32::MAX as i64)
+        .unwrap_or(false)
+}
+
+/// Rows per thread when splitting `rows` across at most `threads` workers.
+fn row_chunk(rows: usize, threads: usize) -> usize {
+    let t = threads.max(1);
+    ((rows + t - 1) / t).max(1)
+}
+
+/// Quantized GEMM: `out[m×n] = (x[m×k] · unpack(w)[k×n]) * scale (+ bias)`.
+///
+/// * `x` — integer activations (Eq. 1 `v̄` values), row-major `m×k`;
+/// * `w` — bit-packed weights, logically row-major `k×n` (`w.len == k*n`);
+/// * `scale` — the per-layer `s_a * s_w` rescale (Eq. 2 applied to both
+///   operands at once);
+/// * `bias` — optional fp32 bias of length `n`, added after the rescale.
+///
+/// The i32 accumulator and per-thread unpack tiles come from `ws` and are
+/// reused across calls. Zero activations (the common case after ReLU +
+/// unsigned quantization) skip their inner row entirely. Output is bitwise
+/// identical for every thread count (each element is owned by one thread;
+/// integer addition is exact).
+#[allow(clippy::too_many_arguments)]
+pub fn qgemm(
+    ws: &mut Workspace,
+    m: usize,
+    k: usize,
+    n: usize,
+    x: &[i32],
+    w: &Packed,
+    scale: f32,
+    bias: Option<&[f32]>,
+    out: &mut [f32],
+) {
+    assert_eq!(x.len(), m * k, "activation buffer shape");
+    assert_eq!(w.len, k * n, "packed weight shape");
+    assert_eq!(out.len(), m * n, "output buffer shape");
+    if let Some(b) = bias {
+        assert_eq!(b.len(), n, "bias length");
+    }
+    if m == 0 || n == 0 {
+        return;
+    }
+
+    // Cap the split so every thread owns enough rows to amortize its own
+    // tile unpacking (QGEMM_MIN_ROWS_PER_THREAD) and enough work to pay
+    // for its spawn (MIN_MACS_PER_THREAD).
+    let threads = work_capped(
+        ws.threads().min((m / QGEMM_MIN_ROWS_PER_THREAD).max(1)),
+        m * k * n,
+    );
+    let (acc, tiles) = ws.gemm_scratch(threads, KC * NC);
+    acc.clear();
+    acc.resize(m * n, 0);
+    if k > 0 {
+        if threads <= 1 {
+            qgemm_rows(m, k, n, x, w, &mut tiles[0], acc);
+        } else {
+            let chunk = row_chunk(m, threads);
+            scoped_split!(
+                acc.chunks_mut(chunk * n).zip(x.chunks(chunk * k)).zip(tiles.iter_mut()),
+                |((acc_c, x_c), tile)| qgemm_rows(acc_c.len() / n, k, n, x_c, w, tile, acc_c)
+            );
+        }
+    }
+
+    match bias {
+        Some(b) => {
+            for i in 0..m {
+                for j in 0..n {
+                    out[i * n + j] = acc[i * n + j] as f32 * scale + b[j];
+                }
+            }
+        }
+        None => {
+            for (o, &a) in out.iter_mut().zip(acc.iter()) {
+                *o = a as f32 * scale;
+            }
+        }
+    }
+}
+
+/// One thread's share of [`qgemm`]: `mb` activation rows against the whole
+/// packed weight matrix, unpacking KC×NC tiles into `tile` and running the
+/// NR-wide register-tiled inner kernel.
+fn qgemm_rows(
+    mb: usize,
+    k: usize,
+    n: usize,
+    x: &[i32],
+    w: &Packed,
+    tile: &mut [i32],
+    acc: &mut [i32],
+) {
+    for k0 in (0..k).step_by(KC) {
+        let kc = KC.min(k - k0);
+        for n0 in (0..n).step_by(NC) {
+            let nc = NC.min(n - n0);
+            // Unpack this KC×NC weight tile once; it then stays hot in
+            // cache for all mb activation rows of this thread.
+            for kk in 0..kc {
+                unpack_range(w, (k0 + kk) * n + n0, nc, &mut tile[kk * nc..kk * nc + nc]);
+            }
+            for i in 0..mb {
+                let xrow = &x[i * k + k0..i * k + k0 + kc];
+                let arow = &mut acc[i * n + n0..i * n + n0 + nc];
+                let mut j0 = 0;
+                while j0 < nc {
+                    let nr = NR.min(nc - j0);
+                    let mut r = [0i32; NR];
+                    for (kk, &xv) in xrow.iter().enumerate() {
+                        if xv == 0 {
+                            continue;
+                        }
+                        let wrow = &tile[kk * nc + j0..kk * nc + j0 + nr];
+                        for (rj, &wv) in r[..nr].iter_mut().zip(wrow) {
+                            *rj += xv * wv;
+                        }
+                    }
+                    for (a, &rj) in arow[j0..j0 + nr].iter_mut().zip(&r[..nr]) {
+                        *a += rj;
+                    }
+                    j0 += nr;
+                }
+            }
+        }
+    }
+}
+
+/// fp32 GEMM with the same blocking, for the model zoo's full-precision
+/// (bits ≥ 32) layers and the training-tape forward:
+/// `out[m×n] = x[m×k] · w[k×n] (+ bias)`.
+///
+/// Parallelized over output row blocks; per-element accumulation order is
+/// the serial k order regardless of thread count, so results are bitwise
+/// identical across thread counts.
+#[allow(clippy::too_many_arguments)]
+pub fn sgemm(
+    ws: &mut Workspace,
+    m: usize,
+    k: usize,
+    n: usize,
+    x: &[f32],
+    w: &[f32],
+    bias: Option<&[f32]>,
+    out: &mut [f32],
+) {
+    assert_eq!(x.len(), m * k, "activation buffer shape");
+    assert_eq!(w.len(), k * n, "weight shape");
+    assert_eq!(out.len(), m * n, "output buffer shape");
+    if let Some(b) = bias {
+        assert_eq!(b.len(), n, "bias length");
+    }
+    if m == 0 || n == 0 {
+        return;
+    }
+    match bias {
+        Some(b) => {
+            for orow in out.chunks_exact_mut(n) {
+                orow.copy_from_slice(b);
+            }
+        }
+        None => out.fill(0.0),
+    }
+    if k == 0 {
+        return;
+    }
+    let threads = work_capped(ws.threads().min(m), m * k * n);
+    if threads <= 1 {
+        sgemm_rows(m, k, n, x, w, out);
+    } else {
+        let chunk = row_chunk(m, threads);
+        scoped_split!(
+            out.chunks_mut(chunk * n).zip(x.chunks(chunk * k)),
+            |(out_c, x_c)| sgemm_rows(out_c.len() / n, k, n, x_c, w, out_c)
+        );
+    }
+}
+
+/// One thread's share of [`sgemm`]: streaming-axpy inner loop (vectorizes
+/// without reassociating the per-element sum), zero activations skipped.
+fn sgemm_rows(mb: usize, k: usize, n: usize, x: &[f32], w: &[f32], out: &mut [f32]) {
+    for k0 in (0..k).step_by(KC) {
+        let kc = KC.min(k - k0);
+        for i in 0..mb {
+            let xrow = &x[i * k + k0..i * k + k0 + kc];
+            let orow = &mut out[i * n..(i + 1) * n];
+            for (kk, &xv) in xrow.iter().enumerate() {
+                if xv == 0.0 {
+                    continue;
+                }
+                let wrow = &w[(k0 + kk) * n..(k0 + kk) * n + n];
+                for (o, &wv) in orow.iter_mut().zip(wrow) {
+                    *o += xv * wv;
+                }
+            }
+        }
+    }
+}
+
+/// Transposed-B fp32 GEMM: `out[m×k] = a[m×n] · w[k×n]ᵀ`.
+///
+/// This is the data-gradient path of the native backward pass
+/// (`dX̂ = dY · Ŵᵀ`, see `crate::train::native::backward`): both `a` rows
+/// and `w` rows are contiguous, so the inner dot runs stride-1 on both
+/// operands with no transpose materialized. Parallel over `out` row
+/// blocks.
+pub fn sgemm_nt(
+    ws: &mut Workspace,
+    m: usize,
+    k: usize,
+    n: usize,
+    a: &[f32],
+    w: &[f32],
+    out: &mut [f32],
+) {
+    assert_eq!(a.len(), m * n, "a shape");
+    assert_eq!(w.len(), k * n, "w shape");
+    assert_eq!(out.len(), m * k, "output shape");
+    if m == 0 || k == 0 {
+        return;
+    }
+    if n == 0 {
+        out.fill(0.0);
+        return;
+    }
+    let threads = work_capped(ws.threads().min(m), m * k * n);
+    if threads <= 1 {
+        sgemm_nt_rows(m, k, n, a, w, out);
+    } else {
+        let chunk = row_chunk(m, threads);
+        scoped_split!(
+            out.chunks_mut(chunk * k).zip(a.chunks(chunk * n)),
+            |(out_c, a_c)| sgemm_nt_rows(out_c.len() / k, k, n, a_c, w, out_c)
+        );
+    }
+}
+
+fn sgemm_nt_rows(mb: usize, k: usize, n: usize, a: &[f32], w: &[f32], out: &mut [f32]) {
+    for i in 0..mb {
+        let arow = &a[i * n..(i + 1) * n];
+        let orow = &mut out[i * k..(i + 1) * k];
+        for (kk, o) in orow.iter_mut().enumerate() {
+            let wrow = &w[kk * n..(kk + 1) * n];
+            let mut acc = 0.0f32;
+            for (&av, &wv) in arow.iter().zip(wrow) {
+                acc += av * wv;
+            }
+            *o = acc;
+        }
+    }
+}
+
+/// Transposed-A fp32 GEMM: `out[k×n] = x[m×k]ᵀ · dy[m×n]`.
+///
+/// The weight-gradient path of the native backward pass
+/// (`dŴ = X̂ᵀ · dY`). The inner loop streams a `dy` row into an `out`
+/// row, skipping zero activations (common after ReLU + unsigned
+/// quantization). Parallel over `out` row blocks (the k dimension): each
+/// thread reduces over all m batch rows for its own output rows, so the
+/// per-element m-order matches the serial loop for every thread count.
+pub fn sgemm_tn(
+    ws: &mut Workspace,
+    m: usize,
+    k: usize,
+    n: usize,
+    x: &[f32],
+    dy: &[f32],
+    out: &mut [f32],
+) {
+    assert_eq!(x.len(), m * k, "x shape");
+    assert_eq!(dy.len(), m * n, "dy shape");
+    assert_eq!(out.len(), k * n, "output shape");
+    if k == 0 || n == 0 {
+        return;
+    }
+    let threads = work_capped(ws.threads().min(k), m * k * n);
+    if threads <= 1 {
+        sgemm_tn_rows(m, k, n, 0, x, dy, out);
+    } else {
+        let chunk = row_chunk(k, threads);
+        scoped_split!(
+            out.chunks_mut(chunk * n).enumerate(),
+            |(ci, out_c)| sgemm_tn_rows(m, k, n, ci * chunk, x, dy, out_c)
+        );
+    }
+}
+
+/// One thread's share of [`sgemm_tn`]: output rows `[k_off, k_off + kb)`
+/// where `kb = out.len() / n`.
+#[allow(clippy::too_many_arguments)]
+fn sgemm_tn_rows(
+    m: usize,
+    k: usize,
+    n: usize,
+    k_off: usize,
+    x: &[f32],
+    dy: &[f32],
+    out: &mut [f32],
+) {
+    out.fill(0.0);
+    let kb = out.len() / n;
+    for i in 0..m {
+        let dyrow = &dy[i * n..(i + 1) * n];
+        for kk in 0..kb {
+            let xv = x[i * k + k_off + kk];
+            if xv == 0.0 {
+                continue;
+            }
+            let orow = &mut out[kk * n..(kk + 1) * n];
+            for (o, &dv) in orow.iter_mut().zip(dyrow) {
+                *o += xv * dv;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::pack::pack;
+
+    #[test]
+    fn qgemm_matches_naive_i64() {
+        let (m, k, n) = (3usize, 70usize, 9usize);
+        let mut rng = crate::util::rng::Pcg32::seeded(7);
+        let x: Vec<i32> = (0..m * k).map(|_| rng.below(8) as i32 - 4).collect();
+        let wv: Vec<i32> = (0..k * n).map(|_| rng.below(15) as i32 - 7).collect();
+        let p = pack(&wv, 4, true, 0.5).unwrap();
+        let bias: Vec<f32> = (0..n).map(|j| j as f32 * 0.25).collect();
+        let mut ws = Workspace::new();
+        let mut out = vec![0.0f32; m * n];
+        qgemm(&mut ws, m, k, n, &x, &p, 0.5, Some(&bias), &mut out);
+        for i in 0..m {
+            for j in 0..n {
+                let acc: i64 =
+                    (0..k).map(|kk| x[i * k + kk] as i64 * wv[kk * n + j] as i64).sum();
+                let want = acc as f32 * 0.5 + bias[j];
+                assert!(
+                    (out[i * n + j] - want).abs() < 1e-4,
+                    "({i},{j}): {} vs {want}",
+                    out[i * n + j]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn qgemm_blocks_cover_large_shapes() {
+        // k and n straddle the KC/NC tile boundaries.
+        let (m, k, n) = (2usize, KC + 13, NC + 5);
+        let mut rng = crate::util::rng::Pcg32::seeded(11);
+        let x: Vec<i32> = (0..m * k).map(|_| rng.below(4) as i32).collect();
+        let wv: Vec<i32> = (0..k * n).map(|_| rng.below(3) as i32 - 1).collect();
+        let p = pack(&wv, 2, true, 1.0).unwrap();
+        let mut ws = Workspace::new();
+        let mut out = vec![0.0f32; m * n];
+        qgemm(&mut ws, m, k, n, &x, &p, 1.0, None, &mut out);
+        for i in 0..m {
+            for j in 0..n {
+                let acc: i64 =
+                    (0..k).map(|kk| x[i * k + kk] as i64 * wv[kk * n + j] as i64).sum();
+                assert_eq!(out[i * n + j], acc as f32, "({i},{j})");
+            }
+        }
+    }
+
+    #[test]
+    fn sgemm_matches_naive() {
+        let (m, k, n) = (5usize, 17usize, 6usize);
+        let mut rng = crate::util::rng::Pcg32::seeded(20);
+        let x: Vec<f32> = (0..m * k).map(|_| rng.normal()).collect();
+        let w: Vec<f32> = (0..k * n).map(|_| rng.normal()).collect();
+        let bias: Vec<f32> = (0..n).map(|_| rng.normal()).collect();
+        let mut ws = Workspace::new();
+        let mut out = vec![0.0f32; m * n];
+        sgemm(&mut ws, m, k, n, &x, &w, Some(&bias), &mut out);
+        for i in 0..m {
+            for j in 0..n {
+                let want: f32 =
+                    bias[j] + (0..k).map(|kk| x[i * k + kk] * w[kk * n + j]).sum::<f32>();
+                assert!((out[i * n + j] - want).abs() < 1e-4, "({i},{j})");
+            }
+        }
+    }
+
+    #[test]
+    fn sgemm_nt_matches_naive_transpose() {
+        let (m, k, n) = (3usize, 5usize, 7usize);
+        let mut rng = crate::util::rng::Pcg32::seeded(21);
+        let a: Vec<f32> = (0..m * n).map(|_| rng.normal()).collect();
+        let w: Vec<f32> = (0..k * n).map(|_| rng.normal()).collect();
+        let mut ws = Workspace::new();
+        let mut out = vec![0.0f32; m * k];
+        sgemm_nt(&mut ws, m, k, n, &a, &w, &mut out);
+        for i in 0..m {
+            for kk in 0..k {
+                let want: f32 = (0..n).map(|j| a[i * n + j] * w[kk * n + j]).sum();
+                assert!((out[i * k + kk] - want).abs() < 1e-5);
+            }
+        }
+    }
+
+    #[test]
+    fn sgemm_tn_matches_naive_transpose() {
+        let (m, k, n) = (4usize, 6usize, 3usize);
+        let mut rng = crate::util::rng::Pcg32::seeded(22);
+        let x: Vec<f32> = (0..m * k).map(|_| rng.normal()).collect();
+        let dy: Vec<f32> = (0..m * n).map(|_| rng.normal()).collect();
+        let mut ws = Workspace::new();
+        let mut out = vec![0.0f32; k * n];
+        sgemm_tn(&mut ws, m, k, n, &x, &dy, &mut out);
+        for kk in 0..k {
+            for j in 0..n {
+                let want: f32 = (0..m).map(|i| x[i * k + kk] * dy[i * n + j]).sum();
+                assert!((out[kk * n + j] - want).abs() < 1e-5);
+            }
+        }
+    }
+
+    #[test]
+    fn accumulator_bound() {
+        assert!(check_accumulator_bound(65_000, 255, 0, 128, 127));
+        assert!(!check_accumulator_bound(66_000, 255, 0, 128, 127));
+    }
+}

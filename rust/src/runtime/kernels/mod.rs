@@ -1,0 +1,44 @@
+//! The unified parallel kernel layer: one compute core shared by the
+//! native inference backend ([`crate::runtime::native`]) and the native
+//! training subsystem ([`crate::train::native`]).
+//!
+//! Before this layer existed, the packed-weight forward and the training
+//! tape each carried their own copies of the GEMM/im2col/pool/BN ops, all
+//! scalar, single-threaded, and re-allocating their scratch on every call.
+//! This module collapses both paths onto one implementation with two
+//! properties the deployment story (paper Figure 1; McKinstry et al. 2018)
+//! needs:
+//!
+//! * **Workspace reuse** — [`Workspace`] owns the accumulator, the
+//!   per-thread weight-unpack tiles, and a pool of recycled activation /
+//!   im2col / gradient buffers. Serve replicas and `NativeTrainer` each
+//!   hold one, so the steady-state hot path is allocation-free.
+//! * **Deterministic multi-threading** — the GEMM family parallelizes over
+//!   output row blocks with `std::thread::scope`; every output element is
+//!   owned by exactly one thread and accumulated in the serial order, so
+//!   `qgemm` is bitwise identical across thread counts (and the fp32
+//!   family is too). The thread count is capped per-workspace (serve uses
+//!   `cores / replicas`) and process-wide via `LSQNET_THREADS`.
+//!
+//! Submodules: [`workspace`] (scratch arena + thread resolution), [`gemm`]
+//! (the `qgemm`/`sgemm`/`sgemm_nt`/`sgemm_tn` microkernels), [`conv`]
+//! (im2col / col2im / SAME padding), [`pool`] (max pool, global average
+//! pool, ReLU), [`norm`] (folded and batch-stat batch norm). See DESIGN.md
+//! §Kernel-layer for the ownership rules and determinism guarantee.
+
+pub mod conv;
+pub mod gemm;
+pub mod norm;
+pub mod pool;
+pub mod workspace;
+
+pub use conv::{col2im, im2col, same_padding};
+pub use gemm::{
+    check_accumulator_bound, qgemm, sgemm, sgemm_nt, sgemm_tn, KC, NC, NR,
+    QGEMM_MIN_ROWS_PER_THREAD,
+};
+pub use norm::{bn_apply, bn_apply_out, bn_batch_stats, bn_bwd, bn_normalize, fold_bn, BN_EPS};
+pub use pool::{
+    global_avg_pool, global_avg_pool_bwd, maxpool2, maxpool2_bwd, relu, relu_bwd, relu_mask,
+};
+pub use workspace::{hardware_threads, Workspace};

@@ -1,0 +1,192 @@
+//! Batch-norm primitives shared by inference and training.
+//!
+//! Inference uses the *folded* eval form ([`fold_bn`] + [`bn_apply`] /
+//! [`bn_apply_out`]): running stats and γ/β collapse to one per-channel
+//! affine `y = x·scale + shift` at model-build time. Training uses the
+//! batch-stat form ([`bn_batch_stats`] + [`bn_normalize`]) and the
+//! standard three-term backward ([`bn_bwd`]); running-stat bookkeeping
+//! (momentum, functional updates) stays in the training tape, which owns
+//! the parameter story.
+
+/// BN variance epsilon (matches `python/compile/layers.py` `BN_EPS`).
+pub const BN_EPS: f32 = 1e-5;
+
+/// Fold eval-mode batch norm into a per-channel affine:
+/// `scale = γ/√(rvar+ε)`, `shift = β − rmean·scale`.
+pub fn fold_bn(
+    gamma: &[f32],
+    beta: &[f32],
+    rmean: &[f32],
+    rvar: &[f32],
+) -> (Vec<f32>, Vec<f32>) {
+    let mut scale = Vec::with_capacity(gamma.len());
+    let mut shift = Vec::with_capacity(gamma.len());
+    for i in 0..gamma.len() {
+        let s = gamma[i] / (rvar[i] + BN_EPS).sqrt();
+        scale.push(s);
+        shift.push(beta[i] - rmean[i] * s);
+    }
+    (scale, shift)
+}
+
+/// In-place folded BN: `x = x·scale + shift` per trailing channel.
+pub fn bn_apply(x: &mut [f32], scale: &[f32], shift: &[f32]) {
+    let c = scale.len();
+    for chunk in x.chunks_exact_mut(c) {
+        for (i, v) in chunk.iter_mut().enumerate() {
+            *v = *v * scale[i] + shift[i];
+        }
+    }
+}
+
+/// Out-of-place folded BN: `out = x·scale + shift` per trailing channel.
+/// Lets a residual block keep `x` alive as its identity shortcut without
+/// cloning the activation tensor.
+pub fn bn_apply_out(x: &[f32], scale: &[f32], shift: &[f32], out: &mut [f32]) {
+    assert_eq!(x.len(), out.len(), "bn_apply_out shape");
+    let c = scale.len();
+    for (chunk, ochunk) in x.chunks_exact(c).zip(out.chunks_exact_mut(c)) {
+        for i in 0..c {
+            ochunk[i] = chunk[i] * scale[i] + shift[i];
+        }
+    }
+}
+
+/// Per-channel batch mean and *biased* variance (like `jnp.var`) over the
+/// trailing-channel layout, accumulated in f64.
+pub fn bn_batch_stats(x: &[f32], ch: usize) -> (Vec<f32>, Vec<f32>) {
+    let rows = x.len() / ch.max(1);
+    let mut mean = vec![0.0f64; ch];
+    let mut var = vec![0.0f64; ch];
+    for chunk in x.chunks_exact(ch) {
+        for (i, &v) in chunk.iter().enumerate() {
+            mean[i] += v as f64;
+        }
+    }
+    for m in mean.iter_mut() {
+        *m /= rows.max(1) as f64;
+    }
+    for chunk in x.chunks_exact(ch) {
+        for (i, &v) in chunk.iter().enumerate() {
+            let d = v as f64 - mean[i];
+            var[i] += d * d;
+        }
+    }
+    for v in var.iter_mut() {
+        *v /= rows.max(1) as f64;
+    }
+    (
+        mean.iter().map(|&v| v as f32).collect(),
+        var.iter().map(|&v| v as f32).collect(),
+    )
+}
+
+/// In-place normalize + affine: `x = x̂·γ + β` with `x̂ = (x−μ)·inv`.
+/// When `xhat` is given it is cleared and filled with the normalized
+/// values — the saved context [`bn_bwd`] needs.
+pub fn bn_normalize(
+    x: &mut [f32],
+    mean: &[f32],
+    inv: &[f32],
+    gamma: &[f32],
+    beta: &[f32],
+    xhat: Option<&mut Vec<f32>>,
+) {
+    let c = mean.len();
+    if let Some(xh) = xhat {
+        xh.clear();
+        xh.reserve(x.len());
+        for chunk in x.chunks_exact_mut(c) {
+            for (i, v) in chunk.iter_mut().enumerate() {
+                let nx = (*v - mean[i]) * inv[i];
+                xh.push(nx);
+                *v = nx * gamma[i] + beta[i];
+            }
+        }
+    } else {
+        for chunk in x.chunks_exact_mut(c) {
+            for (i, v) in chunk.iter_mut().enumerate() {
+                *v = (*v - mean[i]) * inv[i] * gamma[i] + beta[i];
+            }
+        }
+    }
+}
+
+/// Standard three-term batch-norm backward over the saved normalized
+/// activations: `dy` is rewritten in place to
+/// `dx = inv/N · (N·dx̂ − Σdx̂ − x̂·Σ(dx̂·x̂))` per channel; returns
+/// `(dγ, dβ)` as f64 channel sums (`dγ = Σ dy·x̂`, `dβ = Σ dy`).
+pub fn bn_bwd(xhat: &[f32], inv: &[f32], gamma: &[f32], dy: &mut [f32]) -> (Vec<f64>, Vec<f64>) {
+    let ch = gamma.len();
+    assert_eq!(dy.len(), xhat.len(), "bn backward shape");
+    let rows = dy.len() / ch.max(1);
+    let mut dgamma = vec![0.0f64; ch];
+    let mut dbeta = vec![0.0f64; ch];
+    let mut s1 = vec![0.0f64; ch];
+    let mut s2 = vec![0.0f64; ch];
+    for (r, chunk) in dy.chunks_exact_mut(ch).enumerate() {
+        let xh = &xhat[r * ch..(r + 1) * ch];
+        for i in 0..ch {
+            let g = chunk[i] as f64;
+            dgamma[i] += g * xh[i] as f64;
+            dbeta[i] += g;
+            let dxh = g * gamma[i] as f64;
+            s1[i] += dxh;
+            s2[i] += dxh * xh[i] as f64;
+            chunk[i] = dxh as f32; // dy buffer now holds dx̂
+        }
+    }
+    let n = rows as f64;
+    for (r, chunk) in dy.chunks_exact_mut(ch).enumerate() {
+        let xh = &xhat[r * ch..(r + 1) * ch];
+        for i in 0..ch {
+            let dxh = chunk[i] as f64;
+            chunk[i] = (inv[i] as f64 * (dxh - s1[i] / n - xh[i] as f64 * s2[i] / n)) as f32;
+        }
+    }
+    (dgamma, dbeta)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fold_matches_eval_formula() {
+        let (scale, shift) = fold_bn(&[2.0], &[1.0], &[0.5], &[4.0]);
+        let s = 2.0 / (4.0f32 + BN_EPS).sqrt();
+        assert!((scale[0] - s).abs() < 1e-6);
+        assert!((shift[0] - (1.0 - 0.5 * s)).abs() < 1e-6);
+    }
+
+    #[test]
+    fn apply_out_matches_apply_inplace() {
+        let mut rng = crate::util::rng::Pcg32::seeded(41);
+        let c = 3usize;
+        let x: Vec<f32> = (0..4 * c).map(|_| rng.normal()).collect();
+        let scale: Vec<f32> = (0..c).map(|_| rng.normal()).collect();
+        let shift: Vec<f32> = (0..c).map(|_| rng.normal()).collect();
+        let mut a = x.clone();
+        bn_apply(&mut a, &scale, &shift);
+        let mut b = vec![0.0f32; x.len()];
+        bn_apply_out(&x, &scale, &shift, &mut b);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn batch_stats_zero_mean_unit_var_after_normalize() {
+        let mut rng = crate::util::rng::Pcg32::seeded(42);
+        let c = 2usize;
+        let mut x: Vec<f32> = (0..64 * c).map(|_| rng.normal() * 3.0 + 1.0).collect();
+        let (mean, var) = bn_batch_stats(&x, c);
+        let inv: Vec<f32> = var.iter().map(|&v| 1.0 / (v + BN_EPS).sqrt()).collect();
+        let mut xhat = Vec::new();
+        bn_normalize(&mut x, &mean, &inv, &[1.0, 1.0], &[0.0, 0.0], Some(&mut xhat));
+        assert_eq!(xhat, x); // γ=1, β=0
+        let (m2, v2) = bn_batch_stats(&x, c);
+        for i in 0..c {
+            assert!(m2[i].abs() < 1e-4, "mean {}", m2[i]);
+            assert!((v2[i] - 1.0).abs() < 1e-3, "var {}", v2[i]);
+        }
+    }
+}

@@ -1,0 +1,176 @@
+//! Pooling and activation primitives shared by the inference forward and
+//! the training tape: 2×2 max pool (with optional argmax recording for the
+//! backward scatter), global average pool, and ReLU (with optional mask
+//! recording).
+
+/// 2×2 / stride-2 max pool over an NHWC buffer. `out` must hold
+/// `b*(h/2)*(w/2)*c` elements. When `argmax` is given it is resized to the
+/// output length and records the flat input index of each winning element
+/// — the scatter targets [`maxpool2_bwd`] replays.
+pub fn maxpool2(
+    x: &[f32],
+    b: usize,
+    h: usize,
+    w: usize,
+    c: usize,
+    out: &mut [f32],
+    mut argmax: Option<&mut Vec<usize>>,
+) {
+    let (oh, ow) = (h / 2, w / 2);
+    assert_eq!(x.len(), b * h * w * c, "maxpool input shape");
+    assert_eq!(out.len(), b * oh * ow * c, "maxpool output shape");
+    if let Some(a) = argmax.as_deref_mut() {
+        a.clear();
+        a.resize(b * oh * ow * c, 0);
+    }
+    out.fill(f32::NEG_INFINITY);
+    for bi in 0..b {
+        for oy in 0..oh {
+            for ox in 0..ow {
+                let dst = ((bi * oh + oy) * ow + ox) * c;
+                for dy in 0..2 {
+                    for dx in 0..2 {
+                        let src = ((bi * h + oy * 2 + dy) * w + ox * 2 + dx) * c;
+                        for ch in 0..c {
+                            let v = x[src + ch];
+                            if v > out[dst + ch] {
+                                out[dst + ch] = v;
+                                if let Some(a) = argmax.as_deref_mut() {
+                                    a[dst + ch] = src + ch;
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Backward of [`maxpool2`]: route each output gradient to the input
+/// element that won the forward max. `dx` is zeroed here.
+pub fn maxpool2_bwd(argmax: &[usize], dy: &[f32], dx: &mut [f32]) {
+    assert_eq!(dy.len(), argmax.len(), "maxpool backward shape");
+    dx.fill(0.0);
+    for (&a, &d) in argmax.iter().zip(dy) {
+        dx[a] += d;
+    }
+}
+
+/// Global average pool over the spatial dims of an NHWC buffer:
+/// `out[b×c] = mean over h*w`. `out` is overwritten.
+pub fn global_avg_pool(x: &[f32], b: usize, h: usize, w: usize, c: usize, out: &mut [f32]) {
+    assert_eq!(x.len(), b * h * w * c, "gap input shape");
+    assert_eq!(out.len(), b * c, "gap output shape");
+    let inv = 1.0 / (h * w) as f32;
+    out.fill(0.0);
+    for bi in 0..b {
+        for p in 0..h * w {
+            let src = (bi * h * w + p) * c;
+            for ch in 0..c {
+                out[bi * c + ch] += x[src + ch];
+            }
+        }
+        for ch in 0..c {
+            out[bi * c + ch] *= inv;
+        }
+    }
+}
+
+/// Backward of [`global_avg_pool`]: broadcast `dy[b×c] / (h*w)` over the
+/// spatial grid. `dx` is overwritten.
+pub fn global_avg_pool_bwd(dy: &[f32], b: usize, h: usize, w: usize, c: usize, dx: &mut [f32]) {
+    assert_eq!(dy.len(), b * c, "gap backward dy shape");
+    assert_eq!(dx.len(), b * h * w * c, "gap backward dx shape");
+    let inv = 1.0 / (h * w) as f32;
+    for bi in 0..b {
+        for p in 0..h * w {
+            let dst = (bi * h * w + p) * c;
+            for ch in 0..c {
+                dx[dst + ch] = dy[bi * c + ch] * inv;
+            }
+        }
+    }
+}
+
+/// In-place ReLU.
+pub fn relu(x: &mut [f32]) {
+    for v in x.iter_mut() {
+        *v = v.max(0.0);
+    }
+}
+
+/// In-place ReLU that also records the pass-through mask (`x > 0`) for
+/// [`relu_bwd`].
+pub fn relu_mask(x: &mut [f32], mask: &mut Vec<bool>) {
+    mask.clear();
+    mask.reserve(x.len());
+    for v in x.iter_mut() {
+        mask.push(*v > 0.0);
+        *v = v.max(0.0);
+    }
+}
+
+/// Backward of ReLU: zero the gradient where the forward input was ≤ 0.
+pub fn relu_bwd(mask: &[bool], dy: &mut [f32]) {
+    for (d, &m) in dy.iter_mut().zip(mask) {
+        if !m {
+            *d = 0.0;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn maxpool_picks_max_and_records_argmax() {
+        // One 2x2 image, one channel.
+        let x = vec![1.0f32, 4.0, 2.0, 3.0];
+        let mut out = vec![0.0f32; 1];
+        let mut arg = Vec::new();
+        maxpool2(&x, 1, 2, 2, 1, &mut out, Some(&mut arg));
+        assert_eq!(out, vec![4.0]);
+        assert_eq!(arg, vec![1]);
+        // Backward routes the whole gradient to the winner.
+        let mut dx = vec![9.0f32; 4];
+        maxpool2_bwd(&arg, &[2.5], &mut dx);
+        assert_eq!(dx, vec![0.0, 2.5, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn gap_is_mean_and_bwd_is_adjoint() {
+        let (b, h, w, c) = (2usize, 2usize, 2usize, 3usize);
+        let mut rng = crate::util::rng::Pcg32::seeded(31);
+        let x: Vec<f32> = (0..b * h * w * c).map(|_| rng.normal()).collect();
+        let mut out = vec![0.0f32; b * c];
+        global_avg_pool(&x, b, h, w, c, &mut out);
+        for bi in 0..b {
+            for ch in 0..c {
+                let want: f32 =
+                    (0..h * w).map(|p| x[(bi * h * w + p) * c + ch]).sum::<f32>() / 4.0;
+                assert!((out[bi * c + ch] - want).abs() < 1e-6);
+            }
+        }
+        // <gap(x), y> == <x, gap_bwd(y)>
+        let y: Vec<f32> = (0..b * c).map(|_| rng.normal()).collect();
+        let fwd: f64 = out.iter().zip(&y).map(|(a, b)| (a * b) as f64).sum();
+        let mut dx = vec![0.0f32; b * h * w * c];
+        global_avg_pool_bwd(&y, b, h, w, c, &mut dx);
+        let adj: f64 = x.iter().zip(&dx).map(|(a, b)| (a * b) as f64).sum();
+        assert!((fwd - adj).abs() < 1e-5);
+    }
+
+    #[test]
+    fn relu_mask_roundtrip() {
+        let mut x = vec![-1.0f32, 0.0, 2.0];
+        let mut mask = Vec::new();
+        relu_mask(&mut x, &mut mask);
+        assert_eq!(x, vec![0.0, 0.0, 2.0]);
+        assert_eq!(mask, vec![false, false, true]);
+        let mut dy = vec![5.0f32, 5.0, 5.0];
+        relu_bwd(&mask, &mut dy);
+        assert_eq!(dy, vec![0.0, 0.0, 5.0]);
+    }
+}

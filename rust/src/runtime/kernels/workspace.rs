@@ -1,0 +1,334 @@
+//! Scratch-arena [`Workspace`] and intra-op thread-count resolution for the
+//! kernel layer.
+//!
+//! Every kernel that needs scratch memory (the `qgemm` i32 accumulator, the
+//! per-thread weight-unpack tiles) or transient buffers (im2col patches,
+//! layer activations, gradient staging) draws it from a `Workspace` instead
+//! of allocating. Serve replicas and the native trainer each own one
+//! workspace, so the steady-state hot path performs no heap allocation:
+//! buffers grow to the high-water mark of the model's layer shapes on the
+//! first pass and are reused afterwards (see DESIGN.md §Kernel-layer for
+//! the ownership rules).
+//!
+//! Thread-count resolution: the effective intra-op width of a kernel call
+//! is `min(workspace cap (0 = hardware), LSQNET_THREADS (if set), rows)`:
+//!
+//! * `LSQNET_THREADS=1` forces every kernel serial — the CI determinism
+//!   re-run uses this to show threaded and serial runs agree;
+//! * a serve deployment caps each replica at `cores / replicas`
+//!   ([`crate::serve::ServerConfig::intra_threads`]) so
+//!   `replicas × intra-op threads` never oversubscribes the host.
+
+use std::sync::OnceLock;
+
+/// Process-wide hard cap from the `LSQNET_THREADS` environment variable,
+/// read once. 0 = unset (no cap).
+fn env_thread_cap() -> usize {
+    static CAP: OnceLock<usize> = OnceLock::new();
+    *CAP.get_or_init(|| {
+        std::env::var("LSQNET_THREADS")
+            .ok()
+            .and_then(|v| v.trim().parse::<usize>().ok())
+            .map(|n| n.max(1))
+            .unwrap_or(0)
+    })
+}
+
+/// Number of hardware threads the host reports (always ≥ 1).
+pub fn hardware_threads() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+/// How many recycled buffers of each element type a workspace retains;
+/// beyond this, [`Workspace::recycle_f32`] drops instead of pooling. This
+/// is a runaway backstop, not a working-set tuning knob: it must exceed
+/// the number of buffers one training step recycles at once (a resnet8
+/// tape returns ~50 — four per matmul entry plus BN saves — in one
+/// `recycle_tape` burst), or the "allocation-free steady state" silently
+/// degrades to malloc-per-step for whatever spills past the bound. In
+/// steady state the pool holds exactly the model's high-water buffer set,
+/// so memory is bounded by the working set itself; 128 only caps
+/// pathological churn (e.g. one workspace cycled through many models).
+const POOL_KEEP: usize = 128;
+
+/// Reusable scratch arena for the kernel layer.
+///
+/// Owns (a) the `qgemm` i32 accumulator and per-thread weight-unpack
+/// tiles, and (b) a small pool of recycled `f32`/`i32` buffers that the
+/// inference forward and training forward/backward cycle through
+/// ([`Workspace::take_f32`] / [`Workspace::recycle_f32`]). One workspace
+/// serves one engine/trainer at a time — kernels take `&mut Workspace`, so
+/// the borrow checker enforces exclusivity; cross-replica parallelism
+/// comes from each replica owning its own workspace.
+pub struct Workspace {
+    /// Requested intra-op thread cap; 0 = use [`hardware_threads`].
+    threads: usize,
+    /// `qgemm` i32 accumulator (`m×n`, resized per call).
+    pub(crate) acc: Vec<i32>,
+    /// Per-thread KC×NC weight-unpack tiles for `qgemm`.
+    pub(crate) tiles: Vec<Vec<i32>>,
+    pool_f32: Vec<Vec<f32>>,
+    pool_i32: Vec<Vec<i32>>,
+    pool_bool: Vec<Vec<bool>>,
+    pool_usize: Vec<Vec<usize>>,
+}
+
+impl Default for Workspace {
+    fn default() -> Self {
+        Workspace::new()
+    }
+}
+
+impl Workspace {
+    /// A workspace that follows the hardware thread count (modulo the
+    /// `LSQNET_THREADS` cap).
+    pub fn new() -> Workspace {
+        Workspace::with_threads(0)
+    }
+
+    /// A workspace capped at `threads` intra-op threads (0 = hardware).
+    pub fn with_threads(threads: usize) -> Workspace {
+        Workspace {
+            threads,
+            acc: Vec::new(),
+            tiles: Vec::new(),
+            pool_f32: Vec::new(),
+            pool_i32: Vec::new(),
+            pool_bool: Vec::new(),
+            pool_usize: Vec::new(),
+        }
+    }
+
+    /// Re-cap the intra-op thread count (0 = hardware). Existing scratch
+    /// buffers are kept.
+    pub fn set_threads(&mut self, threads: usize) {
+        self.threads = threads;
+    }
+
+    /// The effective intra-op thread count for the next kernel call:
+    /// the workspace cap (or hardware count), further capped by
+    /// `LSQNET_THREADS` when set. Always ≥ 1.
+    pub fn threads(&self) -> usize {
+        let want = if self.threads == 0 {
+            hardware_threads()
+        } else {
+            self.threads
+        };
+        let cap = env_thread_cap();
+        let eff = if cap == 0 { want } else { want.min(cap) };
+        eff.max(1)
+    }
+
+    /// The `qgemm` scratch pair: the shared i32 accumulator plus one
+    /// KC×NC unpack tile per thread (grown on demand). Returned as two
+    /// disjoint borrows so the caller can split the accumulator across
+    /// threads while each thread owns a tile.
+    pub(crate) fn gemm_scratch(
+        &mut self,
+        threads: usize,
+        tile_len: usize,
+    ) -> (&mut Vec<i32>, &mut [Vec<i32>]) {
+        if self.tiles.len() < threads {
+            self.tiles.resize_with(threads, Vec::new);
+        }
+        for t in self.tiles.iter_mut().take(threads) {
+            if t.len() < tile_len {
+                t.resize(tile_len, 0);
+            }
+        }
+        let Workspace { acc, tiles, .. } = self;
+        (acc, &mut tiles[..threads])
+    }
+
+    /// A zero-filled `f32` buffer of exactly `len` elements, reusing a
+    /// recycled buffer's capacity when one fits (best-fit, falling back to
+    /// the largest). Pair with [`Workspace::recycle_f32`] when the buffer
+    /// dies so the capacity returns to the pool.
+    pub fn take_f32(&mut self, len: usize) -> Vec<f32> {
+        let mut v = take_pooled(&mut self.pool_f32, len);
+        v.clear();
+        v.resize(len, 0.0);
+        v
+    }
+
+    /// [`Workspace::take_f32`] for `i32` buffers.
+    pub fn take_i32(&mut self, len: usize) -> Vec<i32> {
+        let mut v = take_pooled(&mut self.pool_i32, len);
+        v.clear();
+        v.resize(len, 0);
+        v
+    }
+
+    /// An *empty* `f32` buffer with capacity ≥ `len` (no zero-fill), for
+    /// callers that fully initialize the contents themselves — im2col's
+    /// clear+resize, `extend_from_slice` copies, push-style fills. This
+    /// skips the redundant zeroing write pass [`Workspace::take_f32`]
+    /// would spend on the layer's largest buffers.
+    pub fn take_f32_cap(&mut self, len: usize) -> Vec<f32> {
+        let mut v = take_pooled(&mut self.pool_f32, len);
+        v.clear();
+        v.reserve(len);
+        v
+    }
+
+    /// [`Workspace::take_f32_cap`] for `i32` buffers.
+    pub fn take_i32_cap(&mut self, len: usize) -> Vec<i32> {
+        let mut v = take_pooled(&mut self.pool_i32, len);
+        v.clear();
+        v.reserve(len);
+        v
+    }
+
+    /// A length-`len` `f32` buffer with **arbitrary contents** (stale
+    /// values from earlier recycles; only the grown tail is zeroed), for
+    /// kernels that initialize every output element themselves — GEMM
+    /// epilogues, `fill`-then-accumulate backward kernels, pooling. This
+    /// skips the full memset [`Workspace::take_f32`] performs; use the
+    /// zeroed variant when the kernel *accumulates* into the buffer
+    /// (e.g. [`super::col2im`]).
+    pub fn take_f32_any(&mut self, len: usize) -> Vec<f32> {
+        let mut v = take_pooled(&mut self.pool_f32, len);
+        v.truncate(len);
+        v.resize(len, 0.0);
+        v
+    }
+
+    /// [`Workspace::take_f32_cap`] for `bool` buffers (ReLU masks on the
+    /// training tape).
+    pub fn take_bool_cap(&mut self, len: usize) -> Vec<bool> {
+        let mut v = take_pooled(&mut self.pool_bool, len);
+        v.clear();
+        v.reserve(len);
+        v
+    }
+
+    /// [`Workspace::take_f32_cap`] for `usize` buffers (maxpool argmax on
+    /// the training tape).
+    pub fn take_usize_cap(&mut self, len: usize) -> Vec<usize> {
+        let mut v = take_pooled(&mut self.pool_usize, len);
+        v.clear();
+        v.reserve(len);
+        v
+    }
+
+    /// Return a dead buffer's capacity to the pool (dropped once the pool
+    /// holds `POOL_KEEP` buffers).
+    pub fn recycle_f32(&mut self, v: Vec<f32>) {
+        if self.pool_f32.len() < POOL_KEEP && v.capacity() > 0 {
+            self.pool_f32.push(v);
+        }
+    }
+
+    /// [`Workspace::recycle_f32`] for `i32` buffers.
+    pub fn recycle_i32(&mut self, v: Vec<i32>) {
+        if self.pool_i32.len() < POOL_KEEP && v.capacity() > 0 {
+            self.pool_i32.push(v);
+        }
+    }
+
+    /// [`Workspace::recycle_f32`] for `bool` buffers.
+    pub fn recycle_bool(&mut self, v: Vec<bool>) {
+        if self.pool_bool.len() < POOL_KEEP && v.capacity() > 0 {
+            self.pool_bool.push(v);
+        }
+    }
+
+    /// [`Workspace::recycle_f32`] for `usize` buffers.
+    pub fn recycle_usize(&mut self, v: Vec<usize>) {
+        if self.pool_usize.len() < POOL_KEEP && v.capacity() > 0 {
+            self.pool_usize.push(v);
+        }
+    }
+}
+
+/// Pop the best-fitting pooled buffer for `len`: the smallest capacity
+/// ≥ `len`, else the largest available (its capacity will grow once), else
+/// a fresh empty `Vec`.
+fn take_pooled<T>(pool: &mut Vec<Vec<T>>, len: usize) -> Vec<T> {
+    if pool.is_empty() {
+        return Vec::with_capacity(len);
+    }
+    let mut best: Option<usize> = None; // smallest capacity >= len
+    let mut largest = 0usize; // fallback: largest capacity overall
+    for (i, v) in pool.iter().enumerate() {
+        let tighter_fit = match best {
+            None => true,
+            Some(b) => v.capacity() < pool[b].capacity(),
+        };
+        if v.capacity() >= len && tighter_fit {
+            best = Some(i);
+        }
+        if v.capacity() >= pool[largest].capacity() {
+            largest = i;
+        }
+    }
+    pool.swap_remove(best.unwrap_or(largest))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn threads_respects_explicit_cap() {
+        let ws = Workspace::with_threads(3);
+        assert!(ws.threads() >= 1);
+        assert!(ws.threads() <= 3);
+        let auto = Workspace::new();
+        assert!(auto.threads() >= 1);
+    }
+
+    #[test]
+    fn take_recycle_reuses_capacity() {
+        let mut ws = Workspace::new();
+        let mut v = ws.take_f32(100);
+        v[0] = 1.0;
+        let cap = v.capacity();
+        let ptr = v.as_ptr();
+        ws.recycle_f32(v);
+        // Same capacity comes back, zeroed, even for a smaller request.
+        let v2 = ws.take_f32(50);
+        assert_eq!(v2.len(), 50);
+        assert!(v2.iter().all(|&x| x == 0.0));
+        assert_eq!(v2.capacity(), cap);
+        assert_eq!(v2.as_ptr(), ptr);
+    }
+
+    #[test]
+    fn take_cap_returns_empty_with_reused_capacity() {
+        let mut ws = Workspace::new();
+        let v = ws.take_f32(64);
+        let cap = v.capacity();
+        ws.recycle_f32(v);
+        let c = ws.take_f32_cap(10);
+        assert!(c.is_empty());
+        assert_eq!(c.capacity(), cap);
+    }
+
+    #[test]
+    fn best_fit_prefers_smallest_sufficient_buffer() {
+        let mut ws = Workspace::new();
+        let big = ws.take_i32(1000);
+        let small = ws.take_i32(10);
+        let (big_cap, small_cap) = (big.capacity(), small.capacity());
+        ws.recycle_i32(big);
+        ws.recycle_i32(small);
+        assert!(big_cap > small_cap);
+        // A tiny request must not burn the big buffer.
+        let got = ws.take_i32(8);
+        assert_eq!(got.capacity(), small_cap);
+    }
+
+    #[test]
+    fn gemm_scratch_grows_per_thread_tiles() {
+        let mut ws = Workspace::new();
+        let (acc, tiles) = ws.gemm_scratch(4, 128);
+        assert_eq!(tiles.len(), 4);
+        assert!(tiles.iter().all(|t| t.len() >= 128));
+        acc.resize(10, 0);
+        let (acc2, tiles2) = ws.gemm_scratch(2, 256);
+        assert_eq!(acc2.len(), 10);
+        assert_eq!(tiles2.len(), 2);
+        assert!(tiles2.iter().all(|t| t.len() >= 256));
+    }
+}

@@ -4,6 +4,9 @@
 //!   `python/compile/aot.py` (always available).
 //! * [`backend`] — the [`Backend`] trait + [`BackendSpec`] the serving and
 //!   bench layers dispatch over.
+//! * [`kernels`] — the unified parallel kernel layer (workspace-reused,
+//!   multi-threaded GEMM/im2col/pool/BN) shared by native inference and
+//!   native training.
 //! * [`native`] — pure-Rust packed-weight inference (always available).
 //! * `engine` — the XLA/PJRT executor for the AOT HLO artifacts
 //!   (train/eval/diag paths), behind `--features xla`.
@@ -11,6 +14,7 @@
 pub mod backend;
 #[cfg(feature = "xla")]
 pub mod engine;
+pub mod kernels;
 pub mod manifest;
 pub mod native;
 

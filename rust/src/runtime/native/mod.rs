@@ -5,9 +5,17 @@
 //! al. 2018): weights live in their 2/3/4/8-bit [`crate::quant::pack::Packed`]
 //! form, activations are quantized to integers per Eq. 1 on entry to every
 //! conv/dense layer, the multiply-accumulate runs in `i32`
-//! ([`gemm::qgemm`]), and a single fp32 rescale by `s_a * s_w` applies
-//! Eq. 2 to the result. Layers the paper keeps in full precision
-//! (`qbits >= 32` families) fall back to an fp32 GEMM.
+//! ([`crate::runtime::kernels::qgemm`]), and a single fp32 rescale by
+//! `s_a * s_w` applies Eq. 2 to the result. Layers the paper keeps in full
+//! precision (`qbits >= 32` families) fall back to an fp32 GEMM.
+//!
+//! All compute routes through the shared kernel layer
+//! ([`crate::runtime::kernels`]): the forward draws every activation,
+//! im2col, and quantized-activation buffer from a caller-provided
+//! [`Workspace`], so the steady-state serving hot path allocates only the
+//! exact-size logits `Vec` it returns (pool buffers never escape), and
+//! the GEMMs run multi-threaded under the workspace's intra-op thread cap
+//! (see [`Backend::set_intra_op_threads`]).
 //!
 //! Unlike the XLA engine, [`NativeEngine`] is `Send`, needs only
 //! `manifest.json` + the family's `params.bin` (no HLO artifacts), and can
@@ -15,12 +23,11 @@
 //! §Backend-trait.
 //!
 //! Submodules: [`arch`] (model-zoo IR mirroring `python/compile/models.py`),
-//! [`gemm`] (fused unpack-and-dot kernels), [`fixture`] (synthetic
-//! manifest/params for artifact-free tests and benches).
+//! [`fixture`] (synthetic manifest/params for artifact-free tests and
+//! benches).
 
 pub mod arch;
 pub mod fixture;
-pub mod gemm;
 
 use std::collections::BTreeMap;
 use std::path::Path;
@@ -30,11 +37,11 @@ use anyhow::{anyhow, bail, ensure, Result};
 use crate::quant::lsq::{self, qrange};
 use crate::quant::pack::{quantize_and_pack, Packed};
 use crate::runtime::backend::Backend;
+use crate::runtime::kernels::{self, check_accumulator_bound, Workspace};
 use crate::runtime::Manifest;
 use crate::tensor::Tensor;
 
 use arch::{Arch, ArchOp, BnSpec, ConvSpec, DenseSpec};
-use gemm::{check_accumulator_bound, im2col, qgemm, sgemm};
 
 /// Weight storage for one matmul layer.
 enum LayerWeights {
@@ -56,7 +63,8 @@ struct RtDense {
     bias: Option<Vec<f32>>,
 }
 
-/// Eval-mode batch norm folded to `y = x * scale + shift` per channel.
+/// Eval-mode batch norm folded to `y = x * scale + shift` per channel
+/// ([`kernels::fold_bn`]).
 struct RtBn {
     scale: Vec<f32>,
     shift: Vec<f32>,
@@ -94,9 +102,8 @@ pub struct NativeModel {
     pub packed_bytes: usize,
 }
 
-const BN_EPS: f32 = 1e-5;
-
-/// Host activation tensor used inside the interpreted forward pass.
+/// Host activation tensor used inside the interpreted forward pass. The
+/// backing `data` buffer cycles through the caller's [`Workspace`] pool.
 struct Act {
     shape: Vec<usize>,
     data: Vec<f32>,
@@ -191,13 +198,7 @@ fn bind_bn(binder: &Binder, spec: &BnSpec) -> Result<RtBn> {
         "{}: inconsistent batch-norm parameter lengths",
         spec.name
     );
-    let mut scale = Vec::with_capacity(gamma.len());
-    let mut shift = Vec::with_capacity(gamma.len());
-    for i in 0..gamma.len() {
-        let s = gamma[i] / (rvar[i] + BN_EPS).sqrt();
-        scale.push(s);
-        shift.push(beta[i] - rmean[i] * s);
-    }
+    let (scale, shift) = kernels::fold_bn(gamma, beta, rmean, rvar);
     Ok(RtBn { scale, shift })
 }
 
@@ -292,9 +293,9 @@ impl NativeModel {
     }
 
     /// Run the quantized forward pass on `rows` images packed into `x`
-    /// (NHWC, `rows * image_len()` floats). Returns `rows * num_classes`
-    /// logits, row-major.
-    pub fn forward(&self, x: &[f32], rows: usize) -> Result<Vec<f32>> {
+    /// (NHWC, `rows * image_len()` floats), drawing all scratch from `ws`.
+    /// Returns `rows * num_classes` logits, row-major.
+    pub fn forward(&self, ws: &mut Workspace, x: &[f32], rows: usize) -> Result<Vec<f32>> {
         ensure!(rows > 0, "empty batch");
         ensure!(
             x.len() == rows * self.image_len(),
@@ -304,12 +305,14 @@ impl NativeModel {
             rows,
             self.image_len()
         );
+        let mut data = ws.take_f32_cap(x.len());
+        data.extend_from_slice(x);
         let mut act = Act {
             shape: vec![rows, self.image, self.image, self.channels],
-            data: x.to_vec(),
+            data,
         };
         for op in &self.ops {
-            act = apply(act, op)?;
+            act = apply(ws, act, op)?;
         }
         ensure!(
             act.shape == [rows, self.num_classes],
@@ -317,100 +320,135 @@ impl NativeModel {
             act.shape,
             self.num_classes
         );
-        Ok(act.data)
+        // The caller owns the returned logits, so hand out a plain
+        // exact-size Vec and keep the pooled buffer: one small
+        // logits-sized allocation per call, never a pool leak (a pooled
+        // buffer escaping here would cascade — each call would burn the
+        // smallest fitting pool entry and re-grow another).
+        let logits = act.data.clone();
+        ws.recycle_f32(act.data);
+        Ok(logits)
     }
 }
 
-fn apply(act: Act, op: &RtOp) -> Result<Act> {
+fn apply(ws: &mut Workspace, act: Act, op: &RtOp) -> Result<Act> {
     Ok(match op {
-        RtOp::Conv(c) => apply_conv(&act, c)?,
-        RtOp::Dense(d) => apply_dense(&act, d)?,
-        RtOp::Bn(b) => apply_bn(act, b)?,
-        RtOp::Relu => {
+        RtOp::Conv(c) => {
+            let out = apply_conv(ws, &act, c)?;
+            ws.recycle_f32(act.data);
+            out
+        }
+        RtOp::Dense(d) => {
+            let out = apply_dense(ws, &act, d)?;
+            ws.recycle_f32(act.data);
+            out
+        }
+        RtOp::Bn(b) => {
             let mut act = act;
-            relu_inplace(&mut act);
+            apply_bn(&mut act, b)?;
             act
         }
-        RtOp::MaxPool2 => apply_maxpool2(&act)?,
-        RtOp::GlobalAvgPool => apply_gap(&act)?,
+        RtOp::Relu => {
+            let mut act = act;
+            kernels::relu(&mut act.data);
+            act
+        }
+        RtOp::MaxPool2 => {
+            let out = apply_maxpool2(ws, &act)?;
+            ws.recycle_f32(act.data);
+            out
+        }
+        RtOp::GlobalAvgPool => {
+            let out = apply_gap(ws, &act)?;
+            ws.recycle_f32(act.data);
+            out
+        }
         RtOp::Flatten => {
             let (b, h, w, c) = act.dims4()?;
             Act { shape: vec![b, h * w * c], data: act.data }
         }
-        RtOp::Preact(p) => apply_preact(act, p)?,
+        RtOp::Preact(p) => apply_preact(ws, act, p)?,
     })
 }
 
-fn relu_inplace(a: &mut Act) {
-    for v in &mut a.data {
-        *v = v.max(0.0);
-    }
-}
-
-fn apply_preact(x: Act, p: &RtPreact) -> Result<Act> {
+fn apply_preact(ws: &mut Workspace, x: Act, p: &RtPreact) -> Result<Act> {
     // Projection shortcut is taken from the pre-activated tensor (as in
     // the original pre-act ResNet), so with a projection `x` can be
-    // consumed outright; only the identity shortcut needs the raw input
-    // kept around.
+    // consumed outright; the identity shortcut keeps `x` alive and runs
+    // bn1 out-of-place into a workspace buffer — no activation clone.
+    let ch = *x.shape.last().unwrap_or(&0);
+    ensure!(ch == p.bn1.scale.len(), "bn1 over {ch} channels, expected {}", p.bn1.scale.len());
     let (pre, sc) = match &p.proj {
         Some(proj) => {
-            let mut pre = apply_bn(x, &p.bn1)?;
-            relu_inplace(&mut pre);
-            let sc = apply_conv(&pre, proj)?;
+            let mut pre = x;
+            kernels::bn_apply(&mut pre.data, &p.bn1.scale, &p.bn1.shift);
+            kernels::relu(&mut pre.data);
+            let sc = apply_conv(ws, &pre, proj)?;
             (pre, sc)
         }
         None => {
-            let mut pre =
-                apply_bn(Act { shape: x.shape.clone(), data: x.data.clone() }, &p.bn1)?;
-            relu_inplace(&mut pre);
-            (pre, x)
+            let mut data = ws.take_f32_any(x.data.len());
+            kernels::bn_apply_out(&x.data, &p.bn1.scale, &p.bn1.shift, &mut data);
+            kernels::relu(&mut data);
+            (Act { shape: x.shape.clone(), data }, x)
         }
     };
-    let mut h = apply_conv(&pre, &p.conv1)?;
-    h = apply_bn(h, &p.bn2)?;
-    relu_inplace(&mut h);
-    let mut h = apply_conv(&h, &p.conv2)?;
-    ensure!(h.shape == sc.shape, "residual shape mismatch: {:?} vs {:?}", h.shape, sc.shape);
-    for (a, b) in h.data.iter_mut().zip(&sc.data) {
+    let mut h = apply_conv(ws, &pre, &p.conv1)?;
+    ws.recycle_f32(pre.data);
+    apply_bn(&mut h, &p.bn2)?;
+    kernels::relu(&mut h.data);
+    let mut out = apply_conv(ws, &h, &p.conv2)?;
+    ws.recycle_f32(h.data);
+    ensure!(out.shape == sc.shape, "residual shape mismatch: {:?} vs {:?}", out.shape, sc.shape);
+    for (a, b) in out.data.iter_mut().zip(&sc.data) {
         *a += b;
     }
-    Ok(h)
+    ws.recycle_f32(sc.data);
+    Ok(out)
 }
 
-/// Quantize an activation buffer to the Eq. 1 integer grid.
-fn quantize_acts(x: &[f32], sa: f32, qn: i64, qp: i64) -> Vec<i32> {
-    x.iter().map(|&v| lsq::quantize_vbar(v, sa, qn, qp) as i32).collect()
+/// Quantize an activation buffer to the Eq. 1 integer grid, into a
+/// workspace buffer.
+fn quantize_acts(ws: &mut Workspace, x: &[f32], sa: f32, qn: i64, qp: i64) -> Vec<i32> {
+    let mut xq = ws.take_i32_cap(x.len());
+    xq.extend(x.iter().map(|&v| lsq::quantize_vbar(v, sa, qn, qp) as i32));
+    xq
 }
 
-fn apply_conv(act: &Act, rt: &RtConv) -> Result<Act> {
+fn apply_conv(ws: &mut Workspace, act: &Act, rt: &RtConv) -> Result<Act> {
     let (b, h, w, c) = act.dims4()?;
     let spec = &rt.spec;
     ensure!(c == spec.in_ch, "{}: input has {c} channels, expected {}", spec.name, spec.in_ch);
     let k = spec.kh * spec.kw * c;
     let n = spec.out_ch;
+    // Pre-size the patch buffer so the pool hands back a fitting
+    // allocation (im2col re-derives the same geometry).
+    let (oh, _) = kernels::same_padding(h, spec.kh, spec.stride);
+    let (ow, _) = kernels::same_padding(w, spec.kw, spec.stride);
+    let rows = b * oh * ow;
     match &rt.wq {
         LayerWeights::Packed { w: pw, sa, act_qn, act_qp } => {
-            let xq = quantize_acts(&act.data, *sa, *act_qn, *act_qp);
-            let mut cols: Vec<i32> = Vec::new();
-            let (oh, ow) = im2col(&xq, 0, b, h, w, c, spec.kh, spec.kw, spec.stride, &mut cols);
-            let rows = b * oh * ow;
-            let mut out = vec![0.0f32; rows * n];
-            qgemm(rows, k, n, &cols, pw, sa * pw.step, None, &mut out);
+            let xq = quantize_acts(ws, &act.data, *sa, *act_qn, *act_qp);
+            let mut cols = ws.take_i32_cap(rows * k);
+            kernels::im2col(&xq, 0, b, h, w, c, spec.kh, spec.kw, spec.stride, &mut cols);
+            ws.recycle_i32(xq);
+            let mut out = ws.take_f32_any(rows * n);
+            kernels::qgemm(ws, rows, k, n, &cols, pw, sa * pw.step, None, &mut out);
+            ws.recycle_i32(cols);
             Ok(Act { shape: vec![b, oh, ow, n], data: out })
         }
         LayerWeights::F32(wv) => {
-            let mut cols: Vec<f32> = Vec::new();
-            let (oh, ow) =
-                im2col(&act.data, 0.0, b, h, w, c, spec.kh, spec.kw, spec.stride, &mut cols);
-            let rows = b * oh * ow;
-            let mut out = vec![0.0f32; rows * n];
-            sgemm(rows, k, n, &cols, wv, None, &mut out);
+            let mut cols = ws.take_f32_cap(rows * k);
+            kernels::im2col(&act.data, 0.0, b, h, w, c, spec.kh, spec.kw, spec.stride, &mut cols);
+            let mut out = ws.take_f32_any(rows * n);
+            kernels::sgemm(ws, rows, k, n, &cols, wv, None, &mut out);
+            ws.recycle_f32(cols);
             Ok(Act { shape: vec![b, oh, ow, n], data: out })
         }
     }
 }
 
-fn apply_dense(act: &Act, rt: &RtDense) -> Result<Act> {
+fn apply_dense(ws: &mut Workspace, act: &Act, rt: &RtDense) -> Result<Act> {
     let spec = &rt.spec;
     let (b, d) = match act.shape[..] {
         [b, d] => (b, d),
@@ -418,85 +456,60 @@ fn apply_dense(act: &Act, rt: &RtDense) -> Result<Act> {
     };
     ensure!(d == spec.in_dim, "{}: input dim {d} != expected {}", spec.name, spec.in_dim);
     let n = spec.out_dim;
-    let mut out = vec![0.0f32; b * n];
+    let mut out = ws.take_f32_any(b * n);
     match &rt.wq {
         LayerWeights::Packed { w: pw, sa, act_qn, act_qp } => {
-            let xq = quantize_acts(&act.data, *sa, *act_qn, *act_qp);
-            qgemm(b, d, n, &xq, pw, sa * pw.step, rt.bias.as_deref(), &mut out);
+            let xq = quantize_acts(ws, &act.data, *sa, *act_qn, *act_qp);
+            kernels::qgemm(ws, b, d, n, &xq, pw, sa * pw.step, rt.bias.as_deref(), &mut out);
+            ws.recycle_i32(xq);
         }
         LayerWeights::F32(wv) => {
-            sgemm(b, d, n, &act.data, wv, rt.bias.as_deref(), &mut out);
+            kernels::sgemm(ws, b, d, n, &act.data, wv, rt.bias.as_deref(), &mut out);
         }
     }
     Ok(Act { shape: vec![b, n], data: out })
 }
 
-fn apply_bn(mut act: Act, bn: &RtBn) -> Result<Act> {
+fn apply_bn(act: &mut Act, bn: &RtBn) -> Result<()> {
     let c = *act.shape.last().unwrap_or(&0);
     ensure!(c == bn.scale.len(), "batch norm over {c} channels, expected {}", bn.scale.len());
-    for chunk in act.data.chunks_exact_mut(c) {
-        for (i, v) in chunk.iter_mut().enumerate() {
-            *v = *v * bn.scale[i] + bn.shift[i];
-        }
-    }
-    Ok(act)
+    kernels::bn_apply(&mut act.data, &bn.scale, &bn.shift);
+    Ok(())
 }
 
-fn apply_maxpool2(act: &Act) -> Result<Act> {
+fn apply_maxpool2(ws: &mut Workspace, act: &Act) -> Result<Act> {
     let (b, h, w, c) = act.dims4()?;
     let (oh, ow) = (h / 2, w / 2);
-    let mut out = vec![f32::NEG_INFINITY; b * oh * ow * c];
-    for bi in 0..b {
-        for oy in 0..oh {
-            for ox in 0..ow {
-                let dst = ((bi * oh + oy) * ow + ox) * c;
-                for dy in 0..2 {
-                    for dx in 0..2 {
-                        let src = ((bi * h + oy * 2 + dy) * w + ox * 2 + dx) * c;
-                        for ch in 0..c {
-                            let v = act.data[src + ch];
-                            if v > out[dst + ch] {
-                                out[dst + ch] = v;
-                            }
-                        }
-                    }
-                }
-            }
-        }
-    }
+    let mut out = ws.take_f32_any(b * oh * ow * c);
+    kernels::maxpool2(&act.data, b, h, w, c, &mut out, None);
     Ok(Act { shape: vec![b, oh, ow, c], data: out })
 }
 
-fn apply_gap(act: &Act) -> Result<Act> {
+fn apply_gap(ws: &mut Workspace, act: &Act) -> Result<Act> {
     let (b, h, w, c) = act.dims4()?;
-    let inv = 1.0 / (h * w) as f32;
-    let mut out = vec![0.0f32; b * c];
-    for bi in 0..b {
-        for p in 0..h * w {
-            let src = (bi * h * w + p) * c;
-            for ch in 0..c {
-                out[bi * c + ch] += act.data[src + ch];
-            }
-        }
-        for ch in 0..c {
-            out[bi * c + ch] *= inv;
-        }
-    }
+    let mut out = ws.take_f32_any(b * c);
+    kernels::global_avg_pool(&act.data, b, h, w, c, &mut out);
     Ok(Act { shape: vec![b, c], data: out })
 }
 
 /// The native inference engine: a [`Manifest`] plus (after
-/// [`Backend::prepare_infer`]) one bound [`NativeModel`].
+/// [`Backend::prepare_infer`]) one bound [`NativeModel`] and the
+/// [`Workspace`] its forward passes reuse.
 pub struct NativeEngine {
     manifest: Manifest,
     model: Option<NativeModel>,
+    ws: Workspace,
 }
 
 impl NativeEngine {
     /// Open the manifest at `dir`. No HLO artifacts or PJRT libraries are
     /// required — only `manifest.json` and the family params bins.
     pub fn new(dir: &Path) -> Result<NativeEngine> {
-        Ok(NativeEngine { manifest: Manifest::load(dir)?, model: None })
+        Ok(NativeEngine {
+            manifest: Manifest::load(dir)?,
+            model: None,
+            ws: Workspace::new(),
+        })
     }
 
     /// The model bound by the last `prepare_infer`, if any.
@@ -527,6 +540,10 @@ impl Backend for NativeEngine {
         false // forward() handles any row count; no padding needed
     }
 
+    fn set_intra_op_threads(&mut self, threads: usize) {
+        self.ws.set_threads(threads);
+    }
+
     fn infer(&mut self, x: &[f32]) -> Result<Vec<f32>> {
         let model = self
             .model
@@ -539,6 +556,6 @@ impl Backend for NativeEngine {
             "input length {} is not a multiple of image_len {il}",
             x.len()
         );
-        model.forward(x, x.len() / il)
+        model.forward(&mut self.ws, x, x.len() / il)
     }
 }

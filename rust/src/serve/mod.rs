@@ -18,8 +18,14 @@
 //!    the serve bench (EXPERIMENTS.md §Perf L3).
 //!
 //! With the native backend this runs entirely from packed weights and
-//! scales across cores; with the XLA backend `replicas > 1` simply opens
-//! one PJRT client per worker (same memory model as the sweep coordinator).
+//! scales across cores on two axes: replicas (inter-op) and the kernel
+//! layer's row-block threading (intra-op). `Server::start` partitions the
+//! host's cores across replicas via
+//! [`crate::runtime::Backend::set_intra_op_threads`]
+//! (`ServerConfig::intra_threads`, default `cores / replicas`) so the two
+//! axes never oversubscribe. With the XLA backend `replicas > 1` simply
+//! opens one PJRT client per worker (same memory model as the sweep
+//! coordinator).
 
 use std::path::Path;
 use std::sync::atomic::{AtomicBool, Ordering};
@@ -143,6 +149,11 @@ pub struct ServerConfig {
     pub queue_depth: usize,
     /// Engine replicas (worker threads). Clamped to at least 1.
     pub replicas: usize,
+    /// Intra-op kernel threads *per replica*
+    /// ([`crate::runtime::Backend::set_intra_op_threads`]). 0 = auto:
+    /// `hardware_threads / replicas`, so the deployment never
+    /// oversubscribes (`LSQNET_THREADS` still caps process-wide).
+    pub intra_threads: usize,
 }
 
 impl Server {
@@ -186,6 +197,13 @@ impl Server {
         let stats = Arc::new(Mutex::new(ServeStats::default()));
 
         let replicas = cfg.replicas.max(1);
+        // Partition the host's cores across replicas unless the caller
+        // pinned an explicit per-replica intra-op width.
+        let intra_threads = if cfg.intra_threads == 0 {
+            (crate::runtime::kernels::hardware_threads() / replicas).max(1)
+        } else {
+            cfg.intra_threads
+        };
         let mut handles = Vec::with_capacity(replicas);
         for rid in 0..replicas {
             let spec = cfg.backend.clone();
@@ -199,8 +217,16 @@ impl Server {
                 .name(format!("lsq-serve-{rid}"))
                 .spawn(move || {
                     if let Err(e) = replica_loop(
-                        &spec, &family, &params, &shared_rx, &stop, &stats, max_wait, classes,
+                        &spec,
+                        &family,
+                        &params,
+                        &shared_rx,
+                        &stop,
+                        &stats,
+                        max_wait,
+                        classes,
                         image_len,
+                        intra_threads,
                     ) {
                         eprintln!("serve replica {rid}: {e:#}");
                     }
@@ -270,8 +296,10 @@ fn replica_loop(
     max_wait: Duration,
     classes: usize,
     image_len: usize,
+    intra_threads: usize,
 ) -> Result<()> {
     let mut backend = spec.open()?;
+    backend.set_intra_op_threads(intra_threads);
     backend.prepare_infer(family, params)?;
     let batch = backend.batch();
     let mut pending: Vec<Request> = Vec::with_capacity(batch);

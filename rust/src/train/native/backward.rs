@@ -5,22 +5,31 @@
 //!
 //! Training runs *fake quantization* in f32, exactly like the Python train
 //! path (`python/compile/layers.py`): weights and input activations pass
-//! through Eq. 1-2 elementwise, the matmul itself is fp32
-//! ([`sgemm`]), and full-precision master weights receive the gradients
-//! (Courbariaux et al. 2015). The backward is a tape walk:
+//! through Eq. 1-2 elementwise, the matmul itself is fp32, and
+//! full-precision master weights receive the gradients (Courbariaux et
+//! al. 2015). All compute — GEMMs, im2col and its adjoint, pooling, batch
+//! norm — routes through the shared kernel layer
+//! ([`crate::runtime::kernels`]); this module is the *tape*: what to save
+//! on the way forward, and which adjoints to chain on the way back:
 //!
-//! * matmul layers: `dŴ = X̂ᵀ·dY` ([`sgemm_tn`]), `dX̂ = dY·Ŵᵀ`
-//!   ([`sgemm_nt`]), convolutions scatter `dX̂` back through the im2col
-//!   adjoint ([`col2im`]);
+//! * matmul layers: `dŴ = X̂ᵀ·dY` ([`kernels::sgemm_tn`]), `dX̂ = dY·Ŵᵀ`
+//!   ([`kernels::sgemm_nt`]), convolutions scatter `dX̂` back through the
+//!   im2col adjoint ([`kernels::col2im`]);
 //! * quantizers: the Eq. 5 STE mask gates `dX̂`/`dŴ` onto the raw inputs,
 //!   and the Eq. 3 term (or a method-ablation variant, [`Method`])
 //!   reduces to the step-size gradient, scaled by the Section-2.2
 //!   `g = 1/√(N·Qp)` ([`gradscale_value`]) — N is the weight count for
 //!   `sw` and the trailing feature count for `sa`, mirroring
 //!   `layers._quantize_pair`;
-//! * batch norm trains on batch statistics with the standard three-term
-//!   backward and emits functional running-stat updates
+//! * batch norm trains on batch statistics ([`kernels::bn_batch_stats`],
+//!   [`kernels::bn_bwd`]) and emits functional running-stat updates
 //!   (momentum 0.9, eps 1e-5, as in `layers.batchnorm`).
+//!
+//! Every tape buffer (im2col patches, quantized operands, saved raw
+//! inputs, normalized activations, ReLU masks, argmax maps) cycles
+//! through the caller's [`Workspace`], so one `NativeTrainer` step
+//! allocates only what it hands back — gradient tensors, the exact-size
+//! logits copy, and the functional BN stat updates.
 //!
 //! Every formula here is checked against central differences of the
 //! STE-consistent surrogate in `tests/grad_check.rs` (see
@@ -31,8 +40,8 @@ use std::collections::BTreeMap;
 use anyhow::{anyhow, bail, ensure, Result};
 
 use crate::quant::lsq::{self, grad_v_mask, qrange};
+use crate::runtime::kernels::{self, Workspace};
 use crate::runtime::native::arch::{self, Arch, ArchOp, BnSpec, ConvSpec, DenseSpec};
-use crate::runtime::native::gemm::{col2im, im2col, sgemm, sgemm_nt, sgemm_tn};
 use crate::runtime::{Family, Manifest};
 use crate::tensor::{numel, Tensor};
 
@@ -40,8 +49,8 @@ use super::grad::{gradscale_value, softmax_xent, Method};
 
 /// BN hyper-parameters, shared with `python/compile/layers.py`.
 pub const BN_MOMENTUM: f32 = 0.9;
-/// BN variance epsilon (matches `layers.BN_EPS`).
-pub const BN_EPS: f32 = 1e-5;
+/// BN variance epsilon (canonical value lives in the kernel layer).
+pub const BN_EPS: f32 = kernels::BN_EPS;
 
 // ---------------------------------------------------------------------------
 // Activation buffer
@@ -119,7 +128,6 @@ struct MatmulTape {
 /// Batch-norm training context.
 struct BnTape {
     ch: usize,
-    rows: usize,
     /// Normalized activations `(x−μ)·inv`, pre-γβ.
     xhat: Vec<f32>,
     /// `1/√(var+eps)` per channel.
@@ -203,7 +211,9 @@ pub struct StepOutput {
 /// A model family bound for *training*: the arch IR plus parameter/gradient
 /// index maps. Unlike [`crate::runtime::native::NativeModel`] (which packs
 /// weights once for serving), this holds no parameter state — every call
-/// takes the current `params` so the optimizer owns the master copies.
+/// takes the current `params` so the optimizer owns the master copies —
+/// and no scratch: compute scratch comes from the caller's [`Workspace`]
+/// (the trainer owns one and reuses it every step).
 pub struct NativeTrainModel {
     arch: Arch,
     family: String,
@@ -312,18 +322,21 @@ impl NativeTrainModel {
 
     fn forward_pass(
         &self,
+        ws: &mut Workspace,
         params: &[Tensor],
         x: &[f32],
         rows: usize,
         pass: &mut Pass,
     ) -> Result<Buf> {
         self.check_input(x, rows)?;
+        let mut data = ws.take_f32_cap(x.len());
+        data.extend_from_slice(x);
         let mut act = Buf {
             shape: vec![rows, self.image, self.image, self.channels],
-            data: x.to_vec(),
+            data,
         };
         for op in &self.arch.ops {
-            act = self.apply_op(params, act, op, pass)?;
+            act = self.apply_op(ws, params, act, op, pass)?;
         }
         ensure!(
             act.shape == [rows, self.num_classes],
@@ -334,31 +347,40 @@ impl NativeTrainModel {
         Ok(act)
     }
 
-    fn apply_op(&self, params: &[Tensor], act: Buf, op: &ArchOp, pass: &mut Pass) -> Result<Buf> {
+    fn apply_op(
+        &self,
+        ws: &mut Workspace,
+        params: &[Tensor],
+        act: Buf,
+        op: &ArchOp,
+        pass: &mut Pass,
+    ) -> Result<Buf> {
         Ok(match op {
             ArchOp::Conv(c) => {
-                let (out, t) = self.fwd_conv(params, &act, c, pass)?;
+                let (out, t) = self.fwd_conv(ws, params, &act, c, pass)?;
+                ws.recycle_f32(act.data);
                 if let (Pass::Train { tape, .. }, Some(t)) = (&mut *pass, t) {
                     tape.push(Tape::Matmul(t));
                 }
                 out
             }
             ArchOp::Dense(d) => {
-                let (out, t) = self.fwd_dense(params, &act, d, pass)?;
+                let (out, t) = self.fwd_dense(ws, params, &act, d, pass)?;
+                ws.recycle_f32(act.data);
                 if let (Pass::Train { tape, .. }, Some(t)) = (&mut *pass, t) {
                     tape.push(Tape::Matmul(t));
                 }
                 out
             }
             ArchOp::BatchNorm(b) => {
-                let (out, t) = self.fwd_bn(params, act, b, pass)?;
+                let (out, t) = self.fwd_bn(ws, params, act, b, pass)?;
                 if let (Pass::Train { tape, .. }, Some(t)) = (&mut *pass, t) {
                     tape.push(Tape::Bn(t));
                 }
                 out
             }
             ArchOp::Relu => {
-                let (out, mask) = fwd_relu(act, pass.is_train());
+                let (out, mask) = fwd_relu(ws, act, pass.is_train());
                 if let (Pass::Train { tape, .. }, Some(m)) = (&mut *pass, mask) {
                     tape.push(Tape::Relu(m));
                 }
@@ -366,7 +388,8 @@ impl NativeTrainModel {
             }
             ArchOp::MaxPool2 => {
                 let (b, h, w, c) = act.dims4()?;
-                let (out, argmax) = fwd_maxpool2(&act, pass.is_train())?;
+                let (out, argmax) = fwd_maxpool2(ws, &act, pass.is_train())?;
+                ws.recycle_f32(act.data);
                 if let (Pass::Train { tape, .. }, Some(a)) = (&mut *pass, argmax) {
                     tape.push(Tape::MaxPool2 { argmax: a, in_shape: [b, h, w, c] });
                 }
@@ -374,7 +397,8 @@ impl NativeTrainModel {
             }
             ArchOp::GlobalAvgPool => {
                 let (b, h, w, c) = act.dims4()?;
-                let out = fwd_gap(&act)?;
+                let out = fwd_gap(ws, &act)?;
+                ws.recycle_f32(act.data);
                 if let Pass::Train { tape, .. } = pass {
                     tape.push(Tape::Gap { in_shape: [b, h, w, c] });
                 }
@@ -388,7 +412,7 @@ impl NativeTrainModel {
                 Buf { shape: vec![b, h * w * c], data: act.data }
             }
             ArchOp::Preact(p) => {
-                let (out, t) = self.fwd_preact(params, act, p, pass)?;
+                let (out, t) = self.fwd_preact(ws, params, act, p, pass)?;
                 if let (Pass::Train { tape, .. }, Some(t)) = (&mut *pass, t) {
                     tape.push(Tape::Preact(Box::new(t)));
                 }
@@ -400,10 +424,11 @@ impl NativeTrainModel {
     /// Quantize one matmul operand pair for training, recording the
     /// quantizer contexts. Returns `(x_hat, w_hat, aq, wq)` — raw
     /// passthrough (and a collect stat) when `pass` is `Collect` or the
-    /// layer is full precision.
+    /// layer is full precision. All returned buffers come from `ws`.
     #[allow(clippy::type_complexity, clippy::too_many_arguments)]
     fn quantize_pair(
         &self,
+        ws: &mut Workspace,
         params: &[Tensor],
         name: &str,
         bits: u32,
@@ -414,26 +439,28 @@ impl NativeTrainModel {
         pass: &mut Pass,
     ) -> Result<(Vec<f32>, Vec<f32>, Option<QuantSave>, Option<QuantSave>)> {
         if bits >= 32 {
-            return Ok((x.to_vec(), w.to_vec(), None, None));
+            return Ok((copy_into_ws(ws, x), copy_into_ws(ws, w), None, None));
         }
         let (aqn, aqp) = qrange(bits, signed_act);
         if let Pass::Collect { stats } = pass {
             let mean_abs = x.iter().map(|v| v.abs() as f64).sum::<f64>() / x.len().max(1) as f64;
             stats.push(ActStat { sa_name: format!("{name}.sa"), mean_abs, qp: aqp });
-            return Ok((x.to_vec(), w.to_vec(), None, None));
+            return Ok((copy_into_ws(ws, x), copy_into_ws(ws, w), None, None));
         }
         let (wqn, wqp) = qrange(bits, true);
         let sw = self.scalar(params, &format!("{name}.sw"))?;
         let sa = self.scalar(params, &format!("{name}.sa"))?;
         ensure!(sw > 0.0 && sa > 0.0, "{name}: non-positive step size (sw={sw}, sa={sa})");
-        let x_hat: Vec<f32> = x.iter().map(|&v| lsq::quantize(v, sa, aqn, aqp)).collect();
-        let w_hat: Vec<f32> = w.iter().map(|&v| lsq::quantize(v, sw, wqn, wqp)).collect();
+        let mut x_hat = ws.take_f32_cap(x.len());
+        x_hat.extend(x.iter().map(|&v| lsq::quantize(v, sa, aqn, aqp)));
+        let mut w_hat = ws.take_f32_cap(w.len());
+        w_hat.extend(w.iter().map(|&v| lsq::quantize(v, sw, wqn, wqp)));
         let (aq, wq) = if pass.is_train() {
             let g_a = gradscale_value(n_feat, aqp, &self.gscale_mode)?;
             let g_w = gradscale_value(w.len(), wqp, &self.gscale_mode)?;
             (
                 Some(QuantSave {
-                    raw: x.to_vec(),
+                    raw: copy_into_ws(ws, x),
                     s: sa,
                     qn: aqn,
                     qp: aqp,
@@ -441,7 +468,7 @@ impl NativeTrainModel {
                     g_idx: self.grad_slot(&format!("{name}.sa"))?,
                 }),
                 Some(QuantSave {
-                    raw: w.to_vec(),
+                    raw: copy_into_ws(ws, w),
                     s: sw,
                     qn: wqn,
                     qp: wqp,
@@ -457,6 +484,7 @@ impl NativeTrainModel {
 
     fn fwd_conv(
         &self,
+        ws: &mut Workspace,
         params: &[Tensor],
         act: &Buf,
         spec: &ConvSpec,
@@ -472,6 +500,7 @@ impl NativeTrainModel {
             wt.shape
         );
         let (x_hat, w_hat, aq, wq) = self.quantize_pair(
+            ws,
             params,
             &spec.name,
             spec.bits,
@@ -483,11 +512,16 @@ impl NativeTrainModel {
         )?;
         let k = spec.kh * spec.kw * c;
         let n = spec.out_ch;
-        let mut cols: Vec<f32> = Vec::new();
-        let (oh, ow) = im2col(&x_hat, 0.0, b, h, w, c, spec.kh, spec.kw, spec.stride, &mut cols);
+        // Pre-size the patch buffer so the pool hands back a fitting
+        // allocation (im2col re-derives the same geometry).
+        let (oh, _) = kernels::same_padding(h, spec.kh, spec.stride);
+        let (ow, _) = kernels::same_padding(w, spec.kw, spec.stride);
         let m = b * oh * ow;
-        let mut out = vec![0.0f32; m * n];
-        sgemm(m, k, n, &cols, &w_hat, None, &mut out);
+        let mut cols = ws.take_f32_cap(m * k);
+        kernels::im2col(&x_hat, 0.0, b, h, w, c, spec.kh, spec.kw, spec.stride, &mut cols);
+        ws.recycle_f32(x_hat);
+        let mut out = ws.take_f32_any(m * n);
+        kernels::sgemm(ws, m, k, n, &cols, &w_hat, None, &mut out);
         let tape = if pass.is_train() {
             Some(MatmulTape {
                 m,
@@ -502,6 +536,8 @@ impl NativeTrainModel {
                 conv: Some(ConvGeom { b, h, w, c, kh: spec.kh, kw: spec.kw, stride: spec.stride }),
             })
         } else {
+            ws.recycle_f32(cols);
+            ws.recycle_f32(w_hat);
             None
         };
         Ok((Buf { shape: vec![b, oh, ow, n], data: out }, tape))
@@ -509,6 +545,7 @@ impl NativeTrainModel {
 
     fn fwd_dense(
         &self,
+        ws: &mut Workspace,
         params: &[Tensor],
         act: &Buf,
         spec: &DenseSpec,
@@ -524,6 +561,7 @@ impl NativeTrainModel {
             wt.shape
         );
         let (x_hat, w_hat, aq, wq) = self.quantize_pair(
+            ws,
             params,
             &spec.name,
             spec.bits,
@@ -538,12 +576,12 @@ impl NativeTrainModel {
         let bias = match self.pidx.get(&bias_name) {
             Some(&i) => {
                 ensure!(params[i].numel() == n, "{bias_name} wrong length");
-                Some(params[i].f32s()?.to_vec())
+                Some(params[i].f32s()?)
             }
             None => None,
         };
-        let mut out = vec![0.0f32; m * n];
-        sgemm(m, d, n, &x_hat, &w_hat, bias.as_deref(), &mut out);
+        let mut out = ws.take_f32_any(m * n);
+        kernels::sgemm(ws, m, d, n, &x_hat, &w_hat, bias, &mut out);
         let tape = if pass.is_train() {
             Some(MatmulTape {
                 m,
@@ -552,12 +590,14 @@ impl NativeTrainModel {
                 cols: x_hat,
                 w_hat,
                 w_gidx: self.grad_slot(&format!("{}.w", spec.name))?,
-                b_gidx: bias.as_ref().map(|_| self.grad_slot(&bias_name)).transpose()?,
+                b_gidx: bias.map(|_| self.grad_slot(&bias_name)).transpose()?,
                 aq,
                 wq,
                 conv: None,
             })
         } else {
+            ws.recycle_f32(x_hat);
+            ws.recycle_f32(w_hat);
             None
         };
         Ok((Buf { shape: vec![m, n], data: out }, tape))
@@ -565,6 +605,7 @@ impl NativeTrainModel {
 
     fn fwd_bn(
         &self,
+        ws: &mut Workspace,
         params: &[Tensor],
         mut act: Buf,
         spec: &BnSpec,
@@ -579,29 +620,7 @@ impl NativeTrainModel {
 
         let (mean, var) = if pass.is_train() || pass.is_collect() {
             // Batch statistics (biased variance, like jnp.var).
-            let mut mean = vec![0.0f64; ch];
-            let mut var = vec![0.0f64; ch];
-            for chunk in act.data.chunks_exact(ch) {
-                for (i, &v) in chunk.iter().enumerate() {
-                    mean[i] += v as f64;
-                }
-            }
-            for m in mean.iter_mut() {
-                *m /= rows as f64;
-            }
-            for chunk in act.data.chunks_exact(ch) {
-                for (i, &v) in chunk.iter().enumerate() {
-                    let d = v as f64 - mean[i];
-                    var[i] += d * d;
-                }
-            }
-            for v in var.iter_mut() {
-                *v /= rows as f64;
-            }
-            (
-                mean.iter().map(|&v| v as f32).collect::<Vec<f32>>(),
-                var.iter().map(|&v| v as f32).collect::<Vec<f32>>(),
-            )
+            kernels::bn_batch_stats(&act.data, ch)
         } else {
             (
                 self.param(params, &format!("{}.rmean", spec.name))?.f32s()?.to_vec(),
@@ -610,21 +629,13 @@ impl NativeTrainModel {
         };
 
         let train = pass.is_train();
-        let inv: Vec<f32> = var.iter().map(|&v| 1.0 / (v + BN_EPS).sqrt()).collect();
+        let inv: Vec<f32> = var.iter().map(|&v| 1.0 / (v + kernels::BN_EPS).sqrt()).collect();
         let mut xhat = if train {
-            Vec::with_capacity(act.data.len())
+            Some(ws.take_f32_cap(act.data.len()))
         } else {
-            Vec::new()
+            None
         };
-        for chunk in act.data.chunks_exact_mut(ch) {
-            for (i, v) in chunk.iter_mut().enumerate() {
-                let nx = (*v - mean[i]) * inv[i];
-                if train {
-                    xhat.push(nx);
-                }
-                *v = nx * gamma[i] + beta[i];
-            }
-        }
+        kernels::bn_normalize(&mut act.data, &mean, &inv, &gamma, beta, xhat.as_mut());
 
         let tape = if let Pass::Train { state_out, .. } = pass {
             // Functional running-stat updates (mirrors layers.batchnorm).
@@ -654,8 +665,7 @@ impl NativeTrainModel {
             state_out.push((rvar_idx, Tensor::from_f32(&[ch], new_rvar)));
             Some(BnTape {
                 ch,
-                rows,
-                xhat,
+                xhat: xhat.unwrap(),
                 inv,
                 gamma,
                 gamma_gidx: self.grad_slot(&format!("{}.gamma", spec.name))?,
@@ -669,35 +679,48 @@ impl NativeTrainModel {
 
     fn fwd_preact(
         &self,
+        ws: &mut Workspace,
         params: &[Tensor],
         x: Buf,
         p: &arch::PreactSpec,
         pass: &mut Pass,
     ) -> Result<(Buf, Option<PreactTape>)> {
         // pre = relu(bn1(x)); shortcut from `pre` when projecting, raw x
-        // otherwise (mirrors runtime::native::apply_preact).
+        // otherwise (mirrors runtime::native::apply_preact). The identity
+        // shortcut keeps the input alive via a workspace copy (training BN
+        // normalizes in place, so it cannot borrow `x` like the eval path).
         let x_copy = if p.proj.is_none() {
-            Some(Buf { shape: x.shape.clone(), data: x.data.clone() })
+            let mut data = ws.take_f32_cap(x.data.len());
+            data.extend_from_slice(&x.data);
+            Some(Buf { shape: x.shape.clone(), data })
         } else {
             None
         };
-        let (pre, bn1_t) = self.fwd_bn(params, x, &p.bn1, pass)?;
-        let (pre, relu1_m) = fwd_relu(pre, pass.is_train());
+        let (pre, bn1_t) = self.fwd_bn(ws, params, x, &p.bn1, pass)?;
+        let (pre, relu1_m) = fwd_relu(ws, pre, pass.is_train());
         let (sc, proj_t) = match &p.proj {
             Some(proj) => {
-                let (sc, t) = self.fwd_conv(params, &pre, proj, pass)?;
+                let (sc, t) = self.fwd_conv(ws, params, &pre, proj, pass)?;
                 (sc, t)
             }
             None => (x_copy.unwrap(), None),
         };
-        let (h, conv1_t) = self.fwd_conv(params, &pre, &p.conv1, pass)?;
-        let (h, bn2_t) = self.fwd_bn(params, h, &p.bn2, pass)?;
-        let (h, relu2_m) = fwd_relu(h, pass.is_train());
-        let (mut h, conv2_t) = self.fwd_conv(params, &h, &p.conv2, pass)?;
-        ensure!(h.shape == sc.shape, "residual shape mismatch: {:?} vs {:?}", h.shape, sc.shape);
-        for (a, b) in h.data.iter_mut().zip(&sc.data) {
+        let (h, conv1_t) = self.fwd_conv(ws, params, &pre, &p.conv1, pass)?;
+        ws.recycle_f32(pre.data);
+        let (h, bn2_t) = self.fwd_bn(ws, params, h, &p.bn2, pass)?;
+        let (h, relu2_m) = fwd_relu(ws, h, pass.is_train());
+        let (mut out, conv2_t) = self.fwd_conv(ws, params, &h, &p.conv2, pass)?;
+        ws.recycle_f32(h.data);
+        ensure!(
+            out.shape == sc.shape,
+            "residual shape mismatch: {:?} vs {:?}",
+            out.shape,
+            sc.shape
+        );
+        for (a, b) in out.data.iter_mut().zip(&sc.data) {
             *a += b;
         }
+        ws.recycle_f32(sc.data);
         let tape = if pass.is_train() {
             Some(PreactTape {
                 bn1: bn1_t.unwrap(),
@@ -711,15 +734,25 @@ impl NativeTrainModel {
         } else {
             None
         };
-        Ok((h, tape))
+        Ok((out, tape))
     }
 
     // -- public entry points -------------------------------------------------
 
     /// Inference forward (eval-mode BN, quantizers active): returns
-    /// `rows × num_classes` logits.
-    pub fn forward_eval(&self, params: &[Tensor], x: &[f32], rows: usize) -> Result<Vec<f32>> {
-        Ok(self.forward_pass(params, x, rows, &mut Pass::Eval)?.data)
+    /// `rows × num_classes` logits. Scratch comes from `ws`.
+    pub fn forward_eval(
+        &self,
+        ws: &mut Workspace,
+        params: &[Tensor],
+        x: &[f32],
+        rows: usize,
+    ) -> Result<Vec<f32>> {
+        let out = self.forward_pass(ws, params, x, rows, &mut Pass::Eval)?;
+        // Exact-size copy out; the pooled buffer stays in the workspace.
+        let logits = out.data.clone();
+        ws.recycle_f32(out.data);
+        Ok(logits)
     }
 
     /// Section-2.1 collect pass over one (unaugmented) batch: runs the
@@ -727,20 +760,25 @@ impl NativeTrainModel {
     /// quantizer, for the `2⟨|v|⟩/√Qp` activation-step init.
     pub fn collect_act_stats(
         &self,
+        ws: &mut Workspace,
         params: &[Tensor],
         x: &[f32],
         rows: usize,
     ) -> Result<Vec<ActStat>> {
         let mut stats = Vec::new();
-        self.forward_pass(params, x, rows, &mut Pass::Collect { stats: &mut stats })?;
+        let mut pass = Pass::Collect { stats: &mut stats };
+        let out = self.forward_pass(ws, params, x, rows, &mut pass)?;
+        ws.recycle_f32(out.data);
         Ok(stats)
     }
 
     /// One training forward+backward on a batch: softmax cross-entropy
     /// loss, gradients for every `Family::grad_names` slot, and the
-    /// functional BN state updates.
+    /// functional BN state updates. All tape and gradient staging buffers
+    /// cycle through `ws`.
     pub fn loss_and_grads(
         &self,
+        ws: &mut Workspace,
         params: &[Tensor],
         x: &[f32],
         y: &[i32],
@@ -750,6 +788,7 @@ impl NativeTrainModel {
         let mut tape: Vec<Tape> = Vec::new();
         let mut state_out: Vec<(usize, Tensor)> = Vec::new();
         let logits = self.forward_pass(
+            ws,
             params,
             x,
             rows,
@@ -760,40 +799,74 @@ impl NativeTrainModel {
             self.grad_shapes.iter().map(|s| vec![0.0f32; numel(s)]).collect();
         let mut d = Buf { shape: vec![rows, self.num_classes], data: dlogits };
         for entry in tape.iter().rev() {
-            d = self.bwd_op(entry, d, &mut grads)?;
+            d = self.bwd_op(ws, entry, d, &mut grads)?;
         }
+        ws.recycle_f32(d.data);
+        recycle_tape(ws, tape);
         let grads = grads
             .into_iter()
             .zip(&self.grad_shapes)
             .map(|(g, s)| Tensor::from_f32(s, g))
             .collect();
-        Ok(StepOutput { loss, ncorrect, logits: logits.data, grads, state_updates: state_out })
+        // Hand the caller an exact-size logits Vec and keep the pooled
+        // buffer — a pool buffer escaping through StepOutput would leak
+        // one pool entry per step (see NativeModel::forward).
+        let out_logits = logits.data.clone();
+        ws.recycle_f32(logits.data);
+        Ok(StepOutput { loss, ncorrect, logits: out_logits, grads, state_updates: state_out })
     }
 
     // -- backward ------------------------------------------------------------
 
-    fn bwd_op(&self, entry: &Tape, dy: Buf, grads: &mut [Vec<f32>]) -> Result<Buf> {
+    fn bwd_op(
+        &self,
+        ws: &mut Workspace,
+        entry: &Tape,
+        dy: Buf,
+        grads: &mut [Vec<f32>],
+    ) -> Result<Buf> {
         Ok(match entry {
-            Tape::Matmul(t) => self.bwd_matmul(t, dy, grads)?,
+            Tape::Matmul(t) => self.bwd_matmul(ws, t, dy, grads)?,
             Tape::Bn(t) => bwd_bn(t, dy, grads)?,
-            Tape::Relu(mask) => bwd_relu(mask, dy),
-            Tape::MaxPool2 { argmax, in_shape } => bwd_maxpool2(argmax, in_shape, dy)?,
-            Tape::Gap { in_shape } => bwd_gap(in_shape, dy)?,
-            Tape::Flatten { in_shape } => {
-                Buf { shape: in_shape.to_vec(), data: dy.data }
+            Tape::Relu(mask) => {
+                let mut dy = dy;
+                kernels::relu_bwd(mask, &mut dy.data);
+                dy
             }
-            Tape::Preact(t) => self.bwd_preact(t, dy, grads)?,
+            Tape::MaxPool2 { argmax, in_shape } => {
+                ensure!(dy.data.len() == argmax.len(), "maxpool backward shape");
+                let mut dx = ws.take_f32_any(in_shape.iter().product());
+                kernels::maxpool2_bwd(argmax, &dy.data, &mut dx);
+                ws.recycle_f32(dy.data);
+                Buf { shape: in_shape.to_vec(), data: dx }
+            }
+            Tape::Gap { in_shape } => {
+                let [b, h, w, c] = *in_shape;
+                ensure!(dy.data.len() == b * c, "gap backward shape");
+                let mut dx = ws.take_f32_any(b * h * w * c);
+                kernels::global_avg_pool_bwd(&dy.data, b, h, w, c, &mut dx);
+                ws.recycle_f32(dy.data);
+                Buf { shape: in_shape.to_vec(), data: dx }
+            }
+            Tape::Flatten { in_shape } => Buf { shape: in_shape.to_vec(), data: dy.data },
+            Tape::Preact(t) => self.bwd_preact(ws, t, dy, grads)?,
         })
     }
 
-    fn bwd_matmul(&self, t: &MatmulTape, dy: Buf, grads: &mut [Vec<f32>]) -> Result<Buf> {
+    fn bwd_matmul(
+        &self,
+        ws: &mut Workspace,
+        t: &MatmulTape,
+        dy: Buf,
+        grads: &mut [Vec<f32>],
+    ) -> Result<Buf> {
         let (m, k, n) = (t.m, t.k, t.n);
         ensure!(dy.data.len() == m * n, "matmul backward: dY has wrong shape");
 
         // dŴ = X̂ᵀ · dY, then through the weight quantizer (Eq. 5 mask on
         // the raw weights, Eq. 3 reduction to dsw).
-        let mut dw_hat = vec![0.0f32; k * n];
-        sgemm_tn(m, k, n, &t.cols, &dy.data, &mut dw_hat);
+        let mut dw_hat = ws.take_f32_any(k * n);
+        kernels::sgemm_tn(ws, m, k, n, &t.cols, &dy.data, &mut dw_hat);
         match &t.wq {
             Some(q) => {
                 let mut ds = 0.0f64;
@@ -812,6 +885,7 @@ impl NativeTrainModel {
                 }
             }
         }
+        ws.recycle_f32(dw_hat);
 
         // db = column sums of dY.
         if let Some(bg) = t.b_gidx {
@@ -827,12 +901,14 @@ impl NativeTrainModel {
         // dX̂ = dY · Ŵᵀ; convolutions scatter back through the im2col
         // adjoint so each input element accumulates over every patch that
         // read it.
-        let mut dcols = vec![0.0f32; m * k];
-        sgemm_nt(m, k, n, &dy.data, &t.w_hat, &mut dcols);
+        let mut dcols = ws.take_f32_any(m * k);
+        kernels::sgemm_nt(ws, m, k, n, &dy.data, &t.w_hat, &mut dcols);
+        ws.recycle_f32(dy.data);
         let (mut dxhat, in_shape): (Vec<f32>, Vec<usize>) = match &t.conv {
             Some(g) => {
-                let mut dx = vec![0.0f32; g.b * g.h * g.w * g.c];
-                col2im(&dcols, g.b, g.h, g.w, g.c, g.kh, g.kw, g.stride, &mut dx);
+                let mut dx = ws.take_f32(g.b * g.h * g.w * g.c);
+                kernels::col2im(&dcols, g.b, g.h, g.w, g.c, g.kh, g.kw, g.stride, &mut dx);
+                ws.recycle_f32(dcols);
                 (dx, vec![g.b, g.h, g.w, g.c])
             }
             None => (dcols, vec![m, k]),
@@ -852,30 +928,40 @@ impl NativeTrainModel {
         Ok(Buf { shape: in_shape, data: dxhat })
     }
 
-    fn bwd_preact(&self, t: &PreactTape, dy: Buf, grads: &mut [Vec<f32>]) -> Result<Buf> {
+    fn bwd_preact(
+        &self,
+        ws: &mut Workspace,
+        t: &PreactTape,
+        dy: Buf,
+        grads: &mut [Vec<f32>],
+    ) -> Result<Buf> {
         // Residual: dout feeds both the conv branch and the shortcut.
-        let d_sc = Buf { shape: dy.shape.clone(), data: dy.data.clone() };
-        let d = self.bwd_matmul(&t.conv2, dy, grads)?;
-        let d = bwd_relu(&t.relu2, d);
+        let mut sc_data = ws.take_f32_cap(dy.data.len());
+        sc_data.extend_from_slice(&dy.data);
+        let d_sc = Buf { shape: dy.shape.clone(), data: sc_data };
+        let mut d = self.bwd_matmul(ws, &t.conv2, dy, grads)?;
+        kernels::relu_bwd(&t.relu2, &mut d.data);
         let d = bwd_bn(&t.bn2, d, grads)?;
-        let mut d_pre = self.bwd_matmul(&t.conv1, d, grads)?;
+        let mut d_pre = self.bwd_matmul(ws, &t.conv1, d, grads)?;
         match &t.proj {
             Some(proj) => {
-                let d_proj = self.bwd_matmul(proj, d_sc, grads)?;
+                let d_proj = self.bwd_matmul(ws, proj, d_sc, grads)?;
                 ensure!(d_proj.shape == d_pre.shape, "preact backward shape mismatch");
                 for (a, b) in d_pre.data.iter_mut().zip(&d_proj.data) {
                     *a += b;
                 }
-                let d = bwd_relu(&t.relu1, d_pre);
-                bwd_bn(&t.bn1, d, grads)
+                ws.recycle_f32(d_proj.data);
+                kernels::relu_bwd(&t.relu1, &mut d_pre.data);
+                bwd_bn(&t.bn1, d_pre, grads)
             }
             None => {
-                let d = bwd_relu(&t.relu1, d_pre);
-                let mut dx = bwd_bn(&t.bn1, d, grads)?;
+                kernels::relu_bwd(&t.relu1, &mut d_pre.data);
+                let mut dx = bwd_bn(&t.bn1, d_pre, grads)?;
                 ensure!(dx.shape == d_sc.shape, "preact backward shape mismatch");
                 for (a, b) in dx.data.iter_mut().zip(&d_sc.data) {
                     *a += b;
                 }
+                ws.recycle_f32(d_sc.data);
                 Ok(dx)
             }
         }
@@ -883,134 +969,52 @@ impl NativeTrainModel {
 }
 
 // ---------------------------------------------------------------------------
-// Elementwise / pooling ops (free functions: no parameters involved)
+// Tape-local forward helpers (kernel calls + save-for-backward plumbing)
 // ---------------------------------------------------------------------------
 
-fn fwd_relu(mut act: Buf, train: bool) -> (Buf, Option<Vec<bool>>) {
-    let mask = if train {
-        Some(act.data.iter().map(|&v| v > 0.0).collect())
+/// Copy a slice into a workspace buffer (pooled save-for-backward).
+fn copy_into_ws(ws: &mut Workspace, x: &[f32]) -> Vec<f32> {
+    let mut v = ws.take_f32_cap(x.len());
+    v.extend_from_slice(x);
+    v
+}
+
+fn fwd_relu(ws: &mut Workspace, mut act: Buf, train: bool) -> (Buf, Option<Vec<bool>>) {
+    if train {
+        let mut mask = ws.take_bool_cap(act.data.len());
+        kernels::relu_mask(&mut act.data, &mut mask);
+        (act, Some(mask))
+    } else {
+        kernels::relu(&mut act.data);
+        (act, None)
+    }
+}
+
+fn fwd_maxpool2(ws: &mut Workspace, act: &Buf, train: bool) -> Result<(Buf, Option<Vec<usize>>)> {
+    let (b, h, w, c) = act.dims4()?;
+    let (oh, ow) = (h / 2, w / 2);
+    let mut out = ws.take_f32_any(b * oh * ow * c);
+    let mut argmax = if train {
+        Some(ws.take_usize_cap(b * oh * ow * c))
     } else {
         None
     };
-    for v in &mut act.data {
-        *v = v.max(0.0);
-    }
-    (act, mask)
-}
-
-fn bwd_relu(mask: &[bool], mut dy: Buf) -> Buf {
-    for (d, &m) in dy.data.iter_mut().zip(mask) {
-        if !m {
-            *d = 0.0;
-        }
-    }
-    dy
-}
-
-fn fwd_maxpool2(act: &Buf, train: bool) -> Result<(Buf, Option<Vec<usize>>)> {
-    let (b, h, w, c) = act.dims4()?;
-    let (oh, ow) = (h / 2, w / 2);
-    let mut out = vec![f32::NEG_INFINITY; b * oh * ow * c];
-    let mut arg = vec![0usize; if train { b * oh * ow * c } else { 0 }];
-    for bi in 0..b {
-        for oy in 0..oh {
-            for ox in 0..ow {
-                let dst = ((bi * oh + oy) * ow + ox) * c;
-                for dy_ in 0..2 {
-                    for dx_ in 0..2 {
-                        let src = ((bi * h + oy * 2 + dy_) * w + ox * 2 + dx_) * c;
-                        for ch in 0..c {
-                            let v = act.data[src + ch];
-                            if v > out[dst + ch] {
-                                out[dst + ch] = v;
-                                if train {
-                                    arg[dst + ch] = src + ch;
-                                }
-                            }
-                        }
-                    }
-                }
-            }
-        }
-    }
-    let argmax = if train { Some(arg) } else { None };
+    kernels::maxpool2(&act.data, b, h, w, c, &mut out, argmax.as_mut());
     Ok((Buf { shape: vec![b, oh, ow, c], data: out }, argmax))
 }
 
-fn bwd_maxpool2(argmax: &[usize], in_shape: &[usize; 4], dy: Buf) -> Result<Buf> {
-    ensure!(dy.data.len() == argmax.len(), "maxpool backward shape");
-    let mut dx = vec![0.0f32; in_shape.iter().product()];
-    for (&a, &d) in argmax.iter().zip(&dy.data) {
-        dx[a] += d;
-    }
-    Ok(Buf { shape: in_shape.to_vec(), data: dx })
-}
-
-fn fwd_gap(act: &Buf) -> Result<Buf> {
+fn fwd_gap(ws: &mut Workspace, act: &Buf) -> Result<Buf> {
     let (b, h, w, c) = act.dims4()?;
-    let inv = 1.0 / (h * w) as f32;
-    let mut out = vec![0.0f32; b * c];
-    for bi in 0..b {
-        for p in 0..h * w {
-            let src = (bi * h * w + p) * c;
-            for ch in 0..c {
-                out[bi * c + ch] += act.data[src + ch];
-            }
-        }
-        for ch in 0..c {
-            out[bi * c + ch] *= inv;
-        }
-    }
+    let mut out = ws.take_f32_any(b * c);
+    kernels::global_avg_pool(&act.data, b, h, w, c, &mut out);
     Ok(Buf { shape: vec![b, c], data: out })
 }
 
-fn bwd_gap(in_shape: &[usize; 4], dy: Buf) -> Result<Buf> {
-    let [b, h, w, c] = *in_shape;
-    ensure!(dy.data.len() == b * c, "gap backward shape");
-    let inv = 1.0 / (h * w) as f32;
-    let mut dx = vec![0.0f32; b * h * w * c];
-    for bi in 0..b {
-        for p in 0..h * w {
-            let dst = (bi * h * w + p) * c;
-            for ch in 0..c {
-                dx[dst + ch] = dy.data[bi * c + ch] * inv;
-            }
-        }
-    }
-    Ok(Buf { shape: in_shape.to_vec(), data: dx })
-}
-
-/// Standard three-term batch-norm backward over the saved normalized
-/// activations: `dx = inv/N · (N·dx̂ − Σdx̂ − x̂·Σ(dx̂·x̂))` per channel,
-/// plus `dγ = Σ dy·x̂` and `dβ = Σ dy`.
+/// Batch-norm backward ([`kernels::bn_bwd`]) + gradient-slot accumulation.
 fn bwd_bn(t: &BnTape, mut dy: Buf, grads: &mut [Vec<f32>]) -> Result<Buf> {
-    let ch = t.ch;
-    let rows = t.rows;
-    ensure!(dy.data.len() == rows * ch, "bn backward shape");
-    let mut dgamma = vec![0.0f64; ch];
-    let mut dbeta = vec![0.0f64; ch];
-    let mut s1 = vec![0.0f64; ch];
-    let mut s2 = vec![0.0f64; ch];
-    for (r, chunk) in dy.data.chunks_exact_mut(ch).enumerate() {
-        let xh = &t.xhat[r * ch..(r + 1) * ch];
-        for i in 0..ch {
-            let g = chunk[i] as f64;
-            dgamma[i] += g * xh[i] as f64;
-            dbeta[i] += g;
-            let dxh = g * t.gamma[i] as f64;
-            s1[i] += dxh;
-            s2[i] += dxh * xh[i] as f64;
-            chunk[i] = dxh as f32; // dy buffer now holds dx̂
-        }
-    }
-    let n = rows as f64;
-    for (r, chunk) in dy.data.chunks_exact_mut(ch).enumerate() {
-        let xh = &t.xhat[r * ch..(r + 1) * ch];
-        for i in 0..ch {
-            let dxh = chunk[i] as f64;
-            chunk[i] = (t.inv[i] as f64 * (dxh - s1[i] / n - xh[i] as f64 * s2[i] / n)) as f32;
-        }
-    }
+    ensure!(dy.data.len() == t.xhat.len(), "bn backward shape");
+    ensure!(dy.data.len() % t.ch.max(1) == 0, "bn backward channel layout");
+    let (dgamma, dbeta) = kernels::bn_bwd(&t.xhat, &t.inv, &t.gamma, &mut dy.data);
     for (g, &d) in grads[t.gamma_gidx].iter_mut().zip(&dgamma) {
         *g += d as f32;
     }
@@ -1018,4 +1022,41 @@ fn bwd_bn(t: &BnTape, mut dy: Buf, grads: &mut [Vec<f32>]) -> Result<Buf> {
         *g += d as f32;
     }
     Ok(dy)
+}
+
+/// Return every pooled tape buffer to the workspace once the backward walk
+/// is done — the step's steady-state allocation story depends on this.
+fn recycle_tape(ws: &mut Workspace, tape: Vec<Tape>) {
+    for entry in tape {
+        match entry {
+            Tape::Matmul(t) => recycle_matmul(ws, t),
+            Tape::Bn(t) => ws.recycle_f32(t.xhat),
+            Tape::Relu(mask) => ws.recycle_bool(mask),
+            Tape::MaxPool2 { argmax, .. } => ws.recycle_usize(argmax),
+            Tape::Preact(p) => {
+                let p = *p;
+                ws.recycle_f32(p.bn1.xhat);
+                ws.recycle_f32(p.bn2.xhat);
+                ws.recycle_bool(p.relu1);
+                ws.recycle_bool(p.relu2);
+                if let Some(t) = p.proj {
+                    recycle_matmul(ws, t);
+                }
+                recycle_matmul(ws, p.conv1);
+                recycle_matmul(ws, p.conv2);
+            }
+            Tape::Gap { .. } | Tape::Flatten { .. } => {}
+        }
+    }
+}
+
+fn recycle_matmul(ws: &mut Workspace, t: MatmulTape) {
+    ws.recycle_f32(t.cols);
+    ws.recycle_f32(t.w_hat);
+    if let Some(q) = t.aq {
+        ws.recycle_f32(q.raw);
+    }
+    if let Some(q) = t.wq {
+        ws.recycle_f32(q.raw);
+    }
 }

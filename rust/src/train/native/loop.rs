@@ -16,6 +16,7 @@ use anyhow::{bail, Context, Result};
 use crate::config::ExperimentConfig;
 use crate::data::Dataset;
 use crate::quant::lsq::qrange;
+use crate::runtime::kernels::Workspace;
 use crate::runtime::Manifest;
 use crate::tensor::{Checkpoint, Tensor};
 use crate::train::metrics::{topk_correct, History};
@@ -32,6 +33,10 @@ use super::optim::sgd_step;
 pub struct NativeTrainer {
     manifest: Manifest,
     model: NativeTrainModel,
+    /// Kernel-layer scratch arena, reused across every step/eval — the
+    /// steady-state train loop draws all GEMM/im2col/tape buffers from
+    /// here instead of allocating (DESIGN.md §Kernel-layer).
+    ws: Workspace,
     /// Experiment configuration this run follows.
     pub cfg: ExperimentConfig,
     /// Master parameters + momentum buffers.
@@ -90,6 +95,7 @@ impl NativeTrainer {
         let mut tr = NativeTrainer {
             manifest,
             model,
+            ws: Workspace::new(),
             cfg,
             state,
             history: History::default(),
@@ -105,6 +111,15 @@ impl NativeTrainer {
     /// The manifest this trainer was opened over.
     pub fn manifest(&self) -> &Manifest {
         &self.manifest
+    }
+
+    /// Cap this trainer's intra-op kernel threads (0 = hardware count).
+    /// The sweep coordinator calls this with `cores / workers` so
+    /// `workers × intra-op threads` never oversubscribes the host —
+    /// the training-side mirror of
+    /// [`crate::runtime::Backend::set_intra_op_threads`].
+    pub fn set_intra_op_threads(&mut self, threads: usize) {
+        self.ws.set_threads(threads);
     }
 
     /// Section-2.1 step-size initialization, the native mirror of the
@@ -133,7 +148,8 @@ impl NativeTrainer {
         let batch = self.manifest.batch.max(1).min(ds.size.max(1));
         let idx: Vec<usize> = (0..batch).collect();
         let b = ds.batch_from_indices(&idx, batch);
-        let stats = self.model.collect_act_stats(&self.state.params, b.x.f32s()?, batch)?;
+        let stats =
+            self.model.collect_act_stats(&mut self.ws, &self.state.params, b.x.f32s()?, batch)?;
         for st in stats {
             let sa = (2.0 * st.mean_abs / (st.qp.max(1) as f64).sqrt()).max(1e-8) as f32;
             self.state.set_param(&fam, &st.sa_name, Tensor::scalar_f32(sa))?;
@@ -147,7 +163,7 @@ impl NativeTrainer {
         let rows = y.numel();
         let out = self
             .model
-            .loss_and_grads(&self.state.params, x.f32s()?, y.i32s()?, rows)?;
+            .loss_and_grads(&mut self.ws, &self.state.params, x.f32s()?, y.i32s()?, rows)?;
         let family = self.cfg.family();
         let fam = self.manifest.family(&family)?;
         sgd_step(fam, &mut self.state.params, &mut self.state.moms, &out.grads, lr, wd)?;
@@ -171,7 +187,8 @@ impl NativeTrainer {
         let mut nb = 0usize;
         for b in ds.eval_batches(batch) {
             let rows = b.y.numel();
-            let logits = self.model.forward_eval(&self.state.params, b.x.f32s()?, rows)?;
+            let logits =
+                self.model.forward_eval(&mut self.ws, &self.state.params, b.x.f32s()?, rows)?;
             let labels = b.y.i32s()?;
             // Like the XLA eval artifact: loss over the whole (padded)
             // batch, accuracy over the real rows only.

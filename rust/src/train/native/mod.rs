@@ -10,8 +10,10 @@
 //!   ablation variants), gradient-scale modes, softmax cross-entropy, and
 //!   the finite-difference grad-check harness (`tests/grad_check.rs`);
 //! * [`backward`] — [`backward::NativeTrainModel`]: tape-recorded forward
-//!   + hand-written backward over the model-zoo arch IR (transposed-GEMM /
-//!   im2col-adjoint backprop reusing `runtime::native::gemm`);
+//!   + hand-written backward over the model-zoo arch IR. All compute
+//!   (GEMMs, im2col adjoint, pooling, batch norm) routes through the
+//!   shared kernel layer [`crate::runtime::kernels`], so this module is
+//!   tape bookkeeping + quantizer adjoints only;
 //! * [`optim`] — SGD + momentum + role-aware weight decay, mirroring
 //!   `python/compile/train.py`;
 //! * [`r#loop`] — [`NativeTrainer`], driving the shared

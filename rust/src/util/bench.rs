@@ -4,10 +4,13 @@
 //! Methodology: warmup until the clock stabilizes, then fixed-duration
 //! measurement batches; reports mean / p50 / p95 / min over per-iteration
 //! times and writes one CSV row per benchmark to `target/bench_results.csv`
-//! so EXPERIMENTS.md §Perf entries are regenerable.
+//! so EXPERIMENTS.md §Perf entries are regenerable. [`Bench::write_json`]
+//! additionally emits the whole suite as one machine-readable JSON
+//! document (the perf-trajectory format `BENCH_*.json` files use).
 
 use std::time::{Duration, Instant};
 
+use super::json::Json;
 use super::stats::{mean, percentile};
 
 pub struct BenchOpts {
@@ -125,6 +128,53 @@ impl Bench {
         );
         self.results.push((name.to_string(), res.clone()));
         res
+    }
+
+    /// All results recorded so far, in run order.
+    pub fn results(&self) -> &[(String, BenchResult)] {
+        &self.results
+    }
+
+    /// Serialize the whole suite as one machine-readable JSON document:
+    /// `{suite, threads_available, results: [{name, iters, mean_ns, p50_ns,
+    /// p95_ns, min_ns, units_per_iter, units_per_sec?}]}` — the format the
+    /// repo-root `BENCH_*.json` perf-trajectory files use.
+    /// `units_per_sec` is present only for [`Bench::bench_units`] entries
+    /// (JSON has no NaN).
+    pub fn to_json(&self) -> Json {
+        let results: Vec<Json> = self
+            .results
+            .iter()
+            .map(|(name, r)| {
+                let mut fields = vec![
+                    ("name", Json::str(name.clone())),
+                    ("iters", Json::num(r.iters as f64)),
+                    ("mean_ns", Json::num(r.mean_ns)),
+                    ("p50_ns", Json::num(r.p50_ns)),
+                    ("p95_ns", Json::num(r.p95_ns)),
+                    ("min_ns", Json::num(r.min_ns)),
+                    ("units_per_iter", Json::num(r.units_per_iter)),
+                ];
+                if r.units_per_iter > 0.0 {
+                    fields.push(("units_per_sec", Json::num(r.throughput())));
+                }
+                Json::obj(fields)
+            })
+            .collect();
+        let threads = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+        Json::obj(vec![
+            ("suite", Json::str(self.suite.clone())),
+            ("threads_available", Json::num(threads as f64)),
+            ("results", Json::Arr(results)),
+        ])
+    }
+
+    /// Write [`Bench::to_json`] to `path` (parent directories created).
+    pub fn write_json(&self, path: &std::path::Path) -> std::io::Result<()> {
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        std::fs::write(path, self.to_json().to_string_pretty())
     }
 
     /// Append all results to target/bench_results.csv.

@@ -1,0 +1,18 @@
+//! Helpers shared by the integration-test binaries (pulled in via
+//! `mod common;` — files in `tests/` subdirectories are not test binaries
+//! themselves).
+
+use lsqnet::util::rng::Pcg32;
+
+/// Run `f` over `cases` seeded cases starting at `base_seed`, reporting
+/// the failing case seed for replay — the in-repo property-test
+/// mini-framework (the vendored crate universe has no proptest).
+pub fn forall(name: &str, base_seed: u64, cases: u64, mut f: impl FnMut(&mut Pcg32)) {
+    for seed in 0..cases {
+        let mut rng = Pcg32::seeded(base_seed + seed);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| f(&mut rng)));
+        if let Err(e) = result {
+            panic!("property {name:?} failed at case seed {seed}: {e:?}");
+        }
+    }
+}

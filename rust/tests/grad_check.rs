@@ -12,6 +12,7 @@
 //! norm, pooling and the softmax head.
 
 use lsqnet::quant::lsq::{grad_scale, lsq_vjp, qrange};
+use lsqnet::runtime::kernels::Workspace;
 use lsqnet::runtime::native::fixture::{write_synthetic_family, FixtureSpec};
 use lsqnet::runtime::Manifest;
 use lsqnet::train::native::grad::{central_diff, lsq_surrogate_f64, safe_gradcheck_point};
@@ -151,7 +152,8 @@ fn network_grads_match_central_differences_fp32() {
         let x: Vec<f32> = (0..rows * net.image_len()).map(|_| rng.normal()).collect();
         let y = vec![1i32, 3];
 
-        let out = net.loss_and_grads(&params, &x, &y, rows).unwrap();
+        let mut ws = Workspace::new();
+        let out = net.loss_and_grads(&mut ws, &params, &x, &y, rows).unwrap();
         assert!(out.loss.is_finite());
 
         // Map grad slots back to parameter indices.
@@ -183,7 +185,7 @@ fn network_grads_match_central_differences_fp32() {
                         *pv = o + t * uv;
                     }
                 }
-                let l = net.loss_and_grads(&params, &x, &y, rows).unwrap().loss;
+                let l = net.loss_and_grads(&mut ws, &params, &x, &y, rows).unwrap().loss;
                 let p = params[pi].f32s_mut().unwrap();
                 p.copy_from_slice(&orig);
                 l
@@ -224,8 +226,9 @@ fn gscale_uses_weight_count_for_sw_and_feature_count_for_sa() {
     let mut rng = Pcg32::seeded(11);
     let x: Vec<f32> = (0..rows * full.image_len()).map(|_| rng.normal()).collect();
     let y = vec![0i32, 2];
-    let gf = full.loss_and_grads(&params, &x, &y, rows).unwrap().grads;
-    let go = one.loss_and_grads(&params, &x, &y, rows).unwrap().grads;
+    let mut ws = Workspace::new();
+    let gf = full.loss_and_grads(&mut ws, &params, &x, &y, rows).unwrap().grads;
+    let go = one.loss_and_grads(&mut ws, &params, &x, &y, rows).unwrap().grads;
 
     // conv2 is an interior layer: true 2-bit quantizers.
     let bits_of = |name: &str| fam.layer_meta.iter().find(|l| l.name == name).unwrap().bits;

@@ -278,6 +278,7 @@ fn serve_round_trip_and_batching() {
         max_wait: std::time::Duration::from_millis(4),
         queue_depth: 128,
         replicas: 1,
+        intra_threads: 0,
     })
     .unwrap();
     let spec = SynthSpec::new(10, 1.2, 3);
@@ -319,6 +320,7 @@ fn serve_rejects_bad_image_size() {
         max_wait: std::time::Duration::from_millis(1),
         queue_depth: 8,
         replicas: 1,
+        intra_threads: 0,
     })
     .unwrap();
     assert!(server.client().submit(vec![0.0; 7]).is_err());

@@ -8,8 +8,8 @@ use std::path::PathBuf;
 
 use lsqnet::quant::lsq::{qrange, quantize, quantize_vbar};
 use lsqnet::quant::pack::{quantize_and_pack, unpack};
+use lsqnet::runtime::kernels::{qgemm, Workspace};
 use lsqnet::runtime::native::fixture::{write_synthetic_family, FixtureSpec};
-use lsqnet::runtime::native::gemm::qgemm;
 use lsqnet::runtime::native::NativeModel;
 use lsqnet::runtime::{Backend, BackendSpec, Manifest, NativeEngine};
 use lsqnet::util::rng::Pcg32;
@@ -41,8 +41,9 @@ fn qgemm_matches_scalar_reference_for_all_widths() {
             let abar: Vec<i32> =
                 a.iter().map(|&v| quantize_vbar(v, sa, aqn, aqp) as i32).collect();
 
+            let mut ws = Workspace::new();
             let mut out = vec![0.0f32; m * n];
-            qgemm(m, k, n, &abar, &packed, sa * sw, None, &mut out);
+            qgemm(&mut ws, m, k, n, &abar, &packed, sa * sw, None, &mut out);
 
             // scalar reference: dot of Eq. 2 dequantized values, in f64
             let wbar = unpack(&packed);
@@ -92,8 +93,9 @@ fn native_forward_q32_vs_q8_are_close() {
 
     let mut rng = Pcg32::seeded(9);
     let x: Vec<f32> = (0..2 * 16 * 16 * 3).map(|_| rng.normal()).collect();
-    let y32 = model32.forward(&x, 2).unwrap();
-    let y8 = model8.forward(&x, 2).unwrap();
+    let mut ws = Workspace::new();
+    let y32 = model32.forward(&mut ws, &x, 2).unwrap();
+    let y8 = model8.forward(&mut ws, &x, 2).unwrap();
     assert_eq!(y32.len(), 20);
     assert_eq!(y8.len(), 20);
     assert!(y32.iter().all(|v| v.is_finite()));
@@ -123,7 +125,8 @@ fn native_forward_covers_resnet_and_vgg() {
             NativeModel::build(&m, &family, &m.load_initial_params(&family).unwrap()).unwrap();
         let mut rng = Pcg32::seeded(4);
         let x: Vec<f32> = (0..3 * 16 * 16 * 3).map(|_| rng.normal()).collect();
-        let y = model_rt.forward(&x, 3).unwrap();
+        let mut ws = Workspace::new();
+        let y = model_rt.forward(&mut ws, &x, 3).unwrap();
         assert_eq!(y.len(), 3 * 7, "{model}");
         assert!(y.iter().all(|v| v.is_finite()), "{model}");
         std::fs::remove_dir_all(&dir).ok();
@@ -178,6 +181,7 @@ fn multi_replica_serve_answers_every_request_once() {
         max_wait: std::time::Duration::from_millis(2),
         queue_depth: 64,
         replicas: 3,
+        intra_threads: 0,
     })
     .unwrap();
     assert_eq!(server.replicas, 3);
@@ -245,6 +249,7 @@ fn serve_shutdown_answers_inflight_requests_without_max_wait_hang() {
         max_wait,
         queue_depth: 64,
         replicas: 2,
+        intra_threads: 0,
     })
     .unwrap();
 
@@ -294,6 +299,7 @@ fn serve_stop_joins_while_clients_still_alive() {
         max_wait: std::time::Duration::from_secs(5),
         queue_depth: 8,
         replicas: 2,
+        intra_threads: 0,
     })
     .unwrap();
     let client = server.client(); // keeps the channel connected
@@ -366,6 +372,7 @@ fn serve_rejects_bad_image_size_native() {
         max_wait: std::time::Duration::from_millis(1),
         queue_depth: 8,
         replicas: 2,
+        intra_threads: 0,
     })
     .unwrap();
     assert!(server.client().submit(vec![0.0; 7]).is_err());

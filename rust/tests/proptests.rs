@@ -11,17 +11,13 @@ use lsqnet::quant::pack;
 use lsqnet::util::json::Json;
 use lsqnet::util::rng::Pcg32;
 
+mod common;
+
 const CASES: u64 = 200;
 
 /// Run `f` over CASES seeded cases, reporting the failing seed.
-fn forall(name: &str, mut f: impl FnMut(&mut Pcg32)) {
-    for seed in 0..CASES {
-        let mut rng = Pcg32::seeded(0x5eed_0000 + seed);
-        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| f(&mut rng)));
-        if let Err(e) = result {
-            panic!("property {name:?} failed at case seed {seed}: {e:?}");
-        }
-    }
+fn forall(name: &str, f: impl FnMut(&mut Pcg32)) {
+    common::forall(name, 0x5eed_0000, CASES, f);
 }
 
 fn rand_bits(rng: &mut Pcg32) -> (u32, bool) {
