@@ -25,6 +25,11 @@ echo "== kernel determinism (re-run the thread-parity/workspace suite with"
 echo "   every kernel forced serial: threaded and serial must agree) =="
 LSQNET_THREADS=1 cargo test --release -q --test kernels
 
+echo "== kernel dispatch parity (re-run the same suite with the portable"
+echo "   scalar SIMD path pinned: qgemm must stay bitwise, sgemm-family"
+echo "   within 1e-5 — so CI on any host exercises both dispatch sides) =="
+LSQNET_FORCE_SCALAR=1 cargo test --release -q --test kernels
+
 echo "== clippy (warnings are errors; missing_docs stays advisory while"
 echo "   the long-tail rustdoc pass is in flight — see ROADMAP) =="
 cargo clippy --all-targets -- -D warnings -A missing_docs
@@ -32,10 +37,12 @@ cargo clippy --all-targets -- -D warnings -A missing_docs
 echo "== rustdoc (docs must build; broken intra-doc links are errors) =="
 RUSTDOCFLAGS="-D rustdoc::broken-intra-doc-links" cargo doc --no-deps --quiet
 
-echo "== gemm bench smoke (EXPERIMENTS.md §Perf L1; fast mode writes"
-echo "   target/BENCH_native_gemm_fast.json — the repo-root trajectory file"
-echo "   BENCH_native_gemm.json comes from a plain 'cargo bench --bench gemm') =="
+echo "== gemm bench smoke, dispatched + scalar-forced (EXPERIMENTS.md §Perf"
+echo "   L1; fast/scalar modes write target/BENCH_native_gemm_*.json — the"
+echo "   repo-root trajectory file BENCH_native_gemm.json comes from a"
+echo "   plain 'cargo bench --bench gemm') =="
 LSQNET_BENCH_FAST=1 cargo bench --bench gemm
+LSQNET_BENCH_FAST=1 LSQNET_FORCE_SCALAR=1 cargo bench --bench gemm
 
 echo "== serve bench smoke (EXPERIMENTS.md §Perf L3, native, 2 replicas) =="
 LSQNET_BENCH_FAST=1 cargo bench --bench serve

@@ -67,6 +67,7 @@ fn main() -> anyhow::Result<()> {
         queue_depth: 512,
         replicas,
         intra_threads: args.usize("intra-threads", 0),
+        fused_unpack: args.flag("fused-unpack"),
     })?;
 
     let spec = SynthSpec::new(10, 0.35, 7);

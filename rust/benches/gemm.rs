@@ -1,7 +1,13 @@
 //! Kernel-layer GEMM benchmarks (EXPERIMENTS.md §Perf L1): GFLOP/s for the
-//! fused unpack-and-dot `qgemm` at every packed width and for the fp32
-//! `sgemm`, each measured single-thread and at the hardware thread count —
-//! the intra-op scaling the unified kernel layer exists to deliver.
+//! quantized GEMM at every packed width — fused-unpack vs panelized
+//! weights, SIMD-dispatched vs scalar-forced, single-thread vs the
+//! hardware thread count — plus the fp32 `sgemm`. This is the
+//! before/after receipt for the SIMD + panelization work: every row
+//! carries self-describing ratio columns (`speedup_vs_serial`,
+//! `panel_vs_fused`, `simd_vs_scalar`) so the trajectory JSON needs no
+//! hand-diffing, and the suite records the dispatch level it ran at
+//! (`simd` field; `LSQNET_FORCE_SCALAR=1` pins the portable path — the CI
+//! smoke runs both sides).
 //!
 //! Writes the machine-readable perf-trajectory file
 //! `BENCH_native_gemm.json` at the repository root (regenerate with
@@ -19,7 +25,8 @@ use std::path::Path;
 
 use lsqnet::quant::pack::quantize_and_pack;
 use lsqnet::runtime::kernels::{
-    hardware_threads, qgemm, sgemm, Workspace, QGEMM_MIN_ROWS_PER_THREAD,
+    hardware_threads, qgemm, qgemm_panel, sgemm, PanelizedWeights, SimdLevel, Workspace,
+    QGEMM_MIN_ROWS_PER_THREAD,
 };
 use lsqnet::util::bench::{black_box, Bench};
 use lsqnet::util::rng::Pcg32;
@@ -36,7 +43,8 @@ fn widths(effective: usize) -> Vec<usize> {
 }
 
 fn main() {
-    let fast = std::env::var("LSQNET_BENCH_FAST").is_ok();
+    let fast = lsqnet::util::env_truthy("LSQNET_BENCH_FAST");
+    let forced_scalar = lsqnet::util::env_truthy("LSQNET_FORCE_SCALAR");
     let (m, k, n) = if fast {
         (128usize, 256usize, 128usize)
     } else {
@@ -52,36 +60,93 @@ fn main() {
     if nt < hw {
         println!("note: LSQNET_THREADS caps intra-op width at {nt} (hardware {hw})");
     }
+    let simd = SimdLevel::detect();
+    println!("simd dispatch: {} (LSQNET_FORCE_SCALAR pins scalar)", simd.name());
     let mut b = Bench::new("native_gemm");
+    b.set_meta("simd", simd.name());
 
-    // Activations on the unsigned Eq. 1 grid, mostly nonzero (the
-    // zero-skip fast path is a workload property, not one to bench here).
+    // Activations on the unsigned Eq. 1 grid, mostly nonzero. (The SIMD
+    // panel kernels compute every lane unconditionally — only the fp32
+    // sgemm/sgemm_tn paths still skip zero activations — so sparsity
+    // would only flatter the sgemm rows.)
     let mut rng = Pcg32::seeded(4);
 
-    let mut speedups: Vec<(String, f64)> = Vec::new();
+    let mut summary: Vec<(String, &'static str, f64)> = Vec::new();
     for bits in [2u32, 3, 4, 8] {
         let w: Vec<f32> = (0..k * n).map(|_| rng.normal() * 0.4).collect();
         let packed = quantize_and_pack(&w, 0.05, bits, true).unwrap();
+        let panels = PanelizedWeights::build(&packed, k, n);
         let (_, qp) = lsqnet::quant::lsq::qrange(bits, false);
         let x: Vec<i32> = (0..m * k).map(|_| 1 + rng.below(qp as u32) as i32).collect();
         let mut out = vec![0.0f32; m * n];
 
-        // qgemm additionally floors rows-per-thread, so label with the
-        // width the kernel will actually run, not the workspace cap.
+        // Fused mode additionally floors rows-per-thread, so label with
+        // the width the kernel will actually run, not the workspace cap.
         let qt = nt.min((m / QGEMM_MIN_ROWS_PER_THREAD).max(1));
-        let mut per_threads = Vec::new();
+        let mut fused = Vec::new();
         for threads in widths(qt) {
             let mut ws = Workspace::with_threads(threads);
-            let name = format!("qgemm_{bits}bit_{m}x{k}x{n}_t{threads}");
+            let name = format!("qgemm_{bits}bit_{m}x{k}x{n}_fused_t{threads}");
             let r = b.bench_units(&name, flops, || {
                 let p = black_box(&packed);
                 qgemm(&mut ws, m, k, n, black_box(&x), p, 0.01, None, &mut out);
                 black_box(&out);
             });
-            per_threads.push(r.throughput());
+            fused.push((name, r.throughput()));
         }
-        if per_threads.len() == 2 {
-            speedups.push((format!("qgemm_{bits}bit"), per_threads[1] / per_threads[0]));
+        if fused.len() == 2 {
+            let s = fused[1].1 / fused[0].1;
+            b.annotate(&fused[1].0, "speedup_vs_serial", s);
+            summary.push((format!("qgemm_{bits}bit fused"), "threaded/serial", s));
+        }
+
+        // Panelized weights have no per-thread unpack, hence no rows
+        // floor: the full workspace width applies.
+        let mut panel = Vec::new();
+        for threads in widths(nt) {
+            let mut ws = Workspace::with_threads(threads);
+            let name = format!("qgemm_{bits}bit_{m}x{k}x{n}_panel_t{threads}");
+            let r = b.bench_units(&name, flops, || {
+                let pw = black_box(&panels);
+                qgemm_panel(&mut ws, m, k, n, black_box(&x), pw, 0.01, None, &mut out);
+                black_box(&out);
+            });
+            panel.push((name, r.throughput()));
+        }
+        if panel.len() == 2 {
+            let s = panel[1].1 / panel[0].1;
+            b.annotate(&panel[1].0, "speedup_vs_serial", s);
+            summary.push((format!("qgemm_{bits}bit panel"), "threaded/serial", s));
+        }
+        // panelized-vs-fused at matched widths (serial row always exists;
+        // the threaded rows may have different effective widths, so only
+        // compare when they match).
+        b.annotate(&panel[0].0, "panel_vs_fused", panel[0].1 / fused[0].1);
+        summary.push((
+            format!("qgemm_{bits}bit"),
+            "panel/fused (t1)",
+            panel[0].1 / fused[0].1,
+        ));
+        if panel.len() == 2 && fused.len() == 2 && qt == nt {
+            b.annotate(&panel[1].0, "panel_vs_fused", panel[1].1 / fused[1].1);
+        }
+
+        // Scalar-forced reference row (fused, serial — comparable to the
+        // pre-SIMD scalar baseline), feeding the simd_vs_scalar column on
+        // the dispatched rows. Skipped when the whole run is already
+        // scalar-pinned.
+        if simd != SimdLevel::Scalar {
+            let mut ws = Workspace::with_threads(1);
+            ws.force_scalar();
+            let name = format!("qgemm_{bits}bit_{m}x{k}x{n}_fused_t1_scalar");
+            let r = b.bench_units(&name, flops, || {
+                let p = black_box(&packed);
+                qgemm(&mut ws, m, k, n, black_box(&x), p, 0.01, None, &mut out);
+                black_box(&out);
+            });
+            let s = fused[0].1 / r.throughput();
+            b.annotate(&fused[0].0, "simd_vs_scalar", s);
+            summary.push((format!("qgemm_{bits}bit fused t1"), "simd/scalar", s));
         }
     }
 
@@ -89,21 +154,36 @@ fn main() {
     let xf: Vec<f32> = (0..m * k).map(|_| rng.normal()).collect();
     let wf: Vec<f32> = (0..k * n).map(|_| rng.normal()).collect();
     let mut out = vec![0.0f32; m * n];
-    let mut per_threads = Vec::new();
+    let mut srows = Vec::new();
     for threads in widths(nt) {
         let mut ws = Workspace::with_threads(threads);
-        let r = b.bench_units(&format!("sgemm_{m}x{k}x{n}_t{threads}"), flops, || {
+        let name = format!("sgemm_{m}x{k}x{n}_t{threads}");
+        let r = b.bench_units(&name, flops, || {
             sgemm(&mut ws, m, k, n, black_box(&xf), black_box(&wf), None, &mut out);
             black_box(&out);
         });
-        per_threads.push(r.throughput());
+        srows.push((name, r.throughput()));
     }
-    if per_threads.len() == 2 {
-        speedups.push(("sgemm".to_string(), per_threads[1] / per_threads[0]));
+    if srows.len() == 2 {
+        let s = srows[1].1 / srows[0].1;
+        b.annotate(&srows[1].0, "speedup_vs_serial", s);
+        summary.push(("sgemm".to_string(), "threaded/serial", s));
+    }
+    if simd != SimdLevel::Scalar {
+        let mut ws = Workspace::with_threads(1);
+        ws.force_scalar();
+        let name = format!("sgemm_{m}x{k}x{n}_t1_scalar");
+        let r = b.bench_units(&name, flops, || {
+            sgemm(&mut ws, m, k, n, black_box(&xf), black_box(&wf), None, &mut out);
+            black_box(&out);
+        });
+        let s = srows[0].1 / r.throughput();
+        b.annotate(&srows[0].0, "simd_vs_scalar", s);
+        summary.push(("sgemm t1".to_string(), "simd/scalar", s));
     }
 
-    for (name, s) in &speedups {
-        println!("{name:<16} threaded speedup over 1-thread: {s:.2}x");
+    for (name, what, s) in &summary {
+        println!("{name:<24} {what:<18} {s:.2}x");
     }
 
     b.finish();
@@ -111,10 +191,18 @@ fn main() {
     // dir, so the repo root is its parent). Fast-mode (CI smoke) numbers
     // use smaller shapes and must not clobber the full-run trajectory or
     // dirty the working tree, so they land under target/ instead; the
-    // per-entry names carry the shapes either way.
+    // per-entry names carry the shapes either way. LSQNET_FORCE_SCALAR-
+    // pinned runs are diverted too — the trajectory tracks each host's
+    // *dispatched* path, which on a non-x86 host legitimately IS the
+    // portable level (the suite-level `simd` field says which).
     let dir = Path::new(env!("CARGO_MANIFEST_DIR"));
-    let path = if fast {
-        dir.join("target").join("BENCH_native_gemm_fast.json")
+    let path = if fast || forced_scalar {
+        let tag = match (fast, forced_scalar) {
+            (true, true) => "fast_scalar",
+            (true, false) => "fast",
+            _ => "scalar",
+        };
+        dir.join("target").join(format!("BENCH_native_gemm_{tag}.json"))
     } else {
         dir.join("..").join("BENCH_native_gemm.json")
     };

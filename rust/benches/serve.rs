@@ -24,7 +24,7 @@ const REPLICAS: usize = 2;
 
 fn main() {
     let mut b = Bench::new("serve");
-    let fast = std::env::var("LSQNET_BENCH_FAST").is_ok();
+    let fast = lsqnet::util::env_truthy("LSQNET_BENCH_FAST");
 
     // Synthetic 2-bit cnn_small family, real 32x32x3 geometry.
     let dir = std::env::temp_dir().join(format!("lsq_serve_bench_{}", std::process::id()));
@@ -57,6 +57,7 @@ fn main() {
         queue_depth: 256,
         replicas: REPLICAS,
         intra_threads: 0,
+        fused_unpack: false,
     })
     .unwrap();
     let n = if fast { 128 } else { 512 };

@@ -51,6 +51,8 @@ COMMANDS
   serve                    --family cnn_small_q2 [--backend native|xla]
                            [--replicas N] [--checkpoint ck] [--requests N]
                            [--threads N (intra-op per replica; 0 = cores/replicas)]
+                           [--fused-unpack (low-memory weights: unpack per
+                            call instead of panelizing once at bind)]
   pack                     --checkpoint runs/x/final.ckpt
   help                     this message
 
@@ -472,6 +474,7 @@ fn serve(args: &Args) -> Result<()> {
         queue_depth: args.usize("queue-depth", 256),
         replicas,
         intra_threads: args.usize("threads", 0),
+        fused_unpack: args.flag("fused-unpack"),
     })?;
     println!(
         "serving {family} on {} x{replicas}; firing {n} requests from 4 client threads…",

@@ -76,6 +76,10 @@ pub fn unpack(p: &Packed) -> Vec<i32> {
 /// Unpack the `len` values starting at element `start` into `out[..len]`.
 /// This is the tile-granular primitive behind the kernel layer's fused
 /// unpack-and-dot GEMM ([`crate::runtime::kernels::qgemm`]).
+///
+/// The loop body branches on the runtime `bits`; hot paths at the standard
+/// widths should go through [`unpack_range_spec`], which dispatches to a
+/// monomorphized [`unpack_range_const`] instance instead.
 pub fn unpack_range(p: &Packed, start: usize, len: usize, out: &mut [i32]) {
     assert!(start + len <= p.len, "unpack_range out of bounds");
     assert!(out.len() >= len, "unpack_range output too small");
@@ -91,6 +95,52 @@ pub fn unpack_range(p: &Packed, start: usize, len: usize, out: &mut [i32]) {
             u |= (p.bytes[byte + 1] as u64) << (8 - shift);
         }
         *o = ((u & mask) as i64 - qn) as i32;
+    }
+}
+
+/// [`unpack_range`] with the bit width as a const generic: the extraction
+/// mask/shift math constant-folds, and for widths dividing 8 (2/4/8) the
+/// byte-straddle branch disappears at compile time, leaving a branch-free
+/// inner loop. This is the per-tile unpack the specialized qgemm paths use
+/// ([`crate::runtime::kernels::qgemm`] fused mode and the one-time
+/// panelized build) — the runtime-`bits` [`unpack_range`] stays as the
+/// fallback for nonstandard widths.
+pub fn unpack_range_const<const BITS: u32>(p: &Packed, start: usize, len: usize, out: &mut [i32]) {
+    assert_eq!(p.bits, BITS, "unpack_range_const width mismatch");
+    assert!(start + len <= p.len, "unpack_range out of bounds");
+    assert!(out.len() >= len, "unpack_range output too small");
+    let (qn, _) = super::lsq::qrange(BITS, p.signed);
+    let qn = qn as i32;
+    debug_assert!((1..=8).contains(&BITS));
+    let mask: u32 = (1u32 << BITS) - 1;
+    let bits = BITS as usize;
+    for (j, o) in out.iter_mut().enumerate().take(len) {
+        let bitpos = (start + j) * bits;
+        let byte = bitpos >> 3;
+        let shift = bitpos & 7;
+        let mut u = (p.bytes[byte] as u32) >> shift;
+        // For widths dividing 8 a value never straddles a byte, so this
+        // whole block is removed at compile time.
+        if 8 % BITS != 0 && shift + bits > 8 {
+            u |= (p.bytes[byte + 1] as u32) << (8 - shift);
+        }
+        *o = (u & mask) as i32 - qn;
+    }
+}
+
+/// Width-dispatched unpack: one `match` on `bits` selects a monomorphized
+/// [`unpack_range_const`] instance for the paper's standard widths
+/// (2/3/4/8), falling back to the generic [`unpack_range`] loop otherwise
+/// (1/5/6/7-bit packings exist only in pack-format tests). Callers that
+/// unpack many tiles per call pay the width branch once here instead of
+/// per value.
+pub fn unpack_range_spec(p: &Packed, start: usize, len: usize, out: &mut [i32]) {
+    match p.bits {
+        2 => unpack_range_const::<2>(p, start, len, out),
+        3 => unpack_range_const::<3>(p, start, len, out),
+        4 => unpack_range_const::<4>(p, start, len, out),
+        8 => unpack_range_const::<8>(p, start, len, out),
+        _ => unpack_range(p, start, len, out),
     }
 }
 
@@ -167,6 +217,40 @@ mod tests {
                 assert_eq!(out, full[start..start + len], "bits={bits} start={start}");
             }
         }
+    }
+
+    #[test]
+    fn unpack_range_spec_matches_generic_all_widths() {
+        // The specialized (const-generic) instances and the runtime-`bits`
+        // loop must agree value-for-value, signed and unsigned, at offsets
+        // that straddle byte boundaries.
+        for bits in 1..=8u32 {
+            for signed in [true, false] {
+                let (qn, qp) = crate::quant::lsq::qrange(bits, signed);
+                let vals: Vec<i32> =
+                    (0..77).map(|i| (i % (qn + qp + 1)) as i32 - qn as i32).collect();
+                let p = pack(&vals, bits, signed, 1.0).unwrap();
+                for start in [0usize, 1, 3, 8, 21, 76] {
+                    let len = (77 - start).min(19);
+                    let mut a = vec![0i32; len];
+                    let mut b = vec![0i32; len];
+                    unpack_range(&p, start, len, &mut a);
+                    unpack_range_spec(&p, start, len, &mut b);
+                    assert_eq!(a, b, "bits={bits} signed={signed} start={start}");
+                    assert_eq!(a, vals[start..start + len], "reference slice");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn unpack_range_const_rejects_width_mismatch() {
+        let p = pack(&[0, 1, -1], 3, true, 1.0).unwrap();
+        let r = std::panic::catch_unwind(|| {
+            let mut out = vec![0i32; 3];
+            unpack_range_const::<4>(&p, 0, 3, &mut out);
+        });
+        assert!(r.is_err(), "width mismatch must panic");
     }
 
     #[test]

@@ -150,6 +150,15 @@ pub trait Backend {
     /// no-op: the XLA runtime manages its own thread pool.
     fn set_intra_op_threads(&mut self, _threads: usize) {}
 
+    /// Opt into the low-memory weight storage for the next
+    /// [`prepare_infer`](Backend::prepare_infer): the native engine then
+    /// skips bind-time panelization and unpacks weight tiles per call
+    /// (`UnpackMode::Fused` — see DESIGN.md §SIMD-dispatch for the
+    /// memory/speed trade-off). `false` restores the panelized default.
+    /// Default no-op: the XLA engine has no packed-weight storage to
+    /// trade.
+    fn set_low_memory(&mut self, _fused_unpack: bool) {}
+
     /// Run one padded batch: `x` holds `batch() * image_len` floats in NHWC
     /// layout. Returns `batch() * num_classes` logits, row-major.
     fn infer(&mut self, x: &[f32]) -> Result<Vec<f32>>;

@@ -2,52 +2,67 @@
 //! inference forward ([`crate::runtime::native`]) and the training
 //! forward/backward ([`crate::train::native::backward`]).
 //!
-//! * [`qgemm`] — integer GEMM over bit-packed weights, the native datapath
-//!   of the paper's Figure 1: activations quantized to integers per Eq. 1,
-//!   multiply-accumulate in `i32`, one fp32 rescale by `s_a * s_w` (Eq. 2)
-//!   at the end. The weight matrix stays in its [`Packed`] 2/3/4/8-bit
-//!   form; KC×NC tiles are unpacked into a per-thread scratch buffer
-//!   inside the cache-blocked loop ("fused unpack-and-dot"), so the
-//!   full-precision weight matrix never materializes. The inner kernel is
-//!   register-tiled: [`NR`] accumulators stay in registers across the k
-//!   loop.
+//! * [`qgemm`] / [`qgemm_panel`] — integer GEMM over low-precision
+//!   weights, the native datapath of the paper's Figure 1: activations
+//!   quantized to integers per Eq. 1, multiply-accumulate in `i32`, one
+//!   fp32 rescale by `s_a * s_w` (Eq. 2) at the end. Both entry points
+//!   share one SIMD-dispatched inner compute over the interleaved i8
+//!   panel layout ([`super::panel`], [`super::simd`]); they differ only in
+//!   where the panels come from:
+//!   - [`qgemm`] ("fused unpack-and-dot", the low-memory mode): the
+//!     weight matrix stays in its [`Packed`] 2/3/4/8-bit form and each
+//!     thread builds KC×NC panel tiles into workspace scratch on the fly
+//!     (precision-specialized unpack,
+//!     [`crate::quant::pack::unpack_range_spec`]);
+//!   - [`qgemm_panel`] (the serve default): panels were built **once** at
+//!     model bind ([`PanelizedWeights::build`]) and are shared read-only —
+//!     the hot loop does no unpack work at all.
 //! * [`sgemm`] / [`sgemm_nt`] / [`sgemm_tn`] — the fp32 family used by
 //!   full-precision (bits ≥ 32) layers and by the training tape's
-//!   `dX̂ = dY·Ŵᵀ` / `dŴ = X̂ᵀ·dY` transposes.
+//!   `dX̂ = dY·Ŵᵀ` / `dŴ = X̂ᵀ·dY` transposes, with SIMD-dispatched
+//!   axpy/dot inner loops.
 //!
 //! Threading model (DESIGN.md §Kernel-layer): every kernel parallelizes
 //! over *row blocks of the output* with `std::thread::scope`, so each
-//! output element is owned by exactly one thread and accumulated in the
-//! same order as the serial loop. `qgemm` is therefore **bitwise
-//! identical** across thread counts (i32 addition is exact), and the fp32
-//! family is too, because the per-element k-order never depends on the
-//! split. The thread count comes from the caller's [`Workspace`]
-//! (`LSQNET_THREADS=1` forces serial; serve caps replicas at
-//! `cores / replicas`).
+//! output element is owned by exactly one thread. `qgemm` accumulates in
+//! `i32`, where addition is exact, and is therefore **bitwise identical**
+//! across thread counts *and* SIMD levels; the fp32 family is bitwise
+//! across thread counts too (per-element order never depends on the
+//! split), and across SIMD levels everywhere except `sgemm_nt`'s
+//! reassociated dot reduction (1e-5 — DESIGN.md §SIMD-dispatch). The
+//! thread count comes from the caller's [`Workspace`] (`LSQNET_THREADS=1`
+//! forces serial; serve caps replicas at `cores / replicas`).
 //!
 //! Accumulation is exact in `i32` provided
 //! `k * Qp_act * max(Qn_w, Qp_w) < 2^31`, which [`check_accumulator_bound`]
 //! verifies at model-build time (for 8-bit weights/activations that allows
-//! k up to ~65k — far above any layer in the model zoo).
+//! k up to ~65k — far above any layer in the model zoo). The panel
+//! kernels additionally require each activation to fit i16 (asserted per
+//! call) and each weight to fit i8 — both trivially true for every Eq. 1
+//! grid at ≤ 8 bits.
 
-use crate::quant::pack::{unpack_range, Packed};
+use crate::quant::pack::{unpack_range_spec, Packed};
 
-use super::workspace::Workspace;
+use super::panel::{fill_tile_panel, fits_i8, tile_len, tile_pairs, PanelizedWeights};
+use super::simd::{pack_xpairs, SimdLevel};
+use super::workspace::{QThreadScratch, Workspace};
 
-/// Rows of the packed weight matrix per tile (the k blocking factor).
+/// Rows of the weight matrix per tile (the k blocking factor).
 pub const KC: usize = 256;
-/// Columns of the packed weight matrix per tile (the n blocking factor).
+/// Columns of the weight matrix per tile (the n blocking factor).
 pub const NC: usize = 64;
-/// Register-tile width of the `qgemm` inner kernel: this many i32
-/// accumulators live in registers across the k loop.
+/// Column width of one `qgemm` microkernel block: this many i32
+/// accumulator lanes per j-block, and the interleave width of the panel
+/// layout ([`super::panel`]).
 pub const NR: usize = 8;
 
-/// Minimum activation rows per `qgemm` thread. Each thread unpacks its
-/// own copy of every weight tile (tile unpack costs ~one dot-product row
-/// per tile), so a thread owning fewer rows than this spends more time
-/// unpacking than multiplying — small serve batches stay serial instead
-/// of going 2× slower. Thread count never changes the output (bitwise
-/// invariant), only the split.
+/// Minimum activation rows per *fused-mode* `qgemm` thread. In fused mode
+/// each thread builds its own copy of every panel tile (tile build costs
+/// ~one dot-product row per tile), so a thread owning fewer rows than this
+/// spends more time unpacking than multiplying — small serve batches stay
+/// serial instead of going 2× slower. Panelized mode has no per-thread
+/// unpack and no rows floor. Thread count never changes the output
+/// (bitwise invariant), only the split.
 pub const QGEMM_MIN_ROWS_PER_THREAD: usize = 8;
 
 /// Minimum multiply-accumulates one spawned thread must own before the
@@ -109,19 +124,35 @@ fn row_chunk(rows: usize, threads: usize) -> usize {
     ((rows + t - 1) / t).max(1)
 }
 
-/// Quantized GEMM: `out[m×n] = (x[m×k] · unpack(w)[k×n]) * scale (+ bias)`.
+/// Where a `qgemm` call's panel tiles come from (shared read-only across
+/// the row-block threads).
+#[derive(Clone, Copy)]
+enum PanelSrc<'a> {
+    /// Build per tile, per thread, into workspace scratch (fused mode).
+    Fused(&'a Packed),
+    /// Pre-built once at model bind, zero unpack work per call.
+    Pre(&'a PanelizedWeights),
+}
+
+/// Quantized GEMM, fused-unpack mode:
+/// `out[m×n] = (x[m×k] · unpack(w)[k×n]) * scale (+ bias)`.
 ///
-/// * `x` — integer activations (Eq. 1 `v̄` values), row-major `m×k`;
-/// * `w` — bit-packed weights, logically row-major `k×n` (`w.len == k*n`);
+/// * `x` — integer activations (Eq. 1 `v̄` values), row-major `m×k`.
+///   Values must fit i16 (asserted): the SIMD panel kernels stream
+///   activations as i16 pairs. Every Eq. 1 grid at ≤ 8 bits satisfies
+///   this (|v̄| ≤ 255) with huge margin;
+/// * `w` — bit-packed weights, logically row-major `k×n` (`w.len == k*n`),
+///   values must fit the i8 panel element (always true for signed
+///   packings; see [`super::panel`]);
 /// * `scale` — the per-layer `s_a * s_w` rescale (Eq. 2 applied to both
 ///   operands at once);
 /// * `bias` — optional fp32 bias of length `n`, added after the rescale.
 ///
-/// The i32 accumulator and per-thread unpack tiles come from `ws` and are
-/// reused across calls. Zero activations (the common case after ReLU +
-/// unsigned quantization) skip their inner row entirely. Output is bitwise
-/// identical for every thread count (each element is owned by one thread;
-/// integer addition is exact).
+/// The i32 accumulator, per-thread panel tiles and activation-pair
+/// buffers come from `ws` and are reused across calls. Output is bitwise
+/// identical for every thread count and SIMD level (each element is owned
+/// by one thread; integer addition is exact). Use [`qgemm_panel`] when
+/// the weights were panelized at bind time.
 #[allow(clippy::too_many_arguments)]
 pub fn qgemm(
     ws: &mut Workspace,
@@ -134,8 +165,43 @@ pub fn qgemm(
     bias: Option<&[f32]>,
     out: &mut [f32],
 ) {
-    assert_eq!(x.len(), m * k, "activation buffer shape");
     assert_eq!(w.len, k * n, "packed weight shape");
+    assert!(fits_i8(w), "unsigned 8-bit weights do not fit i8 panels");
+    qgemm_core(ws, m, k, n, x, PanelSrc::Fused(w), scale, bias, out);
+}
+
+/// Quantized GEMM over pre-built panels ([`PanelizedWeights`]) — the
+/// serving default: identical contract and bitwise-identical output to
+/// [`qgemm`], with zero per-call unpack work.
+#[allow(clippy::too_many_arguments)]
+pub fn qgemm_panel(
+    ws: &mut Workspace,
+    m: usize,
+    k: usize,
+    n: usize,
+    x: &[i32],
+    pw: &PanelizedWeights,
+    scale: f32,
+    bias: Option<&[f32]>,
+    out: &mut [f32],
+) {
+    assert_eq!((pw.k(), pw.n()), (k, n), "panelized weight shape");
+    qgemm_core(ws, m, k, n, x, PanelSrc::Pre(pw), scale, bias, out);
+}
+
+#[allow(clippy::too_many_arguments)]
+fn qgemm_core(
+    ws: &mut Workspace,
+    m: usize,
+    k: usize,
+    n: usize,
+    x: &[i32],
+    src: PanelSrc,
+    scale: f32,
+    bias: Option<&[f32]>,
+    out: &mut [f32],
+) {
+    assert_eq!(x.len(), m * k, "activation buffer shape");
     assert_eq!(out.len(), m * n, "output buffer shape");
     if let Some(b) = bias {
         assert_eq!(b.len(), n, "bias length");
@@ -144,24 +210,27 @@ pub fn qgemm(
         return;
     }
 
-    // Cap the split so every thread owns enough rows to amortize its own
-    // tile unpacking (QGEMM_MIN_ROWS_PER_THREAD) and enough work to pay
-    // for its spawn (MIN_MACS_PER_THREAD).
-    let threads = work_capped(
-        ws.threads().min((m / QGEMM_MIN_ROWS_PER_THREAD).max(1)),
-        m * k * n,
-    );
-    let (acc, tiles) = ws.gemm_scratch(threads, KC * NC);
+    // Cap the split: fused mode additionally floors rows-per-thread so
+    // every thread amortizes its own tile builds
+    // (QGEMM_MIN_ROWS_PER_THREAD); both modes respect the spawn work
+    // floor (MIN_MACS_PER_THREAD).
+    let rows_floor = match src {
+        PanelSrc::Fused(_) => QGEMM_MIN_ROWS_PER_THREAD,
+        PanelSrc::Pre(_) => 1,
+    };
+    let threads = work_capped(ws.threads().min((m / rows_floor).max(1)), m * k * n);
+    let simd = ws.simd();
+    let (acc, scratch) = ws.gemm_scratch(threads);
     acc.clear();
     acc.resize(m * n, 0);
     if k > 0 {
         if threads <= 1 {
-            qgemm_rows(m, k, n, x, w, &mut tiles[0], acc);
+            qgemm_rows(simd, m, k, n, x, src, &mut scratch[0], acc);
         } else {
             let chunk = row_chunk(m, threads);
             scoped_split!(
-                acc.chunks_mut(chunk * n).zip(x.chunks(chunk * k)).zip(tiles.iter_mut()),
-                |((acc_c, x_c), tile)| qgemm_rows(acc_c.len() / n, k, n, x_c, w, tile, acc_c)
+                acc.chunks_mut(chunk * n).zip(x.chunks(chunk * k)).zip(scratch.iter_mut()),
+                |((acc_c, x_c), scr)| qgemm_rows(simd, acc_c.len() / n, k, n, x_c, src, scr, acc_c)
             );
         }
     }
@@ -182,18 +251,85 @@ pub fn qgemm(
     }
 }
 
-/// One thread's share of [`qgemm`]: `mb` activation rows against the whole
-/// packed weight matrix, unpacking KC×NC tiles into `tile` and running the
-/// NR-wide register-tiled inner kernel.
+/// One thread's share of the quantized GEMM: `mb` activation rows against
+/// the whole weight matrix. Per KC block, the thread packs its activation
+/// rows into i16 pairs once; per KC×NC tile it either borrows the
+/// pre-built panel or builds one into its scratch, then runs the
+/// SIMD-dispatched microkernel ([`SimdLevel::qgemm_tile`]).
+///
+/// Exception: at [`SimdLevel::Scalar`] the *fused* source skips panel
+/// interleaving entirely and runs the direct unpack-and-dot loop
+/// ([`qgemm_rows_scalar_fused`]) — paying the interleave without a SIMD
+/// payoff would make non-x86 hosts (and the forced-scalar baseline rows
+/// in `benches/gemm.rs`) strictly slower than the pre-SIMD datapath.
+/// Pre-built panels have no per-call build cost, so the panel microkernel
+/// stays in use there at every level. All paths are bitwise-identical
+/// (exact i32 sums).
+#[allow(clippy::too_many_arguments)]
 fn qgemm_rows(
+    simd: SimdLevel,
+    mb: usize,
+    k: usize,
+    n: usize,
+    x: &[i32],
+    src: PanelSrc,
+    scr: &mut QThreadScratch,
+    acc: &mut [i32],
+) {
+    if simd == SimdLevel::Scalar {
+        if let PanelSrc::Fused(p) = src {
+            return qgemm_rows_scalar_fused(mb, k, n, x, p, scr, acc);
+        }
+    }
+    for (ik, k0) in (0..k).step_by(KC).enumerate() {
+        let kc = KC.min(k - k0);
+        let pairs = tile_pairs(kc);
+        if scr.xpairs.len() < mb * pairs {
+            scr.xpairs.resize(mb * pairs, 0);
+        }
+        for i in 0..mb {
+            pack_xpairs(
+                &x[i * k + k0..i * k + k0 + kc],
+                &mut scr.xpairs[i * pairs..(i + 1) * pairs],
+            );
+        }
+        for (in_, n0) in (0..n).step_by(NC).enumerate() {
+            let nc = NC.min(n - n0);
+            let tile: &[i8] = match src {
+                PanelSrc::Pre(pw) => pw.tile(ik, in_),
+                PanelSrc::Fused(p) => {
+                    let len = tile_len(kc, nc);
+                    if scr.panel.len() < len {
+                        scr.panel.resize(len, 0);
+                    }
+                    fill_tile_panel(p, n, k0, kc, n0, nc, &mut scr.row, &mut scr.panel[..len]);
+                    &scr.panel[..len]
+                }
+            };
+            simd.qgemm_tile(tile, &scr.xpairs, mb, pairs, nc, n, n0, acc);
+        }
+    }
+}
+
+/// The scalar-level fused path: direct unpack-and-dot over a plain
+/// row-major i32 tile (precision-specialized unpack, NR-wide register
+/// tile, zero activations skipped) — the pre-SIMD datapath, kept because
+/// building interleaved panels buys nothing without vector instructions.
+/// Bitwise-identical to the panel kernels (i32 addition is exact; skipped
+/// zero rows contribute zero).
+fn qgemm_rows_scalar_fused(
     mb: usize,
     k: usize,
     n: usize,
     x: &[i32],
     w: &Packed,
-    tile: &mut [i32],
+    scr: &mut QThreadScratch,
     acc: &mut [i32],
 ) {
+    if scr.tile.len() < KC * NC {
+        scr.tile.resize(KC * NC, 0);
+    }
+    let tile = &mut scr.tile[..];
     for k0 in (0..k).step_by(KC) {
         let kc = KC.min(k - k0);
         for n0 in (0..n).step_by(NC) {
@@ -201,7 +337,7 @@ fn qgemm_rows(
             // Unpack this KC×NC weight tile once; it then stays hot in
             // cache for all mb activation rows of this thread.
             for kk in 0..kc {
-                unpack_range(w, (k0 + kk) * n + n0, nc, &mut tile[kk * nc..kk * nc + nc]);
+                unpack_range_spec(w, (k0 + kk) * n + n0, nc, &mut tile[kk * nc..kk * nc + nc]);
             }
             for i in 0..mb {
                 let xrow = &x[i * k + k0..i * k + k0 + kc];
@@ -235,7 +371,9 @@ fn qgemm_rows(
 ///
 /// Parallelized over output row blocks; per-element accumulation order is
 /// the serial k order regardless of thread count, so results are bitwise
-/// identical across thread counts.
+/// identical across thread counts — and across SIMD levels too: the
+/// dispatched inner loop is an elementwise axpy (one mul + one add per
+/// element, no reassociation).
 #[allow(clippy::too_many_arguments)]
 pub fn sgemm(
     ws: &mut Workspace,
@@ -267,21 +405,30 @@ pub fn sgemm(
     if k == 0 {
         return;
     }
+    let simd = ws.simd();
     let threads = work_capped(ws.threads().min(m), m * k * n);
     if threads <= 1 {
-        sgemm_rows(m, k, n, x, w, out);
+        sgemm_rows(simd, m, k, n, x, w, out);
     } else {
         let chunk = row_chunk(m, threads);
         scoped_split!(
             out.chunks_mut(chunk * n).zip(x.chunks(chunk * k)),
-            |(out_c, x_c)| sgemm_rows(out_c.len() / n, k, n, x_c, w, out_c)
+            |(out_c, x_c)| sgemm_rows(simd, out_c.len() / n, k, n, x_c, w, out_c)
         );
     }
 }
 
-/// One thread's share of [`sgemm`]: streaming-axpy inner loop (vectorizes
+/// One thread's share of [`sgemm`]: streaming-axpy inner loop (vectorized
 /// without reassociating the per-element sum), zero activations skipped.
-fn sgemm_rows(mb: usize, k: usize, n: usize, x: &[f32], w: &[f32], out: &mut [f32]) {
+fn sgemm_rows(
+    simd: SimdLevel,
+    mb: usize,
+    k: usize,
+    n: usize,
+    x: &[f32],
+    w: &[f32],
+    out: &mut [f32],
+) {
     for k0 in (0..k).step_by(KC) {
         let kc = KC.min(k - k0);
         for i in 0..mb {
@@ -292,9 +439,7 @@ fn sgemm_rows(mb: usize, k: usize, n: usize, x: &[f32], w: &[f32], out: &mut [f3
                     continue;
                 }
                 let wrow = &w[(k0 + kk) * n..(k0 + kk) * n + n];
-                for (o, &wv) in orow.iter_mut().zip(wrow) {
-                    *o += xv * wv;
-                }
+                simd.saxpy(xv, wrow, orow);
             }
         }
     }
@@ -306,7 +451,10 @@ fn sgemm_rows(mb: usize, k: usize, n: usize, x: &[f32], w: &[f32], out: &mut [f3
 /// (`dX̂ = dY · Ŵᵀ`, see `crate::train::native::backward`): both `a` rows
 /// and `w` rows are contiguous, so the inner dot runs stride-1 on both
 /// operands with no transpose materialized. Parallel over `out` row
-/// blocks.
+/// blocks. The SIMD dot reduction reassociates the fp32 sum, so across
+/// *dispatch levels* results agree to 1e-5 (across thread counts they
+/// stay bitwise — the split never changes which level computes an
+/// element).
 pub fn sgemm_nt(
     ws: &mut Workspace,
     m: usize,
@@ -326,29 +474,33 @@ pub fn sgemm_nt(
         out.fill(0.0);
         return;
     }
+    let simd = ws.simd();
     let threads = work_capped(ws.threads().min(m), m * k * n);
     if threads <= 1 {
-        sgemm_nt_rows(m, k, n, a, w, out);
+        sgemm_nt_rows(simd, m, k, n, a, w, out);
     } else {
         let chunk = row_chunk(m, threads);
         scoped_split!(
             out.chunks_mut(chunk * k).zip(a.chunks(chunk * n)),
-            |(out_c, a_c)| sgemm_nt_rows(out_c.len() / k, k, n, a_c, w, out_c)
+            |(out_c, a_c)| sgemm_nt_rows(simd, out_c.len() / k, k, n, a_c, w, out_c)
         );
     }
 }
 
-fn sgemm_nt_rows(mb: usize, k: usize, n: usize, a: &[f32], w: &[f32], out: &mut [f32]) {
+fn sgemm_nt_rows(
+    simd: SimdLevel,
+    mb: usize,
+    k: usize,
+    n: usize,
+    a: &[f32],
+    w: &[f32],
+    out: &mut [f32],
+) {
     for i in 0..mb {
         let arow = &a[i * n..(i + 1) * n];
         let orow = &mut out[i * k..(i + 1) * k];
         for (kk, o) in orow.iter_mut().enumerate() {
-            let wrow = &w[kk * n..(kk + 1) * n];
-            let mut acc = 0.0f32;
-            for (&av, &wv) in arow.iter().zip(wrow) {
-                acc += av * wv;
-            }
-            *o = acc;
+            *o = simd.sdot(arow, &w[kk * n..(kk + 1) * n]);
         }
     }
 }
@@ -357,7 +509,8 @@ fn sgemm_nt_rows(mb: usize, k: usize, n: usize, a: &[f32], w: &[f32], out: &mut 
 ///
 /// The weight-gradient path of the native backward pass
 /// (`dŴ = X̂ᵀ · dY`). The inner loop streams a `dy` row into an `out`
-/// row, skipping zero activations (common after ReLU + unsigned
+/// row (elementwise axpy — bitwise across thread counts *and* SIMD
+/// levels), skipping zero activations (common after ReLU + unsigned
 /// quantization). Parallel over `out` row blocks (the k dimension): each
 /// thread reduces over all m batch rows for its own output rows, so the
 /// per-element m-order matches the serial loop for every thread count.
@@ -376,14 +529,15 @@ pub fn sgemm_tn(
     if k == 0 || n == 0 {
         return;
     }
+    let simd = ws.simd();
     let threads = work_capped(ws.threads().min(k), m * k * n);
     if threads <= 1 {
-        sgemm_tn_rows(m, k, n, 0, x, dy, out);
+        sgemm_tn_rows(simd, m, k, n, 0, x, dy, out);
     } else {
         let chunk = row_chunk(k, threads);
         scoped_split!(
             out.chunks_mut(chunk * n).enumerate(),
-            |(ci, out_c)| sgemm_tn_rows(m, k, n, ci * chunk, x, dy, out_c)
+            |(ci, out_c)| sgemm_tn_rows(simd, m, k, n, ci * chunk, x, dy, out_c)
         );
     }
 }
@@ -392,6 +546,7 @@ pub fn sgemm_tn(
 /// where `kb = out.len() / n`.
 #[allow(clippy::too_many_arguments)]
 fn sgemm_tn_rows(
+    simd: SimdLevel,
     m: usize,
     k: usize,
     n: usize,
@@ -409,10 +564,7 @@ fn sgemm_tn_rows(
             if xv == 0.0 {
                 continue;
             }
-            let orow = &mut out[kk * n..(kk + 1) * n];
-            for (o, &dv) in orow.iter_mut().zip(dyrow) {
-                *o += xv * dv;
-            }
+            simd.saxpy(xv, dyrow, &mut out[kk * n..(kk + 1) * n]);
         }
     }
 }
@@ -463,6 +615,31 @@ mod tests {
                 let acc: i64 =
                     (0..k).map(|kk| x[i * k + kk] as i64 * wv[kk * n + j] as i64).sum();
                 assert_eq!(out[i * n + j], acc as f32, "({i},{j})");
+            }
+        }
+    }
+
+    #[test]
+    fn qgemm_panel_bitwise_matches_fused() {
+        for &(m, k, n, bits) in
+            &[(1usize, 5usize, 3usize, 2u32), (4, KC + 9, NC + 3, 3), (7, 64, 40, 4), (2, 33, 9, 8)]
+        {
+            let mut rng = crate::util::rng::Pcg32::seeded(40 + bits as u64);
+            let (qn, qp) = crate::quant::lsq::qrange(bits, true);
+            let wv: Vec<i32> = (0..k * n)
+                .map(|_| rng.below((qn + qp + 1) as u32) as i32 - qn as i32)
+                .collect();
+            let p = pack(&wv, bits, true, 1.0).unwrap();
+            let pw = PanelizedWeights::build(&p, k, n);
+            let x: Vec<i32> = (0..m * k).map(|_| rng.below(8) as i32 - 3).collect();
+            let bias: Vec<f32> = (0..n).map(|_| rng.normal()).collect();
+            let mut ws = Workspace::new();
+            let mut fused = vec![0.0f32; m * n];
+            qgemm(&mut ws, m, k, n, &x, &p, 0.07, Some(&bias), &mut fused);
+            let mut paneled = vec![0.0f32; m * n];
+            qgemm_panel(&mut ws, m, k, n, &x, &pw, 0.07, Some(&bias), &mut paneled);
+            for (i, (a, b)) in fused.iter().zip(&paneled).enumerate() {
+                assert_eq!(a.to_bits(), b.to_bits(), "bits={bits} elem {i}");
             }
         }
     }

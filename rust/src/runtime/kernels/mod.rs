@@ -10,35 +10,53 @@
 //! needs:
 //!
 //! * **Workspace reuse** — [`Workspace`] owns the accumulator, the
-//!   per-thread weight-unpack tiles, and a pool of recycled activation /
-//!   im2col / gradient buffers. Serve replicas and `NativeTrainer` each
-//!   hold one, so the steady-state hot path is allocation-free.
+//!   per-thread fused-unpack panels and activation-pair buffers, and a
+//!   pool of recycled activation / im2col / gradient buffers. Serve
+//!   replicas and `NativeTrainer` each hold one, so the steady-state hot
+//!   path is allocation-free.
 //! * **Deterministic multi-threading** — the GEMM family parallelizes over
 //!   output row blocks with `std::thread::scope`; every output element is
 //!   owned by exactly one thread and accumulated in the serial order, so
 //!   `qgemm` is bitwise identical across thread counts (and the fp32
 //!   family is too). The thread count is capped per-workspace (serve uses
 //!   `cores / replicas`) and process-wide via `LSQNET_THREADS`.
+//! * **Hardware-shaped inner compute** — the GEMM inner loops dispatch
+//!   once per workspace to a runtime-detected [`SimdLevel`]
+//!   (AVX2 / SSE2 / portable scalar; `LSQNET_FORCE_SCALAR=1` pins the
+//!   portable path), the quantized kernel runs over an NR-interleaved i8
+//!   panel layout built either once at model bind
+//!   ([`panel::PanelizedWeights`], the serve default) or per tile into
+//!   per-thread scratch (fused low-memory mode), and the per-value unpack
+//!   is precision-specialized (const-generic `BITS`,
+//!   [`crate::quant::pack::unpack_range_spec`]). `qgemm` stays bitwise
+//!   identical across SIMD levels and panel modes (exact i32 sums) — see
+//!   DESIGN.md §SIMD-dispatch.
 //!
 //! Submodules: [`workspace`] (scratch arena + thread resolution), [`gemm`]
-//! (the `qgemm`/`sgemm`/`sgemm_nt`/`sgemm_tn` microkernels), [`conv`]
-//! (im2col / col2im / SAME padding), [`pool`] (max pool, global average
-//! pool, ReLU), [`norm`] (folded and batch-stat batch norm). See DESIGN.md
-//! §Kernel-layer for the ownership rules and determinism guarantee.
+//! (the `qgemm`/`qgemm_panel`/`sgemm`/`sgemm_nt`/`sgemm_tn` kernels),
+//! [`panel`] (the interleaved i8 weight-panel layout), [`simd`] (dispatch
+//! + the per-ISA microkernels), [`conv`] (im2col / col2im / SAME padding),
+//! [`pool`] (max pool, global average pool, ReLU), [`norm`] (folded and
+//! batch-stat batch norm). See DESIGN.md §Kernel-layer for the ownership
+//! rules and determinism guarantee.
 
 pub mod conv;
 pub mod gemm;
 pub mod norm;
+pub mod panel;
 pub mod pool;
+pub mod simd;
 pub mod workspace;
 
 pub use conv::{col2im, im2col, same_padding};
 pub use gemm::{
-    check_accumulator_bound, qgemm, sgemm, sgemm_nt, sgemm_tn, KC, NC, NR,
+    check_accumulator_bound, qgemm, qgemm_panel, sgemm, sgemm_nt, sgemm_tn, KC, NC, NR,
     QGEMM_MIN_ROWS_PER_THREAD,
 };
 pub use norm::{bn_apply, bn_apply_out, bn_batch_stats, bn_bwd, bn_normalize, fold_bn, BN_EPS};
+pub use panel::PanelizedWeights;
 pub use pool::{
     global_avg_pool, global_avg_pool_bwd, maxpool2, maxpool2_bwd, relu, relu_bwd, relu_mask,
 };
+pub use simd::SimdLevel;
 pub use workspace::{hardware_threads, Workspace};

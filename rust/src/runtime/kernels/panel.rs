@@ -1,0 +1,246 @@
+//! Panelized weight storage for the quantized GEMM: the packed weight
+//! matrix unpacked **once** into the exact KC×NC-blocked, NR-interleaved
+//! i8 layout the SIMD microkernels consume ([`super::simd`]).
+//!
+//! Layout, per KC×NC tile (kc×nc at the ragged edges):
+//!
+//! ```text
+//! tile = [ j-block 0 | j-block 1 | … ]            nblocks = ⌈nc / NR⌉
+//! j-block = [ chunk t=0 | chunk t=1 | … ]         pairs   = ⌈kc / 2⌉
+//! chunk t = 16 bytes:  w[2t][j0+0] w[2t+1][j0+0]  w[2t][j0+1] w[2t+1][j0+1] …
+//!           (two consecutive k rows × NR=8 columns, k-pair interleaved)
+//! ```
+//!
+//! One 16-byte chunk is exactly one SIMD load: widened to i16, a single
+//! `pmaddwd` against the broadcast activation pair `(x[2t], x[2t+1])`
+//! yields the eight per-column partial sums. Ragged edges (odd `kc`, `nc`
+//! not a multiple of NR) are zero-padded inside the chunk, so the
+//! microkernels never branch on them.
+//!
+//! Two build sites share this layout (DESIGN.md §SIMD-dispatch):
+//!
+//! * [`PanelizedWeights::build`] — once per layer at engine/trainer bind
+//!   time; serve replicas then read the shared panels with **zero**
+//!   per-call unpack work, at a memory cost of ~`k·n` bytes per layer
+//!   (vs `k·n·bits/8` packed).
+//! * the fused mode of [`super::qgemm`] — per-tile into per-thread
+//!   workspace scratch, preserving the old low-memory behavior for
+//!   deployments where the unpacked panels don't fit
+//!   (`ServerConfig::fused_unpack` / `LSQNET_FUSED_UNPACK=1`).
+
+use crate::quant::pack::{unpack_range_spec, Packed};
+
+use super::gemm::{KC, NC, NR};
+
+/// `true` iff every stored weight value of `p` fits the i8 panel element.
+/// Signed packings always fit (Eq. 1 weights are symmetric signed, values
+/// in [-128, 127]); unsigned fits through 7 bits. The only excluded case —
+/// unsigned 8-bit *weights* — does not occur in the engine, which packs
+/// weights signed.
+pub(crate) fn fits_i8(p: &Packed) -> bool {
+    p.signed || p.bits < 8
+}
+
+/// Number of k-row pairs in a tile of `kc` rows.
+#[inline]
+pub(crate) fn tile_pairs(kc: usize) -> usize {
+    (kc + 1) / 2
+}
+
+/// Bytes of one panelized tile: `⌈nc/NR⌉` j-blocks of `pairs` 16-byte
+/// chunks.
+#[inline]
+pub(crate) fn tile_len(kc: usize, nc: usize) -> usize {
+    ((nc + NR - 1) / NR) * tile_pairs(kc) * 2 * NR
+}
+
+/// Unpack one kc×nc weight tile of `p` (logical row-major `k×n`, rows
+/// `k0..k0+kc`, columns `n0..n0+nc`) into the interleaved panel layout.
+/// `row` is caller scratch for one unpacked tile row; `out` must be
+/// exactly [`tile_len`] bytes. Ragged tiles are zero-padded; full interior
+/// tiles overwrite every byte, so stale scratch needs no clearing.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn fill_tile_panel(
+    p: &Packed,
+    n: usize,
+    k0: usize,
+    kc: usize,
+    n0: usize,
+    nc: usize,
+    row: &mut Vec<i32>,
+    out: &mut [i8],
+) {
+    debug_assert!(fits_i8(p), "weight values exceed the i8 panel range");
+    debug_assert_eq!(out.len(), tile_len(kc, nc));
+    let pairs = tile_pairs(kc);
+    if kc % 2 != 0 || nc % NR != 0 {
+        out.fill(0);
+    }
+    if row.len() < nc {
+        row.resize(nc, 0);
+    }
+    for kk in 0..kc {
+        unpack_range_spec(p, (k0 + kk) * n + n0, nc, row);
+        let (t, r) = (kk / 2, kk % 2);
+        for (j, &v) in row.iter().enumerate().take(nc) {
+            let (jb, c) = (j / NR, j % NR);
+            out[jb * pairs * 2 * NR + t * 2 * NR + 2 * c + r] = v as i8;
+        }
+    }
+}
+
+/// The whole packed weight matrix pre-unpacked into panel tiles, built
+/// once at model bind and shared read-only by every forward call — the
+/// serve hot loop stops paying per-call per-thread tile unpack entirely.
+pub struct PanelizedWeights {
+    k: usize,
+    n: usize,
+    /// Tile start offsets, row-major over the (⌈k/KC⌉ × ⌈n/NC⌉) tile grid,
+    /// with a trailing sentinel equal to `data.len()`.
+    offsets: Vec<usize>,
+    data: Vec<i8>,
+}
+
+impl PanelizedWeights {
+    /// Unpack `p` (logical row-major `k×n`) into panel tiles.
+    ///
+    /// # Panics
+    /// If `p.len != k*n`, or if `p` stores values outside the i8 panel
+    /// range (unsigned 8-bit packings — never produced for weights).
+    pub fn build(p: &Packed, k: usize, n: usize) -> PanelizedWeights {
+        assert_eq!(p.len, k * n, "packed weight shape");
+        assert!(fits_i8(p), "unsigned 8-bit weights do not fit i8 panels");
+        let (kt, nt) = ((k + KC - 1) / KC, (n + NC - 1) / NC);
+        let mut offsets = Vec::with_capacity(kt * nt + 1);
+        let mut total = 0usize;
+        for ik in 0..kt {
+            let kc = KC.min(k - ik * KC);
+            for in_ in 0..nt {
+                offsets.push(total);
+                total += tile_len(kc, NC.min(n - in_ * NC));
+            }
+        }
+        offsets.push(total);
+        let mut data = vec![0i8; total];
+        let mut row = Vec::with_capacity(NC);
+        for ik in 0..kt {
+            let kc = KC.min(k - ik * KC);
+            for in_ in 0..nt {
+                let nc = NC.min(n - in_ * NC);
+                let t = ik * nt + in_;
+                let out = &mut data[offsets[t]..offsets[t + 1]];
+                fill_tile_panel(p, n, ik * KC, kc, in_ * NC, nc, &mut row, out);
+            }
+        }
+        PanelizedWeights { k, n, offsets, data }
+    }
+
+    /// Logical weight rows (the GEMM k dimension).
+    pub fn k(&self) -> usize {
+        self.k
+    }
+
+    /// Logical weight columns (the GEMM n dimension).
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    /// Resident panel bytes — the memory cost of the pre-unpacked mode
+    /// (compare `Packed::storage_bytes` for the fused-unpack footprint).
+    pub fn panel_bytes(&self) -> usize {
+        self.data.len()
+    }
+
+    /// The tile at k-block `ik`, n-block `in_`.
+    pub(crate) fn tile(&self, ik: usize, in_: usize) -> &[i8] {
+        let nt = (self.n + NC - 1) / NC;
+        let t = ik * nt + in_;
+        &self.data[self.offsets[t]..self.offsets[t + 1]]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::pack::{pack, unpack};
+    use crate::util::rng::Pcg32;
+
+    /// Panel bytes must equal the unpacked weight values, at the layout's
+    /// documented positions, for shapes straddling every tile edge.
+    #[test]
+    fn panel_layout_matches_unpacked_weights() {
+        for &(k, n, bits) in &[
+            (5usize, 3usize, 2u32),
+            (KC + 7, NC + 9, 3),
+            (KC, NC, 4),
+            (2 * KC + 1, 17, 8),
+        ] {
+            let mut rng = Pcg32::seeded(1000 + k as u64 + n as u64 + bits as u64);
+            let (qn, qp) = crate::quant::lsq::qrange(bits, true);
+            let w: Vec<i32> = (0..k * n)
+                .map(|_| rng.below((qn + qp + 1) as u32) as i32 - qn as i32)
+                .collect();
+            let p = pack(&w, bits, true, 1.0).unwrap();
+            let pw = PanelizedWeights::build(&p, k, n);
+            let full = unpack(&p);
+            let (kt, nt) = ((k + KC - 1) / KC, (n + NC - 1) / NC);
+            for ik in 0..kt {
+                let kc = KC.min(k - ik * KC);
+                let pairs = tile_pairs(kc);
+                for in_ in 0..nt {
+                    let nc = NC.min(n - in_ * NC);
+                    let tile = pw.tile(ik, in_);
+                    assert_eq!(tile.len(), tile_len(kc, nc));
+                    let nblocks = (nc + NR - 1) / NR;
+                    for jb in 0..nblocks {
+                        for t in 0..pairs {
+                            for c in 0..NR {
+                                for r in 0..2usize {
+                                    let (kk, j) = (2 * t + r, jb * NR + c);
+                                    let got =
+                                        tile[jb * pairs * 2 * NR + t * 2 * NR + 2 * c + r] as i32;
+                                    let want = if kk < kc && j < nc {
+                                        full[(ik * KC + kk) * n + in_ * NC + j]
+                                    } else {
+                                        0 // padding
+                                    };
+                                    assert_eq!(
+                                        got, want,
+                                        "k={k} n={n} bits={bits} tile ({ik},{in_}) kk={kk} j={j}"
+                                    );
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn fused_tile_builder_matches_prebuilt_panels() {
+        let (k, n) = (KC + 3, NC + 5);
+        let mut rng = Pcg32::seeded(2024);
+        let w: Vec<i32> = (0..k * n).map(|_| rng.below(15) as i32 - 7).collect();
+        let p = pack(&w, 4, true, 1.0).unwrap();
+        let pw = PanelizedWeights::build(&p, k, n);
+        let mut row = Vec::new();
+        for (ik, k0) in (0..k).step_by(KC).enumerate() {
+            let kc = KC.min(k - k0);
+            for (in_, n0) in (0..n).step_by(NC).enumerate() {
+                let nc = NC.min(n - n0);
+                // Stale scratch: the builder must fully define every byte.
+                let mut scratch = vec![0x55i8; tile_len(kc, nc)];
+                fill_tile_panel(&p, n, k0, kc, n0, nc, &mut row, &mut scratch);
+                assert_eq!(scratch, pw.tile(ik, in_), "tile ({ik},{in_})");
+            }
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "unsigned 8-bit")]
+    fn unsigned_8bit_weights_rejected() {
+        let p = pack(&[200, 3], 8, false, 1.0).unwrap();
+        PanelizedWeights::build(&p, 1, 2);
+    }
+}

@@ -1,0 +1,312 @@
+//! Runtime-dispatched SIMD layer for the GEMM microkernels.
+//!
+//! One [`SimdLevel`] is detected per process (cached) and copied into every
+//! [`super::Workspace`] at construction, so the hot loops pay a single
+//! `match` per tile / per row instead of re-detecting features. Three
+//! levels exist:
+//!
+//! * [`SimdLevel::Avx2`] — 256-bit x86_64 path: the quantized microkernel
+//!   widens interleaved i8 weight panels to i16 (`vpmovsxbw`) and runs
+//!   pair-wise multiply-accumulate into eight i32 lanes (`vpmaddwd`); the
+//!   fp32 kernels are 8-lane mul/add.
+//! * [`SimdLevel::Sse2`] — 128-bit x86_64 fallback (SSE2 is part of the
+//!   x86_64 baseline, so this level is always available there): the same
+//!   panel layout processed in two 4-column halves (`pmaddwd`), fp32 in
+//!   4 lanes.
+//! * [`SimdLevel::Scalar`] — portable Rust, bit-for-bit the reference the
+//!   other levels are tested against. Always available; pinned by
+//!   `LSQNET_FORCE_SCALAR=1` (the CI cross-check) or
+//!   [`super::Workspace::force_scalar`] (the in-process parity tests).
+//!
+//! Determinism across levels (DESIGN.md §SIMD-dispatch): the quantized
+//! kernel accumulates in `i32`, where addition is exact and associative, so
+//! `qgemm` is **bitwise identical** at every level. The fp32 `saxpy` used
+//! by `sgemm`/`sgemm_tn` performs the same per-element mul+add (no FMA, no
+//! reassociation) and stays bitwise too; only [`SimdLevel::sdot`]
+//! (`sgemm_nt`'s inner product) reassociates the sum across lanes and is
+//! held to the kernel layer's 1e-5 fp32 tolerance instead.
+
+mod scalar;
+#[cfg(target_arch = "x86_64")]
+mod x86;
+
+use std::sync::OnceLock;
+
+use super::gemm::NR;
+
+/// Instruction-set level the kernel layer dispatches to, resolved once per
+/// process by [`SimdLevel::detect`] and stored per-[`super::Workspace`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SimdLevel {
+    /// Portable Rust reference path (always available, any architecture).
+    Scalar,
+    /// x86_64 128-bit path (baseline on x86_64 — never absent there).
+    Sse2,
+    /// x86_64 256-bit path (`is_x86_feature_detected!("avx2")`).
+    Avx2,
+}
+
+/// `LSQNET_FORCE_SCALAR=1` pins the portable path process-wide (read once).
+fn env_force_scalar() -> bool {
+    static FORCE: OnceLock<bool> = OnceLock::new();
+    *FORCE.get_or_init(|| crate::util::env_truthy("LSQNET_FORCE_SCALAR"))
+}
+
+impl SimdLevel {
+    /// The best level this host supports, honoring the
+    /// `LSQNET_FORCE_SCALAR` pin. Feature detection runs once per process;
+    /// the result is cached.
+    pub fn detect() -> SimdLevel {
+        static LEVEL: OnceLock<SimdLevel> = OnceLock::new();
+        *LEVEL.get_or_init(|| {
+            if env_force_scalar() {
+                return SimdLevel::Scalar;
+            }
+            #[cfg(target_arch = "x86_64")]
+            {
+                if std::arch::is_x86_feature_detected!("avx2") {
+                    SimdLevel::Avx2
+                } else {
+                    SimdLevel::Sse2
+                }
+            }
+            #[cfg(not(target_arch = "x86_64"))]
+            {
+                SimdLevel::Scalar
+            }
+        })
+    }
+
+    /// Short name for logs and the bench-trajectory JSON.
+    pub fn name(self) -> &'static str {
+        match self {
+            SimdLevel::Scalar => "scalar",
+            SimdLevel::Sse2 => "sse2",
+            SimdLevel::Avx2 => "avx2",
+        }
+    }
+
+    /// One (KC×NC) tile of the quantized GEMM for `mb` activation rows:
+    /// `acc[i*n + n0 + j] += Σ_kk x[i][kk] · w[kk][n0+j]` with the weights
+    /// in the interleaved i8 panel layout ([`super::panel`]) and the
+    /// activations pre-packed into i16 pairs (`xp`, `mb × pairs` entries).
+    ///
+    /// All levels produce bitwise-identical `acc` (exact i32 sums).
+    #[allow(clippy::too_many_arguments)]
+    pub(crate) fn qgemm_tile(
+        self,
+        panel: &[i8],
+        xp: &[i32],
+        mb: usize,
+        pairs: usize,
+        nc: usize,
+        n: usize,
+        n0: usize,
+        acc: &mut [i32],
+    ) {
+        if mb == 0 || nc == 0 {
+            return;
+        }
+        // Bounds the unsafe SIMD paths rely on (checked here once per tile
+        // so the inner loops can use raw loads/stores).
+        let nblocks = (nc + NR - 1) / NR;
+        assert!(panel.len() >= nblocks * pairs * 2 * NR, "panel tile too small");
+        assert!(xp.len() >= mb * pairs, "xpairs buffer too small");
+        assert!(acc.len() >= (mb - 1) * n + n0 + nc, "accumulator too small");
+        assert!(n0 + nc <= n, "tile exceeds row width");
+        match self {
+            SimdLevel::Scalar => scalar::qgemm_tile(panel, xp, mb, pairs, nc, n, n0, acc),
+            #[cfg(target_arch = "x86_64")]
+            SimdLevel::Sse2 => unsafe {
+                x86::qgemm_tile_sse2(panel, xp, mb, pairs, nc, n, n0, acc)
+            },
+            #[cfg(target_arch = "x86_64")]
+            SimdLevel::Avx2 => unsafe {
+                x86::qgemm_tile_avx2(panel, xp, mb, pairs, nc, n, n0, acc)
+            },
+            #[cfg(not(target_arch = "x86_64"))]
+            _ => scalar::qgemm_tile(panel, xp, mb, pairs, nc, n, n0, acc),
+        }
+    }
+
+    /// `out[j] += alpha * x[j]` over `min(out.len(), x.len())` elements.
+    /// Per-element mul+add in every level (no FMA contraction), so the
+    /// result is bitwise identical to the scalar loop.
+    pub(crate) fn saxpy(self, alpha: f32, x: &[f32], out: &mut [f32]) {
+        match self {
+            SimdLevel::Scalar => scalar::saxpy(alpha, x, out),
+            #[cfg(target_arch = "x86_64")]
+            SimdLevel::Sse2 => unsafe { x86::saxpy_sse2(alpha, x, out) },
+            #[cfg(target_arch = "x86_64")]
+            SimdLevel::Avx2 => unsafe { x86::saxpy_avx2(alpha, x, out) },
+            #[cfg(not(target_arch = "x86_64"))]
+            _ => scalar::saxpy(alpha, x, out),
+        }
+    }
+
+    /// Dot product over `min(a.len(), b.len())` elements. The SIMD levels
+    /// accumulate in lanes and reduce at the end, which *reassociates* the
+    /// fp32 sum — results agree with scalar to the kernel layer's 1e-5
+    /// tolerance, not bitwise (DESIGN.md §SIMD-dispatch).
+    pub(crate) fn sdot(self, a: &[f32], b: &[f32]) -> f32 {
+        match self {
+            SimdLevel::Scalar => scalar::sdot(a, b),
+            #[cfg(target_arch = "x86_64")]
+            SimdLevel::Sse2 => unsafe { x86::sdot_sse2(a, b) },
+            #[cfg(target_arch = "x86_64")]
+            SimdLevel::Avx2 => unsafe { x86::sdot_avx2(a, b) },
+            #[cfg(not(target_arch = "x86_64"))]
+            _ => scalar::sdot(a, b),
+        }
+    }
+}
+
+/// Pack one activation row into the i16-pair stream [`SimdLevel::qgemm_tile`]
+/// consumes: entry `t` holds `(x[2t] as i16, x[2t+1] as i16)` in the low and
+/// high halves of an `i32` (a trailing odd element pairs with zero).
+///
+/// Values must fit i16 — guaranteed for Eq. 1 activations at ≤ 8 bits
+/// (|v̄| ≤ 255), and a **hard** assert here because silently truncating
+/// would void `qgemm`'s exactness contract for out-of-contract callers
+/// (the check is O(m·k) next to O(m·k·n) dot work).
+pub(crate) fn pack_xpairs(x: &[i32], out: &mut [i32]) {
+    let pairs = (x.len() + 1) / 2;
+    debug_assert!(out.len() >= pairs);
+    for (t, o) in out.iter_mut().enumerate().take(pairs) {
+        let x0 = x[2 * t];
+        let x1 = if 2 * t + 1 < x.len() { x[2 * t + 1] } else { 0 };
+        assert!(
+            (i16::MIN as i32..=i16::MAX as i32).contains(&x0)
+                && (i16::MIN as i32..=i16::MAX as i32).contains(&x1),
+            "qgemm activation {} out of the i16 range the SIMD panel kernels require",
+            if (i16::MIN as i32..=i16::MAX as i32).contains(&x0) { x1 } else { x0 },
+        );
+        *o = ((x0 as i16 as u16 as u32) | ((x1 as i16 as u16 as u32) << 16)) as i32;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn detect_is_stable_and_named() {
+        let a = SimdLevel::detect();
+        let b = SimdLevel::detect();
+        assert_eq!(a, b);
+        assert!(["scalar", "sse2", "avx2"].contains(&a.name()));
+    }
+
+    #[test]
+    fn pack_xpairs_round_trips_signed_halves() {
+        let x = vec![-3i32, 255, 0, -128, 7];
+        let mut out = vec![0i32; 3];
+        pack_xpairs(&x, &mut out);
+        for (t, &pair) in out.iter().enumerate() {
+            let x0 = pair as i16 as i32;
+            let x1 = (pair >> 16) as i32;
+            assert_eq!(x0, x[2 * t]);
+            assert_eq!(x1, if 2 * t + 1 < x.len() { x[2 * t + 1] } else { 0 });
+        }
+    }
+
+    /// Every available level must agree bitwise with scalar on the
+    /// quantized tile kernel, including ragged column blocks and odd k.
+    #[test]
+    fn qgemm_tile_levels_match_scalar_bitwise() {
+        let mut rng = crate::util::rng::Pcg32::seeded(77);
+        for &(mb, kc, nc) in &[(1usize, 1usize, 1usize), (3, 7, 11), (4, 16, 8), (2, 5, 19)] {
+            let pairs = (kc + 1) / 2;
+            let nblocks = (nc + NR - 1) / NR;
+            // Random panel (pad rows already zeroed by construction here).
+            let mut panel = vec![0i8; nblocks * pairs * 2 * NR];
+            for jb in 0..nblocks {
+                for t in 0..pairs {
+                    for c in 0..NR {
+                        let j = jb * NR + c;
+                        for r in 0..2usize {
+                            let kk = 2 * t + r;
+                            if j < nc && kk < kc {
+                                panel[jb * pairs * 2 * NR + t * 2 * NR + 2 * c + r] =
+                                    (rng.below(31) as i32 - 15) as i8;
+                            }
+                        }
+                    }
+                }
+            }
+            let x: Vec<i32> = (0..mb * kc).map(|_| rng.below(16) as i32 - 4).collect();
+            let mut xp = vec![0i32; mb * pairs];
+            for i in 0..mb {
+                pack_xpairs(&x[i * kc..(i + 1) * kc], &mut xp[i * pairs..(i + 1) * pairs]);
+            }
+            let n = nc + 3; // embed the tile at n0=2 in a wider row
+            let n0 = 2usize;
+            let mut base = vec![0i32; mb * n];
+            SimdLevel::Scalar.qgemm_tile(&panel, &xp, mb, pairs, nc, n, n0, &mut base);
+            // Scalar reference from first principles.
+            for i in 0..mb {
+                for j in 0..nc {
+                    let mut want = 0i64;
+                    for kk in 0..kc {
+                        let jb = j / NR;
+                        let idx = jb * pairs * 2 * NR + (kk / 2) * 2 * NR + 2 * (j % NR) + kk % 2;
+                        want += x[i * kc + kk] as i64 * panel[idx] as i64;
+                    }
+                    assert_eq!(base[i * n + n0 + j] as i64, want, "scalar ({i},{j})");
+                }
+            }
+            for level in [SimdLevel::Sse2, SimdLevel::Avx2] {
+                if !level_available(level) {
+                    continue;
+                }
+                let mut got = vec![0i32; mb * n];
+                level.qgemm_tile(&panel, &xp, mb, pairs, nc, n, n0, &mut got);
+                assert_eq!(base, got, "{} vs scalar (mb={mb} kc={kc} nc={nc})", level.name());
+            }
+        }
+    }
+
+    #[test]
+    fn fp32_kernels_match_scalar() {
+        let mut rng = crate::util::rng::Pcg32::seeded(78);
+        for len in [1usize, 4, 8, 13, 64, 100] {
+            let a: Vec<f32> = (0..len).map(|_| rng.normal()).collect();
+            let b: Vec<f32> = (0..len).map(|_| rng.normal()).collect();
+            let mut out_s = b.clone();
+            SimdLevel::Scalar.saxpy(0.37, &a, &mut out_s);
+            let dot_s = SimdLevel::Scalar.sdot(&a, &b);
+            for level in [SimdLevel::Sse2, SimdLevel::Avx2] {
+                if !level_available(level) {
+                    continue;
+                }
+                let mut out = b.clone();
+                level.saxpy(0.37, &a, &mut out);
+                // saxpy is elementwise: bitwise equal.
+                for (p, q) in out_s.iter().zip(&out) {
+                    assert_eq!(p.to_bits(), q.to_bits(), "saxpy {} len={len}", level.name());
+                }
+                // sdot reassociates: tolerance only.
+                let dot = level.sdot(&a, &b);
+                assert!(
+                    (dot - dot_s).abs() <= 1e-5 * dot_s.abs().max(1.0),
+                    "sdot {} len={len}: {dot} vs {dot_s}",
+                    level.name()
+                );
+            }
+        }
+    }
+
+    fn level_available(level: SimdLevel) -> bool {
+        #[cfg(target_arch = "x86_64")]
+        {
+            match level {
+                SimdLevel::Scalar | SimdLevel::Sse2 => true,
+                SimdLevel::Avx2 => std::arch::is_x86_feature_detected!("avx2"),
+            }
+        }
+        #[cfg(not(target_arch = "x86_64"))]
+        {
+            level == SimdLevel::Scalar
+        }
+    }
+}

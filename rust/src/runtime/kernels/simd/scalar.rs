@@ -1,0 +1,64 @@
+//! Portable reference implementations of the SIMD microkernels — the
+//! always-available [`super::SimdLevel::Scalar`] path, and the semantics
+//! the x86 paths are tested against ([`super::SimdLevel`] documents which
+//! kernels must match bitwise and which to 1e-5).
+
+use super::super::gemm::NR;
+
+/// Quantized tile kernel over the interleaved i8 panel layout (see
+/// [`super::super::panel`]): for each activation row and NR-column block,
+/// accumulate the i16-pair dot products in i32. The caller
+/// ([`super::SimdLevel::qgemm_tile`]) has already bounds-checked every
+/// slice.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn qgemm_tile(
+    panel: &[i8],
+    xp: &[i32],
+    mb: usize,
+    pairs: usize,
+    nc: usize,
+    n: usize,
+    n0: usize,
+    acc: &mut [i32],
+) {
+    let nblocks = (nc + NR - 1) / NR;
+    let block_len = pairs * 2 * NR;
+    for i in 0..mb {
+        let xrow = &xp[i * pairs..(i + 1) * pairs];
+        for jb in 0..nblocks {
+            let block = &panel[jb * block_len..(jb + 1) * block_len];
+            let mut r = [0i32; NR];
+            for (t, &pair) in xrow.iter().enumerate() {
+                let x0 = pair as i16 as i32;
+                let x1 = pair >> 16; // arithmetic shift: high i16, sign-extended
+                let chunk = &block[t * 2 * NR..(t + 1) * 2 * NR];
+                for (c, rj) in r.iter_mut().enumerate() {
+                    *rj += x0 * chunk[2 * c] as i32 + x1 * chunk[2 * c + 1] as i32;
+                }
+            }
+            let js = NR.min(nc - jb * NR);
+            let off = i * n + n0 + jb * NR;
+            for (a, &rj) in acc[off..off + js].iter_mut().zip(&r[..js]) {
+                *a += rj;
+            }
+        }
+    }
+}
+
+/// `out[j] += alpha * x[j]`, sequential — one mul rounding and one add
+/// rounding per element, the contract every level preserves.
+pub(crate) fn saxpy(alpha: f32, x: &[f32], out: &mut [f32]) {
+    for (o, &v) in out.iter_mut().zip(x) {
+        *o += alpha * v;
+    }
+}
+
+/// Sequential dot product — the serial accumulation order the kernel
+/// layer's pre-SIMD `sgemm_nt` used.
+pub(crate) fn sdot(a: &[f32], b: &[f32]) -> f32 {
+    let mut acc = 0.0f32;
+    for (&x, &y) in a.iter().zip(b) {
+        acc += x * y;
+    }
+    acc
+}

@@ -1,0 +1,234 @@
+//! x86_64 SSE2/AVX2 microkernels (`std::arch`, no external deps).
+//!
+//! # Safety
+//!
+//! Every function here is `unsafe` on two counts, both discharged by the
+//! dispatcher ([`super::SimdLevel`]):
+//!
+//! * **target features** — AVX2 functions are only reached through
+//!   [`super::SimdLevel::Avx2`], which [`super::SimdLevel::detect`] yields
+//!   only after `is_x86_feature_detected!("avx2")`; SSE2 is part of the
+//!   x86_64 baseline.
+//! * **bounds** — the raw-pointer loads/stores stay inside their slices
+//!   because the dispatcher asserts the panel/xpairs/accumulator sizes
+//!   before calling (`panel.len() ≥ nblocks·pairs·2·NR`, etc.).
+//!
+//! The quantized kernel is the classic int8 GEMM shape: 16 interleaved i8
+//! weights per load — two consecutive k rows × eight columns — widened to
+//! i16, then `pmaddwd` against a broadcast `(x[2t], x[2t+1])` i16 pair
+//! computes, per i32 lane `c`, exactly
+//! `w[2t][j0+c]·x[2t] + w[2t+1][j0+c]·x[2t+1]`. No saturation is
+//! reachable: |w| ≤ 128 and |x| ≤ 255 keep every i16 product pair far from
+//! the `pmaddwd` edge case (−32768·−32768), and the i32 accumulator is
+//! covered by `check_accumulator_bound` at model build.
+
+#![allow(unsafe_op_in_unsafe_fn)]
+
+use std::arch::x86_64::*;
+
+use super::super::gemm::NR;
+
+/// AVX2 quantized tile kernel: 8 i32 column lanes per `vpmaddwd`, two
+/// k-pair chunks in flight per iteration (i32 addition is exact, so the
+/// two-accumulator split cannot change the result).
+#[target_feature(enable = "avx2")]
+#[allow(clippy::too_many_arguments)]
+pub(crate) unsafe fn qgemm_tile_avx2(
+    panel: &[i8],
+    xp: &[i32],
+    mb: usize,
+    pairs: usize,
+    nc: usize,
+    n: usize,
+    n0: usize,
+    acc: &mut [i32],
+) {
+    let nblocks = (nc + NR - 1) / NR;
+    let block_len = pairs * 2 * NR;
+    for i in 0..mb {
+        let xrow = xp.as_ptr().add(i * pairs);
+        for jb in 0..nblocks {
+            let block = panel.as_ptr().add(jb * block_len);
+            let mut acc0 = _mm256_setzero_si256();
+            let mut acc1 = _mm256_setzero_si256();
+            let mut t = 0usize;
+            while t + 2 <= pairs {
+                let w0 = _mm256_cvtepi8_epi16(_mm_loadu_si128(block.add(t * 16) as *const __m128i));
+                acc0 = _mm256_add_epi32(
+                    acc0,
+                    _mm256_madd_epi16(w0, _mm256_set1_epi32(*xrow.add(t))),
+                );
+                let w1 = _mm256_cvtepi8_epi16(_mm_loadu_si128(
+                    block.add((t + 1) * 16) as *const __m128i,
+                ));
+                acc1 = _mm256_add_epi32(
+                    acc1,
+                    _mm256_madd_epi16(w1, _mm256_set1_epi32(*xrow.add(t + 1))),
+                );
+                t += 2;
+            }
+            if t < pairs {
+                let w0 = _mm256_cvtepi8_epi16(_mm_loadu_si128(block.add(t * 16) as *const __m128i));
+                acc0 = _mm256_add_epi32(
+                    acc0,
+                    _mm256_madd_epi16(w0, _mm256_set1_epi32(*xrow.add(t))),
+                );
+            }
+            let sum = _mm256_add_epi32(acc0, acc1);
+            let js = NR.min(nc - jb * NR);
+            let dst = acc.as_mut_ptr().add(i * n + n0 + jb * NR);
+            if js == NR {
+                let cur = _mm256_loadu_si256(dst as *const __m256i);
+                _mm256_storeu_si256(dst as *mut __m256i, _mm256_add_epi32(cur, sum));
+            } else {
+                let mut tmp = [0i32; NR];
+                _mm256_storeu_si256(tmp.as_mut_ptr() as *mut __m256i, sum);
+                for (c, &v) in tmp.iter().enumerate().take(js) {
+                    *dst.add(c) += v;
+                }
+            }
+        }
+    }
+}
+
+/// SSE2 quantized tile kernel: the same 16-byte panel chunks, widened via
+/// sign-interleave (`pcmpgtb` + `punpck{l,h}bw`) and reduced with two
+/// `pmaddwd` — columns 0..4 in one accumulator, 4..8 in the other.
+#[target_feature(enable = "sse2")]
+#[allow(clippy::too_many_arguments)]
+pub(crate) unsafe fn qgemm_tile_sse2(
+    panel: &[i8],
+    xp: &[i32],
+    mb: usize,
+    pairs: usize,
+    nc: usize,
+    n: usize,
+    n0: usize,
+    acc: &mut [i32],
+) {
+    let nblocks = (nc + NR - 1) / NR;
+    let block_len = pairs * 2 * NR;
+    let zero = _mm_setzero_si128();
+    for i in 0..mb {
+        let xrow = xp.as_ptr().add(i * pairs);
+        for jb in 0..nblocks {
+            let block = panel.as_ptr().add(jb * block_len);
+            let mut acc_lo = _mm_setzero_si128(); // columns 0..4
+            let mut acc_hi = _mm_setzero_si128(); // columns 4..8
+            for t in 0..pairs {
+                let raw = _mm_loadu_si128(block.add(t * 16) as *const __m128i);
+                let sign = _mm_cmpgt_epi8(zero, raw);
+                let lo = _mm_unpacklo_epi8(raw, sign);
+                let hi = _mm_unpackhi_epi8(raw, sign);
+                let xv = _mm_set1_epi32(*xrow.add(t));
+                acc_lo = _mm_add_epi32(acc_lo, _mm_madd_epi16(lo, xv));
+                acc_hi = _mm_add_epi32(acc_hi, _mm_madd_epi16(hi, xv));
+            }
+            let js = NR.min(nc - jb * NR);
+            let dst = acc.as_mut_ptr().add(i * n + n0 + jb * NR);
+            if js == NR {
+                let cur_lo = _mm_loadu_si128(dst as *const __m128i);
+                let cur_hi = _mm_loadu_si128(dst.add(4) as *const __m128i);
+                _mm_storeu_si128(dst as *mut __m128i, _mm_add_epi32(cur_lo, acc_lo));
+                _mm_storeu_si128(dst.add(4) as *mut __m128i, _mm_add_epi32(cur_hi, acc_hi));
+            } else {
+                let mut tmp = [0i32; NR];
+                _mm_storeu_si128(tmp.as_mut_ptr() as *mut __m128i, acc_lo);
+                _mm_storeu_si128(tmp.as_mut_ptr().add(4) as *mut __m128i, acc_hi);
+                for (c, &v) in tmp.iter().enumerate().take(js) {
+                    *dst.add(c) += v;
+                }
+            }
+        }
+    }
+}
+
+/// AVX2 `out[j] += alpha * x[j]` — per-element mul then add (no FMA), so
+/// the roundings match the scalar loop exactly.
+#[target_feature(enable = "avx2")]
+pub(crate) unsafe fn saxpy_avx2(alpha: f32, x: &[f32], out: &mut [f32]) {
+    let len = out.len().min(x.len());
+    let va = _mm256_set1_ps(alpha);
+    let mut j = 0usize;
+    while j + 8 <= len {
+        let o = _mm256_loadu_ps(out.as_ptr().add(j));
+        let v = _mm256_loadu_ps(x.as_ptr().add(j));
+        _mm256_storeu_ps(out.as_mut_ptr().add(j), _mm256_add_ps(o, _mm256_mul_ps(va, v)));
+        j += 8;
+    }
+    while j < len {
+        *out.get_unchecked_mut(j) += alpha * *x.get_unchecked(j);
+        j += 1;
+    }
+}
+
+/// SSE2 `saxpy` (4 lanes), same per-element rounding contract.
+#[target_feature(enable = "sse2")]
+pub(crate) unsafe fn saxpy_sse2(alpha: f32, x: &[f32], out: &mut [f32]) {
+    let len = out.len().min(x.len());
+    let va = _mm_set1_ps(alpha);
+    let mut j = 0usize;
+    while j + 4 <= len {
+        let o = _mm_loadu_ps(out.as_ptr().add(j));
+        let v = _mm_loadu_ps(x.as_ptr().add(j));
+        _mm_storeu_ps(out.as_mut_ptr().add(j), _mm_add_ps(o, _mm_mul_ps(va, v)));
+        j += 4;
+    }
+    while j < len {
+        *out.get_unchecked_mut(j) += alpha * *x.get_unchecked(j);
+        j += 1;
+    }
+}
+
+/// AVX2 dot product: 8 lane accumulators reduced at the end (reassociated —
+/// 1e-5 contract, see [`super::SimdLevel::sdot`]).
+#[target_feature(enable = "avx2")]
+pub(crate) unsafe fn sdot_avx2(a: &[f32], b: &[f32]) -> f32 {
+    let len = a.len().min(b.len());
+    let mut acc = _mm256_setzero_ps();
+    let mut j = 0usize;
+    while j + 8 <= len {
+        let va = _mm256_loadu_ps(a.as_ptr().add(j));
+        let vb = _mm256_loadu_ps(b.as_ptr().add(j));
+        acc = _mm256_add_ps(acc, _mm256_mul_ps(va, vb));
+        j += 8;
+    }
+    let hi = _mm256_extractf128_ps(acc, 1);
+    let lo = _mm256_castps256_ps128(acc);
+    let mut sum = hsum128(_mm_add_ps(lo, hi));
+    while j < len {
+        sum += *a.get_unchecked(j) * *b.get_unchecked(j);
+        j += 1;
+    }
+    sum
+}
+
+/// SSE2 dot product (4 lane accumulators, reassociated).
+#[target_feature(enable = "sse2")]
+pub(crate) unsafe fn sdot_sse2(a: &[f32], b: &[f32]) -> f32 {
+    let len = a.len().min(b.len());
+    let mut acc = _mm_setzero_ps();
+    let mut j = 0usize;
+    while j + 4 <= len {
+        let va = _mm_loadu_ps(a.as_ptr().add(j));
+        let vb = _mm_loadu_ps(b.as_ptr().add(j));
+        acc = _mm_add_ps(acc, _mm_mul_ps(va, vb));
+        j += 4;
+    }
+    let mut sum = hsum128(acc);
+    while j < len {
+        sum += *a.get_unchecked(j) * *b.get_unchecked(j);
+        j += 1;
+    }
+    sum
+}
+
+/// Horizontal sum of 4 fp32 lanes in a fixed order:
+/// `(l0 + l2) + (l1 + l3)`.
+#[inline]
+unsafe fn hsum128(v: __m128) -> f32 {
+    let shuf = _mm_movehl_ps(v, v); // lanes [2, 3, 2, 3]
+    let sums = _mm_add_ps(v, shuf); // [l0+l2, l1+l3, ..]
+    let shuf2 = _mm_shuffle_ps(sums, sums, 0b01); // lane 1 to slot 0
+    _mm_cvtss_f32(_mm_add_ss(sums, shuf2))
+}

@@ -2,9 +2,11 @@
 //! kernel layer.
 //!
 //! Every kernel that needs scratch memory (the `qgemm` i32 accumulator, the
-//! per-thread weight-unpack tiles) or transient buffers (im2col patches,
-//! layer activations, gradient staging) draws it from a `Workspace` instead
-//! of allocating. Serve replicas and the native trainer each own one
+//! per-thread fused-unpack panels and activation-pair buffers) or transient
+//! buffers (im2col patches, layer activations, gradient staging) draws it
+//! from a `Workspace` instead of allocating. The workspace also carries the
+//! [`SimdLevel`] resolved once at construction — the kernels' dispatch
+//! decision (DESIGN.md §SIMD-dispatch). Serve replicas and the native trainer each own one
 //! workspace, so the steady-state hot path performs no heap allocation:
 //! buffers grow to the high-water mark of the model's layer shapes on the
 //! first pass and are reused afterwards (see DESIGN.md §Kernel-layer for
@@ -20,6 +22,8 @@
 //!   `replicas × intra-op threads` never oversubscribes the host.
 
 use std::sync::OnceLock;
+
+use super::simd::SimdLevel;
 
 /// Process-wide hard cap from the `LSQNET_THREADS` environment variable,
 /// read once. 0 = unset (no cap).
@@ -51,22 +55,47 @@ pub fn hardware_threads() -> usize {
 /// pathological churn (e.g. one workspace cycled through many models).
 const POOL_KEEP: usize = 128;
 
+/// Per-thread `qgemm` scratch: the fused-mode panel tile, the one-row
+/// unpack buffer feeding it, and the packed activation-pair stream for the
+/// thread's row block. All grown on demand inside the owning thread (each
+/// thread holds `&mut` to exactly one of these during a kernel call).
+#[derive(Default)]
+pub(crate) struct QThreadScratch {
+    /// Fused-mode interleaved i8 panel for one KC×NC tile
+    /// ([`super::panel::fill_tile_panel`]); unused in panelized mode.
+    pub(crate) panel: Vec<i8>,
+    /// One unpacked tile row (≤ NC values), scratch for the panel builder.
+    pub(crate) row: Vec<i32>,
+    /// i16-pair packed activations for this thread's rows × one k block
+    /// ([`super::simd::pack_xpairs`]).
+    pub(crate) xpairs: Vec<i32>,
+    /// Plain row-major i32 KC×NC tile for the scalar-level fused path
+    /// (direct unpack-and-dot — no panel interleave, zero-skip kept).
+    pub(crate) tile: Vec<i32>,
+}
+
 /// Reusable scratch arena for the kernel layer.
 ///
-/// Owns (a) the `qgemm` i32 accumulator and per-thread weight-unpack
-/// tiles, and (b) a small pool of recycled `f32`/`i32` buffers that the
+/// Owns (a) the `qgemm` i32 accumulator and per-thread panel/activation
+/// scratch, (b) a small pool of recycled `f32`/`i32` buffers that the
 /// inference forward and training forward/backward cycle through
-/// ([`Workspace::take_f32`] / [`Workspace::recycle_f32`]). One workspace
-/// serves one engine/trainer at a time — kernels take `&mut Workspace`, so
-/// the borrow checker enforces exclusivity; cross-replica parallelism
-/// comes from each replica owning its own workspace.
+/// ([`Workspace::take_f32`] / [`Workspace::recycle_f32`]), and (c) the
+/// [`SimdLevel`] every kernel call dispatches on — resolved once at
+/// construction ([`SimdLevel::detect`]), pinnable to the portable path
+/// with [`Workspace::force_scalar`]. One workspace serves one
+/// engine/trainer at a time — kernels take `&mut Workspace`, so the borrow
+/// checker enforces exclusivity; cross-replica parallelism comes from each
+/// replica owning its own workspace.
 pub struct Workspace {
     /// Requested intra-op thread cap; 0 = use [`hardware_threads`].
     threads: usize,
+    /// SIMD dispatch level for every kernel call drawing on this
+    /// workspace.
+    simd: SimdLevel,
     /// `qgemm` i32 accumulator (`m×n`, resized per call).
     pub(crate) acc: Vec<i32>,
-    /// Per-thread KC×NC weight-unpack tiles for `qgemm`.
-    pub(crate) tiles: Vec<Vec<i32>>,
+    /// Per-thread `qgemm` scratch (fused panels + activation pairs).
+    pub(crate) qscratch: Vec<QThreadScratch>,
     pool_f32: Vec<Vec<f32>>,
     pool_i32: Vec<Vec<i32>>,
     pool_bool: Vec<Vec<bool>>,
@@ -87,16 +116,33 @@ impl Workspace {
     }
 
     /// A workspace capped at `threads` intra-op threads (0 = hardware).
+    /// The SIMD dispatch level is resolved here, once
+    /// ([`SimdLevel::detect`] — cached per process, `LSQNET_FORCE_SCALAR`
+    /// honored).
     pub fn with_threads(threads: usize) -> Workspace {
         Workspace {
             threads,
+            simd: SimdLevel::detect(),
             acc: Vec::new(),
-            tiles: Vec::new(),
+            qscratch: Vec::new(),
             pool_f32: Vec::new(),
             pool_i32: Vec::new(),
             pool_bool: Vec::new(),
             pool_usize: Vec::new(),
         }
+    }
+
+    /// The SIMD level kernel calls on this workspace dispatch to.
+    pub fn simd(&self) -> SimdLevel {
+        self.simd
+    }
+
+    /// Pin this workspace to the portable scalar kernels (the in-process
+    /// side of the dispatch-parity tests; `LSQNET_FORCE_SCALAR=1` is the
+    /// process-wide equivalent). Downgrade-only by design: forcing a
+    /// *higher* level than the host supports would be unsound.
+    pub fn force_scalar(&mut self) {
+        self.simd = SimdLevel::Scalar;
     }
 
     /// Re-cap the intra-op thread count (0 = hardware). Existing scratch
@@ -120,24 +166,19 @@ impl Workspace {
     }
 
     /// The `qgemm` scratch pair: the shared i32 accumulator plus one
-    /// KC×NC unpack tile per thread (grown on demand). Returned as two
-    /// disjoint borrows so the caller can split the accumulator across
-    /// threads while each thread owns a tile.
+    /// [`QThreadScratch`] per thread. Returned as two disjoint borrows so
+    /// the caller can split the accumulator across threads while each
+    /// thread owns its scratch; the per-thread buffers grow on demand
+    /// inside the kernel (each thread holds them `&mut`).
     pub(crate) fn gemm_scratch(
         &mut self,
         threads: usize,
-        tile_len: usize,
-    ) -> (&mut Vec<i32>, &mut [Vec<i32>]) {
-        if self.tiles.len() < threads {
-            self.tiles.resize_with(threads, Vec::new);
+    ) -> (&mut Vec<i32>, &mut [QThreadScratch]) {
+        if self.qscratch.len() < threads {
+            self.qscratch.resize_with(threads, QThreadScratch::default);
         }
-        for t in self.tiles.iter_mut().take(threads) {
-            if t.len() < tile_len {
-                t.resize(tile_len, 0);
-            }
-        }
-        let Workspace { acc, tiles, .. } = self;
-        (acc, &mut tiles[..threads])
+        let Workspace { acc, qscratch, .. } = self;
+        (acc, &mut qscratch[..threads])
     }
 
     /// A zero-filled `f32` buffer of exactly `len` elements, reusing a
@@ -320,15 +361,24 @@ mod tests {
     }
 
     #[test]
-    fn gemm_scratch_grows_per_thread_tiles() {
+    fn gemm_scratch_grows_per_thread_slots() {
         let mut ws = Workspace::new();
-        let (acc, tiles) = ws.gemm_scratch(4, 128);
-        assert_eq!(tiles.len(), 4);
-        assert!(tiles.iter().all(|t| t.len() >= 128));
+        let (acc, scr) = ws.gemm_scratch(4);
+        assert_eq!(scr.len(), 4);
+        scr[3].panel.resize(64, 0);
         acc.resize(10, 0);
-        let (acc2, tiles2) = ws.gemm_scratch(2, 256);
+        let (acc2, scr2) = ws.gemm_scratch(2);
         assert_eq!(acc2.len(), 10);
-        assert_eq!(tiles2.len(), 2);
-        assert!(tiles2.iter().all(|t| t.len() >= 256));
+        assert_eq!(scr2.len(), 2);
+        // Slots persist: asking for fewer threads must not drop capacity.
+        let (_, scr3) = ws.gemm_scratch(4);
+        assert_eq!(scr3[3].panel.len(), 64);
+    }
+
+    #[test]
+    fn force_scalar_pins_portable_path() {
+        let mut ws = Workspace::new();
+        ws.force_scalar();
+        assert_eq!(ws.simd(), crate::runtime::kernels::SimdLevel::Scalar);
     }
 }

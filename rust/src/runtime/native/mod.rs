@@ -2,12 +2,15 @@
 //! directly from bit-packed weights, with no XLA/PJRT dependency.
 //!
 //! This is the deployment path the paper motivates (Figure 1 / McKinstry et
-//! al. 2018): weights live in their 2/3/4/8-bit [`crate::quant::pack::Packed`]
-//! form, activations are quantized to integers per Eq. 1 on entry to every
-//! conv/dense layer, the multiply-accumulate runs in `i32`
-//! ([`crate::runtime::kernels::qgemm`]), and a single fp32 rescale by
-//! `s_a * s_w` applies Eq. 2 to the result. Layers the paper keeps in full
-//! precision (`qbits >= 32` families) fall back to an fp32 GEMM.
+//! al. 2018): weights arrive in their 2/3/4/8-bit
+//! [`crate::quant::pack::Packed`] form, activations are quantized to
+//! integers per Eq. 1 on entry to every conv/dense layer, the
+//! multiply-accumulate runs in `i32` through the SIMD-dispatched panel
+//! kernels ([`crate::runtime::kernels::qgemm_panel`] by default — weights
+//! unpacked once at bind time; [`UnpackMode::Fused`] keeps the per-call
+//! fused unpack for memory-constrained hosts), and a single fp32 rescale
+//! by `s_a * s_w` applies Eq. 2 to the result. Layers the paper keeps in
+//! full precision (`qbits >= 32` families) fall back to an fp32 GEMM.
 //!
 //! All compute routes through the shared kernel layer
 //! ([`crate::runtime::kernels`]): the forward draws every activation,
@@ -37,19 +40,88 @@ use anyhow::{anyhow, bail, ensure, Result};
 use crate::quant::lsq::{self, qrange};
 use crate::quant::pack::{quantize_and_pack, Packed};
 use crate::runtime::backend::Backend;
-use crate::runtime::kernels::{self, check_accumulator_bound, Workspace};
+use crate::runtime::kernels::{self, check_accumulator_bound, PanelizedWeights, Workspace};
 use crate::runtime::Manifest;
 use crate::tensor::Tensor;
 
 use arch::{Arch, ArchOp, BnSpec, ConvSpec, DenseSpec};
 
+/// How a bound [`NativeModel`] stores its sub-32-bit weights for the
+/// forward pass (DESIGN.md §SIMD-dispatch):
+///
+/// * [`UnpackMode::Panelized`] — unpack every layer **once** at bind time
+///   into the kernel layer's shared i8 panel layout
+///   ([`PanelizedWeights`]); forward calls do zero unpack work. The
+///   packed byte buffer is dropped after the build (the panels *are* the
+///   working set), so the resident cost is ~`k·n` bytes per layer
+///   (reported as [`NativeModel::panel_bytes`]) instead of the
+///   `k·n·bits/8` packed form.
+/// * [`UnpackMode::Fused`] — keep only the packed bits; each forward call
+///   unpacks KC×NC tiles into per-thread scratch on the fly (the
+///   pre-panelization behavior). The low-memory choice for constrained
+///   deployments: `ServerConfig::fused_unpack` or `LSQNET_FUSED_UNPACK=1`.
+///
+/// Both modes produce bitwise-identical logits (`tests/kernels.rs`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum UnpackMode {
+    /// Panels built once at bind; fastest serving (the default).
+    Panelized,
+    /// Per-call fused unpack; smallest resident footprint.
+    Fused,
+}
+
+impl UnpackMode {
+    /// The process default: [`UnpackMode::Panelized`], unless
+    /// `LSQNET_FUSED_UNPACK` is set to anything but `0` (shared truthy
+    /// rule: [`crate::util::env_truthy`]; read once per process, like the
+    /// kernel layer's other env knobs).
+    pub fn default_mode() -> UnpackMode {
+        static MODE: std::sync::OnceLock<UnpackMode> = std::sync::OnceLock::new();
+        *MODE.get_or_init(|| {
+            if crate::util::env_truthy("LSQNET_FUSED_UNPACK") {
+                UnpackMode::Fused
+            } else {
+                UnpackMode::Panelized
+            }
+        })
+    }
+}
+
 /// Weight storage for one matmul layer.
 enum LayerWeights {
-    /// Quantized path: packed integer weights (step = `s_w`) plus the
-    /// activation quantizer (`s_a`, range) for this layer.
+    /// [`UnpackMode::Panelized`]: bind-time panels plus the Eq. 2 steps.
+    /// The packed byte buffer is **dropped** once the panels are built —
+    /// the forward path reads only `sw` — and `storage_bytes` preserves
+    /// the Figure-3 accounting the bits would have reported.
+    Panel {
+        panel: PanelizedWeights,
+        sw: f32,
+        storage_bytes: usize,
+        sa: f32,
+        act_qn: i64,
+        act_qp: i64,
+    },
+    /// [`UnpackMode::Fused`]: packed integer weights (step = `s_w`) kept
+    /// resident; tiles unpack per call.
     Packed { w: Packed, sa: f32, act_qn: i64, act_qp: i64 },
     /// Full-precision path for `bits >= 32` layers.
     F32(Vec<f32>),
+}
+
+impl LayerWeights {
+    /// The quantized-path parameters: `(s_a·s_w rescale, s_a, act range)`.
+    ///
+    /// # Panics
+    /// On the fp32 variant — callers match that arm away first.
+    fn quant_params(&self) -> (f32, f32, i64, i64) {
+        match self {
+            LayerWeights::Panel { sw, sa, act_qn, act_qp, .. } => {
+                (sa * sw, *sa, *act_qn, *act_qp)
+            }
+            LayerWeights::Packed { w, sa, act_qn, act_qp } => (sa * w.step, *sa, *act_qn, *act_qp),
+            LayerWeights::F32(_) => unreachable!("quant_params on an fp32 layer"),
+        }
+    }
 }
 
 struct RtConv {
@@ -98,8 +170,12 @@ pub struct NativeModel {
     num_classes: usize,
     ops: Vec<RtOp>,
     /// Total packed weight bytes (including per-layer fp32 steps) — the
-    /// Figure 3 storage the serving path actually holds in memory.
+    /// Figure 3 storage axis.
     pub packed_bytes: usize,
+    /// Resident bytes of the bind-time weight panels (0 in
+    /// [`UnpackMode::Fused`]) — the memory the panelized fast path adds on
+    /// top of `packed_bytes`.
+    pub panel_bytes: usize,
 }
 
 /// Host activation tensor used inside the interpreted forward pass. The
@@ -143,6 +219,7 @@ fn bind_weights(
     signed_act: bool,
     k: usize,
     want_shape: &[usize],
+    mode: UnpackMode,
 ) -> Result<LayerWeights> {
     let w = binder.tensor(&format!("{name}.w"))?;
     ensure!(
@@ -164,19 +241,35 @@ fn bind_weights(
         "{name}: k={k} at {bits}-bit would overflow the i32 accumulator"
     );
     let packed = quantize_and_pack(w.f32s()?, sw, bits, true)?;
-    Ok(LayerWeights::Packed { w: packed, sa, act_qn, act_qp })
+    // The weight matrix is logically k×n with n the trailing axis of the
+    // parameter shape (kh·kw·in × out for convs, in × out for dense) —
+    // exactly the row-major layout the GEMM consumes.
+    let n = *want_shape.last().expect("non-empty weight shape");
+    Ok(match mode {
+        UnpackMode::Panelized => LayerWeights::Panel {
+            storage_bytes: packed.storage_bytes() + 4, // + s_a
+            sw: packed.step,
+            panel: PanelizedWeights::build(&packed, k, n),
+            sa,
+            act_qn,
+            act_qp,
+            // `packed` drops here: panels hold the working set.
+        },
+        UnpackMode::Fused => LayerWeights::Packed { w: packed, sa, act_qn, act_qp },
+    })
 }
 
-fn bind_conv(binder: &Binder, spec: &ConvSpec) -> Result<RtConv> {
+fn bind_conv(binder: &Binder, spec: &ConvSpec, mode: UnpackMode) -> Result<RtConv> {
     let shape = [spec.kh, spec.kw, spec.in_ch, spec.out_ch];
     let k = spec.kh * spec.kw * spec.in_ch;
-    let wq = bind_weights(binder, &spec.name, spec.bits, spec.signed_act, k, &shape)?;
+    let wq = bind_weights(binder, &spec.name, spec.bits, spec.signed_act, k, &shape, mode)?;
     Ok(RtConv { spec: spec.clone(), wq })
 }
 
-fn bind_dense(binder: &Binder, spec: &DenseSpec) -> Result<RtDense> {
+fn bind_dense(binder: &Binder, spec: &DenseSpec, mode: UnpackMode) -> Result<RtDense> {
     let shape = [spec.in_dim, spec.out_dim];
-    let wq = bind_weights(binder, &spec.name, spec.bits, spec.signed_act, spec.in_dim, &shape)?;
+    let wq =
+        bind_weights(binder, &spec.name, spec.bits, spec.signed_act, spec.in_dim, &shape, mode)?;
     let bias = match binder.map.get(format!("{}.b", spec.name).as_str()) {
         Some(t) => {
             ensure!(t.numel() == spec.out_dim, "{}.b wrong length", spec.name);
@@ -204,15 +297,37 @@ fn bind_bn(binder: &Binder, spec: &BnSpec) -> Result<RtBn> {
 
 fn layer_packed_bytes(wq: &LayerWeights) -> usize {
     match wq {
+        LayerWeights::Panel { storage_bytes, .. } => *storage_bytes,
         LayerWeights::Packed { w, .. } => w.storage_bytes() + 4, // + s_a
         LayerWeights::F32(v) => v.len() * 4,
     }
 }
 
+fn layer_panel_bytes(wq: &LayerWeights) -> usize {
+    match wq {
+        LayerWeights::Panel { panel, .. } => panel.panel_bytes(),
+        _ => 0,
+    }
+}
+
 impl NativeModel {
-    /// Bind `family`'s architecture to `params` (in `Family::param_names`
-    /// order), quantizing and packing every sub-32-bit weight tensor.
+    /// [`NativeModel::build_with_mode`] with the process-default
+    /// [`UnpackMode`] (panelized, unless `LSQNET_FUSED_UNPACK` is set).
     pub fn build(manifest: &Manifest, family: &str, params: &[Tensor]) -> Result<NativeModel> {
+        NativeModel::build_with_mode(manifest, family, params, UnpackMode::default_mode())
+    }
+
+    /// Bind `family`'s architecture to `params` (in `Family::param_names`
+    /// order), quantizing and packing every sub-32-bit weight tensor —
+    /// and, in [`UnpackMode::Panelized`], unpacking each into the kernel
+    /// layer's shared panel layout once, here, so forward calls do no
+    /// unpack work.
+    pub fn build_with_mode(
+        manifest: &Manifest,
+        family: &str,
+        params: &[Tensor],
+        mode: UnpackMode,
+    ) -> Result<NativeModel> {
         let fam = manifest.family(family)?;
         ensure!(
             params.len() == fam.param_names.len(),
@@ -233,17 +348,20 @@ impl NativeModel {
         };
 
         let mut packed_bytes = 0usize;
+        let mut panel_bytes = 0usize;
         let mut ops = Vec::with_capacity(arch.ops.len());
         for op in &arch.ops {
             ops.push(match op {
                 ArchOp::Conv(c) => {
-                    let rt = bind_conv(&binder, c)?;
+                    let rt = bind_conv(&binder, c, mode)?;
                     packed_bytes += layer_packed_bytes(&rt.wq);
+                    panel_bytes += layer_panel_bytes(&rt.wq);
                     RtOp::Conv(rt)
                 }
                 ArchOp::Dense(d) => {
-                    let rt = bind_dense(&binder, d)?;
+                    let rt = bind_dense(&binder, d, mode)?;
                     packed_bytes += layer_packed_bytes(&rt.wq);
+                    panel_bytes += layer_panel_bytes(&rt.wq);
                     packed_bytes += rt.bias.as_ref().map_or(0, |b| b.len() * 4);
                     RtOp::Dense(rt)
                 }
@@ -255,14 +373,17 @@ impl NativeModel {
                 ArchOp::Preact(p) => {
                     let rt = RtPreact {
                         bn1: bind_bn(&binder, &p.bn1)?,
-                        proj: p.proj.as_ref().map(|c| bind_conv(&binder, c)).transpose()?,
-                        conv1: bind_conv(&binder, &p.conv1)?,
+                        proj: p.proj.as_ref().map(|c| bind_conv(&binder, c, mode)).transpose()?,
+                        conv1: bind_conv(&binder, &p.conv1, mode)?,
                         bn2: bind_bn(&binder, &p.bn2)?,
-                        conv2: bind_conv(&binder, &p.conv2)?,
+                        conv2: bind_conv(&binder, &p.conv2, mode)?,
                     };
                     packed_bytes += layer_packed_bytes(&rt.conv1.wq)
                         + layer_packed_bytes(&rt.conv2.wq)
                         + rt.proj.as_ref().map_or(0, |c| layer_packed_bytes(&c.wq));
+                    panel_bytes += layer_panel_bytes(&rt.conv1.wq)
+                        + layer_panel_bytes(&rt.conv2.wq)
+                        + rt.proj.as_ref().map_or(0, |c| layer_panel_bytes(&c.wq));
                     RtOp::Preact(Box::new(rt))
                 }
             });
@@ -274,6 +395,7 @@ impl NativeModel {
             num_classes: fam.num_classes,
             ops,
             packed_bytes,
+            panel_bytes,
         })
     }
 
@@ -427,22 +549,31 @@ fn apply_conv(ws: &mut Workspace, act: &Act, rt: &RtConv) -> Result<Act> {
     let (ow, _) = kernels::same_padding(w, spec.kw, spec.stride);
     let rows = b * oh * ow;
     match &rt.wq {
-        LayerWeights::Packed { w: pw, sa, act_qn, act_qp } => {
-            let xq = quantize_acts(ws, &act.data, *sa, *act_qn, *act_qp);
-            let mut cols = ws.take_i32_cap(rows * k);
-            kernels::im2col(&xq, 0, b, h, w, c, spec.kh, spec.kw, spec.stride, &mut cols);
-            ws.recycle_i32(xq);
-            let mut out = ws.take_f32_any(rows * n);
-            kernels::qgemm(ws, rows, k, n, &cols, pw, sa * pw.step, None, &mut out);
-            ws.recycle_i32(cols);
-            Ok(Act { shape: vec![b, oh, ow, n], data: out })
-        }
         LayerWeights::F32(wv) => {
             let mut cols = ws.take_f32_cap(rows * k);
             kernels::im2col(&act.data, 0.0, b, h, w, c, spec.kh, spec.kw, spec.stride, &mut cols);
             let mut out = ws.take_f32_any(rows * n);
             kernels::sgemm(ws, rows, k, n, &cols, wv, None, &mut out);
             ws.recycle_f32(cols);
+            Ok(Act { shape: vec![b, oh, ow, n], data: out })
+        }
+        wq => {
+            let (scale, sa, act_qn, act_qp) = wq.quant_params();
+            let xq = quantize_acts(ws, &act.data, sa, act_qn, act_qp);
+            let mut cols = ws.take_i32_cap(rows * k);
+            kernels::im2col(&xq, 0, b, h, w, c, spec.kh, spec.kw, spec.stride, &mut cols);
+            ws.recycle_i32(xq);
+            let mut out = ws.take_f32_any(rows * n);
+            match wq {
+                LayerWeights::Panel { panel, .. } => {
+                    kernels::qgemm_panel(ws, rows, k, n, &cols, panel, scale, None, &mut out)
+                }
+                LayerWeights::Packed { w: pw, .. } => {
+                    kernels::qgemm(ws, rows, k, n, &cols, pw, scale, None, &mut out)
+                }
+                LayerWeights::F32(_) => unreachable!(),
+            }
+            ws.recycle_i32(cols);
             Ok(Act { shape: vec![b, oh, ow, n], data: out })
         }
     }
@@ -458,13 +589,30 @@ fn apply_dense(ws: &mut Workspace, act: &Act, rt: &RtDense) -> Result<Act> {
     let n = spec.out_dim;
     let mut out = ws.take_f32_any(b * n);
     match &rt.wq {
-        LayerWeights::Packed { w: pw, sa, act_qn, act_qp } => {
-            let xq = quantize_acts(ws, &act.data, *sa, *act_qn, *act_qp);
-            kernels::qgemm(ws, b, d, n, &xq, pw, sa * pw.step, rt.bias.as_deref(), &mut out);
-            ws.recycle_i32(xq);
-        }
         LayerWeights::F32(wv) => {
             kernels::sgemm(ws, b, d, n, &act.data, wv, rt.bias.as_deref(), &mut out);
+        }
+        wq => {
+            let (scale, sa, act_qn, act_qp) = wq.quant_params();
+            let xq = quantize_acts(ws, &act.data, sa, act_qn, act_qp);
+            match wq {
+                LayerWeights::Panel { panel, .. } => kernels::qgemm_panel(
+                    ws,
+                    b,
+                    d,
+                    n,
+                    &xq,
+                    panel,
+                    scale,
+                    rt.bias.as_deref(),
+                    &mut out,
+                ),
+                LayerWeights::Packed { w: pw, .. } => {
+                    kernels::qgemm(ws, b, d, n, &xq, pw, scale, rt.bias.as_deref(), &mut out)
+                }
+                LayerWeights::F32(_) => unreachable!(),
+            }
+            ws.recycle_i32(xq);
         }
     }
     Ok(Act { shape: vec![b, n], data: out })
@@ -499,6 +647,7 @@ pub struct NativeEngine {
     manifest: Manifest,
     model: Option<NativeModel>,
     ws: Workspace,
+    mode: UnpackMode,
 }
 
 impl NativeEngine {
@@ -509,12 +658,18 @@ impl NativeEngine {
             manifest: Manifest::load(dir)?,
             model: None,
             ws: Workspace::new(),
+            mode: UnpackMode::default_mode(),
         })
     }
 
     /// The model bound by the last `prepare_infer`, if any.
     pub fn model(&self) -> Option<&NativeModel> {
         self.model.as_ref()
+    }
+
+    /// The weight-storage mode the next `prepare_infer` binds with.
+    pub fn unpack_mode(&self) -> UnpackMode {
+        self.mode
     }
 }
 
@@ -528,8 +683,21 @@ impl Backend for NativeEngine {
     }
 
     fn prepare_infer(&mut self, family: &str, params: &[Tensor]) -> Result<()> {
-        self.model = Some(NativeModel::build(&self.manifest, family, params)?);
+        self.model = Some(NativeModel::build_with_mode(
+            &self.manifest,
+            family,
+            params,
+            self.mode,
+        )?);
         Ok(())
+    }
+
+    fn set_low_memory(&mut self, fused_unpack: bool) {
+        self.mode = if fused_unpack {
+            UnpackMode::Fused
+        } else {
+            UnpackMode::Panelized
+        };
     }
 
     fn batch(&self) -> usize {

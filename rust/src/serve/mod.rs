@@ -154,6 +154,12 @@ pub struct ServerConfig {
     /// `hardware_threads / replicas`, so the deployment never
     /// oversubscribes (`LSQNET_THREADS` still caps process-wide).
     pub intra_threads: usize,
+    /// Low-memory weight mode: skip bind-time panelization and unpack
+    /// weight tiles per call (`UnpackMode::Fused`,
+    /// [`crate::runtime::Backend::set_low_memory`]) — for
+    /// memory-constrained deployments; the panelized default is faster.
+    /// ORed with the `LSQNET_FUSED_UNPACK=1` environment knob.
+    pub fused_unpack: bool,
 }
 
 impl Server {
@@ -179,8 +185,15 @@ impl Server {
             BackendKind::Native => {
                 // Dry-run bind: catches unsupported architectures and
                 // missing/mis-shaped parameters synchronously, at the cost
-                // of one extra quantize+pack at startup.
-                crate::runtime::native::NativeModel::build(&manifest, &cfg.family, &params)?;
+                // of one extra quantize+pack at startup. Always fused here
+                // — panelizing twice would double peak startup memory for
+                // no extra validation.
+                crate::runtime::native::NativeModel::build_with_mode(
+                    &manifest,
+                    &cfg.family,
+                    &params,
+                    crate::runtime::native::UnpackMode::Fused,
+                )?;
             }
             BackendKind::Xla => {
                 cfg.backend.check_available()?;
@@ -204,6 +217,7 @@ impl Server {
         } else {
             cfg.intra_threads
         };
+        let cfg_fused_unpack = cfg.fused_unpack;
         let mut handles = Vec::with_capacity(replicas);
         for rid in 0..replicas {
             let spec = cfg.backend.clone();
@@ -227,6 +241,7 @@ impl Server {
                         classes,
                         image_len,
                         intra_threads,
+                        cfg_fused_unpack,
                     ) {
                         eprintln!("serve replica {rid}: {e:#}");
                     }
@@ -297,9 +312,16 @@ fn replica_loop(
     classes: usize,
     image_len: usize,
     intra_threads: usize,
+    fused_unpack: bool,
 ) -> Result<()> {
     let mut backend = spec.open()?;
     backend.set_intra_op_threads(intra_threads);
+    // Only *opt into* low memory here: a freshly opened native engine
+    // already resolved the LSQNET_FUSED_UNPACK env default itself, and
+    // unconditionally pushing `false` would stomp it.
+    if fused_unpack {
+        backend.set_low_memory(true);
+    }
     backend.prepare_infer(family, params)?;
     let batch = backend.batch();
     let mut pending: Vec<Request> = Vec::with_capacity(batch);

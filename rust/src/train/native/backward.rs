@@ -14,7 +14,11 @@
 //!
 //! * matmul layers: `dŴ = X̂ᵀ·dY` ([`kernels::sgemm_tn`]), `dX̂ = dY·Ŵᵀ`
 //!   ([`kernels::sgemm_nt`]), convolutions scatter `dX̂` back through the
-//!   im2col adjoint ([`kernels::col2im`]);
+//!   im2col adjoint ([`kernels::col2im`]). The whole fp32 GEMM family is
+//!   SIMD-dispatched in the kernel layer (DESIGN.md §SIMD-dispatch), so
+//!   training steps speed up with no change here — `sgemm`/`sgemm_tn`
+//!   stay bitwise-deterministic across dispatch levels; `sgemm_nt`'s dot
+//!   reduction is held to the layer's 1e-5 fp32 tolerance;
 //! * quantizers: the Eq. 5 STE mask gates `dX̂`/`dŴ` onto the raw inputs,
 //!   and the Eq. 3 term (or a method-ablation variant, [`Method`])
 //!   reduces to the step-size gradient, scaled by the Section-2.2

@@ -33,6 +33,9 @@ pub struct Bench {
     suite: String,
     opts: BenchOpts,
     results: Vec<(String, BenchResult)>,
+    /// Suite-level metadata key/values ([`Bench::set_meta`]), emitted as
+    /// top-level JSON fields (e.g. the SIMD dispatch level of the run).
+    meta: Vec<(String, String)>,
 }
 
 #[derive(Clone, Debug)]
@@ -45,6 +48,10 @@ pub struct BenchResult {
     /// Optional user-provided work units per iteration (elements, bytes…)
     /// enabling throughput reporting.
     pub units_per_iter: f64,
+    /// Derived per-row columns ([`Bench::annotate`]) — ratio columns like
+    /// `speedup_vs_serial`, emitted as extra JSON fields so the trajectory
+    /// file is self-describing without hand-diffing rows.
+    pub extras: Vec<(String, f64)>,
 }
 
 impl BenchResult {
@@ -66,16 +73,18 @@ pub fn black_box<T>(x: T) -> T {
 impl Bench {
     pub fn new(suite: &str) -> Self {
         let mut opts = BenchOpts::default();
-        // Fast mode for CI/tests: LSQNET_BENCH_FAST=1 shrinks measurement.
-        if std::env::var("LSQNET_BENCH_FAST").is_ok() {
+        // Fast mode for CI/tests: LSQNET_BENCH_FAST=1 shrinks measurement
+        // (shared truthy rule — `LSQNET_BENCH_FAST=0` means off, like
+        // every other LSQNET_* knob).
+        if super::env_truthy("LSQNET_BENCH_FAST") {
             opts.warmup = Duration::from_millis(50);
             opts.measure = Duration::from_millis(200);
         }
-        Bench { suite: suite.to_string(), opts, results: Vec::new() }
+        Bench { suite: suite.to_string(), opts, results: Vec::new(), meta: Vec::new() }
     }
 
     pub fn with_opts(suite: &str, opts: BenchOpts) -> Self {
-        Bench { suite: suite.to_string(), opts, results: Vec::new() }
+        Bench { suite: suite.to_string(), opts, results: Vec::new(), meta: Vec::new() }
     }
 
     /// Run `f` repeatedly; one call = one iteration.
@@ -112,6 +121,7 @@ impl Bench {
             p95_ns: percentile(&times_ns, 95.0),
             min_ns: times_ns.iter().cloned().fold(f64::INFINITY, f64::min),
             units_per_iter,
+            extras: Vec::new(),
         };
         println!(
             "{:<40} {:>12} iters  mean {:>12}  p50 {:>12}  p95 {:>12}{}",
@@ -135,12 +145,39 @@ impl Bench {
         &self.results
     }
 
+    /// Attach a derived ratio column to the most recent result named
+    /// `name` (e.g. `speedup_vs_serial`, `panel_vs_fused`). The value is
+    /// emitted as an extra JSON field on that row, so trajectory files
+    /// carry their own comparisons instead of requiring hand-diffing.
+    /// Non-finite values are dropped (JSON has no NaN); an unknown name is
+    /// a no-op.
+    pub fn annotate(&mut self, name: &str, key: &str, value: f64) {
+        if !value.is_finite() {
+            return;
+        }
+        if let Some((_, r)) = self.results.iter_mut().rev().find(|(n, _)| n == name) {
+            r.extras.push((key.to_string(), value));
+        }
+    }
+
+    /// Set a suite-level metadata string (e.g. `simd` → the dispatch
+    /// level of this run), emitted as a top-level JSON field. Re-setting a
+    /// key overwrites it.
+    pub fn set_meta(&mut self, key: &str, value: &str) {
+        if let Some((_, v)) = self.meta.iter_mut().find(|(k, _)| k == key) {
+            *v = value.to_string();
+        } else {
+            self.meta.push((key.to_string(), value.to_string()));
+        }
+    }
+
     /// Serialize the whole suite as one machine-readable JSON document:
-    /// `{suite, threads_available, results: [{name, iters, mean_ns, p50_ns,
-    /// p95_ns, min_ns, units_per_iter, units_per_sec?}]}` — the format the
-    /// repo-root `BENCH_*.json` perf-trajectory files use.
-    /// `units_per_sec` is present only for [`Bench::bench_units`] entries
-    /// (JSON has no NaN).
+    /// `{suite, threads_available, <meta…>, results: [{name, iters,
+    /// mean_ns, p50_ns, p95_ns, min_ns, units_per_iter, units_per_sec?,
+    /// <extras…>}]}` — the format the repo-root `BENCH_*.json`
+    /// perf-trajectory files use. `units_per_sec` is present only for
+    /// [`Bench::bench_units`] entries (JSON has no NaN); `<extras…>` are
+    /// the [`Bench::annotate`] ratio columns.
     pub fn to_json(&self) -> Json {
         let results: Vec<Json> = self
             .results
@@ -158,15 +195,22 @@ impl Bench {
                 if r.units_per_iter > 0.0 {
                     fields.push(("units_per_sec", Json::num(r.throughput())));
                 }
+                for (k, v) in &r.extras {
+                    fields.push((k.as_str(), Json::num(*v)));
+                }
                 Json::obj(fields)
             })
             .collect();
         let threads = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
-        Json::obj(vec![
+        let mut fields = vec![
             ("suite", Json::str(self.suite.clone())),
             ("threads_available", Json::num(threads as f64)),
-            ("results", Json::Arr(results)),
-        ])
+        ];
+        for (k, v) in &self.meta {
+            fields.push((k.as_str(), Json::str(v.clone())));
+        }
+        fields.push(("results", Json::Arr(results)));
+        Json::obj(fields)
     }
 
     /// Write [`Bench::to_json`] to `path` (parent directories created).
@@ -233,6 +277,31 @@ mod tests {
         assert!(r.iters >= 3);
         assert!(r.mean_ns >= 0.0);
         assert!(r.p95_ns >= r.p50_ns);
+    }
+
+    #[test]
+    fn annotate_and_meta_land_in_json() {
+        let opts = BenchOpts {
+            warmup: Duration::from_millis(1),
+            measure: Duration::from_millis(5),
+            min_iters: 1,
+        };
+        let mut b = Bench::with_opts("test", opts);
+        b.bench_units("row", 10.0, || {
+            black_box(1 + 1);
+        });
+        b.annotate("row", "speedup_vs_serial", 2.5);
+        b.annotate("row", "dropped_nan", f64::NAN); // must be skipped
+        b.annotate("missing", "ignored", 1.0); // unknown name: no-op
+        b.set_meta("simd", "scalar");
+        b.set_meta("simd", "avx2"); // overwrite
+        let json = b.to_json().to_string_pretty();
+        assert!(json.contains("\"speedup_vs_serial\""));
+        assert!(!json.contains("dropped_nan"));
+        assert!(!json.contains("ignored"));
+        assert!(json.contains("\"simd\""));
+        assert!(json.contains("avx2"));
+        assert!(!json.contains("scalar"));
     }
 
     #[test]

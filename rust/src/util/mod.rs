@@ -9,3 +9,17 @@ pub mod json;
 pub mod rng;
 pub mod stats;
 pub mod table;
+
+/// One shared truthy-env-flag rule for the runtime knobs
+/// (`LSQNET_FORCE_SCALAR`, `LSQNET_FUSED_UNPACK`, …): set and not `"0"`.
+/// Call sites that need per-process stability cache the result in a
+/// `OnceLock` — this helper just owns the parsing rule so knobs can't
+/// drift apart.
+pub fn env_truthy(name: &str) -> bool {
+    std::env::var(name)
+        .map(|v| {
+            let v = v.trim();
+            !v.is_empty() && v != "0"
+        })
+        .unwrap_or(false)
+}

@@ -279,6 +279,7 @@ fn serve_round_trip_and_batching() {
         queue_depth: 128,
         replicas: 1,
         intra_threads: 0,
+        fused_unpack: false,
     })
     .unwrap();
     let spec = SynthSpec::new(10, 1.2, 3);
@@ -321,6 +322,7 @@ fn serve_rejects_bad_image_size() {
         queue_depth: 8,
         replicas: 1,
         intra_threads: 0,
+        fused_unpack: false,
     })
     .unwrap();
     assert!(server.client().submit(vec![0.0; 7]).is_err());

@@ -1,24 +1,36 @@
 //! Kernel-layer tests: the determinism and workspace-reuse guarantees the
-//! unified kernel layer advertises (DESIGN.md §Kernel-layer).
+//! unified kernel layer advertises (DESIGN.md §Kernel-layer,
+//! §SIMD-dispatch).
 //!
 //! * threaded `qgemm` is **bitwise identical** to single-thread at every
 //!   bit width and across tile-straddling shapes;
+//! * `qgemm` is also bitwise identical across the SIMD dispatch
+//!   (detected level vs forced-scalar) *and* across weight storage modes
+//!   (fused unpack vs bind-time panels) — all four combinations agree;
 //! * the threaded fp32 family (`sgemm`/`sgemm_nt`/`sgemm_tn`) matches
 //!   single-thread bitwise (the spec floor is 1e-5; the implementation is
 //!   exactly deterministic because the per-element accumulation order
-//!   never depends on the split, and the test pins that);
+//!   never depends on the split, and the test pins that). Across
+//!   dispatch levels, `sgemm`/`sgemm_tn` stay bitwise (elementwise axpy)
+//!   while `sgemm_nt` is held to 1e-5 (reassociated dot);
+//! * `qgemm`'s i32 accumulation is exact at `k` just under the
+//!   `check_accumulator_bound` limit (vs an i64 naive reference);
 //! * one `Workspace` pushed through back-to-back mismatched shapes gives
 //!   the same results as fresh buffers per call, for raw kernels, the
 //!   native inference forward, and a native train step.
 //!
-//! The CI gate re-runs this suite with `LSQNET_THREADS=1`, which forces
-//! every kernel serial — both runs must pass unchanged.
+//! The CI gate re-runs this suite with `LSQNET_THREADS=1` (forces every
+//! kernel serial) and with `LSQNET_FORCE_SCALAR=1` (pins the portable
+//! SIMD path) — all runs must pass unchanged, so CI on any host exercises
+//! both sides of the dispatch.
 
 use lsqnet::quant::lsq::qrange;
 use lsqnet::quant::pack::quantize_and_pack;
-use lsqnet::runtime::kernels::{qgemm, sgemm, sgemm_nt, sgemm_tn, Workspace, KC, NC};
+use lsqnet::runtime::kernels::{
+    qgemm, qgemm_panel, sgemm, sgemm_nt, sgemm_tn, PanelizedWeights, Workspace, KC, NC,
+};
 use lsqnet::runtime::native::fixture::{write_synthetic_family, FixtureSpec};
-use lsqnet::runtime::native::NativeModel;
+use lsqnet::runtime::native::{NativeModel, UnpackMode};
 use lsqnet::runtime::Manifest;
 use lsqnet::train::native::NativeTrainModel;
 use lsqnet::util::rng::Pcg32;
@@ -139,6 +151,186 @@ fn prop_sgemm_family_threaded_matches_single_thread() {
             }
         }
     });
+}
+
+/// SIMD-vs-scalar and panel-vs-fused parity: the four combinations of
+/// {detected dispatch, forced scalar} × {fused unpack, bind-time panels}
+/// must agree **bitwise** at every bit width (i32 accumulation is exact,
+/// so neither the lane order nor the panel layout may change a single
+/// bit). Threaded variants are folded in to pin the full cross product.
+#[test]
+fn prop_qgemm_dispatch_and_panel_bitwise_parity() {
+    forall("qgemm_dispatch_panel", |rng| {
+        let (m, k, n) = rand_shape(rng);
+        let bits = [2u32, 3, 4, 8][rng.below(4) as usize];
+        let (_, qp) = qrange(bits, false);
+        let x: Vec<i32> = (0..m * k)
+            .map(|_| {
+                if rng.bool(0.25) {
+                    0
+                } else {
+                    rng.below(qp as u32 + 1) as i32
+                }
+            })
+            .collect();
+        let w: Vec<f32> = (0..k * n).map(|_| rng.normal() * 0.4).collect();
+        let packed = quantize_and_pack(&w, 0.05, bits, true).unwrap();
+        let panels = PanelizedWeights::build(&packed, k, n);
+
+        let mut scalar_ws = Workspace::with_threads(1);
+        scalar_ws.force_scalar();
+        let mut base = vec![0.0f32; m * n];
+        qgemm(&mut scalar_ws, m, k, n, &x, &packed, 0.03, None, &mut base);
+
+        for threads in [1usize, 3] {
+            for force_scalar in [false, true] {
+                let mut ws = Workspace::with_threads(threads);
+                if force_scalar {
+                    ws.force_scalar();
+                }
+                let mut fused = vec![0.0f32; m * n];
+                qgemm(&mut ws, m, k, n, &x, &packed, 0.03, None, &mut fused);
+                let mut paneled = vec![0.0f32; m * n];
+                qgemm_panel(&mut ws, m, k, n, &x, &panels, 0.03, None, &mut paneled);
+                for (i, (want, (f, p))) in
+                    base.iter().zip(fused.iter().zip(&paneled)).enumerate()
+                {
+                    assert_eq!(
+                        want.to_bits(),
+                        f.to_bits(),
+                        "fused t{threads} scalar={force_scalar} differs at {i} \
+                         (m={m} k={k} n={n} bits={bits})"
+                    );
+                    assert_eq!(
+                        want.to_bits(),
+                        p.to_bits(),
+                        "panel t{threads} scalar={force_scalar} differs at {i} \
+                         (m={m} k={k} n={n} bits={bits})"
+                    );
+                }
+            }
+        }
+    });
+}
+
+/// fp32 family across the dispatch: `sgemm`/`sgemm_tn` use an elementwise
+/// axpy inner loop (one mul + one add per element at every level) and
+/// must stay bitwise; `sgemm_nt`'s dot reduction reassociates in SIMD
+/// lanes and is held to the layer's 1e-5 relative tolerance.
+#[test]
+fn prop_sgemm_family_simd_vs_scalar_dispatch() {
+    forall("sgemm_family_dispatch", |rng| {
+        let (m, k, n) = rand_shape(rng);
+        let x: Vec<f32> = (0..m * k)
+            .map(|_| if rng.bool(0.2) { 0.0 } else { rng.normal() })
+            .collect();
+        let w: Vec<f32> = (0..k * n).map(|_| rng.normal()).collect();
+        let a: Vec<f32> = (0..m * n).map(|_| rng.normal()).collect();
+
+        let mut sc = Workspace::with_threads(1);
+        sc.force_scalar();
+        let mut s_sc = vec![0.0f32; m * n];
+        sgemm(&mut sc, m, k, n, &x, &w, None, &mut s_sc);
+        let mut nt_sc = vec![0.0f32; m * k];
+        sgemm_nt(&mut sc, m, k, n, &a, &w, &mut nt_sc);
+        let mut tn_sc = vec![0.0f32; k * n];
+        sgemm_tn(&mut sc, m, k, n, &x, &a, &mut tn_sc);
+
+        let mut ws = Workspace::with_threads(1);
+        let mut s = vec![0.0f32; m * n];
+        sgemm(&mut ws, m, k, n, &x, &w, None, &mut s);
+        let mut nt = vec![0.0f32; m * k];
+        sgemm_nt(&mut ws, m, k, n, &a, &w, &mut nt);
+        let mut tn = vec![0.0f32; k * n];
+        sgemm_tn(&mut ws, m, k, n, &x, &a, &mut tn);
+
+        for (i, (p, q)) in s_sc.iter().zip(&s).enumerate() {
+            assert_eq!(
+                p.to_bits(),
+                q.to_bits(),
+                "sgemm dispatch differs at {i} (m={m} k={k} n={n})"
+            );
+        }
+        for (i, (p, q)) in tn_sc.iter().zip(&tn).enumerate() {
+            assert_eq!(
+                p.to_bits(),
+                q.to_bits(),
+                "sgemm_tn dispatch differs at {i} (m={m} k={k} n={n})"
+            );
+        }
+        for (i, (p, q)) in nt_sc.iter().zip(&nt).enumerate() {
+            assert!(
+                (p - q).abs() <= 1e-5 * p.abs().max(1.0),
+                "sgemm_nt dispatch at {i}: {p} vs {q} (m={m} k={k} n={n})"
+            );
+        }
+    });
+}
+
+/// i32 exactness at the accumulator edge: `k` just under the
+/// `check_accumulator_bound` limit for 8-bit (the worst case — unsigned
+/// activations at Qp=255 against signed weights at ±128), adversarial
+/// same-sign values, checked against an i64 naive reference. The small-k
+/// unit test in `gemm.rs` covers correctness; this pins the bound.
+#[test]
+fn qgemm_exact_at_k_near_accumulator_bound() {
+    let (m, k, n) = (2usize, 65_000usize, 3usize);
+    assert!(lsqnet::runtime::kernels::check_accumulator_bound(k, 255, 0, 128, 127));
+    let mut rng = Pcg32::seeded(65);
+    // Mostly extreme magnitudes, aligned in sign so partial sums push
+    // toward the i32 edge instead of cancelling.
+    let x: Vec<i32> = (0..m * k).map(|_| if rng.bool(0.9) { 255 } else { 1 }).collect();
+    let wv: Vec<i32> = (0..k * n).map(|_| if rng.bool(0.9) { -128 } else { 127 }).collect();
+    let packed = quantize_and_pack(
+        &wv.iter().map(|&v| v as f32).collect::<Vec<f32>>(),
+        1.0,
+        8,
+        true,
+    )
+    .unwrap();
+    let panels = PanelizedWeights::build(&packed, k, n);
+    let mut ws = Workspace::new();
+    let mut fused = vec![0.0f32; m * n];
+    qgemm(&mut ws, m, k, n, &x, &packed, 1.0, None, &mut fused);
+    let mut paneled = vec![0.0f32; m * n];
+    qgemm_panel(&mut ws, m, k, n, &x, &panels, 1.0, None, &mut paneled);
+    for i in 0..m {
+        for j in 0..n {
+            let want: i64 = (0..k).map(|kk| x[i * k + kk] as i64 * wv[kk * n + j] as i64).sum();
+            assert!(i32::try_from(want).is_ok(), "test shape must stay in i32");
+            assert_eq!(fused[i * n + j], want as f32, "fused ({i},{j})");
+            assert_eq!(paneled[i * n + j], want as f32, "panel ({i},{j})");
+        }
+    }
+}
+
+/// End-to-end storage-mode parity: a model bound with bind-time panels
+/// and one bound fused must produce bitwise-identical logits.
+#[test]
+fn native_forward_panelized_matches_fused_mode() {
+    let dir = tmp_dir("modes");
+    std::fs::remove_dir_all(&dir).ok();
+    let spec = FixtureSpec { image: 16, channels: 3, num_classes: 6, batch: 4, seed: 41 };
+    let family = write_synthetic_family(&dir, "cnn_small", 3, spec).unwrap();
+    let manifest = Manifest::load(&dir).unwrap();
+    let params = manifest.load_initial_params(&family).unwrap();
+    let paneled = NativeModel::build_with_mode(&manifest, &family, &params, UnpackMode::Panelized)
+        .unwrap();
+    let fused =
+        NativeModel::build_with_mode(&manifest, &family, &params, UnpackMode::Fused).unwrap();
+    assert!(paneled.panel_bytes > 0, "panelized bind must report panel bytes");
+    assert_eq!(fused.panel_bytes, 0, "fused bind holds no panels");
+    assert_eq!(paneled.packed_bytes, fused.packed_bytes, "Figure-3 storage is mode-independent");
+    let mut rng = Pcg32::seeded(8);
+    let mut ws_p = Workspace::new();
+    let mut ws_f = Workspace::new();
+    for rows in [1usize, 3, 4] {
+        let x: Vec<f32> = (0..rows * paneled.image_len()).map(|_| rng.normal()).collect();
+        let yp = paneled.forward(&mut ws_p, &x, rows).unwrap();
+        let yf = fused.forward(&mut ws_f, &x, rows).unwrap();
+        assert_eq!(yp, yf, "rows={rows}");
+    }
+    std::fs::remove_dir_all(&dir).ok();
 }
 
 /// The workspace-reuse satellite: run mismatched shapes back-to-back

@@ -182,6 +182,7 @@ fn multi_replica_serve_answers_every_request_once() {
         queue_depth: 64,
         replicas: 3,
         intra_threads: 0,
+        fused_unpack: false,
     })
     .unwrap();
     assert_eq!(server.replicas, 3);
@@ -250,6 +251,7 @@ fn serve_shutdown_answers_inflight_requests_without_max_wait_hang() {
         queue_depth: 64,
         replicas: 2,
         intra_threads: 0,
+        fused_unpack: false,
     })
     .unwrap();
 
@@ -300,6 +302,7 @@ fn serve_stop_joins_while_clients_still_alive() {
         queue_depth: 8,
         replicas: 2,
         intra_threads: 0,
+        fused_unpack: false,
     })
     .unwrap();
     let client = server.client(); // keeps the channel connected
@@ -373,6 +376,7 @@ fn serve_rejects_bad_image_size_native() {
         queue_depth: 8,
         replicas: 2,
         intra_threads: 0,
+        fused_unpack: false,
     })
     .unwrap();
     assert!(server.client().submit(vec![0.0; 7]).is_err());

@@ -230,6 +230,52 @@ fn prop_pack_unpack_roundtrip() {
     });
 }
 
+/// The precision-specialized (const-generic) unpack paths behind the
+/// qgemm panel builders must agree with the scalar `unpack` reference at
+/// every width, for ranges whose bit positions straddle ragged u32-word
+/// boundaries — the 2/4/8-bit instances drop the byte-straddle branch at
+/// compile time, and 3-bit values genuinely cross byte (and word) edges,
+/// so the boundary geometry is exactly where a specialization bug would
+/// hide.
+#[test]
+fn prop_unpack_range_spec_matches_unpack_at_ragged_boundaries() {
+    forall("unpack_spec_boundaries", |rng| {
+        let (bits, signed) = rand_bits(rng);
+        let (qn, qp) = qrange(bits, signed);
+        let n = 64 + rng.below(200) as usize;
+        let span = (qn + qp) as u32 + 1;
+        let vals: Vec<i32> = (0..n).map(|_| rng.below(span) as i32 - qn as i32).collect();
+        let p = pack::pack(&vals, bits, signed, 0.3).unwrap();
+        let full = pack::unpack(&p);
+
+        // Starts that put the range's first bit position at / just around
+        // every 32-bit word edge of the packed stream, plus random ones.
+        let mut starts: Vec<usize> = Vec::new();
+        for word in 0..(n * bits as usize + 31) / 32 {
+            let v = (word * 32) / bits as usize;
+            for s in [v.saturating_sub(1), v, v + 1] {
+                if s < n {
+                    starts.push(s);
+                }
+            }
+        }
+        for _ in 0..8 {
+            starts.push(rng.below(n as u32) as usize);
+        }
+        for &start in &starts {
+            let max_len = n - start;
+            let len = 1 + rng.below(max_len.min(41) as u32) as usize;
+            let mut got = vec![0i32; len];
+            pack::unpack_range_spec(&p, start, len, &mut got);
+            assert_eq!(
+                got,
+                full[start..start + len],
+                "bits={bits} signed={signed} n={n} start={start} len={len}"
+            );
+        }
+    });
+}
+
 #[test]
 fn prop_pack_dequantize_equals_direct_quantize() {
     forall("pack_eq_quant", |rng| {
