@@ -25,6 +25,12 @@ echo "== kernel determinism (re-run the thread-parity/workspace suite with"
 echo "   every kernel forced serial: threaded and serial must agree) =="
 LSQNET_THREADS=1 cargo test --release -q --test kernels
 
+echo "== multi-model gateway (two-variant native registry — q2+q4 synthetic"
+echo "   fixture — 64 requests round-robined across named sessions;"
+echo "   per-variant stats must sum to the request count, hot unload must"
+echo "   answer every accepted request, QueueFull must surface at depth) =="
+cargo test --release -q --test registry
+
 echo "== kernel dispatch parity (re-run the same suite with the portable"
 echo "   scalar SIMD path pinned: qgemm must stay bitwise, sgemm-family"
 echo "   within 1e-5 — so CI on any host exercises both dispatch sides) =="

@@ -19,7 +19,7 @@ use std::time::Duration;
 use lsqnet::data::SynthSpec;
 use lsqnet::quant::pack::quantize_and_pack;
 use lsqnet::runtime::kernels::{qgemm, Workspace};
-use lsqnet::runtime::native::fixture::{write_synthetic_family, FixtureSpec};
+use lsqnet::runtime::native::fixture::ensure_family_by_name;
 use lsqnet::runtime::{BackendKind, BackendSpec};
 use lsqnet::serve::{Server, ServerConfig};
 use lsqnet::util::cli::Args;
@@ -38,22 +38,8 @@ fn main() -> anyhow::Result<()> {
     // exist (family names look like `model_qBITS`, e.g. `resnet8_q4`).
     let mut fixture_dir = None;
     if kind == BackendKind::Native && !artifacts.join("manifest.json").exists() {
-        let (model, qbits) = family
-            .rsplit_once("_q")
-            .and_then(|(m, b)| b.parse::<u32>().ok().map(|b| (m.to_string(), b)))
-            .ok_or_else(|| {
-                anyhow::anyhow!(
-                    "no {}/manifest.json and --family {family:?} is not of the form \
-                     model_qBITS, so a synthetic family cannot be generated",
-                    artifacts.display()
-                )
-            })?;
         let dir = std::env::temp_dir().join(format!("lsq_example_{}", std::process::id()));
-        family = write_synthetic_family(&dir, &model, qbits, FixtureSpec::default())?;
-        println!(
-            "(no {}/manifest.json — using a synthetic {model} family at {qbits}-bit)",
-            artifacts.display()
-        );
+        family = ensure_family_by_name(&dir, &family)?;
         artifacts = dir.clone();
         fixture_dir = Some(dir);
     }
@@ -77,7 +63,7 @@ fn main() -> anyhow::Result<()> {
     std::thread::scope(|s| {
         let handles: Vec<_> = (0..threads)
             .map(|t| {
-                let client = server.client();
+                let client = server.client().expect("server intake open");
                 let spec = &spec;
                 s.spawn(move || {
                     let mut l = Vec::new();
@@ -118,6 +104,17 @@ fn main() -> anyhow::Result<()> {
         100.0 * agree as f64 / lats.len().max(1) as f64
     );
 
+    // -- two-precision registry: the multi-model deployment shape ------------
+    // One process, two precision tiers of the same architecture, each with
+    // its own named session, replica set and stats — LSQ's
+    // accuracy/size/latency trade-off (Figure 3) served side by side,
+    // with a live hot-unload. Native only; skipped (instead of mutating a
+    // user-supplied manifest) when the second tier doesn't exist and the
+    // artifacts aren't the synthetic fixture.
+    if kind == BackendKind::Native {
+        two_tier_registry_demo(&artifacts, &family, replicas, fixture_dir.is_some(), &spec)?;
+    }
+
     // -- raw Figure-1 int matmul over packed weights -------------------------
     // The same kernel the native conv/dense layers call: activations on the
     // Eq. 1 integer grid, weights unpacked tile-by-tile from 2-bit storage,
@@ -152,5 +149,69 @@ fn main() -> anyhow::Result<()> {
     if let Some(dir) = fixture_dir {
         std::fs::remove_dir_all(dir).ok();
     }
+    Ok(())
+}
+
+/// The multi-model deployment shape: load `family` plus a second
+/// precision tier of the same model into one [`ModelRegistry`],
+/// round-robin traffic across both named sessions, then hot-unload the
+/// first tier under the registry while the second keeps serving.
+fn two_tier_registry_demo(
+    artifacts: &std::path::Path,
+    family: &str,
+    replicas: usize,
+    is_fixture: bool,
+    spec: &SynthSpec,
+) -> anyhow::Result<()> {
+    use lsqnet::serve::{ModelRegistry, ServeError, VariantOptions};
+    let (model, bits) = family
+        .rsplit_once("_q")
+        .and_then(|(m, b)| b.parse::<u32>().ok().map(|b| (m.to_string(), b)))
+        .unwrap_or(("cnn_small".to_string(), 2));
+    let other_bits = if bits >= 4 { 2 } else { 4 };
+    let other = format!("{model}_q{other_bits}");
+    let manifest = lsqnet::runtime::Manifest::load(artifacts)?;
+    if !is_fixture && !manifest.families.contains_key(&other) {
+        // A user-supplied artifact set without the second tier: don't
+        // mutate their manifest for a demo.
+        println!(
+            "\n(skipping the two-precision registry demo: {} has no {other})",
+            artifacts.display()
+        );
+        return Ok(());
+    }
+    drop(manifest);
+    // The second tier merges into the manifest with its geometry reused
+    // (a no-op when it already exists).
+    let other = ensure_family_by_name(artifacts, &other)?;
+
+    let registry = ModelRegistry::open(BackendSpec::native(artifacts));
+    let opts = VariantOptions { replicas, ..VariantOptions::default() };
+    registry.load(family, &opts)?;
+    registry.load(&other, &opts)?;
+    println!("\n== two-precision registry ({family} + {other}) ==");
+    let s_lo = registry.session(family)?;
+    let s_hi = registry.session(&other)?;
+    for i in 0..64usize {
+        // Round-robin the same traffic across both tiers by name.
+        let sess = if i % 2 == 0 { &s_lo } else { &s_hi };
+        sess.infer(spec.generate_alloc(500_000 + i))?;
+    }
+    for (name, st) in registry.all_stats() {
+        println!(
+            "  {name:<22} {:>3} reqs  exec {:.2} ms/batch  queue {:.2} ms/req",
+            st.requests,
+            st.mean_exec_ms(),
+            st.mean_queue_ms()
+        );
+    }
+    // Hot-swap: retire the low tier without touching the other variant,
+    // then keep serving the survivor.
+    let drained = registry.drain_and_unload(family)?;
+    println!("  drained {family}: {} requests answered in total", drained.requests);
+    assert!(matches!(registry.session(family), Err(ServeError::UnknownModel(_))));
+    s_hi.infer(spec.generate_alloc(999_999))?;
+    registry.shutdown();
+    println!("  {other} kept serving through the unload ✔");
     Ok(())
 }

@@ -1,42 +1,60 @@
 //! Serving-path benchmarks on the native packed-weight backend:
 //! dynamic-batcher latency/throughput under closed-loop load with multiple
-//! engine replicas, batching overhead vs direct engine execution, and the
-//! Figure-1 fused unpack-and-dot integer GEMM. Runs with zero Python/XLA
-//! setup (the synthetic fixture provides manifest + params); the XLA
-//! numbers live in `benches/runtime.rs` (`--features xla`).
+//! engine replicas, per-variant latency through a two-precision
+//! [`ModelRegistry`], batching overhead vs direct engine execution, and
+//! the Figure-1 fused unpack-and-dot integer GEMM. Runs with zero
+//! Python/XLA setup (the synthetic fixture provides manifest + params);
+//! the XLA numbers live in `benches/runtime.rs` (`--features xla`).
 //!
-//! Run: `cargo bench --bench serve` (LSQNET_BENCH_FAST=1 for CI).
+//! Run: `cargo bench --bench serve` (LSQNET_BENCH_FAST=1 for CI). Writes
+//! the machine-readable perf-trajectory file `BENCH_serve.json` at the
+//! repository root (fast mode diverts to `rust/target/BENCH_serve_fast.json`
+//! so CI smoke numbers never clobber the trajectory or dirty the tree).
 //! These are the EXPERIMENTS.md §Perf L3 serving rows.
 
+use std::path::Path;
 use std::time::Duration;
 
 use lsqnet::data::SynthSpec;
 use lsqnet::quant::pack::quantize_and_pack;
 use lsqnet::runtime::kernels::{qgemm, Workspace};
 use lsqnet::runtime::native::fixture::{write_synthetic_family, FixtureSpec};
-use lsqnet::runtime::{Backend, BackendSpec};
-use lsqnet::serve::{Server, ServerConfig};
+use lsqnet::runtime::{Backend, BackendSpec, PrepareOptions};
+use lsqnet::serve::{ModelRegistry, ServeStats, VariantOptions};
 use lsqnet::util::bench::{black_box, Bench};
 use lsqnet::util::rng::Pcg32;
 use lsqnet::util::stats::percentile;
 
 const REPLICAS: usize = 2;
 
+/// Attach a variant's serve-stats columns to the bench row `name`.
+fn annotate_stats(b: &mut Bench, name: &str, stats: &ServeStats) {
+    b.annotate(name, "occupancy", stats.mean_occupancy());
+    b.annotate(name, "mean_exec_ms", stats.mean_exec_ms());
+    b.annotate(name, "mean_queue_ms", stats.mean_queue_ms());
+    b.annotate(name, "padding_rows", stats.padding_rows as f64);
+    b.annotate(name, "requests", stats.requests as f64);
+    b.annotate(name, "batches", stats.batches as f64);
+}
+
 fn main() {
     let mut b = Bench::new("serve");
     let fast = lsqnet::util::env_truthy("LSQNET_BENCH_FAST");
 
-    // Synthetic 2-bit cnn_small family, real 32x32x3 geometry.
+    // Synthetic cnn_small family at two precisions, real 32x32x3 geometry,
+    // merged into one manifest (the multi-variant deployment shape).
     let dir = std::env::temp_dir().join(format!("lsq_serve_bench_{}", std::process::id()));
     let fixture = FixtureSpec { image: 32, channels: 3, num_classes: 10, batch: 8, seed: 42 };
-    let family = write_synthetic_family(&dir, "cnn_small", 2, fixture)
-        .expect("write synthetic family");
+    let fam_q2 = write_synthetic_family(&dir, "cnn_small", 2, fixture)
+        .expect("write synthetic q2 family");
+    let fam_q4 = write_synthetic_family(&dir, "cnn_small", 4, fixture)
+        .expect("write synthetic q4 family");
     let spec = SynthSpec::new(10, 1.2, 9);
 
     // -- direct engine execution as the no-batcher baseline ------------------
     let mut backend = BackendSpec::native(&dir).open().unwrap();
-    let params = backend.manifest().load_initial_params(&family).unwrap();
-    backend.prepare_infer(&family, &params).unwrap();
+    let params = backend.manifest().load_initial_params(&fam_q2).unwrap();
+    backend.prepare_infer(&fam_q2, &params, &PrepareOptions::new()).unwrap();
     let batch = backend.batch();
     let image_len = 32 * 32 * 3;
     let mut x = Vec::with_capacity(batch * image_len);
@@ -48,31 +66,57 @@ fn main() {
     });
     drop(backend);
 
-    // -- server under closed-loop load, REPLICAS native engine replicas ------
-    let server = Server::start(ServerConfig {
-        backend: BackendSpec::native(&dir),
-        family: family.clone(),
-        checkpoint: String::new(),
+    // -- two-precision registry: per-variant closed-loop latency rows --------
+    let registry = ModelRegistry::open(BackendSpec::native(&dir));
+    let opts = VariantOptions {
+        replicas: REPLICAS,
         max_wait: Duration::from_millis(2),
         queue_depth: 256,
-        replicas: REPLICAS,
-        intra_threads: 0,
-        fused_unpack: false,
-    })
-    .unwrap();
+        ..VariantOptions::default()
+    };
+    registry.load(&fam_q2, &opts).unwrap();
+    registry.load(&fam_q4, &opts).unwrap();
+    for family in [&fam_q2, &fam_q4] {
+        let session = registry.session(family).unwrap();
+        // Warm the replicas, then measure single-stream request latency
+        // through the whole submit→batch→execute→reply path.
+        session.infer(spec.generate_alloc(0)).unwrap();
+        let before = session.stats();
+        let mut i = 0usize;
+        let row = format!("registry_infer_{family}_x{REPLICAS}");
+        b.bench(&row, || {
+            i += 1;
+            black_box(session.infer(spec.generate_alloc(i)).unwrap());
+        });
+        let after = session.stats();
+        let window = ServeStats {
+            requests: after.requests - before.requests,
+            batches: after.batches - before.batches,
+            rows_dispatched: after.rows_dispatched - before.rows_dispatched,
+            padding_rows: after.padding_rows - before.padding_rows,
+            exec_ms_total: after.exec_ms_total - before.exec_ms_total,
+            queue_ms_total: after.queue_ms_total - before.queue_ms_total,
+            occupancy_sum: after.occupancy_sum - before.occupancy_sum,
+        };
+        annotate_stats(&mut b, &row, &window);
+    }
+
+    // -- open-loop burst across both variants (round-robin sessions) ---------
     let n = if fast { 128 } else { 512 };
-    // Warm every replica path before timing.
-    server.client().infer(spec.generate_alloc(0)).unwrap();
     let t0 = std::time::Instant::now();
     let mut lats: Vec<f64> = Vec::new();
     std::thread::scope(|s| {
         let hs: Vec<_> = (0..4)
             .map(|t| {
-                let c = server.client();
+                let sessions =
+                    [registry.session(&fam_q2).unwrap(), registry.session(&fam_q4).unwrap()];
                 let spec = &spec;
                 s.spawn(move || {
                     (0..n / 4)
-                        .map(|i| c.infer(spec.generate_alloc(t * 999 + i)).unwrap().total_ms)
+                        .map(|i| {
+                            let sess = &sessions[i % 2];
+                            sess.infer(spec.generate_alloc(t * 999 + i)).unwrap().total_ms
+                        })
                         .collect::<Vec<_>>()
                 })
             })
@@ -82,22 +126,30 @@ fn main() {
         }
     });
     let wall = t0.elapsed().as_secs_f64();
-    let stats = server.stats();
-    server.stop();
+    let all_stats = registry.shutdown();
     let p50 = percentile(&lats, 50.0);
     let p95 = percentile(&lats, 95.0);
     println!(
-        "serve/dynamic_batcher_x{REPLICAS}        {n} reqs  {:.1} req/s  p50 {p50:.2} ms  \
-         p95 {p95:.2} ms  occupancy {:.2}  ({} batches)",
+        "serve/registry_round_robin_x{REPLICAS}   {n} reqs over 2 variants  {:.1} req/s  \
+         p50 {p50:.2} ms  p95 {p95:.2} ms",
         n as f64 / wall,
-        stats.mean_occupancy(),
-        stats.batches,
     );
+    for (name, stats) in &all_stats {
+        println!(
+            "  {name:<22} {:>5} reqs  occupancy {:.2}  exec {:.2} ms/batch  queue {:.2} ms/req",
+            stats.requests,
+            stats.mean_occupancy(),
+            stats.mean_exec_ms(),
+            stats.mean_queue_ms(),
+        );
+    }
     // batching overhead = p50 latency - per-batch exec time
     let direct_ms = direct.mean_ns / 1e6;
+    let mean_exec =
+        all_stats.values().map(|s| s.mean_exec_ms()).sum::<f64>() / all_stats.len().max(1) as f64;
     println!(
         "serve/batching_overhead_p50      {:.2} ms (target < 1 ms + exec {:.2} ms)",
-        (p50 - stats.mean_exec_ms()).max(0.0),
+        (p50 - mean_exec).max(0.0),
         direct_ms
     );
 
@@ -120,5 +172,18 @@ fn main() {
     }
 
     b.finish();
+    // Perf-trajectory file at the repository root (rust/ is the package
+    // dir); fast-mode CI smoke numbers land under target/ instead so they
+    // never clobber the full-run trajectory or dirty the working tree.
+    let manifest_dir = Path::new(env!("CARGO_MANIFEST_DIR"));
+    let path = if fast {
+        manifest_dir.join("target").join("BENCH_serve_fast.json")
+    } else {
+        manifest_dir.join("..").join("BENCH_serve.json")
+    };
+    match b.write_json(&path) {
+        Ok(()) => println!("wrote {}", path.display()),
+        Err(e) => eprintln!("could not write {}: {e}", path.display()),
+    }
     std::fs::remove_dir_all(&dir).ok();
 }

@@ -213,7 +213,7 @@ pub fn run_job_native_with_threads(job: &Job, intra_threads: usize) -> JobResult
         t0,
         NativeTrainer::new(job.cfg.clone()).and_then(|mut t| {
             t.verbose = false;
-            t.set_intra_op_threads(intra_threads);
+            t.set_threads(intra_threads);
             t.fit()
         }),
     )

@@ -26,11 +26,13 @@
 //!   AOT HLO artifacts; the repro harness and the `xla` train backend live
 //!   here, behind `--features xla`.
 //!
-//! Entry points: the `lsqnet` binary (see `main.rs`), [`serve::Server`]
-//! for the multi-replica dynamic batcher, [`train::NativeTrainer`], and
-//! (with `xla`) `runtime::Engine` + `train::Trainer`. See README.md for
-//! the command-line quickstart and EXPERIMENTS.md for the perf ladder the
-//! benches report against.
+//! Entry points: the `lsqnet` binary (see `main.rs`),
+//! [`serve::ModelRegistry`] for the multi-model dynamic-batching gateway
+//! (named per-precision [`serve::Session`]s, hot load/unload;
+//! [`serve::Server`] remains as the one-variant shim),
+//! [`train::NativeTrainer`], and (with `xla`) `runtime::Engine` +
+//! `train::Trainer`. See README.md for the command-line quickstart and
+//! EXPERIMENTS.md for the perf ladder the benches report against.
 
 #![warn(missing_docs)]
 

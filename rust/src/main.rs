@@ -8,8 +8,9 @@
 //!   eval                         evaluate a checkpoint on the test split
 //!   sweep --config <json>        run a list of experiment configs
 //!   repro <table1|...|all>       regenerate a paper table/figure         [xla]
-//!   serve                        start the quantized-inference server
-//!                                (native packed-weight backend by default)
+//!   serve                        start the multi-model quantized-inference
+//!                                registry (native backend by default; one
+//!                                process serves N precision variants)
 //!   pack                         quantize+pack a checkpoint, report size
 //!
 //! Commands tagged [xla] (and the xla train/eval/sweep backend) drive the
@@ -48,9 +49,14 @@ COMMANDS
   repro <target>           table1|table2|table3|table4|lr-ablation|
                            fig2|fig3|fig4|qerror|all   [--quick] [--workers N]
                                                                [needs --features xla]
-  serve                    --family cnn_small_q2 [--backend native|xla]
-                           [--replicas N] [--checkpoint ck] [--requests N]
-                           [--threads N (intra-op per replica; 0 = cores/replicas)]
+  serve                    --family cnn_small_q2[,cnn_small_q4,…] (one
+                           registry process serves every named precision
+                           variant through its own session + replica set)
+                           [--backend native|xla] [--replicas N (per variant)]
+                           [--checkpoint ck (single variant only)]
+                           [--requests N (round-robin across variants)]
+                           [--threads N (intra-op per replica; 0 = share
+                            the core budget across all replicas)]
                            [--fused-unpack (low-memory weights: unpack per
                             call instead of panelizing once at bind)]
   pack                     --checkpoint runs/x/final.ckpt
@@ -456,43 +462,80 @@ fn repro(_args: &Args) -> Result<()> {
     needs_xla("repro")
 }
 
+/// `lsqnet serve`: stand up a [`lsqnet::serve::ModelRegistry`] hosting one
+/// or more model variants (`--family a,b,c` — comma-separated), fire a
+/// round-robin request load across named sessions, and report per-variant
+/// stats. On the native backend, missing `model_qBITS` families are
+/// synthesized into the artifacts dir, so a multi-precision deployment
+/// runs from a clean clone.
 fn serve(args: &Args) -> Result<()> {
     use lsqnet::runtime::{BackendKind, BackendSpec};
-    use lsqnet::serve::{Server, ServerConfig};
-    let family = args.str("family", "cnn_small_q2");
+    use lsqnet::serve::{ModelRegistry, VariantOptions};
+    let families: Vec<String> = args
+        .str("family", "cnn_small_q2")
+        .split(',')
+        .map(|s| s.trim().to_string())
+        .filter(|s| !s.is_empty())
+        .collect();
+    anyhow::ensure!(!families.is_empty(), "--family must name at least one variant");
     let n = args.usize("requests", 256);
     let kind = BackendKind::parse(&args.str("backend", "native"))?;
     let replicas = args.usize(
         "replicas",
         if kind == BackendKind::Native { 2 } else { 1 },
     );
-    let server = Server::start(ServerConfig {
-        backend: BackendSpec { kind, artifacts_dir: artifacts_dir(args) },
-        family: family.clone(),
-        checkpoint: args.str("checkpoint", ""),
+    let checkpoint = args.str("checkpoint", "");
+    anyhow::ensure!(
+        checkpoint.is_empty() || families.len() == 1,
+        "--checkpoint applies to a single --family, got {}",
+        families.len()
+    );
+    let dir = artifacts_dir(args);
+    if kind == BackendKind::Native {
+        // Zero-artifacts affordance (same as `train`): synthesize any
+        // missing `model_qBITS` family into the artifacts dir.
+        for family in &families {
+            lsqnet::runtime::native::fixture::ensure_family_by_name(&dir, family)?;
+        }
+    }
+
+    let registry = ModelRegistry::open(BackendSpec { kind, artifacts_dir: dir });
+    let opts = VariantOptions {
+        checkpoint,
+        replicas,
         max_wait: std::time::Duration::from_millis(args.u64("max-wait-ms", 2)),
         queue_depth: args.usize("queue-depth", 256),
-        replicas,
         intra_threads: args.usize("threads", 0),
-        fused_unpack: args.flag("fused-unpack"),
-    })?;
+        low_memory: if args.flag("fused-unpack") { Some(true) } else { None },
+    };
+    for family in &families {
+        registry.load(family, &opts)?;
+    }
     println!(
-        "serving {family} on {} x{replicas}; firing {n} requests from 4 client threads…",
-        kind.name()
+        "serving {} variant(s) [{}] on {} x{replicas} each (core budget {}); \
+         firing {n} requests round-robin from 4 client threads…",
+        families.len(),
+        families.join(", "),
+        kind.name(),
+        registry.core_budget()
     );
     let spec = lsqnet::data::SynthSpec::new(10, 0.35, 1);
     let t0 = std::time::Instant::now();
     let mut lat = Vec::new();
-    std::thread::scope(|s| {
+    std::thread::scope(|s| -> Result<()> {
         let mut handles = Vec::new();
         for t in 0..4usize {
-            let client = server.client();
+            let sessions: Vec<_> = families
+                .iter()
+                .map(|f| registry.session(f))
+                .collect::<Result<_, _>>()?;
             let spec = &spec;
             handles.push(s.spawn(move || {
                 let mut l = Vec::new();
                 for i in 0..n / 4 {
                     let img = spec.generate_alloc(t * 10_000 + i);
-                    if let Ok(rep) = client.infer(img) {
+                    // Round-robin across the named sessions.
+                    if let Ok(rep) = sessions[i % sessions.len()].infer(img) {
                         l.push(rep.total_ms);
                     }
                 }
@@ -502,21 +545,29 @@ fn serve(args: &Args) -> Result<()> {
         for h in handles {
             lat.extend(h.join().unwrap());
         }
-    });
+        Ok(())
+    })?;
     let wall = t0.elapsed().as_secs_f64();
-    let stats = server.stats();
-    server.stop();
+    let all_stats = registry.shutdown();
     let p50 = lsqnet::util::stats::percentile(&lat, 50.0);
     let p95 = lsqnet::util::stats::percentile(&lat, 95.0);
     println!(
-        "served {} reqs in {wall:.2}s ({:.1} req/s) | p50 {p50:.1} ms  p95 {p95:.1} ms | \
-         {} batches, mean occupancy {:.2}, mean exec {:.1} ms",
+        "served {} reqs in {wall:.2}s ({:.1} req/s) | p50 {p50:.1} ms  p95 {p95:.1} ms",
         lat.len(),
         lat.len() as f64 / wall,
-        stats.batches,
-        stats.mean_occupancy(),
-        stats.mean_exec_ms()
     );
+    for (name, stats) in &all_stats {
+        println!(
+            "  {name:<22} {:>6} reqs  {:>5} batches  occupancy {:.2}  \
+             exec {:.2} ms/batch  queue {:.2} ms/req  padding {} rows",
+            stats.requests,
+            stats.batches,
+            stats.mean_occupancy(),
+            stats.mean_exec_ms(),
+            stats.mean_queue_ms(),
+            stats.padding_rows,
+        );
+    }
     Ok(())
 }
 

@@ -114,6 +114,54 @@ impl BackendSpec {
     }
 }
 
+/// Options for one [`Backend::prepare_infer`] bind, passed by value at the
+/// single point where they can take effect.
+///
+/// This replaces the old mutate-before-prepare setter protocol (the
+/// intra-op-thread and low-memory setters of PRs 3/4): setters had
+/// stomp-ordering footguns — a caller pushing `false` would clobber the
+/// engine's own `LSQNET_FUSED_UNPACK` env default, so every call site had
+/// to know which settings were safe to write unconditionally. An options
+/// struct is order-free, and "not specified" is representable
+/// (`low_memory: None`).
+#[derive(Clone, Debug, Default)]
+pub struct PrepareOptions {
+    /// Intra-op kernel threads for this engine (0 = hardware count). The
+    /// serve layer passes `core budget / total replicas` so
+    /// `replicas × intra-op threads` never oversubscribes the host (see
+    /// DESIGN.md §Kernel-layer). Ignored by the XLA engine, which manages
+    /// its own thread pool.
+    pub intra_op_threads: usize,
+    /// Weight-storage choice for the native engine: `Some(true)` binds in
+    /// the low-memory fused-unpack mode (skip bind-time panelization,
+    /// unpack weight tiles per call), `Some(false)` pins the panelized
+    /// fast path, and `None` (the default) defers to the process-wide
+    /// `LSQNET_FUSED_UNPACK` env default — see DESIGN.md §SIMD-dispatch
+    /// for the memory/speed trade-off. Ignored by the XLA engine, which
+    /// has no packed-weight storage to trade.
+    pub low_memory: Option<bool>,
+}
+
+impl PrepareOptions {
+    /// Options with everything at its default (hardware threads, env-default
+    /// weight storage).
+    pub fn new() -> PrepareOptions {
+        PrepareOptions::default()
+    }
+
+    /// Builder-style intra-op thread cap.
+    pub fn intra_op_threads(mut self, threads: usize) -> PrepareOptions {
+        self.intra_op_threads = threads;
+        self
+    }
+
+    /// Builder-style explicit low-memory choice.
+    pub fn low_memory(mut self, fused_unpack: bool) -> PrepareOptions {
+        self.low_memory = Some(fused_unpack);
+        self
+    }
+}
+
 /// A loaded inference engine. The call pattern is: open (via
 /// [`BackendSpec::open`]) → [`prepare_infer`](Backend::prepare_infer) once →
 /// [`infer`](Backend::infer) many times from the serving hot loop.
@@ -124,12 +172,19 @@ pub trait Backend {
     /// The artifact/family contract this engine was opened over.
     fn manifest(&self) -> &Manifest;
 
-    /// Bind `family` + `params` for inference. The native engine quantizes
-    /// and bit-packs the weights here (Eq. 1); the XLA engine compiles the
-    /// family's `infer` artifact. `params` follow `Family::param_names`
-    /// order, as loaded by `Manifest::load_initial_params` or from a
-    /// checkpoint.
-    fn prepare_infer(&mut self, family: &str, params: &[Tensor]) -> Result<()>;
+    /// Bind `family` + `params` for inference, configured by `opts`. The
+    /// native engine quantizes and bit-packs the weights here (Eq. 1); the
+    /// XLA engine compiles the family's `infer` artifact. `params` follow
+    /// `Family::param_names` order, as loaded by
+    /// `Manifest::load_initial_params` or from a checkpoint. All
+    /// per-deployment configuration flows through [`PrepareOptions`] —
+    /// there are no post-`open` setters on this trait.
+    fn prepare_infer(
+        &mut self,
+        family: &str,
+        params: &[Tensor],
+        opts: &PrepareOptions,
+    ) -> Result<()>;
 
     /// Preferred batch size (rows per [`infer`](Backend::infer) call) after
     /// `prepare_infer`.
@@ -142,22 +197,6 @@ pub trait Backend {
     fn fixed_batch(&self) -> bool {
         true
     }
-
-    /// Cap this engine's intra-op parallelism at `threads` kernel threads
-    /// (0 = hardware count). The serve layer calls this with
-    /// `cores / replicas` so `replicas × intra-op threads` never
-    /// oversubscribes the host (see DESIGN.md §Kernel-layer). Default
-    /// no-op: the XLA runtime manages its own thread pool.
-    fn set_intra_op_threads(&mut self, _threads: usize) {}
-
-    /// Opt into the low-memory weight storage for the next
-    /// [`prepare_infer`](Backend::prepare_infer): the native engine then
-    /// skips bind-time panelization and unpacks weight tiles per call
-    /// (`UnpackMode::Fused` — see DESIGN.md §SIMD-dispatch for the
-    /// memory/speed trade-off). `false` restores the panelized default.
-    /// Default no-op: the XLA engine has no packed-weight storage to
-    /// trade.
-    fn set_low_memory(&mut self, _fused_unpack: bool) {}
 
     /// Run one padded batch: `x` holds `batch() * image_len` floats in NHWC
     /// layout. Returns `batch() * num_classes` logits, row-major.

@@ -17,7 +17,7 @@ use std::time::Instant;
 
 use anyhow::{anyhow, bail, Result};
 
-use super::backend::Backend;
+use super::backend::{Backend, PrepareOptions};
 use super::manifest::{ArtifactMeta, Manifest};
 use crate::tensor::{DType, Tensor};
 
@@ -116,7 +116,14 @@ impl Backend for Engine {
         &self.manifest
     }
 
-    fn prepare_infer(&mut self, family: &str, params: &[Tensor]) -> Result<()> {
+    fn prepare_infer(
+        &mut self,
+        family: &str,
+        params: &[Tensor],
+        _opts: &PrepareOptions,
+    ) -> Result<()> {
+        // PrepareOptions carries nothing for this engine: the XLA runtime
+        // manages its own thread pool and has no packed-weight storage.
         let meta = self.manifest.find("infer", family, None, None)?.clone();
         let exe = self.load(&meta.id)?;
         let input_shape = meta

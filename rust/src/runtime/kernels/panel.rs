@@ -26,7 +26,9 @@
 //! * the fused mode of [`super::qgemm`] — per-tile into per-thread
 //!   workspace scratch, preserving the old low-memory behavior for
 //!   deployments where the unpacked panels don't fit
-//!   (`ServerConfig::fused_unpack` / `LSQNET_FUSED_UNPACK=1`).
+//!   (`PrepareOptions::low_memory` — `ServerConfig::fused_unpack` /
+//!   `VariantOptions::low_memory` at the serve layer, or
+//!   `LSQNET_FUSED_UNPACK=1`).
 
 use crate::quant::pack::{unpack_range_spec, Packed};
 

@@ -17,9 +17,11 @@
 //!
 //! * `LSQNET_THREADS=1` forces every kernel serial — the CI determinism
 //!   re-run uses this to show threaded and serial runs agree;
-//! * a serve deployment caps each replica at `cores / replicas`
-//!   ([`crate::serve::ServerConfig::intra_threads`]) so
-//!   `replicas × intra-op threads` never oversubscribes the host.
+//! * a serve deployment partitions its core budget across every replica
+//!   of every loaded variant
+//!   ([`crate::runtime::PrepareOptions::intra_op_threads`], set by the
+//!   registry from [`crate::serve::VariantOptions::intra_threads`]) so
+//!   `total replicas × intra-op threads` never oversubscribes the host.
 
 use std::sync::OnceLock;
 

@@ -18,7 +18,7 @@ pub mod kernels;
 pub mod manifest;
 pub mod native;
 
-pub use backend::{Backend, BackendKind, BackendSpec};
+pub use backend::{Backend, BackendKind, BackendSpec, PrepareOptions};
 #[cfg(feature = "xla")]
 pub use engine::{Engine, Executable};
 pub use manifest::{ArtifactMeta, Family, IoSpec, Manifest};

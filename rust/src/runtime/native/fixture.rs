@@ -228,6 +228,42 @@ pub fn write_synthetic_family(
     Ok(family)
 }
 
+/// Ensure `dir` holds the family `name` (of the `model_qBITS` form, e.g.
+/// `cnn_small_q2`), synthesizing it — with the existing manifest's
+/// geometry, or [`FixtureSpec::default`] when there is no manifest — when
+/// absent. Errors when `name` is neither already present nor of the
+/// synthesizable form. This is the single name-driven entry point the
+/// serve CLI and examples share, so the `model_qBITS` parse and the
+/// geometry-reuse logic live in exactly one place.
+pub fn ensure_family_by_name(dir: &Path, name: &str) -> Result<String> {
+    let spec = match crate::runtime::Manifest::load(dir) {
+        Ok(m) => {
+            if m.families.contains_key(name) {
+                return Ok(name.to_string());
+            }
+            FixtureSpec {
+                image: m.image,
+                channels: m.channels,
+                batch: m.batch,
+                ..FixtureSpec::default()
+            }
+        }
+        Err(_) => FixtureSpec::default(),
+    };
+    let (model, qbits) = name
+        .rsplit_once("_q")
+        .and_then(|(m, b)| b.parse::<u32>().ok().map(|b| (m.to_string(), b)))
+        .ok_or_else(|| {
+            anyhow::anyhow!(
+                "family {name:?} is not in {} and is not of the form model_qBITS, \
+                 so a synthetic family cannot be generated",
+                dir.display()
+            )
+        })?;
+    println!("(no {name} in {} — writing a synthetic fixture family)", dir.display());
+    write_synthetic_family(dir, &model, qbits, spec)
+}
+
 /// Ensure `dir` holds a loadable family `{model}_q{qbits}`, writing a
 /// synthetic one (merged into any existing manifest) when absent. Returns
 /// the family name. This is the zero-artifacts entry point the native

@@ -18,7 +18,7 @@
 //! [`Workspace`], so the steady-state serving hot path allocates only the
 //! exact-size logits `Vec` it returns (pool buffers never escape), and
 //! the GEMMs run multi-threaded under the workspace's intra-op thread cap
-//! (see [`Backend::set_intra_op_threads`]).
+//! ([`PrepareOptions::intra_op_threads`]).
 //!
 //! Unlike the XLA engine, [`NativeEngine`] is `Send`, needs only
 //! `manifest.json` + the family's `params.bin` (no HLO artifacts), and can
@@ -39,7 +39,7 @@ use anyhow::{anyhow, bail, ensure, Result};
 
 use crate::quant::lsq::{self, qrange};
 use crate::quant::pack::{quantize_and_pack, Packed};
-use crate::runtime::backend::Backend;
+use crate::runtime::backend::{Backend, PrepareOptions};
 use crate::runtime::kernels::{self, check_accumulator_bound, PanelizedWeights, Workspace};
 use crate::runtime::Manifest;
 use crate::tensor::Tensor;
@@ -59,7 +59,9 @@ use arch::{Arch, ArchOp, BnSpec, ConvSpec, DenseSpec};
 /// * [`UnpackMode::Fused`] — keep only the packed bits; each forward call
 ///   unpacks KC×NC tiles into per-thread scratch on the fly (the
 ///   pre-panelization behavior). The low-memory choice for constrained
-///   deployments: `ServerConfig::fused_unpack` or `LSQNET_FUSED_UNPACK=1`.
+///   deployments: `PrepareOptions::low_memory` (surfaced as
+///   `ServerConfig::fused_unpack` / `VariantOptions::low_memory` in the
+///   serve layer) or `LSQNET_FUSED_UNPACK=1`.
 ///
 /// Both modes produce bitwise-identical logits (`tests/kernels.rs`).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -667,7 +669,8 @@ impl NativeEngine {
         self.model.as_ref()
     }
 
-    /// The weight-storage mode the next `prepare_infer` binds with.
+    /// The weight-storage mode the last `prepare_infer` bound with (the
+    /// process default before any bind).
     pub fn unpack_mode(&self) -> UnpackMode {
         self.mode
     }
@@ -682,7 +685,21 @@ impl Backend for NativeEngine {
         &self.manifest
     }
 
-    fn prepare_infer(&mut self, family: &str, params: &[Tensor]) -> Result<()> {
+    fn prepare_infer(
+        &mut self,
+        family: &str,
+        params: &[Tensor],
+        opts: &PrepareOptions,
+    ) -> Result<()> {
+        // `None` defers to the process-wide LSQNET_FUSED_UNPACK default —
+        // options cannot stomp the env resolution the way the old
+        // low-memory setter's unconditional `false` could.
+        self.mode = match opts.low_memory {
+            Some(true) => UnpackMode::Fused,
+            Some(false) => UnpackMode::Panelized,
+            None => UnpackMode::default_mode(),
+        };
+        self.ws.set_threads(opts.intra_op_threads);
         self.model = Some(NativeModel::build_with_mode(
             &self.manifest,
             family,
@@ -692,24 +709,12 @@ impl Backend for NativeEngine {
         Ok(())
     }
 
-    fn set_low_memory(&mut self, fused_unpack: bool) {
-        self.mode = if fused_unpack {
-            UnpackMode::Fused
-        } else {
-            UnpackMode::Panelized
-        };
-    }
-
     fn batch(&self) -> usize {
         self.manifest.batch.max(1)
     }
 
     fn fixed_batch(&self) -> bool {
         false // forward() handles any row count; no padding needed
-    }
-
-    fn set_intra_op_threads(&mut self, threads: usize) {
-        self.ws.set_threads(threads);
     }
 
     fn infer(&mut self, x: &[f32]) -> Result<Vec<f32>> {

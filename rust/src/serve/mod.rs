@@ -1,44 +1,50 @@
 //! Quantized-inference serving path (Figure 1 deployed): a request router +
-//! dynamic batcher in front of N engine replicas.
+//! dynamic batcher in front of engine replicas, multi-model by design.
 //!
 //! Architecture (vLLM-router-shaped, scaled to this model family):
-//!  * callers submit single images from any thread via a cloneable
-//!    [`ServeClient`] and block on (or poll) a reply channel;
-//!  * `replicas` worker threads each open their **own** engine from a
-//!    [`BackendSpec`] (the XLA client is `Rc`-backed and not `Send`; the
-//!    native engine is `Send` but keeps per-model packed state thread-local
-//!    anyway) and drain one shared queue. Each worker applies *dynamic
-//!    batching*: dispatch as soon as `batch` rows are waiting, or after
-//!    `max_wait` with whatever is there (tail rows are zero-padded only
-//!    for fixed-shape backends — see `Backend::fixed_batch`);
+//!
+//!  * [`registry::ModelRegistry`] is the serving surface: one process
+//!    hosts many bound model **variants** (e.g. `cnn_small_q2/q3/q4/q8` —
+//!    the same architecture at several precisions, LSQ's whole point),
+//!    each with its own request queue, replica set and [`ServeStats`],
+//!    sharing one core budget. Requests address a variant by name through
+//!    a [`registry::Session`] handle, and variants hot load/unload under
+//!    live traffic;
+//!  * each replica worker opens its **own** engine from a
+//!    [`crate::runtime::BackendSpec`] (the XLA client is `Rc`-backed and
+//!    not `Send`; the native engine is `Send` but keeps per-model packed
+//!    state thread-local anyway), configured once via
+//!    [`crate::runtime::PrepareOptions`], and drains its variant's queue
+//!    with *dynamic batching*: dispatch as soon as `batch` rows are
+//!    waiting, or after `max_wait` with whatever is there (tail rows are
+//!    zero-padded only for fixed-shape backends — see
+//!    `Backend::fixed_batch`);
 //!  * the queue hand-off is serialized (a mutex around the receiver) but
 //!    execution is not, so replicas overlap on the expensive part — the
 //!    forward pass;
-//!  * per-request latency and batch-occupancy metrics are accumulated for
-//!    the serve bench (EXPERIMENTS.md §Perf L3).
+//!  * every client-visible failure is a typed [`ServeError`]
+//!    (`Closed` / `UnknownModel` / `QueueFull` / `ShutDown` / `BadImage`),
+//!    so open-loop clients get real backpressure semantics instead of
+//!    panics or silently dropped reply channels.
 //!
-//! With the native backend this runs entirely from packed weights and
-//! scales across cores on two axes: replicas (inter-op) and the kernel
-//! layer's row-block threading (intra-op). `Server::start` partitions the
-//! host's cores across replicas via
-//! [`crate::runtime::Backend::set_intra_op_threads`]
-//! (`ServerConfig::intra_threads`, default `cores / replicas`) so the two
-//! axes never oversubscribe. With the XLA backend `replicas > 1` simply
-//! opens one PJRT client per worker (same memory model as the sweep
-//! coordinator).
+//! [`Server`]/[`ServerConfig`] survive as a thin one-variant compatibility
+//! shim over the registry. With the native backend this runs entirely from
+//! packed weights and scales across cores on two axes: replicas (inter-op)
+//! and the kernel layer's row-block threading (intra-op), partitioned so
+//! the two never oversubscribe (DESIGN.md §Serving-API).
 
-use std::path::Path;
-use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::mpsc::{Receiver, RecvTimeoutError, SyncSender};
-use std::sync::{Arc, Mutex};
+pub mod registry;
+
+use std::sync::mpsc::{Receiver, SyncSender};
 use std::time::{Duration, Instant};
 
-use anyhow::{anyhow, Result};
+use anyhow::Result;
 
-use crate::runtime::{Backend as _, BackendKind, BackendSpec, Manifest};
-use crate::tensor::Tensor;
+use crate::runtime::BackendSpec;
 
-/// One queued inference request (internal to the server).
+pub use registry::{ModelRegistry, Session, VariantOptions};
+
+/// One queued inference request (internal to the serve layer).
 pub struct Request {
     /// Flattened NHWC image, `image * image * channels` floats.
     pub image: Vec<f32>,
@@ -59,7 +65,53 @@ pub struct Reply {
     pub total_ms: f64,
 }
 
-/// Aggregate serving metrics across all replicas.
+/// Typed client-visible serving failures. Everything an open-loop client
+/// can hit is represented — no panics, no silently dropped reply channels.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum ServeError {
+    /// The variant's intake was closed (`close_intake` / drain): new
+    /// requests are not accepted; already-accepted ones are still answered.
+    Closed,
+    /// No variant with this name is loaded in the registry.
+    UnknownModel(String),
+    /// The variant's request queue is at `depth`: backpressure. Retry,
+    /// shed, or route to another tier — the submit never blocks.
+    QueueFull {
+        /// The configured queue bound that was hit.
+        depth: usize,
+    },
+    /// The serving side went away (replicas exited or the reply channel
+    /// dropped mid-request).
+    ShutDown,
+    /// The image has the wrong number of floats for the variant's
+    /// geometry.
+    BadImage {
+        /// Floats submitted.
+        got: usize,
+        /// Floats the variant's `image × image × channels` geometry needs.
+        want: usize,
+    },
+}
+
+impl std::fmt::Display for ServeError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ServeError::Closed => write!(f, "intake closed: variant no longer accepts requests"),
+            ServeError::UnknownModel(name) => write!(f, "unknown model variant {name:?}"),
+            ServeError::QueueFull { depth } => {
+                write!(f, "request queue full (depth {depth}): backpressure, retry later")
+            }
+            ServeError::ShutDown => write!(f, "server shut down"),
+            ServeError::BadImage { got, want } => {
+                write!(f, "image must have {want} floats, got {got}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for ServeError {}
+
+/// Aggregate serving metrics for one variant (all of its replicas).
 #[derive(Clone, Debug, Default)]
 pub struct ServeStats {
     /// Requests answered.
@@ -68,8 +120,17 @@ pub struct ServeStats {
     pub batches: u64,
     /// Rows dispatched including padding.
     pub rows_dispatched: u64,
+    /// Zero rows padded onto batch tails for fixed-shape backends
+    /// (`rows_dispatched − requests`), kept separately so
+    /// [`ServeStats::mean_exec_ms`] can be attributed: exec time is per
+    /// dispatched batch, and this is how much of each batch was padding
+    /// (EXPERIMENTS.md §Perf L3 reports the tail-padding overhead per
+    /// backend from it).
+    pub padding_rows: u64,
     /// Total forward-pass wall time.
     pub exec_ms_total: f64,
+    /// Summed per-request queue+batching time (submit → execution start).
+    pub queue_ms_total: f64,
     /// Sum over batches of real/batch (for mean occupancy).
     pub occupancy_sum: f64,
 }
@@ -84,7 +145,10 @@ impl ServeStats {
         }
     }
 
-    /// Mean forward-pass time per batch.
+    /// Mean forward-pass time per batch. Note this is per *dispatched*
+    /// batch — on fixed-shape backends it includes the cost of
+    /// [`ServeStats::padding_rows`]; real-row throughput is
+    /// `requests / exec_ms_total`.
     pub fn mean_exec_ms(&self) -> f64 {
         if self.batches == 0 {
             0.0
@@ -92,48 +156,60 @@ impl ServeStats {
             self.exec_ms_total / self.batches as f64
         }
     }
+
+    /// Mean time a request spends queued + batching before its batch
+    /// starts executing.
+    pub fn mean_queue_ms(&self) -> f64 {
+        if self.requests == 0 {
+            0.0
+        } else {
+            self.queue_ms_total / self.requests as f64
+        }
+    }
+
+    /// Mean fraction of dispatched rows that were tail padding.
+    pub fn padding_fraction(&self) -> f64 {
+        if self.rows_dispatched == 0 {
+            0.0
+        } else {
+            self.padding_rows as f64 / self.rows_dispatched as f64
+        }
+    }
 }
 
-/// Cloneable handle for submitting requests from any thread.
+/// Cloneable handle for submitting requests to a [`Server`] from any
+/// thread — a named-variant [`Session`] under the hood.
 #[derive(Clone)]
 pub struct ServeClient {
-    tx: SyncSender<Request>,
-    image_len: usize,
+    session: Session,
 }
 
 impl ServeClient {
     /// Blocking single-request inference.
-    pub fn infer(&self, image: Vec<f32>) -> Result<Reply> {
-        let rx = self.submit(image)?;
-        rx.recv().map_err(|_| anyhow!("server shut down"))
+    pub fn infer(&self, image: Vec<f32>) -> Result<Reply, ServeError> {
+        self.session.infer(image)
     }
 
-    /// Async submit; returns the reply channel.
-    pub fn submit(&self, image: Vec<f32>) -> Result<Receiver<Reply>> {
-        if image.len() != self.image_len {
-            anyhow::bail!("image must have {} floats, got {}", self.image_len, image.len());
-        }
-        let (reply_tx, reply_rx) = std::sync::mpsc::sync_channel(1);
-        self.tx
-            .send(Request { image, submitted: Instant::now(), reply: reply_tx })
-            .map_err(|_| anyhow!("server shut down"))?;
-        Ok(reply_rx)
+    /// Non-blocking submit; returns the reply channel. See
+    /// [`Session::submit`] for the error contract ([`ServeError::QueueFull`]
+    /// backpressure instead of blocking).
+    pub fn submit(&self, image: Vec<f32>) -> Result<Receiver<Reply>, ServeError> {
+        self.session.submit(image)
     }
 }
 
-/// A running inference server: client handle, shared stats, worker handles.
+/// A running one-variant inference server: the compatibility shim over
+/// [`ModelRegistry`] for callers that serve a single family. New code
+/// serving several precision tiers should use the registry directly.
 pub struct Server {
-    /// The server-held submit handle; `None` after [`Server::close_intake`].
-    client: Option<ServeClient>,
-    /// Shared metrics, updated by every replica.
-    pub stats: Arc<Mutex<ServeStats>>,
+    registry: ModelRegistry,
+    variant: String,
     /// Number of engine replicas actually started.
     pub replicas: usize,
-    stop: Arc<AtomicBool>,
-    handles: Vec<std::thread::JoinHandle<()>>,
 }
 
-/// Server configuration.
+/// One-variant server configuration (the [`Server`] shim; multi-variant
+/// deployments configure each variant via [`VariantOptions`]).
 pub struct ServerConfig {
     /// Which engine to open (and over which artifacts directory); each
     /// replica opens its own instance.
@@ -145,20 +221,22 @@ pub struct ServerConfig {
     /// Dynamic-batching window: maximum time a dispatching worker waits for
     /// stragglers after the first request of a batch arrives.
     pub max_wait: Duration,
-    /// Bound on queued requests (backpressure for open-loop clients).
+    /// Bound on queued requests ([`ServeError::QueueFull`] backpressure
+    /// for open-loop clients).
     pub queue_depth: usize,
     /// Engine replicas (worker threads). Clamped to at least 1.
     pub replicas: usize,
     /// Intra-op kernel threads *per replica*
-    /// ([`crate::runtime::Backend::set_intra_op_threads`]). 0 = auto:
+    /// ([`crate::runtime::PrepareOptions::intra_op_threads`]). 0 = auto:
     /// `hardware_threads / replicas`, so the deployment never
     /// oversubscribes (`LSQNET_THREADS` still caps process-wide).
     pub intra_threads: usize,
     /// Low-memory weight mode: skip bind-time panelization and unpack
-    /// weight tiles per call (`UnpackMode::Fused`,
-    /// [`crate::runtime::Backend::set_low_memory`]) — for
+    /// weight tiles per call (`UnpackMode::Fused`, via
+    /// [`crate::runtime::PrepareOptions::low_memory`]) — for
     /// memory-constrained deployments; the panelized default is faster.
-    /// ORed with the `LSQNET_FUSED_UNPACK=1` environment knob.
+    /// `false` defers to the `LSQNET_FUSED_UNPACK` environment knob
+    /// rather than overriding it.
     pub fused_unpack: bool,
 }
 
@@ -169,237 +247,56 @@ impl Server {
     /// (e.g. a missing HLO artifact on the XLA backend) are reported on
     /// stderr by the failing worker.
     pub fn start(cfg: ServerConfig) -> Result<Server> {
-        // Resolve geometry and parameters on the caller thread so startup
-        // errors surface synchronously.
-        let manifest = Manifest::load(&cfg.backend.artifacts_dir)?;
-        let image_len = manifest.image * manifest.image * manifest.channels;
-        let classes = manifest.family(&cfg.family)?.num_classes;
-        let params: Vec<Tensor> = if cfg.checkpoint.is_empty() {
-            manifest.load_initial_params(&cfg.family)?
-        } else {
-            crate::train::TrainState::load(&manifest, Path::new(&cfg.checkpoint))?.params
-        };
-        // Fail fast on configuration errors a replica could otherwise only
-        // report to stderr after start() already returned Ok.
-        match cfg.backend.kind {
-            BackendKind::Native => {
-                // Dry-run bind: catches unsupported architectures and
-                // missing/mis-shaped parameters synchronously, at the cost
-                // of one extra quantize+pack at startup. Always fused here
-                // — panelizing twice would double peak startup memory for
-                // no extra validation.
-                crate::runtime::native::NativeModel::build_with_mode(
-                    &manifest,
-                    &cfg.family,
-                    &params,
-                    crate::runtime::native::UnpackMode::Fused,
-                )?;
-            }
-            BackendKind::Xla => {
-                cfg.backend.check_available()?;
-                manifest.find("infer", &cfg.family, None, None)?;
-            }
-        }
-        drop(manifest);
-
-        let (tx, rx) = std::sync::mpsc::sync_channel::<Request>(cfg.queue_depth.max(1));
-        // The shared queue: workers take turns holding the receiver while
-        // they collect a batch, then release it for the next replica.
-        let shared_rx = Arc::new(Mutex::new(rx));
-        let stop = Arc::new(AtomicBool::new(false));
-        let stats = Arc::new(Mutex::new(ServeStats::default()));
-
+        let registry = ModelRegistry::open(cfg.backend);
         let replicas = cfg.replicas.max(1);
-        // Partition the host's cores across replicas unless the caller
-        // pinned an explicit per-replica intra-op width.
-        let intra_threads = if cfg.intra_threads == 0 {
-            (crate::runtime::kernels::hardware_threads() / replicas).max(1)
-        } else {
-            cfg.intra_threads
-        };
-        let cfg_fused_unpack = cfg.fused_unpack;
-        let mut handles = Vec::with_capacity(replicas);
-        for rid in 0..replicas {
-            let spec = cfg.backend.clone();
-            let family = cfg.family.clone();
-            let params = params.clone();
-            let shared_rx = shared_rx.clone();
-            let stop = stop.clone();
-            let stats = stats.clone();
-            let max_wait = cfg.max_wait;
-            let handle = std::thread::Builder::new()
-                .name(format!("lsq-serve-{rid}"))
-                .spawn(move || {
-                    if let Err(e) = replica_loop(
-                        &spec,
-                        &family,
-                        &params,
-                        &shared_rx,
-                        &stop,
-                        &stats,
-                        max_wait,
-                        classes,
-                        image_len,
-                        intra_threads,
-                        cfg_fused_unpack,
-                    ) {
-                        eprintln!("serve replica {rid}: {e:#}");
-                    }
-                })?;
-            handles.push(handle);
+        registry.load(
+            &cfg.family,
+            &VariantOptions {
+                checkpoint: cfg.checkpoint,
+                replicas,
+                max_wait: cfg.max_wait,
+                queue_depth: cfg.queue_depth,
+                intra_threads: cfg.intra_threads,
+                // `None` (not `Some(false)`) when the flag is unset: the
+                // engine's LSQNET_FUSED_UNPACK env default must not be
+                // stomped — the ordering footgun PrepareOptions removes.
+                low_memory: if cfg.fused_unpack { Some(true) } else { None },
+            },
+        )?;
+        Ok(Server { registry, variant: cfg.family, replicas })
+    }
+
+    /// A submit handle (cloneable, usable from any thread), or
+    /// [`ServeError::Closed`] after [`Server::close_intake`] — a closed
+    /// server accepts no new requests (this used to panic).
+    pub fn client(&self) -> Result<ServeClient, ServeError> {
+        let session = self.registry.session(&self.variant)?;
+        // A closed intake means close_intake was called: hand the typed
+        // error to the caller up front instead of failing every submit.
+        if !session.is_open() {
+            return Err(ServeError::Closed);
         }
-
-        Ok(Server {
-            client: Some(ServeClient { tx, image_len }),
-            stats,
-            replicas,
-            stop,
-            handles,
-        })
+        Ok(ServeClient { session })
     }
 
-    /// A submit handle (cloneable, usable from any thread).
-    ///
-    /// # Panics
-    /// After [`Server::close_intake`] — a closed server accepts no new
-    /// requests.
-    pub fn client(&self) -> ServeClient {
-        self.client.as_ref().expect("server intake already closed").clone()
-    }
-
-    /// Stop accepting new requests by dropping the server-held sender.
-    /// Once every caller-held [`ServeClient`] clone is dropped too, the
-    /// queue disconnects: replicas dispatch whatever is pending
-    /// immediately (no `max_wait` stragglers wait) and exit — every
-    /// already-submitted request still receives exactly one reply.
+    /// Stop accepting new requests: every already-accepted request is
+    /// still dispatched promptly (no `max_wait` straggler window) and
+    /// answered exactly once; subsequent submits on existing clients
+    /// observe [`ServeError::Closed`].
     pub fn close_intake(&mut self) {
-        self.client = None;
+        let _ = self.registry.close_intake(&self.variant);
     }
 
     /// Snapshot of the aggregate metrics.
     pub fn stats(&self) -> ServeStats {
-        self.stats.lock().unwrap().clone()
+        self.registry.stats(&self.variant).unwrap_or_default()
     }
 
-    /// Stop all replicas and join them: close the intake, flag shutdown,
-    /// join. Requests a replica already collected into its current batch
-    /// are dispatched and answered; requests still sitting in the queue
-    /// receive a disconnect on their reply channels (for a drain-then-stop
-    /// shutdown, call [`Server::close_intake`], drop caller clients, and
-    /// collect replies first). The stop flag bounds the batching wait, so
-    /// joining never hangs on a long `max_wait` even while caller clients
-    /// stay alive.
-    pub fn stop(mut self) {
-        self.close_intake();
-        self.stop.store(true, Ordering::Relaxed);
-        for h in self.handles.drain(..) {
-            let _ = h.join();
-        }
-    }
-}
-
-/// One replica: open an engine, bind the family, then batch-and-execute
-/// until shutdown.
-#[allow(clippy::too_many_arguments)]
-fn replica_loop(
-    spec: &BackendSpec,
-    family: &str,
-    params: &[Tensor],
-    shared_rx: &Mutex<Receiver<Request>>,
-    stop: &AtomicBool,
-    stats: &Mutex<ServeStats>,
-    max_wait: Duration,
-    classes: usize,
-    image_len: usize,
-    intra_threads: usize,
-    fused_unpack: bool,
-) -> Result<()> {
-    let mut backend = spec.open()?;
-    backend.set_intra_op_threads(intra_threads);
-    // Only *opt into* low memory here: a freshly opened native engine
-    // already resolved the LSQNET_FUSED_UNPACK env default itself, and
-    // unconditionally pushing `false` would stomp it.
-    if fused_unpack {
-        backend.set_low_memory(true);
-    }
-    backend.prepare_infer(family, params)?;
-    let batch = backend.batch();
-    let mut pending: Vec<Request> = Vec::with_capacity(batch);
-
-    loop {
-        if stop.load(Ordering::Relaxed) {
-            return Ok(());
-        }
-        // Collect a batch while holding the queue; execution happens after
-        // the lock is released so replicas overlap on the forward pass.
-        {
-            let rx = match shared_rx.lock() {
-                Ok(g) => g,
-                Err(_) => return Ok(()), // another replica panicked
-            };
-            match rx.recv_timeout(Duration::from_millis(20)) {
-                Ok(r) => pending.push(r),
-                Err(RecvTimeoutError::Timeout) => continue, // re-check stop
-                Err(RecvTimeoutError::Disconnected) => return Ok(()),
-            }
-            let deadline = Instant::now() + max_wait;
-            while pending.len() < batch {
-                let left = deadline.saturating_duration_since(Instant::now());
-                if left.is_zero() || stop.load(Ordering::Relaxed) {
-                    // Shutdown mid-collection: dispatch what we have so
-                    // every collected request still gets its reply, even
-                    // when max_wait is long.
-                    break;
-                }
-                // Wait in short slices so the stop flag bounds the
-                // batching window instead of max_wait.
-                match rx.recv_timeout(left.min(Duration::from_millis(20))) {
-                    Ok(r) => pending.push(r),
-                    Err(RecvTimeoutError::Timeout) => continue,
-                    Err(RecvTimeoutError::Disconnected) => break,
-                }
-            }
-        }
-
-        // Assemble the batch; pad the tail only for fixed-shape backends
-        // (the native backend runs exactly `real` rows).
-        let real = pending.len();
-        let rows = if backend.fixed_batch() { batch } else { real };
-        let mut x = vec![0.0f32; rows * image_len];
-        for (row, req) in pending.iter().enumerate() {
-            x[row * image_len..(row + 1) * image_len].copy_from_slice(&req.image);
-        }
-
-        let t_exec = Instant::now();
-        let logits = backend.infer(&x)?;
-        let exec_ms = t_exec.elapsed().as_secs_f64() * 1e3;
-
-        {
-            let mut s = stats.lock().unwrap();
-            s.batches += 1;
-            s.requests += real as u64;
-            s.rows_dispatched += rows as u64;
-            s.exec_ms_total += exec_ms;
-            // Occupancy stays relative to the target batch size: it
-            // measures how full the batcher runs, not the dispatch shape.
-            s.occupancy_sum += real as f64 / batch as f64;
-        }
-
-        for (row, req) in pending.drain(..).enumerate() {
-            let lg = logits[row * classes..(row + 1) * classes].to_vec();
-            let argmax = lg
-                .iter()
-                .enumerate()
-                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
-                .map(|(i, _)| i)
-                .unwrap_or(0);
-            let total_ms = req.submitted.elapsed().as_secs_f64() * 1e3;
-            let _ = req.reply.send(Reply {
-                logits: lg,
-                argmax,
-                queue_ms: (total_ms - exec_ms).max(0.0),
-                total_ms,
-            });
-        }
+    /// Drain and stop all replicas and join them: close the intake,
+    /// dispatch and answer everything already accepted, join. Joining
+    /// never hangs on a long `max_wait`, even while caller clients stay
+    /// alive — client handles never hold the queue open.
+    pub fn stop(self) {
+        self.registry.shutdown();
     }
 }

@@ -1,0 +1,596 @@
+//! Multi-model serving gateway: one process, many bound model variants.
+//!
+//! LSQ's deployment story (PAPER.md §1, Figure 3) is one architecture at
+//! *several* precisions — 2/3/4/8-bit variants trading accuracy against
+//! size and latency. [`ModelRegistry`] makes that a first-class serving
+//! surface: each loaded **variant** (a manifest family, e.g.
+//! `cnn_small_q2`) owns its own request queue, replica set and
+//! [`ServeStats`], all inside one process sharing one core budget.
+//! Callers address a variant by name through a [`Session`] handle:
+//!
+//! ```text
+//!  ModelRegistry ──────────────────────────────────────────────┐
+//!  │ core budget (default: hardware threads)                   │
+//!  │                                                           │
+//!  │  "cnn_small_q2" ─ VariantShared ──────────────┐           │
+//!  │  │ intake: RwLock<Option<SyncSender>>         │◄── Session("cnn_small_q2")
+//!  │  │ stats:  Mutex<ServeStats>                  │◄── Session (any thread)
+//!  │  │ queue ─► replica 0 ─► NativeEngine + ws    │           │
+//!  │  │       └► replica 1 ─► NativeEngine + ws    │           │
+//!  │  └────────────────────────────────────────────┘           │
+//!  │  "cnn_small_q4" ─ VariantShared ─► replica …  ◄── Session("cnn_small_q4")
+//!  └───────────────────────────────────────────────────────────┘
+//! ```
+//!
+//! Hot load/unload: [`ModelRegistry::load`] binds a new variant under
+//! live traffic to the others, and [`ModelRegistry::drain_and_unload`]
+//! retires one — the intake sender is the *only* sender for the variant's
+//! queue (sessions borrow it under a read lock, never clone it), so
+//! dropping it disconnects the queue deterministically: replicas dispatch
+//! every request already accepted, answer it, and exit. No in-flight
+//! request is dropped, and subsequent submits fail with
+//! [`ServeError::Closed`].
+//!
+//! [`super::Server`] remains as a one-variant compatibility shim over
+//! this registry. See DESIGN.md §Serving-API.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+use std::sync::mpsc::{Receiver, RecvTimeoutError, SyncSender, TrySendError};
+use std::sync::{Arc, Mutex, RwLock};
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Result};
+
+use crate::runtime::{Backend as _, BackendKind, BackendSpec, Manifest, PrepareOptions};
+use crate::tensor::Tensor;
+
+use super::{Reply, Request, ServeError, ServeStats};
+
+/// Per-variant deployment options for [`ModelRegistry::load`].
+#[derive(Clone, Debug)]
+pub struct VariantOptions {
+    /// Checkpoint with trained params (empty = the family's initial params).
+    pub checkpoint: String,
+    /// Engine replicas (worker threads) for this variant. Clamped to ≥ 1.
+    pub replicas: usize,
+    /// Dynamic-batching window: maximum time a dispatching worker waits
+    /// for stragglers after the first request of a batch arrives.
+    pub max_wait: Duration,
+    /// Bound on queued requests. A full queue surfaces as
+    /// [`ServeError::QueueFull`] on submit — real backpressure for
+    /// open-loop clients, never an indefinite block.
+    pub queue_depth: usize,
+    /// Intra-op kernel threads *per replica*
+    /// ([`PrepareOptions::intra_op_threads`]). 0 = auto: this variant's
+    /// share of the registry core budget, `budget / total replicas`
+    /// counted across every loaded variant at load time.
+    pub intra_threads: usize,
+    /// Weight-storage choice, forwarded to
+    /// [`PrepareOptions::low_memory`]: `Some(true)` = fused low-memory
+    /// unpack, `Some(false)` = pin the panelized fast path, `None` = the
+    /// process `LSQNET_FUSED_UNPACK` default.
+    pub low_memory: Option<bool>,
+}
+
+impl Default for VariantOptions {
+    fn default() -> Self {
+        VariantOptions {
+            checkpoint: String::new(),
+            replicas: 1,
+            max_wait: Duration::from_millis(2),
+            queue_depth: 256,
+            intra_threads: 0,
+            low_memory: None,
+        }
+    }
+}
+
+/// State shared between a variant's replicas and its [`Session`] handles.
+///
+/// The intake sender is deliberately **not** cloneable from the outside:
+/// sessions borrow it under the read lock for the duration of one
+/// `try_send`, so `drain_and_unload` taking the write lock and dropping it
+/// is a linearization point — every submit strictly before it is accepted
+/// (and will be answered), every submit after it observes
+/// [`ServeError::Closed`].
+struct VariantShared {
+    variant: String,
+    intake: RwLock<Option<SyncSender<Request>>>,
+    stats: Mutex<ServeStats>,
+    image_len: usize,
+    queue_depth: usize,
+}
+
+struct VariantEntry {
+    shared: Arc<VariantShared>,
+    handles: Vec<std::thread::JoinHandle<()>>,
+    replicas: usize,
+}
+
+/// A cloneable, thread-safe handle for submitting requests to one variant
+/// of a [`ModelRegistry`].
+#[derive(Clone)]
+pub struct Session {
+    shared: Arc<VariantShared>,
+}
+
+impl Session {
+    /// The variant name this session addresses.
+    pub fn variant(&self) -> &str {
+        &self.shared.variant
+    }
+
+    /// Blocking single-request inference.
+    pub fn infer(&self, image: Vec<f32>) -> Result<Reply, ServeError> {
+        let rx = self.submit(image)?;
+        rx.recv().map_err(|_| ServeError::ShutDown)
+    }
+
+    /// Non-blocking submit; returns the reply channel. A full queue is
+    /// [`ServeError::QueueFull`] (backpressure), a drained/unloaded
+    /// variant [`ServeError::Closed`], and a variant whose replicas all
+    /// died [`ServeError::ShutDown`].
+    pub fn submit(&self, image: Vec<f32>) -> Result<Receiver<Reply>, ServeError> {
+        if image.len() != self.shared.image_len {
+            return Err(ServeError::BadImage { got: image.len(), want: self.shared.image_len });
+        }
+        let guard = self.shared.intake.read().unwrap();
+        let tx = guard.as_ref().ok_or(ServeError::Closed)?;
+        let (reply_tx, reply_rx) = std::sync::mpsc::sync_channel(1);
+        match tx.try_send(Request { image, submitted: Instant::now(), reply: reply_tx }) {
+            Ok(()) => Ok(reply_rx),
+            Err(TrySendError::Full(_)) => {
+                Err(ServeError::QueueFull { depth: self.shared.queue_depth })
+            }
+            Err(TrySendError::Disconnected(_)) => Err(ServeError::ShutDown),
+        }
+    }
+
+    /// Snapshot of this variant's aggregate metrics.
+    pub fn stats(&self) -> ServeStats {
+        self.shared.stats.lock().unwrap().clone()
+    }
+
+    /// Whether the variant's intake is still accepting requests (`false`
+    /// after `close_intake`/`drain_and_unload`). Racy by nature — a
+    /// concurrent drain can close the intake right after this returns
+    /// `true`; [`Session::submit`]'s [`ServeError::Closed`] is the
+    /// authoritative answer.
+    pub fn is_open(&self) -> bool {
+        self.shared.intake.read().unwrap().is_some()
+    }
+}
+
+/// One server process hosting many bound model variants, each with its own
+/// replica set and stats, sharing one core budget. See the module docs for
+/// the ownership diagram and DESIGN.md §Serving-API for the rationale.
+pub struct ModelRegistry {
+    spec: BackendSpec,
+    core_budget: usize,
+    variants: Mutex<BTreeMap<String, VariantEntry>>,
+}
+
+impl ModelRegistry {
+    /// A registry opening engines from `spec`, with the core budget set to
+    /// the host's hardware thread count.
+    pub fn open(spec: BackendSpec) -> ModelRegistry {
+        ModelRegistry::with_core_budget(spec, 0)
+    }
+
+    /// [`ModelRegistry::open`] with an explicit core budget shared by all
+    /// variants (0 = hardware threads). The budget is partitioned across
+    /// replicas at [`ModelRegistry::load`] time: a variant loaded with
+    /// `intra_threads: 0` gets `budget / total replicas` kernel threads
+    /// per replica, counting every replica loaded so far plus its own.
+    /// Already-running variants keep their width (re-load one to
+    /// rebalance).
+    pub fn with_core_budget(spec: BackendSpec, core_budget: usize) -> ModelRegistry {
+        let budget = if core_budget == 0 {
+            crate::runtime::kernels::hardware_threads()
+        } else {
+            core_budget
+        };
+        ModelRegistry { spec, core_budget: budget, variants: Mutex::new(BTreeMap::new()) }
+    }
+
+    /// The core budget replicas partition (see
+    /// [`ModelRegistry::with_core_budget`]).
+    pub fn core_budget(&self) -> usize {
+        self.core_budget
+    }
+
+    /// Names of the variants currently loaded.
+    pub fn variants(&self) -> Vec<String> {
+        self.variants.lock().unwrap().keys().cloned().collect()
+    }
+
+    /// Total replicas across all loaded variants.
+    pub fn total_replicas(&self) -> usize {
+        self.variants.lock().unwrap().values().map(|e| e.replicas).sum()
+    }
+
+    /// Load `variant` (a manifest family name, e.g. `"cnn_small_q3"`) and
+    /// start its replica set. Hot: other variants keep serving throughout.
+    /// Manifest/params/architecture problems surface here, synchronously;
+    /// loading a name twice is an error (drain it first).
+    pub fn load(&self, variant: &str, opts: &VariantOptions) -> Result<()> {
+        if self.variants.lock().unwrap().contains_key(variant) {
+            bail!("variant {variant:?} is already loaded (drain_and_unload it first)");
+        }
+        // Resolve geometry and parameters on the caller thread so load
+        // errors surface synchronously, not on replica stderr.
+        let manifest = Manifest::load(&self.spec.artifacts_dir)?;
+        let image_len = manifest.image * manifest.image * manifest.channels;
+        let classes = manifest.family(variant)?.num_classes;
+        let params: Vec<Tensor> = if opts.checkpoint.is_empty() {
+            manifest.load_initial_params(variant)?
+        } else {
+            crate::train::TrainState::load(&manifest, Path::new(&opts.checkpoint))?.params
+        };
+        match self.spec.kind {
+            BackendKind::Native => {
+                // Dry-run bind: catches unsupported architectures and
+                // missing/mis-shaped parameters synchronously. Always
+                // fused here — panelizing twice would double peak startup
+                // memory for no extra validation.
+                crate::runtime::native::NativeModel::build_with_mode(
+                    &manifest,
+                    variant,
+                    &params,
+                    crate::runtime::native::UnpackMode::Fused,
+                )?;
+            }
+            BackendKind::Xla => {
+                self.spec.check_available()?;
+                manifest.find("infer", variant, None, None)?;
+            }
+        }
+        drop(manifest);
+
+        let replicas = opts.replicas.max(1);
+        let queue_depth = opts.queue_depth.max(1);
+        let (tx, rx) = std::sync::mpsc::sync_channel::<Request>(queue_depth);
+        let shared_rx = Arc::new(Mutex::new(rx));
+        let shared = Arc::new(VariantShared {
+            variant: variant.to_string(),
+            intake: RwLock::new(Some(tx)),
+            stats: Mutex::new(ServeStats::default()),
+            image_len,
+            queue_depth,
+        });
+
+        // Partition the core budget across every replica in the process:
+        // the ones already serving plus the ones this load adds. The
+        // duplicate check re-runs under the same lock as the insert, so
+        // two concurrent loads of one name cannot both win (the early
+        // check above is just a fast fail before the expensive bind).
+        let mut map = self.variants.lock().unwrap();
+        if map.contains_key(variant) {
+            bail!("variant {variant:?} is already loaded (drain_and_unload it first)");
+        }
+        let total_replicas: usize =
+            map.values().map(|e| e.replicas).sum::<usize>() + replicas;
+        let intra_threads = if opts.intra_threads == 0 {
+            (self.core_budget / total_replicas).max(1)
+        } else {
+            opts.intra_threads
+        };
+        let prep = PrepareOptions {
+            intra_op_threads: intra_threads,
+            low_memory: opts.low_memory,
+        };
+
+        let mut handles = Vec::with_capacity(replicas);
+        for rid in 0..replicas {
+            let spec = self.spec.clone();
+            let params = params.clone();
+            let prep = prep.clone();
+            let shared_rx = shared_rx.clone();
+            let shared_worker = shared.clone();
+            let max_wait = opts.max_wait;
+            let spawned = std::thread::Builder::new()
+                .name(format!("lsq-serve-{variant}-{rid}"))
+                .spawn(move || {
+                    if let Err(e) = replica_loop(
+                        &spec,
+                        &params,
+                        &prep,
+                        &shared_rx,
+                        &shared_worker,
+                        max_wait,
+                        classes,
+                    ) {
+                        eprintln!("serve replica {}/{rid}: {e:#}", shared_worker.variant);
+                    }
+                });
+            match spawned {
+                Ok(handle) => handles.push(handle),
+                Err(e) => {
+                    // A mid-load spawn failure must not leak the replicas
+                    // already running: the entry was never inserted, so no
+                    // drain could ever reach this intake. Disconnect it and
+                    // join what was spawned before surfacing the error.
+                    *shared.intake.write().unwrap() = None;
+                    for h in handles {
+                        let _ = h.join();
+                    }
+                    return Err(e.into());
+                }
+            }
+        }
+        map.insert(variant.to_string(), VariantEntry { shared, handles, replicas });
+        Ok(())
+    }
+
+    /// A submit handle for `variant`. Cheap; sessions are cloneable and
+    /// usable from any thread, and stay valid (returning
+    /// [`ServeError::Closed`]) after the variant is drained.
+    pub fn session(&self, variant: &str) -> Result<Session, ServeError> {
+        self.variants
+            .lock()
+            .unwrap()
+            .get(variant)
+            .map(|e| Session { shared: e.shared.clone() })
+            .ok_or_else(|| ServeError::UnknownModel(variant.to_string()))
+    }
+
+    /// Snapshot of one variant's metrics.
+    pub fn stats(&self, variant: &str) -> Result<ServeStats, ServeError> {
+        self.variants
+            .lock()
+            .unwrap()
+            .get(variant)
+            .map(|e| e.shared.stats.lock().unwrap().clone())
+            .ok_or_else(|| ServeError::UnknownModel(variant.to_string()))
+    }
+
+    /// Snapshot of every loaded variant's metrics.
+    pub fn all_stats(&self) -> BTreeMap<String, ServeStats> {
+        self.variants
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|(k, e)| (k.clone(), e.shared.stats.lock().unwrap().clone()))
+            .collect()
+    }
+
+    /// Close `variant`'s intake without waiting for its replicas: further
+    /// submits observe [`ServeError::Closed`]; already-accepted requests
+    /// are still dispatched and answered, after which the replicas exit.
+    /// The variant stays registered (for stats) until
+    /// [`ModelRegistry::drain_and_unload`].
+    pub fn close_intake(&self, variant: &str) -> Result<(), ServeError> {
+        let map = self.variants.lock().unwrap();
+        let entry = map
+            .get(variant)
+            .ok_or_else(|| ServeError::UnknownModel(variant.to_string()))?;
+        *entry.shared.intake.write().unwrap() = None;
+        Ok(())
+    }
+
+    /// Hot-unload `variant`: close its intake, wait for its replicas to
+    /// answer every request accepted before the close, join them, and
+    /// return the variant's final stats. Other variants keep serving
+    /// throughout — this is how a precision tier is swapped under live
+    /// traffic (load the replacement first, then drain the old tier).
+    pub fn drain_and_unload(&self, variant: &str) -> Result<ServeStats, ServeError> {
+        let entry = self
+            .variants
+            .lock()
+            .unwrap()
+            .remove(variant)
+            .ok_or_else(|| ServeError::UnknownModel(variant.to_string()))?;
+        // Dropping the only sender disconnects the queue: replicas drain
+        // the buffered requests (std mpsc delivers them before reporting
+        // Disconnected), answer each exactly once, and exit. The map lock
+        // is released before joining so sessions/loads on other variants
+        // never block on a drain.
+        *entry.shared.intake.write().unwrap() = None;
+        for h in entry.handles {
+            let _ = h.join();
+        }
+        let stats = entry.shared.stats.lock().unwrap().clone();
+        Ok(stats)
+    }
+
+    /// Drain and unload every variant, returning the final per-variant
+    /// stats.
+    pub fn shutdown(self) -> BTreeMap<String, ServeStats> {
+        let names = self.variants();
+        let mut all = BTreeMap::new();
+        for name in names {
+            if let Ok(stats) = self.drain_and_unload(&name) {
+                all.insert(name, stats);
+            }
+        }
+        all
+    }
+}
+
+impl Drop for ModelRegistry {
+    /// Dropping the registry without [`ModelRegistry::shutdown`] (early
+    /// error paths, panics) must not leak replica threads: each replica
+    /// holds its own `Arc<VariantShared>`, so only closing every intake
+    /// disconnects the queues and lets the replicas drain and exit. The
+    /// threads are joined too — they terminate promptly after the
+    /// disconnect (bounded by the batch in flight, never by `max_wait`).
+    fn drop(&mut self) {
+        // Poison-tolerant: this also runs while unwinding from a panic,
+        // and a second panic here would abort the process.
+        let entries: Vec<VariantEntry> = {
+            let mut map = match self.variants.lock() {
+                Ok(g) => g,
+                Err(p) => p.into_inner(),
+            };
+            std::mem::take(&mut *map).into_values().collect()
+        };
+        for entry in &entries {
+            let mut intake = match entry.shared.intake.write() {
+                Ok(g) => g,
+                Err(p) => p.into_inner(),
+            };
+            *intake = None;
+        }
+        for entry in entries {
+            for h in entry.handles {
+                let _ = h.join();
+            }
+        }
+    }
+}
+
+/// One replica: open an engine, bind the variant with the deployment's
+/// [`PrepareOptions`], then batch-and-execute until the variant's queue
+/// disconnects (drain/unload/shutdown).
+#[allow(clippy::too_many_arguments)]
+fn replica_loop(
+    spec: &BackendSpec,
+    params: &[Tensor],
+    prep: &PrepareOptions,
+    shared_rx: &Mutex<Receiver<Request>>,
+    shared: &VariantShared,
+    max_wait: Duration,
+    classes: usize,
+) -> Result<()> {
+    let mut backend = spec.open()?;
+    backend.prepare_infer(&shared.variant, params, prep)?;
+    let batch = backend.batch();
+    let mut pending: Vec<Request> = Vec::with_capacity(batch);
+
+    loop {
+        // Collect a batch while holding the queue; execution happens after
+        // the lock is released so replicas overlap on the forward pass.
+        {
+            let rx = match shared_rx.lock() {
+                Ok(g) => g,
+                Err(_) => return Ok(()), // another replica panicked
+            };
+            match rx.recv_timeout(Duration::from_millis(20)) {
+                Ok(r) => pending.push(r),
+                Err(RecvTimeoutError::Timeout) => continue,
+                // Intake dropped and queue fully drained: we're done.
+                Err(RecvTimeoutError::Disconnected) => return Ok(()),
+            }
+            let deadline = Instant::now() + max_wait;
+            while pending.len() < batch {
+                let left = deadline.saturating_duration_since(Instant::now());
+                if left.is_zero() {
+                    break;
+                }
+                // Wait in short slices so an intake close mid-collection
+                // dispatches what we have instead of sitting out max_wait.
+                match rx.recv_timeout(left.min(Duration::from_millis(20))) {
+                    Ok(r) => pending.push(r),
+                    Err(RecvTimeoutError::Timeout) => continue,
+                    Err(RecvTimeoutError::Disconnected) => break,
+                }
+            }
+        }
+
+        // Assemble the batch; pad the tail only for fixed-shape backends
+        // (the native backend runs exactly `real` rows).
+        let real = pending.len();
+        let rows = if backend.fixed_batch() { batch } else { real };
+        let mut x = vec![0.0f32; rows * shared.image_len];
+        for (row, req) in pending.iter().enumerate() {
+            x[row * shared.image_len..(row + 1) * shared.image_len]
+                .copy_from_slice(&req.image);
+        }
+
+        let t_exec = Instant::now();
+        // Queue time is measured to the moment execution starts, so
+        // `mean_queue_ms` isolates batching/queueing from compute.
+        let queue_ms: f64 = pending
+            .iter()
+            .map(|r| t_exec.duration_since(r.submitted).as_secs_f64() * 1e3)
+            .sum();
+        let logits = backend.infer(&x)?;
+        let exec_ms = t_exec.elapsed().as_secs_f64() * 1e3;
+
+        {
+            let mut s = shared.stats.lock().unwrap();
+            s.batches += 1;
+            s.requests += real as u64;
+            s.rows_dispatched += rows as u64;
+            s.padding_rows += (rows - real) as u64;
+            s.exec_ms_total += exec_ms;
+            s.queue_ms_total += queue_ms;
+            // Occupancy stays relative to the target batch size: it
+            // measures how full the batcher runs, not the dispatch shape.
+            s.occupancy_sum += real as f64 / batch as f64;
+        }
+
+        for (row, req) in pending.drain(..).enumerate() {
+            let lg = logits[row * classes..(row + 1) * classes].to_vec();
+            let argmax = lg
+                .iter()
+                .enumerate()
+                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .map(|(i, _)| i)
+                .unwrap_or(0);
+            let queue_ms = t_exec.duration_since(req.submitted).as_secs_f64() * 1e3;
+            let total_ms = req.submitted.elapsed().as_secs_f64() * 1e3;
+            let _ = req.reply.send(Reply { logits: lg, argmax, queue_ms, total_ms });
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn bare_shared(queue_depth: usize) -> (Arc<VariantShared>, Receiver<Request>) {
+        let (tx, rx) = std::sync::mpsc::sync_channel::<Request>(queue_depth);
+        let shared = Arc::new(VariantShared {
+            variant: "test_q2".to_string(),
+            intake: RwLock::new(Some(tx)),
+            stats: Mutex::new(ServeStats::default()),
+            image_len: 4,
+            queue_depth,
+        });
+        (shared, rx)
+    }
+
+    /// The backpressure contract, deterministically: with no consumer
+    /// draining the queue, the `queue_depth+1`-th submit surfaces
+    /// `QueueFull { depth }` immediately instead of blocking forever (the
+    /// old `SyncSender::send` behavior).
+    #[test]
+    fn submit_surfaces_queue_full_at_depth_instead_of_blocking() {
+        let (shared, _rx) = bare_shared(2);
+        let session = Session { shared };
+        let r1 = session.submit(vec![0.0; 4]);
+        let r2 = session.submit(vec![0.0; 4]);
+        assert!(r1.is_ok() && r2.is_ok());
+        assert_eq!(
+            session.submit(vec![0.0; 4]).err(),
+            Some(ServeError::QueueFull { depth: 2 })
+        );
+        // Draining one slot re-admits exactly one request.
+        drop(_rx.recv().unwrap());
+        assert!(session.submit(vec![0.0; 4]).is_ok());
+        assert_eq!(
+            session.submit(vec![0.0; 4]).err(),
+            Some(ServeError::QueueFull { depth: 2 })
+        );
+    }
+
+    /// Closed intake and dead consumer produce their own typed errors.
+    #[test]
+    fn submit_surfaces_closed_and_shutdown() {
+        let (shared, rx) = bare_shared(2);
+        let session = Session { shared: shared.clone() };
+        assert_eq!(
+            session.submit(vec![0.0; 3]).err(),
+            Some(ServeError::BadImage { got: 3, want: 4 })
+        );
+        // Receiver gone (all replicas exited): ShutDown.
+        drop(rx);
+        assert_eq!(session.submit(vec![0.0; 4]).err(), Some(ServeError::ShutDown));
+        // Intake taken (close_intake / drain): Closed, checked before send.
+        *shared.intake.write().unwrap() = None;
+        assert!(!session.is_open());
+        assert_eq!(session.submit(vec![0.0; 4]).err(), Some(ServeError::Closed));
+    }
+}

@@ -116,9 +116,9 @@ impl NativeTrainer {
     /// Cap this trainer's intra-op kernel threads (0 = hardware count).
     /// The sweep coordinator calls this with `cores / workers` so
     /// `workers × intra-op threads` never oversubscribes the host —
-    /// the training-side mirror of
-    /// [`crate::runtime::Backend::set_intra_op_threads`].
-    pub fn set_intra_op_threads(&mut self, threads: usize) {
+    /// the training-side mirror of the serve layer's
+    /// [`crate::runtime::PrepareOptions::intra_op_threads`].
+    pub fn set_threads(&mut self, threads: usize) {
         self.ws.set_threads(threads);
     }
 

@@ -287,7 +287,7 @@ fn serve_round_trip_and_batching() {
     std::thread::scope(|s| {
         let hs: Vec<_> = (0..4)
             .map(|t| {
-                let c = server.client();
+                let c = server.client().unwrap();
                 let spec = &spec;
                 s.spawn(move || {
                     (0..10)
@@ -325,7 +325,7 @@ fn serve_rejects_bad_image_size() {
         fused_unpack: false,
     })
     .unwrap();
-    assert!(server.client().submit(vec![0.0; 7]).is_err());
+    assert!(server.client().unwrap().submit(vec![0.0; 7]).is_err());
     server.stop();
 }
 

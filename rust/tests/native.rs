@@ -142,7 +142,7 @@ fn backend_spec_opens_native_engine() {
     let mut backend = BackendSpec::native(&dir).open().unwrap();
     assert_eq!(backend.name(), "native");
     let params = backend.manifest().load_initial_params(&family).unwrap();
-    backend.prepare_infer(&family, &params).unwrap();
+    backend.prepare_infer(&family, &params, &lsqnet::runtime::PrepareOptions::new()).unwrap();
     assert_eq!(backend.batch(), 4);
     let x = vec![0.5f32; 4 * 8 * 8 * 3];
     let logits = backend.infer(&x).unwrap();
@@ -193,7 +193,7 @@ fn multi_replica_serve_answers_every_request_once() {
     std::thread::scope(|s| {
         let handles: Vec<_> = (0..n_threads)
             .map(|t| {
-                let c = server.client();
+                let c = server.client().unwrap();
                 s.spawn(move || {
                     (0..per_thread)
                         .map(|i| {
@@ -230,10 +230,11 @@ fn multi_replica_serve_answers_every_request_once() {
 }
 
 /// Clean shutdown with in-flight requests: submit a queue of async
-/// requests, drop every `ServeClient` (ours and the server's via
-/// `close_intake`), and assert each submitted request still gets exactly
-/// one reply — promptly, without the workers sitting out a long
-/// `max_wait` window — and that `stop()` joins without hanging.
+/// requests, close the intake, and assert each accepted request still
+/// gets exactly one reply — promptly, without the workers sitting out a
+/// long `max_wait` window — and that `stop()` joins without hanging.
+/// Also pins the satellite fix: `client()` after `close_intake` is a
+/// typed `ServeError::Closed`, not a panic.
 #[test]
 fn serve_shutdown_answers_inflight_requests_without_max_wait_hang() {
     use lsqnet::serve::{Server, ServerConfig};
@@ -255,14 +256,22 @@ fn serve_shutdown_answers_inflight_requests_without_max_wait_hang() {
     })
     .unwrap();
 
-    let client = server.client();
+    let client = server.client().unwrap();
     let n = 9usize; // not a multiple of batch: forces a partial tail batch
     let receivers: Vec<_> = (0..n)
         .map(|i| client.submit(vec![0.1 * i as f32; 8 * 8 * 3]).unwrap())
         .collect();
     let t0 = std::time::Instant::now();
-    drop(client); // drop the caller-held sender mid-queue...
-    server.close_intake(); // ...and the server-held one: queue disconnects
+    server.close_intake(); // queue disconnects; accepted requests drain
+
+    // The old API panicked here; now it's a typed error, and live client
+    // handles observe Closed on submit instead of keeping the queue open.
+    assert_eq!(server.client().err(), Some(lsqnet::serve::ServeError::Closed));
+    assert_eq!(
+        client.submit(vec![0.3; 8 * 8 * 3]).err(),
+        Some(lsqnet::serve::ServeError::Closed)
+    );
+    drop(client);
 
     let mut replies = 0usize;
     for rx in receivers {
@@ -286,8 +295,9 @@ fn serve_shutdown_answers_inflight_requests_without_max_wait_hang() {
 }
 
 /// `stop()` while caller clients are still alive must also join without
-/// waiting out `max_wait` (the collection loop checks the stop flag in
-/// short slices).
+/// waiting out `max_wait`: client handles never hold the queue open, so
+/// closing the intake disconnects it and the collection loop (which waits
+/// in short slices) drains promptly.
 #[test]
 fn serve_stop_joins_while_clients_still_alive() {
     use lsqnet::serve::{Server, ServerConfig};
@@ -305,7 +315,7 @@ fn serve_stop_joins_while_clients_still_alive() {
         fused_unpack: false,
     })
     .unwrap();
-    let client = server.client(); // keeps the channel connected
+    let client = server.client().unwrap(); // keeps the channel connected
     let _pending = client.submit(vec![0.2; 8 * 8 * 3]).unwrap();
     let t0 = std::time::Instant::now();
     server.stop();
@@ -379,9 +389,9 @@ fn serve_rejects_bad_image_size_native() {
         fused_unpack: false,
     })
     .unwrap();
-    assert!(server.client().submit(vec![0.0; 7]).is_err());
+    assert!(server.client().unwrap().submit(vec![0.0; 7]).is_err());
     // a good request still works afterwards
-    let rep = server.client().infer(vec![0.1; 8 * 8 * 3]).unwrap();
+    let rep = server.client().unwrap().infer(vec![0.1; 8 * 8 * 3]).unwrap();
     assert_eq!(rep.logits.len(), 4);
     server.stop();
     std::fs::remove_dir_all(&dir).ok();

@@ -1,0 +1,369 @@
+//! Multi-model registry tests: named sessions against several precision
+//! variants in one process, per-variant stats, logits parity vs the
+//! engine driven directly, hot load/unload under in-flight traffic, and
+//! the typed `ServeError` surface. All native — the synthetic fixture
+//! provides the manifest + params, so no Python/XLA is needed.
+
+use std::path::PathBuf;
+use std::time::Duration;
+
+use lsqnet::runtime::native::fixture::{write_synthetic_family, FixtureSpec};
+use lsqnet::runtime::{Backend as _, BackendSpec, PrepareOptions};
+use lsqnet::serve::{ModelRegistry, ServeError, VariantOptions};
+
+fn tmp_dir(tag: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("lsq_registry_{tag}_{}", std::process::id()))
+}
+
+/// Write a q2+q4 pair of the same architecture into one manifest.
+fn two_tier_fixture(tag: &str, model: &str) -> (PathBuf, String, String) {
+    let dir = tmp_dir(tag);
+    std::fs::remove_dir_all(&dir).ok();
+    let spec = FixtureSpec { image: 8, channels: 3, num_classes: 6, batch: 4, seed: 33 };
+    let q2 = write_synthetic_family(&dir, model, 2, spec).unwrap();
+    let q4 = write_synthetic_family(&dir, model, 4, spec).unwrap();
+    (dir, q2, q4)
+}
+
+fn image(seed: usize, len: usize) -> Vec<f32> {
+    (0..len).map(|j| ((seed * 31 + j * 7) % 13) as f32 / 13.0 - 0.5).collect()
+}
+
+/// Concurrent sessions against two precision variants of one architecture
+/// produce exactly the logits the engine computes when driven directly —
+/// per variant, even when the traffic interleaves (qgemm is bitwise
+/// deterministic across batch shapes and thread counts, so exact equality
+/// is the correct assertion).
+#[test]
+fn concurrent_sessions_match_direct_engine_per_variant() {
+    let (dir, q2, q4) = two_tier_fixture("parity", "cnn_small");
+    let image_len = 8 * 8 * 3;
+
+    // Reference logits straight off the engine, one variant at a time.
+    let mut want: Vec<Vec<Vec<f32>>> = Vec::new(); // [variant][request][logits]
+    for family in [&q2, &q4] {
+        let mut backend = BackendSpec::native(&dir).open().unwrap();
+        let params = backend.manifest().load_initial_params(family).unwrap();
+        backend.prepare_infer(family, &params, &PrepareOptions::new()).unwrap();
+        let mut per_req = Vec::new();
+        for i in 0..12usize {
+            per_req.push(backend.infer(&image(i, image_len)).unwrap());
+        }
+        want.push(per_req);
+    }
+
+    let registry = ModelRegistry::open(BackendSpec::native(&dir));
+    let opts = VariantOptions {
+        replicas: 2,
+        max_wait: Duration::from_millis(2),
+        queue_depth: 64,
+        ..VariantOptions::default()
+    };
+    registry.load(&q2, &opts).unwrap();
+    registry.load(&q4, &opts).unwrap();
+    assert_eq!(registry.variants(), vec![q2.clone(), q4.clone()]);
+    assert_eq!(registry.total_replicas(), 4);
+
+    // Two client threads per variant, interleaved traffic.
+    std::thread::scope(|s| {
+        let mut handles = Vec::new();
+        for (v, family) in [&q2, &q4].into_iter().enumerate() {
+            for half in 0..2usize {
+                let session = registry.session(family).unwrap();
+                let want = &want;
+                handles.push(s.spawn(move || {
+                    for i in (half * 6)..(half * 6 + 6) {
+                        let rep = session.infer(image(i, image_len)).unwrap();
+                        assert_eq!(
+                            rep.logits, want[v][i],
+                            "variant {} request {i}: batched serve logits diverge \
+                             from the direct engine",
+                            session.variant()
+                        );
+                    }
+                }));
+            }
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+    });
+
+    // Per-variant stats: each tier answered exactly its own 12 requests.
+    for family in [&q2, &q4] {
+        let stats = registry.stats(family).unwrap();
+        assert_eq!(stats.requests, 12, "{family}");
+        assert!(stats.batches >= 1 && stats.batches <= 12, "{family}");
+        assert!(stats.mean_occupancy() > 0.0 && stats.mean_occupancy() <= 1.0);
+        assert!(stats.mean_queue_ms() >= 0.0);
+        // The native backend never pads.
+        assert_eq!(stats.padding_rows, 0, "{family}");
+        assert_eq!(stats.rows_dispatched, stats.requests);
+    }
+    registry.shutdown();
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// The ci.sh gateway stage: a two-variant native registry (q2+q4
+/// synthetic fixture), 64 requests round-robined across both sessions,
+/// per-variant stats summing exactly to the request count.
+#[test]
+fn round_robin_64_requests_per_variant_stats_sum() {
+    let (dir, q2, q4) = two_tier_fixture("rr64", "mlp");
+    let image_len = 8 * 8 * 3;
+    let registry = ModelRegistry::open(BackendSpec::native(&dir));
+    let opts = VariantOptions {
+        replicas: 2,
+        max_wait: Duration::from_millis(1),
+        queue_depth: 64,
+        ..VariantOptions::default()
+    };
+    registry.load(&q2, &opts).unwrap();
+    registry.load(&q4, &opts).unwrap();
+
+    let n = 64usize;
+    std::thread::scope(|s| {
+        let mut handles = Vec::new();
+        for t in 0..4usize {
+            let sessions = [registry.session(&q2).unwrap(), registry.session(&q4).unwrap()];
+            handles.push(s.spawn(move || {
+                for i in 0..n / 4 {
+                    let rep = sessions[i % 2].infer(image(t * 100 + i, image_len)).unwrap();
+                    assert_eq!(rep.logits.len(), 6);
+                    assert!(rep.logits.iter().all(|v| v.is_finite()));
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+    });
+
+    let all = registry.all_stats();
+    assert_eq!(all.len(), 2);
+    let total: u64 = all.values().map(|s| s.requests).sum();
+    assert_eq!(total, n as u64, "per-variant stats must sum to the request count");
+    assert_eq!(all[&q2].requests, 32);
+    assert_eq!(all[&q4].requests, 32);
+    registry.shutdown();
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Hot-unload under in-flight load: client threads hammer variant A while
+/// it is drained; every request accepted before the drain is answered
+/// exactly once, submits after it fail with the typed `Closed`/`ShutDown`
+/// errors, and variant B keeps serving throughout and afterwards.
+#[test]
+fn hot_unload_answers_every_accepted_request_exactly_once() {
+    let (dir, q2, q4) = two_tier_fixture("unload", "mlp");
+    let image_len = 8 * 8 * 3;
+    let registry = ModelRegistry::open(BackendSpec::native(&dir));
+    let opts = VariantOptions {
+        replicas: 2,
+        // Deliberately huge batching window: only the drain/disconnect
+        // path can dispatch the tail batch quickly.
+        max_wait: Duration::from_secs(5),
+        queue_depth: 128,
+        ..VariantOptions::default()
+    };
+    registry.load(&q2, &opts).unwrap();
+    registry.load(&q4, &opts).unwrap();
+
+    let t0 = std::time::Instant::now();
+    std::thread::scope(|s| {
+        let mut handles = Vec::new();
+        for t in 0..3usize {
+            let session = registry.session(&q2).unwrap();
+            handles.push(s.spawn(move || {
+                let mut pending: Vec<std::sync::mpsc::Receiver<_>> = Vec::new();
+                let mut accepted = 0usize;
+                let mut closed = 0usize;
+                for i in 0..400usize {
+                    match session.submit(image(t * 1000 + i, image_len)) {
+                        Ok(rx) => {
+                            accepted += 1;
+                            pending.push(rx);
+                        }
+                        Err(ServeError::Closed) | Err(ServeError::ShutDown) => {
+                            closed += 1;
+                            if closed > 3 {
+                                break; // variant is gone; stop hammering
+                            }
+                        }
+                        Err(ServeError::QueueFull { .. }) => {
+                            // Backpressure under the flood: drain one reply
+                            // (it stays counted as accepted) and continue.
+                            if let Some(rx) = pending.pop() {
+                                rx.recv().expect("accepted request must be answered");
+                            }
+                        }
+                        Err(e) => panic!("unexpected serve error: {e}"),
+                    }
+                }
+                // Every accepted request gets exactly one reply, even the
+                // ones that were still queued when the drain started.
+                for rx in pending {
+                    let rep = rx
+                        .recv_timeout(Duration::from_secs(30))
+                        .expect("accepted request dropped without a reply");
+                    assert_eq!(rep.logits.len(), 6);
+                }
+                accepted
+            }));
+        }
+        // Let the clients get going, then pull the tier out from under them.
+        std::thread::sleep(Duration::from_millis(20));
+        let drained = registry.drain_and_unload(&q2).unwrap();
+        // The variant is gone from the registry the moment drain returns.
+        assert!(matches!(registry.session(&q2), Err(ServeError::UnknownModel(_))));
+        assert!(matches!(registry.stats(&q2), Err(ServeError::UnknownModel(_))));
+
+        let accepted_total: usize = handles.into_iter().map(|h| h.join().unwrap()).sum();
+        // Exactly once: the drain's final stats count every accepted
+        // request (replies were asserted above), no more, no fewer.
+        assert_eq!(drained.requests as usize, accepted_total);
+    });
+    // Despite the 5s max_wait, the drain never sat out the batching window.
+    assert!(
+        t0.elapsed() < Duration::from_secs(5),
+        "drain_and_unload waited out max_wait: {:?}",
+        t0.elapsed()
+    );
+
+    // The other tier never stopped serving.
+    let s4 = registry.session(&q4).unwrap();
+    let rep = s4.infer(image(7, image_len)).unwrap();
+    assert_eq!(rep.logits.len(), 6);
+    assert_eq!(registry.variants(), vec![q4.clone()]);
+
+    // Hot *re*-load: the drained name can come back (e.g. a re-trained
+    // checkpoint) while B still serves.
+    registry.load(&q2, &VariantOptions::default()).unwrap();
+    let s2 = registry.session(&q2).unwrap();
+    assert_eq!(s2.infer(image(9, image_len)).unwrap().logits.len(), 6);
+    registry.shutdown();
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// `QueueFull { depth }` surfaces at the configured bound instead of
+/// blocking forever: flood a single-replica variant without consuming
+/// replies; during any exec window the queue must hit its depth-2 cap.
+#[test]
+fn queue_full_surfaces_at_queue_depth() {
+    let dir = tmp_dir("qfull");
+    std::fs::remove_dir_all(&dir).ok();
+    let spec = FixtureSpec { image: 8, channels: 3, num_classes: 6, batch: 8, seed: 5 };
+    let family = write_synthetic_family(&dir, "cnn_small", 2, spec).unwrap();
+    let image_len = 8 * 8 * 3;
+    let registry = ModelRegistry::open(BackendSpec::native(&dir));
+    registry
+        .load(
+            &family,
+            &VariantOptions {
+                replicas: 1,
+                max_wait: Duration::from_millis(0),
+                queue_depth: 2,
+                ..VariantOptions::default()
+            },
+        )
+        .unwrap();
+    let session = registry.session(&family).unwrap();
+
+    let mut receivers = Vec::new();
+    let mut hit = None;
+    for i in 0..5_000usize {
+        match session.submit(image(i, image_len)) {
+            Ok(rx) => receivers.push(rx),
+            Err(ServeError::QueueFull { depth }) => {
+                hit = Some(depth);
+                break;
+            }
+            Err(e) => panic!("unexpected serve error: {e}"),
+        }
+    }
+    assert_eq!(hit, Some(2), "submit must surface QueueFull at the configured depth");
+    // Backpressure is non-destructive: everything accepted is answered.
+    for rx in receivers {
+        rx.recv_timeout(Duration::from_secs(30))
+            .expect("accepted request must still be answered after backpressure");
+    }
+    registry.shutdown();
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// The typed error surface: unknown variants, duplicate loads, and
+/// drained variants each produce their distinct error.
+#[test]
+fn typed_errors_unknown_duplicate_and_closed() {
+    let dir = tmp_dir("errors");
+    std::fs::remove_dir_all(&dir).ok();
+    let spec = FixtureSpec { image: 8, channels: 3, num_classes: 4, batch: 4, seed: 11 };
+    let family = write_synthetic_family(&dir, "mlp", 4, spec).unwrap();
+    let image_len = 8 * 8 * 3;
+    let registry = ModelRegistry::open(BackendSpec::native(&dir));
+
+    assert_eq!(
+        registry.session("nope_q2").err(),
+        Some(ServeError::UnknownModel("nope_q2".to_string()))
+    );
+    registry.load(&family, &VariantOptions::default()).unwrap();
+    // Loading a live name twice is an error (drain first), and a family
+    // the manifest doesn't know fails synchronously.
+    assert!(registry.load(&family, &VariantOptions::default()).is_err());
+    assert!(registry.load("missing_q3", &VariantOptions::default()).is_err());
+
+    let session = registry.session(&family).unwrap();
+    assert_eq!(
+        session.submit(vec![0.0; 7]).err(),
+        Some(ServeError::BadImage { got: 7, want: image_len })
+    );
+    // close_intake: sessions observe Closed, stats stay readable.
+    registry.close_intake(&family).unwrap();
+    assert!(!session.is_open());
+    assert_eq!(session.submit(image(0, image_len)).err(), Some(ServeError::Closed));
+    assert!(registry.stats(&family).is_ok());
+    let stats = registry.drain_and_unload(&family).unwrap();
+    assert_eq!(stats.requests, 0);
+    registry.shutdown();
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// The core budget partitions across every replica at load time and the
+/// load-time options flow through PrepareOptions (panelized vs fused
+/// low-memory bind both serve identical logits).
+#[test]
+fn core_budget_and_low_memory_options() {
+    let (dir, q2, q4) = two_tier_fixture("budget", "cnn_small");
+    let image_len = 8 * 8 * 3;
+    let registry = ModelRegistry::with_core_budget(BackendSpec::native(&dir), 8);
+    assert_eq!(registry.core_budget(), 8);
+    registry
+        .load(&q2, &VariantOptions { replicas: 2, ..VariantOptions::default() })
+        .unwrap();
+    registry
+        .load(
+            &q4,
+            &VariantOptions {
+                replicas: 2,
+                low_memory: Some(true), // fused weights for this tier only
+                ..VariantOptions::default()
+            },
+        )
+        .unwrap();
+    let lo = registry.session(&q2).unwrap().infer(image(3, image_len)).unwrap();
+    let hi = registry.session(&q4).unwrap().infer(image(3, image_len)).unwrap();
+    assert_eq!(lo.logits.len(), 6);
+    assert_eq!(hi.logits.len(), 6);
+
+    // Fused and panelized binds are bitwise-identical datapaths: serve the
+    // same variant twice (fresh registry), once per mode, same input.
+    registry.shutdown();
+    for low_memory in [Some(false), Some(true)] {
+        let r = ModelRegistry::open(BackendSpec::native(&dir));
+        r.load(&q2, &VariantOptions { low_memory, ..VariantOptions::default() }).unwrap();
+        let rep = r.session(&q2).unwrap().infer(image(3, image_len)).unwrap();
+        assert_eq!(rep.logits, lo.logits, "low_memory={low_memory:?}");
+        r.shutdown();
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
