@@ -31,6 +31,13 @@ echo "   per-variant stats must sum to the request count, hot unload must"
 echo "   answer every accepted request, QueueFull must surface at depth) =="
 cargo test --release -q --test registry
 
+echo "== net serve (the TCP wire protocol over loopback, ephemeral ports:"
+echo "   bitwise logits parity across a real socket, structured queue_full/"
+echo "   unknown_model wire errors, drain_and_unload under in-flight network"
+echo "   load, malformed-frame/garbage robustness. Wrapped in 'timeout' so a"
+echo "   wedged listener or reader fails CI fast instead of hanging it) =="
+timeout 300 cargo test --release -q --test net
+
 echo "== kernel dispatch parity (re-run the same suite with the portable"
 echo "   scalar SIMD path pinned: qgemm must stay bitwise, sgemm-family"
 echo "   within 1e-5 — so CI on any host exercises both dispatch sides) =="

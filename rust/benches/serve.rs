@@ -1,8 +1,10 @@
 //! Serving-path benchmarks on the native packed-weight backend:
 //! dynamic-batcher latency/throughput under closed-loop load with multiple
 //! engine replicas, per-variant latency through a two-precision
-//! [`ModelRegistry`], batching overhead vs direct engine execution, and
-//! the Figure-1 fused unpack-and-dot integer GEMM. Runs with zero
+//! [`ModelRegistry`], batching overhead vs direct engine execution, the
+//! TCP wire protocol over loopback (closed-loop `net_infer` rows plus an
+//! open-loop network load generator reporting p50/p99/p999 per variant),
+//! and the Figure-1 fused unpack-and-dot integer GEMM. Runs with zero
 //! Python/XLA setup (the synthetic fixture provides manifest + params);
 //! the XLA numbers live in `benches/runtime.rs` (`--features xla`).
 //!
@@ -13,13 +15,15 @@
 //! These are the EXPERIMENTS.md §Perf L3 serving rows.
 
 use std::path::Path;
-use std::time::Duration;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
 
 use lsqnet::data::SynthSpec;
 use lsqnet::quant::pack::quantize_and_pack;
 use lsqnet::runtime::kernels::{qgemm, Workspace};
 use lsqnet::runtime::native::fixture::{write_synthetic_family, FixtureSpec};
 use lsqnet::runtime::{Backend, BackendSpec, PrepareOptions};
+use lsqnet::serve::net::{NetClient, NetServer};
 use lsqnet::serve::{ModelRegistry, ServeStats, VariantOptions};
 use lsqnet::util::bench::{black_box, Bench};
 use lsqnet::util::rng::Pcg32;
@@ -152,6 +156,81 @@ fn main() {
         (p50 - mean_exec).max(0.0),
         direct_ms
     );
+
+    // -- the TCP wire protocol over loopback ---------------------------------
+    // Closed-loop single-stream latency per variant (framing + JSON + TCP
+    // on top of the registry path), then an open-loop generator: a paced
+    // sender decoupled from a receiver, so arrival cadence never couples
+    // to response latency — the tail percentiles (p99/p999) are the whole
+    // point of measuring open-loop.
+    let registry = Arc::new(ModelRegistry::open(BackendSpec::native(&dir)));
+    registry.load(&fam_q2, &opts).unwrap();
+    registry.load(&fam_q4, &opts).unwrap();
+    let server = NetServer::start(Arc::clone(&registry), "127.0.0.1:0").unwrap();
+    let addr = server.local_addr();
+    for family in [&fam_q2, &fam_q4] {
+        let mut client = NetClient::connect(addr).unwrap();
+        client.infer(family, &spec.generate_alloc(0)).unwrap(); // warm
+        let mut i = 0usize;
+        let row = format!("net_infer_{family}_x{REPLICAS}");
+        let closed = b.bench(&row, || {
+            i += 1;
+            black_box(client.infer(family, &spec.generate_alloc(i)).unwrap());
+        });
+
+        // Offer load at ~80% of the measured single-stream capacity; the
+        // replicas have headroom, so the queue stays shallow and the tail
+        // reflects jitter, not saturation.
+        let interval = Duration::from_nanos((closed.mean_ns * 1.25) as u64);
+        let n_open = if fast { 96 } else { 384 };
+        let (mut tx, mut rx) = NetClient::connect(addr).unwrap().split().unwrap();
+        let (stamp_tx, stamp_rx) = std::sync::mpsc::channel::<Instant>();
+        let fam = (*family).clone();
+        let img = spec.generate_alloc(7);
+        let sender = std::thread::spawn(move || {
+            let start = Instant::now();
+            for j in 0..n_open {
+                let due = start + interval * j as u32;
+                let now = Instant::now();
+                if due > now {
+                    std::thread::sleep(due - now);
+                }
+                stamp_tx.send(Instant::now()).unwrap();
+                if tx.send_infer(&fam, &img).is_err() {
+                    break;
+                }
+            }
+            tx.finish();
+        });
+        // FIFO pairing: response j belongs to send stamp j (one model per
+        // connection, responses in request order). Error responses still
+        // consume their stamp so the pairing never skews.
+        let mut lat_ns: Vec<f64> = Vec::with_capacity(n_open);
+        for _ in 0..n_open {
+            let resp = match rx.recv() {
+                Ok(r) => r,
+                Err(_) => break,
+            };
+            let sent = match stamp_rx.recv() {
+                Ok(s) => s,
+                Err(_) => break,
+            };
+            if resp.body.is_ok() {
+                lat_ns.push(sent.elapsed().as_nanos() as f64);
+            }
+        }
+        sender.join().unwrap();
+        let open_row = format!("net_open_loop_{family}_x{REPLICAS}");
+        b.record_ns(&open_row, &lat_ns, 1.0);
+        b.annotate(&open_row, "p99_ms", percentile(&lat_ns, 99.0) / 1e6);
+        b.annotate(&open_row, "p999_ms", percentile(&lat_ns, 99.9) / 1e6);
+        b.annotate(&open_row, "offered_rps", 1e9 / interval.as_nanos().max(1) as f64);
+        b.annotate(&open_row, "answered", lat_ns.len() as f64);
+    }
+    server.stop();
+    if let Ok(r) = Arc::try_unwrap(registry) {
+        r.shutdown();
+    }
 
     // -- Figure-1 int matmul: the fused unpack-and-dot kernel ----------------
     // Single-thread rows (the historical L1 baseline); the threaded scaling

@@ -30,6 +30,8 @@
 //! [`serve::ModelRegistry`] for the multi-model dynamic-batching gateway
 //! (named per-precision [`serve::Session`]s, hot load/unload;
 //! [`serve::Server`] remains as the one-variant shim),
+//! [`serve::net::NetServer`]/[`serve::net::NetClient`] for the TCP wire
+//! protocol over that gateway (`lsqnet serve --listen`),
 //! [`train::NativeTrainer`], and (with `xla`) `runtime::Engine` +
 //! `train::Trainer`. See README.md for the command-line quickstart and
 //! EXPERIMENTS.md for the perf ladder the benches report against.

@@ -59,6 +59,10 @@ COMMANDS
                             the core budget across all replicas)]
                            [--fused-unpack (low-memory weights: unpack per
                             call instead of panelizing once at bind)]
+                           [--listen ADDR (e.g. 127.0.0.1:7878; expose the
+                            registry over the TCP wire protocol — DESIGN.md
+                            §Wire-protocol. Smoke traffic then runs over
+                            real sockets; --requests 0 serves until killed)]
   pack                     --checkpoint runs/x/final.ckpt
   help                     this message
 
@@ -511,6 +515,9 @@ fn serve(args: &Args) -> Result<()> {
     for family in &families {
         registry.load(family, &opts)?;
     }
+    if let Some(listen) = args.opt_str("listen") {
+        return serve_net(registry, &families, &listen, n);
+    }
     println!(
         "serving {} variant(s) [{}] on {} x{replicas} each (core budget {}); \
          firing {n} requests round-robin from 4 client threads…",
@@ -553,6 +560,89 @@ fn serve(args: &Args) -> Result<()> {
     let p95 = lsqnet::util::stats::percentile(&lat, 95.0);
     println!(
         "served {} reqs in {wall:.2}s ({:.1} req/s) | p50 {p50:.1} ms  p95 {p95:.1} ms",
+        lat.len(),
+        lat.len() as f64 / wall,
+    );
+    for (name, stats) in &all_stats {
+        println!(
+            "  {name:<22} {:>6} reqs  {:>5} batches  occupancy {:.2}  \
+             exec {:.2} ms/batch  queue {:.2} ms/req  padding {} rows",
+            stats.requests,
+            stats.batches,
+            stats.mean_occupancy(),
+            stats.mean_exec_ms(),
+            stats.mean_queue_ms(),
+            stats.padding_rows,
+        );
+    }
+    Ok(())
+}
+
+/// `lsqnet serve --listen`: put the registry behind a [`NetServer`] and
+/// either serve until killed (`--requests 0`) or fire the smoke load over
+/// real loopback sockets — same round-robin shape as the in-process path,
+/// but every request crosses the wire protocol, so the printed latencies
+/// include framing + JSON + TCP.
+fn serve_net(
+    registry: lsqnet::serve::ModelRegistry,
+    families: &[String],
+    listen: &str,
+    n: usize,
+) -> Result<()> {
+    use lsqnet::serve::net::{NetClient, NetServer};
+    use std::sync::Arc;
+    let registry = Arc::new(registry);
+    let server = NetServer::start(Arc::clone(&registry), listen)?;
+    let addr = server.local_addr();
+    println!(
+        "listening on {addr} — {} variant(s) [{}] over the wire protocol",
+        families.len(),
+        families.join(", ")
+    );
+    if n == 0 {
+        println!("serving until killed (ctrl-c)…");
+        loop {
+            std::thread::park();
+        }
+    }
+    let spec = lsqnet::data::SynthSpec::new(10, 0.35, 1);
+    let t0 = std::time::Instant::now();
+    let mut lat: Vec<f64> = Vec::new();
+    std::thread::scope(|s| {
+        let mut handles = Vec::new();
+        for t in 0..4usize {
+            let spec = &spec;
+            handles.push(s.spawn(move || -> Result<Vec<f64>> {
+                let mut client = NetClient::connect(addr)?;
+                let mut l = Vec::new();
+                for i in 0..n / 4 {
+                    let img = spec.generate_alloc(t * 10_000 + i);
+                    let s = std::time::Instant::now();
+                    // Round-robin across the named variants.
+                    if client.infer(&families[i % families.len()], &img).is_ok() {
+                        l.push(s.elapsed().as_secs_f64() * 1e3);
+                    }
+                }
+                Ok(l)
+            }));
+        }
+        for h in handles {
+            if let Ok(l) = h.join().unwrap() {
+                lat.extend(l);
+            }
+        }
+    });
+    let wall = t0.elapsed().as_secs_f64();
+    server.stop();
+    let all_stats = match Arc::try_unwrap(registry) {
+        Ok(r) => r.shutdown(),
+        Err(_) => Default::default(), // a straggler still holds the Arc
+    };
+    let p50 = lsqnet::util::stats::percentile(&lat, 50.0);
+    let p95 = lsqnet::util::stats::percentile(&lat, 95.0);
+    println!(
+        "served {} reqs over TCP in {wall:.2}s ({:.1} req/s) | client p50 {p50:.2} ms  \
+         p95 {p95:.2} ms (incl. network + framing)",
         lat.len(),
         lat.len() as f64 / wall,
     );

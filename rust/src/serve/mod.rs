@@ -32,7 +32,13 @@
 //! packed weights and scales across cores on two axes: replicas (inter-op)
 //! and the kernel layer's row-block threading (intra-op), partitioned so
 //! the two never oversubscribe (DESIGN.md §Serving-API).
+//!
+//! [`net`] exposes all of this over TCP: length-delimited JSON frames,
+//! every [`ServeError`] variant mapped to a structured wire error, and
+//! connection drain composed with `drain_and_unload` (DESIGN.md
+//! §Wire-protocol).
 
+pub mod net;
 pub mod registry;
 
 use std::sync::mpsc::{Receiver, SyncSender};

@@ -1,0 +1,224 @@
+//! A small blocking client for the wire protocol — what the e2e tests,
+//! the benches' load generator, and `lsqnet serve --listen` smoke traffic
+//! use. One [`NetClient`] wraps one connection; it is not `Sync` — use
+//! one per thread, or [`NetClient::split`] the connection into a send
+//! half and a receive half for open-loop (pipelined) traffic where the
+//! sender must never block on the receiver.
+
+use std::io::{self, Read};
+use std::net::{Shutdown, TcpStream, ToSocketAddrs};
+
+use super::frame::{self, FrameRead, MAX_FRAME_LEN};
+use super::wire::{NetRequest, NetResponse, RespBody, WireError};
+use crate::serve::Reply;
+use crate::util::json::Json;
+
+/// Everything a client call can fail with.
+#[derive(Debug)]
+pub enum NetClientError {
+    /// The socket failed (connect, reset, broken pipe).
+    Io(io::Error),
+    /// The server broke the protocol: unparseable frame, mismatched id,
+    /// wrong body for the op, or closed mid-frame.
+    Protocol(String),
+    /// The server answered with a structured wire error — the remote
+    /// image of [`crate::serve::ServeError`], e.g. `QueueFull`
+    /// backpressure or `UnknownModel`.
+    Wire(WireError),
+}
+
+impl std::fmt::Display for NetClientError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            NetClientError::Io(e) => write!(f, "i/o: {e}"),
+            NetClientError::Protocol(msg) => write!(f, "protocol: {msg}"),
+            NetClientError::Wire(e) => write!(f, "server: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for NetClientError {}
+
+impl From<io::Error> for NetClientError {
+    fn from(e: io::Error) -> NetClientError {
+        NetClientError::Io(e)
+    }
+}
+
+/// One blocking connection to a [`super::NetServer`].
+pub struct NetClient {
+    stream: TcpStream,
+    buf: Vec<u8>,
+    next_id: u64,
+}
+
+impl NetClient {
+    /// Connect to a serving endpoint.
+    pub fn connect(addr: impl ToSocketAddrs) -> io::Result<NetClient> {
+        let stream = TcpStream::connect(addr)?;
+        stream.set_nodelay(true)?;
+        Ok(NetClient { stream, buf: Vec::new(), next_id: 0 })
+    }
+
+    fn fresh_id(&mut self) -> u64 {
+        let id = self.next_id;
+        self.next_id += 1;
+        id
+    }
+
+    /// Send one request frame without waiting for the response; returns
+    /// the id to pair the eventual response with. This is the pipelining
+    /// primitive — the saturation test floods a queue with it.
+    pub fn send(&mut self, req: &NetRequest) -> Result<(), NetClientError> {
+        let payload = req.to_json().to_string();
+        frame::write_frame(&mut self.stream, payload.as_bytes())?;
+        Ok(())
+    }
+
+    /// Send an infer request (pipelined); returns its id.
+    pub fn send_infer(&mut self, model: &str, image: &[f32]) -> Result<u64, NetClientError> {
+        let id = self.fresh_id();
+        self.send(&NetRequest::Infer { id, model: model.to_string(), image: image.to_vec() })?;
+        Ok(id)
+    }
+
+    /// Block for the next response frame. Responses to one connection
+    /// arrive in request order.
+    pub fn recv(&mut self) -> Result<NetResponse, NetClientError> {
+        recv_on(&mut self.stream, &mut self.buf)
+    }
+
+    /// Blocking single-image inference: the remote analogue of
+    /// [`crate::serve::registry::Session::infer`], returning the same
+    /// [`Reply`] shape (its timings are the server's; network time is the
+    /// caller's to measure).
+    pub fn infer(&mut self, model: &str, image: &[f32]) -> Result<Reply, NetClientError> {
+        let id = self.send_infer(model, image)?;
+        let resp = self.recv()?;
+        expect_id(&resp, id)?;
+        match resp.body {
+            Ok(RespBody::Infer { logits, argmax, queue_ms, total_ms }) => {
+                Ok(Reply { logits, argmax, queue_ms, total_ms })
+            }
+            Ok(other) => Err(NetClientError::Protocol(format!(
+                "expected infer body, got {other:?}"
+            ))),
+            Err(e) => Err(NetClientError::Wire(e)),
+        }
+    }
+
+    /// List the variants loaded on the server.
+    pub fn models(&mut self) -> Result<Vec<String>, NetClientError> {
+        let id = self.fresh_id();
+        self.send(&NetRequest::Models { id })?;
+        let resp = self.recv()?;
+        expect_id(&resp, id)?;
+        match resp.body {
+            Ok(RespBody::Models { models }) => Ok(models),
+            Ok(other) => Err(NetClientError::Protocol(format!(
+                "expected models body, got {other:?}"
+            ))),
+            Err(e) => Err(NetClientError::Wire(e)),
+        }
+    }
+
+    /// Liveness round-trip.
+    pub fn ping(&mut self) -> Result<(), NetClientError> {
+        let id = self.fresh_id();
+        self.send(&NetRequest::Ping { id })?;
+        let resp = self.recv()?;
+        expect_id(&resp, id)?;
+        match resp.body {
+            Ok(RespBody::Pong) => Ok(()),
+            Ok(other) => Err(NetClientError::Protocol(format!("expected pong, got {other:?}"))),
+            Err(e) => Err(NetClientError::Wire(e)),
+        }
+    }
+
+    /// Split into an independent send half and receive half (two handles
+    /// on the same socket). The open-loop load generator sends on a paced
+    /// thread while another thread receives — arrival cadence must not
+    /// couple to response latency, or the measurement degenerates to
+    /// closed-loop.
+    pub fn split(self) -> io::Result<(NetSender, NetReceiver)> {
+        let rstream = self.stream.try_clone()?;
+        Ok((
+            NetSender { stream: self.stream, next_id: self.next_id },
+            NetReceiver { stream: rstream, buf: self.buf },
+        ))
+    }
+}
+
+/// The send half of a split [`NetClient`].
+pub struct NetSender {
+    stream: TcpStream,
+    next_id: u64,
+}
+
+impl NetSender {
+    /// Send an infer request; returns its id. Responses arrive on the
+    /// paired [`NetReceiver`] in send order.
+    pub fn send_infer(&mut self, model: &str, image: &[f32]) -> Result<u64, NetClientError> {
+        let id = self.next_id;
+        self.next_id += 1;
+        let req = NetRequest::Infer { id, model: model.to_string(), image: image.to_vec() };
+        let payload = req.to_json().to_string();
+        frame::write_frame(&mut self.stream, payload.as_bytes())?;
+        Ok(id)
+    }
+
+    /// Half-close the write side, telling the server no more requests are
+    /// coming; the receiver still drains every response.
+    pub fn finish(self) {
+        let _ = self.stream.shutdown(Shutdown::Write);
+    }
+}
+
+/// The receive half of a split [`NetClient`].
+pub struct NetReceiver {
+    stream: TcpStream,
+    buf: Vec<u8>,
+}
+
+impl NetReceiver {
+    /// Block for the next response frame.
+    pub fn recv(&mut self) -> Result<NetResponse, NetClientError> {
+        recv_on(&mut self.stream, &mut self.buf)
+    }
+}
+
+fn recv_on(stream: &mut impl Read, buf: &mut Vec<u8>) -> Result<NetResponse, NetClientError> {
+    match frame::read_frame(stream, buf, MAX_FRAME_LEN)? {
+        FrameRead::Frame => {}
+        FrameRead::Eof => {
+            return Err(NetClientError::Protocol("server closed the connection".to_string()))
+        }
+        FrameRead::Idle => {
+            // Client sockets have no read timeout, so Idle means someone
+            // set one; treat it like a stall.
+            return Err(NetClientError::Protocol("timed out waiting for a response".to_string()));
+        }
+        FrameRead::TooLarge { len } => {
+            return Err(NetClientError::Protocol(format!("server sent an oversized frame ({len} B)")))
+        }
+        FrameRead::Truncated => {
+            return Err(NetClientError::Protocol("server closed mid-frame".to_string()))
+        }
+    }
+    let text = std::str::from_utf8(buf)
+        .map_err(|_| NetClientError::Protocol("response frame is not UTF-8".to_string()))?;
+    let v = Json::parse(text)
+        .map_err(|e| NetClientError::Protocol(format!("response is not JSON: {e}")))?;
+    NetResponse::from_json(&v).map_err(NetClientError::Protocol)
+}
+
+fn expect_id(resp: &NetResponse, want: u64) -> Result<(), NetClientError> {
+    if resp.id.as_u64() == Some(want) {
+        Ok(())
+    } else {
+        Err(NetClientError::Protocol(format!(
+            "response id {:?} does not match request id {want}",
+            resp.id
+        )))
+    }
+}

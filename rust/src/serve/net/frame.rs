@@ -1,0 +1,202 @@
+//! Length-delimited framing for the wire protocol: a 4-byte big-endian
+//! payload length followed by that many bytes of UTF-8 JSON.
+//!
+//! The reader is written for a hostile network: an announced length over
+//! [`MAX_FRAME_LEN`] is rejected *before* any body byte is read (so an
+//! adversarial header cannot make the server allocate or block), EOF and
+//! stalls in the middle of a frame are distinguished from a clean close at
+//! a frame boundary, and frames split across arbitrarily many TCP segments
+//! (down to one byte per write) still assemble. Read-timeout errors on the
+//! stream surface as [`FrameRead::Idle`] only while waiting for a frame's
+//! first byte — that is the hook the server's connection loop uses to poll
+//! its stop flag without ever aborting a frame mid-assembly.
+
+use std::io::{self, Read, Write};
+use std::time::{Duration, Instant};
+
+/// Ceiling on one frame's payload bytes. A 32×32×3 image request is ~30 KB
+/// of JSON text; 4 MiB leaves two orders of magnitude of headroom while
+/// bounding what a hostile header can demand.
+pub const MAX_FRAME_LEN: usize = 4 << 20;
+
+/// How long a *started* frame may dribble in before the connection is
+/// declared wedged. Split writes are fine; indefinite mid-frame stalls are
+/// how a slow-loris client would otherwise pin a connection handler.
+pub const MID_FRAME_DEADLINE: Duration = Duration::from_secs(5);
+
+/// Outcome of one [`read_frame`] call.
+#[derive(Debug)]
+pub enum FrameRead {
+    /// A complete payload was read into the caller's buffer.
+    Frame,
+    /// Clean EOF at a frame boundary: the peer closed the connection.
+    Eof,
+    /// The stream's read timeout fired before the frame's first byte
+    /// arrived. The connection is idle — poll the stop flag and call
+    /// again.
+    Idle,
+    /// The 4-byte prefix announced `len` payload bytes, over the caller's
+    /// maximum. The body was not read; the connection cannot be re-synced
+    /// and must be closed after reporting the error.
+    TooLarge {
+        /// The announced payload length.
+        len: usize,
+    },
+    /// EOF or a [`MID_FRAME_DEADLINE`] stall in the middle of a frame.
+    Truncated,
+}
+
+/// Write one frame: 4-byte big-endian length prefix, then the payload,
+/// then flush.
+pub fn write_frame(w: &mut impl Write, payload: &[u8]) -> io::Result<()> {
+    w.write_all(&(payload.len() as u32).to_be_bytes())?;
+    w.write_all(payload)?;
+    w.flush()
+}
+
+/// Read one frame into `buf` (cleared and reused across calls, so a
+/// long-lived connection allocates only when frames grow). See
+/// [`FrameRead`] for the outcome contract; `Err` is reserved for hard I/O
+/// failures (reset, broken pipe).
+pub fn read_frame(r: &mut impl Read, buf: &mut Vec<u8>, max: usize) -> io::Result<FrameRead> {
+    let mut header = [0u8; 4];
+    match read_full(r, &mut header, true)? {
+        Progress::Done => {}
+        Progress::CleanEof => return Ok(FrameRead::Eof),
+        Progress::Idle => return Ok(FrameRead::Idle),
+        Progress::Truncated => return Ok(FrameRead::Truncated),
+    }
+    let len = u32::from_be_bytes(header) as usize;
+    if len > max {
+        return Ok(FrameRead::TooLarge { len });
+    }
+    buf.clear();
+    buf.resize(len, 0);
+    match read_full(r, buf, false)? {
+        Progress::Done => Ok(FrameRead::Frame),
+        _ => Ok(FrameRead::Truncated),
+    }
+}
+
+enum Progress {
+    Done,
+    CleanEof,
+    Idle,
+    Truncated,
+}
+
+/// Fill `out` completely. `fresh` marks a frame boundary: EOF or a read
+/// timeout before the first byte then mean a clean close / idle poll
+/// rather than a truncated frame. Once bytes are flowing, short timeouts
+/// retry until [`MID_FRAME_DEADLINE`] of no progress.
+fn read_full(r: &mut impl Read, out: &mut [u8], fresh: bool) -> io::Result<Progress> {
+    let mut got = 0usize;
+    let mut deadline: Option<Instant> = None;
+    while got < out.len() {
+        match r.read(&mut out[got..]) {
+            Ok(0) => {
+                return Ok(if fresh && got == 0 {
+                    Progress::CleanEof
+                } else {
+                    Progress::Truncated
+                });
+            }
+            Ok(n) => {
+                got += n;
+                deadline = None; // the peer is making progress
+            }
+            Err(e) if matches!(e.kind(), io::ErrorKind::WouldBlock | io::ErrorKind::TimedOut) => {
+                if fresh && got == 0 {
+                    return Ok(Progress::Idle);
+                }
+                let d = *deadline.get_or_insert_with(|| Instant::now() + MID_FRAME_DEADLINE);
+                if Instant::now() >= d {
+                    return Ok(Progress::Truncated);
+                }
+            }
+            Err(e) if e.kind() == io::ErrorKind::Interrupted => {}
+            Err(e) => return Err(e),
+        }
+    }
+    Ok(Progress::Done)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_through_a_buffer() {
+        let mut wire = Vec::new();
+        write_frame(&mut wire, b"{\"id\":1}").unwrap();
+        write_frame(&mut wire, b"").unwrap();
+        write_frame(&mut wire, b"second").unwrap();
+        let mut r: &[u8] = &wire;
+        let mut buf = Vec::new();
+        assert!(matches!(read_frame(&mut r, &mut buf, MAX_FRAME_LEN).unwrap(), FrameRead::Frame));
+        assert_eq!(buf, b"{\"id\":1}");
+        assert!(matches!(read_frame(&mut r, &mut buf, MAX_FRAME_LEN).unwrap(), FrameRead::Frame));
+        assert_eq!(buf, b"");
+        assert!(matches!(read_frame(&mut r, &mut buf, MAX_FRAME_LEN).unwrap(), FrameRead::Frame));
+        assert_eq!(buf, b"second");
+        // End of stream at a frame boundary is a clean close.
+        assert!(matches!(read_frame(&mut r, &mut buf, MAX_FRAME_LEN).unwrap(), FrameRead::Eof));
+    }
+
+    #[test]
+    fn oversized_header_is_rejected_without_reading_the_body() {
+        let mut wire = Vec::new();
+        wire.extend_from_slice(&(u32::MAX).to_be_bytes());
+        // No body at all: the header alone must trigger TooLarge.
+        let mut r: &[u8] = &wire;
+        let mut buf = Vec::new();
+        match read_frame(&mut r, &mut buf, MAX_FRAME_LEN).unwrap() {
+            FrameRead::TooLarge { len } => assert_eq!(len, u32::MAX as usize),
+            other => panic!("expected TooLarge, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn truncation_inside_header_and_body_is_not_a_clean_eof() {
+        // Two header bytes, then EOF.
+        let mut r: &[u8] = &[0, 0];
+        let mut buf = Vec::new();
+        assert!(matches!(
+            read_frame(&mut r, &mut buf, MAX_FRAME_LEN).unwrap(),
+            FrameRead::Truncated
+        ));
+        // Full header announcing 8 bytes, only 3 delivered.
+        let mut wire = Vec::new();
+        wire.extend_from_slice(&8u32.to_be_bytes());
+        wire.extend_from_slice(b"abc");
+        let mut r: &[u8] = &wire;
+        assert!(matches!(
+            read_frame(&mut r, &mut buf, MAX_FRAME_LEN).unwrap(),
+            FrameRead::Truncated
+        ));
+    }
+
+    /// A reader that hands out one byte per call: frames split across
+    /// arbitrarily small reads must still assemble.
+    struct OneByte<'a>(&'a [u8]);
+    impl Read for OneByte<'_> {
+        fn read(&mut self, out: &mut [u8]) -> io::Result<usize> {
+            if self.0.is_empty() || out.is_empty() {
+                return Ok(0);
+            }
+            out[0] = self.0[0];
+            self.0 = &self.0[1..];
+            Ok(1)
+        }
+    }
+
+    #[test]
+    fn frames_assemble_from_single_byte_reads() {
+        let mut wire = Vec::new();
+        write_frame(&mut wire, b"split across segments").unwrap();
+        let mut r = OneByte(&wire);
+        let mut buf = Vec::new();
+        assert!(matches!(read_frame(&mut r, &mut buf, MAX_FRAME_LEN).unwrap(), FrameRead::Frame));
+        assert_eq!(buf, b"split across segments");
+    }
+}

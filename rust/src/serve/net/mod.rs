@@ -1,0 +1,34 @@
+//! Network-facing serving: a TCP wire protocol over the
+//! [`ModelRegistry`](crate::serve::registry::ModelRegistry).
+//!
+//! PR 5's gateway — many precision variants of one architecture, per-
+//! variant queues and replicas, typed backpressure — was in-process only.
+//! This module puts a socket in front of it with zero new dependencies
+//! (`std::net` + the repo's own [`crate::util::json`]):
+//!
+//!  * [`frame`] — length-delimited framing (4-byte big-endian length +
+//!    UTF-8 JSON payload), hardened against truncation, split writes and
+//!    hostile lengths;
+//!  * [`wire`] — the request/response JSON vocabulary and the total
+//!    mapping from [`crate::serve::ServeError`] onto structured wire
+//!    errors, so a remote client sees `queue_full{depth}` backpressure
+//!    and `closed` drains instead of dropped connections;
+//!  * [`server`] — [`NetServer`]: accept loop, per-connection
+//!    reader/writer pair, graceful drain composed with
+//!    `drain_and_unload` (an accepted request is answered exactly once,
+//!    socket included);
+//!  * [`client`] — [`NetClient`]: the blocking client used by tests,
+//!    benches and the CLI, splittable into send/receive halves for
+//!    open-loop load generation.
+//!
+//! The protocol and its guarantees are specified in DESIGN.md
+//! §Wire-protocol; `lsqnet serve --listen <addr>` is the entry point.
+
+pub mod client;
+pub mod frame;
+pub mod server;
+pub mod wire;
+
+pub use client::{NetClient, NetClientError, NetReceiver, NetSender};
+pub use server::NetServer;
+pub use wire::{NetRequest, NetResponse, RespBody, WireError};

@@ -1,0 +1,313 @@
+//! The TCP listener: accepts connections, multiplexes each one onto the
+//! [`ModelRegistry`]'s variant queues, and guarantees the drain contract
+//! over the network.
+//!
+//! Threading model, per [`NetServer`]:
+//!
+//!  * one **accept** thread (`lsq-net-accept`) blocks in
+//!    `TcpListener::incoming`. Stopping is a flag + a self-connect that
+//!    wakes the blocked accept; the accept thread then joins every live
+//!    connection before exiting, so [`NetServer::stop`] returns only after
+//!    the last in-flight request has been answered;
+//!  * per connection, a **reader** thread (`lsq-net-conn-{n}`) assembles
+//!    frames (25 ms read timeout so it can poll the stop flag between
+//!    frames without ever aborting one mid-assembly), parses and submits
+//!    requests, and forwards one [`WriteItem`] per request to
+//!  * a **writer** thread (`lsq-net-wr-{n}`) that resolves items in FIFO
+//!    order — responses come back in request order per connection, which
+//!    is what lets a pipelining client pair them without ids (ids are
+//!    still echoed for clients that interleave ops).
+//!
+//! Why a reader/writer split instead of one request-response loop: a
+//! submit hands back a reply *channel*; parking the connection on that
+//! channel would serialize the connection's requests through one replica
+//! batch at a time. The split keeps the reader pulling new frames while
+//! earlier requests are still queued or executing — a single connection
+//! can fill a variant's whole queue (that is what the saturation test
+//! does to provoke `queue_full` over the wire).
+//!
+//! Drain composition: the registry promises every *accepted* request is
+//! answered exactly once, drained variants included. The writer extends
+//! that promise to the wire — it drains every pending reply channel
+//! before exiting, and the reader always outlives its submits. A
+//! `drain_and_unload` under live network load therefore never strands an
+//! accepted request; new submits on that variant get the structured
+//! `closed`/`unknown_model` error instead. Per-connection sessions are
+//! cached and refreshed on next use when their intake closes, so a hot
+//! re-load of the same variant keeps existing connections working.
+
+use std::collections::BTreeMap;
+use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream, ToSocketAddrs};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{self, Receiver};
+use std::sync::Arc;
+use std::thread::{self, JoinHandle};
+use std::time::Duration;
+
+use anyhow::{Context, Result};
+
+use super::frame::{self, FrameRead};
+use super::wire::{NetRequest, NetResponse, RespBody, WireError};
+use crate::serve::registry::{ModelRegistry, Session};
+use crate::serve::{Reply, ServeError};
+use crate::util::json::Json;
+
+/// Read timeout on connection sockets: the cadence at which an idle
+/// reader polls the stop flag. Short enough that shutdown feels instant,
+/// long enough to stay off the profile.
+pub const IDLE_POLL: Duration = Duration::from_millis(25);
+
+/// Write timeout on connection sockets. A client that stops reading while
+/// responses pile up gets its connection declared dead after this long
+/// instead of pinning the writer thread forever.
+pub const WRITE_TIMEOUT: Duration = Duration::from_secs(10);
+
+/// A running TCP serving endpoint over a shared [`ModelRegistry`].
+///
+/// Dropping the server stops it gracefully (idempotent with an explicit
+/// [`NetServer::stop`]): no new connections, every accepted request
+/// answered, all threads joined.
+pub struct NetServer {
+    local_addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    accept: Option<JoinHandle<()>>,
+}
+
+impl NetServer {
+    /// Bind `addr` (port 0 for ephemeral) and start accepting. The
+    /// registry stays owned by the caller — load/drain variants under the
+    /// server's feet freely; that composition is the point.
+    pub fn start(registry: Arc<ModelRegistry>, addr: impl ToSocketAddrs) -> Result<NetServer> {
+        let listener = TcpListener::bind(addr).context("binding serve listener")?;
+        let local_addr = listener.local_addr().context("listener local_addr")?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let accept = {
+            let stop = Arc::clone(&stop);
+            thread::Builder::new()
+                .name("lsq-net-accept".into())
+                .spawn(move || accept_loop(listener, registry, stop))
+                .context("spawning accept thread")?
+        };
+        Ok(NetServer { local_addr, stop, accept: Some(accept) })
+    }
+
+    /// The bound address — tests bind port 0 and read the real port here.
+    pub fn local_addr(&self) -> SocketAddr {
+        self.local_addr
+    }
+
+    /// Graceful stop: refuse new connections, answer everything already
+    /// accepted, join every thread. Returns when the last connection is
+    /// done.
+    pub fn stop(mut self) {
+        self.shutdown();
+    }
+
+    fn shutdown(&mut self) {
+        if self.stop.swap(true, Ordering::SeqCst) {
+            return;
+        }
+        // Wake the blocked accept; the new connection observes the stop
+        // flag and is dropped immediately.
+        let _ = TcpStream::connect(self.local_addr);
+        if let Some(h) = self.accept.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for NetServer {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+fn accept_loop(listener: TcpListener, registry: Arc<ModelRegistry>, stop: Arc<AtomicBool>) {
+    let mut conns: Vec<JoinHandle<()>> = Vec::new();
+    let mut next_cid = 0u64;
+    for stream in listener.incoming() {
+        if stop.load(Ordering::SeqCst) {
+            break;
+        }
+        let stream = match stream {
+            Ok(s) => s,
+            Err(_) => continue, // transient accept error; keep listening
+        };
+        conns.retain(|h| !h.is_finished());
+        let cid = next_cid;
+        next_cid += 1;
+        let registry = Arc::clone(&registry);
+        let stop = Arc::clone(&stop);
+        let spawned = thread::Builder::new()
+            .name(format!("lsq-net-conn-{cid}"))
+            .spawn(move || handle_conn(stream, &registry, &stop, cid));
+        if let Ok(h) = spawned {
+            conns.push(h);
+        } // else: thread spawn failed — the dropped stream closes the peer
+    }
+    // Joining here is what makes NetServer::stop a *drain*: it returns
+    // only after every connection's writer has flushed its last reply.
+    for h in conns {
+        let _ = h.join();
+    }
+}
+
+/// What the reader hands the writer, one per request, in arrival order.
+enum WriteItem {
+    /// Already-resolved response (errors, ping, models).
+    Ready(NetResponse),
+    /// An accepted infer: the writer blocks on the reply channel. The
+    /// registry guarantees the channel is answered (or dropped only on
+    /// replica death), so FIFO resolution cannot wedge.
+    Pending {
+        id: u64,
+        rx: Receiver<Reply>,
+    },
+}
+
+fn handle_conn(mut stream: TcpStream, registry: &ModelRegistry, stop: &AtomicBool, cid: u64) {
+    let _ = stream.set_nodelay(true);
+    if stream.set_read_timeout(Some(IDLE_POLL)).is_err() {
+        return;
+    }
+    let wstream = match stream.try_clone() {
+        Ok(s) => s,
+        Err(_) => return,
+    };
+    let _ = wstream.set_write_timeout(Some(WRITE_TIMEOUT));
+    let (tx, witems) = mpsc::channel::<WriteItem>();
+    let writer = match thread::Builder::new()
+        .name(format!("lsq-net-wr-{cid}"))
+        .spawn(move || writer_loop(wstream, witems))
+    {
+        Ok(h) => h,
+        Err(_) => return,
+    };
+
+    let mut buf = Vec::new();
+    let mut sessions: BTreeMap<String, Session> = BTreeMap::new();
+    loop {
+        // Checked every frame, not just on idle: a continuously-streaming
+        // client must not be able to starve shutdown.
+        if stop.load(Ordering::SeqCst) {
+            break;
+        }
+        match frame::read_frame(&mut stream, &mut buf, frame::MAX_FRAME_LEN) {
+            Ok(FrameRead::Idle) => continue,
+            Ok(FrameRead::Frame) => {}
+            Ok(FrameRead::TooLarge { len }) => {
+                // The unread oversized body cannot be re-synced past:
+                // report, then close.
+                let _ = tx.send(WriteItem::Ready(NetResponse {
+                    id: Json::Null,
+                    body: Err(WireError::FrameTooLarge { len, max: frame::MAX_FRAME_LEN }),
+                }));
+                break;
+            }
+            // Clean close, mid-frame truncation/stall, or hard I/O error:
+            // nothing sensible to answer — drain what was accepted and go.
+            Ok(FrameRead::Eof) | Ok(FrameRead::Truncated) | Err(_) => break,
+        }
+        let item = handle_frame(&buf, registry, &mut sessions);
+        if tx.send(item).is_err() {
+            break;
+        }
+    }
+    // Dropping the sender lets the writer finish its queue and exit;
+    // joining it keeps the accepted-implies-answered promise.
+    drop(tx);
+    let _ = writer.join();
+}
+
+/// Parse one frame payload and either resolve it on the spot or submit it
+/// and return the pending reply. Never panics: every malformed input path
+/// resolves to a `bad_request` wire error.
+fn handle_frame(
+    payload: &[u8],
+    registry: &ModelRegistry,
+    sessions: &mut BTreeMap<String, Session>,
+) -> WriteItem {
+    let bad = |id: Json, msg: String| {
+        WriteItem::Ready(NetResponse { id, body: Err(WireError::BadRequest { msg }) })
+    };
+    let text = match std::str::from_utf8(payload) {
+        Ok(t) => t,
+        Err(_) => return bad(Json::Null, "frame payload is not UTF-8".to_string()),
+    };
+    let v = match Json::parse(text) {
+        Ok(v) => v,
+        Err(e) => return bad(Json::Null, e.to_string()),
+    };
+    let (id_echo, parsed) = NetRequest::from_json(&v);
+    let req = match parsed {
+        Ok(r) => r,
+        Err(msg) => return bad(id_echo, msg),
+    };
+    match req {
+        NetRequest::Ping { id } => WriteItem::Ready(NetResponse::ok(id, RespBody::Pong)),
+        NetRequest::Models { id } => {
+            WriteItem::Ready(NetResponse::ok(id, RespBody::Models { models: registry.variants() }))
+        }
+        NetRequest::Infer { id, model, image } => {
+            match submit(registry, sessions, &model, image) {
+                Ok(rx) => WriteItem::Pending { id, rx },
+                Err(e) => WriteItem::Ready(NetResponse::fail(id, WireError::from(e))),
+            }
+        }
+    }
+}
+
+/// Submit through the connection's session cache. A cached session whose
+/// intake has closed (the variant was drained) is refreshed from the
+/// registry before submitting, so a drain + hot re-load of the same
+/// variant is invisible to long-lived connections — no image clone on the
+/// hot path, the staleness check is one `RwLock` read.
+fn submit(
+    registry: &ModelRegistry,
+    sessions: &mut BTreeMap<String, Session>,
+    model: &str,
+    image: Vec<f32>,
+) -> Result<Receiver<Reply>, ServeError> {
+    let stale = sessions.get(model).map_or(true, |s| !s.is_open());
+    if stale {
+        sessions.remove(model);
+        let fresh = registry.session(model)?; // UnknownModel if not loaded
+        sessions.insert(model.to_string(), fresh);
+    }
+    sessions.get(model).expect("session was just inserted").submit(image)
+}
+
+fn writer_loop(mut stream: TcpStream, items: Receiver<WriteItem>) {
+    // Once a write fails (peer gone, or WRITE_TIMEOUT against a client
+    // that stopped reading) the connection is dead — but the loop keeps
+    // *consuming* items so every pending reply channel is still drained
+    // and no replica-side accounting is left dangling.
+    let mut dead = false;
+    for item in items {
+        let resp = match item {
+            WriteItem::Ready(r) => r,
+            WriteItem::Pending { id, rx } => match rx.recv() {
+                Ok(reply) => NetResponse::ok(
+                    id,
+                    RespBody::Infer {
+                        logits: reply.logits,
+                        argmax: reply.argmax,
+                        queue_ms: reply.queue_ms,
+                        total_ms: reply.total_ms,
+                    },
+                ),
+                // The registry answers accepted requests; a dropped reply
+                // channel means the replica set died out from under us.
+                Err(_) => NetResponse::fail(id, WireError::ShutDown),
+            },
+        };
+        if dead {
+            continue;
+        }
+        let payload = resp.to_json().to_string();
+        if frame::write_frame(&mut stream, payload.as_bytes()).is_err() {
+            dead = true;
+        }
+    }
+    let _ = stream.shutdown(Shutdown::Write);
+}

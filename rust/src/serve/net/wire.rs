@@ -1,0 +1,516 @@
+//! Wire-level request/response vocabulary: the JSON payloads inside
+//! [`super::frame`] frames, and the mapping from the in-process
+//! [`ServeError`] surface onto structured wire errors.
+//!
+//! Requests (`op` defaults to `"infer"` when absent):
+//!
+//! ```text
+//! {"id": 7, "op": "infer", "model": "cnn_small_q2", "image": [0.1, …]}
+//! {"id": 8, "op": "models"}
+//! {"id": 9, "op": "ping"}
+//! ```
+//!
+//! Responses echo the request `id` (JSON `null` when the request was too
+//! malformed to carry one) and are either `"ok": true` with an op-specific
+//! body, or `"ok": false` with a structured error object:
+//!
+//! ```text
+//! {"id": 7, "ok": true, "logits": [...], "argmax": 2,
+//!  "queue_ms": 0.12, "total_ms": 0.80}
+//! {"id": 7, "ok": false,
+//!  "error": {"kind": "queue_full", "depth": 256, "msg": "…"}}
+//! ```
+//!
+//! Every [`ServeError`] variant has a wire `kind` (see [`WireError`] and
+//! the table in DESIGN.md §Wire-protocol), so a remote open-loop client
+//! sees `queue_full` backpressure and `closed` drains instead of dropped
+//! connections — the paper's several-precisions-one-architecture serving
+//! story (PAPER.md Figure 3) holds up across a socket.
+
+use std::fmt;
+
+use crate::serve::ServeError;
+use crate::util::json::Json;
+
+/// A parsed client request.
+#[derive(Clone, Debug, PartialEq)]
+pub enum NetRequest {
+    /// Run one image through `model` and return its logits.
+    Infer {
+        /// Client-chosen id echoed on the response.
+        id: u64,
+        /// Registry variant name, e.g. `"cnn_small_q2"`.
+        model: String,
+        /// Flattened NHWC image (`image × image × channels` floats).
+        image: Vec<f32>,
+    },
+    /// List the registry's loaded variant names.
+    Models {
+        /// Client-chosen id echoed on the response.
+        id: u64,
+    },
+    /// Liveness probe.
+    Ping {
+        /// Client-chosen id echoed on the response.
+        id: u64,
+    },
+}
+
+/// The `"ok": true` body of a [`NetResponse`].
+#[derive(Clone, Debug, PartialEq)]
+pub enum RespBody {
+    /// Answer to [`NetRequest::Infer`].
+    Infer {
+        /// Raw logits, one per class. f32 → JSON → f32 is exact (f64
+        /// shortest-representation round-trip), so remote logits stay
+        /// bitwise-identical to the engine's.
+        logits: Vec<f32>,
+        /// Index of the winning class.
+        argmax: usize,
+        /// Server-side queue+batching time (submit → execution start).
+        queue_ms: f64,
+        /// Server-side latency (accept → reply), excluding the network.
+        total_ms: f64,
+    },
+    /// Answer to [`NetRequest::Models`].
+    Models {
+        /// Loaded variant names.
+        models: Vec<String>,
+    },
+    /// Answer to [`NetRequest::Ping`].
+    Pong,
+}
+
+/// Structured wire errors: the remote image of [`ServeError`] plus the
+/// protocol-level failures only a socket can produce.
+#[derive(Clone, Debug, PartialEq)]
+pub enum WireError {
+    /// The variant's queue is at its configured bound — backpressure;
+    /// retry, shed, or route to another precision tier.
+    QueueFull {
+        /// The queue bound that was hit.
+        depth: usize,
+    },
+    /// No variant with this name is loaded.
+    UnknownModel {
+        /// The name the request asked for.
+        model: String,
+    },
+    /// The variant's intake closed mid-request (it is being drained).
+    Closed,
+    /// The serving side went away (replicas exited).
+    ShutDown,
+    /// Image float count does not match the variant's geometry.
+    BadImage {
+        /// Floats submitted.
+        got: usize,
+        /// Floats the variant needs.
+        want: usize,
+    },
+    /// The frame was not a well-formed request (bad UTF-8, malformed
+    /// JSON, missing/mistyped fields, unknown op). The connection stays
+    /// usable — framing is intact.
+    BadRequest {
+        /// What was wrong, for the client's logs.
+        msg: String,
+    },
+    /// The frame header announced a payload over the server's limit. Sent
+    /// as the final response before the server closes the connection
+    /// (an unread oversized body cannot be re-synced past).
+    FrameTooLarge {
+        /// Announced payload length.
+        len: usize,
+        /// The server's configured ceiling.
+        max: usize,
+    },
+}
+
+impl From<ServeError> for WireError {
+    fn from(e: ServeError) -> WireError {
+        match e {
+            ServeError::QueueFull { depth } => WireError::QueueFull { depth },
+            ServeError::UnknownModel(model) => WireError::UnknownModel { model },
+            ServeError::Closed => WireError::Closed,
+            ServeError::ShutDown => WireError::ShutDown,
+            ServeError::BadImage { got, want } => WireError::BadImage { got, want },
+        }
+    }
+}
+
+impl WireError {
+    /// The stable `kind` string used on the wire.
+    pub fn kind(&self) -> &'static str {
+        match self {
+            WireError::QueueFull { .. } => "queue_full",
+            WireError::UnknownModel { .. } => "unknown_model",
+            WireError::Closed => "closed",
+            WireError::ShutDown => "shut_down",
+            WireError::BadImage { .. } => "bad_image",
+            WireError::BadRequest { .. } => "bad_request",
+            WireError::FrameTooLarge { .. } => "frame_too_large",
+        }
+    }
+
+    /// The `"error"` object of an error response.
+    pub fn to_json(&self) -> Json {
+        let mut fields = vec![("kind", Json::str(self.kind()))];
+        match self {
+            WireError::QueueFull { depth } => {
+                fields.push(("depth", Json::num(*depth as f64)));
+            }
+            WireError::UnknownModel { model } => {
+                fields.push(("model", Json::str(model.clone())));
+            }
+            WireError::BadImage { got, want } => {
+                fields.push(("got", Json::num(*got as f64)));
+                fields.push(("want", Json::num(*want as f64)));
+            }
+            WireError::FrameTooLarge { len, max } => {
+                fields.push(("len", Json::num(*len as f64)));
+                fields.push(("max", Json::num(*max as f64)));
+            }
+            WireError::BadRequest { msg } => {
+                // The raw reason gets its own field: "msg" below is the
+                // human Display text ("bad request: …"), and parsing it
+                // back would not be an identity.
+                fields.push(("reason", Json::str(msg.clone())));
+            }
+            WireError::Closed | WireError::ShutDown => {}
+        }
+        fields.push(("msg", Json::str(self.to_string())));
+        Json::obj(fields)
+    }
+
+    /// Parse an `"error"` object back into the typed error.
+    pub fn from_json(v: &Json) -> Result<WireError, String> {
+        let kind = v
+            .get("kind")
+            .and_then(Json::as_str)
+            .ok_or_else(|| "error object missing \"kind\"".to_string())?;
+        let us = |key: &str| {
+            v.get(key)
+                .and_then(Json::as_u64)
+                .map(|n| n as usize)
+                .ok_or_else(|| format!("error object missing numeric {key:?}"))
+        };
+        match kind {
+            "queue_full" => Ok(WireError::QueueFull { depth: us("depth")? }),
+            "unknown_model" => Ok(WireError::UnknownModel {
+                model: v
+                    .get("model")
+                    .and_then(Json::as_str)
+                    .unwrap_or_default()
+                    .to_string(),
+            }),
+            "closed" => Ok(WireError::Closed),
+            "shut_down" => Ok(WireError::ShutDown),
+            "bad_image" => Ok(WireError::BadImage { got: us("got")?, want: us("want")? }),
+            "bad_request" => Ok(WireError::BadRequest {
+                msg: v.get("reason").and_then(Json::as_str).unwrap_or_default().to_string(),
+            }),
+            "frame_too_large" => Ok(WireError::FrameTooLarge { len: us("len")?, max: us("max")? }),
+            other => Err(format!("unknown error kind {other:?}")),
+        }
+    }
+}
+
+impl fmt::Display for WireError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            WireError::QueueFull { depth } => {
+                write!(f, "request queue full (depth {depth}): backpressure, retry later")
+            }
+            WireError::UnknownModel { model } => write!(f, "unknown model variant {model:?}"),
+            WireError::Closed => write!(f, "variant intake closed (draining)"),
+            WireError::ShutDown => write!(f, "server shut down"),
+            WireError::BadImage { got, want } => {
+                write!(f, "image must have {want} floats, got {got}")
+            }
+            WireError::BadRequest { msg } => write!(f, "bad request: {msg}"),
+            WireError::FrameTooLarge { len, max } => {
+                write!(f, "frame payload {len} B exceeds the {max} B limit")
+            }
+        }
+    }
+}
+
+impl std::error::Error for WireError {}
+
+impl NetRequest {
+    /// The request's client-chosen id.
+    pub fn id(&self) -> u64 {
+        match self {
+            NetRequest::Infer { id, .. } | NetRequest::Models { id } | NetRequest::Ping { id } => {
+                *id
+            }
+        }
+    }
+
+    /// Serialize to the frame payload JSON.
+    pub fn to_json(&self) -> Json {
+        match self {
+            NetRequest::Infer { id, model, image } => Json::obj(vec![
+                ("id", Json::num(*id as f64)),
+                ("op", Json::str("infer")),
+                ("model", Json::str(model.clone())),
+                ("image", Json::arr_f32(image)),
+            ]),
+            NetRequest::Models { id } => {
+                Json::obj(vec![("id", Json::num(*id as f64)), ("op", Json::str("models"))])
+            }
+            NetRequest::Ping { id } => {
+                Json::obj(vec![("id", Json::num(*id as f64)), ("op", Json::str("ping"))])
+            }
+        }
+    }
+
+    /// Parse a frame payload. Returns the echoable id (JSON `null` when
+    /// absent/mistyped) alongside the strict parse result, so the server
+    /// can address its `bad_request` response even for broken requests.
+    pub fn from_json(v: &Json) -> (Json, Result<NetRequest, String>) {
+        let id_echo = v.get("id").cloned().unwrap_or(Json::Null);
+        let parsed = (|| {
+            let id = v
+                .get("id")
+                .and_then(Json::as_u64)
+                .ok_or_else(|| "missing or non-integer \"id\"".to_string())?;
+            let op = match v.get("op") {
+                None => "infer",
+                Some(o) => o.as_str().ok_or_else(|| "\"op\" must be a string".to_string())?,
+            };
+            match op {
+                "infer" => {
+                    let model = v
+                        .get("model")
+                        .and_then(Json::as_str)
+                        .ok_or_else(|| "missing string \"model\"".to_string())?
+                        .to_string();
+                    let arr = v
+                        .get("image")
+                        .and_then(Json::as_arr)
+                        .ok_or_else(|| "missing array \"image\"".to_string())?;
+                    let mut image = Vec::with_capacity(arr.len());
+                    for (i, e) in arr.iter().enumerate() {
+                        let x = e
+                            .as_f64()
+                            .ok_or_else(|| format!("\"image\"[{i}] is not a number"))?;
+                        image.push(x as f32);
+                    }
+                    Ok(NetRequest::Infer { id, model, image })
+                }
+                "models" => Ok(NetRequest::Models { id }),
+                "ping" => Ok(NetRequest::Ping { id }),
+                other => Err(format!("unknown op {other:?}")),
+            }
+        })();
+        (id_echo, parsed)
+    }
+}
+
+/// One response frame: the echoed request id plus either an op body or a
+/// structured error.
+#[derive(Clone, Debug, PartialEq)]
+pub struct NetResponse {
+    /// The request's `id`, echoed verbatim (JSON `null` when the request
+    /// was too malformed to carry one).
+    pub id: Json,
+    /// Success body or structured wire error.
+    pub body: Result<RespBody, WireError>,
+}
+
+impl NetResponse {
+    /// A success response addressed to request `id`.
+    pub fn ok(id: u64, body: RespBody) -> NetResponse {
+        NetResponse { id: Json::num(id as f64), body: Ok(body) }
+    }
+
+    /// An error response addressed to request `id`.
+    pub fn fail(id: u64, err: WireError) -> NetResponse {
+        NetResponse { id: Json::num(id as f64), body: Err(err) }
+    }
+
+    /// Serialize to the frame payload JSON.
+    pub fn to_json(&self) -> Json {
+        let mut fields = vec![("id", self.id.clone())];
+        match &self.body {
+            Ok(RespBody::Infer { logits, argmax, queue_ms, total_ms }) => {
+                fields.push(("ok", Json::Bool(true)));
+                fields.push(("logits", Json::arr_f32(logits)));
+                fields.push(("argmax", Json::num(*argmax as f64)));
+                fields.push(("queue_ms", Json::num(*queue_ms)));
+                fields.push(("total_ms", Json::num(*total_ms)));
+            }
+            Ok(RespBody::Models { models }) => {
+                fields.push(("ok", Json::Bool(true)));
+                fields.push((
+                    "models",
+                    Json::Arr(models.iter().map(|m| Json::str(m.clone())).collect()),
+                ));
+            }
+            Ok(RespBody::Pong) => {
+                fields.push(("ok", Json::Bool(true)));
+                fields.push(("pong", Json::Bool(true)));
+            }
+            Err(e) => {
+                fields.push(("ok", Json::Bool(false)));
+                fields.push(("error", e.to_json()));
+            }
+        }
+        Json::obj(fields)
+    }
+
+    /// Parse a frame payload the server sent.
+    pub fn from_json(v: &Json) -> Result<NetResponse, String> {
+        let id = v.get("id").cloned().unwrap_or(Json::Null);
+        let ok = v
+            .get("ok")
+            .and_then(Json::as_bool)
+            .ok_or_else(|| "response missing boolean \"ok\"".to_string())?;
+        if !ok {
+            let e = v.get("error").ok_or_else(|| "error response missing \"error\"".to_string())?;
+            return Ok(NetResponse { id, body: Err(WireError::from_json(e)?) });
+        }
+        if let Some(arr) = v.get("logits").and_then(Json::as_arr) {
+            let mut logits = Vec::with_capacity(arr.len());
+            for (i, e) in arr.iter().enumerate() {
+                let x = e.as_f64().ok_or_else(|| format!("\"logits\"[{i}] is not a number"))?;
+                logits.push(x as f32);
+            }
+            let argmax = v
+                .get("argmax")
+                .and_then(Json::as_u64)
+                .ok_or_else(|| "infer response missing \"argmax\"".to_string())?
+                as usize;
+            let queue_ms = v.f64_at("queue_ms").map_err(|e| e.to_string())?;
+            let total_ms = v.f64_at("total_ms").map_err(|e| e.to_string())?;
+            return Ok(NetResponse { id, body: Ok(RespBody::Infer { logits, argmax, queue_ms, total_ms }) });
+        }
+        if let Some(arr) = v.get("models").and_then(Json::as_arr) {
+            let mut models = Vec::with_capacity(arr.len());
+            for (i, e) in arr.iter().enumerate() {
+                models.push(
+                    e.as_str()
+                        .ok_or_else(|| format!("\"models\"[{i}] is not a string"))?
+                        .to_string(),
+                );
+            }
+            return Ok(NetResponse { id, body: Ok(RespBody::Models { models }) });
+        }
+        if v.get("pong").is_some() {
+            return Ok(NetResponse { id, body: Ok(RespBody::Pong) });
+        }
+        Err("ok response has no recognizable body".to_string())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn roundtrip_req(r: NetRequest) {
+        let text = r.to_json().to_string();
+        let v = Json::parse(&text).unwrap();
+        let (id_echo, back) = NetRequest::from_json(&v);
+        assert_eq!(id_echo.as_u64(), Some(r.id()));
+        assert_eq!(back.unwrap(), r, "text: {text}");
+    }
+
+    fn roundtrip_resp(r: NetResponse) {
+        let text = r.to_json().to_string();
+        let back = NetResponse::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back, r, "text: {text}");
+    }
+
+    #[test]
+    fn request_roundtrips() {
+        roundtrip_req(NetRequest::Infer {
+            id: 7,
+            model: "cnn_small_q2".into(),
+            image: vec![0.0, -1.5, 0.33333334, f32::MIN_POSITIVE],
+        });
+        roundtrip_req(NetRequest::Models { id: 0 });
+        roundtrip_req(NetRequest::Ping { id: u32::MAX as u64 });
+    }
+
+    #[test]
+    fn response_and_every_error_kind_roundtrip() {
+        roundtrip_resp(NetResponse::ok(
+            1,
+            RespBody::Infer {
+                logits: vec![1.25, -0.5, 3.0],
+                argmax: 2,
+                queue_ms: 0.125,
+                total_ms: 1.5,
+            },
+        ));
+        roundtrip_resp(NetResponse::ok(
+            2,
+            RespBody::Models { models: vec!["a_q2".into(), "a_q4".into()] },
+        ));
+        roundtrip_resp(NetResponse::ok(3, RespBody::Pong));
+        for e in [
+            WireError::QueueFull { depth: 256 },
+            WireError::UnknownModel { model: "nope_q9".into() },
+            WireError::Closed,
+            WireError::ShutDown,
+            WireError::BadImage { got: 7, want: 192 },
+            WireError::BadRequest { msg: "missing string \"model\"".into() },
+            WireError::FrameTooLarge { len: 1 << 30, max: 4 << 20 },
+        ] {
+            roundtrip_resp(NetResponse::fail(9, e));
+        }
+    }
+
+    #[test]
+    fn serve_error_mapping_covers_every_variant() {
+        use crate::serve::ServeError;
+        assert_eq!(
+            WireError::from(ServeError::QueueFull { depth: 3 }),
+            WireError::QueueFull { depth: 3 }
+        );
+        assert_eq!(
+            WireError::from(ServeError::UnknownModel("m_q2".into())),
+            WireError::UnknownModel { model: "m_q2".into() }
+        );
+        assert_eq!(WireError::from(ServeError::Closed), WireError::Closed);
+        assert_eq!(WireError::from(ServeError::ShutDown), WireError::ShutDown);
+        assert_eq!(
+            WireError::from(ServeError::BadImage { got: 1, want: 2 }),
+            WireError::BadImage { got: 1, want: 2 }
+        );
+    }
+
+    #[test]
+    fn malformed_requests_are_typed_not_panics() {
+        for text in [
+            "{}",
+            "{\"id\": -1, \"model\": \"m\", \"image\": []}",
+            "{\"id\": 1.5, \"model\": \"m\", \"image\": []}",
+            "{\"id\": 1, \"op\": \"reboot\"}",
+            "{\"id\": 1, \"model\": 3, \"image\": []}",
+            "{\"id\": 1, \"model\": \"m\", \"image\": [\"x\"]}",
+            "{\"id\": 1, \"model\": \"m\"}",
+            "[1, 2, 3]",
+            "null",
+        ] {
+            let v = Json::parse(text).unwrap();
+            let (_, parsed) = NetRequest::from_json(&v);
+            assert!(parsed.is_err(), "should reject: {text}");
+        }
+        // id echo survives even when the request is rejected.
+        let v = Json::parse("{\"id\": 42, \"op\": \"reboot\"}").unwrap();
+        let (id, parsed) = NetRequest::from_json(&v);
+        assert_eq!(id.as_u64(), Some(42));
+        assert!(parsed.is_err());
+    }
+
+    #[test]
+    fn op_defaults_to_infer() {
+        let v = Json::parse("{\"id\": 4, \"model\": \"m_q2\", \"image\": [0.5]}").unwrap();
+        let (_, parsed) = NetRequest::from_json(&v);
+        assert_eq!(
+            parsed.unwrap(),
+            NetRequest::Infer { id: 4, model: "m_q2".into(), image: vec![0.5] }
+        );
+    }
+}

@@ -140,6 +140,54 @@ impl Bench {
         res
     }
 
+    /// Record externally-measured per-event times (nanoseconds) as one
+    /// result row. This is how open-loop measurements enter the suite:
+    /// [`Bench::bench`] times a closure in a closed loop (next iteration
+    /// waits for the previous), but an open-loop load generator paces
+    /// sends on a schedule and collects each request's latency itself —
+    /// the harness only aggregates. Prints the standard row and keeps the
+    /// result for [`Bench::to_json`] like any other entry; extra
+    /// percentiles (p99/p999) go through [`Bench::annotate`]. Empty input
+    /// records an all-zero row rather than NaN (JSON has no NaN).
+    pub fn record_ns(&mut self, name: &str, times_ns: &[f64], units_per_iter: f64) -> BenchResult {
+        let res = if times_ns.is_empty() {
+            BenchResult {
+                iters: 0,
+                mean_ns: 0.0,
+                p50_ns: 0.0,
+                p95_ns: 0.0,
+                min_ns: 0.0,
+                units_per_iter,
+                extras: Vec::new(),
+            }
+        } else {
+            BenchResult {
+                iters: times_ns.len() as u64,
+                mean_ns: mean(times_ns),
+                p50_ns: percentile(times_ns, 50.0),
+                p95_ns: percentile(times_ns, 95.0),
+                min_ns: times_ns.iter().cloned().fold(f64::INFINITY, f64::min),
+                units_per_iter,
+                extras: Vec::new(),
+            }
+        };
+        println!(
+            "{:<40} {:>12} iters  mean {:>12}  p50 {:>12}  p95 {:>12}{}",
+            format!("{}/{}", self.suite, name),
+            res.iters,
+            fmt_ns(res.mean_ns),
+            fmt_ns(res.p50_ns),
+            fmt_ns(res.p95_ns),
+            if units_per_iter > 0.0 && res.iters > 0 {
+                format!("  {:>10.2e} units/s", res.throughput())
+            } else {
+                String::new()
+            }
+        );
+        self.results.push((name.to_string(), res.clone()));
+        res
+    }
+
     /// All results recorded so far, in run order.
     pub fn results(&self) -> &[(String, BenchResult)] {
         &self.results
@@ -302,6 +350,28 @@ mod tests {
         assert!(json.contains("\"simd\""));
         assert!(json.contains("avx2"));
         assert!(!json.contains("scalar"));
+    }
+
+    #[test]
+    fn record_ns_aggregates_external_times() {
+        let opts = BenchOpts {
+            warmup: Duration::from_millis(1),
+            measure: Duration::from_millis(1),
+            min_iters: 1,
+        };
+        let mut b = Bench::with_opts("test", opts);
+        let times: Vec<f64> = (1..=100).map(|i| i as f64 * 1000.0).collect();
+        let r = b.record_ns("open_loop", &times, 1.0);
+        assert_eq!(r.iters, 100);
+        assert_eq!(r.min_ns, 1000.0);
+        assert!(r.p50_ns > 40_000.0 && r.p50_ns < 60_000.0);
+        b.annotate("open_loop", "p99_ms", 0.099);
+        assert!(b.to_json().to_string().contains("\"p99_ms\""));
+        // Empty input must stay JSON-safe (no NaN), not panic.
+        let r = b.record_ns("empty", &[], 0.0);
+        assert_eq!(r.iters, 0);
+        assert_eq!(r.mean_ns, 0.0);
+        assert!(!b.to_json().to_string().contains("NaN"));
     }
 
     #[test]

@@ -2,12 +2,23 @@
 //! vendored crate universe).
 //!
 //! Supports the full JSON grammar needed by `artifacts/manifest.json`,
-//! checkpoints metadata and experiment configs: objects, arrays, strings
-//! with escapes, numbers (f64/i64), booleans, null. Errors carry byte
-//! offsets for debuggability.
+//! checkpoints metadata, experiment configs and the `serve::net` wire
+//! protocol: objects, arrays, strings with escapes, numbers (f64/i64),
+//! booleans, null. Errors carry byte offsets for debuggability.
+//!
+//! The parser is safe on adversarial input: nesting is bounded by
+//! [`MAX_DEPTH`] (a recursive-descent parser without a depth limit is a
+//! stack-overflow primitive — `"[[[[…"` at a few hundred thousand bytes
+//! would otherwise crash a network-facing replica), and every malformed
+//! byte sequence yields a [`JsonError`], never a panic.
 
 use std::collections::BTreeMap;
 use std::fmt;
+
+/// Maximum container nesting the parser accepts. Deep enough for every
+/// legitimate document in the repo (manifests nest < 10 levels; wire
+/// requests < 3) while bounding recursion on hostile input.
+pub const MAX_DEPTH: usize = 128;
 
 #[derive(Debug, Clone, PartialEq)]
 pub enum Json {
@@ -35,7 +46,7 @@ impl std::error::Error for JsonError {}
 
 impl Json {
     pub fn parse(text: &str) -> Result<Json, JsonError> {
-        let mut p = Parser { b: text.as_bytes(), i: 0 };
+        let mut p = Parser { b: text.as_bytes(), i: 0, depth: 0 };
         p.ws();
         let v = p.value()?;
         p.ws();
@@ -75,6 +86,15 @@ impl Json {
         self.as_f64().map(|f| f as usize)
     }
 
+    pub fn as_u64(&self) -> Option<u64> {
+        match self {
+            Json::Num(n) if *n >= 0.0 && n.fract() == 0.0 && *n <= u64::MAX as f64 => {
+                Some(*n as u64)
+            }
+            _ => None,
+        }
+    }
+
     pub fn as_bool(&self) -> Option<bool> {
         match self {
             Json::Bool(b) => Some(*b),
@@ -106,6 +126,12 @@ impl Json {
     pub fn usize_at(&self, key: &str) -> anyhow::Result<usize> {
         self.get(key)
             .and_then(Json::as_usize)
+            .ok_or_else(|| anyhow::anyhow!("missing numeric field {key:?}"))
+    }
+
+    pub fn f64_at(&self, key: &str) -> anyhow::Result<f64> {
+        self.get(key)
+            .and_then(Json::as_f64)
             .ok_or_else(|| anyhow::anyhow!("missing numeric field {key:?}"))
     }
 
@@ -220,6 +246,7 @@ fn write_escaped(out: &mut String, s: &str) {
 struct Parser<'a> {
     b: &'a [u8],
     i: usize,
+    depth: usize,
 }
 
 impl<'a> Parser<'a> {
@@ -248,8 +275,8 @@ impl<'a> Parser<'a> {
 
     fn value(&mut self) -> Result<Json, JsonError> {
         match self.peek() {
-            Some(b'{') => self.object(),
-            Some(b'[') => self.array(),
+            Some(b'{') => self.nested(Self::object),
+            Some(b'[') => self.nested(Self::array),
             Some(b'"') => Ok(Json::Str(self.string()?)),
             Some(b't') => self.lit("true", Json::Bool(true)),
             Some(b'f') => self.lit("false", Json::Bool(false)),
@@ -257,6 +284,22 @@ impl<'a> Parser<'a> {
             Some(c) if c == b'-' || c.is_ascii_digit() => self.number(),
             _ => Err(self.err("unexpected character")),
         }
+    }
+
+    /// Run a container parser one nesting level deeper, bounding the
+    /// recursion at [`MAX_DEPTH`] so adversarial `[[[[…` input yields an
+    /// error instead of overflowing the stack.
+    fn nested(
+        &mut self,
+        f: fn(&mut Parser<'a>) -> Result<Json, JsonError>,
+    ) -> Result<Json, JsonError> {
+        if self.depth >= MAX_DEPTH {
+            return Err(self.err("nesting too deep"));
+        }
+        self.depth += 1;
+        let v = f(self);
+        self.depth -= 1;
+        v
     }
 
     fn lit(&mut self, word: &str, v: Json) -> Result<Json, JsonError> {
@@ -441,5 +484,26 @@ mod tests {
     fn unicode_passthrough() {
         let v = Json::parse("\"héllo ☃\"").unwrap();
         assert_eq!(v.as_str().unwrap(), "héllo ☃");
+    }
+
+    #[test]
+    fn depth_limit_accepts_max_and_rejects_beyond() {
+        let at = format!("{}{}", "[".repeat(MAX_DEPTH), "]".repeat(MAX_DEPTH));
+        assert!(Json::parse(&at).is_ok());
+        let over = format!("{}{}", "[".repeat(MAX_DEPTH + 1), "]".repeat(MAX_DEPTH + 1));
+        let e = Json::parse(&over).unwrap_err();
+        assert!(e.msg.contains("nesting"), "{e}");
+        // A hostile megabyte of brackets errors fast instead of
+        // overflowing the recursive-descent stack.
+        assert!(Json::parse(&"[".repeat(1_000_000)).is_err());
+    }
+
+    #[test]
+    fn u64_accessor_rejects_fractions_and_negatives() {
+        assert_eq!(Json::parse("42").unwrap().as_u64(), Some(42));
+        assert_eq!(Json::parse("0").unwrap().as_u64(), Some(0));
+        assert_eq!(Json::parse("-1").unwrap().as_u64(), None);
+        assert_eq!(Json::parse("1.5").unwrap().as_u64(), None);
+        assert_eq!(Json::parse("\"7\"").unwrap().as_u64(), None);
     }
 }

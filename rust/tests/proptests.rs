@@ -3,8 +3,10 @@
 //! random cases; failures print the offending case seed for replay.
 //!
 //! Coverage: quantizer algebraic invariants (Eqs. 1-3, 5), pack/unpack
-//! round-trips, JSON round-trips, checkpoint round-trips, dataset/batching
-//! invariants and coordinator-facing schedule/metric properties.
+//! round-trips, JSON round-trips (structure, escape sequences, the
+//! adversarial nesting-depth bound), wire-protocol request/response
+//! round-trips, checkpoint round-trips, dataset/batching invariants and
+//! coordinator-facing schedule/metric properties.
 
 use lsqnet::quant::lsq::*;
 use lsqnet::quant::pack;
@@ -314,6 +316,120 @@ fn prop_json_roundtrip_preserves_structure() {
         assert_eq!(v, back, "text: {text}");
         let pretty = v.to_string_pretty();
         assert_eq!(v, Json::parse(&pretty).unwrap());
+    });
+}
+
+/// Generate a string stressing every serializer escape path: quotes,
+/// backslashes, named control escapes, arbitrary C0 controls (the
+/// `\u00XX` path), multi-byte UTF-8 up to 4 bytes, and plain ASCII runs.
+fn rand_string(rng: &mut Pcg32) -> String {
+    const POOL: &[char] = &[
+        '"', '\\', '/', '\n', '\t', '\r', '\u{8}', '\u{c}', '\u{1}', '\u{1f}', 'a', 'Z', '0',
+        ' ', 'é', 'ß', '☃', '𝄞', '語',
+    ];
+    (0..rng.below(24)).map(|_| POOL[rng.below(POOL.len() as u32) as usize]).collect()
+}
+
+#[test]
+fn prop_json_string_escapes_roundtrip() {
+    forall("json_escapes", |rng| {
+        let s = rand_string(rng);
+        let v = Json::Str(s.clone());
+        let text = v.to_string();
+        let back = Json::parse(&text).unwrap();
+        assert_eq!(back.as_str(), Some(s.as_str()), "text: {text}");
+        // Escape-heavy strings survive as object keys too.
+        let obj = Json::Obj([(s.clone(), Json::num(1.0))].into_iter().collect());
+        assert_eq!(obj, Json::parse(&obj.to_string()).unwrap());
+    });
+}
+
+#[test]
+fn prop_json_depth_limit_boundary() {
+    use lsqnet::util::json::MAX_DEPTH;
+    // Random depths straddling the bound: parse succeeds iff the nesting
+    // is within MAX_DEPTH, for arrays, objects, and mixes of the two.
+    forall("json_depth", |rng| {
+        let depth = 1 + rng.below(MAX_DEPTH as u32 + 8) as usize;
+        let (mut open, mut close) = (String::new(), String::new());
+        for _ in 0..depth {
+            if rng.bool(0.5) {
+                open.push('[');
+                close.insert(0, ']');
+            } else {
+                open.push_str("{\"k\":");
+                close.insert(0, '}');
+            }
+        }
+        open.push('0');
+        let text = format!("{open}{close}");
+        assert_eq!(
+            Json::parse(&text).is_ok(),
+            depth <= MAX_DEPTH,
+            "depth {depth} vs limit {MAX_DEPTH}"
+        );
+    });
+}
+
+#[test]
+fn prop_wire_request_response_roundtrip() {
+    use lsqnet::serve::net::{NetRequest, NetResponse, RespBody, WireError};
+    fn rand_image(rng: &mut Pcg32) -> Vec<f32> {
+        (0..rng.below(32))
+            .map(|_| {
+                let scale = [1.0f32, 1e-3, 1e6, f32::MIN_POSITIVE][rng.below(4) as usize];
+                rng.normal() * scale
+            })
+            .collect()
+    }
+    forall("wire_roundtrip", |rng| {
+        // Ids stay below 2^32: the wire carries them as f64 numbers, so
+        // only the integer-exact range is representable (the parser
+        // rejects fractional ids rather than rounding).
+        let id = rng.next_u32() as u64;
+        let req = match rng.below(3) {
+            0 => NetRequest::Infer { id, model: rand_string(rng), image: rand_image(rng) },
+            1 => NetRequest::Models { id },
+            _ => NetRequest::Ping { id },
+        };
+        let text = req.to_json().to_string();
+        let (id_echo, back) = NetRequest::from_json(&Json::parse(&text).unwrap());
+        assert_eq!(id_echo.as_u64(), Some(id));
+        assert_eq!(back.unwrap(), req, "text: {text}");
+
+        // Responses: every body shape and every error kind, with float
+        // payloads surviving exactly (f32 → f64 text → f32 is lossless).
+        let body = match rng.below(4) {
+            0 => Ok(RespBody::Infer {
+                logits: rand_image(rng),
+                argmax: rng.below(100) as usize,
+                queue_ms: rng.normal().abs() * 10.0,
+                total_ms: rng.normal().abs() * 100.0,
+            }),
+            1 => Ok(RespBody::Models {
+                models: (0..rng.below(5)).map(|_| rand_string(rng)).collect(),
+            }),
+            2 => Ok(RespBody::Pong),
+            _ => Err(match rng.below(7) {
+                0 => WireError::QueueFull { depth: rng.below(1000) as usize },
+                1 => WireError::UnknownModel { model: rand_string(rng) },
+                2 => WireError::Closed,
+                3 => WireError::ShutDown,
+                4 => WireError::BadImage {
+                    got: rng.below(1000) as usize,
+                    want: rng.below(1000) as usize,
+                },
+                5 => WireError::BadRequest { msg: rand_string(rng) },
+                _ => WireError::FrameTooLarge {
+                    len: rng.below(1 << 30) as usize,
+                    max: 4 << 20,
+                },
+            }),
+        };
+        let resp = NetResponse { id: Json::num(id as f64), body };
+        let text = resp.to_json().to_string();
+        let back = NetResponse::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back, resp, "text: {text}");
     });
 }
 
