@@ -38,6 +38,13 @@ echo "   load, malformed-frame/garbage robustness. Wrapped in 'timeout' so a"
 echo "   wedged listener or reader fails CI fast instead of hanging it) =="
 timeout 300 cargo test --release -q --test net
 
+echo "== tier controller (SLO-driven adaptive precision tiering: exact"
+echo "   transition sequence under a deterministic burst/ramp/sine schedule,"
+echo "   zero dropped accepted requests, explicit shed at ladder saturation,"
+echo "   drain failover, BENCH decision trace. Timeout-bounded like the net"
+echo "   stage so a wedged driver thread fails CI fast) =="
+timeout 300 cargo test --release -q --test tier
+
 echo "== kernel dispatch parity (re-run the same suite with the portable"
 echo "   scalar SIMD path pinned: qgemm must stay bitwise, sgemm-family"
 echo "   within 1e-5 — so CI on any host exercises both dispatch sides) =="

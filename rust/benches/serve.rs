@@ -4,6 +4,8 @@
 //! [`ModelRegistry`], batching overhead vs direct engine execution, the
 //! TCP wire protocol over loopback (closed-loop `net_infer` rows plus an
 //! open-loop network load generator reporting p50/p99/p999 per variant),
+//! the SLO tier controller driven by a deterministic burst/ramp/sine
+//! traffic schedule (per-epoch rows + the `tier_shift_*` decision trace),
 //! and the Figure-1 fused unpack-and-dot integer GEMM. Runs with zero
 //! Python/XLA setup (the synthetic fixture provides manifest + params);
 //! the XLA numbers live in `benches/runtime.rs` (`--features xla`).
@@ -24,7 +26,8 @@ use lsqnet::runtime::kernels::{qgemm, Workspace};
 use lsqnet::runtime::native::fixture::{write_synthetic_family, FixtureSpec};
 use lsqnet::runtime::{Backend, BackendSpec, PrepareOptions};
 use lsqnet::serve::net::{NetClient, NetServer};
-use lsqnet::serve::{ModelRegistry, ServeStats, VariantOptions};
+use lsqnet::serve::tier::trace_to_bench;
+use lsqnet::serve::{ModelRegistry, ServeStats, TierConfig, TierController, TierDecision, VariantOptions};
 use lsqnet::util::bench::{black_box, Bench};
 use lsqnet::util::rng::Pcg32;
 use lsqnet::util::stats::percentile;
@@ -92,16 +95,7 @@ fn main() {
             i += 1;
             black_box(session.infer(spec.generate_alloc(i)).unwrap());
         });
-        let after = session.stats();
-        let window = ServeStats {
-            requests: after.requests - before.requests,
-            batches: after.batches - before.batches,
-            rows_dispatched: after.rows_dispatched - before.rows_dispatched,
-            padding_rows: after.padding_rows - before.padding_rows,
-            exec_ms_total: after.exec_ms_total - before.exec_ms_total,
-            queue_ms_total: after.queue_ms_total - before.queue_ms_total,
-            occupancy_sum: after.occupancy_sum - before.occupancy_sum,
-        };
+        let window = session.stats().delta_since(&before);
         annotate_stats(&mut b, &row, &window);
     }
 
@@ -228,6 +222,85 @@ fn main() {
         b.annotate(&open_row, "answered", lat_ns.len() as f64);
     }
     server.stop();
+    if let Ok(r) = Arc::try_unwrap(registry) {
+        r.shutdown();
+    }
+
+    // -- SLO tier controller under a burst/ramp/sine schedule ----------------
+    // Real traffic through a real controller: every epoch offers a
+    // deterministic number of requests open-loop through
+    // `TierController::route` (so queueing actually builds on the single
+    // replica), drains the replies, then runs one control step. The
+    // decision trace lands in BENCH_serve.json as `tier_shift_*` rows and
+    // each epoch row carries offered load, active tier, controller
+    // signals and the step's decision — the trajectory file tells the
+    // whole sense→decide→act story.
+    let fam_q8 = write_synthetic_family(&dir, "cnn_small", 8, fixture)
+        .expect("write synthetic q8 family");
+    let registry = Arc::new(ModelRegistry::open(BackendSpec::native(&dir)));
+    let tier_opts = VariantOptions {
+        replicas: 1,
+        max_wait: Duration::from_millis(1),
+        queue_depth: 256,
+        ..VariantOptions::default()
+    };
+    for family in [&fam_q8, &fam_q4, &fam_q2] {
+        registry.load(family, &tier_opts).unwrap();
+    }
+    let mut cfg = TierConfig::new(vec![fam_q8.clone(), fam_q4.clone(), fam_q2.clone()], 2.0);
+    cfg.window = 2;
+    let ctl = TierController::new(Arc::clone(&registry), cfg).unwrap();
+    // Offered requests per epoch: burst, then ramp, then a sine-ish sweep.
+    let schedule: Vec<usize> = if fast {
+        vec![2, 16, 16, 2, 2, 4, 8, 12, 8, 4, 2]
+    } else {
+        vec![
+            4, 4, 48, 48, 48, 4, 4, // burst
+            8, 16, 24, 32, 40, 48, 56, // ramp
+            40, 24, 8, 4, 8, 24, 40, 24, 8, 4, // sine-ish
+        ]
+    };
+    for (k, &offered) in schedule.iter().enumerate() {
+        let mut pending = Vec::with_capacity(offered);
+        let mut shed = 0usize;
+        for i in 0..offered {
+            let img = spec.generate_alloc(1000 * (k + 1) + i);
+            match ctl.route(img) {
+                Ok(rx) => pending.push((Instant::now(), rx)),
+                Err(_) => shed += 1,
+            }
+        }
+        let mut lat_ns: Vec<f64> = Vec::with_capacity(pending.len());
+        for (t, rx) in pending {
+            if rx.recv().is_ok() {
+                lat_ns.push(t.elapsed().as_nanos() as f64);
+            }
+        }
+        let tier_before = ctl.active_tier();
+        let decision = ctl.step();
+        let sig = ctl.last_signals();
+        let row = format!("tier_epoch_{k:02}");
+        b.record_ns(&row, &lat_ns, 1.0);
+        b.annotate(&row, "offered", offered as f64);
+        b.annotate(&row, "shed", shed as f64);
+        b.annotate(&row, "tier", tier_before as f64);
+        b.annotate(&row, "queue_ms", sig.get(tier_before).map_or(0.0, |s| s.queue_ms));
+        let code = match decision {
+            TierDecision::Hold => 0.0,
+            TierDecision::Down { .. } => -1.0,
+            TierDecision::Up { .. } => 1.0,
+        };
+        b.annotate(&row, "decision", code);
+    }
+    trace_to_bench(&mut b, ctl.tiers(), &ctl.trace());
+    println!(
+        "serve/tier_controller            {} epochs  {} shift(s)  {} shed  final tier {}",
+        ctl.epochs(),
+        ctl.trace().len(),
+        ctl.shed_count(),
+        ctl.active_tier_name(),
+    );
+    drop(ctl);
     if let Ok(r) = Arc::try_unwrap(registry) {
         r.shutdown();
     }

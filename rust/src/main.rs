@@ -63,6 +63,13 @@ COMMANDS
                             registry over the TCP wire protocol — DESIGN.md
                             §Wire-protocol. Smoke traffic then runs over
                             real sockets; --requests 0 serves until killed)]
+                           [--tiers a_q8,a_q4,a_q2 (expensive→cheap
+                            precision ladder; loads exactly those families
+                            and starts the SLO tier controller — smoke
+                            traffic and the wire `tiered` op then route to
+                            whichever tier the control loop favors)]
+                           [--slo-ms X (default 5.0; per-request queue-
+                            latency objective driving the tier controller)]
   pack                     --checkpoint runs/x/final.ckpt
   help                     this message
 
@@ -474,13 +481,23 @@ fn repro(_args: &Args) -> Result<()> {
 /// runs from a clean clone.
 fn serve(args: &Args) -> Result<()> {
     use lsqnet::runtime::{BackendKind, BackendSpec};
-    use lsqnet::serve::{ModelRegistry, VariantOptions};
-    let families: Vec<String> = args
-        .str("family", "cnn_small_q2")
-        .split(',')
-        .map(|s| s.trim().to_string())
-        .filter(|s| !s.is_empty())
-        .collect();
+    use lsqnet::serve::{ModelRegistry, TierConfig, TierController, VariantOptions};
+    use std::sync::Arc;
+    // --tiers names an expensive→cheap precision ladder; when present it
+    // *is* the set of loaded families, and an SLO controller routes
+    // between them.
+    let tier_ladder: Option<Vec<String>> = args.opt_str("tiers").map(|s| {
+        s.split(',').map(|t| t.trim().to_string()).filter(|t| !t.is_empty()).collect()
+    });
+    let families: Vec<String> = match &tier_ladder {
+        Some(ladder) => ladder.clone(),
+        None => args
+            .str("family", "cnn_small_q2")
+            .split(',')
+            .map(|s| s.trim().to_string())
+            .filter(|s| !s.is_empty())
+            .collect(),
+    };
     anyhow::ensure!(!families.is_empty(), "--family must name at least one variant");
     let n = args.usize("requests", 256);
     let kind = BackendKind::parse(&args.str("backend", "native"))?;
@@ -515,8 +532,16 @@ fn serve(args: &Args) -> Result<()> {
     for family in &families {
         registry.load(family, &opts)?;
     }
+    let registry = Arc::new(registry);
+    let controller = match &tier_ladder {
+        Some(ladder) => {
+            let cfg = TierConfig::new(ladder.clone(), args.f64("slo-ms", 5.0));
+            Some(Arc::new(TierController::new(Arc::clone(&registry), cfg)?))
+        }
+        None => None,
+    };
     if let Some(listen) = args.opt_str("listen") {
-        return serve_net(registry, &families, &listen, n);
+        return serve_net(registry, controller, &families, &listen, n);
     }
     println!(
         "serving {} variant(s) [{}] on {} x{replicas} each (core budget {}); \
@@ -526,6 +551,11 @@ fn serve(args: &Args) -> Result<()> {
         kind.name(),
         registry.core_budget()
     );
+    let driver = match &controller {
+        Some(c) => Some(c.start_driver()?),
+        None => None,
+    };
+    let ctl = controller.as_deref();
     let spec = lsqnet::data::SynthSpec::new(10, 0.35, 1);
     let t0 = std::time::Instant::now();
     let mut lat = Vec::new();
@@ -541,8 +571,13 @@ fn serve(args: &Args) -> Result<()> {
                 let mut l = Vec::new();
                 for i in 0..n / 4 {
                     let img = spec.generate_alloc(t * 10_000 + i);
-                    // Round-robin across the named sessions.
-                    if let Ok(rep) = sessions[i % sessions.len()].infer(img) {
+                    // Tiered when a controller is routing, otherwise
+                    // round-robin across the named sessions.
+                    let res = match ctl {
+                        Some(c) => c.infer(img),
+                        None => sessions[i % sessions.len()].infer(img),
+                    };
+                    if let Ok(rep) = res {
                         l.push(rep.total_ms);
                     }
                 }
@@ -555,7 +590,17 @@ fn serve(args: &Args) -> Result<()> {
         Ok(())
     })?;
     let wall = t0.elapsed().as_secs_f64();
-    let all_stats = registry.shutdown();
+    if let Some(d) = driver {
+        d.stop();
+    }
+    if let Some(c) = &controller {
+        print_tier_report(c);
+    }
+    drop(controller);
+    let all_stats = match Arc::try_unwrap(registry) {
+        Ok(r) => r.shutdown(),
+        Err(_) => Default::default(), // a straggler still holds the Arc
+    };
     let p50 = lsqnet::util::stats::percentile(&lat, 50.0);
     let p95 = lsqnet::util::stats::percentile(&lat, 95.0);
     println!(
@@ -582,22 +627,28 @@ fn serve(args: &Args) -> Result<()> {
 /// either serve until killed (`--requests 0`) or fire the smoke load over
 /// real loopback sockets — same round-robin shape as the in-process path,
 /// but every request crosses the wire protocol, so the printed latencies
-/// include framing + JSON + TCP.
+/// include framing + JSON + TCP. With a tier controller the smoke load
+/// uses the `tiered` op instead of naming variants.
 fn serve_net(
-    registry: lsqnet::serve::ModelRegistry,
+    registry: std::sync::Arc<lsqnet::serve::ModelRegistry>,
+    controller: Option<std::sync::Arc<lsqnet::serve::TierController>>,
     families: &[String],
     listen: &str,
     n: usize,
 ) -> Result<()> {
     use lsqnet::serve::net::{NetClient, NetServer};
     use std::sync::Arc;
-    let registry = Arc::new(registry);
-    let server = NetServer::start(Arc::clone(&registry), listen)?;
+    let driver = match &controller {
+        Some(c) => Some(c.start_driver()?),
+        None => None,
+    };
+    let server = NetServer::start_with(Arc::clone(&registry), controller.clone(), listen)?;
     let addr = server.local_addr();
     println!(
-        "listening on {addr} — {} variant(s) [{}] over the wire protocol",
+        "listening on {addr} — {} variant(s) [{}] over the wire protocol{}",
         families.len(),
-        families.join(", ")
+        families.join(", "),
+        if controller.is_some() { " (tiered routing on)" } else { "" },
     );
     if n == 0 {
         println!("serving until killed (ctrl-c)…");
@@ -605,6 +656,7 @@ fn serve_net(
             std::thread::park();
         }
     }
+    let tiered = controller.is_some();
     let spec = lsqnet::data::SynthSpec::new(10, 0.35, 1);
     let t0 = std::time::Instant::now();
     let mut lat: Vec<f64> = Vec::new();
@@ -618,8 +670,14 @@ fn serve_net(
                 for i in 0..n / 4 {
                     let img = spec.generate_alloc(t * 10_000 + i);
                     let s = std::time::Instant::now();
-                    // Round-robin across the named variants.
-                    if client.infer(&families[i % families.len()], &img).is_ok() {
+                    // Tiered routing when the controller is up, otherwise
+                    // round-robin across the named variants.
+                    let ok = if tiered {
+                        client.infer_tiered(&img).is_ok()
+                    } else {
+                        client.infer(&families[i % families.len()], &img).is_ok()
+                    };
+                    if ok {
                         l.push(s.elapsed().as_secs_f64() * 1e3);
                     }
                 }
@@ -634,6 +692,13 @@ fn serve_net(
     });
     let wall = t0.elapsed().as_secs_f64();
     server.stop();
+    if let Some(d) = driver {
+        d.stop();
+    }
+    if let Some(c) = &controller {
+        print_tier_report(c);
+    }
+    drop(controller);
     let all_stats = match Arc::try_unwrap(registry) {
         Ok(r) => r.shutdown(),
         Err(_) => Default::default(), // a straggler still holds the Arc
@@ -659,6 +724,26 @@ fn serve_net(
         );
     }
     Ok(())
+}
+
+/// Print the tier controller's closed-loop summary: final tier, shed
+/// count, and the full decision trace (one line per tier shift).
+fn print_tier_report(c: &lsqnet::serve::TierController) {
+    let trace = c.trace();
+    println!(
+        "tier controller: {} epoch(s), active tier {}, {} request(s) shed, {} shift(s)",
+        c.epochs(),
+        c.active_tier_name(),
+        c.shed_count(),
+        trace.len(),
+    );
+    let tiers = c.tiers();
+    for ev in &trace {
+        println!(
+            "  epoch {:>4}  {} -> {}  ({}; mean queue {:.2} ms)",
+            ev.epoch, tiers[ev.from], tiers[ev.to], ev.reason, ev.queue_ms,
+        );
+    }
 }
 
 fn pack(args: &Args) -> Result<()> {

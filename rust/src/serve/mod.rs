@@ -37,10 +37,18 @@
 //! every [`ServeError`] variant mapped to a structured wire error, and
 //! connection drain composed with `drain_and_unload` (DESIGN.md
 //! §Wire-protocol).
+//!
+//! [`tier`] closes the loop the registry only enables: a
+//! [`TierController`] samples windowed per-variant stats against a
+//! latency SLO and shifts routing across an ordered precision ladder
+//! (`q8 → q4 → q2`), shedding load ([`ServeError::Shed`]) only when the
+//! whole ladder is saturated (DESIGN.md §Serving-API).
 
 pub mod net;
 pub mod registry;
+pub mod tier;
 
+use std::collections::VecDeque;
 use std::sync::mpsc::{Receiver, SyncSender};
 use std::time::{Duration, Instant};
 
@@ -49,6 +57,7 @@ use anyhow::Result;
 use crate::runtime::BackendSpec;
 
 pub use registry::{ModelRegistry, Session, VariantOptions};
+pub use tier::{TierConfig, TierController, TierDecision, TierDriver, TierEvent, TierSignal};
 
 /// One queued inference request (internal to the serve layer).
 pub struct Request {
@@ -97,6 +106,14 @@ pub enum ServeError {
         /// Floats the variant's `image × image × channels` geometry needs.
         want: usize,
     },
+    /// Every tier of the routed precision ladder is saturated: the request
+    /// was not accepted anywhere and has been shed. Unlike
+    /// [`ServeError::QueueFull`] — one variant's backpressure, where the
+    /// right response is to retry or route to another tier — shedding
+    /// means the whole ladder is out of capacity: back off before
+    /// retrying. Only the [`tier::TierController`] produces this; a bare
+    /// [`Session`] reports per-queue `QueueFull`.
+    Shed,
 }
 
 impl std::fmt::Display for ServeError {
@@ -110,6 +127,9 @@ impl std::fmt::Display for ServeError {
             ServeError::ShutDown => write!(f, "server shut down"),
             ServeError::BadImage { got, want } => {
                 write!(f, "image must have {want} floats, got {got}")
+            }
+            ServeError::Shed => {
+                write!(f, "all precision tiers saturated: request shed, back off before retrying")
             }
         }
     }
@@ -139,6 +159,12 @@ pub struct ServeStats {
     pub queue_ms_total: f64,
     /// Sum over batches of real/batch (for mean occupancy).
     pub occupancy_sum: f64,
+    /// Replica worker threads that exited on an engine error (open /
+    /// prepare / execute failure). The variant keeps serving on its
+    /// surviving replicas, so this is the liveness signal a controller
+    /// reads: `replica_failures` ≥ the configured replica count means the
+    /// variant is dead even though its intake still accepts requests.
+    pub replica_failures: u64,
 }
 
 impl ServeStats {
@@ -153,8 +179,9 @@ impl ServeStats {
 
     /// Mean forward-pass time per batch. Note this is per *dispatched*
     /// batch — on fixed-shape backends it includes the cost of
-    /// [`ServeStats::padding_rows`]; real-row throughput is
-    /// `requests / exec_ms_total`.
+    /// [`ServeStats::padding_rows`]; real-row throughput in requests per
+    /// second is `1e3 * requests / exec_ms_total` (`exec_ms_total` is in
+    /// milliseconds, so the bare ratio would be requests per *milli*second).
     pub fn mean_exec_ms(&self) -> f64 {
         if self.batches == 0 {
             0.0
@@ -180,6 +207,63 @@ impl ServeStats {
         } else {
             self.padding_rows as f64 / self.rows_dispatched as f64
         }
+    }
+
+    /// The stats accumulated *since* an earlier snapshot of the same
+    /// variant: every counter field of `self − earlier`, saturating at
+    /// zero so a stale/reset baseline degrades to lifetime totals instead
+    /// of underflowing. The derived means (`mean_queue_ms`,
+    /// `mean_occupancy`, …) then describe only that interval — this is
+    /// what [`StatsWindow`] and the tier controller use so SLO decisions
+    /// see recent load, not lifetime averages.
+    pub fn delta_since(&self, earlier: &ServeStats) -> ServeStats {
+        ServeStats {
+            requests: self.requests.saturating_sub(earlier.requests),
+            batches: self.batches.saturating_sub(earlier.batches),
+            rows_dispatched: self.rows_dispatched.saturating_sub(earlier.rows_dispatched),
+            padding_rows: self.padding_rows.saturating_sub(earlier.padding_rows),
+            exec_ms_total: (self.exec_ms_total - earlier.exec_ms_total).max(0.0),
+            queue_ms_total: (self.queue_ms_total - earlier.queue_ms_total).max(0.0),
+            occupancy_sum: (self.occupancy_sum - earlier.occupancy_sum).max(0.0),
+            replica_failures: self.replica_failures.saturating_sub(earlier.replica_failures),
+        }
+    }
+}
+
+/// A rolling window over [`ServeStats`] snapshots: push the latest
+/// cumulative snapshot each sampling epoch and get back the stats
+/// accumulated over the most recent `cap` epochs ([`ServeStats::delta_since`]
+/// the snapshot that fell off the back). Until `cap` snapshots have been
+/// pushed the window covers all history so far — with a `Default`
+/// (all-zero) baseline that is still a correct delta, just a wider one.
+#[derive(Clone, Debug)]
+pub struct StatsWindow {
+    cap: usize,
+    baseline: ServeStats,
+    snaps: VecDeque<ServeStats>,
+}
+
+impl StatsWindow {
+    /// A window spanning `cap` pushes (clamped to at least 1).
+    pub fn new(cap: usize) -> StatsWindow {
+        StatsWindow { cap: cap.max(1), baseline: ServeStats::default(), snaps: VecDeque::new() }
+    }
+
+    /// Number of pushes the window spans once full.
+    pub fn cap(&self) -> usize {
+        self.cap
+    }
+
+    /// Record the newest cumulative snapshot and return the windowed
+    /// delta (newest minus the baseline that slid off the back).
+    pub fn push(&mut self, snapshot: ServeStats) -> ServeStats {
+        self.snaps.push_back(snapshot);
+        if self.snaps.len() > self.cap {
+            // The oldest in-window snapshot becomes the new baseline: the
+            // returned delta always spans exactly the last `cap` pushes.
+            self.baseline = self.snaps.pop_front().expect("window non-empty");
+        }
+        self.snaps.back().expect("just pushed").delta_since(&self.baseline)
     }
 }
 
@@ -304,5 +388,72 @@ impl Server {
     /// alive — client handles never hold the queue open.
     pub fn stop(self) {
         self.registry.shutdown();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn snap(requests: u64, queue_ms_total: f64, failures: u64) -> ServeStats {
+        ServeStats {
+            requests,
+            batches: requests,
+            rows_dispatched: requests,
+            padding_rows: 0,
+            exec_ms_total: requests as f64 * 0.5,
+            queue_ms_total,
+            occupancy_sum: requests as f64,
+            replica_failures: failures,
+        }
+    }
+
+    #[test]
+    fn delta_since_subtracts_every_counter_and_saturates() {
+        let early = snap(10, 20.0, 1);
+        let late = snap(25, 80.0, 3);
+        let d = late.delta_since(&early);
+        assert_eq!(d.requests, 15);
+        assert_eq!(d.batches, 15);
+        assert!((d.queue_ms_total - 60.0).abs() < 1e-9);
+        assert!((d.exec_ms_total - 7.5).abs() < 1e-9);
+        assert_eq!(d.replica_failures, 2);
+        assert!((d.mean_queue_ms() - 4.0).abs() < 1e-9);
+        // A stale baseline (counters ahead of the snapshot) saturates to
+        // zero instead of wrapping — the window degrades, never panics.
+        let d = early.delta_since(&late);
+        assert_eq!(d.requests, 0);
+        assert_eq!(d.queue_ms_total, 0.0);
+        assert_eq!(d.mean_queue_ms(), 0.0);
+    }
+
+    #[test]
+    fn stats_window_covers_exactly_the_last_cap_pushes() {
+        let mut w = StatsWindow::new(2);
+        assert_eq!(w.cap(), 2);
+        // Until the window fills, deltas span all history so far.
+        let d = w.push(snap(4, 8.0, 0));
+        assert_eq!(d.requests, 4);
+        let d = w.push(snap(10, 20.0, 0));
+        assert_eq!(d.requests, 10);
+        // Third push: the first snapshot becomes the baseline.
+        let d = w.push(snap(12, 30.0, 0));
+        assert_eq!(d.requests, 8);
+        assert!((d.queue_ms_total - 22.0).abs() < 1e-9);
+        // An idle stretch (unchanged counters) windows down to zero load.
+        let d = w.push(snap(12, 30.0, 0));
+        let d2 = w.push(snap(12, 30.0, 0));
+        assert_eq!(d.requests, 2);
+        assert_eq!(d2.requests, 0);
+        assert_eq!(d2.mean_queue_ms(), 0.0);
+    }
+
+    #[test]
+    fn stats_window_cap_is_clamped_to_one() {
+        let mut w = StatsWindow::new(0);
+        assert_eq!(w.cap(), 1);
+        w.push(snap(5, 1.0, 0));
+        let d = w.push(snap(9, 2.0, 0));
+        assert_eq!(d.requests, 4);
     }
 }

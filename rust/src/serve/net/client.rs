@@ -82,6 +82,15 @@ impl NetClient {
         Ok(id)
     }
 
+    /// Send a `tiered` request (pipelined); returns its id. The server's
+    /// tier controller picks the precision variant — there is no model
+    /// name to give. Servers without a controller answer `bad_request`.
+    pub fn send_tiered(&mut self, image: &[f32]) -> Result<u64, NetClientError> {
+        let id = self.fresh_id();
+        self.send(&NetRequest::Tiered { id, image: image.to_vec() })?;
+        Ok(id)
+    }
+
     /// Block for the next response frame. Responses to one connection
     /// arrive in request order.
     pub fn recv(&mut self) -> Result<NetResponse, NetClientError> {
@@ -94,6 +103,25 @@ impl NetClient {
     /// caller's to measure).
     pub fn infer(&mut self, model: &str, image: &[f32]) -> Result<Reply, NetClientError> {
         let id = self.send_infer(model, image)?;
+        let resp = self.recv()?;
+        expect_id(&resp, id)?;
+        match resp.body {
+            Ok(RespBody::Infer { logits, argmax, queue_ms, total_ms }) => {
+                Ok(Reply { logits, argmax, queue_ms, total_ms })
+            }
+            Ok(other) => Err(NetClientError::Protocol(format!(
+                "expected infer body, got {other:?}"
+            ))),
+            Err(e) => Err(NetClientError::Wire(e)),
+        }
+    }
+
+    /// Blocking tiered inference: like [`NetClient::infer`] but the
+    /// server's tier controller chooses the variant. A `shed` wire error
+    /// (the ladder is saturated end to end) surfaces as
+    /// [`NetClientError::Wire`] — back off before retrying.
+    pub fn infer_tiered(&mut self, image: &[f32]) -> Result<Reply, NetClientError> {
+        let id = self.send_tiered(image)?;
         let resp = self.recv()?;
         expect_id(&resp, id)?;
         match resp.body {
@@ -162,6 +190,17 @@ impl NetSender {
         let id = self.next_id;
         self.next_id += 1;
         let req = NetRequest::Infer { id, model: model.to_string(), image: image.to_vec() };
+        let payload = req.to_json().to_string();
+        frame::write_frame(&mut self.stream, payload.as_bytes())?;
+        Ok(id)
+    }
+
+    /// Send a `tiered` request; returns its id. The paired receiver sees
+    /// the response (or a `shed` error) in send order.
+    pub fn send_tiered(&mut self, image: &[f32]) -> Result<u64, NetClientError> {
+        let id = self.next_id;
+        self.next_id += 1;
+        let req = NetRequest::Tiered { id, image: image.to_vec() };
         let payload = req.to_json().to_string();
         frame::write_frame(&mut self.stream, payload.as_bytes())?;
         Ok(id)

@@ -19,9 +19,13 @@ use std::time::{Duration, Instant};
 /// bounding what a hostile header can demand.
 pub const MAX_FRAME_LEN: usize = 4 << 20;
 
-/// How long a *started* frame may dribble in before the connection is
-/// declared wedged. Split writes are fine; indefinite mid-frame stalls are
-/// how a slow-loris client would otherwise pin a connection handler.
+/// Total assembly budget for one *started* frame, armed at its first byte
+/// and never reset. Split writes are fine; a frame that has not completed
+/// within this budget is declared wedged. The bound is on the whole frame
+/// rather than per-byte progress because a slow-loris client dribbling
+/// one byte per interval makes "progress" forever — a per-byte stall
+/// deadline would never trip and the connection handler would be pinned
+/// indefinitely.
 pub const MID_FRAME_DEADLINE: Duration = Duration::from_secs(5);
 
 /// Outcome of one [`read_frame`] call.
@@ -57,10 +61,26 @@ pub fn write_frame(w: &mut impl Write, payload: &[u8]) -> io::Result<()> {
 /// Read one frame into `buf` (cleared and reused across calls, so a
 /// long-lived connection allocates only when frames grow). See
 /// [`FrameRead`] for the outcome contract; `Err` is reserved for hard I/O
-/// failures (reset, broken pipe).
+/// failures (reset, broken pipe). Frame assembly is bounded by
+/// [`MID_FRAME_DEADLINE`] total.
 pub fn read_frame(r: &mut impl Read, buf: &mut Vec<u8>, max: usize) -> io::Result<FrameRead> {
+    read_frame_deadline(r, buf, max, MID_FRAME_DEADLINE)
+}
+
+/// [`read_frame`] with an explicit total-assembly deadline. One budget
+/// covers header *and* body: it is armed when the frame's first byte
+/// arrives and deliberately never reset on progress, so a peer trickling
+/// bytes cannot hold the handler past `deadline` no matter how steadily
+/// it dribbles.
+pub fn read_frame_deadline(
+    r: &mut impl Read,
+    buf: &mut Vec<u8>,
+    max: usize,
+    deadline: Duration,
+) -> io::Result<FrameRead> {
+    let mut due: Option<Instant> = None;
     let mut header = [0u8; 4];
-    match read_full(r, &mut header, true)? {
+    match read_full(r, &mut header, true, deadline, &mut due)? {
         Progress::Done => {}
         Progress::CleanEof => return Ok(FrameRead::Eof),
         Progress::Idle => return Ok(FrameRead::Idle),
@@ -72,7 +92,8 @@ pub fn read_frame(r: &mut impl Read, buf: &mut Vec<u8>, max: usize) -> io::Resul
     }
     buf.clear();
     buf.resize(len, 0);
-    match read_full(r, buf, false)? {
+    // `due` carries over: the body shares the header's assembly budget.
+    match read_full(r, buf, false, deadline, &mut due)? {
         Progress::Done => Ok(FrameRead::Frame),
         _ => Ok(FrameRead::Truncated),
     }
@@ -87,11 +108,18 @@ enum Progress {
 
 /// Fill `out` completely. `fresh` marks a frame boundary: EOF or a read
 /// timeout before the first byte then mean a clean close / idle poll
-/// rather than a truncated frame. Once bytes are flowing, short timeouts
-/// retry until [`MID_FRAME_DEADLINE`] of no progress.
-fn read_full(r: &mut impl Read, out: &mut [u8], fresh: bool) -> io::Result<Progress> {
+/// rather than a truncated frame. `due` is the whole frame's assembly
+/// deadline — armed at the first byte, shared across the header and body
+/// calls, checked on *both* the timeout path and the progress path (a
+/// continuously-dribbling peer may never hit a read timeout at all).
+fn read_full(
+    r: &mut impl Read,
+    out: &mut [u8],
+    fresh: bool,
+    deadline: Duration,
+    due: &mut Option<Instant>,
+) -> io::Result<Progress> {
     let mut got = 0usize;
-    let mut deadline: Option<Instant> = None;
     while got < out.len() {
         match r.read(&mut out[got..]) {
             Ok(0) => {
@@ -103,13 +131,16 @@ fn read_full(r: &mut impl Read, out: &mut [u8], fresh: bool) -> io::Result<Progr
             }
             Ok(n) => {
                 got += n;
-                deadline = None; // the peer is making progress
+                let d = *due.get_or_insert_with(|| Instant::now() + deadline);
+                if got < out.len() && Instant::now() >= d {
+                    return Ok(Progress::Truncated);
+                }
             }
             Err(e) if matches!(e.kind(), io::ErrorKind::WouldBlock | io::ErrorKind::TimedOut) => {
-                if fresh && got == 0 {
+                if fresh && got == 0 && due.is_none() {
                     return Ok(Progress::Idle);
                 }
-                let d = *deadline.get_or_insert_with(|| Instant::now() + MID_FRAME_DEADLINE);
+                let d = *due.get_or_insert_with(|| Instant::now() + deadline);
                 if Instant::now() >= d {
                     return Ok(Progress::Truncated);
                 }
@@ -198,5 +229,118 @@ mod tests {
         let mut buf = Vec::new();
         assert!(matches!(read_frame(&mut r, &mut buf, MAX_FRAME_LEN).unwrap(), FrameRead::Frame));
         assert_eq!(buf, b"split across segments");
+    }
+
+    /// A reader that sleeps, then hands out one byte: a continuous
+    /// slow-loris dribble that never hits a read timeout, so only the
+    /// progress-path deadline check can stop it.
+    struct SleepyDribble<'a> {
+        data: &'a [u8],
+        gap: Duration,
+    }
+    impl Read for SleepyDribble<'_> {
+        fn read(&mut self, out: &mut [u8]) -> io::Result<usize> {
+            if self.data.is_empty() || out.is_empty() {
+                return Ok(0);
+            }
+            std::thread::sleep(self.gap);
+            out[0] = self.data[0];
+            self.data = &self.data[1..];
+            Ok(1)
+        }
+    }
+
+    /// A reader alternating a slept-through timeout error with one byte of
+    /// progress — the exact pattern that defeated the old per-byte stall
+    /// deadline (every byte reset it).
+    struct TimeoutDribble<'a> {
+        data: &'a [u8],
+        gap: Duration,
+        timeout_next: bool,
+    }
+    impl Read for TimeoutDribble<'_> {
+        fn read(&mut self, out: &mut [u8]) -> io::Result<usize> {
+            if self.data.is_empty() || out.is_empty() {
+                return Ok(0);
+            }
+            if self.timeout_next {
+                self.timeout_next = false;
+                std::thread::sleep(self.gap);
+                return Err(io::Error::new(io::ErrorKind::WouldBlock, "poll timeout"));
+            }
+            self.timeout_next = true;
+            out[0] = self.data[0];
+            self.data = &self.data[1..];
+            Ok(1)
+        }
+    }
+
+    #[test]
+    fn continuous_dribble_trips_the_total_assembly_deadline() {
+        let mut wire = Vec::new();
+        write_frame(&mut wire, &[7u8; 64]).unwrap();
+        // 68 framed bytes at 10 ms each ≈ 680 ms of dribble; an 80 ms
+        // assembly budget must cut the frame off instead of waiting the
+        // dribble out byte by byte.
+        let mut r = SleepyDribble { data: &wire, gap: Duration::from_millis(10) };
+        let mut buf = Vec::new();
+        let t0 = Instant::now();
+        assert!(matches!(
+            read_frame_deadline(&mut r, &mut buf, MAX_FRAME_LEN, Duration::from_millis(80))
+                .unwrap(),
+            FrameRead::Truncated
+        ));
+        assert!(
+            t0.elapsed() < Duration::from_millis(500),
+            "deadline did not bound total assembly time"
+        );
+    }
+
+    #[test]
+    fn single_byte_progress_does_not_reset_the_deadline() {
+        let mut wire = Vec::new();
+        write_frame(&mut wire, &[9u8; 64]).unwrap();
+        // Each byte costs a ~10 ms timeout round first: per-byte progress
+        // used to reset the stall deadline, letting this run forever.
+        let mut r =
+            TimeoutDribble { data: &wire, gap: Duration::from_millis(10), timeout_next: false };
+        let mut buf = Vec::new();
+        let t0 = Instant::now();
+        assert!(matches!(
+            read_frame_deadline(&mut r, &mut buf, MAX_FRAME_LEN, Duration::from_millis(80))
+                .unwrap(),
+            FrameRead::Truncated
+        ));
+        assert!(t0.elapsed() < Duration::from_millis(500));
+    }
+
+    #[test]
+    fn idle_then_complete_frame_still_assembles() {
+        // A timeout before the first byte is Idle (stop-flag poll hook),
+        // and a frame that then arrives whole is read normally — the
+        // deadline only arms once bytes flow.
+        struct IdleOnce<'a> {
+            data: &'a [u8],
+            idled: bool,
+        }
+        impl Read for IdleOnce<'_> {
+            fn read(&mut self, out: &mut [u8]) -> io::Result<usize> {
+                if !self.idled {
+                    self.idled = true;
+                    return Err(io::Error::new(io::ErrorKind::WouldBlock, "idle"));
+                }
+                let n = self.data.len().min(out.len());
+                out[..n].copy_from_slice(&self.data[..n]);
+                self.data = &self.data[n..];
+                Ok(n)
+            }
+        }
+        let mut wire = Vec::new();
+        write_frame(&mut wire, b"after idle").unwrap();
+        let mut r = IdleOnce { data: &wire, idled: false };
+        let mut buf = Vec::new();
+        assert!(matches!(read_frame(&mut r, &mut buf, MAX_FRAME_LEN).unwrap(), FrameRead::Idle));
+        assert!(matches!(read_frame(&mut r, &mut buf, MAX_FRAME_LEN).unwrap(), FrameRead::Frame));
+        assert_eq!(buf, b"after idle");
     }
 }

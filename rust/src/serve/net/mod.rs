@@ -21,6 +21,14 @@
 //!    benches and the CLI, splittable into send/receive halves for
 //!    open-loop load generation.
 //!
+//! PR 7 adds the `tiered` op: the client names no model; the server's
+//! [`TierController`](crate::serve::tier::TierController) routes the
+//! request onto whichever precision tier its SLO loop currently favors,
+//! spilling to cheaper tiers under queue-full and answering a structured
+//! `shed` error once the whole ladder is saturated. Servers started
+//! without a controller ([`NetServer::start`]) reject the op as
+//! `bad_request`; [`NetServer::start_with`] enables it.
+//!
 //! The protocol and its guarantees are specified in DESIGN.md
 //! §Wire-protocol; `lsqnet serve --listen <addr>` is the entry point.
 

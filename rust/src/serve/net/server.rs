@@ -49,6 +49,7 @@ use anyhow::{Context, Result};
 use super::frame::{self, FrameRead};
 use super::wire::{NetRequest, NetResponse, RespBody, WireError};
 use crate::serve::registry::{ModelRegistry, Session};
+use crate::serve::tier::TierController;
 use crate::serve::{Reply, ServeError};
 use crate::util::json::Json;
 
@@ -77,7 +78,23 @@ impl NetServer {
     /// Bind `addr` (port 0 for ephemeral) and start accepting. The
     /// registry stays owned by the caller — load/drain variants under the
     /// server's feet freely; that composition is the point.
+    ///
+    /// A server started this way has no tier controller: `tiered`
+    /// requests are rejected as `bad_request`. Use
+    /// [`NetServer::start_with`] to serve the SLO-routed op.
     pub fn start(registry: Arc<ModelRegistry>, addr: impl ToSocketAddrs) -> Result<NetServer> {
+        Self::start_with(registry, None, addr)
+    }
+
+    /// Like [`NetServer::start`], but with an optional [`TierController`]
+    /// over the same registry. When present, `tiered` requests route
+    /// through it — the controller picks the precision tier, spills to
+    /// cheaper tiers on queue-full, and sheds once the ladder saturates.
+    pub fn start_with(
+        registry: Arc<ModelRegistry>,
+        tiers: Option<Arc<TierController>>,
+        addr: impl ToSocketAddrs,
+    ) -> Result<NetServer> {
         let listener = TcpListener::bind(addr).context("binding serve listener")?;
         let local_addr = listener.local_addr().context("listener local_addr")?;
         let stop = Arc::new(AtomicBool::new(false));
@@ -85,7 +102,7 @@ impl NetServer {
             let stop = Arc::clone(&stop);
             thread::Builder::new()
                 .name("lsq-net-accept".into())
-                .spawn(move || accept_loop(listener, registry, stop))
+                .spawn(move || accept_loop(listener, registry, tiers, stop))
                 .context("spawning accept thread")?
         };
         Ok(NetServer { local_addr, stop, accept: Some(accept) })
@@ -122,7 +139,12 @@ impl Drop for NetServer {
     }
 }
 
-fn accept_loop(listener: TcpListener, registry: Arc<ModelRegistry>, stop: Arc<AtomicBool>) {
+fn accept_loop(
+    listener: TcpListener,
+    registry: Arc<ModelRegistry>,
+    tiers: Option<Arc<TierController>>,
+    stop: Arc<AtomicBool>,
+) {
     let mut conns: Vec<JoinHandle<()>> = Vec::new();
     let mut next_cid = 0u64;
     for stream in listener.incoming() {
@@ -137,10 +159,11 @@ fn accept_loop(listener: TcpListener, registry: Arc<ModelRegistry>, stop: Arc<At
         let cid = next_cid;
         next_cid += 1;
         let registry = Arc::clone(&registry);
+        let tiers = tiers.clone();
         let stop = Arc::clone(&stop);
         let spawned = thread::Builder::new()
             .name(format!("lsq-net-conn-{cid}"))
-            .spawn(move || handle_conn(stream, &registry, &stop, cid));
+            .spawn(move || handle_conn(stream, &registry, tiers.as_deref(), &stop, cid));
         if let Ok(h) = spawned {
             conns.push(h);
         } // else: thread spawn failed — the dropped stream closes the peer
@@ -165,7 +188,13 @@ enum WriteItem {
     },
 }
 
-fn handle_conn(mut stream: TcpStream, registry: &ModelRegistry, stop: &AtomicBool, cid: u64) {
+fn handle_conn(
+    mut stream: TcpStream,
+    registry: &ModelRegistry,
+    tiers: Option<&TierController>,
+    stop: &AtomicBool,
+    cid: u64,
+) {
     let _ = stream.set_nodelay(true);
     if stream.set_read_timeout(Some(IDLE_POLL)).is_err() {
         return;
@@ -208,7 +237,7 @@ fn handle_conn(mut stream: TcpStream, registry: &ModelRegistry, stop: &AtomicBoo
             // nothing sensible to answer — drain what was accepted and go.
             Ok(FrameRead::Eof) | Ok(FrameRead::Truncated) | Err(_) => break,
         }
-        let item = handle_frame(&buf, registry, &mut sessions);
+        let item = handle_frame(&buf, registry, tiers, &mut sessions);
         if tx.send(item).is_err() {
             break;
         }
@@ -225,6 +254,7 @@ fn handle_conn(mut stream: TcpStream, registry: &ModelRegistry, stop: &AtomicBoo
 fn handle_frame(
     payload: &[u8],
     registry: &ModelRegistry,
+    tiers: Option<&TierController>,
     sessions: &mut BTreeMap<String, Session>,
 ) -> WriteItem {
     let bad = |id: Json, msg: String| {
@@ -254,6 +284,16 @@ fn handle_frame(
                 Err(e) => WriteItem::Ready(NetResponse::fail(id, WireError::from(e))),
             }
         }
+        NetRequest::Tiered { id, image } => match tiers {
+            None => bad(
+                Json::Num(id as f64),
+                "no tier controller on this server (start with --tiers)".to_string(),
+            ),
+            Some(tc) => match tc.route(image) {
+                Ok(rx) => WriteItem::Pending { id, rx },
+                Err(e) => WriteItem::Ready(NetResponse::fail(id, WireError::from(e))),
+            },
+        },
     }
 }
 

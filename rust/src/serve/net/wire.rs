@@ -8,7 +8,13 @@
 //! {"id": 7, "op": "infer", "model": "cnn_small_q2", "image": [0.1, …]}
 //! {"id": 8, "op": "models"}
 //! {"id": 9, "op": "ping"}
+//! {"id": 10, "op": "tiered", "image": [0.1, …]}
 //! ```
+//!
+//! `tiered` carries no model name: the server's
+//! [`crate::serve::TierController`] picks the precision tier (and may
+//! answer `shed` when its whole ladder is saturated). Servers started
+//! without a controller reject it as `bad_request`.
 //!
 //! Responses echo the request `id` (JSON `null` when the request was too
 //! malformed to carry one) and are either `"ok": true` with an op-specific
@@ -53,6 +59,16 @@ pub enum NetRequest {
     Ping {
         /// Client-chosen id echoed on the response.
         id: u64,
+    },
+    /// Run one image through whatever precision tier the server's
+    /// controller currently routes to (no model name). Answered with the
+    /// same body as [`NetRequest::Infer`]; only servers started with a
+    /// [`crate::serve::TierController`] accept it.
+    Tiered {
+        /// Client-chosen id echoed on the response.
+        id: u64,
+        /// Flattened NHWC image (`image × image × channels` floats).
+        image: Vec<f32>,
     },
 }
 
@@ -123,6 +139,12 @@ pub enum WireError {
         /// The server's configured ceiling.
         max: usize,
     },
+    /// Every tier of the controller's precision ladder was saturated: the
+    /// request was not accepted anywhere and has been shed. Unlike
+    /// `queue_full` (one variant's backpressure — retry or re-tier),
+    /// shedding means the whole ladder is out of capacity: back off
+    /// before retrying.
+    Shed,
 }
 
 impl From<ServeError> for WireError {
@@ -133,6 +155,7 @@ impl From<ServeError> for WireError {
             ServeError::Closed => WireError::Closed,
             ServeError::ShutDown => WireError::ShutDown,
             ServeError::BadImage { got, want } => WireError::BadImage { got, want },
+            ServeError::Shed => WireError::Shed,
         }
     }
 }
@@ -148,6 +171,7 @@ impl WireError {
             WireError::BadImage { .. } => "bad_image",
             WireError::BadRequest { .. } => "bad_request",
             WireError::FrameTooLarge { .. } => "frame_too_large",
+            WireError::Shed => "shed",
         }
     }
 
@@ -175,7 +199,7 @@ impl WireError {
                 // back would not be an identity.
                 fields.push(("reason", Json::str(msg.clone())));
             }
-            WireError::Closed | WireError::ShutDown => {}
+            WireError::Closed | WireError::ShutDown | WireError::Shed => {}
         }
         fields.push(("msg", Json::str(self.to_string())));
         Json::obj(fields)
@@ -209,6 +233,7 @@ impl WireError {
                 msg: v.get("reason").and_then(Json::as_str).unwrap_or_default().to_string(),
             }),
             "frame_too_large" => Ok(WireError::FrameTooLarge { len: us("len")?, max: us("max")? }),
+            "shed" => Ok(WireError::Shed),
             other => Err(format!("unknown error kind {other:?}")),
         }
     }
@@ -230,6 +255,9 @@ impl fmt::Display for WireError {
             WireError::FrameTooLarge { len, max } => {
                 write!(f, "frame payload {len} B exceeds the {max} B limit")
             }
+            WireError::Shed => {
+                write!(f, "all precision tiers saturated: request shed, back off before retrying")
+            }
         }
     }
 }
@@ -240,9 +268,10 @@ impl NetRequest {
     /// The request's client-chosen id.
     pub fn id(&self) -> u64 {
         match self {
-            NetRequest::Infer { id, .. } | NetRequest::Models { id } | NetRequest::Ping { id } => {
-                *id
-            }
+            NetRequest::Infer { id, .. }
+            | NetRequest::Models { id }
+            | NetRequest::Ping { id }
+            | NetRequest::Tiered { id, .. } => *id,
         }
     }
 
@@ -261,6 +290,11 @@ impl NetRequest {
             NetRequest::Ping { id } => {
                 Json::obj(vec![("id", Json::num(*id as f64)), ("op", Json::str("ping"))])
             }
+            NetRequest::Tiered { id, image } => Json::obj(vec![
+                ("id", Json::num(*id as f64)),
+                ("op", Json::str("tiered")),
+                ("image", Json::arr_f32(image)),
+            ]),
         }
     }
 
@@ -278,6 +312,19 @@ impl NetRequest {
                 None => "infer",
                 Some(o) => o.as_str().ok_or_else(|| "\"op\" must be a string".to_string())?,
             };
+            let image_field = || -> Result<Vec<f32>, String> {
+                let arr = v
+                    .get("image")
+                    .and_then(Json::as_arr)
+                    .ok_or_else(|| "missing array \"image\"".to_string())?;
+                let mut image = Vec::with_capacity(arr.len());
+                for (i, e) in arr.iter().enumerate() {
+                    let x =
+                        e.as_f64().ok_or_else(|| format!("\"image\"[{i}] is not a number"))?;
+                    image.push(x as f32);
+                }
+                Ok(image)
+            };
             match op {
                 "infer" => {
                     let model = v
@@ -285,21 +332,11 @@ impl NetRequest {
                         .and_then(Json::as_str)
                         .ok_or_else(|| "missing string \"model\"".to_string())?
                         .to_string();
-                    let arr = v
-                        .get("image")
-                        .and_then(Json::as_arr)
-                        .ok_or_else(|| "missing array \"image\"".to_string())?;
-                    let mut image = Vec::with_capacity(arr.len());
-                    for (i, e) in arr.iter().enumerate() {
-                        let x = e
-                            .as_f64()
-                            .ok_or_else(|| format!("\"image\"[{i}] is not a number"))?;
-                        image.push(x as f32);
-                    }
-                    Ok(NetRequest::Infer { id, model, image })
+                    Ok(NetRequest::Infer { id, model, image: image_field()? })
                 }
                 "models" => Ok(NetRequest::Models { id }),
                 "ping" => Ok(NetRequest::Ping { id }),
+                "tiered" => Ok(NetRequest::Tiered { id, image: image_field()? }),
                 other => Err(format!("unknown op {other:?}")),
             }
         })();
@@ -430,6 +467,7 @@ mod tests {
         });
         roundtrip_req(NetRequest::Models { id: 0 });
         roundtrip_req(NetRequest::Ping { id: u32::MAX as u64 });
+        roundtrip_req(NetRequest::Tiered { id: 11, image: vec![0.25, -2.0, 1e-7] });
     }
 
     #[test]
@@ -456,6 +494,7 @@ mod tests {
             WireError::BadImage { got: 7, want: 192 },
             WireError::BadRequest { msg: "missing string \"model\"".into() },
             WireError::FrameTooLarge { len: 1 << 30, max: 4 << 20 },
+            WireError::Shed,
         ] {
             roundtrip_resp(NetResponse::fail(9, e));
         }
@@ -478,6 +517,7 @@ mod tests {
             WireError::from(ServeError::BadImage { got: 1, want: 2 }),
             WireError::BadImage { got: 1, want: 2 }
         );
+        assert_eq!(WireError::from(ServeError::Shed), WireError::Shed);
     }
 
     #[test]
@@ -490,6 +530,8 @@ mod tests {
             "{\"id\": 1, \"model\": 3, \"image\": []}",
             "{\"id\": 1, \"model\": \"m\", \"image\": [\"x\"]}",
             "{\"id\": 1, \"model\": \"m\"}",
+            "{\"id\": 1, \"op\": \"tiered\"}",
+            "{\"id\": 1, \"op\": \"tiered\", \"image\": [\"x\"]}",
             "[1, 2, 3]",
             "null",
         ] {

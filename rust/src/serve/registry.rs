@@ -36,6 +36,7 @@
 
 use std::collections::BTreeMap;
 use std::path::Path;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{Receiver, RecvTimeoutError, SyncSender, TrySendError};
 use std::sync::{Arc, Mutex, RwLock};
 use std::time::{Duration, Instant};
@@ -98,6 +99,11 @@ struct VariantShared {
     variant: String,
     intake: RwLock<Option<SyncSender<Request>>>,
     stats: Mutex<ServeStats>,
+    /// Requests ever accepted by `try_send` (the linearization point of
+    /// admission). `accepted − stats.requests` is the live queue-depth
+    /// gauge: requests queued, batching, or executing but not yet
+    /// answered — one of the three signals the tier controller samples.
+    accepted: AtomicU64,
     image_len: usize,
     queue_depth: usize,
 }
@@ -132,19 +138,46 @@ impl Session {
     /// variant [`ServeError::Closed`], and a variant whose replicas all
     /// died [`ServeError::ShutDown`].
     pub fn submit(&self, image: Vec<f32>) -> Result<Receiver<Reply>, ServeError> {
+        self.submit_reclaim(image).map_err(|(e, _)| e)
+    }
+
+    /// [`Session::submit`], but every error path hands the image buffer
+    /// back alongside the typed error, so a router retrying another tier
+    /// (the tier controller spilling down its ladder) threads one
+    /// allocation through the attempts instead of cloning per tier.
+    pub fn submit_reclaim(
+        &self,
+        image: Vec<f32>,
+    ) -> Result<Receiver<Reply>, (ServeError, Vec<f32>)> {
         if image.len() != self.shared.image_len {
-            return Err(ServeError::BadImage { got: image.len(), want: self.shared.image_len });
+            let err = ServeError::BadImage { got: image.len(), want: self.shared.image_len };
+            return Err((err, image));
         }
         let guard = self.shared.intake.read().unwrap();
-        let tx = guard.as_ref().ok_or(ServeError::Closed)?;
+        let tx = match guard.as_ref() {
+            Some(tx) => tx,
+            None => return Err((ServeError::Closed, image)),
+        };
         let (reply_tx, reply_rx) = std::sync::mpsc::sync_channel(1);
         match tx.try_send(Request { image, submitted: Instant::now(), reply: reply_tx }) {
-            Ok(()) => Ok(reply_rx),
-            Err(TrySendError::Full(_)) => {
-                Err(ServeError::QueueFull { depth: self.shared.queue_depth })
+            Ok(()) => {
+                self.shared.accepted.fetch_add(1, Ordering::Relaxed);
+                Ok(reply_rx)
             }
-            Err(TrySendError::Disconnected(_)) => Err(ServeError::ShutDown),
+            Err(TrySendError::Full(req)) => {
+                Err((ServeError::QueueFull { depth: self.shared.queue_depth }, req.image))
+            }
+            Err(TrySendError::Disconnected(req)) => Err((ServeError::ShutDown, req.image)),
         }
+    }
+
+    /// Requests accepted but not yet answered (queued + batching +
+    /// executing): the live queue-depth gauge. Racy by nature — it moves
+    /// under traffic; use it as a load signal, not an invariant.
+    pub fn in_flight(&self) -> usize {
+        let accepted = self.shared.accepted.load(Ordering::Relaxed);
+        let answered = self.shared.stats.lock().unwrap().requests;
+        accepted.saturating_sub(answered) as usize
     }
 
     /// Snapshot of this variant's aggregate metrics.
@@ -256,71 +289,112 @@ impl ModelRegistry {
             variant: variant.to_string(),
             intake: RwLock::new(Some(tx)),
             stats: Mutex::new(ServeStats::default()),
+            accepted: AtomicU64::new(0),
             image_len,
             queue_depth,
         });
+        // Replicas share one immutable parameter set behind an Arc — the
+        // old per-replica `params.clone()` duplicated every tensor.
+        let params = Arc::new(params);
 
-        // Partition the core budget across every replica in the process:
-        // the ones already serving plus the ones this load adds. The
+        // Phase 1 — reserve the name under the map lock, briefly. The
         // duplicate check re-runs under the same lock as the insert, so
         // two concurrent loads of one name cannot both win (the early
-        // check above is just a fast fail before the expensive bind).
-        let mut map = self.variants.lock().unwrap();
-        if map.contains_key(variant) {
-            bail!("variant {variant:?} is already loaded (drain_and_unload it first)");
-        }
-        let total_replicas: usize =
-            map.values().map(|e| e.replicas).sum::<usize>() + replicas;
-        let intra_threads = if opts.intra_threads == 0 {
-            (self.core_budget / total_replicas).max(1)
-        } else {
-            opts.intra_threads
+        // check above is just a fast fail before the expensive bind). The
+        // entry goes in *before* any replica is spawned so the lock is
+        // never held across thread creation: `session()` / `stats()` /
+        // `all_stats()` on other variants — the controller's mid-shift
+        // scrapes — keep working throughout a hot load. Sessions taken
+        // against the placeholder are fully functional: they queue into
+        // the live intake and are served once the replicas come up.
+        let intra_threads = {
+            let mut map = self.variants.lock().unwrap();
+            if map.contains_key(variant) {
+                bail!("variant {variant:?} is already loaded (drain_and_unload it first)");
+            }
+            let total_replicas: usize =
+                map.values().map(|e| e.replicas).sum::<usize>() + replicas;
+            map.insert(
+                variant.to_string(),
+                VariantEntry { shared: Arc::clone(&shared), handles: Vec::new(), replicas },
+            );
+            // Partition the core budget across every replica in the
+            // process: the ones already serving plus the ones this load
+            // adds.
+            if opts.intra_threads == 0 {
+                (self.core_budget / total_replicas).max(1)
+            } else {
+                opts.intra_threads
+            }
         };
         let prep = PrepareOptions {
             intra_op_threads: intra_threads,
             low_memory: opts.low_memory,
         };
 
+        // Phase 2 — spawn the replica set with no lock held.
         let mut handles = Vec::with_capacity(replicas);
+        let mut spawn_err: Option<std::io::Error> = None;
         for rid in 0..replicas {
-            let spec = self.spec.clone();
-            let params = params.clone();
-            let prep = prep.clone();
-            let shared_rx = shared_rx.clone();
-            let shared_worker = shared.clone();
-            let max_wait = opts.max_wait;
-            let spawned = std::thread::Builder::new()
-                .name(format!("lsq-serve-{variant}-{rid}"))
-                .spawn(move || {
-                    if let Err(e) = replica_loop(
-                        &spec,
-                        &params,
-                        &prep,
-                        &shared_rx,
-                        &shared_worker,
-                        max_wait,
-                        classes,
-                    ) {
-                        eprintln!("serve replica {}/{rid}: {e:#}", shared_worker.variant);
-                    }
-                });
-            match spawned {
+            match spawn_replica(
+                self.spec.clone(),
+                Arc::clone(&params),
+                prep.clone(),
+                shared_rx.clone(),
+                Arc::clone(&shared),
+                opts.max_wait,
+                classes,
+                rid,
+            ) {
                 Ok(handle) => handles.push(handle),
                 Err(e) => {
-                    // A mid-load spawn failure must not leak the replicas
-                    // already running: the entry was never inserted, so no
-                    // drain could ever reach this intake. Disconnect it and
-                    // join what was spawned before surfacing the error.
-                    *shared.intake.write().unwrap() = None;
-                    for h in handles {
-                        let _ = h.join();
-                    }
-                    return Err(e.into());
+                    spawn_err = Some(e);
+                    break;
                 }
             }
         }
-        map.insert(variant.to_string(), VariantEntry { shared, handles, replicas });
-        Ok(())
+
+        // Phase 3 — re-take the lock to attach the handles (or roll
+        // back). `Arc::ptr_eq` distinguishes *our* placeholder from a
+        // same-named entry re-loaded after a concurrent drain removed
+        // ours mid-spawn.
+        if let Some(e) = spawn_err {
+            // A mid-load spawn failure must not leak the replicas already
+            // running: remove the placeholder (if still ours), disconnect
+            // the intake and join what was spawned before surfacing.
+            {
+                let mut map = self.variants.lock().unwrap();
+                let ours =
+                    map.get(variant).map_or(false, |en| Arc::ptr_eq(&en.shared, &shared));
+                if ours {
+                    map.remove(variant);
+                }
+            }
+            *shared.intake.write().unwrap() = None;
+            for h in handles {
+                let _ = h.join();
+            }
+            return Err(e.into());
+        }
+        {
+            let mut map = self.variants.lock().unwrap();
+            if let Some(entry) = map.get_mut(variant) {
+                if Arc::ptr_eq(&entry.shared, &shared) {
+                    entry.handles = handles;
+                    return Ok(());
+                }
+            }
+        }
+        // A concurrent drain_and_unload raced this load and removed the
+        // placeholder (joining its then-empty handle list). Finish the
+        // retirement it started: close the intake, join our replicas —
+        // they still drain and answer anything accepted in the window —
+        // and report the load as failed.
+        *shared.intake.write().unwrap() = None;
+        for h in handles {
+            let _ = h.join();
+        }
+        bail!("variant {variant:?} was unloaded while its replicas were starting");
     }
 
     /// A submit handle for `variant`. Cheap; sessions are cloneable and
@@ -342,6 +416,34 @@ impl ModelRegistry {
             .unwrap()
             .get(variant)
             .map(|e| e.shared.stats.lock().unwrap().clone())
+            .ok_or_else(|| ServeError::UnknownModel(variant.to_string()))
+    }
+
+    /// Configured replica count for one variant. Together with
+    /// [`ServeStats::replica_failures`] this is the liveness signal:
+    /// `replica_failures >= replicas` means every worker died and the
+    /// variant cannot serve even though its intake still accepts.
+    pub fn replicas(&self, variant: &str) -> Result<usize, ServeError> {
+        self.variants
+            .lock()
+            .unwrap()
+            .get(variant)
+            .map(|e| e.replicas)
+            .ok_or_else(|| ServeError::UnknownModel(variant.to_string()))
+    }
+
+    /// One variant's live queue-depth gauge: requests accepted but not
+    /// yet answered (see [`Session::in_flight`]).
+    pub fn in_flight(&self, variant: &str) -> Result<usize, ServeError> {
+        self.variants
+            .lock()
+            .unwrap()
+            .get(variant)
+            .map(|e| {
+                let accepted = e.shared.accepted.load(Ordering::Relaxed);
+                let answered = e.shared.stats.lock().unwrap().requests;
+                accepted.saturating_sub(answered) as usize
+            })
             .ok_or_else(|| ServeError::UnknownModel(variant.to_string()))
     }
 
@@ -374,6 +476,12 @@ impl ModelRegistry {
     /// return the variant's final stats. Other variants keep serving
     /// throughout — this is how a precision tier is swapped under live
     /// traffic (load the replacement first, then drain the old tier).
+    ///
+    /// One narrow race softens the "replicas joined on return" part:
+    /// draining a variant whose [`ModelRegistry::load`] is still
+    /// mid-spawn joins only the replicas attached so far; the loader
+    /// detects the removal, finishes the retirement (its replicas still
+    /// answer everything accepted, exactly once) and fails the load.
     pub fn drain_and_unload(&self, variant: &str) -> Result<ServeStats, ServeError> {
         let entry = self
             .variants
@@ -438,6 +546,49 @@ impl Drop for ModelRegistry {
             }
         }
     }
+}
+
+/// Spawn one replica worker thread. An engine error inside the replica
+/// (open / prepare / execute) exits the thread — the variant keeps
+/// serving on its survivors — but is *surfaced*, not just logged: the
+/// death lands in [`ServeStats::replica_failures`], the liveness counter
+/// the tier controller reads to fail a dead tier over.
+#[allow(clippy::too_many_arguments)]
+fn spawn_replica(
+    spec: BackendSpec,
+    params: Arc<Vec<Tensor>>,
+    prep: PrepareOptions,
+    shared_rx: Arc<Mutex<Receiver<Request>>>,
+    shared: Arc<VariantShared>,
+    max_wait: Duration,
+    classes: usize,
+    rid: usize,
+) -> std::io::Result<std::thread::JoinHandle<()>> {
+    std::thread::Builder::new().name(format!("lsq-serve-{}-{rid}", shared.variant)).spawn(
+        move || {
+            if let Err(e) =
+                replica_loop(&spec, &params, &prep, &shared_rx, &shared, max_wait, classes)
+            {
+                eprintln!("serve replica {}/{rid}: {e:#}", shared.variant);
+                // Poison-tolerant: the counter must survive a panic in a
+                // sibling's stats block, and this thread is exiting anyway.
+                let mut s = match shared.stats.lock() {
+                    Ok(g) => g,
+                    Err(p) => p.into_inner(),
+                };
+                s.replica_failures += 1;
+            }
+        },
+    )
+}
+
+/// NaN-safe argmax over one row of logits. `f32::total_cmp` is a total
+/// order, so a NaN logit (corrupt checkpoint, overflowing fp32 head) can
+/// never panic the replica thread the way `partial_cmp(..).unwrap()`
+/// did; NaNs and ties resolve deterministically (positive NaN sorts
+/// above +inf, last maximum wins).
+fn argmax_logits(lg: &[f32]) -> usize {
+    lg.iter().enumerate().max_by(|a, b| a.1.total_cmp(b.1)).map(|(i, _)| i).unwrap_or(0)
 }
 
 /// One replica: open an engine, bind the variant with the deployment's
@@ -523,12 +674,7 @@ fn replica_loop(
 
         for (row, req) in pending.drain(..).enumerate() {
             let lg = logits[row * classes..(row + 1) * classes].to_vec();
-            let argmax = lg
-                .iter()
-                .enumerate()
-                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
-                .map(|(i, _)| i)
-                .unwrap_or(0);
+            let argmax = argmax_logits(&lg);
             let queue_ms = t_exec.duration_since(req.submitted).as_secs_f64() * 1e3;
             let total_ms = req.submitted.elapsed().as_secs_f64() * 1e3;
             let _ = req.reply.send(Reply { logits: lg, argmax, queue_ms, total_ms });
@@ -546,6 +692,7 @@ mod tests {
             variant: "test_q2".to_string(),
             intake: RwLock::new(Some(tx)),
             stats: Mutex::new(ServeStats::default()),
+            accepted: AtomicU64::new(0),
             image_len: 4,
             queue_depth,
         });
@@ -567,13 +714,105 @@ mod tests {
             session.submit(vec![0.0; 4]).err(),
             Some(ServeError::QueueFull { depth: 2 })
         );
-        // Draining one slot re-admits exactly one request.
+        // The in-flight gauge counts accepted-but-unanswered only: the
+        // rejected third submit must not have moved it.
+        assert_eq!(session.in_flight(), 2);
+        // Draining one slot re-admits exactly one request (the gauge
+        // still counts it — dequeued ≠ answered).
         drop(_rx.recv().unwrap());
         assert!(session.submit(vec![0.0; 4]).is_ok());
+        assert_eq!(session.in_flight(), 3);
         assert_eq!(
             session.submit(vec![0.0; 4]).err(),
             Some(ServeError::QueueFull { depth: 2 })
         );
+    }
+
+    /// `submit_reclaim` hands the image buffer back on every error path,
+    /// so a ladder router retries without cloning.
+    #[test]
+    fn submit_reclaim_returns_the_image_on_every_error() {
+        let (shared, rx) = bare_shared(1);
+        let session = Session { shared: shared.clone() };
+        // Wrong geometry: reclaimed before the queue is touched.
+        let (err, img) = session.submit_reclaim(vec![1.0; 3]).unwrap_err();
+        assert_eq!(err, ServeError::BadImage { got: 3, want: 4 });
+        assert_eq!(img, vec![1.0; 3]);
+        // Full queue: the rejected request's buffer comes back intact.
+        assert!(session.submit_reclaim(vec![2.0; 4]).is_ok());
+        let (err, img) = session.submit_reclaim(vec![3.0; 4]).unwrap_err();
+        assert_eq!(err, ServeError::QueueFull { depth: 1 });
+        assert_eq!(img, vec![3.0; 4]);
+        // Dead consumer: ShutDown, buffer reclaimed.
+        drop(rx);
+        let (err, img) = session.submit_reclaim(vec![4.0; 4]).unwrap_err();
+        assert_eq!(err, ServeError::ShutDown);
+        assert_eq!(img, vec![4.0; 4]);
+        // Closed intake: reclaimed before the send.
+        *shared.intake.write().unwrap() = None;
+        let (err, img) = session.submit_reclaim(vec![5.0; 4]).unwrap_err();
+        assert_eq!(err, ServeError::Closed);
+        assert_eq!(img, vec![5.0; 4]);
+    }
+
+    /// Regression for the replica-thread panic on NaN logits: argmax must
+    /// be a total order, never `partial_cmp(..).unwrap()`.
+    #[test]
+    fn argmax_is_nan_safe_and_deterministic() {
+        assert_eq!(argmax_logits(&[0.0, 3.0, 1.0]), 1);
+        // A NaN must not panic; `total_cmp` sorts positive NaN above
+        // +inf, so it wins deterministically.
+        assert_eq!(argmax_logits(&[0.0, f32::NAN, 1.0]), 1);
+        assert_eq!(argmax_logits(&[f32::NEG_INFINITY, f32::INFINITY, -1.0]), 1);
+        // All-NaN row: ties resolve to the last index, deterministically.
+        assert_eq!(argmax_logits(&[f32::NAN; 3]), 2);
+        // Empty row degrades to 0 (the pre-existing contract).
+        assert_eq!(argmax_logits(&[]), 0);
+    }
+
+    /// Replica death is a surfaced signal, not just an stderr line:
+    /// workers whose engine fails to open land in `replica_failures`, and
+    /// a variant whose replicas *all* died still drains cleanly through
+    /// the registry.
+    #[test]
+    fn dead_replica_variant_surfaces_failures_and_drains_cleanly() {
+        let spec = BackendSpec::native(Path::new("/nonexistent/lsq_dead_replica_fixture"));
+        let (shared, rx) = bare_shared(4);
+        let shared_rx = Arc::new(Mutex::new(rx));
+        let params: Arc<Vec<Tensor>> = Arc::new(Vec::new());
+        let mut handles = Vec::new();
+        for rid in 0..2 {
+            handles.push(
+                spawn_replica(
+                    spec.clone(),
+                    Arc::clone(&params),
+                    PrepareOptions::default(),
+                    Arc::clone(&shared_rx),
+                    Arc::clone(&shared),
+                    Duration::from_millis(1),
+                    4,
+                    rid,
+                )
+                .expect("spawn"),
+            );
+        }
+        let registry = ModelRegistry::with_core_budget(spec, 2);
+        registry.variants.lock().unwrap().insert(
+            "test_q2".to_string(),
+            VariantEntry { shared: Arc::clone(&shared), handles, replicas: 2 },
+        );
+        // Both replicas exit on the open error; the drain must join them,
+        // report the deaths, and leave the registry consistent.
+        let stats = registry.drain_and_unload("test_q2").expect("drain");
+        assert_eq!(stats.replica_failures, 2);
+        assert_eq!(stats.requests, 0);
+        assert_eq!(
+            registry.replicas("test_q2").err(),
+            Some(ServeError::UnknownModel("test_q2".to_string()))
+        );
+        // The drained intake turns away new submits with the typed error.
+        let session = Session { shared };
+        assert_eq!(session.submit(vec![0.0; 4]).err(), Some(ServeError::Closed));
     }
 
     /// Closed intake and dead consumer produce their own typed errors.

@@ -1,0 +1,735 @@
+//! SLO-driven adaptive precision tiering: the closed loop over the
+//! registry (DESIGN.md §Serving-API).
+//!
+//! LSQ's premise is one architecture at several accuracy/latency/size
+//! operating points (PAPER.md §1, Figure 3); [`super::ModelRegistry`]
+//! hosts those variants and [`super::net`] serves them — but with a fixed
+//! model name per request, traffic stays pinned to whatever tier the
+//! operator picked. [`TierController`] closes the loop:
+//!
+//! * **sense** — every epoch it snapshots per-variant [`ServeStats`] and
+//!   pushes them through a rolling [`StatsWindow`], so the
+//!   `mean_queue_ms` / queue depth / occupancy it reasons about describe
+//!   *recent* load, not lifetime averages that a long quiet morning
+//!   would dilute;
+//! * **decide** — the active tier's windowed queue time is compared
+//!   against the latency SLO with **hysteresis**: a breach must persist
+//!   for `breach_epochs` before the controller shifts down the ladder
+//!   (cheaper precision, more headroom), and recovery must hold below
+//!   `recover_frac · slo_ms` for `recover_epochs` before it shifts back
+//!   up. The dead band between the two thresholds resets both dwell
+//!   counters, so a signal hovering near the SLO can never flap the
+//!   ladder. Replica health ([`ServeStats::replica_failures`]) preempts
+//!   hysteresis — a dead tier is failed over immediately;
+//! * **act** — [`TierController::route`] submits to the active tier and
+//!   spills down the ladder on per-queue backpressure. Once every tier at
+//!   or below the active one is saturated, the request is **shed**
+//!   ([`ServeError::Shed`]) instead of queued into a latency death
+//!   spiral: callers get an explicit back-off signal, and every request
+//!   that *was* accepted is still answered exactly once (the registry's
+//!   drain guarantee is untouched).
+//!
+//! Decisions are pure: [`TierController::step_with`] consumes explicit
+//! [`TierSignal`]s, so tests drive deterministic synthetic schedules and
+//! assert exact transition sequences; [`TierController::step`] is the
+//! production path (`step_with(sample())`), and [`TierDriver`] runs it on
+//! the configured epoch. Every transition lands in an auditable
+//! [`TierEvent`] trace that [`trace_to_bench`] turns into
+//! `BENCH_serve.json` rows (EXPERIMENTS.md §Perf L3).
+
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::mpsc::Receiver;
+use std::sync::{Arc, Mutex, RwLock};
+use std::time::Duration;
+
+use anyhow::{bail, ensure, Result};
+
+use crate::util::bench::Bench;
+
+use super::{ModelRegistry, Reply, ServeError, Session, StatsWindow};
+
+/// Configuration for a [`TierController`].
+#[derive(Clone, Debug)]
+pub struct TierConfig {
+    /// The precision ladder, **most expensive first** (e.g.
+    /// `["cnn_small_q8", "cnn_small_q4", "cnn_small_q2"]`). Index 0 is
+    /// where traffic starts and returns when there is headroom; higher
+    /// indices are the cheaper tiers load shifts down to.
+    pub tiers: Vec<String>,
+    /// The latency SLO: sustained windowed `mean_queue_ms` above this on
+    /// the active tier is a breach.
+    pub slo_ms: f64,
+    /// Recovery threshold as a fraction of `slo_ms` (strictly below 1 so
+    /// the dead band between recovery and breach exists — that band *is*
+    /// the hysteresis).
+    pub recover_frac: f64,
+    /// Consecutive breached epochs required before shifting down.
+    pub breach_epochs: u32,
+    /// Consecutive recovered epochs required before shifting back up.
+    /// Typically > `breach_epochs`: shedding accuracy under pressure
+    /// should be faster than re-spending latency headroom.
+    pub recover_epochs: u32,
+    /// [`StatsWindow`] span, in epochs, for the sensed signals.
+    pub window: usize,
+    /// Sampling period for [`TierDriver`] (how often `step()` runs).
+    pub epoch: Duration,
+}
+
+impl TierConfig {
+    /// A config with the default hysteresis profile: recover at half the
+    /// SLO, shift down after 2 breached epochs, back up after 3 clear
+    /// ones, sensing over a 4-epoch window at a 50 ms epoch.
+    pub fn new(tiers: Vec<String>, slo_ms: f64) -> TierConfig {
+        TierConfig {
+            tiers,
+            slo_ms,
+            recover_frac: 0.5,
+            breach_epochs: 2,
+            recover_epochs: 3,
+            window: 4,
+            epoch: Duration::from_millis(50),
+        }
+    }
+}
+
+/// One tier's sensed state for one decision epoch. [`TierController::sample`]
+/// builds these from windowed registry stats; tests inject synthetic ones
+/// through [`TierController::step_with`].
+#[derive(Clone, Debug, PartialEq)]
+pub struct TierSignal {
+    /// Windowed mean queue+batching time (submit → execution start).
+    pub queue_ms: f64,
+    /// Requests accepted but not yet answered (queued + executing).
+    pub depth: usize,
+    /// Windowed mean batch occupancy.
+    pub occupancy: f64,
+    /// Whether the tier can serve at all: loaded, and fewer replica
+    /// failures than configured replicas.
+    pub healthy: bool,
+}
+
+/// What one decision epoch concluded.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TierDecision {
+    /// Stay on the current tier.
+    Hold,
+    /// Shift toward a cheaper tier (higher ladder index).
+    Down {
+        /// Ladder index routed before this epoch.
+        from: usize,
+        /// Ladder index routed from now on.
+        to: usize,
+    },
+    /// Shift toward a more expensive tier (lower ladder index).
+    Up {
+        /// Ladder index routed before this epoch.
+        from: usize,
+        /// Ladder index routed from now on.
+        to: usize,
+    },
+}
+
+/// One recorded tier transition — the controller's auditable decision
+/// trace ([`TierController::trace`], exported by [`trace_to_bench`]).
+#[derive(Clone, Debug, PartialEq)]
+pub struct TierEvent {
+    /// Decision epoch (1-based count of `step`/`step_with` calls).
+    pub epoch: u64,
+    /// Ladder index shifted away from.
+    pub from: usize,
+    /// Ladder index shifted to.
+    pub to: usize,
+    /// The active tier's windowed queue time that triggered the shift.
+    pub queue_ms: f64,
+    /// `"slo_breach"` (down), `"headroom"` (up) or `"unhealthy"`
+    /// (failover, either direction).
+    pub reason: &'static str,
+}
+
+/// Mutable decision state, all behind one lock: dwell counters, the
+/// per-tier stats windows, the last sensed signals and the event trace.
+struct TierState {
+    /// Consecutive epochs the active tier breached the SLO.
+    breached: u32,
+    /// Consecutive epochs the active tier sat below the recovery
+    /// threshold.
+    clear: u32,
+    /// Decision epochs elapsed.
+    epoch: u64,
+    windows: Vec<StatsWindow>,
+    last_signals: Vec<TierSignal>,
+    trace: Vec<TierEvent>,
+}
+
+/// The closed-loop controller: an ordered precision ladder over a shared
+/// [`ModelRegistry`], sampled against a latency SLO. See the module docs
+/// for the sense → decide → act loop and DESIGN.md §Serving-API for the
+/// hysteresis rationale.
+pub struct TierController {
+    registry: Arc<ModelRegistry>,
+    cfg: TierConfig,
+    /// Ladder index requests are routed to first. Atomic so `route()` on
+    /// request threads never contends with a decision in flight.
+    active: AtomicUsize,
+    /// Requests shed because the whole ladder at/below the active tier
+    /// was saturated.
+    shed: AtomicU64,
+    /// Cached per-tier sessions, refreshed from the registry when a tier
+    /// is drained and re-loaded (same pattern as the net server's
+    /// session cache).
+    sessions: RwLock<Vec<Option<Session>>>,
+    state: Mutex<TierState>,
+}
+
+impl TierController {
+    /// Build a controller over `registry`. Every ladder tier must be
+    /// loaded and unique; `cfg` thresholds are validated here so a
+    /// misconfigured SLO fails at construction, not mid-traffic.
+    pub fn new(registry: Arc<ModelRegistry>, cfg: TierConfig) -> Result<TierController> {
+        ensure!(!cfg.tiers.is_empty(), "tier ladder is empty");
+        ensure!(
+            cfg.slo_ms.is_finite() && cfg.slo_ms > 0.0,
+            "slo_ms must be a positive finite number, got {}",
+            cfg.slo_ms
+        );
+        ensure!(
+            cfg.recover_frac >= 0.0 && cfg.recover_frac < 1.0,
+            "recover_frac must be in [0, 1) so the hysteresis dead band exists, got {}",
+            cfg.recover_frac
+        );
+        ensure!(
+            cfg.breach_epochs >= 1 && cfg.recover_epochs >= 1,
+            "breach_epochs and recover_epochs must be at least 1"
+        );
+        for (i, name) in cfg.tiers.iter().enumerate() {
+            ensure!(!cfg.tiers[..i].contains(name), "duplicate tier {name:?} in ladder");
+        }
+        let mut sessions = Vec::with_capacity(cfg.tiers.len());
+        for name in &cfg.tiers {
+            match registry.session(name) {
+                Ok(s) => sessions.push(Some(s)),
+                Err(e) => bail!("tier {name:?} is not servable: {e}"),
+            }
+        }
+        let windows = cfg.tiers.iter().map(|_| StatsWindow::new(cfg.window)).collect();
+        Ok(TierController {
+            registry,
+            active: AtomicUsize::new(0),
+            shed: AtomicU64::new(0),
+            sessions: RwLock::new(sessions),
+            state: Mutex::new(TierState {
+                breached: 0,
+                clear: 0,
+                epoch: 0,
+                windows,
+                last_signals: Vec::new(),
+                trace: Vec::new(),
+            }),
+            cfg,
+        })
+    }
+
+    /// The ladder, most expensive first.
+    pub fn tiers(&self) -> &[String] {
+        &self.cfg.tiers
+    }
+
+    /// The controller configuration.
+    pub fn config(&self) -> &TierConfig {
+        &self.cfg
+    }
+
+    /// Ladder index currently routed to first.
+    pub fn active_tier(&self) -> usize {
+        self.active.load(Ordering::SeqCst)
+    }
+
+    /// Variant name of the active tier.
+    pub fn active_tier_name(&self) -> &str {
+        &self.cfg.tiers[self.active_tier()]
+    }
+
+    /// Total requests shed so far ([`ServeError::Shed`]).
+    pub fn shed_count(&self) -> u64 {
+        self.shed.load(Ordering::Relaxed)
+    }
+
+    /// Decision epochs elapsed.
+    pub fn epochs(&self) -> u64 {
+        self.state.lock().unwrap().epoch
+    }
+
+    /// The transition trace so far, in decision order.
+    pub fn trace(&self) -> Vec<TierEvent> {
+        self.state.lock().unwrap().trace.clone()
+    }
+
+    /// The signals the most recent `sample`/`step_with` saw (one per
+    /// tier; empty before the first epoch). Benches use this to annotate
+    /// per-epoch rows without re-sampling (a second sample would push the
+    /// stats windows twice per epoch).
+    pub fn last_signals(&self) -> Vec<TierSignal> {
+        self.state.lock().unwrap().last_signals.clone()
+    }
+
+    /// **Sense**: snapshot every tier's registry stats, push them through
+    /// the rolling windows, and return one [`TierSignal`] per tier. A
+    /// tier that is unloaded (or whose replicas all failed) senses as
+    /// unhealthy rather than erroring — the ladder must keep deciding
+    /// while an operator swaps a tier out underneath it.
+    pub fn sample(&self) -> Vec<TierSignal> {
+        let mut st = self.state.lock().unwrap();
+        let mut signals = Vec::with_capacity(self.cfg.tiers.len());
+        for (i, name) in self.cfg.tiers.iter().enumerate() {
+            let signal = match self.registry.stats(name) {
+                Ok(snapshot) => {
+                    // Health reads the *cumulative* failure counter (a
+                    // replica death is permanent for this load); load
+                    // signals read the windowed delta.
+                    let healthy = match self.registry.replicas(name) {
+                        Ok(replicas) => snapshot.replica_failures < replicas as u64,
+                        Err(_) => false,
+                    };
+                    let depth = self.registry.in_flight(name).unwrap_or(0);
+                    let windowed = st.windows[i].push(snapshot);
+                    TierSignal {
+                        queue_ms: windowed.mean_queue_ms(),
+                        depth,
+                        occupancy: windowed.mean_occupancy(),
+                        healthy,
+                    }
+                }
+                Err(_) => TierSignal { queue_ms: 0.0, depth: 0, occupancy: 0.0, healthy: false },
+            };
+            signals.push(signal);
+        }
+        st.last_signals = signals.clone();
+        signals
+    }
+
+    /// **Decide**: one pure hysteresis step over explicit signals (one
+    /// per ladder tier, same order). This is the whole decision policy —
+    /// `step_with` never touches the registry, so tests feed synthetic
+    /// schedules and assert exact transition sequences.
+    pub fn step_with(&self, signals: &[TierSignal]) -> TierDecision {
+        assert_eq!(
+            signals.len(),
+            self.cfg.tiers.len(),
+            "one TierSignal per ladder tier, in ladder order"
+        );
+        let mut st = self.state.lock().unwrap();
+        st.epoch += 1;
+        st.last_signals = signals.to_vec();
+        let act = self.active.load(Ordering::SeqCst);
+        let sig = &signals[act];
+
+        // Health preempts hysteresis: a tier whose replicas are dead
+        // cannot drain its queue at all, so dwell counters would only
+        // delay the inevitable while accepted requests rot. Fail over
+        // downward first (cheaper tiers have the headroom to absorb the
+        // displaced load); climb upward only if nothing cheaper is alive.
+        if !sig.healthy {
+            let target = (act + 1..signals.len())
+                .find(|&i| signals[i].healthy)
+                .or_else(|| (0..act).rev().find(|&i| signals[i].healthy));
+            if let Some(to) = target {
+                st.breached = 0;
+                st.clear = 0;
+                let epoch = st.epoch;
+                st.trace.push(TierEvent {
+                    epoch,
+                    from: act,
+                    to,
+                    queue_ms: sig.queue_ms,
+                    reason: "unhealthy",
+                });
+                self.active.store(to, Ordering::SeqCst);
+                return if to > act {
+                    TierDecision::Down { from: act, to }
+                } else {
+                    TierDecision::Up { from: act, to }
+                };
+            }
+            // The whole ladder is dead: nowhere to shift. Hold and let
+            // route() surface the failure per request.
+            return TierDecision::Hold;
+        }
+
+        if sig.queue_ms > self.cfg.slo_ms {
+            st.clear = 0;
+            st.breached += 1;
+            if st.breached >= self.cfg.breach_epochs {
+                if let Some(to) = (act + 1..signals.len()).find(|&i| signals[i].healthy) {
+                    st.breached = 0;
+                    let epoch = st.epoch;
+                    st.trace.push(TierEvent {
+                        epoch,
+                        from: act,
+                        to,
+                        queue_ms: sig.queue_ms,
+                        reason: "slo_breach",
+                    });
+                    self.active.store(to, Ordering::SeqCst);
+                    return TierDecision::Down { from: act, to };
+                }
+                // Already the cheapest healthy tier: keep the counter
+                // saturated so a cheaper tier hot-loaded later is taken
+                // immediately; route() sheds in the meantime.
+                st.breached = self.cfg.breach_epochs;
+            }
+        } else if sig.queue_ms < self.cfg.recover_frac * self.cfg.slo_ms {
+            st.breached = 0;
+            st.clear += 1;
+            if st.clear >= self.cfg.recover_epochs {
+                if let Some(to) = (0..act).rev().find(|&i| signals[i].healthy) {
+                    st.clear = 0;
+                    let epoch = st.epoch;
+                    st.trace.push(TierEvent {
+                        epoch,
+                        from: act,
+                        to,
+                        queue_ms: sig.queue_ms,
+                        reason: "headroom",
+                    });
+                    self.active.store(to, Ordering::SeqCst);
+                    return TierDecision::Up { from: act, to };
+                }
+                // Already the most expensive (or nothing pricier is
+                // healthy): saturate so headroom is spent the moment a
+                // pricier tier becomes available.
+                st.clear = self.cfg.recover_epochs;
+            }
+        } else {
+            // Dead band between the recovery and breach thresholds: the
+            // hysteresis itself. Both dwell counters reset, so a signal
+            // hovering near the SLO can never flap the ladder.
+            st.breached = 0;
+            st.clear = 0;
+        }
+        TierDecision::Hold
+    }
+
+    /// One production epoch: sense then decide (`step_with(sample())`).
+    pub fn step(&self) -> TierDecision {
+        let signals = self.sample();
+        self.step_with(&signals)
+    }
+
+    /// **Act**: submit `image` to the active tier, spilling down the
+    /// ladder on per-queue backpressure or a drained tier. Returns the
+    /// reply channel of whichever tier accepted. If every tier at or
+    /// below the active one refused with a full queue, the request is
+    /// shed: [`ServeError::Shed`], counted in
+    /// [`TierController::shed_count`] — an explicit back-off signal
+    /// instead of unbounded queueing. The image is threaded through the
+    /// attempts by reclaim (no per-tier clone).
+    pub fn route(&self, image: Vec<f32>) -> Result<Receiver<Reply>, ServeError> {
+        let start = self.active.load(Ordering::SeqCst);
+        let mut image = image;
+        let mut saw_full = false;
+        let mut last = ServeError::UnknownModel(self.cfg.tiers[start].clone());
+        for idx in start..self.cfg.tiers.len() {
+            let session = match self.session_for(idx) {
+                Some(s) => s,
+                None => {
+                    last = ServeError::UnknownModel(self.cfg.tiers[idx].clone());
+                    continue;
+                }
+            };
+            match session.submit_reclaim(image) {
+                Ok(rx) => return Ok(rx),
+                // Geometry is ladder-wide (one architecture at several
+                // precisions): no cheaper tier would take it either.
+                Err((e @ ServeError::BadImage { .. }, _)) => return Err(e),
+                Err((ServeError::QueueFull { .. }, img)) => {
+                    saw_full = true;
+                    image = img;
+                }
+                Err((e, img)) => {
+                    last = e;
+                    image = img;
+                }
+            }
+        }
+        if saw_full {
+            self.shed.fetch_add(1, Ordering::Relaxed);
+            Err(ServeError::Shed)
+        } else {
+            Err(last)
+        }
+    }
+
+    /// Blocking single-request inference through the ladder:
+    /// [`TierController::route`] + receive.
+    pub fn infer(&self, image: Vec<f32>) -> Result<Reply, ServeError> {
+        let rx = self.route(image)?;
+        rx.recv().map_err(|_| ServeError::ShutDown)
+    }
+
+    /// Start a background thread running [`TierController::step`] every
+    /// `cfg.epoch`. The driver stops (and joins) on [`TierDriver::stop`]
+    /// or drop.
+    pub fn start_driver(self: &Arc<Self>) -> std::io::Result<TierDriver> {
+        let stop = Arc::new(AtomicBool::new(false));
+        let ctl = Arc::clone(self);
+        let flag = Arc::clone(&stop);
+        let handle = std::thread::Builder::new().name("lsq-tier-ctl".to_string()).spawn(
+            move || {
+                while !flag.load(Ordering::SeqCst) {
+                    // park_timeout instead of sleep so stop() can unpark
+                    // for a prompt shutdown even with a long epoch.
+                    std::thread::park_timeout(ctl.cfg.epoch);
+                    if flag.load(Ordering::SeqCst) {
+                        break;
+                    }
+                    ctl.step();
+                }
+            },
+        )?;
+        Ok(TierDriver { stop, handle: Some(handle) })
+    }
+
+    /// The cached session for ladder index `idx`, refreshed from the
+    /// registry if the cached one was drained (a re-loaded tier gets a
+    /// fresh intake, hence a fresh session). `None` = the tier is not
+    /// currently servable.
+    fn session_for(&self, idx: usize) -> Option<Session> {
+        {
+            let cached = self.sessions.read().unwrap();
+            if let Some(Some(s)) = cached.get(idx) {
+                if s.is_open() {
+                    return Some(s.clone());
+                }
+            }
+        }
+        let mut cached = self.sessions.write().unwrap();
+        match self.registry.session(&self.cfg.tiers[idx]) {
+            Ok(s) if s.is_open() => {
+                cached[idx] = Some(s.clone());
+                Some(s)
+            }
+            _ => {
+                cached[idx] = None;
+                None
+            }
+        }
+    }
+}
+
+/// A running background decision loop ([`TierController::start_driver`]).
+pub struct TierDriver {
+    stop: Arc<AtomicBool>,
+    handle: Option<std::thread::JoinHandle<()>>,
+}
+
+impl TierDriver {
+    /// Stop the decision loop and join its thread.
+    pub fn stop(mut self) {
+        self.halt();
+    }
+
+    fn halt(&mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        if let Some(h) = self.handle.take() {
+            h.thread().unpark();
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for TierDriver {
+    fn drop(&mut self) {
+        self.halt();
+    }
+}
+
+/// Export a controller decision trace as bench rows (one per transition)
+/// so `BENCH_serve.json` carries the full audit trail of a scheduled run:
+/// the row name encodes epoch, reason and the tiers involved; the numeric
+/// columns carry the triggering queue time and the ladder indices
+/// (EXPERIMENTS.md §Perf L3).
+pub fn trace_to_bench(b: &mut Bench, tiers: &[String], trace: &[TierEvent]) {
+    for ev in trace {
+        let name = format!(
+            "tier_shift_e{}_{}_{}_to_{}",
+            ev.epoch, ev.reason, tiers[ev.from], tiers[ev.to]
+        );
+        // One "sample" per transition: the triggering windowed queue
+        // time, in ns so the row aggregates like the latency rows.
+        b.record_ns(&name, &[ev.queue_ms * 1e6], 0.0);
+        b.annotate(&name, "epoch", ev.epoch as f64);
+        b.annotate(&name, "from_tier", ev.from as f64);
+        b.annotate(&name, "to_tier", ev.to as f64);
+        b.annotate(&name, "queue_ms", ev.queue_ms);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::BackendSpec;
+
+    /// A controller whose ladder names are registered nowhere — only
+    /// usable for `step_with` (pure decision logic), which is exactly
+    /// what these tests drive. Built by bypassing `new()`'s
+    /// loaded-variant check.
+    fn bare_controller(tiers: &[&str], cfg_of: impl FnOnce(Vec<String>) -> TierConfig) -> TierController {
+        let names: Vec<String> = tiers.iter().map(|s| s.to_string()).collect();
+        let cfg = cfg_of(names.clone());
+        let registry =
+            Arc::new(ModelRegistry::with_core_budget(BackendSpec::native(Path::new(".")), 1));
+        let windows = names.iter().map(|_| StatsWindow::new(cfg.window)).collect();
+        TierController {
+            registry,
+            active: AtomicUsize::new(0),
+            shed: AtomicU64::new(0),
+            sessions: RwLock::new(names.iter().map(|_| None).collect()),
+            state: Mutex::new(TierState {
+                breached: 0,
+                clear: 0,
+                epoch: 0,
+                windows,
+                last_signals: Vec::new(),
+                trace: Vec::new(),
+            }),
+            cfg,
+        }
+    }
+
+    use std::path::Path;
+
+    fn sig(queue_ms: f64) -> TierSignal {
+        TierSignal { queue_ms, depth: 0, occupancy: 1.0, healthy: true }
+    }
+
+    /// Breach must persist for `breach_epochs` before a downshift, and a
+    /// single clear epoch resets the dwell — the core anti-flap property.
+    #[test]
+    fn breach_dwell_filters_transient_spikes() {
+        let c = bare_controller(&["q8", "q4"], |t| TierConfig::new(t, 10.0));
+        // One spike, then clear: no transition.
+        assert_eq!(c.step_with(&[sig(50.0), sig(1.0)]), TierDecision::Hold);
+        assert_eq!(c.step_with(&[sig(1.0), sig(1.0)]), TierDecision::Hold);
+        assert_eq!(c.active_tier(), 0);
+        // Two consecutive breaches: down.
+        assert_eq!(c.step_with(&[sig(50.0), sig(1.0)]), TierDecision::Hold);
+        assert_eq!(
+            c.step_with(&[sig(50.0), sig(1.0)]),
+            TierDecision::Down { from: 0, to: 1 }
+        );
+        assert_eq!(c.active_tier(), 1);
+        assert_eq!(c.trace().len(), 1);
+        assert_eq!(c.trace()[0].reason, "slo_breach");
+    }
+
+    /// The dead band (between recover_frac·slo and slo) resets both dwell
+    /// counters: a signal hovering near the SLO never flaps the ladder.
+    #[test]
+    fn dead_band_resets_both_dwell_counters() {
+        let c = bare_controller(&["q8", "q4"], |t| TierConfig::new(t, 10.0));
+        // Walk down first.
+        c.step_with(&[sig(50.0), sig(1.0)]);
+        c.step_with(&[sig(50.0), sig(1.0)]);
+        assert_eq!(c.active_tier(), 1);
+        // Two clear epochs, then a dead-band epoch (7.0 ∈ [5, 10]), then
+        // two more clear: recovery needs 3 *consecutive* clears, so no up
+        // yet.
+        c.step_with(&[sig(1.0), sig(1.0)]);
+        c.step_with(&[sig(1.0), sig(1.0)]);
+        assert_eq!(c.step_with(&[sig(1.0), sig(7.0)]), TierDecision::Hold);
+        c.step_with(&[sig(1.0), sig(1.0)]);
+        assert_eq!(c.step_with(&[sig(1.0), sig(1.0)]), TierDecision::Hold);
+        // Third consecutive clear: up.
+        assert_eq!(c.step_with(&[sig(1.0), sig(1.0)]), TierDecision::Up { from: 1, to: 0 });
+        assert_eq!(c.active_tier(), 0);
+    }
+
+    /// An unhealthy active tier fails over immediately — no dwell —
+    /// preferring cheaper tiers, climbing only when nothing cheaper is
+    /// alive; a fully dead ladder holds.
+    #[test]
+    fn unhealthy_tier_fails_over_immediately() {
+        let c = bare_controller(&["q8", "q4", "q2"], |t| TierConfig::new(t, 10.0));
+        let dead = TierSignal { queue_ms: 0.0, depth: 0, occupancy: 0.0, healthy: false };
+        // Active q8 dies with q4 also dead: skip straight to q2.
+        assert_eq!(
+            c.step_with(&[dead.clone(), dead.clone(), sig(1.0)]),
+            TierDecision::Down { from: 0, to: 2 }
+        );
+        // q2 dies too, but q8 has recovered: climb back up.
+        assert_eq!(
+            c.step_with(&[sig(1.0), dead.clone(), dead.clone()]),
+            TierDecision::Up { from: 2, to: 0 }
+        );
+        // Everything dead: hold (route() surfaces per-request failures).
+        assert_eq!(
+            c.step_with(&[dead.clone(), dead.clone(), dead.clone()]),
+            TierDecision::Hold
+        );
+        let reasons: Vec<&str> = c.trace().iter().map(|e| e.reason).collect();
+        assert_eq!(reasons, ["unhealthy", "unhealthy"]);
+    }
+
+    /// At the cheapest healthy tier a sustained breach holds (shedding is
+    /// route()'s job), and the saturated dwell takes a newly-healthy
+    /// cheaper tier on the very next breached epoch.
+    #[test]
+    fn saturated_breach_takes_new_cheaper_tier_immediately() {
+        let c = bare_controller(&["q8", "q4"], |t| TierConfig::new(t, 10.0));
+        let dead = TierSignal { queue_ms: 0.0, depth: 0, occupancy: 0.0, healthy: false };
+        // q4 dead: breaches on q8 have nowhere to go.
+        c.step_with(&[sig(50.0), dead.clone()]);
+        assert_eq!(c.step_with(&[sig(50.0), dead.clone()]), TierDecision::Hold);
+        assert_eq!(c.step_with(&[sig(50.0), dead]), TierDecision::Hold);
+        // q4 comes back: the saturated counter shifts immediately.
+        assert_eq!(
+            c.step_with(&[sig(50.0), sig(1.0)]),
+            TierDecision::Down { from: 0, to: 1 }
+        );
+    }
+
+    #[test]
+    fn config_validation_rejects_bad_ladders() {
+        let registry =
+            Arc::new(ModelRegistry::with_core_budget(BackendSpec::native(Path::new(".")), 1));
+        // Empty ladder.
+        assert!(TierController::new(Arc::clone(&registry), TierConfig::new(vec![], 5.0)).is_err());
+        // Duplicate tier.
+        let dup = TierConfig::new(vec!["a".into(), "a".into()], 5.0);
+        assert!(TierController::new(Arc::clone(&registry), dup).is_err());
+        // Non-positive SLO.
+        let bad_slo = TierConfig::new(vec!["a".into()], 0.0);
+        assert!(TierController::new(Arc::clone(&registry), bad_slo).is_err());
+        // recover_frac must leave a dead band.
+        let mut bad_frac = TierConfig::new(vec!["a".into()], 5.0);
+        bad_frac.recover_frac = 1.0;
+        assert!(TierController::new(Arc::clone(&registry), bad_frac).is_err());
+        // Unloaded tier: not servable.
+        let unloaded = TierConfig::new(vec!["a".into()], 5.0);
+        assert!(TierController::new(registry, unloaded).is_err());
+    }
+
+    /// The trace exporter writes one row per transition with the reason
+    /// and tier names encoded in the row name.
+    #[test]
+    fn trace_rows_carry_reason_and_tiers() {
+        let tiers = vec!["q8".to_string(), "q4".to_string()];
+        let trace = vec![
+            TierEvent { epoch: 4, from: 0, to: 1, queue_ms: 12.5, reason: "slo_breach" },
+            TierEvent { epoch: 9, from: 1, to: 0, queue_ms: 0.5, reason: "headroom" },
+        ];
+        let mut b = Bench::with_opts(
+            "serve",
+            crate::util::bench::BenchOpts {
+                warmup: Duration::from_millis(1),
+                measure: Duration::from_millis(1),
+                min_iters: 1,
+            },
+        );
+        trace_to_bench(&mut b, &tiers, &trace);
+        let json = b.to_json().to_string();
+        assert!(json.contains("tier_shift_e4_slo_breach_q8_to_q4"));
+        assert!(json.contains("tier_shift_e9_headroom_q4_to_q8"));
+        assert!(json.contains("\"queue_ms\""));
+    }
+}

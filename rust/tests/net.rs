@@ -3,11 +3,14 @@
 //! concurrent multi-connection round-robin with exact per-variant stats,
 //! structured wire errors (`unknown_model`, `bad_image`, `queue_full`
 //! under saturation), `drain_and_unload` under in-flight network load
-//! with zero accepted-but-unanswered requests, and a protocol-robustness
-//! battery (malformed frames, split writes, oversized headers,
-//! mid-request disconnects, random garbage) that must never panic a
-//! replica or wedge the listener. All native + loopback — no Python, no
-//! XLA, ephemeral ports only.
+//! with zero accepted-but-unanswered requests, the `tiered` op (rejected
+//! without a controller, SLO-routed with one, `shed` under ladder
+//! saturation with every accepted request still answered), a slow-loris
+//! dribbler tripping the total frame-assembly deadline, and a
+//! protocol-robustness battery (malformed frames, split writes, oversized
+//! headers, mid-request disconnects, random garbage) that must never
+//! panic a replica or wedge the listener. All native + loopback — no
+//! Python, no XLA, ephemeral ports only.
 
 use std::io::{Read, Write};
 use std::net::{Shutdown, TcpStream};
@@ -145,12 +148,13 @@ fn concurrent_connections_round_robin_stats_sum() {
                     assert_eq!(rep.logits.len(), 6);
                     assert!(rep.logits.iter().all(|v| v.is_finite()));
                     // argmax is computed server-side; it must agree with
-                    // the logits that crossed the wire.
+                    // the logits that crossed the wire. Same total order
+                    // as the replica (`f32::total_cmp`, last max wins).
                     let want_argmax = rep
                         .logits
                         .iter()
                         .enumerate()
-                        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                        .max_by(|a, b| a.1.total_cmp(b.1))
                         .unwrap()
                         .0;
                     assert_eq!(rep.argmax, want_argmax);
@@ -456,6 +460,207 @@ fn malformed_frames_split_writes_and_disconnects_never_wedge() {
     assert_eq!(client.infer(&q2, &image(4, IMAGE_LEN)).unwrap().logits.len(), 6);
     drop(client);
     // And stop() completes: no wedged reader/writer threads to join.
+    teardown(server, registry, &dir);
+}
+
+/// The `tiered` op end-to-end: a server started without a controller
+/// rejects it with a typed `bad_request` (id echoed, connection intact);
+/// a server started with one routes it to the ladder's active tier — the
+/// client names no model, and the requests land on the expensive tier
+/// while there is headroom.
+#[test]
+fn tiered_op_requires_a_controller_and_routes_when_present() {
+    use lsqnet::serve::{TierConfig, TierController};
+    let (dir, q2, q4) = two_tier_fixture("tiered", "cnn_small");
+    let registry = Arc::new(ModelRegistry::open(BackendSpec::native(&dir)));
+    let opts = VariantOptions {
+        replicas: 1,
+        max_wait: Duration::from_millis(1),
+        queue_depth: 64,
+        ..VariantOptions::default()
+    };
+    registry.load(&q2, &opts).unwrap();
+    registry.load(&q4, &opts).unwrap();
+
+    // Plain server: no controller, so the op is a typed bad_request.
+    let server = NetServer::start(Arc::clone(&registry), "127.0.0.1:0").unwrap();
+    let mut client = NetClient::connect(server.local_addr()).unwrap();
+    match client.infer_tiered(&image(0, IMAGE_LEN)) {
+        Err(NetClientError::Wire(WireError::BadRequest { msg })) => {
+            assert!(msg.contains("tier controller"), "unhelpful rejection: {msg}");
+        }
+        other => panic!("expected bad_request without a controller, got {other:?}"),
+    }
+    // The connection survives the rejection.
+    client.ping().unwrap();
+    drop(client);
+    server.stop();
+
+    // Tiered server: ladder q4 (expensive) → q2 (cheap) over the same
+    // registry. Requests name no model and land on the active tier.
+    let ladder = vec![q4.clone(), q2.clone()];
+    let ctl = Arc::new(
+        TierController::new(Arc::clone(&registry), TierConfig::new(ladder, 5.0)).unwrap(),
+    );
+    let server =
+        NetServer::start_with(Arc::clone(&registry), Some(Arc::clone(&ctl)), "127.0.0.1:0")
+            .unwrap();
+    let mut client = NetClient::connect(server.local_addr()).unwrap();
+    let n = 12usize;
+    for i in 0..n {
+        let rep = client.infer_tiered(&image(i, IMAGE_LEN)).unwrap();
+        assert_eq!(rep.logits.len(), 6);
+        assert!(rep.logits.iter().all(|v| v.is_finite()));
+    }
+    // All of it went to the expensive tier (index 0, headroom untouched).
+    assert_eq!(registry.stats(&q4).unwrap().requests, n as u64);
+    assert_eq!(registry.stats(&q2).unwrap().requests, 0);
+    assert_eq!(ctl.shed_count(), 0);
+    drop(client);
+    drop(ctl);
+    teardown(server, registry, &dir);
+}
+
+/// Ladder saturation over the wire: flooding a tiered server whose only
+/// tier has a depth-2 queue surfaces the structured `shed` error — and
+/// every pipelined request still gets exactly one response.
+#[test]
+fn tiered_flood_sheds_on_the_wire_with_every_request_answered() {
+    use lsqnet::serve::{TierConfig, TierController};
+    let (dir, q2, _q4) = two_tier_fixture("shed", "cnn_small");
+    let registry = Arc::new(ModelRegistry::open(BackendSpec::native(&dir)));
+    registry
+        .load(
+            &q2,
+            &VariantOptions {
+                replicas: 1,
+                max_wait: Duration::from_millis(0),
+                queue_depth: 2,
+                ..VariantOptions::default()
+            },
+        )
+        .unwrap();
+    let ctl = Arc::new(
+        TierController::new(Arc::clone(&registry), TierConfig::new(vec![q2.clone()], 5.0))
+            .unwrap(),
+    );
+    let server =
+        NetServer::start_with(Arc::clone(&registry), Some(Arc::clone(&ctl)), "127.0.0.1:0")
+            .unwrap();
+    let addr = server.local_addr();
+
+    // Same retry-round shape as the queue_full test: whether a given
+    // submit lands before the replica drains is timing-dependent, but
+    // each round must answer every request, ok or shed.
+    let per_round = 256usize;
+    let mut saw_shed = false;
+    for round in 0..5 {
+        let (mut tx, mut rx) = NetClient::connect(addr).unwrap().split().unwrap();
+        let img = image(round, IMAGE_LEN);
+        let sender = std::thread::spawn(move || {
+            for _ in 0..per_round {
+                tx.send_tiered(&img).unwrap();
+            }
+            tx.finish();
+        });
+        let (mut ok, mut shed) = (0usize, 0usize);
+        loop {
+            match rx.recv() {
+                Ok(resp) => match resp.body {
+                    Ok(RespBody::Infer { logits, .. }) => {
+                        assert_eq!(logits.len(), 6);
+                        ok += 1;
+                    }
+                    Ok(other) => panic!("unexpected body {other:?}"),
+                    Err(WireError::Shed) => shed += 1,
+                    Err(e) => panic!("unexpected wire error: {e}"),
+                },
+                Err(NetClientError::Protocol(_)) => break, // server half-closed after our EOF
+                Err(e) => panic!("client error: {e}"),
+            }
+        }
+        sender.join().unwrap();
+        assert_eq!(
+            ok + shed,
+            per_round,
+            "round {round}: every pipelined tiered request must get exactly one response"
+        );
+        if shed > 0 {
+            saw_shed = true;
+            assert_eq!(ctl.shed_count() as usize, shed, "controller shed count must match");
+            break;
+        }
+    }
+    assert!(saw_shed, "flooding a one-tier depth-2 ladder never surfaced shed on the wire");
+    drop(ctl);
+    teardown(server, registry, &dir);
+}
+
+/// Slow-loris defense: a client that keeps a frame alive by dribbling
+/// one byte at a time gets cut off once the *total* assembly budget
+/// ([`frame::MID_FRAME_DEADLINE`]) expires — per-byte progress must not
+/// re-arm the deadline — and the listener serves other connections
+/// throughout and after.
+#[test]
+fn slow_loris_dribbler_is_cut_off_and_listener_survives() {
+    let (dir, q2, _q4) = two_tier_fixture("loris", "mlp");
+    let registry = Arc::new(ModelRegistry::open(BackendSpec::native(&dir)));
+    registry.load(&q2, &VariantOptions::default()).unwrap();
+    let server = NetServer::start(Arc::clone(&registry), "127.0.0.1:0").unwrap();
+    let addr = server.local_addr();
+
+    let t0 = Instant::now();
+    let mut s = TcpStream::connect(addr).unwrap();
+    // Promise a 64-byte body, then dribble it slower than the budget
+    // allows: 1 byte per 200 ms ≈ 13 s of dribble against a 5 s budget.
+    s.write_all(&64u32.to_be_bytes()).unwrap();
+    s.set_read_timeout(Some(Duration::from_millis(100))).unwrap();
+    let mut cut_off = false;
+    let mut sink = [0u8; 64];
+    'dribble: for _ in 0..64 {
+        if s.write_all(&[0x20]).is_err() {
+            cut_off = true;
+            break;
+        }
+        s.flush().ok();
+        std::thread::sleep(Duration::from_millis(200));
+        // The server never answers a dribbled frame; a read returning
+        // EOF means it gave up on us.
+        loop {
+            match s.read(&mut sink) {
+                Ok(0) => {
+                    cut_off = true;
+                    break 'dribble;
+                }
+                Ok(_) => continue,
+                Err(e)
+                    if e.kind() == std::io::ErrorKind::WouldBlock
+                        || e.kind() == std::io::ErrorKind::TimedOut =>
+                {
+                    break
+                }
+                Err(_) => {
+                    cut_off = true;
+                    break 'dribble;
+                }
+            }
+        }
+    }
+    let elapsed = t0.elapsed();
+    assert!(cut_off, "a dribbled frame held the connection for the whole 64-byte body");
+    assert!(
+        elapsed < frame::MID_FRAME_DEADLINE * 4,
+        "cut-off took {elapsed:?}, far beyond the {:?} assembly budget",
+        frame::MID_FRAME_DEADLINE
+    );
+    drop(s);
+
+    // A well-behaved connection opened mid-dribble-aftermath still
+    // serves: one slow client never cost anyone else anything.
+    let mut client = NetClient::connect(addr).unwrap();
+    client.ping().unwrap();
+    assert_eq!(client.infer(&q2, &image(5, IMAGE_LEN)).unwrap().logits.len(), 6);
+    drop(client);
     teardown(server, registry, &dir);
 }
 

@@ -387,9 +387,10 @@ fn prop_wire_request_response_roundtrip() {
         // only the integer-exact range is representable (the parser
         // rejects fractional ids rather than rounding).
         let id = rng.next_u32() as u64;
-        let req = match rng.below(3) {
+        let req = match rng.below(4) {
             0 => NetRequest::Infer { id, model: rand_string(rng), image: rand_image(rng) },
-            1 => NetRequest::Models { id },
+            1 => NetRequest::Tiered { id, image: rand_image(rng) },
+            2 => NetRequest::Models { id },
             _ => NetRequest::Ping { id },
         };
         let text = req.to_json().to_string();
@@ -410,16 +411,17 @@ fn prop_wire_request_response_roundtrip() {
                 models: (0..rng.below(5)).map(|_| rand_string(rng)).collect(),
             }),
             2 => Ok(RespBody::Pong),
-            _ => Err(match rng.below(7) {
+            _ => Err(match rng.below(8) {
                 0 => WireError::QueueFull { depth: rng.below(1000) as usize },
                 1 => WireError::UnknownModel { model: rand_string(rng) },
                 2 => WireError::Closed,
                 3 => WireError::ShutDown,
-                4 => WireError::BadImage {
+                4 => WireError::Shed,
+                5 => WireError::BadImage {
                     got: rng.below(1000) as usize,
                     want: rng.below(1000) as usize,
                 },
-                5 => WireError::BadRequest { msg: rand_string(rng) },
+                6 => WireError::BadRequest { msg: rand_string(rng) },
                 _ => WireError::FrameTooLarge {
                     len: rng.below(1 << 30) as usize,
                     max: 4 << 20,

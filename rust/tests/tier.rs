@@ -1,0 +1,309 @@
+//! Integration tests for the SLO tier controller (DESIGN.md
+//! §Serving-API): the exact transition sequence under a deterministic
+//! burst/ramp/sine traffic schedule, the accepted-implies-answered
+//! guarantee under ladder routing, explicit shedding at saturation,
+//! drain failover, and the `BENCH_serve.json` decision trace.
+//!
+//! The schedule test separates act from decide on purpose: real requests
+//! flow through `TierController::route` every epoch (so the drain
+//! guarantee is exercised on whichever tier the controller currently
+//! favors), while the decisions are driven by `step_with` on synthetic
+//! signals — a pure function of the schedule, so the expected transition
+//! sequence is exact, not statistical.
+
+use std::path::PathBuf;
+use std::sync::Arc;
+use std::time::Duration;
+
+use lsqnet::runtime::native::fixture::{write_synthetic_family, FixtureSpec};
+use lsqnet::runtime::BackendSpec;
+use lsqnet::serve::tier::trace_to_bench;
+use lsqnet::serve::{
+    ModelRegistry, ServeError, TierConfig, TierController, TierDecision, TierSignal,
+    VariantOptions,
+};
+use lsqnet::util::bench::{Bench, BenchOpts};
+
+/// 8x8x3 fixture geometry (same scale as tests/net.rs: small enough that
+/// a full schedule of real requests stays fast).
+const IMAGE_LEN: usize = 8 * 8 * 3;
+const CLASSES: usize = 6;
+
+/// Write a three-precision ladder (q8 → q4 → q2) of the synthetic
+/// `cnn_small` family into a fresh temp dir; returns (dir, family names
+/// expensive-first).
+fn ladder_fixture(tag: &str) -> (PathBuf, Vec<String>) {
+    let dir = std::env::temp_dir().join(format!("lsq_tier_{tag}_{}", std::process::id()));
+    let spec = FixtureSpec { image: 8, channels: 3, num_classes: CLASSES, batch: 4, seed: 33 };
+    let fams = [8u32, 4, 2]
+        .iter()
+        .map(|&bits| write_synthetic_family(&dir, "cnn_small", bits, spec).expect("fixture"))
+        .collect();
+    (dir, fams)
+}
+
+fn image(seed: usize) -> Vec<f32> {
+    (0..IMAGE_LEN).map(|i| ((seed * 31 + i * 7) % 17) as f32 * 0.1 - 0.8).collect()
+}
+
+fn opts(queue_depth: usize) -> VariantOptions {
+    VariantOptions {
+        replicas: 1,
+        max_wait: Duration::from_millis(1),
+        queue_depth,
+        ..VariantOptions::default()
+    }
+}
+
+/// SLO 8 ms, defaults otherwise (breach after 2 epochs, recover below
+/// 4 ms after 3); window 1 so synthetic signals pass through unsmoothed.
+fn cfg_for(fams: &[String]) -> TierConfig {
+    let mut cfg = TierConfig::new(fams.to_vec(), 8.0);
+    cfg.window = 1;
+    cfg
+}
+
+/// A linear load model: tier capacities 4/8/16 (cheaper = more capacity),
+/// queue time 2·offered/capacity — so the same offered load senses as
+/// progressively lighter further down the ladder.
+const CAPS: [f64; 3] = [4.0, 8.0, 16.0];
+
+fn signals(offered: f64) -> Vec<TierSignal> {
+    CAPS.iter()
+        .map(|cap| TierSignal {
+            queue_ms: 2.0 * offered / cap,
+            depth: offered as usize,
+            occupancy: 1.0,
+            healthy: true,
+        })
+        .collect()
+}
+
+/// The tentpole acceptance test: a deterministic burst → ramp → sine
+/// schedule produces an exact, hand-traceable transition sequence; every
+/// accepted request is answered exactly once; the decision trace lands in
+/// BENCH_serve.json.
+#[test]
+fn deterministic_schedule_produces_exact_transition_sequence() {
+    let (dir, fams) = ladder_fixture("sched");
+    let registry = Arc::new(ModelRegistry::open(BackendSpec::native(&dir)));
+    for f in &fams {
+        registry.load(f, &opts(64)).unwrap();
+    }
+    let ctl = TierController::new(Arc::clone(&registry), cfg_for(&fams)).unwrap();
+
+    // Offered load per epoch. With SLO 8 ms and the CAPS load model:
+    // tier 0 breaches above 16 offered, recovers below 8; tier 1
+    // breaches above 32, recovers below 16; tier 2 recovers below 32.
+    #[rustfmt::skip]
+    let schedule: Vec<f64> = vec![
+        2.0, 2.0, 24.0, 24.0, 24.0, 2.0, 2.0,                      // burst
+        4.0, 8.0, 12.0, 16.0, 20.0, 24.0, 28.0, 32.0, 36.0, 40.0,  // ramp
+        12.0, 8.0, 20.0, 12.0, 8.0, 4.0, 4.0, 4.0,                 // sine-ish
+    ];
+
+    let mut accepted = 0usize;
+    let mut answered = 0usize;
+    for (k, &offered) in schedule.iter().enumerate() {
+        // Act: real traffic through the ladder at this epoch's offered
+        // load, routed to whichever tier the controller currently favors.
+        let mut pending = Vec::new();
+        for i in 0..offered as usize {
+            match ctl.route(image(1000 * k + i)) {
+                Ok(rx) => {
+                    accepted += 1;
+                    pending.push(rx);
+                }
+                Err(e) => panic!("epoch {k} request {i} refused: {e}"),
+            }
+        }
+        for rx in pending {
+            let reply = rx.recv().expect("accepted request must be answered");
+            assert_eq!(reply.logits.len(), CLASSES);
+            answered += 1;
+            // Exactly once: the reply channel never yields a second answer.
+            assert!(rx.try_recv().is_err(), "request answered twice");
+        }
+        // Decide: one pure hysteresis step on the synthetic signals.
+        ctl.step_with(&signals(offered));
+    }
+    assert_eq!(accepted, answered, "an accepted request was dropped");
+    assert_eq!(accepted, schedule.iter().map(|&o| o as usize).sum::<usize>());
+    assert_eq!(ctl.shed_count(), 0);
+    assert_eq!(ctl.epochs(), schedule.len() as u64);
+
+    // The exact transition sequence (epoch, from, to, reason): burst
+    // down+up, ramp down twice, sine decay back up twice.
+    let trace = ctl.trace();
+    let got: Vec<(u64, usize, usize, &str)> =
+        trace.iter().map(|e| (e.epoch, e.from, e.to, e.reason)).collect();
+    assert_eq!(
+        got,
+        vec![
+            (4, 0, 1, "slo_breach"),
+            (8, 1, 0, "headroom"),
+            (13, 0, 1, "slo_breach"),
+            (17, 1, 2, "slo_breach"),
+            (20, 2, 1, "headroom"),
+            (23, 1, 0, "headroom"),
+        ]
+    );
+    assert_eq!(ctl.active_tier(), 0, "sine decay must return the ladder to the top");
+
+    // The decision trace is emitted as BENCH_serve.json rows and survives
+    // a parse round-trip.
+    let mut b = Bench::with_opts(
+        "serve",
+        BenchOpts {
+            warmup: Duration::from_millis(1),
+            measure: Duration::from_millis(1),
+            min_iters: 1,
+        },
+    );
+    trace_to_bench(&mut b, ctl.tiers(), &trace);
+    let path = dir.join("BENCH_serve.json");
+    b.write_json(&path).unwrap();
+    let text = std::fs::read_to_string(&path).unwrap();
+    let expect = [
+        format!("tier_shift_e4_slo_breach_{}_to_{}", fams[0], fams[1]),
+        format!("tier_shift_e8_headroom_{}_to_{}", fams[1], fams[0]),
+        format!("tier_shift_e13_slo_breach_{}_to_{}", fams[0], fams[1]),
+        format!("tier_shift_e17_slo_breach_{}_to_{}", fams[1], fams[2]),
+        format!("tier_shift_e20_headroom_{}_to_{}", fams[2], fams[1]),
+        format!("tier_shift_e23_headroom_{}_to_{}", fams[1], fams[0]),
+    ];
+    for name in &expect {
+        assert!(text.contains(name.as_str()), "missing {name} in BENCH_serve.json");
+    }
+    assert_eq!(text.matches("tier_shift_e").count(), expect.len());
+
+    drop(ctl);
+    if let Ok(r) = Arc::try_unwrap(registry) {
+        r.shutdown();
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Once the cheapest tier's queue is full, `route` sheds explicitly
+/// (counted, typed) instead of queueing without bound — and every request
+/// that *was* accepted is still answered.
+#[test]
+fn ladder_saturation_sheds_instead_of_queueing() {
+    let (dir, fams) = ladder_fixture("shed");
+    let registry = Arc::new(ModelRegistry::open(BackendSpec::native(&dir)));
+    // A one-tier ladder with a depth-2 queue: saturation is reachable by
+    // a single flooding thread (submits are orders of magnitude faster
+    // than a batch execution).
+    let cheap = fams[2].clone();
+    registry.load(&cheap, &opts(2)).unwrap();
+    let ctl = TierController::new(Arc::clone(&registry), cfg_for(&fams[2..])).unwrap();
+
+    let mut pending = Vec::new();
+    let mut shed = 0u64;
+    for i in 0..2000 {
+        match ctl.route(image(i)) {
+            Ok(rx) => pending.push(rx),
+            Err(ServeError::Shed) => {
+                shed += 1;
+                if shed >= 8 {
+                    break;
+                }
+            }
+            Err(e) => panic!("unexpected routing error: {e}"),
+        }
+    }
+    assert!(shed > 0, "a depth-2 queue flooded with 2000 requests must shed");
+    assert_eq!(ctl.shed_count(), shed);
+    // The drain guarantee is untouched by shedding: every accepted
+    // request is answered exactly once.
+    for rx in pending {
+        let reply = rx.recv().expect("accepted request must be answered despite shedding");
+        assert_eq!(reply.logits.len(), CLASSES);
+        assert!(rx.try_recv().is_err());
+    }
+
+    drop(ctl);
+    if let Ok(r) = Arc::try_unwrap(registry) {
+        r.shutdown();
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Draining the active tier out from under the controller: requests spill
+/// past the dead tier with no control decision, `sample` senses it as
+/// unhealthy, and the next `step` fails over immediately.
+#[test]
+fn drained_tier_spills_and_fails_over() {
+    let (dir, fams) = ladder_fixture("drain");
+    let registry = Arc::new(ModelRegistry::open(BackendSpec::native(&dir)));
+    for f in &fams {
+        registry.load(f, &opts(64)).unwrap();
+    }
+    let ctl = TierController::new(Arc::clone(&registry), cfg_for(&fams)).unwrap();
+
+    // Baseline: all three tiers sense as healthy.
+    let sensed = ctl.sample();
+    assert_eq!(sensed.len(), fams.len());
+    assert!(sensed.iter().all(|s| s.healthy));
+
+    registry.drain_and_unload(&fams[0]).unwrap();
+
+    // Routing spills past the drained tier immediately — the active
+    // index has not moved, the request still gets answered.
+    assert_eq!(ctl.active_tier(), 0);
+    let reply = ctl.infer(image(7)).expect("request must spill to a live tier");
+    assert_eq!(reply.logits.len(), CLASSES);
+
+    // The next sensed epoch fails over without any dwell.
+    match ctl.step() {
+        TierDecision::Down { from: 0, to } => assert!(to >= 1),
+        other => panic!("expected immediate failover down, got {other:?}"),
+    }
+    let last = ctl.trace().pop().expect("failover must be traced");
+    assert_eq!(last.reason, "unhealthy");
+    assert_eq!(ctl.active_tier_name(), &fams[last.to]);
+    // The ladder keeps serving on the new tier.
+    let reply = ctl.infer(image(8)).expect("failed-over tier serves");
+    assert_eq!(reply.logits.len(), CLASSES);
+
+    drop(ctl);
+    if let Ok(r) = Arc::try_unwrap(registry) {
+        r.shutdown();
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// The background driver runs real epochs on its own clock and stops
+/// cleanly (thread joined) on `stop`.
+#[test]
+fn driver_runs_epochs_and_stops_cleanly() {
+    let (dir, fams) = ladder_fixture("driver");
+    let registry = Arc::new(ModelRegistry::open(BackendSpec::native(&dir)));
+    for f in &fams {
+        registry.load(f, &opts(64)).unwrap();
+    }
+    let mut cfg = cfg_for(&fams);
+    cfg.epoch = Duration::from_millis(2);
+    let ctl = Arc::new(TierController::new(Arc::clone(&registry), cfg).unwrap());
+    let driver = ctl.start_driver().unwrap();
+    // Real traffic while the driver senses in the background.
+    for i in 0..16 {
+        ctl.infer(image(i)).unwrap();
+    }
+    let deadline = std::time::Instant::now() + Duration::from_secs(10);
+    while ctl.epochs() == 0 && std::time::Instant::now() < deadline {
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    driver.stop();
+    let ran = ctl.epochs();
+    assert!(ran > 0, "driver never completed an epoch");
+    // Stopped means stopped: no further epochs accrue.
+    std::thread::sleep(Duration::from_millis(20));
+    assert_eq!(ctl.epochs(), ran);
+
+    drop(ctl);
+    if let Ok(r) = Arc::try_unwrap(registry) {
+        r.shutdown();
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
