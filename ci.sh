@@ -50,6 +50,32 @@ echo "   scalar SIMD path pinned: qgemm must stay bitwise, sgemm-family"
 echo "   within 1e-5 — so CI on any host exercises both dispatch sides) =="
 LSQNET_FORCE_SCALAR=1 cargo test --release -q --test kernels
 
+echo "== forced-level matrix (re-run the kernel suite with LSQNET_SIMD"
+echo "   pinned to every level this host can run — each rung of the ladder"
+echo "   must pass the full parity suite, not just the auto-detected best."
+echo "   'scalar' is skipped here: the LSQNET_FORCE_SCALAR stage above"
+echo "   already pins it via the alias) =="
+for lvl in $(cargo run --release -q --bin lsqnet -- simd-levels); do
+  if [ "$lvl" = "scalar" ]; then continue; fi
+  echo "--   LSQNET_SIMD=$lvl"
+  LSQNET_SIMD="$lvl" cargo test --release -q --test kernels
+done
+
+echo "== FMA tier (re-run the kernel suite with the fp32 FMA contraction"
+echo "   mode as the default: the sgemm family must hold its cross-level"
+echo "   agreement inside the FMA tier too; qgemm is integer-exact and"
+echo "   unaffected) =="
+LSQNET_FMA=1 cargo test --release -q --test kernels
+
+echo "== aarch64 cross-check (type-check the NEON dispatch arm; soft-skip"
+echo "   when the cross target is not installed on this host) =="
+if command -v rustup >/dev/null 2>&1 \
+   && rustup target list --installed 2>/dev/null | grep -q '^aarch64-unknown-linux-gnu$'; then
+  cargo check --release --target aarch64-unknown-linux-gnu
+else
+  echo "   (skipped: aarch64-unknown-linux-gnu target not installed)"
+fi
+
 echo "== clippy (warnings are errors; missing_docs stays advisory while"
 echo "   the long-tail rustdoc pass is in flight — see ROADMAP) =="
 cargo clippy --all-targets -- -D warnings -A missing_docs

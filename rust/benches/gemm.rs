@@ -7,7 +7,18 @@
 //! `panel_vs_fused`, `simd_vs_scalar`) so the trajectory JSON needs no
 //! hand-diffing, and the suite records the dispatch level it ran at
 //! (`simd` field; `LSQNET_FORCE_SCALAR=1` pins the portable path — the CI
-//! smoke runs both sides).
+//! smoke runs both sides). Because several rows pin a level *in-process*
+//! (scalar references, the VNNI-vs-AVX2 ladder comparison), every row
+//! also carries its own `simd` string column — the *effective* level it
+//! ran at — so no row can masquerade as the suite default.
+//!
+//! Ladder/autotuner receipt columns (each present only where the feature
+//! is, degrading gracefully on hosts without it): `vnni_vs_avx2` (the
+//! dpwssd rung vs a forced-AVX2 run of the same panel GEMM),
+//! `tuned_vs_default` (autotuned [`PanelGeom`] vs the legacy constants —
+//! row emitted only when tuning picked a non-default geometry), and
+//! `fma_vs_pinned` (the sgemm FMA tier vs the deterministic pinned
+//! reference).
 //!
 //! Writes the machine-readable perf-trajectory file
 //! `BENCH_native_gemm.json` at the repository root (regenerate with
@@ -25,8 +36,8 @@ use std::path::Path;
 
 use lsqnet::quant::pack::quantize_and_pack;
 use lsqnet::runtime::kernels::{
-    hardware_threads, qgemm, qgemm_panel, sgemm, PanelizedWeights, SimdLevel, Workspace,
-    QGEMM_MIN_ROWS_PER_THREAD,
+    hardware_threads, qgemm, qgemm_panel, sgemm, FpMode, PanelGeom, PanelizedWeights, SimdLevel,
+    Workspace, QGEMM_MIN_ROWS_PER_THREAD,
 };
 use lsqnet::util::bench::{black_box, Bench};
 use lsqnet::util::rng::Pcg32;
@@ -92,6 +103,7 @@ fn main() {
                 qgemm(&mut ws, m, k, n, black_box(&x), p, 0.01, None, &mut out);
                 black_box(&out);
             });
+            b.annotate_str(&name, "simd", ws.simd().name());
             fused.push((name, r.throughput()));
         }
         if fused.len() == 2 {
@@ -111,6 +123,7 @@ fn main() {
                 qgemm_panel(&mut ws, m, k, n, black_box(&x), pw, 0.01, None, &mut out);
                 black_box(&out);
             });
+            b.annotate_str(&name, "simd", ws.simd().name());
             panel.push((name, r.throughput()));
         }
         if panel.len() == 2 {
@@ -144,9 +157,52 @@ fn main() {
                 qgemm(&mut ws, m, k, n, black_box(&x), p, 0.01, None, &mut out);
                 black_box(&out);
             });
+            b.annotate_str(&name, "simd", ws.simd().name());
             let s = fused[0].1 / r.throughput();
             b.annotate(&fused[0].0, "simd_vs_scalar", s);
             summary.push((format!("qgemm_{bits}bit fused t1"), "simd/scalar", s));
+        }
+
+        // Ladder-step comparison: when the host dispatches the VNNI rung,
+        // re-run the serial panel GEMM pinned one rung down (AVX2) so the
+        // trajectory carries the dpwssd-vs-pmaddwd delta. Absent on hosts
+        // without VNNI — the column simply does not appear.
+        if simd == SimdLevel::Avx512Vnni {
+            let mut ws = Workspace::with_threads(1);
+            if ws.force_level(SimdLevel::Avx2) {
+                let name = format!("qgemm_{bits}bit_{m}x{k}x{n}_panel_t1_avx2");
+                let r = b.bench_units(&name, flops, || {
+                    let pw = black_box(&panels);
+                    qgemm_panel(&mut ws, m, k, n, black_box(&x), pw, 0.01, None, &mut out);
+                    black_box(&out);
+                });
+                b.annotate_str(&name, "simd", ws.simd().name());
+                let s = panel[0].1 / r.throughput();
+                b.annotate(&panel[0].0, "vnni_vs_avx2", s);
+                summary.push((format!("qgemm_{bits}bit panel t1"), "vnni/avx2", s));
+            }
+        }
+
+        // Autotuner receipt: rebuild the panels through the bind-time
+        // tuner (the activation bound is the row max, same as bind) and
+        // time the winner against the default-geometry row. Emitted only
+        // when tuning picked a non-default blocking; `LSQNET_NO_TUNE=1`
+        // (or a default-geometry win) degrades to no extra row.
+        let tuned = PanelizedWeights::build_for_acts(&packed, k, n, qp);
+        if tuned.geom() != PanelGeom::DEFAULT {
+            let mut ws = Workspace::with_threads(1);
+            let name = format!("qgemm_{bits}bit_{m}x{k}x{n}_panel_t1_tuned");
+            let r = b.bench_units(&name, flops, || {
+                let pw = black_box(&tuned);
+                qgemm_panel(&mut ws, m, k, n, black_box(&x), pw, 0.01, None, &mut out);
+                black_box(&out);
+            });
+            b.annotate_str(&name, "simd", ws.simd().name());
+            let g = tuned.geom();
+            b.annotate_str(&name, "geom", &format!("kc{}_nc{}_nr{}_ki{}", g.kc, g.nc, g.nr, g.ki));
+            let s = r.throughput() / panel[0].1;
+            b.annotate(&name, "tuned_vs_default", s);
+            summary.push((format!("qgemm_{bits}bit panel t1"), "tuned/default", s));
         }
     }
 
@@ -162,6 +218,7 @@ fn main() {
             sgemm(&mut ws, m, k, n, black_box(&xf), black_box(&wf), None, &mut out);
             black_box(&out);
         });
+        b.annotate_str(&name, "simd", ws.simd().name());
         srows.push((name, r.throughput()));
     }
     if srows.len() == 2 {
@@ -177,9 +234,33 @@ fn main() {
             sgemm(&mut ws, m, k, n, black_box(&xf), black_box(&wf), None, &mut out);
             black_box(&out);
         });
+        b.annotate_str(&name, "simd", ws.simd().name());
         let s = srows[0].1 / r.throughput();
         b.annotate(&srows[0].0, "simd_vs_scalar", s);
         summary.push(("sgemm t1".to_string(), "simd/scalar", s));
+    }
+
+    // FMA-tier receipt: the serial sgemm re-run in [`FpMode::Fma`]
+    // against the pinned-reassociation reference above. Skipped (column
+    // absent) on hosts without FMA units — `set_fp_mode` rejects the
+    // request there.
+    {
+        let mut ws = Workspace::with_threads(1);
+        // Only meaningful when the suite rows above ran Pinned (i.e. not
+        // an LSQNET_FMA=1 run, where they already are the FMA numbers).
+        let was_pinned = ws.fp_mode() == FpMode::Pinned;
+        ws.set_fp_mode(FpMode::Fma);
+        if was_pinned && ws.fp_mode() == FpMode::Fma {
+            let name = format!("sgemm_{m}x{k}x{n}_t1_fma");
+            let r = b.bench_units(&name, flops, || {
+                sgemm(&mut ws, m, k, n, black_box(&xf), black_box(&wf), None, &mut out);
+                black_box(&out);
+            });
+            b.annotate_str(&name, "simd", ws.simd().name());
+            let s = r.throughput() / srows[0].1;
+            b.annotate(&name, "fma_vs_pinned", s);
+            summary.push(("sgemm t1".to_string(), "fma/pinned", s));
+        }
     }
 
     for (name, what, s) in &summary {

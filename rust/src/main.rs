@@ -12,6 +12,8 @@
 //!                                registry (native backend by default; one
 //!                                process serves N precision variants)
 //!   pack                         quantize+pack a checkpoint, report size
+//!   simd-levels                  list the host's runnable SIMD dispatch
+//!                                levels (feeds the CI forced-level matrix)
 //!
 //! Commands tagged [xla] (and the xla train/eval/sweep backend) drive the
 //! AOT artifacts and require building with `--features xla`; everything
@@ -71,6 +73,10 @@ COMMANDS
                            [--slo-ms X (default 5.0; per-request queue-
                             latency objective driving the tier controller)]
   pack                     --checkpoint runs/x/final.ckpt
+  simd-levels              list the SIMD dispatch levels this host can run
+                           (one name per line, worst->best; each is a valid
+                           LSQNET_SIMD value — CI's forced-level matrix
+                           iterates this list)
   help                     this message
 
 COMMON FLAGS
@@ -116,6 +122,14 @@ fn dispatch(cmd: &str, args: &Args) -> Result<()> {
         "repro" => repro(args),
         "serve" => serve(args),
         "pack" => pack(args),
+        "simd-levels" => {
+            // Machine-consumable by design: ci.sh iterates this list to
+            // drive the forced-level kernel parity matrix.
+            for level in lsqnet::runtime::kernels::SimdLevel::available_levels() {
+                println!("{}", level.name());
+            }
+            Ok(())
+        }
         other => bail!("unknown command {other:?}; run `lsqnet help`"),
     }
 }

@@ -30,8 +30,13 @@
 //! across thread counts too (per-element order never depends on the
 //! split), and across SIMD levels everywhere except `sgemm_nt`'s
 //! reassociated dot reduction (1e-5 — DESIGN.md §SIMD-dispatch). The
-//! thread count comes from the caller's [`Workspace`] (`LSQNET_THREADS=1`
-//! forces serial; serve caps replicas at `cores / replicas`).
+//! fp32 family additionally honors the workspace's
+//! [`super::simd::FpMode`]: the default `Pinned` mode keeps the two-
+//! roundings mul+add reference; the `Fma` tier contracts each element to
+//! one fused rounding (per-element, so the same cross-thread/cross-level
+//! guarantees hold *within* the mode). The thread count comes from the
+//! caller's [`Workspace`] (`LSQNET_THREADS=1` forces serial; serve caps
+//! replicas at `cores / replicas`).
 //!
 //! Accumulation is exact in `i32` provided
 //! `k * Qp_act * max(Qn_w, Qp_w) < 2^31`, which [`check_accumulator_bound`]
@@ -43,8 +48,8 @@
 
 use crate::quant::pack::{unpack_range_spec, Packed};
 
-use super::panel::{fill_tile_panel, fits_i8, tile_len, tile_pairs, PanelizedWeights};
-use super::simd::{pack_xpairs, SimdLevel};
+use super::panel::{fill_tile_panel, fits_i8, PanelGeom, PanelizedWeights};
+use super::simd::{pack_xgroups, FpMode, SimdLevel};
 use super::workspace::{QThreadScratch, Workspace};
 
 /// Rows of the weight matrix per tile (the k blocking factor).
@@ -252,10 +257,12 @@ fn qgemm_core(
 }
 
 /// One thread's share of the quantized GEMM: `mb` activation rows against
-/// the whole weight matrix. Per KC block, the thread packs its activation
-/// rows into i16 pairs once; per KC×NC tile it either borrows the
-/// pre-built panel or builds one into its scratch, then runs the
-/// SIMD-dispatched microkernel ([`SimdLevel::qgemm_tile`]).
+/// the whole weight matrix, at the blocking geometry of the panel source
+/// (pre-built panels carry the autotuner's per-layer [`PanelGeom`]; the
+/// fused mode always uses [`PanelGeom::DEFAULT`]). Per kc block, the
+/// thread packs its activation rows into k-groups once; per kc×nc tile it
+/// either borrows the pre-built panel or builds one into its scratch,
+/// then runs the SIMD-dispatched microkernel ([`SimdLevel::qgemm_tile`]).
 ///
 /// Exception: at [`SimdLevel::Scalar`] the *fused* source skips panel
 /// interleaving entirely and runs the direct unpack-and-dot loop
@@ -281,32 +288,37 @@ fn qgemm_rows(
             return qgemm_rows_scalar_fused(mb, k, n, x, p, scr, acc);
         }
     }
-    for (ik, k0) in (0..k).step_by(KC).enumerate() {
-        let kc = KC.min(k - k0);
-        let pairs = tile_pairs(kc);
-        if scr.xpairs.len() < mb * pairs {
-            scr.xpairs.resize(mb * pairs, 0);
+    let geom = match src {
+        PanelSrc::Fused(_) => PanelGeom::DEFAULT,
+        PanelSrc::Pre(pw) => pw.geom(),
+    };
+    for (ik, k0) in (0..k).step_by(geom.kc).enumerate() {
+        let kc = geom.kc.min(k - k0);
+        let groups = geom.groups(kc);
+        if scr.xpairs.len() < mb * groups {
+            scr.xpairs.resize(mb * groups, 0);
         }
         for i in 0..mb {
-            pack_xpairs(
+            pack_xgroups(
                 &x[i * k + k0..i * k + k0 + kc],
-                &mut scr.xpairs[i * pairs..(i + 1) * pairs],
+                geom.ki,
+                &mut scr.xpairs[i * groups..(i + 1) * groups],
             );
         }
-        for (in_, n0) in (0..n).step_by(NC).enumerate() {
-            let nc = NC.min(n - n0);
+        for (in_, n0) in (0..n).step_by(geom.nc).enumerate() {
+            let nc = geom.nc.min(n - n0);
             let tile: &[i8] = match src {
                 PanelSrc::Pre(pw) => pw.tile(ik, in_),
                 PanelSrc::Fused(p) => {
-                    let len = tile_len(kc, nc);
+                    let len = geom.tile_len(kc, nc);
                     if scr.panel.len() < len {
                         scr.panel.resize(len, 0);
                     }
-                    fill_tile_panel(p, n, k0, kc, n0, nc, &mut scr.row, &mut scr.panel[..len]);
+                    fill_tile_panel(p, n, k0, kc, n0, nc, geom, &mut scr.row, &mut scr.panel[..len]);
                     &scr.panel[..len]
                 }
             };
-            simd.qgemm_tile(tile, &scr.xpairs, mb, pairs, nc, n, n0, acc);
+            simd.qgemm_tile(tile, &scr.xpairs, mb, groups, nc, n, n0, geom, acc);
         }
     }
 }
@@ -406,22 +418,25 @@ pub fn sgemm(
         return;
     }
     let simd = ws.simd();
+    let fp = ws.fp_mode();
     let threads = work_capped(ws.threads().min(m), m * k * n);
     if threads <= 1 {
-        sgemm_rows(simd, m, k, n, x, w, out);
+        sgemm_rows(simd, fp, m, k, n, x, w, out);
     } else {
         let chunk = row_chunk(m, threads);
         scoped_split!(
             out.chunks_mut(chunk * n).zip(x.chunks(chunk * k)),
-            |(out_c, x_c)| sgemm_rows(simd, out_c.len() / n, k, n, x_c, w, out_c)
+            |(out_c, x_c)| sgemm_rows(simd, fp, out_c.len() / n, k, n, x_c, w, out_c)
         );
     }
 }
 
 /// One thread's share of [`sgemm`]: streaming-axpy inner loop (vectorized
 /// without reassociating the per-element sum), zero activations skipped.
+#[allow(clippy::too_many_arguments)]
 fn sgemm_rows(
     simd: SimdLevel,
+    fp: FpMode,
     mb: usize,
     k: usize,
     n: usize,
@@ -439,7 +454,7 @@ fn sgemm_rows(
                     continue;
                 }
                 let wrow = &w[(k0 + kk) * n..(k0 + kk) * n + n];
-                simd.saxpy(xv, wrow, orow);
+                simd.saxpy(fp, xv, wrow, orow);
             }
         }
     }
@@ -475,20 +490,23 @@ pub fn sgemm_nt(
         return;
     }
     let simd = ws.simd();
+    let fp = ws.fp_mode();
     let threads = work_capped(ws.threads().min(m), m * k * n);
     if threads <= 1 {
-        sgemm_nt_rows(simd, m, k, n, a, w, out);
+        sgemm_nt_rows(simd, fp, m, k, n, a, w, out);
     } else {
         let chunk = row_chunk(m, threads);
         scoped_split!(
             out.chunks_mut(chunk * k).zip(a.chunks(chunk * n)),
-            |(out_c, a_c)| sgemm_nt_rows(simd, out_c.len() / k, k, n, a_c, w, out_c)
+            |(out_c, a_c)| sgemm_nt_rows(simd, fp, out_c.len() / k, k, n, a_c, w, out_c)
         );
     }
 }
 
+#[allow(clippy::too_many_arguments)]
 fn sgemm_nt_rows(
     simd: SimdLevel,
+    fp: FpMode,
     mb: usize,
     k: usize,
     n: usize,
@@ -500,7 +518,7 @@ fn sgemm_nt_rows(
         let arow = &a[i * n..(i + 1) * n];
         let orow = &mut out[i * k..(i + 1) * k];
         for (kk, o) in orow.iter_mut().enumerate() {
-            *o = simd.sdot(arow, &w[kk * n..(kk + 1) * n]);
+            *o = simd.sdot(fp, arow, &w[kk * n..(kk + 1) * n]);
         }
     }
 }
@@ -530,14 +548,15 @@ pub fn sgemm_tn(
         return;
     }
     let simd = ws.simd();
+    let fp = ws.fp_mode();
     let threads = work_capped(ws.threads().min(k), m * k * n);
     if threads <= 1 {
-        sgemm_tn_rows(simd, m, k, n, 0, x, dy, out);
+        sgemm_tn_rows(simd, fp, m, k, n, 0, x, dy, out);
     } else {
         let chunk = row_chunk(k, threads);
         scoped_split!(
             out.chunks_mut(chunk * n).enumerate(),
-            |(ci, out_c)| sgemm_tn_rows(simd, m, k, n, ci * chunk, x, dy, out_c)
+            |(ci, out_c)| sgemm_tn_rows(simd, fp, m, k, n, ci * chunk, x, dy, out_c)
         );
     }
 }
@@ -547,6 +566,7 @@ pub fn sgemm_tn(
 #[allow(clippy::too_many_arguments)]
 fn sgemm_tn_rows(
     simd: SimdLevel,
+    fp: FpMode,
     m: usize,
     k: usize,
     n: usize,
@@ -564,7 +584,7 @@ fn sgemm_tn_rows(
             if xv == 0.0 {
                 continue;
             }
-            simd.saxpy(xv, dyrow, &mut out[kk * n..(kk + 1) * n]);
+            simd.saxpy(fp, xv, dyrow, &mut out[kk * n..(kk + 1) * n]);
         }
     }
 }

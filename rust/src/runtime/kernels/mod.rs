@@ -22,23 +22,29 @@
 //!   `cores / replicas`) and process-wide via `LSQNET_THREADS`.
 //! * **Hardware-shaped inner compute** — the GEMM inner loops dispatch
 //!   once per workspace to a runtime-detected [`SimdLevel`]
-//!   (AVX2 / SSE2 / portable scalar; `LSQNET_FORCE_SCALAR=1` pins the
-//!   portable path), the quantized kernel runs over an NR-interleaved i8
-//!   panel layout built either once at model bind
-//!   ([`panel::PanelizedWeights`], the serve default) or per tile into
-//!   per-thread scratch (fused low-memory mode), and the per-value unpack
-//!   is precision-specialized (const-generic `BITS`,
-//!   [`crate::quant::pack::unpack_range_spec`]). `qgemm` stays bitwise
-//!   identical across SIMD levels and panel modes (exact i32 sums) — see
+//!   (AVX-512 VNNI / AVX2 / SSE2 / NEON / portable scalar;
+//!   `LSQNET_SIMD=<name>` pins any available level, `LSQNET_FORCE_SCALAR=1`
+//!   stays as the scalar alias), the quantized kernel runs over an
+//!   interleaved i8 panel layout whose blocking ([`PanelGeom`]) the
+//!   bind-time autotuner ([`tune`]) measures per layer shape — built
+//!   either once at model bind ([`panel::PanelizedWeights`], the serve
+//!   default) or per tile into per-thread scratch (fused low-memory mode,
+//!   always the default geometry), and the per-value unpack is
+//!   precision-specialized (const-generic `BITS`,
+//!   [`crate::quant::pack::unpack_range_spec`]). The fp32 family adds an
+//!   opt-in FMA tier ([`FpMode`], `LSQNET_FMA=1`) behind the same
+//!   determinism story. `qgemm` stays bitwise identical across SIMD
+//!   levels, panel modes, *and* panel geometries (exact i32 sums) — see
 //!   DESIGN.md §SIMD-dispatch.
 //!
 //! Submodules: [`workspace`] (scratch arena + thread resolution), [`gemm`]
 //! (the `qgemm`/`qgemm_panel`/`sgemm`/`sgemm_nt`/`sgemm_tn` kernels),
-//! [`panel`] (the interleaved i8 weight-panel layout), [`simd`] (dispatch
-//! + the per-ISA microkernels), [`conv`] (im2col / col2im / SAME padding),
-//! [`pool`] (max pool, global average pool, ReLU), [`norm`] (folded and
-//! batch-stat batch norm). See DESIGN.md §Kernel-layer for the ownership
-//! rules and determinism guarantee.
+//! [`panel`] (the interleaved i8 weight-panel layout + [`PanelGeom`]),
+//! [`simd`] (dispatch + the per-ISA microkernels), [`tune`] (the
+//! bind-time panel-geometry autotuner), [`conv`] (im2col / col2im / SAME
+//! padding), [`pool`] (max pool, global average pool, ReLU), [`norm`]
+//! (folded and batch-stat batch norm). See DESIGN.md §Kernel-layer for
+//! the ownership rules and determinism guarantee.
 
 pub mod conv;
 pub mod gemm;
@@ -46,6 +52,7 @@ pub mod norm;
 pub mod panel;
 pub mod pool;
 pub mod simd;
+pub mod tune;
 pub mod workspace;
 
 pub use conv::{col2im, im2col, same_padding};
@@ -54,9 +61,9 @@ pub use gemm::{
     QGEMM_MIN_ROWS_PER_THREAD,
 };
 pub use norm::{bn_apply, bn_apply_out, bn_batch_stats, bn_bwd, bn_normalize, fold_bn, BN_EPS};
-pub use panel::PanelizedWeights;
+pub use panel::{PanelGeom, PanelizedWeights};
 pub use pool::{
     global_avg_pool, global_avg_pool_bwd, maxpool2, maxpool2_bwd, relu, relu_bwd, relu_mask,
 };
-pub use simd::SimdLevel;
+pub use simd::{FpMode, SimdLevel};
 pub use workspace::{hardware_threads, Workspace};

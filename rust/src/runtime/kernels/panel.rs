@@ -1,38 +1,103 @@
 //! Panelized weight storage for the quantized GEMM: the packed weight
-//! matrix unpacked **once** into the exact KC×NC-blocked, NR-interleaved
-//! i8 layout the SIMD microkernels consume ([`super::simd`]).
+//! matrix unpacked **once** into the exact blocked, interleaved i8 layout
+//! the SIMD microkernels consume ([`super::simd`]).
 //!
-//! Layout, per KC×NC tile (kc×nc at the ragged edges):
+//! Since the autotuner landed (DESIGN.md §SIMD-dispatch), the blocking is
+//! a per-panel [`PanelGeom`] — `kc`×`nc` tiles, `nr`-wide column blocks,
+//! `ki`-deep k-interleave — instead of compile-time constants. The legacy
+//! constants survive as [`PanelGeom::DEFAULT`] (`KC`=256 × `NC`=64, NR=8,
+//! pair interleave), which is also what `LSQNET_NO_TUNE=1` pins and what
+//! the fused-unpack mode always uses. Layout, per kc×nc tile:
 //!
 //! ```text
-//! tile = [ j-block 0 | j-block 1 | … ]            nblocks = ⌈nc / NR⌉
-//! j-block = [ chunk t=0 | chunk t=1 | … ]         pairs   = ⌈kc / 2⌉
-//! chunk t = 16 bytes:  w[2t][j0+0] w[2t+1][j0+0]  w[2t][j0+1] w[2t+1][j0+1] …
-//!           (two consecutive k rows × NR=8 columns, k-pair interleaved)
+//! tile = [ j-block 0 | j-block 1 | … ]            nblocks = ⌈nc / nr⌉
+//! j-block = [ chunk t=0 | chunk t=1 | … ]         groups  = ⌈kc / ki⌉
+//! chunk t = ki·nr bytes:
+//!           w[ki·t][j0+0] … w[ki·t+ki-1][j0+0]  w[ki·t][j0+1] …
+//!           (ki consecutive k rows × nr columns, k-interleaved)
 //! ```
 //!
-//! One 16-byte chunk is exactly one SIMD load: widened to i16, a single
-//! `pmaddwd` against the broadcast activation pair `(x[2t], x[2t+1])`
-//! yields the eight per-column partial sums. Ragged edges (odd `kc`, `nc`
-//! not a multiple of NR) are zero-padded inside the chunk, so the
-//! microkernels never branch on them.
+//! One chunk is exactly one SIMD load: at `ki=2` it is widened to i16 and
+//! a single `pmaddwd`/`vpdpwssd` against the broadcast activation pair
+//! `(x[2t], x[2t+1])` yields the per-column partial sums; at `ki=4` (the
+//! NEON sdot shape — activations must fit i8) four consecutive k rows
+//! multiply against a broadcast 4×i8 activation group. Ragged edges (kc
+//! not a multiple of ki, nc not a multiple of nr) are zero-padded inside
+//! the chunk, so the microkernels never branch on them. Geometry never
+//! affects *results*: i32 accumulation is exact, so every [`PanelGeom`]
+//! produces bitwise-identical GEMM output (the autotuner only moves time).
 //!
 //! Two build sites share this layout (DESIGN.md §SIMD-dispatch):
 //!
-//! * [`PanelizedWeights::build`] — once per layer at engine/trainer bind
-//!   time; serve replicas then read the shared panels with **zero**
-//!   per-call unpack work, at a memory cost of ~`k·n` bytes per layer
-//!   (vs `k·n·bits/8` packed).
+//! * [`PanelizedWeights::build_for_acts`] — once per layer at
+//!   engine/trainer bind time, with the blocking chosen by the bind-time
+//!   autotuner ([`super::tune`]); serve replicas then read the shared
+//!   panels with **zero** per-call unpack work, at a memory cost of
+//!   ~`k·n` bytes per layer (vs `k·n·bits/8` packed).
 //! * the fused mode of [`super::qgemm`] — per-tile into per-thread
-//!   workspace scratch, preserving the old low-memory behavior for
-//!   deployments where the unpacked panels don't fit
-//!   (`PrepareOptions::low_memory` — `ServerConfig::fused_unpack` /
+//!   workspace scratch at [`PanelGeom::DEFAULT`], preserving the old
+//!   low-memory behavior for deployments where the unpacked panels don't
+//!   fit (`PrepareOptions::low_memory` — `ServerConfig::fused_unpack` /
 //!   `VariantOptions::low_memory` at the serve layer, or
 //!   `LSQNET_FUSED_UNPACK=1`).
 
 use crate::quant::pack::{unpack_range_spec, Packed};
 
 use super::gemm::{KC, NC, NR};
+
+/// Widest column block any microkernel uses (the AVX-512 VNNI level's 16
+/// i32 lanes) — sizes the scalar reference kernel's register tile.
+pub(crate) const MAX_NR: usize = 16;
+
+/// Per-panel blocking geometry: the microkernel shape a
+/// [`PanelizedWeights`] was built for. Chosen at bind time by the
+/// autotuner ([`super::tune`]) from a small per-[`super::simd::SimdLevel`]
+/// candidate set; [`PanelGeom::DEFAULT`] reproduces the pre-autotuner
+/// compile-time constants byte-for-byte.
+///
+/// Geometry is a *time* decision only: `qgemm` output is bitwise
+/// identical for every valid geometry (exact i32 sums).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct PanelGeom {
+    /// Weight rows per tile (the k blocking factor).
+    pub kc: usize,
+    /// Weight columns per tile (the n blocking factor).
+    pub nc: usize,
+    /// Column width of one microkernel block (i32 accumulator lanes).
+    pub nr: usize,
+    /// k-interleave depth of one chunk: 2 (i16-pair kernels — `pmaddwd`,
+    /// `vpdpwssd`, NEON `smlal`) or 4 (the NEON sdot shape; requires
+    /// activations that fit i8).
+    pub ki: usize,
+}
+
+impl PanelGeom {
+    /// The legacy compile-time blocking (`KC`×`NC`, NR=8, pair
+    /// interleave): what [`PanelizedWeights::build`] uses, what
+    /// `LSQNET_NO_TUNE=1` pins, and the fused-unpack mode's only
+    /// geometry. Produces byte-identical panels to the pre-autotuner
+    /// layout.
+    pub const DEFAULT: PanelGeom = PanelGeom { kc: KC, nc: NC, nr: NR, ki: 2 };
+
+    /// `true` iff this geometry is one the kernel layer can execute:
+    /// positive blocking, `nr ≤` [`MAX_NR`], `ki ∈ {2, 4}`.
+    pub fn valid(&self) -> bool {
+        self.kc > 0 && self.nc > 0 && self.nr > 0 && self.nr <= MAX_NR && matches!(self.ki, 2 | 4)
+    }
+
+    /// Activation groups (chunks) in a tile of `kc` rows.
+    #[inline]
+    pub(crate) fn groups(&self, kc: usize) -> usize {
+        kc.div_ceil(self.ki)
+    }
+
+    /// Bytes of one panelized tile: `⌈nc/nr⌉` j-blocks of `groups`
+    /// chunks, `ki·nr` bytes each.
+    #[inline]
+    pub(crate) fn tile_len(&self, kc: usize, nc: usize) -> usize {
+        nc.div_ceil(self.nr) * self.groups(kc) * self.ki * self.nr
+    }
+}
 
 /// `true` iff every stored weight value of `p` fits the i8 panel element.
 /// Signed packings always fit (Eq. 1 weights are symmetric signed, values
@@ -43,24 +108,12 @@ pub(crate) fn fits_i8(p: &Packed) -> bool {
     p.signed || p.bits < 8
 }
 
-/// Number of k-row pairs in a tile of `kc` rows.
-#[inline]
-pub(crate) fn tile_pairs(kc: usize) -> usize {
-    (kc + 1) / 2
-}
-
-/// Bytes of one panelized tile: `⌈nc/NR⌉` j-blocks of `pairs` 16-byte
-/// chunks.
-#[inline]
-pub(crate) fn tile_len(kc: usize, nc: usize) -> usize {
-    ((nc + NR - 1) / NR) * tile_pairs(kc) * 2 * NR
-}
-
 /// Unpack one kc×nc weight tile of `p` (logical row-major `k×n`, rows
-/// `k0..k0+kc`, columns `n0..n0+nc`) into the interleaved panel layout.
-/// `row` is caller scratch for one unpacked tile row; `out` must be
-/// exactly [`tile_len`] bytes. Ragged tiles are zero-padded; full interior
-/// tiles overwrite every byte, so stale scratch needs no clearing.
+/// `k0..k0+kc`, columns `n0..n0+nc`) into the interleaved panel layout of
+/// `geom`. `row` is caller scratch for one unpacked tile row; `out` must
+/// be exactly [`PanelGeom::tile_len`] bytes. Ragged tiles are
+/// zero-padded; full interior tiles overwrite every byte, so stale
+/// scratch needs no clearing.
 #[allow(clippy::too_many_arguments)]
 pub(crate) fn fill_tile_panel(
     p: &Packed,
@@ -69,13 +122,15 @@ pub(crate) fn fill_tile_panel(
     kc: usize,
     n0: usize,
     nc: usize,
+    geom: PanelGeom,
     row: &mut Vec<i32>,
     out: &mut [i8],
 ) {
     debug_assert!(fits_i8(p), "weight values exceed the i8 panel range");
-    debug_assert_eq!(out.len(), tile_len(kc, nc));
-    let pairs = tile_pairs(kc);
-    if kc % 2 != 0 || nc % NR != 0 {
+    debug_assert_eq!(out.len(), geom.tile_len(kc, nc));
+    let (nr, ki) = (geom.nr, geom.ki);
+    let block_len = geom.groups(kc) * ki * nr;
+    if kc % ki != 0 || nc % nr != 0 {
         out.fill(0);
     }
     if row.len() < nc {
@@ -83,10 +138,10 @@ pub(crate) fn fill_tile_panel(
     }
     for kk in 0..kc {
         unpack_range_spec(p, (k0 + kk) * n + n0, nc, row);
-        let (t, r) = (kk / 2, kk % 2);
+        let (t, r) = (kk / ki, kk % ki);
         for (j, &v) in row.iter().enumerate().take(nc) {
-            let (jb, c) = (j / NR, j % NR);
-            out[jb * pairs * 2 * NR + t * 2 * NR + 2 * c + r] = v as i8;
+            let (jb, c) = (j / nr, j % nr);
+            out[jb * block_len + t * ki * nr + c * ki + r] = v as i8;
         }
     }
 }
@@ -97,44 +152,68 @@ pub(crate) fn fill_tile_panel(
 pub struct PanelizedWeights {
     k: usize,
     n: usize,
-    /// Tile start offsets, row-major over the (⌈k/KC⌉ × ⌈n/NC⌉) tile grid,
-    /// with a trailing sentinel equal to `data.len()`.
+    geom: PanelGeom,
+    /// Tile start offsets, row-major over the (⌈k/kc⌉ × ⌈n/nc⌉) tile
+    /// grid, with a trailing sentinel equal to `data.len()`.
     offsets: Vec<usize>,
     data: Vec<i8>,
 }
 
 impl PanelizedWeights {
-    /// Unpack `p` (logical row-major `k×n`) into panel tiles.
+    /// Unpack `p` (logical row-major `k×n`) into panel tiles at the
+    /// legacy [`PanelGeom::DEFAULT`] blocking (no autotuning — the
+    /// deterministic-geometry entry point tests and benches use).
     ///
     /// # Panics
     /// If `p.len != k*n`, or if `p` stores values outside the i8 panel
     /// range (unsigned 8-bit packings — never produced for weights).
     pub fn build(p: &Packed, k: usize, n: usize) -> PanelizedWeights {
+        PanelizedWeights::build_with_geom(p, k, n, PanelGeom::DEFAULT)
+    }
+
+    /// The bind-path entry point: pick the blocking with the bind-time
+    /// autotuner ([`super::tune::tune_geom`] — measured on this layer's
+    /// real `(k, n, bits)` shape, cached process-wide, pinned to
+    /// [`PanelGeom::DEFAULT`] by `LSQNET_NO_TUNE=1`), then build.
+    /// `act_max` is the largest activation magnitude the layer can feed
+    /// this panel (`max(act_qn, act_qp)` from Eq. 1): geometries with
+    /// `ki=4` pack activations as i8 and are only eligible when
+    /// `act_max ≤ 127`.
+    pub fn build_for_acts(p: &Packed, k: usize, n: usize, act_max: i64) -> PanelizedWeights {
+        let geom = super::tune::tune_geom(p, k, n, act_max);
+        PanelizedWeights::build_with_geom(p, k, n, geom)
+    }
+
+    /// Unpack `p` into panel tiles at an explicit `geom` (must satisfy
+    /// [`PanelGeom::valid`]). Every valid geometry yields bitwise-identical
+    /// GEMM results; only throughput differs.
+    pub fn build_with_geom(p: &Packed, k: usize, n: usize, geom: PanelGeom) -> PanelizedWeights {
         assert_eq!(p.len, k * n, "packed weight shape");
         assert!(fits_i8(p), "unsigned 8-bit weights do not fit i8 panels");
-        let (kt, nt) = ((k + KC - 1) / KC, (n + NC - 1) / NC);
+        assert!(geom.valid(), "invalid panel geometry {geom:?}");
+        let (kt, nt) = (k.div_ceil(geom.kc), n.div_ceil(geom.nc));
         let mut offsets = Vec::with_capacity(kt * nt + 1);
         let mut total = 0usize;
         for ik in 0..kt {
-            let kc = KC.min(k - ik * KC);
+            let kc = geom.kc.min(k - ik * geom.kc);
             for in_ in 0..nt {
                 offsets.push(total);
-                total += tile_len(kc, NC.min(n - in_ * NC));
+                total += geom.tile_len(kc, geom.nc.min(n - in_ * geom.nc));
             }
         }
         offsets.push(total);
         let mut data = vec![0i8; total];
-        let mut row = Vec::with_capacity(NC);
+        let mut row = Vec::with_capacity(geom.nc);
         for ik in 0..kt {
-            let kc = KC.min(k - ik * KC);
+            let kc = geom.kc.min(k - ik * geom.kc);
             for in_ in 0..nt {
-                let nc = NC.min(n - in_ * NC);
+                let nc = geom.nc.min(n - in_ * geom.nc);
                 let t = ik * nt + in_;
                 let out = &mut data[offsets[t]..offsets[t + 1]];
-                fill_tile_panel(p, n, ik * KC, kc, in_ * NC, nc, &mut row, out);
+                fill_tile_panel(p, n, ik * geom.kc, kc, in_ * geom.nc, nc, geom, &mut row, out);
             }
         }
-        PanelizedWeights { k, n, offsets, data }
+        PanelizedWeights { k, n, geom, offsets, data }
     }
 
     /// Logical weight rows (the GEMM k dimension).
@@ -147,6 +226,12 @@ impl PanelizedWeights {
         self.n
     }
 
+    /// The blocking geometry these panels were built with (drives the
+    /// `qgemm_panel` loop structure and microkernel selection).
+    pub fn geom(&self) -> PanelGeom {
+        self.geom
+    }
+
     /// Resident panel bytes — the memory cost of the pre-unpacked mode
     /// (compare `Packed::storage_bytes` for the fused-unpack footprint).
     pub fn panel_bytes(&self) -> usize {
@@ -155,7 +240,7 @@ impl PanelizedWeights {
 
     /// The tile at k-block `ik`, n-block `in_`.
     pub(crate) fn tile(&self, ik: usize, in_: usize) -> &[i8] {
-        let nt = (self.n + NC - 1) / NC;
+        let nt = self.n.div_ceil(self.geom.nc);
         let t = ik * nt + in_;
         &self.data[self.offsets[t]..self.offsets[t + 1]]
     }
@@ -168,9 +253,17 @@ mod tests {
     use crate::util::rng::Pcg32;
 
     /// Panel bytes must equal the unpacked weight values, at the layout's
-    /// documented positions, for shapes straddling every tile edge.
+    /// documented positions, for shapes straddling every tile edge — for
+    /// the default geometry and for alternate blockings including the
+    /// ki=4 (NEON sdot) interleave.
     #[test]
     fn panel_layout_matches_unpacked_weights() {
+        let geoms = [
+            PanelGeom::DEFAULT,
+            PanelGeom { kc: 128, nc: 128, nr: 8, ki: 2 },
+            PanelGeom { kc: 256, nc: 64, nr: 16, ki: 2 },
+            PanelGeom { kc: 256, nc: 64, nr: 8, ki: 4 },
+        ];
         for &(k, n, bits) in &[
             (5usize, 3usize, 2u32),
             (KC + 7, NC + 9, 3),
@@ -183,33 +276,37 @@ mod tests {
                 .map(|_| rng.below((qn + qp + 1) as u32) as i32 - qn as i32)
                 .collect();
             let p = pack(&w, bits, true, 1.0).unwrap();
-            let pw = PanelizedWeights::build(&p, k, n);
             let full = unpack(&p);
-            let (kt, nt) = ((k + KC - 1) / KC, (n + NC - 1) / NC);
-            for ik in 0..kt {
-                let kc = KC.min(k - ik * KC);
-                let pairs = tile_pairs(kc);
-                for in_ in 0..nt {
-                    let nc = NC.min(n - in_ * NC);
-                    let tile = pw.tile(ik, in_);
-                    assert_eq!(tile.len(), tile_len(kc, nc));
-                    let nblocks = (nc + NR - 1) / NR;
-                    for jb in 0..nblocks {
-                        for t in 0..pairs {
-                            for c in 0..NR {
-                                for r in 0..2usize {
-                                    let (kk, j) = (2 * t + r, jb * NR + c);
-                                    let got =
-                                        tile[jb * pairs * 2 * NR + t * 2 * NR + 2 * c + r] as i32;
-                                    let want = if kk < kc && j < nc {
-                                        full[(ik * KC + kk) * n + in_ * NC + j]
-                                    } else {
-                                        0 // padding
-                                    };
-                                    assert_eq!(
-                                        got, want,
-                                        "k={k} n={n} bits={bits} tile ({ik},{in_}) kk={kk} j={j}"
-                                    );
+            for geom in geoms {
+                let pw = PanelizedWeights::build_with_geom(&p, k, n, geom);
+                assert_eq!(pw.geom(), geom);
+                let (nr, ki) = (geom.nr, geom.ki);
+                let (kt, nt) = (k.div_ceil(geom.kc), n.div_ceil(geom.nc));
+                for ik in 0..kt {
+                    let kc = geom.kc.min(k - ik * geom.kc);
+                    let (groups, block_len) = (geom.groups(kc), geom.groups(kc) * ki * nr);
+                    for in_ in 0..nt {
+                        let nc = geom.nc.min(n - in_ * geom.nc);
+                        let tile = pw.tile(ik, in_);
+                        assert_eq!(tile.len(), geom.tile_len(kc, nc));
+                        for jb in 0..nc.div_ceil(nr) {
+                            for t in 0..groups {
+                                for c in 0..nr {
+                                    for r in 0..ki {
+                                        let (kk, j) = (ki * t + r, jb * nr + c);
+                                        let got =
+                                            tile[jb * block_len + t * ki * nr + c * ki + r] as i32;
+                                        let want = if kk < kc && j < nc {
+                                            full[(ik * geom.kc + kk) * n + in_ * geom.nc + j]
+                                        } else {
+                                            0 // padding
+                                        };
+                                        assert_eq!(
+                                            got, want,
+                                            "k={k} n={n} bits={bits} {geom:?} \
+                                             tile ({ik},{in_}) kk={kk} j={j}"
+                                        );
+                                    }
                                 }
                             }
                         }
@@ -217,6 +314,20 @@ mod tests {
                 }
             }
         }
+    }
+
+    /// The default geometry must reproduce the pre-autotuner layout
+    /// byte-for-byte (the fused-unpack path and pre-built panels share
+    /// layout code, so this pins both).
+    #[test]
+    fn default_geom_matches_legacy_constants() {
+        let g = PanelGeom::DEFAULT;
+        assert_eq!((g.kc, g.nc, g.nr, g.ki), (KC, NC, NR, 2));
+        assert_eq!(g.tile_len(KC, NC), (NC / NR) * (KC / 2) * 2 * NR);
+        // Ragged edges round up exactly like the old hand-rolled
+        // `(x + d - 1) / d` ceilings did.
+        assert_eq!(g.tile_len(5, 3), ((5 + 1) / 2) * 2 * NR);
+        assert_eq!(g.groups(7), (7 + 1) / 2);
     }
 
     #[test]
@@ -232,8 +343,8 @@ mod tests {
             for (in_, n0) in (0..n).step_by(NC).enumerate() {
                 let nc = NC.min(n - n0);
                 // Stale scratch: the builder must fully define every byte.
-                let mut scratch = vec![0x55i8; tile_len(kc, nc)];
-                fill_tile_panel(&p, n, k0, kc, n0, nc, &mut row, &mut scratch);
+                let mut scratch = vec![0x55i8; PanelGeom::DEFAULT.tile_len(kc, nc)];
+                fill_tile_panel(&p, n, k0, kc, n0, nc, PanelGeom::DEFAULT, &mut row, &mut scratch);
                 assert_eq!(scratch, pw.tile(ik, in_), "tile ({ik},{in_})");
             }
         }
@@ -244,5 +355,12 @@ mod tests {
     fn unsigned_8bit_weights_rejected() {
         let p = pack(&[200, 3], 8, false, 1.0).unwrap();
         PanelizedWeights::build(&p, 1, 2);
+    }
+
+    #[test]
+    #[should_panic(expected = "invalid panel geometry")]
+    fn invalid_geometry_rejected() {
+        let p = pack(&[1, -1], 2, true, 1.0).unwrap();
+        PanelizedWeights::build_with_geom(&p, 1, 2, PanelGeom { kc: 64, nc: 64, nr: 8, ki: 3 });
     }
 }

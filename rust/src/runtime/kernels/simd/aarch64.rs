@@ -1,0 +1,232 @@
+//! aarch64 NEON microkernels (`std::arch`, no external deps) — the
+//! [`super::SimdLevel::Neon`] rung, so non-x86 hosts stop falling through
+//! to scalar.
+//!
+//! # Safety
+//!
+//! Mirrors `x86.rs`: every function is `unsafe` for target features
+//! (reached only through [`super::SimdLevel::Neon`], which
+//! [`super::SimdLevel::detect`] yields only after
+//! `is_aarch64_feature_detected!("neon")`) and for raw-pointer bounds
+//! (the dispatcher asserts panel/xgroups/accumulator sizes first). Only
+//! baseline Armv8.0 NEON intrinsics are used — no `dotprod` extension
+//! required — so the module runs on every aarch64 host.
+//!
+//! Two quantized kernels cover the two panel interleaves:
+//!
+//! * **pair kernel** (`ki=2`, the portable geometry): the 16-byte chunk
+//!   `[w[2t][c], w[2t+1][c]]×8` widens to i16 (`sxtl`), multiplies
+//!   against the broadcast activation pair reinterpreted as alternating
+//!   i16 lanes `[x0, x1, x0, x1, …]` (`smull`), and a pairwise add
+//!   (`addp`) folds each in-column product pair into its i32 column
+//!   lane — the NEON spelling of `pmaddwd`.
+//! * **quad kernel** (`ki=4`, the sdot shape): four k rows per column per
+//!   32-byte chunk multiply as i8×i8→i16 (`smull` — products ≤ 127·127
+//!   fit i16 with headroom, which is why this geometry requires
+//!   activations in i8 range), then two pairwise widening/folding adds
+//!   (`saddlp`, `addp`) produce the i32 column sums: the same
+//!   4-element dot-product dataflow as the `sdot` instruction, from
+//!   baseline intrinsics.
+
+#![allow(unsafe_op_in_unsafe_fn)]
+
+use std::arch::aarch64::*;
+
+use super::super::gemm::NR;
+
+/// NEON quantized tile kernel, pair interleave (`nr=8`, `ki=2`).
+#[target_feature(enable = "neon")]
+#[allow(clippy::too_many_arguments)]
+pub(crate) unsafe fn qgemm_tile_neon_pair(
+    panel: &[i8],
+    xp: &[i32],
+    mb: usize,
+    pairs: usize,
+    nc: usize,
+    n: usize,
+    n0: usize,
+    acc: &mut [i32],
+) {
+    let nblocks = nc.div_ceil(NR);
+    let block_len = pairs * 2 * NR;
+    for i in 0..mb {
+        let xrow = xp.as_ptr().add(i * pairs);
+        for jb in 0..nblocks {
+            let block = panel.as_ptr().add(jb * block_len);
+            let mut acc_lo = vdupq_n_s32(0); // columns 0..4
+            let mut acc_hi = vdupq_n_s32(0); // columns 4..8
+            for t in 0..pairs {
+                let raw = vld1q_s8(block.add(t * 16));
+                // [x0, x1, x0, x1, …] as 8 i16 lanes (little-endian:
+                // lane 0 is the low half of the packed pair = x[2t]).
+                let xv = vreinterpretq_s16_s32(vdupq_n_s32(*xrow.add(t)));
+                let w_lo = vmovl_s8(vget_low_s8(raw)); // cols 0..4, pair-interleaved
+                let w_hi = vmovl_s8(vget_high_s8(raw)); // cols 4..8
+                // smull gives [w0c·x0, w1c·x1] adjacent per column;
+                // addp folds each pair into its column's i32 lane.
+                let p0 = vmull_s16(vget_low_s16(w_lo), vget_low_s16(xv));
+                let p1 = vmull_s16(vget_high_s16(w_lo), vget_high_s16(xv));
+                acc_lo = vaddq_s32(acc_lo, vpaddq_s32(p0, p1));
+                let p2 = vmull_s16(vget_low_s16(w_hi), vget_low_s16(xv));
+                let p3 = vmull_s16(vget_high_s16(w_hi), vget_high_s16(xv));
+                acc_hi = vaddq_s32(acc_hi, vpaddq_s32(p2, p3));
+            }
+            store_cols8(acc, i * n + n0 + jb * NR, NR.min(nc - jb * NR), acc_lo, acc_hi);
+        }
+    }
+}
+
+/// NEON quantized tile kernel, quad interleave (`nr=8`, `ki=4` — the
+/// sdot-shaped geometry the autotuner offers when activations fit i8).
+#[target_feature(enable = "neon")]
+#[allow(clippy::too_many_arguments)]
+pub(crate) unsafe fn qgemm_tile_neon_quad(
+    panel: &[i8],
+    xq: &[i32],
+    mb: usize,
+    groups: usize,
+    nc: usize,
+    n: usize,
+    n0: usize,
+    acc: &mut [i32],
+) {
+    let nblocks = nc.div_ceil(NR);
+    let block_len = groups * 4 * NR;
+    for i in 0..mb {
+        let xrow = xq.as_ptr().add(i * groups);
+        for jb in 0..nblocks {
+            let block = panel.as_ptr().add(jb * block_len);
+            let mut acc_lo = vdupq_n_s32(0); // columns 0..4
+            let mut acc_hi = vdupq_n_s32(0); // columns 4..8
+            for t in 0..groups {
+                // [x0..x3] repeated 4× as 16 i8 lanes.
+                let xv = vreinterpretq_s8_u32(vdupq_n_u32(*xrow.add(t) as u32));
+                let raw_lo = vld1q_s8(block.add(t * 32)); // cols 0..4 × 4 k rows
+                let raw_hi = vld1q_s8(block.add(t * 32 + 16)); // cols 4..8
+                // i8×i8→i16 products, then pairwise-fold twice:
+                // saddlp pairs k0·x0+k1·x1 / k2·x2+k3·x3 per column,
+                // addp folds those into one i32 lane per column.
+                let a = vpaddlq_s16(vmull_s8(vget_low_s8(raw_lo), vget_low_s8(xv)));
+                let b = vpaddlq_s16(vmull_s8(vget_high_s8(raw_lo), vget_high_s8(xv)));
+                acc_lo = vaddq_s32(acc_lo, vpaddq_s32(a, b));
+                let c = vpaddlq_s16(vmull_s8(vget_low_s8(raw_hi), vget_low_s8(xv)));
+                let d = vpaddlq_s16(vmull_s8(vget_high_s8(raw_hi), vget_high_s8(xv)));
+                acc_hi = vaddq_s32(acc_hi, vpaddq_s32(c, d));
+            }
+            store_cols8(acc, i * n + n0 + jb * NR, NR.min(nc - jb * NR), acc_lo, acc_hi);
+        }
+    }
+}
+
+/// Add two 4-lane i32 accumulators into `acc[off..off+js]` (js ≤ 8),
+/// spilling through a stack tile at ragged edges like the x86 kernels.
+#[target_feature(enable = "neon")]
+unsafe fn store_cols8(acc: &mut [i32], off: usize, js: usize, lo: int32x4_t, hi: int32x4_t) {
+    let dst = acc.as_mut_ptr().add(off);
+    if js == NR {
+        vst1q_s32(dst, vaddq_s32(vld1q_s32(dst), lo));
+        vst1q_s32(dst.add(4), vaddq_s32(vld1q_s32(dst.add(4)), hi));
+    } else {
+        let mut tmp = [0i32; NR];
+        vst1q_s32(tmp.as_mut_ptr(), lo);
+        vst1q_s32(tmp.as_mut_ptr().add(4), hi);
+        for (c, &v) in tmp.iter().enumerate().take(js) {
+            *dst.add(c) += v;
+        }
+    }
+}
+
+/// NEON `out[j] += alpha * x[j]` — explicit mul then add (`vmlaq_f32` is
+/// avoided: the compiler may contract it to a fused `fmla`, which would
+/// break the [`super::FpMode::Pinned`] bitwise contract vs scalar).
+#[target_feature(enable = "neon")]
+pub(crate) unsafe fn saxpy_neon(alpha: f32, x: &[f32], out: &mut [f32]) {
+    let len = out.len().min(x.len());
+    let va = vdupq_n_f32(alpha);
+    let mut j = 0usize;
+    while j + 4 <= len {
+        let o = vld1q_f32(out.as_ptr().add(j));
+        let v = vld1q_f32(x.as_ptr().add(j));
+        vst1q_f32(out.as_mut_ptr().add(j), vaddq_f32(o, vmulq_f32(va, v)));
+        j += 4;
+    }
+    while j < len {
+        *out.get_unchecked_mut(j) += alpha * *x.get_unchecked(j);
+        j += 1;
+    }
+}
+
+/// FMA-tier NEON saxpy: one fused `fmla` rounding per element, matching
+/// `f32::mul_add` bitwise ([`super::FpMode::Fma`]).
+#[target_feature(enable = "neon")]
+pub(crate) unsafe fn saxpy_neon_fma(alpha: f32, x: &[f32], out: &mut [f32]) {
+    let len = out.len().min(x.len());
+    let va = vdupq_n_f32(alpha);
+    let mut j = 0usize;
+    while j + 4 <= len {
+        let o = vld1q_f32(out.as_ptr().add(j));
+        let v = vld1q_f32(x.as_ptr().add(j));
+        vst1q_f32(out.as_mut_ptr().add(j), vfmaq_f32(o, va, v));
+        j += 4;
+    }
+    while j < len {
+        let o = out.get_unchecked_mut(j);
+        *o = alpha.mul_add(*x.get_unchecked(j), *o);
+        j += 1;
+    }
+}
+
+/// NEON dot product: 4 lane accumulators (mul + add, no contraction),
+/// reduced in the same fixed order as the x86 `hsum128` —
+/// `(l0 + l2) + (l1 + l3)` (reassociated vs scalar: 1e-5 contract).
+#[target_feature(enable = "neon")]
+pub(crate) unsafe fn sdot_neon(a: &[f32], b: &[f32]) -> f32 {
+    let len = a.len().min(b.len());
+    let mut acc = vdupq_n_f32(0.0);
+    let mut j = 0usize;
+    while j + 4 <= len {
+        let va = vld1q_f32(a.as_ptr().add(j));
+        let vb = vld1q_f32(b.as_ptr().add(j));
+        acc = vaddq_f32(acc, vmulq_f32(va, vb));
+        j += 4;
+    }
+    let mut sum = hsum_f32x4(acc);
+    while j < len {
+        sum += *a.get_unchecked(j) * *b.get_unchecked(j);
+        j += 1;
+    }
+    sum
+}
+
+/// FMA-tier NEON dot product (fused lane accumulators, same fixed-order
+/// reduce).
+#[target_feature(enable = "neon")]
+pub(crate) unsafe fn sdot_neon_fma(a: &[f32], b: &[f32]) -> f32 {
+    let len = a.len().min(b.len());
+    let mut acc = vdupq_n_f32(0.0);
+    let mut j = 0usize;
+    while j + 4 <= len {
+        let va = vld1q_f32(a.as_ptr().add(j));
+        let vb = vld1q_f32(b.as_ptr().add(j));
+        acc = vfmaq_f32(acc, va, vb);
+        j += 4;
+    }
+    let mut sum = hsum_f32x4(acc);
+    while j < len {
+        sum = a.get_unchecked(j).mul_add(*b.get_unchecked(j), sum);
+        j += 1;
+    }
+    sum
+}
+
+/// Horizontal sum of 4 fp32 lanes in the fixed `(l0 + l2) + (l1 + l3)`
+/// order (matches x86 `hsum128`, keeping sdot results identical across
+/// vector levels at equal lane width).
+#[target_feature(enable = "neon")]
+unsafe fn hsum_f32x4(v: float32x4_t) -> f32 {
+    let l0 = vgetq_lane_f32(v, 0);
+    let l1 = vgetq_lane_f32(v, 1);
+    let l2 = vgetq_lane_f32(v, 2);
+    let l3 = vgetq_lane_f32(v, 3);
+    (l0 + l2) + (l1 + l3)
+}

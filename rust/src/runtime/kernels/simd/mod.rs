@@ -2,9 +2,13 @@
 //!
 //! One [`SimdLevel`] is detected per process (cached) and copied into every
 //! [`super::Workspace`] at construction, so the hot loops pay a single
-//! `match` per tile / per row instead of re-detecting features. Three
+//! `match` per tile / per row instead of re-detecting features. Five
 //! levels exist:
 //!
+//! * [`SimdLevel::Avx512Vnni`] — 512-bit x86_64 path: `vpdpwssd` fuses the
+//!   AVX2 rung's multiply-add-accumulate triple into one instruction over
+//!   sixteen i32 lanes (a 256-bit VL variant serves 8-wide panel
+//!   geometries). Requires avx512f+avx512bw+avx512vl+avx512vnni.
 //! * [`SimdLevel::Avx2`] — 256-bit x86_64 path: the quantized microkernel
 //!   widens interleaved i8 weight panels to i16 (`vpmovsxbw`) and runs
 //!   pair-wise multiply-accumulate into eight i32 lanes (`vpmaddwd`); the
@@ -13,30 +17,56 @@
 //!   x86_64 baseline, so this level is always available there): the same
 //!   panel layout processed in two 4-column halves (`pmaddwd`), fp32 in
 //!   4 lanes.
+//! * [`SimdLevel::Neon`] — aarch64 128-bit path (`simd/aarch64.rs`):
+//!   `smull`/`addp` pair kernel plus an sdot-shaped `ki=4` quad kernel,
+//!   fp32 in 4 lanes. Baseline Armv8.0 NEON only.
 //! * [`SimdLevel::Scalar`] — portable Rust, bit-for-bit the reference the
-//!   other levels are tested against. Always available; pinned by
-//!   `LSQNET_FORCE_SCALAR=1` (the CI cross-check) or
-//!   [`super::Workspace::force_scalar`] (the in-process parity tests).
+//!   other levels are tested against, and geometry-generic: it executes
+//!   any valid [`PanelGeom`], so unsupported (level, geometry) pairs fall
+//!   back here and stay correct by construction. Always available;
+//!   pinned by `LSQNET_SIMD=scalar` / `LSQNET_FORCE_SCALAR=1` (the CI
+//!   cross-checks) or [`super::Workspace::force_scalar`] (the in-process
+//!   parity tests).
+//!
+//! `LSQNET_SIMD=<name>` pins any *available* level process-wide (an
+//! unavailable name falls through to the best detected level — CI can run
+//! the same matrix on any host); `LSQNET_FORCE_SCALAR=1` is the legacy
+//! alias for `LSQNET_SIMD=scalar` and wins when both are set.
 //!
 //! Determinism across levels (DESIGN.md §SIMD-dispatch): the quantized
 //! kernel accumulates in `i32`, where addition is exact and associative, so
-//! `qgemm` is **bitwise identical** at every level. The fp32 `saxpy` used
-//! by `sgemm`/`sgemm_tn` performs the same per-element mul+add (no FMA, no
-//! reassociation) and stays bitwise too; only [`SimdLevel::sdot`]
+//! `qgemm` is **bitwise identical** at every level *and every panel
+//! geometry*. The fp32 `saxpy` used by `sgemm`/`sgemm_tn` performs the
+//! same per-element mul+add and stays bitwise too; only [`SimdLevel::sdot`]
 //! (`sgemm_nt`'s inner product) reassociates the sum across lanes and is
-//! held to the kernel layer's 1e-5 fp32 tolerance instead.
+//! held to the kernel layer's 1e-5 fp32 tolerance instead. The same
+//! split holds inside the [`FpMode::Fma`] tier: saxpy is one fused
+//! rounding per element at every level (`f32::mul_add` scalar, `vfmadd`
+//! vector), sdot reassociates. *Across* the two FpModes results differ
+//! (that is the point — one rounding vs two), which is why
+//! [`FpMode::Pinned`] remains the default and the test reference.
 
 mod scalar;
+#[cfg(target_arch = "aarch64")]
+#[path = "aarch64.rs"]
+mod arm;
 #[cfg(target_arch = "x86_64")]
 mod x86;
 
 use std::sync::OnceLock;
 
 use super::gemm::NR;
+use super::panel::PanelGeom;
 
 /// Instruction-set level the kernel layer dispatches to, resolved once per
 /// process by [`SimdLevel::detect`] and stored per-[`super::Workspace`].
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+///
+/// Every variant exists on every architecture (so level names, env pins,
+/// and the autotuner cache key are portable); [`SimdLevel::available`]
+/// says whether this host can actually execute one. Dispatching an
+/// unavailable level is safe — the quantized kernel falls back to the
+/// geometry-generic scalar path — but the constructors never produce one.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub enum SimdLevel {
     /// Portable Rust reference path (always available, any architecture).
     Scalar,
@@ -44,64 +74,167 @@ pub enum SimdLevel {
     Sse2,
     /// x86_64 256-bit path (`is_x86_feature_detected!("avx2")`).
     Avx2,
+    /// x86_64 AVX-512 VNNI path (avx512f+bw+vl+vnni all detected).
+    Avx512Vnni,
+    /// aarch64 NEON path (baseline Armv8.0 vector unit).
+    Neon,
 }
 
-/// `LSQNET_FORCE_SCALAR=1` pins the portable path process-wide (read once).
+/// `LSQNET_FORCE_SCALAR=1` pins the portable path process-wide (read once;
+/// legacy alias of `LSQNET_SIMD=scalar`, takes precedence over it).
 fn env_force_scalar() -> bool {
     static FORCE: OnceLock<bool> = OnceLock::new();
     *FORCE.get_or_init(|| crate::util::env_truthy("LSQNET_FORCE_SCALAR"))
 }
 
+/// Host FMA support for the fp32 [`FpMode::Fma`] tier, detected once.
+/// (Distinct from the level ladder: x86 `fma` is a separate CPUID bit
+/// from avx2; every aarch64 NEON host has fused `fmla`.)
+pub(crate) fn fma_available() -> bool {
+    static FMA: OnceLock<bool> = OnceLock::new();
+    *FMA.get_or_init(|| {
+        #[cfg(target_arch = "x86_64")]
+        {
+            std::arch::is_x86_feature_detected!("fma")
+        }
+        #[cfg(target_arch = "aarch64")]
+        {
+            true
+        }
+        #[cfg(not(any(target_arch = "x86_64", target_arch = "aarch64")))]
+        {
+            false
+        }
+    })
+}
+
 impl SimdLevel {
-    /// The best level this host supports, honoring the
-    /// `LSQNET_FORCE_SCALAR` pin. Feature detection runs once per process;
-    /// the result is cached.
+    /// All levels, worst to best (the order `available_levels` and the
+    /// `simd-levels` CLI listing use).
+    pub const ALL: [SimdLevel; 5] = [
+        SimdLevel::Scalar,
+        SimdLevel::Sse2,
+        SimdLevel::Avx2,
+        SimdLevel::Avx512Vnni,
+        SimdLevel::Neon,
+    ];
+
+    /// The level this process dispatches to: the best available, unless
+    /// `LSQNET_FORCE_SCALAR=1` (legacy pin) or `LSQNET_SIMD=<name>` (any
+    /// available level by name; unavailable names fall through to the
+    /// best) overrides. Feature detection runs once; the result is cached.
     pub fn detect() -> SimdLevel {
         static LEVEL: OnceLock<SimdLevel> = OnceLock::new();
         *LEVEL.get_or_init(|| {
             if env_force_scalar() {
                 return SimdLevel::Scalar;
             }
-            #[cfg(target_arch = "x86_64")]
-            {
-                if std::arch::is_x86_feature_detected!("avx2") {
-                    SimdLevel::Avx2
-                } else {
-                    SimdLevel::Sse2
+            if let Ok(name) = std::env::var("LSQNET_SIMD") {
+                if let Some(level) = SimdLevel::parse(name.trim()) {
+                    if level.available() {
+                        return level;
+                    }
                 }
             }
-            #[cfg(not(target_arch = "x86_64"))]
-            {
-                SimdLevel::Scalar
-            }
+            SimdLevel::best_available()
         })
     }
 
-    /// Short name for logs and the bench-trajectory JSON.
+    /// The widest level this host supports (ignores env pins).
+    pub fn best_available() -> SimdLevel {
+        SimdLevel::ALL
+            .into_iter()
+            .rev()
+            .find(|l| l.available())
+            .unwrap_or(SimdLevel::Scalar)
+    }
+
+    /// `true` iff this host can execute this level's kernels.
+    pub fn available(self) -> bool {
+        match self {
+            SimdLevel::Scalar => true,
+            SimdLevel::Sse2 => cfg!(target_arch = "x86_64"),
+            SimdLevel::Avx2 => {
+                #[cfg(target_arch = "x86_64")]
+                {
+                    std::arch::is_x86_feature_detected!("avx2")
+                }
+                #[cfg(not(target_arch = "x86_64"))]
+                {
+                    false
+                }
+            }
+            SimdLevel::Avx512Vnni => {
+                #[cfg(target_arch = "x86_64")]
+                {
+                    std::arch::is_x86_feature_detected!("avx512f")
+                        && std::arch::is_x86_feature_detected!("avx512bw")
+                        && std::arch::is_x86_feature_detected!("avx512vl")
+                        && std::arch::is_x86_feature_detected!("avx512vnni")
+                }
+                #[cfg(not(target_arch = "x86_64"))]
+                {
+                    false
+                }
+            }
+            SimdLevel::Neon => {
+                #[cfg(target_arch = "aarch64")]
+                {
+                    std::arch::is_aarch64_feature_detected!("neon")
+                }
+                #[cfg(not(target_arch = "aarch64"))]
+                {
+                    false
+                }
+            }
+        }
+    }
+
+    /// The levels this host can execute, worst to best (always contains
+    /// [`SimdLevel::Scalar`]). Drives the CI forced-level matrix via the
+    /// `simd-levels` CLI subcommand.
+    pub fn available_levels() -> Vec<SimdLevel> {
+        SimdLevel::ALL.into_iter().filter(|l| l.available()).collect()
+    }
+
+    /// Short name for logs, the bench-trajectory JSON, and the
+    /// `LSQNET_SIMD` pin.
     pub fn name(self) -> &'static str {
         match self {
             SimdLevel::Scalar => "scalar",
             SimdLevel::Sse2 => "sse2",
             SimdLevel::Avx2 => "avx2",
+            SimdLevel::Avx512Vnni => "avx512vnni",
+            SimdLevel::Neon => "neon",
         }
     }
 
-    /// One (KC×NC) tile of the quantized GEMM for `mb` activation rows:
+    /// Inverse of [`SimdLevel::name`] (case-insensitive).
+    pub fn parse(name: &str) -> Option<SimdLevel> {
+        let lower = name.to_ascii_lowercase();
+        SimdLevel::ALL.into_iter().find(|l| l.name() == lower)
+    }
+
+    /// One (kc×nc) tile of the quantized GEMM for `mb` activation rows:
     /// `acc[i*n + n0 + j] += Σ_kk x[i][kk] · w[kk][n0+j]` with the weights
-    /// in the interleaved i8 panel layout ([`super::panel`]) and the
-    /// activations pre-packed into i16 pairs (`xp`, `mb × pairs` entries).
+    /// in the interleaved i8 panel layout ([`super::panel`]) at geometry
+    /// `geom` and the activations pre-packed into k-groups (`xg`,
+    /// `mb × groups` entries — [`pack_xgroups`]).
     ///
-    /// All levels produce bitwise-identical `acc` (exact i32 sums).
+    /// All levels and all geometries produce bitwise-identical `acc`
+    /// (exact i32 sums). (level, geometry) pairs without a dedicated
+    /// vector kernel run the geometry-generic scalar path.
     #[allow(clippy::too_many_arguments)]
     pub(crate) fn qgemm_tile(
         self,
         panel: &[i8],
-        xp: &[i32],
+        xg: &[i32],
         mb: usize,
-        pairs: usize,
+        groups: usize,
         nc: usize,
         n: usize,
         n0: usize,
+        geom: PanelGeom,
         acc: &mut [i32],
     ) {
         if mb == 0 || nc == 0 {
@@ -109,68 +242,180 @@ impl SimdLevel {
         }
         // Bounds the unsafe SIMD paths rely on (checked here once per tile
         // so the inner loops can use raw loads/stores).
-        let nblocks = (nc + NR - 1) / NR;
-        assert!(panel.len() >= nblocks * pairs * 2 * NR, "panel tile too small");
-        assert!(xp.len() >= mb * pairs, "xpairs buffer too small");
+        assert!(geom.valid(), "invalid panel geometry {geom:?}");
+        let nblocks = nc.div_ceil(geom.nr);
+        assert!(panel.len() >= nblocks * groups * geom.ki * geom.nr, "panel tile too small");
+        assert!(xg.len() >= mb * groups, "xgroups buffer too small");
         assert!(acc.len() >= (mb - 1) * n + n0 + nc, "accumulator too small");
         assert!(n0 + nc <= n, "tile exceeds row width");
-        match self {
-            SimdLevel::Scalar => scalar::qgemm_tile(panel, xp, mb, pairs, nc, n, n0, acc),
+        match (self, geom.nr, geom.ki) {
             #[cfg(target_arch = "x86_64")]
-            SimdLevel::Sse2 => unsafe {
-                x86::qgemm_tile_sse2(panel, xp, mb, pairs, nc, n, n0, acc)
+            (SimdLevel::Sse2, NR, 2) => unsafe {
+                x86::qgemm_tile_sse2(panel, xg, mb, groups, nc, n, n0, acc)
             },
             #[cfg(target_arch = "x86_64")]
-            SimdLevel::Avx2 => unsafe {
-                x86::qgemm_tile_avx2(panel, xp, mb, pairs, nc, n, n0, acc)
+            (SimdLevel::Avx2, NR, 2) => unsafe {
+                x86::qgemm_tile_avx2(panel, xg, mb, groups, nc, n, n0, acc)
             },
-            #[cfg(not(target_arch = "x86_64"))]
-            _ => scalar::qgemm_tile(panel, xp, mb, pairs, nc, n, n0, acc),
+            #[cfg(target_arch = "x86_64")]
+            (SimdLevel::Avx512Vnni, 16, 2) => unsafe {
+                x86::qgemm_tile_vnni512(panel, xg, mb, groups, nc, n, n0, acc)
+            },
+            #[cfg(target_arch = "x86_64")]
+            (SimdLevel::Avx512Vnni, NR, 2) => unsafe {
+                x86::qgemm_tile_vnni256(panel, xg, mb, groups, nc, n, n0, acc)
+            },
+            #[cfg(target_arch = "aarch64")]
+            (SimdLevel::Neon, NR, 2) => unsafe {
+                arm::qgemm_tile_neon_pair(panel, xg, mb, groups, nc, n, n0, acc)
+            },
+            #[cfg(target_arch = "aarch64")]
+            (SimdLevel::Neon, NR, 4) => unsafe {
+                arm::qgemm_tile_neon_quad(panel, xg, mb, groups, nc, n, n0, acc)
+            },
+            // Scalar level, plus any (level, geometry) pair with no
+            // dedicated kernel: the geometry-generic reference path.
+            _ => scalar::qgemm_tile(panel, xg, mb, groups, nc, n, n0, geom, acc),
         }
     }
 
     /// `out[j] += alpha * x[j]` over `min(out.len(), x.len())` elements.
-    /// Per-element mul+add in every level (no FMA contraction), so the
-    /// result is bitwise identical to the scalar loop.
-    pub(crate) fn saxpy(self, alpha: f32, x: &[f32], out: &mut [f32]) {
-        match self {
-            SimdLevel::Scalar => scalar::saxpy(alpha, x, out),
+    /// Elementwise at every level, so the result is bitwise identical to
+    /// the same-`fp` scalar loop: [`FpMode::Pinned`] is mul then add (two
+    /// roundings), [`FpMode::Fma`] one fused rounding (`f32::mul_add` /
+    /// `vfmadd`/`fmla` — requires [`fma_available`], which the dispatcher
+    /// re-checks and otherwise falls back to the scalar `mul_add` loop,
+    /// preserving Fma semantics bitwise).
+    pub(crate) fn saxpy(self, fp: FpMode, alpha: f32, x: &[f32], out: &mut [f32]) {
+        match (self, fp) {
+            (SimdLevel::Scalar, FpMode::Pinned) => scalar::saxpy(alpha, x, out),
+            (SimdLevel::Scalar, FpMode::Fma) => scalar::saxpy_fma(alpha, x, out),
             #[cfg(target_arch = "x86_64")]
-            SimdLevel::Sse2 => unsafe { x86::saxpy_sse2(alpha, x, out) },
+            (SimdLevel::Sse2, FpMode::Pinned) => unsafe { x86::saxpy_sse2(alpha, x, out) },
+            // No sse+fma kernel: pre-AVX2 FMA hosts are a museum piece,
+            // and the scalar mul_add loop is bitwise-identical anyway.
             #[cfg(target_arch = "x86_64")]
-            SimdLevel::Avx2 => unsafe { x86::saxpy_avx2(alpha, x, out) },
-            #[cfg(not(target_arch = "x86_64"))]
-            _ => scalar::saxpy(alpha, x, out),
+            (SimdLevel::Sse2, FpMode::Fma) => scalar::saxpy_fma(alpha, x, out),
+            #[cfg(target_arch = "x86_64")]
+            (SimdLevel::Avx2 | SimdLevel::Avx512Vnni, FpMode::Pinned) => unsafe {
+                x86::saxpy_avx2(alpha, x, out)
+            },
+            #[cfg(target_arch = "x86_64")]
+            (SimdLevel::Avx2 | SimdLevel::Avx512Vnni, FpMode::Fma) => {
+                if fma_available() {
+                    unsafe { x86::saxpy_fma256(alpha, x, out) }
+                } else {
+                    scalar::saxpy_fma(alpha, x, out)
+                }
+            }
+            #[cfg(target_arch = "aarch64")]
+            (SimdLevel::Neon, FpMode::Pinned) => unsafe { arm::saxpy_neon(alpha, x, out) },
+            #[cfg(target_arch = "aarch64")]
+            (SimdLevel::Neon, FpMode::Fma) => unsafe { arm::saxpy_neon_fma(alpha, x, out) },
+            (_, FpMode::Pinned) => scalar::saxpy(alpha, x, out),
+            (_, FpMode::Fma) => scalar::saxpy_fma(alpha, x, out),
         }
     }
 
     /// Dot product over `min(a.len(), b.len())` elements. The SIMD levels
     /// accumulate in lanes and reduce at the end, which *reassociates* the
     /// fp32 sum — results agree with scalar to the kernel layer's 1e-5
-    /// tolerance, not bitwise (DESIGN.md §SIMD-dispatch).
-    pub(crate) fn sdot(self, a: &[f32], b: &[f32]) -> f32 {
-        match self {
-            SimdLevel::Scalar => scalar::sdot(a, b),
+    /// tolerance, not bitwise, in both [`FpMode`]s (DESIGN.md
+    /// §SIMD-dispatch).
+    pub(crate) fn sdot(self, fp: FpMode, a: &[f32], b: &[f32]) -> f32 {
+        match (self, fp) {
+            (SimdLevel::Scalar, FpMode::Pinned) => scalar::sdot(a, b),
+            (SimdLevel::Scalar, FpMode::Fma) => scalar::sdot_fma(a, b),
             #[cfg(target_arch = "x86_64")]
-            SimdLevel::Sse2 => unsafe { x86::sdot_sse2(a, b) },
+            (SimdLevel::Sse2, FpMode::Pinned) => unsafe { x86::sdot_sse2(a, b) },
             #[cfg(target_arch = "x86_64")]
-            SimdLevel::Avx2 => unsafe { x86::sdot_avx2(a, b) },
-            #[cfg(not(target_arch = "x86_64"))]
-            _ => scalar::sdot(a, b),
+            (SimdLevel::Sse2, FpMode::Fma) => scalar::sdot_fma(a, b),
+            #[cfg(target_arch = "x86_64")]
+            (SimdLevel::Avx2 | SimdLevel::Avx512Vnni, FpMode::Pinned) => unsafe {
+                x86::sdot_avx2(a, b)
+            },
+            #[cfg(target_arch = "x86_64")]
+            (SimdLevel::Avx2 | SimdLevel::Avx512Vnni, FpMode::Fma) => {
+                if fma_available() {
+                    unsafe { x86::sdot_fma256(a, b) }
+                } else {
+                    scalar::sdot_fma(a, b)
+                }
+            }
+            #[cfg(target_arch = "aarch64")]
+            (SimdLevel::Neon, FpMode::Pinned) => unsafe { arm::sdot_neon(a, b) },
+            #[cfg(target_arch = "aarch64")]
+            (SimdLevel::Neon, FpMode::Fma) => unsafe { arm::sdot_neon_fma(a, b) },
+            (_, FpMode::Pinned) => scalar::sdot(a, b),
+            (_, FpMode::Fma) => scalar::sdot_fma(a, b),
         }
     }
 }
 
-/// Pack one activation row into the i16-pair stream [`SimdLevel::qgemm_tile`]
-/// consumes: entry `t` holds `(x[2t] as i16, x[2t+1] as i16)` in the low and
-/// high halves of an `i32` (a trailing odd element pairs with zero).
+/// Floating-point contraction mode for the fp32 training GEMMs
+/// (`sgemm`/`sgemm_nt`/`sgemm_tn`), stored per-[`super::Workspace`].
+///
+/// [`FpMode::Pinned`] (default) keeps the historical two-roundings
+/// mul+add semantics — the bitwise reference every test pins.
+/// [`FpMode::Fma`] contracts to one fused rounding per element, the perf
+/// tier for training throughput; enabled per-workspace
+/// ([`super::Workspace::set_fp_mode`]) or process-wide with
+/// `LSQNET_FMA=1` (ignored when the host lacks FMA units). The two modes
+/// differ in low-order bits by design; CI cross-checks them against each
+/// other at the kernel layer's fp32 tolerance.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, Default)]
+pub enum FpMode {
+    /// Separate mul and add roundings — the deterministic test reference.
+    #[default]
+    Pinned,
+    /// One fused multiply-add rounding per element.
+    Fma,
+}
+
+impl FpMode {
+    /// The process-default mode: `LSQNET_FMA=1` when the host has FMA
+    /// units, else [`FpMode::Pinned`] (read once).
+    pub fn default_mode() -> FpMode {
+        static MODE: OnceLock<FpMode> = OnceLock::new();
+        *MODE.get_or_init(|| {
+            if crate::util::env_truthy("LSQNET_FMA") && fma_available() {
+                FpMode::Fma
+            } else {
+                FpMode::Pinned
+            }
+        })
+    }
+
+    /// Short name for logs and bench metadata.
+    pub fn name(self) -> &'static str {
+        match self {
+            FpMode::Pinned => "pinned",
+            FpMode::Fma => "fma",
+        }
+    }
+}
+
+/// Pack one activation row into the k-group stream
+/// [`SimdLevel::qgemm_tile`] consumes for interleave depth `ki` —
+/// [`pack_xpairs`] for `ki=2`, [`pack_xquads`] for `ki=4`.
+pub(crate) fn pack_xgroups(x: &[i32], ki: usize, out: &mut [i32]) {
+    match ki {
+        2 => pack_xpairs(x, out),
+        4 => pack_xquads(x, out),
+        _ => unreachable!("unsupported k-interleave {ki}"),
+    }
+}
+
+/// Pack one activation row into the i16-pair stream the `ki=2` kernels
+/// consume: entry `t` holds `(x[2t] as i16, x[2t+1] as i16)` in the low and
+/// high halves of an `i32` (a trailing partial group pads with zero).
 ///
 /// Values must fit i16 — guaranteed for Eq. 1 activations at ≤ 8 bits
 /// (|v̄| ≤ 255), and a **hard** assert here because silently truncating
 /// would void `qgemm`'s exactness contract for out-of-contract callers
 /// (the check is O(m·k) next to O(m·k·n) dot work).
 pub(crate) fn pack_xpairs(x: &[i32], out: &mut [i32]) {
-    let pairs = (x.len() + 1) / 2;
+    let pairs = x.len().div_ceil(2);
     debug_assert!(out.len() >= pairs);
     for (t, o) in out.iter_mut().enumerate().take(pairs) {
         let x0 = x[2 * t];
@@ -185,6 +430,31 @@ pub(crate) fn pack_xpairs(x: &[i32], out: &mut [i32]) {
     }
 }
 
+/// Pack one activation row into the 4×i8 stream the `ki=4` kernels
+/// consume: entry `t` holds `x[4t..4t+4]` as four little-endian i8 bytes
+/// (trailing partial group pads with zero).
+///
+/// Values must fit **i8** — which is why `ki=4` geometries are only
+/// offered by the autotuner when the layer's activation range does
+/// (`act_max ≤ 127`); hard assert for the same exactness reason as
+/// [`pack_xpairs`].
+pub(crate) fn pack_xquads(x: &[i32], out: &mut [i32]) {
+    let quads = x.len().div_ceil(4);
+    debug_assert!(out.len() >= quads);
+    for (t, o) in out.iter_mut().enumerate().take(quads) {
+        let mut bytes = [0u8; 4];
+        for (r, b) in bytes.iter_mut().enumerate() {
+            let v = if 4 * t + r < x.len() { x[4 * t + r] } else { 0 };
+            assert!(
+                (i8::MIN as i32..=i8::MAX as i32).contains(&v),
+                "qgemm activation {v} out of the i8 range the ki=4 panel kernels require",
+            );
+            *b = v as i8 as u8;
+        }
+        *o = u32::from_le_bytes(bytes) as i32;
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -194,7 +464,23 @@ mod tests {
         let a = SimdLevel::detect();
         let b = SimdLevel::detect();
         assert_eq!(a, b);
-        assert!(["scalar", "sse2", "avx2"].contains(&a.name()));
+        assert!(a.available());
+        assert!(SimdLevel::ALL.map(SimdLevel::name).contains(&a.name()));
+    }
+
+    #[test]
+    fn parse_round_trips_every_level() {
+        for level in SimdLevel::ALL {
+            assert_eq!(SimdLevel::parse(level.name()), Some(level));
+            assert_eq!(SimdLevel::parse(&level.name().to_ascii_uppercase()), Some(level));
+        }
+        assert_eq!(SimdLevel::parse("avx9000"), None);
+        // available_levels always offers the portable path and only
+        // executable levels.
+        let avail = SimdLevel::available_levels();
+        assert!(avail.contains(&SimdLevel::Scalar));
+        assert!(avail.iter().all(|l| l.available()));
+        assert!(avail.contains(&SimdLevel::best_available()));
     }
 
     #[test]
@@ -210,58 +496,99 @@ mod tests {
         }
     }
 
-    /// Every available level must agree bitwise with scalar on the
-    /// quantized tile kernel, including ragged column blocks and odd k.
+    #[test]
+    fn pack_xquads_round_trips_signed_bytes() {
+        let x = vec![-3i32, 127, 0, -128, 7];
+        let mut out = vec![0i32; 2];
+        pack_xquads(&x, &mut out);
+        for (t, &quad) in out.iter().enumerate() {
+            for (r, &b) in (quad as u32).to_le_bytes().iter().enumerate() {
+                let want = if 4 * t + r < x.len() { x[4 * t + r] } else { 0 };
+                assert_eq!(b as i8 as i32, want, "t={t} r={r}");
+            }
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "i8 range")]
+    fn pack_xquads_rejects_wide_activations() {
+        pack_xquads(&[200], &mut [0i32; 1]);
+    }
+
+    /// Every level (available or not — unsupported combos fall back to the
+    /// geometry-generic scalar path) must agree bitwise with a
+    /// first-principles dot product, at every kernel geometry.
     #[test]
     fn qgemm_tile_levels_match_scalar_bitwise() {
         let mut rng = crate::util::rng::Pcg32::seeded(77);
-        for &(mb, kc, nc) in &[(1usize, 1usize, 1usize), (3, 7, 11), (4, 16, 8), (2, 5, 19)] {
-            let pairs = (kc + 1) / 2;
-            let nblocks = (nc + NR - 1) / NR;
-            // Random panel (pad rows already zeroed by construction here).
-            let mut panel = vec![0i8; nblocks * pairs * 2 * NR];
-            for jb in 0..nblocks {
-                for t in 0..pairs {
-                    for c in 0..NR {
-                        let j = jb * NR + c;
-                        for r in 0..2usize {
-                            let kk = 2 * t + r;
-                            if j < nc && kk < kc {
-                                panel[jb * pairs * 2 * NR + t * 2 * NR + 2 * c + r] =
-                                    (rng.below(31) as i32 - 15) as i8;
+        let geoms = [
+            PanelGeom::DEFAULT,
+            PanelGeom { kc: 256, nc: 64, nr: 16, ki: 2 },
+            PanelGeom { kc: 256, nc: 64, nr: 8, ki: 4 },
+        ];
+        for geom in geoms {
+            let (nr, ki) = (geom.nr, geom.ki);
+            for &(mb, kc, nc) in
+                &[(1usize, 1usize, 1usize), (3, 7, 11), (4, 16, 8), (2, 5, 19), (2, 9, 33)]
+            {
+                let groups = kc.div_ceil(ki);
+                let nblocks = nc.div_ceil(nr);
+                let block_len = groups * ki * nr;
+                // Random panel (pad positions stay zero by construction).
+                let mut panel = vec![0i8; nblocks * block_len];
+                for jb in 0..nblocks {
+                    for t in 0..groups {
+                        for c in 0..nr {
+                            for r in 0..ki {
+                                let (j, kk) = (jb * nr + c, ki * t + r);
+                                if j < nc && kk < kc {
+                                    panel[jb * block_len + t * ki * nr + c * ki + r] =
+                                        (rng.below(31) as i32 - 15) as i8;
+                                }
                             }
                         }
                     }
                 }
-            }
-            let x: Vec<i32> = (0..mb * kc).map(|_| rng.below(16) as i32 - 4).collect();
-            let mut xp = vec![0i32; mb * pairs];
-            for i in 0..mb {
-                pack_xpairs(&x[i * kc..(i + 1) * kc], &mut xp[i * pairs..(i + 1) * pairs]);
-            }
-            let n = nc + 3; // embed the tile at n0=2 in a wider row
-            let n0 = 2usize;
-            let mut base = vec![0i32; mb * n];
-            SimdLevel::Scalar.qgemm_tile(&panel, &xp, mb, pairs, nc, n, n0, &mut base);
-            // Scalar reference from first principles.
-            for i in 0..mb {
-                for j in 0..nc {
-                    let mut want = 0i64;
-                    for kk in 0..kc {
-                        let jb = j / NR;
-                        let idx = jb * pairs * 2 * NR + (kk / 2) * 2 * NR + 2 * (j % NR) + kk % 2;
-                        want += x[i * kc + kk] as i64 * panel[idx] as i64;
+                let xmax: u32 = if ki == 4 { 127 } else { 255 };
+                let x: Vec<i32> =
+                    (0..mb * kc).map(|_| rng.below(xmax + 5) as i32 - 4).collect();
+                let mut xg = vec![0i32; mb * groups];
+                for i in 0..mb {
+                    pack_xgroups(&x[i * kc..(i + 1) * kc], ki, &mut xg[i * groups..]);
+                }
+                let n = nc + 3; // embed the tile at n0=2 in a wider row
+                let n0 = 2usize;
+                let mut base = vec![0i32; mb * n];
+                SimdLevel::Scalar.qgemm_tile(&panel, &xg, mb, groups, nc, n, n0, geom, &mut base);
+                // Scalar reference from first principles.
+                for i in 0..mb {
+                    for j in 0..nc {
+                        let mut want = 0i64;
+                        for kk in 0..kc {
+                            let idx = (j / nr) * block_len + (kk / ki) * ki * nr + (j % nr) * ki
+                                + kk % ki;
+                            want += x[i * kc + kk] as i64 * panel[idx] as i64;
+                        }
+                        assert_eq!(
+                            base[i * n + n0 + j] as i64,
+                            want,
+                            "scalar ({i},{j}) {geom:?}"
+                        );
                     }
-                    assert_eq!(base[i * n + n0 + j] as i64, want, "scalar ({i},{j})");
                 }
-            }
-            for level in [SimdLevel::Sse2, SimdLevel::Avx2] {
-                if !level_available(level) {
-                    continue;
+                for level in SimdLevel::ALL {
+                    if !level.available() {
+                        continue;
+                    }
+                    let mut got = vec![0i32; mb * n];
+                    level.qgemm_tile(&panel, &xg, mb, groups, nc, n, n0, geom, &mut got);
+                    assert_eq!(
+                        base,
+                        got,
+                        "{} vs scalar (mb={mb} kc={kc} nc={nc} {geom:?})",
+                        level.name()
+                    );
                 }
-                let mut got = vec![0i32; mb * n];
-                level.qgemm_tile(&panel, &xp, mb, pairs, nc, n, n0, &mut got);
-                assert_eq!(base, got, "{} vs scalar (mb={mb} kc={kc} nc={nc})", level.name());
             }
         }
     }
@@ -272,41 +599,56 @@ mod tests {
         for len in [1usize, 4, 8, 13, 64, 100] {
             let a: Vec<f32> = (0..len).map(|_| rng.normal()).collect();
             let b: Vec<f32> = (0..len).map(|_| rng.normal()).collect();
-            let mut out_s = b.clone();
-            SimdLevel::Scalar.saxpy(0.37, &a, &mut out_s);
-            let dot_s = SimdLevel::Scalar.sdot(&a, &b);
-            for level in [SimdLevel::Sse2, SimdLevel::Avx2] {
-                if !level_available(level) {
-                    continue;
+            for fp in [FpMode::Pinned, FpMode::Fma] {
+                let mut out_s = b.clone();
+                SimdLevel::Scalar.saxpy(fp, 0.37, &a, &mut out_s);
+                let dot_s = SimdLevel::Scalar.sdot(fp, &a, &b);
+                for level in SimdLevel::ALL {
+                    if !level.available() {
+                        continue;
+                    }
+                    let mut out = b.clone();
+                    level.saxpy(fp, 0.37, &a, &mut out);
+                    // saxpy is elementwise: bitwise equal within a mode.
+                    for (p, q) in out_s.iter().zip(&out) {
+                        assert_eq!(
+                            p.to_bits(),
+                            q.to_bits(),
+                            "saxpy {} {} len={len}",
+                            level.name(),
+                            fp.name()
+                        );
+                    }
+                    // sdot reassociates: tolerance only.
+                    let dot = level.sdot(fp, &a, &b);
+                    assert!(
+                        (dot - dot_s).abs() <= 1e-5 * dot_s.abs().max(1.0),
+                        "sdot {} {} len={len}: {dot} vs {dot_s}",
+                        level.name(),
+                        fp.name()
+                    );
                 }
-                let mut out = b.clone();
-                level.saxpy(0.37, &a, &mut out);
-                // saxpy is elementwise: bitwise equal.
-                for (p, q) in out_s.iter().zip(&out) {
-                    assert_eq!(p.to_bits(), q.to_bits(), "saxpy {} len={len}", level.name());
-                }
-                // sdot reassociates: tolerance only.
-                let dot = level.sdot(&a, &b);
-                assert!(
-                    (dot - dot_s).abs() <= 1e-5 * dot_s.abs().max(1.0),
-                    "sdot {} len={len}: {dot} vs {dot_s}",
-                    level.name()
-                );
             }
         }
     }
 
-    fn level_available(level: SimdLevel) -> bool {
-        #[cfg(target_arch = "x86_64")]
-        {
-            match level {
-                SimdLevel::Scalar | SimdLevel::Sse2 => true,
-                SimdLevel::Avx2 => std::arch::is_x86_feature_detected!("avx2"),
-            }
+    /// The two FpModes agree to tolerance (they differ in low-order bits
+    /// by design: one fused rounding vs two).
+    #[test]
+    fn fma_mode_matches_pinned_to_tolerance() {
+        let mut rng = crate::util::rng::Pcg32::seeded(79);
+        let a: Vec<f32> = (0..257).map(|_| rng.normal()).collect();
+        let b: Vec<f32> = (0..257).map(|_| rng.normal()).collect();
+        let level = SimdLevel::detect();
+        let mut pinned = b.clone();
+        level.saxpy(FpMode::Pinned, 1.618, &a, &mut pinned);
+        let mut fused = b.clone();
+        level.saxpy(FpMode::Fma, 1.618, &a, &mut fused);
+        for (p, f) in pinned.iter().zip(&fused) {
+            assert!((p - f).abs() <= 1e-5 * p.abs().max(1.0), "{p} vs {f}");
         }
-        #[cfg(not(target_arch = "x86_64"))]
-        {
-            level == SimdLevel::Scalar
-        }
+        let dp = level.sdot(FpMode::Pinned, &a, &b);
+        let df = level.sdot(FpMode::Fma, &a, &b);
+        assert!((dp - df).abs() <= 1e-5 * dp.abs().max(1.0), "{dp} vs {df}");
     }
 }

@@ -1,43 +1,69 @@
 //! Portable reference implementations of the SIMD microkernels — the
 //! always-available [`super::SimdLevel::Scalar`] path, and the semantics
-//! the x86 paths are tested against ([`super::SimdLevel`] documents which
-//! kernels must match bitwise and which to 1e-5).
+//! every vector path is tested against ([`super::SimdLevel`] documents
+//! which kernels must match bitwise and which to 1e-5). The quantized
+//! kernel here is geometry-generic: it executes *any* valid
+//! [`PanelGeom`], so it doubles as the fallback for (level, geometry)
+//! pairs that have no dedicated vector kernel — correctness for every
+//! autotuner candidate holds by construction.
 
-use super::super::gemm::NR;
+use super::super::panel::{PanelGeom, MAX_NR};
 
 /// Quantized tile kernel over the interleaved i8 panel layout (see
-/// [`super::super::panel`]): for each activation row and NR-column block,
-/// accumulate the i16-pair dot products in i32. The caller
+/// [`super::super::panel`]): for each activation row and `nr`-column
+/// block, accumulate the k-group dot products in i32. `xg` holds one
+/// packed activation group per i32 (`ki=2`: two i16 halves; `ki=4`: four
+/// i8 bytes, little-endian). The caller
 /// ([`super::SimdLevel::qgemm_tile`]) has already bounds-checked every
 /// slice.
 #[allow(clippy::too_many_arguments)]
 pub(crate) fn qgemm_tile(
     panel: &[i8],
-    xp: &[i32],
+    xg: &[i32],
     mb: usize,
-    pairs: usize,
+    groups: usize,
     nc: usize,
     n: usize,
     n0: usize,
+    geom: PanelGeom,
     acc: &mut [i32],
 ) {
-    let nblocks = (nc + NR - 1) / NR;
-    let block_len = pairs * 2 * NR;
+    let (nr, ki) = (geom.nr, geom.ki);
+    debug_assert!(nr <= MAX_NR && matches!(ki, 2 | 4));
+    let nblocks = nc.div_ceil(nr);
+    let block_len = groups * ki * nr;
     for i in 0..mb {
-        let xrow = &xp[i * pairs..(i + 1) * pairs];
+        let xrow = &xg[i * groups..(i + 1) * groups];
         for jb in 0..nblocks {
             let block = &panel[jb * block_len..(jb + 1) * block_len];
-            let mut r = [0i32; NR];
-            for (t, &pair) in xrow.iter().enumerate() {
-                let x0 = pair as i16 as i32;
-                let x1 = pair >> 16; // arithmetic shift: high i16, sign-extended
-                let chunk = &block[t * 2 * NR..(t + 1) * 2 * NR];
-                for (c, rj) in r.iter_mut().enumerate() {
-                    *rj += x0 * chunk[2 * c] as i32 + x1 * chunk[2 * c + 1] as i32;
+            let mut r = [0i32; MAX_NR];
+            for (t, &g) in xrow.iter().enumerate() {
+                let chunk = &block[t * ki * nr..(t + 1) * ki * nr];
+                if ki == 2 {
+                    let x0 = g as i16 as i32;
+                    let x1 = g >> 16; // arithmetic shift: high i16, sign-extended
+                    for (c, rj) in r.iter_mut().enumerate().take(nr) {
+                        *rj += x0 * chunk[2 * c] as i32 + x1 * chunk[2 * c + 1] as i32;
+                    }
+                } else {
+                    let xb = (g as u32).to_le_bytes();
+                    let x = [
+                        xb[0] as i8 as i32,
+                        xb[1] as i8 as i32,
+                        xb[2] as i8 as i32,
+                        xb[3] as i8 as i32,
+                    ];
+                    for (c, rj) in r.iter_mut().enumerate().take(nr) {
+                        let w = &chunk[4 * c..4 * c + 4];
+                        *rj += x[0] * w[0] as i32
+                            + x[1] * w[1] as i32
+                            + x[2] * w[2] as i32
+                            + x[3] * w[3] as i32;
+                    }
                 }
             }
-            let js = NR.min(nc - jb * NR);
-            let off = i * n + n0 + jb * NR;
+            let js = nr.min(nc - jb * nr);
+            let off = i * n + n0 + jb * nr;
             for (a, &rj) in acc[off..off + js].iter_mut().zip(&r[..js]) {
                 *a += rj;
             }
@@ -46,10 +72,21 @@ pub(crate) fn qgemm_tile(
 }
 
 /// `out[j] += alpha * x[j]`, sequential — one mul rounding and one add
-/// rounding per element, the contract every level preserves.
+/// rounding per element, the contract every level preserves in
+/// [`super::FpMode::Pinned`] mode.
 pub(crate) fn saxpy(alpha: f32, x: &[f32], out: &mut [f32]) {
     for (o, &v) in out.iter_mut().zip(x) {
         *o += alpha * v;
+    }
+}
+
+/// [`super::FpMode::Fma`] variant of [`saxpy`]: one fused
+/// multiply-add rounding per element (`f32::mul_add` lowers to a scalar
+/// FMA on every target the vector levels run on), matching the vector
+/// FMA kernels' per-element semantics bitwise.
+pub(crate) fn saxpy_fma(alpha: f32, x: &[f32], out: &mut [f32]) {
+    for (o, &v) in out.iter_mut().zip(x) {
+        *o = alpha.mul_add(v, *o);
     }
 }
 
@@ -59,6 +96,18 @@ pub(crate) fn sdot(a: &[f32], b: &[f32]) -> f32 {
     let mut acc = 0.0f32;
     for (&x, &y) in a.iter().zip(b) {
         acc += x * y;
+    }
+    acc
+}
+
+/// [`super::FpMode::Fma`] variant of [`sdot`]: sequential fused
+/// multiply-adds. Serial order differs from the vector FMA kernels'
+/// 8-lane reassociation, so `sgemm_nt` stays a tolerance (not bitwise)
+/// comparison across levels — same story as the Pinned tier.
+pub(crate) fn sdot_fma(a: &[f32], b: &[f32]) -> f32 {
+    let mut acc = 0.0f32;
+    for (&x, &y) in a.iter().zip(b) {
+        acc = x.mul_add(y, acc);
     }
     acc
 }

@@ -1,0 +1,233 @@
+//! Bind-time microkernel autotuner: pick a [`PanelGeom`] per layer shape
+//! by *measuring*, not guessing (DESIGN.md §SIMD-dispatch).
+//!
+//! Blocking factors that win on one (k, n, bits, SIMD level) combination
+//! lose on another — a wide-n layer wants deeper kc blocks, the VNNI
+//! level wants 16-wide j-blocks, NEON hosts with i8-range activations
+//! want the `ki=4` sdot interleave. Instead of freezing one compromise
+//! into `const`s, [`tune_geom`] times the real panel GEMM over a small
+//! per-level candidate set **on the layer's own shape** (clipped to a
+//! sub-shape cap so bind time stays milliseconds) and bakes the winner
+//! into the [`PanelizedWeights`](super::panel::PanelizedWeights) being
+//! built.
+//!
+//! Safety of the whole idea rests on one invariant, enforced by the
+//! parity proptests: **geometry never changes results** — `qgemm`
+//! accumulates in exact i32, so every candidate produces bitwise-identical
+//! output and the timer can only ever move *time*. That also makes the
+//! cache race-free by construction: if two binds tune the same key
+//! concurrently and disagree (timing noise), either answer is correct.
+//!
+//! The winner is cached process-wide per [`TuneKey`] — (k, n, bits,
+//! activation range class, [`SimdLevel`]) — so registry replicas and hot
+//! `load`s of the same architecture never re-tune. `LSQNET_NO_TUNE=1`
+//! pins [`PanelGeom::DEFAULT`] (the legacy constants) for
+//! determinism-sensitive workflows; it is read per call so tests can
+//! toggle it.
+
+use std::collections::HashMap;
+use std::sync::{Mutex, OnceLock};
+use std::time::Instant;
+
+use crate::quant::lsq::qrange;
+use crate::quant::pack::{pack, Packed};
+use crate::util::rng::Pcg32;
+
+use super::gemm::qgemm_panel;
+use super::panel::{fits_i8, PanelGeom, PanelizedWeights};
+use super::simd::SimdLevel;
+use super::workspace::Workspace;
+
+/// Timing sub-shape caps: layers larger than this are measured on a
+/// clipped k×n prefix (blocking behavior is periodic in whole tiles, so a
+/// few tiles' worth predicts the full shape; an unclipped 4096×4096 layer
+/// would push bind time from milliseconds toward seconds).
+const TUNE_K_CAP: usize = 1024;
+const TUNE_N_CAP: usize = 256;
+/// Activation rows for the timing runs — one serve-sized microbatch.
+const TUNE_M: usize = 16;
+/// Timing repetitions per candidate; the minimum is taken (min-of-N is
+/// the standard scheduler-noise filter for microbenchmarks).
+const TUNE_REPS: usize = 3;
+
+/// Process-wide tuning cache key. `acts_i8` classifies the layer's
+/// activation range (it gates `ki=4` candidates), `level` the dispatch
+/// rung — the same shape tuned under a different forced level is a
+/// different measurement.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+struct TuneKey {
+    k: usize,
+    n: usize,
+    bits: u32,
+    acts_i8: bool,
+    level: SimdLevel,
+}
+
+fn cache() -> &'static Mutex<HashMap<TuneKey, PanelGeom>> {
+    static CACHE: OnceLock<Mutex<HashMap<TuneKey, PanelGeom>>> = OnceLock::new();
+    CACHE.get_or_init(|| Mutex::new(HashMap::new()))
+}
+
+/// Number of (shape, bits, level) entries tuned so far in this process —
+/// observability for tests and bind-time diagnostics: a second bind of
+/// the same model must not grow this.
+pub fn cache_len() -> usize {
+    cache().lock().unwrap().len()
+}
+
+/// `LSQNET_NO_TUNE=1` pins [`PanelGeom::DEFAULT`]. Read per call (not
+/// cached) so determinism-sensitive tests can set and unset it.
+fn no_tune() -> bool {
+    crate::util::env_truthy("LSQNET_NO_TUNE")
+}
+
+/// The candidate blockings for one dispatch level. Small by design
+/// (2–4): the default always competes, plus the level's plausible
+/// rivals — wider j-blocks where the microkernel has 16 lanes, a
+/// deeper-k/narrower-n split, and on NEON the `ki=4` sdot interleave
+/// when the activation range permits it.
+fn candidates(level: SimdLevel, acts_i8: bool) -> Vec<PanelGeom> {
+    let mut c = match level {
+        SimdLevel::Avx512Vnni => vec![
+            PanelGeom::DEFAULT,
+            PanelGeom { kc: 256, nc: 64, nr: 16, ki: 2 },
+            PanelGeom { kc: 128, nc: 128, nr: 16, ki: 2 },
+        ],
+        SimdLevel::Neon => vec![PanelGeom::DEFAULT, PanelGeom { kc: 128, nc: 128, nr: 8, ki: 2 }],
+        _ => vec![
+            PanelGeom::DEFAULT,
+            PanelGeom { kc: 128, nc: 128, nr: 8, ki: 2 },
+            PanelGeom { kc: 512, nc: 32, nr: 8, ki: 2 },
+        ],
+    };
+    if level == SimdLevel::Neon && acts_i8 {
+        c.push(PanelGeom { kc: 256, nc: 64, nr: 8, ki: 4 });
+    }
+    c
+}
+
+/// The blocking geometry to build `p`'s panels with: the cached winner
+/// for this (shape, bits, activation class, level) if one exists, else a
+/// fresh measurement (cached afterwards). `act_max` is the layer's
+/// largest activation magnitude — `≤ 127` unlocks i8-activation (`ki=4`)
+/// candidates. `LSQNET_NO_TUNE=1` short-circuits to
+/// [`PanelGeom::DEFAULT`].
+pub(crate) fn tune_geom(p: &Packed, k: usize, n: usize, act_max: i64) -> PanelGeom {
+    if no_tune() || !fits_i8(p) {
+        return PanelGeom::DEFAULT;
+    }
+    let level = SimdLevel::detect();
+    let acts_i8 = act_max <= i8::MAX as i64;
+    let key = TuneKey { k, n, bits: p.bits, acts_i8, level };
+    if let Some(&g) = cache().lock().unwrap().get(&key) {
+        return g;
+    }
+    let cands = candidates(level, acts_i8);
+    let geom = measure(p.bits, p.signed, k.min(TUNE_K_CAP), n.min(TUNE_N_CAP), acts_i8, &cands);
+    // Two binds may race to tune the same key; both wrote a *correct*
+    // geometry (bitwise invariant), so last-writer-wins is fine.
+    cache().lock().unwrap().insert(key, geom);
+    geom
+}
+
+/// Time every candidate on a synthetic (kk×nn, `bits`) layer and return
+/// the fastest. Weights and activations are synthetic but in-range (the
+/// kernels' cost is shape-dependent, not value-dependent — the only
+/// value sensitivity, the fused scalar zero-skip, is not on the panel
+/// path being timed). Panel builds happen *outside* the timed region:
+/// the bind path pays the build once, the serve hot loop never does, so
+/// only steady-state GEMM time may vote.
+fn measure(
+    bits: u32,
+    signed: bool,
+    kk: usize,
+    nn: usize,
+    acts_i8: bool,
+    cands: &[PanelGeom],
+) -> PanelGeom {
+    let (qn, qp) = qrange(bits, signed);
+    let mut rng =
+        Pcg32::seeded(0xB17E ^ ((kk as u64) << 24) ^ ((nn as u64) << 8) ^ bits as u64);
+    let span = (qn + qp + 1) as u32;
+    let w: Vec<i32> = (0..kk * nn).map(|_| rng.below(span) as i32 - qn as i32).collect();
+    let packed = pack(&w, bits, signed, 1.0).expect("synthetic tuning weights pack");
+    let xmax: u32 = if acts_i8 { i8::MAX as u32 } else { 255 };
+    let x: Vec<i32> = (0..TUNE_M * kk).map(|_| rng.below(xmax + 1) as i32).collect();
+    // Serial, and on the process dispatch level: the tuned artifact is
+    // consumed by replicas whose per-call split varies, but per-tile
+    // kernel cost — what geometry controls — does not depend on the
+    // split.
+    let mut ws = Workspace::with_threads(1);
+    let mut out = vec![0.0f32; TUNE_M * nn];
+    let mut best: Option<(u128, PanelGeom)> = None;
+    for &g in cands {
+        let pw = PanelizedWeights::build_with_geom(&packed, kk, nn, g);
+        qgemm_panel(&mut ws, TUNE_M, kk, nn, &x, &pw, 1.0, None, &mut out); // warm caches
+        let mut t_min = u128::MAX;
+        for _ in 0..TUNE_REPS {
+            let t0 = Instant::now();
+            qgemm_panel(&mut ws, TUNE_M, kk, nn, &x, &pw, 1.0, None, &mut out);
+            t_min = t_min.min(t0.elapsed().as_nanos());
+        }
+        if best.map(|(t, _)| t_min < t).unwrap_or(true) {
+            best = Some((t_min, g));
+        }
+    }
+    best.map(|(_, g)| g).unwrap_or(PanelGeom::DEFAULT)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn candidates_always_include_default_and_stay_valid() {
+        for level in SimdLevel::ALL {
+            for acts_i8 in [false, true] {
+                let c = candidates(level, acts_i8);
+                assert!(c.contains(&PanelGeom::DEFAULT), "{}", level.name());
+                assert!((2..=4).contains(&c.len()), "{}", level.name());
+                assert!(c.iter().all(|g| g.valid()));
+                // ki=4 needs i8 activations: never offered otherwise.
+                assert!(acts_i8 || c.iter().all(|g| g.ki == 2));
+            }
+        }
+    }
+
+    #[test]
+    fn tune_caches_per_shape_and_reuses_across_binds() {
+        let mut rng = Pcg32::seeded(4242);
+        let (k, n, bits) = (96usize, 40usize, 4u32);
+        let w: Vec<i32> = (0..k * n).map(|_| rng.below(15) as i32 - 7).collect();
+        let p = pack(&w, bits, true, 1.0).unwrap();
+        let g1 = tune_geom(&p, k, n, 255);
+        let len_after_first = cache_len();
+        // Second bind of the same shape: cache hit, identical geometry,
+        // no new entry.
+        let g2 = tune_geom(&p, k, n, 255);
+        assert_eq!(g1, g2);
+        assert_eq!(cache_len(), len_after_first);
+        assert!(g1.valid());
+        // A different activation class is a different key (it changes
+        // the candidate set).
+        let g3 = tune_geom(&p, k, n, 127);
+        assert!(g3.valid());
+        assert!(cache_len() > len_after_first);
+    }
+
+    /// `LSQNET_NO_TUNE=1` must pin the legacy constants. Set → assert →
+    /// remove runs sequentially inside one test; a concurrently running
+    /// tuned bind would only ever pick a different-but-bitwise-identical
+    /// geometry, so the env race is benign by the module invariant.
+    #[test]
+    fn no_tune_pins_default_geometry() {
+        let mut rng = Pcg32::seeded(4343);
+        let (k, n) = (64usize, 24usize);
+        let w: Vec<i32> = (0..k * n).map(|_| rng.below(3) as i32 - 1).collect();
+        let p = pack(&w, 2, true, 1.0).unwrap();
+        std::env::set_var("LSQNET_NO_TUNE", "1");
+        let g = tune_geom(&p, k, n, 255);
+        std::env::remove_var("LSQNET_NO_TUNE");
+        assert_eq!(g, PanelGeom::DEFAULT);
+    }
+}

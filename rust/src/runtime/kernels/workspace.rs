@@ -25,7 +25,7 @@
 
 use std::sync::OnceLock;
 
-use super::simd::SimdLevel;
+use super::simd::{FpMode, SimdLevel};
 
 /// Process-wide hard cap from the `LSQNET_THREADS` environment variable,
 /// read once. 0 = unset (no cap).
@@ -94,6 +94,10 @@ pub struct Workspace {
     /// SIMD dispatch level for every kernel call drawing on this
     /// workspace.
     simd: SimdLevel,
+    /// fp32 contraction mode for the sgemm family (default
+    /// [`FpMode::Pinned`]; `LSQNET_FMA=1` or
+    /// [`Workspace::set_fp_mode`] opts into the FMA tier).
+    fp: FpMode,
     /// `qgemm` i32 accumulator (`m×n`, resized per call).
     pub(crate) acc: Vec<i32>,
     /// Per-thread `qgemm` scratch (fused panels + activation pairs).
@@ -125,6 +129,7 @@ impl Workspace {
         Workspace {
             threads,
             simd: SimdLevel::detect(),
+            fp: FpMode::default_mode(),
             acc: Vec::new(),
             qscratch: Vec::new(),
             pool_f32: Vec::new(),
@@ -140,11 +145,42 @@ impl Workspace {
     }
 
     /// Pin this workspace to the portable scalar kernels (the in-process
-    /// side of the dispatch-parity tests; `LSQNET_FORCE_SCALAR=1` is the
-    /// process-wide equivalent). Downgrade-only by design: forcing a
-    /// *higher* level than the host supports would be unsound.
+    /// side of the dispatch-parity tests; `LSQNET_SIMD=scalar` /
+    /// `LSQNET_FORCE_SCALAR=1` is the process-wide equivalent).
+    /// Downgrade-only by design: forcing a *higher* level than the host
+    /// supports would be unsound.
     pub fn force_scalar(&mut self) {
         self.simd = SimdLevel::Scalar;
+    }
+
+    /// Pin this workspace to an explicit dispatch `level` (the in-process
+    /// side of the forced-level parity matrix; `LSQNET_SIMD=<name>` is
+    /// the process-wide equivalent). Returns `false` — leaving the
+    /// workspace unchanged — when this host cannot execute `level`:
+    /// dispatching an unavailable vector level would be unsound, so the
+    /// availability gate lives here, not in the caller.
+    pub fn force_level(&mut self, level: SimdLevel) -> bool {
+        if !level.available() {
+            return false;
+        }
+        self.simd = level;
+        true
+    }
+
+    /// The fp32 contraction mode the sgemm family uses on this workspace.
+    pub fn fp_mode(&self) -> FpMode {
+        self.fp
+    }
+
+    /// Select the fp32 contraction mode ([`FpMode::Fma`] = one fused
+    /// rounding per element — the training-throughput tier; requests are
+    /// ignored on hosts without FMA units, keeping the mode executable by
+    /// construction). `qgemm` is integer-exact and unaffected.
+    pub fn set_fp_mode(&mut self, fp: FpMode) {
+        if fp == FpMode::Fma && !super::simd::fma_available() {
+            return;
+        }
+        self.fp = fp;
     }
 
     /// Re-cap the intra-op thread count (0 = hardware). Existing scratch
@@ -382,5 +418,35 @@ mod tests {
         let mut ws = Workspace::new();
         ws.force_scalar();
         assert_eq!(ws.simd(), crate::runtime::kernels::SimdLevel::Scalar);
+    }
+
+    #[test]
+    fn force_level_gates_on_availability() {
+        let mut ws = Workspace::new();
+        // Scalar is available everywhere.
+        assert!(ws.force_level(SimdLevel::Scalar));
+        assert_eq!(ws.simd(), SimdLevel::Scalar);
+        // Every available level can be pinned; unavailable ones are
+        // rejected without changing the workspace.
+        for level in SimdLevel::ALL {
+            let before = ws.simd();
+            let ok = ws.force_level(level);
+            assert_eq!(ok, level.available(), "{}", level.name());
+            assert_eq!(ws.simd(), if ok { level } else { before });
+        }
+    }
+
+    #[test]
+    fn fp_mode_defaults_pinned_and_gates_fma() {
+        let mut ws = Workspace::new();
+        // Default is deterministic Pinned unless LSQNET_FMA opted in.
+        if !crate::util::env_truthy("LSQNET_FMA") {
+            assert_eq!(ws.fp_mode(), FpMode::Pinned);
+        }
+        ws.set_fp_mode(FpMode::Fma);
+        // Accepted only where the host has FMA units.
+        assert_eq!(ws.fp_mode() == FpMode::Fma, super::super::simd::fma_available());
+        ws.set_fp_mode(FpMode::Pinned);
+        assert_eq!(ws.fp_mode(), FpMode::Pinned);
     }
 }

@@ -251,7 +251,9 @@ fn bind_weights(
         UnpackMode::Panelized => LayerWeights::Panel {
             storage_bytes: packed.storage_bytes() + 4, // + s_a
             sw: packed.step,
-            panel: PanelizedWeights::build(&packed, k, n),
+            // Bind-time autotuned blocking; the activation bound gates
+            // i8-activation (ki=4) candidate geometries.
+            panel: PanelizedWeights::build_for_acts(&packed, k, n, act_qp.max(act_qn)),
             sa,
             act_qn,
             act_qp,

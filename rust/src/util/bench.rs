@@ -52,6 +52,10 @@ pub struct BenchResult {
     /// `speedup_vs_serial`, emitted as extra JSON fields so the trajectory
     /// file is self-describing without hand-diffing rows.
     pub extras: Vec<(String, f64)>,
+    /// Per-row string columns ([`Bench::annotate_str`]) — e.g. the
+    /// *effective* SIMD level of a forced-scalar row, which suite-level
+    /// [`Bench::set_meta`] cannot express (it describes the whole run).
+    pub extras_str: Vec<(String, String)>,
 }
 
 impl BenchResult {
@@ -122,6 +126,7 @@ impl Bench {
             min_ns: times_ns.iter().cloned().fold(f64::INFINITY, f64::min),
             units_per_iter,
             extras: Vec::new(),
+            extras_str: Vec::new(),
         };
         println!(
             "{:<40} {:>12} iters  mean {:>12}  p50 {:>12}  p95 {:>12}{}",
@@ -159,6 +164,7 @@ impl Bench {
                 min_ns: 0.0,
                 units_per_iter,
                 extras: Vec::new(),
+                extras_str: Vec::new(),
             }
         } else {
             BenchResult {
@@ -169,6 +175,7 @@ impl Bench {
                 min_ns: times_ns.iter().cloned().fold(f64::INFINITY, f64::min),
                 units_per_iter,
                 extras: Vec::new(),
+                extras_str: Vec::new(),
             }
         };
         println!(
@@ -208,6 +215,17 @@ impl Bench {
         }
     }
 
+    /// Attach a string column to the most recent result named `name`
+    /// (e.g. `simd` → the *effective* dispatch level of that row, which
+    /// may differ from the suite-level [`Bench::set_meta`] value when the
+    /// row pinned a level in-process). Emitted as an extra JSON string
+    /// field on that row; an unknown name is a no-op.
+    pub fn annotate_str(&mut self, name: &str, key: &str, value: &str) {
+        if let Some((_, r)) = self.results.iter_mut().rev().find(|(n, _)| n == name) {
+            r.extras_str.push((key.to_string(), value.to_string()));
+        }
+    }
+
     /// Set a suite-level metadata string (e.g. `simd` → the dispatch
     /// level of this run), emitted as a top-level JSON field. Re-setting a
     /// key overwrites it.
@@ -225,7 +243,8 @@ impl Bench {
     /// <extras…>}]}` — the format the repo-root `BENCH_*.json`
     /// perf-trajectory files use. `units_per_sec` is present only for
     /// [`Bench::bench_units`] entries (JSON has no NaN); `<extras…>` are
-    /// the [`Bench::annotate`] ratio columns.
+    /// the [`Bench::annotate`] ratio columns and the
+    /// [`Bench::annotate_str`] string columns.
     pub fn to_json(&self) -> Json {
         let results: Vec<Json> = self
             .results
@@ -245,6 +264,9 @@ impl Bench {
                 }
                 for (k, v) in &r.extras {
                     fields.push((k.as_str(), Json::num(*v)));
+                }
+                for (k, v) in &r.extras_str {
+                    fields.push((k.as_str(), Json::str(v.clone())));
                 }
                 Json::obj(fields)
             })
@@ -341,12 +363,16 @@ mod tests {
         b.annotate("row", "speedup_vs_serial", 2.5);
         b.annotate("row", "dropped_nan", f64::NAN); // must be skipped
         b.annotate("missing", "ignored", 1.0); // unknown name: no-op
+        b.annotate_str("row", "simd_effective", "sse2");
+        b.annotate_str("missing", "ignored_str", "x"); // unknown name: no-op
         b.set_meta("simd", "scalar");
         b.set_meta("simd", "avx2"); // overwrite
         let json = b.to_json().to_string_pretty();
         assert!(json.contains("\"speedup_vs_serial\""));
         assert!(!json.contains("dropped_nan"));
         assert!(!json.contains("ignored"));
+        assert!(json.contains("\"simd_effective\""));
+        assert!(json.contains("\"sse2\""));
         assert!(json.contains("\"simd\""));
         assert!(json.contains("avx2"));
         assert!(!json.contains("scalar"));

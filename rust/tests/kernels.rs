@@ -4,9 +4,11 @@
 //!
 //! * threaded `qgemm` is **bitwise identical** to single-thread at every
 //!   bit width and across tile-straddling shapes;
-//! * `qgemm` is also bitwise identical across the SIMD dispatch
-//!   (detected level vs forced-scalar) *and* across weight storage modes
-//!   (fused unpack vs bind-time panels) — all four combinations agree;
+//! * `qgemm` is also bitwise identical across **every available SIMD
+//!   level** (each rung pinned via `Workspace::force_level`), across
+//!   weight storage modes (fused unpack vs bind-time panels), *and*
+//!   across panel blocking geometries — including the autotuned one,
+//!   which must be a pure time optimization;
 //! * the threaded fp32 family (`sgemm`/`sgemm_nt`/`sgemm_tn`) matches
 //!   single-thread bitwise (the spec floor is 1e-5; the implementation is
 //!   exactly deterministic because the per-element accumulation order
@@ -20,14 +22,17 @@
 //!   native inference forward, and a native train step.
 //!
 //! The CI gate re-runs this suite with `LSQNET_THREADS=1` (forces every
-//! kernel serial) and with `LSQNET_FORCE_SCALAR=1` (pins the portable
-//! SIMD path) — all runs must pass unchanged, so CI on any host exercises
-//! both sides of the dispatch.
+//! kernel serial), with `LSQNET_FORCE_SCALAR=1` (pins the portable SIMD
+//! path), with `LSQNET_SIMD=<level>` for every level `lsqnet simd-levels`
+//! reports (the forced-level matrix), and with `LSQNET_FMA=1` (the fp32
+//! FMA tier as the default) — all runs must pass unchanged, so CI on any
+//! host exercises every rung of the dispatch ladder it can execute.
 
 use lsqnet::quant::lsq::qrange;
 use lsqnet::quant::pack::quantize_and_pack;
 use lsqnet::runtime::kernels::{
-    qgemm, qgemm_panel, sgemm, sgemm_nt, sgemm_tn, PanelizedWeights, Workspace, KC, NC,
+    qgemm, qgemm_panel, sgemm, sgemm_nt, sgemm_tn, FpMode, PanelGeom, PanelizedWeights, SimdLevel,
+    Workspace, KC, NC,
 };
 use lsqnet::runtime::native::fixture::{write_synthetic_family, FixtureSpec};
 use lsqnet::runtime::native::{NativeModel, UnpackMode};
@@ -153,13 +158,19 @@ fn prop_sgemm_family_threaded_matches_single_thread() {
     });
 }
 
-/// SIMD-vs-scalar and panel-vs-fused parity: the four combinations of
-/// {detected dispatch, forced scalar} × {fused unpack, bind-time panels}
-/// must agree **bitwise** at every bit width (i32 accumulation is exact,
-/// so neither the lane order nor the panel layout may change a single
-/// bit). Threaded variants are folded in to pin the full cross product.
+/// SIMD-ladder × storage × geometry parity: **every** dispatch level the
+/// host can run (pinned via `Workspace::force_level` — the in-process
+/// analog of `LSQNET_SIMD`), both weight storage modes (fused unpack and
+/// bind-time panels), several panel blocking geometries (the legacy
+/// default, a deeper-k rival, the 16-wide VNNI shape, and — when the
+/// activation grid fits i8 — the `ki=4` interleave), and the threaded
+/// split must all agree **bitwise** with the forced-scalar reference at
+/// every bit width. i32 accumulation is exact, so neither the lane
+/// order, the panel layout, nor the blocking may change a single bit —
+/// this is the invariant the bind-time autotuner's safety rests on.
 #[test]
 fn prop_qgemm_dispatch_and_panel_bitwise_parity() {
+    let levels = SimdLevel::available_levels();
     forall("qgemm_dispatch_panel", |rng| {
         let (m, k, n) = rand_shape(rng);
         let bits = [2u32, 3, 4, 8][rng.below(4) as usize];
@@ -175,38 +186,59 @@ fn prop_qgemm_dispatch_and_panel_bitwise_parity() {
             .collect();
         let w: Vec<f32> = (0..k * n).map(|_| rng.normal() * 0.4).collect();
         let packed = quantize_and_pack(&w, 0.05, bits, true).unwrap();
-        let panels = PanelizedWeights::build(&packed, k, n);
+        let mut geoms = vec![
+            PanelGeom::DEFAULT,
+            PanelGeom { kc: 128, nc: 128, nr: 8, ki: 2 },
+            PanelGeom { kc: 256, nc: 64, nr: 16, ki: 2 },
+        ];
+        if qp <= 127 {
+            // ki=4 panels require i8-range activations; levels without a
+            // quad microkernel decode them on the geometry-generic
+            // scalar path, which must still agree bitwise.
+            geoms.push(PanelGeom { kc: 256, nc: 64, nr: 8, ki: 4 });
+        }
+        let panels: Vec<PanelizedWeights> = geoms
+            .iter()
+            .map(|&g| PanelizedWeights::build_with_geom(&packed, k, n, g))
+            .collect();
 
         let mut scalar_ws = Workspace::with_threads(1);
         scalar_ws.force_scalar();
         let mut base = vec![0.0f32; m * n];
         qgemm(&mut scalar_ws, m, k, n, &x, &packed, 0.03, None, &mut base);
 
-        for threads in [1usize, 3] {
-            for force_scalar in [false, true] {
+        for &level in &levels {
+            for threads in [1usize, 3] {
                 let mut ws = Workspace::with_threads(threads);
-                if force_scalar {
-                    ws.force_scalar();
-                }
+                assert!(ws.force_level(level), "{} reported available", level.name());
                 let mut fused = vec![0.0f32; m * n];
                 qgemm(&mut ws, m, k, n, &x, &packed, 0.03, None, &mut fused);
-                let mut paneled = vec![0.0f32; m * n];
-                qgemm_panel(&mut ws, m, k, n, &x, &panels, 0.03, None, &mut paneled);
-                for (i, (want, (f, p))) in
-                    base.iter().zip(fused.iter().zip(&paneled)).enumerate()
-                {
+                for (i, (want, f)) in base.iter().zip(&fused).enumerate() {
                     assert_eq!(
                         want.to_bits(),
                         f.to_bits(),
-                        "fused t{threads} scalar={force_scalar} differs at {i} \
-                         (m={m} k={k} n={n} bits={bits})"
+                        "fused {} t{threads} differs at {i} \
+                         (m={m} k={k} n={n} bits={bits})",
+                        level.name()
                     );
-                    assert_eq!(
-                        want.to_bits(),
-                        p.to_bits(),
-                        "panel t{threads} scalar={force_scalar} differs at {i} \
-                         (m={m} k={k} n={n} bits={bits})"
-                    );
+                }
+                for pw in &panels {
+                    let g = pw.geom();
+                    let mut paneled = vec![0.0f32; m * n];
+                    qgemm_panel(&mut ws, m, k, n, &x, pw, 0.03, None, &mut paneled);
+                    for (i, (want, p)) in base.iter().zip(&paneled).enumerate() {
+                        assert_eq!(
+                            want.to_bits(),
+                            p.to_bits(),
+                            "panel {} t{threads} kc{}/nc{}/nr{}/ki{} differs at {i} \
+                             (m={m} k={k} n={n} bits={bits})",
+                            level.name(),
+                            g.kc,
+                            g.nc,
+                            g.nr,
+                            g.ki
+                        );
+                    }
                 }
             }
         }
@@ -265,6 +297,153 @@ fn prop_sgemm_family_simd_vs_scalar_dispatch() {
             );
         }
     });
+}
+
+/// The fp32 FMA tier ([`FpMode::Fma`], `LSQNET_FMA=1`): fused mul-adds
+/// round once instead of twice, so FMA results are held to the layer's
+/// 1e-5 tolerance against the pinned-reassociation reference — and
+/// *within* the tier the ladder must still agree: `sgemm`/`sgemm_tn`
+/// (elementwise axpy, one fused rounding per element at every level) stay
+/// bitwise across levels, `sgemm_nt`'s reassociated dot holds 1e-5.
+/// Skipped on hosts without FMA units (`set_fp_mode` rejects the mode).
+#[test]
+fn prop_sgemm_fma_tier_matches_pinned_and_holds_cross_level_parity() {
+    let mut probe = Workspace::with_threads(1);
+    probe.set_fp_mode(FpMode::Fma);
+    if probe.fp_mode() != FpMode::Fma {
+        eprintln!("skipping FMA tier test: host has no FMA units");
+        return;
+    }
+    let levels = SimdLevel::available_levels();
+    forall("sgemm_fma_tier", |rng| {
+        let (m, k, n) = rand_shape(rng);
+        let x: Vec<f32> = (0..m * k)
+            .map(|_| if rng.bool(0.2) { 0.0 } else { rng.normal() })
+            .collect();
+        let w: Vec<f32> = (0..k * n).map(|_| rng.normal()).collect();
+        let a: Vec<f32> = (0..m * n).map(|_| rng.normal()).collect();
+
+        // Pinned scalar reference (the test-oracle contraction mode).
+        let mut pin = Workspace::with_threads(1);
+        pin.force_scalar();
+        pin.set_fp_mode(FpMode::Pinned);
+        let mut s_pin = vec![0.0f32; m * n];
+        sgemm(&mut pin, m, k, n, &x, &w, None, &mut s_pin);
+
+        // Scalar FMA reference (f32::mul_add — the same correctly-rounded
+        // fused operation the vector units perform).
+        let mut fsc = Workspace::with_threads(1);
+        fsc.force_scalar();
+        fsc.set_fp_mode(FpMode::Fma);
+        let mut s_fsc = vec![0.0f32; m * n];
+        sgemm(&mut fsc, m, k, n, &x, &w, None, &mut s_fsc);
+        let mut nt_fsc = vec![0.0f32; m * k];
+        sgemm_nt(&mut fsc, m, k, n, &a, &w, &mut nt_fsc);
+        let mut tn_fsc = vec![0.0f32; k * n];
+        sgemm_tn(&mut fsc, m, k, n, &x, &a, &mut tn_fsc);
+
+        for (i, (p, q)) in s_pin.iter().zip(&s_fsc).enumerate() {
+            assert!(
+                (p - q).abs() <= 1e-5 * p.abs().max(1.0),
+                "sgemm fma-vs-pinned at {i}: {p} vs {q} (m={m} k={k} n={n})"
+            );
+        }
+
+        for &level in &levels {
+            let mut ws = Workspace::with_threads(1);
+            assert!(ws.force_level(level));
+            ws.set_fp_mode(FpMode::Fma);
+            let mut s = vec![0.0f32; m * n];
+            sgemm(&mut ws, m, k, n, &x, &w, None, &mut s);
+            let mut nt = vec![0.0f32; m * k];
+            sgemm_nt(&mut ws, m, k, n, &a, &w, &mut nt);
+            let mut tn = vec![0.0f32; k * n];
+            sgemm_tn(&mut ws, m, k, n, &x, &a, &mut tn);
+            for (i, (p, q)) in s_fsc.iter().zip(&s).enumerate() {
+                assert_eq!(
+                    p.to_bits(),
+                    q.to_bits(),
+                    "sgemm fma {} differs at {i} (m={m} k={k} n={n})",
+                    level.name()
+                );
+            }
+            for (i, (p, q)) in tn_fsc.iter().zip(&tn).enumerate() {
+                assert_eq!(
+                    p.to_bits(),
+                    q.to_bits(),
+                    "sgemm_tn fma {} differs at {i} (m={m} k={k} n={n})",
+                    level.name()
+                );
+            }
+            for (i, (p, q)) in nt_fsc.iter().zip(&nt).enumerate() {
+                assert!(
+                    (p - q).abs() <= 1e-5 * p.abs().max(1.0),
+                    "sgemm_nt fma {} at {i}: {p} vs {q} (m={m} k={k} n={n})",
+                    level.name()
+                );
+            }
+        }
+    });
+}
+
+/// The bind-time autotuner end to end: panels built through
+/// `build_for_acts` (whatever geometry the timer picked) produce logits
+/// bitwise identical to default-geometry panels, and a second bind of
+/// the same model hits the process-wide cache instead of re-timing.
+#[test]
+fn autotuned_panels_match_default_bitwise_and_cache_reuses_across_binds() {
+    use lsqnet::runtime::kernels::tune;
+    // Kernel-level: tuned-vs-default geometry on one shape, bitwise.
+    let mut rng = Pcg32::seeded(77);
+    let (m, k, n, bits) = (9usize, 130usize, 70usize, 4u32);
+    let (_, qp) = qrange(bits, false);
+    let x: Vec<i32> = (0..m * k).map(|_| rng.below(qp as u32 + 1) as i32).collect();
+    let w: Vec<f32> = (0..k * n).map(|_| rng.normal() * 0.4).collect();
+    let packed = quantize_and_pack(&w, 0.05, bits, true).unwrap();
+    let dflt = PanelizedWeights::build(&packed, k, n);
+    let tuned = PanelizedWeights::build_for_acts(&packed, k, n, qp);
+    assert!(tuned.geom().valid());
+    let mut ws = Workspace::new();
+    let mut out_d = vec![0.0f32; m * n];
+    qgemm_panel(&mut ws, m, k, n, &x, &dflt, 0.03, None, &mut out_d);
+    let mut out_t = vec![0.0f32; m * n];
+    qgemm_panel(&mut ws, m, k, n, &x, &tuned, 0.03, None, &mut out_t);
+    for (i, (d, t)) in out_d.iter().zip(&out_t).enumerate() {
+        assert_eq!(
+            d.to_bits(),
+            t.to_bits(),
+            "tuned geometry changed qgemm output at {i} (geom {:?})",
+            tuned.geom()
+        );
+    }
+
+    // Model-level: a panelized bind tunes through the same cache; a
+    // second bind of the same family adds no new entries and produces
+    // bitwise-identical logits.
+    let dir = tmp_dir("tunecache");
+    std::fs::remove_dir_all(&dir).ok();
+    let spec = FixtureSpec { image: 16, channels: 3, num_classes: 6, batch: 4, seed: 59 };
+    let family = write_synthetic_family(&dir, "cnn_small", 3, spec).unwrap();
+    let manifest = Manifest::load(&dir).unwrap();
+    let params = manifest.load_initial_params(&family).unwrap();
+    let net1 = NativeModel::build_with_mode(&manifest, &family, &params, UnpackMode::Panelized)
+        .unwrap();
+    let len_after_first = tune::cache_len();
+    let net2 = NativeModel::build_with_mode(&manifest, &family, &params, UnpackMode::Panelized)
+        .unwrap();
+    assert_eq!(
+        tune::cache_len(),
+        len_after_first,
+        "re-binding the same model must reuse the tuning cache"
+    );
+    let mut rng = Pcg32::seeded(60);
+    let x: Vec<f32> = (0..2 * net1.image_len()).map(|_| rng.normal()).collect();
+    let mut ws1 = Workspace::new();
+    let mut ws2 = Workspace::new();
+    let y1 = net1.forward(&mut ws1, &x, 2).unwrap();
+    let y2 = net2.forward(&mut ws2, &x, 2).unwrap();
+    assert_eq!(y1, y2, "re-bound model logits must match bitwise");
+    std::fs::remove_dir_all(&dir).ok();
 }
 
 /// i32 exactness at the accumulator edge: `k` just under the
