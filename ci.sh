@@ -45,6 +45,14 @@ echo "   drain failover, BENCH decision trace. Timeout-bounded like the net"
 echo "   stage so a wedged driver thread fails CI fast) =="
 timeout 300 cargo test --release -q --test tier
 
+echo "== chaos (seeded fault injection — DESIGN.md §Fault-model: replica"
+echo "   kills + connection sabotage mid-flood must resolve every offered"
+echo "   request, reconverge to full replica count, and replay bit-for-bit."
+echo "   Run TWICE: each test replays its scenario in-process, and the"
+echo "   double run proves the schedule replays across processes too) =="
+timeout 300 cargo test --release -q --test chaos
+timeout 300 cargo test --release -q --test chaos
+
 echo "== kernel dispatch parity (re-run the same suite with the portable"
 echo "   scalar SIMD path pinned: qgemm must stay bitwise, sgemm-family"
 echo "   within 1e-5 — so CI on any host exercises both dispatch sides) =="

@@ -272,7 +272,7 @@ fn main() {
         }
         let mut lat_ns: Vec<f64> = Vec::with_capacity(pending.len());
         for (t, rx) in pending {
-            if rx.recv().is_ok() {
+            if matches!(rx.recv(), Ok(Ok(_))) {
                 lat_ns.push(t.elapsed().as_nanos() as f64);
             }
         }

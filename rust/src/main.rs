@@ -72,6 +72,15 @@ COMMANDS
                             whichever tier the control loop favors)]
                            [--slo-ms X (default 5.0; per-request queue-
                             latency objective driving the tier controller)]
+                           [--retry N (wire smoke clients retry transient
+                            errors up to N attempts with jittered backoff;
+                            0 = fail fast, the default)]
+                           [--deadline-ms MS (wire smoke requests carry a
+                            queue budget; the server sheds them with
+                            deadline_exceeded once it expires; 0 = none)]
+                           (the end-of-run report includes a health line:
+                            replica failures/restarts, deadline sheds, and
+                            tier sheds)
   pack                     --checkpoint runs/x/final.ckpt
   simd-levels              list the SIMD dispatch levels this host can run
                            (one name per line, worst->best; each is a valid
@@ -555,7 +564,9 @@ fn serve(args: &Args) -> Result<()> {
         None => None,
     };
     if let Some(listen) = args.opt_str("listen") {
-        return serve_net(registry, controller, &families, &listen, n);
+        let retry = args.u64("retry", 0) as u32;
+        let deadline_ms = args.u64("deadline-ms", 0);
+        return serve_net(registry, controller, &families, &listen, n, retry, deadline_ms);
     }
     println!(
         "serving {} variant(s) [{}] on {} x{replicas} each (core budget {}); \
@@ -610,6 +621,7 @@ fn serve(args: &Args) -> Result<()> {
     if let Some(c) = &controller {
         print_tier_report(c);
     }
+    let shed = controller.as_ref().map_or(0, |c| c.shed_count());
     drop(controller);
     let all_stats = match Arc::try_unwrap(registry) {
         Ok(r) => r.shutdown(),
@@ -634,6 +646,7 @@ fn serve(args: &Args) -> Result<()> {
             stats.padding_rows,
         );
     }
+    print_health_report(&all_stats, shed);
     Ok(())
 }
 
@@ -649,8 +662,10 @@ fn serve_net(
     families: &[String],
     listen: &str,
     n: usize,
+    retry: u32,
+    deadline_ms: u64,
 ) -> Result<()> {
-    use lsqnet::serve::net::{NetClient, NetServer};
+    use lsqnet::serve::net::{NetClient, NetServer, RetryPolicy};
     use std::sync::Arc;
     let driver = match &controller {
         Some(c) => Some(c.start_driver()?),
@@ -680,6 +695,16 @@ fn serve_net(
             let spec = &spec;
             handles.push(s.spawn(move || -> Result<Vec<f64>> {
                 let mut client = NetClient::connect(addr)?;
+                if retry > 0 {
+                    client.set_retry(Some(RetryPolicy {
+                        max_attempts: retry,
+                        seed: t as u64,
+                        ..RetryPolicy::default()
+                    }));
+                }
+                if deadline_ms > 0 {
+                    client.set_deadline_ms(Some(deadline_ms));
+                }
                 let mut l = Vec::new();
                 for i in 0..n / 4 {
                     let img = spec.generate_alloc(t * 10_000 + i);
@@ -712,6 +737,7 @@ fn serve_net(
     if let Some(c) = &controller {
         print_tier_report(c);
     }
+    let shed = controller.as_ref().map_or(0, |c| c.shed_count());
     drop(controller);
     let all_stats = match Arc::try_unwrap(registry) {
         Ok(r) => r.shutdown(),
@@ -737,7 +763,31 @@ fn serve_net(
             stats.padding_rows,
         );
     }
+    print_health_report(&all_stats, shed);
     Ok(())
+}
+
+/// One self-healing summary line: replica supervision activity and shed
+/// work across every variant, plus the tier controller's shed count.
+/// All-zero on a healthy run — nonzero numbers are the thing to grep for
+/// after a chaos or failover exercise.
+fn print_health_report(
+    all_stats: &std::collections::BTreeMap<String, lsqnet::serve::ServeStats>,
+    tier_shed: u64,
+) {
+    let (fails, restarts, expired, failed) =
+        all_stats.values().fold((0u64, 0u64, 0u64, 0u64), |a, s| {
+            (
+                a.0 + s.replica_failures,
+                a.1 + s.replica_restarts,
+                a.2 + s.deadline_expired,
+                a.3 + s.failed_requests,
+            )
+        });
+    println!(
+        "health: {fails} replica failure(s), {restarts} restart(s), \
+         {expired} deadline-expired, {failed} failed request(s), {tier_shed} shed by tiering"
+    );
 }
 
 /// Print the tier controller's closed-loop summary: final tier, shed

@@ -1,0 +1,414 @@
+//! Deterministic fault injection for the serving stack (DESIGN.md
+//! §Fault-model).
+//!
+//! A [`FaultPlan`] is a *precomputed schedule* of faults, derived entirely
+//! from a seed: for every injection **site** (replica panic, slow exec,
+//! engine-open failure, stalled read, dropped connection, corrupt frame,
+//! truncated write) the plan draws a fixed set of occurrence indices from
+//! an independent [`Pcg32`] stream. At runtime each site keeps an atomic
+//! occurrence counter; the k-th query at a site fires iff k is in that
+//! site's precomputed index set. The schedule is therefore a pure function
+//! of the seed — no wall clock, no thread timing — which is what makes the
+//! chaos tests (`tests/chaos.rs`) exact instead of flaky:
+//!
+//!  * the *set* of fired occurrence indices per site is bit-for-bit
+//!    identical across runs with the same seed and the same number of
+//!    queries, regardless of thread interleaving (each query atomically
+//!    claims one index; the verdict for an index never changes);
+//!  * which *wall-clock request* lands on a firing index IS
+//!    scheduling-dependent — so chaos assertions compare schedules, fired
+//!    sets and conservation laws ("accepted ⇒ answered exactly once"),
+//!    never the ok/error split of individual requests.
+//!
+//! The hooks are always compiled and default to `None`
+//! ([`VariantOptions::fault`](crate::serve::VariantOptions),
+//! `NetServer::start_faulted`), so production builds pay one `Option`
+//! check per site and carry zero feature-flag skew.
+//!
+//! The ISSUE sketch said "xorshift from `util/rng`"; the repo's RNG is
+//! PCG-XSH-RR 64/32 ([`Pcg32`]) — same role (tiny seeded deterministic
+//! generator, zero deps), so the plan uses that (DESIGN.md §Substitutions).
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::Duration;
+
+use crate::util::rng::Pcg32;
+
+/// How many faults of each kind to schedule, and over what horizon.
+///
+/// Counts are clamped to `horizon` (a site cannot fire more often than it
+/// is queried within the schedule). `Default` is an all-zero plan — handy
+/// as a base for struct-update syntax in tests.
+#[derive(Clone, Debug)]
+pub struct FaultSpec {
+    /// Seed for the whole schedule: same seed ⇒ same schedule, bit for bit.
+    pub seed: u64,
+    /// Occurrence-index horizon per site: indices are drawn from
+    /// `[0, horizon)`. Queries past the horizon never fire.
+    pub horizon: u64,
+    /// Replica batches that panic mid-dispatch (after answering their
+    /// pending requests — the thread dies, the requests do not).
+    pub replica_panics: u64,
+    /// Replica (re)starts whose engine open is forced to fail.
+    pub replica_open_fails: u64,
+    /// Replica batches whose execution is delayed by [`FaultSpec::slow_exec`].
+    pub slow_execs: u64,
+    /// Injected delay for a slow-exec fault.
+    pub slow_exec: Duration,
+    /// Server-side reads that stall [`FaultSpec::read_stall`] after a frame
+    /// arrives (exercises client timeouts, not the frame deadline).
+    pub stalled_reads: u64,
+    /// Injected delay for a stalled read.
+    pub read_stall: Duration,
+    /// Server connections hard-dropped after reading a frame (the request
+    /// is never submitted, so a client retry is safe).
+    pub dropped_conns: u64,
+    /// Response frames whose JSON payload is garbled (framing stays valid;
+    /// the client sees a protocol error and reconnects).
+    pub corrupt_frames: u64,
+    /// Response frames truncated mid-payload, then the connection dies.
+    pub truncated_writes: u64,
+}
+
+impl Default for FaultSpec {
+    fn default() -> FaultSpec {
+        FaultSpec {
+            seed: 0,
+            horizon: 0,
+            replica_panics: 0,
+            replica_open_fails: 0,
+            slow_execs: 0,
+            slow_exec: Duration::from_millis(50),
+            stalled_reads: 0,
+            read_stall: Duration::from_millis(50),
+            dropped_conns: 0,
+            corrupt_frames: 0,
+            truncated_writes: 0,
+        }
+    }
+}
+
+/// Verdict for one replica exec-loop batch.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ReplicaFault {
+    /// No fault: execute normally.
+    None,
+    /// Answer the pending batch, then panic the replica thread.
+    Panic,
+    /// Sleep this long before executing (SLO pressure without death).
+    Slow(Duration),
+}
+
+/// Verdict for one net-stack read or write.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum NetFault {
+    /// No fault.
+    None,
+    /// (read) Sleep this long before handling the frame.
+    Stall(Duration),
+    /// (read) Shut the connection down without handling the frame.
+    Drop,
+    /// (write) Garble the payload bytes; framing stays intact.
+    Corrupt,
+    /// (write) Send a full-length header but only half the payload, then
+    /// kill the connection.
+    Truncate,
+}
+
+/// One injection site: a precomputed sorted index set plus a live
+/// occurrence counter and a log of indices that actually fired.
+#[derive(Debug)]
+struct Site {
+    name: &'static str,
+    /// Sorted, distinct occurrence indices in `[0, horizon)`.
+    indices: Vec<u64>,
+    counter: AtomicU64,
+    fired: Mutex<Vec<u64>>,
+}
+
+impl Site {
+    /// Draw `count` distinct indices in `[0, horizon)` from an independent
+    /// PCG stream keyed on (seed, site tag).
+    fn new(name: &'static str, seed: u64, tag: u64, count: u64, horizon: u64) -> Site {
+        let mut indices = Vec::new();
+        if horizon > 0 && count > 0 {
+            let count = count.min(horizon);
+            let mut rng = Pcg32::new(seed, tag);
+            // Horizons are test-sized (≤ a few thousand); rejection
+            // sampling into a sorted set is plenty.
+            let bound = horizon.min(u32::MAX as u64) as u32;
+            while (indices.len() as u64) < count {
+                let k = rng.below(bound) as u64;
+                if let Err(pos) = indices.binary_search(&k) {
+                    indices.insert(pos, k);
+                }
+            }
+        }
+        Site { name, indices, counter: AtomicU64::new(0), fired: Mutex::new(Vec::new()) }
+    }
+
+    /// Claim the next occurrence index and report whether it fires. The
+    /// verdict for index k is fixed at plan construction, so the fired
+    /// *set* is schedule-deterministic even under thread races.
+    fn check(&self) -> bool {
+        let k = self.counter.fetch_add(1, Ordering::SeqCst);
+        let hit = self.indices.binary_search(&k).is_ok();
+        if hit {
+            let mut fired = self.fired.lock().unwrap_or_else(|e| e.into_inner());
+            let pos = fired.binary_search(&k).unwrap_or_else(|p| p);
+            fired.insert(pos, k);
+        }
+        hit
+    }
+
+    fn fired(&self) -> Vec<u64> {
+        self.fired.lock().unwrap_or_else(|e| e.into_inner()).clone()
+    }
+
+    fn done(&self) -> bool {
+        self.fired.lock().unwrap_or_else(|e| e.into_inner()).len() == self.indices.len()
+    }
+}
+
+// Per-site PCG stream tags: any distinct odd-ish constants work; these are
+// fixed forever so a seed's schedule never changes across versions.
+const TAG_REPLICA_PANIC: u64 = 0x9e37_79b9_7f4a_7c15;
+const TAG_REPLICA_OPEN: u64 = 0xc2b2_ae3d_27d4_eb4f;
+const TAG_SLOW_EXEC: u64 = 0x1656_67b1_9e37_79f9;
+const TAG_READ_STALL: u64 = 0x27d4_eb2f_1656_67c5;
+const TAG_CONN_DROP: u64 = 0x85eb_ca6b_c2b2_ae35;
+const TAG_FRAME_CORRUPT: u64 = 0x94d0_49bb_1331_11eb;
+const TAG_WRITE_TRUNC: u64 = 0xbf58_476d_1ce4_e5b9;
+
+/// A seeded, thread-safe fault schedule. Share one plan (via `Arc`) across
+/// the registry and the net server so the whole process replays a single
+/// coherent failure scenario.
+#[derive(Debug)]
+pub struct FaultPlan {
+    spec: FaultSpec,
+    replica_panic: Site,
+    replica_open: Site,
+    slow_exec: Site,
+    read_stall: Site,
+    conn_drop: Site,
+    frame_corrupt: Site,
+    write_trunc: Site,
+}
+
+impl FaultPlan {
+    /// Precompute the full schedule from `spec` (pure function of the spec).
+    pub fn new(spec: &FaultSpec) -> FaultPlan {
+        let (s, h) = (spec.seed, spec.horizon);
+        FaultPlan {
+            replica_panic: Site::new("replica_panic", s, TAG_REPLICA_PANIC, spec.replica_panics, h),
+            replica_open: Site::new(
+                "replica_open",
+                s,
+                TAG_REPLICA_OPEN,
+                spec.replica_open_fails,
+                h,
+            ),
+            slow_exec: Site::new("slow_exec", s, TAG_SLOW_EXEC, spec.slow_execs, h),
+            read_stall: Site::new("read_stall", s, TAG_READ_STALL, spec.stalled_reads, h),
+            conn_drop: Site::new("conn_drop", s, TAG_CONN_DROP, spec.dropped_conns, h),
+            frame_corrupt: Site::new("frame_corrupt", s, TAG_FRAME_CORRUPT, spec.corrupt_frames, h),
+            write_trunc: Site::new("write_trunc", s, TAG_WRITE_TRUNC, spec.truncated_writes, h),
+            spec: spec.clone(),
+        }
+    }
+
+    /// Should this replica (re)start fail its engine open?
+    pub fn replica_open_fail(&self) -> bool {
+        self.replica_open.check()
+    }
+
+    /// Verdict for one dispatched batch. Both sub-sites advance their
+    /// counters on every call (so each site's occurrence stream is
+    /// independent of the other's verdicts); a panic wins if both fire.
+    pub fn replica_exec(&self) -> ReplicaFault {
+        let panic = self.replica_panic.check();
+        let slow = self.slow_exec.check();
+        if panic {
+            ReplicaFault::Panic
+        } else if slow {
+            ReplicaFault::Slow(self.spec.slow_exec)
+        } else {
+            ReplicaFault::None
+        }
+    }
+
+    /// Verdict for one server-side frame read (queried after a complete
+    /// frame arrives, before it is handled). Both sub-sites always advance;
+    /// a drop wins if both fire.
+    pub fn net_read(&self) -> NetFault {
+        let stall = self.read_stall.check();
+        let drop = self.conn_drop.check();
+        if drop {
+            NetFault::Drop
+        } else if stall {
+            NetFault::Stall(self.spec.read_stall)
+        } else {
+            NetFault::None
+        }
+    }
+
+    /// Verdict for one server-side response write. Both sub-sites always
+    /// advance; truncation wins if both fire.
+    pub fn net_write(&self) -> NetFault {
+        let corrupt = self.frame_corrupt.check();
+        let trunc = self.write_trunc.check();
+        if trunc {
+            NetFault::Truncate
+        } else if corrupt {
+            NetFault::Corrupt
+        } else {
+            NetFault::None
+        }
+    }
+
+    fn sites(&self) -> [&Site; 7] {
+        [
+            &self.replica_panic,
+            &self.replica_open,
+            &self.slow_exec,
+            &self.read_stall,
+            &self.conn_drop,
+            &self.frame_corrupt,
+            &self.write_trunc,
+        ]
+    }
+
+    /// The precomputed schedule as a canonical digest string — two plans
+    /// with the same seed/spec render identically (the chaos determinism
+    /// assertion compares these).
+    pub fn schedule(&self) -> String {
+        let mut out = String::new();
+        for site in self.sites() {
+            if !out.is_empty() {
+                out.push(' ');
+            }
+            out.push_str(site.name);
+            out.push_str(":[");
+            for (i, k) in site.indices.iter().enumerate() {
+                if i > 0 {
+                    out.push(',');
+                }
+                out.push_str(&k.to_string());
+            }
+            out.push(']');
+        }
+        out
+    }
+
+    /// Occurrence indices that actually fired, per site (sorted). After a
+    /// run, equal `fired()` maps across same-seed runs is the replay proof.
+    pub fn fired(&self) -> BTreeMap<&'static str, Vec<u64>> {
+        self.sites().iter().map(|s| (s.name, s.fired())).collect()
+    }
+
+    /// True once every planned fault at every site has fired — the chaos
+    /// flood loops until this (with a wall-clock cap) so the scenario
+    /// always fully plays out.
+    pub fn all_fired(&self) -> bool {
+        self.sites().iter().all(|s| s.done())
+    }
+
+    /// Total planned faults across all sites.
+    pub fn planned(&self) -> u64 {
+        self.sites().iter().map(|s| s.indices.len() as u64).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec(seed: u64) -> FaultSpec {
+        FaultSpec {
+            seed,
+            horizon: 64,
+            replica_panics: 3,
+            replica_open_fails: 2,
+            slow_execs: 4,
+            stalled_reads: 2,
+            dropped_conns: 2,
+            corrupt_frames: 2,
+            truncated_writes: 1,
+            ..FaultSpec::default()
+        }
+    }
+
+    #[test]
+    fn same_seed_same_schedule() {
+        let a = FaultPlan::new(&spec(7));
+        let b = FaultPlan::new(&spec(7));
+        assert_eq!(a.schedule(), b.schedule());
+        assert_eq!(a.planned(), b.planned());
+        let c = FaultPlan::new(&spec(8));
+        assert_ne!(a.schedule(), c.schedule());
+    }
+
+    #[test]
+    fn fires_exactly_at_planned_indices() {
+        let plan = FaultPlan::new(&spec(42));
+        let mut panics = Vec::new();
+        for k in 0..64u64 {
+            if plan.replica_exec() == ReplicaFault::Panic {
+                panics.push(k);
+            }
+        }
+        assert_eq!(panics.len(), 3, "all planned panics fire within the horizon");
+        assert_eq!(plan.fired()["replica_panic"], panics);
+        // Past the horizon nothing ever fires.
+        for _ in 0..64 {
+            assert_eq!(plan.replica_exec(), ReplicaFault::None);
+        }
+    }
+
+    #[test]
+    fn all_fired_tracks_every_site() {
+        let plan = FaultPlan::new(&spec(9));
+        assert!(!plan.all_fired());
+        for _ in 0..64 {
+            plan.replica_exec();
+            plan.replica_open_fail();
+            plan.net_read();
+            plan.net_write();
+        }
+        assert!(plan.all_fired());
+        let fired = plan.fired();
+        assert_eq!(fired["slow_exec"].len(), 4);
+        assert_eq!(fired["write_trunc"].len(), 1);
+    }
+
+    #[test]
+    fn counts_clamp_to_horizon_and_zero_horizon_is_inert() {
+        let tight =
+            FaultPlan::new(&FaultSpec { seed: 1, horizon: 2, replica_panics: 10, ..FaultSpec::default() });
+        assert_eq!(tight.planned(), 2);
+        let inert =
+            FaultPlan::new(&FaultSpec { seed: 1, horizon: 0, replica_panics: 10, ..FaultSpec::default() });
+        assert_eq!(inert.planned(), 0);
+        assert!(inert.all_fired());
+        assert_eq!(inert.replica_exec(), ReplicaFault::None);
+    }
+
+    #[test]
+    fn net_precedence_drop_and_truncate_win() {
+        // With counts == horizon every index fires at every site, so the
+        // precedence arms are exercised deterministically.
+        let plan = FaultPlan::new(&FaultSpec {
+            seed: 3,
+            horizon: 4,
+            stalled_reads: 4,
+            dropped_conns: 4,
+            corrupt_frames: 4,
+            truncated_writes: 4,
+            ..FaultSpec::default()
+        });
+        assert_eq!(plan.net_read(), NetFault::Drop);
+        assert_eq!(plan.net_write(), NetFault::Truncate);
+    }
+}

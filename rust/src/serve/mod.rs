@@ -43,7 +43,16 @@
 //! latency SLO and shifts routing across an ordered precision ladder
 //! (`q8 → q4 → q2`), shedding load ([`ServeError::Shed`]) only when the
 //! whole ladder is saturated (DESIGN.md §Serving-API).
+//!
+//! The stack is self-healing and testably so (DESIGN.md §Fault-model): a
+//! per-variant supervisor respawns dead replica threads under a
+//! [`RestartPolicy`] (jittered exponential backoff, rolling restart
+//! budget; exhaustion flips the variant unhealthy so the tier controller
+//! fails over), clients carry retry/deadline budgets
+//! ([`net::RetryPolicy`], `deadline_ms`), and [`fault`] provides the
+//! seeded deterministic fault injection the chaos tests drive it all with.
 
+pub mod fault;
 pub mod net;
 pub mod registry;
 pub mod tier;
@@ -56,7 +65,8 @@ use anyhow::Result;
 
 use crate::runtime::BackendSpec;
 
-pub use registry::{ModelRegistry, Session, VariantOptions};
+pub use fault::{FaultPlan, FaultSpec, NetFault, ReplicaFault};
+pub use registry::{ModelRegistry, RestartPolicy, Session, VariantOptions};
 pub use tier::{TierConfig, TierController, TierDecision, TierDriver, TierEvent, TierSignal};
 
 /// One queued inference request (internal to the serve layer).
@@ -64,7 +74,12 @@ pub struct Request {
     /// Flattened NHWC image, `image * image * channels` floats.
     pub image: Vec<f32>,
     submitted: Instant,
-    reply: SyncSender<Reply>,
+    /// Absolute deadline (from the client's `deadline_ms` budget). A
+    /// replica sheds the request at dequeue once this has passed —
+    /// answering [`ServeError::DeadlineExceeded`] instead of burning a
+    /// forward pass on an answer nobody is waiting for.
+    expires: Option<Instant>,
+    reply: SyncSender<Result<Reply, ServeError>>,
 }
 
 /// The answer a client receives for one image.
@@ -114,6 +129,11 @@ pub enum ServeError {
     /// retrying. Only the [`tier::TierController`] produces this; a bare
     /// [`Session`] reports per-queue `QueueFull`.
     Shed,
+    /// The request's `deadline_ms` budget expired before a replica got to
+    /// it: the server shed it at dequeue without executing. The client was
+    /// no longer waiting (or was about to stop), so retrying with a fresh
+    /// budget is the only sensible follow-up.
+    DeadlineExceeded,
 }
 
 impl std::fmt::Display for ServeError {
@@ -130,6 +150,9 @@ impl std::fmt::Display for ServeError {
             }
             ServeError::Shed => {
                 write!(f, "all precision tiers saturated: request shed, back off before retrying")
+            }
+            ServeError::DeadlineExceeded => {
+                write!(f, "request deadline expired before execution; shed at dequeue")
             }
         }
     }
@@ -165,6 +188,21 @@ pub struct ServeStats {
     /// reads: `replica_failures` ≥ the configured replica count means the
     /// variant is dead even though its intake still accepts requests.
     pub replica_failures: u64,
+    /// Replica threads respawned by the variant's supervisor after a
+    /// failure (jittered exponential backoff under a rolling restart
+    /// budget — see [`RestartPolicy`]). `replica_failures` counts deaths;
+    /// this counts recoveries. A widening gap means the budget is
+    /// exhausted and the variant has been marked unhealthy.
+    pub replica_restarts: u64,
+    /// Requests shed at dequeue because their `deadline_ms` budget had
+    /// already expired (answered [`ServeError::DeadlineExceeded`], never
+    /// executed).
+    pub deadline_expired: u64,
+    /// Accepted requests answered with a terminal error (engine execution
+    /// failure or a replica death mid-batch) instead of a [`Reply`]. Part
+    /// of the "accepted ⇒ answered exactly once" ledger: `requests +
+    /// deadline_expired + failed_requests` is everything answered.
+    pub failed_requests: u64,
 }
 
 impl ServeStats {
@@ -200,6 +238,15 @@ impl ServeStats {
         }
     }
 
+    /// Every accepted request that has been answered — with a [`Reply`]
+    /// (`requests`), a deadline shed (`deadline_expired`) or a terminal
+    /// error (`failed_requests`). `accepted − answered()` is the true
+    /// in-flight count; the registry's exactly-once ledger balances when
+    /// this reaches the accepted count.
+    pub fn answered(&self) -> u64 {
+        self.requests + self.deadline_expired + self.failed_requests
+    }
+
     /// Mean fraction of dispatched rows that were tail padding.
     pub fn padding_fraction(&self) -> f64 {
         if self.rows_dispatched == 0 {
@@ -226,6 +273,9 @@ impl ServeStats {
             queue_ms_total: (self.queue_ms_total - earlier.queue_ms_total).max(0.0),
             occupancy_sum: (self.occupancy_sum - earlier.occupancy_sum).max(0.0),
             replica_failures: self.replica_failures.saturating_sub(earlier.replica_failures),
+            replica_restarts: self.replica_restarts.saturating_sub(earlier.replica_restarts),
+            deadline_expired: self.deadline_expired.saturating_sub(earlier.deadline_expired),
+            failed_requests: self.failed_requests.saturating_sub(earlier.failed_requests),
         }
     }
 }
@@ -280,10 +330,14 @@ impl ServeClient {
         self.session.infer(image)
     }
 
-    /// Non-blocking submit; returns the reply channel. See
-    /// [`Session::submit`] for the error contract ([`ServeError::QueueFull`]
-    /// backpressure instead of blocking).
-    pub fn submit(&self, image: Vec<f32>) -> Result<Receiver<Reply>, ServeError> {
+    /// Non-blocking submit; returns the reply channel (each accepted
+    /// request is answered exactly once with `Ok(Reply)` or a terminal
+    /// `Err`). See [`Session::submit`] for the error contract
+    /// ([`ServeError::QueueFull`] backpressure instead of blocking).
+    pub fn submit(
+        &self,
+        image: Vec<f32>,
+    ) -> Result<Receiver<Result<Reply, ServeError>>, ServeError> {
         self.session.submit(image)
     }
 }
@@ -351,6 +405,7 @@ impl Server {
                 // engine's LSQNET_FUSED_UNPACK env default must not be
                 // stomped — the ordering footgun PrepareOptions removes.
                 low_memory: if cfg.fused_unpack { Some(true) } else { None },
+                ..VariantOptions::default()
             },
         )?;
         Ok(Server { registry, variant: cfg.family, replicas })
@@ -405,6 +460,9 @@ mod tests {
             queue_ms_total,
             occupancy_sum: requests as f64,
             replica_failures: failures,
+            replica_restarts: failures / 2,
+            deadline_expired: 0,
+            failed_requests: 0,
         }
     }
 
@@ -418,6 +476,7 @@ mod tests {
         assert!((d.queue_ms_total - 60.0).abs() < 1e-9);
         assert!((d.exec_ms_total - 7.5).abs() < 1e-9);
         assert_eq!(d.replica_failures, 2);
+        assert_eq!(d.replica_restarts, 1);
         assert!((d.mean_queue_ms() - 4.0).abs() < 1e-9);
         // A stale baseline (counters ahead of the snapshot) saturates to
         // zero instead of wrapping — the window degrades, never panics.
@@ -446,6 +505,17 @@ mod tests {
         assert_eq!(d.requests, 2);
         assert_eq!(d2.requests, 0);
         assert_eq!(d2.mean_queue_ms(), 0.0);
+    }
+
+    #[test]
+    fn answered_sums_the_exactly_once_ledger() {
+        let s = ServeStats {
+            requests: 10,
+            deadline_expired: 3,
+            failed_requests: 2,
+            ..ServeStats::default()
+        };
+        assert_eq!(s.answered(), 15);
     }
 
     #[test]

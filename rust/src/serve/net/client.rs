@@ -4,14 +4,92 @@
 //! one per thread, or [`NetClient::split`] the connection into a send
 //! half and a receive half for open-loop (pipelined) traffic where the
 //! sender must never block on the receiver.
+//!
+//! Resilience knobs (all off by default, so existing callers are
+//! unchanged):
+//!
+//!  * connects are bounded by a timeout ([`NetClient::connect_with`];
+//!    plain [`NetClient::connect`] uses [`DEFAULT_CONNECT_TIMEOUT`]) —
+//!    a black-holed address returns an error instead of hanging in the
+//!    kernel's connect for minutes;
+//!  * [`NetClient::set_retry`] arms a [`RetryPolicy`]: the blocking
+//!    `infer`/`infer_tiered` calls then retry *transient* failures
+//!    (`queue_full`, `shed`, `closed`, `shut_down`, I/O and protocol
+//!    errors — the last two after a transparent reconnect) with capped,
+//!    jittered exponential backoff. Deterministic refusals (`bad_image`,
+//!    `unknown_model`, `bad_request`, `deadline_exceeded`, …) surface
+//!    immediately: retrying them cannot succeed. Retries are
+//!    at-least-once — a lost response may mean the server already
+//!    executed the request; inference is idempotent, so replaying it is
+//!    safe;
+//!  * [`NetClient::set_deadline_ms`] stamps every request with a
+//!    `deadline_ms` queue budget and bounds the *total* retry loop
+//!    (attempts + backoff) by the same budget, so a deadline client gets
+//!    an answer or a timely `deadline_exceeded`, never an unbounded wait.
 
 use std::io::{self, Read};
-use std::net::{Shutdown, TcpStream, ToSocketAddrs};
+use std::net::{Shutdown, SocketAddr, TcpStream, ToSocketAddrs};
+use std::time::{Duration, Instant};
 
 use super::frame::{self, FrameRead, MAX_FRAME_LEN};
 use super::wire::{NetRequest, NetResponse, RespBody, WireError};
 use crate::serve::Reply;
 use crate::util::json::Json;
+use crate::util::rng::Pcg32;
+
+/// Connect timeout used by [`NetClient::connect`]. Long enough for a
+/// loaded loopback accept queue, short enough that a black-holed address
+/// fails the caller instead of wedging it.
+pub const DEFAULT_CONNECT_TIMEOUT: Duration = Duration::from_secs(3);
+
+/// Pcg32 stream tag for client-side backoff jitter ("client" in ASCII).
+const JITTER_STREAM: u64 = 0x636c_6965_6e74;
+
+/// Retry budget for the blocking [`NetClient::infer`] /
+/// [`NetClient::infer_tiered`] calls, armed via [`NetClient::set_retry`].
+#[derive(Clone, Debug)]
+pub struct RetryPolicy {
+    /// Total attempts including the first (so `1` means no retries).
+    pub max_attempts: u32,
+    /// Backoff before the first retry; doubles per retry.
+    pub backoff: Duration,
+    /// Backoff ceiling after doubling, before jitter.
+    pub backoff_cap: Duration,
+    /// Seed for the ±25 % backoff jitter — fixed seed, reproducible
+    /// pause schedule (the chaos tests rely on this).
+    pub seed: u64,
+}
+
+impl Default for RetryPolicy {
+    fn default() -> RetryPolicy {
+        RetryPolicy {
+            max_attempts: 4,
+            backoff: Duration::from_millis(5),
+            backoff_cap: Duration::from_millis(200),
+            seed: 0,
+        }
+    }
+}
+
+/// Transient failures are worth retrying; deterministic refusals are not.
+/// The second flag says whether the connection itself is suspect (retry
+/// only after a reconnect).
+fn classify(e: &NetClientError) -> (bool, bool) {
+    match e {
+        NetClientError::Io(_) | NetClientError::Protocol(_) => (true, true),
+        NetClientError::Wire(w) => match w {
+            WireError::QueueFull { .. }
+            | WireError::Shed
+            | WireError::Closed
+            | WireError::ShutDown => (true, false),
+            WireError::UnknownModel { .. }
+            | WireError::BadImage { .. }
+            | WireError::BadRequest { .. }
+            | WireError::FrameTooLarge { .. }
+            | WireError::DeadlineExceeded => (false, false),
+        },
+    }
+}
 
 /// Everything a client call can fail with.
 #[derive(Debug)]
@@ -50,14 +128,79 @@ pub struct NetClient {
     stream: TcpStream,
     buf: Vec<u8>,
     next_id: u64,
+    /// Peer address, kept for transparent reconnects.
+    addr: Option<SocketAddr>,
+    connect_timeout: Duration,
+    retry: Option<RetryPolicy>,
+    deadline_ms: Option<u64>,
+    rng: Pcg32,
 }
 
 impl NetClient {
-    /// Connect to a serving endpoint.
+    /// Connect to a serving endpoint, bounded by
+    /// [`DEFAULT_CONNECT_TIMEOUT`].
     pub fn connect(addr: impl ToSocketAddrs) -> io::Result<NetClient> {
-        let stream = TcpStream::connect(addr)?;
+        Self::connect_with(addr, DEFAULT_CONNECT_TIMEOUT)
+    }
+
+    /// Connect with an explicit per-address timeout. Each resolved
+    /// address gets the full timeout; the first to accept wins, and the
+    /// last error is returned when none does. This is the fix for the
+    /// black-hole hang: `TcpStream::connect` against an unroutable
+    /// address blocks for the kernel's SYN-retry schedule (minutes);
+    /// `connect_timeout` returns `TimedOut` on schedule.
+    pub fn connect_with(addr: impl ToSocketAddrs, timeout: Duration) -> io::Result<NetClient> {
+        let mut last: Option<io::Error> = None;
+        for a in addr.to_socket_addrs()? {
+            match TcpStream::connect_timeout(&a, timeout) {
+                Ok(stream) => {
+                    stream.set_nodelay(true)?;
+                    return Ok(NetClient {
+                        stream,
+                        buf: Vec::new(),
+                        next_id: 0,
+                        addr: Some(a),
+                        connect_timeout: timeout,
+                        retry: None,
+                        deadline_ms: None,
+                        rng: Pcg32::new(0, JITTER_STREAM),
+                    });
+                }
+                Err(e) => last = Some(e),
+            }
+        }
+        Err(last.unwrap_or_else(|| {
+            io::Error::new(io::ErrorKind::InvalidInput, "address resolved to nothing")
+        }))
+    }
+
+    /// Arm retries on the blocking [`NetClient::infer`] /
+    /// [`NetClient::infer_tiered`] calls. `None` (the default) fails
+    /// fast on the first error.
+    pub fn set_retry(&mut self, policy: Option<RetryPolicy>) {
+        if let Some(p) = &policy {
+            self.rng = Pcg32::new(p.seed, JITTER_STREAM);
+        }
+        self.retry = policy;
+    }
+
+    /// Stamp every subsequent infer/tiered request with a `deadline_ms`
+    /// queue budget (`None` = no deadline). With retries armed, the same
+    /// budget also bounds the whole retry loop.
+    pub fn set_deadline_ms(&mut self, deadline_ms: Option<u64>) {
+        self.deadline_ms = deadline_ms;
+    }
+
+    /// Drop the current socket and dial the recorded peer address again.
+    fn reconnect(&mut self) -> io::Result<()> {
+        let addr = self
+            .addr
+            .ok_or_else(|| io::Error::new(io::ErrorKind::NotFound, "no peer address recorded"))?;
+        let stream = TcpStream::connect_timeout(&addr, self.connect_timeout)?;
         stream.set_nodelay(true)?;
-        Ok(NetClient { stream, buf: Vec::new(), next_id: 0 })
+        self.stream = stream;
+        self.buf.clear();
+        Ok(())
     }
 
     fn fresh_id(&mut self) -> u64 {
@@ -75,10 +218,16 @@ impl NetClient {
         Ok(())
     }
 
-    /// Send an infer request (pipelined); returns its id.
+    /// Send an infer request (pipelined); returns its id. Carries the
+    /// client's configured `deadline_ms`, if any.
     pub fn send_infer(&mut self, model: &str, image: &[f32]) -> Result<u64, NetClientError> {
         let id = self.fresh_id();
-        self.send(&NetRequest::Infer { id, model: model.to_string(), image: image.to_vec() })?;
+        self.send(&NetRequest::Infer {
+            id,
+            model: model.to_string(),
+            image: image.to_vec(),
+            deadline_ms: self.deadline_ms,
+        })?;
         Ok(id)
     }
 
@@ -87,7 +236,11 @@ impl NetClient {
     /// name to give. Servers without a controller answer `bad_request`.
     pub fn send_tiered(&mut self, image: &[f32]) -> Result<u64, NetClientError> {
         let id = self.fresh_id();
-        self.send(&NetRequest::Tiered { id, image: image.to_vec() })?;
+        self.send(&NetRequest::Tiered {
+            id,
+            image: image.to_vec(),
+            deadline_ms: self.deadline_ms,
+        })?;
         Ok(id)
     }
 
@@ -100,9 +253,39 @@ impl NetClient {
     /// Blocking single-image inference: the remote analogue of
     /// [`crate::serve::registry::Session::infer`], returning the same
     /// [`Reply`] shape (its timings are the server's; network time is the
-    /// caller's to measure).
+    /// caller's to measure). Honors [`NetClient::set_retry`] and
+    /// [`NetClient::set_deadline_ms`].
     pub fn infer(&mut self, model: &str, image: &[f32]) -> Result<Reply, NetClientError> {
-        let id = self.send_infer(model, image)?;
+        self.infer_retry(Some(model), image)
+    }
+
+    /// Blocking tiered inference: like [`NetClient::infer`] but the
+    /// server's tier controller chooses the variant. A `shed` wire error
+    /// (the ladder is saturated end to end) surfaces as
+    /// [`NetClientError::Wire`] — unless retries are armed, in which case
+    /// it is backed off and retried like `queue_full`.
+    pub fn infer_tiered(&mut self, image: &[f32]) -> Result<Reply, NetClientError> {
+        self.infer_retry(None, image)
+    }
+
+    /// One request/response exchange; `model: None` means `tiered`.
+    fn infer_once(
+        &mut self,
+        model: Option<&str>,
+        image: &[f32],
+        deadline_ms: Option<u64>,
+    ) -> Result<Reply, NetClientError> {
+        let id = self.fresh_id();
+        let req = match model {
+            Some(m) => NetRequest::Infer {
+                id,
+                model: m.to_string(),
+                image: image.to_vec(),
+                deadline_ms,
+            },
+            None => NetRequest::Tiered { id, image: image.to_vec(), deadline_ms },
+        };
+        self.send(&req)?;
         let resp = self.recv()?;
         expect_id(&resp, id)?;
         match resp.body {
@@ -116,22 +299,59 @@ impl NetClient {
         }
     }
 
-    /// Blocking tiered inference: like [`NetClient::infer`] but the
-    /// server's tier controller chooses the variant. A `shed` wire error
-    /// (the ladder is saturated end to end) surfaces as
-    /// [`NetClientError::Wire`] — back off before retrying.
-    pub fn infer_tiered(&mut self, image: &[f32]) -> Result<Reply, NetClientError> {
-        let id = self.send_tiered(image)?;
-        let resp = self.recv()?;
-        expect_id(&resp, id)?;
-        match resp.body {
-            Ok(RespBody::Infer { logits, argmax, queue_ms, total_ms }) => {
-                Ok(Reply { logits, argmax, queue_ms, total_ms })
+    /// The retry loop around [`NetClient::infer_once`]: transient errors
+    /// back off (capped, jittered exponential) and retry; connection
+    /// errors reconnect first; the optional overall `deadline_ms` budget
+    /// bounds attempts *and* pauses, with each attempt's wire deadline
+    /// set to the remaining budget.
+    fn infer_retry(&mut self, model: Option<&str>, image: &[f32]) -> Result<Reply, NetClientError> {
+        let policy = match self.retry.clone() {
+            None => return self.infer_once(model, image, self.deadline_ms),
+            Some(p) => p,
+        };
+        let start = Instant::now();
+        let overall = self.deadline_ms.map(Duration::from_millis);
+        let mut attempt = 0u32;
+        loop {
+            attempt += 1;
+            let wire_deadline = match overall {
+                None => None,
+                Some(total) => {
+                    let left = total.saturating_sub(start.elapsed());
+                    if left.is_zero() {
+                        return Err(NetClientError::Wire(WireError::DeadlineExceeded));
+                    }
+                    Some(left.as_millis() as u64)
+                }
+            };
+            let err = match self.infer_once(model, image, wire_deadline) {
+                Ok(r) => return Ok(r),
+                Err(e) => e,
+            };
+            let (retryable, reconnect) = classify(&err);
+            if !retryable || attempt >= policy.max_attempts {
+                return Err(err);
             }
-            Ok(other) => Err(NetClientError::Protocol(format!(
-                "expected infer body, got {other:?}"
-            ))),
-            Err(e) => Err(NetClientError::Wire(e)),
+            let n = attempt.min(16);
+            let base = policy
+                .backoff
+                .saturating_mul(1u32 << (n - 1))
+                .min(policy.backoff_cap);
+            let mut pause = base.mul_f64(1.0 + 0.25 * self.rng.uniform() as f64);
+            if let Some(total) = overall {
+                let left = total.saturating_sub(start.elapsed());
+                if left.is_zero() {
+                    return Err(NetClientError::Wire(WireError::DeadlineExceeded));
+                }
+                pause = pause.min(left);
+            }
+            std::thread::sleep(pause);
+            if reconnect {
+                // A failed reconnect leaves the dead socket in place; the
+                // next attempt fails fast on it and consumes its slot —
+                // the loop stays bounded by max_attempts either way.
+                let _ = self.reconnect();
+            }
         }
     }
 
@@ -171,16 +391,23 @@ impl NetClient {
     pub fn split(self) -> io::Result<(NetSender, NetReceiver)> {
         let rstream = self.stream.try_clone()?;
         Ok((
-            NetSender { stream: self.stream, next_id: self.next_id },
+            NetSender {
+                stream: self.stream,
+                next_id: self.next_id,
+                deadline_ms: self.deadline_ms,
+            },
             NetReceiver { stream: rstream, buf: self.buf },
         ))
     }
 }
 
-/// The send half of a split [`NetClient`].
+/// The send half of a split [`NetClient`]. Inherits the client's
+/// `deadline_ms` at split time; retries do not apply to the open-loop
+/// half (the load generator wants the raw error stream).
 pub struct NetSender {
     stream: TcpStream,
     next_id: u64,
+    deadline_ms: Option<u64>,
 }
 
 impl NetSender {
@@ -189,7 +416,12 @@ impl NetSender {
     pub fn send_infer(&mut self, model: &str, image: &[f32]) -> Result<u64, NetClientError> {
         let id = self.next_id;
         self.next_id += 1;
-        let req = NetRequest::Infer { id, model: model.to_string(), image: image.to_vec() };
+        let req = NetRequest::Infer {
+            id,
+            model: model.to_string(),
+            image: image.to_vec(),
+            deadline_ms: self.deadline_ms,
+        };
         let payload = req.to_json().to_string();
         frame::write_frame(&mut self.stream, payload.as_bytes())?;
         Ok(id)
@@ -200,7 +432,7 @@ impl NetSender {
     pub fn send_tiered(&mut self, image: &[f32]) -> Result<u64, NetClientError> {
         let id = self.next_id;
         self.next_id += 1;
-        let req = NetRequest::Tiered { id, image: image.to_vec() };
+        let req = NetRequest::Tiered { id, image: image.to_vec(), deadline_ms: self.deadline_ms };
         let payload = req.to_json().to_string();
         frame::write_frame(&mut self.stream, payload.as_bytes())?;
         Ok(id)

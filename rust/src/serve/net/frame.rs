@@ -58,6 +58,32 @@ pub fn write_frame(w: &mut impl Write, payload: &[u8]) -> io::Result<()> {
     w.flush()
 }
 
+/// Fault-injection helper (`serve/fault.rs`, chaos tests): write a header
+/// announcing the full payload length but deliver only the first half of
+/// the body, then flush. The peer's reader must classify the stream as
+/// [`FrameRead::Truncated`] once the connection dies — never block
+/// forever, never surface a half frame as data. Production code never
+/// calls this.
+pub fn write_frame_truncated(w: &mut impl Write, payload: &[u8]) -> io::Result<()> {
+    w.write_all(&(payload.len() as u32).to_be_bytes())?;
+    w.write_all(&payload[..payload.len() / 2])?;
+    w.flush()
+}
+
+/// Fault-injection helper: write a correctly *framed* payload whose bytes
+/// have been garbled (a XOR stripe over the middle quarter, sparing tiny
+/// payloads), so framing stays in sync but the JSON inside no longer
+/// parses. Exercises the peer's payload-level error handling separately
+/// from its framing robustness. Production code never calls this.
+pub fn write_frame_corrupted(w: &mut impl Write, payload: &[u8]) -> io::Result<()> {
+    let mut garbled = payload.to_vec();
+    let (a, b) = (garbled.len() / 4, garbled.len() / 2);
+    for byte in &mut garbled[a..b] {
+        *byte ^= 0x5a;
+    }
+    write_frame(w, &garbled)
+}
+
 /// Read one frame into `buf` (cleared and reused across calls, so a
 /// long-lived connection allocates only when frames grow). See
 /// [`FrameRead`] for the outcome contract; `Err` is reserved for hard I/O
@@ -172,6 +198,41 @@ mod tests {
         assert_eq!(buf, b"second");
         // End of stream at a frame boundary is a clean close.
         assert!(matches!(read_frame(&mut r, &mut buf, MAX_FRAME_LEN).unwrap(), FrameRead::Eof));
+    }
+
+    #[test]
+    fn truncated_write_helper_truncates_and_reader_classifies_it() {
+        let mut wire = Vec::new();
+        write_frame_truncated(&mut wire, b"0123456789abcdef").unwrap();
+        // Full-length header, half the body.
+        assert_eq!(wire.len(), 4 + 8);
+        let mut r: &[u8] = &wire;
+        let mut buf = Vec::new();
+        assert!(matches!(
+            read_frame(&mut r, &mut buf, MAX_FRAME_LEN).unwrap(),
+            FrameRead::Truncated
+        ));
+        // Degenerate payloads must not panic the helper.
+        let mut w2 = Vec::new();
+        write_frame_truncated(&mut w2, b"").unwrap();
+        write_frame_truncated(&mut w2, b"x").unwrap();
+    }
+
+    #[test]
+    fn corrupted_write_helper_keeps_framing_but_garbles_the_payload() {
+        let payload = b"{\"id\":1,\"op\":\"infer\",\"padding\":\"padding\"}";
+        let mut wire = Vec::new();
+        write_frame_corrupted(&mut wire, payload).unwrap();
+        let mut r: &[u8] = &wire;
+        let mut buf = Vec::new();
+        // Framing survives: the frame reads whole…
+        assert!(matches!(read_frame(&mut r, &mut buf, MAX_FRAME_LEN).unwrap(), FrameRead::Frame));
+        assert_eq!(buf.len(), payload.len());
+        // …but the bytes differ (the XOR stripe hit the middle quarter).
+        assert_ne!(buf, payload);
+        // Tiny payloads pass through unharmed rather than panicking.
+        let mut w2 = Vec::new();
+        write_frame_corrupted(&mut w2, b"ab").unwrap();
     }
 
     #[test]

@@ -29,14 +29,24 @@
 //! without a controller ([`NetServer::start`]) reject the op as
 //! `bad_request`; [`NetServer::start_with`] enables it.
 //!
+//! PR 9 makes the edge self-healing: connects are timeout-bounded,
+//! requests can carry a `deadline_ms` queue budget (shed at dequeue with
+//! a `deadline_exceeded` error once it expires), the client grows an
+//! opt-in [`RetryPolicy`] for transient failures with transparent
+//! reconnects, and [`NetServer::start_faulted`] threads a deterministic
+//! [`FaultPlan`](crate::serve::fault::FaultPlan) through the reader and
+//! writer so the chaos tests can corrupt, truncate, stall and drop real
+//! connections on a reproducible schedule.
+//!
 //! The protocol and its guarantees are specified in DESIGN.md
-//! §Wire-protocol; `lsqnet serve --listen <addr>` is the entry point.
+//! §Wire-protocol and §Fault-model; `lsqnet serve --listen <addr>` is
+//! the entry point.
 
 pub mod client;
 pub mod frame;
 pub mod server;
 pub mod wire;
 
-pub use client::{NetClient, NetClientError, NetReceiver, NetSender};
+pub use client::{NetClient, NetClientError, NetReceiver, NetSender, RetryPolicy};
 pub use server::NetServer;
 pub use wire::{NetRequest, NetResponse, RespBody, WireError};

@@ -48,6 +48,7 @@ use anyhow::{Context, Result};
 
 use super::frame::{self, FrameRead};
 use super::wire::{NetRequest, NetResponse, RespBody, WireError};
+use crate::serve::fault::{FaultPlan, NetFault};
 use crate::serve::registry::{ModelRegistry, Session};
 use crate::serve::tier::TierController;
 use crate::serve::{Reply, ServeError};
@@ -95,6 +96,20 @@ impl NetServer {
         tiers: Option<Arc<TierController>>,
         addr: impl ToSocketAddrs,
     ) -> Result<NetServer> {
+        Self::start_faulted(registry, tiers, addr, None)
+    }
+
+    /// Like [`NetServer::start_with`], plus a [`FaultPlan`] whose
+    /// connection-level sites fire inside this server's reader/writer
+    /// threads: stalled reads, dropped connections, corrupted and
+    /// truncated response frames. `None` hooks cost one branch per frame;
+    /// production callers pass `None` and never see a fault.
+    pub fn start_faulted(
+        registry: Arc<ModelRegistry>,
+        tiers: Option<Arc<TierController>>,
+        addr: impl ToSocketAddrs,
+        fault: Option<Arc<FaultPlan>>,
+    ) -> Result<NetServer> {
         let listener = TcpListener::bind(addr).context("binding serve listener")?;
         let local_addr = listener.local_addr().context("listener local_addr")?;
         let stop = Arc::new(AtomicBool::new(false));
@@ -102,7 +117,7 @@ impl NetServer {
             let stop = Arc::clone(&stop);
             thread::Builder::new()
                 .name("lsq-net-accept".into())
-                .spawn(move || accept_loop(listener, registry, tiers, stop))
+                .spawn(move || accept_loop(listener, registry, tiers, stop, fault))
                 .context("spawning accept thread")?
         };
         Ok(NetServer { local_addr, stop, accept: Some(accept) })
@@ -144,6 +159,7 @@ fn accept_loop(
     registry: Arc<ModelRegistry>,
     tiers: Option<Arc<TierController>>,
     stop: Arc<AtomicBool>,
+    fault: Option<Arc<FaultPlan>>,
 ) {
     let mut conns: Vec<JoinHandle<()>> = Vec::new();
     let mut next_cid = 0u64;
@@ -161,9 +177,10 @@ fn accept_loop(
         let registry = Arc::clone(&registry);
         let tiers = tiers.clone();
         let stop = Arc::clone(&stop);
+        let fault = fault.clone();
         let spawned = thread::Builder::new()
             .name(format!("lsq-net-conn-{cid}"))
-            .spawn(move || handle_conn(stream, &registry, tiers.as_deref(), &stop, cid));
+            .spawn(move || handle_conn(stream, &registry, tiers.as_deref(), &stop, cid, fault));
         if let Ok(h) = spawned {
             conns.push(h);
         } // else: thread spawn failed — the dropped stream closes the peer
@@ -180,11 +197,12 @@ enum WriteItem {
     /// Already-resolved response (errors, ping, models).
     Ready(NetResponse),
     /// An accepted infer: the writer blocks on the reply channel. The
-    /// registry guarantees the channel is answered (or dropped only on
-    /// replica death), so FIFO resolution cannot wedge.
+    /// registry guarantees the channel is answered exactly once — with a
+    /// reply or a typed error (deadline shed, exec failure, drain) — so
+    /// FIFO resolution cannot wedge.
     Pending {
         id: u64,
-        rx: Receiver<Reply>,
+        rx: Receiver<Result<Reply, ServeError>>,
     },
 }
 
@@ -194,6 +212,7 @@ fn handle_conn(
     tiers: Option<&TierController>,
     stop: &AtomicBool,
     cid: u64,
+    fault: Option<Arc<FaultPlan>>,
 ) {
     let _ = stream.set_nodelay(true);
     if stream.set_read_timeout(Some(IDLE_POLL)).is_err() {
@@ -205,12 +224,15 @@ fn handle_conn(
     };
     let _ = wstream.set_write_timeout(Some(WRITE_TIMEOUT));
     let (tx, witems) = mpsc::channel::<WriteItem>();
-    let writer = match thread::Builder::new()
-        .name(format!("lsq-net-wr-{cid}"))
-        .spawn(move || writer_loop(wstream, witems))
-    {
-        Ok(h) => h,
-        Err(_) => return,
+    let writer = {
+        let fault = fault.clone();
+        match thread::Builder::new()
+            .name(format!("lsq-net-wr-{cid}"))
+            .spawn(move || writer_loop(wstream, witems, fault))
+        {
+            Ok(h) => h,
+            Err(_) => return,
+        }
     };
 
     let mut buf = Vec::new();
@@ -223,7 +245,22 @@ fn handle_conn(
         }
         match frame::read_frame(&mut stream, &mut buf, frame::MAX_FRAME_LEN) {
             Ok(FrameRead::Idle) => continue,
-            Ok(FrameRead::Frame) => {}
+            Ok(FrameRead::Frame) => {
+                // Fault hook: the site counter advances once per assembled
+                // frame, so the k-th frame across all connections gets a
+                // deterministic verdict regardless of accept interleaving.
+                match fault.as_deref().map_or(NetFault::None, FaultPlan::net_read) {
+                    NetFault::None => {}
+                    NetFault::Stall(d) => thread::sleep(d),
+                    NetFault::Drop => {
+                        let _ = stream.shutdown(Shutdown::Both);
+                        break;
+                    }
+                    // Corrupt/Truncate are write-side verdicts; net_read
+                    // never returns them.
+                    NetFault::Corrupt | NetFault::Truncate => {}
+                }
+            }
             Ok(FrameRead::TooLarge { len }) => {
                 // The unread oversized body cannot be re-synced past:
                 // report, then close.
@@ -278,18 +315,19 @@ fn handle_frame(
         NetRequest::Models { id } => {
             WriteItem::Ready(NetResponse::ok(id, RespBody::Models { models: registry.variants() }))
         }
-        NetRequest::Infer { id, model, image } => {
-            match submit(registry, sessions, &model, image) {
+        NetRequest::Infer { id, model, image, deadline_ms } => {
+            let budget = deadline_ms.map(Duration::from_millis);
+            match submit(registry, sessions, &model, image, budget) {
                 Ok(rx) => WriteItem::Pending { id, rx },
                 Err(e) => WriteItem::Ready(NetResponse::fail(id, WireError::from(e))),
             }
         }
-        NetRequest::Tiered { id, image } => match tiers {
+        NetRequest::Tiered { id, image, deadline_ms } => match tiers {
             None => bad(
                 Json::Num(id as f64),
                 "no tier controller on this server (start with --tiers)".to_string(),
             ),
-            Some(tc) => match tc.route(image) {
+            Some(tc) => match tc.route_deadline(image, deadline_ms.map(Duration::from_millis)) {
                 Ok(rx) => WriteItem::Pending { id, rx },
                 Err(e) => WriteItem::Ready(NetResponse::fail(id, WireError::from(e))),
             },
@@ -307,17 +345,22 @@ fn submit(
     sessions: &mut BTreeMap<String, Session>,
     model: &str,
     image: Vec<f32>,
-) -> Result<Receiver<Reply>, ServeError> {
+    budget: Option<Duration>,
+) -> Result<Receiver<Result<Reply, ServeError>>, ServeError> {
     let stale = sessions.get(model).map_or(true, |s| !s.is_open());
     if stale {
         sessions.remove(model);
         let fresh = registry.session(model)?; // UnknownModel if not loaded
         sessions.insert(model.to_string(), fresh);
     }
-    sessions.get(model).expect("session was just inserted").submit(image)
+    sessions.get(model).expect("session was just inserted").submit_deadline(image, budget)
 }
 
-fn writer_loop(mut stream: TcpStream, items: Receiver<WriteItem>) {
+fn writer_loop(
+    mut stream: TcpStream,
+    items: Receiver<WriteItem>,
+    fault: Option<Arc<FaultPlan>>,
+) {
     // Once a write fails (peer gone, or WRITE_TIMEOUT against a client
     // that stopped reading) the connection is dead — but the loop keeps
     // *consuming* items so every pending reply channel is still drained
@@ -327,7 +370,7 @@ fn writer_loop(mut stream: TcpStream, items: Receiver<WriteItem>) {
         let resp = match item {
             WriteItem::Ready(r) => r,
             WriteItem::Pending { id, rx } => match rx.recv() {
-                Ok(reply) => NetResponse::ok(
+                Ok(Ok(reply)) => NetResponse::ok(
                     id,
                     RespBody::Infer {
                         logits: reply.logits,
@@ -336,6 +379,9 @@ fn writer_loop(mut stream: TcpStream, items: Receiver<WriteItem>) {
                         total_ms: reply.total_ms,
                     },
                 ),
+                // Typed refusal after acceptance: deadline shed at
+                // dequeue, exec failure, or drain answered it.
+                Ok(Err(e)) => NetResponse::fail(id, WireError::from(e)),
                 // The registry answers accepted requests; a dropped reply
                 // channel means the replica set died out from under us.
                 Err(_) => NetResponse::fail(id, WireError::ShutDown),
@@ -345,7 +391,21 @@ fn writer_loop(mut stream: TcpStream, items: Receiver<WriteItem>) {
             continue;
         }
         let payload = resp.to_json().to_string();
-        if frame::write_frame(&mut stream, payload.as_bytes()).is_err() {
+        // Fault hook: one verdict per response actually written, so the
+        // k-th response across all connections is the one garbled.
+        let wrote = match fault.as_deref().map_or(NetFault::None, FaultPlan::net_write) {
+            NetFault::Corrupt => frame::write_frame_corrupted(&mut stream, payload.as_bytes()),
+            NetFault::Truncate => {
+                // A half-written frame cannot be re-synced past: garble,
+                // then kill the connection like a mid-write crash would.
+                let r = frame::write_frame_truncated(&mut stream, payload.as_bytes());
+                let _ = stream.shutdown(Shutdown::Both);
+                dead = true;
+                r
+            }
+            _ => frame::write_frame(&mut stream, payload.as_bytes()),
+        };
+        if wrote.is_err() {
             dead = true;
         }
     }

@@ -11,6 +11,12 @@
 //! {"id": 10, "op": "tiered", "image": [0.1, …]}
 //! ```
 //!
+//! `infer` and `tiered` accept an optional `"deadline_ms"` (non-negative
+//! integer): the server stamps the request on arrival and sheds it with a
+//! `deadline_exceeded` error if it is still queued when the budget runs
+//! out, instead of burning replica time on an answer the client has
+//! stopped waiting for.
+//!
 //! `tiered` carries no model name: the server's
 //! [`crate::serve::TierController`] picks the precision tier (and may
 //! answer `shed` when its whole ladder is saturated). Servers started
@@ -49,6 +55,10 @@ pub enum NetRequest {
         model: String,
         /// Flattened NHWC image (`image × image × channels` floats).
         image: Vec<f32>,
+        /// Queue-time budget: the server sheds the request with
+        /// `deadline_exceeded` if it has not started executing within
+        /// this many milliseconds of arrival. `None` = wait forever.
+        deadline_ms: Option<u64>,
     },
     /// List the registry's loaded variant names.
     Models {
@@ -69,6 +79,8 @@ pub enum NetRequest {
         id: u64,
         /// Flattened NHWC image (`image × image × channels` floats).
         image: Vec<f32>,
+        /// Queue-time budget, as on [`NetRequest::Infer`].
+        deadline_ms: Option<u64>,
     },
 }
 
@@ -145,6 +157,11 @@ pub enum WireError {
     /// shedding means the whole ladder is out of capacity: back off
     /// before retrying.
     Shed,
+    /// The request's `deadline_ms` budget expired while it was still
+    /// queued; the server shed it at dequeue without executing it. Not
+    /// worth retrying with the same budget — the queue was slower than
+    /// the client was willing to wait.
+    DeadlineExceeded,
 }
 
 impl From<ServeError> for WireError {
@@ -156,6 +173,7 @@ impl From<ServeError> for WireError {
             ServeError::ShutDown => WireError::ShutDown,
             ServeError::BadImage { got, want } => WireError::BadImage { got, want },
             ServeError::Shed => WireError::Shed,
+            ServeError::DeadlineExceeded => WireError::DeadlineExceeded,
         }
     }
 }
@@ -172,6 +190,7 @@ impl WireError {
             WireError::BadRequest { .. } => "bad_request",
             WireError::FrameTooLarge { .. } => "frame_too_large",
             WireError::Shed => "shed",
+            WireError::DeadlineExceeded => "deadline_exceeded",
         }
     }
 
@@ -199,7 +218,10 @@ impl WireError {
                 // back would not be an identity.
                 fields.push(("reason", Json::str(msg.clone())));
             }
-            WireError::Closed | WireError::ShutDown | WireError::Shed => {}
+            WireError::Closed
+            | WireError::ShutDown
+            | WireError::Shed
+            | WireError::DeadlineExceeded => {}
         }
         fields.push(("msg", Json::str(self.to_string())));
         Json::obj(fields)
@@ -234,6 +256,7 @@ impl WireError {
             }),
             "frame_too_large" => Ok(WireError::FrameTooLarge { len: us("len")?, max: us("max")? }),
             "shed" => Ok(WireError::Shed),
+            "deadline_exceeded" => Ok(WireError::DeadlineExceeded),
             other => Err(format!("unknown error kind {other:?}")),
         }
     }
@@ -258,6 +281,9 @@ impl fmt::Display for WireError {
             WireError::Shed => {
                 write!(f, "all precision tiers saturated: request shed, back off before retrying")
             }
+            WireError::DeadlineExceeded => {
+                write!(f, "request deadline expired before execution; shed at dequeue")
+            }
         }
     }
 }
@@ -278,23 +304,35 @@ impl NetRequest {
     /// Serialize to the frame payload JSON.
     pub fn to_json(&self) -> Json {
         match self {
-            NetRequest::Infer { id, model, image } => Json::obj(vec![
-                ("id", Json::num(*id as f64)),
-                ("op", Json::str("infer")),
-                ("model", Json::str(model.clone())),
-                ("image", Json::arr_f32(image)),
-            ]),
+            NetRequest::Infer { id, model, image, deadline_ms } => {
+                let mut fields = vec![
+                    ("id", Json::num(*id as f64)),
+                    ("op", Json::str("infer")),
+                    ("model", Json::str(model.clone())),
+                    ("image", Json::arr_f32(image)),
+                ];
+                if let Some(ms) = deadline_ms {
+                    fields.push(("deadline_ms", Json::num(*ms as f64)));
+                }
+                Json::obj(fields)
+            }
             NetRequest::Models { id } => {
                 Json::obj(vec![("id", Json::num(*id as f64)), ("op", Json::str("models"))])
             }
             NetRequest::Ping { id } => {
                 Json::obj(vec![("id", Json::num(*id as f64)), ("op", Json::str("ping"))])
             }
-            NetRequest::Tiered { id, image } => Json::obj(vec![
-                ("id", Json::num(*id as f64)),
-                ("op", Json::str("tiered")),
-                ("image", Json::arr_f32(image)),
-            ]),
+            NetRequest::Tiered { id, image, deadline_ms } => {
+                let mut fields = vec![
+                    ("id", Json::num(*id as f64)),
+                    ("op", Json::str("tiered")),
+                    ("image", Json::arr_f32(image)),
+                ];
+                if let Some(ms) = deadline_ms {
+                    fields.push(("deadline_ms", Json::num(*ms as f64)));
+                }
+                Json::obj(fields)
+            }
         }
     }
 
@@ -325,6 +363,15 @@ impl NetRequest {
                 }
                 Ok(image)
             };
+            let deadline_field = || -> Result<Option<u64>, String> {
+                match v.get("deadline_ms") {
+                    None => Ok(None),
+                    Some(d) => d
+                        .as_u64()
+                        .map(Some)
+                        .ok_or_else(|| "\"deadline_ms\" must be a non-negative integer".to_string()),
+                }
+            };
             match op {
                 "infer" => {
                     let model = v
@@ -332,11 +379,18 @@ impl NetRequest {
                         .and_then(Json::as_str)
                         .ok_or_else(|| "missing string \"model\"".to_string())?
                         .to_string();
-                    Ok(NetRequest::Infer { id, model, image: image_field()? })
+                    Ok(NetRequest::Infer {
+                        id,
+                        model,
+                        image: image_field()?,
+                        deadline_ms: deadline_field()?,
+                    })
                 }
                 "models" => Ok(NetRequest::Models { id }),
                 "ping" => Ok(NetRequest::Ping { id }),
-                "tiered" => Ok(NetRequest::Tiered { id, image: image_field()? }),
+                "tiered" => {
+                    Ok(NetRequest::Tiered { id, image: image_field()?, deadline_ms: deadline_field()? })
+                }
                 other => Err(format!("unknown op {other:?}")),
             }
         })();
@@ -464,10 +518,18 @@ mod tests {
             id: 7,
             model: "cnn_small_q2".into(),
             image: vec![0.0, -1.5, 0.33333334, f32::MIN_POSITIVE],
+            deadline_ms: None,
+        });
+        roundtrip_req(NetRequest::Infer {
+            id: 8,
+            model: "cnn_small_q2".into(),
+            image: vec![0.5],
+            deadline_ms: Some(250),
         });
         roundtrip_req(NetRequest::Models { id: 0 });
         roundtrip_req(NetRequest::Ping { id: u32::MAX as u64 });
-        roundtrip_req(NetRequest::Tiered { id: 11, image: vec![0.25, -2.0, 1e-7] });
+        roundtrip_req(NetRequest::Tiered { id: 11, image: vec![0.25, -2.0, 1e-7], deadline_ms: None });
+        roundtrip_req(NetRequest::Tiered { id: 12, image: vec![0.25], deadline_ms: Some(0) });
     }
 
     #[test]
@@ -495,6 +557,7 @@ mod tests {
             WireError::BadRequest { msg: "missing string \"model\"".into() },
             WireError::FrameTooLarge { len: 1 << 30, max: 4 << 20 },
             WireError::Shed,
+            WireError::DeadlineExceeded,
         ] {
             roundtrip_resp(NetResponse::fail(9, e));
         }
@@ -518,6 +581,7 @@ mod tests {
             WireError::BadImage { got: 1, want: 2 }
         );
         assert_eq!(WireError::from(ServeError::Shed), WireError::Shed);
+        assert_eq!(WireError::from(ServeError::DeadlineExceeded), WireError::DeadlineExceeded);
     }
 
     #[test]
@@ -532,6 +596,9 @@ mod tests {
             "{\"id\": 1, \"model\": \"m\"}",
             "{\"id\": 1, \"op\": \"tiered\"}",
             "{\"id\": 1, \"op\": \"tiered\", \"image\": [\"x\"]}",
+            "{\"id\": 1, \"model\": \"m\", \"image\": [], \"deadline_ms\": \"fast\"}",
+            "{\"id\": 1, \"model\": \"m\", \"image\": [], \"deadline_ms\": -5}",
+            "{\"id\": 1, \"model\": \"m\", \"image\": [], \"deadline_ms\": 1.5}",
             "[1, 2, 3]",
             "null",
         ] {
@@ -552,7 +619,7 @@ mod tests {
         let (_, parsed) = NetRequest::from_json(&v);
         assert_eq!(
             parsed.unwrap(),
-            NetRequest::Infer { id: 4, model: "m_q2".into(), image: vec![0.5] }
+            NetRequest::Infer { id: 4, model: "m_q2".into(), image: vec![0.5], deadline_ms: None }
         );
     }
 }

@@ -17,6 +17,7 @@
 //!  │  │ stats:  Mutex<ServeStats>                  │◄── Session (any thread)
 //!  │  │ queue ─► replica 0 ─► NativeEngine + ws    │           │
 //!  │  │       └► replica 1 ─► NativeEngine + ws    │           │
+//!  │  │ supervisor ── respawns dead replicas ──────┘           │
 //!  │  └────────────────────────────────────────────┘           │
 //!  │  "cnn_small_q4" ─ VariantShared ─► replica …  ◄── Session("cnn_small_q4")
 //!  └───────────────────────────────────────────────────────────┘
@@ -31,12 +32,25 @@
 //! request is dropped, and subsequent submits fail with
 //! [`ServeError::Closed`].
 //!
+//! **Self-healing** (DESIGN.md §Fault-model): each variant runs a
+//! supervisor thread that reaps dead replica workers and respawns them
+//! with jittered exponential backoff under a [`RestartPolicy`] — a
+//! rolling restart *budget* so a crash loop cannot spin forever. Budget
+//! exhaustion (or total replica death with nothing left to respawn)
+//! marks the variant unhealthy ([`ModelRegistry::healthy`]), which is
+//! the signal the tier controller fails over on, instead of silently
+//! serving at reduced capacity. Teardown composes with an in-flight
+//! respawn: drain *joins the supervisor*, which stops scheduling
+//! respawns the moment the intake closes and spawns a short-lived
+//! drainer replica if workers died with requests still queued — every
+//! accepted request is answered exactly once, even mid-crash.
+//!
 //! [`super::Server`] remains as a one-variant compatibility shim over
 //! this registry. See DESIGN.md §Serving-API.
 
 use std::collections::BTreeMap;
 use std::path::Path;
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc::{Receiver, RecvTimeoutError, SyncSender, TrySendError};
 use std::sync::{Arc, Mutex, RwLock};
 use std::time::{Duration, Instant};
@@ -45,8 +59,59 @@ use anyhow::{bail, Result};
 
 use crate::runtime::{Backend as _, BackendKind, BackendSpec, Manifest, PrepareOptions};
 use crate::tensor::Tensor;
+use crate::util::rng::Pcg32;
 
+use super::fault::{FaultPlan, ReplicaFault};
 use super::{Reply, Request, ServeError, ServeStats};
+
+/// Supervisor restart discipline for one variant's replica set.
+///
+/// A dead replica is respawned after a jittered exponential backoff
+/// (`backoff · 2^(n−1)` capped at `backoff_cap`, ×[1, 1.25) jitter so
+/// sibling crash loops desynchronize), but only while fewer than
+/// `budget` restarts have happened within the rolling `window`. Hitting
+/// the budget marks the variant **unhealthy** — the tier controller's
+/// failover signal — and stops respawning for the life of this load
+/// (re-`load` the variant to reset). `budget: 0` disables supervision
+/// entirely (the pre-supervisor behavior: survivors keep serving, total
+/// death closes the variant).
+#[derive(Clone, Debug)]
+pub struct RestartPolicy {
+    /// Restarts allowed per rolling `window` before the variant is
+    /// declared unhealthy. 0 = never respawn.
+    pub budget: u32,
+    /// Rolling window the budget is counted over.
+    pub window: Duration,
+    /// Base backoff before the first respawn; doubles per restart in the
+    /// window.
+    pub backoff: Duration,
+    /// Upper bound on the exponential backoff.
+    pub backoff_cap: Duration,
+    /// Seed for the backoff jitter (mixed with the variant name, so two
+    /// variants under one policy still jitter independently).
+    pub jitter_seed: u64,
+}
+
+impl Default for RestartPolicy {
+    fn default() -> RestartPolicy {
+        RestartPolicy {
+            budget: 3,
+            window: Duration::from_secs(10),
+            backoff: Duration::from_millis(10),
+            backoff_cap: Duration::from_millis(500),
+            jitter_seed: 0,
+        }
+    }
+}
+
+impl RestartPolicy {
+    /// Never respawn: replica deaths only decrement live capacity, and
+    /// total death closes the variant. For tests and embedded callers
+    /// that manage recovery themselves.
+    pub fn disabled() -> RestartPolicy {
+        RestartPolicy { budget: 0, ..RestartPolicy::default() }
+    }
+}
 
 /// Per-variant deployment options for [`ModelRegistry::load`].
 #[derive(Clone, Debug)]
@@ -72,6 +137,12 @@ pub struct VariantOptions {
     /// unpack, `Some(false)` = pin the panelized fast path, `None` = the
     /// process `LSQNET_FUSED_UNPACK` default.
     pub low_memory: Option<bool>,
+    /// Supervisor restart discipline for this variant's replicas.
+    pub restarts: RestartPolicy,
+    /// Deterministic fault schedule threaded into the replica exec loop
+    /// (chaos tests). `None` — the default and the production value —
+    /// injects nothing.
+    pub fault: Option<Arc<FaultPlan>>,
 }
 
 impl Default for VariantOptions {
@@ -83,6 +154,8 @@ impl Default for VariantOptions {
             queue_depth: 256,
             intra_threads: 0,
             low_memory: None,
+            restarts: RestartPolicy::default(),
+            fault: None,
         }
     }
 }
@@ -100,17 +173,25 @@ struct VariantShared {
     intake: RwLock<Option<SyncSender<Request>>>,
     stats: Mutex<ServeStats>,
     /// Requests ever accepted by `try_send` (the linearization point of
-    /// admission). `accepted − stats.requests` is the live queue-depth
+    /// admission). `accepted − stats.answered()` is the live queue-depth
     /// gauge: requests queued, batching, or executing but not yet
     /// answered — one of the three signals the tier controller samples.
     accepted: AtomicU64,
+    /// `false` once the supervisor gives up on the variant: restart
+    /// budget exhausted, or every replica dead with nothing scheduled.
+    /// The tier controller's failover signal ([`ModelRegistry::healthy`]).
+    health: AtomicBool,
+    /// Replica worker threads currently running their exec loop.
+    live: AtomicUsize,
     image_len: usize,
     queue_depth: usize,
 }
 
 struct VariantEntry {
     shared: Arc<VariantShared>,
-    handles: Vec<std::thread::JoinHandle<()>>,
+    /// The variant's supervisor thread; it owns the replica handles.
+    /// Joining it (after closing the intake) joins the whole worker set.
+    supervisor: Vec<std::thread::JoinHandle<()>>,
     replicas: usize,
 }
 
@@ -130,15 +211,32 @@ impl Session {
     /// Blocking single-request inference.
     pub fn infer(&self, image: Vec<f32>) -> Result<Reply, ServeError> {
         let rx = self.submit(image)?;
-        rx.recv().map_err(|_| ServeError::ShutDown)
+        rx.recv().unwrap_or(Err(ServeError::ShutDown))
     }
 
-    /// Non-blocking submit; returns the reply channel. A full queue is
-    /// [`ServeError::QueueFull`] (backpressure), a drained/unloaded
-    /// variant [`ServeError::Closed`], and a variant whose replicas all
-    /// died [`ServeError::ShutDown`].
-    pub fn submit(&self, image: Vec<f32>) -> Result<Receiver<Reply>, ServeError> {
+    /// Non-blocking submit; returns the reply channel (answered exactly
+    /// once: `Ok(Reply)`, or a terminal `Err` such as
+    /// [`ServeError::DeadlineExceeded`] / [`ServeError::ShutDown`]). A
+    /// full queue is [`ServeError::QueueFull`] (backpressure), a
+    /// drained/unloaded variant [`ServeError::Closed`], and a variant
+    /// whose replicas all died [`ServeError::ShutDown`].
+    pub fn submit(
+        &self,
+        image: Vec<f32>,
+    ) -> Result<Receiver<Result<Reply, ServeError>>, ServeError> {
         self.submit_reclaim(image).map_err(|(e, _)| e)
+    }
+
+    /// [`Session::submit`] with a latency budget: once `budget` elapses
+    /// the request may be shed *at dequeue* — a replica answers
+    /// [`ServeError::DeadlineExceeded`] instead of executing a forward
+    /// pass nobody is waiting for. `None` = no deadline.
+    pub fn submit_deadline(
+        &self,
+        image: Vec<f32>,
+        budget: Option<Duration>,
+    ) -> Result<Receiver<Result<Reply, ServeError>>, ServeError> {
+        self.submit_reclaim_deadline(image, budget).map_err(|(e, _)| e)
     }
 
     /// [`Session::submit`], but every error path hands the image buffer
@@ -148,18 +246,30 @@ impl Session {
     pub fn submit_reclaim(
         &self,
         image: Vec<f32>,
-    ) -> Result<Receiver<Reply>, (ServeError, Vec<f32>)> {
+    ) -> Result<Receiver<Result<Reply, ServeError>>, (ServeError, Vec<f32>)> {
+        self.submit_reclaim_deadline(image, None)
+    }
+
+    /// [`Session::submit_reclaim`] with a [`Session::submit_deadline`]
+    /// latency budget.
+    pub fn submit_reclaim_deadline(
+        &self,
+        image: Vec<f32>,
+        budget: Option<Duration>,
+    ) -> Result<Receiver<Result<Reply, ServeError>>, (ServeError, Vec<f32>)> {
         if image.len() != self.shared.image_len {
             let err = ServeError::BadImage { got: image.len(), want: self.shared.image_len };
             return Err((err, image));
         }
+        let now = Instant::now();
+        let expires = budget.map(|b| now + b);
         let guard = self.shared.intake.read().unwrap();
         let tx = match guard.as_ref() {
             Some(tx) => tx,
             None => return Err((ServeError::Closed, image)),
         };
         let (reply_tx, reply_rx) = std::sync::mpsc::sync_channel(1);
-        match tx.try_send(Request { image, submitted: Instant::now(), reply: reply_tx }) {
+        match tx.try_send(Request { image, submitted: now, expires, reply: reply_tx }) {
             Ok(()) => {
                 self.shared.accepted.fetch_add(1, Ordering::Relaxed);
                 Ok(reply_rx)
@@ -172,11 +282,13 @@ impl Session {
     }
 
     /// Requests accepted but not yet answered (queued + batching +
-    /// executing): the live queue-depth gauge. Racy by nature — it moves
-    /// under traffic; use it as a load signal, not an invariant.
+    /// executing): the live queue-depth gauge. "Answered" includes
+    /// deadline sheds and terminal errors ([`ServeStats::answered`]).
+    /// Racy by nature — it moves under traffic; use it as a load signal,
+    /// not an invariant.
     pub fn in_flight(&self) -> usize {
         let accepted = self.shared.accepted.load(Ordering::Relaxed);
-        let answered = self.shared.stats.lock().unwrap().requests;
+        let answered = self.shared.stats.lock().unwrap().answered();
         accepted.saturating_sub(answered) as usize
     }
 
@@ -284,18 +396,16 @@ impl ModelRegistry {
         let replicas = opts.replicas.max(1);
         let queue_depth = opts.queue_depth.max(1);
         let (tx, rx) = std::sync::mpsc::sync_channel::<Request>(queue_depth);
-        let shared_rx = Arc::new(Mutex::new(rx));
         let shared = Arc::new(VariantShared {
             variant: variant.to_string(),
             intake: RwLock::new(Some(tx)),
             stats: Mutex::new(ServeStats::default()),
             accepted: AtomicU64::new(0),
+            health: AtomicBool::new(true),
+            live: AtomicUsize::new(0),
             image_len,
             queue_depth,
         });
-        // Replicas share one immutable parameter set behind an Arc — the
-        // old per-replica `params.clone()` duplicated every tensor.
-        let params = Arc::new(params);
 
         // Phase 1 — reserve the name under the map lock, briefly. The
         // duplicate check re-runs under the same lock as the insert, so
@@ -316,7 +426,11 @@ impl ModelRegistry {
                 map.values().map(|e| e.replicas).sum::<usize>() + replicas;
             map.insert(
                 variant.to_string(),
-                VariantEntry { shared: Arc::clone(&shared), handles: Vec::new(), replicas },
+                VariantEntry {
+                    shared: Arc::clone(&shared),
+                    supervisor: Vec::new(),
+                    replicas,
+                },
             );
             // Partition the core budget across every replica in the
             // process: the ones already serving plus the ones this load
@@ -327,25 +441,29 @@ impl ModelRegistry {
                 opts.intra_threads
             }
         };
-        let prep = PrepareOptions {
-            intra_op_threads: intra_threads,
-            low_memory: opts.low_memory,
-        };
 
-        // Phase 2 — spawn the replica set with no lock held.
+        // Everything a replica (initial, respawned, or teardown drainer)
+        // needs, behind one Arc — replicas share one immutable parameter
+        // set (the old per-replica `params.clone()` duplicated every
+        // tensor), and the supervisor keeps the queue receiver alive
+        // across replica deaths so buffered requests survive a crash.
+        let ctx = Arc::new(ReplicaCtx {
+            spec: self.spec.clone(),
+            params: Arc::new(params),
+            prep: PrepareOptions { intra_op_threads: intra_threads, low_memory: opts.low_memory },
+            rx: Arc::new(Mutex::new(rx)),
+            shared: Arc::clone(&shared),
+            max_wait: opts.max_wait,
+            classes,
+            fault: opts.fault.clone(),
+        });
+
+        // Phase 2 — spawn the replica set and its supervisor with no
+        // lock held.
         let mut handles = Vec::with_capacity(replicas);
         let mut spawn_err: Option<std::io::Error> = None;
         for rid in 0..replicas {
-            match spawn_replica(
-                self.spec.clone(),
-                Arc::clone(&params),
-                prep.clone(),
-                shared_rx.clone(),
-                Arc::clone(&shared),
-                opts.max_wait,
-                classes,
-                rid,
-            ) {
+            match spawn_replica(&ctx, rid) {
                 Ok(handle) => handles.push(handle),
                 Err(e) => {
                     spawn_err = Some(e);
@@ -353,8 +471,26 @@ impl ModelRegistry {
                 }
             }
         }
+        let supervisor = if spawn_err.is_none() {
+            match spawn_supervisor(Arc::clone(&ctx), opts.restarts.clone(), handles) {
+                Ok(h) => {
+                    handles = Vec::new();
+                    Some(h)
+                }
+                Err(e) => {
+                    // `handles` was moved into the failed spawn's closure
+                    // and dropped with it: the replicas are detached but
+                    // exit on their own once the intake below closes.
+                    handles = Vec::new();
+                    spawn_err = Some(e);
+                    None
+                }
+            }
+        } else {
+            None
+        };
 
-        // Phase 3 — re-take the lock to attach the handles (or roll
+        // Phase 3 — re-take the lock to attach the supervisor (or roll
         // back). `Arc::ptr_eq` distinguishes *our* placeholder from a
         // same-named entry re-loaded after a concurrent drain removed
         // ours mid-spawn.
@@ -376,24 +512,23 @@ impl ModelRegistry {
             }
             return Err(e.into());
         }
+        let supervisor = supervisor.expect("supervisor spawned on the success path");
         {
             let mut map = self.variants.lock().unwrap();
             if let Some(entry) = map.get_mut(variant) {
                 if Arc::ptr_eq(&entry.shared, &shared) {
-                    entry.handles = handles;
+                    entry.supervisor = vec![supervisor];
                     return Ok(());
                 }
             }
         }
         // A concurrent drain_and_unload raced this load and removed the
-        // placeholder (joining its then-empty handle list). Finish the
-        // retirement it started: close the intake, join our replicas —
-        // they still drain and answer anything accepted in the window —
-        // and report the load as failed.
+        // placeholder (joining its then-empty supervisor list). Finish the
+        // retirement it started: close the intake, join the supervisor —
+        // its replicas still drain and answer anything accepted in the
+        // window — and report the load as failed.
         *shared.intake.write().unwrap() = None;
-        for h in handles {
-            let _ = h.join();
-        }
+        let _ = supervisor.join();
         bail!("variant {variant:?} was unloaded while its replicas were starting");
     }
 
@@ -419,16 +554,42 @@ impl ModelRegistry {
             .ok_or_else(|| ServeError::UnknownModel(variant.to_string()))
     }
 
-    /// Configured replica count for one variant. Together with
-    /// [`ServeStats::replica_failures`] this is the liveness signal:
-    /// `replica_failures >= replicas` means every worker died and the
-    /// variant cannot serve even though its intake still accepts.
+    /// Configured replica count for one variant (the supervisor's
+    /// respawn target; [`ModelRegistry::live_replicas`] is how many are
+    /// running right now).
     pub fn replicas(&self, variant: &str) -> Result<usize, ServeError> {
         self.variants
             .lock()
             .unwrap()
             .get(variant)
             .map(|e| e.replicas)
+            .ok_or_else(|| ServeError::UnknownModel(variant.to_string()))
+    }
+
+    /// Replica worker threads currently running their exec loop. Under
+    /// supervision this dips on a crash and recovers after the backoff;
+    /// the chaos tests assert it converges back to
+    /// [`ModelRegistry::replicas`].
+    pub fn live_replicas(&self, variant: &str) -> Result<usize, ServeError> {
+        self.variants
+            .lock()
+            .unwrap()
+            .get(variant)
+            .map(|e| e.shared.live.load(Ordering::SeqCst))
+            .ok_or_else(|| ServeError::UnknownModel(variant.to_string()))
+    }
+
+    /// Supervisor health verdict for one variant: `false` once the
+    /// restart budget is exhausted or every replica is dead with nothing
+    /// left to respawn. This is the liveness signal the tier controller
+    /// fails over on (a drained/unknown variant is reported via `Err`,
+    /// which callers should treat as unhealthy too).
+    pub fn healthy(&self, variant: &str) -> Result<bool, ServeError> {
+        self.variants
+            .lock()
+            .unwrap()
+            .get(variant)
+            .map(|e| e.shared.health.load(Ordering::SeqCst))
             .ok_or_else(|| ServeError::UnknownModel(variant.to_string()))
     }
 
@@ -441,7 +602,7 @@ impl ModelRegistry {
             .get(variant)
             .map(|e| {
                 let accepted = e.shared.accepted.load(Ordering::Relaxed);
-                let answered = e.shared.stats.lock().unwrap().requests;
+                let answered = e.shared.stats.lock().unwrap().answered();
                 accepted.saturating_sub(answered) as usize
             })
             .ok_or_else(|| ServeError::UnknownModel(variant.to_string()))
@@ -459,9 +620,9 @@ impl ModelRegistry {
 
     /// Close `variant`'s intake without waiting for its replicas: further
     /// submits observe [`ServeError::Closed`]; already-accepted requests
-    /// are still dispatched and answered, after which the replicas exit.
-    /// The variant stays registered (for stats) until
-    /// [`ModelRegistry::drain_and_unload`].
+    /// are still dispatched and answered, after which the replicas (and
+    /// their supervisor) exit. The variant stays registered (for stats)
+    /// until [`ModelRegistry::drain_and_unload`].
     pub fn close_intake(&self, variant: &str) -> Result<(), ServeError> {
         let map = self.variants.lock().unwrap();
         let entry = map
@@ -477,9 +638,15 @@ impl ModelRegistry {
     /// throughout — this is how a precision tier is swapped under live
     /// traffic (load the replacement first, then drain the old tier).
     ///
+    /// Teardown composes with the supervisor: closing the intake stops
+    /// any scheduled respawn (a drain never races one), and joining the
+    /// supervisor joins the whole replica set — including a teardown
+    /// drainer it spawns if workers died with requests still queued, so
+    /// "accepted ⇒ answered exactly once" holds even mid-crash.
+    ///
     /// One narrow race softens the "replicas joined on return" part:
     /// draining a variant whose [`ModelRegistry::load`] is still
-    /// mid-spawn joins only the replicas attached so far; the loader
+    /// mid-spawn joins only the supervisor attached so far; the loader
     /// detects the removal, finishes the retirement (its replicas still
     /// answer everything accepted, exactly once) and fails the load.
     pub fn drain_and_unload(&self, variant: &str) -> Result<ServeStats, ServeError> {
@@ -495,7 +662,7 @@ impl ModelRegistry {
         // is released before joining so sessions/loads on other variants
         // never block on a drain.
         *entry.shared.intake.write().unwrap() = None;
-        for h in entry.handles {
+        for h in entry.supervisor {
             let _ = h.join();
         }
         let stats = entry.shared.stats.lock().unwrap().clone();
@@ -519,9 +686,9 @@ impl ModelRegistry {
 impl Drop for ModelRegistry {
     /// Dropping the registry without [`ModelRegistry::shutdown`] (early
     /// error paths, panics) must not leak replica threads: each replica
-    /// holds its own `Arc<VariantShared>`, so only closing every intake
+    /// holds its own `Arc` context, so only closing every intake
     /// disconnects the queues and lets the replicas drain and exit. The
-    /// threads are joined too — they terminate promptly after the
+    /// supervisors are joined too — they terminate promptly after the
     /// disconnect (bounded by the batch in flight, never by `max_wait`).
     fn drop(&mut self) {
         // Poison-tolerant: this also runs while unwinding from a panic,
@@ -541,45 +708,243 @@ impl Drop for ModelRegistry {
             *intake = None;
         }
         for entry in entries {
-            for h in entry.handles {
+            for h in entry.supervisor {
                 let _ = h.join();
             }
         }
     }
 }
 
-/// Spawn one replica worker thread. An engine error inside the replica
-/// (open / prepare / execute) exits the thread — the variant keeps
-/// serving on its survivors — but is *surfaced*, not just logged: the
-/// death lands in [`ServeStats::replica_failures`], the liveness counter
-/// the tier controller reads to fail a dead tier over.
-#[allow(clippy::too_many_arguments)]
-fn spawn_replica(
+/// Everything a replica worker needs, shared with its supervisor so a
+/// respawn is just "spawn another thread over the same context". Keeping
+/// the queue `Receiver` here (not in a replica closure) is what lets
+/// buffered requests survive every worker dying at once.
+struct ReplicaCtx {
     spec: BackendSpec,
     params: Arc<Vec<Tensor>>,
     prep: PrepareOptions,
-    shared_rx: Arc<Mutex<Receiver<Request>>>,
+    rx: Arc<Mutex<Receiver<Request>>>,
     shared: Arc<VariantShared>,
     max_wait: Duration,
     classes: usize,
+    fault: Option<Arc<FaultPlan>>,
+}
+
+/// How a replica worker thread ended.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum ReplicaExit {
+    /// Queue disconnected after a drain: normal retirement.
+    Clean,
+    /// Engine error or panic: supervisor may respawn.
+    Failed,
+}
+
+/// FNV-1a, for mixing the variant name into the jitter seed.
+fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x1_0000_0000_01b3);
+    }
+    h
+}
+
+fn lock_stats<'a>(shared: &'a VariantShared) -> std::sync::MutexGuard<'a, ServeStats> {
+    // Poison-tolerant: stats must survive a replica panicking elsewhere
+    // (the counters are plain integers — always consistent).
+    shared.stats.lock().unwrap_or_else(|p| p.into_inner())
+}
+
+/// Spawn one replica worker thread over `ctx`. The worker maintains
+/// `VariantShared::live`, converts engine errors *and panics* into a
+/// [`ReplicaExit::Failed`] verdict (landing in
+/// [`ServeStats::replica_failures`]) and never unwinds past the closure,
+/// so the supervisor can always reap it.
+fn spawn_replica(
+    ctx: &Arc<ReplicaCtx>,
     rid: usize,
-) -> std::io::Result<std::thread::JoinHandle<()>> {
-    std::thread::Builder::new().name(format!("lsq-serve-{}-{rid}", shared.variant)).spawn(
+) -> std::io::Result<std::thread::JoinHandle<ReplicaExit>> {
+    let ctx = Arc::clone(ctx);
+    std::thread::Builder::new().name(format!("lsq-serve-{}-{rid}", ctx.shared.variant)).spawn(
         move || {
-            if let Err(e) =
-                replica_loop(&spec, &params, &prep, &shared_rx, &shared, max_wait, classes)
-            {
-                eprintln!("serve replica {}/{rid}: {e:#}", shared.variant);
-                // Poison-tolerant: the counter must survive a panic in a
-                // sibling's stats block, and this thread is exiting anyway.
-                let mut s = match shared.stats.lock() {
-                    Ok(g) => g,
-                    Err(p) => p.into_inner(),
-                };
-                s.replica_failures += 1;
+            ctx.shared.live.fetch_add(1, Ordering::SeqCst);
+            let result =
+                std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| replica_loop(&ctx)));
+            ctx.shared.live.fetch_sub(1, Ordering::SeqCst);
+            match result {
+                Ok(Ok(())) => ReplicaExit::Clean,
+                Ok(Err(e)) => {
+                    eprintln!("serve replica {}/{rid}: {e:#}", ctx.shared.variant);
+                    lock_stats(&ctx.shared).replica_failures += 1;
+                    ReplicaExit::Failed
+                }
+                Err(_) => {
+                    eprintln!("serve replica {}/{rid}: worker panicked", ctx.shared.variant);
+                    lock_stats(&ctx.shared).replica_failures += 1;
+                    ReplicaExit::Failed
+                }
             }
         },
     )
+}
+
+/// Start the variant's supervisor thread, handing it the initial replica
+/// handles to own.
+fn spawn_supervisor(
+    ctx: Arc<ReplicaCtx>,
+    policy: RestartPolicy,
+    handles: Vec<std::thread::JoinHandle<ReplicaExit>>,
+) -> std::io::Result<std::thread::JoinHandle<()>> {
+    std::thread::Builder::new()
+        .name(format!("lsq-serve-sup-{}", ctx.shared.variant))
+        .spawn(move || supervise(&ctx, &policy, handles))
+}
+
+/// The supervision loop: reap dead workers, schedule respawns under the
+/// [`RestartPolicy`], flip health on give-up, and honor the drain
+/// contract (never respawn into a teardown; answer every accepted
+/// request exactly once before returning).
+fn supervise(
+    ctx: &Arc<ReplicaCtx>,
+    policy: &RestartPolicy,
+    mut handles: Vec<std::thread::JoinHandle<ReplicaExit>>,
+) {
+    const POLL: Duration = Duration::from_millis(5);
+    // Jitter stream: policy seed × variant name, so sibling variants
+    // under one policy desynchronize their crash-loop backoffs.
+    let mut rng =
+        Pcg32::new(policy.jitter_seed ^ fnv1a(ctx.shared.variant.as_bytes()), 0x7375_7065_7276);
+    // Restart timestamps inside the rolling budget window.
+    let mut window: Vec<Instant> = Vec::new();
+    // Scheduled respawn times (one entry per pending respawn).
+    let mut due: Vec<Instant> = Vec::new();
+    let mut exhausted = false;
+    let mut next_rid = handles.len();
+    // Teardown drainers spawned (bounded — see the draining arm).
+    let mut drainers = 0usize;
+    loop {
+        let draining = {
+            let guard = match ctx.shared.intake.read() {
+                Ok(g) => g,
+                Err(p) => p.into_inner(),
+            };
+            guard.is_none()
+        };
+
+        // Reap finished workers. A `Failed` exit earns a scheduled
+        // respawn while budget remains; hitting `budget` restarts within
+        // the rolling window flips the variant unhealthy instead.
+        let mut k = 0;
+        while k < handles.len() {
+            if !handles[k].is_finished() {
+                k += 1;
+                continue;
+            }
+            let exit = handles.swap_remove(k).join().unwrap_or(ReplicaExit::Failed);
+            if exit == ReplicaExit::Failed && !draining && policy.budget > 0 && !exhausted {
+                let now = Instant::now();
+                window.retain(|t| now.duration_since(*t) < policy.window);
+                if window.len() as u32 >= policy.budget {
+                    exhausted = true;
+                    due.clear();
+                    ctx.shared.health.store(false, Ordering::SeqCst);
+                } else {
+                    window.push(now);
+                    let n = window.len().min(16) as u32;
+                    let backoff =
+                        (policy.backoff * (1u32 << (n - 1))).min(policy.backoff_cap);
+                    due.push(now + backoff.mul_f64(1.0 + 0.25 * rng.uniform() as f64));
+                }
+            }
+        }
+
+        if draining {
+            // Teardown: never race a respawn against a drain.
+            due.clear();
+            if handles.is_empty() {
+                let accepted = ctx.shared.accepted.load(Ordering::SeqCst);
+                let answered = lock_stats(&ctx.shared).answered();
+                if accepted <= answered {
+                    return;
+                }
+                // Workers died with accepted requests still queued. Spawn
+                // a short-lived drainer replica to answer them for real
+                // (not counted as a restart — it is teardown, not
+                // recovery); if drainers themselves keep failing (engine
+                // can't open at all), answer what's buffered with
+                // `ShutDown` so no client waits forever.
+                if drainers < 2 {
+                    match spawn_replica(ctx, next_rid) {
+                        Ok(h) => {
+                            next_rid += 1;
+                            drainers += 1;
+                            handles.push(h);
+                        }
+                        Err(_) => {
+                            flush_queue(ctx);
+                            return;
+                        }
+                    }
+                } else {
+                    flush_queue(ctx);
+                    return;
+                }
+            }
+        } else {
+            // Respawn everything that has come due; a thread-spawn
+            // failure (fd/thread exhaustion) retries next tick.
+            let now = Instant::now();
+            let mut j = 0;
+            while j < due.len() {
+                if due[j] > now {
+                    j += 1;
+                    continue;
+                }
+                match spawn_replica(ctx, next_rid) {
+                    Ok(h) => {
+                        due.swap_remove(j);
+                        next_rid += 1;
+                        handles.push(h);
+                        lock_stats(&ctx.shared).replica_restarts += 1;
+                    }
+                    Err(_) => {
+                        due[j] = now + POLL;
+                        j += 1;
+                    }
+                }
+            }
+            if handles.is_empty() && due.is_empty() {
+                // Every worker is dead and nothing is scheduled (budget
+                // disabled or exhausted): the variant cannot serve. Flip
+                // health, stop accepting, and answer what's already
+                // queued so nothing black-holes; the next iteration takes
+                // the draining arm and retires the supervisor.
+                ctx.shared.health.store(false, Ordering::SeqCst);
+                let mut intake = match ctx.shared.intake.write() {
+                    Ok(g) => g,
+                    Err(p) => p.into_inner(),
+                };
+                *intake = None;
+                drop(intake);
+                flush_queue(ctx);
+            }
+        }
+        std::thread::sleep(POLL);
+    }
+}
+
+/// Answer every request still buffered in the variant's queue with
+/// [`ServeError::ShutDown`] (terminal teardown path: no replica can run).
+fn flush_queue(ctx: &ReplicaCtx) {
+    let rx = ctx.rx.lock().unwrap_or_else(|p| p.into_inner());
+    let mut n = 0u64;
+    while let Ok(req) = rx.try_recv() {
+        let _ = req.reply.send(Err(ServeError::ShutDown));
+        n += 1;
+    }
+    if n > 0 {
+        lock_stats(&ctx.shared).failed_requests += n;
+    }
 }
 
 /// NaN-safe argmax over one row of logits. `f32::total_cmp` is a total
@@ -591,21 +956,34 @@ fn argmax_logits(lg: &[f32]) -> usize {
     lg.iter().enumerate().max_by(|a, b| a.1.total_cmp(b.1)).map(|(i, _)| i).unwrap_or(0)
 }
 
+/// Answer an assembled-but-unexecuted batch with a terminal error (engine
+/// failure or an injected panic): part of the "accepted ⇒ answered
+/// exactly once" ledger, counted in [`ServeStats::failed_requests`].
+fn fail_pending(pending: &mut Vec<Request>, shared: &VariantShared) {
+    let n = pending.len() as u64;
+    for req in pending.drain(..) {
+        let _ = req.reply.send(Err(ServeError::ShutDown));
+    }
+    if n > 0 {
+        lock_stats(shared).failed_requests += n;
+    }
+}
+
 /// One replica: open an engine, bind the variant with the deployment's
 /// [`PrepareOptions`], then batch-and-execute until the variant's queue
-/// disconnects (drain/unload/shutdown).
-#[allow(clippy::too_many_arguments)]
-fn replica_loop(
-    spec: &BackendSpec,
-    params: &[Tensor],
-    prep: &PrepareOptions,
-    shared_rx: &Mutex<Receiver<Request>>,
-    shared: &VariantShared,
-    max_wait: Duration,
-    classes: usize,
-) -> Result<()> {
-    let mut backend = spec.open()?;
-    backend.prepare_infer(&shared.variant, params, prep)?;
+/// disconnects (drain/unload/shutdown). Expired-deadline requests are
+/// shed at dequeue ([`ServeError::DeadlineExceeded`]) before any compute
+/// is spent on them; the optional [`FaultPlan`] hooks fire here (engine
+/// open, per-batch panic/slow-exec).
+fn replica_loop(ctx: &ReplicaCtx) -> Result<()> {
+    let shared = &*ctx.shared;
+    if let Some(f) = &ctx.fault {
+        if f.replica_open_fail() {
+            bail!("fault injection: forced engine-open failure");
+        }
+    }
+    let mut backend = ctx.spec.open()?;
+    backend.prepare_infer(&shared.variant, &ctx.params, &ctx.prep)?;
     let batch = backend.batch();
     let mut pending: Vec<Request> = Vec::with_capacity(batch);
 
@@ -613,17 +991,17 @@ fn replica_loop(
         // Collect a batch while holding the queue; execution happens after
         // the lock is released so replicas overlap on the forward pass.
         {
-            let rx = match shared_rx.lock() {
-                Ok(g) => g,
-                Err(_) => return Ok(()), // another replica panicked
-            };
+            // Poison-tolerant: a sibling panicking mid-`recv` leaves the
+            // receiver itself fine, and giving up here would turn one
+            // crash into whole-variant death.
+            let rx = ctx.rx.lock().unwrap_or_else(|p| p.into_inner());
             match rx.recv_timeout(Duration::from_millis(20)) {
                 Ok(r) => pending.push(r),
                 Err(RecvTimeoutError::Timeout) => continue,
                 // Intake dropped and queue fully drained: we're done.
                 Err(RecvTimeoutError::Disconnected) => return Ok(()),
             }
-            let deadline = Instant::now() + max_wait;
+            let deadline = Instant::now() + ctx.max_wait;
             while pending.len() < batch {
                 let left = deadline.saturating_duration_since(Instant::now());
                 if left.is_zero() {
@@ -635,6 +1013,42 @@ fn replica_loop(
                     Ok(r) => pending.push(r),
                     Err(RecvTimeoutError::Timeout) => continue,
                     Err(RecvTimeoutError::Disconnected) => break,
+                }
+            }
+        }
+
+        // Deadline shed at dequeue: a request whose budget already
+        // expired is answered `DeadlineExceeded` without burning a
+        // forward pass on it — under overload this is what keeps replicas
+        // working on answers someone is still waiting for.
+        let now = Instant::now();
+        let mut expired = 0u64;
+        pending.retain(|req| {
+            let dead = req.expires.map_or(false, |t| now >= t);
+            if dead {
+                let _ = req.reply.send(Err(ServeError::DeadlineExceeded));
+                expired += 1;
+            }
+            !dead
+        });
+        if expired > 0 {
+            lock_stats(shared).deadline_expired += expired;
+        }
+        if pending.is_empty() {
+            continue;
+        }
+
+        // Fault hooks fire per dispatched batch (a stable occurrence
+        // index — idle poll loops don't advance it, so the schedule is a
+        // pure function of the batch sequence). An injected panic answers
+        // its batch *first*: the thread dies, the requests do not.
+        if let Some(f) = &ctx.fault {
+            match f.replica_exec() {
+                ReplicaFault::None => {}
+                ReplicaFault::Slow(d) => std::thread::sleep(d),
+                ReplicaFault::Panic => {
+                    fail_pending(&mut pending, shared);
+                    panic!("fault injection: replica panic");
                 }
             }
         }
@@ -656,11 +1070,20 @@ fn replica_loop(
             .iter()
             .map(|r| t_exec.duration_since(r.submitted).as_secs_f64() * 1e3)
             .sum();
-        let logits = backend.infer(&x)?;
+        let logits = match backend.infer(&x) {
+            Ok(lg) => lg,
+            Err(e) => {
+                // The engine failed mid-batch: the thread is about to
+                // exit, but its batch must still be answered (exactly
+                // once), not silently dropped with the reply channels.
+                fail_pending(&mut pending, shared);
+                return Err(e);
+            }
+        };
         let exec_ms = t_exec.elapsed().as_secs_f64() * 1e3;
 
         {
-            let mut s = shared.stats.lock().unwrap();
+            let mut s = lock_stats(shared);
             s.batches += 1;
             s.requests += real as u64;
             s.rows_dispatched += rows as u64;
@@ -673,11 +1096,11 @@ fn replica_loop(
         }
 
         for (row, req) in pending.drain(..).enumerate() {
-            let lg = logits[row * classes..(row + 1) * classes].to_vec();
+            let lg = logits[row * ctx.classes..(row + 1) * ctx.classes].to_vec();
             let argmax = argmax_logits(&lg);
             let queue_ms = t_exec.duration_since(req.submitted).as_secs_f64() * 1e3;
             let total_ms = req.submitted.elapsed().as_secs_f64() * 1e3;
-            let _ = req.reply.send(Reply { logits: lg, argmax, queue_ms, total_ms });
+            let _ = req.reply.send(Ok(Reply { logits: lg, argmax, queue_ms, total_ms }));
         }
     }
 }
@@ -693,6 +1116,8 @@ mod tests {
             intake: RwLock::new(Some(tx)),
             stats: Mutex::new(ServeStats::default()),
             accepted: AtomicU64::new(0),
+            health: AtomicBool::new(true),
+            live: AtomicUsize::new(0),
             image_len: 4,
             queue_depth,
         });
@@ -755,6 +1180,22 @@ mod tests {
         assert_eq!(img, vec![5.0; 4]);
     }
 
+    /// A submitted deadline lands on the queued request as an absolute
+    /// expiry; no budget means no expiry.
+    #[test]
+    fn submit_deadline_stamps_the_request() {
+        let (shared, rx) = bare_shared(2);
+        let session = Session { shared };
+        session.submit_deadline(vec![0.0; 4], Some(Duration::from_millis(40))).unwrap();
+        session.submit_deadline(vec![0.0; 4], None).unwrap();
+        let with_budget = rx.recv().unwrap();
+        let without = rx.recv().unwrap();
+        let expires = with_budget.expires.expect("budgeted request carries an expiry");
+        let left = expires.saturating_duration_since(Instant::now());
+        assert!(left <= Duration::from_millis(40), "expiry ≈ now + budget, got {left:?}");
+        assert!(without.expires.is_none());
+    }
+
     /// Regression for the replica-thread panic on NaN logits: argmax must
     /// be a total order, never `partial_cmp(..).unwrap()`.
     #[test]
@@ -771,40 +1212,45 @@ mod tests {
     }
 
     /// Replica death is a surfaced signal, not just an stderr line:
-    /// workers whose engine fails to open land in `replica_failures`, and
-    /// a variant whose replicas *all* died still drains cleanly through
-    /// the registry.
+    /// workers whose engine fails to open land in `replica_failures`, the
+    /// supervisor (here with respawn disabled) flips the variant
+    /// unhealthy and closes its intake, and the drain still completes
+    /// cleanly through the registry.
     #[test]
     fn dead_replica_variant_surfaces_failures_and_drains_cleanly() {
         let spec = BackendSpec::native(Path::new("/nonexistent/lsq_dead_replica_fixture"));
         let (shared, rx) = bare_shared(4);
-        let shared_rx = Arc::new(Mutex::new(rx));
-        let params: Arc<Vec<Tensor>> = Arc::new(Vec::new());
-        let mut handles = Vec::new();
-        for rid in 0..2 {
-            handles.push(
-                spawn_replica(
-                    spec.clone(),
-                    Arc::clone(&params),
-                    PrepareOptions::default(),
-                    Arc::clone(&shared_rx),
-                    Arc::clone(&shared),
-                    Duration::from_millis(1),
-                    4,
-                    rid,
-                )
-                .expect("spawn"),
-            );
-        }
+        let ctx = Arc::new(ReplicaCtx {
+            spec: spec.clone(),
+            params: Arc::new(Vec::new()),
+            prep: PrepareOptions::default(),
+            rx: Arc::new(Mutex::new(rx)),
+            shared: Arc::clone(&shared),
+            max_wait: Duration::from_millis(1),
+            classes: 4,
+            fault: None,
+        });
+        let handles =
+            (0..2).map(|rid| spawn_replica(&ctx, rid).expect("spawn")).collect::<Vec<_>>();
+        let sup = spawn_supervisor(Arc::clone(&ctx), RestartPolicy::disabled(), handles)
+            .expect("spawn supervisor");
         let registry = ModelRegistry::with_core_budget(spec, 2);
         registry.variants.lock().unwrap().insert(
             "test_q2".to_string(),
-            VariantEntry { shared: Arc::clone(&shared), handles, replicas: 2 },
+            VariantEntry { shared: Arc::clone(&shared), supervisor: vec![sup], replicas: 2 },
         );
-        // Both replicas exit on the open error; the drain must join them,
-        // report the deaths, and leave the registry consistent.
+        // Both replicas exit on the open error; with respawn disabled the
+        // supervisor declares the variant dead: unhealthy, intake closed.
+        let t0 = Instant::now();
+        while registry.healthy("test_q2").unwrap() && t0.elapsed() < Duration::from_secs(5) {
+            std::thread::sleep(Duration::from_millis(2));
+        }
+        assert_eq!(registry.healthy("test_q2"), Ok(false));
+        // The drain must join supervisor + replicas, report the deaths,
+        // and leave the registry consistent.
         let stats = registry.drain_and_unload("test_q2").expect("drain");
         assert_eq!(stats.replica_failures, 2);
+        assert_eq!(stats.replica_restarts, 0);
         assert_eq!(stats.requests, 0);
         assert_eq!(
             registry.replicas("test_q2").err(),

@@ -19,8 +19,10 @@
 //!   `recover_frac · slo_ms` for `recover_epochs` before it shifts back
 //!   up. The dead band between the two thresholds resets both dwell
 //!   counters, so a signal hovering near the SLO can never flap the
-//!   ladder. Replica health ([`ServeStats::replica_failures`]) preempts
-//!   hysteresis — a dead tier is failed over immediately;
+//!   ladder. Replica health — the supervisor's verdict,
+//!   [`super::ModelRegistry::healthy`]: restart budget exhausted or every
+//!   replica dead — preempts hysteresis: a dead tier is failed over
+//!   immediately;
 //! * **act** — [`TierController::route`] submits to the active tier and
 //!   spills down the ladder on per-queue backpressure. Once every tier at
 //!   or below the active one is saturated, the request is **shed**
@@ -103,8 +105,9 @@ pub struct TierSignal {
     pub depth: usize,
     /// Windowed mean batch occupancy.
     pub occupancy: f64,
-    /// Whether the tier can serve at all: loaded, and fewer replica
-    /// failures than configured replicas.
+    /// Whether the tier can serve at all: loaded, and its supervisor
+    /// still vouches for it ([`super::ModelRegistry::healthy`] — `false`
+    /// once the restart budget is exhausted or every replica is dead).
     pub healthy: bool,
 }
 
@@ -283,13 +286,12 @@ impl TierController {
         for (i, name) in self.cfg.tiers.iter().enumerate() {
             let signal = match self.registry.stats(name) {
                 Ok(snapshot) => {
-                    // Health reads the *cumulative* failure counter (a
-                    // replica death is permanent for this load); load
-                    // signals read the windowed delta.
-                    let healthy = match self.registry.replicas(name) {
-                        Ok(replicas) => snapshot.replica_failures < replicas as u64,
-                        Err(_) => false,
-                    };
+                    // Health is the supervisor's verdict: it stays true
+                    // across transient deaths that respawn within budget,
+                    // and flips (permanently for this load) on budget
+                    // exhaustion or total replica death. Load signals
+                    // read the windowed delta.
+                    let healthy = self.registry.healthy(name).unwrap_or(false);
                     let depth = self.registry.in_flight(name).unwrap_or(0);
                     let windowed = st.windows[i].push(snapshot);
                     TierSignal {
@@ -422,8 +424,24 @@ impl TierController {
     /// shed: [`ServeError::Shed`], counted in
     /// [`TierController::shed_count`] — an explicit back-off signal
     /// instead of unbounded queueing. The image is threaded through the
-    /// attempts by reclaim (no per-tier clone).
-    pub fn route(&self, image: Vec<f32>) -> Result<Receiver<Reply>, ServeError> {
+    /// attempts by reclaim (no per-tier clone). The reply channel is
+    /// answered exactly once — `Ok(Reply)` or a terminal `Err` such as
+    /// [`ServeError::DeadlineExceeded`].
+    pub fn route(
+        &self,
+        image: Vec<f32>,
+    ) -> Result<Receiver<Result<Reply, ServeError>>, ServeError> {
+        self.route_deadline(image, None)
+    }
+
+    /// [`TierController::route`] with a per-request latency budget
+    /// ([`Session::submit_deadline`]): whichever tier accepts may shed
+    /// the request at dequeue once `budget` elapses.
+    pub fn route_deadline(
+        &self,
+        image: Vec<f32>,
+        budget: Option<std::time::Duration>,
+    ) -> Result<Receiver<Result<Reply, ServeError>>, ServeError> {
         let start = self.active.load(Ordering::SeqCst);
         let mut image = image;
         let mut saw_full = false;
@@ -436,7 +454,7 @@ impl TierController {
                     continue;
                 }
             };
-            match session.submit_reclaim(image) {
+            match session.submit_reclaim_deadline(image, budget) {
                 Ok(rx) => return Ok(rx),
                 // Geometry is ladder-wide (one architecture at several
                 // precisions): no cheaper tier would take it either.
@@ -463,7 +481,7 @@ impl TierController {
     /// [`TierController::route`] + receive.
     pub fn infer(&self, image: Vec<f32>) -> Result<Reply, ServeError> {
         let rx = self.route(image)?;
-        rx.recv().map_err(|_| ServeError::ShutDown)
+        rx.recv().unwrap_or(Err(ServeError::ShutDown))
     }
 
     /// Start a background thread running [`TierController::step`] every

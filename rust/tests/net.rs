@@ -703,3 +703,217 @@ fn prop_random_garbage_frames_never_wedge_the_listener() {
     drop(client);
     teardown(server, registry, &dir);
 }
+
+/// Read one request frame off a scripted fake-server stream; returns the
+/// parsed request, or `None` on EOF/close.
+fn read_req(s: &mut TcpStream) -> Option<NetRequest> {
+    let mut buf = Vec::new();
+    match frame::read_frame(s, &mut buf, frame::MAX_FRAME_LEN) {
+        Ok(frame::FrameRead::Frame) => {}
+        _ => return None,
+    }
+    let v = Json::parse(std::str::from_utf8(&buf).unwrap()).unwrap();
+    NetRequest::from_json(&v).1.ok()
+}
+
+fn write_resp(s: &mut TcpStream, resp: &NetResponse) {
+    frame::write_frame(s, resp.to_json().to_string().as_bytes()).unwrap();
+}
+
+/// The black-hole connect bugfix: `connect_with` returns on its timeout
+/// instead of sitting in the kernel's SYN-retry schedule for minutes.
+/// (10.255.255.1 is an RFC 1918 address with no host behind it; some CI
+/// networks answer it with an immediate unreachable error — also fine,
+/// the assertion is only that the call comes back quickly and fails.)
+#[test]
+fn connect_with_bounds_the_connect_against_a_black_hole() {
+    let t0 = Instant::now();
+    let r = NetClient::connect_with("10.255.255.1:9", Duration::from_millis(300));
+    assert!(r.is_err(), "a black-holed address must not connect");
+    assert!(
+        t0.elapsed() < Duration::from_secs(5),
+        "connect_with must return on its timeout; took {:?}",
+        t0.elapsed()
+    );
+}
+
+/// Transient backpressure is retried: a scripted server refuses the first
+/// two attempts with `queue_full`, answers the third — the client's retry
+/// loop absorbs the refusals and the caller sees one clean reply.
+#[test]
+fn retry_absorbs_transient_queue_full() {
+    use lsqnet::serve::net::RetryPolicy;
+    let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let server = std::thread::spawn(move || {
+        let (mut s, _) = listener.accept().unwrap();
+        let mut served = 0u32;
+        while let Some(req) = read_req(&mut s) {
+            served += 1;
+            let resp = if served <= 2 {
+                NetResponse::fail(req.id(), WireError::QueueFull { depth: 2 })
+            } else {
+                NetResponse::ok(
+                    req.id(),
+                    RespBody::Infer {
+                        logits: vec![0.5, 2.0],
+                        argmax: 1,
+                        queue_ms: 0.1,
+                        total_ms: 0.2,
+                    },
+                )
+            };
+            write_resp(&mut s, &resp);
+            if served == 3 {
+                break;
+            }
+        }
+        served
+    });
+
+    let mut client = NetClient::connect(addr).unwrap();
+    client.set_retry(Some(RetryPolicy {
+        max_attempts: 4,
+        backoff: Duration::from_millis(1),
+        backoff_cap: Duration::from_millis(4),
+        seed: 9,
+    }));
+    let rep = client.infer("m_q2", &[0.5]).unwrap();
+    assert_eq!(rep.argmax, 1);
+    drop(client);
+    assert_eq!(server.join().unwrap(), 3, "two refused attempts + one success");
+}
+
+/// Deterministic refusals are never replayed: `bad_image` fails the call
+/// on the first attempt even with retries armed — the scripted server
+/// must see exactly one request.
+#[test]
+fn retry_never_replays_deterministic_refusals() {
+    use lsqnet::serve::net::RetryPolicy;
+    let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let server = std::thread::spawn(move || {
+        let (mut s, _) = listener.accept().unwrap();
+        let req = read_req(&mut s).expect("first request");
+        write_resp(&mut s, &NetResponse::fail(req.id(), WireError::BadImage { got: 1, want: 192 }));
+        // Count anything the client (wrongly) sends after the refusal.
+        let mut extra = 0u32;
+        while read_req(&mut s).is_some() {
+            extra += 1;
+        }
+        extra
+    });
+
+    let mut client = NetClient::connect(addr).unwrap();
+    client.set_retry(Some(RetryPolicy {
+        max_attempts: 4,
+        backoff: Duration::from_millis(1),
+        backoff_cap: Duration::from_millis(4),
+        seed: 9,
+    }));
+    match client.infer("m_q2", &[0.5]) {
+        Err(NetClientError::Wire(WireError::BadImage { got: 1, want: 192 })) => {}
+        other => panic!("expected bad_image straight through, got {other:?}"),
+    }
+    drop(client); // EOF ends the server's counting loop
+    assert_eq!(server.join().unwrap(), 0, "a deterministic refusal must not be replayed");
+}
+
+/// A connection dropped mid-request is survived transparently: the retry
+/// loop reconnects and replays on a fresh socket (at-least-once — the
+/// request is idempotent inference).
+#[test]
+fn retry_reconnects_after_a_dropped_connection() {
+    use lsqnet::serve::net::RetryPolicy;
+    let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let server = std::thread::spawn(move || {
+        // Connection 1: accept the request, then vanish without a reply.
+        let (mut s, _) = listener.accept().unwrap();
+        let _ = read_req(&mut s).expect("first attempt arrives");
+        s.shutdown(Shutdown::Both).ok();
+        drop(s);
+        // Connection 2: the reconnect — answer properly.
+        let (mut s, _) = listener.accept().unwrap();
+        let req = read_req(&mut s).expect("replayed attempt arrives on a fresh socket");
+        write_resp(
+            &mut s,
+            &NetResponse::ok(
+                req.id(),
+                RespBody::Infer { logits: vec![3.0, 1.0], argmax: 0, queue_ms: 0.1, total_ms: 0.2 },
+            ),
+        );
+    });
+
+    let mut client = NetClient::connect(addr).unwrap();
+    client.set_retry(Some(RetryPolicy {
+        max_attempts: 4,
+        backoff: Duration::from_millis(1),
+        backoff_cap: Duration::from_millis(4),
+        seed: 9,
+    }));
+    let rep = client.infer("m_q2", &[0.5]).unwrap();
+    assert_eq!(rep.argmax, 0);
+    server.join().unwrap();
+}
+
+/// `deadline_ms` end-to-end against a real server: seeded slow-exec
+/// faults stretch every batch past the budget, so queued requests expire
+/// and come back as structured `deadline_exceeded` — shed at dequeue,
+/// never executed, never dropped.
+#[test]
+fn deadline_ms_sheds_queued_requests_over_the_wire() {
+    use lsqnet::serve::{FaultPlan, FaultSpec};
+    let (dir, q2, _q4) = two_tier_fixture("deadline", "cnn_small");
+    let registry = Arc::new(ModelRegistry::open(BackendSpec::native(&dir)));
+    // Every dispatched batch sleeps 50 ms; requests carry a 4 ms budget.
+    let plan = Arc::new(FaultPlan::new(&FaultSpec {
+        seed: 5,
+        horizon: 1 << 16,
+        slow_execs: 1 << 16,
+        slow_exec: Duration::from_millis(50),
+        ..FaultSpec::default()
+    }));
+    registry
+        .load(
+            &q2,
+            &VariantOptions {
+                replicas: 1,
+                max_wait: Duration::from_millis(0),
+                queue_depth: 64,
+                fault: Some(plan),
+                ..VariantOptions::default()
+            },
+        )
+        .unwrap();
+    let server = NetServer::start(Arc::clone(&registry), "127.0.0.1:0").unwrap();
+
+    let mut client = NetClient::connect(server.local_addr()).unwrap();
+    client.set_deadline_ms(Some(4));
+    let n = 8usize;
+    for i in 0..n {
+        client.send_infer(&q2, &image(i, IMAGE_LEN)).unwrap();
+    }
+    let (mut ok, mut expired) = (0usize, 0usize);
+    for _ in 0..n {
+        match client.recv().unwrap().body {
+            Ok(RespBody::Infer { logits, .. }) => {
+                assert_eq!(logits.len(), 6);
+                ok += 1;
+            }
+            Ok(other) => panic!("unexpected body {other:?}"),
+            Err(WireError::DeadlineExceeded) => expired += 1,
+            Err(e) => panic!("unexpected wire error: {e}"),
+        }
+    }
+    assert_eq!(ok + expired, n, "every pipelined request gets exactly one response");
+    assert!(
+        expired >= 1,
+        "a 4 ms budget behind 50 ms batches must expire some queued requests (ok={ok})"
+    );
+    let stats = registry.stats(&q2).unwrap();
+    assert_eq!(stats.deadline_expired, expired as u64);
+    assert_eq!(stats.answered(), n as u64);
+    drop(client);
+    teardown(server, registry, &dir);
+}

@@ -387,9 +387,21 @@ fn prop_wire_request_response_roundtrip() {
         // only the integer-exact range is representable (the parser
         // rejects fractional ids rather than rounding).
         let id = rng.next_u32() as u64;
+        // deadline_ms is optional on the wire: absent, zero, and large
+        // budgets all round-trip.
+        let deadline = match rng.below(3) {
+            0 => None,
+            1 => Some(0u64),
+            _ => Some(rng.next_u32() as u64),
+        };
         let req = match rng.below(4) {
-            0 => NetRequest::Infer { id, model: rand_string(rng), image: rand_image(rng) },
-            1 => NetRequest::Tiered { id, image: rand_image(rng) },
+            0 => NetRequest::Infer {
+                id,
+                model: rand_string(rng),
+                image: rand_image(rng),
+                deadline_ms: deadline,
+            },
+            1 => NetRequest::Tiered { id, image: rand_image(rng), deadline_ms: deadline },
             2 => NetRequest::Models { id },
             _ => NetRequest::Ping { id },
         };
@@ -411,7 +423,7 @@ fn prop_wire_request_response_roundtrip() {
                 models: (0..rng.below(5)).map(|_| rand_string(rng)).collect(),
             }),
             2 => Ok(RespBody::Pong),
-            _ => Err(match rng.below(8) {
+            _ => Err(match rng.below(9) {
                 0 => WireError::QueueFull { depth: rng.below(1000) as usize },
                 1 => WireError::UnknownModel { model: rand_string(rng) },
                 2 => WireError::Closed,
@@ -422,6 +434,7 @@ fn prop_wire_request_response_roundtrip() {
                     want: rng.below(1000) as usize,
                 },
                 6 => WireError::BadRequest { msg: rand_string(rng) },
+                7 => WireError::DeadlineExceeded,
                 _ => WireError::FrameTooLarge {
                     len: rng.below(1 << 30) as usize,
                     max: 4 << 20,

@@ -205,7 +205,8 @@ fn hot_unload_answers_every_accepted_request_exactly_once() {
                 for rx in pending {
                     let rep = rx
                         .recv_timeout(Duration::from_secs(30))
-                        .expect("accepted request dropped without a reply");
+                        .expect("accepted request dropped without a reply")
+                        .expect("drained request must be executed, not refused");
                     assert_eq!(rep.logits.len(), 6);
                 }
                 accepted
@@ -365,5 +366,182 @@ fn core_budget_and_low_memory_options() {
         assert_eq!(rep.logits, lo.logits, "low_memory={low_memory:?}");
         r.shutdown();
     }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// The supervisor in its healthy steady state: seeded faults panic
+/// replicas mid-traffic, every panicked replica is respawned (counted in
+/// `replica_restarts`), the variant converges back to its full replica
+/// count, and no accepted request is ever dropped — panics answer their
+/// batch with a typed error before dying.
+#[test]
+fn supervisor_respawns_panicked_replicas_and_recovers() {
+    use lsqnet::serve::{FaultPlan, FaultSpec, RestartPolicy};
+    use std::sync::Arc;
+    let dir = tmp_dir("respawn");
+    std::fs::remove_dir_all(&dir).ok();
+    let spec = FixtureSpec { image: 8, channels: 3, num_classes: 6, batch: 4, seed: 33 };
+    let family = write_synthetic_family(&dir, "cnn_small", 2, spec).unwrap();
+    let image_len = 8 * 8 * 3;
+    let registry = ModelRegistry::open(BackendSpec::native(&dir));
+    let plan = Arc::new(FaultPlan::new(&FaultSpec {
+        seed: 7,
+        horizon: 200,
+        replica_panics: 3,
+        ..FaultSpec::default()
+    }));
+    registry
+        .load(
+            &family,
+            &VariantOptions {
+                replicas: 2,
+                max_wait: Duration::from_millis(1),
+                queue_depth: 64,
+                fault: Some(Arc::clone(&plan)),
+                restarts: RestartPolicy {
+                    budget: 8,
+                    window: Duration::from_secs(60),
+                    backoff: Duration::from_millis(1),
+                    backoff_cap: Duration::from_millis(5),
+                    jitter_seed: 0,
+                },
+                ..VariantOptions::default()
+            },
+        )
+        .unwrap();
+    let session = registry.session(&family).unwrap();
+
+    // Sequential traffic: each infer dispatches one batch, so the exec
+    // fault site advances once per request and all 3 panics fire within
+    // 200 requests. A panicked batch answers with a typed error — the
+    // infer returns Err, never hangs.
+    let mut ok = 0u64;
+    let mut errs = 0u64;
+    let deadline = std::time::Instant::now() + Duration::from_secs(60);
+    let mut i = 0usize;
+    while !plan.all_fired() {
+        assert!(
+            std::time::Instant::now() < deadline,
+            "fault plan never drained; fired so far: {:?}",
+            plan.fired()
+        );
+        match session.infer(image(i, image_len)) {
+            Ok(rep) => {
+                assert_eq!(rep.logits.len(), 6);
+                ok += 1;
+            }
+            Err(_) => errs += 1,
+        }
+        i += 1;
+    }
+    assert_eq!(errs, 3, "each planned panic fails exactly its own one-request batch");
+
+    // Convergence: the supervisor returns the variant to full strength.
+    // Poll the restart counter too — it is bumped adjacent to (not
+    // atomically with) the respawned thread's liveness increment.
+    let deadline = std::time::Instant::now() + Duration::from_secs(10);
+    while registry.live_replicas(&family).unwrap() < 2
+        || registry.stats(&family).unwrap().replica_restarts < 3
+    {
+        assert!(std::time::Instant::now() < deadline, "replica count never reconverged");
+        std::thread::sleep(Duration::from_millis(2));
+    }
+    assert_eq!(registry.healthy(&family), Ok(true));
+    let stats = registry.stats(&family).unwrap();
+    assert_eq!(stats.replica_failures, 3);
+    assert_eq!(stats.replica_restarts, 3);
+    // The exactly-once ledger covers the whole run: every accepted
+    // request resolved as a reply or a typed error.
+    assert_eq!(stats.answered(), ok + errs);
+
+    // Post-recovery traffic flows normally.
+    assert_eq!(session.infer(image(9999, image_len)).unwrap().logits.len(), 6);
+    registry.shutdown();
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Drain racing an in-flight respawn: the only replica panics, the
+/// supervisor owes a respawn with a long backoff, and `drain_and_unload`
+/// lands inside that window. The drain must cancel the respawn (no
+/// restart counted), spin up a teardown drainer instead, and still answer
+/// every accepted request exactly once.
+#[test]
+fn drain_during_in_flight_respawn_answers_every_accepted_request() {
+    use lsqnet::serve::{FaultPlan, FaultSpec, RestartPolicy};
+    use std::sync::Arc;
+    let dir = tmp_dir("drainrespawn");
+    std::fs::remove_dir_all(&dir).ok();
+    let spec = FixtureSpec { image: 8, channels: 3, num_classes: 6, batch: 4, seed: 33 };
+    let family = write_synthetic_family(&dir, "mlp", 2, spec).unwrap();
+    let image_len = 8 * 8 * 3;
+    let registry = ModelRegistry::open(BackendSpec::native(&dir));
+    // Exactly one panic, on the first dispatched batch.
+    let plan = Arc::new(FaultPlan::new(&FaultSpec {
+        seed: 3,
+        horizon: 1,
+        replica_panics: 1,
+        ..FaultSpec::default()
+    }));
+    registry
+        .load(
+            &family,
+            &VariantOptions {
+                replicas: 1,
+                max_wait: Duration::from_millis(1),
+                queue_depth: 64,
+                fault: Some(Arc::clone(&plan)),
+                // Long backoff: the respawn is still pending when the
+                // drain arrives (submits below take microseconds).
+                restarts: RestartPolicy {
+                    budget: 4,
+                    window: Duration::from_secs(60),
+                    backoff: Duration::from_millis(250),
+                    backoff_cap: Duration::from_millis(250),
+                    jitter_seed: 0,
+                },
+                ..VariantOptions::default()
+            },
+        )
+        .unwrap();
+    let session = registry.session(&family).unwrap();
+
+    // Trigger the panic and wait for its (typed-error) answer: the sole
+    // replica is now dead, the respawn is due in ~250 ms.
+    let rx = session.submit(image(0, image_len)).unwrap();
+    assert!(
+        rx.recv_timeout(Duration::from_secs(10)).expect("panicked batch must be answered").is_err(),
+        "the panicked batch answers with a typed error"
+    );
+
+    // Requests accepted while zero replicas are live: they sit in the
+    // queue owned by the variant, not by any dead thread.
+    let mut pending = Vec::new();
+    for i in 1..=16usize {
+        pending.push(session.submit(image(i, image_len)).unwrap());
+    }
+
+    // Drain inside the respawn window. It must not race the respawn —
+    // the supervisor cancels it and runs teardown drainers instead.
+    let drained = registry.drain_and_unload(&family).unwrap();
+
+    // Every accepted request is answered exactly once. The queued ones
+    // are *executed* by the drainer (the single planned panic already
+    // fired), not refused.
+    for rx in pending {
+        let rep = rx
+            .recv_timeout(Duration::from_secs(10))
+            .expect("request accepted before the drain was dropped")
+            .expect("queued requests are executed by the teardown drainer");
+        assert_eq!(rep.logits.len(), 6);
+        assert!(rx.try_recv().is_err(), "request answered twice");
+    }
+    // Ledger: 1 panicked + 16 drained = 17 answered; the canceled
+    // respawn is not a restart.
+    assert_eq!(drained.answered(), 17);
+    assert_eq!(drained.replica_failures, 1);
+    assert_eq!(drained.replica_restarts, 0);
+    assert_eq!(drained.requests, 16);
+    assert_eq!(drained.failed_requests, 1);
+    registry.shutdown();
     std::fs::remove_dir_all(&dir).ok();
 }

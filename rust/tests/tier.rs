@@ -118,7 +118,10 @@ fn deterministic_schedule_produces_exact_transition_sequence() {
             }
         }
         for rx in pending {
-            let reply = rx.recv().expect("accepted request must be answered");
+            let reply = rx
+                .recv()
+                .expect("accepted request must be answered")
+                .expect("healthy ladder answers with a reply, not an error");
             assert_eq!(reply.logits.len(), CLASSES);
             answered += 1;
             // Exactly once: the reply channel never yields a second answer.
@@ -217,7 +220,10 @@ fn ladder_saturation_sheds_instead_of_queueing() {
     // The drain guarantee is untouched by shedding: every accepted
     // request is answered exactly once.
     for rx in pending {
-        let reply = rx.recv().expect("accepted request must be answered despite shedding");
+        let reply = rx
+            .recv()
+            .expect("accepted request must be answered despite shedding")
+            .expect("accepted request resolves to a reply");
         assert_eq!(reply.logits.len(), CLASSES);
         assert!(rx.try_recv().is_err());
     }
@@ -264,6 +270,78 @@ fn drained_tier_spills_and_fails_over() {
     assert_eq!(ctl.active_tier_name(), &fams[last.to]);
     // The ladder keeps serving on the new tier.
     let reply = ctl.infer(image(8)).expect("failed-over tier serves");
+    assert_eq!(reply.logits.len(), CLASSES);
+
+    drop(ctl);
+    if let Ok(r) = Arc::try_unwrap(registry) {
+        r.shutdown();
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Supervisor verdict feeding the control loop: a tier whose replicas
+/// panic until the restart budget is exhausted flips unhealthy, and the
+/// controller fails over on the very next sensed epoch — no dwell, no
+/// hysteresis.
+#[test]
+fn restart_budget_exhaustion_fails_over_within_one_epoch() {
+    use lsqnet::serve::{FaultPlan, FaultSpec, RestartPolicy};
+    let (dir, fams) = ladder_fixture("budget");
+    let registry = Arc::new(ModelRegistry::open(BackendSpec::native(&dir)));
+    // Tier 0 panics on every dispatched batch and carries a 2-restart
+    // budget: initial replica + 2 respawns = 3 failures, then give up.
+    let plan = Arc::new(FaultPlan::new(&FaultSpec {
+        seed: 11,
+        horizon: 1 << 20,
+        replica_panics: 1 << 20,
+        ..FaultSpec::default()
+    }));
+    let mut doomed = opts(64);
+    doomed.fault = Some(plan);
+    doomed.restarts = RestartPolicy {
+        budget: 2,
+        window: Duration::from_secs(60),
+        backoff: Duration::from_millis(1),
+        backoff_cap: Duration::from_millis(2),
+        jitter_seed: 0,
+    };
+    registry.load(&fams[0], &doomed).unwrap();
+    for f in &fams[1..] {
+        registry.load(f, &opts(64)).unwrap();
+    }
+    let ctl = TierController::new(Arc::clone(&registry), cfg_for(&fams)).unwrap();
+    assert_eq!(ctl.active_tier(), 0);
+
+    // Drive traffic at the doomed tier until the supervisor gives up.
+    // Every accepted request still resolves (typed error), never drops.
+    let deadline = std::time::Instant::now() + Duration::from_secs(20);
+    let mut i = 0usize;
+    while registry.healthy(&fams[0]).unwrap_or(false) {
+        assert!(
+            std::time::Instant::now() < deadline,
+            "restart budget never exhausted"
+        );
+        if let Ok(rx) = ctl.route(image(i)) {
+            assert!(rx.recv().is_ok(), "accepted request dropped during replica churn");
+        }
+        i += 1;
+        std::thread::sleep(Duration::from_millis(1));
+    }
+
+    // The supervisor's verdict: restarts were spent, then health dropped.
+    let stats = registry.stats(&fams[0]).unwrap();
+    assert_eq!(stats.replica_restarts, 2, "budget of 2 respawns must be spent");
+    assert!(stats.replica_failures >= 3, "initial replica + both respawns must fail");
+
+    // One sensed epoch fails over — health preempts hysteresis.
+    match ctl.step() {
+        TierDecision::Down { from: 0, to } => assert!(to >= 1),
+        other => panic!("expected immediate failover down, got {other:?}"),
+    }
+    let last = ctl.trace().pop().expect("failover must be traced");
+    assert_eq!(last.reason, "unhealthy");
+    // The ladder keeps serving on the surviving tiers.
+    let reply = ctl.infer(image(9)).expect("failed-over tier serves");
     assert_eq!(reply.logits.len(), CLASSES);
 
     drop(ctl);
