@@ -31,6 +31,27 @@ echo "   per-variant stats must sum to the request count, hot unload must"
 echo "   answer every accepted request, QueueFull must surface at depth) =="
 cargo test --release -q --test registry
 
+echo "== artifact (.lsqa zero-copy model artifacts — DESIGN.md §Artifact-"
+echo "   format: bitwise pack→load→bind parity vs the manifest path with the"
+echo "   panel-build counter pinned at zero, the corruption battery (every"
+echo "   byte-level failure is a typed ArtifactError, never a panic), and"
+echo "   registry-level refusals), then a CLI smoke: pack a fixture family,"
+echo "   inspect it, serve from it with NO manifest in the serving dir, and"
+echo "   confirm a truncated file is refused =="
+timeout 300 cargo test --release -q --test artifact
+ART_DIR="$(mktemp -d)"
+timeout 300 cargo run --release -q --bin lsqnet -- pack \
+  --artifacts "$ART_DIR/fixture" --family cnn_small_q2 --out "$ART_DIR/cnn_small_q2.lsqa"
+timeout 300 cargo run --release -q --bin lsqnet -- artifact inspect "$ART_DIR/cnn_small_q2.lsqa"
+timeout 300 cargo run --release -q --bin lsqnet -- serve \
+  --artifacts "$ART_DIR/empty" --artifact "$ART_DIR/cnn_small_q2.lsqa" --requests 16
+head -c 100 "$ART_DIR/cnn_small_q2.lsqa" > "$ART_DIR/corrupt.lsqa"
+if cargo run --release -q --bin lsqnet -- artifact inspect "$ART_DIR/corrupt.lsqa" \
+     >/dev/null 2>&1; then
+  echo "ci.sh: truncated artifact was accepted — the loader must refuse it"; exit 1
+fi
+rm -rf "$ART_DIR"
+
 echo "== net serve (the TCP wire protocol over loopback, ephemeral ports:"
 echo "   bitwise logits parity across a real socket, structured queue_full/"
 echo "   unknown_model wire errors, drain_and_unload under in-flight network"

@@ -6,7 +6,9 @@
 //! open-loop network load generator reporting p50/p99/p999 per variant),
 //! the SLO tier controller driven by a deterministic burst/ramp/sine
 //! traffic schedule (per-epoch rows + the `tier_shift_*` decision trace),
-//! and the Figure-1 fused unpack-and-dot integer GEMM. Runs with zero
+//! the fleet cold-start ladder (manifest bind vs instant `.lsqa` artifact
+//! bind, with panel-build counters), and the Figure-1 fused
+//! unpack-and-dot integer GEMM. Runs with zero
 //! Python/XLA setup (the synthetic fixture provides manifest + params);
 //! the XLA numbers live in `benches/runtime.rs` (`--features xla`).
 //!
@@ -22,9 +24,11 @@ use std::time::{Duration, Instant};
 
 use lsqnet::data::SynthSpec;
 use lsqnet::quant::pack::quantize_and_pack;
-use lsqnet::runtime::kernels::{qgemm, Workspace};
+use lsqnet::runtime::artifact::writer::default_levels;
+use lsqnet::runtime::kernels::{panel_build_count, qgemm, Workspace};
 use lsqnet::runtime::native::fixture::{write_synthetic_family, FixtureSpec};
-use lsqnet::runtime::{Backend, BackendSpec, PrepareOptions};
+use lsqnet::runtime::native::NativeEngine;
+use lsqnet::runtime::{pack_family, Backend, BackendSpec, LoadedArtifact, Manifest, PrepareOptions};
 use lsqnet::serve::net::{NetClient, NetServer};
 use lsqnet::serve::tier::trace_to_bench;
 use lsqnet::serve::{ModelRegistry, ServeStats, TierConfig, TierController, TierDecision, VariantOptions};
@@ -303,6 +307,43 @@ fn main() {
     drop(ctl);
     if let Ok(r) = Arc::try_unwrap(registry) {
         r.shutdown();
+    }
+
+    // -- bind_cold_vs_artifact: fleet cold-start, manifest vs .lsqa ----------
+    // The two ways a serving replica can come up: open the manifest and
+    // prepare (load params bin, quantize, bit-pack, panelize — per
+    // replica), vs `NativeEngine::from_artifact` over one fully-verified
+    // shared arena (borrow prebuilt panel tiles, zero build work). The
+    // `panel_builds` annotations prove the difference is in kind: the
+    // cold row builds panels every iteration, the artifact row never.
+    {
+        let manifest = Manifest::load(&dir).unwrap();
+        let params = manifest.load_initial_params(&fam_q2).unwrap();
+        let art_path = dir.join(format!("{fam_q2}.lsqa"));
+        pack_family(&manifest, &fam_q2, &params, &art_path, &default_levels()).unwrap();
+
+        let row = format!("bind_cold_manifest_{fam_q2}");
+        let before = panel_build_count();
+        b.bench(&row, || {
+            let mut eng = BackendSpec::native(&dir).open().unwrap();
+            eng.prepare_infer(&fam_q2, &params, &PrepareOptions::new()).unwrap();
+            black_box(&eng);
+        });
+        b.annotate(&row, "panel_builds", (panel_build_count() - before) as f64);
+
+        // Load + verify once (the per-variant cost), then per-replica bind.
+        b.bench("artifact_load_verify", || {
+            black_box(LoadedArtifact::load(&art_path).unwrap());
+        });
+        let art = Arc::new(LoadedArtifact::load(&art_path).unwrap());
+        let row = format!("bind_instant_artifact_{fam_q2}");
+        let before = panel_build_count();
+        b.bench(&row, || {
+            let mut eng = NativeEngine::from_artifact(Arc::clone(&art));
+            eng.prepare_infer(&fam_q2, &[], &PrepareOptions::new()).unwrap();
+            black_box(&eng);
+        });
+        b.annotate(&row, "panel_builds", (panel_build_count() - before) as f64);
     }
 
     // -- Figure-1 int matmul: the fused unpack-and-dot kernel ----------------

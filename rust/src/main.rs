@@ -11,7 +11,10 @@
 //!   serve                        start the multi-model quantized-inference
 //!                                registry (native backend by default; one
 //!                                process serves N precision variants)
-//!   pack                         quantize+pack a checkpoint, report size
+//!   pack                         quantize+pack a checkpoint, report size;
+//!                                with --out, write a zero-copy `.lsqa`
+//!                                artifact (weights + prebuilt SIMD panels)
+//!   artifact inspect <m.lsqa>    verify + describe a packed artifact
 //!   simd-levels                  list the host's runnable SIMD dispatch
 //!                                levels (feeds the CI forced-level matrix)
 //!
@@ -78,10 +81,24 @@ COMMANDS
                            [--deadline-ms MS (wire smoke requests carry a
                             queue budget; the server sheds them with
                             deadline_exceeded once it expires; 0 = none)]
+                           [--artifact m.lsqa[,m2.lsqa,…] (bind each variant
+                            from a packed `.lsqa` artifact instead of the
+                            manifest: family names come from the artifacts
+                            and every replica borrows panels from one
+                            verified arena — the fleet cold-start path.
+                            Native only; excludes --tiers/--checkpoint)]
                            (the end-of-run report includes a health line:
                             replica failures/restarts, deadline sheds, and
                             tier sheds)
-  pack                     --checkpoint runs/x/final.ckpt
+  pack                     size report: --checkpoint runs/x/final.ckpt
+                           artifact:    --family cnn_small_q2 --out m.lsqa
+                           [--checkpoint ck] [--levels scalar,avx2,…]
+                           (quantizes + packs the family and freezes
+                            prebuilt SIMD panel sections into one
+                            zero-copy file — DESIGN.md §Artifact-format)
+  artifact                 inspect <m.lsqa> — verify every checksum, then
+                           print the header, section table and per-level
+                           panel geometries
   simd-levels              list the SIMD dispatch levels this host can run
                            (one name per line, worst->best; each is a valid
                            LSQNET_SIMD value — CI's forced-level matrix
@@ -131,6 +148,7 @@ fn dispatch(cmd: &str, args: &Args) -> Result<()> {
         "repro" => repro(args),
         "serve" => serve(args),
         "pack" => pack(args),
+        "artifact" => artifact_cmd(args),
         "simd-levels" => {
             // Machine-consumable by design: ci.sh iterates this list to
             // drive the forced-level kernel parity matrix.
@@ -512,32 +530,66 @@ fn serve(args: &Args) -> Result<()> {
     let tier_ladder: Option<Vec<String>> = args.opt_str("tiers").map(|s| {
         s.split(',').map(|t| t.trim().to_string()).filter(|t| !t.is_empty()).collect()
     });
-    let families: Vec<String> = match &tier_ladder {
-        Some(ladder) => ladder.clone(),
-        None => args
-            .str("family", "cnn_small_q2")
-            .split(',')
-            .map(|s| s.trim().to_string())
-            .filter(|s| !s.is_empty())
-            .collect(),
+    // --artifact binds each variant from a packed `.lsqa` file; the
+    // artifacts name their own families (DESIGN.md §Artifact-format).
+    let artifact_paths: Vec<PathBuf> = args
+        .opt_str("artifact")
+        .map(|s| {
+            s.split(',')
+                .map(|t| t.trim())
+                .filter(|t| !t.is_empty())
+                .map(PathBuf::from)
+                .collect()
+        })
+        .unwrap_or_default();
+    let kind = BackendKind::parse(&args.str("backend", "native"))?;
+    let checkpoint = args.str("checkpoint", "");
+    let families: Vec<String> = if !artifact_paths.is_empty() {
+        anyhow::ensure!(tier_ladder.is_none(), "--artifact and --tiers are mutually exclusive");
+        anyhow::ensure!(
+            checkpoint.is_empty(),
+            "--artifact and --checkpoint are mutually exclusive (the artifact froze its \
+             checkpoint at pack time)"
+        );
+        anyhow::ensure!(
+            kind == BackendKind::Native,
+            "--artifact requires the native backend"
+        );
+        // Each artifact names its own family. A corrupted or mismatched
+        // file is refused here — before the registry spins anything up —
+        // with the loader's typed error.
+        artifact_paths
+            .iter()
+            .map(|p| Ok(lsqnet::runtime::LoadedArtifact::load(p)?.family().to_string()))
+            .collect::<Result<_>>()?
+    } else {
+        match &tier_ladder {
+            Some(ladder) => ladder.clone(),
+            None => args
+                .str("family", "cnn_small_q2")
+                .split(',')
+                .map(|s| s.trim().to_string())
+                .filter(|s| !s.is_empty())
+                .collect(),
+        }
     };
     anyhow::ensure!(!families.is_empty(), "--family must name at least one variant");
     let n = args.usize("requests", 256);
-    let kind = BackendKind::parse(&args.str("backend", "native"))?;
     let replicas = args.usize(
         "replicas",
         if kind == BackendKind::Native { 2 } else { 1 },
     );
-    let checkpoint = args.str("checkpoint", "");
     anyhow::ensure!(
         checkpoint.is_empty() || families.len() == 1,
         "--checkpoint applies to a single --family, got {}",
         families.len()
     );
     let dir = artifacts_dir(args);
-    if kind == BackendKind::Native {
+    if kind == BackendKind::Native && artifact_paths.is_empty() {
         // Zero-artifacts affordance (same as `train`): synthesize any
-        // missing `model_qBITS` family into the artifacts dir.
+        // missing `model_qBITS` family into the artifacts dir. Artifact
+        // deployments skip this — a `.lsqa` file is self-contained and
+        // needs no manifest on disk at all.
         for family in &families {
             lsqnet::runtime::native::fixture::ensure_family_by_name(&dir, family)?;
         }
@@ -551,8 +603,10 @@ fn serve(args: &Args) -> Result<()> {
         queue_depth: args.usize("queue-depth", 256),
         intra_threads: args.usize("threads", 0),
         low_memory: if args.flag("fused-unpack") { Some(true) } else { None },
+        ..VariantOptions::default()
     };
-    for family in &families {
+    for (i, family) in families.iter().enumerate() {
+        let opts = VariantOptions { artifact: artifact_paths.get(i).cloned(), ..opts.clone() };
         registry.load(family, &opts)?;
     }
     let registry = Arc::new(registry);
@@ -810,7 +864,15 @@ fn print_tier_report(c: &lsqnet::serve::TierController) {
     }
 }
 
+/// `lsqnet pack`: two modes. With `--out`, quantize + pack `--family` into
+/// a zero-copy `.lsqa` artifact — weights, learned step sizes, and prebuilt
+/// SIMD panel sections frozen at pack time (DESIGN.md §Artifact-format) —
+/// then reload it and print the inspect summary as a self-check. Without
+/// `--out`, the original per-layer size report over a checkpoint.
 fn pack(args: &Args) -> Result<()> {
+    if args.has("out") {
+        return pack_artifact(args);
+    }
     let ckpt_path = args.opt_str("checkpoint").context("--checkpoint required")?;
     let manifest = Manifest::load(&artifacts_dir(args))?;
     let ck = Checkpoint::load(Path::new(&ckpt_path))?;
@@ -857,4 +919,62 @@ fn pack(args: &Args) -> Result<()> {
         total_fp32 as f64 / total_packed as f64
     );
     Ok(())
+}
+
+/// `lsqnet pack --family F --out m.lsqa`: write the artifact, then reload
+/// it (full checksum + geometry verification) and print its summary.
+fn pack_artifact(args: &Args) -> Result<()> {
+    use lsqnet::runtime::kernels::SimdLevel;
+    let out = PathBuf::from(args.str("out", "model.lsqa"));
+    let family = args
+        .opt_str("family")
+        .context("--family required when packing an artifact (--out)")?;
+    let dir = artifacts_dir(args);
+    // Zero-artifacts affordance (same as `serve`): synthesize a missing
+    // `model_qBITS` fixture family so packing works from a clean clone.
+    lsqnet::runtime::native::fixture::ensure_family_by_name(&dir, &family)?;
+    let manifest = Manifest::load(&dir)?;
+    let params = match args.opt_str("checkpoint") {
+        Some(ck) => lsqnet::train::TrainState::load(&manifest, Path::new(&ck))?.params,
+        None => manifest.load_initial_params(&family)?,
+    };
+    let levels: Vec<SimdLevel> = match args.opt_str("levels") {
+        Some(s) => s
+            .split(',')
+            .map(|t| t.trim())
+            .filter(|t| !t.is_empty())
+            .map(|t| {
+                SimdLevel::parse(t).with_context(|| format!("unknown SIMD level {t:?} in --levels"))
+            })
+            .collect::<Result<_>>()?,
+        None => lsqnet::runtime::artifact::writer::default_levels(),
+    };
+    lsqnet::runtime::pack_family(&manifest, &family, &params, &out, &levels)?;
+    // Reload through the verifying loader: if this prints, every checksum
+    // and panel geometry in the file checks out.
+    let art = lsqnet::runtime::LoadedArtifact::load(&out)?;
+    print!("{}", art.inspect());
+    Ok(())
+}
+
+/// `lsqnet artifact inspect <m.lsqa>`: run the file through the verifying
+/// loader (header, checksums, section parses, panel geometries) and print
+/// what it holds. A corrupted file fails here with the same typed error
+/// `serve --artifact` would refuse it with.
+fn artifact_cmd(args: &Args) -> Result<()> {
+    match args.positional.first().map(String::as_str) {
+        Some("inspect") => {
+            let path = args
+                .positional
+                .get(1)
+                .cloned()
+                .or_else(|| args.opt_str("path"))
+                .context("usage: lsqnet artifact inspect <model.lsqa>")?;
+            let art = lsqnet::runtime::LoadedArtifact::load(Path::new(&path))?;
+            print!("{}", art.inspect());
+            Ok(())
+        }
+        Some(other) => bail!("unknown artifact subcommand {other:?} (expected `inspect`)"),
+        None => bail!("usage: lsqnet artifact inspect <model.lsqa>"),
+    }
 }

@@ -1,0 +1,398 @@
+//! The `.lsqa` byte-level format: header, section table, CRC32, and the
+//! typed [`ArtifactError`] every reader-side failure maps to.
+//!
+//! Layout (all integers little-endian on disk; the header's endian tag
+//! lets a big-endian reader refuse loudly instead of misparsing):
+//!
+//! ```text
+//! offset 0, 64 bytes — header
+//!   0..4    magic  b"LSQA"
+//!   4..6    format version (u16, currently 1)
+//!   6..8    endian tag 0x1234 (reads as 0x3412 on a byte-swapped view)
+//!   8..12   header length (u32, 64)
+//!   12..16  section count (u32)
+//!   16..24  section table offset (u64, 64)
+//!   24..32  total file length (u64)
+//!   32..60  reserved, zero
+//!   60..64  CRC32 of header bytes 0..60
+//! offset 64 — section table, `count` × 32-byte entries
+//!   0..4    section kind (u32: 1 META, 2 TENSORS, 3 PACKED, 4 PANELS)
+//!   4..8    SIMD level (u32 index into `SimdLevel::ALL`; 0 unless PANELS)
+//!   8..16   section offset (u64, 64-byte aligned)
+//!   16..24  section length (u64)
+//!   24..28  CRC32 of the section body
+//!   28..32  reserved, zero
+//! then the section bodies, each starting on a 64-byte boundary
+//! ```
+//!
+//! Section starts (and every panel blob inside a PANELS section) are
+//! 64-byte aligned *file* offsets; the loader reads the whole file into a
+//! page-aligned arena, so alignment in the file is alignment in memory —
+//! the layout is mmap-ready by construction (DESIGN.md §Artifact-format).
+
+use std::path::PathBuf;
+
+/// File magic: the first four bytes of every `.lsqa`.
+pub const MAGIC: [u8; 4] = *b"LSQA";
+/// Current (and only) format version.
+pub const VERSION: u16 = 1;
+/// Endian tag as written by a little-endian writer.
+pub const ENDIAN_TAG: u16 = 0x1234;
+/// Header size in bytes.
+pub const HEADER_LEN: usize = 64;
+/// Section-table entry size in bytes.
+pub const SECTION_ENTRY_LEN: usize = 32;
+/// Alignment of every section start and panel blob (file offsets).
+pub const ALIGN: usize = 64;
+
+/// Section kind: the artifact metadata JSON (family, arch IR, shapes).
+pub const SEC_META: u32 = 1;
+/// Section kind: fp32 parameter tensors (steps, biases, BN, fp32 weights).
+pub const SEC_TENSORS: u32 = 2;
+/// Section kind: bit-packed quantized weights (the fallback working set).
+pub const SEC_PACKED: u32 = 3;
+/// Section kind: prebuilt panel blobs for one SIMD level.
+pub const SEC_PANELS: u32 = 4;
+
+/// Round `off` up to the next [`ALIGN`] boundary.
+pub fn align_up(off: usize) -> usize {
+    off.div_ceil(ALIGN) * ALIGN
+}
+
+/// CRC32 (IEEE 802.3, reflected, the zlib/`cksum -o3` polynomial) over
+/// `bytes`. Table-driven, table built once per process.
+pub fn crc32(bytes: &[u8]) -> u32 {
+    static TABLE: std::sync::OnceLock<[u32; 256]> = std::sync::OnceLock::new();
+    let table = TABLE.get_or_init(|| {
+        let mut t = [0u32; 256];
+        for (i, e) in t.iter_mut().enumerate() {
+            let mut c = i as u32;
+            for _ in 0..8 {
+                c = if c & 1 != 0 { 0xEDB8_8320 ^ (c >> 1) } else { c >> 1 };
+            }
+            *e = c;
+        }
+        t
+    });
+    let mut c = 0xFFFF_FFFFu32;
+    for &b in bytes {
+        c = table[((c ^ b as u32) & 0xFF) as usize] ^ (c >> 8);
+    }
+    !c
+}
+
+/// Every way a `.lsqa` can fail to load or bind, as a typed variant — the
+/// corruption battery in `tests/artifact.rs` asserts the reader never
+/// panics and never silently falls back; it returns exactly one of these.
+#[derive(Debug)]
+pub enum ArtifactError {
+    /// The file could not be opened or read.
+    Io {
+        /// The artifact path the I/O failed on.
+        path: PathBuf,
+        /// The underlying OS error.
+        err: std::io::Error,
+    },
+    /// The file (or a section/record inside it) ends before the bytes the
+    /// header or a directory said would be there.
+    Truncated {
+        /// What was being read when the bytes ran out.
+        what: String,
+    },
+    /// The first four bytes are not `LSQA` — not an artifact at all.
+    BadMagic,
+    /// A well-formed artifact of a format version this reader predates
+    /// (or postdates).
+    UnsupportedVersion {
+        /// Version found in the header.
+        got: u16,
+        /// Version this reader speaks.
+        want: u16,
+    },
+    /// The endian tag read byte-swapped: the artifact was written on a
+    /// machine of the opposite endianness.
+    EndianMismatch,
+    /// A CRC32 over the header or a section body did not match the
+    /// recorded value — bit rot or tampering.
+    ChecksumMismatch {
+        /// Which checksummed range failed (`header` or `section <kind>`).
+        section: String,
+    },
+    /// Structurally invalid content inside an intact (checksum-passing)
+    /// envelope: bad counts, out-of-range fields, undecodable JSON.
+    Malformed {
+        /// What was structurally wrong.
+        what: String,
+    },
+    /// A panel/packed entry exists but disagrees with what the binding
+    /// model expects (shape, bits, activation class, or an invalid
+    /// [`crate::runtime::kernels::PanelGeom`]) — refusing beats silently
+    /// rebuilding.
+    GeomMismatch {
+        /// The layer whose recorded entry disagrees.
+        layer: String,
+        /// The specific disagreement.
+        detail: String,
+    },
+    /// The artifact holds a different model family than the caller asked
+    /// to bind.
+    FamilyMismatch {
+        /// Family the caller wanted.
+        want: String,
+        /// Family the artifact holds.
+        got: String,
+    },
+}
+
+impl std::fmt::Display for ArtifactError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ArtifactError::Io { path, err } => {
+                write!(f, "artifact {}: {err}", path.display())
+            }
+            ArtifactError::Truncated { what } => {
+                write!(f, "artifact truncated while reading {what}")
+            }
+            ArtifactError::BadMagic => write!(f, "not an .lsqa artifact (bad magic)"),
+            ArtifactError::UnsupportedVersion { got, want } => {
+                write!(f, "unsupported artifact version {got} (this reader speaks {want})")
+            }
+            ArtifactError::EndianMismatch => {
+                write!(f, "artifact was written on a machine of the opposite endianness")
+            }
+            ArtifactError::ChecksumMismatch { section } => {
+                write!(f, "artifact checksum mismatch in {section}")
+            }
+            ArtifactError::Malformed { what } => write!(f, "malformed artifact: {what}"),
+            ArtifactError::GeomMismatch { layer, detail } => {
+                write!(f, "artifact layer {layer}: {detail}")
+            }
+            ArtifactError::FamilyMismatch { want, got } => {
+                write!(f, "artifact holds family {got:?}, caller asked for {want:?}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for ArtifactError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            ArtifactError::Io { err, .. } => Some(err),
+            _ => None,
+        }
+    }
+}
+
+/// Shorthand used throughout the reader.
+pub type AResult<T> = Result<T, ArtifactError>;
+
+fn truncated(what: &str) -> ArtifactError {
+    ArtifactError::Truncated { what: what.to_string() }
+}
+
+/// Bounds-checked little-endian cursor over a section body. Every read
+/// returns [`ArtifactError::Truncated`] instead of panicking, which is
+/// what lets the corruption battery feed arbitrary bytes through the
+/// whole parse path.
+pub struct Cursor<'a> {
+    buf: &'a [u8],
+    pos: usize,
+    what: &'a str,
+}
+
+impl<'a> Cursor<'a> {
+    /// Cursor over `buf`; `what` names the region in truncation errors.
+    pub fn new(buf: &'a [u8], what: &'a str) -> Cursor<'a> {
+        Cursor { buf, pos: 0, what }
+    }
+
+    /// Bytes not yet consumed.
+    pub fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    /// Take `n` raw bytes.
+    pub fn bytes(&mut self, n: usize) -> AResult<&'a [u8]> {
+        if self.remaining() < n {
+            return Err(truncated(self.what));
+        }
+        let out = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(out)
+    }
+
+    /// Read a `u8`.
+    pub fn u8(&mut self) -> AResult<u8> {
+        Ok(self.bytes(1)?[0])
+    }
+
+    /// Read a little-endian `u16`.
+    pub fn u16(&mut self) -> AResult<u16> {
+        Ok(u16::from_le_bytes(self.bytes(2)?.try_into().expect("2 bytes")))
+    }
+
+    /// Read a little-endian `u32`.
+    pub fn u32(&mut self) -> AResult<u32> {
+        Ok(u32::from_le_bytes(self.bytes(4)?.try_into().expect("4 bytes")))
+    }
+
+    /// Read a little-endian `u64`.
+    pub fn u64(&mut self) -> AResult<u64> {
+        Ok(u64::from_le_bytes(self.bytes(8)?.try_into().expect("8 bytes")))
+    }
+
+    /// Read a little-endian `i64`.
+    pub fn i64(&mut self) -> AResult<i64> {
+        Ok(self.u64()? as i64)
+    }
+
+    /// Read a little-endian `f32` (bit pattern — exact roundtrip).
+    pub fn f32(&mut self) -> AResult<f32> {
+        Ok(f32::from_bits(self.u32()?))
+    }
+
+    /// Read a `u64` that must fit `usize` on this host.
+    pub fn usize(&mut self) -> AResult<usize> {
+        usize::try_from(self.u64()?).map_err(|_| ArtifactError::Malformed {
+            what: format!("{}: length exceeds this host's usize", self.what),
+        })
+    }
+
+    /// Read a length-prefixed (u16) UTF-8 name.
+    pub fn name(&mut self) -> AResult<String> {
+        let n = self.u16()? as usize;
+        let raw = self.bytes(n)?;
+        String::from_utf8(raw.to_vec()).map_err(|_| ArtifactError::Malformed {
+            what: format!("{}: non-UTF-8 name", self.what),
+        })
+    }
+}
+
+/// Little-endian append helpers for the writer side (infallible; the
+/// writer builds the whole artifact in memory and writes it once).
+pub struct Buf(pub Vec<u8>);
+
+impl Buf {
+    /// Fresh empty buffer.
+    pub fn new() -> Buf {
+        Buf(Vec::new())
+    }
+
+    /// Append raw bytes.
+    pub fn bytes(&mut self, b: &[u8]) {
+        self.0.extend_from_slice(b);
+    }
+
+    /// Append a `u8`.
+    pub fn u8(&mut self, v: u8) {
+        self.0.push(v);
+    }
+
+    /// Append a little-endian `u16`.
+    pub fn u16(&mut self, v: u16) {
+        self.0.extend_from_slice(&v.to_le_bytes());
+    }
+
+    /// Append a little-endian `u32`.
+    pub fn u32(&mut self, v: u32) {
+        self.0.extend_from_slice(&v.to_le_bytes());
+    }
+
+    /// Append a little-endian `u64`.
+    pub fn u64(&mut self, v: u64) {
+        self.0.extend_from_slice(&v.to_le_bytes());
+    }
+
+    /// Append a little-endian `i64`.
+    pub fn i64(&mut self, v: i64) {
+        self.u64(v as u64);
+    }
+
+    /// Append an `f32` bit pattern (exact roundtrip).
+    pub fn f32(&mut self, v: f32) {
+        self.u32(v.to_bits());
+    }
+
+    /// Append a length-prefixed (u16) UTF-8 name.
+    ///
+    /// # Panics
+    /// If the name exceeds `u16::MAX` bytes (parameter names are short).
+    pub fn name(&mut self, s: &str) {
+        let n = u16::try_from(s.len()).expect("name fits u16");
+        self.u16(n);
+        self.bytes(s.as_bytes());
+    }
+}
+
+impl Default for Buf {
+    fn default() -> Buf {
+        Buf::new()
+    }
+}
+
+/// One parsed section-table row (also surfaced by
+/// [`super::LoadedArtifact::sections`] so tests can aim bit flips at a
+/// specific body and `artifact inspect` can print the table).
+#[derive(Clone, Copy, Debug)]
+pub struct SectionInfo {
+    /// Section kind (`SEC_*`).
+    pub kind: u32,
+    /// Raw SIMD-level index (meaningful for [`SEC_PANELS`] only).
+    pub level: u32,
+    /// Absolute file offset of the body (64-byte aligned).
+    pub off: usize,
+    /// Body length in bytes.
+    pub len: usize,
+}
+
+/// Human-readable name of a section kind for `artifact inspect`.
+pub fn kind_name(kind: u32) -> &'static str {
+    match kind {
+        SEC_META => "meta",
+        SEC_TENSORS => "tensors",
+        SEC_PACKED => "packed",
+        SEC_PANELS => "panels",
+        _ => "unknown",
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Pin the CRC32 implementation to the IEEE reference vector — the
+    /// on-disk checksums must never silently change meaning.
+    #[test]
+    fn crc32_reference_vector() {
+        assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
+        assert_eq!(crc32(b""), 0);
+    }
+
+    #[test]
+    fn cursor_roundtrip_and_truncation() {
+        let mut b = Buf::new();
+        b.u16(7);
+        b.u32(0xDEAD_BEEF);
+        b.u64(1 << 40);
+        b.i64(-3);
+        b.f32(0.25);
+        b.name("conv1.sw");
+        let mut c = Cursor::new(&b.0, "test");
+        assert_eq!(c.u16().unwrap(), 7);
+        assert_eq!(c.u32().unwrap(), 0xDEAD_BEEF);
+        assert_eq!(c.u64().unwrap(), 1 << 40);
+        assert_eq!(c.i64().unwrap(), -3);
+        assert_eq!(c.f32().unwrap(), 0.25);
+        assert_eq!(c.name().unwrap(), "conv1.sw");
+        assert_eq!(c.remaining(), 0);
+        assert!(matches!(c.u8(), Err(ArtifactError::Truncated { .. })));
+    }
+
+    #[test]
+    fn align_up_rounds_to_64() {
+        assert_eq!(align_up(0), 0);
+        assert_eq!(align_up(1), 64);
+        assert_eq!(align_up(64), 64);
+        assert_eq!(align_up(65), 128);
+    }
+}

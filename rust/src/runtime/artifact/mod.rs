@@ -1,0 +1,45 @@
+//! Zero-copy model artifacts: the versioned, checksummed `.lsqa` on-disk
+//! format plus its writer and instant-bind loader (DESIGN.md
+//! §Artifact-format).
+//!
+//! LSQ's deployment story is low-precision models that are small *and*
+//! fast to stand up — yet without an artifact, every process start and
+//! every hot [`crate::serve::ModelRegistry`] load re-derives the
+//! [`crate::runtime::kernels::PanelizedWeights`] blocks from packed
+//! bytes. At fleet scale (many precision variants × many replicas ×
+//! many processes) that rebuild is the dominant cold-start tax. A
+//! `.lsqa` captures, at pack time:
+//!
+//! * the **arch IR seed** (model name, qbits, geometry — enough to
+//!   rebuild the deterministic [`crate::runtime::native::arch`] graph)
+//!   and the family metadata a manifest would carry,
+//! * every **fp32 parameter** that isn't a quantized weight (per-layer
+//!   Eq. 1 step sizes `s_w`/`s_a`, biases, folded-BN inputs, full-
+//!   precision weights),
+//! * the **bit-packed quantized weights** (the Figure-3 storage form and
+//!   the universal fallback), and
+//! * prebuilt **panel blobs** in their native 64-byte-aligned layout,
+//!   one section per [`crate::runtime::kernels::SimdLevel`], keyed on
+//!   `PanelGeom` + level + bits + activation class — the PR-8
+//!   autotuner's tuned geometries are frozen at pack time.
+//!
+//! The loader ([`LoadedArtifact::load`]) bulk-reads the file into a
+//! page-aligned arena with one aligned read (std-only; the layout is
+//! mmap-ready so a feature-gated mmap can slot in later), verifies
+//! magic/version/endianness and every section CRC up front, and then
+//! hands [`crate::runtime::NativeEngine`] *borrowed* panel blocks: the
+//! arena — not per-engine copies — is the working set shared across all
+//! replicas of a variant, and binding performs **zero** unpack or
+//! panelize work (`tests/artifact.rs` asserts the panel-build counter
+//! stays flat). A host that supports none of the recorded SIMD sections
+//! falls back to the packed-bytes section and a normal counted panel
+//! build — never to silence: any *mismatched* section is a typed
+//! [`ArtifactError`].
+
+pub mod format;
+pub mod reader;
+pub mod writer;
+
+pub use format::{ArtifactError, SectionInfo};
+pub use reader::LoadedArtifact;
+pub use writer::pack_family;

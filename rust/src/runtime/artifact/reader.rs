@@ -1,0 +1,813 @@
+//! `.lsqa` loader: one page-aligned bulk read, full structural + checksum
+//! verification up front, then zero-copy panel binding.
+//!
+//! [`LoadedArtifact::load`] reads the whole file into a page-aligned
+//! arena ([`ArtifactArena`] — a single `read_exact` into an aligned
+//! window of an over-allocated buffer; the file layout keeps every panel
+//! blob on a 64-byte file offset, so in-file alignment *is* in-memory
+//! alignment, and the same layout serves a future feature-gated mmap).
+//! Everything that can be wrong with the bytes — truncation, bad magic,
+//! foreign version or endianness, checksum mismatches, malformed
+//! directories, geometry disagreements — surfaces as a typed
+//! [`ArtifactError`] here or in [`LoadedArtifact::panel_for`]; nothing
+//! in this module panics on file content and nothing falls back
+//! silently.
+//!
+//! The arena is the shared working set: [`LoadedArtifact::panel_for`]
+//! hands out [`PanelizedWeights`] that *borrow* their tile bytes from
+//! the `Arc`'d arena via [`PanelSource`], so N replicas of a variant
+//! share one copy of the panels instead of building N.
+
+use std::collections::BTreeMap;
+use std::io::Read;
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+use crate::quant::model_size::LayerMeta;
+use crate::quant::pack::Packed;
+use crate::runtime::kernels::panel::tile_offsets;
+use crate::runtime::kernels::{PanelGeom, PanelSource, PanelizedWeights, SimdLevel};
+use crate::runtime::manifest::{Family, Manifest};
+use crate::tensor::Tensor;
+use crate::util::json::Json;
+
+use super::format::{
+    crc32, kind_name, AResult, ArtifactError, Cursor, SectionInfo, ALIGN, ENDIAN_TAG, HEADER_LEN,
+    MAGIC, SECTION_ENTRY_LEN, SEC_META, SEC_PACKED, SEC_PANELS, SEC_TENSORS, VERSION,
+};
+
+/// Page alignment of the arena base (covers the 64-byte panel alignment
+/// with room to spare, and matches what an mmap would provide).
+const PAGE: usize = 4096;
+
+/// The artifact bytes, resident once per process per artifact: an
+/// over-allocated buffer whose `base..base+len` window is page-aligned
+/// and holds the file image verbatim (so absolute file offsets are
+/// arena offsets).
+pub struct ArtifactArena {
+    buf: Vec<u8>,
+    base: usize,
+    len: usize,
+}
+
+impl ArtifactArena {
+    fn read_from(path: &Path) -> AResult<ArtifactArena> {
+        let io = |err| ArtifactError::Io { path: path.to_path_buf(), err };
+        let mut f = std::fs::File::open(path).map_err(io)?;
+        let len = f.metadata().map_err(io)?.len();
+        let len = usize::try_from(len).map_err(|_| ArtifactError::Malformed {
+            what: "file length exceeds this host's usize".to_string(),
+        })?;
+        let mut buf = vec![0u8; len + PAGE];
+        let base = buf.as_ptr().align_offset(PAGE);
+        f.read_exact(&mut buf[base..base + len]).map_err(io)?;
+        Ok(ArtifactArena { buf, base, len })
+    }
+
+    /// The file image (absolute file offsets index into this).
+    pub fn data(&self) -> &[u8] {
+        &self.buf[self.base..self.base + self.len]
+    }
+}
+
+impl PanelSource for ArtifactArena {
+    fn bytes(&self) -> &[i8] {
+        let d = self.data();
+        // u8 → i8 view: identical size and alignment, every bit pattern
+        // valid — the panel tiles were written as raw i8 bytes.
+        unsafe { std::slice::from_raw_parts(d.as_ptr() as *const i8, d.len()) }
+    }
+}
+
+/// One quantized matmul layer as recorded in META's `layers` list.
+#[derive(Clone, Debug)]
+pub struct LayerInfo {
+    /// Layer name (the arch op name, e.g. `conv1`).
+    pub name: String,
+    /// Weight/activation bit width.
+    pub bits: u32,
+    /// Whether the layer's input activations are signed (Eq. 1 range).
+    pub signed_act: bool,
+    /// GEMM reduction dimension.
+    pub k: usize,
+    /// GEMM output dimension.
+    pub n: usize,
+}
+
+/// The family record + arch IR seed parsed from the META section.
+struct Meta {
+    family: String,
+    model: String,
+    qbits: u32,
+    num_classes: usize,
+    image: usize,
+    channels: usize,
+    batch: usize,
+    n_matmul: usize,
+    params_bin: String,
+    param_names: Vec<String>,
+    grad_names: Vec<String>,
+    roles: BTreeMap<String, String>,
+    shapes: BTreeMap<String, Vec<usize>>,
+    layer_meta: Vec<LayerMeta>,
+    layers: Vec<LayerInfo>,
+}
+
+struct PackedEntry {
+    bits: u32,
+    signed: bool,
+    len: usize,
+    step: f32,
+    /// Absolute file offset of the packed bytes.
+    off: usize,
+    nbytes: usize,
+}
+
+struct PanelEntry {
+    k: usize,
+    n: usize,
+    bits: u32,
+    act_max: i64,
+    geom: PanelGeom,
+    /// Absolute file offset of the 64-aligned tile blob.
+    off: usize,
+    len: usize,
+}
+
+struct PanelSection {
+    level: SimdLevel,
+    entries: BTreeMap<String, PanelEntry>,
+}
+
+/// A fully verified `.lsqa` held resident in its page-aligned arena,
+/// ready for instant binds: [`crate::runtime::NativeEngine`] replicas
+/// borrow panel blocks straight out of the arena
+/// ([`LoadedArtifact::panel_for`]) and read every non-quantized
+/// parameter from the materialized [`Tensor`] map.
+pub struct LoadedArtifact {
+    path: PathBuf,
+    arena: Arc<ArtifactArena>,
+    meta: Meta,
+    tensors: BTreeMap<String, Tensor>,
+    packed: BTreeMap<String, PackedEntry>,
+    panels: Vec<PanelSection>,
+    sections: Vec<SectionInfo>,
+}
+
+impl std::fmt::Debug for LoadedArtifact {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("LoadedArtifact")
+            .field("path", &self.path)
+            .field("family", &self.meta.family)
+            .field("sections", &self.sections.len())
+            .finish_non_exhaustive()
+    }
+}
+
+fn malformed(what: impl Into<String>) -> ArtifactError {
+    ArtifactError::Malformed { what: what.into() }
+}
+
+fn jstr(j: &Json, key: &str) -> AResult<String> {
+    j.get(key)
+        .and_then(Json::as_str)
+        .map(str::to_string)
+        .ok_or_else(|| malformed(format!("meta: missing string field {key:?}")))
+}
+
+fn jusize(j: &Json, key: &str) -> AResult<usize> {
+    j.get(key)
+        .and_then(Json::as_usize)
+        .ok_or_else(|| malformed(format!("meta: missing numeric field {key:?}")))
+}
+
+fn jstrs(j: &Json, key: &str) -> AResult<Vec<String>> {
+    j.get(key)
+        .and_then(Json::as_arr)
+        .ok_or_else(|| malformed(format!("meta: missing array field {key:?}")))?
+        .iter()
+        .map(|v| {
+            v.as_str()
+                .map(str::to_string)
+                .ok_or_else(|| malformed(format!("meta: non-string entry in {key:?}")))
+        })
+        .collect()
+}
+
+fn parse_meta(body: &[u8]) -> AResult<Meta> {
+    let text = std::str::from_utf8(body).map_err(|_| malformed("meta: not UTF-8"))?;
+    let j = Json::parse(text).map_err(|e| malformed(format!("meta: {e}")))?;
+    let roles = j
+        .get("roles")
+        .and_then(Json::as_obj)
+        .ok_or_else(|| malformed("meta: missing object field \"roles\""))?
+        .iter()
+        .map(|(k, v)| {
+            v.as_str()
+                .map(|s| (k.clone(), s.to_string()))
+                .ok_or_else(|| malformed("meta: non-string role"))
+        })
+        .collect::<AResult<BTreeMap<_, _>>>()?;
+    let shapes = j
+        .get("shapes")
+        .and_then(Json::as_obj)
+        .ok_or_else(|| malformed("meta: missing object field \"shapes\""))?
+        .iter()
+        .map(|(k, v)| {
+            v.as_arr()
+                .and_then(|a| a.iter().map(Json::as_usize).collect::<Option<Vec<_>>>())
+                .map(|dims| (k.clone(), dims))
+                .ok_or_else(|| malformed("meta: non-numeric shape"))
+        })
+        .collect::<AResult<BTreeMap<_, _>>>()?;
+    let layer_meta = j
+        .get("layer_meta")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| malformed("meta: missing array field \"layer_meta\""))?
+        .iter()
+        .map(|lm| {
+            Ok(LayerMeta {
+                name: jstr(lm, "name")?,
+                n_weights: jusize(lm, "n_weights")?,
+                bits: jusize(lm, "bits")? as u32,
+            })
+        })
+        .collect::<AResult<Vec<_>>>()?;
+    let layers = j
+        .get("layers")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| malformed("meta: missing array field \"layers\""))?
+        .iter()
+        .map(|l| {
+            Ok(LayerInfo {
+                name: jstr(l, "name")?,
+                bits: jusize(l, "bits")? as u32,
+                signed_act: l
+                    .get("signed_act")
+                    .and_then(Json::as_bool)
+                    .ok_or_else(|| malformed("meta: missing bool field \"signed_act\""))?,
+                k: jusize(l, "k")?,
+                n: jusize(l, "n")?,
+            })
+        })
+        .collect::<AResult<Vec<_>>>()?;
+    Ok(Meta {
+        family: jstr(&j, "family")?,
+        model: jstr(&j, "model")?,
+        qbits: jusize(&j, "qbits")? as u32,
+        num_classes: jusize(&j, "num_classes")?,
+        image: jusize(&j, "image")?,
+        channels: jusize(&j, "channels")?,
+        batch: jusize(&j, "batch")?,
+        n_matmul: jusize(&j, "n_matmul")?,
+        params_bin: jstr(&j, "params_bin")?,
+        param_names: jstrs(&j, "param_names")?,
+        grad_names: jstrs(&j, "grad_names")?,
+        roles,
+        shapes,
+        layer_meta,
+        layers,
+    })
+}
+
+fn parse_tensors(body: &[u8]) -> AResult<BTreeMap<String, Tensor>> {
+    let mut c = Cursor::new(body, "tensors section");
+    let count = c.u32()?;
+    let mut out = BTreeMap::new();
+    for _ in 0..count {
+        let name = c.name()?;
+        let ndim = c.u8()? as usize;
+        let mut shape = Vec::with_capacity(ndim);
+        let mut numel = 1usize;
+        for _ in 0..ndim {
+            let d = c.usize()?;
+            numel = numel
+                .checked_mul(d)
+                .ok_or_else(|| malformed(format!("tensor {name}: shape overflow")))?;
+            shape.push(d);
+        }
+        let raw = c.bytes(numel.checked_mul(4).ok_or_else(|| {
+            malformed(format!("tensor {name}: byte length overflow"))
+        })?)?;
+        let data: Vec<f32> = raw
+            .chunks_exact(4)
+            .map(|b| f32::from_bits(u32::from_le_bytes(b.try_into().expect("4 bytes"))))
+            .collect();
+        if out.insert(name.clone(), Tensor::from_f32(&shape, data)).is_some() {
+            return Err(malformed(format!("duplicate tensor {name}")));
+        }
+    }
+    if c.remaining() != 0 {
+        return Err(malformed("tensors section: trailing bytes"));
+    }
+    Ok(out)
+}
+
+fn parse_packed(body: &[u8], section_off: usize) -> AResult<BTreeMap<String, PackedEntry>> {
+    let mut c = Cursor::new(body, "packed section");
+    let count = c.u32()?;
+    let mut out = BTreeMap::new();
+    for _ in 0..count {
+        let name = c.name()?;
+        let bits = c.u32()?;
+        if !(1..=8).contains(&bits) {
+            return Err(malformed(format!("packed {name}: bits {bits} outside 1..=8")));
+        }
+        let signed = match c.u8()? {
+            0 => false,
+            1 => true,
+            v => return Err(malformed(format!("packed {name}: bad signed flag {v}"))),
+        };
+        let len = c.usize()?;
+        let step = c.f32()?;
+        if !(step.is_finite() && step > 0.0) {
+            return Err(malformed(format!("packed {name}: non-positive step")));
+        }
+        let nbytes = c.usize()?;
+        let want = (len * bits as usize).div_ceil(8);
+        if nbytes != want {
+            return Err(malformed(format!(
+                "packed {name}: {nbytes} bytes for {len} x {bits}-bit values (want {want})"
+            )));
+        }
+        let off = section_off + (body.len() - c.remaining());
+        c.bytes(nbytes)?;
+        if out.insert(name.clone(), PackedEntry { bits, signed, len, step, off, nbytes }).is_some()
+        {
+            return Err(malformed(format!("duplicate packed layer {name}")));
+        }
+    }
+    if c.remaining() != 0 {
+        return Err(malformed("packed section: trailing bytes"));
+    }
+    Ok(out)
+}
+
+fn parse_panels(body: &[u8], sec: &SectionInfo) -> AResult<PanelSection> {
+    let level = SimdLevel::ALL
+        .get(sec.level as usize)
+        .copied()
+        .ok_or_else(|| malformed(format!("panels section: unknown SIMD level {}", sec.level)))?;
+    let mut c = Cursor::new(body, "panels section");
+    let count = c.u32()?;
+    let mut entries = BTreeMap::new();
+    for _ in 0..count {
+        let name = c.name()?;
+        let k = c.usize()?;
+        let n = c.usize()?;
+        let bits = c.u32()?;
+        let act_max = c.i64()?;
+        let geom = PanelGeom {
+            kc: c.usize()?,
+            nc: c.usize()?,
+            nr: c.usize()?,
+            ki: c.usize()?,
+        };
+        let off = c.usize()?;
+        let len = c.usize()?;
+        if !geom.valid() {
+            return Err(ArtifactError::GeomMismatch {
+                layer: name,
+                detail: format!("invalid panel geometry {geom:?}"),
+            });
+        }
+        if off % ALIGN != 0 {
+            return Err(malformed(format!("panel {name}: blob offset {off} not 64-aligned")));
+        }
+        let (sec_start, sec_end) = (sec.off, sec.off + sec.len);
+        if off < sec_start || off.checked_add(len).map_or(true, |end| end > sec_end) {
+            return Err(malformed(format!(
+                "panel {name}: blob [{off}, +{len}) escapes its section"
+            )));
+        }
+        let want = *tile_offsets(k, n, geom).last().expect("sentinel");
+        if want != len {
+            return Err(ArtifactError::GeomMismatch {
+                layer: name,
+                detail: format!(
+                    "blob length {len} != {want} computed from k={k} n={n} {geom:?}"
+                ),
+            });
+        }
+        if entries
+            .insert(name.clone(), PanelEntry { k, n, bits, act_max, geom, off, len })
+            .is_some()
+        {
+            return Err(malformed(format!("duplicate panel layer {name}")));
+        }
+    }
+    Ok(PanelSection { level, entries })
+}
+
+impl LoadedArtifact {
+    /// Read and fully verify the artifact at `path`: magic, version,
+    /// endianness, header CRC, section table bounds, every section body
+    /// CRC, and every directory's structural invariants. After `load`
+    /// returns, binds cannot fail on byte-level corruption — only on
+    /// semantic mismatches ([`LoadedArtifact::panel_for`]).
+    pub fn load(path: &Path) -> AResult<LoadedArtifact> {
+        let arena = Arc::new(ArtifactArena::read_from(path)?);
+        let data = arena.data();
+        if data.len() < HEADER_LEN {
+            return Err(ArtifactError::Truncated { what: "header".to_string() });
+        }
+        if data[0..4] != MAGIC {
+            return Err(ArtifactError::BadMagic);
+        }
+        let version = u16::from_le_bytes(data[4..6].try_into().expect("2 bytes"));
+        if version != VERSION {
+            return Err(ArtifactError::UnsupportedVersion { got: version, want: VERSION });
+        }
+        let endian = u16::from_le_bytes(data[6..8].try_into().expect("2 bytes"));
+        if endian == ENDIAN_TAG.swap_bytes() {
+            return Err(ArtifactError::EndianMismatch);
+        }
+        let hcrc = u32::from_le_bytes(data[HEADER_LEN - 4..HEADER_LEN].try_into().expect("crc"));
+        if crc32(&data[0..HEADER_LEN - 4]) != hcrc {
+            return Err(ArtifactError::ChecksumMismatch { section: "header".to_string() });
+        }
+        if endian != ENDIAN_TAG {
+            return Err(malformed(format!("bad endian tag {endian:#06x}")));
+        }
+        let mut h = Cursor::new(&data[8..HEADER_LEN - 4], "header");
+        let header_len = h.u32()? as usize;
+        let section_count = h.u32()? as usize;
+        let table_off = h.usize()?;
+        let file_len = h.usize()?;
+        if header_len != HEADER_LEN {
+            return Err(malformed(format!("header length {header_len} != {HEADER_LEN}")));
+        }
+        match file_len.cmp(&data.len()) {
+            std::cmp::Ordering::Greater => {
+                return Err(ArtifactError::Truncated { what: "file body".to_string() })
+            }
+            std::cmp::Ordering::Less => {
+                return Err(malformed(format!(
+                    "file is {} bytes, header says {file_len}",
+                    data.len()
+                )))
+            }
+            std::cmp::Ordering::Equal => {}
+        }
+        let table_len = section_count
+            .checked_mul(SECTION_ENTRY_LEN)
+            .ok_or_else(|| malformed("section count overflow"))?;
+        if table_off.checked_add(table_len).map_or(true, |end| end > data.len()) {
+            return Err(ArtifactError::Truncated { what: "section table".to_string() });
+        }
+
+        let mut sections = Vec::with_capacity(section_count);
+        for i in 0..section_count {
+            let mut e = Cursor::new(
+                &data[table_off + i * SECTION_ENTRY_LEN..table_off + (i + 1) * SECTION_ENTRY_LEN],
+                "section table entry",
+            );
+            let kind = e.u32()?;
+            let level = e.u32()?;
+            let off = e.usize()?;
+            let len = e.usize()?;
+            let crc = e.u32()?;
+            if off % ALIGN != 0 {
+                return Err(malformed(format!(
+                    "section {} offset {off} not 64-aligned",
+                    kind_name(kind)
+                )));
+            }
+            if off.checked_add(len).map_or(true, |end| end > data.len()) {
+                return Err(ArtifactError::Truncated {
+                    what: format!("section {}", kind_name(kind)),
+                });
+            }
+            if crc32(&data[off..off + len]) != crc {
+                return Err(ArtifactError::ChecksumMismatch {
+                    section: format!("section {}", kind_name(kind)),
+                });
+            }
+            sections.push(SectionInfo { kind, level, off, len });
+        }
+
+        let one = |kind: u32| -> AResult<&SectionInfo> {
+            let mut found = sections.iter().filter(|s| s.kind == kind);
+            let first = found
+                .next()
+                .ok_or_else(|| malformed(format!("missing {} section", kind_name(kind))))?;
+            if found.next().is_some() {
+                return Err(malformed(format!("duplicate {} section", kind_name(kind))));
+            }
+            Ok(first)
+        };
+        let meta_sec = *one(SEC_META)?;
+        let tensors_sec = *one(SEC_TENSORS)?;
+        let packed_sec = *one(SEC_PACKED)?;
+        let meta = parse_meta(&data[meta_sec.off..meta_sec.off + meta_sec.len])?;
+        let tensors = parse_tensors(&data[tensors_sec.off..tensors_sec.off + tensors_sec.len])?;
+        let packed = parse_packed(
+            &data[packed_sec.off..packed_sec.off + packed_sec.len],
+            packed_sec.off,
+        )?;
+        let mut panels = Vec::new();
+        for sec in sections.iter().filter(|s| s.kind == SEC_PANELS) {
+            let ps = parse_panels(&data[sec.off..sec.off + sec.len], sec)?;
+            if panels.iter().any(|p: &PanelSection| p.level == ps.level) {
+                return Err(malformed(format!(
+                    "duplicate panels section for level {}",
+                    ps.level.name()
+                )));
+            }
+            panels.push(ps);
+        }
+        // Cross-checks: every quantized layer listed in META must have a
+        // packed record, and every panel entry must describe a layer the
+        // packed section knows — a directory that disagrees with itself
+        // is corruption even when every CRC passes.
+        for l in &meta.layers {
+            let p = packed
+                .get(&l.name)
+                .ok_or_else(|| malformed(format!("layer {} has no packed record", l.name)))?;
+            if p.bits != l.bits || p.len != l.k * l.n {
+                return Err(ArtifactError::GeomMismatch {
+                    layer: l.name.clone(),
+                    detail: format!(
+                        "packed record ({} bits, {} values) disagrees with meta \
+                         ({} bits, {}x{})",
+                        p.bits, p.len, l.bits, l.k, l.n
+                    ),
+                });
+            }
+        }
+        for ps in &panels {
+            for (name, e) in &ps.entries {
+                if !packed.contains_key(name) {
+                    return Err(malformed(format!(
+                        "panel layer {name} (level {}) has no packed record",
+                        ps.level.name()
+                    )));
+                }
+                if !meta.layers.iter().any(|l| {
+                    l.name == *name && l.bits == e.bits && l.k == e.k && l.n == e.n
+                }) {
+                    return Err(ArtifactError::GeomMismatch {
+                        layer: name.clone(),
+                        detail: format!(
+                            "panel entry (level {}) disagrees with meta layers",
+                            ps.level.name()
+                        ),
+                    });
+                }
+            }
+        }
+        Ok(LoadedArtifact {
+            path: path.to_path_buf(),
+            arena,
+            meta,
+            tensors,
+            packed,
+            panels,
+            sections,
+        })
+    }
+
+    /// The family this artifact holds.
+    pub fn family(&self) -> &str {
+        &self.meta.family
+    }
+
+    /// Model architecture name (the arch IR seed).
+    pub fn model(&self) -> &str {
+        &self.meta.model
+    }
+
+    /// Family quantization bit width.
+    pub fn qbits(&self) -> u32 {
+        self.meta.qbits
+    }
+
+    /// Input image side length.
+    pub fn image(&self) -> usize {
+        self.meta.image
+    }
+
+    /// Input channels.
+    pub fn channels(&self) -> usize {
+        self.meta.channels
+    }
+
+    /// Output classes.
+    pub fn num_classes(&self) -> usize {
+        self.meta.num_classes
+    }
+
+    /// Serving batch hint carried over from the source manifest.
+    pub fn batch(&self) -> usize {
+        self.meta.batch
+    }
+
+    /// Per-image input element count.
+    pub fn image_len(&self) -> usize {
+        self.meta.image * self.meta.image * self.meta.channels
+    }
+
+    /// The path this artifact was loaded from.
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+
+    /// The quantized matmul layers recorded in META, graph order.
+    pub fn layers(&self) -> &[LayerInfo] {
+        &self.meta.layers
+    }
+
+    /// The verified section table (kind, level, offset, length) — for
+    /// `artifact inspect` and for tests that aim corruption at a
+    /// specific body.
+    pub fn sections(&self) -> &[SectionInfo] {
+        &self.sections
+    }
+
+    /// A non-quantized parameter tensor by name (step sizes, biases, BN
+    /// parameters, fp32 weights), if recorded.
+    pub fn tensor(&self, name: &str) -> Option<&Tensor> {
+        self.tensors.get(name)
+    }
+
+    /// All recorded parameter tensors (everything except the quantized
+    /// weights, which travel packed + panelized).
+    pub fn tensors(&self) -> &BTreeMap<String, Tensor> {
+        &self.tensors
+    }
+
+    /// Synthesize the single-family [`Manifest`] equivalent of this
+    /// artifact, so manifest-shaped code (engines, stats, the serve
+    /// layer) runs unchanged without a `manifest.json` on disk.
+    pub fn manifest(&self) -> Manifest {
+        let m = &self.meta;
+        let fam = Family {
+            name: m.family.clone(),
+            model: m.model.clone(),
+            qbits: m.qbits,
+            num_classes: m.num_classes,
+            params_bin: m.params_bin.clone(),
+            n_matmul: m.n_matmul,
+            param_names: m.param_names.clone(),
+            grad_names: m.grad_names.clone(),
+            roles: m.roles.clone(),
+            shapes: m.shapes.clone(),
+            layer_meta: m.layer_meta.clone(),
+        };
+        Manifest {
+            dir: self.path.parent().unwrap_or_else(|| Path::new(".")).to_path_buf(),
+            batch: m.batch,
+            image: m.image,
+            channels: m.channels,
+            num_classes: m.num_classes,
+            families: BTreeMap::from([(m.family.clone(), fam)]),
+            artifacts: BTreeMap::new(),
+        }
+    }
+
+    /// The PANELS section the binding path uses on this host: the one
+    /// matching the level this process dispatches to
+    /// ([`SimdLevel::detect`], which honors the env pins), else the best
+    /// rung the host can execute, else `None` (bind falls back to the
+    /// packed bytes and a normal counted panel build).
+    fn best_panel_section(&self) -> Option<&PanelSection> {
+        let detected = SimdLevel::detect();
+        if let Some(ps) = self.panels.iter().find(|p| p.level == detected) {
+            return Some(ps);
+        }
+        self.panels
+            .iter()
+            .filter(|p| p.level.available())
+            .max_by_key(|p| SimdLevel::ALL.iter().position(|&l| l == p.level))
+    }
+
+    /// The SIMD level of the panels section binds will borrow from, if
+    /// any (for `artifact inspect` and bench annotation).
+    pub fn bound_level(&self) -> Option<SimdLevel> {
+        self.best_panel_section().map(|p| p.level)
+    }
+
+    /// A zero-copy [`PanelizedWeights`] for layer `name`, borrowing its
+    /// tile bytes from the shared arena. `Ok(None)` means the artifact
+    /// records no panels section this host can use — the caller falls
+    /// back to [`LoadedArtifact::packed_for`] and a normal panel build.
+    /// A *present* entry that disagrees with the expected shape, bit
+    /// width, or activation class is a typed
+    /// [`ArtifactError::GeomMismatch`] — never a silent rebuild.
+    pub fn panel_for(
+        &self,
+        name: &str,
+        k: usize,
+        n: usize,
+        bits: u32,
+        act_max: i64,
+    ) -> AResult<Option<PanelizedWeights>> {
+        let Some(section) = self.best_panel_section() else {
+            return Ok(None);
+        };
+        let e = section.entries.get(name).ok_or_else(|| ArtifactError::GeomMismatch {
+            layer: name.to_string(),
+            detail: format!("absent from the {} panels section", section.level.name()),
+        })?;
+        if e.k != k || e.n != n || e.bits != bits || e.act_max != act_max {
+            return Err(ArtifactError::GeomMismatch {
+                layer: name.to_string(),
+                detail: format!(
+                    "recorded (k={}, n={}, {} bits, act_max={}) != expected \
+                     (k={k}, n={n}, {bits} bits, act_max={act_max})",
+                    e.k, e.n, e.bits, e.act_max
+                ),
+            });
+        }
+        Ok(Some(PanelizedWeights::from_shared(
+            k,
+            n,
+            e.geom,
+            Arc::clone(&self.arena) as Arc<dyn PanelSource>,
+            e.off,
+            e.len,
+        )))
+    }
+
+    /// The bit-packed weights for layer `name`, copied out of the arena
+    /// (the fallback working set when no panels section matches, and the
+    /// fused low-memory mode's resident form). Shape/bits disagreements
+    /// are typed errors, as in [`LoadedArtifact::panel_for`].
+    pub fn packed_for(&self, name: &str, k: usize, n: usize, bits: u32) -> AResult<Packed> {
+        let e = self.packed.get(name).ok_or_else(|| {
+            malformed(format!("artifact has no packed record for layer {name}"))
+        })?;
+        if e.bits != bits || e.len != k * n {
+            return Err(ArtifactError::GeomMismatch {
+                layer: name.to_string(),
+                detail: format!(
+                    "packed record ({} bits, {} values) != expected ({bits} bits, {})",
+                    e.bits,
+                    e.len,
+                    k * n
+                ),
+            });
+        }
+        let bytes = self.arena.data()[e.off..e.off + e.nbytes].to_vec();
+        Ok(Packed { bits: e.bits, signed: e.signed, len: e.len, step: e.step, bytes })
+    }
+
+    /// Human-readable artifact summary for `lsqnet artifact inspect`.
+    pub fn inspect(&self) -> String {
+        use std::fmt::Write as _;
+        let m = &self.meta;
+        let mut s = String::new();
+        let _ = writeln!(s, "artifact   {}", self.path.display());
+        let _ = writeln!(
+            s,
+            "family     {} (model {}, {}-bit, {} classes, {}x{}x{})",
+            m.family, m.model, m.qbits, m.num_classes, m.image, m.image, m.channels
+        );
+        let _ = writeln!(
+            s,
+            "params     {} tensors, {} packed layers, batch hint {}",
+            self.tensors.len(),
+            self.packed.len(),
+            m.batch
+        );
+        let _ = writeln!(s, "sections   ({} total)", self.sections.len());
+        for sec in &self.sections {
+            let lvl = if sec.kind == SEC_PANELS {
+                SimdLevel::ALL
+                    .get(sec.level as usize)
+                    .map_or("?", |l| l.name())
+            } else {
+                "-"
+            };
+            let _ = writeln!(
+                s,
+                "  {:<8} level={:<10} off={:<10} len={}",
+                kind_name(sec.kind),
+                lvl,
+                sec.off,
+                sec.len
+            );
+        }
+        for ps in &self.panels {
+            let total: usize = ps.entries.values().map(|e| e.len).sum();
+            let _ = writeln!(
+                s,
+                "panels[{}]  {} layers, {} tile bytes{}",
+                ps.level.name(),
+                ps.entries.len(),
+                total,
+                if Some(ps.level) == self.bound_level() { "  <- binds on this host" } else { "" }
+            );
+            for (name, e) in &ps.entries {
+                let g = e.geom;
+                let _ = writeln!(
+                    s,
+                    "  {:<12} k={:<5} n={:<5} {}-bit act_max={:<4} \
+                     geom kc={} nc={} nr={} ki={}",
+                    name, e.k, e.n, e.bits, e.act_max, g.kc, g.nc, g.nr, g.ki
+                );
+            }
+        }
+        s
+    }
+}

@@ -1,0 +1,393 @@
+//! `.lsqa` writer: quantize + pack a family once, panelize it at the
+//! autotuner's geometries, and freeze the result — header, section
+//! table, META/TENSORS/PACKED bodies and one PANELS section per
+//! requested SIMD level — into a single in-memory image written with one
+//! `fs::write`.
+//!
+//! Packing is the expensive, once-per-deploy step (`lsqnet pack`); the
+//! payoff is that [`super::reader::LoadedArtifact`] binds with zero
+//! quantize/unpack/panelize work on every process start and hot reload.
+
+use std::collections::{BTreeMap, BTreeSet};
+use std::path::Path;
+
+use anyhow::{anyhow, ensure, Context, Result};
+
+use crate::quant::lsq::qrange;
+use crate::quant::pack::{quantize_and_pack, Packed};
+use crate::runtime::kernels::{check_accumulator_bound, PanelGeom, PanelizedWeights, SimdLevel};
+use crate::runtime::native::arch::{self, Arch, ArchOp};
+use crate::runtime::Manifest;
+use crate::tensor::Tensor;
+use crate::util::json::Json;
+
+use super::format::{
+    align_up, crc32, Buf, ENDIAN_TAG, HEADER_LEN, MAGIC, SECTION_ENTRY_LEN, SEC_META, SEC_PACKED,
+    SEC_PANELS, SEC_TENSORS, VERSION,
+};
+
+/// One sub-32-bit matmul layer of the arch graph, in deterministic graph
+/// order (the same order [`crate::runtime::native::arch::for_each_matmul_bits`]
+/// visits).
+struct QLayer {
+    name: String,
+    bits: u32,
+    signed_act: bool,
+    k: usize,
+    n: usize,
+    shape: Vec<usize>,
+}
+
+fn push_conv(out: &mut Vec<QLayer>, c: &arch::ConvSpec) {
+    if c.bits < 32 {
+        out.push(QLayer {
+            name: c.name.clone(),
+            bits: c.bits,
+            signed_act: c.signed_act,
+            k: c.kh * c.kw * c.in_ch,
+            n: c.out_ch,
+            shape: vec![c.kh, c.kw, c.in_ch, c.out_ch],
+        });
+    }
+}
+
+/// The quantized (bits < 32) matmul layers of `arch`, graph order.
+fn collect_qlayers(arch: &Arch) -> Vec<QLayer> {
+    let mut out = Vec::new();
+    for op in &arch.ops {
+        match op {
+            ArchOp::Conv(c) => push_conv(&mut out, c),
+            ArchOp::Dense(d) => {
+                if d.bits < 32 {
+                    out.push(QLayer {
+                        name: d.name.clone(),
+                        bits: d.bits,
+                        signed_act: d.signed_act,
+                        k: d.in_dim,
+                        n: d.out_dim,
+                        shape: vec![d.in_dim, d.out_dim],
+                    });
+                }
+            }
+            ArchOp::Preact(p) => {
+                if let Some(proj) = &p.proj {
+                    push_conv(&mut out, proj);
+                }
+                push_conv(&mut out, &p.conv1);
+                push_conv(&mut out, &p.conv2);
+            }
+            _ => {}
+        }
+    }
+    out
+}
+
+/// The PANELS sections a plain `lsqnet pack` writes: this host's
+/// dispatched level (capturing the autotuner's geometries) plus the
+/// universal [`SimdLevel::Scalar`] rung every machine can bind,
+/// deduplicated.
+pub fn default_levels() -> Vec<SimdLevel> {
+    let mut out = vec![SimdLevel::detect()];
+    if !out.contains(&SimdLevel::Scalar) {
+        out.push(SimdLevel::Scalar);
+    }
+    out
+}
+
+/// The blocking frozen into a PANELS section for `level`: the bind-time
+/// autotuner's measured pick when `level` is what this process actually
+/// dispatches to (the PR-8 geometries are captured at pack time), the
+/// deterministic [`PanelGeom::DEFAULT`] for any other requested rung (we
+/// cannot measure a level this host doesn't run; DEFAULT is every
+/// level's safe shape).
+fn geom_for(level: SimdLevel, p: &Packed, k: usize, n: usize, act_max: i64) -> PanelGeom {
+    if level == SimdLevel::detect() {
+        crate::runtime::kernels::tune::tune_geom(p, k, n, act_max)
+    } else {
+        PanelGeom::DEFAULT
+    }
+}
+
+fn usize_num(v: usize) -> Json {
+    Json::Num(v as f64)
+}
+
+/// Serialize `family` (bound to `params`, in `Family::param_names`
+/// order) into a `.lsqa` artifact at `out`, with one prebuilt-panels
+/// section per level in `levels` (deduplicated; pass
+/// [`default_levels`]'s result for the standard pair, or an empty slice
+/// to write a packed-bytes-only artifact that always binds through the
+/// fallback panel build).
+pub fn pack_family(
+    manifest: &Manifest,
+    family: &str,
+    params: &[Tensor],
+    out: &Path,
+    levels: &[SimdLevel],
+) -> Result<()> {
+    let fam = manifest.family(family)?;
+    ensure!(
+        params.len() == fam.param_names.len(),
+        "family {family}: got {} params, manifest lists {}",
+        params.len(),
+        fam.param_names.len()
+    );
+    let arch = arch::build(
+        &fam.model,
+        manifest.image,
+        manifest.channels,
+        fam.num_classes,
+        fam.qbits,
+    )?;
+    let map: BTreeMap<&str, &Tensor> =
+        fam.param_names.iter().map(String::as_str).zip(params).collect();
+    let tensor = |name: &str| -> Result<&Tensor> {
+        map.get(name)
+            .copied()
+            .ok_or_else(|| anyhow!("family {family} has no parameter {name:?}"))
+    };
+
+    // Quantize + pack every sub-32-bit matmul layer (the expensive step
+    // the artifact amortizes), validating exactly what bind would.
+    let qlayers = collect_qlayers(&arch);
+    let mut packs: Vec<(usize, Packed, i64)> = Vec::with_capacity(qlayers.len());
+    for (i, ql) in qlayers.iter().enumerate() {
+        let w = tensor(&format!("{}.w", ql.name))?;
+        ensure!(
+            w.shape == ql.shape,
+            "{}.w shape {:?} != expected {:?}",
+            ql.name,
+            w.shape,
+            ql.shape
+        );
+        let sw = tensor(&format!("{}.sw", ql.name))?.item_f32()?;
+        let sa = tensor(&format!("{}.sa", ql.name))?.item_f32()?;
+        ensure!(sw > 0.0 && sa > 0.0, "{}: non-positive step size (sw={sw}, sa={sa})", ql.name);
+        let (act_qn, act_qp) = qrange(ql.bits, ql.signed_act);
+        let (wqn, wqp) = qrange(ql.bits, true);
+        ensure!(
+            check_accumulator_bound(ql.k, act_qp, act_qn, wqn, wqp),
+            "{}: k={} at {}-bit would overflow the i32 accumulator",
+            ql.name,
+            ql.k,
+            ql.bits
+        );
+        let packed = quantize_and_pack(w.f32s()?, sw, ql.bits, true)?;
+        packs.push((i, packed, act_qp.max(act_qn)));
+    }
+    let qweight_names: BTreeSet<String> =
+        qlayers.iter().map(|ql| format!("{}.w", ql.name)).collect();
+
+    // -- META: the family record + arch IR seed, floats excluded (all
+    //    f32 values travel in binary sections for exact roundtrip).
+    let meta = Json::Obj(BTreeMap::from([
+        ("family".to_string(), Json::Str(family.to_string())),
+        ("model".to_string(), Json::Str(fam.model.clone())),
+        ("qbits".to_string(), usize_num(fam.qbits as usize)),
+        ("num_classes".to_string(), usize_num(fam.num_classes)),
+        ("image".to_string(), usize_num(manifest.image)),
+        ("channels".to_string(), usize_num(manifest.channels)),
+        ("batch".to_string(), usize_num(manifest.batch)),
+        ("n_matmul".to_string(), usize_num(fam.n_matmul)),
+        ("params_bin".to_string(), Json::Str(fam.params_bin.clone())),
+        (
+            "param_names".to_string(),
+            Json::Arr(fam.param_names.iter().map(|s| Json::Str(s.clone())).collect()),
+        ),
+        (
+            "grad_names".to_string(),
+            Json::Arr(fam.grad_names.iter().map(|s| Json::Str(s.clone())).collect()),
+        ),
+        (
+            "roles".to_string(),
+            Json::Obj(
+                fam.roles.iter().map(|(k, v)| (k.clone(), Json::Str(v.clone()))).collect(),
+            ),
+        ),
+        (
+            "shapes".to_string(),
+            Json::Obj(
+                fam.shapes
+                    .iter()
+                    .map(|(k, v)| (k.clone(), Json::Arr(v.iter().map(|&d| usize_num(d)).collect())))
+                    .collect(),
+            ),
+        ),
+        (
+            "layer_meta".to_string(),
+            Json::Arr(
+                fam.layer_meta
+                    .iter()
+                    .map(|lm| {
+                        Json::Obj(BTreeMap::from([
+                            ("name".to_string(), Json::Str(lm.name.clone())),
+                            ("n_weights".to_string(), usize_num(lm.n_weights)),
+                            ("bits".to_string(), usize_num(lm.bits as usize)),
+                        ]))
+                    })
+                    .collect(),
+            ),
+        ),
+        (
+            "layers".to_string(),
+            Json::Arr(
+                qlayers
+                    .iter()
+                    .map(|ql| {
+                        Json::Obj(BTreeMap::from([
+                            ("name".to_string(), Json::Str(ql.name.clone())),
+                            ("bits".to_string(), usize_num(ql.bits as usize)),
+                            ("signed_act".to_string(), Json::Bool(ql.signed_act)),
+                            ("k".to_string(), usize_num(ql.k)),
+                            ("n".to_string(), usize_num(ql.n)),
+                        ]))
+                    })
+                    .collect(),
+            ),
+        ),
+    ]));
+    let meta_body = meta.to_string().into_bytes();
+
+    // -- TENSORS: every parameter except the quantized weights (those
+    //    travel bit-packed): step sizes, biases, BN params, fp32 weights.
+    let mut tensors = Buf::new();
+    let kept: Vec<&String> =
+        fam.param_names.iter().filter(|n| !qweight_names.contains(*n)).collect();
+    tensors.u32(u32::try_from(kept.len()).context("tensor count")?);
+    for name in kept {
+        let t = tensor(name)?;
+        tensors.name(name);
+        tensors.u8(u8::try_from(t.shape.len()).context("tensor rank")?);
+        for &d in &t.shape {
+            tensors.u64(d as u64);
+        }
+        for &v in t.f32s().with_context(|| format!("artifact tensor {name} must be f32"))? {
+            tensors.f32(v);
+        }
+    }
+
+    // -- PACKED: the bit-packed quantized weights, graph order.
+    let mut packed_body = Buf::new();
+    packed_body.u32(u32::try_from(packs.len()).context("packed count")?);
+    for (i, p, _) in &packs {
+        let ql = &qlayers[*i];
+        packed_body.name(&ql.name);
+        packed_body.u32(p.bits);
+        packed_body.u8(p.signed as u8);
+        packed_body.u64(p.len as u64);
+        packed_body.f32(p.step);
+        packed_body.u64(p.bytes.len() as u64);
+        packed_body.bytes(&p.bytes);
+    }
+
+    // -- File assembly: header + table placeholders, then 64-aligned
+    //    section bodies; PANELS directories carry absolute blob offsets,
+    //    so those sections are laid out in place.
+    let mut lvls: Vec<SimdLevel> = Vec::new();
+    for &l in levels {
+        if !lvls.contains(&l) {
+            lvls.push(l);
+        }
+    }
+    let section_count = 3 + lvls.len();
+    let table_off = HEADER_LEN;
+    let mut file = vec![0u8; align_up(table_off + section_count * SECTION_ENTRY_LEN)];
+    let mut sections: Vec<(u32, u32, usize, usize)> = Vec::with_capacity(section_count);
+
+    let append = |file: &mut Vec<u8>, kind: u32, level: u32, body: &[u8]| {
+        file.resize(align_up(file.len()), 0);
+        let off = file.len();
+        file.extend_from_slice(body);
+        (kind, level, off, body.len())
+    };
+    let s = append(&mut file, SEC_META, 0, &meta_body);
+    sections.push(s);
+    let s = append(&mut file, SEC_TENSORS, 0, &tensors.0);
+    sections.push(s);
+    let s = append(&mut file, SEC_PACKED, 0, &packed_body.0);
+    sections.push(s);
+
+    for level in lvls {
+        let level_ix = SimdLevel::ALL
+            .iter()
+            .position(|&l| l == level)
+            .expect("level in ALL") as u32;
+        file.resize(align_up(file.len()), 0);
+        let off = file.len();
+        // Panelize every quantized layer at this level's geometry, then
+        // lay out: directory || padding || 64-aligned blobs (absolute
+        // offsets — in-file alignment is in-memory alignment after the
+        // loader's aligned bulk read).
+        let panels: Vec<(usize, PanelizedWeights)> = packs
+            .iter()
+            .map(|(i, p, act_max)| {
+                let ql = &qlayers[*i];
+                let geom = geom_for(level, p, ql.k, ql.n, *act_max);
+                (*i, PanelizedWeights::build_with_geom(p, ql.k, ql.n, geom))
+            })
+            .collect();
+        let dir_len: usize = 4
+            + panels
+                .iter()
+                .map(|(i, _)| 2 + qlayers[*i].name.len() + 8 * 8 + 4 + 8)
+                .sum::<usize>();
+        let mut blob_off = align_up(off + dir_len);
+        let mut dir = Buf::new();
+        dir.u32(u32::try_from(panels.len()).context("panel count")?);
+        let mut blob_offs = Vec::with_capacity(panels.len());
+        for ((i, pw), (_, p, act_max)) in panels.iter().zip(&packs) {
+            let ql = &qlayers[*i];
+            let g = pw.geom();
+            dir.name(&ql.name);
+            dir.u64(ql.k as u64);
+            dir.u64(ql.n as u64);
+            dir.u32(p.bits);
+            dir.i64(*act_max);
+            dir.u64(g.kc as u64);
+            dir.u64(g.nc as u64);
+            dir.u64(g.nr as u64);
+            dir.u64(g.ki as u64);
+            dir.u64(blob_off as u64);
+            dir.u64(pw.raw_data().len() as u64);
+            blob_offs.push(blob_off);
+            blob_off = align_up(blob_off + pw.raw_data().len());
+        }
+        debug_assert_eq!(dir.0.len(), dir_len);
+        file.extend_from_slice(&dir.0);
+        for ((_, pw), &boff) in panels.iter().zip(&blob_offs) {
+            file.resize(boff, 0);
+            // i8 → u8 reinterpretation of the tile bytes (same size and
+            // alignment; the loader performs the inverse view).
+            let raw = pw.raw_data();
+            let bytes =
+                unsafe { std::slice::from_raw_parts(raw.as_ptr() as *const u8, raw.len()) };
+            file.extend_from_slice(bytes);
+        }
+        sections.push((SEC_PANELS, level_ix, off, file.len() - off));
+    }
+
+    // -- Section table + header, checksums last.
+    for (i, &(kind, level, off, len)) in sections.iter().enumerate() {
+        let e = table_off + i * SECTION_ENTRY_LEN;
+        file[e..e + 4].copy_from_slice(&kind.to_le_bytes());
+        file[e + 4..e + 8].copy_from_slice(&level.to_le_bytes());
+        file[e + 8..e + 16].copy_from_slice(&(off as u64).to_le_bytes());
+        file[e + 16..e + 24].copy_from_slice(&(len as u64).to_le_bytes());
+        let crc = crc32(&file[off..off + len]);
+        file[e + 24..e + 28].copy_from_slice(&crc.to_le_bytes());
+        file[e + 28..e + 32].copy_from_slice(&0u32.to_le_bytes());
+    }
+    file[0..4].copy_from_slice(&MAGIC);
+    file[4..6].copy_from_slice(&VERSION.to_le_bytes());
+    file[6..8].copy_from_slice(&ENDIAN_TAG.to_le_bytes());
+    file[8..12].copy_from_slice(&(HEADER_LEN as u32).to_le_bytes());
+    file[12..16].copy_from_slice(&(section_count as u32).to_le_bytes());
+    file[16..24].copy_from_slice(&(table_off as u64).to_le_bytes());
+    file[24..32].copy_from_slice(&(file.len() as u64).to_le_bytes());
+    let hcrc = crc32(&file[0..HEADER_LEN - 4]);
+    file[HEADER_LEN - 4..HEADER_LEN].copy_from_slice(&hcrc.to_le_bytes());
+
+    std::fs::write(out, &file)
+        .with_context(|| format!("writing artifact {}", out.display()))?;
+    Ok(())
+}

@@ -140,6 +140,14 @@ pub struct PrepareOptions {
     /// for the memory/speed trade-off. Ignored by the XLA engine, which
     /// has no packed-weight storage to trade.
     pub low_memory: Option<bool>,
+    /// Bind from a loaded `.lsqa` artifact instead of quantizing and
+    /// panelizing `params`: the native engine borrows prebuilt panel
+    /// blocks from the artifact's shared arena (zero rebuild work — the
+    /// fleet cold-start path, DESIGN.md §Artifact-format). The bound
+    /// family must match [`crate::runtime::artifact::LoadedArtifact::family`]
+    /// and `params` must be empty (the artifact *is* the checkpoint).
+    /// Ignored by the XLA engine.
+    pub artifact: Option<std::sync::Arc<crate::runtime::artifact::LoadedArtifact>>,
 }
 
 impl PrepareOptions {
@@ -158,6 +166,15 @@ impl PrepareOptions {
     /// Builder-style explicit low-memory choice.
     pub fn low_memory(mut self, fused_unpack: bool) -> PrepareOptions {
         self.low_memory = Some(fused_unpack);
+        self
+    }
+
+    /// Builder-style artifact bind: share `art`'s arena with this engine.
+    pub fn artifact(
+        mut self,
+        art: std::sync::Arc<crate::runtime::artifact::LoadedArtifact>,
+    ) -> PrepareOptions {
+        self.artifact = Some(art);
         self
     }
 }

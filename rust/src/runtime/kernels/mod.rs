@@ -61,7 +61,7 @@ pub use gemm::{
     QGEMM_MIN_ROWS_PER_THREAD,
 };
 pub use norm::{bn_apply, bn_apply_out, bn_batch_stats, bn_bwd, bn_normalize, fold_bn, BN_EPS};
-pub use panel::{PanelGeom, PanelizedWeights};
+pub use panel::{panel_build_count, PanelGeom, PanelSource, PanelizedWeights};
 pub use pool::{
     global_avg_pool, global_avg_pool_bwd, maxpool2, maxpool2_bwd, relu, relu_bwd, relu_mask,
 };

@@ -41,9 +41,53 @@
 //!   `VariantOptions::low_memory` at the serve layer, or
 //!   `LSQNET_FUSED_UNPACK=1`).
 
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
 use crate::quant::pack::{unpack_range_spec, Packed};
 
 use super::gemm::{KC, NC, NR};
+
+/// Process-wide count of panel *constructions* (calls that actually ran
+/// the unpack loop in [`PanelizedWeights::build_with_geom`]). Shared
+/// bindings ([`PanelizedWeights::from_shared`] — the artifact zero-copy
+/// path) do **not** increment it, which is exactly what the artifact
+/// round-trip tests assert: binding from a `.lsqa` performs zero panel
+/// builds.
+static PANEL_BUILDS: AtomicU64 = AtomicU64::new(0);
+
+/// Total panel constructions so far in this process (monotone; see
+/// [`PANEL_BUILDS`]). Diff two readings around a bind to count the panel
+/// work it did.
+pub fn panel_build_count() -> u64 {
+    PANEL_BUILDS.load(Ordering::Relaxed)
+}
+
+/// Backing storage a shared (borrowed) panel block lives in — implemented
+/// by the artifact loader's page-aligned arena so every replica of a
+/// variant reads the *same* bytes instead of per-engine copies.
+pub trait PanelSource: Send + Sync {
+    /// The full backing byte range (panel blocks index into this).
+    fn bytes(&self) -> &[i8];
+}
+
+/// Where a [`PanelizedWeights`]'s tile bytes live: built-and-owned (the
+/// bind-time path) or a borrowed window of a shared [`PanelSource`] arena
+/// (the artifact path). Layout and indexing are identical either way.
+enum PanelData {
+    Owned(Vec<i8>),
+    Shared { src: Arc<dyn PanelSource>, off: usize, len: usize },
+}
+
+impl PanelData {
+    #[inline]
+    fn as_slice(&self) -> &[i8] {
+        match self {
+            PanelData::Owned(v) => v,
+            PanelData::Shared { src, off, len } => &src.bytes()[*off..*off + *len],
+        }
+    }
+}
 
 /// Widest column block any microkernel uses (the AVX-512 VNNI level's 16
 /// i32 lanes) — sizes the scalar reference kernel's register tile.
@@ -156,7 +200,29 @@ pub struct PanelizedWeights {
     /// Tile start offsets, row-major over the (⌈k/kc⌉ × ⌈n/nc⌉) tile
     /// grid, with a trailing sentinel equal to `data.len()`.
     offsets: Vec<usize>,
-    data: Vec<i8>,
+    data: PanelData,
+}
+
+/// Tile start offsets for a `k×n` matrix panelized at `geom`: row-major
+/// over the (⌈k/kc⌉ × ⌈n/nc⌉) tile grid, with a trailing sentinel equal
+/// to the total panel byte length. Offsets are a pure function of the
+/// shape and geometry — the artifact format stores only `(k, n, geom)`
+/// and recomputes them here, so a tampered length can never index out of
+/// a section (the reader cross-checks the sentinel against the recorded
+/// blob length first).
+pub(crate) fn tile_offsets(k: usize, n: usize, geom: PanelGeom) -> Vec<usize> {
+    let (kt, nt) = (k.div_ceil(geom.kc), n.div_ceil(geom.nc));
+    let mut offsets = Vec::with_capacity(kt * nt + 1);
+    let mut total = 0usize;
+    for ik in 0..kt {
+        let kc = geom.kc.min(k - ik * geom.kc);
+        for in_ in 0..nt {
+            offsets.push(total);
+            total += geom.tile_len(kc, geom.nc.min(n - in_ * geom.nc));
+        }
+    }
+    offsets.push(total);
+    offsets
 }
 
 impl PanelizedWeights {
@@ -191,18 +257,10 @@ impl PanelizedWeights {
         assert_eq!(p.len, k * n, "packed weight shape");
         assert!(fits_i8(p), "unsigned 8-bit weights do not fit i8 panels");
         assert!(geom.valid(), "invalid panel geometry {geom:?}");
+        PANEL_BUILDS.fetch_add(1, Ordering::Relaxed);
         let (kt, nt) = (k.div_ceil(geom.kc), n.div_ceil(geom.nc));
-        let mut offsets = Vec::with_capacity(kt * nt + 1);
-        let mut total = 0usize;
-        for ik in 0..kt {
-            let kc = geom.kc.min(k - ik * geom.kc);
-            for in_ in 0..nt {
-                offsets.push(total);
-                total += geom.tile_len(kc, geom.nc.min(n - in_ * geom.nc));
-            }
-        }
-        offsets.push(total);
-        let mut data = vec![0i8; total];
+        let offsets = tile_offsets(k, n, geom);
+        let mut data = vec![0i8; *offsets.last().expect("sentinel")];
         let mut row = Vec::with_capacity(geom.nc);
         for ik in 0..kt {
             let kc = geom.kc.min(k - ik * geom.kc);
@@ -213,7 +271,35 @@ impl PanelizedWeights {
                 fill_tile_panel(p, n, ik * geom.kc, kc, in_ * geom.nc, nc, geom, &mut row, out);
             }
         }
-        PanelizedWeights { k, n, geom, offsets, data }
+        PanelizedWeights { k, n, geom, offsets, data: PanelData::Owned(data) }
+    }
+
+    /// Bind panels over a borrowed `len`-byte window at `off` of a shared
+    /// [`PanelSource`] arena — the artifact zero-copy path. The bytes must
+    /// already be in the exact layout [`PanelizedWeights::build_with_geom`]
+    /// would produce for `(k, n, geom)` (the `.lsqa` writer guarantees
+    /// this; the reader verifies lengths and checksums before calling).
+    /// Performs no unpack work and does **not** count as a panel build.
+    ///
+    /// # Panics
+    /// If `geom` is invalid, the window length does not match the layout's
+    /// computed total, or the window falls outside the source.
+    pub(crate) fn from_shared(
+        k: usize,
+        n: usize,
+        geom: PanelGeom,
+        src: Arc<dyn PanelSource>,
+        off: usize,
+        len: usize,
+    ) -> PanelizedWeights {
+        assert!(geom.valid(), "invalid panel geometry {geom:?}");
+        let offsets = tile_offsets(k, n, geom);
+        assert_eq!(*offsets.last().expect("sentinel"), len, "shared panel length");
+        assert!(
+            off.checked_add(len).is_some_and(|end| end <= src.bytes().len()),
+            "shared panel window out of bounds"
+        );
+        PanelizedWeights { k, n, geom, offsets, data: PanelData::Shared { src, off, len } }
     }
 
     /// Logical weight rows (the GEMM k dimension).
@@ -234,15 +320,27 @@ impl PanelizedWeights {
 
     /// Resident panel bytes — the memory cost of the pre-unpacked mode
     /// (compare `Packed::storage_bytes` for the fused-unpack footprint).
+    /// Counts the tile bytes plus the per-panel metadata (tile offset
+    /// table and [`PanelGeom`]), and reports the same number whether the
+    /// panels were built at bind time or borrowed from an artifact arena —
+    /// storage/working-set numbers must not drift between the two paths.
     pub fn panel_bytes(&self) -> usize {
-        self.data.len()
+        self.data.as_slice().len()
+            + self.offsets.len() * std::mem::size_of::<usize>()
+            + std::mem::size_of::<PanelGeom>()
+    }
+
+    /// The raw tile bytes, offset-table order (what the `.lsqa` writer
+    /// serializes verbatim).
+    pub(crate) fn raw_data(&self) -> &[i8] {
+        self.data.as_slice()
     }
 
     /// The tile at k-block `ik`, n-block `in_`.
     pub(crate) fn tile(&self, ik: usize, in_: usize) -> &[i8] {
         let nt = self.n.div_ceil(self.geom.nc);
         let t = ik * nt + in_;
-        &self.data[self.offsets[t]..self.offsets[t + 1]]
+        &self.data.as_slice()[self.offsets[t]..self.offsets[t + 1]]
     }
 }
 

@@ -8,9 +8,12 @@
 //!   multi-threaded GEMM/im2col/pool/BN) shared by native inference and
 //!   native training.
 //! * [`native`] — pure-Rust packed-weight inference (always available).
+//! * [`artifact`] — the versioned `.lsqa` zero-copy model artifact
+//!   (writer + instant-bind loader) for fleet cold-start.
 //! * `engine` — the XLA/PJRT executor for the AOT HLO artifacts
 //!   (train/eval/diag paths), behind `--features xla`.
 
+pub mod artifact;
 pub mod backend;
 #[cfg(feature = "xla")]
 pub mod engine;
@@ -18,6 +21,7 @@ pub mod kernels;
 pub mod manifest;
 pub mod native;
 
+pub use artifact::{pack_family, ArtifactError, LoadedArtifact};
 pub use backend::{Backend, BackendKind, BackendSpec, PrepareOptions};
 #[cfg(feature = "xla")]
 pub use engine::{Engine, Executable};

@@ -37,8 +37,11 @@ use std::path::Path;
 
 use anyhow::{anyhow, bail, ensure, Result};
 
+use std::sync::Arc;
+
 use crate::quant::lsq::{self, qrange};
 use crate::quant::pack::{quantize_and_pack, Packed};
+use crate::runtime::artifact::LoadedArtifact;
 use crate::runtime::backend::{Backend, PrepareOptions};
 use crate::runtime::kernels::{self, check_accumulator_bound, PanelizedWeights, Workspace};
 use crate::runtime::Manifest;
@@ -214,6 +217,15 @@ impl<'a> Binder<'a> {
     }
 }
 
+/// A weight-binding strategy: how one matmul layer's [`LayerWeights`]
+/// come to exist. The manifest path ([`bind_weights`]) quantizes, packs,
+/// and panelizes from the raw fp32 tensor; the artifact path
+/// ([`bind_weights_art`]) borrows prebuilt panels from a
+/// [`LoadedArtifact`] arena. Everything else about binding (graph walk,
+/// BN folding, biases, accounting) is shared.
+type WeightBinder<'a> =
+    &'a dyn Fn(&Binder, &str, u32, bool, usize, &[usize], UnpackMode) -> Result<LayerWeights>;
+
 fn bind_weights(
     binder: &Binder,
     name: &str,
@@ -263,17 +275,100 @@ fn bind_weights(
     })
 }
 
-fn bind_conv(binder: &Binder, spec: &ConvSpec, mode: UnpackMode) -> Result<RtConv> {
+/// The artifact-path [`WeightBinder`]: sub-32-bit layers bind to panel
+/// blocks *borrowed* from the artifact arena (zero quantize/pack/
+/// panelize work — the panel-build counter stays flat), falling back to
+/// the artifact's packed bytes and a normal counted build only when the
+/// artifact carries no panels section this host can use. Step sizes,
+/// biases, and fp32 weights come from the artifact's tensor records via
+/// the same [`Binder`] the manifest path uses, so validation and the
+/// Eq. 2 rescale are identical — which is what makes the logits bitwise
+/// equal across the two paths.
+fn bind_weights_art(
+    art: &LoadedArtifact,
+    binder: &Binder,
+    name: &str,
+    bits: u32,
+    signed_act: bool,
+    k: usize,
+    want_shape: &[usize],
+    mode: UnpackMode,
+) -> Result<LayerWeights> {
+    if bits >= 32 {
+        let w = binder.tensor(&format!("{name}.w"))?;
+        ensure!(
+            w.shape == want_shape,
+            "{name}.w shape {:?} != expected {:?}",
+            w.shape,
+            want_shape
+        );
+        return Ok(LayerWeights::F32(w.f32s()?.to_vec()));
+    }
+    let sw = binder.scalar(&format!("{name}.sw"))?;
+    let sa = binder.scalar(&format!("{name}.sa"))?;
+    ensure!(sw > 0.0 && sa > 0.0, "{name}: non-positive step size (sw={sw}, sa={sa})");
+    let (act_qn, act_qp) = qrange(bits, signed_act);
+    let (wqn, wqp) = qrange(bits, true);
+    ensure!(
+        check_accumulator_bound(k, act_qp, act_qn, wqn, wqp),
+        "{name}: k={k} at {bits}-bit would overflow the i32 accumulator"
+    );
+    let n = *want_shape.last().expect("non-empty weight shape");
+    let act_max = act_qp.max(act_qn);
+    Ok(match mode {
+        UnpackMode::Panelized => match art.panel_for(name, k, n, bits, act_max)? {
+            Some(panel) => LayerWeights::Panel {
+                // Same Figure-3 accounting as the manifest path: packed
+                // bytes + the s_w step + the s_a step, even though the
+                // packed form never materializes here.
+                storage_bytes: (k * n * bits as usize).div_ceil(8) + 8,
+                sw,
+                panel,
+                sa,
+                act_qn,
+                act_qp,
+            },
+            None => {
+                let packed = art.packed_for(name, k, n, bits)?;
+                LayerWeights::Panel {
+                    storage_bytes: packed.storage_bytes() + 4, // + s_a
+                    sw: packed.step,
+                    panel: PanelizedWeights::build_for_acts(&packed, k, n, act_max),
+                    sa,
+                    act_qn,
+                    act_qp,
+                }
+            }
+        },
+        UnpackMode::Fused => LayerWeights::Packed {
+            w: art.packed_for(name, k, n, bits)?,
+            sa,
+            act_qn,
+            act_qp,
+        },
+    })
+}
+
+fn bind_conv(
+    binder: &Binder,
+    spec: &ConvSpec,
+    mode: UnpackMode,
+    bw: WeightBinder,
+) -> Result<RtConv> {
     let shape = [spec.kh, spec.kw, spec.in_ch, spec.out_ch];
     let k = spec.kh * spec.kw * spec.in_ch;
-    let wq = bind_weights(binder, &spec.name, spec.bits, spec.signed_act, k, &shape, mode)?;
+    let wq = bw(binder, &spec.name, spec.bits, spec.signed_act, k, &shape, mode)?;
     Ok(RtConv { spec: spec.clone(), wq })
 }
 
-fn bind_dense(binder: &Binder, spec: &DenseSpec, mode: UnpackMode) -> Result<RtDense> {
+fn bind_dense(
+    binder: &Binder,
+    spec: &DenseSpec,
+    mode: UnpackMode,
+    bw: WeightBinder,
+) -> Result<RtDense> {
     let shape = [spec.in_dim, spec.out_dim];
-    let wq =
-        bind_weights(binder, &spec.name, spec.bits, spec.signed_act, spec.in_dim, &shape, mode)?;
+    let wq = bw(binder, &spec.name, spec.bits, spec.signed_act, spec.in_dim, &shape, mode)?;
     let bias = match binder.map.get(format!("{}.b", spec.name).as_str()) {
         Some(t) => {
             ensure!(t.numel() == spec.out_dim, "{}.b wrong length", spec.name);
@@ -314,6 +409,61 @@ fn layer_panel_bytes(wq: &LayerWeights) -> usize {
     }
 }
 
+/// Walk the arch graph once, binding every op through the supplied
+/// [`WeightBinder`]; returns `(ops, packed_bytes, panel_bytes)`. Shared
+/// by the manifest and artifact build paths so the graph structure, BN
+/// folding, bias handling, and storage accounting can never drift
+/// between them.
+fn bind_ops(
+    binder: &Binder,
+    arch: &Arch,
+    mode: UnpackMode,
+    bw: WeightBinder,
+) -> Result<(Vec<RtOp>, usize, usize)> {
+    let mut packed_bytes = 0usize;
+    let mut panel_bytes = 0usize;
+    let mut ops = Vec::with_capacity(arch.ops.len());
+    for op in &arch.ops {
+        ops.push(match op {
+            ArchOp::Conv(c) => {
+                let rt = bind_conv(binder, c, mode, bw)?;
+                packed_bytes += layer_packed_bytes(&rt.wq);
+                panel_bytes += layer_panel_bytes(&rt.wq);
+                RtOp::Conv(rt)
+            }
+            ArchOp::Dense(d) => {
+                let rt = bind_dense(binder, d, mode, bw)?;
+                packed_bytes += layer_packed_bytes(&rt.wq);
+                panel_bytes += layer_panel_bytes(&rt.wq);
+                packed_bytes += rt.bias.as_ref().map_or(0, |b| b.len() * 4);
+                RtOp::Dense(rt)
+            }
+            ArchOp::BatchNorm(b) => RtOp::Bn(bind_bn(binder, b)?),
+            ArchOp::Relu => RtOp::Relu,
+            ArchOp::MaxPool2 => RtOp::MaxPool2,
+            ArchOp::GlobalAvgPool => RtOp::GlobalAvgPool,
+            ArchOp::Flatten => RtOp::Flatten,
+            ArchOp::Preact(p) => {
+                let rt = RtPreact {
+                    bn1: bind_bn(binder, &p.bn1)?,
+                    proj: p.proj.as_ref().map(|c| bind_conv(binder, c, mode, bw)).transpose()?,
+                    conv1: bind_conv(binder, &p.conv1, mode, bw)?,
+                    bn2: bind_bn(binder, &p.bn2)?,
+                    conv2: bind_conv(binder, &p.conv2, mode, bw)?,
+                };
+                packed_bytes += layer_packed_bytes(&rt.conv1.wq)
+                    + layer_packed_bytes(&rt.conv2.wq)
+                    + rt.proj.as_ref().map_or(0, |c| layer_packed_bytes(&c.wq));
+                panel_bytes += layer_panel_bytes(&rt.conv1.wq)
+                    + layer_panel_bytes(&rt.conv2.wq)
+                    + rt.proj.as_ref().map_or(0, |c| layer_panel_bytes(&c.wq));
+                RtOp::Preact(Box::new(rt))
+            }
+        });
+    }
+    Ok((ops, packed_bytes, panel_bytes))
+}
+
 impl NativeModel {
     /// [`NativeModel::build_with_mode`] with the process-default
     /// [`UnpackMode`] (panelized, unless `LSQNET_FUSED_UNPACK` is set).
@@ -350,53 +500,53 @@ impl NativeModel {
             family,
             map: fam.param_names.iter().map(String::as_str).zip(params).collect(),
         };
-
-        let mut packed_bytes = 0usize;
-        let mut panel_bytes = 0usize;
-        let mut ops = Vec::with_capacity(arch.ops.len());
-        for op in &arch.ops {
-            ops.push(match op {
-                ArchOp::Conv(c) => {
-                    let rt = bind_conv(&binder, c, mode)?;
-                    packed_bytes += layer_packed_bytes(&rt.wq);
-                    panel_bytes += layer_panel_bytes(&rt.wq);
-                    RtOp::Conv(rt)
-                }
-                ArchOp::Dense(d) => {
-                    let rt = bind_dense(&binder, d, mode)?;
-                    packed_bytes += layer_packed_bytes(&rt.wq);
-                    panel_bytes += layer_panel_bytes(&rt.wq);
-                    packed_bytes += rt.bias.as_ref().map_or(0, |b| b.len() * 4);
-                    RtOp::Dense(rt)
-                }
-                ArchOp::BatchNorm(b) => RtOp::Bn(bind_bn(&binder, b)?),
-                ArchOp::Relu => RtOp::Relu,
-                ArchOp::MaxPool2 => RtOp::MaxPool2,
-                ArchOp::GlobalAvgPool => RtOp::GlobalAvgPool,
-                ArchOp::Flatten => RtOp::Flatten,
-                ArchOp::Preact(p) => {
-                    let rt = RtPreact {
-                        bn1: bind_bn(&binder, &p.bn1)?,
-                        proj: p.proj.as_ref().map(|c| bind_conv(&binder, c, mode)).transpose()?,
-                        conv1: bind_conv(&binder, &p.conv1, mode)?,
-                        bn2: bind_bn(&binder, &p.bn2)?,
-                        conv2: bind_conv(&binder, &p.conv2, mode)?,
-                    };
-                    packed_bytes += layer_packed_bytes(&rt.conv1.wq)
-                        + layer_packed_bytes(&rt.conv2.wq)
-                        + rt.proj.as_ref().map_or(0, |c| layer_packed_bytes(&c.wq));
-                    panel_bytes += layer_panel_bytes(&rt.conv1.wq)
-                        + layer_panel_bytes(&rt.conv2.wq)
-                        + rt.proj.as_ref().map_or(0, |c| layer_panel_bytes(&c.wq));
-                    RtOp::Preact(Box::new(rt))
-                }
-            });
-        }
+        let (ops, packed_bytes, panel_bytes) = bind_ops(&binder, &arch, mode, &bind_weights)?;
         Ok(NativeModel {
             family: family.to_string(),
             image: manifest.image,
             channels: manifest.channels,
             num_classes: fam.num_classes,
+            ops,
+            packed_bytes,
+            panel_bytes,
+        })
+    }
+
+    /// Bind a model straight from a loaded `.lsqa` artifact — the
+    /// instant-bind path: panel blocks are *borrowed* from the artifact's
+    /// shared arena (zero quantize/pack/panelize work in
+    /// [`UnpackMode::Panelized`] when a recorded panels section matches
+    /// this host), steps/biases/BN come from the artifact's tensor
+    /// records, and the resulting logits are bitwise identical to a
+    /// [`NativeModel::build_with_mode`] bind of the same checkpoint
+    /// (`tests/artifact.rs`).
+    pub fn build_from_artifact(art: &LoadedArtifact, mode: UnpackMode) -> Result<NativeModel> {
+        let arch: Arch = arch::build(
+            art.model(),
+            art.image(),
+            art.channels(),
+            art.num_classes(),
+            art.qbits(),
+        )?;
+        let binder = Binder {
+            family: art.family(),
+            map: art.tensors().iter().map(|(k, v)| (k.as_str(), v)).collect(),
+        };
+        let bw = |binder: &Binder,
+                  name: &str,
+                  bits: u32,
+                  signed_act: bool,
+                  k: usize,
+                  shape: &[usize],
+                  mode: UnpackMode| {
+            bind_weights_art(art, binder, name, bits, signed_act, k, shape, mode)
+        };
+        let (ops, packed_bytes, panel_bytes) = bind_ops(&binder, &arch, mode, &bw)?;
+        Ok(NativeModel {
+            family: art.family().to_string(),
+            image: art.image(),
+            channels: art.channels(),
+            num_classes: art.num_classes(),
             ops,
             packed_bytes,
             panel_bytes,
@@ -652,6 +802,9 @@ pub struct NativeEngine {
     model: Option<NativeModel>,
     ws: Workspace,
     mode: UnpackMode,
+    /// The `.lsqa` this engine was opened from, if any: binds borrow
+    /// panels from its shared arena instead of rebuilding them.
+    artifact: Option<Arc<LoadedArtifact>>,
 }
 
 impl NativeEngine {
@@ -663,7 +816,23 @@ impl NativeEngine {
             model: None,
             ws: Workspace::new(),
             mode: UnpackMode::default_mode(),
+            artifact: None,
         })
+    }
+
+    /// Open an engine over a loaded `.lsqa` artifact — no `manifest.json`
+    /// or params bin on disk; the synthesized single-family manifest and
+    /// every parameter come from the artifact, and `prepare_infer` binds
+    /// zero-copy against the artifact's arena (which the caller typically
+    /// shares across a variant's replicas via the `Arc`).
+    pub fn from_artifact(art: Arc<LoadedArtifact>) -> NativeEngine {
+        NativeEngine {
+            manifest: art.manifest(),
+            model: None,
+            ws: Workspace::new(),
+            mode: UnpackMode::default_mode(),
+            artifact: Some(art),
+        }
     }
 
     /// The model bound by the last `prepare_infer`, if any.
@@ -702,6 +871,25 @@ impl Backend for NativeEngine {
             None => UnpackMode::default_mode(),
         };
         self.ws.set_threads(opts.intra_op_threads);
+        // Artifact binds (engine opened via `from_artifact`, or an
+        // artifact supplied per-prepare through the options) take no
+        // checkpoint params: the artifact *is* the checkpoint, frozen at
+        // pack time.
+        if let Some(art) = opts.artifact.clone().or_else(|| self.artifact.clone()) {
+            ensure!(
+                family == art.family(),
+                "artifact {} holds family {:?}, caller asked for {family:?}",
+                art.path().display(),
+                art.family()
+            );
+            ensure!(
+                params.is_empty(),
+                "artifact bind takes no explicit params ({} supplied)",
+                params.len()
+            );
+            self.model = Some(NativeModel::build_from_artifact(&art, self.mode)?);
+            return Ok(());
+        }
         self.model = Some(NativeModel::build_with_mode(
             &self.manifest,
             family,

@@ -49,15 +49,17 @@
 //! this registry. See DESIGN.md §Serving-API.
 
 use std::collections::BTreeMap;
-use std::path::Path;
+use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc::{Receiver, RecvTimeoutError, SyncSender, TrySendError};
 use std::sync::{Arc, Mutex, RwLock};
 use std::time::{Duration, Instant};
 
-use anyhow::{bail, Result};
+use anyhow::{bail, ensure, Result};
 
-use crate::runtime::{Backend as _, BackendKind, BackendSpec, Manifest, PrepareOptions};
+use crate::runtime::artifact::{ArtifactError, LoadedArtifact};
+use crate::runtime::native::{NativeEngine, NativeModel, UnpackMode};
+use crate::runtime::{Backend, BackendKind, BackendSpec, Manifest, PrepareOptions};
 use crate::tensor::Tensor;
 use crate::util::rng::Pcg32;
 
@@ -143,6 +145,16 @@ pub struct VariantOptions {
     /// (chaos tests). `None` — the default and the production value —
     /// injects nothing.
     pub fault: Option<Arc<FaultPlan>>,
+    /// Bind this variant from a packed `.lsqa` artifact instead of the
+    /// manifest + params path: the artifact is loaded and fully verified
+    /// once on the caller thread, and every replica borrows panel blocks
+    /// from its shared arena (zero per-replica rebuild — the fleet
+    /// cold-start and hot-reload fast path). The artifact's family must
+    /// equal the variant name; mutually exclusive with `checkpoint`
+    /// (the artifact froze its checkpoint at pack time); native backend
+    /// only. A corrupted or mismatched artifact fails the load loudly
+    /// with a typed [`ArtifactError`] — never a silent manifest rebuild.
+    pub artifact: Option<PathBuf>,
 }
 
 impl Default for VariantOptions {
@@ -156,6 +168,7 @@ impl Default for VariantOptions {
             low_memory: None,
             restarts: RestartPolicy::default(),
             fault: None,
+            artifact: None,
         }
     }
 }
@@ -365,33 +378,65 @@ impl ModelRegistry {
         }
         // Resolve geometry and parameters on the caller thread so load
         // errors surface synchronously, not on replica stderr.
-        let manifest = Manifest::load(&self.spec.artifacts_dir)?;
-        let image_len = manifest.image * manifest.image * manifest.channels;
-        let classes = manifest.family(variant)?.num_classes;
-        let params: Vec<Tensor> = if opts.checkpoint.is_empty() {
-            manifest.load_initial_params(variant)?
-        } else {
-            crate::train::TrainState::load(&manifest, Path::new(&opts.checkpoint))?.params
-        };
-        match self.spec.kind {
-            BackendKind::Native => {
+        let (image_len, classes, params, art) = match &opts.artifact {
+            Some(path) => {
+                // Artifact path: one verified load on the caller thread;
+                // the Arc'd arena becomes the panel working set every
+                // replica shares. Refusals here are typed and loud —
+                // there is deliberately no manifest fallback.
+                ensure!(
+                    self.spec.kind == BackendKind::Native,
+                    "artifact serving requires the native backend"
+                );
+                ensure!(
+                    opts.checkpoint.is_empty(),
+                    "VariantOptions::artifact and ::checkpoint are mutually exclusive \
+                     (the artifact froze its checkpoint at pack time)"
+                );
+                let art = Arc::new(LoadedArtifact::load(path)?);
+                if art.family() != variant {
+                    return Err(ArtifactError::FamilyMismatch {
+                        want: variant.to_string(),
+                        got: art.family().to_string(),
+                    }
+                    .into());
+                }
                 // Dry-run bind: catches unsupported architectures and
-                // missing/mis-shaped parameters synchronously. Always
-                // fused here — panelizing twice would double peak startup
-                // memory for no extra validation.
-                crate::runtime::native::NativeModel::build_with_mode(
-                    &manifest,
-                    variant,
-                    &params,
-                    crate::runtime::native::UnpackMode::Fused,
-                )?;
+                // inconsistent artifact records synchronously. Fused —
+                // validation without materializing a second panel set.
+                NativeModel::build_from_artifact(&art, UnpackMode::Fused)?;
+                (art.image_len(), art.num_classes(), Vec::new(), Some(art))
             }
-            BackendKind::Xla => {
-                self.spec.check_available()?;
-                manifest.find("infer", variant, None, None)?;
+            None => {
+                let manifest = Manifest::load(&self.spec.artifacts_dir)?;
+                let image_len = manifest.image * manifest.image * manifest.channels;
+                let classes = manifest.family(variant)?.num_classes;
+                let params: Vec<Tensor> = if opts.checkpoint.is_empty() {
+                    manifest.load_initial_params(variant)?
+                } else {
+                    crate::train::TrainState::load(&manifest, Path::new(&opts.checkpoint))?.params
+                };
+                match self.spec.kind {
+                    BackendKind::Native => {
+                        // Dry-run bind: catches unsupported architectures and
+                        // missing/mis-shaped parameters synchronously. Always
+                        // fused here — panelizing twice would double peak startup
+                        // memory for no extra validation.
+                        NativeModel::build_with_mode(
+                            &manifest,
+                            variant,
+                            &params,
+                            UnpackMode::Fused,
+                        )?;
+                    }
+                    BackendKind::Xla => {
+                        self.spec.check_available()?;
+                        manifest.find("infer", variant, None, None)?;
+                    }
+                }
+                (image_len, classes, params, None)
             }
-        }
-        drop(manifest);
+        };
 
         let replicas = opts.replicas.max(1);
         let queue_depth = opts.queue_depth.max(1);
@@ -450,7 +495,11 @@ impl ModelRegistry {
         let ctx = Arc::new(ReplicaCtx {
             spec: self.spec.clone(),
             params: Arc::new(params),
-            prep: PrepareOptions { intra_op_threads: intra_threads, low_memory: opts.low_memory },
+            prep: PrepareOptions {
+                intra_op_threads: intra_threads,
+                low_memory: opts.low_memory,
+                artifact: art,
+            },
             rx: Arc::new(Mutex::new(rx)),
             shared: Arc::clone(&shared),
             max_wait: opts.max_wait,
@@ -982,7 +1031,13 @@ fn replica_loop(ctx: &ReplicaCtx) -> Result<()> {
             bail!("fault injection: forced engine-open failure");
         }
     }
-    let mut backend = ctx.spec.open()?;
+    // Artifact replicas skip `spec.open()` entirely: a pure-artifact
+    // deployment has no `manifest.json` on disk, and the engine borrows
+    // the variant-wide shared arena instead of re-reading anything.
+    let mut backend: Box<dyn Backend> = match &ctx.prep.artifact {
+        Some(art) => Box::new(NativeEngine::from_artifact(Arc::clone(art))),
+        None => ctx.spec.open()?,
+    };
     backend.prepare_infer(&shared.variant, &ctx.params, &ctx.prep)?;
     let batch = backend.batch();
     let mut pending: Vec<Request> = Vec::with_capacity(batch);

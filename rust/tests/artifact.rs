@@ -1,0 +1,340 @@
+//! `.lsqa` artifact tests: pack → load → bind round-trip parity (bitwise
+//! logits vs the manifest path, with the panel-build counter proving the
+//! artifact bind constructs zero panels), the corruption battery (every
+//! way the bytes can be wrong surfaces as a typed `ArtifactError`, never
+//! a panic or a silent fallback), and the registry-level refusals. All
+//! native — the synthetic fixture provides the source manifest + params.
+
+mod common;
+
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+use std::time::Duration;
+
+use lsqnet::runtime::artifact::writer::default_levels;
+use lsqnet::runtime::kernels::panel_build_count;
+use lsqnet::runtime::native::fixture::{write_synthetic_family, FixtureSpec};
+use lsqnet::runtime::{
+    pack_family, ArtifactError, Backend as _, BackendSpec, LoadedArtifact, Manifest, NativeEngine,
+    PrepareOptions,
+};
+use lsqnet::serve::{ModelRegistry, VariantOptions};
+use lsqnet::tensor::Tensor;
+
+fn tmp_dir(tag: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("lsq_artifact_{tag}_{}", std::process::id()))
+}
+
+/// Synthesize a `cnn_small` fixture family at `bits`, pack it, and return
+/// `(dir, family, artifact_path, params)`.
+fn pack_fixture(tag: &str, bits: u32) -> (PathBuf, String, PathBuf, Vec<Tensor>) {
+    let dir = tmp_dir(tag);
+    std::fs::remove_dir_all(&dir).ok();
+    let spec = FixtureSpec { image: 8, channels: 3, num_classes: 6, batch: 4, seed: 21 };
+    let fam = write_synthetic_family(&dir, "cnn_small", bits, spec).unwrap();
+    let manifest = Manifest::load(&dir).unwrap();
+    let params = manifest.load_initial_params(&fam).unwrap();
+    let out = dir.join(format!("{fam}.lsqa"));
+    pack_family(&manifest, &fam, &params, &out, &default_levels()).unwrap();
+    (dir, fam, out, params)
+}
+
+fn image(seed: usize, len: usize) -> Vec<f32> {
+    (0..len).map(|j| ((seed * 31 + j * 7) % 13) as f32 / 13.0 - 0.5).collect()
+}
+
+/// Write a copy of `src` with byte `off` XORed by `mask`.
+fn flip_byte(src: &Path, off: usize, mask: u8) -> PathBuf {
+    let mut bytes = std::fs::read(src).unwrap();
+    bytes[off] ^= mask;
+    let out = src.with_extension(format!("flip{off}.lsqa"));
+    std::fs::write(&out, &bytes).unwrap();
+    out
+}
+
+/// The tentpole round trip at every serving precision: the artifact bind
+/// must produce bitwise-identical logits to the manifest bind of the same
+/// params, perform **zero** panel constructions (the borrowed-arena
+/// path), and report identical storage accounting.
+#[test]
+fn artifact_bind_is_bitwise_equal_and_builds_zero_panels() {
+    for bits in [2u32, 4, 8] {
+        let (dir, fam, out, params) = pack_fixture(&format!("parity{bits}"), bits);
+        let image_len = 8 * 8 * 3;
+
+        // Manifest path: quantize + pack + panelize at bind time.
+        let mut cold = NativeEngine::new(&dir).unwrap();
+        let before_cold = panel_build_count();
+        cold.prepare_infer(&fam, &params, &PrepareOptions::new()).unwrap();
+        let cold_builds = panel_build_count() - before_cold;
+        assert!(cold_builds > 0, "bits={bits}: manifest bind should build panels");
+
+        // Artifact path: borrow prebuilt panels from the shared arena.
+        let art = Arc::new(LoadedArtifact::load(&out).unwrap());
+        assert_eq!(art.family(), fam);
+        assert!(art.bound_level().is_some(), "default levels always include a usable rung");
+        let mut warm = NativeEngine::from_artifact(Arc::clone(&art));
+        let before_warm = panel_build_count();
+        warm.prepare_infer(&fam, &[], &PrepareOptions::new()).unwrap();
+        let warm_builds = panel_build_count() - before_warm;
+        assert_eq!(warm_builds, 0, "bits={bits}: artifact bind must build zero panels");
+
+        // Bitwise logits parity, several batches.
+        for i in 0..4usize {
+            let x = image(i, image_len);
+            let a = cold.infer(&x).unwrap();
+            let b = warm.infer(&x).unwrap();
+            assert_eq!(a.len(), b.len());
+            for (j, (va, vb)) in a.iter().zip(&b).enumerate() {
+                assert_eq!(
+                    va.to_bits(),
+                    vb.to_bits(),
+                    "bits={bits} batch {i} logit {j}: manifest {va} != artifact {vb}"
+                );
+            }
+        }
+
+        // Storage accounting must not drift between the two bind paths.
+        let (mc, ma) = (cold.model().unwrap(), warm.model().unwrap());
+        assert_eq!(mc.packed_bytes, ma.packed_bytes, "bits={bits}: packed accounting");
+        assert_eq!(mc.panel_bytes, ma.panel_bytes, "bits={bits}: panel accounting");
+        assert!(ma.panel_bytes > 0, "bits={bits}: panelized bind reports resident panels");
+
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}
+
+/// A packed-only artifact (no PANELS sections) still binds and still
+/// matches the manifest path bitwise — through the counted fallback
+/// panel build, which is the point: fallback is *visible* in the counter.
+#[test]
+fn packed_only_artifact_falls_back_to_counted_panel_build() {
+    let dir = tmp_dir("fallback");
+    std::fs::remove_dir_all(&dir).ok();
+    let spec = FixtureSpec { image: 8, channels: 3, num_classes: 6, batch: 4, seed: 21 };
+    let fam = write_synthetic_family(&dir, "cnn_small", 4, spec).unwrap();
+    let manifest = Manifest::load(&dir).unwrap();
+    let params = manifest.load_initial_params(&fam).unwrap();
+    let out = dir.join(format!("{fam}.lsqa"));
+    pack_family(&manifest, &fam, &params, &out, &[]).unwrap();
+
+    let art = Arc::new(LoadedArtifact::load(&out).unwrap());
+    assert!(art.bound_level().is_none(), "no panels sections were written");
+    let mut warm = NativeEngine::from_artifact(Arc::clone(&art));
+    let before = panel_build_count();
+    warm.prepare_infer(&fam, &[], &PrepareOptions::new()).unwrap();
+    assert!(
+        panel_build_count() > before,
+        "fallback must go through the counted panel build"
+    );
+
+    let mut cold = NativeEngine::new(&dir).unwrap();
+    cold.prepare_infer(&fam, &params, &PrepareOptions::new()).unwrap();
+    let x = image(3, 8 * 8 * 3);
+    let (a, b) = (cold.infer(&x).unwrap(), warm.infer(&x).unwrap());
+    for (va, vb) in a.iter().zip(&b) {
+        assert_eq!(va.to_bits(), vb.to_bits());
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Corruption battery, targeted: a bit flip inside any section body is a
+/// `ChecksumMismatch` for that section; header-field edits produce their
+/// specific typed errors; truncations produce `Truncated`.
+#[test]
+fn corrupted_artifacts_are_refused_with_typed_errors() {
+    let (dir, _fam, out, _params) = pack_fixture("corrupt", 2);
+    let clean = LoadedArtifact::load(&out).unwrap();
+
+    // One flipped bit mid-body per section (META, TENSORS, PACKED, and
+    // every PANELS level) → that section's checksum mismatch.
+    for sec in clean.sections() {
+        let bad = flip_byte(&out, sec.off + sec.len / 2, 0x10);
+        match LoadedArtifact::load(&bad).map(|_| ()) {
+            Err(ArtifactError::ChecksumMismatch { section }) => {
+                assert!(section.starts_with("section "), "got {section:?}")
+            }
+            other => panic!("flipped section kind {}: got {other:?}", sec.kind),
+        }
+        std::fs::remove_file(&bad).ok();
+    }
+
+    // Magic, version, endianness, header checksum.
+    let bad = flip_byte(&out, 0, 0xFF);
+    assert!(matches!(LoadedArtifact::load(&bad), Err(ArtifactError::BadMagic)));
+    std::fs::remove_file(&bad).ok();
+    let bad = flip_byte(&out, 4, 0x40); // version 1 -> 65
+    assert!(matches!(
+        LoadedArtifact::load(&bad),
+        Err(ArtifactError::UnsupportedVersion { got: 65, want: 1 })
+    ));
+    std::fs::remove_file(&bad).ok();
+    {
+        // Byte-swap the endian tag (0x1234 -> reads as 0x3412): the
+        // written-on-a-big-endian-machine signature.
+        let mut bytes = std::fs::read(&out).unwrap();
+        bytes[6..8].copy_from_slice(&0x1234u16.to_be_bytes());
+        let bad = out.with_extension("endian.lsqa");
+        std::fs::write(&bad, &bytes).unwrap();
+        assert!(matches!(LoadedArtifact::load(&bad), Err(ArtifactError::EndianMismatch)));
+        std::fs::remove_file(&bad).ok();
+    }
+    let bad = flip_byte(&out, 40, 0x01); // reserved header byte — CRC'd
+    assert!(matches!(
+        LoadedArtifact::load(&bad),
+        Err(ArtifactError::ChecksumMismatch { .. })
+    ));
+    std::fs::remove_file(&bad).ok();
+
+    // Truncations: shorter than a header, and mid-body.
+    let full = std::fs::read(&out).unwrap();
+    for keep in [0usize, 17, 63, 64, full.len() / 2, full.len() - 1] {
+        let bad = out.with_extension(format!("trunc{keep}.lsqa"));
+        std::fs::write(&bad, &full[..keep]).unwrap();
+        assert!(
+            matches!(LoadedArtifact::load(&bad), Err(ArtifactError::Truncated { .. })),
+            "keep={keep}"
+        );
+        std::fs::remove_file(&bad).ok();
+    }
+
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Corruption battery, randomized: arbitrary bit flips anywhere in the
+/// file must never panic the loader — every outcome is `Ok` (flip landed
+/// in dead padding) or a typed `ArtifactError`. The `forall` harness
+/// turns a panic into a seed-reporting failure.
+#[test]
+fn random_bit_flips_never_panic_the_loader() {
+    let (dir, _fam, out, _params) = pack_fixture("fuzz", 3);
+    let bytes = std::fs::read(&out).unwrap();
+    let case = std::sync::atomic::AtomicUsize::new(0);
+    common::forall("loader survives random bit flips", 0xA11F_ACE5, 48, |rng| {
+        let mut b = bytes.clone();
+        for _ in 0..1 + rng.below(3) {
+            let off = rng.below(b.len() as u32) as usize;
+            b[off] ^= 1 << rng.below(8);
+        }
+        let n = case.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        let bad = out.with_extension(format!("fuzz{n}.lsqa"));
+        std::fs::write(&bad, &b).unwrap();
+        // Must return, not panic; both Ok and typed Err are acceptable.
+        let _ = LoadedArtifact::load(&bad);
+        std::fs::remove_file(&bad).ok();
+    });
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Registry-level refusals: a corrupted artifact, a family-name mismatch,
+/// and the artifact+checkpoint combination all fail `load` loudly; no
+/// variant is left behind and nothing silently rebinds from a manifest.
+#[test]
+fn registry_refuses_bad_artifacts_loudly() {
+    let (dir, fam, out, _params) = pack_fixture("refuse", 2);
+    let clean = LoadedArtifact::load(&out).unwrap();
+    let sec = clean.sections()[0];
+    let bad = flip_byte(&out, sec.off + sec.len / 2, 0x08);
+
+    let registry = ModelRegistry::open(BackendSpec::native(&dir));
+    let opts = |path: &Path| VariantOptions {
+        replicas: 1,
+        artifact: Some(path.to_path_buf()),
+        ..VariantOptions::default()
+    };
+
+    let err = registry.load(&fam, &opts(&bad)).unwrap_err();
+    assert!(
+        matches!(
+            err.downcast_ref::<ArtifactError>(),
+            Some(ArtifactError::ChecksumMismatch { .. })
+        ),
+        "corrupted artifact: {err:#}"
+    );
+
+    let err = registry.load("some_other_family", &opts(&out)).unwrap_err();
+    match err.downcast_ref::<ArtifactError>() {
+        Some(ArtifactError::FamilyMismatch { want, got }) => {
+            assert_eq!(want, "some_other_family");
+            assert_eq!(got, &fam);
+        }
+        other => panic!("family mismatch: got {other:?}"),
+    }
+
+    let err = registry
+        .load(
+            &fam,
+            &VariantOptions {
+                checkpoint: "ck.ckpt".to_string(),
+                ..opts(&out)
+            },
+        )
+        .unwrap_err();
+    assert!(err.to_string().contains("mutually exclusive"), "{err:#}");
+
+    assert!(registry.variants().is_empty(), "failed loads must not leave variants behind");
+    registry.shutdown();
+    std::fs::remove_file(&bad).ok();
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Pure-artifact serving: a registry whose spec points at a directory
+/// with **no manifest at all** serves a variant loaded from a `.lsqa`,
+/// replicas bind with zero panel builds (shared arena), and the served
+/// logits equal a direct artifact engine's.
+#[test]
+fn registry_serves_from_artifact_without_a_manifest() {
+    let (dir, fam, out, _params) = pack_fixture("serve", 4);
+    let image_len = 8 * 8 * 3;
+
+    // Reference logits from a direct artifact engine.
+    let art = Arc::new(LoadedArtifact::load(&out).unwrap());
+    let mut direct = NativeEngine::from_artifact(Arc::clone(&art));
+    direct.prepare_infer(&fam, &[], &PrepareOptions::new()).unwrap();
+    let want: Vec<Vec<f32>> = (0..6).map(|i| direct.infer(&image(i, image_len)).unwrap()).collect();
+
+    // Spec directory is empty: only the artifact knows the model.
+    let empty = tmp_dir("serve_empty");
+    std::fs::remove_dir_all(&empty).ok();
+    std::fs::create_dir_all(&empty).unwrap();
+    let registry = ModelRegistry::open(BackendSpec::native(&empty));
+    let before = panel_build_count();
+    registry
+        .load(
+            &fam,
+            &VariantOptions {
+                replicas: 2,
+                max_wait: Duration::from_millis(1),
+                artifact: Some(out.clone()),
+                ..VariantOptions::default()
+            },
+        )
+        .unwrap();
+    let session = registry.session(&fam).unwrap();
+    for (i, w) in want.iter().enumerate() {
+        let rep = session.infer(image(i, image_len)).unwrap();
+        assert_eq!(&rep.logits, w, "request {i}");
+    }
+    // load()'s dry-run bind is Fused (no panels); both replicas borrow
+    // from the arena — the counter must not have moved.
+    assert_eq!(panel_build_count() - before, 0, "replicas must share the artifact arena");
+    drop(session);
+    registry.shutdown();
+    std::fs::remove_dir_all(&empty).ok();
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// `inspect` smoke: the summary names the family, lists every section,
+/// and marks the panels rung this host binds.
+#[test]
+fn inspect_summarizes_sections_and_bound_level() {
+    let (dir, fam, out, _params) = pack_fixture("inspect", 2);
+    let art = LoadedArtifact::load(&out).unwrap();
+    let text = art.inspect();
+    assert!(text.contains(&fam), "{text}");
+    for kind in ["meta", "tensors", "packed", "panels"] {
+        assert!(text.contains(kind), "missing {kind} in:\n{text}");
+    }
+    assert!(text.contains("<- binds on this host"), "{text}");
+    std::fs::remove_dir_all(&dir).ok();
+}
